@@ -1,0 +1,123 @@
+//! LSA-style similarity search — the paper's motivating application.
+//!
+//! The conclusion of the paper notes that the random projection "can also
+//! be used in place of SVD [7] as preserving distances between projected
+//! rows is useful for any similarity calculation". This example measures
+//! exactly that trade on clustered "document vectors":
+//!
+//! 1. generate m x n clustered vectors (documents around topic centers),
+//! 2. rank-k LSA via the randomized SVD pipeline → similarity in U·Σ space,
+//! 3. plain JL projection (virtual Ω, no SVD at all) → similarity in Y space,
+//! 4. compare nearest-neighbor retrieval quality (same-cluster precision)
+//!    and pairwise-distance distortion of both against the raw space.
+//!
+//! ```sh
+//! cargo run --release --example lsa_similarity -- --rows 4000 --cols 512
+//! ```
+
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::io::dataset::gen_clustered;
+use tallfat::io::InputSpec;
+use tallfat::linalg::Matrix;
+use tallfat::rng::VirtualMatrix;
+use tallfat::svd::{randomized_svd_file, validate::distance_distortion, SvdOptions};
+use tallfat::util::Args;
+
+/// Precision@10 of same-cluster retrieval under Euclidean NN in `space`.
+fn retrieval_precision(space: &Matrix, labels: &[usize], queries: usize) -> f64 {
+    let m = space.rows();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for q in (0..m).step_by((m / queries).max(1)).take(queries) {
+        // brute-force 10-NN
+        let mut d: Vec<(f64, usize)> = (0..m)
+            .filter(|&i| i != q)
+            .map(|i| {
+                let dist: f64 = space
+                    .row(q)
+                    .iter()
+                    .zip(space.row(i))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (dist, i)
+            })
+            .collect();
+        d.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for &(_, i) in d.iter().take(10) {
+            hit += (labels[i] == labels[q]) as usize;
+            total += 1;
+        }
+    }
+    hit as f64 / total as f64
+}
+
+fn main() -> tallfat::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let m = args.usize_or("rows", 4000)?;
+    let n = args.usize_or("cols", 512)?;
+    let k = args.usize_or("k", 16)?;
+    let clusters = args.usize_or("clusters", 12)?;
+
+    println!("== {m} documents x {n} terms, {clusters} topics ==");
+    let (a, labels) = gen_clustered(m, n, clusters, args.f64_or("spread", 3.5)?, 99);
+
+    let dir = std::env::temp_dir().join("tallfat_lsa");
+    std::fs::create_dir_all(&dir)?;
+    let input = InputSpec::csv(dir.join("docs.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input)?;
+
+    // ---- route 1: rank-k LSA via the randomized SVD pipeline -------------
+    let opts = SvdOptions {
+        k,
+        oversample: 8,
+        workers: 4,
+        seed: 3,
+        work_dir: dir.join("work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let svd = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
+    let t_svd = t0.elapsed();
+    let u = svd.u_matrix()?;
+    let lsa = u.scale_cols(&svd.sigma)?; // document coordinates U·Σ
+
+    // ---- route 2: plain JL projection, no SVD ----------------------------
+    // (the library's hybrid default: Ω defined virtually by the seed,
+    // materialized once per worker, applied as a blocked matmul — E3)
+    let t0 = std::time::Instant::now();
+    let omega = VirtualMatrix::projection(17, n, k).materialize();
+    let y = tallfat::linalg::matmul(&a, &omega)?;
+    let t_proj = t0.elapsed();
+
+    // ---- comparison -------------------------------------------------------
+    let p_raw = retrieval_precision(&a, &labels, 64);
+    let p_lsa = retrieval_precision(&lsa, &labels, 64);
+    let p_jl = retrieval_precision(&y, &labels, 64);
+    let (d_lsa_mean, d_lsa_max) = distance_distortion(&a, &lsa, 2000, 5);
+    let (d_jl_mean, d_jl_max) = distance_distortion(&a, &y, 2000, 5);
+
+    println!("\n{:<26} {:>12} {:>14} {:>14} {:>10}", "space", "dim", "dist mean|max", "", "time");
+    println!(
+        "{:<26} {:>12} {:>7}|{:>6} {:>14} {:>10}",
+        "raw", n, "0.000", "0.000", "", "-"
+    );
+    println!(
+        "{:<26} {:>12} {:>7.3}|{:>6.3} {:>14} {:>9.2?}",
+        format!("LSA (U·Σ, rank {k})"), k, d_lsa_mean, d_lsa_max, "", t_svd
+    );
+    println!(
+        "{:<26} {:>12} {:>7.3}|{:>6.3} {:>14} {:>9.2?}",
+        format!("JL projection (k={k})"), k, d_jl_mean, d_jl_max, "", t_proj
+    );
+    println!("\nsame-topic precision@10 (64 queries):");
+    println!("  raw {n}-dim        : {p_raw:.3}");
+    println!("  LSA rank-{k:<3}     : {p_lsa:.3}");
+    println!("  JL  k={k:<3} (no SVD): {p_jl:.3}");
+    println!(
+        "\npaper's claim: the projection alone preserves similarity structure\n\
+         at a fraction of the cost — JL ran {:.0}x faster than the SVD route.",
+        t_svd.as_secs_f64() / t_proj.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: generate a small tall matrix, run the paper's randomized
+//! rank-k SVD through the public API, and check the factorization.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use tallfat::backend::native::NativeBackend;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+use std::sync::Arc;
+
+fn main() -> tallfat::Result<()> {
+    let dir = std::env::temp_dir().join("tallfat_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let input_path = dir.join("A.csv").to_string_lossy().into_owned();
+
+    // 1. A synthetic 2000 x 64 matrix with a known geometric spectrum.
+    println!("== generating 2000 x 64 input with known spectrum ==");
+    let (a, true_sigma) = gen_exact(
+        2000,
+        64,
+        16,
+        Spectrum::Geometric { scale: 10.0, decay: 0.7 },
+        0.0,
+        42,
+    )?;
+    let input = InputSpec::csv(&input_path);
+    tallfat::io::write_matrix(&a, &input)?;
+
+    // 2. Randomized rank-8 SVD: two streaming passes over the file,
+    //    leader-side math only on (k+p) x (k+p) matrices.
+    println!("== randomized rank-8 SVD (4 split-process workers) ==");
+    let opts = SvdOptions {
+        k: 8,
+        oversample: 8,
+        workers: 4,
+        seed: 7,
+        work_dir: dir.join("work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
+
+    println!("{}", result.report.render());
+    println!("singular values (computed vs true):");
+    for i in 0..result.k {
+        println!(
+            "  sigma[{i}]  {:>10.5}  vs  {:>10.5}   (rel err {:.2e})",
+            result.sigma[i],
+            true_sigma[i],
+            (result.sigma[i] - true_sigma[i]).abs() / true_sigma[i]
+        );
+    }
+
+    // 3. Validate: streaming reconstruction error against the input file.
+    let err = validate::reconstruction_error_streaming(&input, &result)?;
+    println!("\nrelative reconstruction error ||A - U S V^T||_F / ||A||_F = {err:.6}");
+    let tail: f64 = true_sigma[result.k..].iter().map(|s| s * s).sum::<f64>().sqrt();
+    let total: f64 = true_sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+    println!("best possible (rank-{} tail energy)              = {:.6}", result.k, tail / total);
+    Ok(())
+}

@@ -1,0 +1,120 @@
+//! End-to-end driver: the paper's headline workload at laptop scale.
+//!
+//! Generates a genuinely tall-and-fat matrix on disk (default 20,000 x 1024,
+//! ~160 MB of CSV — override with `--rows/--cols/--k`), then runs the full
+//! three-layer system:
+//!
+//!   * L3 split-process workers stream byte-chunks of the file,
+//!   * per-block compute goes through the AOT JAX/Pallas artifacts via PJRT
+//!     when shapes match (`--backend auto`, the default here), pure-rust
+//!     otherwise,
+//!   * the leader eigensolves only (k+p) x (k+p) matrices,
+//!
+//! and reports the phase breakdown, throughput, and accuracy vs the
+//! synthetic ground truth. This is the run recorded in EXPERIMENTS.md §E6.
+//!
+//! ```sh
+//! cargo run --release --example tallfat_svd -- --rows 20000 --cols 1024 --k 24
+//! ```
+
+use std::sync::Arc;
+use tallfat::backend::{self, native::NativeBackend, xla::XlaBackend};
+use tallfat::config::BackendKind;
+use tallfat::io::dataset::{gen_streamed, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+use tallfat::util::Args;
+
+fn main() -> tallfat::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let m = args.usize_or("rows", 20_000)?;
+    let n = args.usize_or("cols", 1024)?;
+    let k = args.usize_or("k", 24)?;
+    let oversample = args.usize_or("oversample", 8)?;
+    let workers = args.usize_or("workers", 4)?;
+    let backend_kind = BackendKind::parse(&args.str_or("backend", "auto"))?;
+
+    let dir = std::env::temp_dir().join("tallfat_e2e");
+    std::fs::create_dir_all(&dir)?;
+    let input_path = dir.join(format!("A_{m}x{n}.csv")).to_string_lossy().into_owned();
+    let input = InputSpec::csv(&input_path);
+
+    // ---- dataset (cached across runs) -----------------------------------
+    if !std::path::Path::new(&input_path).exists() {
+        println!("== generating {m} x {n} (streamed, never materialized) ==");
+        let t0 = std::time::Instant::now();
+        gen_streamed(
+            &input,
+            m,
+            n,
+            48,
+            Spectrum::Geometric { scale: 10.0, decay: 0.85 },
+            0.005,
+            2013,
+        )?;
+        let mb = std::fs::metadata(&input_path)?.len() as f64 / 1e6;
+        println!("   {mb:.0} MB in {:.1?}", t0.elapsed());
+    } else {
+        println!("== reusing {input_path} ==");
+    }
+
+    // ---- backend ---------------------------------------------------------
+    let artifacts_dir = args.str_or("artifacts-dir", "artifacts");
+    let (backend, xla_handle): (backend::BackendRef, Option<Arc<XlaBackend>>) =
+        match backend_kind {
+            BackendKind::Native => (Arc::new(NativeBackend::new()), None),
+            kind => match XlaBackend::start(&artifacts_dir, kind == BackendKind::Auto) {
+                Ok(x) => {
+                    let x = Arc::new(x);
+                    (x.clone(), Some(x))
+                }
+                Err(e) => {
+                    println!("xla backend unavailable ({e}); falling back to native");
+                    (Arc::new(NativeBackend::new()), None)
+                }
+            },
+        };
+    println!("== backend: {} ==", backend.name());
+
+    // ---- the pipeline ------------------------------------------------------
+    let opts = SvdOptions {
+        k,
+        oversample,
+        workers,
+        block: 256,
+        seed: 1,
+        work_dir: dir.join("work").to_string_lossy().into_owned(),
+        compute_v: true,
+        ..SvdOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = randomized_svd_file(&input, backend.clone(), &opts)?;
+    let elapsed = t0.elapsed();
+
+    println!("\n{}", result.report.render());
+    let bytes = std::fs::metadata(&input_path)?.len();
+    // The pipeline reads A twice (+1 per power iteration).
+    println!(
+        "end-to-end: {:.2?}  ({:.0} rows/s/pass, {:.1} MB/s of CSV)",
+        elapsed,
+        2.0 * m as f64 / elapsed.as_secs_f64(),
+        2.0 * bytes as f64 / 1e6 / elapsed.as_secs_f64()
+    );
+    println!(
+        "sigma[0..8] = [{}]",
+        result.sigma.iter().take(8).map(|s| format!("{s:.3}")).collect::<Vec<_>>().join(", ")
+    );
+
+    // ---- validation ---------------------------------------------------------
+    let err = validate::reconstruction_error_streaming(&input, &result)?;
+    println!("relative reconstruction error = {err:.6}");
+    let ortho = validate::u_orthonormality_residual(&result.u_shards, result.shards, result.k)?;
+    println!("U orthonormality residual ||U^T U - I||_max = {ortho:.2e}");
+
+    // If the XLA backend ran, report how many block calls hit the artifacts.
+    if let Some(x) = &xla_handle {
+        let (hits, misses) = x.call_counts();
+        println!("xla artifact calls: {hits} hit, {misses} fell back to native shapes");
+    }
+    Ok(())
+}

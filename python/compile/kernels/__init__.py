@@ -1,0 +1,11 @@
+"""L1 Pallas kernels for the tall-and-fat randomized SVD.
+
+All kernels lower with ``interpret=True`` so the emitted HLO contains only
+plain ops runnable on the CPU PJRT client (see /opt/xla-example/README.md).
+"""
+
+from .gram import gram_block  # noqa: F401
+from .project import project_block  # noqa: F401
+from .fused import project_gram_block  # noqa: F401
+from .tmul import tmul_block  # noqa: F401
+from .urecover import u_recover_block  # noqa: F401

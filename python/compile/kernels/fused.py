@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: fused projection + Gram  (Y, G) = (X @ W, Y^T Y).
+
+The paper's pipeline composition (§2.0.3): project A down to Y = A @ Omega,
+then compute Y^T Y to reduce the SVD to a k x k eigenproblem. Doing both in
+one kernel halves the passes over A's row blocks — Y tiles never round-trip
+to HBM before the Gram update. This is the pass-1 hot path of the randomized
+SVD driver (rust `svd/pipeline.rs`).
+
+Grid walks row tiles sequentially; the k x k accumulator G stays VMEM-resident
+(k is small by construction — that is the whole point of the paper).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_M = 128
+
+
+def _fused_kernel(x_ref, w_ref, y_ref, g_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=y_ref.dtype)
+    y_ref[...] = y
+    g_ref[...] += jnp.dot(y.T, y, preferred_element_type=g_ref.dtype)
+
+
+def project_gram_block(x, w, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """``(block_m, n), (n, k) -> ((block_m, k), (k, k))``: Y block + Y^T Y partial."""
+    block_m, n = x.shape
+    n2, k = w.shape
+    if n != n2:
+        raise ValueError(f"inner dims differ: {n} vs {n2}")
+    if block_m % tile_m != 0:
+        raise ValueError(f"block_m={block_m} not a multiple of tile_m={tile_m}")
+    grid = (block_m // tile_m,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((block_m, k), x.dtype),
+            jax.ShapeDtypeStruct((k, k), x.dtype),
+        ],
+        interpret=interpret,
+    )(x, w)
+
+
+def project_gram_block_jit(tile_m: int = DEFAULT_TILE_M):
+    return partial(project_gram_block, tile_m=tile_m)
+
+
+def vmem_bytes(block_m: int, n: int, k: int, tile_m: int = DEFAULT_TILE_M, itemsize: int = 4) -> int:
+    """One X tile + resident W + one Y tile + resident G accumulator."""
+    return (tile_m * n + n * k + tile_m * k + k * k) * itemsize

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: blocked Gram accumulation  C = X^T X.
+
+The paper's core primitive (§2.0.2): ``A^T A = sum_i A_i (outer) A_i``. A
+whole row-block of A is streamed HBM->VMEM one tile at a time and the small
+``n x n`` accumulator stays resident in VMEM across grid steps — exactly the
+"small result accumulated in memory" the paper builds its parallel scheme on.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the per-tile update is a
+``tile_m x n`` by ``n x tile_m`` matmul on the MXU; the grid walks row tiles
+sequentially so the ``o_ref += ...`` accumulation is well-defined. Lowered with
+``interpret=True`` for CPU-PJRT execution (Mosaic custom-calls cannot run on
+the CPU plugin).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_M = 128
+
+
+def _gram_kernel(x_ref, o_ref):
+    """One grid step: o += x_tile^T @ x_tile (zero-init on the first step)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=o_ref.dtype)
+
+
+def gram_block(x, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """Gram matrix of one row block: ``x`` is ``(block_m, n)`` -> ``(n, n)``.
+
+    ``block_m`` must be a multiple of ``tile_m`` (the rust coordinator pads the
+    ragged tail with zero rows; zero rows contribute nothing to the Gram sum,
+    an invariant the test suites check on both sides of the FFI).
+    """
+    block_m, n = x.shape
+    if block_m % tile_m != 0:
+        raise ValueError(f"block_m={block_m} not a multiple of tile_m={tile_m}")
+    grid = (block_m // tile_m,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_m, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def gram_block_jit(block_m: int, n: int, dtype=jnp.float32, tile_m: int = DEFAULT_TILE_M):
+    """A jit-able closure with static shapes, for AOT lowering."""
+    del block_m, n, dtype  # shapes carried by the example args at lower time
+    return partial(gram_block, tile_m=tile_m)
+
+
+def vmem_bytes(block_m: int, n: int, tile_m: int = DEFAULT_TILE_M, itemsize: int = 4) -> int:
+    """Structural VMEM footprint estimate (see DESIGN.md §Perf): one input tile
+    plus the resident accumulator."""
+    return (tile_m * n + n * n) * itemsize

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: blocked random projection  Y = X @ W.
+
+Paper §2.0.3: multiply each row block of the tall matrix A with the (small)
+``n x k`` projection matrix. W is VMEM-resident across the whole grid (it is
+the paper's "matrix B ... brought into memory completely"); row tiles of X
+stream through. The virtual-B trick (§2.1) lives on the rust side: W's block
+is regenerated from a counter-based PRNG rather than stored, then handed to
+this kernel — the kernel itself only sees a dense operand.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_M = 128
+
+
+def _project_kernel(x_ref, w_ref, y_ref):
+    y_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=y_ref.dtype)
+
+
+def project_block(x, w, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """Project one row block: ``(block_m, n) @ (n, k) -> (block_m, k)``."""
+    block_m, n = x.shape
+    n2, k = w.shape
+    if n != n2:
+        raise ValueError(f"inner dims differ: {n} vs {n2}")
+    if block_m % tile_m != 0:
+        raise ValueError(f"block_m={block_m} not a multiple of tile_m={tile_m}")
+    grid = (block_m // tile_m,)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((block_m, k), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def project_block_jit(tile_m: int = DEFAULT_TILE_M):
+    return partial(project_block, tile_m=tile_m)
+
+
+def vmem_bytes(block_m: int, n: int, k: int, tile_m: int = DEFAULT_TILE_M, itemsize: int = 4) -> int:
+    """One X tile + resident W + one Y tile."""
+    return (tile_m * n + n * k + tile_m * k) * itemsize

@@ -1,0 +1,55 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here written the *dumb* way
+(including the paper's own row-outer-product formulation of the Gram matrix)
+so pytest/hypothesis can sweep shapes and dtypes and assert allclose.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(x):
+    """C = X^T X."""
+    return x.T @ x
+
+
+def gram_outer_ref(x):
+    """The paper's §2.0.2 formulation: sum of per-row outer products.
+
+    Mathematically identical to ``gram_ref``; kept separate so the tests pin
+    the equivalence the whole system rests on.
+    """
+    return jnp.einsum("mi,mj->ij", x, x)
+
+
+def project_ref(x, w):
+    """Y = X W."""
+    return x @ w
+
+
+def project_gram_ref(x, w):
+    """(Y, Y^T Y)."""
+    y = x @ w
+    return y, y.T @ y
+
+
+def u_recover_ref(y, m):
+    """U = Y M."""
+    return y @ m
+
+
+def tmul_ref(x, z):
+    """W = X^T Z."""
+    return x.T @ z
+
+
+def tmul_outer_ref(x, z):
+    """Row-outer-product formulation of ``tmul_ref`` (paper §2.0.2 pattern)."""
+    return jnp.einsum("mi,mj->ij", x, z)
+
+
+def rank_k_svd_ref(a, k):
+    """Direct dense rank-k SVD via jnp.linalg.svd — the gold oracle for the
+    end-to-end pipeline tests."""
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u[:, :k], s[:k], vt[:k, :].T

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: transpose-matmul partial  W = X^T Z.
+
+The pass-2 hot path of the randomized SVD driver: each worker accumulates
+``W = A^T U0`` over its rows as ``W += X_blk^T Z_blk`` where ``X_blk`` is a
+row block of A and ``Z_blk = Y_blk M`` the matching block of the orthonormal
+basis. Per-element this is again the paper's row-outer-product pattern
+(§2.0.2): ``W = sum_i a_i (outer) z_i`` — commutative, so worker partials
+reduce in any order.
+
+Grid walks row tiles; the (n x k) accumulator is VMEM-resident. For very
+large n the accumulator dominates VMEM (n*k*4 bytes) — the shipped variants
+keep n*k <= 2048*32.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_M = 128
+
+
+def _tmul_kernel(x_ref, z_ref, w_ref):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        w_ref[...] = jnp.zeros_like(w_ref)
+
+    w_ref[...] += jnp.dot(x_ref[...].T, z_ref[...], preferred_element_type=w_ref.dtype)
+
+
+def tmul_block(x, z, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """``(block_m, n)^T @ (block_m, k) -> (n, k)``."""
+    block_m, n = x.shape
+    bm2, k = z.shape
+    if block_m != bm2:
+        raise ValueError(f"row blocks differ: {block_m} vs {bm2}")
+    if block_m % tile_m != 0:
+        raise ValueError(f"block_m={block_m} not a multiple of tile_m={tile_m}")
+    grid = (block_m // tile_m,)
+    return pl.pallas_call(
+        _tmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, n), lambda i: (i, 0)),
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(x, z)
+
+
+def tmul_block_jit(tile_m: int = DEFAULT_TILE_M):
+    return partial(tmul_block, tile_m=tile_m)
+
+
+def vmem_bytes(block_m: int, n: int, k: int, tile_m: int = DEFAULT_TILE_M, itemsize: int = 4) -> int:
+    """One X tile + one Z tile + the resident (n, k) accumulator."""
+    return (tile_m * n + tile_m * k + n * k) * itemsize

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: U recovery  U = Y @ M  with M = V diag(1/sigma).
+
+Paper §2.0.1: ``U = A V Sigma^{-1}``. After the k x k eigensolve the rust
+leader forms M = V diag(1/sigma) once (k x k, tiny) and streams Y's row blocks
+through this kernel on pass 2. Structurally identical to `project.py` but kept
+as its own program so artifact shapes/grids can be tuned independently and the
+benches can attribute time per phase.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE_M = 128
+
+
+def _urecover_kernel(y_ref, m_ref, u_ref):
+    u_ref[...] = jnp.dot(y_ref[...], m_ref[...], preferred_element_type=u_ref.dtype)
+
+
+def u_recover_block(y, m, *, tile_m: int = DEFAULT_TILE_M, interpret: bool = True):
+    """``(block_m, k) @ (k, k) -> (block_m, k)``."""
+    block_m, k = y.shape
+    k2, k3 = m.shape
+    if k != k2 or k2 != k3:
+        raise ValueError(f"M must be ({k},{k}), got ({k2},{k3})")
+    if block_m % tile_m != 0:
+        raise ValueError(f"block_m={block_m} not a multiple of tile_m={tile_m}")
+    grid = (block_m // tile_m,)
+    return pl.pallas_call(
+        _urecover_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((block_m, k), y.dtype),
+        interpret=interpret,
+    )(y, m)
+
+
+def u_recover_block_jit(tile_m: int = DEFAULT_TILE_M):
+    return partial(u_recover_block, tile_m=tile_m)
+
+
+def vmem_bytes(block_m: int, k: int, tile_m: int = DEFAULT_TILE_M, itemsize: int = 4) -> int:
+    return (tile_m * k + k * k + tile_m * k) * itemsize

@@ -1,0 +1,248 @@
+"""L2: the paper's compute graph in JAX, composed from the L1 Pallas kernels.
+
+Three things live here:
+
+1. Block-level programs (``gram_program``, ``project_program``,
+   ``project_gram_program``, ``u_recover_program``) — thin jit-able wrappers
+   around the Pallas kernels with static shapes, lowered by ``aot.py`` into
+   one HLO artifact per shape variant. These are what the rust coordinator
+   executes per row block on its hot path.
+
+2. ``jacobi_eigh`` — a cyclic-Jacobi symmetric eigensolver written in pure
+   jnp control flow (``fori_loop`` + dynamic slices). ``jnp.linalg.eigh``
+   lowers to a LAPACK custom-call on CPU which the PJRT client used by the
+   rust side cannot be assumed to resolve; Jacobi lowers to plain HLO. The
+   paper reduces the big SVD to exactly this small dense eigenproblem
+   ("fast computation around k x k matrices computed on a single machine").
+
+3. ``randomized_svd`` — the whole paper pipeline in jnp, used as the python
+   reference for the rust driver and by the pytest suite.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused import project_gram_block
+from .kernels.gram import gram_block
+from .kernels.project import project_block
+from .kernels.tmul import tmul_block
+from .kernels.urecover import u_recover_block
+
+
+# ---------------------------------------------------------------------------
+# Block-level programs (AOT artifact entry points)
+# ---------------------------------------------------------------------------
+
+def gram_program(x):
+    """(block_m, n) -> (n, n). Lowered as ``gram_b{B}_n{N}``."""
+    return (gram_block(x),)
+
+
+def project_program(x, w):
+    """(block_m, n), (n, k) -> (block_m, k). Lowered as ``project_b{B}_n{N}_k{K}``."""
+    return (project_block(x, w),)
+
+
+def project_gram_program(x, w):
+    """(block_m, n), (n, k) -> ((block_m, k), (k, k)). The fused pass-1 program."""
+    y, g = project_gram_block(x, w)
+    return (y, g)
+
+
+def u_recover_program(y, m):
+    """(block_m, k), (k, k) -> (block_m, k). The pass-3 program."""
+    return (u_recover_block(y, m),)
+
+
+def tmul_program(x, z):
+    """(block_m, n), (block_m, k) -> (n, k). The pass-2 W-accumulation program."""
+    return (tmul_block(x, z),)
+
+
+def urecover_tmul_program(x, y, m):
+    """Fused pass-2: (block_m, n) A rows, (block_m, k) Y rows, (k, k) M ->
+    ((block_m, k) U0 rows, (n, k) W partial). One pass computes the basis
+    rows AND the A^T U0 partial."""
+    u0 = u_recover_block(y, m)
+    w = tmul_block(x, u0)
+    return (u0, w)
+
+
+# ---------------------------------------------------------------------------
+# Cyclic Jacobi eigensolver (plain-HLO lowerable)
+# ---------------------------------------------------------------------------
+
+def _jacobi_pairs(n):
+    """Static (p, q) index arrays for one cyclic sweep over the strict upper
+    triangle (kept for the python-side reference/tests)."""
+    ps, qs = [], []
+    for p in range(n - 1):
+        for q in range(p + 1, n):
+            ps.append(p)
+            qs.append(q)
+    return jnp.array(ps, dtype=jnp.int32), jnp.array(qs, dtype=jnp.int32)
+
+
+def jacobi_eigh(a, sweeps: int = 12):
+    """Eigendecomposition of a symmetric matrix by parallel-ordered Jacobi
+    rotations (circle-method ordering: ``n/2`` disjoint rotations per round,
+    ``n - 1`` rounds per sweep, every pair annihilated once per sweep).
+
+    Returns ``(eigvals, eigvecs)`` sorted in *descending* eigenvalue order
+    (the SVD convention: ``sigma_i = sqrt(max(eigval_i, 0))``). ``sweeps``
+    full sweeps are unconditionally applied; 12 sweeps converge to fp32
+    roundoff for the k <= 128 matrices this system produces (Jacobi is
+    ultimately quadratically convergent).
+
+    AOT-COMPAT NOTE — why this looks nothing like textbook Jacobi: the
+    HLO-text artifacts execute on xla_extension 0.5.1 (the runtime behind
+    the rust ``xla`` crate), and bisection against it showed two miscompile
+    classes inside ``while`` bodies:
+
+      1. dynamic-index scatter (``a.at[p, :].set``) and dynamic gather from
+         a constant index table silently corrupt indices;
+      2. ``dot`` with a *literal-constant* operand evaluates to zeros, even
+         when the constant is threaded through the loop state (constants
+         get re-folded into the body).
+
+    ``iota``-derived values are immune (they are computed, not literal), so
+    everything here is built from ``jnp.arange``: the identity, the
+    round-robin partner schedule (circle method, in closed form
+    ``partner(j) = (r - j) mod (n-1)`` with the fixed player ``n-1``), the
+    per-index one-hot partner matrix, and the combined Givens matrix
+    ``G = diag(c) + (+/- s at (j, partner(j)))``. Angles for all ``n/2``
+    pairs of a round are computed vectorized; ``sign(0) := 1`` keeps the
+    equal-diagonal pair rotating (``jnp.sign`` would stall it). Verified
+    bit-compatible between jax execution and the rust PJRT path for
+    k in {8, 16, 32, 64}.
+    """
+    n = a.shape[0]
+    dtype = a.dtype
+    if n % 2 == 1:
+        # Pad odd sizes with a decoupled zero row/col; the pad eigenpair is
+        # exactly (0, e_n), so drop the column whose last entry is ~1.
+        a_pad = jnp.pad(a, ((0, 1), (0, 1)))
+        w, v = jacobi_eigh(a_pad, sweeps)
+        mask = jnp.abs(v[n, :]) < 0.5
+        order = jnp.argsort(~mask)  # real columns first, order preserved
+        return w[order][:n], v[:n, order][:, :n]
+
+    nr = n - 1  # rounds per sweep (circle method 1-factorization of K_n)
+    half = n // 2
+    iota = jnp.arange(n, dtype=jnp.int32)
+    eye = (iota[:, None] == iota[None, :]).astype(dtype)  # iota, not literal
+    ones = jnp.ones((n,), dtype=dtype)
+
+    def body(t, state):
+        a, v = state
+        # Re-symmetrize: G A G^T drifts from symmetry at roundoff level, and
+        # a pair's two orientations would then derive *different* angles from
+        # a[p,q] vs a[q,p] once those are tiny — making G non-orthogonal and
+        # stalling convergence on clustered spectra. 0.5 (a + a^T) reads
+        # identically from both orientations (IEEE + is commutative).
+        a = 0.5 * (a + a.T)
+        r = jnp.mod(t, nr)
+        # Closed-form partner schedule for round r.
+        m0 = jnp.mod(r - iota, nr)
+        partner = jnp.where(m0 == iota, n - 1, m0)
+        jstar = jnp.mod(r * half, nr)  # who meets the fixed player n-1
+        partner = jnp.where(iota == n - 1, jstar, partner)
+        pm = (iota[None, :] == partner[:, None]).astype(dtype)
+
+        # Pair scalars for every index j, vectorized (dots with computed
+        # matrices only): a_jj, a[j, partner], a[partner, partner].
+        diag_a = (a * eye) @ ones
+        a_jm = (a * pm) @ ones
+        diag_p = pm @ diag_a
+        is_p = iota < partner  # j is the p (upper-left) end of its pair
+        lo = jnp.where(is_p, diag_a, diag_p)   # a_pp
+        hi = jnp.where(is_p, diag_p, diag_a)   # a_qq
+        apq_safe = jnp.where(a_jm == 0, jnp.asarray(1.0, dtype), a_jm)
+        tau = (hi - lo) / (2.0 * apq_safe)
+        sgn = jnp.where(tau >= 0, jnp.asarray(1.0, dtype), jnp.asarray(-1.0, dtype))
+        tn = sgn / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+        tn = jnp.where(a_jm == 0, jnp.asarray(0.0, dtype), tn)
+        c = 1.0 / jnp.sqrt(1.0 + tn * tn)
+        s = tn * c
+
+        # Combined Givens matrix of the n/2 disjoint rotations:
+        # G[j,j] = c_j, G[p,q] = -s, G[q,p] = +s.
+        gs = jnp.where(is_p, -s, s)
+        g = c[:, None] * eye + gs[:, None] * pm
+        return g @ a @ g.T, v @ g.T
+
+    a_out, v_out = jax.lax.fori_loop(0, sweeps * nr, body, (a, eye))
+    w = (a_out * eye) @ ones
+    order = jnp.argsort(-w)
+    return w[order], v_out[:, order]
+
+
+def eigh_program(g):
+    """(k, k) -> ((k,), (k, k)). Lowered as ``eigh_k{K}`` — descending order."""
+    w, v = jacobi_eigh(g)
+    return (w, v)
+
+
+# ---------------------------------------------------------------------------
+# Whole-pipeline jnp reference (paper §2, end to end)
+# ---------------------------------------------------------------------------
+
+def randomized_svd(a, omega, sweeps: int = 12):
+    """Rank-k SVD of tall ``a`` via the paper's route.
+
+    ``omega`` is the (n, k) Gaussian projection matrix (materialized here; the
+    rust side regenerates it virtually). Pipeline:
+
+        Y = A Omega                (pass 1, streamed)
+        G = Y^T Y = V' S^2 V'^T    (k x k, leader)
+        sigma = sqrt(eig(G)),  V_y = eigvecs
+        U = Y V_y sigma^{-1}       (pass 2, streamed)
+        V = A^T U sigma^{-1}       (right vectors of A, lifted back to n dims)
+
+    Returns ``(U, sigma, V)`` with U ``(m, k)``, sigma ``(k,)``, V ``(n, k)``.
+    """
+    y = a @ omega
+    g = y.T @ y
+    w, vy = jacobi_eigh(g, sweeps=sweeps)
+    sig_y = jnp.sqrt(jnp.maximum(w, 0.0))
+    cutoff = 1e-5 * jnp.maximum(sig_y[0], 1e-30)
+    inv_y = jnp.where(sig_y > cutoff, 1.0 / jnp.maximum(sig_y, 1e-30), 0.0)
+    # Orthonormal basis of range(Y) — approximates A's top-k left subspace.
+    u0 = y @ (vy * inv_y[None, :])
+    # sigma(Y) carries the sketch's distortion. Recover accurate factors from
+    # A itself: with U0 an orthonormal basis of range(A)'s sketch,
+    #   A ≈ U0 U0^T A = U0 W^T,  W = A^T U0  (n x k; the rust pass-2
+    # accumulates it as sum_i a_i (outer) u_i). The SVD of W is again only a
+    # k x k eigenproblem: W^T W = P S^2 P^T, giving
+    #   sigma = S,  V = W P S^{-1},  U = U0 P.
+    # Exact when rank(A) <= k; otherwise error = tail energy + sketch error.
+    wmat = a.T @ u0
+    gw = wmat.T @ wmat
+    w2, p = jacobi_eigh(gw, sweeps=sweeps)
+    sigma = jnp.sqrt(jnp.maximum(w2, 0.0))
+    cut2 = 1e-7 * jnp.maximum(sigma[0], 1e-30)
+    inv_s = jnp.where(sigma > cut2, 1.0 / jnp.maximum(sigma, 1e-30), 0.0)
+    v = wmat @ (p * inv_s[None, :])
+    u = u0 @ p
+    return u, sigma, v
+
+
+def gram_svd(a, sweeps: int = 12):
+    """The paper's small-n route (§2.0.1): eigendecompose A^T A directly."""
+    g = a.T @ a
+    w, v = jacobi_eigh(g, sweeps=sweeps)
+    sigma = jnp.sqrt(jnp.maximum(w, 0.0))
+    inv = jnp.where(sigma > 0, 1.0 / jnp.maximum(sigma, 1e-30), 0.0)
+    u = a @ (v * inv[None, :])
+    return u, sigma, v
+
+
+# jit-able entry points with sweeps fixed (static control flow for lowering)
+gram_program_jit = jax.jit(gram_program)
+project_program_jit = jax.jit(project_program)
+project_gram_program_jit = jax.jit(project_gram_program)
+u_recover_program_jit = jax.jit(u_recover_program)
+eigh_program_jit = jax.jit(eigh_program)
+randomized_svd_jit = jax.jit(partial(randomized_svd, sweeps=12))

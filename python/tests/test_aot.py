@@ -1,0 +1,86 @@
+"""AOT artifact pipeline integrity: manifest schema, HLO parse-ability, and
+round-trip execution of emitted HLO through jax's own HLO client is out of
+scope (the rust integration tests cover execution); here we pin the contract
+the rust ``runtime::artifact`` parser depends on."""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+ARTIFACTS = os.path.join(REPO, "artifacts")
+
+REQUIRED_KEYS = {"program", "name", "file", "dtype", "block", "n", "k", "ins", "outs"}
+
+
+def _parse_manifest(path):
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            kv = dict(tok.split("=", 1) for tok in line.split())
+            entries.append(kv)
+    return entries
+
+
+@pytest.fixture(scope="module")
+def small_artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts_small")
+    aot.build(str(out), small=True)
+    return str(out)
+
+
+class TestManifestContract:
+    def test_small_build_produces_manifest(self, small_artifacts):
+        entries = _parse_manifest(os.path.join(small_artifacts, "manifest.txt"))
+        # gram, project, fused, urecover, tmul, urecover_tmul, eigh
+        assert len(entries) == 7
+
+    def test_every_entry_has_required_keys(self, small_artifacts):
+        for e in _parse_manifest(os.path.join(small_artifacts, "manifest.txt")):
+            assert REQUIRED_KEYS <= set(e), e
+
+    def test_files_exist_and_are_hlo_text(self, small_artifacts):
+        for e in _parse_manifest(os.path.join(small_artifacts, "manifest.txt")):
+            path = os.path.join(small_artifacts, e["file"])
+            assert os.path.exists(path)
+            text = open(path).read()
+            assert "ENTRY" in text and "HloModule" in text
+
+    def test_shapes_in_manifest_match_hlo_params(self, small_artifacts):
+        """The module's parameter instruction shapes must equal the manifest's
+        ``ins`` — that is what the rust side sizes its buffers from."""
+        for e in _parse_manifest(os.path.join(small_artifacts, "manifest.txt")):
+            text = open(os.path.join(small_artifacts, e["file"])).read()
+            params = re.findall(r"= f32\[([0-9,]*)\](?:\{[0-9,]*\})? parameter\(", text)
+            want = [s.replace("x", ",") for s in e["ins"].split(",") if s]
+            for w in want:
+                assert w in params, (e["name"], w, params)
+
+    def test_no_custom_calls(self, small_artifacts):
+        """interpret=True + jnp-only code must lower to plain HLO the CPU
+        PJRT client can run — custom-call would break the rust side."""
+        for e in _parse_manifest(os.path.join(small_artifacts, "manifest.txt")):
+            text = open(os.path.join(small_artifacts, e["file"])).read()
+            assert "custom-call" not in text, e["name"]
+
+
+class TestCheckedInArtifacts:
+    """Sanity over the real artifacts/ dir if it has been built."""
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS, "manifest.txt")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_full_manifest_parses(self):
+        entries = _parse_manifest(os.path.join(ARTIFACTS, "manifest.txt"))
+        assert len(entries) >= 5
+        programs = {e["program"] for e in entries}
+        assert {"gram", "project", "fused", "urecover", "tmul", "urecover_tmul", "eigh"} <= programs

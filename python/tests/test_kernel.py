@@ -1,0 +1,197 @@
+"""Kernel-vs-reference correctness: the CORE signal for L1.
+
+Hypothesis sweeps shapes and dtypes; every Pallas kernel must match its
+pure-jnp oracle to fp tolerance, plus the zero-row-padding invariant the rust
+coordinator relies on (padded rows contribute nothing to Gram/projection).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fused, gram, project, ref, tmul, urecover
+
+TILE = 128
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=shape).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-3) if dtype == np.float32 else dict(rtol=1e-9, atol=1e-10)
+
+
+blocks = st.sampled_from([128, 256, 384, 512])
+ns = st.sampled_from([1, 3, 8, 64, 100, 256])
+ks = st.sampled_from([1, 2, 7, 16, 32])
+dtypes = st.sampled_from([np.float32])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestGram:
+    @settings(max_examples=25, deadline=None)
+    @given(b=blocks, n=ns, dtype=dtypes, seed=seeds)
+    def test_matches_ref(self, b, n, dtype, seed):
+        x = _rand((b, n), dtype, seed)
+        got = np.asarray(gram.gram_block(jnp.asarray(x)))
+        want = np.asarray(ref.gram_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    @settings(max_examples=10, deadline=None)
+    @given(b=blocks, n=ns, seed=seeds)
+    def test_matches_paper_outer_product_form(self, b, n, seed):
+        """§2.0.2: sum of per-row outer products == X^T X."""
+        x = _rand((b, n), np.float32, seed)
+        got = np.asarray(gram.gram_block(jnp.asarray(x)))
+        want = np.asarray(ref.gram_outer_ref(jnp.asarray(x)))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-3)
+
+    def test_symmetry(self):
+        x = _rand((256, 64), np.float32, 7)
+        g = np.asarray(gram.gram_block(jnp.asarray(x)))
+        np.testing.assert_allclose(g, g.T, rtol=0, atol=0)
+
+    def test_zero_row_padding_invariant(self):
+        """Padding a block with zero rows must not change the Gram sum."""
+        x = _rand((128, 32), np.float32, 11)
+        padded = np.zeros((256, 32), np.float32)
+        padded[:128] = x
+        g1 = np.asarray(gram.gram_block(jnp.asarray(x)))
+        g2 = np.asarray(gram.gram_block(jnp.asarray(padded)))
+        np.testing.assert_allclose(g1, g2, rtol=1e-6, atol=1e-6)
+
+    def test_psd(self):
+        x = _rand((256, 16), np.float32, 3)
+        g = np.asarray(gram.gram_block(jnp.asarray(x)), dtype=np.float64)
+        w = np.linalg.eigvalsh((g + g.T) / 2)
+        assert w.min() >= -1e-3
+
+    def test_rejects_ragged_block(self):
+        with pytest.raises(ValueError):
+            gram.gram_block(jnp.zeros((100, 8), jnp.float32))
+
+
+class TestProject:
+    @settings(max_examples=25, deadline=None)
+    @given(b=blocks, n=ns, k=ks, dtype=dtypes, seed=seeds)
+    def test_matches_ref(self, b, n, k, dtype, seed):
+        x = _rand((b, n), dtype, seed)
+        w = _rand((n, k), dtype, seed + 1)
+        got = np.asarray(project.project_block(jnp.asarray(x), jnp.asarray(w)))
+        want = np.asarray(ref.project_ref(jnp.asarray(x), jnp.asarray(w)))
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_zero_rows_project_to_zero(self):
+        w = _rand((64, 16), np.float32, 0)
+        y = np.asarray(project.project_block(jnp.zeros((128, 64), jnp.float32), jnp.asarray(w)))
+        assert np.all(y == 0)
+
+    def test_inner_dim_mismatch(self):
+        with pytest.raises(ValueError):
+            project.project_block(jnp.zeros((128, 8), jnp.float32), jnp.zeros((9, 4), jnp.float32))
+
+
+class TestFused:
+    @settings(max_examples=25, deadline=None)
+    @given(b=blocks, n=ns, k=ks, dtype=dtypes, seed=seeds)
+    def test_matches_ref(self, b, n, k, dtype, seed):
+        x = _rand((b, n), dtype, seed)
+        w = _rand((n, k), dtype, seed + 1)
+        y, g = fused.project_gram_block(jnp.asarray(x), jnp.asarray(w))
+        yr, gr = ref.project_gram_ref(jnp.asarray(x), jnp.asarray(w))
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr), rtol=5e-2, atol=5e-2)
+
+    def test_consistent_with_unfused(self):
+        x = _rand((256, 64), np.float32, 5)
+        w = _rand((64, 16), np.float32, 6)
+        y_f, g_f = fused.project_gram_block(jnp.asarray(x), jnp.asarray(w))
+        y_s = project.project_block(jnp.asarray(x), jnp.asarray(w))
+        g_s = gram.gram_block(jnp.asarray(np.asarray(y_s)))
+        np.testing.assert_allclose(np.asarray(y_f), np.asarray(y_s), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(g_f), np.asarray(g_s), rtol=1e-3, atol=1e-3)
+
+    def test_gram_accumulates_across_tiles(self):
+        """G must cover ALL row tiles, not just the last grid step."""
+        x = _rand((512, 32), np.float32, 9)
+        w = _rand((32, 8), np.float32, 10)
+        _, g = fused.project_gram_block(jnp.asarray(x), jnp.asarray(w))
+        yr = x @ w
+        np.testing.assert_allclose(np.asarray(g), yr.T @ yr, rtol=1e-3, atol=1e-3)
+
+
+class TestURecover:
+    @settings(max_examples=20, deadline=None)
+    @given(b=blocks, k=ks, dtype=dtypes, seed=seeds)
+    def test_matches_ref(self, b, k, dtype, seed):
+        y = _rand((b, k), dtype, seed)
+        m = _rand((k, k), dtype, seed + 1)
+        got = np.asarray(urecover.u_recover_block(jnp.asarray(y), jnp.asarray(m)))
+        want = np.asarray(ref.u_recover_ref(jnp.asarray(y), jnp.asarray(m)))
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_identity_passthrough(self):
+        y = _rand((128, 16), np.float32, 1)
+        got = np.asarray(urecover.u_recover_block(jnp.asarray(y), jnp.eye(16, dtype=jnp.float32)))
+        np.testing.assert_allclose(got, y, rtol=1e-6, atol=1e-6)
+
+
+class TestTmul:
+    @settings(max_examples=20, deadline=None)
+    @given(b=blocks, n=ns, k=ks, dtype=dtypes, seed=seeds)
+    def test_matches_ref(self, b, n, k, dtype, seed):
+        x = _rand((b, n), dtype, seed)
+        z = _rand((b, k), dtype, seed + 1)
+        got = np.asarray(tmul.tmul_block(jnp.asarray(x), jnp.asarray(z)))
+        want = np.asarray(ref.tmul_ref(jnp.asarray(x), jnp.asarray(z)))
+        np.testing.assert_allclose(got, want, **_tol(dtype))
+
+    def test_matches_outer_product_form(self):
+        x = _rand((256, 32), np.float32, 21)
+        z = _rand((256, 8), np.float32, 22)
+        got = np.asarray(tmul.tmul_block(jnp.asarray(x), jnp.asarray(z)))
+        want = np.asarray(ref.tmul_outer_ref(jnp.asarray(x), jnp.asarray(z)))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-3)
+
+    def test_accumulates_across_tiles(self):
+        x = _rand((512, 16), np.float32, 23)
+        z = _rand((512, 4), np.float32, 24)
+        got = np.asarray(tmul.tmul_block(jnp.asarray(x), jnp.asarray(z)))
+        np.testing.assert_allclose(got, x.T @ z, rtol=1e-3, atol=1e-3)
+
+    def test_zero_row_padding_invariant(self):
+        x = _rand((128, 16), np.float32, 25)
+        z = _rand((128, 4), np.float32, 26)
+        xp = np.zeros((256, 16), np.float32)
+        zp = np.zeros((256, 4), np.float32)
+        xp[:128], zp[:128] = x, z
+        g1 = np.asarray(tmul.tmul_block(jnp.asarray(x), jnp.asarray(z)))
+        g2 = np.asarray(tmul.tmul_block(jnp.asarray(xp), jnp.asarray(zp)))
+        np.testing.assert_allclose(g1, g2, rtol=1e-6, atol=1e-6)
+
+    def test_row_block_mismatch(self):
+        with pytest.raises(ValueError):
+            tmul.tmul_block(jnp.zeros((128, 8), jnp.float32), jnp.zeros((256, 4), jnp.float32))
+
+
+class TestVmemEstimates:
+    """Structural perf contracts (DESIGN.md §Perf): VMEM-resident working sets
+    must stay far under a ~16 MiB VMEM budget for every shipped variant."""
+
+    VMEM_BUDGET = 16 * 1024 * 1024
+
+    def test_all_default_variants_fit(self):
+        from compile import aot
+
+        for b, n in aot.GRAM_VARIANTS:
+            assert gram.vmem_bytes(b, n) < self.VMEM_BUDGET
+        for b, n, k in aot.PROJECT_VARIANTS:
+            assert project.vmem_bytes(b, n, k) < self.VMEM_BUDGET
+        for b, n, k in aot.FUSED_VARIANTS:
+            assert fused.vmem_bytes(b, n, k) < self.VMEM_BUDGET
+        for b, k in aot.URECOVER_VARIANTS:
+            assert urecover.vmem_bytes(b, k) < self.VMEM_BUDGET

@@ -1,0 +1,134 @@
+"""End-to-end L2 pipeline tests: the paper's randomized SVD vs dense SVD."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _low_rank(m, n, rank, seed, noise=0.0, decay=0.5):
+    """Synthetic matrix with a decaying spectrum — the regime where a rank-k
+    sketch is a faithful stand-in (Halko et al.)."""
+    rng = np.random.default_rng(seed)
+    u, _ = np.linalg.qr(rng.normal(size=(m, rank)))
+    v, _ = np.linalg.qr(rng.normal(size=(n, rank)))
+    s = np.array([10.0 * decay**i for i in range(rank)])
+    a = (u * s) @ v.T
+    if noise:
+        a = a + noise * rng.normal(size=(m, n))
+    return a.astype(np.float32)
+
+
+class TestGramSvd:
+    """Paper §2.0.1: exact route through A^T A for small n."""
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_singular_values_match_dense(self, seed):
+        a = _low_rank(200, 16, 8, seed, noise=0.01)
+        _, sig, _ = model.gram_svd(jnp.asarray(a))
+        s_ref = np.linalg.svd(a, compute_uv=False)
+        np.testing.assert_allclose(np.asarray(sig), s_ref, rtol=5e-2, atol=5e-2)
+
+    def test_reconstruction(self):
+        a = _low_rank(300, 20, 20, 0)
+        u, sig, v = model.gram_svd(jnp.asarray(a))
+        recon = np.asarray(u) * np.asarray(sig) @ np.asarray(v).T
+        rel = np.linalg.norm(recon - a) / np.linalg.norm(a)
+        assert rel < 1e-2
+
+    def test_u_columns_orthonormal(self):
+        # decay=0.85 keeps the condition number moderate; U = A V Sigma^{-1}
+        # loses orthonormality in f32 once sigma_min approaches roundoff.
+        a = _low_rank(150, 12, 12, 4, decay=0.85)
+        u, _, _ = model.gram_svd(jnp.asarray(a))
+        u = np.asarray(u, dtype=np.float64)
+        np.testing.assert_allclose(u.T @ u, np.eye(12), atol=1e-2)
+
+
+class TestRandomizedSvd:
+    """Paper §2.0.3 + §2.1: the projected route for large n."""
+
+    def _omega(self, n, k, seed):
+        rng = np.random.default_rng(seed)
+        return (rng.normal(size=(n, k)) / np.sqrt(k)).astype(np.float32)
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_captures_top_singular_values(self, seed):
+        rank, k = 6, 16
+        a = _low_rank(400, 64, rank, seed)
+        u, sig, v = model.randomized_svd(jnp.asarray(a), jnp.asarray(self._omega(64, k, seed + 1)))
+        s_ref = np.linalg.svd(a, compute_uv=False)
+        # Top singular values recovered within the sketch distortion.
+        np.testing.assert_allclose(np.asarray(sig)[:rank], s_ref[:rank], rtol=0.15)
+
+    def test_reconstruction_error_near_tail_energy(self):
+        rank = 8
+        a = _low_rank(500, 128, rank, 3, noise=0.0)
+        u, sig, v = model.randomized_svd(jnp.asarray(a), jnp.asarray(self._omega(128, 24, 7)))
+        recon = (np.asarray(u) * np.asarray(sig)) @ np.asarray(v).T
+        rel = np.linalg.norm(recon - a) / np.linalg.norm(a)
+        assert rel < 0.05, rel
+
+    def test_more_dims_reduce_error(self):
+        """JL claim: distortion shrinks as k grows."""
+        a = _low_rank(400, 100, 12, 5, noise=0.05)
+        errs = []
+        for k in (4, 16, 48):
+            u, sig, v = model.randomized_svd(jnp.asarray(a), jnp.asarray(self._omega(100, k, 11)))
+            recon = (np.asarray(u) * np.asarray(sig)) @ np.asarray(v).T
+            errs.append(np.linalg.norm(recon - a) / np.linalg.norm(a))
+        assert errs[2] < errs[1] < errs[0] + 1e-6, errs
+
+    def test_u_orthonormal_on_exact_low_rank(self):
+        a = _low_rank(300, 60, 4, 9)
+        u, _, _ = model.randomized_svd(jnp.asarray(a), jnp.asarray(self._omega(60, 12, 2)))
+        u = np.asarray(u, dtype=np.float64)[:, :4]
+        np.testing.assert_allclose(u.T @ u, np.eye(4), atol=5e-2)
+
+
+class TestBlockCompositionEqualsDense:
+    """The streaming decomposition the rust coordinator performs must equal
+    the one-shot dense computation: sum of per-block Grams == full Gram, and
+    stacked per-block projections == full projection."""
+
+    def test_blocked_gram_sum(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(1024, 32)).astype(np.float32)
+        full = np.asarray(ref.gram_ref(jnp.asarray(a)))
+        acc = np.zeros((32, 32), np.float32)
+        for i in range(0, 1024, 256):
+            acc += np.asarray(model.gram_program(jnp.asarray(a[i : i + 256]))[0])
+        np.testing.assert_allclose(acc, full, rtol=1e-3, atol=1e-3)
+
+    def test_blocked_fused_pipeline(self):
+        rng = np.random.default_rng(1)
+        a = rng.normal(size=(768, 48)).astype(np.float32)
+        w = rng.normal(size=(48, 8)).astype(np.float32)
+        y_full = a @ w
+        g_full = y_full.T @ y_full
+        ys, g_acc = [], np.zeros((8, 8), np.float32)
+        for i in range(0, 768, 256):
+            y, g = model.project_gram_program(jnp.asarray(a[i : i + 256]), jnp.asarray(w))
+            ys.append(np.asarray(y))
+            g_acc += np.asarray(g)
+        np.testing.assert_allclose(np.vstack(ys), y_full, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(g_acc, g_full, rtol=1e-2, atol=1e-2)
+
+    def test_ragged_tail_via_zero_padding(self):
+        """700 rows in 256-blocks: the last block is zero-padded; result must
+        equal the unpadded dense computation."""
+        rng = np.random.default_rng(2)
+        a = rng.normal(size=(700, 24)).astype(np.float32)
+        full = a.T @ a
+        acc = np.zeros((24, 24), np.float32)
+        for i in range(0, 700, 256):
+            blk = np.zeros((256, 24), np.float32)
+            chunk = a[i : i + 256]
+            blk[: len(chunk)] = chunk
+            acc += np.asarray(model.gram_program(jnp.asarray(blk))[0])
+        np.testing.assert_allclose(acc, full, rtol=1e-3, atol=1e-3)

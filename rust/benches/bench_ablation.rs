@@ -1,0 +1,125 @@
+//! E9 — ablations of the design choices DESIGN.md calls out.
+//!
+//! * **E9.a Gram route vs TSQR** (paper §2.0.1 vs its reference [1]):
+//!   `AᵀA` squares the condition number; sweep the spectrum span and show
+//!   where the paper's route loses σ_min while streaming TSQR holds it.
+//! * **E9.b oversampling** (Halko's p): accuracy vs the sketch-width tax.
+//! * **E9.c fused vs separate pass 1**: the fused project+gram artifact
+//!   against running project then gram as two ops (why L1 fuses them).
+//! * **E9.d shard format**: CSV vs binary intermediates on the pipeline.
+
+mod common;
+
+use std::sync::Arc;
+use tallfat::backend::{native::NativeBackend, Backend};
+use tallfat::config::InputFormat;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::jobs::tsqr_sigma_file;
+use tallfat::linalg::{eigen::eigh, gram, Matrix};
+use tallfat::rng::Gaussian;
+use tallfat::svd::{randomized_svd_file, validate::reconstruction_error_streaming, SvdOptions};
+
+fn main() {
+    let dir = common::bench_dir("ablation");
+    let backend = Arc::new(NativeBackend::new());
+
+    // ---- E9.a conditioning: gram vs tsqr ------------------------------------
+    common::header("E9.a sigma_min recovery vs condition number (m=2000 n=12)");
+    println!(
+        "{:>10} {:>12} {:>16} {:>16}",
+        "kappa", "sigma_min", "gram rel err", "tsqr rel err"
+    );
+    for (kappa, decay) in [(1e2, 0.657), (1e4, 0.433), (1e6, 0.285), (1e8, 0.187)] {
+        let n = 12;
+        let (a, _) =
+            gen_exact(2000, n, n, Spectrum::Geometric { scale: 1.0, decay }, 0.0, 31).unwrap();
+        // Ground truth = the matrix's actual spectrum (dense one-sided
+        // Jacobi SVD, accurate to machine precision for small n) — the
+        // generator's declared sigma has its own f64 construction floor.
+        let smin = tallfat::linalg::exact_svd(&a).unwrap().sigma[n - 1];
+        let input = InputSpec::bin(
+            dir.join(format!("cond_{}.bin", kappa as u64)).to_string_lossy().into_owned(),
+        );
+        tallfat::io::write_matrix(&a, &input).unwrap();
+        // gram route
+        let g = gram(&a);
+        let (w, _) = eigh(&g).unwrap();
+        let gram_smin = w[n - 1].max(0.0).sqrt();
+        // tsqr route (streaming over the file)
+        let tsqr_sigma = tsqr_sigma_file(&input, 3, 128).unwrap();
+        println!(
+            "{:>10.0e} {:>12.3e} {:>16.2e} {:>16.2e}",
+            kappa,
+            smin,
+            (gram_smin - smin).abs() / smin,
+            (tsqr_sigma[n - 1] - smin).abs() / smin
+        );
+    }
+    println!("(gram squares kappa: sigma_min drowns past kappa ~ 1e8 = sqrt(1/eps_f64))");
+
+    // ---- E9.b oversampling ----------------------------------------------------
+    common::header("E9.b oversampling p at k=16 (power-law spectrum, 1500x256)");
+    let (a, _) = gen_exact(1500, 256, 64, Spectrum::Power { scale: 10.0 }, 0.0, 32).unwrap();
+    let input = InputSpec::bin(dir.join("oversample.bin").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    println!("{:>6} {:>10} {:>14} {:>12}", "p", "sketch", "recon err", "time");
+    for p in [0usize, 2, 4, 8, 16, 32] {
+        let opts = SvdOptions {
+            k: 16,
+            oversample: p,
+            workers: 2,
+            seed: 9,
+            work_dir: dir.join(format!("os{p}")).to_string_lossy().into_owned(),
+            ..SvdOptions::default()
+        };
+        let (res, t) =
+            common::time_once(|| randomized_svd_file(&input, backend.clone(), &opts).unwrap());
+        let err = reconstruction_error_streaming(&input, &res).unwrap();
+        println!("{:>6} {:>10} {:>14.6} {:>12.2?}", p, 16 + p, err, t);
+    }
+    println!("(optimal rank-16 error here = 0.166; p>=8 buys most of the gap)");
+
+    // ---- E9.c fused vs separate pass-1 -----------------------------------------
+    common::header("E9.c fused project+gram vs separate ops (per 256-row block, best of 20)");
+    let g = Gaussian::new(33);
+    println!("{:<8} {:>14} {:>16} {:>8}", "n", "separate", "fused", "ratio");
+    for n in [256usize, 1024, 2048] {
+        let x = Matrix::from_fn(256, n, |i, j| g.sample(i as u64, j as u64));
+        let w = Matrix::from_fn(n, 32, |i, j| g.sample(1000 + i as u64, j as u64));
+        let (_, t_sep) = common::time_best(20, || {
+            let y = backend.project_block(&x, &w).unwrap();
+            backend.gram_block(&y).unwrap()
+        });
+        let (_, t_fused) = common::time_best(20, || backend.project_gram_block(&x, &w).unwrap());
+        println!(
+            "{:<8} {:>14.1?} {:>16.1?} {:>7.2}x",
+            n,
+            t_sep,
+            t_fused,
+            t_sep.as_secs_f64() / t_fused.as_secs_f64()
+        );
+    }
+
+    // ---- E9.d shard format -------------------------------------------------------
+    common::header("E9.d Y/U shard format: csv vs bin (20000x256 pipeline, k=16)");
+    let sh_input = common::ensure_dataset(&dir, "shards", 20_000, 256, true);
+    println!("{:>8} {:>12} {:>14}", "format", "end-to-end", "Y shard bytes");
+    for (label, fmt) in [("bin", InputFormat::Bin), ("csv", InputFormat::Csv)] {
+        let opts = SvdOptions {
+            k: 16,
+            oversample: 8,
+            workers: 4,
+            seed: 1,
+            work_dir: dir.join(format!("fmt_{label}")).to_string_lossy().into_owned(),
+            shard_format: fmt,
+            ..SvdOptions::default()
+        };
+        let (res, t) =
+            common::time_once(|| randomized_svd_file(&sh_input, backend.clone(), &opts).unwrap());
+        let shard0 = std::fs::metadata(res.u_shards.shard_path(0))
+            .map(|m| m.len())
+            .unwrap_or(0);
+        println!("{:>8} {:>12.2?} {:>14}", label, t, shard0 * res.shards as u64);
+    }
+}

@@ -1,0 +1,90 @@
+//! E2 — Split-Process vs Map-Reduce (paper Figure 2 vs Figure 3).
+//!
+//! Same `A^T A` job on both engines. Split-Process reduces in memory
+//! (workers ship one n x n partial each); faithful MR materializes every
+//! outer-product element as a shuffled (key, value) pair. We report wall
+//! time, bytes materialized, and the simulated cluster makespans where the
+//! shuffle crosses a real network.
+
+mod common;
+
+use tallfat::jobs::AtaRowJob;
+use tallfat::mapreduce::{ata_mapreduce, AtaMrMode};
+use tallfat::simulator::{
+    calibrate_rows_per_sec, simulate_mapreduce, simulate_split_process, ClusterParams,
+};
+use tallfat::splitproc;
+use tallfat::util::humanize::fmt_bytes;
+
+fn main() {
+    let dir = common::bench_dir("arch");
+    let (m, n) = (20_000, 32);
+    let input = common::ensure_dataset(&dir, "arch", m, n, false);
+    let workers = 4;
+
+    // ---- measured, in-process ----------------------------------------------
+    common::header("E2.a measured (in-process, 4 workers/mappers)");
+    let (gram_sp, t_sp) = common::time_best(3, || {
+        let r = splitproc::run(&input, workers, |_| Ok(AtaRowJob::new(n))).unwrap();
+        splitproc::reduce_partials(r.into_iter().map(|w| w.job.into_partial()).collect()).unwrap()
+    });
+    let sp_bytes = (workers * n * n * 8) as u64; // the partials are ALL it ships
+
+    let ((gram_full, stats_full), t_full) = common::time_best(1, || {
+        ata_mapreduce(&input, dir.join("mr_full"), workers, workers, AtaMrMode::Full).unwrap()
+    });
+    let ((gram_up, stats_up), t_up) = common::time_best(1, || {
+        ata_mapreduce(&input, dir.join("mr_up"), workers, workers, AtaMrMode::Upper).unwrap()
+    });
+
+    println!(
+        "{:<28} {:>10} {:>16} {:>12} {:>10}",
+        "engine", "time", "materialized", "pairs", "max|ΔG|"
+    );
+    println!(
+        "{:<28} {:>10.2?} {:>16} {:>12} {:>10}",
+        "split-process", t_sp, fmt_bytes(sp_bytes), "-", "0"
+    );
+    println!(
+        "{:<28} {:>10.2?} {:>16} {:>12} {:>10.1e}",
+        "map-reduce (full)",
+        t_full,
+        fmt_bytes(stats_full.shuffle_bytes),
+        stats_full.pairs_emitted,
+        gram_full.max_abs_diff(&gram_sp)
+    );
+    println!(
+        "{:<28} {:>10.2?} {:>16} {:>12} {:>10.1e}",
+        "map-reduce (upper-tri)",
+        t_up,
+        fmt_bytes(stats_up.shuffle_bytes),
+        stats_up.pairs_emitted,
+        gram_up.max_abs_diff(&gram_sp)
+    );
+    println!(
+        "\nshuffle amplification: MR materializes {:.0}x (full) / {:.0}x (upper) the bytes\nsplit-process ships; measured wall-time gap {:.1}x / {:.1}x.",
+        stats_full.shuffle_bytes as f64 / sp_bytes as f64,
+        stats_up.shuffle_bytes as f64 / sp_bytes as f64,
+        t_full.as_secs_f64() / t_sp.as_secs_f64(),
+        t_up.as_secs_f64() / t_sp.as_secs_f64()
+    );
+
+    // ---- simulated on a cluster --------------------------------------------
+    common::header("E2.b simulated 1 GbE cluster (calibrated from E2.a)");
+    let rate = calibrate_rows_per_sec(m as u64, t_sp); // ATA-rate incl. reduce
+    let params = ClusterParams { cpu_rows_per_sec: rate, ..ClusterParams::default() };
+    println!("{:>8} {:>16} {:>18} {:>18}", "workers", "split-process(s)", "MR full(s)", "MR upper(s)");
+    for w in [2usize, 4, 8, 16] {
+        let sp = simulate_split_process(&params, &input, w, (n * n * 8) as u64).unwrap();
+        let mr_f =
+            simulate_mapreduce(&params, &input, w, stats_full.shuffle_bytes, stats_full.pairs_emitted)
+                .unwrap();
+        let mr_u =
+            simulate_mapreduce(&params, &input, w, stats_up.shuffle_bytes, stats_up.pairs_emitted)
+                .unwrap();
+        println!(
+            "{:>8} {:>16.4} {:>18.4} {:>18.4}",
+            w, sp.makespan, mr_f.makespan, mr_u.makespan
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! E6 — end-to-end randomized rank-k SVD of a tall-and-fat matrix.
+//!
+//! DESIGN.md's headline workload scaled to this box: m=20,000, n=2048,
+//! k=24 (+8 oversample = 32 sketch columns, matching the
+//! `fused_b256_n2048_k32` artifact). Runs the full pipeline on the native
+//! and XLA backends and prints the phase breakdown, throughput, and
+//! accuracy. The paper's claim being reproduced: the whole factorization is
+//! streaming passes over A plus leader math on 32x32 matrices only.
+
+mod common;
+
+use std::sync::Arc;
+use tallfat::backend::{native::NativeBackend, xla::XlaBackend, BackendRef};
+use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+
+fn main() {
+    let dir = common::bench_dir("e2e");
+    let (m, n, k) = (20_000, 2048, 24);
+    let input = common::ensure_dataset(&dir, "e2e", m, n, true);
+    let bytes = std::fs::metadata(&input.path).unwrap().len();
+
+    let mut backends: Vec<(&str, BackendRef)> = vec![("native", Arc::new(NativeBackend::new()))];
+    match XlaBackend::start("artifacts", true) {
+        Ok(x) => backends.push(("xla(auto)", Arc::new(x))),
+        Err(e) => eprintln!("[warn] xla backend unavailable: {e} (run `make artifacts`)"),
+    }
+
+    for (name, backend) in backends {
+        common::header(&format!("E6 {m}x{n} k={k} — backend {name}"));
+        let opts = SvdOptions {
+            k,
+            oversample: 8,
+            workers: 4,
+            block: 256,
+            seed: 1,
+            work_dir: dir.join(format!("work_{name}")).to_string_lossy().into_owned(),
+            compute_v: true,
+            ..SvdOptions::default()
+        };
+        let (result, elapsed) =
+            common::time_once(|| randomized_svd_file(&input, backend.clone(), &opts).unwrap());
+        println!("{}", result.report.render());
+        println!(
+            "end-to-end {elapsed:.2?}  |  {:.0} rows/s/pass  |  {:.0} MB/s of input",
+            2.0 * m as f64 / elapsed.as_secs_f64(),
+            2.0 * bytes as f64 / 1e6 / elapsed.as_secs_f64()
+        );
+        let err = validate::reconstruction_error_streaming(&input, &result).unwrap();
+        let ortho =
+            validate::u_orthonormality_residual(&result.u_shards, result.shards, result.k).unwrap();
+        println!("reconstruction error {err:.6}  |  U orthonormality {ortho:.2e}");
+        println!(
+            "sigma[0..6] = [{}]",
+            result.sigma.iter().take(6).map(|s| format!("{s:.3}")).collect::<Vec<_>>().join(", ")
+        );
+    }
+}

@@ -1,0 +1,151 @@
+//! E7 — per-block kernel latency: native rust vs the AOT XLA artifacts.
+//!
+//! Measures each compiled program (gram / project / fused / tmul /
+//! urecover / eigh) at its artifact shape against the pure-rust
+//! implementation of the same block op, plus the result agreement. This is
+//! the L1/L3 boundary cost: what one `Backend` call costs on the hot path.
+
+mod common;
+
+use tallfat::backend::{native::NativeBackend, xla::XlaBackend, Backend};
+use tallfat::linalg::Matrix;
+use tallfat::rng::Gaussian;
+
+fn randm(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let g = Gaussian::new(seed);
+    Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+}
+
+fn row(op: &str, shape: &str, native_t: std::time::Duration, xla_t: Option<std::time::Duration>, diff: f64) {
+    match xla_t {
+        Some(x) => println!(
+            "{:<16} {:<22} {:>12.1?} {:>12.1?} {:>8.2}x {:>11.1e}",
+            op,
+            shape,
+            native_t,
+            x,
+            native_t.as_secs_f64() / x.as_secs_f64(),
+            diff
+        ),
+        None => println!("{:<16} {:<22} {:>12.1?} {:>12} {:>8} {:>11}", op, shape, native_t, "-", "-", "-"),
+    }
+}
+
+const REPS: usize = 20;
+
+fn main() {
+    let native = NativeBackend::new();
+    let xla = match XlaBackend::start("artifacts", false) {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("[warn] xla unavailable: {e}; native-only rows");
+            None
+        }
+    };
+
+    common::header("E7 per-block latency (best of 20), native f64 vs artifact f32");
+    println!(
+        "{:<16} {:<22} {:>12} {:>12} {:>8} {:>11}",
+        "op", "shape", "native", "xla", "nat/xla", "max|Δ|"
+    );
+
+    // gram: b=256, n in {64, 256}
+    for n in [64usize, 256] {
+        let x = randm(256, n, 1);
+        let (g_nat, t_nat) = common::time_best(REPS, || native.gram_block(&x).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let (g_xla, t) = common::time_best(REPS, || b.gram_block(&x).unwrap());
+                (g_xla.max_abs_diff(&g_nat), Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("gram", &format!("256x{n}"), t_nat, t_xla, diff);
+    }
+
+    // project: b=256, (n, k) in {(256,32), (1024,32)}
+    for n in [256usize, 1024] {
+        let x = randm(256, n, 2);
+        let w = randm(n, 32, 3);
+        let (y_nat, t_nat) = common::time_best(REPS, || native.project_block(&x, &w).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let (y_xla, t) = common::time_best(REPS, || b.project_block(&x, &w).unwrap());
+                (y_xla.max_abs_diff(&y_nat), Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("project", &format!("256x{n} · {n}x32"), t_nat, t_xla, diff);
+    }
+
+    // fused project+gram: the pass-1 hot path
+    for n in [256usize, 1024, 2048] {
+        let x = randm(256, n, 4);
+        let w = randm(n, 32, 5);
+        let ((y_nat, g_nat), t_nat) =
+            common::time_best(REPS, || native.project_gram_block(&x, &w).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let ((y, g), t) = common::time_best(REPS, || b.project_gram_block(&x, &w).unwrap());
+                (y.max_abs_diff(&y_nat).max(g.max_abs_diff(&g_nat)), Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("fused proj+gram", &format!("256x{n} · {n}x32"), t_nat, t_xla, diff);
+    }
+
+    // tmul: pass-2 accumulation
+    for n in [256usize, 1024, 2048] {
+        let x = randm(256, n, 6);
+        let z = randm(256, 32, 7);
+        let (w_nat, t_nat) = common::time_best(REPS, || native.tmul_block(&x, &z).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let (w_xla, t) = common::time_best(REPS, || b.tmul_block(&x, &z).unwrap());
+                (w_xla.max_abs_diff(&w_nat), Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("tmul", &format!("{n}x256 · 256x32"), t_nat, t_xla, diff);
+    }
+
+    // urecover: U block rotation
+    for k in [16usize, 32] {
+        let y = randm(256, k, 8);
+        let m = randm(k, k, 9);
+        let (u_nat, t_nat) = common::time_best(REPS, || native.u_recover_block(&y, &m).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let (u_xla, t) = common::time_best(REPS, || b.u_recover_block(&y, &m).unwrap());
+                (u_xla.max_abs_diff(&u_nat), Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("urecover", &format!("256x{k} · {k}x{k}"), t_nat, t_xla, diff);
+    }
+
+    // eigh: the leader's k'x k' solve (artifact = jacobi sweeps in HLO)
+    for k in [16usize, 32, 64] {
+        let base = randm(k, k, 10);
+        let mut sym = Matrix::zeros(k, k);
+        for i in 0..k {
+            for j in 0..k {
+                sym.set(i, j, 0.5 * (base.get(i, j) + base.get(j, i)));
+            }
+        }
+        let ((ev_nat, _), t_nat) = common::time_best(REPS, || native.eigh(&sym).unwrap());
+        let (diff, t_xla) = match &xla {
+            Some(b) => {
+                let ((ev_xla, _), t) = common::time_best(REPS, || b.eigh(&sym).unwrap());
+                let d = ev_nat
+                    .iter()
+                    .zip(&ev_xla)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                (d, Some(t))
+            }
+            None => (0.0, None),
+        };
+        row("eigh", &format!("{k}x{k}"), t_nat, t_xla, diff);
+    }
+}

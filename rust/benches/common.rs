@@ -1,0 +1,68 @@
+//! Shared helpers for the bench harnesses (criterion is unavailable
+//! offline; each bench is a `harness = false` binary printing the table a
+//! criterion run would, in the exact row format EXPERIMENTS.md records).
+
+#![allow(dead_code)]
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+use tallfat::io::dataset::{gen_streamed, Spectrum};
+use tallfat::io::InputSpec;
+
+/// Per-bench scratch directory (stable across runs so datasets cache).
+pub fn bench_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("tallfat_bench").join(name);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Generate (or reuse) a streamed synthetic dataset.
+pub fn ensure_dataset(dir: &PathBuf, stem: &str, m: usize, n: usize, bin: bool) -> InputSpec {
+    let ext = if bin { "bin" } else { "csv" };
+    let path = dir.join(format!("{stem}_{m}x{n}.{ext}")).to_string_lossy().into_owned();
+    let spec = InputSpec::auto(path.clone());
+    if !std::path::Path::new(&path).exists() {
+        eprintln!("[gen] {path}");
+        gen_streamed(
+            &spec,
+            m,
+            n,
+            16.min(n),
+            Spectrum::Geometric { scale: 10.0, decay: 0.8 },
+            0.01,
+            2013,
+        )
+        .unwrap();
+    }
+    spec
+}
+
+/// Time one run of `f`.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Best-of-`reps` timing (steady-state, page-cache warm).
+pub fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> (T, Duration) {
+    assert!(reps >= 1);
+    let (mut out, mut best) = time_once(&mut f);
+    for _ in 1..reps {
+        let (o, d) = time_once(&mut f);
+        if d < best {
+            best = d;
+            out = o;
+        }
+    }
+    (out, best)
+}
+
+/// `items / duration` as a human rate.
+pub fn rate(items: u64, d: Duration) -> f64 {
+    items as f64 / d.as_secs_f64().max(1e-12)
+}
+
+pub fn header(title: &str) {
+    println!("\n### {title}");
+}

@@ -1,0 +1,56 @@
+//! Block-compute backends.
+//!
+//! The Split-Process jobs are backend-agnostic: every per-block operation of
+//! the paper's pipeline goes through [`Backend`]. Two implementations:
+//!
+//! * [`native::NativeBackend`] — pure-rust `linalg`, any shape, f64.
+//! * [`xla::XlaBackend`] — AOT JAX/Pallas artifacts via the PJRT service
+//!   thread, fixed shapes (+ zero-row padding), f32.
+//!
+//! The invariant linking them (tested in `rust/tests/backend_parity.rs`):
+//! identical math up to f32 roundoff, since padding rows with zeros leaves
+//! Gram/projection/tmul sums unchanged.
+
+pub mod native;
+pub mod xla;
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use std::sync::Arc;
+
+/// Per-block operations of the pipeline (shapes: x `b x n`, w `n x k`,
+/// y/z `b x k`, m `k x k`, g `k x k` or `n x n`).
+pub trait Backend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// `G = X^T X` (paper §2.0.2).
+    fn gram_block(&self, x: &Matrix) -> Result<Matrix>;
+
+    /// `Y = X W` (paper §2.0.3).
+    fn project_block(&self, x: &Matrix, w: &Matrix) -> Result<Matrix>;
+
+    /// Fused `(Y, Y^T Y)` — pass-1 hot path.
+    fn project_gram_block(&self, x: &Matrix, w: &Matrix) -> Result<(Matrix, Matrix)>;
+
+    /// `W = X^T Z` — pass-2 accumulation.
+    fn tmul_block(&self, x: &Matrix, z: &Matrix) -> Result<Matrix>;
+
+    /// `U = Y M` (paper §2.0.1, `U = A V Sigma^{-1}` per block).
+    fn u_recover_block(&self, y: &Matrix, m: &Matrix) -> Result<Matrix>;
+
+    /// Symmetric eigendecomposition, descending. Leader-side, small.
+    fn eigh(&self, g: &Matrix) -> Result<(Vec<f64>, Matrix)>;
+}
+
+/// Shared backend handle.
+pub type BackendRef = Arc<dyn Backend>;
+
+/// Build a backend per the run configuration.
+pub fn make_backend(cfg: &crate::config::RunConfig) -> Result<BackendRef> {
+    use crate::config::BackendKind;
+    match cfg.backend {
+        BackendKind::Native => Ok(Arc::new(native::NativeBackend::new())),
+        BackendKind::Xla => Ok(Arc::new(xla::XlaBackend::start(&cfg.artifacts_dir, false)?)),
+        BackendKind::Auto => Ok(Arc::new(xla::XlaBackend::start(&cfg.artifacts_dir, true)?)),
+    }
+}

@@ -1,0 +1,83 @@
+//! Pure-rust backend over `crate::linalg` (any shape, f64 throughout).
+
+use super::Backend;
+use crate::error::Result;
+use crate::linalg::{self, Matrix};
+
+/// The native block backend.
+#[derive(Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn gram_block(&self, x: &Matrix) -> Result<Matrix> {
+        Ok(linalg::gram(x))
+    }
+
+    fn project_block(&self, x: &Matrix, w: &Matrix) -> Result<Matrix> {
+        linalg::matmul(x, w)
+    }
+
+    fn project_gram_block(&self, x: &Matrix, w: &Matrix) -> Result<(Matrix, Matrix)> {
+        let y = linalg::matmul(x, w)?;
+        let g = linalg::gram(&y);
+        Ok((y, g))
+    }
+
+    fn tmul_block(&self, x: &Matrix, z: &Matrix) -> Result<Matrix> {
+        linalg::matmul_tn(x, z)
+    }
+
+    fn u_recover_block(&self, y: &Matrix, m: &Matrix) -> Result<Matrix> {
+        linalg::matmul(y, m)
+    }
+
+    fn eigh(&self, g: &Matrix) -> Result<(Vec<f64>, Matrix)> {
+        linalg::eigen::eigh(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Gaussian;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn ops_consistent() {
+        let b = NativeBackend::new();
+        let x = rand(40, 8, 1);
+        let w = rand(8, 4, 2);
+        let (y, g) = b.project_gram_block(&x, &w).unwrap();
+        assert!(y.max_abs_diff(&b.project_block(&x, &w).unwrap()) < 1e-12);
+        assert!(g.max_abs_diff(&b.gram_block(&y).unwrap()) < 1e-12);
+        let wm = b.tmul_block(&x, &y).unwrap();
+        assert_eq!(wm.shape(), (8, 4));
+        let u = b.u_recover_block(&y, &Matrix::eye(4)).unwrap();
+        assert!(u.max_abs_diff(&y) < 1e-15);
+    }
+
+    #[test]
+    fn eigh_descending() {
+        let b = NativeBackend::new();
+        let x = rand(30, 6, 3);
+        let g = b.gram_block(&x).unwrap();
+        let (w, _) = b.eigh(&g).unwrap();
+        for i in 1..6 {
+            assert!(w[i - 1] >= w[i] - 1e-12);
+        }
+    }
+}

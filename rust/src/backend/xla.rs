@@ -1,0 +1,228 @@
+//! XLA backend: the AOT JAX/Pallas artifacts executed via the PJRT service.
+//!
+//! Shapes are fixed at artifact-build time; blocks with fewer rows are
+//! zero-padded up to the artifact block (padded rows contribute nothing to
+//! Gram/projection/tmul — the invariant both test suites pin). With
+//! `fallback = true` (the `auto` backend) shapes that no artifact covers
+//! fall back to the native implementation instead of erroring.
+
+use super::{native::NativeBackend, Backend};
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::literal::matrix_to_f32_padded;
+use crate::runtime::service::{XlaHandle, XlaService};
+use crate::util::Logger;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static LOG: Logger = Logger::new("backend.xla");
+
+/// PJRT-backed block backend.
+pub struct XlaBackend {
+    // Keep the service alive for the backend's lifetime.
+    _service: XlaService,
+    handle: XlaHandle,
+    fallback: Option<NativeBackend>,
+    xla_calls: AtomicU64,
+    native_calls: AtomicU64,
+}
+
+impl XlaBackend {
+    /// Boot the PJRT service over `artifacts_dir`. With `fallback`, shapes
+    /// without a matching artifact run natively (the `auto` backend).
+    pub fn start(artifacts_dir: &str, fallback: bool) -> Result<Self> {
+        let service = XlaService::start(artifacts_dir)?;
+        let handle = service.handle();
+        Ok(XlaBackend {
+            _service: service,
+            handle,
+            fallback: fallback.then(NativeBackend::new),
+            xla_calls: AtomicU64::new(0),
+            native_calls: AtomicU64::new(0),
+        })
+    }
+
+    /// (xla, native-fallback) call counts — used by tests and benches to
+    /// assert which path actually ran.
+    pub fn call_counts(&self) -> (u64, u64) {
+        (
+            self.xla_calls.load(Ordering::Relaxed),
+            self.native_calls.load(Ordering::Relaxed),
+        )
+    }
+
+    fn lookup(&self, program: &str, rows: usize, n: usize, k: usize) -> Option<ArtifactMeta> {
+        self.handle.manifest().lookup(program, rows, n, k).cloned()
+    }
+
+    fn missing<T>(&self, program: &str, rows: usize, n: usize, k: usize) -> Result<T> {
+        Err(Error::Artifact(format!(
+            "no `{program}` artifact for block>={rows} n={n} k={k} \
+             (rebuild artifacts with this variant or use backend=auto)"
+        )))
+    }
+
+    fn run(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.xla_calls.fetch_add(1, Ordering::Relaxed);
+        self.handle.execute(&meta.name, inputs)
+    }
+
+    fn out_matrix(data: &[f32], rows: usize, cols: usize, keep_rows: usize) -> Result<Matrix> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "xla output: {} elements for {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Matrix::from_f32(keep_rows, cols, &data[..keep_rows * cols])
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn gram_block(&self, x: &Matrix) -> Result<Matrix> {
+        let (rows, n) = x.shape();
+        match self.lookup("gram", rows, n, 0) {
+            Some(meta) => {
+                let xin = matrix_to_f32_padded(x, meta.block);
+                let outs = self.run(&meta, vec![(xin, vec![meta.block, n])])?;
+                Self::out_matrix(&outs[0], n, n, n)
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    nb.gram_block(x)
+                }
+                None => self.missing("gram", rows, n, 0),
+            },
+        }
+    }
+
+    fn project_block(&self, x: &Matrix, w: &Matrix) -> Result<Matrix> {
+        let (rows, n) = x.shape();
+        let k = w.cols();
+        match self.lookup("project", rows, n, k) {
+            Some(meta) => {
+                let xin = matrix_to_f32_padded(x, meta.block);
+                let win = matrix_to_f32_padded(w, n);
+                let outs = self.run(
+                    &meta,
+                    vec![(xin, vec![meta.block, n]), (win, vec![n, k])],
+                )?;
+                Self::out_matrix(&outs[0], meta.block, k, rows)
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    nb.project_block(x, w)
+                }
+                None => self.missing("project", rows, n, k),
+            },
+        }
+    }
+
+    fn project_gram_block(&self, x: &Matrix, w: &Matrix) -> Result<(Matrix, Matrix)> {
+        let (rows, n) = x.shape();
+        let k = w.cols();
+        match self.lookup("fused", rows, n, k) {
+            Some(meta) => {
+                let xin = matrix_to_f32_padded(x, meta.block);
+                let win = matrix_to_f32_padded(w, n);
+                let outs = self.run(
+                    &meta,
+                    vec![(xin, vec![meta.block, n]), (win, vec![n, k])],
+                )?;
+                let y = Self::out_matrix(&outs[0], meta.block, k, rows)?;
+                let g = Self::out_matrix(&outs[1], k, k, k)?;
+                Ok((y, g))
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    nb.project_gram_block(x, w)
+                }
+                None => self.missing("fused", rows, n, k),
+            },
+        }
+    }
+
+    fn tmul_block(&self, x: &Matrix, z: &Matrix) -> Result<Matrix> {
+        let (rows, n) = x.shape();
+        let k = z.cols();
+        if z.rows() != rows {
+            return Err(Error::shape(format!(
+                "tmul: {} vs {} rows",
+                rows,
+                z.rows()
+            )));
+        }
+        match self.lookup("tmul", rows, n, k) {
+            Some(meta) => {
+                let xin = matrix_to_f32_padded(x, meta.block);
+                let zin = matrix_to_f32_padded(z, meta.block);
+                let outs = self.run(
+                    &meta,
+                    vec![(xin, vec![meta.block, n]), (zin, vec![meta.block, k])],
+                )?;
+                Self::out_matrix(&outs[0], n, k, n)
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    nb.tmul_block(x, z)
+                }
+                None => self.missing("tmul", rows, n, k),
+            },
+        }
+    }
+
+    fn u_recover_block(&self, y: &Matrix, m: &Matrix) -> Result<Matrix> {
+        let (rows, k) = y.shape();
+        match self.lookup("urecover", rows, 0, k) {
+            Some(meta) => {
+                let yin = matrix_to_f32_padded(y, meta.block);
+                let min = matrix_to_f32_padded(m, k);
+                let outs = self.run(
+                    &meta,
+                    vec![(yin, vec![meta.block, k]), (min, vec![k, k])],
+                )?;
+                Self::out_matrix(&outs[0], meta.block, k, rows)
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    nb.u_recover_block(y, m)
+                }
+                None => self.missing("urecover", rows, 0, k),
+            },
+        }
+    }
+
+    fn eigh(&self, g: &Matrix) -> Result<(Vec<f64>, Matrix)> {
+        let k = g.rows();
+        match self.handle.manifest().lookup_eigh(k).cloned() {
+            Some(meta) => {
+                let gin = matrix_to_f32_padded(g, k);
+                let outs = self.run(&meta, vec![(gin, vec![k, k])])?;
+                let w: Vec<f64> = outs[0].iter().map(|&v| v as f64).collect();
+                let v = Self::out_matrix(&outs[1], k, k, k)?;
+                Ok((w, v))
+            }
+            None => match &self.fallback {
+                Some(nb) => {
+                    self.native_calls.fetch_add(1, Ordering::Relaxed);
+                    LOG.debug(&format!("eigh k={k}: no artifact, native fallback"));
+                    nb.eigh(g)
+                }
+                None => self.missing("eigh", 0, 0, k),
+            },
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! Multi-process Split-Process: the paper's actual deployment.
+//!
+//! The paper's §1 deployment is "each process on each machine has access to
+//! a large file ... either through copies of that file being in each
+//! machine, or through a shared file server". The in-process
+//! [`crate::splitproc`] engine demonstrates the algorithm; this module runs
+//! it across real OS processes over TCP:
+//!
+//! * the **leader** (`tallfat svd --distributed --listen addr --remote-workers N`)
+//!   listens, hands each connecting worker a phase assignment (chunk index
+//!   + the small shared operands), and reduces the returned partials;
+//! * each **worker** (`tallfat worker --leader addr`) computes chunk
+//!   geometry locally from the shared file (deterministic
+//!   [`crate::splitproc::plan_chunks`] — both sides see the same bytes),
+//!   streams its rows through the same jobs the in-process engine uses, and
+//!   ships back its `k' x k'` / `n x k'` partial. Y/U shards are written to
+//!   the shared filesystem, exactly like the paper's `/tmp/C-%d.csv`.
+//!
+//! Only *small* state crosses the wire (sketch partials, rotation
+//! matrices); the tall data never does — that is the paper's point, and the
+//! protocol makes it structural: [`proto`] has no frame type for row data.
+//!
+//! The protocol is a hand-rolled length-prefixed binary format ([`proto`]) —
+//! serde is unavailable offline, and the message set is 6 frames.
+
+pub mod leader;
+pub mod proto;
+pub mod worker;
+
+pub use leader::{DistOptions, DistributedLeader};
+pub use worker::run_worker;

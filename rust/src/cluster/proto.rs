@@ -1,0 +1,363 @@
+//! Wire protocol: length-prefixed binary frames over TCP.
+//!
+//! Frame layout: `u32 LE payload length | u8 tag | payload`. Matrices are
+//! `u32 rows | u32 cols | rows*cols f64 LE`. Strings are `u32 len | utf8`.
+//! The protocol carries only leader-side-small state — partials, rotation
+//! matrices, paths — never row data (see module docs in [`super`]).
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::io::{Read, Write};
+
+/// Protocol version — bumped on any frame change.
+pub const VERSION: u32 = 1;
+
+/// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
+/// larger indicates a protocol error, not a legitimate partial).
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// The phase a worker is asked to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PhaseKind {
+    /// Pass 1: fused `Y = A Ω` + partial `YᵀY`; Y shard to shared fs.
+    ProjectGram = 1,
+    /// Pass 2: `U0 = Y M` + partial `Aᵀ U0`; U0 shard to shared fs.
+    UrecoverTmul = 2,
+    /// Pass 3: rotate `U = U0 P`; U shard to shared fs.
+    RotateU = 3,
+    /// Standalone `AᵀA` partial (the `ata` subcommand, distributed).
+    Ata = 4,
+}
+
+impl PhaseKind {
+    pub fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => PhaseKind::ProjectGram,
+            2 => PhaseKind::UrecoverTmul,
+            3 => PhaseKind::RotateU,
+            4 => PhaseKind::Ata,
+            other => return Err(Error::parse(format!("unknown phase kind {other}"))),
+        })
+    }
+}
+
+/// Leader -> worker messages.
+#[derive(Debug)]
+pub enum ToWorker {
+    /// Run one phase over chunk `index` of `total`.
+    Phase {
+        kind: PhaseKind,
+        /// Shared input file (visible to the worker — paper's assumption).
+        input_path: String,
+        /// Shard/working directory on the shared filesystem.
+        work_dir: String,
+        chunk_index: u32,
+        chunk_total: u32,
+        /// Row-block size.
+        block: u32,
+        /// Sketch seed (ProjectGram regenerates Ω from this — virtual B
+        /// across the cluster, the paper's §2.1).
+        seed: u64,
+        /// Sketch width k' (ProjectGram) / columns (others).
+        kp: u32,
+        /// Small shared operand: Ω override for power iterations (rows > 0),
+        /// M for UrecoverTmul, P for RotateU, unused for Ata/plain pass 1.
+        operand: Matrix,
+    },
+    /// All phases done; worker may exit.
+    Shutdown,
+}
+
+/// Worker -> leader messages.
+#[derive(Debug)]
+pub enum ToLeader {
+    /// Greeting with protocol version.
+    Hello { version: u32 },
+    /// Phase finished: rows streamed + the commutative partial (possibly
+    /// 0x0 for phases that only write shards).
+    Partial { rows: u64, partial: Matrix },
+    /// Unrecoverable worker-side failure.
+    Failed { message: String },
+}
+
+// ---------------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------------
+
+fn write_frame(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME as u64 {
+        return Err(Error::Other(format!("frame too large: {}", payload.len())));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&[tag])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn read_frame(r: &mut impl Read) -> Result<(u8, Vec<u8>)> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4);
+    if len > MAX_FRAME {
+        return Err(Error::parse(format!("oversized frame: {len} bytes")));
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((tag[0], payload))
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::parse("truncated frame".to_string()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| Error::parse("bad utf8".to_string()))
+    }
+
+    fn matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let need = rows
+            .checked_mul(cols)
+            .and_then(|n| n.checked_mul(8))
+            .ok_or_else(|| Error::parse("matrix size overflow".to_string()))?;
+        let bytes = self.take(need)?;
+        let mut data = Vec::with_capacity(rows * cols);
+        for c in bytes.chunks_exact(8) {
+            data.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Matrix::from_vec(rows, cols, data)
+    }
+}
+
+fn put_string(buf: &mut Vec<u8>, s: &str) {
+    buf.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for &v in m.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+// tags
+const T_PHASE: u8 = 0x01;
+const T_SHUTDOWN: u8 = 0x02;
+const T_HELLO: u8 = 0x10;
+const T_PARTIAL: u8 = 0x11;
+const T_FAILED: u8 = 0x12;
+
+impl ToWorker {
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        match self {
+            ToWorker::Phase {
+                kind,
+                input_path,
+                work_dir,
+                chunk_index,
+                chunk_total,
+                block,
+                seed,
+                kp,
+                operand,
+            } => {
+                let mut buf = Vec::new();
+                buf.push(*kind as u8);
+                put_string(&mut buf, input_path);
+                put_string(&mut buf, work_dir);
+                buf.extend_from_slice(&chunk_index.to_le_bytes());
+                buf.extend_from_slice(&chunk_total.to_le_bytes());
+                buf.extend_from_slice(&block.to_le_bytes());
+                buf.extend_from_slice(&seed.to_le_bytes());
+                buf.extend_from_slice(&kp.to_le_bytes());
+                put_matrix(&mut buf, operand);
+                write_frame(w, T_PHASE, &buf)
+            }
+            ToWorker::Shutdown => write_frame(w, T_SHUTDOWN, &[]),
+        }
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Self> {
+        let (tag, payload) = read_frame(r)?;
+        match tag {
+            T_PHASE => {
+                let mut c = Cursor::new(&payload);
+                Ok(ToWorker::Phase {
+                    kind: PhaseKind::from_u8(c.u8()?)?,
+                    input_path: c.string()?,
+                    work_dir: c.string()?,
+                    chunk_index: c.u32()?,
+                    chunk_total: c.u32()?,
+                    block: c.u32()?,
+                    seed: c.u64()?,
+                    kp: c.u32()?,
+                    operand: c.matrix()?,
+                })
+            }
+            T_SHUTDOWN => Ok(ToWorker::Shutdown),
+            other => Err(Error::parse(format!("unexpected leader frame {other:#x}"))),
+        }
+    }
+}
+
+impl ToLeader {
+    pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        match self {
+            ToLeader::Hello { version } => write_frame(w, T_HELLO, &version.to_le_bytes()),
+            ToLeader::Partial { rows, partial } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&rows.to_le_bytes());
+                put_matrix(&mut buf, partial);
+                write_frame(w, T_PARTIAL, &buf)
+            }
+            ToLeader::Failed { message } => {
+                let mut buf = Vec::new();
+                put_string(&mut buf, message);
+                write_frame(w, T_FAILED, &buf)
+            }
+        }
+    }
+
+    pub fn read(r: &mut impl Read) -> Result<Self> {
+        let (tag, payload) = read_frame(r)?;
+        let mut c = Cursor::new(&payload);
+        match tag {
+            T_HELLO => Ok(ToLeader::Hello { version: c.u32()? }),
+            T_PARTIAL => Ok(ToLeader::Partial { rows: c.u64()?, partial: c.matrix()? }),
+            T_FAILED => Ok(ToLeader::Failed { message: c.string()? }),
+            other => Err(Error::parse(format!("unexpected worker frame {other:#x}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_worker(msg: &ToWorker) -> ToWorker {
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        ToWorker::read(&mut buf.as_slice()).unwrap()
+    }
+
+    fn roundtrip_leader(msg: &ToLeader) -> ToLeader {
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        ToLeader::read(&mut buf.as_slice()).unwrap()
+    }
+
+    #[test]
+    fn phase_roundtrip() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64 * 0.5);
+        let msg = ToWorker::Phase {
+            kind: PhaseKind::ProjectGram,
+            input_path: "/data/a.csv".into(),
+            work_dir: "/tmp/w".into(),
+            chunk_index: 2,
+            chunk_total: 8,
+            block: 256,
+            seed: 0xDEAD_BEEF,
+            kp: 32,
+            operand: m.clone(),
+        };
+        match roundtrip_worker(&msg) {
+            ToWorker::Phase { kind, input_path, chunk_index, chunk_total, seed, kp, operand, .. } => {
+                assert_eq!(kind, PhaseKind::ProjectGram);
+                assert_eq!(input_path, "/data/a.csv");
+                assert_eq!((chunk_index, chunk_total), (2, 8));
+                assert_eq!(seed, 0xDEAD_BEEF);
+                assert_eq!(kp, 32);
+                assert_eq!(operand.max_abs_diff(&m), 0.0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_and_hello_roundtrip() {
+        assert!(matches!(roundtrip_worker(&ToWorker::Shutdown), ToWorker::Shutdown));
+        assert!(matches!(
+            roundtrip_leader(&ToLeader::Hello { version: VERSION }),
+            ToLeader::Hello { version: VERSION }
+        ));
+    }
+
+    #[test]
+    fn partial_roundtrip() {
+        let m = Matrix::from_fn(4, 4, |i, j| (i + j) as f64);
+        match roundtrip_leader(&ToLeader::Partial { rows: 999, partial: m.clone() }) {
+            ToLeader::Partial { rows, partial } => {
+                assert_eq!(rows, 999);
+                assert_eq!(partial.max_abs_diff(&m), 0.0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failed_roundtrip() {
+        match roundtrip_leader(&ToLeader::Failed { message: "disk on fire".into() }) {
+            ToLeader::Failed { message } => assert_eq!(message, "disk on fire"),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_error() {
+        let mut buf = Vec::new();
+        ToLeader::Partial { rows: 1, partial: Matrix::zeros(2, 2) }.write(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(ToLeader::read(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.push(T_PARTIAL);
+        assert!(ToLeader::read(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn zero_size_matrix_roundtrips() {
+        match roundtrip_leader(&ToLeader::Partial { rows: 0, partial: Matrix::zeros(0, 0) }) {
+            ToLeader::Partial { partial, .. } => assert_eq!(partial.shape(), (0, 0)),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! The worker process: connects to the leader, executes phase assignments
+//! over its chunk of the shared input file, ships partials back.
+
+use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
+use crate::backend::BackendRef;
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::jobs::{AtaBlockJob, Pass2Job, ProjectGramJob};
+use crate::linalg::{matmul, Matrix};
+use crate::rng::VirtualMatrix;
+use crate::splitproc::{self, Blocked};
+use crate::util::Logger;
+use std::net::TcpStream;
+
+static LOG: Logger = Logger::new("cluster.worker");
+
+/// Execute one phase assignment. Returns `(rows_streamed, partial)`.
+pub fn execute_phase(backend: &BackendRef, msg: &ToWorker) -> Result<(u64, Matrix)> {
+    let ToWorker::Phase {
+        kind,
+        input_path,
+        work_dir,
+        chunk_index,
+        chunk_total,
+        block,
+        seed,
+        kp,
+        operand,
+    } = msg
+    else {
+        return Err(Error::Other("execute_phase on non-phase message".into()));
+    };
+    let input = InputSpec::auto(input_path.clone());
+    let (_, n) = input.dims()?;
+    let block = *block as usize;
+    let kp = *kp as usize;
+    let ci = *chunk_index as usize;
+    let total = *chunk_total as usize;
+    std::fs::create_dir_all(work_dir)?;
+
+    // Both sides compute the same deterministic chunk plan from the shared
+    // file — only (index, total) crosses the wire.
+    let chunks = splitproc::plan_chunks(&input, total)?;
+    let chunk = *chunks
+        .get(ci)
+        .ok_or_else(|| Error::Config(format!("chunk {ci} of {total} does not exist")))?;
+
+    match kind {
+        PhaseKind::ProjectGram => {
+            // Virtual-B across the cluster: Ω regenerated from the seed
+            // unless the leader sent a power-iteration override.
+            let omega = if operand.rows() > 0 {
+                operand.clone()
+            } else {
+                VirtualMatrix::projection(*seed, n, kp).materialize()
+            };
+            let y_shards = ShardSet::new(work_dir, "Y", InputFormat::Bin)?;
+            let job = ProjectGramJob::new(backend.clone(), omega, &y_shards, ci)?;
+            let mut blocked = Blocked::new(job, block, n);
+            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
+            Ok((rows, blocked.into_inner().into_gram_partial()))
+        }
+        PhaseKind::UrecoverTmul => {
+            let y_shards = ShardSet::new(work_dir, "Y", InputFormat::Bin)?;
+            let u0_shards = ShardSet::new(work_dir, "U0", InputFormat::Bin)?;
+            let job = Pass2Job::new(
+                backend.clone(),
+                operand.clone(),
+                &y_shards,
+                &u0_shards,
+                ci,
+                n,
+            )?;
+            let mut blocked = Blocked::new(job, block, n);
+            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
+            Ok((rows, blocked.into_inner().into_w_partial()))
+        }
+        PhaseKind::RotateU => {
+            let u0_shards = ShardSet::new(work_dir, "U0", InputFormat::Bin)?;
+            let u_shards = ShardSet::new(work_dir, "U", InputFormat::Bin)?;
+            let rows = rotate_one_shard(&u0_shards, &u_shards, ci, operand, block)?;
+            Ok((rows, Matrix::zeros(0, 0)))
+        }
+        PhaseKind::Ata => {
+            let job = AtaBlockJob::new(backend.clone(), n);
+            let mut blocked = Blocked::new(job, block, n);
+            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
+            Ok((rows, blocked.into_inner().into_partial()))
+        }
+    }
+}
+
+/// `U = U0 P` over one shard (pass 3, worker side).
+fn rotate_one_shard(
+    src: &ShardSet,
+    dst: &ShardSet,
+    index: usize,
+    p: &Matrix,
+    block: usize,
+) -> Result<u64> {
+    let mut reader = src.open_reader(index)?;
+    let mut writer = dst.open_writer(index, p.cols())?;
+    let mut row = Vec::new();
+    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(block);
+    let mut count = 0u64;
+    loop {
+        buf.clear();
+        while buf.len() < block {
+            if !reader.next_row(&mut row)? {
+                break;
+            }
+            buf.push(row.clone());
+        }
+        if buf.is_empty() {
+            break;
+        }
+        let u0 = Matrix::from_rows(&buf)?;
+        let u = matmul(&u0, p)?;
+        for r in 0..u.rows() {
+            writer.write_row(u.row(r))?;
+        }
+        count += u.rows() as u64;
+        if buf.len() < block {
+            break;
+        }
+    }
+    writer.finish()?;
+    Ok(count)
+}
+
+/// Serve one leader connection until `Shutdown`. Used by the `worker`
+/// subcommand and (in-process) by the cluster tests.
+pub fn serve(stream: TcpStream, backend: BackendRef) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = stream.try_clone()?;
+    let mut writer = stream;
+    ToLeader::Hello { version: VERSION }.write(&mut writer)?;
+    loop {
+        let msg = ToWorker::read(&mut reader)?;
+        match &msg {
+            ToWorker::Shutdown => {
+                LOG.info("shutdown received");
+                return Ok(());
+            }
+            ToWorker::Phase { kind, chunk_index, chunk_total, .. } => {
+                LOG.info(&format!("phase {kind:?} chunk {chunk_index}/{chunk_total}"));
+                match execute_phase(&backend, &msg) {
+                    Ok((rows, partial)) => {
+                        ToLeader::Partial { rows, partial }.write(&mut writer)?;
+                    }
+                    Err(e) => {
+                        // Report and keep serving — the leader decides.
+                        LOG.error(&format!("phase failed: {e}"));
+                        ToLeader::Failed { message: e.to_string() }.write(&mut writer)?;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `tallfat worker --leader host:port`: connect and serve until shutdown.
+pub fn run_worker(leader_addr: &str, backend: BackendRef) -> Result<()> {
+    LOG.info(&format!("connecting to leader at {leader_addr}"));
+    let stream = TcpStream::connect(leader_addr)?;
+    serve(stream, backend)
+}

@@ -1,0 +1,286 @@
+//! Run configuration: defaults < config file < CLI overrides.
+//!
+//! The file format is a minimal TOML subset (`[section]`, `key = value`,
+//! `#` comments) parsed by [`parser`] — serde/toml are unavailable offline.
+
+pub mod parser;
+
+use crate::error::{Error, Result};
+use crate::util::Args;
+use parser::ConfigFile;
+
+/// Which block-compute backend executes the per-block math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust linalg (any shape).
+    Native,
+    /// AOT-compiled XLA artifacts via PJRT (fixed shapes, padded).
+    Xla,
+    /// XLA where an artifact exists, native otherwise.
+    Auto,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Ok(BackendKind::Native),
+            "xla" => Ok(BackendKind::Xla),
+            "auto" => Ok(BackendKind::Auto),
+            other => Err(Error::Config(format!("unknown backend `{other}`"))),
+        }
+    }
+}
+
+/// Input file format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputFormat {
+    /// `;`-separated text rows (the paper's format).
+    Csv,
+    /// tallfat binary matrix (`io::binmat`).
+    Bin,
+}
+
+impl InputFormat {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "csv" => Ok(InputFormat::Csv),
+            "bin" => Ok(InputFormat::Bin),
+            other => Err(Error::Config(format!("unknown format `{other}`"))),
+        }
+    }
+
+    /// Guess from a file extension.
+    pub fn from_path(path: &str) -> Self {
+        if path.ends_with(".bin") || path.ends_with(".tfb") {
+            InputFormat::Bin
+        } else {
+            InputFormat::Csv
+        }
+    }
+}
+
+/// Full run configuration for the coordinator.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Input matrix path.
+    pub input: String,
+    pub format: InputFormat,
+    /// Target rank of the factorization.
+    pub k: usize,
+    /// Oversampling columns added to the sketch (Halko's p; total sketch
+    /// width is `k + oversample`).
+    pub oversample: usize,
+    /// Power-iteration count (0 = paper's plain sketch).
+    pub power_iters: usize,
+    /// Split-Process worker count.
+    pub workers: usize,
+    /// Row-block size fed to the block backend.
+    pub block: usize,
+    /// PRNG seed for the virtual Ω.
+    pub seed: u64,
+    pub backend: BackendKind,
+    /// Directory holding AOT artifacts + manifest.
+    pub artifacts_dir: String,
+    /// Directory for Y/U shards and outputs.
+    pub work_dir: String,
+    /// Compute right singular vectors V (adds the pass-2 W accumulation).
+    pub compute_v: bool,
+    /// Skip the projection and eigendecompose `A^T A` directly (small n).
+    pub exact_gram: bool,
+    /// PCA mode: subtract per-column means before factorizing.
+    pub center: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            input: String::new(),
+            format: InputFormat::Csv,
+            k: 16,
+            oversample: 8,
+            power_iters: 0,
+            workers: 4,
+            block: 256,
+            seed: 0,
+            backend: BackendKind::Native,
+            artifacts_dir: "artifacts".into(),
+            work_dir: std::env::temp_dir().join("tallfat").to_string_lossy().into_owned(),
+            compute_v: true,
+            exact_gram: false,
+            center: false,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Total sketch width `k + oversample`.
+    pub fn sketch_width(&self) -> usize {
+        self.k + self.oversample
+    }
+
+    /// Apply a parsed config file's `[svd]` / `[run]` sections.
+    pub fn apply_file(&mut self, file: &ConfigFile) -> Result<()> {
+        for section in ["run", "svd"] {
+            if let Some(k) = file.get_usize(section, "k")? {
+                self.k = k;
+            }
+            if let Some(v) = file.get_usize(section, "oversample")? {
+                self.oversample = v;
+            }
+            if let Some(v) = file.get_usize(section, "power_iters")? {
+                self.power_iters = v;
+            }
+            if let Some(v) = file.get_usize(section, "workers")? {
+                self.workers = v;
+            }
+            if let Some(v) = file.get_usize(section, "block")? {
+                self.block = v;
+            }
+            if let Some(v) = file.get_u64(section, "seed")? {
+                self.seed = v;
+            }
+            if let Some(v) = file.get_str(section, "backend") {
+                self.backend = BackendKind::parse(v)?;
+            }
+            if let Some(v) = file.get_str(section, "input") {
+                self.input = v.to_string();
+                self.format = InputFormat::from_path(&self.input);
+            }
+            if let Some(v) = file.get_str(section, "format") {
+                self.format = InputFormat::parse(v)?;
+            }
+            if let Some(v) = file.get_str(section, "artifacts_dir") {
+                self.artifacts_dir = v.to_string();
+            }
+            if let Some(v) = file.get_str(section, "work_dir") {
+                self.work_dir = v.to_string();
+            }
+            if let Some(v) = file.get_bool(section, "compute_v")? {
+                self.compute_v = v;
+            }
+            if let Some(v) = file.get_bool(section, "exact_gram")? {
+                self.exact_gram = v;
+            }
+            if let Some(v) = file.get_bool(section, "center")? {
+                self.center = v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (highest precedence).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(input) = args.opt_str("input") {
+            self.input = input.to_string();
+            self.format = InputFormat::from_path(&self.input);
+        } else if let Some(first) = args.positional.first() {
+            self.input = first.clone();
+            self.format = InputFormat::from_path(&self.input);
+        }
+        self.k = args.usize_or("k", self.k)?;
+        self.oversample = args.usize_or("oversample", self.oversample)?;
+        self.power_iters = args.usize_or("power-iters", self.power_iters)?;
+        self.workers = args.usize_or("workers", self.workers)?;
+        self.block = args.usize_or("block", self.block)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        if let Some(b) = args.opt_str("backend") {
+            self.backend = BackendKind::parse(b)?;
+        }
+        if let Some(f) = args.opt_str("format") {
+            self.format = InputFormat::parse(f)?;
+        }
+        if let Some(d) = args.opt_str("artifacts-dir") {
+            self.artifacts_dir = d.to_string();
+        }
+        if let Some(d) = args.opt_str("work-dir") {
+            self.work_dir = d.to_string();
+        }
+        if args.flag("no-v") {
+            self.compute_v = false;
+        }
+        if args.flag("exact-gram") {
+            self.exact_gram = true;
+        }
+        if args.flag("center") {
+            self.center = true;
+        }
+        Ok(())
+    }
+
+    /// Validate invariants before a run.
+    pub fn validate(&self) -> Result<()> {
+        if self.input.is_empty() {
+            return Err(Error::Config("no input file (use --input or positional)".into()));
+        }
+        if self.k == 0 {
+            return Err(Error::Config("k must be >= 1".into()));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if self.block == 0 || self.block % 2 != 0 {
+            return Err(Error::Config(format!("block must be a positive even size, got {}", self.block)));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate_with_input() {
+        let mut c = RunConfig::default();
+        assert!(c.validate().is_err());
+        c.input = "a.csv".into();
+        assert!(c.validate().is_ok());
+        assert_eq!(c.sketch_width(), 24);
+    }
+
+    #[test]
+    fn args_override() {
+        let args = Args::parse(
+            "svd data.bin --k 32 --workers 8 --backend xla --seed 7"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.input, "data.bin");
+        assert_eq!(c.format, InputFormat::Bin);
+        assert_eq!(c.k, 32);
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.backend, BackendKind::Xla);
+        assert_eq!(c.seed, 7);
+    }
+
+    #[test]
+    fn file_then_args_precedence() {
+        let file = ConfigFile::parse_str(
+            "[svd]\nk = 8\nworkers = 2\nbackend = \"native\"\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&file).unwrap();
+        assert_eq!(c.k, 8);
+        let args =
+            Args::parse("svd --k 64".split_whitespace().map(String::from)).unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.k, 64); // CLI wins
+        assert_eq!(c.workers, 2); // file survives where CLI silent
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn format_guessing() {
+        assert_eq!(InputFormat::from_path("x.bin"), InputFormat::Bin);
+        assert_eq!(InputFormat::from_path("x.csv"), InputFormat::Csv);
+        assert_eq!(InputFormat::from_path("x.txt"), InputFormat::Csv);
+    }
+}

@@ -1,0 +1,189 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[section]` headers, `key = value` lines, `#` comments, and
+//! values of kind string (`"..."`), integer, float, and bool. Enough for
+//! run configs; deliberately not a full TOML implementation.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed config file: `(section, key) -> raw value string`.
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    values: HashMap<(String, String), String>,
+}
+
+impl ConfigFile {
+    /// Parse from a string.
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let mut out = ConfigFile::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::parse(format!("line {}: unterminated section", lineno + 1)))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(Error::parse(format!("line {}: empty section name", lineno + 1)));
+                }
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| Error::parse(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(Error::parse(format!("line {}: empty key", lineno + 1)));
+            }
+            out.values
+                .insert((section.clone(), key.to_string()), v.trim().to_string());
+        }
+        Ok(out)
+    }
+
+    /// Parse from a file path.
+    pub fn parse_file(path: &str) -> Result<Self> {
+        Self::parse_str(&std::fs::read_to_string(path)?)
+    }
+
+    fn raw(&self, section: &str, key: &str) -> Option<&str> {
+        self.values
+            .get(&(section.to_string(), key.to_string()))
+            .map(String::as_str)
+    }
+
+    /// String value (quotes stripped if present).
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        self.raw(section, key).map(|v| {
+            v.strip_prefix('"')
+                .and_then(|s| s.strip_suffix('"'))
+                .unwrap_or(v)
+        })
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>> {
+        self.parse_with(section, key, "integer", |s| s.parse::<usize>().ok())
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>> {
+        self.parse_with(section, key, "integer", |s| s.parse::<u64>().ok())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Result<Option<f64>> {
+        self.parse_with(section, key, "float", |s| s.parse::<f64>().ok())
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>> {
+        self.parse_with(section, key, "bool", |s| match s {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        })
+    }
+
+    fn parse_with<T>(
+        &self,
+        section: &str,
+        key: &str,
+        kind: &str,
+        f: impl Fn(&str) -> Option<T>,
+    ) -> Result<Option<T>> {
+        match self.raw(section, key) {
+            None => Ok(None),
+            Some(v) => f(v).map(Some).ok_or_else(|| {
+                Error::parse(format!("[{section}] {key}: expected {kind}, got `{v}`"))
+            }),
+        }
+    }
+
+    /// All keys of a section (for diagnostics).
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let mut keys: Vec<&str> = self
+            .values
+            .keys()
+            .filter(|(s, _)| s == section)
+            .map(|(_, k)| k.as_str())
+            .collect();
+        keys.sort();
+        keys
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside quotes is content, not a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+[svd]
+k = 16
+oversample = 8
+backend = "xla"   # inline comment
+tol = 0.5
+verbose = true
+name = "has # hash"
+
+[cluster]
+nodes = 4
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse_str(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("svd", "k").unwrap(), Some(16));
+        assert_eq!(c.get_str("svd", "backend"), Some("xla"));
+        assert_eq!(c.get_f64("svd", "tol").unwrap(), Some(0.5));
+        assert_eq!(c.get_bool("svd", "verbose").unwrap(), Some(true));
+        assert_eq!(c.get_usize("cluster", "nodes").unwrap(), Some(4));
+    }
+
+    #[test]
+    fn missing_returns_none() {
+        let c = ConfigFile::parse_str(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("svd", "nope").unwrap(), None);
+        assert_eq!(c.get_str("other", "k"), None);
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let c = ConfigFile::parse_str("[a]\nx = hello\n").unwrap();
+        assert!(c.get_usize("a", "x").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let c = ConfigFile::parse_str(SAMPLE).unwrap();
+        assert_eq!(c.get_str("svd", "name"), Some("has # hash"));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(ConfigFile::parse_str("[unclosed\n").is_err());
+        assert!(ConfigFile::parse_str("[a]\njust a line\n").is_err());
+        assert!(ConfigFile::parse_str("[]\n").is_err());
+    }
+
+    #[test]
+    fn section_keys_sorted() {
+        let c = ConfigFile::parse_str("[s]\nb = 1\na = 2\n").unwrap();
+        assert_eq!(c.section_keys("s"), vec!["a", "b"]);
+    }
+}

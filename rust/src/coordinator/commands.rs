@@ -1,0 +1,401 @@
+//! Subcommand implementations (leader-side orchestration).
+
+use crate::backend::{make_backend, BackendRef};
+use crate::config::{InputFormat, RunConfig};
+use crate::error::{Error, Result};
+use crate::io::dataset::{self, Spectrum};
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::jobs::{AtaBlockJob, AtaRowJob, MultJob, RandomProjRowJob};
+use crate::linalg::Matrix;
+use crate::mapreduce::{ata_mapreduce, AtaMrMode};
+use crate::metrics::Stopwatch;
+use crate::rng::VirtualMatrix;
+use crate::simulator::{simulate_split_process, ClusterParams};
+use crate::splitproc::{self, Blocked};
+use crate::svd::{self, SvdOptions};
+use crate::util::{Args, Logger};
+
+static LOG: Logger = Logger::new("coordinator");
+
+/// Build the run configuration: defaults < `--config` file < CLI flags.
+pub fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    if let Some(path) = args.opt_str("config") {
+        let file = crate::config::parser::ConfigFile::parse_file(path)?;
+        cfg.apply_file(&file)?;
+    }
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn input_of(cfg: &RunConfig) -> Result<InputSpec> {
+    if cfg.input.is_empty() {
+        return Err(Error::Config("--input is required".into()));
+    }
+    Ok(InputSpec { path: cfg.input.clone(), format: cfg.format })
+}
+
+fn parse_spectrum(args: &Args, rank: usize) -> Result<Spectrum> {
+    let scale = args.f64_or("scale", 10.0)?;
+    match args.str_or("spectrum", "geometric").as_str() {
+        "geometric" => Ok(Spectrum::Geometric { scale, decay: args.f64_or("decay", 0.7)? }),
+        "power" => Ok(Spectrum::Power { scale }),
+        "lowrank" => Ok(Spectrum::LowRank { scale, r: rank }),
+        other => Err(Error::Config(format!("unknown spectrum `{other}`"))),
+    }
+}
+
+/// `gen-data`: write a synthetic dataset to `--out`.
+pub fn gen_data(args: &Args) -> Result<()> {
+    let out = args.require_str("out")?;
+    let m = args.usize_or("rows", 10_000)?;
+    let n = args.usize_or("cols", 64)?;
+    let rank = args.usize_or("rank", n.min(16))?;
+    let noise = args.f64_or("noise", 0.01)?;
+    let seed = args.u64_or("seed", 0)?;
+    let spectrum = parse_spectrum(args, rank)?;
+    let spec = InputSpec::auto(out.clone());
+    let sw = Stopwatch::start();
+    if args.flag("clusters") || args.opt_str("clusters").is_some() {
+        let clusters = args.usize_or("clusters", 8)?;
+        let spread = args.f64_or("spread", 0.5)?;
+        let (a, _) = dataset::gen_clustered(m, n, clusters, spread, seed);
+        crate::io::write_matrix(&a, &spec)?;
+        LOG.info(&format!("wrote {m}x{n} clustered ({clusters} clusters) to {out}"));
+    } else if args.flag("streamed") || m * n > 50_000_000 {
+        dataset::gen_streamed(&spec, m, n, rank, spectrum, noise, seed)?;
+        LOG.info(&format!("streamed {m}x{n} rank~{rank} to {out}"));
+    } else {
+        let (a, sigma) = dataset::gen_exact(m, n, rank, spectrum, noise, seed)?;
+        crate::io::write_matrix(&a, &spec)?;
+        // Exact spectrum alongside, for accuracy experiments.
+        let sigma_path = format!("{out}.sigma");
+        let text: String =
+            sigma.iter().map(|s| format!("{s:.12e}\n")).collect();
+        std::fs::write(&sigma_path, text)?;
+        LOG.info(&format!("wrote {m}x{n} rank {rank} to {out} (+ {sigma_path})"));
+    }
+    LOG.info(&format!("gen-data done in {:.2?}", sw.elapsed()));
+    Ok(())
+}
+
+/// `svd` / `exact-svd`: the paper's pipeline end to end.
+pub fn svd(args: &Args, exact: bool) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    if exact {
+        cfg.exact_gram = true;
+    }
+    let input = input_of(&cfg)?;
+    let backend = make_backend(&cfg)?;
+    let opts = SvdOptions::from_config(&cfg);
+    let sw = Stopwatch::start();
+    let result = if args.flag("distributed") {
+        let listen = args.str_or("listen", "127.0.0.1:7070");
+        let n = args.usize_or("remote-workers", cfg.workers)?;
+        let mut leader = crate::cluster::DistributedLeader::accept(&listen, n)?;
+        let res =
+            crate::cluster::leader::distributed_randomized_svd(&mut leader, &input, backend, &opts);
+        leader.shutdown()?;
+        res?
+    } else if cfg.exact_gram {
+        svd::gram_svd_file(&input, backend, &opts)?
+    } else {
+        svd::randomized_svd_file(&input, backend, &opts)?
+    };
+    println!("{}", result.report.render());
+    println!(
+        "m={} n={} k={}  sigma = [{}]",
+        result.m,
+        result.n,
+        result.k,
+        result
+            .sigma
+            .iter()
+            .take(8)
+            .map(|s| format!("{s:.4}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    if args.flag("validate") {
+        let err = svd::validate::reconstruction_error_streaming(&input, &result)?;
+        println!("relative reconstruction error ||A - U S V^T||_F / ||A||_F = {err:.6}");
+    }
+    if let Some(prefix) = args.opt_str("out-prefix") {
+        write_outputs(prefix, &result)?;
+    }
+    LOG.info(&format!("svd done in {:.2?}", sw.elapsed()));
+    Ok(())
+}
+
+fn write_outputs(prefix: &str, result: &svd::SvdResult) -> Result<()> {
+    let sigma_path = format!("{prefix}.sigma.csv");
+    let text: String = result.sigma.iter().map(|s| format!("{s:.12e}\n")).collect();
+    std::fs::write(&sigma_path, text)?;
+    if let Some(v) = &result.v {
+        crate::io::csv::write_matrix_csv(v, &format!("{prefix}.V.csv"))?;
+    }
+    LOG.info(&format!(
+        "wrote {prefix}.sigma.csv{}; U stays sharded in {}",
+        if result.v.is_some() { format!(" and {prefix}.V.csv") } else { String::new() },
+        result.u_shards.shard_path(0),
+    ));
+    Ok(())
+}
+
+/// `ata`: standalone streaming Gram (paper §3.1).
+pub fn ata(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = input_of(&cfg)?;
+    let (m, n) = input.dims()?;
+    let sw = Stopwatch::start();
+    let gram = run_ata(&cfg, &input, n, args.flag("row-mode"))?;
+    let elapsed = sw.elapsed();
+    println!(
+        "A^T A of {m}x{n} in {:.2?} ({:.0} rows/s), trace = {:.4}",
+        elapsed,
+        m as f64 / elapsed.as_secs_f64(),
+        (0..n).map(|i| gram.get(i, i)).sum::<f64>()
+    );
+    if let Some(out) = args.opt_str("out") {
+        crate::io::write_matrix(&gram, &InputSpec::auto(out))?;
+    }
+    Ok(())
+}
+
+/// Shared ATA driver (also used by benches): block mode through the
+/// configured backend, or the paper-literal row mode.
+pub fn run_ata(cfg: &RunConfig, input: &InputSpec, n: usize, row_mode: bool) -> Result<Matrix> {
+    if row_mode {
+        let results = splitproc::run(input, cfg.workers, |_| Ok(AtaRowJob::new(n)))?;
+        splitproc::reduce_partials(results.into_iter().map(|r| r.job.into_partial()).collect())
+    } else {
+        let backend: BackendRef = make_backend(cfg)?;
+        let results = splitproc::run(input, cfg.workers, |_| {
+            Ok(Blocked::new(AtaBlockJob::new(backend.clone(), n), cfg.block, n))
+        })?;
+        splitproc::reduce_partials(
+            results.into_iter().map(|r| r.job.into_inner().into_partial()).collect(),
+        )
+    }
+}
+
+/// `project`: standalone `Y = A Ω` with the virtual Ω (paper §3.3/§2.1).
+pub fn project(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = input_of(&cfg)?;
+    let (m, n) = input.dims()?;
+    let k = cfg.sketch_width();
+    let omega = VirtualMatrix::projection(cfg.seed, n, k);
+    let prefix = args.str_or("out-prefix", &format!("{}/Y", cfg.work_dir));
+    let dir = std::path::Path::new(&prefix)
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| ".".into());
+    std::fs::create_dir_all(&dir)?;
+    let stem = std::path::Path::new(&prefix)
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "Y".into());
+    let shards = ShardSet::new(&dir, &stem, InputFormat::Csv)?;
+    let sw = Stopwatch::start();
+    let results = splitproc::run(&input, cfg.workers, |chunk| {
+        RandomProjRowJob::new(omega.clone(), &shards, chunk.index)
+    })?;
+    let rows: u64 = results.iter().map(|r| r.rows).sum();
+    println!(
+        "projected {m}x{n} -> {rows}x{k} in {:.2?} ({} shards at {})",
+        sw.elapsed(),
+        results.len(),
+        shards.shard_path(0)
+    );
+    Ok(())
+}
+
+/// `mult`: streaming `A·B` with a materialized B (paper §3.2).
+pub fn mult(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = input_of(&cfg)?;
+    let b_path = args.require_str("b")?;
+    let b_spec = InputSpec::auto(b_path);
+    let backend = make_backend(&cfg)?;
+    let prefix = args.str_or("out-prefix", &format!("{}/C", cfg.work_dir));
+    let dir = std::path::Path::new(&prefix)
+        .parent()
+        .map(|p| p.to_path_buf())
+        .unwrap_or_else(|| ".".into());
+    std::fs::create_dir_all(&dir)?;
+    let stem = std::path::Path::new(&prefix)
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "C".into());
+    let shards = ShardSet::new(&dir, &stem, InputFormat::Csv)?;
+    let (_, n) = input.dims()?;
+    let sw = Stopwatch::start();
+    let results = splitproc::run(&input, cfg.workers, |chunk| {
+        let job = MultJob::from_file(backend.clone(), &b_spec, &shards, chunk.index)?;
+        Ok(Blocked::new(job, cfg.block, n))
+    })?;
+    let rows: u64 = results.iter().map(|r| r.rows).sum();
+    println!("multiplied {rows} rows in {:.2?} -> {}", sw.elapsed(), shards.shard_path(0));
+    Ok(())
+}
+
+/// `mr-ata`: the Map-Reduce baseline with shuffle accounting (E2).
+pub fn mr_ata(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = input_of(&cfg)?;
+    let (m, n) = input.dims()?;
+    let mappers = args.usize_or("mappers", cfg.workers)?;
+    let reducers = args.usize_or("reducers", cfg.workers)?;
+    let mode = if args.flag("upper") { AtaMrMode::Upper } else { AtaMrMode::Full };
+    let work = std::path::Path::new(&cfg.work_dir).join("mr_ata");
+    let sw = Stopwatch::start();
+    let (gram, stats) = ata_mapreduce(&input, work, mappers, reducers, mode)?;
+    let elapsed = sw.elapsed();
+    println!(
+        "MR A^T A of {m}x{n}: {:.2?}, {} pairs, shuffle {} (trace {:.4})",
+        elapsed,
+        stats.pairs_emitted,
+        crate::util::humanize::fmt_bytes(stats.shuffle_bytes),
+        (0..n).map(|i| gram.get(i, i)).sum::<f64>()
+    );
+    Ok(())
+}
+
+/// `simulate`: scalability sweep on the cluster cost model (E1).
+pub fn simulate(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = input_of(&cfg)?;
+    let (m, n) = input.dims()?;
+    let params = cluster_params_from(args)?;
+    let partial_bytes = args.u64_or("partial-bytes", (n * n * 8) as u64)?;
+    let list = args.str_or("workers-list", "1,2,4,8,16");
+    let workers: Vec<usize> = list
+        .split(',')
+        .map(|t| t.trim().parse::<usize>().map_err(|e| Error::parse(format!("{e}"))))
+        .collect::<Result<_>>()?;
+    let io_desc = if params.local_copies {
+        "local copies (no shared server)".to_string()
+    } else {
+        format!("{}/s shared file server", crate::util::humanize::fmt_bytes(params.fileserver_bw as u64))
+    };
+    println!(
+        "simulated cluster: {m} rows x {n} cols, cpu {:.0} rows/s, {io_desc}",
+        params.cpu_rows_per_sec
+    );
+    println!("{:>8} {:>12} {:>12} {:>12} {:>9}", "workers", "stream(s)", "reduce(s)", "total(s)", "speedup");
+    let base = simulate_split_process(&params, &input, 1, partial_bytes)?.makespan;
+    for &w in &workers {
+        let r = simulate_split_process(&params, &input, w, partial_bytes)?;
+        println!(
+            "{:>8} {:>12.4} {:>12.4} {:>12.4} {:>8.2}x",
+            r.workers, r.stream_makespan, r.reduce_time, r.makespan, base / r.makespan
+        );
+    }
+    Ok(())
+}
+
+/// `worker`: join a distributed run and serve phases until shutdown.
+pub fn worker(args: &Args) -> Result<()> {
+    let leader = args.require_str("leader")?;
+    let cfg = load_config(args)?;
+    let backend = make_backend(&cfg)?;
+    crate::cluster::run_worker(&leader, backend)
+}
+
+/// Parse [`ClusterParams`] overrides from the CLI.
+pub fn cluster_params_from(args: &Args) -> Result<ClusterParams> {
+    let d = ClusterParams::default();
+    Ok(ClusterParams {
+        nodes: args.usize_or("nodes", d.nodes)?,
+        cpu_rows_per_sec: args.f64_or("rows-per-sec", d.cpu_rows_per_sec)?,
+        fileserver_bw: args.f64_or("fileserver-bw", d.fileserver_bw)?,
+        disk_bw: args.f64_or("disk-bw", d.disk_bw)?,
+        local_copies: args.flag("local-copies"),
+        reduce_latency: args.f64_or("reduce-latency", d.reduce_latency)?,
+        reduce_bw: args.f64_or("reduce-bw", d.reduce_bw)?,
+        jitter: args.f64_or("jitter", d.jitter)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_cmds");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn argv(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn gen_data_then_ata_roundtrip() {
+        let path = tmp("cmd_a.csv");
+        gen_data(&argv(&[
+            "gen-data", "--out", &path, "--rows", "60", "--cols", "5", "--rank", "3",
+        ]))
+        .unwrap();
+        let out = tmp("cmd_gram.csv");
+        ata(&argv(&["ata", "--input", &path, "--workers", "2", "--out", &out])).unwrap();
+        let g = crate::io::read_matrix(&InputSpec::auto(out)).unwrap();
+        assert_eq!(g.shape(), (5, 5));
+        // Gram is symmetric PSD: diagonal positive.
+        for i in 0..5 {
+            assert!(g.get(i, i) > 0.0);
+        }
+    }
+
+    #[test]
+    fn svd_command_runs_end_to_end() {
+        let path = tmp("cmd_svd.csv");
+        gen_data(&argv(&[
+            "gen-data", "--out", &path, "--rows", "120", "--cols", "24", "--rank", "4",
+            "--noise", "0",
+        ]))
+        .unwrap();
+        let work = tmp("cmd_svd_work");
+        svd(
+            &argv(&[
+                "svd", "--input", &path, "--k", "4", "--workers", "2", "--work-dir", &work,
+                "--validate",
+            ]),
+            false,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn exact_svd_command_runs() {
+        let path = tmp("cmd_exact.csv");
+        gen_data(&argv(&[
+            "gen-data", "--out", &path, "--rows", "80", "--cols", "8", "--rank", "3", "--noise", "0",
+        ]))
+        .unwrap();
+        let work = tmp("cmd_exact_work");
+        svd(
+            &argv(&["exact-svd", "--input", &path, "--k", "3", "--work-dir", &work]),
+            true,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn simulate_command_runs() {
+        let path = tmp("cmd_sim.csv");
+        gen_data(&argv(&["gen-data", "--out", &path, "--rows", "100", "--cols", "4"])).unwrap();
+        simulate(&argv(&[
+            "simulate", "--input", &path, "--workers-list", "1,2,4", "--rows-per-sec", "10000",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn missing_input_is_config_error() {
+        assert!(ata(&argv(&["ata"])).is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! The leader process: CLI subcommands, run configuration, phase
+//! orchestration, and result assembly.
+//!
+//! This is the deployment entrypoint of the system — what the paper's
+//! operator would invoke on the leader node. Subcommands:
+//!
+//! | command | what it runs |
+//! |---|---|
+//! | `gen-data` | synthetic tall-and-fat dataset generators ([`crate::io::dataset`]) |
+//! | `svd` | the randomized rank-k SVD pipeline ([`crate::svd`]) |
+//! | `exact-svd` | the small-n exact-Gram route (paper §2.0.1) |
+//! | `ata` | standalone streaming `A^T A` (paper §3.1) |
+//! | `project` | standalone random projection `Y = A Ω` (paper §3.3) |
+//! | `mult` | streaming `A·B` with B from file (paper §3.2) |
+//! | `mr-ata` | the Map-Reduce baseline for the same Gram (paper Fig. 2) |
+//! | `simulate` | cluster cost simulation / scalability sweep ([`crate::simulator`]) |
+//! | `serve-metrics` | tiny HTTP endpoint exposing the last run's metrics |
+//!
+//! Configuration precedence: built-in defaults < `--config file.toml` <
+//! CLI flags ([`crate::config`]).
+
+pub mod commands;
+pub mod server;
+
+use crate::error::{Error, Result};
+use crate::util::Args;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+tallfat — randomized rank-k SVD for tall-and-fat matrices (Bayramli 2013)
+
+USAGE: tallfat <command> [options]
+
+COMMANDS
+  gen-data      generate a synthetic dataset
+                  --out PATH --rows M --cols N [--rank R] [--spectrum geometric|power|lowrank]
+                  [--decay D] [--noise S] [--seed S] [--streamed] [--clusters C --spread S]
+  svd           randomized rank-k SVD of a tall-and-fat file
+                  --input PATH --k K [--oversample P] [--power-iters Q] [--workers W]
+                  [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
+                  [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
+                  (--center = PCA mode: subtract column means, one extra pass)
+  exact-svd     exact-Gram SVD for small n (paper §2.0.1)
+                  (same options; projection flags ignored)
+  ata           streaming A^T A                --input PATH [--workers W] [--block B]
+                  [--row-mode] [--backend ...] [--out PATH]
+  project       random projection Y = A Ω      --input PATH --k K [--seed S] [--workers W]
+                  [--virtual] [--out-prefix P]
+  mult          streaming A·B                  --input PATH --b PATH [--workers W] [--out-prefix P]
+  mr-ata        Map-Reduce A^T A baseline      --input PATH [--mappers M] [--reducers R] [--upper]
+  simulate      cluster scalability simulation --input PATH [--workers-list 1,2,4,8,16]
+                  [--rows-per-sec R] [--fileserver-bw B] [--disk-bw B] [--local-copies]
+                  [--reduce-latency S] [--jitter J] [--partial-bytes N]
+  worker        join a distributed run         --leader HOST:PORT [--backend ...]
+                (the `svd` command becomes a leader with --distributed:
+                 --listen HOST:PORT --remote-workers N)
+  serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
+
+GLOBAL
+  --log error|warn|info|debug|trace   (or TALLFAT_LOG)
+";
+
+/// Dispatch a parsed command line. Returns the process exit code.
+pub fn run_cli(args: &Args) -> Result<()> {
+    if let Some(level) = args.opt_str("log") {
+        crate::util::logger::set_level(parse_level(level));
+    }
+    match args.command.as_deref() {
+        Some("gen-data") => commands::gen_data(args),
+        Some("svd") => commands::svd(args, false),
+        Some("exact-svd") => commands::svd(args, true),
+        Some("ata") => commands::ata(args),
+        Some("project") => commands::project(args),
+        Some("mult") => commands::mult(args),
+        Some("mr-ata") => commands::mr_ata(args),
+        Some("simulate") => commands::simulate(args),
+        Some("worker") => commands::worker(args),
+        Some("serve-metrics") => server::serve_metrics(args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown command `{other}` (run `tallfat help`)"
+        ))),
+    }
+}
+
+fn parse_level(s: &str) -> crate::util::logger::Level {
+    use crate::util::logger::Level;
+    match s.to_ascii_lowercase().as_str() {
+        "error" => Level::Error,
+        "warn" => Level::Warn,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => Level::Info,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_command_errors() {
+        let args = Args::parse(["frobnicate".to_string()]).unwrap();
+        assert!(run_cli(&args).is_err());
+    }
+
+    #[test]
+    fn help_succeeds() {
+        let args = Args::parse(["help".to_string()]).unwrap();
+        run_cli(&args).unwrap();
+    }
+
+    #[test]
+    fn no_command_prints_usage() {
+        let args = Args::parse(Vec::<String>::new()).unwrap();
+        run_cli(&args).unwrap();
+    }
+}

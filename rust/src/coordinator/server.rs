@@ -1,0 +1,158 @@
+//! `serve-metrics`: a dependency-free HTTP endpoint exposing run metrics.
+//!
+//! The paper's cluster story needs the leader to be observable; this is the
+//! minimal honest version — a blocking `TcpListener` loop answering any
+//! `GET` with `text/plain` Prometheus-style gauges from a shared
+//! [`MetricsRegistry`]. Jobs publish into the registry; scrapers poll.
+
+use crate::error::Result;
+use crate::util::{Args, Logger};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Mutex, OnceLock};
+
+static LOG: Logger = Logger::new("metrics-server");
+
+/// Process-global metric registry (name -> value).
+#[derive(Default)]
+pub struct MetricsRegistry {
+    values: Mutex<BTreeMap<String, f64>>,
+}
+
+impl MetricsRegistry {
+    /// The process-wide registry.
+    pub fn global() -> &'static MetricsRegistry {
+        static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+        REG.get_or_init(MetricsRegistry::default)
+    }
+
+    /// Set a gauge.
+    pub fn set(&self, name: &str, value: f64) {
+        self.values.lock().unwrap().insert(name.to_string(), value);
+    }
+
+    /// Add to a counter (creates at 0).
+    pub fn add(&self, name: &str, delta: f64) {
+        *self.values.lock().unwrap().entry(name.to_string()).or_insert(0.0) += delta;
+    }
+
+    /// Read one metric.
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.values.lock().unwrap().get(name).copied()
+    }
+
+    /// Render the Prometheus text exposition.
+    pub fn render(&self) -> String {
+        let values = self.values.lock().unwrap();
+        let mut out = String::new();
+        for (k, v) in values.iter() {
+            out.push_str(&format!("tallfat_{k} {v}\n"));
+        }
+        if values.is_empty() {
+            out.push_str("# no metrics recorded yet\n");
+        }
+        out
+    }
+}
+
+fn handle(mut stream: TcpStream) -> std::io::Result<()> {
+    // Read the request line; drain headers until the blank line.
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut hdr = String::new();
+    while reader.read_line(&mut hdr)? > 0 {
+        if hdr == "\r\n" || hdr == "\n" {
+            break;
+        }
+        hdr.clear();
+    }
+    let body = MetricsRegistry::global().render();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())
+}
+
+/// `serve-metrics [--addr host:port] [--once]`.
+///
+/// `--once` answers a single request and exits (used by the integration
+/// test; production runs loop forever).
+pub fn serve_metrics(args: &Args) -> Result<()> {
+    let addr = args.str_or("addr", "127.0.0.1:9924");
+    let listener = TcpListener::bind(&addr)?;
+    LOG.info(&format!("metrics on http://{addr}/metrics"));
+    let once = args.flag("once");
+    for stream in listener.incoming() {
+        match stream {
+            Ok(s) => {
+                if let Err(e) = handle(s) {
+                    LOG.warn(&format!("request failed: {e}"));
+                }
+            }
+            Err(e) => LOG.warn(&format!("accept failed: {e}")),
+        }
+        if once {
+            break;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Read;
+
+    #[test]
+    fn registry_set_add_get() {
+        let reg = MetricsRegistry::default();
+        reg.set("rows_per_sec", 123.5);
+        reg.add("rows_total", 100.0);
+        reg.add("rows_total", 50.0);
+        assert_eq!(reg.get("rows_per_sec"), Some(123.5));
+        assert_eq!(reg.get("rows_total"), Some(150.0));
+        let text = reg.render();
+        assert!(text.contains("tallfat_rows_per_sec 123.5"));
+        assert!(text.contains("tallfat_rows_total 150"));
+    }
+
+    #[test]
+    fn empty_registry_renders_comment() {
+        let reg = MetricsRegistry::default();
+        assert!(reg.render().starts_with('#'));
+    }
+
+    #[test]
+    fn serves_one_http_request() {
+        // Bind on an ephemeral port by racing: pick a port via a probe bind.
+        let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap().to_string();
+        drop(probe);
+        MetricsRegistry::global().set("test_gauge", 7.0);
+        let addr2 = addr.clone();
+        let server = std::thread::spawn(move || {
+            let args = Args::parse(
+                ["serve-metrics", "--addr", &addr2, "--once"].iter().map(|s| s.to_string()),
+            )
+            .unwrap();
+            serve_metrics(&args).unwrap();
+        });
+        // Retry connect until the listener is up.
+        let mut resp = String::new();
+        for _ in 0..100 {
+            if let Ok(mut s) = TcpStream::connect(&addr) {
+                s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+                s.read_to_string(&mut resp).unwrap();
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        server.join().unwrap();
+        assert!(resp.contains("200 OK"), "{resp}");
+        assert!(resp.contains("tallfat_test_gauge 7"), "{resp}");
+    }
+}

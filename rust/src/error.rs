@@ -1,0 +1,52 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// All errors surfaced by the tallfat library.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Library-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Convenience constructor for shape errors.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+
+    /// Convenience constructor for parse errors.
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+}

@@ -1,0 +1,301 @@
+//! tallfat binary matrix format (`.bin` / `.tfb`).
+//!
+//! Layout: 32-byte header, then row-major payload.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "TFBM"
+//! 4       4     version (u32 le) = 1
+//! 8       8     rows (u64 le)
+//! 16      8     cols (u64 le)
+//! 24      1     dtype: 1 = f32, 2 = f64
+//! 25      7     reserved (zero)
+//! ```
+//!
+//! Chunking binary inputs is by row ranges (exact), not byte ranges — the
+//! header makes row offsets computable, so no newline realignment is needed.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+
+pub const MAGIC: &[u8; 4] = b"TFBM";
+pub const VERSION: u32 = 1;
+
+/// Element type tag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32 = 1,
+    F64 = 2,
+}
+
+impl DType {
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F64 => 8,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            1 => Ok(DType::F32),
+            2 => Ok(DType::F64),
+            other => Err(Error::parse(format!("binmat: bad dtype {other}"))),
+        }
+    }
+}
+
+/// Parsed header.
+#[derive(Clone, Copy, Debug)]
+pub struct BinMatHeader {
+    pub rows: u64,
+    pub cols: u64,
+    pub dtype: DType,
+}
+
+impl BinMatHeader {
+    pub const SIZE: u64 = 32;
+
+    pub fn read_from(path: &str) -> Result<Self> {
+        let mut f = File::open(path)?;
+        let mut buf = [0u8; Self::SIZE as usize];
+        f.read_exact(&mut buf)?;
+        if &buf[0..4] != MAGIC {
+            return Err(Error::parse("binmat: bad magic"));
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(Error::parse(format!("binmat: unsupported version {version}")));
+        }
+        Ok(BinMatHeader {
+            rows: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            cols: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            dtype: DType::from_u8(buf[24])?,
+        })
+    }
+
+    fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let mut buf = [0u8; Self::SIZE as usize];
+        buf[0..4].copy_from_slice(MAGIC);
+        buf[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.rows.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.cols.to_le_bytes());
+        buf[24] = self.dtype as u8;
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Byte offset of row `r`.
+    pub fn row_offset(&self, r: u64) -> u64 {
+        Self::SIZE + r * self.cols * self.dtype.size() as u64
+    }
+}
+
+/// Streaming writer. Rows must be appended in order; `finish` rewrites the
+/// header with the final row count.
+pub struct BinMatWriter {
+    w: BufWriter<File>,
+    cols: u64,
+    rows_written: u64,
+    dtype: DType,
+}
+
+impl BinMatWriter {
+    pub fn create(path: &str, cols: usize, dtype: DType) -> Result<Self> {
+        let f = File::create(path)?;
+        let mut w = BufWriter::with_capacity(1 << 20, f);
+        // placeholder header; fixed in finish()
+        BinMatHeader { rows: 0, cols: cols as u64, dtype }.write_to(&mut w)?;
+        Ok(BinMatWriter { w, cols: cols as u64, rows_written: 0, dtype })
+    }
+
+    pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() as u64 != self.cols {
+            return Err(Error::shape(format!(
+                "binmat write_row: {} cols, expected {}",
+                row.len(),
+                self.cols
+            )));
+        }
+        match self.dtype {
+            DType::F32 => {
+                for &v in row {
+                    self.w.write_all(&(v as f32).to_le_bytes())?;
+                }
+            }
+            DType::F64 => {
+                for &v in row {
+                    self.w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        self.rows_written += 1;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<u64> {
+        self.w.flush()?;
+        let mut f = self.w.into_inner().map_err(|e| Error::Other(e.to_string()))?;
+        f.seek(SeekFrom::Start(0))?;
+        BinMatHeader { rows: self.rows_written, cols: self.cols, dtype: self.dtype }
+            .write_to(&mut f)?;
+        f.sync_all()?;
+        Ok(self.rows_written)
+    }
+}
+
+/// Streaming reader over a row range.
+pub struct BinMatReader {
+    r: BufReader<File>,
+    header: BinMatHeader,
+    next_row: u64,
+    end_row: u64,
+    byte_buf: Vec<u8>,
+}
+
+impl BinMatReader {
+    pub fn open(path: &str) -> Result<Self> {
+        let header = BinMatHeader::read_from(path)?;
+        Self::open_rows(path, 0, header.rows)
+    }
+
+    /// Open rows `[start, end)`.
+    pub fn open_rows(path: &str, start: u64, end: u64) -> Result<Self> {
+        let header = BinMatHeader::read_from(path)?;
+        let end = end.min(header.rows);
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(header.row_offset(start)))?;
+        let row_bytes = header.cols as usize * header.dtype.size();
+        Ok(BinMatReader {
+            r: BufReader::with_capacity(1 << 20, f),
+            header,
+            next_row: start,
+            end_row: end,
+            byte_buf: vec![0u8; row_bytes],
+        })
+    }
+
+    pub fn header(&self) -> &BinMatHeader {
+        &self.header
+    }
+
+    /// Read the next row. Returns false at end of range.
+    pub fn next_row(&mut self, row: &mut Vec<f64>) -> Result<bool> {
+        if self.next_row >= self.end_row {
+            return Ok(false);
+        }
+        self.r.read_exact(&mut self.byte_buf)?;
+        row.clear();
+        match self.header.dtype {
+            DType::F32 => {
+                for c in self.byte_buf.chunks_exact(4) {
+                    row.push(f32::from_le_bytes(c.try_into().unwrap()) as f64);
+                }
+            }
+            DType::F64 => {
+                for c in self.byte_buf.chunks_exact(8) {
+                    row.push(f64::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+        }
+        self.next_row += 1;
+        Ok(true)
+    }
+}
+
+/// Read a whole binary matrix into memory.
+pub fn read_matrix_bin(path: &str) -> Result<Matrix> {
+    let mut r = BinMatReader::open(path)?;
+    let (rows, cols) = (r.header().rows as usize, r.header().cols as usize);
+    let mut m = Matrix::zeros(rows, cols);
+    let mut row = Vec::with_capacity(cols);
+    for i in 0..rows {
+        r.next_row(&mut row)?;
+        m.row_mut(i).copy_from_slice(&row);
+    }
+    Ok(m)
+}
+
+/// Write a matrix as f64 binary.
+pub fn write_matrix_bin(m: &Matrix, path: &str) -> Result<()> {
+    let mut w = BinMatWriter::create(path, m.cols(), DType::F64)?;
+    for i in 0..m.rows() {
+        w.write_row(m.row(i))?;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip_f64() {
+        let m = Matrix::from_rows(&[vec![1.0, -2.5], vec![1e-300, 1e300]]).unwrap();
+        let path = tmp("rt64.bin");
+        write_matrix_bin(&m, &path).unwrap();
+        let back = read_matrix_bin(&path).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn f32_quantizes() {
+        let path = tmp("f32.bin");
+        let mut w = BinMatWriter::create(&path, 2, DType::F32).unwrap();
+        w.write_row(&[1.5, 0.1]).unwrap();
+        assert_eq!(w.finish().unwrap(), 1);
+        let back = read_matrix_bin(&path).unwrap();
+        assert_eq!(back.get(0, 0), 1.5); // exact in f32
+        assert!((back.get(0, 1) - 0.1).abs() < 1e-7 && back.get(0, 1) != 0.1);
+    }
+
+    #[test]
+    fn header_roundtrip_and_offsets() {
+        let path = tmp("hdr.bin");
+        let mut w = BinMatWriter::create(&path, 3, DType::F64).unwrap();
+        for i in 0..5 {
+            w.write_row(&[i as f64, 0.0, 0.0]).unwrap();
+        }
+        w.finish().unwrap();
+        let h = BinMatHeader::read_from(&path).unwrap();
+        assert_eq!((h.rows, h.cols), (5, 3));
+        assert_eq!(h.row_offset(2), 32 + 2 * 3 * 8);
+    }
+
+    #[test]
+    fn row_range_reading() {
+        let path = tmp("range.bin");
+        let m = Matrix::from_fn(10, 2, |i, j| (i * 2 + j) as f64);
+        write_matrix_bin(&m, &path).unwrap();
+        let mut r = BinMatReader::open_rows(&path, 3, 6).unwrap();
+        let mut row = Vec::new();
+        let mut seen = Vec::new();
+        while r.next_row(&mut row).unwrap() {
+            seen.push(row[0]);
+        }
+        assert_eq!(seen, vec![6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let path = tmp("bad.bin");
+        std::fs::write(&path, b"NOPExxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(BinMatHeader::read_from(&path).is_err());
+    }
+
+    #[test]
+    fn wrong_row_width_rejected() {
+        let path = tmp("w.bin");
+        let mut w = BinMatWriter::create(&path, 3, DType::F64).unwrap();
+        assert!(w.write_row(&[1.0, 2.0]).is_err());
+    }
+}

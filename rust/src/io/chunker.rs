@@ -1,0 +1,189 @@
+//! The paper's `split_process` partitioning (§3).
+//!
+//! For text inputs: divide the file into N byte ranges, then slide each
+//! boundary forward to the next newline so no row is split — exactly the
+//! `f.seek(s); f.readline(); end = f.tell()-1` logic in the paper's listing.
+//! For binary inputs: exact row-range division (no realignment needed).
+
+use crate::error::Result;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom};
+
+/// A half-open byte range `[start, end)` of an input file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ByteRange {
+    pub start: u64,
+    pub end: u64,
+}
+
+impl ByteRange {
+    pub fn len(&self) -> u64 {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+/// Split a text file into at most `n` newline-aligned byte ranges.
+///
+/// Every byte of the file belongs to exactly one range; ranges never split
+/// a line. Fewer than `n` ranges are returned when the file is small enough
+/// that some ideal boundaries collapse.
+pub fn chunk_byte_ranges(path: &str, n: usize) -> Result<Vec<ByteRange>> {
+    assert!(n > 0);
+    let file_size = std::fs::metadata(path)?.len();
+    if file_size == 0 {
+        return Ok(vec![]);
+    }
+    let mut f = BufReader::new(File::open(path)?);
+    let mut boundaries = vec![0u64];
+    for i in 1..n {
+        let ideal = file_size * i as u64 / n as u64;
+        let prev = *boundaries.last().unwrap();
+        if ideal <= prev {
+            continue;
+        }
+        // Seek to the ideal split and skip forward past the current line —
+        // the paper's realignment step.
+        f.seek(SeekFrom::Start(ideal))?;
+        let mut skipped = Vec::new();
+        f.read_until(b'\n', &mut skipped)?;
+        let aligned = ideal + skipped.len() as u64;
+        if aligned > prev && aligned < file_size {
+            boundaries.push(aligned);
+        }
+    }
+    boundaries.push(file_size);
+    Ok(boundaries
+        .windows(2)
+        .map(|w| ByteRange { start: w[0], end: w[1] })
+        .filter(|r| !r.is_empty())
+        .collect())
+}
+
+/// Split `rows` into `n` contiguous row ranges `[start, end)`, balanced to
+/// within one row. Used for binary inputs and the simulator.
+pub fn chunk_row_ranges(rows: u64, n: usize) -> Vec<(u64, u64)> {
+    assert!(n > 0);
+    let n = n as u64;
+    let base = rows / n;
+    let extra = rows % n;
+    let mut out = Vec::with_capacity(n as usize);
+    let mut start = 0u64;
+    for i in 0..n {
+        let len = base + if i < extra { 1 } else { 0 };
+        if len == 0 {
+            continue;
+        }
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp_file(name: &str, contents: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_chunker");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        let mut f = File::create(&path).unwrap();
+        f.write_all(contents.as_bytes()).unwrap();
+        path.to_string_lossy().into_owned()
+    }
+
+    fn read_range(path: &str, r: ByteRange) -> String {
+        use std::io::Read;
+        let mut f = File::open(path).unwrap();
+        f.seek(SeekFrom::Start(r.start)).unwrap();
+        let mut buf = vec![0u8; r.len() as usize];
+        f.read_exact(&mut buf).unwrap();
+        String::from_utf8(buf).unwrap()
+    }
+
+    #[test]
+    fn ranges_cover_file_exactly() {
+        let content: String = (0..100).map(|i| format!("{i};{i};{i}\n")).collect();
+        let path = tmp_file("cover.csv", &content);
+        for n in [1, 2, 3, 4, 7, 16] {
+            let ranges = chunk_byte_ranges(&path, n).unwrap();
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, content.len() as u64);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "gap/overlap at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_line_is_split() {
+        let content: String = (0..57).map(|i| format!("{};{}\n", i, i * i)).collect();
+        let path = tmp_file("nosplit.csv", &content);
+        let ranges = chunk_byte_ranges(&path, 4).unwrap();
+        let mut total_lines = 0;
+        for r in &ranges {
+            let text = read_range(&path, *r);
+            assert!(text.ends_with('\n') || r.end == content.len() as u64);
+            assert!(!text.starts_with(';'));
+            // each piece parses as whole lines
+            for line in text.lines() {
+                let parts: Vec<&str> = line.split(';').collect();
+                assert_eq!(parts.len(), 2, "split line: {line:?}");
+                total_lines += 1;
+            }
+        }
+        assert_eq!(total_lines, 57);
+    }
+
+    #[test]
+    fn every_row_seen_exactly_once() {
+        let content: String = (0..997).map(|i| format!("{i}\n")).collect();
+        let path = tmp_file("once.csv", &content);
+        let ranges = chunk_byte_ranges(&path, 8).unwrap();
+        let mut seen = vec![false; 997];
+        for r in &ranges {
+            for line in read_range(&path, *r).lines() {
+                let i: usize = line.parse().unwrap();
+                assert!(!seen[i], "row {i} seen twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn more_workers_than_lines() {
+        let path = tmp_file("tiny.csv", "1;2\n3;4\n");
+        let ranges = chunk_byte_ranges(&path, 10).unwrap();
+        assert!(ranges.len() <= 2);
+        let total: u64 = ranges.iter().map(|r| r.len()).sum();
+        assert_eq!(total, 8);
+    }
+
+    #[test]
+    fn empty_file() {
+        let path = tmp_file("empty.csv", "");
+        assert!(chunk_byte_ranges(&path, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn single_long_line() {
+        let path = tmp_file("one.csv", "1;2;3;4;5;6;7;8;9;10\n");
+        let ranges = chunk_byte_ranges(&path, 4).unwrap();
+        assert_eq!(ranges.len(), 1);
+    }
+
+    #[test]
+    fn row_ranges_balanced() {
+        let r = chunk_row_ranges(10, 3);
+        assert_eq!(r, vec![(0, 4), (4, 7), (7, 10)]);
+        let r = chunk_row_ranges(3, 5);
+        assert_eq!(r, vec![(0, 1), (1, 2), (2, 3)]);
+        assert!(chunk_row_ranges(0, 3).is_empty());
+    }
+}

@@ -1,0 +1,251 @@
+//! `;`-separated text rows — the paper's interchange format.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Seek, SeekFrom, Write};
+
+/// Parse one `;`-separated row into `out`, returning the column count.
+/// `out` is cleared first; parsing reuses its capacity (no per-row alloc).
+pub fn parse_row(line: &str, out: &mut Vec<f64>) -> Result<usize> {
+    parse_row_bytes(line.as_bytes(), out)
+}
+
+/// Byte-level row parser — the hot path. Tokenizes on `;` without UTF-8
+/// validation of the whole line (tokens are validated individually, and
+/// only when handed to the float parser), trims ASCII whitespace in place.
+/// Measured ~1.5x the throughput of the `&str`/`split` formulation on the
+/// E6 CSV workload (§Perf).
+pub fn parse_row_bytes(line: &[u8], out: &mut Vec<f64>) -> Result<usize> {
+    out.clear();
+    // trim trailing newline / CR / spaces, leading spaces
+    let mut end = line.len();
+    while end > 0 && matches!(line[end - 1], b'\n' | b'\r' | b' ' | b'\t') {
+        end -= 1;
+    }
+    let mut start = 0;
+    while start < end && matches!(line[start], b' ' | b'\t') {
+        start += 1;
+    }
+    if start >= end {
+        return Ok(0);
+    }
+    let mut tok_start = start;
+    let bytes = &line[..end];
+    loop {
+        // find the next ';' (memchr-style scan; LLVM vectorizes this loop)
+        let mut i = tok_start;
+        while i < end && bytes[i] != b';' {
+            i += 1;
+        }
+        let mut t0 = tok_start;
+        let mut t1 = i;
+        while t0 < t1 && matches!(bytes[t0], b' ' | b'\t') {
+            t0 += 1;
+        }
+        while t1 > t0 && matches!(bytes[t1 - 1], b' ' | b'\t') {
+            t1 -= 1;
+        }
+        let tok = &bytes[t0..t1];
+        let s = std::str::from_utf8(tok)
+            .map_err(|_| Error::parse("non-utf8 bytes in csv token".to_string()))?;
+        let v: f64 = s
+            .parse()
+            .map_err(|_| Error::parse(format!("bad float `{s}`")))?;
+        out.push(v);
+        if i >= end {
+            break;
+        }
+        tok_start = i + 1;
+    }
+    Ok(out.len())
+}
+
+/// Streaming row reader over a byte range of a CSV file.
+///
+/// Reads `[start, end)` of the file; the range must be newline-aligned
+/// (produced by [`crate::io::chunker::chunk_byte_ranges`]).
+pub struct CsvRowReader {
+    reader: BufReader<File>,
+    pos: u64,
+    end: u64,
+    line_buf: Vec<u8>,
+}
+
+impl CsvRowReader {
+    /// Open the whole file.
+    pub fn open(path: &str) -> Result<Self> {
+        let len = std::fs::metadata(path)?.len();
+        Self::open_range(path, 0, len)
+    }
+
+    /// Open a byte range `[start, end)`.
+    pub fn open_range(path: &str, start: u64, end: u64) -> Result<Self> {
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(start))?;
+        Ok(CsvRowReader {
+            reader: BufReader::with_capacity(1 << 20, f),
+            pos: start,
+            end,
+            line_buf: Vec::with_capacity(4096),
+        })
+    }
+
+    /// Read the next row into `row`. Returns `Ok(false)` at end of range.
+    pub fn next_row(&mut self, row: &mut Vec<f64>) -> Result<bool> {
+        loop {
+            if self.pos >= self.end {
+                return Ok(false);
+            }
+            self.line_buf.clear();
+            let n = self.reader.read_until(b'\n', &mut self.line_buf)?;
+            if n == 0 {
+                return Ok(false);
+            }
+            self.pos += n as u64;
+            if parse_row_bytes(&self.line_buf, row)? > 0 {
+                return Ok(true);
+            }
+            // skip blank lines
+        }
+    }
+}
+
+/// Count `(rows, cols)` of a CSV matrix by scanning once.
+pub fn count_dims(path: &str) -> Result<(usize, usize)> {
+    let mut reader = CsvRowReader::open(path)?;
+    let mut row = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    while reader.next_row(&mut row)? {
+        if rows == 0 {
+            cols = row.len();
+        } else if row.len() != cols {
+            return Err(Error::parse(format!(
+                "ragged csv: row {rows} has {} cols, expected {cols}",
+                row.len()
+            )));
+        }
+        rows += 1;
+    }
+    Ok((rows, cols))
+}
+
+/// Read a whole CSV matrix into memory.
+pub fn read_matrix_csv(path: &str) -> Result<Matrix> {
+    let mut reader = CsvRowReader::open(path)?;
+    let mut row = Vec::new();
+    let mut data = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    while reader.next_row(&mut row)? {
+        if rows == 0 {
+            cols = row.len();
+        } else if row.len() != cols {
+            return Err(Error::parse("ragged csv".to_string()));
+        }
+        data.extend_from_slice(&row);
+        rows += 1;
+    }
+    Matrix::from_vec(rows, cols, data)
+}
+
+/// Write a matrix as `;`-separated text (the paper's `%1.6f`-style format,
+/// but with full precision to round-trip losslessly).
+pub fn write_matrix_csv(m: &Matrix, path: &str) -> Result<()> {
+    let mut w = BufWriter::with_capacity(1 << 20, File::create(path)?);
+    for i in 0..m.rows() {
+        write_row(&mut w, m.row(i))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write one row to an open writer.
+pub fn write_row<W: Write>(w: &mut W, row: &[f64]) -> Result<()> {
+    let mut first = true;
+    for v in row {
+        if !first {
+            w.write_all(b";")?;
+        }
+        first = false;
+        // Shortest round-trip float formatting.
+        let mut buf = String::with_capacity(24);
+        {
+            use std::fmt::Write as _;
+            write!(buf, "{v}").expect("write to String");
+        }
+        w.write_all(buf.as_bytes())?;
+    }
+    w.write_all(b"\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn parse_row_basics() {
+        let mut out = Vec::new();
+        assert_eq!(parse_row("1.5;2;-3.25\n", &mut out).unwrap(), 3);
+        assert_eq!(out, vec![1.5, 2.0, -3.25]);
+        assert_eq!(parse_row("\n", &mut out).unwrap(), 0);
+        assert!(parse_row("1;x;3", &mut out).is_err());
+    }
+
+    #[test]
+    fn roundtrip_matrix() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, -2.5, 3.0e-7],
+            vec![0.1 + 0.2, 1e10, -0.0],
+        ])
+        .unwrap();
+        let path = tmp("roundtrip.csv");
+        write_matrix_csv(&m, &path).unwrap();
+        let back = read_matrix_csv(&path).unwrap();
+        assert_eq!(back.shape(), (2, 3));
+        assert!(back.max_abs_diff(&m) == 0.0, "lossless roundtrip expected");
+    }
+
+    #[test]
+    fn count_dims_works() {
+        let path = tmp("dims.csv");
+        std::fs::write(&path, "1;2;3\n4;5;6\n\n7;8;9\n").unwrap();
+        assert_eq!(count_dims(&path).unwrap(), (3, 3));
+    }
+
+    #[test]
+    fn ragged_rejected() {
+        let path = tmp("ragged.csv");
+        std::fs::write(&path, "1;2;3\n4;5\n").unwrap();
+        assert!(count_dims(&path).is_err());
+    }
+
+    #[test]
+    fn range_reader_respects_end() {
+        let path = tmp("range.csv");
+        std::fs::write(&path, "1;1\n2;2\n3;3\n").unwrap();
+        // First row is bytes [0,4): "1;1\n"
+        let mut r = CsvRowReader::open_range(&path, 0, 4).unwrap();
+        let mut row = Vec::new();
+        assert!(r.next_row(&mut row).unwrap());
+        assert_eq!(row, vec![1.0, 1.0]);
+        assert!(!r.next_row(&mut row).unwrap());
+    }
+
+    #[test]
+    fn windows_line_endings() {
+        let path = tmp("crlf.csv");
+        std::fs::write(&path, "1;2\r\n3;4\r\n").unwrap();
+        let m = read_matrix_csv(&path).unwrap();
+        assert_eq!(m.shape(), (2, 2));
+        assert_eq!(m.get(1, 1), 4.0);
+    }
+}

@@ -1,0 +1,264 @@
+//! Synthetic dataset generators (the "simulate the data you don't have"
+//! substitution — see DESIGN.md).
+//!
+//! Two regimes:
+//! * **exact**: small enough to build in memory with QR-orthonormalized
+//!   factors, so singular values are *known exactly* (accuracy experiments).
+//! * **streamed**: arbitrarily tall, written block-by-block without ever
+//!   holding A (throughput/scalability experiments).
+
+use crate::config::InputFormat;
+use crate::error::Result;
+use crate::io::binmat::{BinMatWriter, DType};
+use crate::io::InputSpec;
+use crate::linalg::{matmul, qr::thin_qr, Matrix};
+use crate::rng::Gaussian;
+use std::io::Write;
+
+/// Spectrum shapes for synthetic matrices.
+#[derive(Clone, Copy, Debug)]
+pub enum Spectrum {
+    /// `sigma_i = scale * decay^i` — fast decay, the randomized-SVD sweet spot.
+    Geometric { scale: f64, decay: f64 },
+    /// `sigma_i = scale / (1 + i)` — slow polynomial decay (hard case).
+    Power { scale: f64 },
+    /// First `r` values = scale, rest 0 — exact low rank.
+    LowRank { scale: f64, r: usize },
+}
+
+impl Spectrum {
+    pub fn value(&self, i: usize) -> f64 {
+        match *self {
+            Spectrum::Geometric { scale, decay } => scale * decay.powi(i as i32),
+            Spectrum::Power { scale } => scale / (1.0 + i as f64),
+            Spectrum::LowRank { scale, r } => {
+                if i < r {
+                    scale
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    pub fn values(&self, n: usize) -> Vec<f64> {
+        (0..n).map(|i| self.value(i)).collect()
+    }
+}
+
+/// Exact synthetic matrix `A = U diag(sigma) V^T + noise` with orthonormal
+/// U (m x r) and V (n x r). Returns `(A, sigma)`; `sigma` are A's exact
+/// singular values when `noise = 0`.
+pub fn gen_exact(
+    m: usize,
+    n: usize,
+    rank: usize,
+    spectrum: Spectrum,
+    noise: f64,
+    seed: u64,
+) -> Result<(Matrix, Vec<f64>)> {
+    assert!(rank <= n.min(m));
+    let g = Gaussian::new(seed);
+    let gu = Matrix::from_fn(m, rank, |i, j| g.sample(i as u64, j as u64));
+    let gv = Matrix::from_fn(n, rank, |i, j| g.sample((m + i) as u64, j as u64));
+    let (u, _) = thin_qr(&gu)?;
+    let (v, _) = thin_qr(&gv)?;
+    let sigma = spectrum.values(rank);
+    let us = u.scale_cols(&sigma)?;
+    let mut a = matmul(&us, &v.t())?;
+    if noise > 0.0 {
+        let gn = Gaussian::new(seed ^ NOISE_STREAM);
+        for i in 0..m {
+            let row = a.row_mut(i);
+            for (j, val) in row.iter_mut().enumerate() {
+                *val += noise * gn.sample(i as u64, j as u64);
+            }
+        }
+    }
+    Ok((a, sigma))
+}
+
+/// Decorrelates the noise stream from the factor streams.
+const NOISE_STREAM: u64 = 0x5EED_0000_000A_11CE;
+
+/// Stream a tall pseudo-low-rank matrix to disk without materializing it:
+/// each row block is `G_blk (r x n factor)` with `G_blk` i.i.d. Gaussian and
+/// the factor `F = diag(sigma) V^T` fixed. Singular values are approximately
+/// `sigma * sqrt(m/r)`-scaled; exact values don't matter for throughput runs.
+pub fn gen_streamed(
+    spec: &InputSpec,
+    m: usize,
+    n: usize,
+    rank: usize,
+    spectrum: Spectrum,
+    noise: f64,
+    seed: u64,
+) -> Result<()> {
+    let g = Gaussian::new(seed);
+    let gv = Matrix::from_fn(n, rank, |i, j| g.sample((1_000_000 + i) as u64, j as u64));
+    let (v, _) = thin_qr(&gv)?;
+    let sigma = spectrum.values(rank);
+    // F = diag(sigma) V^T, scaled so row norms stay O(1).
+    let scale = 1.0 / (rank as f64).sqrt();
+    let f = {
+        let vt = v.t();
+        let mut f = Matrix::zeros(rank, n);
+        for i in 0..rank {
+            for j in 0..n {
+                f.set(i, j, sigma[i] * vt.get(i, j) * scale);
+            }
+        }
+        f
+    };
+    let gn = Gaussian::new(seed ^ NOISE_STREAM);
+
+    let block = 1024usize;
+    let mut csv_writer: Option<std::io::BufWriter<std::fs::File>> = None;
+    let mut bin_writer: Option<BinMatWriter> = None;
+    match spec.format {
+        InputFormat::Csv => {
+            csv_writer = Some(std::io::BufWriter::with_capacity(
+                1 << 20,
+                std::fs::File::create(&spec.path)?,
+            ));
+        }
+        InputFormat::Bin => {
+            bin_writer = Some(BinMatWriter::create(&spec.path, n, DType::F32)?);
+        }
+    }
+
+    let mut row_out = vec![0.0f64; n];
+    for b0 in (0..m).step_by(block) {
+        let rows = block.min(m - b0);
+        for r in 0..rows {
+            let i = b0 + r;
+            // row = g_i (1 x rank) @ F (rank x n) + noise
+            row_out.fill(0.0);
+            for t in 0..rank {
+                let gi = g.sample(i as u64, (5_000_000 + t) as u64);
+                if gi == 0.0 {
+                    continue;
+                }
+                let frow = f.row(t);
+                for (o, fv) in row_out.iter_mut().zip(frow.iter()) {
+                    *o += gi * fv;
+                }
+            }
+            if noise > 0.0 {
+                for (j, o) in row_out.iter_mut().enumerate() {
+                    *o += noise * gn.sample(i as u64, j as u64);
+                }
+            }
+            if let Some(w) = csv_writer.as_mut() {
+                crate::io::csv::write_row(w, &row_out)?;
+            } else if let Some(w) = bin_writer.as_mut() {
+                w.write_row(&row_out)?;
+            }
+        }
+    }
+    if let Some(mut w) = csv_writer {
+        w.flush()?;
+    }
+    if let Some(w) = bin_writer {
+        w.finish()?;
+    }
+    Ok(())
+}
+
+/// Clustered "document vectors" for the LSA / similarity example (E4):
+/// `clusters` centers, points scattered around them; returns `(A, labels)`.
+pub fn gen_clustered(
+    m: usize,
+    n: usize,
+    clusters: usize,
+    spread: f64,
+    seed: u64,
+) -> (Matrix, Vec<usize>) {
+    let g = Gaussian::new(seed);
+    let centers = Matrix::from_fn(clusters, n, |c, j| 3.0 * g.sample(c as u64, j as u64));
+    let mut labels = Vec::with_capacity(m);
+    let a = Matrix::from_fn(m, n, |i, j| {
+        let c = i % clusters;
+        centers.get(c, j) + spread * g.sample((10_000 + i) as u64, j as u64)
+    });
+    for i in 0..m {
+        labels.push(i % clusters);
+    }
+    (a, labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::exact_svd;
+
+    #[test]
+    fn exact_generator_has_declared_spectrum() {
+        let (a, sigma) =
+            gen_exact(80, 20, 6, Spectrum::Geometric { scale: 5.0, decay: 0.5 }, 0.0, 1).unwrap();
+        let svd = exact_svd(&a).unwrap();
+        for i in 0..6 {
+            assert!(
+                (svd.sigma[i] - sigma[i]).abs() < 1e-8 * sigma[0],
+                "sigma[{i}]: {} vs {}",
+                svd.sigma[i],
+                sigma[i]
+            );
+        }
+        assert!(svd.sigma[6] < 1e-9);
+    }
+
+    #[test]
+    fn noise_perturbs_but_preserves_top() {
+        let (a, _) =
+            gen_exact(100, 16, 4, Spectrum::LowRank { scale: 10.0, r: 4 }, 0.01, 2).unwrap();
+        let svd = exact_svd(&a).unwrap();
+        assert!(svd.sigma[0] > 9.0 && svd.sigma[0] < 11.0);
+        assert!(svd.sigma[4] > 0.0 && svd.sigma[4] < 1.0);
+    }
+
+    #[test]
+    fn streamed_writes_expected_dims() {
+        let dir = std::env::temp_dir().join("tallfat_test_dataset");
+        std::fs::create_dir_all(&dir).unwrap();
+        for fmt in ["s.csv", "s.bin"] {
+            let spec = InputSpec::auto(dir.join(fmt).to_string_lossy().into_owned());
+            gen_streamed(&spec, 500, 12, 4, Spectrum::Geometric { scale: 2.0, decay: 0.7 }, 0.01, 3)
+                .unwrap();
+            assert_eq!(spec.dims().unwrap(), (500, 12));
+        }
+    }
+
+    #[test]
+    fn streamed_deterministic() {
+        let dir = std::env::temp_dir().join("tallfat_test_dataset");
+        std::fs::create_dir_all(&dir).unwrap();
+        let s1 = InputSpec::csv(dir.join("d1.csv").to_string_lossy().into_owned());
+        let s2 = InputSpec::csv(dir.join("d2.csv").to_string_lossy().into_owned());
+        let sp = Spectrum::Power { scale: 1.0 };
+        gen_streamed(&s1, 50, 8, 3, sp, 0.0, 7).unwrap();
+        gen_streamed(&s2, 50, 8, 3, sp, 0.0, 7).unwrap();
+        assert_eq!(
+            std::fs::read(&s1.path).unwrap(),
+            std::fs::read(&s2.path).unwrap()
+        );
+    }
+
+    #[test]
+    fn clustered_shapes_and_labels() {
+        let (a, labels) = gen_clustered(30, 5, 3, 0.1, 4);
+        assert_eq!(a.shape(), (30, 5));
+        assert_eq!(labels.len(), 30);
+        assert!(labels.iter().all(|&l| l < 3));
+    }
+
+    #[test]
+    fn spectrum_shapes() {
+        let g = Spectrum::Geometric { scale: 8.0, decay: 0.5 };
+        assert_eq!(g.values(3), vec![8.0, 4.0, 2.0]);
+        let p = Spectrum::Power { scale: 6.0 };
+        assert_eq!(p.value(2), 2.0);
+        let l = Spectrum::LowRank { scale: 3.0, r: 2 };
+        assert_eq!(l.values(4), vec![3.0, 3.0, 0.0, 0.0]);
+    }
+}

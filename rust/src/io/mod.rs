@@ -1,0 +1,68 @@
+//! Matrix I/O: the paper's `;`-separated CSV, a binary row-major format,
+//! the byte-range chunker (`split_process`'s seek/realign logic), sharded
+//! writers, and synthetic dataset generators.
+
+pub mod binmat;
+pub mod chunker;
+pub mod csv;
+pub mod dataset;
+pub mod writer;
+
+pub use binmat::{BinMatHeader, BinMatReader, BinMatWriter};
+pub use chunker::{chunk_byte_ranges, chunk_row_ranges, ByteRange};
+pub use csv::{parse_row, CsvRowReader};
+pub use writer::ShardSet;
+
+use crate::config::InputFormat;
+use crate::error::Result;
+use crate::linalg::Matrix;
+
+/// An input matrix file plus its format — what the splitproc engine reads.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub path: String,
+    pub format: InputFormat,
+}
+
+impl InputSpec {
+    pub fn csv(path: impl Into<String>) -> Self {
+        InputSpec { path: path.into(), format: InputFormat::Csv }
+    }
+
+    pub fn bin(path: impl Into<String>) -> Self {
+        InputSpec { path: path.into(), format: InputFormat::Bin }
+    }
+
+    pub fn auto(path: impl Into<String>) -> Self {
+        let path = path.into();
+        let format = InputFormat::from_path(&path);
+        InputSpec { path, format }
+    }
+
+    /// Count rows and columns by scanning (CSV) or reading the header (bin).
+    pub fn dims(&self) -> Result<(usize, usize)> {
+        match self.format {
+            InputFormat::Csv => csv::count_dims(&self.path),
+            InputFormat::Bin => {
+                let h = binmat::BinMatHeader::read_from(&self.path)?;
+                Ok((h.rows as usize, h.cols as usize))
+            }
+        }
+    }
+}
+
+/// Read an entire (small) matrix into memory — leader-side and test helper.
+pub fn read_matrix(spec: &InputSpec) -> Result<Matrix> {
+    match spec.format {
+        InputFormat::Csv => csv::read_matrix_csv(&spec.path),
+        InputFormat::Bin => binmat::read_matrix_bin(&spec.path),
+    }
+}
+
+/// Write a matrix in the given format.
+pub fn write_matrix(m: &Matrix, spec: &InputSpec) -> Result<()> {
+    match spec.format {
+        InputFormat::Csv => csv::write_matrix_csv(m, &spec.path),
+        InputFormat::Bin => binmat::write_matrix_bin(m, &spec.path),
+    }
+}

@@ -1,0 +1,193 @@
+//! Sharded output writers.
+//!
+//! The paper's workers write per-chunk outputs (`/tmp/Y-%d.csv`,
+//! `/tmp/C-%d.csv`) that the leader merges. [`ShardSet`] names, creates,
+//! enumerates, merges, and cleans those shard files.
+
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::binmat::{BinMatReader, BinMatWriter, DType};
+use crate::io::csv::CsvRowReader;
+use crate::linalg::Matrix;
+use std::path::{Path, PathBuf};
+
+/// A family of shard files `<dir>/<stem>-<i>.<ext>` (one per worker).
+#[derive(Clone, Debug)]
+pub struct ShardSet {
+    dir: PathBuf,
+    stem: String,
+    format: InputFormat,
+}
+
+impl ShardSet {
+    pub fn new(dir: impl AsRef<Path>, stem: &str, format: InputFormat) -> Result<Self> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(ShardSet {
+            dir: dir.as_ref().to_path_buf(),
+            stem: stem.to_string(),
+            format,
+        })
+    }
+
+    pub fn format(&self) -> InputFormat {
+        self.format
+    }
+
+    /// Path of shard `i`.
+    pub fn shard_path(&self, i: usize) -> String {
+        let ext = match self.format {
+            InputFormat::Csv => "csv",
+            InputFormat::Bin => "bin",
+        };
+        self.dir
+            .join(format!("{}-{i}.{ext}", self.stem))
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    /// Open a streaming row writer for shard `i` (binary shards need `cols`).
+    pub fn open_writer(&self, i: usize, cols: usize) -> Result<ShardWriter> {
+        match self.format {
+            InputFormat::Csv => {
+                let f = std::fs::File::create(self.shard_path(i))?;
+                Ok(ShardWriter::Csv(std::io::BufWriter::with_capacity(1 << 20, f)))
+            }
+            InputFormat::Bin => Ok(ShardWriter::Bin(BinMatWriter::create(
+                &self.shard_path(i),
+                cols,
+                DType::F64,
+            )?)),
+        }
+    }
+
+    /// Existing shard indices, sorted.
+    pub fn existing(&self, max: usize) -> Vec<usize> {
+        (0..max)
+            .filter(|&i| Path::new(&self.shard_path(i)).exists())
+            .collect()
+    }
+
+    /// Open a streaming reader over shard `i`.
+    pub fn open_reader(&self, i: usize) -> Result<ShardReader> {
+        match self.format {
+            InputFormat::Csv => Ok(ShardReader::Csv(CsvRowReader::open(&self.shard_path(i))?)),
+            InputFormat::Bin => Ok(ShardReader::Bin(BinMatReader::open(&self.shard_path(i))?)),
+        }
+    }
+
+    /// Concatenate shards `0..n` into one in-memory matrix (row order =
+    /// shard order = original row order, since chunks are contiguous).
+    pub fn merge_to_matrix(&self, n: usize) -> Result<Matrix> {
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        for i in 0..n {
+            if !Path::new(&self.shard_path(i)).exists() {
+                return Err(Error::Other(format!("missing shard {}", self.shard_path(i))));
+            }
+            let mut r = self.open_reader(i)?;
+            let mut row = Vec::new();
+            while r.next_row(&mut row)? {
+                rows.push(row.clone());
+            }
+        }
+        Matrix::from_rows(&rows)
+    }
+
+    /// Delete shards `0..n` (ignore missing).
+    pub fn cleanup(&self, n: usize) {
+        for i in 0..n {
+            let _ = std::fs::remove_file(self.shard_path(i));
+        }
+    }
+}
+
+/// Row writer over either format.
+pub enum ShardWriter {
+    Csv(std::io::BufWriter<std::fs::File>),
+    Bin(BinMatWriter),
+}
+
+impl ShardWriter {
+    pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
+        match self {
+            ShardWriter::Csv(w) => crate::io::csv::write_row(w, row),
+            ShardWriter::Bin(w) => w.write_row(row),
+        }
+    }
+
+    pub fn finish(self) -> Result<()> {
+        match self {
+            ShardWriter::Csv(mut w) => {
+                use std::io::Write;
+                w.flush()?;
+                Ok(())
+            }
+            ShardWriter::Bin(w) => {
+                w.finish()?;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Row reader over either format.
+pub enum ShardReader {
+    Csv(CsvRowReader),
+    Bin(BinMatReader),
+}
+
+impl ShardReader {
+    pub fn next_row(&mut self, row: &mut Vec<f64>) -> Result<bool> {
+        match self {
+            ShardReader::Csv(r) => r.next_row(row),
+            ShardReader::Bin(r) => r.next_row(row),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("tallfat_test_writer").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn csv_shards_roundtrip() {
+        let set = ShardSet::new(tmp_dir("csv"), "Y", InputFormat::Csv).unwrap();
+        for i in 0..3 {
+            let mut w = set.open_writer(i, 2).unwrap();
+            w.write_row(&[i as f64, 1.0]).unwrap();
+            w.write_row(&[i as f64, 2.0]).unwrap();
+            w.finish().unwrap();
+        }
+        let merged = set.merge_to_matrix(3).unwrap();
+        assert_eq!(merged.shape(), (6, 2));
+        assert_eq!(merged.get(4, 0), 2.0);
+        assert_eq!(set.existing(5), vec![0, 1, 2]);
+        set.cleanup(3);
+        assert!(set.existing(5).is_empty());
+    }
+
+    #[test]
+    fn bin_shards_roundtrip() {
+        let set = ShardSet::new(tmp_dir("bin"), "U", InputFormat::Bin).unwrap();
+        for i in 0..2 {
+            let mut w = set.open_writer(i, 3).unwrap();
+            w.write_row(&[i as f64, -1.5, 0.25]).unwrap();
+            w.finish().unwrap();
+        }
+        let merged = set.merge_to_matrix(2).unwrap();
+        assert_eq!(merged.shape(), (2, 3));
+        assert_eq!(merged.get(1, 2), 0.25);
+    }
+
+    #[test]
+    fn missing_shard_errors() {
+        let set = ShardSet::new(tmp_dir("missing"), "Z", InputFormat::Csv).unwrap();
+        assert!(set.merge_to_matrix(1).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! `A^T A` accumulation — the paper's `ATAJob` (§3.1).
+//!
+//! Two modes:
+//! * [`AtaRowJob`] — the paper-literal row-at-a-time outer-product sum
+//!   (`self.C += outer(vec, vec)`), kept for E5 and as an oracle.
+//! * [`AtaBlockJob`] — block-buffered, dispatching `X^T X` per block to a
+//!   [`Backend`] (native blocked-syrk or the XLA gram artifact).
+//!
+//! Both optionally spill their partial to a shard file at `post` time, like
+//! the paper's `/tmp/C-%d.csv` (the leader can also reduce in memory).
+
+use crate::backend::BackendRef;
+use crate::error::Result;
+use crate::io::writer::ShardSet;
+use crate::linalg::{ops::outer_accumulate, Matrix};
+use crate::splitproc::{BlockJob, RowJob};
+
+/// Paper-literal streaming job: one outer product per row.
+pub struct AtaRowJob {
+    acc: Matrix,
+    spill: Option<(ShardSet, usize)>,
+}
+
+impl AtaRowJob {
+    pub fn new(n: usize) -> Self {
+        AtaRowJob { acc: Matrix::zeros(n, n), spill: None }
+    }
+
+    /// Also write the partial to `shards[chunk]` at post time (paper §3.1).
+    pub fn with_spill(mut self, shards: ShardSet, chunk: usize) -> Self {
+        self.spill = Some((shards, chunk));
+        self
+    }
+
+    pub fn partial(&self) -> &Matrix {
+        &self.acc
+    }
+
+    pub fn into_partial(self) -> Matrix {
+        self.acc
+    }
+}
+
+impl RowJob for AtaRowJob {
+    fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+        outer_accumulate(&mut self.acc, row);
+        Ok(())
+    }
+
+    fn post(&mut self) -> Result<()> {
+        if let Some((shards, chunk)) = &self.spill {
+            let mut w = shards.open_writer(*chunk, self.acc.cols())?;
+            for i in 0..self.acc.rows() {
+                w.write_row(self.acc.row(i))?;
+            }
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Block-buffered Gram job dispatching to a backend.
+pub struct AtaBlockJob {
+    backend: BackendRef,
+    acc: Matrix,
+    blocks: u64,
+}
+
+impl AtaBlockJob {
+    pub fn new(backend: BackendRef, n: usize) -> Self {
+        AtaBlockJob { backend, acc: Matrix::zeros(n, n), blocks: 0 }
+    }
+
+    pub fn partial(&self) -> &Matrix {
+        &self.acc
+    }
+
+    pub fn into_partial(self) -> Matrix {
+        self.acc
+    }
+
+    pub fn blocks_processed(&self) -> u64 {
+        self.blocks
+    }
+}
+
+impl BlockJob for AtaBlockJob {
+    fn exec_block(&mut self, block: &Matrix) -> Result<()> {
+        let g = self.backend.gram_block(block)?;
+        self.acc.add_assign(&g)?;
+        self.blocks += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::linalg::gram;
+    use crate::rng::Gaussian;
+    use crate::splitproc::Blocked;
+    use std::sync::Arc;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn row_job_matches_dense_gram() {
+        let x = rand(57, 6, 1);
+        let mut job = AtaRowJob::new(6);
+        for i in 0..57 {
+            job.exec_row(x.row(i)).unwrap();
+        }
+        job.post().unwrap();
+        assert!(job.partial().max_abs_diff(&gram(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn block_job_matches_dense_gram() {
+        let x = rand(100, 5, 2);
+        let inner = AtaBlockJob::new(Arc::new(NativeBackend::new()), 5);
+        let mut job = Blocked::new(inner, 16, 5);
+        for i in 0..100 {
+            job.exec_row(x.row(i)).unwrap();
+        }
+        job.post().unwrap();
+        let inner = job.into_inner();
+        assert_eq!(inner.blocks_processed(), 7); // 6 full + 1 tail
+        assert!(inner.partial().max_abs_diff(&gram(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn spill_roundtrip() {
+        let dir = std::env::temp_dir().join("tallfat_test_ata");
+        let _ = std::fs::remove_dir_all(&dir);
+        let shards = ShardSet::new(&dir, "C", crate::config::InputFormat::Csv).unwrap();
+        let x = rand(20, 4, 3);
+        let mut job = AtaRowJob::new(4).with_spill(shards.clone(), 0);
+        for i in 0..20 {
+            job.exec_row(x.row(i)).unwrap();
+        }
+        job.post().unwrap();
+        let back = shards.merge_to_matrix(1).unwrap();
+        assert!(back.max_abs_diff(&gram(&x)) < 1e-9);
+    }
+}

@@ -1,0 +1,143 @@
+//! Streaming per-column statistics (mean/variance) — a centering extension:
+//! PCA-style SVD wants column-centered A, which needs one cheap pre-pass.
+//! Welford accumulators per worker, merged pairwise by the leader (Chan's
+//! parallel combination).
+
+use crate::error::{Error, Result};
+use crate::splitproc::RowJob;
+
+/// Per-column Welford accumulator set.
+#[derive(Clone, Debug)]
+pub struct ColStatsJob {
+    count: u64,
+    mean: Vec<f64>,
+    m2: Vec<f64>,
+}
+
+impl ColStatsJob {
+    pub fn new(cols: usize) -> Self {
+        ColStatsJob { count: 0, mean: vec![0.0; cols], m2: vec![0.0; cols] }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn means(&self) -> &[f64] {
+        &self.mean
+    }
+
+    /// Population variance per column.
+    pub fn variances(&self) -> Vec<f64> {
+        if self.count == 0 {
+            return vec![0.0; self.mean.len()];
+        }
+        self.m2.iter().map(|&m2| m2 / self.count as f64).collect()
+    }
+
+    /// Merge another partial into this one (Chan et al. combination).
+    pub fn merge(&mut self, other: &ColStatsJob) -> Result<()> {
+        if self.mean.len() != other.mean.len() {
+            return Err(Error::shape("colstats merge: width mismatch"));
+        }
+        if other.count == 0 {
+            return Ok(());
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return Ok(());
+        }
+        let (na, nb) = (self.count as f64, other.count as f64);
+        let n = na + nb;
+        for j in 0..self.mean.len() {
+            let delta = other.mean[j] - self.mean[j];
+            self.mean[j] += delta * nb / n;
+            self.m2[j] += other.m2[j] + delta * delta * na * nb / n;
+        }
+        self.count += other.count;
+        Ok(())
+    }
+}
+
+impl RowJob for ColStatsJob {
+    fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.mean.len() {
+            return Err(Error::shape(format!(
+                "colstats: row width {} != {}",
+                row.len(),
+                self.mean.len()
+            )));
+        }
+        self.count += 1;
+        let n = self.count as f64;
+        for (j, &x) in row.iter().enumerate() {
+            let delta = x - self.mean[j];
+            self.mean[j] += delta / n;
+            self.m2[j] += delta * (x - self.mean[j]);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(job: &mut ColStatsJob, rows: &[[f64; 2]]) {
+        for r in rows {
+            job.exec_row(r).unwrap();
+        }
+    }
+
+    #[test]
+    fn mean_and_variance() {
+        let mut j = ColStatsJob::new(2);
+        feed(&mut j, &[[1.0, 10.0], [2.0, 10.0], [3.0, 10.0]]);
+        assert!((j.means()[0] - 2.0).abs() < 1e-12);
+        assert!((j.means()[1] - 10.0).abs() < 1e-12);
+        let v = j.variances();
+        assert!((v[0] - 2.0 / 3.0).abs() < 1e-12);
+        assert!(v[1].abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let rows: Vec<[f64; 2]> = (0..50)
+            .map(|i| [(i as f64) * 0.3 - 2.0, ((i * i) % 7) as f64])
+            .collect();
+        let mut whole = ColStatsJob::new(2);
+        feed(&mut whole, &rows);
+        let mut a = ColStatsJob::new(2);
+        let mut b = ColStatsJob::new(2);
+        feed(&mut a, &rows[..20]);
+        feed(&mut b, &rows[20..]);
+        a.merge(&b).unwrap();
+        assert_eq!(a.count(), whole.count());
+        for j in 0..2 {
+            assert!((a.means()[j] - whole.means()[j]).abs() < 1e-10);
+            assert!((a.variances()[j] - whole.variances()[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn merge_with_empty() {
+        let mut a = ColStatsJob::new(2);
+        let mut b = ColStatsJob::new(2);
+        b.exec_row(&[1.0, 2.0]).unwrap();
+        a.merge(&b).unwrap();
+        assert_eq!(a.count(), 1);
+        let mut c = ColStatsJob::new(2);
+        a.merge(&c).unwrap();
+        assert_eq!(a.count(), 1);
+        c.merge(&a).unwrap();
+        assert_eq!(c.count(), 1);
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let mut j = ColStatsJob::new(2);
+        assert!(j.exec_row(&[1.0]).is_err());
+        let other = ColStatsJob::new(3);
+        assert!(j.merge(&other).is_err());
+    }
+}

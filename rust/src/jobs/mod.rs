@@ -1,0 +1,17 @@
+//! The paper's job classes (§3.1–§3.3) plus the SVD driver's pass-2/3 jobs,
+//! all expressed against the [`crate::splitproc`] engine and the
+//! [`crate::backend`] abstraction.
+
+pub mod ata;
+pub mod colstats;
+pub mod mult;
+pub mod pass2;
+pub mod randproj;
+pub mod tsqr;
+
+pub use ata::{AtaBlockJob, AtaRowJob};
+pub use colstats::ColStatsJob;
+pub use mult::MultJob;
+pub use pass2::Pass2Job;
+pub use randproj::{ProjectGramJob, RandomProjRowJob};
+pub use tsqr::{tsqr_sigma_file, TsqrJob};

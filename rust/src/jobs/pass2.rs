@@ -1,0 +1,183 @@
+//! Pass-2 job of the randomized SVD driver.
+//!
+//! Worker `i` re-reads its chunk of A while streaming its own Y shard (row
+//! alignment is free: the shard was produced from the same chunk in pass 1).
+//! Per block:
+//!
+//! ```text
+//! U0_blk = Y_blk M            (M = V_y Sigma_y^{-1}, the k x k leader result)
+//! W     += A_blk^T U0_blk     (the commutative A^T U0 partial)
+//! ```
+//!
+//! `U0_blk` rows go to the worker's U0 shard; the `W` partial reduces across
+//! workers. On the XLA backend both steps run as one fused artifact
+//! (`urecover_tmul`).
+
+use crate::backend::BackendRef;
+use crate::error::{Error, Result};
+use crate::io::writer::{ShardReader, ShardSet, ShardWriter};
+use crate::linalg::Matrix;
+use crate::splitproc::BlockJob;
+
+/// Pass-2 block job (see module docs).
+pub struct Pass2Job {
+    backend: BackendRef,
+    m: Matrix,
+    y_reader: ShardReader,
+    u0_writer: Option<ShardWriter>,
+    w_acc: Matrix,
+    y_buf: Vec<f64>,
+    rows: u64,
+}
+
+impl Pass2Job {
+    pub fn new(
+        backend: BackendRef,
+        m: Matrix,
+        y_shards: &ShardSet,
+        u0_shards: &ShardSet,
+        chunk: usize,
+        n: usize,
+    ) -> Result<Self> {
+        let k = m.rows();
+        Ok(Pass2Job {
+            backend,
+            m,
+            y_reader: y_shards.open_reader(chunk)?,
+            u0_writer: Some(u0_shards.open_writer(chunk, k)?),
+            w_acc: Matrix::zeros(n, k),
+            y_buf: Vec::with_capacity(k),
+            rows: 0,
+        })
+    }
+
+    pub fn into_w_partial(self) -> Matrix {
+        self.w_acc
+    }
+
+    pub fn w_partial(&self) -> &Matrix {
+        &self.w_acc
+    }
+
+    /// Read the next `rows` rows of this worker's Y shard as a block.
+    fn read_y_block(&mut self, rows: usize) -> Result<Matrix> {
+        let k = self.m.rows();
+        let mut y = Matrix::zeros(rows, k);
+        for i in 0..rows {
+            if !self.y_reader.next_row(&mut self.y_buf)? {
+                return Err(Error::Other(format!(
+                    "Y shard exhausted at block row {i} (A/Y misaligned)"
+                )));
+            }
+            if self.y_buf.len() != k {
+                return Err(Error::shape(format!(
+                    "Y shard row has {} cols, expected {k}",
+                    self.y_buf.len()
+                )));
+            }
+            y.row_mut(i).copy_from_slice(&self.y_buf);
+        }
+        Ok(y)
+    }
+}
+
+impl BlockJob for Pass2Job {
+    fn exec_block(&mut self, a_block: &Matrix) -> Result<()> {
+        let y_block = self.read_y_block(a_block.rows())?;
+        let u0 = self.backend.u_recover_block(&y_block, &self.m)?;
+        let w = self.backend.tmul_block(a_block, &u0)?;
+        self.w_acc.add_assign(&w)?;
+        if let Some(wr) = self.u0_writer.as_mut() {
+            for i in 0..u0.rows() {
+                wr.write_row(u0.row(i))?;
+            }
+        }
+        self.rows += a_block.rows() as u64;
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if let Some(w) = self.u0_writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::InputFormat;
+    use crate::linalg::{matmul, matmul_tn};
+    use crate::rng::Gaussian;
+    use crate::splitproc::Blocked;
+    use std::sync::Arc;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn pass2_matches_dense() {
+        let dir = std::env::temp_dir().join("tallfat_test_pass2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = rand(50, 7, 1);
+        let y = rand(50, 3, 2);
+        let m = rand(3, 3, 3);
+
+        let y_shards = ShardSet::new(&dir, "Y", InputFormat::Csv).unwrap();
+        let mut w = y_shards.open_writer(0, 3).unwrap();
+        for i in 0..50 {
+            w.write_row(y.row(i)).unwrap();
+        }
+        w.finish().unwrap();
+        let u0_shards = ShardSet::new(&dir, "U0", InputFormat::Csv).unwrap();
+
+        let job = Pass2Job::new(
+            Arc::new(NativeBackend::new()),
+            m.clone(),
+            &y_shards,
+            &u0_shards,
+            0,
+            7,
+        )
+        .unwrap();
+        let mut blocked = Blocked::new(job, 16, 7);
+        for i in 0..50 {
+            use crate::splitproc::RowJob;
+            blocked.exec_row(a.row(i)).unwrap();
+        }
+        use crate::splitproc::RowJob;
+        blocked.post().unwrap();
+
+        let u0_want = matmul(&y, &m).unwrap();
+        let w_want = matmul_tn(&a, &u0_want).unwrap();
+        let u0_got = u0_shards.merge_to_matrix(1).unwrap();
+        assert!(u0_got.max_abs_diff(&u0_want) < 1e-9);
+        assert!(blocked.into_inner().into_w_partial().max_abs_diff(&w_want) < 1e-8);
+    }
+
+    #[test]
+    fn misaligned_shard_errors() {
+        let dir = std::env::temp_dir().join("tallfat_test_pass2_mis");
+        let _ = std::fs::remove_dir_all(&dir);
+        let y_shards = ShardSet::new(&dir, "Y", InputFormat::Csv).unwrap();
+        let mut w = y_shards.open_writer(0, 2).unwrap();
+        w.write_row(&[1.0, 2.0]).unwrap(); // only ONE y row
+        w.finish().unwrap();
+        let u0_shards = ShardSet::new(&dir, "U0", InputFormat::Csv).unwrap();
+        let mut job = Pass2Job::new(
+            Arc::new(NativeBackend::new()),
+            Matrix::eye(2),
+            &y_shards,
+            &u0_shards,
+            0,
+            3,
+        )
+        .unwrap();
+        let a_block = Matrix::zeros(2, 3); // asks for TWO y rows
+        assert!(job.exec_block(&a_block).is_err());
+    }
+}

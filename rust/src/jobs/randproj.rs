@@ -1,0 +1,239 @@
+//! Random projection jobs — the paper's `RandomProjJob` (§3.3) plus the
+//! fused pass-1 job of the SVD driver.
+//!
+//! * [`RandomProjRowJob`] — paper-literal: per row, regenerate the needed Ω
+//!   rows virtually (`s += elem * omega_row`), O(k) working memory, Y row
+//!   written to the worker's shard. Optionally accumulates `Y^T Y` on the
+//!   fly (one outer product per produced row).
+//! * [`ProjectGramJob`] — block-buffered: Ω materialized once per worker
+//!   (still deterministic from the seed), blocks dispatched to the backend's
+//!   fused project+gram artifact. The throughput mode.
+
+use crate::backend::BackendRef;
+use crate::error::Result;
+use crate::io::writer::{ShardSet, ShardWriter};
+use crate::linalg::{ops::outer_accumulate, Matrix};
+use crate::rng::VirtualMatrix;
+use crate::splitproc::{BlockJob, RowJob};
+
+/// Paper-literal virtual-projection job (O(k) memory beyond the writer).
+pub struct RandomProjRowJob {
+    omega: VirtualMatrix,
+    writer: Option<ShardWriter>,
+    y_row: Vec<f64>,
+    gram: Option<Matrix>,
+    rows: u64,
+}
+
+impl RandomProjRowJob {
+    pub fn new(omega: VirtualMatrix, shards: &ShardSet, chunk: usize) -> Result<Self> {
+        let k = omega.cols();
+        Ok(RandomProjRowJob {
+            omega,
+            writer: Some(shards.open_writer(chunk, k)?),
+            y_row: vec![0.0; k],
+            gram: None,
+            rows: 0,
+        })
+    }
+
+    /// Without any output shard (pure compute, e.g. for benches).
+    pub fn sink(omega: VirtualMatrix) -> Self {
+        let k = omega.cols();
+        RandomProjRowJob { omega, writer: None, y_row: vec![0.0; k], gram: None, rows: 0 }
+    }
+
+    /// Also accumulate `Y^T Y` while projecting (fused pass 1).
+    pub fn with_gram(mut self) -> Self {
+        self.gram = Some(Matrix::zeros(self.omega.cols(), self.omega.cols()));
+        self
+    }
+
+    pub fn gram_partial(&self) -> Option<&Matrix> {
+        self.gram.as_ref()
+    }
+
+    pub fn into_gram_partial(self) -> Option<Matrix> {
+        self.gram
+    }
+
+    pub fn rows_processed(&self) -> u64 {
+        self.rows
+    }
+}
+
+impl RowJob for RandomProjRowJob {
+    fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+        self.omega.project_row(row, &mut self.y_row);
+        if let Some(g) = self.gram.as_mut() {
+            outer_accumulate(g, &self.y_row);
+        }
+        if let Some(w) = self.writer.as_mut() {
+            w.write_row(&self.y_row)?;
+        }
+        self.rows += 1;
+        Ok(())
+    }
+
+    fn post(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Block-buffered fused project+gram job (the pass-1 hot path).
+pub struct ProjectGramJob {
+    backend: BackendRef,
+    omega: Matrix,
+    writer: Option<ShardWriter>,
+    gram_acc: Matrix,
+    rows: u64,
+}
+
+impl ProjectGramJob {
+    /// `omega` is materialized per worker from the shared [`VirtualMatrix`]
+    /// (identical bits across workers by construction).
+    pub fn new(
+        backend: BackendRef,
+        omega: Matrix,
+        shards: &ShardSet,
+        chunk: usize,
+    ) -> Result<Self> {
+        let k = omega.cols();
+        Ok(ProjectGramJob {
+            backend,
+            omega,
+            writer: Some(shards.open_writer(chunk, k)?),
+            gram_acc: Matrix::zeros(k, k),
+            rows: 0,
+        })
+    }
+
+    /// Compute-only variant (benches).
+    pub fn sink(backend: BackendRef, omega: Matrix) -> Self {
+        let k = omega.cols();
+        ProjectGramJob { backend, omega, writer: None, gram_acc: Matrix::zeros(k, k), rows: 0 }
+    }
+
+    pub fn gram_partial(&self) -> &Matrix {
+        &self.gram_acc
+    }
+
+    pub fn into_gram_partial(self) -> Matrix {
+        self.gram_acc
+    }
+
+    pub fn rows_processed(&self) -> u64 {
+        self.rows
+    }
+}
+
+impl BlockJob for ProjectGramJob {
+    fn exec_block(&mut self, block: &Matrix) -> Result<()> {
+        let (y, g) = self.backend.project_gram_block(block, &self.omega)?;
+        self.gram_acc.add_assign(&g)?;
+        if let Some(w) = self.writer.as_mut() {
+            for i in 0..y.rows() {
+                w.write_row(y.row(i))?;
+            }
+        }
+        self.rows += y.rows() as u64;
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::InputFormat;
+    use crate::linalg::{gram, matmul};
+    use crate::rng::Gaussian;
+    use crate::splitproc::Blocked;
+    use std::sync::Arc;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    fn shards(name: &str) -> ShardSet {
+        let dir = std::env::temp_dir().join("tallfat_test_randproj").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        ShardSet::new(&dir, "Y", InputFormat::Csv).unwrap()
+    }
+
+    #[test]
+    fn virtual_row_job_matches_dense() {
+        let a = rand(40, 10, 1);
+        let omega = VirtualMatrix::projection(7, 10, 4);
+        let set = shards("rowjob");
+        let mut job = RandomProjRowJob::new(omega, &set, 0).unwrap().with_gram();
+        for i in 0..40 {
+            job.exec_row(a.row(i)).unwrap();
+        }
+        job.post().unwrap();
+        let y = set.merge_to_matrix(1).unwrap();
+        let want = matmul(&a, &omega.materialize()).unwrap();
+        assert!(y.max_abs_diff(&want) < 1e-9);
+        assert!(job.gram_partial().unwrap().max_abs_diff(&gram(&want)) < 1e-8);
+    }
+
+    #[test]
+    fn block_job_matches_row_job() {
+        let a = rand(70, 8, 2);
+        let vm = VirtualMatrix::projection(3, 8, 5);
+        let set_b = shards("blockjob");
+        let inner = ProjectGramJob::new(
+            Arc::new(NativeBackend::new()),
+            vm.materialize(),
+            &set_b,
+            0,
+        )
+        .unwrap();
+        let mut blocked = Blocked::new(inner, 16, 8);
+        for i in 0..70 {
+            blocked.exec_row(a.row(i)).unwrap();
+        }
+        blocked.post().unwrap();
+        let y_block = set_b.merge_to_matrix(1).unwrap();
+
+        let set_r = shards("rowjob2");
+        let mut rowjob = RandomProjRowJob::new(vm, &set_r, 0).unwrap().with_gram();
+        for i in 0..70 {
+            rowjob.exec_row(a.row(i)).unwrap();
+        }
+        rowjob.post().unwrap();
+        let y_row = set_r.merge_to_matrix(1).unwrap();
+
+        assert!(y_block.max_abs_diff(&y_row) < 1e-9);
+        let g_block = blocked.into_inner().into_gram_partial();
+        assert!(g_block.max_abs_diff(rowjob.gram_partial().unwrap()) < 1e-8);
+    }
+
+    #[test]
+    fn deterministic_across_workers() {
+        // Two "workers" projecting the same rows with the same seed produce
+        // identical output — the §2.1 guarantee.
+        let a = rand(10, 6, 5);
+        let vm = VirtualMatrix::projection(11, 6, 3);
+        let mut j1 = RandomProjRowJob::sink(vm);
+        let mut j2 = RandomProjRowJob::sink(vm);
+        for i in 0..10 {
+            j1.exec_row(a.row(i)).unwrap();
+        }
+        for i in 0..10 {
+            j2.exec_row(a.row(i)).unwrap();
+        }
+        assert_eq!(j1.y_row, j2.y_row);
+    }
+}

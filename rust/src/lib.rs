@@ -1,0 +1,51 @@
+//! # tallfat — randomized rank-k SVD for tall-and-fat matrices
+//!
+//! A production-shaped reproduction of Bayramlı, *"SVD Factorization for
+//! Tall-and-Fat Matrices on Parallel Architectures"* (cs.DC 2013).
+//!
+//! The paper reduces the SVD of a huge `m x n` matrix (m up to billions of
+//! rows) to *streaming, embarrassingly-parallel* passes over the rows plus
+//! dense math on tiny `k x k` matrices:
+//!
+//! 1. `A^T A = Σ_i A_i ⊗ A_i` — per-row outer products, summed locally per
+//!    worker and reduced once ([`jobs::ata`], [`splitproc`]).
+//! 2. `A^T A = V Σ² V^T` — a small symmetric eigenproblem recovers `V`, `Σ`
+//!    ([`linalg::eigen`]); `U = A V Σ^{-1}` is one more streaming pass.
+//! 3. For large `n` ("tall-and-**fat**"), first project `Y = A Ω` with a
+//!    Gaussian `n x k` sketch (Johnson–Lindenstrauss), optionally *virtual*:
+//!    Ω regenerated from a counter-based PRNG instead of stored ([`rng`]).
+//! 4. Work is distributed by the **Split-Process** architecture: every
+//!    worker seeks to a newline-aligned byte chunk of a shared input file
+//!    and streams its rows ([`io::chunker`], [`splitproc`]).
+//!
+//! ## Three-layer architecture
+//!
+//! The block-level compute (Gram, projection, fused project+gram, U
+//! recovery, the k×k eigensolve) is authored as JAX/Pallas kernels
+//! (`python/compile/`), AOT-lowered to HLO text once at build time, and
+//! executed from rust through the PJRT C API ([`runtime`], [`backend::xla`]).
+//! Python is never on the processing path. A pure-rust [`backend::native`]
+//! implements the same `Backend` trait for arbitrary shapes and as a
+//! cross-check oracle.
+//!
+//! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
+//! the experiment harnesses (EXPERIMENTS.md maps each to the paper).
+
+pub mod backend;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod io;
+pub mod jobs;
+pub mod linalg;
+pub mod mapreduce;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod simulator;
+pub mod splitproc;
+pub mod svd;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,232 @@
+//! Symmetric eigendecomposition by cyclic Jacobi rotations.
+//!
+//! The paper's leader-side step: `A^T A = V Σ² V^T` (or `Y^T Y` after
+//! projection) is a *small* symmetric matrix "computed on a single machine".
+//! Cyclic Jacobi is the textbook-robust choice at these sizes (n ≤ a few
+//! hundred): unconditionally convergent, eigenvectors accumulated for free.
+//!
+//! Mirrors `python/compile/model.py::jacobi_eigh` (the L2 artifact) so the
+//! native and XLA backends agree.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Options for [`jacobi_eigh`].
+#[derive(Clone, Copy, Debug)]
+pub struct EighOptions {
+    /// Maximum number of full cyclic sweeps.
+    pub max_sweeps: usize,
+    /// Stop when the off-diagonal Frobenius norm falls below
+    /// `tol * ||A||_F`.
+    pub tol: f64,
+}
+
+impl Default for EighOptions {
+    fn default() -> Self {
+        EighOptions { max_sweeps: 30, tol: 1e-14 }
+    }
+}
+
+/// Eigendecomposition of a symmetric matrix; returns `(eigvals, eigvecs)`
+/// in **descending** eigenvalue order (`eigvecs` columns match).
+pub fn jacobi_eigh(a: &Matrix, opts: EighOptions) -> Result<(Vec<f64>, Matrix)> {
+    let n = a.rows();
+    if a.cols() != n {
+        return Err(Error::shape(format!("eigh: non-square {}x{}", n, a.cols())));
+    }
+    let sym_err = a.max_abs_diff(&a.t());
+    let scale = a.max_abs().max(1e-300);
+    if sym_err > 1e-8 * scale {
+        return Err(Error::Numerical(format!(
+            "eigh: matrix not symmetric (max asym {sym_err:.3e})"
+        )));
+    }
+
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+    let fro = a.fro_norm().max(1e-300);
+
+    for _sweep in 0..opts.max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                off += m.get(p, q).powi(2);
+            }
+        }
+        if (2.0 * off).sqrt() <= opts.tol * fro {
+            break;
+        }
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq == 0.0 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // Rotation annihilating m[p][q] (Golub & Van Loan 8.4).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Rows p,q then columns p,q (two-sided, keeps symmetry).
+                for j in 0..n {
+                    let mpj = m.get(p, j);
+                    let mqj = m.get(q, j);
+                    m.set(p, j, c * mpj - s * mqj);
+                    m.set(q, j, s * mpj + c * mqj);
+                }
+                for i in 0..n {
+                    let mip = m.get(i, p);
+                    let miq = m.get(i, q);
+                    m.set(i, p, c * mip - s * miq);
+                    m.set(i, q, s * mip + c * miq);
+                }
+                for i in 0..n {
+                    let vip = v.get(i, p);
+                    let viq = v.get(i, q);
+                    v.set(i, p, c * vip - s * viq);
+                    v.set(i, q, s * vip + c * viq);
+                }
+            }
+        }
+    }
+
+    let mut eig: Vec<(f64, usize)> = (0..n).map(|i| (m.get(i, i), i)).collect();
+    eig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    let perm: Vec<usize> = eig.iter().map(|&(_, i)| i).collect();
+    let w: Vec<f64> = eig.iter().map(|&(val, _)| val).collect();
+    Ok((w, v.permute_cols(&perm)))
+}
+
+/// Convenience: descending eigendecomposition with default options.
+pub fn eigh(a: &Matrix) -> Result<(Vec<f64>, Matrix)> {
+    jacobi_eigh(a, EighOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{gram, matmul};
+    use crate::rng::Gaussian;
+
+    fn random_sym(n: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        let a = Matrix::from_fn(n, n, |i, j| g.sample(i as u64, j as u64));
+        let mut s = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s.set(i, j, (a.get(i, j) + a.get(j, i)) / 2.0);
+            }
+        }
+        s
+    }
+
+    fn check_decomposition(a: &Matrix, w: &[f64], v: &Matrix, tol: f64) {
+        let n = a.rows();
+        // A v_j = w_j v_j
+        for j in 0..n {
+            let vj = v.col(j);
+            let av = crate::linalg::ops::matvec(a, &vj).unwrap();
+            for i in 0..n {
+                assert!(
+                    (av[i] - w[j] * vj[i]).abs() < tol,
+                    "eigenpair {j}: residual {:.3e}",
+                    (av[i] - w[j] * vj[i]).abs()
+                );
+            }
+        }
+        // V orthonormal
+        let vtv = matmul(&v.t(), v).unwrap();
+        assert!(vtv.max_abs_diff(&Matrix::eye(n)) < tol);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ])
+        .unwrap();
+        let (w, v) = eigh(&a).unwrap();
+        assert_eq!(w, vec![3.0, 2.0, 1.0]);
+        check_decomposition(&a, &w, &v, 1e-12);
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        // eigenvalues of [[2,1],[1,2]] are 3 and 1
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 2.0]]).unwrap();
+        let (w, v) = eigh(&a).unwrap();
+        assert!((w[0] - 3.0).abs() < 1e-12);
+        assert!((w[1] - 1.0).abs() < 1e-12);
+        check_decomposition(&a, &w, &v, 1e-12);
+    }
+
+    #[test]
+    fn random_symmetric_various_sizes() {
+        for (n, seed) in [(2usize, 1u64), (3, 2), (8, 3), (16, 4), (32, 5), (64, 6)] {
+            let a = random_sym(n, seed);
+            let (w, v) = eigh(&a).unwrap();
+            check_decomposition(&a, &w, &v, 1e-8);
+            // descending order
+            for i in 1..n {
+                assert!(w[i - 1] >= w[i] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matrix_nonnegative_eigs() {
+        let g = Gaussian::new(77);
+        let x = Matrix::from_fn(50, 12, |i, j| g.sample(i as u64, j as u64));
+        let gm = gram(&x);
+        let (w, _) = eigh(&gm).unwrap();
+        for &wi in &w {
+            assert!(wi >= -1e-9, "negative eigenvalue {wi}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let a = random_sym(20, 9);
+        let trace: f64 = (0..20).map(|i| a.get(i, i)).sum();
+        let (w, _) = eigh(&a).unwrap();
+        assert!((w.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn clustered_eigenvalues() {
+        // Near-degenerate spectrum: build Q diag(w) Q^T with known w.
+        let g = Gaussian::new(31);
+        let raw = Matrix::from_fn(12, 12, |i, j| g.sample(i as u64, j as u64));
+        let (q, _) = crate::linalg::qr::thin_qr(&raw).unwrap();
+        let w_true = [10.0, 10.0, 9.999, 9.999, 1.0, 1.0, 1.0, 0.5, 0.1, 0.1, 0.01, 0.0];
+        let mut d = Matrix::zeros(12, 12);
+        for i in 0..12 {
+            d.set(i, i, w_true[i]);
+        }
+        let a = matmul(&matmul(&q, &d).unwrap(), &q.t()).unwrap();
+        let (w, _) = eigh(&a).unwrap();
+        for i in 0..12 {
+            assert!((w[i] - w_true[i]).abs() < 1e-7, "{} vs {}", w[i], w_true[i]);
+        }
+    }
+
+    #[test]
+    fn rejects_asymmetric() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![0.0, 1.0]]).unwrap();
+        assert!(eigh(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        assert!(eigh(&Matrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear algebra substrate (pure rust, no BLAS).
+//!
+//! Everything the coordinator needs natively: a row-major [`Matrix`], blocked
+//! products, the symmetric Jacobi eigensolver the paper's leader-side
+//! `k x k` math runs on, Householder QR (power-iteration extension), and a
+//! one-sided Jacobi exact SVD used as the accuracy baseline in the
+//! experiments (E4/E6).
+
+pub mod eigen;
+pub mod matrix;
+pub mod ops;
+pub mod qr;
+pub mod svd_exact;
+pub mod tsqr;
+
+pub use eigen::{jacobi_eigh, EighOptions};
+pub use matrix::Matrix;
+pub use ops::{gram, gram_outer, matmul, matmul_tn};
+pub use qr::thin_qr;
+pub use svd_exact::{exact_svd, truncation_error, ExactSvd};

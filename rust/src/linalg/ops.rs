@@ -1,0 +1,272 @@
+//! Blocked dense products.
+//!
+//! The native [`crate::backend`] hot paths live here: `gram` (the paper's
+//! `X^T X`), `matmul` (projection `X Ω`), and `matmul_tn` (`X^T Z`, the
+//! pass-2 accumulation). All use cache-blocked ikj loops over the row-major
+//! layout; `gram_outer` is the paper's literal per-row outer-product
+//! formulation, kept for the E5 experiment and as a cross-check.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Cache block edge for the ikj loops (elements, not bytes). 64x64 f64 tiles
+/// (32 KiB working set) sit comfortably in L1 for the row-major layout.
+const BLOCK: usize = 64;
+
+/// `C = A B` — blocked ikj matmul.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.cols() != b.rows() {
+        return Err(Error::shape(format!(
+            "matmul: ({},{}) x ({},{})",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let (m, n, p) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, p);
+    let cd = c.data_mut();
+    let ad = a.data();
+    let bd = b.data();
+    for i0 in (0..m).step_by(BLOCK) {
+        let i1 = (i0 + BLOCK).min(m);
+        for k0 in (0..n).step_by(BLOCK) {
+            let k1 = (k0 + BLOCK).min(n);
+            for i in i0..i1 {
+                let arow = &ad[i * n..(i + 1) * n];
+                let crow = &mut cd[i * p..(i + 1) * p];
+                for k in k0..k1 {
+                    let aik = arow[k];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[k * p..(k + 1) * p];
+                    for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    Ok(c)
+}
+
+/// `W = A^T B` where A and B share their row count — the pass-2 partial
+/// (`W = sum_i a_i ⊗ b_i`, commutative across rows/workers).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.rows() != b.rows() {
+        return Err(Error::shape(format!(
+            "matmul_tn: {} vs {} rows",
+            a.rows(),
+            b.rows()
+        )));
+    }
+    let (m, n, k) = (a.rows(), a.cols(), b.cols());
+    let mut w = Matrix::zeros(n, k);
+    let wd = w.data_mut();
+    for i in 0..m {
+        let arow = a.row(i);
+        let brow = b.row(i);
+        for (j, &aij) in arow.iter().enumerate() {
+            if aij == 0.0 {
+                continue;
+            }
+            let wrow = &mut wd[j * k..(j + 1) * k];
+            for (wv, bv) in wrow.iter_mut().zip(brow.iter()) {
+                *wv += aij * bv;
+            }
+        }
+    }
+    Ok(w)
+}
+
+/// `G = X^T X` — symmetric rank-m update, computing the upper triangle and
+/// mirroring. This is the native Gram hot path.
+pub fn gram(x: &Matrix) -> Matrix {
+    let (m, n) = x.shape();
+    let mut g = Matrix::zeros(n, n);
+    let gd = g.data_mut();
+    for i in 0..m {
+        let row = x.row(i);
+        for j in 0..n {
+            let xij = row[j];
+            if xij == 0.0 {
+                continue;
+            }
+            let grow = &mut gd[j * n + j..(j + 1) * n];
+            for (gv, xv) in grow.iter_mut().zip(row[j..].iter()) {
+                *gv += xij * xv;
+            }
+        }
+    }
+    // mirror upper -> lower
+    for i in 0..n {
+        for j in 0..i {
+            let v = gd[j * n + i];
+            gd[i * n + j] = v;
+        }
+    }
+    g
+}
+
+/// The paper's §2.0.2 formulation, literally: `G = Σ_i x_i ⊗ x_i` with a full
+/// (non-symmetric-aware) outer product per row. Used by E5 to measure what
+/// exploiting symmetry buys, and by tests as an independent oracle.
+pub fn gram_outer(x: &Matrix) -> Matrix {
+    let (m, n) = x.shape();
+    let mut g = Matrix::zeros(n, n);
+    let gd = g.data_mut();
+    for i in 0..m {
+        let row = x.row(i);
+        for j in 0..n {
+            let xij = row[j];
+            let grow = &mut gd[j * n..(j + 1) * n];
+            for (gv, xv) in grow.iter_mut().zip(row.iter()) {
+                *gv += xij * xv;
+            }
+        }
+    }
+    g
+}
+
+/// Accumulate one row's outer product into `g` (streaming form used by the
+/// row-at-a-time ATA job mode).
+pub fn outer_accumulate(g: &mut Matrix, row: &[f64]) {
+    let n = row.len();
+    debug_assert_eq!(g.shape(), (n, n));
+    let gd = g.data_mut();
+    for (j, &xj) in row.iter().enumerate() {
+        if xj == 0.0 {
+            continue;
+        }
+        let grow = &mut gd[j * n..(j + 1) * n];
+        for (gv, xv) in grow.iter_mut().zip(row.iter()) {
+            *gv += xj * xv;
+        }
+    }
+}
+
+/// `y += A x` for a row-major A (small helper for validation code).
+pub fn matvec(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    if a.cols() != x.len() {
+        return Err(Error::shape("matvec: dim mismatch"));
+    }
+    Ok((0..a.rows())
+        .map(|i| a.row(i).iter().zip(x.iter()).map(|(u, v)| u * v).sum())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Gaussian;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for k in 0..a.cols() {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        for (m, n, p, seed) in [(5, 7, 3, 1), (64, 64, 64, 2), (100, 33, 17, 3), (1, 1, 1, 4)] {
+            let a = random_matrix(m, n, seed);
+            let b = random_matrix(n, p, seed + 100);
+            let c = matmul(&a, &b).unwrap();
+            assert!(c.max_abs_diff(&naive_matmul(&a, &b)) < 1e-10, "{m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn matmul_rejects_mismatch() {
+        assert!(matmul(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2)).is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = random_matrix(10, 10, 5);
+        let c = matmul(&a, &Matrix::eye(10)).unwrap();
+        assert!(c.max_abs_diff(&a) < 1e-14);
+    }
+
+    #[test]
+    fn gram_matches_t_times_self() {
+        for (m, n, seed) in [(50, 8, 1), (200, 33, 2), (1, 5, 3), (128, 64, 4)] {
+            let x = random_matrix(m, n, seed);
+            let g = gram(&x);
+            let want = matmul(&x.t(), &x).unwrap();
+            assert!(g.max_abs_diff(&want) < 1e-9, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn gram_outer_matches_gram() {
+        let x = random_matrix(77, 13, 9);
+        assert!(gram(&x).max_abs_diff(&gram_outer(&x)) < 1e-9);
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_psd_diag() {
+        let x = random_matrix(40, 12, 11);
+        let g = gram(&x);
+        assert!(g.max_abs_diff(&g.t()) < 1e-12);
+        for i in 0..12 {
+            assert!(g.get(i, i) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn outer_accumulate_streaming_equals_gram() {
+        let x = random_matrix(30, 7, 13);
+        let mut g = Matrix::zeros(7, 7);
+        for i in 0..30 {
+            outer_accumulate(&mut g, x.row(i));
+        }
+        assert!(g.max_abs_diff(&gram(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_tn_matches_transpose_matmul() {
+        let a = random_matrix(90, 14, 17);
+        let b = random_matrix(90, 6, 18);
+        let w = matmul_tn(&a, &b).unwrap();
+        let want = matmul(&a.t(), &b).unwrap();
+        assert!(w.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_tn_rejects_row_mismatch() {
+        assert!(matmul_tn(&Matrix::zeros(3, 2), &Matrix::zeros(4, 2)).is_err());
+    }
+
+    #[test]
+    fn matvec_basic() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(matvec(&a, &[1.0, 1.0]).unwrap(), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn zero_rows_contribute_nothing() {
+        // The padding invariant the XLA backend relies on.
+        let x = random_matrix(64, 9, 21);
+        let padded = {
+            let z = Matrix::zeros(64, 9);
+            x.vstack(&z).unwrap()
+        };
+        assert!(gram(&x).max_abs_diff(&gram(&padded)) < 1e-12);
+    }
+}

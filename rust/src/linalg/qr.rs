@@ -1,0 +1,181 @@
+//! Thin Householder QR.
+//!
+//! Used by the power-iteration extension of the randomized SVD (re-orthonormalize
+//! the sketch between passes, Halko et al. §4.5), by dataset generation (exact
+//! low-rank factors need orthonormal columns), and by tests as an independent
+//! orthonormality oracle.
+
+use super::matrix::Matrix;
+use super::ops::matmul;
+use crate::error::{Error, Result};
+
+/// Thin QR of a tall matrix `a` (m >= n): returns `(Q, R)` with `Q` `m x n`
+/// orthonormal columns and `R` `n x n` upper triangular, `a = Q R`.
+pub fn thin_qr(a: &Matrix) -> Result<(Matrix, Matrix)> {
+    let (m, n) = a.shape();
+    if m < n {
+        return Err(Error::shape(format!("thin_qr: need m >= n, got {m}x{n}")));
+    }
+    // Householder vectors stored in-place below the diagonal of `r`.
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for j in 0..n {
+        // Norm of the j-th column below (and including) the diagonal.
+        let mut norm = 0.0f64;
+        for i in j..m {
+            norm += r.get(i, j).powi(2);
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm == 0.0 {
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r.get(j, j) >= 0.0 { -norm } else { norm };
+        for i in j..m {
+            v[i - j] = r.get(i, j);
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 > 0.0 {
+            // Apply H = I - 2 v v^T / (v^T v) to r[j.., j..].
+            for col in j..n {
+                let mut dot = 0.0;
+                for i in j..m {
+                    dot += v[i - j] * r.get(i, col);
+                }
+                let f = 2.0 * dot / vnorm2;
+                for i in j..m {
+                    let val = r.get(i, col) - f * v[i - j];
+                    r.set(i, col, val);
+                }
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build thin Q by applying the Householder reflectors to the first n
+    // columns of the identity, in reverse order.
+    let mut q = Matrix::zeros(m, n);
+    for j in 0..n {
+        q.set(j, j, 1.0);
+    }
+    for j in (0..n).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for col in 0..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q.get(i, col);
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in j..m {
+                let val = q.get(i, col) - f * v[i - j];
+                q.set(i, col, val);
+            }
+        }
+    }
+
+    // Zero out below-diagonal of R (it holds reflector debris).
+    let mut r_clean = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_clean.set(i, j, r.get(i, j));
+        }
+    }
+    Ok((q, r_clean))
+}
+
+/// Orthonormalize the columns of `a` (the Q factor only).
+pub fn orthonormalize(a: &Matrix) -> Result<Matrix> {
+    Ok(thin_qr(a)?.0)
+}
+
+/// Max deviation of `Q^T Q` from identity — orthonormality residual.
+pub fn orthonormality_residual(q: &Matrix) -> f64 {
+    let qtq = matmul(&q.t(), q).expect("square product");
+    qtq.max_abs_diff(&Matrix::eye(q.cols()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Gaussian;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        for (m, n, seed) in [(5, 3, 1), (20, 20, 2), (100, 7, 3), (64, 32, 4)] {
+            let a = random_matrix(m, n, seed);
+            let (q, r) = thin_qr(&a).unwrap();
+            let qr = matmul(&q, &r).unwrap();
+            assert!(qr.max_abs_diff(&a) < 1e-9, "{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = random_matrix(50, 10, 5);
+        let (q, _) = thin_qr(&a).unwrap();
+        assert!(orthonormality_residual(&q) < 1e-10);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let a = random_matrix(30, 8, 6);
+        let (_, r) = thin_qr(&a).unwrap();
+        for i in 0..8 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_column() {
+        // Second column = 2x first: R[1][1] should be ~0, no NaNs.
+        let mut a = Matrix::zeros(10, 2);
+        let g = Gaussian::new(7);
+        for i in 0..10 {
+            let v = g.sample(i as u64, 0);
+            a.set(i, 0, v);
+            a.set(i, 1, 2.0 * v);
+        }
+        let (q, r) = thin_qr(&a).unwrap();
+        assert!(r.get(1, 1).abs() < 1e-10);
+        assert!(!q.data().iter().any(|v| v.is_nan()));
+        assert!(matmul(&q, &r).unwrap().max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn rejects_wide_matrix() {
+        assert!(thin_qr(&Matrix::zeros(2, 5)).is_err());
+    }
+
+    #[test]
+    fn identity_fixed_point() {
+        let (q, r) = thin_qr(&Matrix::eye(6)).unwrap();
+        assert!(q.max_abs_diff(&Matrix::eye(6)) < 1e-12 || {
+            // sign flips are legal; check |Q| = I instead
+            let mut ok = true;
+            for i in 0..6 {
+                for j in 0..6 {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    ok &= (q.get(i, j).abs() - want).abs() < 1e-12;
+                }
+            }
+            ok
+        });
+        for i in 0..6 {
+            assert!((r.get(i, i).abs() - 1.0).abs() < 1e-12);
+        }
+    }
+}

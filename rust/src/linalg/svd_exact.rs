@@ -1,0 +1,214 @@
+//! Exact SVD baseline: one-sided Jacobi (Hestenes).
+//!
+//! The accuracy experiments (E4, E6) compare the paper's randomized pipeline
+//! against a dense exact SVD. One-sided Jacobi orthogonalizes the *columns*
+//! of A directly — numerically robust for the tall `m x n` (n modest)
+//! matrices the baselines run on, and needs no bidiagonalization machinery.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Result of [`exact_svd`]: `a = u * diag(sigma) * v^T`.
+pub struct ExactSvd {
+    /// `m x n`, orthonormal columns (columns with `sigma = 0` are zero).
+    pub u: Matrix,
+    /// Descending singular values, length `n`.
+    pub sigma: Vec<f64>,
+    /// `n x n`, orthonormal.
+    pub v: Matrix,
+}
+
+/// Exact SVD of a tall matrix (`m >= n`) by one-sided Jacobi.
+pub fn exact_svd(a: &Matrix) -> Result<ExactSvd> {
+    let (m, n) = a.shape();
+    if m < n {
+        return Err(Error::shape(format!("exact_svd: need m >= n, got {m}x{n}")));
+    }
+    let mut u = a.clone(); // columns rotated toward orthogonality
+    let mut v = Matrix::eye(n);
+
+    let max_sweeps = 60;
+    let tol = 1e-15;
+    let fro2: f64 = a.data().iter().map(|x| x * x).sum();
+    let threshold = tol * fro2.max(1e-300);
+
+    for _ in 0..max_sweeps {
+        let mut rotated = false;
+        for p in 0..n.saturating_sub(1) {
+            for q in (p + 1)..n {
+                // Gram entries for column pair (p, q).
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u.get(i, p);
+                    let uq = u.get(i, q);
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= threshold || apq.abs() <= 1e-15 * (app * aqq).sqrt() {
+                    continue;
+                }
+                rotated = true;
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                for i in 0..m {
+                    let up = u.get(i, p);
+                    let uq = u.get(i, q);
+                    u.set(i, p, c * up - s * uq);
+                    u.set(i, q, s * up + c * uq);
+                }
+                for i in 0..n {
+                    let vp = v.get(i, p);
+                    let vq = v.get(i, q);
+                    v.set(i, p, c * vp - s * vq);
+                    v.set(i, q, s * vp + c * vq);
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Column norms are the singular values; normalize U's columns.
+    let mut sig: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 = (0..m).map(|i| u.get(i, j).powi(2)).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    sig.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+
+    let perm: Vec<usize> = sig.iter().map(|&(_, j)| j).collect();
+    let sigma: Vec<f64> = sig.iter().map(|&(s, _)| s).collect();
+    let u = u.permute_cols(&perm);
+    let v = v.permute_cols(&perm);
+
+    let mut u_out = Matrix::zeros(m, n);
+    for j in 0..n {
+        if sigma[j] > 0.0 {
+            for i in 0..m {
+                u_out.set(i, j, u.get(i, j) / sigma[j]);
+            }
+        }
+    }
+    Ok(ExactSvd { u: u_out, sigma, v })
+}
+
+/// Rank-k truncation of an [`ExactSvd`] reconstruction error:
+/// `||A - U_k S_k V_k^T||_F`.
+pub fn truncation_error(a: &Matrix, svd: &ExactSvd, k: usize) -> f64 {
+    // tail energy: sqrt(sum_{i>=k} sigma_i^2) equals the truncation error.
+    svd.sigma[k.min(svd.sigma.len())..]
+        .iter()
+        .map(|s| s * s)
+        .sum::<f64>()
+        .sqrt()
+        .min(a.fro_norm())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::matmul;
+    use crate::linalg::qr::orthonormality_residual;
+    use crate::rng::Gaussian;
+
+    fn random_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    fn reconstruct(svd: &ExactSvd) -> Matrix {
+        let us = svd.u.scale_cols(&svd.sigma).unwrap();
+        matmul(&us, &svd.v.t()).unwrap()
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        for (m, n, seed) in [(10, 4, 1), (50, 20, 2), (30, 30, 3), (100, 5, 4)] {
+            let a = random_matrix(m, n, seed);
+            let svd = exact_svd(&a).unwrap();
+            let err = reconstruct(&svd).max_abs_diff(&a);
+            assert!(err < 1e-9, "{m}x{n}: {err}");
+        }
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let a = random_matrix(40, 12, 5);
+        let svd = exact_svd(&a).unwrap();
+        assert!(orthonormality_residual(&svd.u) < 1e-9);
+        assert!(orthonormality_residual(&svd.v) < 1e-9);
+    }
+
+    #[test]
+    fn sigma_descending_nonnegative() {
+        let a = random_matrix(60, 15, 6);
+        let svd = exact_svd(&a).unwrap();
+        for i in 0..15 {
+            assert!(svd.sigma[i] >= 0.0);
+            if i > 0 {
+                assert!(svd.sigma[i - 1] >= svd.sigma[i] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn known_singular_values_diag() {
+        // A = diag(3, 2, 1) stacked on zeros.
+        let mut a = Matrix::zeros(5, 3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 2.0);
+        a.set(2, 2, 1.0);
+        let svd = exact_svd(&a).unwrap();
+        assert!((svd.sigma[0] - 3.0).abs() < 1e-12);
+        assert!((svd.sigma[1] - 2.0).abs() < 1e-12);
+        assert!((svd.sigma[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_rank_matrix_has_zero_tail() {
+        // rank-2: outer products of two fixed vectors
+        let g = Gaussian::new(9);
+        let u1: Vec<f64> = (0..30).map(|i| g.sample(i, 0)).collect();
+        let u2: Vec<f64> = (0..30).map(|i| g.sample(i, 1)).collect();
+        let v1: Vec<f64> = (0..8).map(|j| g.sample(100 + j, 0)).collect();
+        let v2: Vec<f64> = (0..8).map(|j| g.sample(100 + j, 1)).collect();
+        let a = Matrix::from_fn(30, 8, |i, j| 5.0 * u1[i] * v1[j] + 2.0 * u2[i] * v2[j]);
+        let svd = exact_svd(&a).unwrap();
+        assert!(svd.sigma[2] < 1e-9 * svd.sigma[0]);
+    }
+
+    #[test]
+    fn matches_gram_eigenvalues() {
+        // sigma^2 must equal eigenvalues of A^T A (the paper's §2.0.1 identity).
+        let a = random_matrix(25, 6, 11);
+        let svd = exact_svd(&a).unwrap();
+        let g = crate::linalg::ops::gram(&a);
+        let (w, _) = crate::linalg::eigen::eigh(&g).unwrap();
+        for i in 0..6 {
+            assert!((svd.sigma[i].powi(2) - w[i]).abs() < 1e-8 * w[0].max(1.0));
+        }
+    }
+
+    #[test]
+    fn truncation_error_is_tail_energy() {
+        let a = random_matrix(40, 10, 13);
+        let svd = exact_svd(&a).unwrap();
+        let err = truncation_error(&a, &svd, 4);
+        let want: f64 = svd.sigma[4..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!((err - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_wide() {
+        assert!(exact_svd(&Matrix::zeros(3, 5)).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Streaming TSQR — the tall-and-skinny QR of the paper's reference [1]
+//! (Gleich, Benson, Demmel: "Direct QR factorizations for tall-and-skinny
+//! matrices in MapReduce architectures").
+//!
+//! Included as the numerically-stable alternative to the paper's Gram
+//! route: `AᵀA` squares the condition number (singular values below
+//! `sqrt(eps)·σ_max` drown in f64), while TSQR's R factor carries them at
+//! working precision. The ablation bench (E9.a) quantifies exactly where
+//! the paper's method loses digits and TSQR does not.
+//!
+//! Shape: workers stream row blocks, folding each into a running `n x n`
+//! R factor (`R ← qr([R; block]).R`); the leader stacks the per-worker Rs
+//! and QRs once more. `σ(A) = σ(R)` exactly, and `AᵀA = RᵀR` — so the same
+//! leader-side eigen/svd machinery applies.
+
+use super::{exact_svd, qr::thin_qr, Matrix};
+use crate::error::{Error, Result};
+
+/// A streaming R-factor accumulator (one per worker).
+#[derive(Debug)]
+pub struct TsqrAccumulator {
+    n: usize,
+    r: Option<Matrix>,
+}
+
+impl TsqrAccumulator {
+    pub fn new(n: usize) -> Self {
+        TsqrAccumulator { n, r: None }
+    }
+
+    /// Fold a row block into the running R: `R ← qr([R; block]).R`.
+    pub fn push_block(&mut self, block: &Matrix) -> Result<()> {
+        if block.cols() != self.n {
+            return Err(Error::shape(format!(
+                "tsqr: block has {} cols, expected {}",
+                block.cols(),
+                self.n
+            )));
+        }
+        if block.rows() == 0 {
+            return Ok(());
+        }
+        let stacked = match self.r.take() {
+            Some(r) => r.vstack(block)?,
+            None => block.clone(),
+        };
+        // QR needs rows >= cols; buffer short prefixes until we have enough.
+        if stacked.rows() < self.n {
+            self.r = Some(stacked);
+            return Ok(());
+        }
+        let (_, r) = thin_qr(&stacked)?;
+        self.r = Some(r);
+        Ok(())
+    }
+
+    /// The current R factor (`n x n`, or fewer rows if fewer than n rows
+    /// were seen).
+    pub fn r_factor(&self) -> Option<&Matrix> {
+        self.r.as_ref()
+    }
+
+    /// Merge another accumulator (the leader-side tree reduce).
+    pub fn merge(&mut self, other: TsqrAccumulator) -> Result<()> {
+        if let Some(r) = other.r {
+            self.push_block(&r)?;
+        }
+        Ok(())
+    }
+
+    /// Finish: the definitive `min(rows_seen, n) x n` R factor.
+    pub fn finish(self) -> Result<Matrix> {
+        self.r
+            .ok_or_else(|| Error::Other("tsqr over zero rows".into()))
+    }
+}
+
+/// Leader-side reduce over per-worker R factors, then σ(A) = σ(R).
+pub fn sigma_from_partials(n: usize, partials: Vec<Matrix>) -> Result<Vec<f64>> {
+    let mut acc = TsqrAccumulator::new(n);
+    for p in partials {
+        acc.push_block(&p)?;
+    }
+    let r = acc.finish()?;
+    // R may be rows < n if m < n (not tall) — exact_svd requires tall.
+    let square = if r.rows() < n {
+        let mut padded = Matrix::zeros(n, n);
+        for i in 0..r.rows() {
+            padded.row_mut(i).copy_from_slice(r.row(i));
+        }
+        padded
+    } else {
+        r
+    };
+    Ok(exact_svd(&square)?.sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gram;
+    use crate::rng::Gaussian;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn r_satisfies_rtr_equals_ata() {
+        let a = rand(200, 8, 1);
+        let mut acc = TsqrAccumulator::new(8);
+        for i in (0..200).step_by(32) {
+            acc.push_block(&a.slice_rows(i, (i + 32).min(200))).unwrap();
+        }
+        let r = acc.finish().unwrap();
+        let rtr = gram(&r);
+        let ata = gram(&a);
+        assert!(rtr.max_abs_diff(&ata) < 1e-9 * 200.0);
+    }
+
+    #[test]
+    fn sigma_matches_exact_svd() {
+        let a = rand(150, 6, 2);
+        let want = exact_svd(&a).unwrap().sigma;
+        let mut acc = TsqrAccumulator::new(6);
+        acc.push_block(&a).unwrap();
+        let got = sigma_from_partials(6, vec![acc.finish().unwrap()]).unwrap();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9 * w.max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn merge_equals_single_stream() {
+        let a = rand(120, 5, 3);
+        // one stream
+        let mut one = TsqrAccumulator::new(5);
+        one.push_block(&a).unwrap();
+        let sig_one = sigma_from_partials(5, vec![one.finish().unwrap()]).unwrap();
+        // three workers + merge
+        let parts: Vec<Matrix> = (0..3)
+            .map(|w| {
+                let mut acc = TsqrAccumulator::new(5);
+                acc.push_block(&a.slice_rows(w * 40, (w + 1) * 40)).unwrap();
+                acc.finish().unwrap()
+            })
+            .collect();
+        let sig_merged = sigma_from_partials(5, parts).unwrap();
+        for (x, y) in sig_one.iter().zip(&sig_merged) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn survives_ill_conditioning_where_gram_does_not() {
+        // sigma spans 1e8: kappa^2 = 1e16 > 1/eps_f64 — the Gram route
+        // must lose the tail; TSQR must keep ~8 digits of it.
+        let n = 6;
+        let m = 300;
+        let (a, _) = crate::io::dataset::gen_exact(
+            m,
+            n,
+            n,
+            crate::io::dataset::Spectrum::Geometric { scale: 1.0, decay: 0.025 },
+            0.0,
+            7,
+        )
+        .unwrap();
+        // ground truth from the dense Jacobi SVD (the generator's declared
+        // sigma has its own f64 construction floor at this conditioning)
+        let smin = exact_svd(&a).unwrap().sigma[n - 1]; // ~1e-8
+        // TSQR route
+        let mut acc = TsqrAccumulator::new(n);
+        acc.push_block(&a).unwrap();
+        let tsqr_sigma = sigma_from_partials(n, vec![acc.finish().unwrap()]).unwrap();
+        let tsqr_rel = (tsqr_sigma[n - 1] - smin).abs() / smin;
+        // Gram route
+        let g = gram(&a);
+        let (w, _) = crate::linalg::eigen::eigh(&g).unwrap();
+        let gram_smin = w[n - 1].max(0.0).sqrt();
+        let gram_rel = (gram_smin - smin).abs() / smin;
+        assert!(tsqr_rel < 1e-4, "tsqr lost sigma_min: rel {tsqr_rel}");
+        assert!(
+            gram_rel > 1e-2,
+            "gram route unexpectedly kept sigma_min (rel {gram_rel}) — test matrix not hard enough"
+        );
+    }
+
+    #[test]
+    fn fewer_rows_than_cols_buffered() {
+        let a = rand(3, 5, 4);
+        let mut acc = TsqrAccumulator::new(5);
+        acc.push_block(&a).unwrap();
+        let sig = sigma_from_partials(5, vec![acc.finish().unwrap()]).unwrap();
+        let want = {
+            // pad to square for the oracle too
+            let mut p = Matrix::zeros(5, 5);
+            for i in 0..3 {
+                p.row_mut(i).copy_from_slice(a.row(i));
+            }
+            exact_svd(&p).unwrap().sigma
+        };
+        for (g, w) in sig.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zero_rows_is_error() {
+        let acc = TsqrAccumulator::new(4);
+        assert!(acc.finish().is_err());
+    }
+
+    #[test]
+    fn wrong_width_rejected() {
+        let mut acc = TsqrAccumulator::new(4);
+        assert!(acc.push_block(&rand(10, 5, 5)).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! `tallfat` leader binary — parses the command line and hands off to the
+//! coordinator. See `tallfat help` (or [`tallfat::coordinator::USAGE`]).
+
+use tallfat::coordinator;
+use tallfat::util::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprint!("{}", coordinator::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = coordinator::run_cli(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,151 @@
+//! `A^T A` expressed as a Map-Reduce job (E2's baseline).
+//!
+//! The paper's point (§3, Figure 2 vs Figure 3) is that a commutative sum
+//! does not *need* a shuffle, yet a faithful Map-Reduce execution pays for
+//! one. Here the same Gram computation runs through [`MapReduceEngine`]:
+//! every row's outer product is emitted as `(i, j) -> A[r,i]*A[r,j]` pairs,
+//! spilled to disk, sorted, grouped, and sum-reduced — so E2 can report the
+//! exact bytes materialized where Split-Process materializes nothing.
+//!
+//! Two emission modes quantify how much a trivial optimization recovers:
+//! * [`AtaMrMode::Full`] — all `n^2` pairs per row (the naive expression).
+//! * [`AtaMrMode::Upper`] — only the upper triangle (`n(n+1)/2` per row),
+//!   mirrored after the reduce. Still Θ(m·n²) shuffle traffic — the
+//!   architectural gap to Split-Process's O(workers · n²) does not close.
+
+use super::engine::{MapReduceEngine, MrStats};
+use crate::error::{Error, Result};
+use crate::io::InputSpec;
+use crate::linalg::Matrix;
+use std::path::PathBuf;
+
+/// Pair-emission policy for the MR Gram job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AtaMrMode {
+    /// Emit every `(i, j)` — the textbook formulation.
+    Full,
+    /// Emit `i <= j` only and mirror after reducing.
+    Upper,
+}
+
+impl AtaMrMode {
+    /// Pairs emitted per input row for an `n`-column matrix.
+    pub fn pairs_per_row(self, n: usize) -> u64 {
+        match self {
+            AtaMrMode::Full => (n * n) as u64,
+            AtaMrMode::Upper => (n * (n + 1) / 2) as u64,
+        }
+    }
+}
+
+/// Compute `A^T A` through the Map-Reduce engine.
+///
+/// `mappers` parallel map tasks (chunked exactly like Split-Process, so the
+/// comparison isolates the shuffle), `partitions` reducers. Returns the
+/// `n x n` Gram matrix and the shuffle accounting.
+pub fn ata_mapreduce(
+    input: &InputSpec,
+    work_dir: impl Into<PathBuf>,
+    mappers: usize,
+    partitions: usize,
+    mode: AtaMrMode,
+) -> Result<(Matrix, MrStats)> {
+    let (_, n) = input.dims()?;
+    let engine = MapReduceEngine::new(work_dir, partitions)?;
+    let (pairs, stats) = engine.run(input, mappers, move |row: &[f64], em| {
+        if row.len() != n {
+            return Err(Error::shape(format!(
+                "ata_mapreduce: row has {} cols, expected {n}",
+                row.len()
+            )));
+        }
+        for i in 0..n {
+            let lo = match mode {
+                AtaMrMode::Full => 0,
+                AtaMrMode::Upper => i,
+            };
+            for j in lo..n {
+                em.emit((i as u32, j as u32), row[i] * row[j])?;
+            }
+        }
+        Ok(())
+    })?;
+
+    let mut g = Matrix::zeros(n, n);
+    for ((i, j), v) in pairs {
+        let (i, j) = (i as usize, j as usize);
+        if i >= n || j >= n {
+            return Err(Error::shape(format!(
+                "ata_mapreduce: reduced key ({i},{j}) outside {n}x{n}"
+            )));
+        }
+        g.set(i, j, v);
+        if mode == AtaMrMode::Upper && i != j {
+            g.set(j, i, v);
+        }
+    }
+    Ok((g, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobs::AtaRowJob;
+    use crate::splitproc;
+
+    fn fixture(name: &str, m: usize, n: usize) -> (InputSpec, Matrix) {
+        let dir = std::env::temp_dir().join("tallfat_test_ata_mr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        let a = Matrix::from_fn(m, n, |i, j| ((i * 7 + j * 3) % 11) as f64 - 5.0);
+        crate::io::csv::write_matrix_csv(&a, &path).unwrap();
+        (InputSpec::csv(path), a)
+    }
+
+    fn splitproc_gram(input: &InputSpec, n: usize) -> Matrix {
+        let results = splitproc::run(input, 3, |_| Ok(AtaRowJob::new(n))).unwrap();
+        splitproc::reduce_partials(results.into_iter().map(|r| r.job.into_partial()).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn full_mode_matches_splitproc() {
+        let (spec, _) = fixture("full.csv", 23, 5);
+        let want = splitproc_gram(&spec, 5);
+        let dir = std::env::temp_dir().join("tallfat_test_ata_mr").join("w_full");
+        let (got, stats) = ata_mapreduce(&spec, dir, 3, 2, AtaMrMode::Full).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9);
+        assert_eq!(stats.pairs_emitted, 23 * 25);
+        assert_eq!(stats.shuffle_bytes, 23 * 25 * 16);
+    }
+
+    #[test]
+    fn upper_mode_matches_and_halves_shuffle() {
+        let (spec, _) = fixture("upper.csv", 17, 6);
+        let want = splitproc_gram(&spec, 6);
+        let dir = std::env::temp_dir().join("tallfat_test_ata_mr").join("w_upper");
+        let (got, stats) = ata_mapreduce(&spec, dir, 2, 2, AtaMrMode::Upper).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9);
+        assert_eq!(stats.pairs_emitted, 17 * 21); // 6*7/2 per row
+        assert!(stats.pairs_emitted < AtaMrMode::Full.pairs_per_row(6) * 17);
+    }
+
+    #[test]
+    fn reduce_groups_equal_distinct_keys() {
+        let (spec, _) = fixture("groups.csv", 9, 4);
+        let dir = std::env::temp_dir().join("tallfat_test_ata_mr").join("w_groups");
+        let (_, stats) = ata_mapreduce(&spec, dir, 2, 3, AtaMrMode::Full).unwrap();
+        assert_eq!(stats.reduce_groups, 16);
+    }
+
+    #[test]
+    fn single_mapper_single_reducer() {
+        let (spec, _) = fixture("single.csv", 8, 3);
+        let want = splitproc_gram(&spec, 3);
+        let dir = std::env::temp_dir().join("tallfat_test_ata_mr").join("w_single");
+        let (got, stats) = ata_mapreduce(&spec, dir, 1, 1, AtaMrMode::Full).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9);
+        assert_eq!(stats.mappers, 1);
+        assert_eq!(stats.reducers, 1);
+    }
+}

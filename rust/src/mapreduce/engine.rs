@@ -1,0 +1,251 @@
+//! The MR engine: map → (hash-partitioned spill files) → sort/group → reduce.
+
+use crate::error::{Error, Result};
+use crate::io::InputSpec;
+use crate::splitproc::{self, RowJob};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::PathBuf;
+
+/// A `(key, value)` record: matrix coordinate + scalar.
+pub type KV = ((u32, u32), f64);
+
+const REC_BYTES: u64 = 16; // 4 + 4 + 8
+
+/// Mapper context: emit pairs, they get hash-partitioned and spilled.
+pub struct Emitter {
+    writers: Vec<BufWriter<File>>,
+    emitted: u64,
+}
+
+impl Emitter {
+    fn new(dir: &PathBuf, mapper: usize, partitions: usize) -> Result<Self> {
+        let writers = (0..partitions)
+            .map(|p| {
+                let path = dir.join(format!("map-{mapper}-part-{p}.bin"));
+                Ok(BufWriter::with_capacity(1 << 18, File::create(path)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Emitter { writers, emitted: 0 })
+    }
+
+    /// Emit one pair (the mapper's output channel).
+    pub fn emit(&mut self, key: (u32, u32), value: f64) -> Result<()> {
+        let p = (key.0 as usize ^ (key.1 as usize).wrapping_mul(0x9E37)) % self.writers.len();
+        let w = &mut self.writers[p];
+        w.write_all(&key.0.to_le_bytes())?;
+        w.write_all(&key.1.to_le_bytes())?;
+        w.write_all(&value.to_le_bytes())?;
+        self.emitted += 1;
+        Ok(())
+    }
+
+    fn finish(mut self) -> Result<u64> {
+        for w in &mut self.writers {
+            w.flush()?;
+        }
+        Ok(self.emitted)
+    }
+}
+
+/// Shuffle/scale accounting for one MR run (E2's measurable).
+#[derive(Debug, Clone, Default)]
+pub struct MrStats {
+    pub mappers: usize,
+    pub reducers: usize,
+    pub pairs_emitted: u64,
+    /// Bytes written to (and re-read from) the shuffle spill.
+    pub shuffle_bytes: u64,
+    pub reduce_groups: u64,
+}
+
+/// A minimal Map-Reduce engine over matrix-row inputs.
+pub struct MapReduceEngine {
+    dir: PathBuf,
+    partitions: usize,
+}
+
+impl MapReduceEngine {
+    pub fn new(work_dir: impl Into<PathBuf>, partitions: usize) -> Result<Self> {
+        let dir = work_dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(MapReduceEngine { dir, partitions })
+    }
+
+    /// Run: `mapper(row, emitter)` over the input with `mappers` parallel
+    /// map tasks (reusing the Split-Process chunker — the comparison is then
+    /// purely about the shuffle), followed by sum-reduce per key.
+    /// Returns the reduced pairs (sorted by key) and the run stats.
+    pub fn run<M>(
+        &self,
+        input: &InputSpec,
+        mappers: usize,
+        mapper: M,
+    ) -> Result<(Vec<KV>, MrStats)>
+    where
+        M: Fn(&[f64], &mut Emitter) -> Result<()> + Sync + Send,
+    {
+        // ---- map phase -----------------------------------------------------
+        struct MapJob<'m, M> {
+            emitter: Option<Emitter>,
+            mapper: &'m M,
+        }
+
+        impl<M> RowJob for MapJob<'_, M>
+        where
+            M: Fn(&[f64], &mut Emitter) -> Result<()> + Sync + Send,
+        {
+            fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+                let em = self
+                    .emitter
+                    .as_mut()
+                    .ok_or_else(|| Error::Other("emitter consumed".into()))?;
+                (self.mapper)(row, em)
+            }
+        }
+
+        let dir = &self.dir;
+        let partitions = self.partitions;
+        let mapper_ref = &mapper;
+        let results = splitproc::run(input, mappers, |chunk| {
+            Ok(MapJob {
+                emitter: Some(Emitter::new(dir, chunk.index, partitions)?),
+                mapper: mapper_ref,
+            })
+        })?;
+        let actual_mappers = results.len();
+        let mut pairs_emitted = 0u64;
+        for mut r in results {
+            pairs_emitted += r.job.emitter.take().unwrap().finish()?;
+        }
+        let shuffle_bytes = pairs_emitted * REC_BYTES;
+
+        // ---- shuffle + reduce phase ----------------------------------------
+        let reduce_outputs: Vec<Result<Vec<KV>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..partitions)
+                .map(|p| {
+                    let dir = dir.clone();
+                    scope.spawn(move || -> Result<Vec<KV>> {
+                        let mut records: Vec<KV> = Vec::new();
+                        for m in 0..actual_mappers {
+                            let path = dir.join(format!("map-{m}-part-{p}.bin"));
+                            let mut r = BufReader::new(File::open(&path)?);
+                            let mut buf = [0u8; REC_BYTES as usize];
+                            loop {
+                                match r.read_exact(&mut buf) {
+                                    Ok(()) => {}
+                                    Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                                    Err(e) => return Err(e.into()),
+                                }
+                                let i = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+                                let j = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+                                let v = f64::from_le_bytes(buf[8..16].try_into().unwrap());
+                                records.push(((i, j), v));
+                            }
+                        }
+                        // the "sort" of sort-shuffle-reduce
+                        records.sort_by_key(|(k, _)| *k);
+                        // group + sum-reduce
+                        let mut out: Vec<KV> = Vec::new();
+                        for (k, v) in records {
+                            match out.last_mut() {
+                                Some((lk, lv)) if *lk == k => *lv += v,
+                                _ => out.push((k, v)),
+                            }
+                        }
+                        Ok(out)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(Error::Other("reducer panicked".into())))
+                })
+                .collect()
+        });
+
+        let mut all: Vec<KV> = Vec::new();
+        for r in reduce_outputs {
+            all.extend(r?);
+        }
+        all.sort_by_key(|(k, _)| *k);
+        let stats = MrStats {
+            mappers: actual_mappers,
+            reducers: partitions,
+            pairs_emitted,
+            shuffle_bytes,
+            reduce_groups: all.len() as u64,
+        };
+
+        // cleanup spills
+        for m in 0..actual_mappers {
+            for p in 0..partitions {
+                let _ = std::fs::remove_file(dir.join(format!("map-{m}-part-{p}.bin")));
+            }
+        }
+        Ok((all, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn input(name: &str, m: &Matrix) -> InputSpec {
+        let dir = std::env::temp_dir().join("tallfat_test_mr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        crate::io::csv::write_matrix_csv(m, &path).unwrap();
+        InputSpec::csv(path)
+    }
+
+    #[test]
+    fn word_count_style_sum() {
+        // mapper: emit (col, 1.0) per nonzero — counts nonzeros per column.
+        let m = Matrix::from_rows(&[
+            vec![1.0, 0.0, 2.0],
+            vec![0.0, 3.0, 4.0],
+            vec![5.0, 0.0, 0.0],
+        ])
+        .unwrap();
+        let spec = input("wc.csv", &m);
+        let engine = MapReduceEngine::new(
+            std::env::temp_dir().join("tallfat_test_mr").join("wc_work"),
+            3,
+        )
+        .unwrap();
+        let (pairs, stats) = engine
+            .run(&spec, 2, |row, em| {
+                for (j, &v) in row.iter().enumerate() {
+                    if v != 0.0 {
+                        em.emit((0, j as u32), 1.0)?;
+                    }
+                }
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(pairs, vec![((0, 0), 2.0), ((0, 1), 1.0), ((0, 2), 2.0)]);
+        assert_eq!(stats.pairs_emitted, 5);
+        assert_eq!(stats.shuffle_bytes, 5 * 16);
+    }
+
+    #[test]
+    fn keys_aggregate_across_mappers() {
+        let m = Matrix::from_fn(20, 1, |_i, _j| 1.0);
+        let spec = input("agg.csv", &m);
+        let engine = MapReduceEngine::new(
+            std::env::temp_dir().join("tallfat_test_mr").join("agg_work"),
+            2,
+        )
+        .unwrap();
+        let (pairs, stats) = engine
+            .run(&spec, 4, |_row, em| em.emit((7, 7), 1.0))
+            .unwrap();
+        assert_eq!(pairs, vec![((7, 7), 20.0)]);
+        assert!(stats.mappers >= 1);
+        assert_eq!(stats.reduce_groups, 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Map-Reduce baseline (paper §3, Figure 2).
+//!
+//! The paper motivates Split-Process by contrast with Map-Reduce: the
+//! commutative-sum reductions here never need a shuffle, but a faithful MR
+//! execution pays for one anyway. This module is a minimal but honest MR
+//! engine — mappers spill hash-partitioned `(key, value)` pairs to disk,
+//! reducers read+sort+group their partition — instrumented to report the
+//! *bytes materialized* so E2 can quantify the overhead the paper hand-waves.
+//!
+//! Keys are `(u32, u32)` (matrix coordinates) and values `f64`, which covers
+//! the linear-algebra jobs in the paper.
+
+pub mod ata_mr;
+pub mod engine;
+
+pub use ata_mr::{ata_mapreduce, AtaMrMode};
+pub use engine::{MapReduceEngine, MrStats};

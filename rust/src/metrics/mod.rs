@@ -1,0 +1,194 @@
+//! Phase timing, throughput counters, and report tables.
+//!
+//! Every coordinator run and every bench harness reports through these so
+//! EXPERIMENTS.md rows can be regenerated verbatim.
+
+use std::time::{Duration, Instant};
+
+/// A single timed phase with an item count (rows, blocks, requests...).
+#[derive(Clone, Debug)]
+pub struct Phase {
+    pub name: String,
+    pub elapsed: Duration,
+    pub items: u64,
+    pub bytes: u64,
+}
+
+/// Collects phases and prints an aligned report table.
+#[derive(Default, Debug)]
+pub struct PhaseReport {
+    phases: Vec<Phase>,
+}
+
+impl PhaseReport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure as a named phase.
+    pub fn time<T>(&mut self, name: &str, items: u64, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.push(name, t0.elapsed(), items, 0);
+        out
+    }
+
+    pub fn push(&mut self, name: &str, elapsed: Duration, items: u64, bytes: u64) {
+        self.phases.push(Phase { name: name.to_string(), elapsed, items, bytes });
+    }
+
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+
+    pub fn total(&self) -> Duration {
+        self.phases.iter().map(|p| p.elapsed).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Phase> {
+        self.phases.iter().find(|p| p.name == name)
+    }
+
+    /// Render the aligned table used in logs and EXPERIMENTS.md.
+    pub fn render(&self) -> String {
+        use crate::util::humanize::{fmt_duration, fmt_rate};
+        let mut out = String::new();
+        let total = self.total().as_secs_f64().max(1e-12);
+        out.push_str(&format!(
+            "{:<28} {:>10} {:>7} {:>12} {:>12}\n",
+            "phase", "time", "%", "items", "rate"
+        ));
+        for p in &self.phases {
+            let pct = 100.0 * p.elapsed.as_secs_f64() / total;
+            out.push_str(&format!(
+                "{:<28} {:>10} {:>6.1}% {:>12} {:>12}\n",
+                p.name,
+                fmt_duration(p.elapsed),
+                pct,
+                p.items,
+                if p.items > 0 { fmt_rate(p.items, p.elapsed) } else { "-".into() },
+            ));
+        }
+        out.push_str(&format!("{:<28} {:>10}\n", "TOTAL", fmt_duration(self.total())));
+        out
+    }
+}
+
+/// Simple monotonic stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Online mean/min/max aggregator for repeated measurements.
+#[derive(Default, Clone, Debug)]
+pub struct Stats {
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Stats { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.n += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Measure a closure `reps` times and return per-rep stats (seconds).
+pub fn bench_timings(reps: usize, mut f: impl FnMut()) -> Stats {
+    let mut st = Stats::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        st.add(t0.elapsed().as_secs_f64());
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_report_accumulates() {
+        let mut r = PhaseReport::new();
+        r.push("a", Duration::from_millis(10), 100, 0);
+        r.push("b", Duration::from_millis(30), 0, 0);
+        assert_eq!(r.total(), Duration::from_millis(40));
+        assert_eq!(r.get("a").unwrap().items, 100);
+        let table = r.render();
+        assert!(table.contains("a"));
+        assert!(table.contains("TOTAL"));
+    }
+
+    #[test]
+    fn time_measures_and_returns() {
+        let mut r = PhaseReport::new();
+        let v = r.time("work", 1, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(r.phases().len(), 1);
+    }
+
+    #[test]
+    fn stats_aggregation() {
+        let mut s = Stats::new();
+        for v in [2.0, 4.0, 6.0] {
+            s.add(v);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 6.0);
+    }
+
+    #[test]
+    fn bench_timings_runs_reps() {
+        let mut calls = 0;
+        let st = bench_timings(5, || calls += 1);
+        assert_eq!(calls, 5);
+        assert_eq!(st.count(), 5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Deterministic, counter-based pseudo-randomness — the "virtual random B"
+//! substrate (paper §2.1).
+//!
+//! The paper regenerates rows of the Gaussian projection matrix Ω by
+//! re-seeding `numpy.random.seed(0)` per row instead of storing Ω. We keep
+//! the idea (same bits every time, O(1) memory) but use a *counter-based*
+//! generator: element `Ω[i,j]` is a pure function of `(seed, i, j)`. That
+//! strictly dominates the sequential re-seeding trick — any worker can
+//! materialize any block of Ω in any order, with no shared state.
+
+pub mod gaussian;
+pub mod splitmix;
+pub mod virtual_matrix;
+
+pub use gaussian::Gaussian;
+pub use splitmix::{mix3, splitmix64};
+pub use virtual_matrix::VirtualMatrix;

@@ -1,0 +1,80 @@
+//! SplitMix64 — the mixing core of the counter-based generator.
+//!
+//! Fast (a handful of arithmetic ops), passes BigCrush as a stream, and —
+//! crucial here — is a *stateless* bijective mixer: feeding it structured
+//! counters `(seed, i, j)` yields independent-looking streams, which is all
+//! the Johnson–Lindenstrauss sketch needs.
+
+/// One SplitMix64 mixing step (Steele, Lea & Flood 2014).
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Mix three words into one — the `(seed, i, j)` counter hash.
+#[inline]
+pub fn mix3(seed: u64, i: u64, j: u64) -> u64 {
+    // Chain the mixer; each stage is bijective in its input so distinct
+    // counters cannot collide "for free".
+    splitmix64(splitmix64(splitmix64(seed) ^ i).wrapping_add(j))
+}
+
+/// Map a u64 to the open unit interval (0, 1).
+#[inline]
+pub fn to_unit_open(bits: u64) -> f64 {
+    // Use the top 53 bits; add 0.5 ulp offset to exclude exact 0.
+    (((bits >> 11) as f64) + 0.5) * (1.0 / 9007199254740992.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(splitmix64(42), splitmix64(42));
+        assert_eq!(mix3(1, 2, 3), mix3(1, 2, 3));
+    }
+
+    #[test]
+    fn distinct_counters_differ() {
+        assert_ne!(mix3(0, 0, 0), mix3(0, 0, 1));
+        assert_ne!(mix3(0, 0, 0), mix3(0, 1, 0));
+        assert_ne!(mix3(0, 0, 0), mix3(1, 0, 0));
+        // (i, j) vs (j, i) must not be symmetric
+        assert_ne!(mix3(7, 3, 5), mix3(7, 5, 3));
+    }
+
+    #[test]
+    fn unit_open_range() {
+        for x in [0u64, 1, u64::MAX, 0xDEADBEEF, 1 << 63] {
+            let u = to_unit_open(splitmix64(x));
+            assert!(u > 0.0 && u < 1.0, "{u}");
+        }
+    }
+
+    #[test]
+    fn rough_uniformity() {
+        // 10k samples into 10 bins: each bin within 3x sqrt expectations.
+        let mut bins = [0usize; 10];
+        for i in 0..10_000u64 {
+            let u = to_unit_open(mix3(99, i, 0));
+            bins[(u * 10.0) as usize] += 1;
+        }
+        for &b in &bins {
+            assert!((b as i64 - 1000).abs() < 150, "bin count {b}");
+        }
+    }
+
+    #[test]
+    fn avalanche_single_bit() {
+        // Flipping one input bit should flip ~half the output bits.
+        let a = splitmix64(0x12345678);
+        let b = splitmix64(0x12345679);
+        let flipped = (a ^ b).count_ones();
+        assert!(flipped > 16 && flipped < 48, "{flipped}");
+    }
+}

@@ -1,0 +1,156 @@
+//! The virtual random projection matrix Ω (paper §2.1).
+//!
+//! Never materialized in full: any element, row, or block is regenerated on
+//! demand from `(seed, i, j)`. The JL-standard `1/sqrt(k)` column scaling is
+//! baked in so `||Y row|| ≈ ||A row||` in expectation.
+
+use super::gaussian::Gaussian;
+use crate::linalg::Matrix;
+
+/// A virtual `rows x cols` Gaussian matrix with entries
+/// `scale * N(0,1)[seed; i, j]`.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualMatrix {
+    gaussian: Gaussian,
+    rows: usize,
+    cols: usize,
+    scale: f64,
+}
+
+impl VirtualMatrix {
+    /// A JL projection sketch `n x k` with the standard `1/sqrt(k)` scaling.
+    pub fn projection(seed: u64, n: usize, k: usize) -> Self {
+        VirtualMatrix {
+            gaussian: Gaussian::new(seed),
+            rows: n,
+            cols: k,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// Unscaled variant (scale = 1).
+    pub fn standard(seed: u64, rows: usize, cols: usize) -> Self {
+        VirtualMatrix { gaussian: Gaussian::new(seed), rows, cols, scale: 1.0 }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn scale(&self) -> f64 {
+        self.scale
+    }
+
+    /// Element `(i, j)` — pure function, any order, any worker.
+    #[inline]
+    pub fn element(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.gaussian.sample(i as u64, j as u64) * self.scale
+    }
+
+    /// Materialize rows `[row0, row0 + nrows)` as a dense block.
+    pub fn materialize_rows(&self, row0: usize, nrows: usize) -> Matrix {
+        let nrows = nrows.min(self.rows - row0);
+        let mut m = Matrix::zeros(nrows, self.cols);
+        self.gaussian
+            .fill_block(m.data_mut(), row0 as u64, nrows, self.cols, self.scale);
+        m
+    }
+
+    /// Materialize the whole matrix (for the E3 "materialized" baseline and
+    /// for handing Ω to the fixed-shape XLA artifacts).
+    pub fn materialize(&self) -> Matrix {
+        self.materialize_rows(0, self.rows)
+    }
+
+    /// Project one row of A: `y = a_row^T Ω` without materializing Ω.
+    /// This is the paper's §2.1 inner loop (`s += elem * random_row`).
+    pub fn project_row(&self, a_row: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(a_row.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        out.fill(0.0);
+        for (i, &a) in a_row.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            for (j, o) in out.iter_mut().enumerate() {
+                *o += a * self.element(i, j);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_materialization_consistent_with_elements() {
+        let v = VirtualMatrix::projection(5, 100, 8);
+        let blk = v.materialize_rows(40, 10);
+        for i in 0..10 {
+            for j in 0..8 {
+                assert_eq!(blk.get(i, j), v.element(40 + i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_blocks_agree() {
+        // Workers materializing overlapping row ranges see identical bits —
+        // the whole point of virtual-B.
+        let v = VirtualMatrix::projection(9, 64, 4);
+        let b1 = v.materialize_rows(0, 48);
+        let b2 = v.materialize_rows(32, 32);
+        for i in 0..16 {
+            for j in 0..4 {
+                assert_eq!(b1.get(32 + i, j), b2.get(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn project_row_matches_materialized() {
+        let v = VirtualMatrix::projection(3, 32, 6);
+        let omega = v.materialize();
+        let a_row: Vec<f64> = (0..32).map(|i| (i as f64) * 0.1 - 1.0).collect();
+        let mut out = vec![0.0; 6];
+        v.project_row(&a_row, &mut out);
+        for j in 0..6 {
+            let want: f64 = (0..32).map(|i| a_row[i] * omega.get(i, j)).sum();
+            assert!((out[j] - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tail_block_clamped() {
+        let v = VirtualMatrix::projection(1, 10, 3);
+        let blk = v.materialize_rows(8, 5);
+        assert_eq!(blk.shape(), (2, 3));
+    }
+
+    #[test]
+    fn jl_scaling() {
+        let v = VirtualMatrix::projection(0, 100, 25);
+        assert!((v.scale() - 0.2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn norm_preservation_in_expectation() {
+        // JL property: ||x Omega|| ~ ||x|| for the 1/sqrt(k) scaling.
+        let n = 200;
+        let k = 64;
+        let v = VirtualMatrix::projection(13, n, k);
+        let x: Vec<f64> = (0..n).map(|i| if i % 3 == 0 { 1.0 } else { -0.5 }).collect();
+        let xnorm: f64 = x.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let mut y = vec![0.0; k];
+        v.project_row(&x, &mut y);
+        let ynorm: f64 = y.iter().map(|a| a * a).sum::<f64>().sqrt();
+        let ratio = ynorm / xnorm;
+        assert!((ratio - 1.0).abs() < 0.35, "ratio {ratio}");
+    }
+}

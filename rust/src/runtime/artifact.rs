@@ -1,0 +1,216 @@
+//! Artifact manifest parsing and shape lookup.
+//!
+//! `artifacts/manifest.txt` is emitted by `python/compile/aot.py`: one
+//! `key=value`-tokenized line per artifact, e.g.
+//!
+//! ```text
+//! program=fused name=fused_b256_n256_k32 file=fused_b256_n256_k32.hlo.txt \
+//!     dtype=float32 block=256 n=256 k=32 ins=256x256,256x32 outs=256x32,32x32
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One artifact's metadata.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub program: String,
+    pub name: String,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+    pub dtype: String,
+    pub block: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Input shapes, row-major dims.
+    pub ins: Vec<Vec<usize>>,
+    /// Output shapes.
+    pub outs: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest with shape-based lookup.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    by_program: HashMap<String, Vec<ArtifactMeta>>,
+    count: usize,
+}
+
+fn parse_shapes(s: &str) -> Result<Vec<Vec<usize>>> {
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|shape| {
+            shape
+                .split('x')
+                .map(|d| {
+                    d.parse::<usize>()
+                        .map_err(|_| Error::parse(format!("bad shape dim `{d}`")))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; artifact files are resolved relative to `dir`.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest::default();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut kv: HashMap<&str, &str> = HashMap::new();
+            for tok in line.split_whitespace() {
+                let (k, v) = tok.split_once('=').ok_or_else(|| {
+                    Error::parse(format!("manifest line {}: bad token `{tok}`", lineno + 1))
+                })?;
+                kv.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k)
+                    .copied()
+                    .ok_or_else(|| Error::parse(format!("manifest line {}: missing `{k}`", lineno + 1)))
+            };
+            let parse_usize = |k: &str| -> Result<usize> {
+                get(k)?
+                    .parse()
+                    .map_err(|_| Error::parse(format!("manifest line {}: bad `{k}`", lineno + 1)))
+            };
+            let meta = ArtifactMeta {
+                program: get("program")?.to_string(),
+                name: get("name")?.to_string(),
+                path: dir.join(get("file")?),
+                dtype: get("dtype")?.to_string(),
+                block: parse_usize("block")?,
+                n: parse_usize("n")?,
+                k: parse_usize("k")?,
+                ins: parse_shapes(get("ins")?)?,
+                outs: parse_shapes(get("outs")?)?,
+            };
+            m.by_program.entry(meta.program.clone()).or_default().push(meta);
+            m.count += 1;
+        }
+        // Deterministic lookup: smallest block first.
+        for v in m.by_program.values_mut() {
+            v.sort_by_key(|a| (a.block, a.n, a.k));
+        }
+        Ok(m)
+    }
+
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// All artifacts of a program.
+    pub fn program(&self, program: &str) -> &[ArtifactMeta] {
+        self.by_program.get(program).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.by_program
+            .values()
+            .flatten()
+            .find(|a| a.name == name)
+    }
+
+    /// Find the artifact for `program` with exact `(n, k)` and the smallest
+    /// `block >= rows` (rows are zero-padded up to the block).
+    pub fn lookup(&self, program: &str, rows: usize, n: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.program(program)
+            .iter()
+            .filter(|a| a.n == n && a.k == k && a.block >= rows)
+            .min_by_key(|a| a.block)
+    }
+
+    /// Find the eigh artifact for exactly `k`.
+    pub fn lookup_eigh(&self, k: usize) -> Option<&ArtifactMeta> {
+        self.program("eigh").iter().find(|a| a.k == k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+program=gram name=gram_b256_n64 file=gram_b256_n64.hlo.txt dtype=float32 block=256 n=64 k=0 ins=256x64 outs=64x64
+program=gram name=gram_b512_n64 file=gram_b512_n64.hlo.txt dtype=float32 block=512 n=64 k=0 ins=512x64 outs=64x64
+program=fused name=fused_b256_n64_k16 file=f.hlo.txt dtype=float32 block=256 n=64 k=16 ins=256x64,64x16 outs=256x16,16x16
+program=eigh name=eigh_k16 file=eigh_k16.hlo.txt dtype=float32 block=0 n=0 k=16 ins=16x16 outs=16,16x16
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, Path::new("/art")).unwrap()
+    }
+
+    #[test]
+    fn parses_all_lines() {
+        let m = manifest();
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.program("gram").len(), 2);
+    }
+
+    #[test]
+    fn shapes_parsed() {
+        let m = manifest();
+        let f = m.by_name("fused_b256_n64_k16").unwrap();
+        assert_eq!(f.ins, vec![vec![256, 64], vec![64, 16]]);
+        assert_eq!(f.outs, vec![vec![256, 16], vec![16, 16]]);
+        let e = m.by_name("eigh_k16").unwrap();
+        assert_eq!(e.outs, vec![vec![16], vec![16, 16]]);
+    }
+
+    #[test]
+    fn lookup_prefers_smallest_sufficient_block() {
+        let m = manifest();
+        assert_eq!(m.lookup("gram", 100, 64, 0).unwrap().block, 256);
+        assert_eq!(m.lookup("gram", 256, 64, 0).unwrap().block, 256);
+        assert_eq!(m.lookup("gram", 300, 64, 0).unwrap().block, 512);
+        assert!(m.lookup("gram", 600, 64, 0).is_none());
+        assert!(m.lookup("gram", 10, 65, 0).is_none());
+    }
+
+    #[test]
+    fn lookup_eigh_exact_k() {
+        let m = manifest();
+        assert!(m.lookup_eigh(16).is_some());
+        assert!(m.lookup_eigh(32).is_none());
+    }
+
+    #[test]
+    fn paths_resolved_against_dir() {
+        let m = manifest();
+        assert_eq!(
+            m.by_name("gram_b256_n64").unwrap().path,
+            Path::new("/art/gram_b256_n64.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("program=x name", Path::new(".")).is_err());
+        assert!(Manifest::parse("name=x file=y", Path::new(".")).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! The PJRT engine: compile-on-first-use cache over HLO-text artifacts.
+//!
+//! NOT thread-safe (`PjRtClient` is `Rc`-based); use through
+//! [`crate::runtime::service::XlaService`] from multi-threaded code.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::{ArtifactMeta, Manifest};
+use crate::util::Logger;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+static LOG: Logger = Logger::new("runtime");
+
+/// Owns the PJRT client, the manifest, and the executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        LOG.info(&format!(
+            "pjrt client up: platform={} artifacts={} dir={}",
+            client.platform_name(),
+            manifest.len(),
+            dir.display()
+        ));
+        Ok(Engine { client, manifest, dir, executables: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let meta = self
+                .manifest
+                .by_name(name)
+                .ok_or_else(|| Error::Artifact(format!("no artifact named `{name}`")))?
+                .clone();
+            let proto = xla::HloModuleProto::from_text_file(&meta.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let t0 = std::time::Instant::now();
+            let exe = self.client.compile(&comp)?;
+            LOG.debug(&format!(
+                "compiled {name} in {:.1}ms",
+                t0.elapsed().as_secs_f64() * 1e3
+            ));
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute artifact `name` with f32 inputs shaped per `shapes`.
+    /// Returns the flattened f32 payload of each output.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .by_name(name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named `{name}`")))?;
+        if inputs.len() != meta.ins.len() {
+            return Err(Error::shape(format!(
+                "{name}: {} inputs given, expected {}",
+                inputs.len(),
+                meta.ins.len()
+            )));
+        }
+        for (idx, ((data, shape), want)) in inputs.iter().zip(meta.ins.iter()).enumerate() {
+            let numel: usize = shape.iter().product();
+            if shape[..] != want[..] || data.len() != numel {
+                return Err(Error::shape(format!(
+                    "{name}: input {idx} is {shape:?} ({} elems), artifact wants {want:?}",
+                    data.len()
+                )));
+            }
+        }
+        let n_outs = meta.outs.len();
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims).map_err(Error::from)
+            })
+            .collect::<Result<_>>()?;
+
+        let exe = self.executable(name)?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
+        let parts = result.to_tuple()?;
+        if parts.len() != n_outs {
+            return Err(Error::shape(format!(
+                "{name}: got {} outputs, manifest says {n_outs}",
+                parts.len()
+            )));
+        }
+        parts
+            .iter()
+            .map(|lit| lit.to_vec::<f32>().map_err(Error::from))
+            .collect()
+    }
+
+    /// Look up artifact metadata for a program/shape (see [`Manifest::lookup`]).
+    pub fn lookup(&self, program: &str, rows: usize, n: usize, k: usize) -> Option<ArtifactMeta> {
+        self.manifest.lookup(program, rows, n, k).cloned()
+    }
+
+    pub fn artifacts_dir(&self) -> &PathBuf {
+        &self.dir
+    }
+}

@@ -1,0 +1,79 @@
+//! Matrix ⇄ `xla::Literal` conversion (the f32 FFI boundary).
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+
+/// Convert a matrix to an `f32` literal of shape `[rows, cols]`, zero-padding
+/// rows up to `pad_rows` (the artifact's fixed block size).
+pub fn matrix_to_literal_f32(m: &Matrix, pad_rows: usize) -> Result<xla::Literal> {
+    let (rows, cols) = m.shape();
+    if pad_rows < rows {
+        return Err(Error::shape(format!(
+            "pad_rows {pad_rows} < matrix rows {rows}"
+        )));
+    }
+    let mut data = vec![0.0f32; pad_rows * cols];
+    for (dst, src) in data.chunks_exact_mut(cols).zip((0..rows).map(|i| m.row(i))) {
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d = *s as f32;
+        }
+    }
+    let lit = xla::Literal::vec1(&data);
+    Ok(lit.reshape(&[pad_rows as i64, cols as i64])?)
+}
+
+/// Convert a literal's `f32` payload back to a Matrix with the given shape,
+/// keeping only the first `keep_rows` rows (drop the zero padding).
+pub fn literal_to_matrix_f32(lit: &xla::Literal, rows: usize, cols: usize, keep_rows: usize) -> Result<Matrix> {
+    let data: Vec<f32> = lit.to_vec()?;
+    if data.len() != rows * cols {
+        return Err(Error::shape(format!(
+            "literal has {} elements, expected {}x{}",
+            data.len(),
+            rows,
+            cols
+        )));
+    }
+    Matrix::from_f32(keep_rows.min(rows), cols, &data[..keep_rows.min(rows) * cols])
+}
+
+/// Flatten a matrix to f32 with row padding (service-thread message payload).
+pub fn matrix_to_f32_padded(m: &Matrix, pad_rows: usize) -> Vec<f32> {
+    let (rows, cols) = m.shape();
+    debug_assert!(pad_rows >= rows);
+    let mut data = vec![0.0f32; pad_rows * cols];
+    for i in 0..rows {
+        let src = m.row(i);
+        let dst = &mut data[i * cols..(i + 1) * cols];
+        for (d, s) in dst.iter_mut().zip(src.iter()) {
+            *d = *s as f32;
+        }
+    }
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_and_flatten() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        let v = matrix_to_f32_padded(&m, 4);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.5, -2.0, 0.25]]).unwrap();
+        let lit = matrix_to_literal_f32(&m, 2).unwrap();
+        let back = literal_to_matrix_f32(&lit, 2, 3, 1).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn pad_too_small_rejected() {
+        let m = Matrix::zeros(4, 2);
+        assert!(matrix_to_literal_f32(&m, 2).is_err());
+    }
+}

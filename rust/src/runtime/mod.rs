@@ -1,0 +1,20 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Layering (see /opt/xla-example and DESIGN.md): `python/compile/aot.py`
+//! lowers the JAX/Pallas programs to HLO **text** once at build time;
+//! [`engine::Engine`] compiles them on the PJRT CPU client at startup
+//! (lazily, cached) and executes them with `f32` literals.
+//!
+//! `PjRtClient` is `Rc`-based (not `Send`), so the engine lives on a single
+//! dedicated **service thread** ([`service::XlaService`]) that Split-Process
+//! workers call through a cloneable, thread-safe [`service::XlaHandle`] —
+//! operationally this models one shared accelerator serving all workers.
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+pub mod service;
+
+pub use artifact::{ArtifactMeta, Manifest};
+pub use engine::Engine;
+pub use service::{XlaHandle, XlaService};

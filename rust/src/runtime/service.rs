@@ -1,0 +1,139 @@
+//! The XLA service thread: thread-safe access to the (single-threaded) PJRT
+//! engine.
+//!
+//! `PjRtClient` is `Rc`-based, so the [`Engine`] cannot cross threads.
+//! [`XlaService::start`] moves it onto a dedicated thread; workers hold a
+//! cloneable [`XlaHandle`] and make synchronous call-response RPCs over
+//! channels. Operationally this models the realistic deployment where all
+//! Split-Process workers on a node share one accelerator; requests are
+//! serialized in arrival order.
+
+use crate::error::{Error, Result};
+use crate::runtime::artifact::Manifest;
+use crate::runtime::engine::Engine;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A request: execute `name` with flattened f32 inputs (+shapes), reply with
+/// flattened f32 outputs.
+struct ExecRequest {
+    name: String,
+    inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    reply: mpsc::SyncSender<Result<Vec<Vec<f32>>>>,
+}
+
+enum Message {
+    Exec(ExecRequest),
+    Shutdown,
+}
+
+/// Cloneable, `Send + Sync` handle to the XLA service thread.
+#[derive(Clone)]
+pub struct XlaHandle {
+    tx: Arc<Mutex<mpsc::Sender<Message>>>,
+    manifest: Arc<Manifest>,
+    platform: String,
+}
+
+impl XlaHandle {
+    /// Execute artifact `name`. Blocks until the service replies.
+    pub fn execute(
+        &self,
+        name: &str,
+        inputs: Vec<(Vec<f32>, Vec<usize>)>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        {
+            let tx = self.tx.lock().map_err(|_| Error::Other("xla service poisoned".into()))?;
+            tx.send(Message::Exec(ExecRequest {
+                name: name.to_string(),
+                inputs,
+                reply: reply_tx,
+            }))
+            .map_err(|_| Error::Other("xla service thread gone".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Other("xla service dropped reply".into()))?
+    }
+
+    /// The artifact manifest (shape lookups happen caller-side, no RPC).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> &str {
+        &self.platform
+    }
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct XlaService {
+    handle: XlaHandle,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::Sender<Message>,
+}
+
+impl XlaService {
+    /// Boot an engine over `artifacts_dir` on a fresh service thread.
+    pub fn start(artifacts_dir: &str) -> Result<Self> {
+        // Build the engine on the service thread (PjRtClient must be born
+        // there); ferry construction errors back through a channel.
+        let (boot_tx, boot_rx) = mpsc::sync_channel::<Result<(Manifest, String)>>(1);
+        let (tx, rx) = mpsc::channel::<Message>();
+        let dir = artifacts_dir.to_string();
+        let join = std::thread::Builder::new()
+            .name("xla-service".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(&dir) {
+                    Ok(e) => {
+                        let _ = boot_tx.send(Ok((e.manifest().clone(), e.platform_name())));
+                        e
+                    }
+                    Err(err) => {
+                        let _ = boot_tx.send(Err(err));
+                        return;
+                    }
+                };
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        Message::Shutdown => break,
+                        Message::Exec(req) => {
+                            let ins: Vec<(&[f32], &[usize])> = req
+                                .inputs
+                                .iter()
+                                .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                                .collect();
+                            let out = engine.execute_f32(&req.name, &ins);
+                            let _ = req.reply.send(out);
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Other(format!("cannot spawn xla service: {e}")))?;
+
+        let (manifest, platform) = boot_rx
+            .recv()
+            .map_err(|_| Error::Other("xla service died during boot".into()))??;
+        let handle = XlaHandle {
+            tx: Arc::new(Mutex::new(tx.clone())),
+            manifest: Arc::new(manifest),
+            platform,
+        };
+        Ok(XlaService { handle, join: Some(join), tx })
+    }
+
+    pub fn handle(&self) -> XlaHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! Discrete-event cluster cost simulator (E1's scalability substrate).
+//!
+//! The paper's Split-Process architecture runs on a commodity cluster with
+//! a shared file server; this box has one CPU core, so wallclock cannot
+//! exhibit multi-node speedup. Per DESIGN.md's substitution rule we
+//! simulate the cluster: the *algorithmic* partitioning (chunk geometry,
+//! per-worker row counts, reduce tree) comes from the real
+//! [`crate::splitproc`] planner, and only the cluster-specific physics —
+//! per-node CPU rate, local-disk vs shared-NIC bandwidth, reduce latency —
+//! are modeled. CPU rate is **calibrated from a measured single-worker
+//! run** ([`calibrate_rows_per_sec`]), so simulated wallclocks are anchored
+//! to this machine's real throughput.
+//!
+//! The IO model is fluid-flow processor sharing: all workers reading from
+//! the shared file server split its bandwidth equally among the currently
+//! active readers; the event loop advances from completion to completion
+//! recomputing shares (max-min fair). This is the standard fluid
+//! approximation for TCP-fair links and captures the paper's one
+//! cluster-level effect: the file server saturating as workers are added.
+
+pub mod model;
+
+pub use model::{
+    calibrate_rows_per_sec, simulate_mapreduce, simulate_split_process, ClusterParams, SimReport,
+    WorkerTrace,
+};

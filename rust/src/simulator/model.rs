@@ -1,0 +1,376 @@
+//! The cluster cost model and its fluid-flow event loop.
+
+use crate::error::{Error, Result};
+use crate::io::InputSpec;
+use crate::splitproc;
+use std::time::Duration;
+
+/// Physical parameters of the simulated cluster.
+///
+/// Defaults approximate the paper's 2013-era setup: commodity nodes on
+/// gigabit Ethernet against one shared file server, spinning local disks.
+#[derive(Clone, Debug)]
+pub struct ClusterParams {
+    /// Worker nodes available (workers beyond this share nodes round-robin).
+    pub nodes: usize,
+    /// Rows/sec one worker core sustains on the job's compute. Calibrate
+    /// with [`calibrate_rows_per_sec`] — this anchors the simulation to a
+    /// real measured run.
+    pub cpu_rows_per_sec: f64,
+    /// Shared file-server NIC bandwidth, bytes/sec (split fairly among
+    /// active remote readers).
+    pub fileserver_bw: f64,
+    /// Local-disk streaming bandwidth, bytes/sec (used when
+    /// `local_copies`, i.e. the paper's "copies of that file on each
+    /// machine" deployment).
+    pub disk_bw: f64,
+    /// Each machine has a local copy of the input (paper §1 offers both
+    /// deployments). `false` = everyone streams from the file server.
+    pub local_copies: bool,
+    /// Fixed per-message latency of one reduce hop, seconds.
+    pub reduce_latency: f64,
+    /// Bandwidth for shipping partials during the reduce, bytes/sec.
+    pub reduce_bw: f64,
+    /// Deterministic per-worker speed jitter amplitude (0.05 = ±5%),
+    /// modeling stragglers. 0 disables.
+    pub jitter: f64,
+}
+
+impl Default for ClusterParams {
+    fn default() -> Self {
+        ClusterParams {
+            nodes: 16,
+            cpu_rows_per_sec: 500_000.0,
+            fileserver_bw: 117e6, // ~1 GbE payload
+            disk_bw: 120e6,       // 2013 SATA streaming
+            local_copies: false,
+            reduce_latency: 0.5e-3,
+            reduce_bw: 117e6,
+            jitter: 0.0,
+        }
+    }
+}
+
+/// One simulated worker's outcome.
+#[derive(Clone, Debug)]
+pub struct WorkerTrace {
+    pub worker: usize,
+    pub rows: u64,
+    pub bytes: u64,
+    /// Time spent constrained by IO (fluid share of the link/disk).
+    pub io_time: f64,
+    /// Time spent constrained by CPU.
+    pub cpu_time: f64,
+    /// Wallclock finish time of this worker's chunk.
+    pub finish: f64,
+}
+
+/// Outcome of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub workers: usize,
+    /// Max worker finish time (the map/stream phase makespan).
+    pub stream_makespan: f64,
+    /// Tree-reduce time appended after the slowest worker.
+    pub reduce_time: f64,
+    /// Total simulated wallclock.
+    pub makespan: f64,
+    /// Speedup vs the same job simulated with 1 worker (filled by callers
+    /// that sweep; 0.0 when not computed).
+    pub speedup_vs_1: f64,
+    pub traces: Vec<WorkerTrace>,
+}
+
+impl SimReport {
+    /// Aggregate rows/sec over the whole simulated run.
+    pub fn rows_per_sec(&self) -> f64 {
+        let rows: u64 = self.traces.iter().map(|t| t.rows).sum();
+        rows as f64 / self.makespan.max(1e-12)
+    }
+}
+
+/// Calibrate the CPU term from a measured single-worker run: `rows`
+/// processed in `elapsed` with IO known to be warm (page cache), so the
+/// measurement is compute-dominated.
+pub fn calibrate_rows_per_sec(rows: u64, elapsed: Duration) -> f64 {
+    rows as f64 / elapsed.as_secs_f64().max(1e-12)
+}
+
+/// Deterministic straggler multiplier for worker `w` (mean 1.0).
+fn jitter_mult(params: &ClusterParams, w: usize) -> f64 {
+    if params.jitter == 0.0 {
+        return 1.0;
+    }
+    // splitmix-derived uniform in [-1, 1).
+    let u = crate::rng::splitmix64(0x51A6_6E55 ^ w as u64) as f64 / (u64::MAX as f64);
+    1.0 + params.jitter * (2.0 * u - 1.0)
+}
+
+/// Fluid-flow simulation of `workers` readers with per-worker demands.
+///
+/// Each worker `w` must move `bytes[w]` through its IO path *and* spend
+/// `cpu[w]` seconds of compute; the two overlap (streaming pipeline), so a
+/// worker finishes at `max(io_finish, cpu_finish)`. Remote readers share
+/// `fileserver_bw` max-min fairly; local readers get `disk_bw` each. The
+/// event loop advances between IO completions, recomputing fair shares.
+fn fluid_stream(params: &ClusterParams, bytes: &[f64], cpu: &[f64]) -> Vec<WorkerTrace> {
+    let w = bytes.len();
+    let mut remaining: Vec<f64> = bytes.to_vec();
+    let mut io_done: Vec<f64> = vec![0.0; w];
+    let mut active: Vec<bool> = bytes.iter().map(|&b| b > 0.0).collect();
+    let mut now = 0.0f64;
+
+    // Drain IO demands under fair sharing.
+    while active.iter().any(|&a| a) {
+        let n_active = active.iter().filter(|&&a| a).count();
+        // Per-reader rate under the current active set.
+        let rate = if params.local_copies {
+            params.disk_bw
+        } else {
+            params.fileserver_bw / n_active as f64
+        };
+        // Next completion.
+        let (next_i, dt) = active
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a)
+            .map(|(i, _)| (i, remaining[i] / rate))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("active set non-empty");
+        now += dt;
+        for i in 0..w {
+            if active[i] {
+                remaining[i] -= rate * dt;
+            }
+        }
+        active[next_i] = false;
+        remaining[next_i] = 0.0;
+        io_done[next_i] = now;
+        // Clean up float dust: anything ~0 is done at the same instant.
+        for i in 0..w {
+            if active[i] && remaining[i] <= 1e-9 {
+                active[i] = false;
+                remaining[i] = 0.0;
+                io_done[i] = now;
+            }
+        }
+    }
+
+    (0..w)
+        .map(|i| {
+            let finish = io_done[i].max(cpu[i]);
+            WorkerTrace {
+                worker: i,
+                rows: 0,
+                bytes: bytes[i] as u64,
+                io_time: io_done[i],
+                cpu_time: cpu[i],
+                finish,
+            }
+        })
+        .collect()
+}
+
+/// Tree-reduce cost: `ceil(log2(workers))` levels, each one hop of fixed
+/// latency plus shipping one partial of `partial_bytes`.
+fn tree_reduce_time(params: &ClusterParams, workers: usize, partial_bytes: u64) -> f64 {
+    if workers <= 1 {
+        return 0.0;
+    }
+    let levels = (workers as f64).log2().ceil();
+    levels * (params.reduce_latency + partial_bytes as f64 / params.reduce_bw)
+}
+
+/// Simulate a Split-Process run over a real input file.
+///
+/// Chunk geometry (per-worker rows and bytes) is taken from the *actual*
+/// [`splitproc::plan_chunks`] plan over `input` — the simulator only prices
+/// it. `partial_bytes` is the per-worker accumulator size shipped in the
+/// reduce (`n²·8` for ATA, `k²·8` for the sketch Gram, ...).
+pub fn simulate_split_process(
+    params: &ClusterParams,
+    input: &InputSpec,
+    workers: usize,
+    partial_bytes: u64,
+) -> Result<SimReport> {
+    if workers == 0 {
+        return Err(Error::Config("simulate: workers must be >= 1".into()));
+    }
+    let chunks = splitproc::plan_chunks(input, workers)?;
+    let (m, _n) = input.dims()?;
+    let file_bytes = std::fs::metadata(&input.path)?.len() as f64;
+
+    // Per-chunk byte and row demands from the real plan.
+    let mut bytes = Vec::with_capacity(chunks.len());
+    let mut rows = Vec::with_capacity(chunks.len());
+    for c in &chunks {
+        if let Some(r) = c.byte_range {
+            let b = (r.end - r.start) as f64;
+            bytes.push(b);
+            rows.push((m as f64 * b / file_bytes).round() as u64);
+        } else if let Some((r0, r1)) = c.row_range {
+            rows.push(r1 - r0);
+            bytes.push(file_bytes * (r1 - r0) as f64 / m as f64);
+        } else {
+            return Err(Error::Other("chunk with no range".into()));
+        }
+    }
+
+    let cpu: Vec<f64> = rows
+        .iter()
+        .enumerate()
+        .map(|(w, &r)| r as f64 / (params.cpu_rows_per_sec * jitter_mult(params, w)))
+        .collect();
+
+    let mut traces = fluid_stream(params, &bytes, &cpu);
+    for (t, &r) in traces.iter_mut().zip(rows.iter()) {
+        t.rows = r;
+    }
+    let stream_makespan = traces.iter().map(|t| t.finish).fold(0.0, f64::max);
+    let reduce_time = tree_reduce_time(params, traces.len(), partial_bytes);
+    Ok(SimReport {
+        workers: traces.len(),
+        stream_makespan,
+        reduce_time,
+        makespan: stream_makespan + reduce_time,
+        speedup_vs_1: 0.0,
+        traces,
+    })
+}
+
+/// Simulate the Map-Reduce execution of the same job: the map/stream phase
+/// is identical, but every mapper additionally *writes* `shuffle_bytes /
+/// mappers` to the file server and every reducer reads its partition back —
+/// 2× the shuffle volume through the shared link, plus a sort charged at
+/// CPU rate per pair.
+pub fn simulate_mapreduce(
+    params: &ClusterParams,
+    input: &InputSpec,
+    mappers: usize,
+    shuffle_bytes: u64,
+    pairs: u64,
+) -> Result<SimReport> {
+    let base = simulate_split_process(params, input, mappers, 0)?;
+    // Shuffle: write + read through the shared link (even with local input
+    // copies, the shuffle crosses the network — that is its defining cost).
+    let shuffle_io = 2.0 * shuffle_bytes as f64 / params.fileserver_bw;
+    // Sort/group: pairs * a few comparisons, priced against the row rate as
+    // "pair-rows" — deliberately generous to MR (no constant inflation).
+    let sort_cpu = pairs as f64 / (params.cpu_rows_per_sec * 8.0).max(1.0);
+    let reduce_time = shuffle_io + sort_cpu + tree_reduce_time(params, mappers, 0);
+    Ok(SimReport {
+        workers: base.workers,
+        stream_makespan: base.stream_makespan,
+        reduce_time,
+        makespan: base.stream_makespan + reduce_time,
+        speedup_vs_1: 0.0,
+        traces: base.traces,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn fixture(name: &str, m: usize, n: usize) -> InputSpec {
+        let dir = std::env::temp_dir().join("tallfat_test_sim");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        let a = Matrix::from_fn(m, n, |i, j| (i + j) as f64);
+        crate::io::csv::write_matrix_csv(&a, &path).unwrap();
+        InputSpec::csv(path)
+    }
+
+    fn params() -> ClusterParams {
+        ClusterParams {
+            cpu_rows_per_sec: 10_000.0,
+            ..ClusterParams::default()
+        }
+    }
+
+    #[test]
+    fn one_worker_time_is_rows_over_rate() {
+        let spec = fixture("one.csv", 1000, 8);
+        let r = simulate_split_process(&params(), &spec, 1, 64 * 8).unwrap();
+        // CPU-bound at these sizes: ~1000 rows / 10k rows/s = 0.1 s.
+        assert!((r.stream_makespan - 0.1).abs() < 0.02, "{}", r.stream_makespan);
+        assert_eq!(r.reduce_time, 0.0); // single worker: no reduce hops
+    }
+
+    #[test]
+    fn speedup_is_near_linear_when_cpu_bound() {
+        let spec = fixture("lin.csv", 4000, 8);
+        let p = params();
+        let t1 = simulate_split_process(&p, &spec, 1, 0).unwrap().makespan;
+        let t4 = simulate_split_process(&p, &spec, 4, 0).unwrap().makespan;
+        let speedup = t1 / t4;
+        assert!(speedup > 3.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn fileserver_saturation_caps_speedup() {
+        let spec = fixture("sat.csv", 4000, 8);
+        // Very fast CPUs + slow shared link: adding workers can't help.
+        let p = ClusterParams {
+            cpu_rows_per_sec: 1e9,
+            fileserver_bw: 1e4,
+            ..ClusterParams::default()
+        };
+        let t1 = simulate_split_process(&p, &spec, 1, 0).unwrap().stream_makespan;
+        let t8 = simulate_split_process(&p, &spec, 8, 0).unwrap().stream_makespan;
+        // Link is the bottleneck: total bytes / bw either way.
+        assert!((t8 / t1 - 1.0).abs() < 0.05, "t1={t1} t8={t8}");
+    }
+
+    #[test]
+    fn local_copies_remove_the_shared_bottleneck() {
+        let spec = fixture("local.csv", 4000, 8);
+        let p = ClusterParams {
+            cpu_rows_per_sec: 1e9,
+            fileserver_bw: 1e4,
+            disk_bw: 1e4, // same slow medium, but per-node
+            local_copies: true,
+            ..ClusterParams::default()
+        };
+        let t1 = simulate_split_process(&p, &spec, 1, 0).unwrap().stream_makespan;
+        let t4 = simulate_split_process(&p, &spec, 4, 0).unwrap().stream_makespan;
+        assert!(t1 / t4 > 3.0, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn reduce_time_grows_logarithmically() {
+        let spec = fixture("red.csv", 1000, 8);
+        let p = params();
+        let pb = 1024 * 1024; // 1 MiB partial
+        let r2 = simulate_split_process(&p, &spec, 2, pb).unwrap().reduce_time;
+        let r16 = simulate_split_process(&p, &spec, 16, pb).unwrap().reduce_time;
+        assert!(r16 > r2);
+        assert!(r16 < r2 * 8.0); // log, not linear
+    }
+
+    #[test]
+    fn mapreduce_pays_for_the_shuffle() {
+        let spec = fixture("mr.csv", 1000, 8);
+        let p = params();
+        let sp = simulate_split_process(&p, &spec, 4, 64 * 8).unwrap();
+        let mr = simulate_mapreduce(&p, &spec, 4, 1000 * 64 * 16, 1000 * 64).unwrap();
+        assert!(mr.makespan > sp.makespan, "mr={} sp={}", mr.makespan, sp.makespan);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_and_bounded() {
+        let p = ClusterParams { jitter: 0.1, ..params() };
+        for w in 0..32 {
+            let m = jitter_mult(&p, w);
+            assert!((0.9..=1.1).contains(&m), "{m}");
+            assert_eq!(m, jitter_mult(&p, w));
+        }
+    }
+
+    #[test]
+    fn calibration_roundtrip() {
+        let rate = calibrate_rows_per_sec(50_000, Duration::from_secs_f64(2.5));
+        assert!((rate - 20_000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,161 @@
+//! Row-to-block buffering adapter.
+//!
+//! The XLA artifacts (and the blocked native kernels) consume fixed-size row
+//! blocks, while the Split-Process engine streams single rows. [`Blocked`]
+//! buffers rows into a reusable block matrix and flushes it to a
+//! [`BlockJob`]; the final partial block is flushed at `post` time. Backends
+//! pad partial blocks with zero rows — safe because zero rows contribute
+//! nothing to Gram/projection/tmul sums (a tested invariant on both the
+//! python and rust sides).
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::splitproc::job::RowJob;
+
+/// A job consuming row *blocks* (at most `block_rows` rows per call; the
+/// last block of a chunk may be smaller).
+pub trait BlockJob: Send {
+    /// Process one block. `block` has exactly `rows` valid rows.
+    fn exec_block(&mut self, block: &Matrix) -> Result<()>;
+
+    /// Chunk finished (called after the final partial block).
+    fn post_blocks(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapts a [`BlockJob`] into a [`RowJob`] with an internal reusable buffer.
+pub struct Blocked<J: BlockJob> {
+    job: J,
+    block_rows: usize,
+    cols: usize,
+    buf: Vec<f64>,
+    filled: usize,
+}
+
+impl<J: BlockJob> Blocked<J> {
+    pub fn new(job: J, block_rows: usize, cols: usize) -> Self {
+        Blocked {
+            job,
+            block_rows,
+            cols,
+            buf: vec![0.0; block_rows * cols],
+            filled: 0,
+        }
+    }
+
+    pub fn into_inner(self) -> J {
+        self.job
+    }
+
+    pub fn job(&self) -> &J {
+        &self.job
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.filled == 0 {
+            return Ok(());
+        }
+        let block = Matrix::from_vec(
+            self.filled,
+            self.cols,
+            self.buf[..self.filled * self.cols].to_vec(),
+        )?;
+        self.job.exec_block(&block)?;
+        self.filled = 0;
+        Ok(())
+    }
+}
+
+impl<J: BlockJob> RowJob for Blocked<J> {
+    fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.cols {
+            return Err(Error::shape(format!(
+                "block buffer: row has {} cols, expected {}",
+                row.len(),
+                self.cols
+            )));
+        }
+        let off = self.filled * self.cols;
+        self.buf[off..off + self.cols].copy_from_slice(row);
+        self.filled += 1;
+        if self.filled == self.block_rows {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn post(&mut self) -> Result<()> {
+        self.flush()?;
+        self.job.post_blocks()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Recorder {
+        blocks: Vec<(usize, usize)>,
+        row_sum: f64,
+        posted: bool,
+    }
+
+    impl BlockJob for Recorder {
+        fn exec_block(&mut self, block: &Matrix) -> Result<()> {
+            self.blocks.push(block.shape());
+            self.row_sum += block.data().iter().sum::<f64>();
+            Ok(())
+        }
+
+        fn post_blocks(&mut self) -> Result<()> {
+            self.posted = true;
+            Ok(())
+        }
+    }
+
+    fn feed(rows: usize, block: usize) -> Recorder {
+        let mut b = Blocked::new(
+            Recorder { blocks: vec![], row_sum: 0.0, posted: false },
+            block,
+            2,
+        );
+        for i in 0..rows {
+            b.exec_row(&[i as f64, 1.0]).unwrap();
+        }
+        b.post().unwrap();
+        b.into_inner()
+    }
+
+    #[test]
+    fn full_blocks_then_tail() {
+        let r = feed(10, 4);
+        assert_eq!(r.blocks, vec![(4, 2), (4, 2), (2, 2)]);
+        assert!(r.posted);
+        let want: f64 = (0..10).map(|i| i as f64 + 1.0).sum();
+        assert!((r.row_sum - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_multiple_no_empty_tail() {
+        let r = feed(8, 4);
+        assert_eq!(r.blocks, vec![(4, 2), (4, 2)]);
+    }
+
+    #[test]
+    fn zero_rows_posts_cleanly() {
+        let r = feed(0, 4);
+        assert!(r.blocks.is_empty());
+        assert!(r.posted);
+    }
+
+    #[test]
+    fn wrong_width_rejected() {
+        let mut b = Blocked::new(
+            Recorder { blocks: vec![], row_sum: 0.0, posted: false },
+            4,
+            3,
+        );
+        assert!(b.exec_row(&[1.0, 2.0]).is_err());
+    }
+}

@@ -1,0 +1,60 @@
+//! The job contract — the paper's `workobj` interface.
+
+use crate::error::Result;
+
+/// A streaming row job: `exec_row` per input row, `post` once the chunk is
+/// drained (the paper's `workobj.exec(line)` / `workobj.post()`).
+pub trait RowJob: Send {
+    /// Process one parsed row.
+    fn exec_row(&mut self, row: &[f64]) -> Result<()>;
+
+    /// Chunk finished: flush buffers, close writers.
+    fn post(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapter subtracting per-column means before delegating — the streaming
+/// centering pre-step of PCA mode (`SvdOptions::center`). Means come from a
+/// [`crate::jobs::ColStatsJob`] pre-pass; rows never materialize centered
+/// on disk.
+pub struct CenteredJob<J: RowJob> {
+    inner: J,
+    means: std::sync::Arc<Vec<f64>>,
+    buf: Vec<f64>,
+}
+
+impl<J: RowJob> CenteredJob<J> {
+    /// `means` empty = pass-through (centering disabled, zero overhead).
+    pub fn new(inner: J, means: std::sync::Arc<Vec<f64>>) -> Self {
+        let buf = vec![0.0; means.len()];
+        CenteredJob { inner, means, buf }
+    }
+
+    pub fn into_inner(self) -> J {
+        self.inner
+    }
+}
+
+impl<J: RowJob> RowJob for CenteredJob<J> {
+    fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+        if self.means.is_empty() {
+            return self.inner.exec_row(row);
+        }
+        if row.len() != self.means.len() {
+            return Err(crate::error::Error::shape(format!(
+                "centered row has {} cols, means have {}",
+                row.len(),
+                self.means.len()
+            )));
+        }
+        for ((b, &x), &m) in self.buf.iter_mut().zip(row).zip(self.means.iter()) {
+            *b = x - m;
+        }
+        self.inner.exec_row(&self.buf)
+    }
+
+    fn post(&mut self) -> Result<()> {
+        self.inner.post()
+    }
+}

@@ -1,0 +1,287 @@
+//! The Split-Process engine (paper §3).
+//!
+//! Each worker is handed a chunk of the shared input file — newline-aligned
+//! byte ranges for CSV, exact row ranges for binary — opens its own reader,
+//! streams rows into a [`RowJob`], and calls `post()` when its chunk is
+//! drained. The leader then merges the per-worker results (a commutative
+//! reduction for every job in this system).
+//!
+//! This is the paper's `split_process` function as a library, generalized
+//! over jobs exactly like its `workobj` (`exec(line)` / `post()`).
+
+pub mod block;
+pub mod job;
+
+pub use block::{BlockJob, Blocked};
+pub use job::{CenteredJob, RowJob};
+
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::binmat::{BinMatHeader, BinMatReader};
+use crate::io::chunker::{chunk_byte_ranges, chunk_row_ranges, ByteRange};
+use crate::io::csv::CsvRowReader;
+use crate::io::InputSpec;
+
+/// What a worker knows about its assignment (the paper's `workobj.ci` plus
+/// the chunk geometry).
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkMeta {
+    /// Chunk index (0-based).
+    pub index: usize,
+    /// Total number of chunks in this run.
+    pub total: usize,
+    /// Byte range for CSV inputs.
+    pub byte_range: Option<ByteRange>,
+    /// Row range for binary inputs.
+    pub row_range: Option<(u64, u64)>,
+}
+
+/// Plan the chunk assignment for an input without running anything.
+pub fn plan_chunks(input: &InputSpec, workers: usize) -> Result<Vec<ChunkMeta>> {
+    if workers == 0 {
+        return Err(Error::Config("workers must be >= 1".into()));
+    }
+    match input.format {
+        InputFormat::Csv => {
+            let ranges = chunk_byte_ranges(&input.path, workers)?;
+            let total = ranges.len();
+            Ok(ranges
+                .into_iter()
+                .enumerate()
+                .map(|(index, r)| ChunkMeta {
+                    index,
+                    total,
+                    byte_range: Some(r),
+                    row_range: None,
+                })
+                .collect())
+        }
+        InputFormat::Bin => {
+            let h = BinMatHeader::read_from(&input.path)?;
+            let ranges = chunk_row_ranges(h.rows, workers);
+            let total = ranges.len();
+            Ok(ranges
+                .into_iter()
+                .enumerate()
+                .map(|(index, r)| ChunkMeta {
+                    index,
+                    total,
+                    byte_range: None,
+                    row_range: Some(r),
+                })
+                .collect())
+        }
+    }
+}
+
+/// Stream one chunk's rows into a job (the paper's inner read loop).
+pub fn run_chunk<J: RowJob>(input: &InputSpec, chunk: &ChunkMeta, job: &mut J) -> Result<u64> {
+    let mut row = Vec::new();
+    let mut count = 0u64;
+    match input.format {
+        InputFormat::Csv => {
+            let r = chunk
+                .byte_range
+                .ok_or_else(|| Error::Config("csv chunk without byte range".into()))?;
+            let mut reader = CsvRowReader::open_range(&input.path, r.start, r.end)?;
+            while reader.next_row(&mut row)? {
+                job.exec_row(&row)?;
+                count += 1;
+            }
+        }
+        InputFormat::Bin => {
+            let (start, end) = chunk
+                .row_range
+                .ok_or_else(|| Error::Config("bin chunk without row range".into()))?;
+            let mut reader = BinMatReader::open_rows(&input.path, start, end)?;
+            while reader.next_row(&mut row)? {
+                job.exec_row(&row)?;
+                count += 1;
+            }
+        }
+    }
+    job.post()?;
+    Ok(count)
+}
+
+/// Outcome of one worker.
+pub struct WorkerResult<J> {
+    pub chunk: ChunkMeta,
+    pub rows: u64,
+    pub job: J,
+}
+
+/// Run a job family over the input with `workers` parallel workers.
+///
+/// `factory(chunk)` builds the per-chunk job (the paper constructs a
+/// `workobj` per process with `ci` = chunk index). Results come back in
+/// chunk order, so concatenated worker outputs preserve global row order.
+pub fn run<J, F>(input: &InputSpec, workers: usize, factory: F) -> Result<Vec<WorkerResult<J>>>
+where
+    J: RowJob,
+    F: Fn(&ChunkMeta) -> Result<J> + Sync,
+{
+    let chunks = plan_chunks(input, workers)?;
+    if chunks.is_empty() {
+        return Ok(vec![]);
+    }
+    let results: Vec<Result<WorkerResult<J>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = chunks
+            .iter()
+            .map(|chunk| {
+                let factory = &factory;
+                let input = input.clone();
+                let chunk = *chunk;
+                scope.spawn(move || -> Result<WorkerResult<J>> {
+                    let mut job = factory(&chunk)?;
+                    let rows = run_chunk(&input, &chunk, &mut job)?;
+                    Ok(WorkerResult { chunk, rows, job })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(Error::Other("worker panicked".into())))
+            })
+            .collect()
+    });
+    results.into_iter().collect()
+}
+
+/// Sum per-worker partial matrices — the global reduce of the paper's
+/// commutative accumulations.
+pub fn reduce_partials(parts: Vec<crate::linalg::Matrix>) -> Result<crate::linalg::Matrix> {
+    let mut iter = parts.into_iter();
+    let mut acc = iter
+        .next()
+        .ok_or_else(|| Error::Other("reduce of zero partials".into()))?;
+    for p in iter {
+        acc.add_assign(&p)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    /// Counts rows and sums all elements.
+    struct SumJob {
+        rows: u64,
+        sum: f64,
+        posted: bool,
+    }
+
+    impl RowJob for SumJob {
+        fn exec_row(&mut self, row: &[f64]) -> Result<()> {
+            self.rows += 1;
+            self.sum += row.iter().sum::<f64>();
+            Ok(())
+        }
+
+        fn post(&mut self) -> Result<()> {
+            self.posted = true;
+            Ok(())
+        }
+    }
+
+    fn write_csv(name: &str, rows: usize) -> InputSpec {
+        let dir = std::env::temp_dir().join("tallfat_test_splitproc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        let m = Matrix::from_fn(rows, 3, |i, j| (i * 3 + j) as f64);
+        crate::io::csv::write_matrix_csv(&m, &path).unwrap();
+        InputSpec::csv(path)
+    }
+
+    fn write_bin(name: &str, rows: usize) -> InputSpec {
+        let dir = std::env::temp_dir().join("tallfat_test_splitproc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        let m = Matrix::from_fn(rows, 3, |i, j| (i * 3 + j) as f64);
+        crate::io::binmat::write_matrix_bin(&m, &path).unwrap();
+        InputSpec::bin(path)
+    }
+
+    fn expected_sum(rows: usize) -> f64 {
+        (0..rows * 3).map(|v| v as f64).sum()
+    }
+
+    #[test]
+    fn all_rows_processed_csv() {
+        let input = write_csv("rows.csv", 103);
+        for workers in [1, 2, 4, 9] {
+            let results = run(&input, workers, |_c| {
+                Ok(SumJob { rows: 0, sum: 0.0, posted: false })
+            })
+            .unwrap();
+            let total_rows: u64 = results.iter().map(|r| r.rows).sum();
+            let total_sum: f64 = results.iter().map(|r| r.job.sum).sum();
+            assert_eq!(total_rows, 103, "workers={workers}");
+            assert!((total_sum - expected_sum(103)).abs() < 1e-9);
+            assert!(results.iter().all(|r| r.job.posted));
+        }
+    }
+
+    #[test]
+    fn all_rows_processed_bin() {
+        let input = write_bin("rows.bin", 61);
+        for workers in [1, 3, 8] {
+            let results = run(&input, workers, |_c| {
+                Ok(SumJob { rows: 0, sum: 0.0, posted: false })
+            })
+            .unwrap();
+            let total_rows: u64 = results.iter().map(|r| r.rows).sum();
+            assert_eq!(total_rows, 61);
+            let total_sum: f64 = results.iter().map(|r| r.job.sum).sum();
+            assert!((total_sum - expected_sum(61)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn chunk_meta_indices_sequential() {
+        let input = write_csv("meta.csv", 40);
+        let chunks = plan_chunks(&input, 4).unwrap();
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.index, i);
+            assert_eq!(c.total, chunks.len());
+        }
+    }
+
+    #[test]
+    fn factory_error_propagates() {
+        let input = write_csv("err.csv", 10);
+        let r = run(&input, 2, |c| -> Result<SumJob> {
+            if c.index == 1 {
+                Err(Error::Other("boom".into()))
+            } else {
+                Ok(SumJob { rows: 0, sum: 0.0, posted: false })
+            }
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn results_in_chunk_order() {
+        let input = write_csv("order.csv", 50);
+        let results = run(&input, 5, |_c| {
+            Ok(SumJob { rows: 0, sum: 0.0, posted: false })
+        })
+        .unwrap();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.chunk.index, i);
+        }
+    }
+
+    #[test]
+    fn reduce_partials_sums() {
+        let a = Matrix::eye(2);
+        let b = Matrix::eye(2).scale(3.0);
+        let r = reduce_partials(vec![a, b]).unwrap();
+        assert_eq!(r.get(0, 0), 4.0);
+        assert!(reduce_partials(vec![]).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The randomized rank-k SVD driver — the paper's pipeline end to end.
+//!
+//! ```text
+//! pass 1  Y = A Ω           fused project+gram → Y shards + G = YᵀY   (over A)
+//! leader  G = V_y Σ_y² V_yᵀ  k' x k' Jacobi eigensolve; M = V_y Σ_y⁻¹
+//! pass 2  U0 = Y M           orthonormal basis rows → U0 shards
+//!         W  = Aᵀ U0         commutative partial, reduced              (over A)
+//! leader  WᵀW = P S² Pᵀ      second small eigensolve
+//!         σ = S, V = W P S⁻¹
+//! pass 3  U = U0 P           shard rotation                            (over U0)
+//! ```
+//!
+//! Why the second eigensolve: σ(Y) carries the sketch's JL distortion; the
+//! `W = AᵀU0` completion recovers A's own singular values exactly when
+//! `rank(A) ≤ k'` (Halko et al. §5; still only `k' x k'` leader math, which
+//! is the paper's design goal). With `power_iters > 0` the sketch is
+//! re-orthonormalized and passed through A again (subspace iteration) for
+//! slow-decaying spectra.
+//!
+//! The small-n route (`exact_gram`) skips the sketch entirely: `G = AᵀA`
+//! eigensolved directly (paper §2.0.1), `U = A V Σ⁻¹` streamed.
+
+pub mod pipeline;
+pub mod result;
+pub mod validate;
+
+pub use pipeline::{gram_svd_file, randomized_svd_file, SvdOptions};
+pub use result::SvdResult;

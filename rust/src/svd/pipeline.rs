@@ -1,0 +1,519 @@
+//! Pipeline orchestration (leader side).
+
+use crate::backend::BackendRef;
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::jobs::{Pass2Job, ProjectGramJob};
+use crate::linalg::{matmul, Matrix};
+use crate::metrics::PhaseReport;
+use crate::rng::VirtualMatrix;
+use crate::splitproc::{self, Blocked};
+use crate::svd::result::SvdResult;
+use crate::util::Logger;
+use std::time::Instant;
+
+static LOG: Logger = Logger::new("svd");
+
+/// Options for the SVD drivers (a trimmed view of
+/// [`crate::config::RunConfig`]).
+#[derive(Clone, Debug)]
+pub struct SvdOptions {
+    pub k: usize,
+    pub oversample: usize,
+    pub power_iters: usize,
+    pub workers: usize,
+    pub block: usize,
+    pub seed: u64,
+    pub work_dir: String,
+    pub compute_v: bool,
+    /// Shard format for Y/U0/U intermediates (Bin is faster; Csv matches
+    /// the paper's artifacts).
+    pub shard_format: InputFormat,
+    /// PCA mode: subtract per-column means (one cheap extra streaming
+    /// pass); the factorization is then of `A - 1 mu^T`.
+    pub center: bool,
+}
+
+impl Default for SvdOptions {
+    fn default() -> Self {
+        SvdOptions {
+            k: 16,
+            oversample: 8,
+            power_iters: 0,
+            workers: 4,
+            block: 256,
+            seed: 0,
+            work_dir: std::env::temp_dir()
+                .join("tallfat_svd")
+                .to_string_lossy()
+                .into_owned(),
+            compute_v: true,
+            shard_format: InputFormat::Bin,
+            center: false,
+        }
+    }
+}
+
+impl SvdOptions {
+    pub fn from_config(cfg: &crate::config::RunConfig) -> Self {
+        SvdOptions {
+            k: cfg.k,
+            oversample: cfg.oversample,
+            power_iters: cfg.power_iters,
+            workers: cfg.workers,
+            block: cfg.block,
+            seed: cfg.seed,
+            work_dir: cfg.work_dir.clone(),
+            compute_v: cfg.compute_v,
+            shard_format: InputFormat::Bin,
+            center: cfg.center,
+        }
+    }
+}
+
+/// Cutoff-guarded inverse of singular values: columns below
+/// `cutoff_rel * sigma_max` are zeroed (rank deficiency / oversampled tail).
+fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
+    let smax = sigma.first().copied().unwrap_or(0.0).max(1e-300);
+    sigma
+        .iter()
+        .map(|&s| if s > cutoff_rel * smax { 1.0 / s } else { 0.0 })
+        .collect()
+}
+
+/// Run the paper's randomized rank-k SVD over a file. See module docs for
+/// the pass structure.
+pub fn randomized_svd_file(input: &InputSpec, backend: BackendRef, opts: &SvdOptions) -> Result<SvdResult> {
+    let mut report = PhaseReport::new();
+    let (m_rows, n) = input.dims()?;
+    if m_rows == 0 || n == 0 {
+        return Err(Error::Config("empty input matrix".into()));
+    }
+    let kp = (opts.k + opts.oversample).min(n).min(m_rows);
+    LOG.info(&format!(
+        "randomized svd: {m_rows}x{n} -> k={} (sketch {kp}), workers={}, block={}, backend={}",
+        opts.k.min(kp),
+        opts.workers,
+        opts.block,
+        backend.name()
+    ));
+    std::fs::create_dir_all(&opts.work_dir)?;
+
+    let y_shards = ShardSet::new(&opts.work_dir, "Y", opts.shard_format)?;
+    let u0_shards = ShardSet::new(&opts.work_dir, "U0", opts.shard_format)?;
+    let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
+
+    // PCA mode: pass 0 computes column means (Welford per worker, merged);
+    // all later passes subtract them on the fly via `CenteredJob`.
+    let means: std::sync::Arc<Vec<f64>> = if opts.center {
+        let t0 = Instant::now();
+        let results = splitproc::run(input, opts.workers, |_| {
+            Ok(crate::jobs::ColStatsJob::new(n))
+        })?;
+        let mut iter = results.into_iter().map(|r| r.job);
+        let mut acc = iter.next().ok_or_else(|| Error::Other("no chunks".into()))?;
+        for j in iter {
+            acc.merge(&j)?;
+        }
+        report.push("pass0.colstats", t0.elapsed(), acc.count(), 0);
+        std::sync::Arc::new(acc.means().to_vec())
+    } else {
+        std::sync::Arc::new(Vec::new())
+    };
+
+    // The virtual sketch Ω (n x kp): workers materialize identical bits.
+    let vm = VirtualMatrix::projection(opts.seed, n, kp);
+    let mut omega = vm.materialize();
+    let mut shards_count;
+
+    let mut w_mat;
+    let mut u0_valid;
+    let mut iteration = 0usize;
+    loop {
+        // ---- pass 1: Y = A Ω, G = YᵀY ------------------------------------
+        let t0 = Instant::now();
+        let omega_ref = &omega;
+        let means_ref = &means;
+        let results = splitproc::run(input, opts.workers, |chunk| {
+            let job = ProjectGramJob::new(
+                backend.clone(),
+                omega_ref.clone(),
+                &y_shards,
+                chunk.index,
+            )?;
+            Ok(splitproc::CenteredJob::new(
+                Blocked::new(job, opts.block, n),
+                means_ref.clone(),
+            ))
+        })?;
+        shards_count = results.len();
+        let rows_seen: u64 = results.iter().map(|r| r.rows).sum();
+        if rows_seen as usize != m_rows {
+            return Err(Error::Other(format!(
+                "pass1 saw {rows_seen} rows, expected {m_rows}"
+            )));
+        }
+        let partials: Vec<Matrix> = results
+            .into_iter()
+            .map(|r| r.job.into_inner().into_inner().into_gram_partial())
+            .collect();
+        let g = splitproc::reduce_partials(partials)?;
+        report.push(&format!("pass1.project_gram[{iteration}]"), t0.elapsed(), rows_seen, 0);
+
+        // ---- leader: eigh(G), M = V_y Σ_y⁻¹ ------------------------------
+        let t0 = Instant::now();
+        let (w_eig, v_y) = backend.eigh(&g)?;
+        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+        let inv_y = guarded_inverse(&sig_y, 1e-7);
+        let m_mat = v_y.scale_cols(&inv_y)?;
+        report.push(&format!("leader.eigh_y[{iteration}]"), t0.elapsed(), kp as u64, 0);
+
+        // ---- pass 2: U0 = Y M, W = Aᵀ U0 ---------------------------------
+        let t0 = Instant::now();
+        let m_ref = &m_mat;
+        let means_ref = &means;
+        let results = splitproc::run(input, opts.workers, |chunk| {
+            let job = Pass2Job::new(
+                backend.clone(),
+                m_ref.clone(),
+                &y_shards,
+                &u0_shards,
+                chunk.index,
+                n,
+            )?;
+            Ok(splitproc::CenteredJob::new(
+                Blocked::new(job, opts.block, n),
+                means_ref.clone(),
+            ))
+        })?;
+        let rows2: u64 = results.iter().map(|r| r.rows).sum();
+        let w_partials: Vec<Matrix> = results
+            .into_iter()
+            .map(|r| r.job.into_inner().into_inner().into_w_partial())
+            .collect();
+        w_mat = splitproc::reduce_partials(w_partials)?;
+        u0_valid = true;
+        report.push(&format!("pass2.urecover_tmul[{iteration}]"), t0.elapsed(), rows2, 0);
+
+        if iteration >= opts.power_iters {
+            break;
+        }
+        // ---- power iteration: Ω ← orth(W), repeat ------------------------
+        let t0 = Instant::now();
+        let (q, _) = crate::linalg::thin_qr(&w_mat)?;
+        omega = q;
+        iteration += 1;
+        report.push(&format!("leader.power_orth[{iteration}]"), t0.elapsed(), 0, 0);
+    }
+    let _ = u0_valid;
+
+    // ---- leader: small SVD completion from W -----------------------------
+    let t0 = Instant::now();
+    let gw = backend.gram_block(&w_mat)?; // WᵀW, kp x kp
+    let (w2, p) = backend.eigh(&gw)?;
+    let sigma_full: Vec<f64> = w2.iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let k = opts.k.min(kp);
+    let sigma: Vec<f64> = sigma_full[..k].to_vec();
+    let p_k = p.slice_cols(0, k); // kp x k rotation
+    let v = if opts.compute_v {
+        let inv_s = guarded_inverse(&sigma, 1e-12);
+        let vp = matmul(&w_mat, &p_k)?; // n x k
+        Some(vp.scale_cols(&inv_s)?)
+    } else {
+        None
+    };
+    report.push("leader.eigh_w", t0.elapsed(), kp as u64, 0);
+
+    // ---- pass 3: U = U0 P_k (rotate shards) ------------------------------
+    let t0 = Instant::now();
+    let rows3 = rotate_shards(&u0_shards, &u_shards, shards_count, &p_k, opts.block)?;
+    report.push("pass3.rotate_u", t0.elapsed(), rows3, 0);
+
+    LOG.info(&format!(
+        "randomized svd done: sigma[0]={:.4} sigma[{}]={:.4}",
+        sigma.first().copied().unwrap_or(0.0),
+        k.saturating_sub(1),
+        sigma.last().copied().unwrap_or(0.0)
+    ));
+    Ok(SvdResult {
+        m: m_rows,
+        n,
+        k,
+        sigma,
+        v,
+        u_shards,
+        shards: shards_count,
+        means: if opts.center { Some(means.to_vec()) } else { None },
+        report,
+    })
+}
+
+/// Rotate every shard's rows by `p` (`kp x k`): `U = U0 P`. Streams shard by
+/// shard with one worker thread per shard.
+fn rotate_shards(
+    src: &ShardSet,
+    dst: &ShardSet,
+    shards: usize,
+    p: &Matrix,
+    block: usize,
+) -> Result<u64> {
+    let counts: Vec<Result<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..shards)
+            .map(|i| {
+                scope.spawn(move || -> Result<u64> {
+                    let mut reader = src.open_reader(i)?;
+                    let mut writer = dst.open_writer(i, p.cols())?;
+                    let mut row = Vec::new();
+                    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(block);
+                    let mut count = 0u64;
+                    loop {
+                        buf.clear();
+                        while buf.len() < block {
+                            if !reader.next_row(&mut row)? {
+                                break;
+                            }
+                            buf.push(row.clone());
+                        }
+                        if buf.is_empty() {
+                            break;
+                        }
+                        let u0 = Matrix::from_rows(&buf)?;
+                        let u = matmul(&u0, p)?;
+                        for r in 0..u.rows() {
+                            writer.write_row(u.row(r))?;
+                        }
+                        count += u.rows() as u64;
+                        if buf.len() < block {
+                            break;
+                        }
+                    }
+                    writer.finish()?;
+                    Ok(count)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(Error::Other("rotate worker panicked".into()))))
+            .collect()
+    });
+    let mut total = 0u64;
+    for c in counts {
+        total += c?;
+    }
+    Ok(total)
+}
+
+/// The paper's small-n exact route (§2.0.1): eigendecompose `AᵀA` directly,
+/// then stream `U = A V Σ⁻¹`.
+pub fn gram_svd_file(input: &InputSpec, backend: BackendRef, opts: &SvdOptions) -> Result<SvdResult> {
+    let mut report = PhaseReport::new();
+    let (m_rows, n) = input.dims()?;
+    if m_rows == 0 || n == 0 {
+        return Err(Error::Config("empty input matrix".into()));
+    }
+    let k = opts.k.min(n).min(m_rows);
+    LOG.info(&format!(
+        "gram svd: {m_rows}x{n} -> k={k}, workers={}, backend={}",
+        opts.workers,
+        backend.name()
+    ));
+    std::fs::create_dir_all(&opts.work_dir)?;
+    let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
+
+    // ---- pass 1: G = AᵀA --------------------------------------------------
+    let t0 = Instant::now();
+    let backend2 = backend.clone();
+    let results = splitproc::run(input, opts.workers, |_chunk| {
+        let job = crate::jobs::AtaBlockJob::new(backend2.clone(), n);
+        Ok(Blocked::new(job, opts.block, n))
+    })?;
+    let shards_count = results.len();
+    let rows_seen: u64 = results.iter().map(|r| r.rows).sum();
+    let partials: Vec<Matrix> = results
+        .into_iter()
+        .map(|r| r.job.into_inner().into_partial())
+        .collect();
+    let g = splitproc::reduce_partials(partials)?;
+    report.push("pass1.ata", t0.elapsed(), rows_seen, 0);
+
+    // ---- leader: eigh(G) = V Σ² Vᵀ -----------------------------------------
+    let t0 = Instant::now();
+    let (w_eig, v_full) = backend.eigh(&g)?;
+    let sigma_full: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let sigma: Vec<f64> = sigma_full[..k].to_vec();
+    let v_k = v_full.slice_cols(0, k);
+    let inv_s = guarded_inverse(&sigma, 1e-12);
+    // M = V_k Σ⁻¹ : the paper's U = A V Σ⁻¹ per-block multiplier.
+    let m_mat = v_k.scale_cols(&inv_s)?;
+    report.push("leader.eigh", t0.elapsed(), n as u64, 0);
+
+    // ---- pass 2: U = A M ----------------------------------------------------
+    let t0 = Instant::now();
+    let m_ref = &m_mat;
+    let results = splitproc::run(input, opts.workers, |chunk| {
+        let job = crate::jobs::MultJob::new(
+            backend.clone(),
+            m_ref.clone(),
+            &u_shards,
+            chunk.index,
+        )?;
+        Ok(Blocked::new(job, opts.block, n))
+    })?;
+    let rows2: u64 = results.iter().map(|r| r.rows).sum();
+    report.push("pass2.u_recover", t0.elapsed(), rows2, 0);
+
+    Ok(SvdResult {
+        m: m_rows,
+        n,
+        k,
+        sigma,
+        v: Some(v_k),
+        u_shards,
+        means: None,
+        shards: shards_count,
+        report,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use std::sync::Arc;
+
+    fn setup(name: &str, m: usize, n: usize, rank: usize, noise: f64) -> (InputSpec, Matrix, Vec<f64>) {
+        let dir = std::env::temp_dir().join("tallfat_test_svd").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, sigma) = gen_exact(
+            m,
+            n,
+            rank,
+            Spectrum::Geometric { scale: 10.0, decay: 0.6 },
+            noise,
+            42,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        (spec, a, sigma)
+    }
+
+    fn opts(name: &str, k: usize) -> SvdOptions {
+        SvdOptions {
+            k,
+            oversample: 8,
+            workers: 3,
+            block: 32,
+            work_dir: std::env::temp_dir()
+                .join("tallfat_test_svd")
+                .join(name)
+                .join("work")
+                .to_string_lossy()
+                .into_owned(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn randomized_recovers_low_rank_exactly() {
+        let (spec, a, sigma_true) = setup("rand_exact", 300, 24, 6, 0.0);
+        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("rand_exact", 8))
+            .unwrap();
+        assert_eq!(r.k, 8);
+        for i in 0..6 {
+            assert!(
+                (r.sigma[i] - sigma_true[i]).abs() < 1e-6 * sigma_true[0],
+                "sigma[{i}]: {} vs {}",
+                r.sigma[i],
+                sigma_true[i]
+            );
+        }
+        // Reconstruction: rank-6 matrix from rank-8 factorization is exact.
+        let recon = r.reconstruct().unwrap();
+        let rel = recon.max_abs_diff(&a) / a.max_abs();
+        assert!(rel < 1e-6, "rel {rel}");
+    }
+
+    #[test]
+    fn randomized_with_noise_close_to_exact() {
+        let (spec, a, _) = setup("rand_noise", 400, 32, 8, 0.01);
+        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("rand_noise", 8))
+            .unwrap();
+        let exact = crate::linalg::exact_svd(&a).unwrap();
+        for i in 0..4 {
+            let rel = (r.sigma[i] - exact.sigma[i]).abs() / exact.sigma[i];
+            assert!(rel < 0.05, "sigma[{i}] rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn power_iterations_improve_slow_decay() {
+        let dir = std::env::temp_dir().join("tallfat_test_svd").join("power");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(300, 40, 40, Spectrum::Power { scale: 10.0 }, 0.0, 7).unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let exact = crate::linalg::exact_svd(&a).unwrap();
+
+        let run = |q: usize, name: &str| {
+            let mut o = opts(name, 8);
+            o.power_iters = q;
+            o.oversample = 4;
+            let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &o).unwrap();
+            let recon = r.reconstruct().unwrap();
+            let mut diff = 0.0f64;
+            for i in 0..300 {
+                for j in 0..40 {
+                    diff += (recon.get(i, j) - a.get(i, j)).powi(2);
+                }
+            }
+            diff.sqrt()
+        };
+        let err0 = run(0, "power0");
+        let err2 = run(2, "power2");
+        let tail: f64 = exact.sigma[8..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!(err2 < err0 * 1.001, "q=2 ({err2}) should not be worse than q=0 ({err0})");
+        assert!(err2 < 1.25 * tail, "q=2 err {err2} vs tail {tail}");
+    }
+
+    #[test]
+    fn gram_route_matches_exact() {
+        let (spec, a, _) = setup("gram", 200, 16, 16, 0.005);
+        let r = gram_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("gram", 16)).unwrap();
+        let exact = crate::linalg::exact_svd(&a).unwrap();
+        for i in 0..16 {
+            let denom = exact.sigma[i].max(1e-9);
+            assert!(
+                (r.sigma[i] - exact.sigma[i]).abs() / denom < 1e-3,
+                "sigma[{i}]: {} vs {}",
+                r.sigma[i],
+                exact.sigma[i]
+            );
+        }
+        let recon = r.reconstruct().unwrap();
+        assert!(recon.max_abs_diff(&a) < 1e-6 * a.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let (spec, _, _) = setup("workers", 150, 12, 5, 0.0);
+        let run = |w: usize, name: &str| {
+            let mut o = opts(name, 6);
+            o.workers = w;
+            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &o)
+                .unwrap()
+                .sigma
+        };
+        let s1 = run(1, "w1");
+        let s4 = run(4, "w4");
+        for (a, b) in s1.iter().zip(s4.iter()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! SVD run results.
+
+use crate::error::Result;
+use crate::io::writer::ShardSet;
+use crate::linalg::Matrix;
+use crate::metrics::PhaseReport;
+
+/// Output of a (randomized or exact-Gram) SVD run.
+///
+/// `U` is *sharded on disk* (it is `m x k` — tall); σ and V are small and
+/// in memory.
+pub struct SvdResult {
+    /// Input dimensions.
+    pub m: usize,
+    pub n: usize,
+    /// Effective rank computed (k after truncation).
+    pub k: usize,
+    /// Descending singular values (length k).
+    pub sigma: Vec<f64>,
+    /// Right singular vectors, `n x k` (None when `compute_v = false`).
+    pub v: Option<Matrix>,
+    /// U shards on disk (one per worker chunk, row order preserved).
+    pub u_shards: ShardSet,
+    /// Number of U shards.
+    pub shards: usize,
+    /// Column means subtracted before factorization (PCA mode), if any.
+    /// The factorization is of `A - 1 means^T`.
+    pub means: Option<Vec<f64>>,
+    /// Phase timing of the run.
+    pub report: PhaseReport,
+}
+
+impl SvdResult {
+    /// Materialize U (only for small m — tests and examples).
+    pub fn u_matrix(&self) -> Result<Matrix> {
+        self.u_shards.merge_to_matrix(self.shards)
+    }
+
+    /// `A_k = U diag(sigma) V^T` reconstruction (requires V; small m only).
+    pub fn reconstruct(&self) -> Result<Matrix> {
+        let v = self
+            .v
+            .as_ref()
+            .ok_or_else(|| crate::error::Error::Other("V not computed".into()))?;
+        let u = self.u_matrix()?;
+        let us = u.scale_cols(&self.sigma)?;
+        crate::linalg::matmul(&us, &v.t())
+    }
+}

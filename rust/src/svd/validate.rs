@@ -1,0 +1,224 @@
+//! Accuracy metrics for SVD results (used by E4/E6 and the examples).
+
+use crate::error::Result;
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::linalg::{matmul, Matrix};
+use crate::splitproc::{self, RowJob};
+use crate::svd::result::SvdResult;
+
+/// Streaming relative Frobenius reconstruction error
+/// `||A - U Σ Vᵀ||_F / ||A||_F` without materializing A or U.
+///
+/// Worker `i` re-reads its chunk of A while streaming its own U shard (row
+/// alignment as in pass 2). For PCA-mode results (`result.means` set) the
+/// comparison is against the centered matrix `A - 1 meansᵀ` — the thing
+/// the factorization actually approximates.
+pub fn reconstruction_error_streaming(input: &InputSpec, result: &SvdResult) -> Result<f64> {
+    let v = result
+        .v
+        .as_ref()
+        .ok_or_else(|| crate::error::Error::Other("V not computed".into()))?;
+    // B = Σ Vᵀ (k x n), so the per-row residual is a - u_row B.
+    let b = {
+        let mut b = v.t();
+        for (i, s) in result.sigma.iter().enumerate() {
+            for j in 0..b.cols() {
+                let val = b.get(i, j) * s;
+                b.set(i, j, val);
+            }
+        }
+        b
+    };
+
+    struct ErrJob<'a> {
+        u_reader: crate::io::writer::ShardReader,
+        b: &'a Matrix,
+        means: Option<&'a [f64]>,
+        u_row: Vec<f64>,
+        err2: f64,
+        norm2: f64,
+    }
+
+    impl RowJob for ErrJob<'_> {
+        fn exec_row(&mut self, a_row: &[f64]) -> Result<()> {
+            if !self.u_reader.next_row(&mut self.u_row)? {
+                return Err(crate::error::Error::Other("U shard exhausted".into()));
+            }
+            let k = self.u_row.len();
+            for (j, &raw) in a_row.iter().enumerate() {
+                let aij = match self.means {
+                    Some(m) => raw - m[j],
+                    None => raw,
+                };
+                let mut recon = 0.0;
+                for t in 0..k {
+                    recon += self.u_row[t] * self.b.get(t, j);
+                }
+                self.err2 += (aij - recon) * (aij - recon);
+                self.norm2 += aij * aij;
+            }
+            Ok(())
+        }
+    }
+
+    let u_shards = &result.u_shards;
+    let b_ref = &b;
+    let means_ref = result.means.as_deref();
+    let results = splitproc::run(input, result.shards, |chunk| {
+        Ok(ErrJob {
+            u_reader: u_shards.open_reader(chunk.index)?,
+            b: b_ref,
+            means: means_ref,
+            u_row: Vec::new(),
+            err2: 0.0,
+            norm2: 0.0,
+        })
+    })?;
+    let err2: f64 = results.iter().map(|r| r.job.err2).sum();
+    let norm2: f64 = results.iter().map(|r| r.job.norm2).sum();
+    Ok((err2 / norm2.max(1e-300)).sqrt())
+}
+
+/// `max |UᵀU - I|` computed by streaming the U shards (Gram accumulation).
+pub fn u_orthonormality_residual(shards: &ShardSet, n_shards: usize, k: usize) -> Result<f64> {
+    let mut g = Matrix::zeros(k, k);
+    let mut row = Vec::new();
+    for i in 0..n_shards {
+        let mut r = shards.open_reader(i)?;
+        while r.next_row(&mut row)? {
+            crate::linalg::ops::outer_accumulate(&mut g, &row);
+        }
+    }
+    Ok(g.max_abs_diff(&Matrix::eye(k)))
+}
+
+/// Relative per-value error of computed vs reference singular values.
+pub fn sigma_relative_errors(got: &[f64], want: &[f64]) -> Vec<f64> {
+    got.iter()
+        .zip(want.iter())
+        .map(|(g, w)| (g - w).abs() / w.abs().max(1e-300))
+        .collect()
+}
+
+/// Pairwise-distance distortion of a projection (the JL check, E4):
+/// samples `pairs` row pairs from A (in memory) and its projection Y and
+/// returns `(mean |ratio - 1|, max |ratio - 1|)` over
+/// `ratio = d_Y(i,j) / d_A(i,j)`.
+pub fn distance_distortion(a: &Matrix, y: &Matrix, pairs: usize, seed: u64) -> (f64, f64) {
+    use crate::rng::splitmix::mix3;
+    let m = a.rows();
+    assert_eq!(m, y.rows());
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut counted = 0usize;
+    let mut t = 0u64;
+    while counted < pairs {
+        let i = (mix3(seed, t, 0) % m as u64) as usize;
+        let j = (mix3(seed, t, 1) % m as u64) as usize;
+        t += 1;
+        if i == j {
+            continue;
+        }
+        let da: f64 = a
+            .row(i)
+            .iter()
+            .zip(a.row(j))
+            .map(|(x, z)| (x - z) * (x - z))
+            .sum::<f64>()
+            .sqrt();
+        if da < 1e-12 {
+            continue;
+        }
+        let dy: f64 = y
+            .row(i)
+            .iter()
+            .zip(y.row(j))
+            .map(|(x, z)| (x - z) * (x - z))
+            .sum::<f64>()
+            .sqrt();
+        let dist = (dy / da - 1.0).abs();
+        sum += dist;
+        max = max.max(dist);
+        counted += 1;
+    }
+    (sum / pairs as f64, max)
+}
+
+/// Dense (in-memory) rank-k reconstruction error helper for tests/benches.
+pub fn dense_reconstruction_error(a: &Matrix, u: &Matrix, sigma: &[f64], v: &Matrix) -> Result<f64> {
+    let us = u.scale_cols(sigma)?;
+    let recon = matmul(&us, &v.t())?;
+    let mut err2 = 0.0;
+    let mut norm2 = 0.0;
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            err2 += (a.get(i, j) - recon.get(i, j)).powi(2);
+            norm2 += a.get(i, j).powi(2);
+        }
+    }
+    Ok((err2 / norm2.max(1e-300)).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::svd::pipeline::{randomized_svd_file, SvdOptions};
+    use std::sync::Arc;
+
+    #[test]
+    fn streaming_error_matches_dense() {
+        let dir = std::env::temp_dir().join("tallfat_test_validate");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            120,
+            16,
+            6,
+            Spectrum::Geometric { scale: 4.0, decay: 0.7 },
+            0.02,
+            9,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let opts = SvdOptions {
+            k: 6,
+            oversample: 6,
+            workers: 2,
+            block: 32,
+            work_dir: dir.join("work").to_string_lossy().into_owned(),
+            ..Default::default()
+        };
+        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        let streaming = reconstruction_error_streaming(&spec, &r).unwrap();
+        let dense = dense_reconstruction_error(
+            &a,
+            &r.u_matrix().unwrap(),
+            &r.sigma,
+            r.v.as_ref().unwrap(),
+        )
+        .unwrap();
+        assert!((streaming - dense).abs() < 1e-10, "{streaming} vs {dense}");
+        // U orthonormal
+        let resid = u_orthonormality_residual(&r.u_shards, r.shards, r.k).unwrap();
+        assert!(resid < 1e-6, "{resid}");
+    }
+
+    #[test]
+    fn distortion_identity_projection_is_zero() {
+        let (a, _) = gen_exact(40, 8, 8, Spectrum::Power { scale: 1.0 }, 0.0, 3).unwrap();
+        let (mean, max) = distance_distortion(&a, &a, 50, 1);
+        assert_eq!(mean, 0.0);
+        assert_eq!(max, 0.0);
+    }
+
+    #[test]
+    fn sigma_errors() {
+        let e = sigma_relative_errors(&[1.1, 2.0], &[1.0, 2.0]);
+        assert!((e[0] - 0.1).abs() < 1e-12);
+        assert_eq!(e[1], 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Minimal command-line parser (clap is not available offline).
+//!
+//! Grammar: `tallfat <subcommand> [--flag] [--key value] [positional...]`.
+//! `--key=value` is also accepted.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut iter = tokens.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if rest.is_empty() {
+                    return Err(Error::parse("bare `--` not supported"));
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag or absent
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            args.options.insert(rest.to_string(), v);
+                        }
+                        _ => args.flags.push(rest.to_string()),
+                    }
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag (`--verbose`). Also true if passed as `--verbose=true`.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || matches!(self.options.get(name).map(String::as_str), Some("true") | Some("1"))
+    }
+
+    /// String option.
+    pub fn opt_str(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or(default).to_string()
+    }
+
+    /// Required string option.
+    pub fn require_str(&self, name: &str) -> Result<String> {
+        self.opt_str(name)
+            .map(String::from)
+            .ok_or_else(|| Error::Config(format!("missing required option --{name}")))
+    }
+
+    /// usize option with default.
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::parse(format!("--{name}: expected integer, got `{s}`"))),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::parse(format!("--{name}: expected integer, got `{s}`"))),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt_str(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::parse(format!("--{name}: expected float, got `{s}`"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("svd input.csv extra");
+        assert_eq!(a.command.as_deref(), Some("svd"));
+        assert_eq!(a.positional, vec!["input.csv", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_forms() {
+        let a = parse("svd --k 16 --block=512");
+        assert_eq!(a.usize_or("k", 0).unwrap(), 16);
+        assert_eq!(a.usize_or("block", 0).unwrap(), 512);
+    }
+
+    #[test]
+    fn flags() {
+        let a = parse("svd --verbose --k 8");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("svd --check");
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn defaults_and_missing() {
+        let a = parse("svd");
+        assert_eq!(a.usize_or("workers", 4).unwrap(), 4);
+        assert_eq!(a.f64_or("eps", 0.5).unwrap(), 0.5);
+        assert!(a.require_str("input").is_err());
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("svd --k sixteen");
+        assert!(a.usize_or("k", 0).is_err());
+    }
+
+    #[test]
+    fn negative_value_consumed_as_value() {
+        let a = parse("sim --offset -3.5");
+        assert_eq!(a.f64_or("offset", 0.0).unwrap(), -3.5);
+    }
+}

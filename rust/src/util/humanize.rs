@@ -1,0 +1,75 @@
+//! Human-readable formatting for the metrics reports and bench tables.
+
+use std::time::Duration;
+
+/// `1536` -> `"1.50 KiB"`.
+pub fn fmt_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[unit])
+    }
+}
+
+/// Compact duration: `"1.23s"`, `"45.6ms"`, `"789us"`, `"2m03s"`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 60.0 {
+        format!("{}m{:04.1}s", (s / 60.0) as u64, s % 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+/// Items-per-second: `"1.25M/s"`, `"830/s"`.
+pub fn fmt_rate(items: u64, elapsed: Duration) -> String {
+    let secs = elapsed.as_secs_f64().max(1e-12);
+    let r = items as f64 / secs;
+    if r >= 1e9 {
+        format!("{:.2}G/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}K/s", r / 1e3)
+    } else {
+        format!("{r:.0}/s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(1536), "1.50 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(fmt_duration(Duration::from_millis(45)), "45.0ms");
+        assert_eq!(fmt_duration(Duration::from_secs_f64(1.234)), "1.23s");
+        assert_eq!(fmt_duration(Duration::from_micros(500)), "500us");
+        assert_eq!(fmt_duration(Duration::from_secs(123)), "2m03.0s");
+    }
+
+    #[test]
+    fn rates() {
+        assert_eq!(fmt_rate(1000, Duration::from_secs(1)), "1.00K/s");
+        assert_eq!(fmt_rate(5, Duration::from_secs(1)), "5/s");
+        assert_eq!(fmt_rate(2_500_000, Duration::from_secs(1)), "2.50M/s");
+    }
+}

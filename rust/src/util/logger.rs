@@ -1,0 +1,129 @@
+//! Leveled stderr logger (no env_logger offline).
+//!
+//! Level picked from `TALLFAT_LOG` (error|warn|info|debug|trace), default
+//! `info`. Messages carry elapsed-since-start timestamps.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(255);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != 255 {
+        return cur;
+    }
+    let from_env = std::env::var("TALLFAT_LOG")
+        .map(|v| Level::from_str(&v))
+        .unwrap_or(Level::Info) as u8;
+    LEVEL.store(from_env, Ordering::Relaxed);
+    from_env
+}
+
+/// Override the log level programmatically (tests, CLI `--verbose`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Whether a message at `l` would be emitted.
+pub fn log_enabled(l: Level) -> bool {
+    (l as u8) <= level()
+}
+
+/// Emit a log line (prefer the [`crate::log_info!`]-style macros).
+pub fn log(l: Level, module: &str, msg: &str) {
+    if !log_enabled(l) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {module}] {msg}", l.tag());
+}
+
+/// Named logger handle for a module.
+#[derive(Clone, Copy)]
+pub struct Logger {
+    module: &'static str,
+}
+
+impl Logger {
+    pub const fn new(module: &'static str) -> Self {
+        Logger { module }
+    }
+
+    pub fn error(&self, msg: &str) {
+        log(Level::Error, self.module, msg);
+    }
+
+    pub fn warn(&self, msg: &str) {
+        log(Level::Warn, self.module, msg);
+    }
+
+    pub fn info(&self, msg: &str) {
+        log(Level::Info, self.module, msg);
+    }
+
+    pub fn debug(&self, msg: &str) {
+        log(Level::Debug, self.module, msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        set_level(Level::Warn);
+        assert!(log_enabled(Level::Error));
+        assert!(log_enabled(Level::Warn));
+        assert!(!log_enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+
+    #[test]
+    fn from_str_parsing() {
+        assert_eq!(Level::from_str("TRACE"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (no external crates are available offline:
+//! the CLI parser, logger, and formatting helpers are hand-rolled substrates).
+
+pub mod cli;
+pub mod humanize;
+pub mod logger;
+
+pub use cli::Args;
+pub use humanize::{fmt_bytes, fmt_duration, fmt_rate};
+pub use logger::{log_enabled, Level, Logger};

@@ -1,0 +1,138 @@
+//! Coordinator CLI integration: every subcommand end to end through
+//! `run_cli`, exactly as the binary drives it.
+
+use tallfat::coordinator::run_cli;
+use tallfat::util::Args;
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_cli_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn run(tokens: &[&str]) -> tallfat::Result<()> {
+    run_cli(&Args::parse(tokens.iter().map(|s| s.to_string())).unwrap())
+}
+
+fn gen(path: &str, rows: usize, cols: usize) {
+    run(&[
+        "gen-data", "--out", path, "--rows", &rows.to_string(), "--cols", &cols.to_string(),
+        "--rank", "4", "--noise", "0.01",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn full_cli_workflow() {
+    let d = dir("workflow");
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    gen(&input, 300, 24);
+    assert!(std::path::Path::new(&input).exists());
+    // exact spectrum sidecar written for in-memory datasets
+    assert!(std::path::Path::new(&format!("{input}.sigma")).exists());
+
+    let work = d.join("work").to_string_lossy().into_owned();
+    let prefix = d.join("out").to_string_lossy().into_owned();
+    run(&[
+        "svd", "--input", &input, "--k", "4", "--workers", "2", "--work-dir", &work,
+        "--validate", "--out-prefix", &prefix,
+    ])
+    .unwrap();
+    assert!(std::path::Path::new(&format!("{prefix}.sigma.csv")).exists());
+    assert!(std::path::Path::new(&format!("{prefix}.V.csv")).exists());
+}
+
+#[test]
+fn ata_and_mr_ata() {
+    let d = dir("ata");
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    gen(&input, 100, 8);
+    let out = d.join("gram.csv").to_string_lossy().into_owned();
+    run(&["ata", "--input", &input, "--workers", "3", "--out", &out]).unwrap();
+    let g = tallfat::io::read_matrix(&tallfat::io::InputSpec::auto(out)).unwrap();
+    assert_eq!(g.shape(), (8, 8));
+
+    let work = d.join("mrwork").to_string_lossy().into_owned();
+    run(&[
+        "mr-ata", "--input", &input, "--mappers", "2", "--reducers", "2", "--upper",
+        "--work-dir", &work,
+    ])
+    .unwrap();
+}
+
+#[test]
+fn project_and_mult() {
+    let d = dir("proj");
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    gen(&input, 120, 16);
+    let yprefix = d.join("Y").to_string_lossy().into_owned();
+    run(&[
+        "project", "--input", &input, "--k", "4", "--oversample", "0", "--workers", "2",
+        "--out-prefix", &yprefix,
+    ])
+    .unwrap();
+    assert!(std::path::Path::new(&format!("{yprefix}-0.csv")).exists());
+
+    // B for mult: 16 x 3
+    let b = d.join("b.csv").to_string_lossy().into_owned();
+    let bm = tallfat::linalg::Matrix::from_fn(16, 3, |i, j| (i + j) as f64 * 0.1);
+    tallfat::io::write_matrix(&bm, &tallfat::io::InputSpec::csv(b.clone())).unwrap();
+    let cprefix = d.join("C").to_string_lossy().into_owned();
+    run(&[
+        "mult", "--input", &input, "--b", &b, "--workers", "2", "--out-prefix", &cprefix,
+    ])
+    .unwrap();
+    assert!(std::path::Path::new(&format!("{cprefix}-0.csv")).exists());
+}
+
+#[test]
+fn exact_svd_and_simulate() {
+    let d = dir("exact");
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    gen(&input, 150, 10);
+    let work = d.join("work").to_string_lossy().into_owned();
+    run(&["exact-svd", "--input", &input, "--k", "4", "--work-dir", &work]).unwrap();
+    run(&[
+        "simulate", "--input", &input, "--workers-list", "1,2,4", "--rows-per-sec", "50000",
+    ])
+    .unwrap();
+}
+
+#[test]
+fn config_file_precedence() {
+    let d = dir("config");
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    gen(&input, 80, 8);
+    let cfg_path = d.join("run.toml").to_string_lossy().into_owned();
+    std::fs::write(
+        &cfg_path,
+        format!(
+            "[svd]\nk = 3\nworkers = 2\nwork_dir = \"{}\"\n",
+            d.join("w").to_string_lossy()
+        ),
+    )
+    .unwrap();
+    // CLI --k overrides the file's k = 3.
+    run(&["svd", "--input", &input, "--config", &cfg_path, "--k", "2"]).unwrap();
+}
+
+#[test]
+fn errors_are_reported_not_panicked() {
+    assert!(run(&["svd"]).is_err()); // missing --input
+    assert!(run(&["frobnicate"]).is_err()); // unknown command
+    assert!(run(&["ata", "--input", "/no/such/file.csv"]).is_err());
+    assert!(run(&["gen-data", "--rows", "10"]).is_err()); // missing --out
+}
+
+#[test]
+fn streamed_gen_data_bin() {
+    let d = dir("streamed");
+    let input = d.join("big.bin").to_string_lossy().into_owned();
+    run(&[
+        "gen-data", "--out", &input, "--rows", "5000", "--cols", "32", "--streamed",
+    ])
+    .unwrap();
+    let (m, n) = tallfat::io::InputSpec::auto(input).dims().unwrap();
+    assert_eq!((m, n), (5000, 32));
+}

@@ -1,0 +1,232 @@
+//! Distributed-mode integration: leader + N workers as real TCP peers
+//! (worker threads in-process; the protocol and phase execution are the
+//! same code paths the `tallfat worker` process runs), verified against
+//! the single-process pipeline.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::backend::BackendRef;
+use tallfat::cluster::leader::distributed_randomized_svd;
+use tallfat::cluster::proto::PhaseKind;
+use tallfat::cluster::{worker, DistributedLeader};
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_cluster_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn backend() -> BackendRef {
+    Arc::new(NativeBackend::new())
+}
+
+/// Pick an ephemeral port by probing.
+fn free_addr() -> String {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    addr
+}
+
+/// Spawn `n` worker threads that connect to `addr` and serve until
+/// shutdown. Returns join handles.
+fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                // retry until the leader is listening
+                let stream = loop {
+                    match TcpStream::connect(&addr) {
+                        Ok(s) => break s,
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                    }
+                };
+                worker::serve(stream, backend()).unwrap();
+            })
+        })
+        .collect()
+}
+
+#[test]
+fn distributed_svd_matches_local() {
+    let d = dir("svd");
+    let (a, sigma_true) = gen_exact(
+        600,
+        48,
+        8,
+        Spectrum::Geometric { scale: 10.0, decay: 0.6 },
+        0.0,
+        21,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 3);
+    let mut leader = DistributedLeader::accept(&addr, 3).unwrap();
+
+    let opts = SvdOptions {
+        k: 8,
+        oversample: 8,
+        workers: 3,
+        block: 64,
+        seed: 5,
+        work_dir: d.join("dist").to_string_lossy().into_owned(),
+        compute_v: true,
+        ..SvdOptions::default()
+    };
+    let dist = distributed_randomized_svd(&mut leader, &input, backend(), &opts).unwrap();
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // vs ground truth
+    for i in 0..8 {
+        let rel = (dist.sigma[i] - sigma_true[i]).abs() / sigma_true[i];
+        assert!(rel < 1e-8, "sigma[{i}] {} vs {}", dist.sigma[i], sigma_true[i]);
+    }
+    // vs local pipeline (identical seed => identical sketch)
+    let mut local_opts = opts.clone();
+    local_opts.work_dir = d.join("local").to_string_lossy().into_owned();
+    let local = randomized_svd_file(&input, backend(), &local_opts).unwrap();
+    for i in 0..8 {
+        let rel = (dist.sigma[i] - local.sigma[i]).abs() / local.sigma[i];
+        assert!(rel < 1e-10, "dist vs local sigma[{i}]");
+    }
+    // U shards valid + orthonormal
+    let err = validate::reconstruction_error_streaming(&input, &dist).unwrap();
+    assert!(err < 1e-7, "reconstruction {err}");
+    let ortho = validate::u_orthonormality_residual(&dist.u_shards, dist.shards, dist.k).unwrap();
+    assert!(ortho < 1e-8, "orthonormality {ortho}");
+}
+
+#[test]
+fn distributed_svd_with_power_iterations() {
+    let d = dir("power");
+    let (a, _) = gen_exact(300, 32, 32, Spectrum::Power { scale: 10.0 }, 0.0, 22).unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut leader = DistributedLeader::accept(&addr, 2).unwrap();
+    let opts = SvdOptions {
+        k: 6,
+        oversample: 6,
+        power_iters: 2,
+        workers: 2,
+        block: 64,
+        seed: 1,
+        work_dir: d.join("dist").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let dist = distributed_randomized_svd(&mut leader, &input, backend(), &opts).unwrap();
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let mut local_opts = opts.clone();
+    local_opts.work_dir = d.join("local").to_string_lossy().into_owned();
+    let local = randomized_svd_file(&input, backend(), &local_opts).unwrap();
+    for i in 0..6 {
+        let rel = (dist.sigma[i] - local.sigma[i]).abs() / local.sigma[i];
+        assert!(rel < 1e-9, "power-iter dist vs local sigma[{i}]");
+    }
+}
+
+#[test]
+fn distributed_ata_phase() {
+    let d = dir("ata");
+    let (a, _) = gen_exact(
+        200,
+        12,
+        12,
+        Spectrum::Geometric { scale: 3.0, decay: 0.9 },
+        0.05,
+        23,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut leader = DistributedLeader::accept(&addr, 2).unwrap();
+    let (rows, partials) = leader
+        .run_phase(
+            PhaseKind::Ata,
+            &input,
+            &d.join("w").to_string_lossy(),
+            64,
+            0,
+            12,
+            &tallfat::linalg::Matrix::zeros(0, 0),
+        )
+        .unwrap();
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(rows, 200);
+    let g = tallfat::splitproc::reduce_partials(partials).unwrap();
+    let want = tallfat::linalg::gram(&a);
+    assert!(g.max_abs_diff(&want) < 1e-9);
+}
+
+#[test]
+fn worker_failure_is_reported_to_leader() {
+    let d = dir("fail");
+    // Input the leader can see but with a bogus path sent to workers: the
+    // worker-side error must come back as Failed, not hang or kill the
+    // connection.
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 1);
+    let mut leader = DistributedLeader::accept(&addr, 1).unwrap();
+    let bogus = InputSpec::csv("/nonexistent/a.csv".to_string());
+    let r = leader.run_phase(
+        PhaseKind::Ata,
+        &bogus,
+        &d.join("w").to_string_lossy(),
+        64,
+        0,
+        4,
+        &tallfat::linalg::Matrix::zeros(0, 0),
+    );
+    assert!(r.is_err(), "leader must surface the worker failure");
+    // The worker stays up after reporting failure; shutdown still works.
+    leader.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn version_mismatch_rejected() {
+    use std::io::Write as _;
+    let addr = free_addr();
+    let addr2 = addr.clone();
+    let rogue = std::thread::spawn(move || {
+        let mut s = loop {
+            match TcpStream::connect(&addr2) {
+                Ok(s) => break s,
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+            }
+        };
+        // Hand-written hello with a wrong version.
+        let payload = 999u32.to_le_bytes();
+        s.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(&[0x10]).unwrap();
+        s.write_all(&payload).unwrap();
+    });
+    let r = DistributedLeader::accept(&addr, 1);
+    assert!(r.is_err());
+    rogue.join().unwrap();
+}

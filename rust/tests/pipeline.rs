@@ -1,0 +1,438 @@
+//! End-to-end pipeline integration tests: the full randomized SVD over
+//! files, against known ground truth, plus failure injection.
+
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::backend::BackendRef;
+use tallfat::io::dataset::{gen_clustered, gen_exact, gen_streamed, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::jobs::AtaRowJob;
+use tallfat::linalg::{exact_svd, matmul, Matrix};
+use tallfat::mapreduce::{ata_mapreduce, AtaMrMode};
+use tallfat::splitproc;
+use tallfat::svd::{gram_svd_file, randomized_svd_file, validate, SvdOptions};
+
+fn backend() -> BackendRef {
+    Arc::new(NativeBackend::new())
+}
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn opts(work: &std::path::Path, k: usize, workers: usize) -> SvdOptions {
+    SvdOptions {
+        k,
+        oversample: 8,
+        workers,
+        block: 64,
+        seed: 42,
+        work_dir: work.to_string_lossy().into_owned(),
+        compute_v: true,
+        ..SvdOptions::default()
+    }
+}
+
+/// Exact low-rank input: the randomized SVD must recover the spectrum to
+/// near machine precision (rank <= sketch width).
+#[test]
+fn recovers_exact_low_rank_spectrum() {
+    let d = dir("exact_lowrank");
+    let (a, sigma) = gen_exact(
+        500,
+        48,
+        8,
+        Spectrum::Geometric { scale: 10.0, decay: 0.6 },
+        0.0,
+        1,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let res = randomized_svd_file(&input, backend(), &opts(&d, 8, 3)).unwrap();
+    for i in 0..8 {
+        let rel = (res.sigma[i] - sigma[i]).abs() / sigma[i];
+        assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", res.sigma[i], sigma[i]);
+    }
+    let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
+    assert!(err < 1e-7, "reconstruction error {err}");
+    // U orthonormal
+    let ortho = validate::u_orthonormality_residual(&res.u_shards, res.shards, res.k).unwrap();
+    assert!(ortho < 1e-8, "orthonormality {ortho}");
+}
+
+/// Noisy full-rank input: error must approach the optimal rank-k error
+/// (exact SVD tail), within the sketching constant.
+#[test]
+fn near_optimal_on_noisy_spectrum() {
+    let d = dir("noisy");
+    let (a, _) = gen_exact(
+        300,
+        40,
+        40,
+        Spectrum::Geometric { scale: 10.0, decay: 0.8 },
+        0.0,
+        2,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let k = 10;
+    let res = randomized_svd_file(&input, backend(), &opts(&d, k, 2)).unwrap();
+    let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
+
+    let svd = exact_svd(&a).unwrap();
+    let opt = tallfat::linalg::truncation_error(&a, &svd, k);
+    assert!(
+        err < 1.5 * opt + 1e-12,
+        "rand err {err} vs optimal {opt} (should be within 1.5x)"
+    );
+}
+
+/// V agreement: right singular vectors from the pipeline vs exact SVD
+/// (up to sign), on a well-separated spectrum.
+#[test]
+fn right_singular_vectors_match_exact() {
+    let d = dir("vvecs");
+    let (a, _) = gen_exact(
+        400,
+        24,
+        6,
+        Spectrum::Geometric { scale: 8.0, decay: 0.5 },
+        0.0,
+        3,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let res = randomized_svd_file(&input, backend(), &opts(&d, 6, 2)).unwrap();
+    let v = res.v.as_ref().unwrap();
+    let svd = exact_svd(&a).unwrap();
+    for j in 0..6 {
+        let dot: f64 = (0..24).map(|i| v.get(i, j) * svd.v.get(i, j)).sum();
+        assert!(dot.abs() > 0.9999, "V col {j}: |dot| = {}", dot.abs());
+    }
+}
+
+/// The exact-Gram route (paper §2.0.1, small n) equals the exact SVD.
+#[test]
+fn gram_route_equals_exact_svd() {
+    let d = dir("gram_route");
+    let (a, _) = gen_exact(
+        250,
+        16,
+        16,
+        Spectrum::Power { scale: 5.0 },
+        0.0,
+        4,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let res = gram_svd_file(&input, backend(), &opts(&d, 16, 3)).unwrap();
+    let svd = exact_svd(&a).unwrap();
+    for i in 0..16 {
+        let rel = (res.sigma[i] - svd.sigma[i]).abs() / svd.sigma[i].max(1e-12);
+        assert!(rel < 1e-6, "sigma[{i}] {} vs {}", res.sigma[i], svd.sigma[i]);
+    }
+}
+
+/// Power iterations improve the hard (slow-decay) case.
+#[test]
+fn power_iterations_help_slow_decay() {
+    let d = dir("power");
+    let (a, _) = gen_exact(300, 64, 64, Spectrum::Power { scale: 10.0 }, 0.0, 5).unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let mut e = vec![];
+    for q in [0usize, 2] {
+        let mut o = opts(&d.join(format!("w{q}")), 8, 2);
+        o.power_iters = q;
+        std::fs::create_dir_all(&o.work_dir).unwrap();
+        let res = randomized_svd_file(&input, backend(), &o).unwrap();
+        e.push(validate::reconstruction_error_streaming(&input, &res).unwrap());
+    }
+    assert!(
+        e[1] <= e[0] + 1e-9,
+        "q=2 ({}) should not be worse than q=0 ({})",
+        e[1],
+        e[0]
+    );
+}
+
+/// Worker count must not change results (bitwise determinism is not
+/// required across worker counts, but fp-tolerance equality is).
+#[test]
+fn worker_count_invariance() {
+    let d = dir("workers");
+    let (a, _) = gen_exact(
+        333,
+        32,
+        8,
+        Spectrum::Geometric { scale: 5.0, decay: 0.7 },
+        0.01,
+        6,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let mut sigmas = vec![];
+    for w in [1usize, 2, 5] {
+        let o = opts(&d.join(format!("w{w}")), 6, w);
+        std::fs::create_dir_all(&o.work_dir).unwrap();
+        let res = randomized_svd_file(&input, backend(), &o).unwrap();
+        sigmas.push(res.sigma);
+    }
+    for s in &sigmas[1..] {
+        for i in 0..6 {
+            let rel = (s[i] - sigmas[0][i]).abs() / sigmas[0][i];
+            assert!(rel < 1e-9, "worker-count drift at sigma[{i}]");
+        }
+    }
+}
+
+/// Binary and CSV inputs produce identical factorizations.
+#[test]
+fn csv_and_bin_inputs_agree() {
+    let d = dir("formats");
+    let (a, _) = gen_exact(
+        200,
+        24,
+        6,
+        Spectrum::Geometric { scale: 4.0, decay: 0.6 },
+        0.0,
+        7,
+    )
+    .unwrap();
+    let csv = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    let bin = InputSpec::bin(d.join("a.bin").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &csv).unwrap();
+    tallfat::io::write_matrix(&a, &bin).unwrap();
+    let r1 = randomized_svd_file(&csv, backend(), &opts(&d.join("c"), 6, 2)).unwrap();
+    let r2 = randomized_svd_file(&bin, backend(), &opts(&d.join("b"), 6, 2)).unwrap();
+    for i in 0..6 {
+        // CSV stores ~12 significant digits; allow that roundtrip error.
+        let rel = (r1.sigma[i] - r2.sigma[i]).abs() / r1.sigma[i];
+        assert!(rel < 1e-9, "format drift at sigma[{i}]: {rel}");
+    }
+}
+
+/// Streamed generator + clustered generator smoke: pipeline runs over them.
+#[test]
+fn generators_feed_the_pipeline() {
+    let d = dir("gens");
+    let streamed = InputSpec::bin(d.join("s.bin").to_string_lossy().into_owned());
+    gen_streamed(&streamed, 2000, 32, 8, Spectrum::Geometric { scale: 3.0, decay: 0.7 }, 0.01, 8)
+        .unwrap();
+    let res = randomized_svd_file(&streamed, backend(), &opts(&d, 8, 3)).unwrap();
+    assert_eq!(res.m, 2000);
+    assert!(res.sigma[0] > 0.0);
+
+    let (c, _) = gen_clustered(150, 20, 5, 0.3, 9);
+    let cin = InputSpec::csv(d.join("c.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&c, &cin).unwrap();
+    let res = randomized_svd_file(&cin, backend(), &opts(&d.join("c"), 4, 2)).unwrap();
+    assert_eq!(res.n, 20);
+}
+
+/// Map-Reduce baseline and Split-Process agree on the Gram matrix.
+#[test]
+fn mapreduce_equals_splitproc() {
+    let d = dir("mr_eq");
+    let (a, _) = gen_exact(
+        120,
+        10,
+        10,
+        Spectrum::Geometric { scale: 2.0, decay: 0.9 },
+        0.1,
+        10,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let results = splitproc::run(&input, 3, |_| Ok(AtaRowJob::new(10))).unwrap();
+    let sp = splitproc::reduce_partials(results.into_iter().map(|r| r.job.into_partial()).collect())
+        .unwrap();
+    for mode in [AtaMrMode::Full, AtaMrMode::Upper] {
+        let (mr, stats) = ata_mapreduce(&input, d.join("work"), 3, 2, mode).unwrap();
+        assert!(mr.max_abs_diff(&sp) < 1e-9);
+        assert!(stats.shuffle_bytes > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// failure injection
+// ---------------------------------------------------------------------------
+
+#[test]
+fn malformed_csv_row_is_an_error_not_a_hang() {
+    let d = dir("bad_csv");
+    let path = d.join("bad.csv").to_string_lossy().into_owned();
+    std::fs::write(&path, "1.0;2.0;3.0\n1.0;banana;3.0\n4.0;5.0;6.0\n").unwrap();
+    let input = InputSpec::csv(path);
+    let r = randomized_svd_file(&input, backend(), &opts(&d, 2, 2));
+    assert!(r.is_err());
+}
+
+#[test]
+fn ragged_csv_rows_error() {
+    let d = dir("ragged");
+    let path = d.join("ragged.csv").to_string_lossy().into_owned();
+    std::fs::write(&path, "1.0;2.0;3.0\n1.0;2.0\n").unwrap();
+    let r = randomized_svd_file(&InputSpec::csv(path), backend(), &opts(&d, 2, 1));
+    assert!(r.is_err());
+}
+
+#[test]
+fn missing_file_errors() {
+    let d = dir("missing");
+    let r = randomized_svd_file(
+        &InputSpec::csv("/nonexistent/never/a.csv"),
+        backend(),
+        &opts(&d, 2, 1),
+    );
+    assert!(r.is_err());
+}
+
+#[test]
+fn empty_file_errors() {
+    let d = dir("empty");
+    let path = d.join("empty.csv").to_string_lossy().into_owned();
+    std::fs::write(&path, "").unwrap();
+    let r = randomized_svd_file(&InputSpec::csv(path), backend(), &opts(&d, 2, 2));
+    assert!(r.is_err());
+}
+
+#[test]
+fn more_workers_than_rows_still_correct() {
+    let d = dir("overworkers");
+    let (a, sigma) = gen_exact(
+        6,
+        12,
+        3,
+        Spectrum::Geometric { scale: 4.0, decay: 0.5 },
+        0.0,
+        11,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let res = randomized_svd_file(&input, backend(), &opts(&d, 3, 16)).unwrap();
+    for i in 0..3 {
+        let rel = (res.sigma[i] - sigma[i]).abs() / sigma[i];
+        assert!(rel < 1e-8, "sigma[{i}]");
+    }
+}
+
+/// U^T U stays orthonormal even when sigma has a zero tail (rank-deficient
+/// guarded inverse path).
+#[test]
+fn rank_deficient_input_is_guarded() {
+    let d = dir("rankdef");
+    // rank 3 matrix but ask for k = 6
+    let (a, _) = gen_exact(
+        120,
+        16,
+        3,
+        Spectrum::LowRank { scale: 5.0, r: 3 },
+        0.0,
+        12,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let res = randomized_svd_file(&input, backend(), &opts(&d, 6, 2)).unwrap();
+    // Reconstruction must still be near perfect (tail sigma ~ 0).
+    let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
+    assert!(err < 1e-6, "rank-deficient reconstruction {err}");
+    // And nothing is NaN.
+    assert!(res.sigma.iter().all(|s| s.is_finite()));
+    let u = res.u_matrix().unwrap();
+    assert!(u.data().iter().all(|v| v.is_finite()));
+}
+
+/// Reconstruction helper on SvdResult composes U, sigma, V correctly.
+#[test]
+fn reconstruct_matches_input() {
+    let d = dir("reconstruct");
+    let (a, _) = gen_exact(
+        80,
+        12,
+        4,
+        Spectrum::Geometric { scale: 3.0, decay: 0.5 },
+        0.0,
+        13,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    let res = randomized_svd_file(&input, backend(), &opts(&d, 4, 2)).unwrap();
+    let ak = res.reconstruct().unwrap();
+    // a is exactly rank 4, so A_4 == A.
+    assert!(ak.max_abs_diff(&a) < 1e-8);
+    // Cross-check with dense error helper.
+    let u = res.u_matrix().unwrap();
+    let e =
+        validate::dense_reconstruction_error(&a, &u, &res.sigma, res.v.as_ref().unwrap()).unwrap();
+    let _ = matmul(&u.t(), &u).unwrap();
+    assert!(e < 1e-8);
+}
+
+/// PCA mode: centered factorization matches the exact SVD of `A - 1 muT`.
+#[test]
+fn pca_centering_matches_dense_centered_svd() {
+    let d = dir("pca");
+    // Shift columns by large offsets so centering is load-bearing.
+    let (mut a, _) = gen_exact(
+        400,
+        20,
+        5,
+        Spectrum::Geometric { scale: 4.0, decay: 0.6 },
+        0.0,
+        30,
+    )
+    .unwrap();
+    for i in 0..a.rows() {
+        for j in 0..a.cols() {
+            let v = a.get(i, j) + 10.0 * (j as f64 + 1.0);
+            a.set(i, j, v);
+        }
+    }
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let mut o = opts(&d, 5, 3);
+    o.center = true;
+    let res = randomized_svd_file(&input, backend(), &o).unwrap();
+
+    // Dense oracle: exact SVD of the centered matrix.
+    let means: Vec<f64> = (0..a.cols())
+        .map(|j| (0..a.rows()).map(|i| a.get(i, j)).sum::<f64>() / a.rows() as f64)
+        .collect();
+    let centered = Matrix::from_fn(a.rows(), a.cols(), |i, j| a.get(i, j) - means[j]);
+    let svd = exact_svd(&centered).unwrap();
+    for i in 0..5 {
+        let rel = (res.sigma[i] - svd.sigma[i]).abs() / svd.sigma[i].max(1e-12);
+        assert!(rel < 1e-8, "pca sigma[{i}]: {} vs {}", res.sigma[i], svd.sigma[i]);
+    }
+    // Recorded means round-trip.
+    let got_means = res.means.as_ref().unwrap();
+    for j in 0..a.cols() {
+        assert!((got_means[j] - means[j]).abs() < 1e-9);
+    }
+    // Streaming validation knows to compare against the centered matrix.
+    let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
+    assert!(err < 1e-7, "centered reconstruction {err}");
+
+    // Without centering the same k misses badly (offsets dominate).
+    let res_raw = randomized_svd_file(&input, backend(), &opts(&d.join("raw"), 5, 3)).unwrap();
+    assert!(
+        (res_raw.sigma[0] - res.sigma[0]).abs() / res.sigma[0] > 1.0,
+        "column offsets should dominate the uncentered spectrum"
+    );
+}

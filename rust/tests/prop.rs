@@ -1,0 +1,200 @@
+//! Property-based tests on the system's core invariants.
+//!
+//! `proptest` is unavailable offline, so `support::Cases` provides the same
+//! discipline by hand: a seeded, deterministic case generator sweeping a
+//! randomized parameter space, with the failing seed printed on panic.
+
+mod support;
+
+use support::Cases;
+use tallfat::backend::{native::NativeBackend, Backend};
+use tallfat::linalg::{eigen::eigh, gram, gram_outer, matmul, qr::thin_qr, Matrix};
+use tallfat::rng::{Gaussian, VirtualMatrix};
+use tallfat::splitproc::{BlockJob, Blocked};
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let g = Gaussian::new(seed);
+    Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+}
+
+/// `A^T A` from row outer products == blocked syrk == full matmul.
+#[test]
+fn prop_gram_paths_agree() {
+    Cases::new(40, 0xA11CE).run(|case| {
+        let m = case.usize_in(1, 200);
+        let n = case.usize_in(1, 24);
+        let a = rand_matrix(m, n, case.seed());
+        let g_outer = gram_outer(&a);
+        let g_syrk = gram(&a);
+        let g_mm = matmul(&a.t(), &a).unwrap();
+        let tol = 1e-9 * (m as f64).max(1.0);
+        assert!(g_outer.max_abs_diff(&g_mm) < tol, "outer vs matmul: {case}");
+        assert!(g_syrk.max_abs_diff(&g_mm) < tol, "syrk vs matmul: {case}");
+    });
+}
+
+/// Zero-row padding leaves Gram/projection/tmul unchanged (the invariant
+/// the fixed-shape XLA artifacts rely on).
+#[test]
+fn prop_zero_row_padding_is_identity() {
+    Cases::new(40, 0xBEEF).run(|case| {
+        let m = case.usize_in(1, 64);
+        let n = case.usize_in(1, 16);
+        let k = case.usize_in(1, 8);
+        let pad = case.usize_in(1, 32);
+        let a = rand_matrix(m, n, case.seed());
+        let w = rand_matrix(n, k, case.seed() ^ 1);
+        let mut padded = Matrix::zeros(m + pad, n);
+        for i in 0..m {
+            padded.row_mut(i).copy_from_slice(a.row(i));
+        }
+        assert!(gram(&padded).max_abs_diff(&gram(&a)) < 1e-12, "{case}");
+        let y = matmul(&a, &w).unwrap();
+        let y_pad = matmul(&padded, &w).unwrap();
+        assert!(y_pad.slice_rows(0, m).max_abs_diff(&y) < 1e-12, "{case}");
+        for i in m..m + pad {
+            assert!(y_pad.row(i).iter().all(|&v| v == 0.0), "{case}");
+        }
+    });
+}
+
+/// The virtual Ω is deterministic and order/block independent.
+#[test]
+fn prop_virtual_matrix_deterministic() {
+    Cases::new(30, 0xC0FFEE).run(|case| {
+        let n = case.usize_in(1, 64);
+        let k = case.usize_in(1, 16);
+        let seed = case.seed();
+        let vm = VirtualMatrix::projection(seed, n, k);
+        let full = vm.materialize();
+        // Block materialization at any split point agrees elementwise.
+        let split = case.usize_in(0, n);
+        let top = vm.materialize_rows(0, split);
+        let bot = vm.materialize_rows(split, n - split);
+        for i in 0..n {
+            for j in 0..k {
+                let want = full.get(i, j);
+                let got = if i < split { top.get(i, j) } else { bot.get(i - split, j) };
+                assert_eq!(want, got, "block vs full at ({i},{j}): {case}");
+                assert_eq!(want, vm.element(i, j), "element vs full: {case}");
+            }
+        }
+    });
+}
+
+/// Jacobi eigendecomposition: V orthonormal, A V = V diag(w), trace
+/// preserved, descending order.
+#[test]
+fn prop_eigh_invariants() {
+    Cases::new(30, 0xE16E).run(|case| {
+        let n = case.usize_in(1, 24);
+        let x = rand_matrix(n + case.usize_in(1, 20), n, case.seed());
+        let a = gram(&x); // symmetric PSD
+        let (w, v) = eigh(&a).unwrap();
+        // descending
+        for i in 1..n {
+            assert!(w[i - 1] >= w[i] - 1e-9, "order: {case}");
+        }
+        // trace preserved
+        let tr: f64 = (0..n).map(|i| a.get(i, i)).sum();
+        let sw: f64 = w.iter().sum();
+        assert!((tr - sw).abs() <= 1e-8 * tr.abs().max(1.0), "trace: {case}");
+        // orthonormal V
+        let vtv = matmul(&v.t(), &v).unwrap();
+        assert!(vtv.max_abs_diff(&Matrix::eye(n)) < 1e-8, "orthonormality: {case}");
+        // A V = V diag(w)
+        let av = matmul(&a, &v).unwrap();
+        let vw = v.scale_cols(&w).unwrap();
+        let scale = w.first().copied().unwrap_or(1.0).abs().max(1.0);
+        assert!(av.max_abs_diff(&vw) < 1e-7 * scale, "residual: {case}");
+    });
+}
+
+/// Thin QR: Q orthonormal, QR = A.
+#[test]
+fn prop_qr_invariants() {
+    Cases::new(30, 0x9A).run(|case| {
+        let n = case.usize_in(1, 16);
+        let m = n + case.usize_in(0, 48);
+        let a = rand_matrix(m, n, case.seed());
+        let (q, r) = thin_qr(&a).unwrap();
+        let qtq = matmul(&q.t(), &q).unwrap();
+        assert!(qtq.max_abs_diff(&Matrix::eye(n)) < 1e-9, "Q orth: {case}");
+        let qr = matmul(&q, &r).unwrap();
+        assert!(qr.max_abs_diff(&a) < 1e-9, "QR = A: {case}");
+        // R upper triangular
+        for i in 0..n {
+            for j in 0..i {
+                assert!(r.get(i, j).abs() < 1e-12, "R triangular: {case}");
+            }
+        }
+    });
+}
+
+/// Blocked row-buffering delivers exactly the same blocks-sum as unblocked.
+#[test]
+fn prop_blocked_adapter_is_lossless() {
+    struct Collect {
+        rows_seen: usize,
+        sum: f64,
+    }
+    impl BlockJob for Collect {
+        fn exec_block(&mut self, block: &Matrix) -> tallfat::Result<()> {
+            self.rows_seen += block.rows();
+            self.sum += block.data().iter().sum::<f64>();
+            Ok(())
+        }
+    }
+    Cases::new(40, 0xB10C).run(|case| {
+        let m = case.usize_in(1, 300);
+        let n = case.usize_in(1, 8);
+        let block = case.usize_in(1, 64);
+        let a = rand_matrix(m, n, case.seed());
+        let mut job = Blocked::new(Collect { rows_seen: 0, sum: 0.0 }, block, n);
+        use tallfat::splitproc::RowJob;
+        for i in 0..m {
+            job.exec_row(a.row(i)).unwrap();
+        }
+        job.post().unwrap();
+        let inner = job.into_inner();
+        assert_eq!(inner.rows_seen, m, "{case}");
+        let want: f64 = a.data().iter().sum();
+        assert!((inner.sum - want).abs() < 1e-9 * (m as f64), "{case}");
+    });
+}
+
+/// Native backend fused op == separate project + gram of the projection.
+#[test]
+fn prop_fused_equals_composed() {
+    let backend = NativeBackend::new();
+    Cases::new(30, 0xF5ED).run(|case| {
+        let b = case.usize_in(1, 128);
+        let n = case.usize_in(1, 32);
+        let k = case.usize_in(1, 8);
+        let x = rand_matrix(b, n, case.seed());
+        let w = rand_matrix(n, k, case.seed() ^ 7);
+        let (y_fused, g_fused) = backend.project_gram_block(&x, &w).unwrap();
+        let y = backend.project_block(&x, &w).unwrap();
+        let g = gram(&y);
+        assert!(y_fused.max_abs_diff(&y) < 1e-10, "{case}");
+        assert!(g_fused.max_abs_diff(&g) < 1e-9, "{case}");
+    });
+}
+
+/// Random projection approximately preserves pairwise distances (JL):
+/// statistical property, wide tolerance, but must hold for every seed.
+#[test]
+fn prop_jl_distance_preservation() {
+    Cases::new(10, 0x11).run(|case| {
+        let m = 40;
+        let n = 64;
+        let k = 48; // generous k for a tight-ish bound
+        let a = rand_matrix(m, n, case.seed());
+        let vm = VirtualMatrix::projection(case.seed() ^ 0xABCD, n, k);
+        let omega = vm.materialize();
+        let y = matmul(&a, &omega).unwrap();
+        let (mean, max) = tallfat::svd::validate::distance_distortion(&a, &y, 200, 3);
+        assert!(mean < 0.25, "mean distortion {mean}: {case}");
+        assert!(max < 0.8, "max distortion {max}: {case}");
+    });
+}

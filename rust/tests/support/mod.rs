@@ -1,0 +1,72 @@
+//! Hand-rolled property-test support (proptest is unavailable offline).
+
+use std::fmt;
+use tallfat::rng::splitmix64;
+
+/// One generated case: a deterministic stream of draws from a seed.
+pub struct Case {
+    seed: u64,
+    counter: u64,
+    index: usize,
+}
+
+impl Case {
+    /// The case's base seed (stable across draws).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    fn next(&mut self) -> u64 {
+        self.counter += 1;
+        splitmix64(self.seed ^ self.counter.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Uniform integer in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + (self.next() % (hi - lo + 1) as u64) as usize
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    #[allow(dead_code)]
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * (self.next() as f64 / u64::MAX as f64)
+    }
+
+    /// Coin flip.
+    #[allow(dead_code)]
+    pub fn bool(&mut self) -> bool {
+        self.next() & 1 == 1
+    }
+}
+
+impl fmt::Display for Case {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[case #{} seed={:#x}]", self.index, self.seed)
+    }
+}
+
+/// A deterministic sweep of `count` cases derived from a root seed.
+/// On assertion failure the panic message carries `{case}` so the exact
+/// failing parameters can be replayed.
+pub struct Cases {
+    count: usize,
+    root: u64,
+}
+
+impl Cases {
+    pub fn new(count: usize, root: u64) -> Self {
+        Cases { count, root }
+    }
+
+    pub fn run(&self, mut f: impl FnMut(&mut Case)) {
+        for index in 0..self.count {
+            let mut case = Case {
+                seed: splitmix64(self.root ^ (index as u64) << 32),
+                counter: 0,
+                index,
+            };
+            f(&mut case);
+        }
+    }
+}
