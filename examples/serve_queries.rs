@@ -1,0 +1,150 @@
+//! End-to-end tour of the serving subsystem: factorize a clustered
+//! document matrix, persist it as a model directory, boot the HTTP query
+//! server, and drive it like a client — project, top-k similarity,
+//! reconstruction — cross-checking one query against an in-process oracle.
+//!
+//! ```sh
+//! cargo run --release --example serve_queries -- --rows 3000 --cols 256 --k 12
+//! ```
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::io::dataset::gen_clustered;
+use tallfat::io::InputSpec;
+use tallfat::linalg::matmul;
+use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::util::Args;
+
+fn post_query(addr: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string()
+}
+
+fn main() -> tallfat::Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let m = args.usize_or("rows", 3000)?;
+    let n = args.usize_or("cols", 256)?;
+    let k = args.usize_or("k", 12)?;
+    let clusters = args.usize_or("clusters", 10)?;
+
+    let dir = std::env::temp_dir().join("tallfat_serve_example");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // ---- 1. factorize a clustered "document" matrix ----------------------
+    println!("== {m} documents x {n} terms, {clusters} topics, rank-{k} model ==");
+    let (a, labels) = gen_clustered(m, n, clusters, 3.0, 2013);
+    let input = InputSpec::csv(dir.join("docs.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input)?;
+    let opts = SvdOptions {
+        k,
+        oversample: 8,
+        workers: 4,
+        seed: 5,
+        work_dir: dir.join("work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let t0 = std::time::Instant::now();
+    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
+    println!("   factorized in {:.2?} ({} U shards)", t0.elapsed(), result.shards);
+
+    // ---- 2. persist as a servable model ----------------------------------
+    let model_dir = dir.join("model");
+    result.save_model(&model_dir, Some(opts.seed))?;
+    let model_bytes: u64 = std::fs::read_dir(&model_dir)?
+        .filter_map(|e| e.ok()?.metadata().ok())
+        .map(|md| md.len())
+        .sum();
+    println!(
+        "   model saved to {} ({})",
+        model_dir.display(),
+        tallfat::util::humanize::fmt_bytes(model_bytes)
+    );
+
+    // ---- 3. boot the HTTP server on an ephemeral port --------------------
+    let store = Arc::new(ModelStore::open(&model_dir, 4)?);
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new()))?);
+    let oracle_engine = engine.clone();
+    let server = ModelServer::bind(
+        engine,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(3),
+            ..ServeOptions::default()
+        },
+    )?;
+    let addr = server.local_addr()?.to_string();
+    println!("== serving on http://{addr}/query ==");
+    let srv = std::thread::spawn(move || server.run());
+
+    // ---- 4. query it like a client ---------------------------------------
+    let qdoc = 17usize;
+    let row_json = Json::from_f64s(a.row(qdoc)).render();
+    let body = format!(
+        "{{\"op\":\"project\",\"row\":{row_json}}}\n\
+         {{\"op\":\"similar\",\"row\":{row_json},\"k\":8}}\n\
+         {{\"op\":\"reconstruct\",\"row_id\":{qdoc}}}\n"
+    );
+    let ndjson = post_query(&addr, &body);
+    let lines: Vec<Json> = ndjson.lines().map(|l| Json::parse(l).unwrap()).collect();
+
+    let latent = lines[0].get("latent").and_then(Json::as_f64_array).unwrap();
+    println!(
+        "\nproject doc #{qdoc} -> latent[{}] = [{}]",
+        latent.len(),
+        latent.iter().take(4).map(|v| format!("{v:.3}")).collect::<Vec<_>>().join(", ")
+    );
+
+    println!("\ntop-8 similar documents (doc #{qdoc} is topic {}):", labels[qdoc]);
+    println!("{:>8} {:>10} {:>7}", "doc", "cosine", "topic");
+    for h in lines[1].get("hits").and_then(Json::as_array).unwrap() {
+        let row = h.get("row").and_then(Json::as_usize).unwrap();
+        let score = h.get("score").and_then(Json::as_f64).unwrap();
+        println!("{row:>8} {score:>10.4} {:>7}", labels[row]);
+    }
+
+    let recon = lines[2].get("values").and_then(Json::as_f64_array).unwrap();
+    let err: f64 =
+        recon.iter().zip(a.row(qdoc)).map(|(g, w)| (g - w) * (g - w)).sum::<f64>().sqrt();
+    let scale: f64 = a.row(qdoc).iter().map(|v| v * v).sum::<f64>().sqrt();
+    println!("\nreconstruct doc #{qdoc}: rank-{k} relative error {:.4}", err / scale.max(1e-12));
+
+    // ---- 5. metrics + oracle cross-check ---------------------------------
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut metrics = String::new();
+    s.read_to_string(&mut metrics).unwrap();
+    // third accepted connection was the /model probe below
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"GET /model HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let mut _drain = String::new();
+    let _ = s.read_to_string(&mut _drain);
+    let _ = srv.join();
+    println!("\nserve metrics:");
+    for line in metrics.lines().filter(|l| l.starts_with("tallfat_serve_")) {
+        println!("  {line}");
+    }
+
+    let oracle = matmul(
+        &tallfat::linalg::Matrix::from_rows(&[a.row(qdoc).to_vec()])?,
+        oracle_engine.projection_matrix(),
+    )?;
+    let max_diff = latent
+        .iter()
+        .zip(oracle.row(0).iter())
+        .fold(0.0f64, |acc, (g, w)| acc.max((g - w).abs()));
+    println!("\nHTTP projection vs in-process linalg oracle: max |Δ| = {max_diff:.2e}");
+    assert!(max_diff < 1e-6);
+    println!("OK — served results match the oracle.");
+    Ok(())
+}

@@ -1,0 +1,147 @@
+//! S1 — serve-path load generation: QPS and latency of the HTTP query
+//! engine under concurrent clients, across micro-batch windows.
+//!
+//! Builds (or reuses) a rank-16 model of a 20,000 x 256 synthetic matrix,
+//! boots the `ModelServer` on an ephemeral port, and hammers it with
+//! concurrent connections issuing a project/similar mix. The batching
+//! claim being measured: a wider coalescing window trades a little latency
+//! for fewer, larger backend matmuls on the similarity scan.
+
+mod common;
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::rng::Gaussian;
+use tallfat::serve::{BatchOptions, Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::svd::{randomized_svd_file, SvdOptions};
+
+const M: usize = 20_000;
+const N: usize = 256;
+const K: usize = 16;
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 40;
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+fn post_query(addr: &str, body: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    resp
+}
+
+fn ensure_model(dir: &std::path::Path) -> std::path::PathBuf {
+    let model_dir = dir.join(format!("model_{M}x{N}_k{K}"));
+    if model_dir.join("model.manifest").exists() {
+        eprintln!("[reuse] {}", model_dir.display());
+        return model_dir;
+    }
+    let input = common::ensure_dataset(&dir.to_path_buf(), "serve", M, N, true);
+    let opts = SvdOptions {
+        k: K,
+        oversample: 8,
+        workers: 4,
+        block: 256,
+        seed: 1,
+        work_dir: dir.join("svd_work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    eprintln!("[build] factorizing {M}x{N} k={K}...");
+    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts).unwrap();
+    result.save_model(&model_dir, Some(opts.seed)).unwrap();
+    model_dir
+}
+
+fn main() {
+    let dir = common::bench_dir("serve");
+    let model_dir = ensure_model(&dir);
+    let gauss = Gaussian::new(99);
+
+    common::header(&format!(
+        "S1 serve load — {M}x{N} k={K} model, {CLIENTS} clients x {REQS_PER_CLIENT} reqs (project/similar mix)"
+    ));
+    println!(
+        "{:>12} {:>10} {:>10} {:>10} {:>10} {:>10}",
+        "window(ms)", "wall(s)", "qps", "p50(ms)", "p95(ms)", "p99(ms)"
+    );
+
+    for window_ms in [0u64, 1, 2, 5] {
+        let store = Arc::new(ModelStore::open(&model_dir, 8).unwrap());
+        let engine =
+            Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+        let total = (CLIENTS * REQS_PER_CLIENT) as u64;
+        let server = ModelServer::bind(
+            engine,
+            &ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                batch: BatchOptions {
+                    window: std::time::Duration::from_millis(window_ms),
+                    max_batch: 64,
+                },
+                max_requests: Some(total),
+            },
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let srv = std::thread::spawn(move || server.run().unwrap());
+
+        let t0 = std::time::Instant::now();
+        let mut latencies: Vec<f64> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..CLIENTS)
+                .map(|c| {
+                    let addr = addr.clone();
+                    let gauss = gauss;
+                    scope.spawn(move || {
+                        let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
+                        let mut row = vec![0.0f64; N];
+                        for r in 0..REQS_PER_CLIENT {
+                            let id = (c * REQS_PER_CLIENT + r) as u64;
+                            gauss.fill_block(&mut row, id, 1, N, 1.0);
+                            let row_json = Json::from_f64s(&row).render();
+                            let body = if r % 2 == 0 {
+                                format!("{{\"op\":\"similar\",\"row\":{row_json},\"k\":10}}\n")
+                            } else {
+                                format!("{{\"op\":\"project\",\"row\":{row_json}}}\n")
+                            };
+                            let t = std::time::Instant::now();
+                            let resp = post_query(&addr, &body);
+                            lat.push(t.elapsed().as_secs_f64() * 1e3);
+                            assert!(resp.contains("200 OK"), "{resp}");
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let wall = t0.elapsed();
+        srv.join().unwrap();
+        latencies.sort_by(f64::total_cmp);
+        println!(
+            "{:>12} {:>10.2} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
+            window_ms,
+            wall.as_secs_f64(),
+            common::rate(total, wall),
+            percentile(&latencies, 50.0),
+            percentile(&latencies, 95.0),
+            percentile(&latencies, 99.0),
+        );
+    }
+    println!(
+        "\npaper tie-in: U stays sharded on disk (LRU-cached), so the scan cost is\n\
+         amortized across every similarity query coalesced into one batch."
+    );
+}

@@ -46,11 +46,25 @@ pub trait Backend: Send + Sync {
 pub type BackendRef = Arc<dyn Backend>;
 
 /// Build a backend per the run configuration.
+///
+/// `auto` degrades to the native backend when the PJRT service cannot boot
+/// at all (missing artifacts, or a build without the `xla` feature); `xla`
+/// is strict and surfaces the boot error.
 pub fn make_backend(cfg: &crate::config::RunConfig) -> Result<BackendRef> {
     use crate::config::BackendKind;
     match cfg.backend {
         BackendKind::Native => Ok(Arc::new(native::NativeBackend::new())),
         BackendKind::Xla => Ok(Arc::new(xla::XlaBackend::start(&cfg.artifacts_dir, false)?)),
-        BackendKind::Auto => Ok(Arc::new(xla::XlaBackend::start(&cfg.artifacts_dir, true)?)),
+        BackendKind::Auto => match xla::XlaBackend::start(&cfg.artifacts_dir, true) {
+            Ok(b) => Ok(Arc::new(b)),
+            Err(e) => {
+                crate::util::logger::log(
+                    crate::util::logger::Level::Warn,
+                    "backend",
+                    &format!("auto: xla unavailable ({e}); serving natively"),
+                );
+                Ok(Arc::new(native::NativeBackend::new()))
+            }
+        },
     }
 }

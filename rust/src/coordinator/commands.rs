@@ -124,6 +124,10 @@ pub fn svd(args: &Args, exact: bool) -> Result<()> {
     if let Some(prefix) = args.opt_str("out-prefix") {
         write_outputs(prefix, &result)?;
     }
+    if let Some(model_dir) = args.opt_str("save-model") {
+        result.save_model(model_dir, Some(cfg.seed))?;
+        LOG.info(&format!("model saved to {model_dir} (serve with `tallfat serve {model_dir}`)"));
+    }
     LOG.info(&format!("svd done in {:.2?}", sw.elapsed()));
     Ok(())
 }

@@ -14,6 +14,7 @@
 //! | `mult` | streaming `A·B` with B from file (paper §3.2) |
 //! | `mr-ata` | the Map-Reduce baseline for the same Gram (paper Fig. 2) |
 //! | `simulate` | cluster cost simulation / scalability sweep ([`crate::simulator`]) |
+//! | `serve` | query a saved factor model over HTTP ([`crate::serve`]) |
 //! | `serve-metrics` | tiny HTTP endpoint exposing the last run's metrics |
 //!
 //! Configuration precedence: built-in defaults < `--config file.toml` <
@@ -39,7 +40,9 @@ COMMANDS
                   --input PATH --k K [--oversample P] [--power-iters Q] [--workers W]
                   [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
                   [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
-                  (--center = PCA mode: subtract column means, one extra pass)
+                  [--save-model DIR]
+                  (--center = PCA mode: subtract column means, one extra pass;
+                   --save-model persists a servable model directory)
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]
@@ -54,6 +57,11 @@ COMMANDS
   worker        join a distributed run         --leader HOST:PORT [--backend ...]
                 (the `svd` command becomes a leader with --distributed:
                  --listen HOST:PORT --remote-workers N)
+  serve         serve a saved model over HTTP  <model-dir> [--addr 127.0.0.1:9925]
+                  [--backend native|xla|auto] [--cache-shards 4] [--batch-window-ms 2]
+                  [--max-batch 64] [--max-requests N] [--once]
+                (answers line-delimited JSON on POST /query: project, similar,
+                 reconstruct, info; GET /model, /metrics, /healthz)
   serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
 
 GLOBAL
@@ -75,6 +83,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("mr-ata") => commands::mr_ata(args),
         Some("simulate") => commands::simulate(args),
         Some("worker") => commands::worker(args),
+        Some("serve") => crate::serve::http::serve(args),
         Some("serve-metrics") => server::serve_metrics(args),
         Some("help") | None => {
             print!("{USAGE}");

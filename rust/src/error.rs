@@ -1,35 +1,52 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled — the build is dependency-free, so
+//! no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All errors surfaced by the tallfat library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla/pjrt error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("parse error: {0}")]
     Parse(String),
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("config error: {0}")]
     Config(String),
-
-    #[error("artifact error: {0}")]
     Artifact(String),
-
-    #[error("numerical error: {0}")]
     Numerical(String),
-
-    #[error("{0}")]
     Other(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(m) => write!(f, "xla/pjrt error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -48,5 +65,24 @@ impl Error {
     /// Convenience constructor for parse errors.
     pub fn parse(msg: impl Into<String>) -> Self {
         Error::Parse(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert!(Error::shape("2x2 vs 3x3").to_string().contains("shape mismatch"));
+        assert!(Error::parse("bad").to_string().contains("parse error"));
+        assert_eq!(Error::Other("plain".into()).to_string(), "plain");
+    }
+
+    #[test]
+    fn io_source_preserved() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(std::error::Error::source(&e).is_some());
+        assert!(e.to_string().contains("gone"));
     }
 }

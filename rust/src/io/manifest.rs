@@ -1,0 +1,170 @@
+//! Tiny `key=value` text manifests.
+//!
+//! The same one-fact-per-line format as `artifacts/manifest.txt`, reused by
+//! the serve layer's model directories (`model.manifest`). One `key=value`
+//! pair per line, `#` comments and blank lines ignored, keys rendered in
+//! sorted order so the file is diff-stable. Values must not contain
+//! newlines; spaces are preserved.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::fmt::Display;
+use std::path::Path;
+
+/// An ordered `key=value` manifest.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvManifest {
+    map: BTreeMap<String, String>,
+}
+
+impl KvManifest {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a key (any `Display` value).
+    pub fn set(&mut self, key: &str, value: impl Display) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(String::as_str)
+    }
+
+    /// Required string value.
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key)
+            .ok_or_else(|| Error::parse(format!("manifest: missing key `{key}`")))
+    }
+
+    /// Required `usize` value.
+    pub fn require_usize(&self, key: &str) -> Result<usize> {
+        self.require(key)?
+            .parse()
+            .map_err(|_| Error::parse(format!("manifest: `{key}` is not an integer")))
+    }
+
+    /// Optional `u64` value.
+    pub fn get_u64(&self, key: &str) -> Result<Option<u64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::parse(format!("manifest: `{key}` is not an integer"))),
+        }
+    }
+
+    /// Required bool (`0`/`1`/`true`/`false`).
+    pub fn require_bool(&self, key: &str) -> Result<bool> {
+        match self.require(key)? {
+            "1" | "true" => Ok(true),
+            "0" | "false" => Ok(false),
+            other => Err(Error::parse(format!("manifest: `{key}`: bad bool `{other}`"))),
+        }
+    }
+
+    /// Comma-separated list of `usize`.
+    pub fn require_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        let raw = self.require(key)?;
+        if raw.is_empty() {
+            return Ok(Vec::new());
+        }
+        raw.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| Error::parse(format!("manifest: `{key}`: bad entry `{t}`")))
+            })
+            .collect()
+    }
+
+    /// Parse manifest text.
+    pub fn parse_str(text: &str) -> Result<Self> {
+        let mut m = KvManifest::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::parse(format!("manifest line {}: expected key=value", lineno + 1))
+            })?;
+            m.map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(m)
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            Error::Other(format!("cannot read manifest {}: {e}", path.as_ref().display()))
+        })?;
+        Self::parse_str(&text)
+    }
+
+    /// Render as sorted `key=value` lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.map {
+            out.push_str(k);
+            out.push('=');
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_through_text() {
+        let mut m = KvManifest::new();
+        m.set("m", 1000usize);
+        m.set("format", "bin");
+        m.set("shard_rows", "300,300,400");
+        m.set("centered", 1);
+        let back = KvManifest::parse_str(&m.render()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.require_usize("m").unwrap(), 1000);
+        assert_eq!(back.require("format").unwrap(), "bin");
+        assert_eq!(back.require_usize_list("shard_rows").unwrap(), vec![300, 300, 400]);
+        assert!(back.require_bool("centered").unwrap());
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = KvManifest::parse_str("# header\n\nk = 8\n").unwrap();
+        assert_eq!(m.require_usize("k").unwrap(), 8);
+    }
+
+    #[test]
+    fn missing_and_malformed_error() {
+        let m = KvManifest::parse_str("a=1\n").unwrap();
+        assert!(m.require("b").is_err());
+        assert!(m.require_usize("a").is_ok());
+        assert!(KvManifest::parse_str("no_equals_here\n").is_err());
+        assert!(m.require_bool("a").is_ok()); // "1" is a valid bool
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("tallfat_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.manifest");
+        let mut m = KvManifest::new();
+        m.set("n", 64usize);
+        m.save(&path).unwrap();
+        assert_eq!(KvManifest::load(&path).unwrap().require_usize("n").unwrap(), 64);
+        assert!(KvManifest::load(dir.join("absent")).is_err());
+    }
+}

@@ -6,11 +6,13 @@ pub mod binmat;
 pub mod chunker;
 pub mod csv;
 pub mod dataset;
+pub mod manifest;
 pub mod writer;
 
 pub use binmat::{BinMatHeader, BinMatReader, BinMatWriter};
 pub use chunker::{chunk_byte_ranges, chunk_row_ranges, ByteRange};
 pub use csv::{parse_row, CsvRowReader};
+pub use manifest::KvManifest;
 pub use writer::ShardSet;
 
 use crate::config::InputFormat;

@@ -23,10 +23,19 @@
 //! The block-level compute (Gram, projection, fused project+gram, U
 //! recovery, the k×k eigensolve) is authored as JAX/Pallas kernels
 //! (`python/compile/`), AOT-lowered to HLO text once at build time, and
-//! executed from rust through the PJRT C API ([`runtime`], [`backend::xla`]).
-//! Python is never on the processing path. A pure-rust [`backend::native`]
-//! implements the same `Backend` trait for arbitrary shapes and as a
-//! cross-check oracle.
+//! executed from rust through the PJRT C API ([`runtime`], [`backend::xla`];
+//! gated behind the `xla` cargo feature — the default build is
+//! dependency-free and serves natively). Python is never on the processing
+//! path. A pure-rust [`backend::native`] implements the same `Backend`
+//! trait for arbitrary shapes and as a cross-check oracle.
+//!
+//! ## Serving
+//!
+//! A factorization is not the end of the road: [`serve`] persists the
+//! factors as a model directory (U stays sharded on disk, LRU-cached) and
+//! answers project / top-k-cosine / reconstruct queries over HTTP with
+//! request micro-batching — `tallfat svd --save-model DIR` then
+//! `tallfat serve DIR`.
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the experiment harnesses (EXPERIMENTS.md maps each to the paper).
@@ -43,6 +52,7 @@ pub mod mapreduce;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod splitproc;
 pub mod svd;

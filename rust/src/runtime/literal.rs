@@ -1,10 +1,12 @@
 //! Matrix ⇄ `xla::Literal` conversion (the f32 FFI boundary).
 
+#[cfg(feature = "xla")]
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 
 /// Convert a matrix to an `f32` literal of shape `[rows, cols]`, zero-padding
 /// rows up to `pad_rows` (the artifact's fixed block size).
+#[cfg(feature = "xla")]
 pub fn matrix_to_literal_f32(m: &Matrix, pad_rows: usize) -> Result<xla::Literal> {
     let (rows, cols) = m.shape();
     if pad_rows < rows {
@@ -24,6 +26,7 @@ pub fn matrix_to_literal_f32(m: &Matrix, pad_rows: usize) -> Result<xla::Literal
 
 /// Convert a literal's `f32` payload back to a Matrix with the given shape,
 /// keeping only the first `keep_rows` rows (drop the zero padding).
+#[cfg(feature = "xla")]
 pub fn literal_to_matrix_f32(lit: &xla::Literal, rows: usize, cols: usize, keep_rows: usize) -> Result<Matrix> {
     let data: Vec<f32> = lit.to_vec()?;
     if data.len() != rows * cols {
@@ -63,6 +66,7 @@ mod tests {
         assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip() {
         let m = Matrix::from_rows(&[vec![1.5, -2.0, 0.25]]).unwrap();
@@ -71,6 +75,7 @@ mod tests {
         assert_eq!(back, m);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn pad_too_small_rejected() {
         let m = Matrix::zeros(4, 2);

@@ -11,10 +11,14 @@
 //! operationally this models one shared accelerator serving all workers.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod literal;
+#[cfg(feature = "xla")]
 pub mod service;
 
 pub use artifact::{ArtifactMeta, Manifest};
+#[cfg(feature = "xla")]
 pub use engine::Engine;
+#[cfg(feature = "xla")]
 pub use service::{XlaHandle, XlaService};

@@ -1,0 +1,427 @@
+//! Micro-batching request broker for the query engine.
+//!
+//! Concurrent connections each hold a cloneable [`BatcherHandle`] and make
+//! synchronous call-response RPCs over channels — the same pattern as
+//! [`crate::runtime::service`]'s XLA service thread. The worker thread
+//! coalesces every request that arrives within a micro-batch window (or up
+//! to `max_batch`) and executes them as *single* backend matmuls: all
+//! projections of a batch share one `X · VΣ⁻¹`, and all similarity queries
+//! share one scan of the U shards.
+//!
+//! Published metrics: `serve_batch_size` (last batch), `serve_batches`,
+//! `serve_batched_requests`.
+
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::serve::query::{Hit, QueryEngine};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// A query request (one line of the HTTP ND-JSON protocol).
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Project a raw row (length n) to latent coordinates.
+    Project { row: Vec<f64> },
+    /// Project a raw row, then return its top-k similar model rows.
+    Similar { row: Vec<f64>, topk: usize },
+    /// Top-k similar model rows for an already-latent query (length k).
+    SimilarLatent { latent: Vec<f64>, topk: usize },
+}
+
+/// A query response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Latent(Vec<f64>),
+    Hits(Vec<Hit>),
+}
+
+/// Batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOptions {
+    /// How long the worker waits for co-arriving requests after the first.
+    pub window: Duration,
+    /// Hard batch-size cap (flush regardless of the window).
+    pub max_batch: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { window: Duration::from_millis(2), max_batch: 64 }
+    }
+}
+
+type Reply = mpsc::SyncSender<Result<Response>>;
+
+struct Job {
+    req: Request,
+    reply: Reply,
+}
+
+enum Message {
+    Job(Job),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle for submitting requests.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: mpsc::Sender<Message>,
+}
+
+impl BatcherHandle {
+    /// Submit one request and block for its response.
+    pub fn call(&self, req: Request) -> Result<Response> {
+        self.call_many(vec![req]).pop().expect("one reply per request")
+    }
+
+    /// Submit a group of requests *before* blocking on any reply, so they
+    /// coalesce with each other (and with other callers) into one batch.
+    /// Replies come back in request order, one per request.
+    pub fn call_many(&self, reqs: Vec<Request>) -> Vec<Result<Response>> {
+        let mut pending = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+            match self.tx.send(Message::Job(Job { req, reply: reply_tx })) {
+                Ok(()) => pending.push(Some(reply_rx)),
+                Err(_) => pending.push(None),
+            }
+        }
+        pending
+            .into_iter()
+            .map(|rx| match rx {
+                None => Err(Error::Other("serve batcher is gone".into())),
+                Some(rx) => rx
+                    .recv()
+                    .map_err(|_| Error::Other("serve batcher dropped the reply".into()))?,
+            })
+            .collect()
+    }
+}
+
+/// Owns the batching worker thread; dropping shuts it down.
+pub struct Batcher {
+    handle: BatcherHandle,
+    tx: mpsc::Sender<Message>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the worker over `engine`.
+    pub fn start(engine: Arc<QueryEngine>, opts: BatchOptions) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Message>();
+        let join = std::thread::Builder::new()
+            .name("serve-batcher".into())
+            .spawn(move || worker_loop(engine, rx, opts))
+            .map_err(|e| Error::Other(format!("cannot spawn serve batcher: {e}")))?;
+        Ok(Batcher {
+            handle: BatcherHandle { tx: tx.clone() },
+            tx,
+            join: Some(join),
+        })
+    }
+
+    pub fn handle(&self) -> BatcherHandle {
+        self.handle.clone()
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Message::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn worker_loop(engine: Arc<QueryEngine>, rx: mpsc::Receiver<Message>, opts: BatchOptions) {
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(Message::Job(j)) => j,
+            Ok(Message::Shutdown) | Err(_) => return,
+        };
+        let mut jobs = vec![first];
+        let mut shutdown = false;
+        // Then coalesce whatever arrives within the window.
+        let deadline = Instant::now() + opts.window;
+        while jobs.len() < opts.max_batch.max(1) {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Message::Job(j)) => jobs.push(j),
+                Ok(Message::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+            }
+        }
+        let reg = MetricsRegistry::global();
+        reg.set("serve_batch_size", jobs.len() as f64);
+        reg.add("serve_batches", 1.0);
+        reg.add("serve_batched_requests", jobs.len() as f64);
+        execute_batch(&engine, jobs);
+        if shutdown {
+            return;
+        }
+    }
+}
+
+enum Kind {
+    Project,
+    Similar { topk: usize, latent: Option<Vec<f64>> },
+}
+
+struct Slot {
+    reply: Reply,
+    kind: Kind,
+    result: Option<Result<Response>>,
+}
+
+/// Run one coalesced batch: a single projection matmul for every raw row in
+/// the batch, then a single shard scan for every similarity query.
+fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
+    let n = engine.store().n();
+    let k = engine.store().k();
+    let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
+    // (slot index, raw row) pairs that need projection.
+    let mut to_project: Vec<(usize, Vec<f64>)> = Vec::new();
+    for job in jobs {
+        let idx = slots.len();
+        match job.req {
+            Request::Project { row } => {
+                let result = (row.len() != n).then(|| {
+                    Err(Error::shape(format!("project: row has {} cols, model n={n}", row.len())))
+                });
+                if result.is_none() {
+                    to_project.push((idx, row));
+                }
+                slots.push(Slot { reply: job.reply, kind: Kind::Project, result });
+            }
+            Request::Similar { row, topk } => {
+                let result = (row.len() != n).then(|| {
+                    Err(Error::shape(format!("similar: row has {} cols, model n={n}", row.len())))
+                });
+                if result.is_none() {
+                    to_project.push((idx, row));
+                }
+                slots.push(Slot {
+                    reply: job.reply,
+                    kind: Kind::Similar { topk, latent: None },
+                    result,
+                });
+            }
+            Request::SimilarLatent { latent, topk } => {
+                let result = (latent.len() != k).then(|| {
+                    Err(Error::shape(format!(
+                        "similar: latent has {} dims, model k={k}",
+                        latent.len()
+                    )))
+                });
+                slots.push(Slot {
+                    reply: job.reply,
+                    kind: Kind::Similar { topk, latent: Some(latent) },
+                    result,
+                });
+            }
+        }
+    }
+
+    // Stage 1: one projection matmul covers project + similar-by-row jobs.
+    if !to_project.is_empty() {
+        let rows: Vec<Vec<f64>> = to_project.iter().map(|(_, r)| r.clone()).collect();
+        match Matrix::from_rows(&rows).and_then(|x| engine.project_batch(&x)) {
+            Ok(latents) => {
+                for (i, (slot, _)) in to_project.iter().enumerate() {
+                    let l = latents.row(i).to_vec();
+                    let s = &mut slots[*slot];
+                    match &mut s.kind {
+                        Kind::Project => s.result = Some(Ok(Response::Latent(l))),
+                        Kind::Similar { latent, .. } => *latent = Some(l),
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for (slot, _) in &to_project {
+                    slots[*slot].result = Some(Err(Error::Other(msg.clone())));
+                }
+            }
+        }
+    }
+
+    // Stage 2: one shard scan covers every similarity query of the batch.
+    let mut sim_slots: Vec<usize> = Vec::new();
+    let mut sim_latents: Vec<Vec<f64>> = Vec::new();
+    let mut sim_topks: Vec<usize> = Vec::new();
+    for (i, slot) in slots.iter().enumerate() {
+        if slot.result.is_some() {
+            continue;
+        }
+        if let Kind::Similar { topk, latent: Some(l) } = &slot.kind {
+            sim_slots.push(i);
+            sim_latents.push(l.clone());
+            sim_topks.push(*topk);
+        }
+    }
+    if !sim_slots.is_empty() {
+        match Matrix::from_rows(&sim_latents)
+            .and_then(|l| engine.similar_batch(&l, &sim_topks))
+        {
+            Ok(all_hits) => {
+                for (slot, hits) in sim_slots.iter().zip(all_hits) {
+                    slots[*slot].result = Some(Ok(Response::Hits(hits)));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for slot in &sim_slots {
+                    slots[*slot].result = Some(Err(Error::Other(msg.clone())));
+                }
+            }
+        }
+    }
+
+    for slot in slots {
+        let out = slot
+            .result
+            .unwrap_or_else(|| Err(Error::Other("serve batcher: request fell through".into())));
+        let _ = slot.reply.send(out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::io::InputSpec;
+    use crate::serve::store::{save_model, ModelStore};
+    use crate::svd::{randomized_svd_file, SvdOptions};
+
+    fn batcher_fixture(name: &str) -> (Arc<QueryEngine>, Matrix) {
+        let dir = std::env::temp_dir().join("tallfat_test_batcher").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            120,
+            16,
+            5,
+            Spectrum::Geometric { scale: 7.0, decay: 0.5 },
+            0.0,
+            5,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let opts = SvdOptions {
+            k: 5,
+            oversample: 4,
+            workers: 2,
+            block: 32,
+            work_dir: dir.join("work").to_string_lossy().into_owned(),
+            ..SvdOptions::default()
+        };
+        let result =
+            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        save_model(&result, dir.join("model"), None).unwrap();
+        let store = Arc::new(ModelStore::open(dir.join("model"), 2).unwrap());
+        (Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap()), a)
+    }
+
+    #[test]
+    fn batched_results_match_direct_engine_calls() {
+        let (engine, a) = batcher_fixture("parity");
+        let batcher =
+            Batcher::start(engine.clone(), BatchOptions { window: Duration::from_millis(5), max_batch: 16 })
+                .unwrap();
+        let handle = batcher.handle();
+        // Fire concurrent mixed requests so they actually coalesce.
+        let results: Vec<(usize, Response)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let h = handle.clone();
+                    let row = a.row(i * 10).to_vec();
+                    scope.spawn(move || {
+                        let req = if i % 2 == 0 {
+                            Request::Project { row }
+                        } else {
+                            Request::Similar { row, topk: 4 }
+                        };
+                        (i, h.call(req).unwrap())
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (i, resp) in results {
+            let row = a.row(i * 10);
+            match resp {
+                Response::Latent(l) => {
+                    let want = engine.project_one(row).unwrap();
+                    assert_eq!(i % 2, 0);
+                    for (g, w) in l.iter().zip(want.iter()) {
+                        assert!((g - w).abs() < 1e-9);
+                    }
+                }
+                Response::Hits(hits) => {
+                    let want = engine.similar_row(row, 4).unwrap();
+                    assert_eq!(i % 2, 1);
+                    assert_eq!(
+                        hits.iter().map(|h| h.row).collect::<Vec<_>>(),
+                        want.iter().map(|h| h.row).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_rows_fail_individually_without_poisoning_batch() {
+        let (engine, a) = batcher_fixture("mixed_errors");
+        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let handle = batcher.handle();
+        assert!(handle.call(Request::Project { row: vec![1.0, 2.0] }).is_err());
+        let ok = handle.call(Request::Project { row: a.row(0).to_vec() });
+        assert!(ok.is_ok());
+        assert!(handle
+            .call(Request::SimilarLatent { latent: vec![0.0], topk: 2 })
+            .is_err());
+    }
+
+    #[test]
+    fn call_many_replies_in_request_order() {
+        let (engine, a) = batcher_fixture("many");
+        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let reqs = vec![
+            Request::Project { row: a.row(0).to_vec() },
+            Request::Similar { row: a.row(10).to_vec(), topk: 2 },
+            Request::Project { row: vec![1.0] }, // wrong width
+        ];
+        let replies = batcher.handle().call_many(reqs);
+        assert_eq!(replies.len(), 3);
+        assert!(matches!(replies[0], Ok(Response::Latent(_))));
+        assert!(matches!(replies[1], Ok(Response::Hits(_))));
+        assert!(replies[2].is_err());
+    }
+
+    #[test]
+    fn latent_queries_round_trip() {
+        let (engine, a) = batcher_fixture("latent");
+        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let latent = engine.project_one(a.row(30)).unwrap();
+        match batcher.handle().call(Request::SimilarLatent { latent, topk: 3 }).unwrap() {
+            Response::Hits(hits) => {
+                assert_eq!(hits.len(), 3);
+                assert_eq!(hits[0].row, 30); // self-similarity wins
+            }
+            other => panic!("expected hits, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! The `tallfat serve` HTTP front end.
+//!
+//! Dependency-free HTTP in the [`crate::coordinator::server`] style: a
+//! blocking `TcpListener`, one thread per connection, `Connection: close`.
+//! Queries are line-delimited JSON (`POST /query`, one request object per
+//! line, one response object per line back); project and similarity lines
+//! are routed through the [`Batcher`] so concurrent connections coalesce
+//! into shared backend matmuls.
+//!
+//! ```text
+//! POST /query        ND-JSON query lines (see below)
+//! GET  /model        model dimensions/provenance as JSON
+//! GET  /metrics      Prometheus text (the shared MetricsRegistry)
+//! GET  /healthz      liveness probe
+//! ```
+//!
+//! Query lines:
+//!
+//! ```text
+//! {"op":"project","row":[...]}             -> {"ok":true,"latent":[...]}
+//! {"op":"similar","row":[...],"k":10}      -> {"ok":true,"hits":[{"row":i,"score":s},...]}
+//! {"op":"similar","latent":[...],"k":10}   -> same, skipping the projection
+//! {"op":"reconstruct","row_id":7}          -> {"ok":true,"values":[...]}
+//! {"op":"info"}                            -> {"ok":true,"m":...,"n":...,"k":...}
+//! ```
+//!
+//! Gauges published per request: `serve_requests_total`, `serve_qps`,
+//! `serve_latency_ms` (EWMA), plus the batcher's `serve_batch_size`.
+
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::serve::batcher::{BatchOptions, Batcher, BatcherHandle, Request, Response};
+use crate::serve::json::Json;
+use crate::serve::query::{Hit, QueryEngine};
+use crate::serve::store::ModelStore;
+use crate::util::{Args, Logger};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+static LOG: Logger = Logger::new("serve.http");
+
+/// Hard cap on a POST body — the Content-Length header is client input and
+/// must not size an allocation unchecked.
+const MAX_BODY_BYTES: usize = 32 << 20;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    pub addr: String,
+    pub batch: BatchOptions,
+    /// Serve this many connections, then exit (None = forever). `--once` is 1.
+    pub max_requests: Option<u64>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:9925".into(),
+            batch: BatchOptions::default(),
+            max_requests: None,
+        }
+    }
+}
+
+struct ServerState {
+    engine: Arc<QueryEngine>,
+    handle: BatcherHandle,
+    started: Instant,
+    queries: AtomicU64,
+}
+
+/// A bound model server (separate from `run` so tests can bind port 0 and
+/// read the real address before serving).
+pub struct ModelServer {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+    // Keeps the batching worker alive for the server's lifetime.
+    _batcher: Batcher,
+    max_requests: Option<u64>,
+}
+
+impl ModelServer {
+    pub fn bind(engine: Arc<QueryEngine>, opts: &ServeOptions) -> Result<Self> {
+        let batcher = Batcher::start(engine.clone(), opts.batch)?;
+        let listener = TcpListener::bind(&opts.addr)?;
+        let state = Arc::new(ServerState {
+            engine,
+            handle: batcher.handle(),
+            started: Instant::now(),
+            queries: AtomicU64::new(0),
+        });
+        Ok(ModelServer { listener, state, _batcher: batcher, max_requests: opts.max_requests })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept loop. One thread per connection; with a request cap the
+    /// spawned handlers are joined before returning so in-flight responses
+    /// finish.
+    pub fn run(self) -> Result<()> {
+        let mut served = 0u64;
+        let mut joins = Vec::new();
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    let state = self.state.clone();
+                    let h = std::thread::spawn(move || {
+                        if let Err(e) = handle_conn(&state, s) {
+                            LOG.warn(&format!("request failed: {e}"));
+                        }
+                    });
+                    if self.max_requests.is_some() {
+                        joins.push(h);
+                    }
+                }
+                Err(e) => LOG.warn(&format!("accept failed: {e}")),
+            }
+            served += 1;
+            if let Some(max) = self.max_requests {
+                if served >= max {
+                    break;
+                }
+            }
+        }
+        for j in joins {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> std::io::Result<()> {
+    let response = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes())
+}
+
+fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    // Drain headers, keeping Content-Length.
+    let mut content_length = 0usize;
+    let mut hdr = String::new();
+    loop {
+        hdr.clear();
+        if reader.read_line(&mut hdr)? == 0 || hdr == "\r\n" || hdr == "\n" {
+            break;
+        }
+        if let Some((name, value)) = hdr.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut stream = stream;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
+        ("GET", "/metrics") => {
+            respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &MetricsRegistry::global().render())
+        }
+        ("GET", "/model") => {
+            let body = model_info(&state.engine).render();
+            respond(&mut stream, "200 OK", "application/json", &body)
+        }
+        ("POST", "/query") => {
+            if content_length > MAX_BODY_BYTES {
+                return respond(
+                    &mut stream,
+                    "413 Payload Too Large",
+                    "text/plain",
+                    "body exceeds the 32 MiB request cap\n",
+                );
+            }
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body)?;
+            let text = String::from_utf8_lossy(&body);
+            let out = process_body(state, &text);
+            respond(&mut stream, "200 OK", "application/x-ndjson", &out)
+        }
+        _ => respond(&mut stream, "404 Not Found", "text/plain", "unknown route\n"),
+    }
+}
+
+fn model_info(engine: &QueryEngine) -> Json {
+    let store = engine.store();
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("m", Json::num(store.m() as f64)),
+        ("n", Json::num(store.n() as f64)),
+        ("k", Json::num(store.k() as f64)),
+        ("shards", Json::num(store.shards() as f64)),
+        ("centered", Json::Bool(store.centered())),
+    ];
+    if let Some(seed) = store.seed() {
+        pairs.push(("seed", Json::num(seed as f64)));
+    }
+    Json::obj(pairs)
+}
+
+fn error_json(msg: impl std::fmt::Display) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
+}
+
+fn hits_json(hits: &[Hit]) -> Json {
+    Json::arr(
+        hits.iter()
+            .map(|h| {
+                Json::obj(vec![("row", Json::num(h.row as f64)), ("score", Json::num(h.score))])
+            })
+            .collect(),
+    )
+}
+
+/// What a planned query line is waiting on from the batcher.
+enum Expect {
+    Latent,
+    Hits,
+}
+
+/// A parsed query line: answered inline, or deferred to the batcher.
+enum Planned {
+    Done(Json),
+    Batch(Request, Expect),
+}
+
+/// Process one POST body of ND-JSON query lines. Every batcher-bound line
+/// is submitted *before* blocking on any reply, so the lines of a body
+/// coalesce with each other (and with concurrent connections) into shared
+/// backend matmuls. Never panics; every line gets a JSON object with an
+/// `ok` field, in input order. Updates the serve metrics.
+fn process_body(state: &ServerState, text: &str) -> String {
+    let t0 = Instant::now();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut outputs: Vec<Option<Json>> = vec![None; lines.len()];
+    let mut planned: Vec<(usize, Expect)> = Vec::new();
+    let mut reqs: Vec<Request> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        match Json::parse(line) {
+            Err(e) => outputs[i] = Some(error_json(e)),
+            Ok(req) => match plan_query(state, &req) {
+                Planned::Done(json) => outputs[i] = Some(json),
+                Planned::Batch(r, expect) => {
+                    planned.push((i, expect));
+                    reqs.push(r);
+                }
+            },
+        }
+    }
+    if !reqs.is_empty() {
+        let replies = state.handle.call_many(reqs);
+        for ((i, expect), reply) in planned.into_iter().zip(replies) {
+            outputs[i] = Some(match (reply, expect) {
+                (Ok(Response::Latent(l)), Expect::Latent) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("latent", Json::from_f64s(&l)),
+                ]),
+                (Ok(Response::Hits(hits)), Expect::Hits) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("hits", hits_json(&hits)),
+                ]),
+                (Ok(_), _) => error_json("internal: wrong response kind"),
+                (Err(e), _) => error_json(e),
+            });
+        }
+    }
+    record_metrics(state, lines.len() as u64, t0);
+    let mut out = String::new();
+    for o in outputs {
+        out.push_str(&o.unwrap_or_else(|| error_json("internal: line fell through")).render());
+        out.push('\n');
+    }
+    out
+}
+
+fn plan_query(state: &ServerState, req: &Json) -> Planned {
+    let op = match req.get("op").and_then(Json::as_str) {
+        Some(op) => op,
+        None => return Planned::Done(error_json("missing `op`")),
+    };
+    match op {
+        "project" => match req.get("row").and_then(Json::as_f64_array) {
+            Some(row) => Planned::Batch(Request::Project { row }, Expect::Latent),
+            None => Planned::Done(error_json("project: missing numeric `row`")),
+        },
+        "similar" => {
+            let topk = req.get("k").and_then(Json::as_usize).unwrap_or(10);
+            if let Some(row) = req.get("row").and_then(Json::as_f64_array) {
+                Planned::Batch(Request::Similar { row, topk }, Expect::Hits)
+            } else if let Some(latent) = req.get("latent").and_then(Json::as_f64_array) {
+                Planned::Batch(Request::SimilarLatent { latent, topk }, Expect::Hits)
+            } else {
+                Planned::Done(error_json("similar: need numeric `row` or `latent`"))
+            }
+        }
+        "reconstruct" => {
+            let row_id = match req.get("row_id").and_then(Json::as_usize) {
+                Some(r) => r,
+                None => return Planned::Done(error_json("reconstruct: missing integer `row_id`")),
+            };
+            Planned::Done(match state.engine.reconstruct_row(row_id) {
+                Ok(values) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("values", Json::from_f64s(&values)),
+                ]),
+                Err(e) => error_json(e),
+            })
+        }
+        "info" => Planned::Done(model_info(&state.engine)),
+        other => Planned::Done(error_json(format!("unknown op `{other}`"))),
+    }
+}
+
+fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
+    if nlines == 0 {
+        return;
+    }
+    let total = state.queries.fetch_add(nlines, Ordering::Relaxed) + nlines;
+    let elapsed = state.started.elapsed().as_secs_f64().max(1e-9);
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / nlines as f64;
+    let reg = MetricsRegistry::global();
+    reg.add("serve_requests_total", nlines as f64);
+    reg.set("serve_qps", total as f64 / elapsed);
+    let prev = reg.get("serve_latency_ms").unwrap_or(ms);
+    reg.set("serve_latency_ms", 0.9 * prev + 0.1 * ms);
+}
+
+/// `serve <model-dir>`: load a saved model and answer queries over HTTP.
+///
+/// `--addr HOST:PORT` (default 127.0.0.1:9925, port 0 = ephemeral),
+/// `--backend native|xla|auto`, `--cache-shards N`, `--batch-window-ms MS`,
+/// `--max-batch N`, `--max-requests N` / `--once` (tests).
+pub fn serve(args: &Args) -> Result<()> {
+    let dir = args
+        .opt_str("model-dir")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| {
+            Error::Config("serve: model directory required (positional or --model-dir)".into())
+        })?;
+    let cache_shards = args.usize_or("cache-shards", ModelStore::DEFAULT_CACHE_SHARDS)?;
+    let store = Arc::new(ModelStore::open(&dir, cache_shards)?);
+    let cfg = crate::coordinator::commands::load_config(args)?;
+    let backend = crate::backend::make_backend(&cfg)?;
+    let engine = Arc::new(QueryEngine::new(store, backend)?);
+    let max_requests = match args.u64_or("max-requests", 0)? {
+        0 if args.flag("once") => Some(1),
+        0 => None,
+        n => Some(n),
+    };
+    let opts = ServeOptions {
+        addr: args.str_or("addr", "127.0.0.1:9925"),
+        batch: BatchOptions {
+            window: Duration::from_millis(args.u64_or("batch-window-ms", 2)?),
+            max_batch: args.usize_or("max-batch", 64)?,
+        },
+        max_requests,
+    };
+    let store = engine.store();
+    LOG.info(&format!(
+        "model {}: {}x{} k={} ({} shards, cache {cache_shards})",
+        dir,
+        store.m(),
+        store.n(),
+        store.k(),
+        store.shards()
+    ));
+    let server = ModelServer::bind(engine.clone(), &opts)?;
+    LOG.info(&format!("serving queries on http://{}/query", server.local_addr()?));
+    server.run()
+}

@@ -1,0 +1,39 @@
+//! The factor-model serving subsystem.
+//!
+//! The pipeline's output (`SvdResult`) is only useful downstream if the
+//! factors survive the process and can answer queries cheaply — LSA
+//! similarity, folding unseen rows into latent space, rank-k row
+//! reconstruction. This layer turns a completed factorization into a
+//! long-lived, queryable model:
+//!
+//! * [`store`] — persisted model directories: small factors (σ, V, means)
+//!   in memory, `U` sharded on disk behind an LRU cache, and a precomputed
+//!   row-norm sidecar so cosine scans never rescan U (`save_model` /
+//!   [`store::ModelStore`]).
+//! * [`query`] — project / top-k cosine similarity / reconstruct, all
+//!   through the [`crate::backend::Backend`] trait so native and XLA both
+//!   serve ([`query::QueryEngine`]).
+//! * [`batcher`] — channel-RPC micro-batching: concurrent requests
+//!   coalesce into single backend matmuls ([`batcher::Batcher`]).
+//! * [`http`] — the `tallfat serve <model-dir>` front end: line-delimited
+//!   JSON queries over dependency-free HTTP, publishing QPS/latency/batch
+//!   gauges into the shared `MetricsRegistry` ([`http::ModelServer`]).
+//! * [`json`] — the minimal JSON parser/serializer backing the protocol.
+//!
+//! ```text
+//! tallfat svd --input A.csv --k 16 --save-model /models/m1
+//! tallfat serve /models/m1 --addr 0.0.0.0:9925
+//! echo '{"op":"similar","row":[...],"k":5}' | curl -s --data-binary @- localhost:9925/query
+//! ```
+
+pub mod batcher;
+pub mod http;
+pub mod json;
+pub mod query;
+pub mod store;
+
+pub use batcher::{BatchOptions, Batcher, BatcherHandle, Request, Response};
+pub use http::{serve, ModelServer, ServeOptions};
+pub use json::Json;
+pub use query::{Hit, QueryEngine};
+pub use store::{save_model, ModelStore};

@@ -1,0 +1,365 @@
+//! Latent-space queries over a loaded model.
+//!
+//! Three operations, all dispatched through the [`Backend`] trait so the
+//! native and XLA backends both serve:
+//!
+//! * **project** — fold an unseen row into latent space: `q = (x - μ) V Σ⁻¹`
+//!   (Halko's sketch guarantees the subspace; μ only in PCA mode).
+//! * **similar** — top-k cosine similarity between a latent query and the
+//!   row embeddings `u_i ∘ σ`, via a streaming scan of the U shards with a
+//!   bounded min-heap. Row norms come from the precomputed sidecar, and all
+//!   queries of a batch share one matmul per shard.
+//! * **reconstruct** — `â_i = (u_i ∘ σ) Vᵀ + μ`, the rank-k row estimate.
+
+use crate::backend::BackendRef;
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::serve::store::ModelStore;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+/// One similarity result: a model row and its cosine score.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub row: usize,
+    pub score: f64,
+}
+
+/// Total order on hits: higher score first, ties broken by lower row id —
+/// identical to the oracle ordering the tests pin.
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct Scored {
+    score: f64,
+    row: usize,
+}
+
+impl Eq for Scored {}
+
+impl Ord for Scored {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Greater = better: higher score, then *smaller* row index.
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.row.cmp(&self.row))
+    }
+}
+
+impl PartialOrd for Scored {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Bounded min-heap keeping the best `cap` hits seen so far.
+struct TopK {
+    cap: usize,
+    heap: BinaryHeap<std::cmp::Reverse<Scored>>,
+}
+
+impl TopK {
+    fn new(cap: usize) -> Self {
+        TopK { cap, heap: BinaryHeap::with_capacity(cap + 1) }
+    }
+
+    fn push(&mut self, s: Scored) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.heap.len() < self.cap {
+            self.heap.push(std::cmp::Reverse(s));
+        } else if let Some(worst) = self.heap.peek() {
+            if s > worst.0 {
+                self.heap.pop();
+                self.heap.push(std::cmp::Reverse(s));
+            }
+        }
+    }
+
+    fn into_hits(self) -> Vec<Hit> {
+        let mut out: Vec<Scored> = self.heap.into_iter().map(|r| r.0).collect();
+        out.sort_by(|a, b| b.cmp(a)); // best first
+        out.into_iter().map(|s| Hit { row: s.row, score: s.score }).collect()
+    }
+}
+
+/// Query engine over a [`ModelStore`] and a block [`Backend`].
+pub struct QueryEngine {
+    store: Arc<ModelStore>,
+    backend: BackendRef,
+    /// `V Σ⁻¹` (n x k), precomputed with the pipeline's guarded inverse.
+    projection: Matrix,
+}
+
+impl QueryEngine {
+    pub fn new(store: Arc<ModelStore>, backend: BackendRef) -> Result<Self> {
+        let inv = crate::svd::pipeline::guarded_inverse(store.sigma(), 1e-12);
+        let projection = store.v().scale_cols(&inv)?;
+        Ok(QueryEngine { store, backend, projection })
+    }
+
+    pub fn store(&self) -> &Arc<ModelStore> {
+        &self.store
+    }
+
+    /// The `n x k` projection matrix `V Σ⁻¹` (exposed for oracles/tests).
+    pub fn projection_matrix(&self) -> &Matrix {
+        &self.projection
+    }
+
+    /// Center a batch of raw rows in place (PCA mode is a no-op otherwise).
+    fn center(&self, x: &mut Matrix) {
+        if let Some(means) = self.store.means() {
+            for i in 0..x.rows() {
+                for (v, mu) in x.row_mut(i).iter_mut().zip(means.iter()) {
+                    *v -= mu;
+                }
+            }
+        }
+    }
+
+    /// Project a batch of raw rows (`b x n`) to latent coordinates (`b x k`)
+    /// in one backend matmul.
+    pub fn project_batch(&self, rows: &Matrix) -> Result<Matrix> {
+        if rows.cols() != self.store.n() {
+            return Err(Error::shape(format!(
+                "project: row has {} cols, model n={}",
+                rows.cols(),
+                self.store.n()
+            )));
+        }
+        let mut x = rows.clone();
+        self.center(&mut x);
+        self.backend.project_block(&x, &self.projection)
+    }
+
+    /// Project one raw row (length n) to latent coordinates (length k).
+    pub fn project_one(&self, row: &[f64]) -> Result<Vec<f64>> {
+        let x = Matrix::from_rows(std::slice::from_ref(&row.to_vec()))?;
+        Ok(self.project_batch(&x)?.row(0).to_vec())
+    }
+
+    /// Top-k cosine similarity for a batch of latent queries (`q x k`).
+    /// One streaming pass over the U shards; every shard is scored against
+    /// all queries with a single backend matmul. `topks[j]` bounds query
+    /// `j`'s result list.
+    pub fn similar_batch(&self, latent: &Matrix, topks: &[usize]) -> Result<Vec<Vec<Hit>>> {
+        let q = latent.rows();
+        if q != topks.len() {
+            return Err(Error::shape("similar: one topk per query required"));
+        }
+        if latent.cols() != self.store.k() {
+            return Err(Error::shape(format!(
+                "similar: latent has {} dims, model k={}",
+                latent.cols(),
+                self.store.k()
+            )));
+        }
+        let qnorms: Vec<f64> = (0..q)
+            .map(|j| latent.row(j).iter().map(|v| v * v).sum::<f64>().sqrt())
+            .collect();
+        // Queries as columns: scores_shard = E_shard (rows x k) · Qᵀ (k x q).
+        let qt = latent.t();
+        let mut heaps: Vec<TopK> = topks.iter().map(|&t| TopK::new(t)).collect();
+        let norms = self.store.norms();
+        for s in 0..self.store.shards() {
+            let base = self.store.shard_base(s);
+            // Embedding rows e_i = u_i ∘ σ, scaled once per cache residency.
+            let emb = self.store.embedding_shard(s)?;
+            if emb.rows() == 0 {
+                continue;
+            }
+            let scores = self.backend.project_block(&emb, &qt)?; // rows x q
+            for r in 0..scores.rows() {
+                let row = base + r;
+                let denom_row = norms[row];
+                let srow = scores.row(r);
+                for j in 0..q {
+                    let denom = denom_row * qnorms[j];
+                    let score = if denom > 0.0 { srow[j] / denom } else { 0.0 };
+                    heaps[j].push(Scored { score, row });
+                }
+            }
+        }
+        Ok(heaps.into_iter().map(TopK::into_hits).collect())
+    }
+
+    /// Top-k similar rows for one latent query.
+    pub fn similar_latent(&self, latent: &[f64], topk: usize) -> Result<Vec<Hit>> {
+        let l = Matrix::from_rows(std::slice::from_ref(&latent.to_vec()))?;
+        Ok(self.similar_batch(&l, &[topk])?.pop().unwrap_or_default())
+    }
+
+    /// Project a raw row and return its top-k similar model rows.
+    pub fn similar_row(&self, row: &[f64], topk: usize) -> Result<Vec<Hit>> {
+        let latent = self.project_one(row)?;
+        self.similar_latent(&latent, topk)
+    }
+
+    /// Rank-k reconstruction of model row `i`: `(u_i ∘ σ) Vᵀ + μ`.
+    pub fn reconstruct_row(&self, i: usize) -> Result<Vec<f64>> {
+        let e = self.store.embedding_row(i)?;
+        let v = self.store.v();
+        let n = self.store.n();
+        let k = self.store.k();
+        let mut out = vec![0.0f64; n];
+        for (j, o) in out.iter_mut().enumerate() {
+            let vrow = v.row(j);
+            let mut acc = 0.0;
+            for kk in 0..k {
+                acc += vrow[kk] * e[kk];
+            }
+            *o = acc;
+        }
+        if let Some(means) = self.store.means() {
+            for (o, mu) in out.iter_mut().zip(means.iter()) {
+                *o += mu;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::io::InputSpec;
+    use crate::linalg::matmul;
+    use crate::serve::store::save_model;
+    use crate::svd::{randomized_svd_file, SvdOptions};
+
+    fn engine_fixture(name: &str, center: bool) -> (QueryEngine, Matrix) {
+        let dir = std::env::temp_dir().join("tallfat_test_query").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            160,
+            18,
+            6,
+            Spectrum::Geometric { scale: 9.0, decay: 0.55 },
+            0.001,
+            23,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let opts = SvdOptions {
+            k: 6,
+            oversample: 6,
+            workers: 3,
+            block: 32,
+            work_dir: dir.join("work").to_string_lossy().into_owned(),
+            center,
+            ..SvdOptions::default()
+        };
+        let result =
+            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        save_model(&result, dir.join("model"), None).unwrap();
+        let store = Arc::new(ModelStore::open(dir.join("model"), 2).unwrap());
+        let engine = QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap();
+        (engine, a)
+    }
+
+    /// Oracle top-k: brute-force cosine over all embeddings with `linalg`.
+    fn oracle_topk(engine: &QueryEngine, latent: &[f64], topk: usize) -> Vec<Hit> {
+        let store = engine.store();
+        let qnorm: f64 = latent.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut scored: Vec<Scored> = (0..store.m())
+            .map(|row| {
+                let e = store.embedding_row(row).unwrap();
+                let dot: f64 = e.iter().zip(latent.iter()).map(|(a, b)| a * b).sum();
+                let denom = store.norms()[row] * qnorm;
+                Scored { score: if denom > 0.0 { dot / denom } else { 0.0 }, row }
+            })
+            .collect();
+        scored.sort_by(|a, b| b.cmp(a));
+        scored.truncate(topk);
+        scored.into_iter().map(|s| Hit { row: s.row, score: s.score }).collect()
+    }
+
+    #[test]
+    fn project_matches_linalg_oracle() {
+        let (engine, a) = engine_fixture("project", false);
+        let rows = a.slice_rows(10, 14);
+        let got = engine.project_batch(&rows).unwrap();
+        let want = matmul(&rows, engine.projection_matrix()).unwrap();
+        assert!(got.max_abs_diff(&want) < 1e-9);
+        let one = engine.project_one(a.row(10)).unwrap();
+        for (g, w) in one.iter().zip(want.row(0).iter()) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+        assert_eq!(one.len(), engine.store().k());
+    }
+
+    #[test]
+    fn project_honors_centering() {
+        let (engine, a) = engine_fixture("center", true);
+        let means = engine.store().means().unwrap().to_vec();
+        let raw = a.row(7).to_vec();
+        let centered: Vec<f64> = raw.iter().zip(means.iter()).map(|(x, mu)| x - mu).collect();
+        let got = engine.project_one(&raw).unwrap();
+        let cm = Matrix::from_rows(&[centered]).unwrap();
+        let want = matmul(&cm, engine.projection_matrix()).unwrap();
+        for (g, w) in got.iter().zip(want.row(0).iter()) {
+            assert!((g - w).abs() < 1e-9, "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn similar_matches_brute_force_oracle() {
+        let (engine, a) = engine_fixture("similar", false);
+        for &qrow in &[0usize, 42, 111] {
+            let latent = engine.project_one(a.row(qrow)).unwrap();
+            let got = engine.similar_latent(&latent, 10).unwrap();
+            let want = oracle_topk(&engine, &latent, 10);
+            let got_rows: Vec<usize> = got.iter().map(|h| h.row).collect();
+            let want_rows: Vec<usize> = want.iter().map(|h| h.row).collect();
+            assert_eq!(got_rows, want_rows, "query row {qrow}");
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g.score - w.score).abs() < 1e-9);
+            }
+            // A row projected back should be its own nearest neighbor.
+            assert_eq!(got[0].row, qrow);
+            assert!(got[0].score > 0.999, "self-score {}", got[0].score);
+        }
+    }
+
+    #[test]
+    fn similar_batch_matches_single_queries() {
+        let (engine, a) = engine_fixture("batch", false);
+        let latents = engine.project_batch(&a.slice_rows(20, 24)).unwrap();
+        let batched = engine.similar_batch(&latents, &[5, 5, 5, 5]).unwrap();
+        for j in 0..4 {
+            let single = engine.similar_latent(latents.row(j), 5).unwrap();
+            assert_eq!(
+                batched[j].iter().map(|h| h.row).collect::<Vec<_>>(),
+                single.iter().map(|h| h.row).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn reconstruct_row_approximates_input() {
+        let (engine, a) = engine_fixture("recon", false);
+        for &row in &[0usize, 80, 159] {
+            let got = engine.reconstruct_row(row).unwrap();
+            let mut err = 0.0f64;
+            let mut scale = 0.0f64;
+            for (g, w) in got.iter().zip(a.row(row).iter()) {
+                err += (g - w) * (g - w);
+                scale += w * w;
+            }
+            assert!(err.sqrt() < 1e-2 * scale.sqrt().max(1.0), "row {row}: {err}");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let (engine, _) = engine_fixture("shapes", false);
+        assert!(engine.project_one(&[1.0, 2.0]).is_err());
+        assert!(engine.similar_latent(&[1.0], 3).is_err());
+        assert!(engine.reconstruct_row(100_000).is_err());
+    }
+}

@@ -1,0 +1,634 @@
+//! Persisted SVD model directories and lazy loading.
+//!
+//! [`save_model`] turns a completed [`SvdResult`] into a self-contained
+//! directory; [`ModelStore::open`] loads it back for serving. The small
+//! factors (σ, V, means, the row-norm sidecar) live in memory; `U` is
+//! `m x k` and stays sharded on disk (Demchik-style out-of-core layout),
+//! pulled through an LRU shard cache on demand.
+//!
+//! Directory layout (all matrices in the `io::binmat` format):
+//!
+//! ```text
+//! <dir>/model.manifest   key=value: version m n k shards shard_rows centered [seed]
+//! <dir>/sigma.csv        descending singular values, one per line
+//! <dir>/V.bin            right singular vectors, n x k
+//! <dir>/means.bin        column means, 1 x n (PCA mode only)
+//! <dir>/U-<i>.bin        U shards, row order preserved
+//! <dir>/norms.bin        m x 1 sidecar: ||u_i ∘ σ||₂ per row, precomputed
+//!                        at save time so cosine queries never rescan U
+//! ```
+//!
+//! The manifest is written last, so a directory with a readable manifest is
+//! a complete model.
+
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::manifest::KvManifest;
+use crate::io::writer::ShardSet;
+use crate::linalg::Matrix;
+use crate::coordinator::server::MetricsRegistry;
+use crate::svd::SvdResult;
+use crate::util::Logger;
+use std::collections::{HashMap, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+static LOG: Logger = Logger::new("serve.store");
+
+/// Current model directory format version.
+pub const MODEL_VERSION: usize = 1;
+
+/// Persist a finished factorization as a servable model directory.
+///
+/// Streams the `U` shards into the directory (recomputing nothing), writes
+/// the row-norm sidecar for cosine queries along the way, and commits by
+/// writing `model.manifest` last. Requires `V` (serving projects through
+/// it); pass the run's seed for provenance if known.
+pub fn save_model(result: &SvdResult, dir: impl AsRef<Path>, seed: Option<u64>) -> Result<()> {
+    let dir = dir.as_ref();
+    let v = result
+        .v
+        .as_ref()
+        .ok_or_else(|| Error::Config("save_model: V not computed (rerun without --no-v)".into()))?;
+    if v.shape() != (result.n, result.k) {
+        return Err(Error::shape(format!(
+            "save_model: V is {:?}, expected ({}, {})",
+            v.shape(),
+            result.n,
+            result.k
+        )));
+    }
+    std::fs::create_dir_all(dir)?;
+    // Invalidate any previous model in this directory up front: the
+    // manifest is the commit marker, so it must not survive a partial
+    // overwrite of the other files.
+    match std::fs::remove_file(dir.join("model.manifest")) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => return Err(e.into()),
+    }
+
+    // σ, V, means — small, eager.
+    let sigma_text: String = result.sigma.iter().map(|s| format!("{s}\n")).collect();
+    std::fs::write(dir.join("sigma.csv"), sigma_text)?;
+    crate::io::binmat::write_matrix_bin(v, &path_str(dir.join("V.bin"))?)?;
+    if let Some(means) = &result.means {
+        let mrow = Matrix::from_rows(std::slice::from_ref(means))?;
+        crate::io::binmat::write_matrix_bin(&mrow, &path_str(dir.join("means.bin"))?)?;
+    }
+
+    // U shards: stream-copy into the model dir, counting rows per shard and
+    // accumulating the embedding row norms ||u_i ∘ σ||.
+    let dst = ShardSet::new(dir, "U", InputFormat::Bin)?;
+    if result.shards > 0 && dst.shard_path(0) == result.u_shards.shard_path(0) {
+        return Err(Error::Config(
+            "save_model: model dir equals the run's work dir; choose a separate directory".into(),
+        ));
+    }
+    let mut norms = crate::io::binmat::BinMatWriter::create(
+        &path_str(dir.join("norms.bin"))?,
+        1,
+        crate::io::binmat::DType::F64,
+    )?;
+    let mut shard_rows = Vec::with_capacity(result.shards);
+    let mut total_rows = 0usize;
+    for i in 0..result.shards {
+        let mut reader = result.u_shards.open_reader(i)?;
+        let mut writer = dst.open_writer(i, result.k)?;
+        let mut row = Vec::new();
+        let mut count = 0usize;
+        while reader.next_row(&mut row)? {
+            if row.len() != result.k {
+                return Err(Error::shape(format!(
+                    "save_model: U shard {i} row has {} cols, expected {}",
+                    row.len(),
+                    result.k
+                )));
+            }
+            writer.write_row(&row)?;
+            let norm: f64 = row
+                .iter()
+                .zip(result.sigma.iter())
+                .map(|(u, s)| (u * s) * (u * s))
+                .sum::<f64>()
+                .sqrt();
+            norms.write_row(&[norm])?;
+            count += 1;
+        }
+        writer.finish()?;
+        shard_rows.push(count);
+        total_rows += count;
+    }
+    norms.finish()?;
+    if total_rows != result.m {
+        return Err(Error::Other(format!(
+            "save_model: U shards hold {total_rows} rows, expected {}",
+            result.m
+        )));
+    }
+
+    // Manifest last — its presence marks the directory complete.
+    let mut man = KvManifest::new();
+    man.set("version", MODEL_VERSION);
+    man.set("m", result.m);
+    man.set("n", result.n);
+    man.set("k", result.k);
+    man.set("shards", result.shards);
+    man.set(
+        "shard_rows",
+        shard_rows.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","),
+    );
+    man.set("centered", usize::from(result.means.is_some()));
+    man.set("format", "bin");
+    if let Some(seed) = seed {
+        man.set("seed", seed);
+    }
+    man.save(dir.join("model.manifest"))?;
+    LOG.info(&format!(
+        "saved model {}x{} k={} ({} shards) to {}",
+        result.m,
+        result.n,
+        result.k,
+        result.shards,
+        dir.display()
+    ));
+    Ok(())
+}
+
+fn path_str(p: PathBuf) -> Result<String> {
+    Ok(p.to_string_lossy().into_owned())
+}
+
+/// LRU cache of materialized U shards.
+struct ShardCache {
+    cap: usize,
+    map: HashMap<usize, Arc<Matrix>>,
+    order: VecDeque<usize>,
+}
+
+impl ShardCache {
+    fn touch(&mut self, i: usize) {
+        if let Some(pos) = self.order.iter().position(|&x| x == i) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(i);
+    }
+}
+
+/// A loaded model: small factors in memory, U shards cached lazily.
+pub struct ModelStore {
+    dir: PathBuf,
+    m: usize,
+    n: usize,
+    k: usize,
+    shards: usize,
+    /// Rows per shard (row order preserved across shards).
+    shard_rows: Vec<usize>,
+    /// Global row index of each shard's first row (len = shards + 1).
+    row_offsets: Vec<usize>,
+    centered: bool,
+    seed: Option<u64>,
+    sigma: Vec<f64>,
+    v: Matrix,
+    means: Option<Vec<f64>>,
+    /// ||u_i ∘ σ||₂ per row (the cosine denominator sidecar).
+    norms: Vec<f64>,
+    u_shards: ShardSet,
+    cache: Mutex<ShardCache>,
+    /// Separate LRU of the scaled embedding shards `U_shard ∘ σ`, so the
+    /// similarity hot path never rescales per query batch.
+    embedding_cache: Mutex<ShardCache>,
+}
+
+impl ModelStore {
+    /// Default number of U shards kept materialized.
+    pub const DEFAULT_CACHE_SHARDS: usize = 4;
+
+    /// Open a model directory written by [`save_model`]. `cache_shards`
+    /// bounds how many U shards stay materialized (min 1).
+    pub fn open(dir: impl AsRef<Path>, cache_shards: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let man = KvManifest::load(dir.join("model.manifest"))?;
+        let version = man.require_usize("version")?;
+        if version != MODEL_VERSION {
+            return Err(Error::parse(format!(
+                "model {}: unsupported version {version}",
+                dir.display()
+            )));
+        }
+        let m = man.require_usize("m")?;
+        let n = man.require_usize("n")?;
+        let k = man.require_usize("k")?;
+        let shards = man.require_usize("shards")?;
+        let shard_rows = man.require_usize_list("shard_rows")?;
+        if shard_rows.len() != shards {
+            return Err(Error::parse(format!(
+                "model {}: {} shard_rows entries for {shards} shards",
+                dir.display(),
+                shard_rows.len()
+            )));
+        }
+        let mut row_offsets = Vec::with_capacity(shards + 1);
+        let mut acc = 0usize;
+        row_offsets.push(0);
+        for &r in &shard_rows {
+            acc += r;
+            row_offsets.push(acc);
+        }
+        if acc != m {
+            return Err(Error::parse(format!(
+                "model {}: shard_rows sum to {acc}, manifest says m={m}",
+                dir.display()
+            )));
+        }
+        let centered = man.require_bool("centered")?;
+        let seed = man.get_u64("seed")?;
+
+        let sigma: Vec<f64> = std::fs::read_to_string(dir.join("sigma.csv"))?
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                l.trim()
+                    .parse::<f64>()
+                    .map_err(|_| Error::parse(format!("sigma.csv: bad value `{l}`")))
+            })
+            .collect::<Result<_>>()?;
+        if sigma.len() != k {
+            return Err(Error::parse(format!(
+                "model {}: {} sigma values for k={k}",
+                dir.display(),
+                sigma.len()
+            )));
+        }
+        let v = crate::io::binmat::read_matrix_bin(&path_str(dir.join("V.bin"))?)?;
+        if v.shape() != (n, k) {
+            return Err(Error::shape(format!(
+                "model {}: V is {:?}, expected ({n}, {k})",
+                dir.display(),
+                v.shape()
+            )));
+        }
+        let means = if centered {
+            let mrow = crate::io::binmat::read_matrix_bin(&path_str(dir.join("means.bin"))?)?;
+            if mrow.shape() != (1, n) {
+                return Err(Error::shape(format!(
+                    "model {}: means is {:?}, expected (1, {n})",
+                    dir.display(),
+                    mrow.shape()
+                )));
+            }
+            Some(mrow.row(0).to_vec())
+        } else {
+            None
+        };
+        let norm_mat = crate::io::binmat::read_matrix_bin(&path_str(dir.join("norms.bin"))?)?;
+        if norm_mat.shape() != (m, 1) {
+            return Err(Error::shape(format!(
+                "model {}: norms is {:?}, expected ({m}, 1)",
+                dir.display(),
+                norm_mat.shape()
+            )));
+        }
+        let norms = norm_mat.col(0);
+
+        let u_shards = ShardSet::new(&dir, "U", InputFormat::Bin)?;
+        Ok(ModelStore {
+            dir,
+            m,
+            n,
+            k,
+            shards,
+            shard_rows,
+            row_offsets,
+            centered,
+            seed,
+            sigma,
+            v,
+            means,
+            norms,
+            u_shards,
+            cache: Mutex::new(ShardCache {
+                cap: cache_shards.max(1),
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+            embedding_cache: Mutex::new(ShardCache {
+                cap: cache_shards.max(1),
+                map: HashMap::new(),
+                order: VecDeque::new(),
+            }),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn shard_rows(&self) -> &[usize] {
+        &self.shard_rows
+    }
+
+    pub fn centered(&self) -> bool {
+        self.centered
+    }
+
+    pub fn seed(&self) -> Option<u64> {
+        self.seed
+    }
+
+    pub fn sigma(&self) -> &[f64] {
+        &self.sigma
+    }
+
+    /// Right singular vectors, `n x k`.
+    pub fn v(&self) -> &Matrix {
+        &self.v
+    }
+
+    pub fn means(&self) -> Option<&[f64]> {
+        self.means.as_deref()
+    }
+
+    /// Precomputed `||u_i ∘ σ||₂` per row.
+    pub fn norms(&self) -> &[f64] {
+        &self.norms
+    }
+
+    /// Global row index of shard `i`'s first row.
+    pub fn shard_base(&self, i: usize) -> usize {
+        self.row_offsets[i.min(self.shards)]
+    }
+
+    /// Map a global row index to `(shard, offset-within-shard)`.
+    pub fn row_location(&self, row: usize) -> Result<(usize, usize)> {
+        if row >= self.m {
+            return Err(Error::Config(format!("row {row} out of range (m={})", self.m)));
+        }
+        // row_offsets is sorted; find the shard whose range contains `row`.
+        let shard = match self.row_offsets.binary_search(&row) {
+            Ok(mut i) => {
+                // Landed on a boundary; skip empty shards to the owning one.
+                while i < self.shards && self.shard_rows[i] == 0 {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        Ok((shard, row - self.row_offsets[shard]))
+    }
+
+    /// Materialize shard `i` (rows x k), via the LRU cache.
+    pub fn shard(&self, i: usize) -> Result<Arc<Matrix>> {
+        if i >= self.shards {
+            return Err(Error::Config(format!("shard {i} out of range ({})", self.shards)));
+        }
+        cached(&self.cache, i, "serve_shard_cache", || self.load_shard(i))
+    }
+
+    /// Shard `i` as embedding rows `u ∘ σ`, via its own LRU — the
+    /// similarity scan's hot input, scaled once per residency, not per
+    /// query batch.
+    pub fn embedding_shard(&self, i: usize) -> Result<Arc<Matrix>> {
+        if i >= self.shards {
+            return Err(Error::Config(format!("shard {i} out of range ({})", self.shards)));
+        }
+        cached(&self.embedding_cache, i, "serve_embedding_cache", || {
+            self.shard(i)?.scale_cols(&self.sigma)
+        })
+    }
+
+    fn load_shard(&self, i: usize) -> Result<Matrix> {
+        let mut reader = self.u_shards.open_reader(i)?;
+        let mut out = Matrix::zeros(self.shard_rows[i], self.k);
+        let mut row = Vec::with_capacity(self.k);
+        let mut at = 0usize;
+        while reader.next_row(&mut row)? {
+            if at >= self.shard_rows[i] || row.len() != self.k {
+                return Err(Error::shape(format!(
+                    "model {}: U shard {i} does not match manifest ({} rows x {} cols expected)",
+                    self.dir.display(),
+                    self.shard_rows[i],
+                    self.k
+                )));
+            }
+            out.row_mut(at).copy_from_slice(&row);
+            at += 1;
+        }
+        if at != self.shard_rows[i] {
+            return Err(Error::shape(format!(
+                "model {}: U shard {i} has {at} rows, manifest says {}",
+                self.dir.display(),
+                self.shard_rows[i]
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Raw `u_row` (length k) for a global row index.
+    pub fn u_row(&self, row: usize) -> Result<Vec<f64>> {
+        let (shard, off) = self.row_location(row)?;
+        let s = self.shard(shard)?;
+        Ok(s.row(off).to_vec())
+    }
+
+    /// The row's latent embedding `u_row ∘ σ` (LSA document coordinates).
+    pub fn embedding_row(&self, row: usize) -> Result<Vec<f64>> {
+        let (shard, off) = self.row_location(row)?;
+        let e = self.embedding_shard(shard)?;
+        Ok(e.row(off).to_vec())
+    }
+}
+
+/// Shared LRU get-or-load over one of the store's caches.
+fn cached(
+    cache: &Mutex<ShardCache>,
+    i: usize,
+    metric: &str,
+    load: impl FnOnce() -> Result<Matrix>,
+) -> Result<Arc<Matrix>> {
+    let reg = MetricsRegistry::global();
+    {
+        let mut c = cache.lock().unwrap();
+        if let Some(m) = c.map.get(&i).cloned() {
+            c.touch(i);
+            reg.add(&format!("{metric}_hits"), 1.0);
+            return Ok(m);
+        }
+    }
+    reg.add(&format!("{metric}_misses"), 1.0);
+    let loaded = Arc::new(load()?);
+    let mut c = cache.lock().unwrap();
+    c.map.insert(i, loaded.clone());
+    c.touch(i);
+    while c.map.len() > c.cap {
+        match c.order.pop_front() {
+            Some(old) => {
+                c.map.remove(&old);
+            }
+            None => break,
+        }
+    }
+    Ok(loaded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::io::InputSpec;
+    use crate::svd::{randomized_svd_file, SvdOptions};
+
+    fn model_fixture(name: &str, center: bool) -> (PathBuf, SvdResult, Matrix) {
+        let dir = std::env::temp_dir().join("tallfat_test_store").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            180,
+            20,
+            5,
+            Spectrum::Geometric { scale: 8.0, decay: 0.6 },
+            0.0,
+            11,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let opts = SvdOptions {
+            k: 6,
+            oversample: 4,
+            workers: 3,
+            block: 32,
+            work_dir: dir.join("work").to_string_lossy().into_owned(),
+            center,
+            ..SvdOptions::default()
+        };
+        let result =
+            randomized_svd_file(&spec, std::sync::Arc::new(NativeBackend::new()), &opts).unwrap();
+        (dir, result, a)
+    }
+
+    #[test]
+    fn save_open_roundtrip() {
+        let (dir, result, _) = model_fixture("roundtrip", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, Some(42)).unwrap();
+        let store = ModelStore::open(&model_dir, 2).unwrap();
+        assert_eq!((store.m(), store.n(), store.k()), (180, 20, 6));
+        assert_eq!(store.shards(), result.shards);
+        assert_eq!(store.seed(), Some(42));
+        assert_eq!(store.sigma(), &result.sigma[..]);
+        assert_eq!(store.v(), result.v.as_ref().unwrap());
+        assert!(!store.centered());
+        assert!(store.means().is_none());
+        assert_eq!(store.norms().len(), 180);
+        assert_eq!(store.shard_rows().iter().sum::<usize>(), 180);
+
+        // Shard content matches the original U row by row.
+        let u = result.u_matrix().unwrap();
+        for row in [0usize, 1, 89, 179] {
+            let got = store.u_row(row).unwrap();
+            assert_eq!(got.as_slice(), u.row(row), "row {row}");
+            let emb = store.embedding_row(row).unwrap();
+            let norm: f64 = emb.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((norm - store.norms()[row]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn centered_model_keeps_means() {
+        let (dir, result, _) = model_fixture("centered", true);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let store = ModelStore::open(&model_dir, 1).unwrap();
+        assert!(store.centered());
+        assert_eq!(store.means().unwrap(), &result.means.as_ref().unwrap()[..]);
+        assert_eq!(store.seed(), None);
+    }
+
+    #[test]
+    fn lru_cache_evicts_but_stays_correct() {
+        let (dir, result, _) = model_fixture("lru", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let store = ModelStore::open(&model_dir, 1).unwrap(); // cap 1: every alternation evicts
+        let u = result.u_matrix().unwrap();
+        for _ in 0..3 {
+            for row in [0usize, 179] {
+                assert_eq!(store.u_row(row).unwrap().as_slice(), u.row(row));
+            }
+        }
+    }
+
+    #[test]
+    fn resave_over_existing_model_is_clean() {
+        let (dir, result, _) = model_fixture("resave", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, Some(1)).unwrap();
+        // Re-saving must fully replace the old model: the old manifest may
+        // not survive alongside partially rewritten artifacts.
+        save_model(&result, &model_dir, Some(2)).unwrap();
+        let store = ModelStore::open(&model_dir, 2).unwrap();
+        assert_eq!(store.seed(), Some(2));
+        assert_eq!(store.m(), 180);
+    }
+
+    #[test]
+    fn embedding_shard_matches_scaled_rows() {
+        let (dir, result, _) = model_fixture("embshard", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let store = ModelStore::open(&model_dir, 2).unwrap();
+        let raw = store.shard(0).unwrap();
+        let emb = store.embedding_shard(0).unwrap();
+        for r in 0..raw.rows().min(5) {
+            for (j, (&u, &s)) in raw.row(r).iter().zip(store.sigma().iter()).enumerate() {
+                assert!((emb.get(r, j) - u * s).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn open_rejects_damaged_dirs() {
+        let (dir, result, _) = model_fixture("damaged", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        std::fs::remove_file(model_dir.join("V.bin")).unwrap();
+        assert!(ModelStore::open(&model_dir, 2).is_err());
+        assert!(ModelStore::open(dir.join("nonexistent"), 2).is_err());
+    }
+
+    #[test]
+    fn row_location_spans_shards() {
+        let (dir, result, _) = model_fixture("rowloc", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let store = ModelStore::open(&model_dir, 2).unwrap();
+        let mut seen = 0usize;
+        for (i, &rows) in store.shard_rows().iter().enumerate() {
+            if rows > 0 {
+                assert_eq!(store.row_location(seen).unwrap(), (i, 0));
+                assert_eq!(store.row_location(seen + rows - 1).unwrap(), (i, rows - 1));
+            }
+            seen += rows;
+        }
+        assert!(store.row_location(store.m()).is_err());
+    }
+}

@@ -75,7 +75,8 @@ impl SvdOptions {
 
 /// Cutoff-guarded inverse of singular values: columns below
 /// `cutoff_rel * sigma_max` are zeroed (rank deficiency / oversampled tail).
-fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
+/// Shared with the serve layer's projection matrix `V Σ⁻¹`.
+pub(crate) fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
     let smax = sigma.first().copied().unwrap_or(0.0).max(1e-300);
     sigma
         .iter()

@@ -36,6 +36,13 @@ impl SvdResult {
         self.u_shards.merge_to_matrix(self.shards)
     }
 
+    /// Persist as a servable model directory (see [`crate::serve::store`]):
+    /// manifest + σ/V/means + re-sharded U + cosine row-norm sidecar.
+    /// Pass the run's Ω seed for provenance if known.
+    pub fn save_model(&self, dir: impl AsRef<std::path::Path>, seed: Option<u64>) -> Result<()> {
+        crate::serve::store::save_model(self, dir, seed)
+    }
+
     /// `A_k = U diag(sigma) V^T` reconstruction (requires V; small m only).
     pub fn reconstruct(&self) -> Result<Matrix> {
         let v = self

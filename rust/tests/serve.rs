@@ -1,0 +1,370 @@
+//! Serve-layer integration: model save→load→query over real HTTP, checked
+//! against oracles computed with `linalg` directly from the model files.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::config::InputFormat;
+use tallfat::coordinator::run_cli;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::{InputSpec, ShardSet};
+use tallfat::linalg::{matmul, Matrix};
+use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::util::Args;
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_serve_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn http_request(addr: &str, request: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    resp
+}
+
+fn http_post_query(addr: &str, body: &str) -> String {
+    let req = format!(
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    http_request(addr, &req)
+}
+
+fn body_of(resp: &str) -> &str {
+    resp.split("\r\n\r\n").nth(1).unwrap_or("")
+}
+
+/// Oracle built with `linalg` straight from the model directory files —
+/// shares no code path with the serving engine's backend dispatch.
+struct Oracle {
+    u: Matrix,
+    sigma: Vec<f64>,
+    w: Matrix, // V Σ⁻¹ (n x k)
+    means: Option<Vec<f64>>,
+}
+
+impl Oracle {
+    fn from_model_dir(model_dir: &std::path::Path) -> Oracle {
+        let store = ModelStore::open(model_dir, 64).unwrap();
+        let u = ShardSet::new(model_dir, "U", InputFormat::Bin)
+            .unwrap()
+            .merge_to_matrix(store.shards())
+            .unwrap();
+        let sigma = store.sigma().to_vec();
+        let smax = sigma[0].max(1e-300);
+        let inv: Vec<f64> =
+            sigma.iter().map(|&s| if s > 1e-12 * smax { 1.0 / s } else { 0.0 }).collect();
+        let w = store.v().scale_cols(&inv).unwrap();
+        let means = store.means().map(|m| m.to_vec());
+        Oracle { u, sigma, w, means }
+    }
+
+    fn project(&self, row: &[f64]) -> Vec<f64> {
+        let centered: Vec<f64> = match &self.means {
+            Some(mu) => row.iter().zip(mu.iter()).map(|(x, m)| x - m).collect(),
+            None => row.to_vec(),
+        };
+        let x = Matrix::from_rows(&[centered]).unwrap();
+        matmul(&x, &self.w).unwrap().row(0).to_vec()
+    }
+
+    /// Brute-force cosine top-k over the `u_i ∘ σ` embeddings.
+    fn topk(&self, latent: &[f64], k: usize) -> Vec<(usize, f64)> {
+        let qnorm: f64 = latent.iter().map(|v| v * v).sum::<f64>().sqrt();
+        let mut scored: Vec<(usize, f64)> = (0..self.u.rows())
+            .map(|i| {
+                let e: Vec<f64> =
+                    self.u.row(i).iter().zip(self.sigma.iter()).map(|(u, s)| u * s).collect();
+                let dot: f64 = e.iter().zip(latent.iter()).map(|(a, b)| a * b).sum();
+                let enorm: f64 = e.iter().map(|v| v * v).sum::<f64>().sqrt();
+                let denom = enorm * qnorm;
+                (i, if denom > 0.0 { dot / denom } else { 0.0 })
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.total_cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        scored.truncate(k);
+        scored
+    }
+}
+
+fn parse_hits(line: &Json) -> Vec<(usize, f64)> {
+    line.get("hits")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|h| {
+            (
+                h.get("row").and_then(Json::as_usize).unwrap(),
+                h.get("score").and_then(Json::as_f64).unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn model_server_answers_queries_matching_linalg_oracle() {
+    let d = dir("server");
+    // Tiny synthetic model from io::dataset.
+    let (a, _) = gen_exact(
+        150,
+        20,
+        5,
+        Spectrum::Geometric { scale: 10.0, decay: 0.6 },
+        0.01,
+        7,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let opts = SvdOptions {
+        k: 6,
+        oversample: 6,
+        workers: 3,
+        block: 32,
+        work_dir: d.join("work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let result = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+    let model_dir = d.join("model");
+    result.save_model(&model_dir, Some(0)).unwrap();
+
+    let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+    let server = ModelServer::bind(
+        engine,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(4),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    // 1. model info.
+    let resp = http_request(&addr, "GET /model HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(resp.contains("200 OK"), "{resp}");
+    let info = Json::parse(body_of(&resp).trim()).unwrap();
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(150));
+    assert_eq!(info.get("k").and_then(Json::as_usize), Some(6));
+
+    // 2. a batch of ND-JSON queries in one POST.
+    let qrow = a.row(33);
+    let row_json = Json::from_f64s(qrow).render();
+    let body = format!(
+        "{{\"op\":\"project\",\"row\":{row_json}}}\n\
+         {{\"op\":\"similar\",\"row\":{row_json},\"k\":7}}\n\
+         {{\"op\":\"reconstruct\",\"row_id\":33}}\n\
+         {{\"op\":\"info\"}}\n\
+         {{\"op\":\"nope\"}}\n\
+         not even json\n"
+    );
+    let resp = http_post_query(&addr, &body);
+    assert!(resp.contains("200 OK"), "{resp}");
+    let lines: Vec<Json> =
+        body_of(&resp).lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 6);
+
+    let oracle = Oracle::from_model_dir(&model_dir);
+
+    // project matches the linalg oracle within 1e-6.
+    assert_eq!(lines[0].get("ok"), Some(&Json::Bool(true)));
+    let latent = lines[0].get("latent").and_then(Json::as_f64_array).unwrap();
+    let want_latent = oracle.project(qrow);
+    assert_eq!(latent.len(), want_latent.len());
+    for (g, w) in latent.iter().zip(want_latent.iter()) {
+        assert!((g - w).abs() < 1e-6, "{g} vs {w}");
+    }
+
+    // cosine top-k identical to the oracle's ranking.
+    assert_eq!(lines[1].get("ok"), Some(&Json::Bool(true)));
+    let hits = parse_hits(&lines[1]);
+    let want = oracle.topk(&want_latent, 7);
+    assert_eq!(
+        hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+        want.iter().map(|h| h.0).collect::<Vec<_>>()
+    );
+    for (g, w) in hits.iter().zip(want.iter()) {
+        assert!((g.1 - w.1).abs() < 1e-9);
+    }
+    assert_eq!(hits[0].0, 33, "a model row must be its own nearest neighbor");
+
+    // reconstruct approximates the input row (noise-limited).
+    let values = lines[2].get("values").and_then(Json::as_f64_array).unwrap();
+    let err: f64 =
+        values.iter().zip(qrow.iter()).map(|(g, w)| (g - w) * (g - w)).sum::<f64>().sqrt();
+    let scale: f64 = qrow.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(err < 0.05 * scale.max(1.0), "reconstruct err {err} vs scale {scale}");
+
+    // info + error lines.
+    assert_eq!(lines[3].get("m").and_then(Json::as_usize), Some(150));
+    assert_eq!(lines[4].get("ok"), Some(&Json::Bool(false)));
+    assert_eq!(lines[5].get("ok"), Some(&Json::Bool(false)));
+
+    // 3. metrics flowed into the shared registry.
+    let resp = http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    assert!(resp.contains("tallfat_serve_requests_total"), "{resp}");
+    assert!(resp.contains("tallfat_serve_qps"), "{resp}");
+    assert!(resp.contains("tallfat_serve_latency_ms"), "{resp}");
+
+    // 4. a hostile Content-Length is rejected, not allocated.
+    let resp = http_request(
+        &addr,
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: 109951162777600\r\n\r\n",
+    );
+    assert!(resp.contains("413"), "{resp}");
+    srv.join().unwrap();
+}
+
+#[test]
+fn cli_svd_save_model_then_serve_roundtrip() {
+    let d = dir("cli");
+    let run = |tokens: &[&str]| {
+        run_cli(&Args::parse(tokens.iter().map(|s| s.to_string())).unwrap())
+    };
+    let input = d.join("a.csv").to_string_lossy().into_owned();
+    run(&[
+        "gen-data", "--out", &input, "--rows", "200", "--cols", "16", "--rank", "4", "--noise",
+        "0.01",
+    ])
+    .unwrap();
+    let work = d.join("work").to_string_lossy().into_owned();
+    let model = d.join("model").to_string_lossy().into_owned();
+    run(&[
+        "svd", "--input", &input, "--k", "5", "--workers", "2", "--work-dir", &work,
+        "--save-model", &model,
+    ])
+    .unwrap();
+    assert!(d.join("model").join("model.manifest").exists());
+
+    // Ephemeral port via probe bind (same pattern as the metrics server test).
+    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let addr2 = addr.clone();
+    let model2 = model.clone();
+    let srv = std::thread::spawn(move || {
+        run(&[
+            "serve", &model2, "--addr", &addr2, "--max-requests", "1", "--batch-window-ms", "0",
+        ])
+        .unwrap();
+    });
+
+    let a = tallfat::io::read_matrix(&InputSpec::auto(input)).unwrap();
+    let qrow = a.row(12);
+    let row_json = Json::from_f64s(qrow).render();
+    let body = format!(
+        "{{\"op\":\"project\",\"row\":{row_json}}}\n{{\"op\":\"similar\",\"row\":{row_json},\"k\":5}}\n"
+    );
+    let request = format!(
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    // Retry until the listener is up.
+    let mut resp = String::new();
+    for _ in 0..200 {
+        if let Ok(mut s) = TcpStream::connect(&addr) {
+            s.write_all(request.as_bytes()).unwrap();
+            s.read_to_string(&mut resp).unwrap();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    srv.join().unwrap();
+    assert!(resp.contains("200 OK"), "{resp}");
+    let lines: Vec<Json> = body_of(&resp).lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 2);
+
+    let oracle = Oracle::from_model_dir(std::path::Path::new(&model));
+    let latent = lines[0].get("latent").and_then(Json::as_f64_array).unwrap();
+    let want_latent = oracle.project(qrow);
+    for (g, w) in latent.iter().zip(want_latent.iter()) {
+        assert!((g - w).abs() < 1e-6, "projection {g} vs oracle {w}");
+    }
+    let hits = parse_hits(&lines[1]);
+    let want = oracle.topk(&want_latent, 5);
+    assert_eq!(
+        hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+        want.iter().map(|h| h.0).collect::<Vec<_>>(),
+        "cosine top-k must match the linalg oracle exactly"
+    );
+    assert_eq!(hits[0].0, 12);
+}
+
+#[test]
+fn concurrent_http_clients_are_batched_and_correct() {
+    let d = dir("concurrent");
+    let (a, _) = gen_exact(
+        100,
+        12,
+        4,
+        Spectrum::Geometric { scale: 6.0, decay: 0.5 },
+        0.0,
+        3,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let opts = SvdOptions {
+        k: 4,
+        oversample: 4,
+        workers: 2,
+        block: 32,
+        work_dir: d.join("work").to_string_lossy().into_owned(),
+        ..SvdOptions::default()
+    };
+    let result = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+    let model_dir = d.join("model");
+    result.save_model(&model_dir, None).unwrap();
+    let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+
+    const CLIENTS: usize = 6;
+    let server = ModelServer::bind(
+        engine,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(CLIENTS as u64),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    let oracle = Oracle::from_model_dir(&model_dir);
+    let responses: Vec<(usize, Json)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                let addr = addr.clone();
+                let row_json = Json::from_f64s(a.row(i * 15)).render();
+                scope.spawn(move || {
+                    let body = format!("{{\"op\":\"similar\",\"row\":{row_json},\"k\":3}}\n");
+                    let resp = http_post_query(&addr, &body);
+                    assert!(resp.contains("200 OK"), "{resp}");
+                    (i, Json::parse(body_of(&resp).trim()).unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    srv.join().unwrap();
+    for (i, line) in responses {
+        let hits = parse_hits(&line);
+        let want = oracle.topk(&oracle.project(a.row(i * 15)), 3);
+        assert_eq!(
+            hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+            want.iter().map(|h| h.0).collect::<Vec<_>>(),
+            "client {i}"
+        );
+        assert_eq!(hits[0].0, i * 15);
+    }
+}
