@@ -15,13 +15,11 @@
 //! cargo run --release --example lsa_similarity -- --rows 4000 --cols 512
 //! ```
 
-use std::sync::Arc;
-use tallfat::backend::native::NativeBackend;
 use tallfat::io::dataset::gen_clustered;
 use tallfat::io::InputSpec;
 use tallfat::linalg::Matrix;
 use tallfat::rng::VirtualMatrix;
-use tallfat::svd::{randomized_svd_file, validate::distance_distortion, SvdOptions};
+use tallfat::svd::{validate::distance_distortion, Svd};
 use tallfat::util::Args;
 
 /// Precision@10 of same-cluster retrieval under Euclidean NN in `space`.
@@ -68,16 +66,14 @@ fn main() -> tallfat::Result<()> {
     tallfat::io::write_matrix(&a, &input)?;
 
     // ---- route 1: rank-k LSA via the randomized SVD pipeline -------------
-    let opts = SvdOptions {
-        k,
-        oversample: 8,
-        workers: 4,
-        seed: 3,
-        work_dir: dir.join("work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
     let t0 = std::time::Instant::now();
-    let svd = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
+    let svd = Svd::over(&input)?
+        .rank(k)
+        .oversample(8)
+        .workers(4)
+        .seed(3)
+        .work_dir(dir.join("work").to_string_lossy().into_owned())
+        .run()?;
     let t_svd = t0.elapsed();
     let u = svd.u_matrix()?;
     let lsa = u.scale_cols(&svd.sigma)?; // document coordinates U·Σ

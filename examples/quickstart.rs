@@ -5,11 +5,9 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use tallfat::backend::native::NativeBackend;
 use tallfat::io::dataset::{gen_exact, Spectrum};
 use tallfat::io::InputSpec;
-use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
-use std::sync::Arc;
+use tallfat::svd::{validate, Svd};
 
 fn main() -> tallfat::Result<()> {
     let dir = std::env::temp_dir().join("tallfat_quickstart");
@@ -32,15 +30,13 @@ fn main() -> tallfat::Result<()> {
     // 2. Randomized rank-8 SVD: two streaming passes over the file,
     //    leader-side math only on (k+p) x (k+p) matrices.
     println!("== randomized rank-8 SVD (4 split-process workers) ==");
-    let opts = SvdOptions {
-        k: 8,
-        oversample: 8,
-        workers: 4,
-        seed: 7,
-        work_dir: dir.join("work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
-    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
+    let result = Svd::over(&input)?
+        .rank(8)
+        .oversample(8)
+        .workers(4)
+        .seed(7)
+        .work_dir(dir.join("work").to_string_lossy().into_owned())
+        .run()?;
 
     println!("{}", result.report.render());
     println!("singular values (computed vs true):");

@@ -15,7 +15,7 @@ use tallfat::io::dataset::gen_clustered;
 use tallfat::io::InputSpec;
 use tallfat::linalg::matmul;
 use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
-use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::svd::Svd;
 use tallfat::util::Args;
 
 fn post_query(addr: &str, body: &str) -> String {
@@ -46,21 +46,18 @@ fn main() -> tallfat::Result<()> {
     let (a, labels) = gen_clustered(m, n, clusters, 3.0, 2013);
     let input = InputSpec::csv(dir.join("docs.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input)?;
-    let opts = SvdOptions {
-        k,
-        oversample: 8,
-        workers: 4,
-        seed: 5,
-        work_dir: dir.join("work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
-    let t0 = std::time::Instant::now();
-    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts)?;
-    println!("   factorized in {:.2?} ({} U shards)", t0.elapsed(), result.shards);
-
-    // ---- 2. persist as a servable model ----------------------------------
+    // ---- 2. factorize and persist as a servable model (one builder run) --
     let model_dir = dir.join("model");
-    result.save_model(&model_dir, Some(opts.seed))?;
+    let t0 = std::time::Instant::now();
+    let result = Svd::over(&input)?
+        .rank(k)
+        .oversample(8)
+        .workers(4)
+        .seed(5)
+        .work_dir(dir.join("work").to_string_lossy().into_owned())
+        .save_model(model_dir.to_string_lossy().into_owned())
+        .run()?;
+    println!("   factorized in {:.2?} ({} U shards)", t0.elapsed(), result.shards);
     let model_bytes: u64 = std::fs::read_dir(&model_dir)?
         .filter_map(|e| e.ok()?.metadata().ok())
         .map(|md| md.len())

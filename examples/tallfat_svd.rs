@@ -22,7 +22,7 @@ use tallfat::backend::{self, native::NativeBackend, xla::XlaBackend};
 use tallfat::config::BackendKind;
 use tallfat::io::dataset::{gen_streamed, Spectrum};
 use tallfat::io::InputSpec;
-use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+use tallfat::svd::{validate, Svd};
 use tallfat::util::Args;
 
 fn main() -> tallfat::Result<()> {
@@ -77,18 +77,16 @@ fn main() -> tallfat::Result<()> {
     println!("== backend: {} ==", backend.name());
 
     // ---- the pipeline ------------------------------------------------------
-    let opts = SvdOptions {
-        k,
-        oversample,
-        workers,
-        block: 256,
-        seed: 1,
-        work_dir: dir.join("work").to_string_lossy().into_owned(),
-        compute_v: true,
-        ..SvdOptions::default()
-    };
     let t0 = std::time::Instant::now();
-    let result = randomized_svd_file(&input, backend.clone(), &opts)?;
+    let result = Svd::over(&input)?
+        .rank(k)
+        .oversample(oversample)
+        .workers(workers)
+        .block(256)
+        .seed(1)
+        .work_dir(dir.join("work").to_string_lossy().into_owned())
+        .backend(backend.clone())
+        .run()?;
     let elapsed = t0.elapsed();
 
     println!("\n{}", result.report.render());

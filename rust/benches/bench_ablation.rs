@@ -18,7 +18,7 @@ use tallfat::io::InputSpec;
 use tallfat::jobs::tsqr_sigma_file;
 use tallfat::linalg::{eigen::eigh, gram, Matrix};
 use tallfat::rng::Gaussian;
-use tallfat::svd::{randomized_svd_file, validate::reconstruction_error_streaming, SvdOptions};
+use tallfat::svd::{validate::reconstruction_error_streaming, Svd};
 
 fn main() {
     let dir = common::bench_dir("ablation");
@@ -65,16 +65,18 @@ fn main() {
     tallfat::io::write_matrix(&a, &input).unwrap();
     println!("{:>6} {:>10} {:>14} {:>12}", "p", "sketch", "recon err", "time");
     for p in [0usize, 2, 4, 8, 16, 32] {
-        let opts = SvdOptions {
-            k: 16,
-            oversample: p,
-            workers: 2,
-            seed: 9,
-            work_dir: dir.join(format!("os{p}")).to_string_lossy().into_owned(),
-            ..SvdOptions::default()
-        };
-        let (res, t) =
-            common::time_once(|| randomized_svd_file(&input, backend.clone(), &opts).unwrap());
+        let (res, t) = common::time_once(|| {
+            Svd::over(&input)
+                .unwrap()
+                .rank(16)
+                .oversample(p)
+                .workers(2)
+                .seed(9)
+                .work_dir(dir.join(format!("os{p}")).to_string_lossy().into_owned())
+                .backend(backend.clone())
+                .run()
+                .unwrap()
+        });
         let err = reconstruction_error_streaming(&input, &res).unwrap();
         println!("{:>6} {:>10} {:>14.6} {:>12.2?}", p, 16 + p, err, t);
     }
@@ -106,17 +108,19 @@ fn main() {
     let sh_input = common::ensure_dataset(&dir, "shards", 20_000, 256, true);
     println!("{:>8} {:>12} {:>14}", "format", "end-to-end", "Y shard bytes");
     for (label, fmt) in [("bin", InputFormat::Bin), ("csv", InputFormat::Csv)] {
-        let opts = SvdOptions {
-            k: 16,
-            oversample: 8,
-            workers: 4,
-            seed: 1,
-            work_dir: dir.join(format!("fmt_{label}")).to_string_lossy().into_owned(),
-            shard_format: fmt,
-            ..SvdOptions::default()
-        };
-        let (res, t) =
-            common::time_once(|| randomized_svd_file(&sh_input, backend.clone(), &opts).unwrap());
+        let (res, t) = common::time_once(|| {
+            Svd::over(&sh_input)
+                .unwrap()
+                .rank(16)
+                .oversample(8)
+                .workers(4)
+                .seed(1)
+                .work_dir(dir.join(format!("fmt_{label}")).to_string_lossy().into_owned())
+                .shard_format(fmt)
+                .backend(backend.clone())
+                .run()
+                .unwrap()
+        });
         let shard0 = std::fs::metadata(res.u_shards.shard_path(0))
             .map(|m| m.len())
             .unwrap_or(0);

@@ -19,7 +19,7 @@ use tallfat::io::InputSpec;
 use tallfat::linalg::Matrix;
 use tallfat::rng::VirtualMatrix;
 use tallfat::svd::validate::{distance_distortion, reconstruction_error_streaming};
-use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::svd::Svd;
 
 fn project(a: &Matrix, k: usize, seed: u64) -> Matrix {
     let vm = VirtualMatrix::projection(seed, a.cols(), k);
@@ -73,16 +73,17 @@ fn main() {
             let tail: f64 = sigma[k.min(rank)..].iter().map(|s| s * s).sum::<f64>();
             print!("{:>6} {:>14.6}", k, (tail / total).sqrt());
             for &q in &powers {
-                let opts = SvdOptions {
-                    k,
-                    oversample: 8,
-                    power_iters: q,
-                    workers: 2,
-                    seed: 9,
-                    work_dir: dir.join(format!("w_{k}_{q}")).to_string_lossy().into_owned(),
-                    ..SvdOptions::default()
-                };
-                let res = randomized_svd_file(&input, backend.clone(), &opts).unwrap();
+                let res = Svd::over(&input)
+                    .unwrap()
+                    .rank(k)
+                    .oversample(8)
+                    .power_iters(q)
+                    .workers(2)
+                    .seed(9)
+                    .work_dir(dir.join(format!("w_{k}_{q}")).to_string_lossy().into_owned())
+                    .backend(backend.clone())
+                    .run()
+                    .unwrap();
                 let err = reconstruction_error_streaming(&input, &res).unwrap();
                 print!(" {:>14.6}", err);
             }

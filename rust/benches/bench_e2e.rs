@@ -11,7 +11,7 @@ mod common;
 
 use std::sync::Arc;
 use tallfat::backend::{native::NativeBackend, xla::XlaBackend, BackendRef};
-use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+use tallfat::svd::{validate, Svd};
 
 fn main() {
     let dir = common::bench_dir("e2e");
@@ -27,18 +27,19 @@ fn main() {
 
     for (name, backend) in backends {
         common::header(&format!("E6 {m}x{n} k={k} — backend {name}"));
-        let opts = SvdOptions {
-            k,
-            oversample: 8,
-            workers: 4,
-            block: 256,
-            seed: 1,
-            work_dir: dir.join(format!("work_{name}")).to_string_lossy().into_owned(),
-            compute_v: true,
-            ..SvdOptions::default()
-        };
-        let (result, elapsed) =
-            common::time_once(|| randomized_svd_file(&input, backend.clone(), &opts).unwrap());
+        let (result, elapsed) = common::time_once(|| {
+            Svd::over(&input)
+                .unwrap()
+                .rank(k)
+                .oversample(8)
+                .workers(4)
+                .block(256)
+                .seed(1)
+                .work_dir(dir.join(format!("work_{name}")).to_string_lossy().into_owned())
+                .backend(backend.clone())
+                .run()
+                .unwrap()
+        });
         println!("{}", result.report.render());
         println!(
             "end-to-end {elapsed:.2?}  |  {:.0} rows/s/pass  |  {:.0} MB/s of input",

@@ -15,7 +15,7 @@ use std::sync::Arc;
 use tallfat::backend::native::NativeBackend;
 use tallfat::rng::Gaussian;
 use tallfat::serve::{BatchOptions, Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
-use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::svd::Svd;
 
 const M: usize = 20_000;
 const N: usize = 256;
@@ -50,18 +50,18 @@ fn ensure_model(dir: &std::path::Path) -> std::path::PathBuf {
         return model_dir;
     }
     let input = common::ensure_dataset(&dir.to_path_buf(), "serve", M, N, true);
-    let opts = SvdOptions {
-        k: K,
-        oversample: 8,
-        workers: 4,
-        block: 256,
-        seed: 1,
-        work_dir: dir.join("svd_work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
     eprintln!("[build] factorizing {M}x{N} k={K}...");
-    let result = randomized_svd_file(&input, Arc::new(NativeBackend::new()), &opts).unwrap();
-    result.save_model(&model_dir, Some(opts.seed)).unwrap();
+    let _ = Svd::over(&input)
+        .unwrap()
+        .rank(K)
+        .oversample(8)
+        .workers(4)
+        .block(256)
+        .seed(1)
+        .work_dir(dir.join("svd_work").to_string_lossy().into_owned())
+        .save_model(model_dir.to_string_lossy().into_owned())
+        .run()
+        .unwrap();
     model_dir
 }
 

@@ -1,0 +1,110 @@
+//! [`ClusterExecutor`]: the distributed execution substrate.
+//!
+//! Implements [`crate::svd::Executor`] by shipping each pass description to
+//! the connected workers over the leader/worker RPC and reducing the
+//! returned partials. Only small state crosses the wire — sketch partials,
+//! rotation matrices, column means; the tall data never does (the paper's
+//! point, made structural by [`super::proto`]).
+
+use super::leader::DistributedLeader;
+use super::proto::PhaseKind;
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::splitproc;
+use crate::svd::{Executor, Pass, PassContext, PassOutput};
+
+/// Map a wire phase back to the pass the worker should run. Inverse of
+/// [`wire_parts`]; an all-zero operand means "regenerate Ω from the seed".
+pub(crate) fn pass_from_wire(kind: PhaseKind, operand: &Matrix) -> Pass<'_> {
+    match kind {
+        PhaseKind::ColStats => Pass::ColStats,
+        PhaseKind::Ata => Pass::Ata,
+        PhaseKind::ProjectGram => Pass::ProjectGram {
+            omega: if operand.rows() > 0 { Some(operand) } else { None },
+        },
+        PhaseKind::UrecoverTmul => Pass::UrecoverTmul { m: operand },
+        PhaseKind::Mult => Pass::Mult { m: operand },
+        PhaseKind::RotateU => Pass::RotateU { p: operand },
+    }
+}
+
+/// Map a pass to its wire phase kind and operand (None = empty matrix).
+fn wire_parts<'a>(pass: &Pass<'a>) -> (PhaseKind, Option<&'a Matrix>) {
+    match *pass {
+        Pass::ColStats => (PhaseKind::ColStats, None),
+        Pass::Ata => (PhaseKind::Ata, None),
+        Pass::ProjectGram { omega } => (PhaseKind::ProjectGram, omega),
+        Pass::UrecoverTmul { m } => (PhaseKind::UrecoverTmul, Some(m)),
+        Pass::Mult { m } => (PhaseKind::Mult, Some(m)),
+        Pass::RotateU { p } => (PhaseKind::RotateU, Some(p)),
+    }
+}
+
+/// Executor that fans passes out to remote TCP workers. Worker `i` always
+/// processes chunk `i` of the deterministic chunk plan both sides compute
+/// from the shared input file.
+pub struct ClusterExecutor {
+    leader: DistributedLeader,
+}
+
+impl ClusterExecutor {
+    /// Wrap an already-accepted leader.
+    pub fn new(leader: DistributedLeader) -> Self {
+        ClusterExecutor { leader }
+    }
+
+    /// Bind `listen` and wait for `workers` remote workers to join.
+    pub fn accept(listen: &str, workers: usize) -> Result<Self> {
+        Ok(Self::new(DistributedLeader::accept(listen, workers)?))
+    }
+
+    /// Number of connected workers (= chunk/shard count of every pass).
+    pub fn workers(&self) -> usize {
+        self.leader.worker_count()
+    }
+
+    /// Access the underlying leader (e.g. for raw phase RPCs).
+    pub fn leader_mut(&mut self) -> &mut DistributedLeader {
+        &mut self.leader
+    }
+
+    /// Tell every worker to exit and consume the executor.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.leader.shutdown()
+    }
+}
+
+impl Executor for ClusterExecutor {
+    fn name(&self) -> &str {
+        "cluster"
+    }
+
+    fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput> {
+        let empty = Matrix::zeros(0, 0);
+        let (kind, operand) = wire_parts(pass);
+        let operand = operand.unwrap_or(&empty);
+        let means = if ctx.means.is_empty() {
+            Matrix::zeros(0, 0)
+        } else {
+            Matrix::from_vec(1, ctx.means.len(), ctx.means.to_vec())?
+        };
+        let (rows, partials) = self.leader.run_phase(
+            kind,
+            ctx.input,
+            ctx.work_dir,
+            ctx.block,
+            ctx.seed,
+            ctx.kp,
+            ctx.n,
+            ctx.shard_format,
+            operand,
+            &means,
+        )?;
+        let partial = if partials.is_empty() {
+            None
+        } else {
+            Some(splitproc::reduce_partials(partials)?)
+        };
+        Ok(PassOutput { rows, shards: self.leader.worker_count(), partial })
+    }
+}

@@ -1,30 +1,17 @@
-//! The leader: accepts worker connections, drives the phase schedule of the
-//! randomized SVD across them, reduces partials, owns the small dense math.
+//! The leader: accepts worker connections, broadcasts phase assignments,
+//! collects partials. The SVD math itself lives in [`crate::svd::pipeline`]
+//! — this module is pure transport, driven through
+//! [`crate::cluster::ClusterExecutor`].
 
 use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
-use crate::backend::BackendRef;
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
-use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::linalg::{matmul, Matrix};
-use crate::metrics::PhaseReport;
-use crate::splitproc;
-use crate::svd::{SvdOptions, SvdResult};
+use crate::linalg::Matrix;
 use crate::util::Logger;
 use std::net::{TcpListener, TcpStream};
-use std::time::Instant;
 
 static LOG: Logger = Logger::new("cluster.leader");
-
-/// Distributed-run options on top of [`SvdOptions`].
-#[derive(Clone, Debug)]
-pub struct DistOptions {
-    /// Listen address, e.g. `127.0.0.1:7070`.
-    pub listen: String,
-    /// Number of remote workers to wait for (= chunk count).
-    pub workers: usize,
-}
 
 /// One connected worker.
 struct WorkerConn {
@@ -93,181 +80,96 @@ impl DistributedLeader {
         block: usize,
         seed: u64,
         kp: usize,
+        cols: usize,
+        shard_format: InputFormat,
         operand: &Matrix,
+        means: &Matrix,
     ) -> Result<(u64, Vec<Matrix>)> {
+        // Frame-alignment invariant: the executor seam keeps leaders alive
+        // across passes, so this must never leave a connection with an
+        // unread reply in flight. Send to every worker (recording, not
+        // returning, the first error), then read a reply from exactly the
+        // workers a phase was delivered to.
         let total = self.workers.len() as u32;
+        let mut failure: Option<Error> = None;
+        let mut sent = vec![false; self.workers.len()];
         for (i, w) in self.workers.iter_mut().enumerate() {
-            w.send(&ToWorker::Phase {
+            let r = w.send(&ToWorker::Phase {
                 kind,
                 input_path: input.path.clone(),
+                input_format: input.format,
                 work_dir: work_dir.to_string(),
                 chunk_index: i as u32,
                 chunk_total: total,
                 block: block as u32,
                 seed,
                 kp: kp as u32,
+                cols: cols as u32,
+                shard_format,
                 operand: operand.clone(),
-            })?;
+                means: means.clone(),
+            });
+            match r {
+                Ok(()) => sent[i] = true,
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some(Error::Other(format!("send to worker {i} failed: {e}")));
+                    }
+                }
+            }
         }
         let mut rows = 0u64;
         let mut partials = Vec::with_capacity(self.workers.len());
         for (i, w) in self.workers.iter_mut().enumerate() {
-            match w.recv()? {
-                ToLeader::Partial { rows: r, partial } => {
+            if !sent[i] {
+                continue;
+            }
+            match w.recv() {
+                Ok(ToLeader::Partial { rows: r, partial }) => {
                     rows += r;
                     if partial.rows() > 0 {
                         partials.push(partial);
                     }
                 }
-                ToLeader::Failed { message } => {
-                    return Err(Error::Other(format!("worker {i} failed: {message}")));
+                Ok(ToLeader::Failed { message }) => {
+                    if failure.is_none() {
+                        failure = Some(Error::Other(format!("worker {i} failed: {message}")));
+                    }
                 }
-                other => return Err(Error::parse(format!("unexpected reply: {other:?}"))),
+                Ok(other) => {
+                    if failure.is_none() {
+                        failure = Some(Error::parse(format!("unexpected reply: {other:?}")));
+                    }
+                }
+                // Connection-level error: this stream is gone either way;
+                // keep draining the rest so they stay aligned.
+                Err(e) => {
+                    if failure.is_none() {
+                        failure = Some(e);
+                    }
+                }
             }
         }
-        Ok((rows, partials))
+        match failure {
+            Some(e) => Err(e),
+            None => Ok((rows, partials)),
+        }
     }
 
-    /// Tell every worker to exit.
+    /// Tell every worker to exit. A dead connection must not stop the
+    /// others from being told — send to all, report the first error.
     pub fn shutdown(&mut self) -> Result<()> {
+        let mut failure: Option<Error> = None;
         for w in &mut self.workers {
-            w.send(&ToWorker::Shutdown)?;
+            if let Err(e) = w.send(&ToWorker::Shutdown) {
+                if failure.is_none() {
+                    failure = Some(e);
+                }
+            }
         }
-        Ok(())
-    }
-}
-
-fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
-    let smax = sigma.first().copied().unwrap_or(0.0).max(1e-300);
-    sigma
-        .iter()
-        .map(|&s| if s > cutoff_rel * smax { 1.0 / s } else { 0.0 })
-        .collect()
-}
-
-/// The randomized SVD with every streaming pass delegated to remote
-/// workers. The leader computes only the `k' x k'` eigensolves and the
-/// `n x k'` orthonormalization — the paper's "fast computation around
-/// k x k matrices computed on a single machine", now literally on one
-/// machine while the passes run on N others.
-pub fn distributed_randomized_svd(
-    leader: &mut DistributedLeader,
-    input: &InputSpec,
-    backend: BackendRef, // leader-side math only
-    opts: &SvdOptions,
-) -> Result<SvdResult> {
-    let mut report = PhaseReport::new();
-    let (m_rows, n) = input.dims()?;
-    if m_rows == 0 || n == 0 {
-        return Err(Error::Config("empty input matrix".into()));
-    }
-    let kp = (opts.k + opts.oversample).min(n).min(m_rows);
-    let shards_count = leader.worker_count();
-    LOG.info(&format!(
-        "distributed svd: {m_rows}x{n} -> k={} (sketch {kp}) across {shards_count} workers",
-        opts.k.min(kp)
-    ));
-    std::fs::create_dir_all(&opts.work_dir)?;
-    let empty = Matrix::zeros(0, 0);
-
-    // Power-iteration loop mirrors svd::pipeline::randomized_svd_file.
-    let mut omega_override = empty.clone();
-    let mut w_mat;
-    let mut iteration = 0usize;
-    loop {
-        // ---- pass 1 (remote): Y = A Ω, G = Σ YᵀY -------------------------
-        let t0 = Instant::now();
-        let (rows, partials) = leader.run_phase(
-            PhaseKind::ProjectGram,
-            input,
-            &opts.work_dir,
-            opts.block,
-            opts.seed,
-            kp,
-            &omega_override,
-        )?;
-        if rows as usize != m_rows {
-            return Err(Error::Other(format!("pass1 saw {rows} rows, expected {m_rows}")));
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(()),
         }
-        let g = splitproc::reduce_partials(partials)?;
-        report.push(&format!("pass1.remote[{iteration}]"), t0.elapsed(), rows, 0);
-
-        // ---- leader: eigh(G), M = V_y Σ_y⁻¹ ------------------------------
-        let t0 = Instant::now();
-        let (w_eig, v_y) = backend.eigh(&g)?;
-        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
-        let inv_y = guarded_inverse(&sig_y, 1e-7);
-        let m_mat = v_y.scale_cols(&inv_y)?;
-        report.push(&format!("leader.eigh_y[{iteration}]"), t0.elapsed(), kp as u64, 0);
-
-        // ---- pass 2 (remote): U0 = Y M, W = Σ Aᵀ U0 ----------------------
-        let t0 = Instant::now();
-        let (rows2, w_partials) = leader.run_phase(
-            PhaseKind::UrecoverTmul,
-            input,
-            &opts.work_dir,
-            opts.block,
-            opts.seed,
-            kp,
-            &m_mat,
-        )?;
-        w_mat = splitproc::reduce_partials(w_partials)?;
-        report.push(&format!("pass2.remote[{iteration}]"), t0.elapsed(), rows2, 0);
-
-        if iteration >= opts.power_iters {
-            break;
-        }
-        let t0 = Instant::now();
-        let (q, _) = crate::linalg::thin_qr(&w_mat)?;
-        omega_override = q;
-        iteration += 1;
-        report.push(&format!("leader.power_orth[{iteration}]"), t0.elapsed(), 0, 0);
     }
-
-    // ---- leader: small SVD completion --------------------------------------
-    let t0 = Instant::now();
-    let gw = backend.gram_block(&w_mat)?;
-    let (w2, p) = backend.eigh(&gw)?;
-    let sigma_full: Vec<f64> = w2.iter().map(|&w| w.max(0.0).sqrt()).collect();
-    let k = opts.k.min(kp);
-    let sigma: Vec<f64> = sigma_full[..k].to_vec();
-    let p_k = p.slice_cols(0, k);
-    let v = if opts.compute_v {
-        let inv_s = guarded_inverse(&sigma, 1e-12);
-        let vp = matmul(&w_mat, &p_k)?;
-        Some(vp.scale_cols(&inv_s)?)
-    } else {
-        None
-    };
-    report.push("leader.eigh_w", t0.elapsed(), kp as u64, 0);
-
-    // ---- pass 3 (remote): U = U0 P ------------------------------------------
-    let t0 = Instant::now();
-    let (rows3, _) = leader.run_phase(
-        PhaseKind::RotateU,
-        input,
-        &opts.work_dir,
-        opts.block,
-        opts.seed,
-        k,
-        &p_k,
-    )?;
-    report.push("pass3.remote", t0.elapsed(), rows3, 0);
-
-    let u_shards = ShardSet::new(&opts.work_dir, "U", InputFormat::Bin)?;
-    LOG.info(&format!(
-        "distributed svd done: sigma[0]={:.4}",
-        sigma.first().copied().unwrap_or(0.0)
-    ));
-    Ok(SvdResult {
-        m: m_rows,
-        n,
-        k,
-        sigma,
-        v,
-        u_shards,
-        shards: shards_count,
-        means: None,
-        report,
-    })
 }

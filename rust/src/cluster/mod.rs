@@ -20,12 +20,21 @@
 //! matrices); the tall data never does — that is the paper's point, and the
 //! protocol makes it structural: [`proto`] has no frame type for row data.
 //!
+//! The SVD math never lives here: [`ClusterExecutor`] plugs this transport
+//! into the one executor-generic pipeline in [`crate::svd`] —
+//! `Svd::over(&input)?.executor(&mut cluster).run()` runs the exact same
+//! pass schedule the local executor does.
+//!
 //! The protocol is a hand-rolled length-prefixed binary format ([`proto`]) —
 //! serde is unavailable offline, and the message set is 6 frames.
 
+pub mod executor;
 pub mod leader;
 pub mod proto;
 pub mod worker;
 
-pub use leader::{DistOptions, DistributedLeader};
+pub use executor::ClusterExecutor;
+pub use leader::DistributedLeader;
 pub use worker::run_worker;
+
+pub(crate) use executor::pass_from_wire;

@@ -5,12 +5,15 @@
 //! The protocol carries only leader-side-small state — partials, rotation
 //! matrices, paths — never row data (see module docs in [`super`]).
 
+use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use std::io::{Read, Write};
 
 /// Protocol version — bumped on any frame change.
-pub const VERSION: u32 = 1;
+/// v2: `Phase` gained `input_format`, `cols`, `shard_format`, and `means`;
+/// ColStats/Mult phase kinds.
+pub const VERSION: u32 = 2;
 
 /// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
 /// larger indicates a protocol error, not a legitimate partial).
@@ -25,8 +28,13 @@ pub enum PhaseKind {
     UrecoverTmul = 2,
     /// Pass 3: rotate `U = U0 P`; U shard to shared fs.
     RotateU = 3,
-    /// Standalone `AᵀA` partial (the `ata` subcommand, distributed).
+    /// Standalone `AᵀA` partial (the `ata` subcommand, distributed; also
+    /// pass 1 of the exact-Gram route).
     Ata = 4,
+    /// Pass 0 (PCA mode): per-column sums partial (1 x n).
+    ColStats = 5,
+    /// Exact-Gram pass 2: `U = A M` straight to U shards.
+    Mult = 6,
 }
 
 impl PhaseKind {
@@ -36,8 +44,25 @@ impl PhaseKind {
             2 => PhaseKind::UrecoverTmul,
             3 => PhaseKind::RotateU,
             4 => PhaseKind::Ata,
+            5 => PhaseKind::ColStats,
+            6 => PhaseKind::Mult,
             other => return Err(Error::parse(format!("unknown phase kind {other}"))),
         })
+    }
+}
+
+fn format_to_u8(f: InputFormat) -> u8 {
+    match f {
+        InputFormat::Csv => 0,
+        InputFormat::Bin => 1,
+    }
+}
+
+fn format_from_u8(v: u8) -> Result<InputFormat> {
+    match v {
+        0 => Ok(InputFormat::Csv),
+        1 => Ok(InputFormat::Bin),
+        other => Err(Error::parse(format!("unknown format code {other}"))),
     }
 }
 
@@ -49,6 +74,10 @@ pub enum ToWorker {
         kind: PhaseKind,
         /// Shared input file (visible to the worker — paper's assumption).
         input_path: String,
+        /// Parse format of the input file. Sent explicitly so a worker
+        /// never re-guesses from the extension (parity with the local
+        /// executor for format-explicit inputs).
+        input_format: InputFormat,
         /// Shard/working directory on the shared filesystem.
         work_dir: String,
         chunk_index: u32,
@@ -60,9 +89,16 @@ pub enum ToWorker {
         seed: u64,
         /// Sketch width k' (ProjectGram) / columns (others).
         kp: u32,
+        /// Input column count n — sent so workers skip a `dims()` scan of
+        /// the tall file on every phase.
+        cols: u32,
+        /// Format of the Y/U0/U shards the worker writes.
+        shard_format: InputFormat,
         /// Small shared operand: Ω override for power iterations (rows > 0),
-        /// M for UrecoverTmul, P for RotateU, unused for Ata/plain pass 1.
+        /// M for UrecoverTmul/Mult, P for RotateU, unused otherwise.
         operand: Matrix,
+        /// Column means for PCA mode (1 x n; 0x0 = centering off).
+        means: Matrix,
     },
     /// All phases done; worker may exit.
     Shutdown,
@@ -188,24 +224,32 @@ impl ToWorker {
             ToWorker::Phase {
                 kind,
                 input_path,
+                input_format,
                 work_dir,
                 chunk_index,
                 chunk_total,
                 block,
                 seed,
                 kp,
+                cols,
+                shard_format,
                 operand,
+                means,
             } => {
                 let mut buf = Vec::new();
                 buf.push(*kind as u8);
                 put_string(&mut buf, input_path);
+                buf.push(format_to_u8(*input_format));
                 put_string(&mut buf, work_dir);
                 buf.extend_from_slice(&chunk_index.to_le_bytes());
                 buf.extend_from_slice(&chunk_total.to_le_bytes());
                 buf.extend_from_slice(&block.to_le_bytes());
                 buf.extend_from_slice(&seed.to_le_bytes());
                 buf.extend_from_slice(&kp.to_le_bytes());
+                buf.extend_from_slice(&cols.to_le_bytes());
+                buf.push(format_to_u8(*shard_format));
                 put_matrix(&mut buf, operand);
+                put_matrix(&mut buf, means);
                 write_frame(w, T_PHASE, &buf)
             }
             ToWorker::Shutdown => write_frame(w, T_SHUTDOWN, &[]),
@@ -220,13 +264,17 @@ impl ToWorker {
                 Ok(ToWorker::Phase {
                     kind: PhaseKind::from_u8(c.u8()?)?,
                     input_path: c.string()?,
+                    input_format: format_from_u8(c.u8()?)?,
                     work_dir: c.string()?,
                     chunk_index: c.u32()?,
                     chunk_total: c.u32()?,
                     block: c.u32()?,
                     seed: c.u64()?,
                     kp: c.u32()?,
+                    cols: c.u32()?,
+                    shard_format: format_from_u8(c.u8()?)?,
                     operand: c.matrix()?,
+                    means: c.matrix()?,
                 })
             }
             T_SHUTDOWN => Ok(ToWorker::Shutdown),
@@ -284,28 +332,72 @@ mod tests {
     #[test]
     fn phase_roundtrip() {
         let m = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64 * 0.5);
+        let mu = Matrix::from_fn(1, 4, |_, j| j as f64 + 0.5);
         let msg = ToWorker::Phase {
             kind: PhaseKind::ProjectGram,
             input_path: "/data/a.csv".into(),
+            input_format: InputFormat::Csv,
             work_dir: "/tmp/w".into(),
             chunk_index: 2,
             chunk_total: 8,
             block: 256,
             seed: 0xDEAD_BEEF,
             kp: 32,
+            cols: 4,
+            shard_format: InputFormat::Csv,
             operand: m.clone(),
+            means: mu.clone(),
         };
         match roundtrip_worker(&msg) {
-            ToWorker::Phase { kind, input_path, chunk_index, chunk_total, seed, kp, operand, .. } => {
+            ToWorker::Phase {
+                kind,
+                input_path,
+                chunk_index,
+                chunk_total,
+                seed,
+                kp,
+                shard_format,
+                operand,
+                means,
+                ..
+            } => {
                 assert_eq!(kind, PhaseKind::ProjectGram);
                 assert_eq!(input_path, "/data/a.csv");
                 assert_eq!((chunk_index, chunk_total), (2, 8));
                 assert_eq!(seed, 0xDEAD_BEEF);
                 assert_eq!(kp, 32);
+                assert_eq!(shard_format, InputFormat::Csv);
                 assert_eq!(operand.max_abs_diff(&m), 0.0);
+                assert_eq!(means.max_abs_diff(&mu), 0.0);
             }
             other => panic!("wrong message: {other:?}"),
         }
+    }
+
+    #[test]
+    fn new_phase_kinds_roundtrip() {
+        for kind in [PhaseKind::ColStats, PhaseKind::Mult] {
+            let msg = ToWorker::Phase {
+                kind,
+                input_path: "/data/a.bin".into(),
+                input_format: InputFormat::Bin,
+                work_dir: "/tmp/w".into(),
+                chunk_index: 0,
+                chunk_total: 1,
+                block: 64,
+                seed: 1,
+                kp: 4,
+                cols: 4,
+                shard_format: InputFormat::Bin,
+                operand: Matrix::zeros(0, 0),
+                means: Matrix::zeros(0, 0),
+            };
+            match roundtrip_worker(&msg) {
+                ToWorker::Phase { kind: got, .. } => assert_eq!(got, kind),
+                other => panic!("wrong message: {other:?}"),
+            }
+        }
+        assert!(PhaseKind::from_u8(7).is_err());
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! The worker process: connects to the leader, executes phase assignments
 //! over its chunk of the shared input file, ships partials back.
+//!
+//! A phase assignment is decoded into the same [`Pass`]/[`PassContext`]
+//! pair the in-process [`crate::svd::LocalExecutor`] uses, then handed to
+//! [`crate::svd::execute_pass_chunk`] — the pass structure is defined once
+//! and this module only does transport.
 
-use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
+use super::proto::{ToLeader, ToWorker, VERSION};
 use crate::backend::BackendRef;
-use crate::config::InputFormat;
+use crate::cluster::pass_from_wire;
 use crate::error::{Error, Result};
-use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::jobs::{AtaBlockJob, Pass2Job, ProjectGramJob};
-use crate::linalg::{matmul, Matrix};
-use crate::rng::VirtualMatrix;
-use crate::splitproc::{self, Blocked};
+use crate::linalg::Matrix;
+use crate::splitproc;
+use crate::svd::{execute_pass_chunk, PassContext};
 use crate::util::Logger;
 use std::net::TcpStream;
+use std::sync::Arc;
 
 static LOG: Logger = Logger::new("cluster.worker");
 
@@ -21,21 +25,23 @@ pub fn execute_phase(backend: &BackendRef, msg: &ToWorker) -> Result<(u64, Matri
     let ToWorker::Phase {
         kind,
         input_path,
+        input_format,
         work_dir,
         chunk_index,
         chunk_total,
         block,
         seed,
         kp,
+        cols,
+        shard_format,
         operand,
+        means,
     } = msg
     else {
         return Err(Error::Other("execute_phase on non-phase message".into()));
     };
-    let input = InputSpec::auto(input_path.clone());
-    let (_, n) = input.dims()?;
-    let block = *block as usize;
-    let kp = *kp as usize;
+    let input = InputSpec { path: input_path.clone(), format: *input_format };
+    let n = *cols as usize;
     let ci = *chunk_index as usize;
     let total = *chunk_total as usize;
     std::fs::create_dir_all(work_dir)?;
@@ -47,87 +53,21 @@ pub fn execute_phase(backend: &BackendRef, msg: &ToWorker) -> Result<(u64, Matri
         .get(ci)
         .ok_or_else(|| Error::Config(format!("chunk {ci} of {total} does not exist")))?;
 
-    match kind {
-        PhaseKind::ProjectGram => {
-            // Virtual-B across the cluster: Ω regenerated from the seed
-            // unless the leader sent a power-iteration override.
-            let omega = if operand.rows() > 0 {
-                operand.clone()
-            } else {
-                VirtualMatrix::projection(*seed, n, kp).materialize()
-            };
-            let y_shards = ShardSet::new(work_dir, "Y", InputFormat::Bin)?;
-            let job = ProjectGramJob::new(backend.clone(), omega, &y_shards, ci)?;
-            let mut blocked = Blocked::new(job, block, n);
-            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
-            Ok((rows, blocked.into_inner().into_gram_partial()))
-        }
-        PhaseKind::UrecoverTmul => {
-            let y_shards = ShardSet::new(work_dir, "Y", InputFormat::Bin)?;
-            let u0_shards = ShardSet::new(work_dir, "U0", InputFormat::Bin)?;
-            let job = Pass2Job::new(
-                backend.clone(),
-                operand.clone(),
-                &y_shards,
-                &u0_shards,
-                ci,
-                n,
-            )?;
-            let mut blocked = Blocked::new(job, block, n);
-            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
-            Ok((rows, blocked.into_inner().into_w_partial()))
-        }
-        PhaseKind::RotateU => {
-            let u0_shards = ShardSet::new(work_dir, "U0", InputFormat::Bin)?;
-            let u_shards = ShardSet::new(work_dir, "U", InputFormat::Bin)?;
-            let rows = rotate_one_shard(&u0_shards, &u_shards, ci, operand, block)?;
-            Ok((rows, Matrix::zeros(0, 0)))
-        }
-        PhaseKind::Ata => {
-            let job = AtaBlockJob::new(backend.clone(), n);
-            let mut blocked = Blocked::new(job, block, n);
-            let rows = splitproc::run_chunk(&input, &chunk, &mut blocked)?;
-            Ok((rows, blocked.into_inner().into_partial()))
-        }
-    }
-}
-
-/// `U = U0 P` over one shard (pass 3, worker side).
-fn rotate_one_shard(
-    src: &ShardSet,
-    dst: &ShardSet,
-    index: usize,
-    p: &Matrix,
-    block: usize,
-) -> Result<u64> {
-    let mut reader = src.open_reader(index)?;
-    let mut writer = dst.open_writer(index, p.cols())?;
-    let mut row = Vec::new();
-    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(block);
-    let mut count = 0u64;
-    loop {
-        buf.clear();
-        while buf.len() < block {
-            if !reader.next_row(&mut row)? {
-                break;
-            }
-            buf.push(row.clone());
-        }
-        if buf.is_empty() {
-            break;
-        }
-        let u0 = Matrix::from_rows(&buf)?;
-        let u = matmul(&u0, p)?;
-        for r in 0..u.rows() {
-            writer.write_row(u.row(r))?;
-        }
-        count += u.rows() as u64;
-        if buf.len() < block {
-            break;
-        }
-    }
-    writer.finish()?;
-    Ok(count)
+    let means_vec: Vec<f64> = if means.rows() > 0 { means.row(0).to_vec() } else { Vec::new() };
+    let ctx = PassContext {
+        input: &input,
+        backend: backend.clone(),
+        work_dir: work_dir.as_str(),
+        shard_format: *shard_format,
+        block: *block as usize,
+        seed: *seed,
+        n,
+        kp: *kp as usize,
+        means: Arc::new(means_vec),
+    };
+    let pass = pass_from_wire(*kind, operand);
+    let (rows, partial) = execute_pass_chunk(&ctx, &pass, &chunk)?;
+    Ok((rows, partial.unwrap_or_else(|| Matrix::zeros(0, 0))))
 }
 
 /// Serve one leader connection until `Shutdown`. Used by the `worker`

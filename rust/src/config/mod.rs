@@ -89,6 +89,11 @@ pub struct RunConfig {
     pub exact_gram: bool,
     /// PCA mode: subtract per-column means before factorizing.
     pub center: bool,
+    /// Format of the Y/U0/U intermediate shards (Bin is faster; Csv matches
+    /// the paper's artifacts and is human-inspectable).
+    pub shard_format: InputFormat,
+    /// Relative cutoff for the sketch-stage guarded inverse `M = V_y Σ_y⁻¹`.
+    pub sigma_cutoff_rel: f64,
 }
 
 impl Default for RunConfig {
@@ -108,6 +113,8 @@ impl Default for RunConfig {
             compute_v: true,
             exact_gram: false,
             center: false,
+            shard_format: InputFormat::Bin,
+            sigma_cutoff_rel: crate::svd::DEFAULT_SIGMA_CUTOFF_REL,
         }
     }
 }
@@ -164,6 +171,12 @@ impl RunConfig {
             if let Some(v) = file.get_bool(section, "center")? {
                 self.center = v;
             }
+            if let Some(v) = file.get_str(section, "shard_format") {
+                self.shard_format = InputFormat::parse(v)?;
+            }
+            if let Some(v) = file.get_f64(section, "sigma_cutoff_rel")? {
+                self.sigma_cutoff_rel = v;
+            }
         }
         Ok(())
     }
@@ -204,24 +217,48 @@ impl RunConfig {
         if args.flag("center") {
             self.center = true;
         }
+        if let Some(f) = args.opt_str("shard-format") {
+            self.shard_format = InputFormat::parse(f)?;
+        }
+        self.sigma_cutoff_rel = args.f64_or("sigma-cutoff", self.sigma_cutoff_rel)?;
         Ok(())
     }
 
-    /// Validate invariants before a run.
+    /// The [`crate::svd::SvdOptions`] view of this config — the single
+    /// source for the field mapping (used by the `Svd` builder and by
+    /// [`RunConfig::validate`]).
+    pub fn svd_options(&self) -> crate::svd::SvdOptions {
+        crate::svd::SvdOptions {
+            k: self.k,
+            oversample: self.oversample,
+            power_iters: self.power_iters,
+            workers: self.workers,
+            block: self.block,
+            seed: self.seed,
+            work_dir: self.work_dir.clone(),
+            compute_v: self.compute_v,
+            shard_format: self.shard_format,
+            center: self.center,
+            exact_gram: self.exact_gram,
+            sigma_cutoff_rel: self.sigma_cutoff_rel,
+        }
+    }
+
+    /// Validate invariants before a run. Numeric invariants are checked by
+    /// [`crate::svd::SvdOptions::validate`] — one copy, shared with the
+    /// fluent builder path; the evenness rule on `block` (XLA artifact
+    /// shape alignment) stays a CLI/config-level constraint only.
     pub fn validate(&self) -> Result<()> {
         if self.input.is_empty() {
             return Err(Error::Config("no input file (use --input or positional)".into()));
         }
-        if self.k == 0 {
-            return Err(Error::Config("k must be >= 1".into()));
+        if self.block % 2 != 0 {
+            return Err(Error::Config(format!(
+                "block must be a positive even size, got {}",
+                self.block
+            )));
         }
-        if self.workers == 0 {
-            return Err(Error::Config("workers must be >= 1".into()));
-        }
-        if self.block == 0 || self.block % 2 != 0 {
-            return Err(Error::Config(format!("block must be a positive even size, got {}", self.block)));
-        }
-        Ok(())
+        self.svd_options().validate()
     }
 }
 
@@ -275,6 +312,32 @@ mod tests {
     #[test]
     fn bad_backend_rejected() {
         assert!(BackendKind::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn shard_format_and_sigma_cutoff_parse() {
+        let file = ConfigFile::parse_str(
+            "[svd]\nshard_format = \"csv\"\nsigma_cutoff_rel = 1e-5\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!(c.shard_format, InputFormat::Bin);
+        c.apply_file(&file).unwrap();
+        assert_eq!(c.shard_format, InputFormat::Csv);
+        assert!((c.sigma_cutoff_rel - 1e-5).abs() < 1e-18);
+        // CLI overrides the file.
+        let args = Args::parse(
+            "svd a.csv --shard-format bin --sigma-cutoff 1e-4"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.shard_format, InputFormat::Bin);
+        assert!((c.sigma_cutoff_rel - 1e-4).abs() < 1e-18);
+        // Out-of-range cutoff rejected.
+        c.sigma_cutoff_rel = 1.5;
+        assert!(c.validate().is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::metrics::Stopwatch;
 use crate::rng::VirtualMatrix;
 use crate::simulator::{simulate_split_process, ClusterParams};
 use crate::splitproc::{self, Blocked};
-use crate::svd::{self, SvdOptions};
+use crate::svd;
 use crate::util::{Args, Logger};
 
 static LOG: Logger = Logger::new("coordinator");
@@ -80,28 +80,33 @@ pub fn gen_data(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `svd` / `exact-svd`: the paper's pipeline end to end.
+/// `svd` / `exact-svd`: the paper's pipeline end to end, through the
+/// builder API. `--distributed` swaps the execution substrate for a
+/// [`crate::cluster::ClusterExecutor`]; the pipeline itself is identical.
 pub fn svd(args: &Args, exact: bool) -> Result<()> {
     let mut cfg = load_config(args)?;
     if exact {
         cfg.exact_gram = true;
     }
     let input = input_of(&cfg)?;
-    let backend = make_backend(&cfg)?;
-    let opts = SvdOptions::from_config(&cfg);
     let sw = Stopwatch::start();
+    let mut builder = svd::Svd::from_config(&cfg)?;
+    if let Some(model_dir) = args.opt_str("save-model") {
+        builder = builder.save_model(model_dir);
+    }
     let result = if args.flag("distributed") {
         let listen = args.str_or("listen", "127.0.0.1:7070");
         let n = args.usize_or("remote-workers", cfg.workers)?;
-        let mut leader = crate::cluster::DistributedLeader::accept(&listen, n)?;
-        let res =
-            crate::cluster::leader::distributed_randomized_svd(&mut leader, &input, backend, &opts);
-        leader.shutdown()?;
-        res?
-    } else if cfg.exact_gram {
-        svd::gram_svd_file(&input, backend, &opts)?
+        let mut cluster = crate::cluster::ClusterExecutor::accept(&listen, n)?;
+        let res = builder.executor(&mut cluster).run();
+        // Surface the run error first: a shutdown-send failure to a dead
+        // worker must not mask why the run itself failed.
+        let shutdown = cluster.shutdown();
+        let out = res?;
+        shutdown?;
+        out
     } else {
-        svd::randomized_svd_file(&input, backend, &opts)?
+        builder.run()?
     };
     println!("{}", result.report.render());
     println!(
@@ -123,10 +128,6 @@ pub fn svd(args: &Args, exact: bool) -> Result<()> {
     }
     if let Some(prefix) = args.opt_str("out-prefix") {
         write_outputs(prefix, &result)?;
-    }
-    if let Some(model_dir) = args.opt_str("save-model") {
-        result.save_model(model_dir, Some(cfg.seed))?;
-        LOG.info(&format!("model saved to {model_dir} (serve with `tallfat serve {model_dir}`)"));
     }
     LOG.info(&format!("svd done in {:.2?}", sw.elapsed()));
     Ok(())

@@ -40,9 +40,11 @@ COMMANDS
                   --input PATH --k K [--oversample P] [--power-iters Q] [--workers W]
                   [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
                   [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
-                  [--save-model DIR]
+                  [--save-model DIR] [--shard-format csv|bin] [--sigma-cutoff REL]
                   (--center = PCA mode: subtract column means, one extra pass;
-                   --save-model persists a servable model directory)
+                   --save-model persists a servable model directory;
+                   --shard-format picks the Y/U intermediate shard format;
+                   --sigma-cutoff zeroes sketch values below REL * sigma_max)
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]

@@ -18,6 +18,23 @@
 //!    worker seeks to a newline-aligned byte chunk of a shared input file
 //!    and streams its rows ([`io::chunker`], [`splitproc`]).
 //!
+//! ## One pipeline, many executors
+//!
+//! The public entry point is the [`svd::Svd`] builder:
+//!
+//! ```ignore
+//! let result = Svd::over(&input)?        // validates dims up front
+//!     .rank(16).oversample(8).center(true)
+//!     .run()?;                           // local threads by default
+//! ```
+//!
+//! The pass schedule (project+gram → k×k eigh → U-recovery → completion)
+//! exists exactly once ([`svd::pipeline`]); *where* the streaming passes
+//! run is a pluggable [`svd::Executor`]: [`svd::LocalExecutor`] fans out
+//! over in-process Split-Process threads, [`cluster::ClusterExecutor`]
+//! over remote TCP workers (`.executor(&mut cluster)`) — same seed, same
+//! passes, same factors.
+//!
 //! ## Three-layer architecture
 //!
 //! The block-level compute (Gram, projection, fused project+gram, U

@@ -104,6 +104,12 @@ pub struct Stats {
     max: f64,
 }
 
+impl Default for Stats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Stats {
     pub fn new() -> Self {
         Stats { n: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }

@@ -303,7 +303,7 @@ mod tests {
     use crate::io::dataset::{gen_exact, Spectrum};
     use crate::io::InputSpec;
     use crate::serve::store::{save_model, ModelStore};
-    use crate::svd::{randomized_svd_file, SvdOptions};
+    use crate::svd::Svd;
 
     fn batcher_fixture(name: &str) -> (Arc<QueryEngine>, Matrix) {
         let dir = std::env::temp_dir().join("tallfat_test_batcher").join(name);
@@ -320,16 +320,16 @@ mod tests {
         .unwrap();
         let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
         crate::io::write_matrix(&a, &spec).unwrap();
-        let opts = SvdOptions {
-            k: 5,
-            oversample: 4,
-            workers: 2,
-            block: 32,
-            work_dir: dir.join("work").to_string_lossy().into_owned(),
-            ..SvdOptions::default()
-        };
-        let result =
-            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        let result = Svd::over(&spec)
+            .unwrap()
+            .rank(5)
+            .oversample(4)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .backend(Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap();
         save_model(&result, dir.join("model"), None).unwrap();
         let store = Arc::new(ModelStore::open(dir.join("model"), 2).unwrap());
         (Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap()), a)

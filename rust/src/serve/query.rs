@@ -228,7 +228,7 @@ mod tests {
     use crate::io::InputSpec;
     use crate::linalg::matmul;
     use crate::serve::store::save_model;
-    use crate::svd::{randomized_svd_file, SvdOptions};
+    use crate::svd::Svd;
 
     fn engine_fixture(name: &str, center: bool) -> (QueryEngine, Matrix) {
         let dir = std::env::temp_dir().join("tallfat_test_query").join(name);
@@ -245,17 +245,17 @@ mod tests {
         .unwrap();
         let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
         crate::io::write_matrix(&a, &spec).unwrap();
-        let opts = SvdOptions {
-            k: 6,
-            oversample: 6,
-            workers: 3,
-            block: 32,
-            work_dir: dir.join("work").to_string_lossy().into_owned(),
-            center,
-            ..SvdOptions::default()
-        };
-        let result =
-            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        let result = Svd::over(&spec)
+            .unwrap()
+            .rank(6)
+            .oversample(6)
+            .workers(3)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .center(center)
+            .backend(Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap();
         save_model(&result, dir.join("model"), None).unwrap();
         let store = Arc::new(ModelStore::open(dir.join("model"), 2).unwrap());
         let engine = QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap();

@@ -494,7 +494,7 @@ mod tests {
     use crate::backend::native::NativeBackend;
     use crate::io::dataset::{gen_exact, Spectrum};
     use crate::io::InputSpec;
-    use crate::svd::{randomized_svd_file, SvdOptions};
+    use crate::svd::Svd;
 
     fn model_fixture(name: &str, center: bool) -> (PathBuf, SvdResult, Matrix) {
         let dir = std::env::temp_dir().join("tallfat_test_store").join(name);
@@ -511,17 +511,17 @@ mod tests {
         .unwrap();
         let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
         crate::io::write_matrix(&a, &spec).unwrap();
-        let opts = SvdOptions {
-            k: 6,
-            oversample: 4,
-            workers: 3,
-            block: 32,
-            work_dir: dir.join("work").to_string_lossy().into_owned(),
-            center,
-            ..SvdOptions::default()
-        };
-        let result =
-            randomized_svd_file(&spec, std::sync::Arc::new(NativeBackend::new()), &opts).unwrap();
+        let result = Svd::over(&spec)
+            .unwrap()
+            .rank(6)
+            .oversample(4)
+            .workers(3)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .center(center)
+            .backend(std::sync::Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap();
         (dir, result, a)
     }
 

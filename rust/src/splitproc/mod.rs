@@ -121,22 +121,29 @@ where
     J: RowJob,
     F: Fn(&ChunkMeta) -> Result<J> + Sync,
 {
+    run_chunked(input, workers, |chunk| {
+        let mut job = factory(chunk)?;
+        let rows = run_chunk(input, chunk, &mut job)?;
+        Ok(WorkerResult { chunk: *chunk, rows, job })
+    })
+}
+
+/// Run an arbitrary per-chunk computation with one thread per chunk and
+/// collect the results in chunk order. Generalizes [`run`] for callers that
+/// build their own jobs (the [`crate::svd::executor::LocalExecutor`]).
+pub fn run_chunked<T, F>(input: &InputSpec, workers: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(&ChunkMeta) -> Result<T> + Sync,
+{
     let chunks = plan_chunks(input, workers)?;
-    if chunks.is_empty() {
-        return Ok(vec![]);
-    }
-    let results: Vec<Result<WorkerResult<J>>> = std::thread::scope(|scope| {
+    let results: Vec<Result<T>> = std::thread::scope(|scope| {
         let handles: Vec<_> = chunks
             .iter()
             .map(|chunk| {
-                let factory = &factory;
-                let input = input.clone();
+                let f = &f;
                 let chunk = *chunk;
-                scope.spawn(move || -> Result<WorkerResult<J>> {
-                    let mut job = factory(&chunk)?;
-                    let rows = run_chunk(&input, &chunk, &mut job)?;
-                    Ok(WorkerResult { chunk, rows, job })
-                })
+                scope.spawn(move || f(&chunk))
             })
             .collect();
         handles

@@ -1,0 +1,320 @@
+//! The fluent public entry point of the SVD pipeline.
+//!
+//! ```no_run
+//! use tallfat::io::InputSpec;
+//! use tallfat::svd::Svd;
+//!
+//! # fn main() -> tallfat::Result<()> {
+//! let input = InputSpec::csv("/data/A.csv");
+//! let result = Svd::over(&input)?   // validates the input up front
+//!     .rank(16)
+//!     .oversample(8)
+//!     .power_iters(1)
+//!     .center(true)                 // PCA mode
+//!     .run()?;                      // LocalExecutor by default
+//! println!("sigma[0] = {}", result.sigma[0]);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Swap the execution substrate without touching the math:
+//!
+//! ```ignore
+//! let mut cluster = ClusterExecutor::accept("0.0.0.0:7070", 8)?;
+//! let result = Svd::over(&input)?.rank(16).executor(&mut cluster).run()?;
+//! cluster.shutdown()?;
+//! ```
+
+use crate::backend::native::NativeBackend;
+use crate::backend::BackendRef;
+use crate::config::{InputFormat, RunConfig};
+use crate::error::Result;
+use crate::io::InputSpec;
+use crate::svd::executor::{Executor, LocalExecutor};
+use crate::svd::pipeline::{checked_dims, run_svd, SvdOptions};
+use crate::svd::result::SvdResult;
+use crate::util::Logger;
+
+static LOG: Logger = Logger::new("svd");
+
+/// Builder for one SVD run: input and options accumulate fluently, `run()`
+/// drives the executor-generic pipeline ([`crate::svd::pipeline`]).
+pub struct Svd<'a> {
+    input: InputSpec,
+    dims: (usize, usize),
+    opts: SvdOptions,
+    backend: Option<BackendRef>,
+    executor: Option<&'a mut dyn Executor>,
+    save_model: Option<String>,
+}
+
+impl<'a> Svd<'a> {
+    /// Start a run over `input`. Reads the dimensions eagerly so degenerate
+    /// inputs (missing file, zero rows/cols) fail here, once, instead of in
+    /// every driver.
+    pub fn over(input: &InputSpec) -> Result<Self> {
+        let dims = checked_dims(input)?;
+        Ok(Svd {
+            input: input.clone(),
+            dims,
+            opts: SvdOptions::default(),
+            backend: None,
+            executor: None,
+            save_model: None,
+        })
+    }
+
+    /// Build from a [`RunConfig`] (defaults < config file < CLI), including
+    /// the backend selection — the coordinator's entry point.
+    pub fn from_config(cfg: &RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let input = InputSpec { path: cfg.input.clone(), format: cfg.format };
+        let mut b = Self::over(&input)?;
+        b.opts = cfg.svd_options();
+        b.backend = Some(crate::backend::make_backend(cfg)?);
+        Ok(b)
+    }
+
+    /// Input dimensions `(rows, cols)` as validated by [`Svd::over`].
+    pub fn dims(&self) -> (usize, usize) {
+        self.dims
+    }
+
+    /// Target rank of the factorization.
+    pub fn rank(mut self, k: usize) -> Self {
+        self.opts.k = k;
+        self
+    }
+
+    /// Oversampling columns added to the sketch (Halko's `p`).
+    pub fn oversample(mut self, p: usize) -> Self {
+        self.opts.oversample = p;
+        self
+    }
+
+    /// Subspace-iteration count (0 = the paper's plain sketch).
+    pub fn power_iters(mut self, q: usize) -> Self {
+        self.opts.power_iters = q;
+        self
+    }
+
+    /// Split-Process worker count (the default [`LocalExecutor`] fan-out).
+    pub fn workers(mut self, w: usize) -> Self {
+        self.opts.workers = w;
+        self
+    }
+
+    /// Row-block size fed to the block backend.
+    pub fn block(mut self, rows: usize) -> Self {
+        self.opts.block = rows;
+        self
+    }
+
+    /// PRNG seed for the virtual Ω.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.opts.seed = seed;
+        self
+    }
+
+    /// Directory for Y/U shards and outputs.
+    pub fn work_dir(mut self, dir: impl Into<String>) -> Self {
+        self.opts.work_dir = dir.into();
+        self
+    }
+
+    /// Compute right singular vectors V (default true).
+    pub fn compute_v(mut self, yes: bool) -> Self {
+        self.opts.compute_v = yes;
+        self
+    }
+
+    /// Format of the Y/U0/U intermediate shards (default Bin).
+    pub fn shard_format(mut self, format: InputFormat) -> Self {
+        self.opts.shard_format = format;
+        self
+    }
+
+    /// PCA mode: subtract per-column means before factorizing.
+    pub fn center(mut self, yes: bool) -> Self {
+        self.opts.center = yes;
+        self
+    }
+
+    /// Skip the sketch: eigendecompose `AᵀA` directly (paper §2.0.1).
+    pub fn exact_gram(mut self, yes: bool) -> Self {
+        self.opts.exact_gram = yes;
+        self
+    }
+
+    /// Relative cutoff for the sketch-stage guarded inverse (default
+    /// [`crate::svd::DEFAULT_SIGMA_CUTOFF_REL`]).
+    pub fn sigma_cutoff_rel(mut self, cutoff: f64) -> Self {
+        self.opts.sigma_cutoff_rel = cutoff;
+        self
+    }
+
+    /// Block-compute backend for leader math and (local) worker jobs.
+    /// Defaults to the pure-rust native backend.
+    pub fn backend(mut self, backend: BackendRef) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Execution substrate for the streaming passes. Defaults to a
+    /// [`LocalExecutor`] with [`Svd::workers`] threads.
+    pub fn executor(mut self, exec: &'a mut dyn Executor) -> Self {
+        self.executor = Some(exec);
+        self
+    }
+
+    /// After the run, persist the factors as a servable model directory
+    /// (see [`crate::serve::store`]).
+    pub fn save_model(mut self, dir: impl Into<String>) -> Self {
+        self.save_model = Some(dir.into());
+        self
+    }
+
+    /// Replace the whole option bag at once (escape hatch for callers that
+    /// already hold an [`SvdOptions`]).
+    pub fn options(mut self, opts: SvdOptions) -> Self {
+        self.opts = opts;
+        self
+    }
+
+    /// Run the pipeline and, if requested, persist the model.
+    pub fn run(self) -> Result<SvdResult> {
+        let backend = self
+            .backend
+            .unwrap_or_else(|| std::sync::Arc::new(NativeBackend::new()));
+        let result = match self.executor {
+            Some(exec) => run_svd(exec, &self.input, self.dims, backend, &self.opts)?,
+            None => {
+                let mut local = LocalExecutor::new(self.opts.workers);
+                run_svd(&mut local, &self.input, self.dims, backend, &self.opts)?
+            }
+        };
+        if let Some(dir) = &self.save_model {
+            result.save_model(dir, Some(self.opts.seed))?;
+            LOG.info(&format!(
+                "model saved to {dir} (serve with `tallfat serve {dir}`)"
+            ));
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::dataset::{gen_exact, Spectrum};
+
+    fn fixture(name: &str) -> (InputSpec, std::path::PathBuf) {
+        let dir = std::env::temp_dir().join("tallfat_test_builder").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            120,
+            12,
+            4,
+            Spectrum::Geometric { scale: 6.0, decay: 0.6 },
+            0.0,
+            5,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("a.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        (spec, dir)
+    }
+
+    #[test]
+    fn over_rejects_missing_and_empty_inputs() {
+        assert!(Svd::over(&InputSpec::csv("/nonexistent/a.csv")).is_err());
+        let dir = std::env::temp_dir().join("tallfat_test_builder");
+        std::fs::create_dir_all(&dir).unwrap();
+        let empty = dir.join("empty.csv").to_string_lossy().into_owned();
+        std::fs::write(&empty, "").unwrap();
+        assert!(Svd::over(&InputSpec::csv(empty)).is_err());
+    }
+
+    #[test]
+    fn builder_runs_with_default_backend_and_executor() {
+        let (spec, dir) = fixture("defaults");
+        let b = Svd::over(&spec).unwrap();
+        assert_eq!(b.dims(), (120, 12));
+        let r = b
+            .rank(4)
+            .oversample(4)
+            .workers(2)
+            .block(32)
+            .seed(9)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .run()
+            .unwrap();
+        assert_eq!(r.k, 4);
+        assert_eq!(r.sigma.len(), 4);
+        assert!(r.v.is_some());
+    }
+
+    #[test]
+    fn from_config_maps_every_field() {
+        let (spec, dir) = fixture("cfg");
+        let cfg = RunConfig {
+            input: spec.path.clone(),
+            k: 3,
+            workers: 2,
+            block: 32,
+            seed: 11,
+            shard_format: InputFormat::Csv,
+            sigma_cutoff_rel: 1e-6,
+            work_dir: dir.join("cfg_work").to_string_lossy().into_owned(),
+            ..RunConfig::default()
+        };
+        let b = Svd::from_config(&cfg).unwrap();
+        assert_eq!(b.opts.k, 3);
+        assert_eq!(b.opts.shard_format, InputFormat::Csv);
+        assert!((b.opts.sigma_cutoff_rel - 1e-6).abs() < 1e-18);
+        let r = b.run().unwrap();
+        // Csv shard format produces .csv U shards.
+        assert!(r.u_shards.shard_path(0).ends_with(".csv"));
+        assert_eq!(r.k, 3);
+    }
+
+    #[test]
+    fn from_config_rejects_invalid() {
+        let cfg = RunConfig::default(); // no input
+        assert!(Svd::from_config(&cfg).is_err());
+    }
+
+    #[test]
+    fn run_rejects_bad_options_with_config_error() {
+        let (spec, dir) = fixture("badopts");
+        let work = dir.join("work").to_string_lossy().into_owned();
+        // Zero block would otherwise panic inside a worker thread.
+        let err = Svd::over(&spec).unwrap().block(0).work_dir(work.clone()).run();
+        assert!(err.is_err());
+        let err = Svd::over(&spec).unwrap().rank(0).work_dir(work.clone()).run();
+        assert!(err.is_err());
+        let err = Svd::over(&spec)
+            .unwrap()
+            .sigma_cutoff_rel(2.0)
+            .work_dir(work)
+            .run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn save_model_hook_persists() {
+        let (spec, dir) = fixture("save");
+        let model = dir.join("model").to_string_lossy().into_owned();
+        let _ = Svd::over(&spec)
+            .unwrap()
+            .rank(3)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .save_model(model.clone())
+            .run()
+            .unwrap();
+        assert!(std::path::Path::new(&model).join("model.manifest").exists());
+    }
+}

@@ -1,0 +1,360 @@
+//! The execution substrate of the SVD pipeline.
+//!
+//! The paper's algorithm is a fixed schedule of *streaming passes* over the
+//! input (project+gram, U-recovery, rotation, …) interleaved with tiny
+//! leader-side eigensolves. Where those passes run — threads over byte
+//! chunks of a local file, or remote workers over a shared file server — is
+//! an implementation detail the math never sees. [`Executor`] is that seam:
+//!
+//! * [`LocalExecutor`] fans each pass out over [`crate::splitproc`] threads
+//!   (the paper's Split-Process engine, in-process);
+//! * [`crate::cluster::ClusterExecutor`] ships the same pass descriptions to
+//!   remote workers over the leader/worker RPC.
+//!
+//! Both funnel into [`execute_pass_chunk`] — the *single* definition of what
+//! each pass does to one chunk of rows. A remote worker literally runs the
+//! same function the local threads do; only the transport differs.
+
+use crate::backend::BackendRef;
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::jobs::{AtaBlockJob, ColStatsJob, MultJob, Pass2Job, ProjectGramJob};
+use crate::linalg::{matmul, Matrix};
+use crate::rng::VirtualMatrix;
+use crate::splitproc::{self, Blocked, CenteredJob, ChunkMeta};
+use std::sync::Arc;
+
+/// Everything a pass needs besides its operand: where the rows come from,
+/// where shards go, and the small run-wide constants.
+pub struct PassContext<'a> {
+    /// The shared input file every chunk streams from.
+    pub input: &'a InputSpec,
+    /// Block-compute backend for the per-chunk jobs.
+    pub backend: BackendRef,
+    /// Directory for Y/U0/U shards (shared filesystem in cluster mode).
+    pub work_dir: &'a str,
+    /// Format of the intermediate shards.
+    pub shard_format: InputFormat,
+    /// Row-block size fed to the backend.
+    pub block: usize,
+    /// Sketch seed (Ω is regenerated from it — the virtual-B of §2.1).
+    pub seed: u64,
+    /// Input column count.
+    pub n: usize,
+    /// Sketch width `k + oversample` (ProjectGram's Ω column count).
+    pub kp: usize,
+    /// Column means to subtract on the fly (PCA mode); empty = disabled.
+    pub means: Arc<Vec<f64>>,
+}
+
+/// One streaming pass of the pipeline, named after what it computes.
+/// Operands are the *small* leader-side matrices — never row data.
+#[derive(Clone, Copy)]
+pub enum Pass<'a> {
+    /// Pass 0 (PCA mode): per-column sums; the driver divides by the row
+    /// count to get means.
+    ColStats,
+    /// Standalone / exact-Gram pass 1: additive `AᵀA` partial.
+    Ata,
+    /// Randomized pass 1: `Y = A Ω` to shards + additive `YᵀY` partial.
+    /// `None` regenerates Ω from the seed; `Some` is a power-iteration
+    /// override.
+    ProjectGram { omega: Option<&'a Matrix> },
+    /// Randomized pass 2: `U0 = Y M` to shards + additive `Aᵀ U0` partial.
+    UrecoverTmul { m: &'a Matrix },
+    /// Exact-Gram pass 2: `U = A M` straight to U shards.
+    Mult { m: &'a Matrix },
+    /// Pass 3: rotate `U = U0 P` shard by shard.
+    RotateU { p: &'a Matrix },
+}
+
+impl Pass<'_> {
+    /// Short name for logs and phase reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pass::ColStats => "colstats",
+            Pass::Ata => "ata",
+            Pass::ProjectGram { .. } => "project_gram",
+            Pass::UrecoverTmul { .. } => "urecover_tmul",
+            Pass::Mult { .. } => "mult",
+            Pass::RotateU { .. } => "rotate_u",
+        }
+    }
+}
+
+/// What a pass produced: streamed row count, the chunk/shard fan-out, and
+/// the reduced additive partial (when the pass has one).
+pub struct PassOutput {
+    pub rows: u64,
+    /// Number of chunks the input was split into (= shard count on disk).
+    pub shards: usize,
+    pub partial: Option<Matrix>,
+}
+
+/// An execution substrate for streaming passes: plan chunks, run the pass's
+/// job over each chunk, reduce the additive partials, leave shards on disk.
+pub trait Executor {
+    /// Substrate name for logs ("local", "cluster", …).
+    fn name(&self) -> &str;
+
+    /// Run one pass over the whole input.
+    fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput>;
+}
+
+/// Run one pass over *one chunk* — the single implementation of the pass
+/// structure. [`LocalExecutor`] calls this per thread; a remote worker calls
+/// it for its assigned chunk ([`crate::cluster::worker::execute_phase`]).
+///
+/// Returns `(rows_streamed, additive_partial)`.
+pub fn execute_pass_chunk(
+    ctx: &PassContext,
+    pass: &Pass,
+    chunk: &ChunkMeta,
+) -> Result<(u64, Option<Matrix>)> {
+    match *pass {
+        Pass::ColStats => {
+            let mut job = ColStatsJob::new(ctx.n);
+            let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            // Additive encoding: per-column sums (1 x n). Welford runs
+            // within the chunk; sums reduce commutatively across chunks.
+            let mut sums = Matrix::zeros(1, ctx.n);
+            let count = job.count() as f64;
+            for (j, &mean) in job.means().iter().enumerate() {
+                sums.set(0, j, mean * count);
+            }
+            Ok((rows, Some(sums)))
+        }
+        Pass::Ata => {
+            let job = AtaBlockJob::new(ctx.backend.clone(), ctx.n);
+            let mut job =
+                CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
+            let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_inner().into_partial())))
+        }
+        Pass::ProjectGram { omega } => {
+            let omega = match omega {
+                Some(o) => o.clone(),
+                None => VirtualMatrix::projection(ctx.seed, ctx.n, ctx.kp).materialize(),
+            };
+            let y_shards = ShardSet::new(ctx.work_dir, "Y", ctx.shard_format)?;
+            let job = ProjectGramJob::new(ctx.backend.clone(), omega, &y_shards, chunk.index)?;
+            let mut job =
+                CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
+            let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_inner().into_gram_partial())))
+        }
+        Pass::UrecoverTmul { m } => {
+            let y_shards = ShardSet::new(ctx.work_dir, "Y", ctx.shard_format)?;
+            let u0_shards = ShardSet::new(ctx.work_dir, "U0", ctx.shard_format)?;
+            let job = Pass2Job::new(
+                ctx.backend.clone(),
+                m.clone(),
+                &y_shards,
+                &u0_shards,
+                chunk.index,
+                ctx.n,
+            )?;
+            let mut job =
+                CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
+            let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_inner().into_w_partial())))
+        }
+        Pass::Mult { m } => {
+            let u_shards = ShardSet::new(ctx.work_dir, "U", ctx.shard_format)?;
+            let job = MultJob::new(ctx.backend.clone(), m.clone(), &u_shards, chunk.index)?;
+            let mut job =
+                CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
+            let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            Ok((rows, None))
+        }
+        Pass::RotateU { p } => {
+            let u0_shards = ShardSet::new(ctx.work_dir, "U0", ctx.shard_format)?;
+            let u_shards = ShardSet::new(ctx.work_dir, "U", ctx.shard_format)?;
+            let rows = rotate_one_shard(&u0_shards, &u_shards, chunk.index, p, ctx.block)?;
+            Ok((rows, None))
+        }
+    }
+}
+
+/// `U = U0 P` over one shard: stream `block`-row slabs through one matmul.
+fn rotate_one_shard(
+    src: &ShardSet,
+    dst: &ShardSet,
+    index: usize,
+    p: &Matrix,
+    block: usize,
+) -> Result<u64> {
+    let mut reader = src.open_reader(index)?;
+    let mut writer = dst.open_writer(index, p.cols())?;
+    let mut row = Vec::new();
+    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(block);
+    let mut count = 0u64;
+    loop {
+        buf.clear();
+        while buf.len() < block {
+            if !reader.next_row(&mut row)? {
+                break;
+            }
+            buf.push(row.clone());
+        }
+        if buf.is_empty() {
+            break;
+        }
+        let u0 = Matrix::from_rows(&buf)?;
+        let u = matmul(&u0, p)?;
+        for r in 0..u.rows() {
+            writer.write_row(u.row(r))?;
+        }
+        count += u.rows() as u64;
+        if buf.len() < block {
+            break;
+        }
+    }
+    writer.finish()?;
+    Ok(count)
+}
+
+/// In-process executor: one scoped thread per chunk of the shared file
+/// (the paper's Split-Process deployment on a single machine).
+pub struct LocalExecutor {
+    workers: usize,
+}
+
+impl LocalExecutor {
+    pub fn new(workers: usize) -> Self {
+        LocalExecutor { workers: workers.max(1) }
+    }
+}
+
+impl Executor for LocalExecutor {
+    fn name(&self) -> &str {
+        "local"
+    }
+
+    fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput> {
+        // Materialize a seed-derived Ω once per pass instead of once per
+        // chunk (every chunk would regenerate identical bits anyway).
+        let omega_store;
+        let pass = match pass {
+            Pass::ProjectGram { omega: None } => {
+                omega_store = VirtualMatrix::projection(ctx.seed, ctx.n, ctx.kp).materialize();
+                Pass::ProjectGram { omega: Some(&omega_store) }
+            }
+            p => *p,
+        };
+        let outputs = splitproc::run_chunked(ctx.input, self.workers, |chunk| {
+            execute_pass_chunk(ctx, &pass, chunk)
+        })?;
+        if outputs.is_empty() {
+            return Err(Error::Config("input has no rows to chunk".into()));
+        }
+        let shards = outputs.len();
+        let mut rows = 0u64;
+        let mut partials = Vec::with_capacity(shards);
+        for (r, partial) in outputs {
+            rows += r;
+            if let Some(p) = partial {
+                if p.rows() > 0 {
+                    partials.push(p);
+                }
+            }
+        }
+        let partial = if partials.is_empty() {
+            None
+        } else {
+            Some(splitproc::reduce_partials(partials)?)
+        };
+        Ok(PassOutput { rows, shards, partial })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::linalg::gram;
+
+    fn ctx_fixture(name: &str) -> (InputSpec, Matrix, String) {
+        let dir = std::env::temp_dir().join("tallfat_test_executor").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            90,
+            8,
+            4,
+            Spectrum::Geometric { scale: 5.0, decay: 0.7 },
+            0.01,
+            17,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("a.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        (spec, a, dir.join("work").to_string_lossy().into_owned())
+    }
+
+    fn ctx<'a>(input: &'a InputSpec, work: &'a str, n: usize) -> PassContext<'a> {
+        PassContext {
+            input,
+            backend: std::sync::Arc::new(NativeBackend::new()),
+            work_dir: work,
+            shard_format: InputFormat::Bin,
+            block: 16,
+            seed: 3,
+            n,
+            kp: 4,
+            means: Arc::new(Vec::new()),
+        }
+    }
+
+    #[test]
+    fn local_ata_pass_matches_dense_gram() {
+        let (input, a, work) = ctx_fixture("ata");
+        let mut exec = LocalExecutor::new(3);
+        let out = exec.run_pass(&ctx(&input, &work, 8), &Pass::Ata).unwrap();
+        assert_eq!(out.rows, 90);
+        assert!(out.shards >= 1);
+        let g = out.partial.unwrap();
+        assert!(g.max_abs_diff(&gram(&a)) < 1e-9);
+    }
+
+    #[test]
+    fn local_colstats_pass_sums_columns() {
+        let (input, a, work) = ctx_fixture("colstats");
+        let mut exec = LocalExecutor::new(2);
+        let out = exec.run_pass(&ctx(&input, &work, 8), &Pass::ColStats).unwrap();
+        let sums = out.partial.unwrap();
+        assert_eq!(sums.shape(), (1, 8));
+        for j in 0..8 {
+            let want: f64 = (0..a.rows()).map(|i| a.get(i, j)).sum();
+            assert!((sums.get(0, j) - want).abs() < 1e-8, "col {j}");
+        }
+    }
+
+    #[test]
+    fn local_project_gram_writes_shards_and_partial() {
+        let (input, _, work) = ctx_fixture("pg");
+        let mut exec = LocalExecutor::new(2);
+        let c = ctx(&input, &work, 8);
+        let out = exec.run_pass(&c, &Pass::ProjectGram { omega: None }).unwrap();
+        assert_eq!(out.rows, 90);
+        let g = out.partial.unwrap();
+        assert_eq!(g.shape(), (4, 4));
+        // Y shards exist and hold all rows at sketch width.
+        let y = ShardSet::new(&work, "Y", InputFormat::Bin).unwrap();
+        let merged = y.merge_to_matrix(out.shards).unwrap();
+        assert_eq!(merged.shape(), (90, 4));
+        // Partial really is YᵀY.
+        assert!(g.max_abs_diff(&gram(&merged)) < 1e-9);
+    }
+
+    #[test]
+    fn pass_names_are_stable() {
+        let m = Matrix::zeros(1, 1);
+        assert_eq!(Pass::ColStats.name(), "colstats");
+        assert_eq!(Pass::ProjectGram { omega: None }.name(), "project_gram");
+        assert_eq!(Pass::RotateU { p: &m }.name(), "rotate_u");
+    }
+}

@@ -1,13 +1,15 @@
-//! The randomized rank-k SVD driver — the paper's pipeline end to end.
+//! The randomized rank-k SVD — the paper's pipeline end to end, behind one
+//! builder-style API over a pluggable execution substrate.
 //!
 //! ```text
-//! pass 1  Y = A Ω           fused project+gram → Y shards + G = YᵀY   (over A)
-//! leader  G = V_y Σ_y² V_yᵀ  k' x k' Jacobi eigensolve; M = V_y Σ_y⁻¹
-//! pass 2  U0 = Y M           orthonormal basis rows → U0 shards
-//!         W  = Aᵀ U0         commutative partial, reduced              (over A)
-//! leader  WᵀW = P S² Pᵀ      second small eigensolve
+//! pass 0  mu = colmeans(A)    optional PCA centering pre-pass            (over A)
+//! pass 1  Y = A Ω             fused project+gram → Y shards + G = YᵀY    (over A)
+//! leader  G = V_y Σ_y² V_yᵀ   k' x k' Jacobi eigensolve; M = V_y Σ_y⁻¹
+//! pass 2  U0 = Y M            orthonormal basis rows → U0 shards
+//!         W  = Aᵀ U0          commutative partial, reduced               (over A)
+//! leader  WᵀW = P S² Pᵀ       second small eigensolve
 //!         σ = S, V = W P S⁻¹
-//! pass 3  U = U0 P           shard rotation                            (over U0)
+//! pass 3  U = U0 P            shard rotation                             (over U0)
 //! ```
 //!
 //! Why the second eigensolve: σ(Y) carries the sketch's JL distortion; the
@@ -19,10 +21,28 @@
 //!
 //! The small-n route (`exact_gram`) skips the sketch entirely: `G = AᵀA`
 //! eigensolved directly (paper §2.0.1), `U = A V Σ⁻¹` streamed.
+//!
+//! ## One pipeline, many executors
+//!
+//! The pass schedule above exists exactly once ([`pipeline`]). *Where* each
+//! streaming pass runs is an [`Executor`]: [`LocalExecutor`] fans out over
+//! in-process Split-Process threads, [`crate::cluster::ClusterExecutor`]
+//! over remote TCP workers — same seed, same passes, same result. Entry
+//! point:
+//!
+//! ```ignore
+//! let result = Svd::over(&input)?.rank(16).oversample(8).run()?;
+//! ```
 
+pub mod builder;
+pub mod executor;
 pub mod pipeline;
 pub mod result;
 pub mod validate;
 
-pub use pipeline::{gram_svd_file, randomized_svd_file, SvdOptions};
+pub use builder::Svd;
+pub use executor::{execute_pass_chunk, Executor, LocalExecutor, Pass, PassContext, PassOutput};
+pub use pipeline::{SvdOptions, DEFAULT_SIGMA_CUTOFF_REL};
+#[allow(deprecated)]
+pub use pipeline::{gram_svd_file, randomized_svd_file};
 pub use result::SvdResult;

@@ -1,23 +1,38 @@
-//! Pipeline orchestration (leader side).
+//! The executor-generic SVD driver — the paper's pass schedule, once.
+//!
+//! Every route (randomized sketch, exact Gram, PCA centering, power
+//! iteration) is expressed as a sequence of [`Pass`]es handed to an
+//! [`Executor`]; the leader-side math between passes lives here and only
+//! ever touches `k' x k'` matrices. Run it through the [`crate::svd::Svd`]
+//! builder — the free functions of earlier releases remain as deprecated
+//! shims over [`LocalExecutor`].
 
 use crate::backend::BackendRef;
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::jobs::{Pass2Job, ProjectGramJob};
 use crate::linalg::{matmul, Matrix};
 use crate::metrics::PhaseReport;
-use crate::rng::VirtualMatrix;
-use crate::splitproc::{self, Blocked};
+use crate::svd::executor::{Executor, LocalExecutor, Pass, PassContext};
 use crate::svd::result::SvdResult;
 use crate::util::Logger;
+use std::sync::Arc;
 use std::time::Instant;
 
 static LOG: Logger = Logger::new("svd");
 
-/// Options for the SVD drivers (a trimmed view of
-/// [`crate::config::RunConfig`]).
+/// Default relative cutoff under which sketch-stage singular values are
+/// treated as zero (rank deficiency / oversampled tail). Builder-settable
+/// via [`crate::svd::Svd::sigma_cutoff_rel`].
+pub const DEFAULT_SIGMA_CUTOFF_REL: f64 = 1e-7;
+
+/// Cutoff for the final completion's `Σ⁻¹` — numerically-zero tail only.
+const COMPLETION_CUTOFF_REL: f64 = 1e-12;
+
+/// Options for the SVD driver (a trimmed view of
+/// [`crate::config::RunConfig`]; build one fluently with
+/// [`crate::svd::Svd`]).
 #[derive(Clone, Debug)]
 pub struct SvdOptions {
     pub k: usize,
@@ -34,6 +49,12 @@ pub struct SvdOptions {
     /// PCA mode: subtract per-column means (one cheap extra streaming
     /// pass); the factorization is then of `A - 1 mu^T`.
     pub center: bool,
+    /// Skip the sketch and eigendecompose `AᵀA` directly (paper §2.0.1,
+    /// small n).
+    pub exact_gram: bool,
+    /// Relative cutoff for the sketch-stage guarded inverse
+    /// `M = V_y Σ_y⁻¹`: columns with `σ <= cutoff * σ_max` are zeroed.
+    pub sigma_cutoff_rel: f64,
 }
 
 impl Default for SvdOptions {
@@ -52,24 +73,34 @@ impl Default for SvdOptions {
             compute_v: true,
             shard_format: InputFormat::Bin,
             center: false,
+            exact_gram: false,
+            sigma_cutoff_rel: DEFAULT_SIGMA_CUTOFF_REL,
         }
     }
 }
 
 impl SvdOptions {
-    pub fn from_config(cfg: &crate::config::RunConfig) -> Self {
-        SvdOptions {
-            k: cfg.k,
-            oversample: cfg.oversample,
-            power_iters: cfg.power_iters,
-            workers: cfg.workers,
-            block: cfg.block,
-            seed: cfg.seed,
-            work_dir: cfg.work_dir.clone(),
-            compute_v: cfg.compute_v,
-            shard_format: InputFormat::Bin,
-            center: cfg.center,
+    /// Validate option invariants. Every driver entry point calls this, so
+    /// the fluent builder rejects bad values (`block(0)`, `rank(0)`, an
+    /// out-of-range cutoff) with a clear config error instead of panicking
+    /// deep inside a worker.
+    pub fn validate(&self) -> Result<()> {
+        if self.k == 0 {
+            return Err(Error::Config("k must be >= 1".into()));
         }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if self.block == 0 {
+            return Err(Error::Config("block must be >= 1".into()));
+        }
+        if !(0.0..1.0).contains(&self.sigma_cutoff_rel) {
+            return Err(Error::Config(format!(
+                "sigma_cutoff_rel must be in [0, 1), got {}",
+                self.sigma_cutoff_rel
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -84,156 +115,84 @@ pub(crate) fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
         .collect()
 }
 
-/// Run the paper's randomized rank-k SVD over a file. See module docs for
-/// the pass structure.
-pub fn randomized_svd_file(input: &InputSpec, backend: BackendRef, opts: &SvdOptions) -> Result<SvdResult> {
-    let mut report = PhaseReport::new();
-    let (m_rows, n) = input.dims()?;
-    if m_rows == 0 || n == 0 {
-        return Err(Error::Config("empty input matrix".into()));
+/// Read input dimensions and reject degenerate inputs — the single
+/// validation gate in front of every driver entry point.
+pub(crate) fn checked_dims(input: &InputSpec) -> Result<(usize, usize)> {
+    let (m, n) = input.dims()?;
+    if m == 0 || n == 0 {
+        return Err(Error::Config(format!(
+            "empty input matrix ({m}x{n}): {}",
+            input.path
+        )));
     }
-    let kp = (opts.k + opts.oversample).min(n).min(m_rows);
+    Ok((m, n))
+}
+
+/// Run the paper's rank-k SVD over `input` with every streaming pass
+/// delegated to `exec`. The one and only implementation of the pass
+/// schedule — both the local and the distributed entry points land here.
+pub(crate) fn run_svd(
+    exec: &mut dyn Executor,
+    input: &InputSpec,
+    dims: (usize, usize),
+    backend: BackendRef,
+    opts: &SvdOptions,
+) -> Result<SvdResult> {
+    opts.validate()?;
+    let (m_rows, n) = dims;
+    let mut report = PhaseReport::new();
+    let kp = if opts.exact_gram {
+        opts.k.min(n).min(m_rows)
+    } else {
+        (opts.k + opts.oversample).min(n).min(m_rows)
+    };
+    let mut ctx = PassContext {
+        input,
+        backend,
+        work_dir: &opts.work_dir,
+        shard_format: opts.shard_format,
+        block: opts.block,
+        seed: opts.seed,
+        n,
+        kp,
+        means: Arc::new(Vec::new()),
+    };
     LOG.info(&format!(
-        "randomized svd: {m_rows}x{n} -> k={} (sketch {kp}), workers={}, block={}, backend={}",
+        "{} svd: {m_rows}x{n} -> k={} (sketch {kp}), executor={}, backend={}",
+        if opts.exact_gram { "gram" } else { "randomized" },
         opts.k.min(kp),
-        opts.workers,
-        opts.block,
-        backend.name()
+        exec.name(),
+        ctx.backend.name()
     ));
     std::fs::create_dir_all(&opts.work_dir)?;
 
-    let y_shards = ShardSet::new(&opts.work_dir, "Y", opts.shard_format)?;
-    let u0_shards = ShardSet::new(&opts.work_dir, "U0", opts.shard_format)?;
-    let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
-
-    // PCA mode: pass 0 computes column means (Welford per worker, merged);
-    // all later passes subtract them on the fly via `CenteredJob`.
-    let means: std::sync::Arc<Vec<f64>> = if opts.center {
+    // ---- pass 0 (PCA mode): column means, subtracted on the fly later ----
+    if opts.center {
         let t0 = Instant::now();
-        let results = splitproc::run(input, opts.workers, |_| {
-            Ok(crate::jobs::ColStatsJob::new(n))
-        })?;
-        let mut iter = results.into_iter().map(|r| r.job);
-        let mut acc = iter.next().ok_or_else(|| Error::Other("no chunks".into()))?;
-        for j in iter {
-            acc.merge(&j)?;
-        }
-        report.push("pass0.colstats", t0.elapsed(), acc.count(), 0);
-        std::sync::Arc::new(acc.means().to_vec())
-    } else {
-        std::sync::Arc::new(Vec::new())
-    };
-
-    // The virtual sketch Ω (n x kp): workers materialize identical bits.
-    let vm = VirtualMatrix::projection(opts.seed, n, kp);
-    let mut omega = vm.materialize();
-    let mut shards_count;
-
-    let mut w_mat;
-    let mut u0_valid;
-    let mut iteration = 0usize;
-    loop {
-        // ---- pass 1: Y = A Ω, G = YᵀY ------------------------------------
-        let t0 = Instant::now();
-        let omega_ref = &omega;
-        let means_ref = &means;
-        let results = splitproc::run(input, opts.workers, |chunk| {
-            let job = ProjectGramJob::new(
-                backend.clone(),
-                omega_ref.clone(),
-                &y_shards,
-                chunk.index,
-            )?;
-            Ok(splitproc::CenteredJob::new(
-                Blocked::new(job, opts.block, n),
-                means_ref.clone(),
-            ))
-        })?;
-        shards_count = results.len();
-        let rows_seen: u64 = results.iter().map(|r| r.rows).sum();
-        if rows_seen as usize != m_rows {
+        let out = exec.run_pass(&ctx, &Pass::ColStats)?;
+        if out.rows as usize != m_rows {
             return Err(Error::Other(format!(
-                "pass1 saw {rows_seen} rows, expected {m_rows}"
+                "pass0 saw {} rows, expected {m_rows}",
+                out.rows
             )));
         }
-        let partials: Vec<Matrix> = results
-            .into_iter()
-            .map(|r| r.job.into_inner().into_inner().into_gram_partial())
-            .collect();
-        let g = splitproc::reduce_partials(partials)?;
-        report.push(&format!("pass1.project_gram[{iteration}]"), t0.elapsed(), rows_seen, 0);
-
-        // ---- leader: eigh(G), M = V_y Σ_y⁻¹ ------------------------------
-        let t0 = Instant::now();
-        let (w_eig, v_y) = backend.eigh(&g)?;
-        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
-        let inv_y = guarded_inverse(&sig_y, 1e-7);
-        let m_mat = v_y.scale_cols(&inv_y)?;
-        report.push(&format!("leader.eigh_y[{iteration}]"), t0.elapsed(), kp as u64, 0);
-
-        // ---- pass 2: U0 = Y M, W = Aᵀ U0 ---------------------------------
-        let t0 = Instant::now();
-        let m_ref = &m_mat;
-        let means_ref = &means;
-        let results = splitproc::run(input, opts.workers, |chunk| {
-            let job = Pass2Job::new(
-                backend.clone(),
-                m_ref.clone(),
-                &y_shards,
-                &u0_shards,
-                chunk.index,
-                n,
-            )?;
-            Ok(splitproc::CenteredJob::new(
-                Blocked::new(job, opts.block, n),
-                means_ref.clone(),
-            ))
-        })?;
-        let rows2: u64 = results.iter().map(|r| r.rows).sum();
-        let w_partials: Vec<Matrix> = results
-            .into_iter()
-            .map(|r| r.job.into_inner().into_inner().into_w_partial())
-            .collect();
-        w_mat = splitproc::reduce_partials(w_partials)?;
-        u0_valid = true;
-        report.push(&format!("pass2.urecover_tmul[{iteration}]"), t0.elapsed(), rows2, 0);
-
-        if iteration >= opts.power_iters {
-            break;
-        }
-        // ---- power iteration: Ω ← orth(W), repeat ------------------------
-        let t0 = Instant::now();
-        let (q, _) = crate::linalg::thin_qr(&w_mat)?;
-        omega = q;
-        iteration += 1;
-        report.push(&format!("leader.power_orth[{iteration}]"), t0.elapsed(), 0, 0);
+        let sums = out
+            .partial
+            .ok_or_else(|| Error::Other("colstats pass returned no partial".into()))?;
+        let means: Vec<f64> = sums.row(0).iter().map(|&s| s / out.rows as f64).collect();
+        ctx.means = Arc::new(means);
+        report.push("pass0.colstats", t0.elapsed(), out.rows, 0);
     }
-    let _ = u0_valid;
 
-    // ---- leader: small SVD completion from W -----------------------------
-    let t0 = Instant::now();
-    let gw = backend.gram_block(&w_mat)?; // WᵀW, kp x kp
-    let (w2, p) = backend.eigh(&gw)?;
-    let sigma_full: Vec<f64> = w2.iter().map(|&w| w.max(0.0).sqrt()).collect();
-    let k = opts.k.min(kp);
-    let sigma: Vec<f64> = sigma_full[..k].to_vec();
-    let p_k = p.slice_cols(0, k); // kp x k rotation
-    let v = if opts.compute_v {
-        let inv_s = guarded_inverse(&sigma, 1e-12);
-        let vp = matmul(&w_mat, &p_k)?; // n x k
-        Some(vp.scale_cols(&inv_s)?)
+    let (k, sigma, v, shards_count) = if opts.exact_gram {
+        gram_passes(exec, &ctx, m_rows, &mut report)?
     } else {
-        None
+        randomized_passes(exec, &ctx, opts, m_rows, &mut report)?
     };
-    report.push("leader.eigh_w", t0.elapsed(), kp as u64, 0);
 
-    // ---- pass 3: U = U0 P_k (rotate shards) ------------------------------
-    let t0 = Instant::now();
-    let rows3 = rotate_shards(&u0_shards, &u_shards, shards_count, &p_k, opts.block)?;
-    report.push("pass3.rotate_u", t0.elapsed(), rows3, 0);
-
+    let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
     LOG.info(&format!(
-        "randomized svd done: sigma[0]={:.4} sigma[{}]={:.4}",
+        "svd done: sigma[0]={:.4} sigma[{}]={:.4}",
         sigma.first().copied().unwrap_or(0.0),
         k.saturating_sub(1),
         sigma.last().copied().unwrap_or(0.0)
@@ -246,145 +205,171 @@ pub fn randomized_svd_file(input: &InputSpec, backend: BackendRef, opts: &SvdOpt
         v,
         u_shards,
         shards: shards_count,
-        means: if opts.center { Some(means.to_vec()) } else { None },
+        means: if opts.center { Some(ctx.means.to_vec()) } else { None },
         report,
     })
 }
 
-/// Rotate every shard's rows by `p` (`kp x k`): `U = U0 P`. Streams shard by
-/// shard with one worker thread per shard.
-fn rotate_shards(
-    src: &ShardSet,
-    dst: &ShardSet,
-    shards: usize,
-    p: &Matrix,
-    block: usize,
-) -> Result<u64> {
-    let counts: Vec<Result<u64>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..shards)
-            .map(|i| {
-                scope.spawn(move || -> Result<u64> {
-                    let mut reader = src.open_reader(i)?;
-                    let mut writer = dst.open_writer(i, p.cols())?;
-                    let mut row = Vec::new();
-                    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(block);
-                    let mut count = 0u64;
-                    loop {
-                        buf.clear();
-                        while buf.len() < block {
-                            if !reader.next_row(&mut row)? {
-                                break;
-                            }
-                            buf.push(row.clone());
-                        }
-                        if buf.is_empty() {
-                            break;
-                        }
-                        let u0 = Matrix::from_rows(&buf)?;
-                        let u = matmul(&u0, p)?;
-                        for r in 0..u.rows() {
-                            writer.write_row(u.row(r))?;
-                        }
-                        count += u.rows() as u64;
-                        if buf.len() < block {
-                            break;
-                        }
-                    }
-                    writer.finish()?;
-                    Ok(count)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().unwrap_or_else(|_| Err(Error::Other("rotate worker panicked".into()))))
-            .collect()
-    });
-    let mut total = 0u64;
-    for c in counts {
-        total += c?;
+/// The randomized route: sketch, recover, complete (+ power iterations).
+/// Returns `(k, sigma, v, shards)`.
+fn randomized_passes(
+    exec: &mut dyn Executor,
+    ctx: &PassContext,
+    opts: &SvdOptions,
+    m_rows: usize,
+    report: &mut PhaseReport,
+) -> Result<(usize, Vec<f64>, Option<Matrix>, usize)> {
+    let kp = ctx.kp;
+    let mut omega: Option<Matrix> = None;
+    let mut w_mat;
+    let mut shards_count;
+    let mut iteration = 0usize;
+    loop {
+        // ---- pass 1: Y = A Ω, G = YᵀY ------------------------------------
+        let t0 = Instant::now();
+        let out = exec.run_pass(ctx, &Pass::ProjectGram { omega: omega.as_ref() })?;
+        if out.rows as usize != m_rows {
+            return Err(Error::Other(format!(
+                "pass1 saw {} rows, expected {m_rows}",
+                out.rows
+            )));
+        }
+        shards_count = out.shards;
+        let g = out
+            .partial
+            .ok_or_else(|| Error::Other("pass1 returned no gram partial".into()))?;
+        report.push(&format!("pass1.project_gram[{iteration}]"), t0.elapsed(), out.rows, 0);
+
+        // ---- leader: eigh(G), M = V_y Σ_y⁻¹ ------------------------------
+        let t0 = Instant::now();
+        let (w_eig, v_y) = ctx.backend.eigh(&g)?;
+        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+        let inv_y = guarded_inverse(&sig_y, opts.sigma_cutoff_rel);
+        let m_mat = v_y.scale_cols(&inv_y)?;
+        report.push(&format!("leader.eigh_y[{iteration}]"), t0.elapsed(), kp as u64, 0);
+
+        // ---- pass 2: U0 = Y M, W = Aᵀ U0 ---------------------------------
+        let t0 = Instant::now();
+        let out2 = exec.run_pass(ctx, &Pass::UrecoverTmul { m: &m_mat })?;
+        w_mat = out2
+            .partial
+            .ok_or_else(|| Error::Other("pass2 returned no W partial".into()))?;
+        report.push(&format!("pass2.urecover_tmul[{iteration}]"), t0.elapsed(), out2.rows, 0);
+
+        if iteration >= opts.power_iters {
+            break;
+        }
+        // ---- power iteration: Ω ← orth(W), repeat ------------------------
+        let t0 = Instant::now();
+        let (q, _) = crate::linalg::thin_qr(&w_mat)?;
+        omega = Some(q);
+        iteration += 1;
+        report.push(&format!("leader.power_orth[{iteration}]"), t0.elapsed(), 0, 0);
     }
-    Ok(total)
+
+    // ---- leader: small SVD completion from W -----------------------------
+    let t0 = Instant::now();
+    let gw = ctx.backend.gram_block(&w_mat)?; // WᵀW, kp x kp
+    let (w2, p) = ctx.backend.eigh(&gw)?;
+    let sigma_full: Vec<f64> = w2.iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let k = opts.k.min(kp);
+    let sigma: Vec<f64> = sigma_full[..k].to_vec();
+    let p_k = p.slice_cols(0, k); // kp x k rotation
+    let v = if opts.compute_v {
+        let inv_s = guarded_inverse(&sigma, COMPLETION_CUTOFF_REL);
+        let vp = matmul(&w_mat, &p_k)?; // n x k
+        Some(vp.scale_cols(&inv_s)?)
+    } else {
+        None
+    };
+    report.push("leader.eigh_w", t0.elapsed(), kp as u64, 0);
+
+    // ---- pass 3: U = U0 P_k (rotate shards) ------------------------------
+    let t0 = Instant::now();
+    let out3 = exec.run_pass(ctx, &Pass::RotateU { p: &p_k })?;
+    report.push("pass3.rotate_u", t0.elapsed(), out3.rows, 0);
+
+    Ok((k, sigma, v, shards_count))
 }
 
 /// The paper's small-n exact route (§2.0.1): eigendecompose `AᵀA` directly,
-/// then stream `U = A V Σ⁻¹`.
-pub fn gram_svd_file(input: &InputSpec, backend: BackendRef, opts: &SvdOptions) -> Result<SvdResult> {
-    let mut report = PhaseReport::new();
-    let (m_rows, n) = input.dims()?;
-    if m_rows == 0 || n == 0 {
-        return Err(Error::Config("empty input matrix".into()));
-    }
-    let k = opts.k.min(n).min(m_rows);
-    LOG.info(&format!(
-        "gram svd: {m_rows}x{n} -> k={k}, workers={}, backend={}",
-        opts.workers,
-        backend.name()
-    ));
-    std::fs::create_dir_all(&opts.work_dir)?;
-    let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
+/// then stream `U = A V Σ⁻¹`. Returns `(k, sigma, v, shards)`. V falls out
+/// of the eigensolve for free here, so it is always returned — `compute_v`
+/// only buys anything on the randomized route.
+fn gram_passes(
+    exec: &mut dyn Executor,
+    ctx: &PassContext,
+    m_rows: usize,
+    report: &mut PhaseReport,
+) -> Result<(usize, Vec<f64>, Option<Matrix>, usize)> {
+    let k = ctx.kp; // for this route kp = k.min(n).min(m)
 
     // ---- pass 1: G = AᵀA --------------------------------------------------
     let t0 = Instant::now();
-    let backend2 = backend.clone();
-    let results = splitproc::run(input, opts.workers, |_chunk| {
-        let job = crate::jobs::AtaBlockJob::new(backend2.clone(), n);
-        Ok(Blocked::new(job, opts.block, n))
-    })?;
-    let shards_count = results.len();
-    let rows_seen: u64 = results.iter().map(|r| r.rows).sum();
-    let partials: Vec<Matrix> = results
-        .into_iter()
-        .map(|r| r.job.into_inner().into_partial())
-        .collect();
-    let g = splitproc::reduce_partials(partials)?;
-    report.push("pass1.ata", t0.elapsed(), rows_seen, 0);
+    let out = exec.run_pass(ctx, &Pass::Ata)?;
+    if out.rows as usize != m_rows {
+        return Err(Error::Other(format!(
+            "pass1 saw {} rows, expected {m_rows}",
+            out.rows
+        )));
+    }
+    let g = out
+        .partial
+        .ok_or_else(|| Error::Other("ata pass returned no partial".into()))?;
+    report.push("pass1.ata", t0.elapsed(), out.rows, 0);
 
     // ---- leader: eigh(G) = V Σ² Vᵀ -----------------------------------------
     let t0 = Instant::now();
-    let (w_eig, v_full) = backend.eigh(&g)?;
+    let (w_eig, v_full) = ctx.backend.eigh(&g)?;
     let sigma_full: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
     let sigma: Vec<f64> = sigma_full[..k].to_vec();
     let v_k = v_full.slice_cols(0, k);
-    let inv_s = guarded_inverse(&sigma, 1e-12);
+    let inv_s = guarded_inverse(&sigma, COMPLETION_CUTOFF_REL);
     // M = V_k Σ⁻¹ : the paper's U = A V Σ⁻¹ per-block multiplier.
     let m_mat = v_k.scale_cols(&inv_s)?;
-    report.push("leader.eigh", t0.elapsed(), n as u64, 0);
+    report.push("leader.eigh", t0.elapsed(), ctx.n as u64, 0);
 
     // ---- pass 2: U = A M ----------------------------------------------------
     let t0 = Instant::now();
-    let m_ref = &m_mat;
-    let results = splitproc::run(input, opts.workers, |chunk| {
-        let job = crate::jobs::MultJob::new(
-            backend.clone(),
-            m_ref.clone(),
-            &u_shards,
-            chunk.index,
-        )?;
-        Ok(Blocked::new(job, opts.block, n))
-    })?;
-    let rows2: u64 = results.iter().map(|r| r.rows).sum();
-    report.push("pass2.u_recover", t0.elapsed(), rows2, 0);
+    let out2 = exec.run_pass(ctx, &Pass::Mult { m: &m_mat })?;
+    report.push("pass2.u_recover", t0.elapsed(), out2.rows, 0);
 
-    Ok(SvdResult {
-        m: m_rows,
-        n,
-        k,
-        sigma,
-        v: Some(v_k),
-        u_shards,
-        means: None,
-        shards: shards_count,
-        report,
-    })
+    Ok((k, sigma, Some(v_k), out2.shards))
+}
+
+/// Run the randomized rank-k SVD over a file with in-process workers.
+#[deprecated(note = "use the builder: `Svd::over(&input)?.rank(k).run()`")]
+pub fn randomized_svd_file(
+    input: &InputSpec,
+    backend: BackendRef,
+    opts: &SvdOptions,
+) -> Result<SvdResult> {
+    let dims = checked_dims(input)?;
+    let mut o = opts.clone();
+    o.exact_gram = false;
+    let mut exec = LocalExecutor::new(o.workers);
+    run_svd(&mut exec, input, dims, backend, &o)
+}
+
+/// Run the exact-Gram SVD over a file with in-process workers.
+#[deprecated(note = "use the builder: `Svd::over(&input)?.rank(k).exact_gram(true).run()`")]
+pub fn gram_svd_file(
+    input: &InputSpec,
+    backend: BackendRef,
+    opts: &SvdOptions,
+) -> Result<SvdResult> {
+    let dims = checked_dims(input)?;
+    let mut o = opts.clone();
+    o.exact_gram = true;
+    let mut exec = LocalExecutor::new(o.workers);
+    run_svd(&mut exec, input, dims, backend, &o)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::native::NativeBackend;
     use crate::io::dataset::{gen_exact, Spectrum};
-    use std::sync::Arc;
+    use crate::svd::Svd;
 
     fn setup(name: &str, m: usize, n: usize, rank: usize, noise: f64) -> (InputSpec, Matrix, Vec<f64>) {
         let dir = std::env::temp_dir().join("tallfat_test_svd").join(name);
@@ -404,27 +389,29 @@ mod tests {
         (spec, a, sigma)
     }
 
-    fn opts(name: &str, k: usize) -> SvdOptions {
-        SvdOptions {
-            k,
-            oversample: 8,
-            workers: 3,
-            block: 32,
-            work_dir: std::env::temp_dir()
-                .join("tallfat_test_svd")
-                .join(name)
-                .join("work")
-                .to_string_lossy()
-                .into_owned(),
-            ..Default::default()
-        }
+    fn work(name: &str) -> String {
+        std::env::temp_dir()
+            .join("tallfat_test_svd")
+            .join(name)
+            .join("work")
+            .to_string_lossy()
+            .into_owned()
+    }
+
+    fn builder<'a>(spec: &InputSpec, name: &str, k: usize) -> Svd<'a> {
+        Svd::over(spec)
+            .unwrap()
+            .rank(k)
+            .oversample(8)
+            .workers(3)
+            .block(32)
+            .work_dir(work(name))
     }
 
     #[test]
     fn randomized_recovers_low_rank_exactly() {
         let (spec, a, sigma_true) = setup("rand_exact", 300, 24, 6, 0.0);
-        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("rand_exact", 8))
-            .unwrap();
+        let r = builder(&spec, "rand_exact", 8).run().unwrap();
         assert_eq!(r.k, 8);
         for i in 0..6 {
             assert!(
@@ -443,8 +430,7 @@ mod tests {
     #[test]
     fn randomized_with_noise_close_to_exact() {
         let (spec, a, _) = setup("rand_noise", 400, 32, 8, 0.01);
-        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("rand_noise", 8))
-            .unwrap();
+        let r = builder(&spec, "rand_noise", 8).run().unwrap();
         let exact = crate::linalg::exact_svd(&a).unwrap();
         for i in 0..4 {
             let rel = (r.sigma[i] - exact.sigma[i]).abs() / exact.sigma[i];
@@ -463,10 +449,11 @@ mod tests {
         let exact = crate::linalg::exact_svd(&a).unwrap();
 
         let run = |q: usize, name: &str| {
-            let mut o = opts(name, 8);
-            o.power_iters = q;
-            o.oversample = 4;
-            let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &o).unwrap();
+            let r = builder(&spec, name, 8)
+                .oversample(4)
+                .power_iters(q)
+                .run()
+                .unwrap();
             let recon = r.reconstruct().unwrap();
             let mut diff = 0.0f64;
             for i in 0..300 {
@@ -486,7 +473,7 @@ mod tests {
     #[test]
     fn gram_route_matches_exact() {
         let (spec, a, _) = setup("gram", 200, 16, 16, 0.005);
-        let r = gram_svd_file(&spec, Arc::new(NativeBackend::new()), &opts("gram", 16)).unwrap();
+        let r = builder(&spec, "gram", 16).exact_gram(true).run().unwrap();
         let exact = crate::linalg::exact_svd(&a).unwrap();
         for i in 0..16 {
             let denom = exact.sigma[i].max(1e-9);
@@ -505,16 +492,31 @@ mod tests {
     fn worker_count_does_not_change_result() {
         let (spec, _, _) = setup("workers", 150, 12, 5, 0.0);
         let run = |w: usize, name: &str| {
-            let mut o = opts(name, 6);
-            o.workers = w;
-            randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &o)
-                .unwrap()
-                .sigma
+            builder(&spec, name, 6).workers(w).run().unwrap().sigma
         };
         let s1 = run(1, "w1");
         let s4 = run(4, "w4");
         for (a, b) in s1.iter().zip(s4.iter()) {
             assert!((a - b).abs() < 1e-9, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn guarded_inverse_zeroes_small_tail() {
+        let inv = guarded_inverse(&[4.0, 2.0, 4.0e-9], 1e-7);
+        assert_eq!(inv[0], 0.25);
+        assert_eq!(inv[1], 0.5);
+        assert_eq!(inv[2], 0.0);
+        assert!(guarded_inverse(&[], 1e-7).is_empty());
+    }
+
+    #[test]
+    fn checked_dims_rejects_empty() {
+        let dir = std::env::temp_dir().join("tallfat_test_svd").join("dims");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.csv").to_string_lossy().into_owned();
+        std::fs::write(&path, "").unwrap();
+        assert!(checked_dims(&InputSpec::csv(path)).is_err());
+        assert!(checked_dims(&InputSpec::csv("/nonexistent/a.csv")).is_err());
     }
 }

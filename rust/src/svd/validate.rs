@@ -163,10 +163,8 @@ pub fn dense_reconstruction_error(a: &Matrix, u: &Matrix, sigma: &[f64], v: &Mat
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::native::NativeBackend;
     use crate::io::dataset::{gen_exact, Spectrum};
-    use crate::svd::pipeline::{randomized_svd_file, SvdOptions};
-    use std::sync::Arc;
+    use crate::svd::Svd;
 
     #[test]
     fn streaming_error_matches_dense() {
@@ -184,15 +182,15 @@ mod tests {
         .unwrap();
         let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
         crate::io::write_matrix(&a, &spec).unwrap();
-        let opts = SvdOptions {
-            k: 6,
-            oversample: 6,
-            workers: 2,
-            block: 32,
-            work_dir: dir.join("work").to_string_lossy().into_owned(),
-            ..Default::default()
-        };
-        let r = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+        let r = Svd::over(&spec)
+            .unwrap()
+            .rank(6)
+            .oversample(6)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .run()
+            .unwrap();
         let streaming = reconstruction_error_streaming(&spec, &r).unwrap();
         let dense = dense_reconstruction_error(
             &a,

@@ -1,18 +1,19 @@
 //! Distributed-mode integration: leader + N workers as real TCP peers
 //! (worker threads in-process; the protocol and phase execution are the
-//! same code paths the `tallfat worker` process runs), verified against
-//! the single-process pipeline.
+//! same code paths the `tallfat worker` process runs), driven through the
+//! builder API with a [`ClusterExecutor`] and verified against the local
+//! executor.
 
-use std::net::TcpStream;
-use std::sync::Arc;
-use tallfat::backend::native::NativeBackend;
-use tallfat::backend::BackendRef;
-use tallfat::cluster::leader::distributed_randomized_svd;
 use tallfat::cluster::proto::PhaseKind;
-use tallfat::cluster::{worker, DistributedLeader};
+use tallfat::cluster::{ClusterExecutor, DistributedLeader};
+use tallfat::config::InputFormat;
 use tallfat::io::dataset::{gen_exact, Spectrum};
 use tallfat::io::InputSpec;
-use tallfat::svd::{randomized_svd_file, validate, SvdOptions};
+use tallfat::linalg::Matrix;
+use tallfat::svd::{validate, Svd};
+
+mod harness;
+use harness::{free_addr, spawn_workers};
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_cluster_it").join(name);
@@ -21,36 +22,11 @@ fn dir(name: &str) -> std::path::PathBuf {
     d
 }
 
-fn backend() -> BackendRef {
-    Arc::new(NativeBackend::new())
-}
-
-/// Pick an ephemeral port by probing.
-fn free_addr() -> String {
-    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = probe.local_addr().unwrap().to_string();
-    drop(probe);
-    addr
-}
-
-/// Spawn `n` worker threads that connect to `addr` and serve until
-/// shutdown. Returns join handles.
-fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
-    (0..n)
-        .map(|_| {
-            let addr = addr.to_string();
-            std::thread::spawn(move || {
-                // retry until the leader is listening
-                let stream = loop {
-                    match TcpStream::connect(&addr) {
-                        Ok(s) => break s,
-                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
-                    }
-                };
-                worker::serve(stream, backend()).unwrap();
-            })
-        })
-        .collect()
+/// Builder with the shared fixture defaults; generic over the executor
+/// lifetime so each call site infers its own. Chain route-specific options
+/// (`oversample`, `power_iters`, `exact_gram`, …) at the call site.
+fn build<'a>(input: &InputSpec, work: String, k: usize) -> Svd<'a> {
+    Svd::over(input).unwrap().rank(k).block(64).work_dir(work)
 }
 
 #[test]
@@ -70,20 +46,17 @@ fn distributed_svd_matches_local() {
 
     let addr = free_addr();
     let handles = spawn_workers(&addr, 3);
-    let mut leader = DistributedLeader::accept(&addr, 3).unwrap();
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
 
-    let opts = SvdOptions {
-        k: 8,
-        oversample: 8,
-        workers: 3,
-        block: 64,
-        seed: 5,
-        work_dir: d.join("dist").to_string_lossy().into_owned(),
-        compute_v: true,
-        ..SvdOptions::default()
-    };
-    let dist = distributed_randomized_svd(&mut leader, &input, backend(), &opts).unwrap();
-    leader.shutdown().unwrap();
+    let work = |name: &str| d.join(name).to_string_lossy().into_owned();
+    let dist = build(&input, work("dist"), 8)
+        .oversample(8)
+        .workers(3)
+        .seed(5)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
     for h in handles {
         h.join().unwrap();
     }
@@ -94,9 +67,12 @@ fn distributed_svd_matches_local() {
         assert!(rel < 1e-8, "sigma[{i}] {} vs {}", dist.sigma[i], sigma_true[i]);
     }
     // vs local pipeline (identical seed => identical sketch)
-    let mut local_opts = opts.clone();
-    local_opts.work_dir = d.join("local").to_string_lossy().into_owned();
-    let local = randomized_svd_file(&input, backend(), &local_opts).unwrap();
+    let local = build(&input, work("local"), 8)
+        .oversample(8)
+        .workers(3)
+        .seed(5)
+        .run()
+        .unwrap();
     for i in 0..8 {
         let rel = (dist.sigma[i] - local.sigma[i]).abs() / local.sigma[i];
         assert!(rel < 1e-10, "dist vs local sigma[{i}]");
@@ -117,29 +93,75 @@ fn distributed_svd_with_power_iterations() {
 
     let addr = free_addr();
     let handles = spawn_workers(&addr, 2);
-    let mut leader = DistributedLeader::accept(&addr, 2).unwrap();
-    let opts = SvdOptions {
-        k: 6,
-        oversample: 6,
-        power_iters: 2,
-        workers: 2,
-        block: 64,
-        seed: 1,
-        work_dir: d.join("dist").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
-    let dist = distributed_randomized_svd(&mut leader, &input, backend(), &opts).unwrap();
-    leader.shutdown().unwrap();
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    let work = |name: &str| d.join(name).to_string_lossy().into_owned();
+    let dist = build(&input, work("dist"), 6)
+        .oversample(6)
+        .power_iters(2)
+        .workers(2)
+        .seed(1)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
     for h in handles {
         h.join().unwrap();
     }
-    let mut local_opts = opts.clone();
-    local_opts.work_dir = d.join("local").to_string_lossy().into_owned();
-    let local = randomized_svd_file(&input, backend(), &local_opts).unwrap();
+    let local = build(&input, work("local"), 6)
+        .oversample(6)
+        .power_iters(2)
+        .workers(2)
+        .seed(1)
+        .run()
+        .unwrap();
     for i in 0..6 {
         let rel = (dist.sigma[i] - local.sigma[i]).abs() / local.sigma[i];
         assert!(rel < 1e-9, "power-iter dist vs local sigma[{i}]");
     }
+}
+
+/// The exact-Gram route also runs distributed now — same builder, same
+/// executor seam (the old hand-written distributed driver never could).
+#[test]
+fn distributed_gram_route_matches_local() {
+    let d = dir("gram");
+    let (a, _) = gen_exact(
+        240,
+        14,
+        14,
+        Spectrum::Geometric { scale: 6.0, decay: 0.8 },
+        0.002,
+        24,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    let work = |name: &str| d.join(name).to_string_lossy().into_owned();
+    let dist = build(&input, work("dist"), 14)
+        .exact_gram(true)
+        .workers(2)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let local = build(&input, work("local"), 14)
+        .exact_gram(true)
+        .workers(2)
+        .run()
+        .unwrap();
+    for i in 0..14 {
+        let rel = (dist.sigma[i] - local.sigma[i]).abs() / local.sigma[i].max(1e-12);
+        assert!(rel < 1e-10, "gram dist vs local sigma[{i}]");
+    }
+    let err = validate::reconstruction_error_streaming(&input, &dist).unwrap();
+    assert!(err < 1e-2, "gram reconstruction {err}");
 }
 
 #[test]
@@ -168,7 +190,10 @@ fn distributed_ata_phase() {
             64,
             0,
             12,
-            &tallfat::linalg::Matrix::zeros(0, 0),
+            12,
+            InputFormat::Bin,
+            &Matrix::zeros(0, 0),
+            &Matrix::zeros(0, 0),
         )
         .unwrap();
     leader.shutdown().unwrap();
@@ -198,7 +223,10 @@ fn worker_failure_is_reported_to_leader() {
         64,
         0,
         4,
-        &tallfat::linalg::Matrix::zeros(0, 0),
+        4,
+        InputFormat::Bin,
+        &Matrix::zeros(0, 0),
+        &Matrix::zeros(0, 0),
     );
     assert!(r.is_err(), "leader must surface the worker failure");
     // The worker stays up after reporting failure; shutdown still works.
@@ -211,6 +239,7 @@ fn worker_failure_is_reported_to_leader() {
 #[test]
 fn version_mismatch_rejected() {
     use std::io::Write as _;
+    use std::net::TcpStream;
     let addr = free_addr();
     let addr2 = addr.clone();
     let rogue = std::thread::spawn(move || {

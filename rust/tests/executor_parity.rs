@@ -1,0 +1,228 @@
+//! Executor parity — the acceptance gate of the "one pipeline, many
+//! executors" redesign: the same input + seed must produce matching Σ/V
+//! (and U up to column sign) whether the passes run on the in-process
+//! [`LocalExecutor`] or on remote TCP workers via [`ClusterExecutor`].
+//! Plus: the gram and randomized routes agree on a small dense matrix.
+
+use tallfat::cluster::ClusterExecutor;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::linalg::Matrix;
+use tallfat::svd::{LocalExecutor, Svd, SvdResult};
+
+mod harness;
+use harness::{free_addr, spawn_workers};
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_parity_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Column-wise comparison up to sign: singular vectors are only defined up
+/// to a per-column sign flip.
+fn assert_cols_match_up_to_sign(a: &Matrix, b: &Matrix, tol: f64, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape mismatch");
+    for j in 0..a.cols() {
+        let dot: f64 = (0..a.rows()).map(|i| a.get(i, j) * b.get(i, j)).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for i in 0..a.rows() {
+            let diff = (a.get(i, j) - sign * b.get(i, j)).abs();
+            assert!(
+                diff < tol,
+                "{what}[{i},{j}]: {} vs {} (sign {sign})",
+                a.get(i, j),
+                b.get(i, j)
+            );
+        }
+    }
+}
+
+fn fixture(
+    d: &std::path::Path,
+    m: usize,
+    n: usize,
+    rank: usize,
+    noise: f64,
+    seed: u64,
+) -> InputSpec {
+    let (a, _) = gen_exact(
+        m,
+        n,
+        rank,
+        Spectrum::Geometric { scale: 10.0, decay: 0.65 },
+        noise,
+        seed,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+    input
+}
+
+/// Generic-lifetime builder so local and cluster call sites each infer
+/// their own executor borrow.
+fn build<'a>(input: &InputSpec, work: String, k: usize, center: bool) -> Svd<'a> {
+    Svd::over(input)
+        .unwrap()
+        .rank(k)
+        .oversample(6)
+        .workers(3)
+        .block(32)
+        .seed(77)
+        .center(center)
+        .work_dir(work)
+}
+
+fn assert_parity(local: &SvdResult, dist: &SvdResult, k: usize) {
+    assert_eq!(local.k, k);
+    assert_eq!(dist.k, k);
+    // Σ: identical math, identical reduction order => near-bitwise equal.
+    for i in 0..k {
+        let rel = (local.sigma[i] - dist.sigma[i]).abs() / local.sigma[i].max(1e-300);
+        assert!(rel < 1e-12, "sigma[{i}]: {} vs {}", local.sigma[i], dist.sigma[i]);
+    }
+    // V up to column sign.
+    assert_cols_match_up_to_sign(
+        local.v.as_ref().unwrap(),
+        dist.v.as_ref().unwrap(),
+        1e-9,
+        "V",
+    );
+    // U (merged from shards) up to column sign.
+    let ul = local.u_matrix().unwrap();
+    let ud = dist.u_matrix().unwrap();
+    assert_cols_match_up_to_sign(&ul, &ud, 1e-9, "U");
+}
+
+#[test]
+fn local_and_cluster_executors_agree() {
+    let d = dir("plain");
+    let input = fixture(&d, 450, 24, 6, 0.005, 31);
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 3);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Explicit LocalExecutor through the same seam (not just the default).
+    let mut local_exec = LocalExecutor::new(3);
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut local_exec)
+        .run()
+        .unwrap();
+
+    assert_parity(&local, &dist, 6);
+}
+
+/// PCA mode across the cluster: the centering pass (new PhaseKind) must
+/// produce the same means and factors as the local executor.
+#[test]
+fn centered_parity_across_executors() {
+    let d = dir("centered");
+    let input = fixture(&d, 300, 18, 5, 0.0, 32);
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 5, true)
+        .workers(2)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 5, true)
+        .workers(2)
+        .run()
+        .unwrap();
+
+    let ml = local.means.as_ref().unwrap();
+    let md = dist.means.as_ref().unwrap();
+    assert_eq!(ml.len(), md.len());
+    for (a, b) in ml.iter().zip(md.iter()) {
+        assert!((a - b).abs() < 1e-12, "means drift: {a} vs {b}");
+    }
+    assert_parity(&local, &dist, 5);
+}
+
+/// The input's parse format travels on the wire: a binary file whose
+/// extension would mis-guess as CSV must still run identically through
+/// both executors (workers must not re-derive the format from the path).
+#[test]
+fn format_explicit_input_parity() {
+    let d = dir("binfmt");
+    let (a, _) = gen_exact(
+        200,
+        10,
+        4,
+        Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+        0.0,
+        34,
+    )
+    .unwrap();
+    // `.data` extension: InputFormat::from_path would wrongly say Csv.
+    let input = InputSpec::bin(d.join("a.data").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 4, false)
+        .workers(2)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 4, false)
+        .workers(2)
+        .run()
+        .unwrap();
+    assert_parity(&local, &dist, 4);
+}
+
+/// The two mathematical routes agree: on a small dense matrix whose rank
+/// fits inside the sketch, the randomized pipeline recovers the exact-Gram
+/// factors (Σ to high precision, V and U up to sign).
+#[test]
+fn gram_and_randomized_routes_agree() {
+    let d = dir("routes");
+    let input = fixture(&d, 220, 16, 5, 0.0, 33);
+
+    let rand = build(&input, d.join("rand").to_string_lossy().into_owned(), 5, false)
+        .run()
+        .unwrap();
+    let gram = build(&input, d.join("gram").to_string_lossy().into_owned(), 5, false)
+        .exact_gram(true)
+        .run()
+        .unwrap();
+
+    assert_eq!(rand.k, 5);
+    assert_eq!(gram.k, 5);
+    for i in 0..5 {
+        let rel = (rand.sigma[i] - gram.sigma[i]).abs() / gram.sigma[i].max(1e-300);
+        assert!(rel < 1e-7, "route sigma[{i}]: {} vs {}", rand.sigma[i], gram.sigma[i]);
+    }
+    assert_cols_match_up_to_sign(
+        rand.v.as_ref().unwrap(),
+        gram.v.as_ref().unwrap(),
+        1e-6,
+        "route V",
+    );
+    let ur = rand.u_matrix().unwrap();
+    let ug = gram.u_matrix().unwrap();
+    assert_cols_match_up_to_sign(&ur, &ug, 1e-6, "route U");
+}

@@ -1,0 +1,36 @@
+//! Shared scaffolding for leader/worker integration tests: ephemeral
+//! ports and in-process worker threads speaking the real TCP protocol.
+
+use std::net::TcpStream;
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::cluster::worker;
+
+/// Pick an ephemeral port by probing.
+pub fn free_addr() -> String {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    addr
+}
+
+/// Spawn `n` worker threads that connect to `addr` (retrying until the
+/// leader is listening) and serve until shutdown. Returns join handles.
+/// (Not every test binary that includes this module spawns workers.)
+#[allow(dead_code)]
+pub fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let stream = loop {
+                    match TcpStream::connect(&addr) {
+                        Ok(s) => break s,
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                    }
+                };
+                worker::serve(stream, Arc::new(NativeBackend::new())).unwrap();
+            })
+        })
+        .collect()
+}

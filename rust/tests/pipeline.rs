@@ -1,20 +1,13 @@
 //! End-to-end pipeline integration tests: the full randomized SVD over
 //! files, against known ground truth, plus failure injection.
 
-use std::sync::Arc;
-use tallfat::backend::native::NativeBackend;
-use tallfat::backend::BackendRef;
 use tallfat::io::dataset::{gen_clustered, gen_exact, gen_streamed, Spectrum};
 use tallfat::io::InputSpec;
 use tallfat::jobs::AtaRowJob;
 use tallfat::linalg::{exact_svd, matmul, Matrix};
 use tallfat::mapreduce::{ata_mapreduce, AtaMrMode};
 use tallfat::splitproc;
-use tallfat::svd::{gram_svd_file, randomized_svd_file, validate, SvdOptions};
-
-fn backend() -> BackendRef {
-    Arc::new(NativeBackend::new())
-}
+use tallfat::svd::{validate, Svd, SvdResult};
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_it").join(name);
@@ -23,17 +16,34 @@ fn dir(name: &str) -> std::path::PathBuf {
     d
 }
 
-fn opts(work: &std::path::Path, k: usize, workers: usize) -> SvdOptions {
-    SvdOptions {
-        k,
-        oversample: 8,
-        workers,
-        block: 64,
-        seed: 42,
-        work_dir: work.to_string_lossy().into_owned(),
-        compute_v: true,
-        ..SvdOptions::default()
-    }
+/// Builder with the fixture defaults every test below shares.
+fn builder<'a>(input: &InputSpec, work: &std::path::Path, k: usize, workers: usize) -> Svd<'a> {
+    Svd::over(input)
+        .unwrap()
+        .rank(k)
+        .oversample(8)
+        .workers(workers)
+        .block(64)
+        .seed(42)
+        .work_dir(work.to_string_lossy().into_owned())
+}
+
+/// Fallible end-to-end run (for the failure-injection tests, where the
+/// error may surface in `Svd::over` or mid-pass).
+fn try_run(
+    input: &InputSpec,
+    work: &std::path::Path,
+    k: usize,
+    workers: usize,
+) -> tallfat::Result<SvdResult> {
+    Svd::over(input)?
+        .rank(k)
+        .oversample(8)
+        .workers(workers)
+        .block(64)
+        .seed(42)
+        .work_dir(work.to_string_lossy().into_owned())
+        .run()
 }
 
 /// Exact low-rank input: the randomized SVD must recover the spectrum to
@@ -53,7 +63,7 @@ fn recovers_exact_low_rank_spectrum() {
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
 
-    let res = randomized_svd_file(&input, backend(), &opts(&d, 8, 3)).unwrap();
+    let res = builder(&input, &d, 8, 3).run().unwrap();
     for i in 0..8 {
         let rel = (res.sigma[i] - sigma[i]).abs() / sigma[i];
         assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", res.sigma[i], sigma[i]);
@@ -83,7 +93,7 @@ fn near_optimal_on_noisy_spectrum() {
     tallfat::io::write_matrix(&a, &input).unwrap();
 
     let k = 10;
-    let res = randomized_svd_file(&input, backend(), &opts(&d, k, 2)).unwrap();
+    let res = builder(&input, &d, k, 2).run().unwrap();
     let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
 
     let svd = exact_svd(&a).unwrap();
@@ -110,7 +120,7 @@ fn right_singular_vectors_match_exact() {
     .unwrap();
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
-    let res = randomized_svd_file(&input, backend(), &opts(&d, 6, 2)).unwrap();
+    let res = builder(&input, &d, 6, 2).run().unwrap();
     let v = res.v.as_ref().unwrap();
     let svd = exact_svd(&a).unwrap();
     for j in 0..6 {
@@ -134,7 +144,7 @@ fn gram_route_equals_exact_svd() {
     .unwrap();
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
-    let res = gram_svd_file(&input, backend(), &opts(&d, 16, 3)).unwrap();
+    let res = builder(&input, &d, 16, 3).exact_gram(true).run().unwrap();
     let svd = exact_svd(&a).unwrap();
     for i in 0..16 {
         let rel = (res.sigma[i] - svd.sigma[i]).abs() / svd.sigma[i].max(1e-12);
@@ -151,10 +161,10 @@ fn power_iterations_help_slow_decay() {
     tallfat::io::write_matrix(&a, &input).unwrap();
     let mut e = vec![];
     for q in [0usize, 2] {
-        let mut o = opts(&d.join(format!("w{q}")), 8, 2);
-        o.power_iters = q;
-        std::fs::create_dir_all(&o.work_dir).unwrap();
-        let res = randomized_svd_file(&input, backend(), &o).unwrap();
+        let res = builder(&input, &d.join(format!("w{q}")), 8, 2)
+            .power_iters(q)
+            .run()
+            .unwrap();
         e.push(validate::reconstruction_error_streaming(&input, &res).unwrap());
     }
     assert!(
@@ -183,9 +193,7 @@ fn worker_count_invariance() {
     tallfat::io::write_matrix(&a, &input).unwrap();
     let mut sigmas = vec![];
     for w in [1usize, 2, 5] {
-        let o = opts(&d.join(format!("w{w}")), 6, w);
-        std::fs::create_dir_all(&o.work_dir).unwrap();
-        let res = randomized_svd_file(&input, backend(), &o).unwrap();
+        let res = builder(&input, &d.join(format!("w{w}")), 6, w).run().unwrap();
         sigmas.push(res.sigma);
     }
     for s in &sigmas[1..] {
@@ -213,8 +221,8 @@ fn csv_and_bin_inputs_agree() {
     let bin = InputSpec::bin(d.join("a.bin").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &csv).unwrap();
     tallfat::io::write_matrix(&a, &bin).unwrap();
-    let r1 = randomized_svd_file(&csv, backend(), &opts(&d.join("c"), 6, 2)).unwrap();
-    let r2 = randomized_svd_file(&bin, backend(), &opts(&d.join("b"), 6, 2)).unwrap();
+    let r1 = builder(&csv, &d.join("c"), 6, 2).run().unwrap();
+    let r2 = builder(&bin, &d.join("b"), 6, 2).run().unwrap();
     for i in 0..6 {
         // CSV stores ~12 significant digits; allow that roundtrip error.
         let rel = (r1.sigma[i] - r2.sigma[i]).abs() / r1.sigma[i];
@@ -229,14 +237,14 @@ fn generators_feed_the_pipeline() {
     let streamed = InputSpec::bin(d.join("s.bin").to_string_lossy().into_owned());
     gen_streamed(&streamed, 2000, 32, 8, Spectrum::Geometric { scale: 3.0, decay: 0.7 }, 0.01, 8)
         .unwrap();
-    let res = randomized_svd_file(&streamed, backend(), &opts(&d, 8, 3)).unwrap();
+    let res = builder(&streamed, &d, 8, 3).run().unwrap();
     assert_eq!(res.m, 2000);
     assert!(res.sigma[0] > 0.0);
 
     let (c, _) = gen_clustered(150, 20, 5, 0.3, 9);
     let cin = InputSpec::csv(d.join("c.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&c, &cin).unwrap();
-    let res = randomized_svd_file(&cin, backend(), &opts(&d.join("c"), 4, 2)).unwrap();
+    let res = builder(&cin, &d.join("c"), 4, 2).run().unwrap();
     assert_eq!(res.n, 20);
 }
 
@@ -275,7 +283,7 @@ fn malformed_csv_row_is_an_error_not_a_hang() {
     let path = d.join("bad.csv").to_string_lossy().into_owned();
     std::fs::write(&path, "1.0;2.0;3.0\n1.0;banana;3.0\n4.0;5.0;6.0\n").unwrap();
     let input = InputSpec::csv(path);
-    let r = randomized_svd_file(&input, backend(), &opts(&d, 2, 2));
+    let r = try_run(&input, &d, 2, 2);
     assert!(r.is_err());
 }
 
@@ -284,18 +292,14 @@ fn ragged_csv_rows_error() {
     let d = dir("ragged");
     let path = d.join("ragged.csv").to_string_lossy().into_owned();
     std::fs::write(&path, "1.0;2.0;3.0\n1.0;2.0\n").unwrap();
-    let r = randomized_svd_file(&InputSpec::csv(path), backend(), &opts(&d, 2, 1));
+    let r = try_run(&InputSpec::csv(path), &d, 2, 1);
     assert!(r.is_err());
 }
 
 #[test]
 fn missing_file_errors() {
     let d = dir("missing");
-    let r = randomized_svd_file(
-        &InputSpec::csv("/nonexistent/never/a.csv"),
-        backend(),
-        &opts(&d, 2, 1),
-    );
+    let r = try_run(&InputSpec::csv("/nonexistent/never/a.csv"), &d, 2, 1);
     assert!(r.is_err());
 }
 
@@ -304,7 +308,7 @@ fn empty_file_errors() {
     let d = dir("empty");
     let path = d.join("empty.csv").to_string_lossy().into_owned();
     std::fs::write(&path, "").unwrap();
-    let r = randomized_svd_file(&InputSpec::csv(path), backend(), &opts(&d, 2, 2));
+    let r = try_run(&InputSpec::csv(path), &d, 2, 2);
     assert!(r.is_err());
 }
 
@@ -322,7 +326,7 @@ fn more_workers_than_rows_still_correct() {
     .unwrap();
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
-    let res = randomized_svd_file(&input, backend(), &opts(&d, 3, 16)).unwrap();
+    let res = builder(&input, &d, 3, 16).run().unwrap();
     for i in 0..3 {
         let rel = (res.sigma[i] - sigma[i]).abs() / sigma[i];
         assert!(rel < 1e-8, "sigma[{i}]");
@@ -346,7 +350,7 @@ fn rank_deficient_input_is_guarded() {
     .unwrap();
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
-    let res = randomized_svd_file(&input, backend(), &opts(&d, 6, 2)).unwrap();
+    let res = builder(&input, &d, 6, 2).run().unwrap();
     // Reconstruction must still be near perfect (tail sigma ~ 0).
     let err = validate::reconstruction_error_streaming(&input, &res).unwrap();
     assert!(err < 1e-6, "rank-deficient reconstruction {err}");
@@ -371,7 +375,7 @@ fn reconstruct_matches_input() {
     .unwrap();
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
-    let res = randomized_svd_file(&input, backend(), &opts(&d, 4, 2)).unwrap();
+    let res = builder(&input, &d, 4, 2).run().unwrap();
     let ak = res.reconstruct().unwrap();
     // a is exactly rank 4, so A_4 == A.
     assert!(ak.max_abs_diff(&a) < 1e-8);
@@ -406,9 +410,7 @@ fn pca_centering_matches_dense_centered_svd() {
     let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &input).unwrap();
 
-    let mut o = opts(&d, 5, 3);
-    o.center = true;
-    let res = randomized_svd_file(&input, backend(), &o).unwrap();
+    let res = builder(&input, &d, 5, 3).center(true).run().unwrap();
 
     // Dense oracle: exact SVD of the centered matrix.
     let means: Vec<f64> = (0..a.cols())
@@ -430,7 +432,7 @@ fn pca_centering_matches_dense_centered_svd() {
     assert!(err < 1e-7, "centered reconstruction {err}");
 
     // Without centering the same k misses badly (offsets dominate).
-    let res_raw = randomized_svd_file(&input, backend(), &opts(&d.join("raw"), 5, 3)).unwrap();
+    let res_raw = builder(&input, &d.join("raw"), 5, 3).run().unwrap();
     assert!(
         (res_raw.sigma[0] - res.sigma[0]).abs() / res.sigma[0] > 1.0,
         "column offsets should dominate the uncentered spectrum"

@@ -2,7 +2,7 @@
 //! against oracles computed with `linalg` directly from the model files.
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
 use std::sync::Arc;
 use tallfat::backend::native::NativeBackend;
 use tallfat::config::InputFormat;
@@ -11,8 +11,11 @@ use tallfat::io::dataset::{gen_exact, Spectrum};
 use tallfat::io::{InputSpec, ShardSet};
 use tallfat::linalg::{matmul, Matrix};
 use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
-use tallfat::svd::{randomized_svd_file, SvdOptions};
+use tallfat::svd::Svd;
 use tallfat::util::Args;
+
+mod harness;
+use harness::free_addr;
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_serve_it").join(name);
@@ -123,15 +126,16 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     .unwrap();
     let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &spec).unwrap();
-    let opts = SvdOptions {
-        k: 6,
-        oversample: 6,
-        workers: 3,
-        block: 32,
-        work_dir: d.join("work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
-    let result = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+    let result = Svd::over(&spec)
+        .unwrap()
+        .rank(6)
+        .oversample(6)
+        .workers(3)
+        .block(32)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
     let model_dir = d.join("model");
     result.save_model(&model_dir, Some(0)).unwrap();
 
@@ -245,10 +249,7 @@ fn cli_svd_save_model_then_serve_roundtrip() {
     .unwrap();
     assert!(d.join("model").join("model.manifest").exists());
 
-    // Ephemeral port via probe bind (same pattern as the metrics server test).
-    let probe = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = probe.local_addr().unwrap().to_string();
-    drop(probe);
+    let addr = free_addr();
     let addr2 = addr.clone();
     let model2 = model.clone();
     let srv = std::thread::spawn(move || {
@@ -313,15 +314,16 @@ fn concurrent_http_clients_are_batched_and_correct() {
     .unwrap();
     let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
     tallfat::io::write_matrix(&a, &spec).unwrap();
-    let opts = SvdOptions {
-        k: 4,
-        oversample: 4,
-        workers: 2,
-        block: 32,
-        work_dir: d.join("work").to_string_lossy().into_owned(),
-        ..SvdOptions::default()
-    };
-    let result = randomized_svd_file(&spec, Arc::new(NativeBackend::new()), &opts).unwrap();
+    let result = Svd::over(&spec)
+        .unwrap()
+        .rank(4)
+        .oversample(4)
+        .workers(2)
+        .block(32)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
     let model_dir = d.join("model");
     result.save_model(&model_dir, None).unwrap();
     let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
