@@ -1,7 +1,9 @@
-//! End-to-end tour of the serving subsystem: factorize a clustered
-//! document matrix, persist it as a model directory, boot the HTTP query
-//! server, and drive it like a client — project, top-k similarity,
-//! reconstruction — cross-checking one query against an in-process oracle.
+//! End-to-end tour of the model lifecycle: factorize a clustered document
+//! matrix, persist it as a versioned model directory, boot the HTTP query
+//! server, drive it like a client — project, top-k similarity,
+//! reconstruction — then append a batch of new documents with the
+//! incremental updater and hot-swap the server to the new generation with
+//! zero downtime, cross-checking one query against an in-process oracle.
 //!
 //! ```sh
 //! cargo run --release --example serve_queries -- --rows 3000 --cols 256 --k 12
@@ -14,8 +16,9 @@ use tallfat::backend::native::NativeBackend;
 use tallfat::io::dataset::gen_clustered;
 use tallfat::io::InputSpec;
 use tallfat::linalg::matmul;
-use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::serve::{EngineHandle, Json, ModelServer, ServeOptions};
 use tallfat::svd::Svd;
+use tallfat::update::Update;
 use tallfat::util::Args;
 
 fn post_query(addr: &str, body: &str) -> String {
@@ -58,25 +61,26 @@ fn main() -> tallfat::Result<()> {
         .save_model(model_dir.to_string_lossy().into_owned())
         .run()?;
     println!("   factorized in {:.2?} ({} U shards)", t0.elapsed(), result.shards);
-    let model_bytes: u64 = std::fs::read_dir(&model_dir)?
+    let gen0_dir = tallfat::serve::resolve_current(&model_dir)?;
+    let model_bytes: u64 = std::fs::read_dir(&gen0_dir)?
         .filter_map(|e| e.ok()?.metadata().ok())
         .map(|md| md.len())
         .sum();
     println!(
-        "   model saved to {} ({})",
-        model_dir.display(),
+        "   generation 0 saved to {} ({})",
+        gen0_dir.display(),
         tallfat::util::humanize::fmt_bytes(model_bytes)
     );
 
     // ---- 3. boot the HTTP server on an ephemeral port --------------------
-    let store = Arc::new(ModelStore::open(&model_dir, 4)?);
-    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new()))?);
-    let oracle_engine = engine.clone();
+    let engines =
+        Arc::new(EngineHandle::open(&model_dir, 4, Arc::new(NativeBackend::new()))?);
+    let oracle_engine = engines.current();
     let server = ModelServer::bind(
-        engine,
+        engines,
         &ServeOptions {
             addr: "127.0.0.1:0".into(),
-            max_requests: Some(3),
+            max_requests: Some(5),
             ..ServeOptions::default()
         },
     )?;
@@ -116,7 +120,39 @@ fn main() -> tallfat::Result<()> {
     let scale: f64 = a.row(qdoc).iter().map(|v| v * v).sum::<f64>().sqrt();
     println!("\nreconstruct doc #{qdoc}: rank-{k} relative error {:.4}", err / scale.max(1e-12));
 
-    // ---- 5. metrics + oracle cross-check ---------------------------------
+    // ---- 5. append new documents, hot-swap without restarting ------------
+    let (extra, _) = gen_clustered(m / 10, n, clusters, 3.0, 4096);
+    let batch = InputSpec::csv(dir.join("new_docs.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&extra, &batch)?;
+    let t0 = std::time::Instant::now();
+    let next = Update::of(&model_dir)?
+        .rows(&batch)
+        .workers(4)
+        .seed(6)
+        .work_dir(dir.join("work_update").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()?;
+    println!(
+        "\n== appended {} new docs in {:.2?} -> generation {} ==",
+        next.rows_added,
+        t0.elapsed(),
+        next.generation
+    );
+    // The reload response itself carries the new generation; a *fresh*
+    // body then observes it everywhere (inline ops of the reload's own
+    // body would still answer from that body's pre-swap snapshot).
+    let swap = post_query(&addr, "{\"op\":\"reload\"}\n");
+    let swap_line = Json::parse(swap.trim()).unwrap();
+    let info = post_query(&addr, "{\"op\":\"info\"}\n");
+    let info_line = Json::parse(info.trim()).unwrap();
+    println!(
+        "hot-swap: swapped={} now serving generation {} with m={}",
+        swap_line.get("swapped").and_then(Json::as_bool).unwrap(),
+        info_line.get("generation").and_then(Json::as_usize).unwrap(),
+        info_line.get("m").and_then(Json::as_usize).unwrap(),
+    );
+
+    // ---- 6. metrics + oracle cross-check ---------------------------------
     let mut s = TcpStream::connect(&addr).unwrap();
     s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
     let mut metrics = String::new();

@@ -45,7 +45,7 @@ fn post_query(addr: &str, body: &str) -> String {
 
 fn ensure_model(dir: &std::path::Path) -> std::path::PathBuf {
     let model_dir = dir.join(format!("model_{M}x{N}_k{K}"));
-    if model_dir.join("model.manifest").exists() {
+    if tallfat::serve::resolve_current(&model_dir).is_ok() {
         eprintln!("[reuse] {}", model_dir.display());
         return model_dir;
     }
@@ -84,7 +84,7 @@ fn main() {
             Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
         let total = (CLIENTS * REQS_PER_CLIENT) as u64;
         let server = ModelServer::bind(
-            engine,
+            Arc::new(tallfat::serve::EngineHandle::fixed(engine)),
             &ServeOptions {
                 addr: "127.0.0.1:0".into(),
                 batch: BatchOptions {
@@ -92,6 +92,7 @@ fn main() {
                     max_batch: 64,
                 },
                 max_requests: Some(total),
+                ..ServeOptions::default()
             },
         )
         .unwrap();

@@ -1,0 +1,146 @@
+//! Incremental update vs. full refactorization — the perf trajectory of
+//! the model lifecycle.
+//!
+//! For a fixed base model (m0 x n, rank k) and several new-row fractions f,
+//! measure (a) `Update::of(model).rows(batch).run()` and (b) a from-scratch
+//! `Svd::over(A0 ‖ batch)` with a model save (the honest alternative: both
+//! paths end with a servable generation on disk). Prints the usual table
+//! and emits `BENCH_update.json` so the trajectory is machine-readable.
+
+mod common;
+
+use std::io::Write as _;
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::linalg::Matrix;
+use tallfat::svd::Svd;
+use tallfat::update::Update;
+
+const M0: usize = 6000;
+const N: usize = 48;
+const K: usize = 16;
+const FRACTIONS: &[f64] = &[0.05, 0.25, 0.5, 1.0];
+
+fn write_rows(a: &Matrix, r0: usize, r1: usize, path: &std::path::Path) -> InputSpec {
+    let spec = InputSpec::csv(path.to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a.slice_rows(r0, r1), &spec).unwrap();
+    spec
+}
+
+fn main() {
+    let dir = common::bench_dir("update");
+    let max_extra = (FRACTIONS.last().copied().unwrap() * M0 as f64) as usize;
+    let (a, _) = gen_exact(
+        M0 + max_extra,
+        N,
+        K,
+        Spectrum::Geometric { scale: 10.0, decay: 0.8 },
+        0.01,
+        2013,
+    )
+    .unwrap();
+
+    let base_spec = write_rows(&a, 0, M0, &dir.join("A0.csv"));
+    let model_dir = dir.join("model");
+    let _ = std::fs::remove_dir_all(&model_dir);
+    let build = |input: &InputSpec, model: &std::path::Path, work: &str| {
+        Svd::over(input)
+            .unwrap()
+            .rank(K)
+            .oversample(8)
+            .workers(4)
+            .block(256)
+            .seed(7)
+            .work_dir(work)
+            .backend(Arc::new(NativeBackend::new()))
+            .save_model(model.to_string_lossy().into_owned())
+            .run()
+            .unwrap()
+    };
+    let (_, base_time) = common::time_once(|| {
+        build(&base_spec, &model_dir, &dir.join("work_base").to_string_lossy())
+    });
+    common::header(&format!(
+        "incremental update vs full refactorization ({M0}x{N} base, k={K}, base build {:.2}s)",
+        base_time.as_secs_f64()
+    ));
+    println!(
+        "{:>10} {:>10} {:>12} {:>12} {:>9}",
+        "fraction", "new rows", "update(s)", "full(s)", "speedup"
+    );
+
+    let mut points = Vec::new();
+    for (i, &f) in FRACTIONS.iter().enumerate() {
+        let extra = (f * M0 as f64) as usize;
+        let batch = write_rows(&a, M0, M0 + extra, &dir.join(format!("batch_{i}.csv")));
+        let concat = write_rows(&a, 0, M0 + extra, &dir.join(format!("concat_{i}.csv")));
+
+        // Update the *base* model each time (fresh copy so every point
+        // appends to the same parent).
+        let upd_model = dir.join(format!("model_upd_{i}"));
+        let _ = std::fs::remove_dir_all(&upd_model);
+        copy_dir(&model_dir, &upd_model);
+        let work_u = dir.join(format!("work_upd_{i}")).to_string_lossy().into_owned();
+        let (res, t_update) = common::time_once(|| {
+            Update::of(&upd_model)
+                .unwrap()
+                .rows(&batch)
+                .oversample(8)
+                .workers(4)
+                .block(256)
+                .seed(9)
+                .work_dir(&work_u)
+                .backend(Arc::new(NativeBackend::new()))
+                .run()
+                .unwrap()
+        });
+        assert_eq!(res.m, M0 + extra);
+
+        let full_model = dir.join(format!("model_full_{i}"));
+        let _ = std::fs::remove_dir_all(&full_model);
+        let work_f = dir.join(format!("work_full_{i}")).to_string_lossy().into_owned();
+        let (_, t_full) = common::time_once(|| build(&concat, &full_model, &work_f));
+
+        let speedup = t_full.as_secs_f64() / t_update.as_secs_f64().max(1e-9);
+        println!(
+            "{:>10.2} {:>10} {:>12.4} {:>12.4} {:>8.2}x",
+            f,
+            extra,
+            t_update.as_secs_f64(),
+            t_full.as_secs_f64(),
+            speedup
+        );
+        points.push(format!(
+            "{{\"fraction\":{f},\"rows_added\":{extra},\"update_s\":{:.6},\"full_s\":{:.6},\"speedup\":{:.4}}}",
+            t_update.as_secs_f64(),
+            t_full.as_secs_f64(),
+            speedup
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"update\",\"m0\":{M0},\"n\":{N},\"k\":{K},\"base_build_s\":{:.6},\"points\":[{}]}}\n",
+        base_time.as_secs_f64(),
+        points.join(",")
+    );
+    let out = "BENCH_update.json";
+    let mut f = std::fs::File::create(out).unwrap();
+    f.write_all(json.as_bytes()).unwrap();
+    println!("\nwrote {out}");
+}
+
+/// Recursive copy (the bench clones the base model per data point).
+fn copy_dir(src: &std::path::Path, dst: &std::path::Path) {
+    std::fs::create_dir_all(dst).unwrap();
+    for entry in std::fs::read_dir(src).unwrap() {
+        let entry = entry.unwrap();
+        let to = dst.join(entry.file_name());
+        if entry.file_type().unwrap().is_dir() {
+            copy_dir(&entry.path(), &to);
+        } else {
+            std::fs::copy(entry.path(), &to).unwrap();
+        }
+    }
+}

@@ -1,7 +1,7 @@
 //! The worker process: connects to the leader, executes phase assignments
 //! over its chunk of the shared input file, ships partials back.
 //!
-//! A phase assignment is decoded into the same [`Pass`]/[`PassContext`]
+//! A phase assignment is decoded into the same [`crate::svd::Pass`]/[`PassContext`]
 //! pair the in-process [`crate::svd::LocalExecutor`] uses, then handed to
 //! [`crate::svd::execute_pass_chunk`] — the pass structure is defined once
 //! and this module only does transport.

@@ -148,6 +148,78 @@ fn write_outputs(prefix: &str, result: &svd::SvdResult) -> Result<()> {
     Ok(())
 }
 
+/// `update <model-dir> --rows PATH`: append a row batch to a saved model
+/// as the next generation — streaming passes over the batch only, a
+/// `(k+r)`-sized merge on the leader, then an atomic `CURRENT` repoint
+/// ([`crate::update`]). `--distributed` runs the passes on remote workers
+/// exactly like `svd --distributed`.
+pub fn update(args: &Args) -> Result<()> {
+    let model_dir = args
+        .opt_str("model-dir")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| {
+            Error::Config("update: model directory required (positional or --model-dir)".into())
+        })?;
+    let rows = args.require_str("rows")?;
+    let cfg = load_config(args)?;
+    let input = InputSpec::auto(rows.to_string());
+    let sw = Stopwatch::start();
+    let mut builder = crate::update::Update::of(&model_dir)?
+        .rows(&input)
+        .oversample(cfg.oversample)
+        .workers(cfg.workers)
+        .block(cfg.block)
+        .seed(cfg.seed)
+        .sigma_cutoff_rel(cfg.sigma_cutoff_rel)
+        .keep_generations(args.usize_or("keep-generations", 2)?)
+        .backend(make_backend(&cfg)?);
+    // Only an *explicit* --work-dir overrides the builder's unique
+    // per-invocation scratch directory — the shared config default would
+    // let two concurrent updates corrupt each other's shards.
+    if let Some(d) = args.opt_str("work-dir") {
+        builder = builder.work_dir(d);
+    }
+    if let Some(k) = args.opt_str("rank") {
+        let k = k
+            .parse::<usize>()
+            .map_err(|_| Error::Config(format!("update: bad --rank `{k}`")))?;
+        builder = builder.rank(k);
+    }
+    let result = if args.flag("distributed") {
+        let listen = args.str_or("listen", "127.0.0.1:7070");
+        let n = args.usize_or("remote-workers", cfg.workers)?;
+        let mut cluster = crate::cluster::ClusterExecutor::accept(&listen, n)?;
+        let res = builder.executor(&mut cluster).run();
+        // Surface the run error first: a shutdown-send failure to a dead
+        // worker must not mask why the run itself failed.
+        let shutdown = cluster.shutdown();
+        let out = res?;
+        shutdown?;
+        out
+    } else {
+        builder.run()?
+    };
+    println!("{}", result.report.render());
+    println!(
+        "generation {}: m={} n={} k={} (+{} rows)  sigma = [{}]",
+        result.generation,
+        result.m,
+        result.n,
+        result.k,
+        result.rows_added,
+        result
+            .sigma
+            .iter()
+            .take(8)
+            .map(|s| format!("{s:.4}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    LOG.info(&format!("update done in {:.2?} -> {}", sw.elapsed(), result.dir.display()));
+    Ok(())
+}
+
 /// `ata`: standalone streaming Gram (paper §3.1).
 pub fn ata(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;

@@ -15,6 +15,7 @@
 //! | `mr-ata` | the Map-Reduce baseline for the same Gram (paper Fig. 2) |
 //! | `simulate` | cluster cost simulation / scalability sweep ([`crate::simulator`]) |
 //! | `serve` | query a saved factor model over HTTP ([`crate::serve`]) |
+//! | `update` | append a row batch to a saved model as a new generation ([`crate::update`]) |
 //! | `serve-metrics` | tiny HTTP endpoint exposing the last run's metrics |
 //!
 //! Configuration precedence: built-in defaults < `--config file.toml` <
@@ -61,9 +62,17 @@ COMMANDS
                  --listen HOST:PORT --remote-workers N)
   serve         serve a saved model over HTTP  <model-dir> [--addr 127.0.0.1:9925]
                   [--backend native|xla|auto] [--cache-shards 4] [--batch-window-ms 2]
-                  [--max-batch 64] [--max-requests N] [--once]
+                  [--max-batch 64] [--reload-poll-ms 5000] [--max-requests N] [--once]
                 (answers line-delimited JSON on POST /query: project, similar,
-                 reconstruct, info; GET /model, /metrics, /healthz)
+                 reconstruct, info, reload; GET /model, /metrics, /healthz;
+                 --reload-poll-ms hot-swaps to new generations automatically)
+  update        append rows to a saved model   <model-dir> --rows PATH [--oversample P]
+                  [--workers W] [--block B] [--seed S] [--work-dir D] [--backend ...]
+                  [--keep-generations 2] [--rank K]
+                (streams only the new rows, merges with (k+r)-sized leader math,
+                 writes the next immutable generation, repoints CURRENT, and
+                 garbage-collects old generations; with --distributed the passes
+                 run on remote workers: --listen HOST:PORT --remote-workers N)
   serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
 
 GLOBAL
@@ -86,6 +95,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("simulate") => commands::simulate(args),
         Some("worker") => commands::worker(args),
         Some("serve") => crate::serve::http::serve(args),
+        Some("update") => commands::update(args),
         Some("serve-metrics") => server::serve_metrics(args),
         Some("help") | None => {
             print!("{USAGE}");

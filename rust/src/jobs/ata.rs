@@ -4,7 +4,7 @@
 //! * [`AtaRowJob`] — the paper-literal row-at-a-time outer-product sum
 //!   (`self.C += outer(vec, vec)`), kept for E5 and as an oracle.
 //! * [`AtaBlockJob`] — block-buffered, dispatching `X^T X` per block to a
-//!   [`Backend`] (native blocked-syrk or the XLA gram artifact).
+//!   [`crate::backend::Backend`] (native blocked-syrk or the XLA gram artifact).
 //!
 //! Both optionally spill their partial to a shard file at `post` time, like
 //! the paper's `/tmp/C-%d.csv` (the leader can also reduce in memory).

@@ -46,13 +46,19 @@
 //! path. A pure-rust [`backend::native`] implements the same `Backend`
 //! trait for arbitrary shapes and as a cross-check oracle.
 //!
-//! ## Serving
+//! ## Serving and the model lifecycle
 //!
 //! A factorization is not the end of the road: [`serve`] persists the
-//! factors as a model directory (U stays sharded on disk, LRU-cached) and
-//! answers project / top-k-cosine / reconstruct queries over HTTP with
-//! request micro-batching — `tallfat svd --save-model DIR` then
-//! `tallfat serve DIR`.
+//! factors as a *versioned* model directory (immutable generations under a
+//! `CURRENT` pointer; U stays sharded on disk, LRU-cached) and answers
+//! project / top-k-cosine / reconstruct queries over HTTP with request
+//! micro-batching — `tallfat svd --save-model DIR` then `tallfat serve DIR`.
+//!
+//! New rows never force a re-run over the full input: [`update`] streams
+//! just the batch through the same Executor passes, merges on the leader
+//! with `(k+r)`-sized math, and commits the next generation — which a
+//! running server hot-swaps to with zero downtime (`tallfat update DIR
+//! --rows NEW.csv`, then `{"op":"reload"}` or `--reload-poll-ms`).
 //!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the experiment harnesses (EXPERIMENTS.md maps each to the paper).
@@ -73,6 +79,7 @@ pub mod serve;
 pub mod simulator;
 pub mod splitproc;
 pub mod svd;
+pub mod update;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -14,7 +14,7 @@
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
-use crate::serve::query::{Hit, QueryEngine};
+use crate::serve::query::{EngineHandle, Hit, QueryEngine};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -109,12 +109,14 @@ pub struct Batcher {
 }
 
 impl Batcher {
-    /// Spawn the worker over `engine`.
-    pub fn start(engine: Arc<QueryEngine>, opts: BatchOptions) -> Result<Self> {
+    /// Spawn the worker over a (possibly hot-swappable) engine handle. The
+    /// engine is snapshotted once per coalesced batch, so a reload lands
+    /// between batches — never inside one.
+    pub fn start(engines: Arc<EngineHandle>, opts: BatchOptions) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Message>();
         let join = std::thread::Builder::new()
             .name("serve-batcher".into())
-            .spawn(move || worker_loop(engine, rx, opts))
+            .spawn(move || worker_loop(engines, rx, opts))
             .map_err(|e| Error::Other(format!("cannot spawn serve batcher: {e}")))?;
         Ok(Batcher {
             handle: BatcherHandle { tx: tx.clone() },
@@ -137,7 +139,7 @@ impl Drop for Batcher {
     }
 }
 
-fn worker_loop(engine: Arc<QueryEngine>, rx: mpsc::Receiver<Message>, opts: BatchOptions) {
+fn worker_loop(engines: Arc<EngineHandle>, rx: mpsc::Receiver<Message>, opts: BatchOptions) {
     loop {
         // Block for the first request of a batch.
         let first = match rx.recv() {
@@ -166,7 +168,7 @@ fn worker_loop(engine: Arc<QueryEngine>, rx: mpsc::Receiver<Message>, opts: Batc
         reg.set("serve_batch_size", jobs.len() as f64);
         reg.add("serve_batches", 1.0);
         reg.add("serve_batched_requests", jobs.len() as f64);
-        execute_batch(&engine, jobs);
+        execute_batch(&engines.current(), jobs);
         if shutdown {
             return;
         }
@@ -339,8 +341,11 @@ mod tests {
     fn batched_results_match_direct_engine_calls() {
         let (engine, a) = batcher_fixture("parity");
         let batcher =
-            Batcher::start(engine.clone(), BatchOptions { window: Duration::from_millis(5), max_batch: 16 })
-                .unwrap();
+            Batcher::start(
+                Arc::new(EngineHandle::fixed(engine.clone())),
+                BatchOptions { window: Duration::from_millis(5), max_batch: 16 },
+            )
+            .unwrap();
         let handle = batcher.handle();
         // Fire concurrent mixed requests so they actually coalesce.
         let results: Vec<(usize, Response)> = std::thread::scope(|scope| {
@@ -385,7 +390,9 @@ mod tests {
     #[test]
     fn invalid_rows_fail_individually_without_poisoning_batch() {
         let (engine, a) = batcher_fixture("mixed_errors");
-        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let batcher =
+            Batcher::start(Arc::new(EngineHandle::fixed(engine.clone())), BatchOptions::default())
+                .unwrap();
         let handle = batcher.handle();
         assert!(handle.call(Request::Project { row: vec![1.0, 2.0] }).is_err());
         let ok = handle.call(Request::Project { row: a.row(0).to_vec() });
@@ -398,7 +405,9 @@ mod tests {
     #[test]
     fn call_many_replies_in_request_order() {
         let (engine, a) = batcher_fixture("many");
-        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let batcher =
+            Batcher::start(Arc::new(EngineHandle::fixed(engine.clone())), BatchOptions::default())
+                .unwrap();
         let reqs = vec![
             Request::Project { row: a.row(0).to_vec() },
             Request::Similar { row: a.row(10).to_vec(), topk: 2 },
@@ -414,7 +423,9 @@ mod tests {
     #[test]
     fn latent_queries_round_trip() {
         let (engine, a) = batcher_fixture("latent");
-        let batcher = Batcher::start(engine.clone(), BatchOptions::default()).unwrap();
+        let batcher =
+            Batcher::start(Arc::new(EngineHandle::fixed(engine.clone())), BatchOptions::default())
+                .unwrap();
         let latent = engine.project_one(a.row(30)).unwrap();
         match batcher.handle().call(Request::SimilarLatent { latent, topk: 3 }).unwrap() {
             Response::Hits(hits) => {

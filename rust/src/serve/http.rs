@@ -21,23 +21,31 @@
 //! {"op":"similar","row":[...],"k":10}      -> {"ok":true,"hits":[{"row":i,"score":s},...]}
 //! {"op":"similar","latent":[...],"k":10}   -> same, skipping the projection
 //! {"op":"reconstruct","row_id":7}          -> {"ok":true,"values":[...]}
-//! {"op":"info"}                            -> {"ok":true,"m":...,"n":...,"k":...}
+//! {"op":"info"}                            -> {"ok":true,"m":...,"k":...,"generation":...}
+//! {"op":"reload"}                          -> {"ok":true,"generation":...,"swapped":...}
 //! ```
 //!
+//! The model is held through an [`EngineHandle`], so a `reload` line (or
+//! the `--reload-poll-ms` background poll, on by default) hot-swaps to the
+//! root's live generation with zero downtime. Inline ops of a body answer
+//! from the generation the body started on, and every coalesced batch runs
+//! against a single generation — no operation is ever torn across a swap.
+//!
 //! Gauges published per request: `serve_requests_total`, `serve_qps`,
-//! `serve_latency_ms` (EWMA), plus the batcher's `serve_batch_size`.
+//! `serve_latency_ms` (EWMA), plus the batcher's `serve_batch_size` and
+//! the swap counter `serve_reloads`.
 
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::serve::batcher::{BatchOptions, Batcher, BatcherHandle, Request, Response};
 use crate::serve::json::Json;
-use crate::serve::query::{Hit, QueryEngine};
+use crate::serve::query::{EngineHandle, Hit, QueryEngine};
 use crate::serve::store::ModelStore;
 use crate::util::{Args, Logger};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 static LOG: Logger = Logger::new("serve.http");
@@ -53,6 +61,12 @@ pub struct ServeOptions {
     pub batch: BatchOptions,
     /// Serve this many connections, then exit (None = forever). `--once` is 1.
     pub max_requests: Option<u64>,
+    /// Poll the model root's `CURRENT` pointer at this interval and
+    /// hot-swap when it advances (None = reload only on `{"op":"reload"}`).
+    /// Defaults to 5s: a server that never advances would keep reading
+    /// generation directories that `tallfat update`'s garbage collection
+    /// is entitled to delete once `keep_generations` newer ones exist.
+    pub reload_poll: Option<Duration>,
 }
 
 impl Default for ServeOptions {
@@ -61,12 +75,13 @@ impl Default for ServeOptions {
             addr: "127.0.0.1:9925".into(),
             batch: BatchOptions::default(),
             max_requests: None,
+            reload_poll: Some(Duration::from_secs(5)),
         }
     }
 }
 
 struct ServerState {
-    engine: Arc<QueryEngine>,
+    engines: Arc<EngineHandle>,
     handle: BatcherHandle,
     started: Instant,
     queries: AtomicU64,
@@ -83,11 +98,14 @@ pub struct ModelServer {
 }
 
 impl ModelServer {
-    pub fn bind(engine: Arc<QueryEngine>, opts: &ServeOptions) -> Result<Self> {
-        let batcher = Batcher::start(engine.clone(), opts.batch)?;
+    pub fn bind(engines: Arc<EngineHandle>, opts: &ServeOptions) -> Result<Self> {
+        let batcher = Batcher::start(engines.clone(), opts.batch)?;
         let listener = TcpListener::bind(&opts.addr)?;
+        if let Some(every) = opts.reload_poll.filter(|_| engines.is_reloadable()) {
+            spawn_reload_poller(Arc::downgrade(&engines), every);
+        }
         let state = Arc::new(ServerState {
-            engine,
+            engines,
             handle: batcher.handle(),
             started: Instant::now(),
             queries: AtomicU64::new(0),
@@ -134,6 +152,25 @@ impl ModelServer {
     }
 }
 
+/// Background `CURRENT` poller: holds only a weak handle, so it dies with
+/// the server instead of pinning the model in memory forever.
+fn spawn_reload_poller(engines: Weak<EngineHandle>, every: Duration) {
+    std::thread::Builder::new()
+        .name("serve-reload-poll".into())
+        .spawn(move || loop {
+            std::thread::sleep(every);
+            match engines.upgrade() {
+                Some(h) => {
+                    if let Err(e) = h.reload() {
+                        LOG.warn(&format!("reload poll failed: {e}"));
+                    }
+                }
+                None => return,
+            }
+        })
+        .ok();
+}
+
 fn respond(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> std::io::Result<()> {
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
@@ -170,7 +207,7 @@ fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
             respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &MetricsRegistry::global().render())
         }
         ("GET", "/model") => {
-            let body = model_info(&state.engine).render();
+            let body = model_info(state.engines.current().as_ref()).render();
             respond(&mut stream, "200 OK", "application/json", &body)
         }
         ("POST", "/query") => {
@@ -201,6 +238,7 @@ fn model_info(engine: &QueryEngine) -> Json {
         ("k", Json::num(store.k() as f64)),
         ("shards", Json::num(store.shards() as f64)),
         ("centered", Json::Bool(store.centered())),
+        ("generation", Json::num(store.generation() as f64)),
     ];
     if let Some(seed) = store.seed() {
         pairs.push(("seed", Json::num(seed as f64)));
@@ -241,6 +279,12 @@ enum Planned {
 /// `ok` field, in input order. Updates the serve metrics.
 fn process_body(state: &ServerState, text: &str) -> String {
     let t0 = Instant::now();
+    // One engine snapshot per body for the *inline* ops (reconstruct,
+    // info): they answer from the generation the body started on even if a
+    // reload lands mid-body. Batcher-bound lines instead share the batch's
+    // own snapshot — so a reload line in the same body affects them, but
+    // never tears a single operation across generations.
+    let engine = state.engines.current();
     let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
     let mut outputs: Vec<Option<Json>> = vec![None; lines.len()];
     let mut planned: Vec<(usize, Expect)> = Vec::new();
@@ -248,7 +292,7 @@ fn process_body(state: &ServerState, text: &str) -> String {
     for (i, line) in lines.iter().enumerate() {
         match Json::parse(line) {
             Err(e) => outputs[i] = Some(error_json(e)),
-            Ok(req) => match plan_query(state, &req) {
+            Ok(req) => match plan_query(state, engine.as_ref(), &req) {
                 Planned::Done(json) => outputs[i] = Some(json),
                 Planned::Batch(r, expect) => {
                     planned.push((i, expect));
@@ -283,7 +327,7 @@ fn process_body(state: &ServerState, text: &str) -> String {
     out
 }
 
-fn plan_query(state: &ServerState, req: &Json) -> Planned {
+fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned {
     let op = match req.get("op").and_then(Json::as_str) {
         Some(op) => op,
         None => return Planned::Done(error_json("missing `op`")),
@@ -308,7 +352,7 @@ fn plan_query(state: &ServerState, req: &Json) -> Planned {
                 Some(r) => r,
                 None => return Planned::Done(error_json("reconstruct: missing integer `row_id`")),
             };
-            Planned::Done(match state.engine.reconstruct_row(row_id) {
+            Planned::Done(match engine.reconstruct_row(row_id) {
                 Ok(values) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("values", Json::from_f64s(&values)),
@@ -316,7 +360,15 @@ fn plan_query(state: &ServerState, req: &Json) -> Planned {
                 Err(e) => error_json(e),
             })
         }
-        "info" => Planned::Done(model_info(&state.engine)),
+        "info" => Planned::Done(model_info(engine)),
+        "reload" => Planned::Done(match state.engines.reload() {
+            Ok(swapped) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("generation", Json::num(state.engines.generation() as f64)),
+                ("swapped", Json::Bool(swapped.is_some())),
+            ]),
+            Err(e) => error_json(e),
+        }),
         other => Planned::Done(error_json(format!("unknown op `{other}`"))),
     }
 }
@@ -339,7 +391,8 @@ fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
 ///
 /// `--addr HOST:PORT` (default 127.0.0.1:9925, port 0 = ephemeral),
 /// `--backend native|xla|auto`, `--cache-shards N`, `--batch-window-ms MS`,
-/// `--max-batch N`, `--max-requests N` / `--once` (tests).
+/// `--max-batch N`, `--reload-poll-ms MS` (default 5000; 0 = only
+/// `{"op":"reload"}`), `--max-requests N` / `--once` (tests).
 pub fn serve(args: &Args) -> Result<()> {
     let dir = args
         .opt_str("model-dir")
@@ -349,10 +402,9 @@ pub fn serve(args: &Args) -> Result<()> {
             Error::Config("serve: model directory required (positional or --model-dir)".into())
         })?;
     let cache_shards = args.usize_or("cache-shards", ModelStore::DEFAULT_CACHE_SHARDS)?;
-    let store = Arc::new(ModelStore::open(&dir, cache_shards)?);
     let cfg = crate::coordinator::commands::load_config(args)?;
     let backend = crate::backend::make_backend(&cfg)?;
-    let engine = Arc::new(QueryEngine::new(store, backend)?);
+    let engines = Arc::new(EngineHandle::open(&dir, cache_shards, backend)?);
     let max_requests = match args.u64_or("max-requests", 0)? {
         0 if args.flag("once") => Some(1),
         0 => None,
@@ -365,17 +417,25 @@ pub fn serve(args: &Args) -> Result<()> {
             max_batch: args.usize_or("max-batch", 64)?,
         },
         max_requests,
+        reload_poll: match args.u64_or("reload-poll-ms", 5000)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
     };
-    let store = engine.store();
-    LOG.info(&format!(
-        "model {}: {}x{} k={} ({} shards, cache {cache_shards})",
-        dir,
-        store.m(),
-        store.n(),
-        store.k(),
-        store.shards()
-    ));
-    let server = ModelServer::bind(engine.clone(), &opts)?;
+    {
+        let engine = engines.current();
+        let store = engine.store();
+        LOG.info(&format!(
+            "model {} generation {}: {}x{} k={} ({} shards, cache {cache_shards})",
+            dir,
+            store.generation(),
+            store.m(),
+            store.n(),
+            store.k(),
+            store.shards()
+        ));
+    }
+    let server = ModelServer::bind(engines, &opts)?;
     LOG.info(&format!("serving queries on http://{}/query", server.local_addr()?));
     server.run()
 }

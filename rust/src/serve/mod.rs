@@ -6,24 +6,30 @@
 //! reconstruction. This layer turns a completed factorization into a
 //! long-lived, queryable model:
 //!
-//! * [`store`] — persisted model directories: small factors (σ, V, means)
-//!   in memory, `U` sharded on disk behind an LRU cache, and a precomputed
-//!   row-norm sidecar so cosine scans never rescan U (`save_model` /
-//!   [`store::ModelStore`]).
+//! * [`store`] — persisted, *versioned* model roots: immutable generation
+//!   directories behind an atomically-renamed `CURRENT` pointer, small
+//!   factors (σ, V, means) in memory, `U` sharded on disk behind an LRU
+//!   cache, and a precomputed row-norm sidecar so cosine scans never
+//!   rescan U (`save_model` / [`store::ModelStore`] / [`store::gc_generations`]).
 //! * [`query`] — project / top-k cosine similarity / reconstruct, all
 //!   through the [`crate::backend::Backend`] trait so native and XLA both
-//!   serve ([`query::QueryEngine`]).
+//!   serve ([`query::QueryEngine`]); plus [`query::EngineHandle`], the
+//!   atomically swappable engine that hot-swaps to a newly updated
+//!   generation with zero downtime.
 //! * [`batcher`] — channel-RPC micro-batching: concurrent requests
-//!   coalesce into single backend matmuls ([`batcher::Batcher`]).
+//!   coalesce into single backend matmuls ([`batcher::Batcher`]); the
+//!   engine is snapshotted per batch, so reloads land between batches.
 //! * [`http`] — the `tallfat serve <model-dir>` front end: line-delimited
 //!   JSON queries over dependency-free HTTP, publishing QPS/latency/batch
-//!   gauges into the shared `MetricsRegistry` ([`http::ModelServer`]).
+//!   gauges into the shared `MetricsRegistry` ([`http::ModelServer`]), with
+//!   `{"op":"reload"}` / `--reload-poll-ms` triggering the hot swap.
 //! * [`json`] — the minimal JSON parser/serializer backing the protocol.
 //!
 //! ```text
 //! tallfat svd --input A.csv --k 16 --save-model /models/m1
 //! tallfat serve /models/m1 --addr 0.0.0.0:9925
 //! echo '{"op":"similar","row":[...],"k":5}' | curl -s --data-binary @- localhost:9925/query
+//! tallfat update /models/m1 --rows new_rows.csv     # then {"op":"reload"}
 //! ```
 
 pub mod batcher;
@@ -35,5 +41,8 @@ pub mod store;
 pub use batcher::{BatchOptions, Batcher, BatcherHandle, Request, Response};
 pub use http::{serve, ModelServer, ServeOptions};
 pub use json::Json;
-pub use query::{Hit, QueryEngine};
-pub use store::{save_model, ModelStore};
+pub use query::{EngineHandle, Hit, QueryEngine};
+pub use store::{
+    gc_generations, generation_dir_name, list_generations, next_generation, publish_generation,
+    resolve_current, save_model, ModelStore,
+};

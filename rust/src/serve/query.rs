@@ -1,6 +1,6 @@
-//! Latent-space queries over a loaded model.
+//! Latent-space queries over a loaded model, and the hot-swap handle.
 //!
-//! Three operations, all dispatched through the [`Backend`] trait so the
+//! Three operations, all dispatched through the [`crate::backend::Backend`] trait so the
 //! native and XLA backends both serve:
 //!
 //! * **project** — fold an unseen row into latent space: `q = (x - μ) V Σ⁻¹`
@@ -10,14 +10,26 @@
 //!   bounded min-heap. Row norms come from the precomputed sidecar, and all
 //!   queries of a batch share one matmul per shard.
 //! * **reconstruct** — `â_i = (u_i ∘ σ) Vᵀ + μ`, the rank-k row estimate.
+//!
+//! A [`QueryEngine`] is immutable over one model generation; the serving
+//! layer holds it through an [`EngineHandle`] — an atomically swappable
+//! `Arc` that [`EngineHandle::reload`] repoints at the model root's live
+//! generation, so an incremental update ([`crate::update`]) lands with zero
+//! downtime while in-flight batches finish against the generation they
+//! started on.
 
 use crate::backend::BackendRef;
+use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
-use crate::serve::store::ModelStore;
+use crate::serve::store::{resolve_current, ModelStore};
+use crate::util::Logger;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, RwLock};
+
+static LOG: Logger = Logger::new("serve.query");
 
 /// One similarity result: a model row and its cosine score.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -83,7 +95,7 @@ impl TopK {
     }
 }
 
-/// Query engine over a [`ModelStore`] and a block [`Backend`].
+/// Query engine over a [`ModelStore`] and a block [`crate::backend::Backend`].
 pub struct QueryEngine {
     store: Arc<ModelStore>,
     backend: BackendRef,
@@ -161,7 +173,7 @@ impl QueryEngine {
         // Queries as columns: scores_shard = E_shard (rows x k) · Qᵀ (k x q).
         let qt = latent.t();
         let mut heaps: Vec<TopK> = topks.iter().map(|&t| TopK::new(t)).collect();
-        let norms = self.store.norms();
+        let norms = self.store.norms()?;
         for s in 0..self.store.shards() {
             let base = self.store.shard_base(s);
             // Embedding rows e_i = u_i ∘ σ, scaled once per cache residency.
@@ -220,6 +232,101 @@ impl QueryEngine {
     }
 }
 
+/// How a reloadable [`EngineHandle`] rebuilds its engine.
+struct ReloadSpec {
+    root: PathBuf,
+    backend: BackendRef,
+    cache_shards: usize,
+}
+
+/// An atomically swappable [`QueryEngine`] — the zero-downtime seam of the
+/// serve layer.
+///
+/// Callers snapshot the engine once per unit of work
+/// ([`EngineHandle::current`] clones an `Arc` under a read lock) and keep
+/// using that snapshot even if a reload swaps the handle mid-flight; the
+/// old generation's store stays alive until its last batch drops it.
+/// [`EngineHandle::reload`] re-resolves the model root's `CURRENT` pointer
+/// and swaps only when it names a different generation directory, bumping
+/// the `serve_reloads` gauge.
+pub struct EngineHandle {
+    engine: RwLock<Arc<QueryEngine>>,
+    reload: Option<ReloadSpec>,
+    /// Serializes whole reloads (resolve → open → swap) so a slow reload
+    /// that resolved an older generation can never overwrite the engine a
+    /// concurrent reload installed from a newer one. Readers never touch
+    /// this lock.
+    reload_lock: Mutex<()>,
+}
+
+impl EngineHandle {
+    /// A handle pinned to one engine forever — for embedders and tests
+    /// that do not own a reloadable model root. [`EngineHandle::reload`]
+    /// is a no-op.
+    pub fn fixed(engine: Arc<QueryEngine>) -> Self {
+        EngineHandle { engine: RwLock::new(engine), reload: None, reload_lock: Mutex::new(()) }
+    }
+
+    /// Open the live generation of the model at `root` and remember how to
+    /// reload it.
+    pub fn open(
+        root: impl Into<PathBuf>,
+        cache_shards: usize,
+        backend: BackendRef,
+    ) -> Result<Self> {
+        let root = root.into();
+        let store = Arc::new(ModelStore::open(&root, cache_shards)?);
+        let engine = Arc::new(QueryEngine::new(store, backend.clone())?);
+        Ok(EngineHandle {
+            engine: RwLock::new(engine),
+            reload: Some(ReloadSpec { root, backend, cache_shards }),
+            reload_lock: Mutex::new(()),
+        })
+    }
+
+    /// Snapshot the live engine. The snapshot stays valid across swaps.
+    pub fn current(&self) -> Arc<QueryEngine> {
+        self.engine.read().unwrap().clone()
+    }
+
+    /// Whether this handle was opened from a model root (i.e. `reload` can
+    /// ever do anything).
+    pub fn is_reloadable(&self) -> bool {
+        self.reload.is_some()
+    }
+
+    /// Generation number currently being served.
+    pub fn generation(&self) -> u64 {
+        self.current().store().generation()
+    }
+
+    /// Re-resolve the model root's live generation and swap to it if it
+    /// changed. Returns `Some(generation)` when a swap happened, `None`
+    /// when already current (or the handle is fixed).
+    pub fn reload(&self) -> Result<Option<u64>> {
+        let Some(spec) = &self.reload else { return Ok(None) };
+        // One reload at a time: poll thread and `{"op":"reload"}` lines can
+        // race, and the loser of an unserialized race could install the
+        // older generation. The engine RwLock is only held for the final
+        // pointer swap, so queries keep flowing during the (slow) open.
+        let _serialize = self.reload_lock.lock().unwrap();
+        let live_dir = resolve_current(&spec.root)?;
+        if live_dir.as_path() == self.current().store().dir() {
+            return Ok(None);
+        }
+        let store = Arc::new(ModelStore::open(&spec.root, spec.cache_shards)?);
+        let engine = Arc::new(QueryEngine::new(store, spec.backend.clone())?);
+        let generation = engine.store().generation();
+        *self.engine.write().unwrap() = engine;
+        MetricsRegistry::global().add("serve_reloads", 1.0);
+        LOG.info(&format!(
+            "hot-swapped to generation {generation} ({})",
+            live_dir.display()
+        ));
+        Ok(Some(generation))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,7 +377,7 @@ mod tests {
             .map(|row| {
                 let e = store.embedding_row(row).unwrap();
                 let dot: f64 = e.iter().zip(latent.iter()).map(|(a, b)| a * b).sum();
-                let denom = store.norms()[row] * qnorm;
+                let denom = store.norms().unwrap()[row] * qnorm;
                 Scored { score: if denom > 0.0 { dot / denom } else { 0.0 }, row }
             })
             .collect();
@@ -361,5 +468,64 @@ mod tests {
         assert!(engine.project_one(&[1.0, 2.0]).is_err());
         assert!(engine.similar_latent(&[1.0], 3).is_err());
         assert!(engine.reconstruct_row(100_000).is_err());
+    }
+
+    #[test]
+    fn fixed_handle_never_swaps() {
+        let (engine, _) = engine_fixture("fixed_handle", false);
+        let engine = Arc::new(engine);
+        let handle = EngineHandle::fixed(engine.clone());
+        assert!(Arc::ptr_eq(&handle.current(), &engine));
+        assert_eq!(handle.reload().unwrap(), None);
+        assert!(Arc::ptr_eq(&handle.current(), &engine));
+    }
+
+    #[test]
+    fn reloadable_handle_swaps_to_new_generation() {
+        use crate::serve::store::publish_generation;
+        let dir = std::env::temp_dir().join("tallfat_test_query").join("reload");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            90,
+            10,
+            4,
+            Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+            0.0,
+            31,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let result = Svd::over(&spec)
+            .unwrap()
+            .rank(4)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .backend(Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap();
+        let model = dir.join("model");
+        save_model(&result, &model, Some(1)).unwrap();
+
+        let handle =
+            EngineHandle::open(&model, 2, Arc::new(NativeBackend::new())).unwrap();
+        assert_eq!(handle.generation(), 0);
+        let snapshot = handle.current();
+        // Reload with nothing new: no swap.
+        assert_eq!(handle.reload().unwrap(), None);
+
+        // A second save appends generation 1; reload must swap, while the
+        // old snapshot keeps answering against generation 0.
+        save_model(&result, &model, Some(2)).unwrap();
+        assert_eq!(handle.reload().unwrap(), Some(1));
+        assert_eq!(handle.generation(), 1);
+        assert_eq!(snapshot.store().generation(), 0);
+        assert!(snapshot.project_one(a.row(0)).is_ok());
+
+        // Rolling back CURRENT swaps back too (the pointer is the truth).
+        publish_generation(&model, 0).unwrap();
+        assert_eq!(handle.reload().unwrap(), Some(0));
     }
 }

@@ -1,32 +1,44 @@
-//! Persisted SVD model directories and lazy loading.
+//! Persisted SVD model directories: versioned generations and lazy loading.
 //!
 //! [`save_model`] turns a completed [`SvdResult`] into a self-contained
-//! directory; [`ModelStore::open`] loads it back for serving. The small
+//! *generation* directory under a model root; [`ModelStore::open`] resolves
+//! the root's live generation and loads it back for serving. The small
 //! factors (σ, V, means, the row-norm sidecar) live in memory; `U` is
 //! `m x k` and stays sharded on disk (Demchik-style out-of-core layout),
 //! pulled through an LRU shard cache on demand.
 //!
-//! Directory layout (all matrices in the `io::binmat` format):
+//! Root layout (all matrices in the `io::binmat` format):
 //!
 //! ```text
-//! <dir>/model.manifest   key=value: version m n k shards shard_rows centered [seed]
-//! <dir>/sigma.csv        descending singular values, one per line
-//! <dir>/V.bin            right singular vectors, n x k
-//! <dir>/means.bin        column means, 1 x n (PCA mode only)
-//! <dir>/U-<i>.bin        U shards, row order preserved
-//! <dir>/norms.bin        m x 1 sidecar: ||u_i ∘ σ||₂ per row, precomputed
-//!                        at save time so cosine queries never rescan U
+//! <root>/CURRENT             one line naming the live generation (gen-000001)
+//! <root>/gen-000000/         an immutable generation:
+//!   model.manifest           key=value: version m n k shards shard_rows
+//!                            centered generation [seed] [updated_from]
+//!   sigma.csv                descending singular values, one per line
+//!   V.bin                    right singular vectors, n x k
+//!   means.bin                column means, 1 x n (PCA mode only)
+//!   U-<i>.bin                U shards, row order preserved
+//!   norms.bin                m x 1 sidecar: ||u_i ∘ σ||₂ per row, precomputed
+//!                            at save time so cosine queries never rescan U
+//! <root>/gen-000001/         the next generation (e.g. from `tallfat update`)
 //! ```
 //!
-//! The manifest is written last, so a directory with a readable manifest is
-//! a complete model.
+//! Within a generation the manifest is written last, so a generation with a
+//! readable manifest is complete; the root's `CURRENT` pointer is replaced
+//! atomically (write + rename), so readers always resolve to a complete
+//! generation. Old generations are garbage-collected by
+//! [`gc_generations`] — the update path keeps the newest few so in-flight
+//! readers of the previous generation finish cleanly.
+//!
+//! Pre-generation model directories (a flat `model.manifest` at the root,
+//! no `CURRENT`) still open as generation 0.
 
 use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::io::manifest::KvManifest;
-use crate::io::writer::ShardSet;
+use crate::io::writer::{ShardReader, ShardSet};
 use crate::linalg::Matrix;
-use crate::coordinator::server::MetricsRegistry;
 use crate::svd::SvdResult;
 use crate::util::Logger;
 use std::collections::{HashMap, VecDeque};
@@ -38,14 +50,183 @@ static LOG: Logger = Logger::new("serve.store");
 /// Current model directory format version.
 pub const MODEL_VERSION: usize = 1;
 
-/// Persist a finished factorization as a servable model directory.
+/// Name of the root-level pointer file selecting the live generation.
+pub const CURRENT_FILE: &str = "CURRENT";
+
+/// Directory name of generation `g` (`gen-000042`).
+pub fn generation_dir_name(generation: u64) -> String {
+    format!("gen-{generation:06}")
+}
+
+/// Parse a `gen-NNNNNN` directory name back to its number.
+fn parse_generation_name(name: &str) -> Option<u64> {
+    name.strip_prefix("gen-")?.parse().ok()
+}
+
+/// List the generation directories under a model root, ascending by number.
+pub fn list_generations(root: impl AsRef<Path>) -> Result<Vec<(u64, PathBuf)>> {
+    let root = root.as_ref();
+    let mut out = Vec::new();
+    let entries = match std::fs::read_dir(root) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(e.into()),
+    };
+    for entry in entries {
+        let entry = entry?;
+        if !entry.file_type()?.is_dir() {
+            continue;
+        }
+        if let Some(g) = parse_generation_name(&entry.file_name().to_string_lossy()) {
+            out.push((g, entry.path()));
+        }
+    }
+    out.sort_by_key(|(g, _)| *g);
+    Ok(out)
+}
+
+/// Resolve a model root to the directory of its live generation: follow
+/// `CURRENT` when present, fall back to the root itself for pre-generation
+/// flat layouts (a `model.manifest` directly at the root).
+pub fn resolve_current(root: impl AsRef<Path>) -> Result<PathBuf> {
+    let root = root.as_ref();
+    match std::fs::read_to_string(root.join(CURRENT_FILE)) {
+        Ok(text) => {
+            let name = text.trim();
+            if parse_generation_name(name).is_none() {
+                return Err(Error::parse(format!(
+                    "model {}: CURRENT names `{name}`, expected gen-NNNNNN",
+                    root.display()
+                )));
+            }
+            Ok(root.join(name))
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            if root.join("model.manifest").exists() {
+                Ok(root.to_path_buf())
+            } else {
+                Err(Error::Other(format!(
+                    "model {}: no CURRENT pointer and no model.manifest (not a model directory)",
+                    root.display()
+                )))
+            }
+        }
+        Err(e) => Err(Error::Other(format!(
+            "model {}: cannot read CURRENT: {e}",
+            root.display()
+        ))),
+    }
+}
+
+/// The number the next generation written under `root` should get: one
+/// past the newest directory on disk *and* past `parent` — never reusing
+/// an existing generation directory (generations are immutable; a reader
+/// may hold one open even after `CURRENT` was rolled back past it).
+pub fn next_generation(root: impl AsRef<Path>, parent: u64) -> Result<u64> {
+    let newest = list_generations(root)?.last().map(|(g, _)| *g);
+    Ok(newest.map_or(parent + 1, |g| g.max(parent) + 1))
+}
+
+/// Atomically point the root's `CURRENT` at `generation` (write + rename, so
+/// concurrent readers see either the old or the new pointer, never a torn
+/// one; the scratch name carries pid + a process-wide sequence so no two
+/// publishers — across or within a process — share a staging file).
+pub fn publish_generation(root: impl AsRef<Path>, generation: u64) -> Result<()> {
+    let root = root.as_ref();
+    static PUBLISH_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = PUBLISH_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = root.join(format!(".CURRENT.{}.{seq}.tmp", std::process::id()));
+    std::fs::write(&tmp, format!("{}\n", generation_dir_name(generation)))?;
+    std::fs::rename(&tmp, root.join(CURRENT_FILE))?;
+    Ok(())
+}
+
+/// Claim a fresh generation directory for writing. Generations are
+/// immutable and always get unused numbers ([`next_generation`]), so an
+/// already-existing directory means another writer raced this one to the
+/// same number — refuse instead of interleaving two writers' files into
+/// one "committed" generation. (A crashed half-written directory is not
+/// reclaimed either: it has no manifest, is skipped by numbering, and is
+/// eventually garbage-collected.)
+pub(crate) fn begin_generation(gen_dir: &Path) -> Result<()> {
+    match std::fs::create_dir(gen_dir) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Err(Error::Config(format!(
+            "generation dir {} already exists — another writer racing this one? retry",
+            gen_dir.display()
+        ))),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// Delete all but the newest `keep` generations (min 1). The generation
+/// `CURRENT` points at is never removed regardless of age. Returns how many
+/// generation directories were deleted.
 ///
-/// Streams the `U` shards into the directory (recomputing nothing), writes
-/// the row-norm sidecar for cosine queries along the way, and commits by
-/// writing `model.manifest` last. Requires `V` (serving projects through
-/// it); pass the run's seed for provenance if known.
+/// GC cannot see live readers — `keep` must cover the slowest reader's
+/// lag. Servers poll `CURRENT` every 5s by default (see
+/// [`crate::serve::ServeOptions`]), so the default `keep = 2` means a
+/// reader would have to sleep through two full updates to lose its files.
+pub fn gc_generations(root: impl AsRef<Path>, keep: usize) -> Result<usize> {
+    let root = root.as_ref();
+    let keep = keep.max(1);
+    let gens = list_generations(root)?;
+    if gens.len() <= keep {
+        return Ok(0);
+    }
+    let live = resolve_current(root).ok();
+    let mut removed = 0usize;
+    for (_, dir) in &gens[..gens.len() - keep] {
+        if live.as_deref() == Some(dir.as_path()) {
+            continue;
+        }
+        std::fs::remove_dir_all(dir)?;
+        removed += 1;
+    }
+    if removed > 0 {
+        LOG.info(&format!("gc: removed {removed} old generation(s) under {}", root.display()));
+    }
+    Ok(removed)
+}
+
+/// Persist a finished factorization as a servable model root.
+///
+/// Writes a fresh, immutable generation directory (numbered after the
+/// newest one already present, so re-saving never mutates a generation a
+/// reader may hold open) and atomically repoints `CURRENT` at it. Requires
+/// `V` (serving projects through it); pass the run's seed for provenance if
+/// known.
 pub fn save_model(result: &SvdResult, dir: impl AsRef<Path>, seed: Option<u64>) -> Result<()> {
-    let dir = dir.as_ref();
+    let root = dir.as_ref();
+    std::fs::create_dir_all(root)?;
+    let generation = match list_generations(root)?.last() {
+        Some((g, _)) => g + 1,
+        None => 0,
+    };
+    let gen_dir = root.join(generation_dir_name(generation));
+    write_model_files(result, &gen_dir, seed, generation, None)?;
+    publish_generation(root, generation)?;
+    LOG.info(&format!(
+        "saved model {}x{} k={} ({} shards) to {} (generation {generation})",
+        result.m,
+        result.n,
+        result.k,
+        result.shards,
+        root.display()
+    ));
+    Ok(())
+}
+
+/// Write the files of one generation directory. The manifest goes last —
+/// its presence marks the generation complete. `updated_from` records the
+/// parent generation for incrementally-updated models.
+pub(crate) fn write_model_files(
+    result: &SvdResult,
+    gen_dir: &Path,
+    seed: Option<u64>,
+    generation: u64,
+    updated_from: Option<u64>,
+) -> Result<()> {
     let v = result
         .v
         .as_ref()
@@ -58,35 +239,27 @@ pub fn save_model(result: &SvdResult, dir: impl AsRef<Path>, seed: Option<u64>) 
             result.k
         )));
     }
-    std::fs::create_dir_all(dir)?;
-    // Invalidate any previous model in this directory up front: the
-    // manifest is the commit marker, so it must not survive a partial
-    // overwrite of the other files.
-    match std::fs::remove_file(dir.join("model.manifest")) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-        Err(e) => return Err(e.into()),
-    }
+    begin_generation(gen_dir)?;
 
     // σ, V, means — small, eager.
     let sigma_text: String = result.sigma.iter().map(|s| format!("{s}\n")).collect();
-    std::fs::write(dir.join("sigma.csv"), sigma_text)?;
-    crate::io::binmat::write_matrix_bin(v, &path_str(dir.join("V.bin"))?)?;
+    std::fs::write(gen_dir.join("sigma.csv"), sigma_text)?;
+    crate::io::binmat::write_matrix_bin(v, &path_str(gen_dir.join("V.bin"))?)?;
     if let Some(means) = &result.means {
         let mrow = Matrix::from_rows(std::slice::from_ref(means))?;
-        crate::io::binmat::write_matrix_bin(&mrow, &path_str(dir.join("means.bin"))?)?;
+        crate::io::binmat::write_matrix_bin(&mrow, &path_str(gen_dir.join("means.bin"))?)?;
     }
 
-    // U shards: stream-copy into the model dir, counting rows per shard and
-    // accumulating the embedding row norms ||u_i ∘ σ||.
-    let dst = ShardSet::new(dir, "U", InputFormat::Bin)?;
+    // U shards: stream-copy into the generation dir, counting rows per
+    // shard and accumulating the embedding row norms ||u_i ∘ σ||.
+    let dst = ShardSet::new(gen_dir, "U", InputFormat::Bin)?;
     if result.shards > 0 && dst.shard_path(0) == result.u_shards.shard_path(0) {
         return Err(Error::Config(
             "save_model: model dir equals the run's work dir; choose a separate directory".into(),
         ));
     }
     let mut norms = crate::io::binmat::BinMatWriter::create(
-        &path_str(dir.join("norms.bin"))?,
+        &path_str(gen_dir.join("norms.bin"))?,
         1,
         crate::io::binmat::DType::F64,
     )?;
@@ -106,13 +279,7 @@ pub fn save_model(result: &SvdResult, dir: impl AsRef<Path>, seed: Option<u64>) 
                 )));
             }
             writer.write_row(&row)?;
-            let norm: f64 = row
-                .iter()
-                .zip(result.sigma.iter())
-                .map(|(u, s)| (u * s) * (u * s))
-                .sum::<f64>()
-                .sqrt();
-            norms.write_row(&[norm])?;
+            norms.write_row(&[embedding_norm(&row, &result.sigma)])?;
             count += 1;
         }
         writer.finish()?;
@@ -127,32 +294,65 @@ pub fn save_model(result: &SvdResult, dir: impl AsRef<Path>, seed: Option<u64>) 
         )));
     }
 
-    // Manifest last — its presence marks the directory complete.
+    // Manifest last — its presence marks the generation complete.
+    model_manifest(
+        result.m,
+        result.n,
+        result.k,
+        &shard_rows,
+        result.means.is_some(),
+        generation,
+        updated_from,
+        seed,
+    )
+    .save(gen_dir.join("model.manifest"))?;
+    Ok(())
+}
+
+/// Assemble a generation's `model.manifest` — the single definition of the
+/// key set, shared by the factorization save path and the update path so
+/// the two can never drift apart.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn model_manifest(
+    m: usize,
+    n: usize,
+    k: usize,
+    shard_rows: &[usize],
+    centered: bool,
+    generation: u64,
+    updated_from: Option<u64>,
+    seed: Option<u64>,
+) -> KvManifest {
     let mut man = KvManifest::new();
     man.set("version", MODEL_VERSION);
-    man.set("m", result.m);
-    man.set("n", result.n);
-    man.set("k", result.k);
-    man.set("shards", result.shards);
+    man.set("m", m);
+    man.set("n", n);
+    man.set("k", k);
+    man.set("shards", shard_rows.len());
     man.set(
         "shard_rows",
         shard_rows.iter().map(|r| r.to_string()).collect::<Vec<_>>().join(","),
     );
-    man.set("centered", usize::from(result.means.is_some()));
+    man.set("centered", usize::from(centered));
     man.set("format", "bin");
+    man.set("generation", generation);
+    if let Some(parent) = updated_from {
+        man.set("updated_from", parent);
+    }
     if let Some(seed) = seed {
         man.set("seed", seed);
     }
-    man.save(dir.join("model.manifest"))?;
-    LOG.info(&format!(
-        "saved model {}x{} k={} ({} shards) to {}",
-        result.m,
-        result.n,
-        result.k,
-        result.shards,
-        dir.display()
-    ));
-    Ok(())
+    man
+}
+
+/// `||u ∘ σ||₂` — the cosine-denominator entry for one U row.
+pub(crate) fn embedding_norm(u_row: &[f64], sigma: &[f64]) -> f64 {
+    u_row
+        .iter()
+        .zip(sigma.iter())
+        .map(|(u, s)| (u * s) * (u * s))
+        .sum::<f64>()
+        .sqrt()
 }
 
 fn path_str(p: PathBuf) -> Result<String> {
@@ -175,9 +375,14 @@ impl ShardCache {
     }
 }
 
-/// A loaded model: small factors in memory, U shards cached lazily.
+/// A loaded model generation: small factors in memory, U shards cached
+/// lazily.
 pub struct ModelStore {
+    /// The model root [`ModelStore::open`] was given.
+    root: PathBuf,
+    /// The resolved generation directory the factors were loaded from.
     dir: PathBuf,
+    generation: u64,
     m: usize,
     n: usize,
     k: usize,
@@ -191,8 +396,10 @@ pub struct ModelStore {
     sigma: Vec<f64>,
     v: Matrix,
     means: Option<Vec<f64>>,
-    /// ||u_i ∘ σ||₂ per row (the cosine denominator sidecar).
-    norms: Vec<f64>,
+    /// ||u_i ∘ σ||₂ per row (the cosine denominator sidecar), loaded on
+    /// first use — it is O(m) and only the similarity path needs it (the
+    /// update path opens stores without paying for it).
+    norms: std::sync::OnceLock<Vec<f64>>,
     u_shards: ShardSet,
     cache: Mutex<ShardCache>,
     /// Separate LRU of the scaled embedding shards `U_shard ∘ σ`, so the
@@ -204,23 +411,29 @@ impl ModelStore {
     /// Default number of U shards kept materialized.
     pub const DEFAULT_CACHE_SHARDS: usize = 4;
 
-    /// Open a model directory written by [`save_model`]. `cache_shards`
-    /// bounds how many U shards stay materialized (min 1).
+    /// Open a model root written by [`save_model`], resolving its live
+    /// generation (or a bare generation / legacy flat directory).
+    /// `cache_shards` bounds how many U shards stay materialized (min 1).
     pub fn open(dir: impl AsRef<Path>, cache_shards: usize) -> Result<Self> {
-        let dir = dir.as_ref().to_path_buf();
+        let root = dir.as_ref().to_path_buf();
+        let dir = resolve_current(&root)?;
+        // Every manifest-level failure names the generation directory it
+        // came from — with several generations on disk, "missing key `m`"
+        // alone is useless.
+        let in_dir = |e: Error| Error::parse(format!("model {}: {e}", dir.display()));
         let man = KvManifest::load(dir.join("model.manifest"))?;
-        let version = man.require_usize("version")?;
+        let version = man.require_usize("version").map_err(in_dir)?;
         if version != MODEL_VERSION {
             return Err(Error::parse(format!(
                 "model {}: unsupported version {version}",
                 dir.display()
             )));
         }
-        let m = man.require_usize("m")?;
-        let n = man.require_usize("n")?;
-        let k = man.require_usize("k")?;
-        let shards = man.require_usize("shards")?;
-        let shard_rows = man.require_usize_list("shard_rows")?;
+        let m = man.require_usize("m").map_err(in_dir)?;
+        let n = man.require_usize("n").map_err(in_dir)?;
+        let k = man.require_usize("k").map_err(in_dir)?;
+        let shards = man.require_usize("shards").map_err(in_dir)?;
+        let shard_rows = man.require_usize_list("shard_rows").map_err(in_dir)?;
         if shard_rows.len() != shards {
             return Err(Error::parse(format!(
                 "model {}: {} shard_rows entries for {shards} shards",
@@ -241,16 +454,18 @@ impl ModelStore {
                 dir.display()
             )));
         }
-        let centered = man.require_bool("centered")?;
-        let seed = man.get_u64("seed")?;
+        let centered = man.require_bool("centered").map_err(in_dir)?;
+        let seed = man.get_u64("seed").map_err(in_dir)?;
+        let generation = man.get_u64("generation").map_err(in_dir)?.unwrap_or(0);
 
-        let sigma: Vec<f64> = std::fs::read_to_string(dir.join("sigma.csv"))?
+        let sigma: Vec<f64> = std::fs::read_to_string(dir.join("sigma.csv"))
+            .map_err(|e| Error::Other(format!("model {}: cannot read sigma.csv: {e}", dir.display())))?
             .lines()
             .filter(|l| !l.trim().is_empty())
             .map(|l| {
-                l.trim()
-                    .parse::<f64>()
-                    .map_err(|_| Error::parse(format!("sigma.csv: bad value `{l}`")))
+                l.trim().parse::<f64>().map_err(|_| {
+                    Error::parse(format!("model {}: sigma.csv: bad value `{l}`", dir.display()))
+                })
             })
             .collect::<Result<_>>()?;
         if sigma.len() != k {
@@ -260,7 +475,8 @@ impl ModelStore {
                 sigma.len()
             )));
         }
-        let v = crate::io::binmat::read_matrix_bin(&path_str(dir.join("V.bin"))?)?;
+        let v = crate::io::binmat::read_matrix_bin(&path_str(dir.join("V.bin"))?)
+            .map_err(|e| Error::Other(format!("model {}: V.bin: {e}", dir.display())))?;
         if v.shape() != (n, k) {
             return Err(Error::shape(format!(
                 "model {}: V is {:?}, expected ({n}, {k})",
@@ -269,7 +485,8 @@ impl ModelStore {
             )));
         }
         let means = if centered {
-            let mrow = crate::io::binmat::read_matrix_bin(&path_str(dir.join("means.bin"))?)?;
+            let mrow = crate::io::binmat::read_matrix_bin(&path_str(dir.join("means.bin"))?)
+                .map_err(|e| Error::Other(format!("model {}: means.bin: {e}", dir.display())))?;
             if mrow.shape() != (1, n) {
                 return Err(Error::shape(format!(
                     "model {}: means is {:?}, expected (1, {n})",
@@ -281,19 +498,26 @@ impl ModelStore {
         } else {
             None
         };
-        let norm_mat = crate::io::binmat::read_matrix_bin(&path_str(dir.join("norms.bin"))?)?;
-        if norm_mat.shape() != (m, 1) {
+        // The norms payload is O(m) and loaded lazily (only the similarity
+        // path needs it), but a missing/mis-shaped sidecar must still fail
+        // here, eagerly — the header read costs a few bytes.
+        let norms_header =
+            crate::io::binmat::BinMatHeader::read_from(&path_str(dir.join("norms.bin"))?)
+                .map_err(|e| Error::Other(format!("model {}: norms.bin: {e}", dir.display())))?;
+        if (norms_header.rows as usize, norms_header.cols as usize) != (m, 1) {
             return Err(Error::shape(format!(
-                "model {}: norms is {:?}, expected ({m}, 1)",
+                "model {}: norms is {}x{}, expected ({m}, 1)",
                 dir.display(),
-                norm_mat.shape()
+                norms_header.rows,
+                norms_header.cols
             )));
         }
-        let norms = norm_mat.col(0);
 
         let u_shards = ShardSet::new(&dir, "U", InputFormat::Bin)?;
         Ok(ModelStore {
+            root,
             dir,
+            generation,
             m,
             n,
             k,
@@ -305,7 +529,7 @@ impl ModelStore {
             sigma,
             v,
             means,
-            norms,
+            norms: std::sync::OnceLock::new(),
             u_shards,
             cache: Mutex::new(ShardCache {
                 cap: cache_shards.max(1),
@@ -320,8 +544,20 @@ impl ModelStore {
         })
     }
 
+    /// The model root this store was opened from (holds `CURRENT` and the
+    /// generation directories).
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The resolved generation directory the factors live in.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Generation number of the loaded factors.
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     pub fn m(&self) -> usize {
@@ -365,9 +601,28 @@ impl ModelStore {
         self.means.as_deref()
     }
 
-    /// Precomputed `||u_i ∘ σ||₂` per row.
-    pub fn norms(&self) -> &[f64] {
-        &self.norms
+    /// Precomputed `||u_i ∘ σ||₂` per row — the cosine-denominator
+    /// sidecar, read from `norms.bin` and shape-checked on first use.
+    pub fn norms(&self) -> Result<&[f64]> {
+        if let Some(n) = self.norms.get() {
+            return Ok(n);
+        }
+        let norm_mat =
+            crate::io::binmat::read_matrix_bin(&path_str(self.dir.join("norms.bin"))?)
+                .map_err(|e| {
+                    Error::Other(format!("model {}: norms.bin: {e}", self.dir.display()))
+                })?;
+        if norm_mat.shape() != (self.m, 1) {
+            return Err(Error::shape(format!(
+                "model {}: norms is {:?}, expected ({}, 1)",
+                self.dir.display(),
+                norm_mat.shape(),
+                self.m
+            )));
+        }
+        // A concurrent first access may have raced us here; get_or_init
+        // keeps exactly one copy either way.
+        Ok(self.norms.get_or_init(|| norm_mat.col(0)))
     }
 
     /// Global row index of shard `i`'s first row.
@@ -403,7 +658,7 @@ impl ModelStore {
     }
 
     /// Shard `i` as embedding rows `u ∘ σ`, via its own LRU — the
-    /// similarity scan's hot input, scaled once per residency, not per
+    /// similarity scan's hot input, scaled once per cache residency, not per
     /// query batch.
     pub fn embedding_shard(&self, i: usize) -> Result<Arc<Matrix>> {
         if i >= self.shards {
@@ -412,6 +667,15 @@ impl ModelStore {
         cached(&self.embedding_cache, i, "serve_embedding_cache", || {
             self.shard(i)?.scale_cols(&self.sigma)
         })
+    }
+
+    /// Open a streaming reader over U shard `i` (the update path's
+    /// rotation input — no cache pollution).
+    pub fn u_shard_reader(&self, i: usize) -> Result<ShardReader> {
+        if i >= self.shards {
+            return Err(Error::Config(format!("shard {i} out of range ({})", self.shards)));
+        }
+        self.u_shards.open_reader(i)
     }
 
     fn load_shard(&self, i: usize) -> Result<Matrix> {
@@ -530,15 +794,21 @@ mod tests {
         let (dir, result, _) = model_fixture("roundtrip", false);
         let model_dir = dir.join("model");
         save_model(&result, &model_dir, Some(42)).unwrap();
+        // Generation layout: a CURRENT pointer plus an immutable gen dir.
+        assert!(model_dir.join(CURRENT_FILE).exists());
+        assert!(model_dir.join("gen-000000").join("model.manifest").exists());
         let store = ModelStore::open(&model_dir, 2).unwrap();
         assert_eq!((store.m(), store.n(), store.k()), (180, 20, 6));
+        assert_eq!(store.generation(), 0);
+        assert_eq!(store.root(), model_dir.as_path());
+        assert_eq!(store.dir(), model_dir.join("gen-000000").as_path());
         assert_eq!(store.shards(), result.shards);
         assert_eq!(store.seed(), Some(42));
         assert_eq!(store.sigma(), &result.sigma[..]);
         assert_eq!(store.v(), result.v.as_ref().unwrap());
         assert!(!store.centered());
         assert!(store.means().is_none());
-        assert_eq!(store.norms().len(), 180);
+        assert_eq!(store.norms().unwrap().len(), 180);
         assert_eq!(store.shard_rows().iter().sum::<usize>(), 180);
 
         // Shard content matches the original U row by row.
@@ -548,7 +818,7 @@ mod tests {
             assert_eq!(got.as_slice(), u.row(row), "row {row}");
             let emb = store.embedding_row(row).unwrap();
             let norm: f64 = emb.iter().map(|v| v * v).sum::<f64>().sqrt();
-            assert!((norm - store.norms()[row]).abs() < 1e-12);
+            assert!((norm - store.norms().unwrap()[row]).abs() < 1e-12);
         }
     }
 
@@ -578,15 +848,67 @@ mod tests {
     }
 
     #[test]
-    fn resave_over_existing_model_is_clean() {
+    fn resave_creates_a_new_generation() {
         let (dir, result, _) = model_fixture("resave", false);
         let model_dir = dir.join("model");
         save_model(&result, &model_dir, Some(1)).unwrap();
-        // Re-saving must fully replace the old model: the old manifest may
-        // not survive alongside partially rewritten artifacts.
+        // Re-saving appends a fresh generation and repoints CURRENT —
+        // existing generations stay immutable for in-flight readers.
         save_model(&result, &model_dir, Some(2)).unwrap();
+        let gens = list_generations(&model_dir).unwrap();
+        assert_eq!(gens.iter().map(|(g, _)| *g).collect::<Vec<_>>(), vec![0, 1]);
         let store = ModelStore::open(&model_dir, 2).unwrap();
+        assert_eq!(store.generation(), 1);
         assert_eq!(store.seed(), Some(2));
+        assert_eq!(store.m(), 180);
+    }
+
+    #[test]
+    fn gc_keeps_newest_and_live_generations() {
+        let (dir, result, _) = model_fixture("gc", false);
+        let model_dir = dir.join("model");
+        for seed in 0..4 {
+            save_model(&result, &model_dir, Some(seed)).unwrap();
+        }
+        assert_eq!(list_generations(&model_dir).unwrap().len(), 4);
+        let removed = gc_generations(&model_dir, 2).unwrap();
+        assert_eq!(removed, 2);
+        let left: Vec<u64> =
+            list_generations(&model_dir).unwrap().iter().map(|(g, _)| *g).collect();
+        assert_eq!(left, vec![2, 3]);
+        // The live generation survives even when it is old: point CURRENT
+        // back at gen 2 and gc down to 1.
+        publish_generation(&model_dir, 2).unwrap();
+        gc_generations(&model_dir, 1).unwrap();
+        let left: Vec<u64> =
+            list_generations(&model_dir).unwrap().iter().map(|(g, _)| *g).collect();
+        assert_eq!(left, vec![2, 3]);
+        assert_eq!(ModelStore::open(&model_dir, 1).unwrap().generation(), 2);
+    }
+
+    #[test]
+    fn legacy_flat_layout_still_opens() {
+        let (dir, result, _) = model_fixture("flat", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, Some(9)).unwrap();
+        // Simulate a pre-generation model: files directly at the root, no
+        // CURRENT pointer.
+        let flat = dir.join("flat_model");
+        std::fs::create_dir_all(&flat).unwrap();
+        for entry in std::fs::read_dir(model_dir.join("gen-000000")).unwrap() {
+            let entry = entry.unwrap();
+            std::fs::copy(entry.path(), flat.join(entry.file_name())).unwrap();
+        }
+        // Strip the generation key the legacy writer never produced.
+        let man_path = flat.join("model.manifest");
+        let text = std::fs::read_to_string(&man_path).unwrap();
+        let stripped: String =
+            text.lines().filter(|l| !l.starts_with("generation=")).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&man_path, stripped).unwrap();
+
+        let store = ModelStore::open(&flat, 1).unwrap();
+        assert_eq!(store.generation(), 0);
+        assert_eq!(store.dir(), flat.as_path());
         assert_eq!(store.m(), 180);
     }
 
@@ -610,9 +932,35 @@ mod tests {
         let (dir, result, _) = model_fixture("damaged", false);
         let model_dir = dir.join("model");
         save_model(&result, &model_dir, None).unwrap();
-        std::fs::remove_file(model_dir.join("V.bin")).unwrap();
+        std::fs::remove_file(model_dir.join("gen-000000").join("V.bin")).unwrap();
         assert!(ModelStore::open(&model_dir, 2).is_err());
         assert!(ModelStore::open(dir.join("nonexistent"), 2).is_err());
+    }
+
+    #[test]
+    fn load_errors_name_the_generation_dir() {
+        let (dir, result, _) = model_fixture("errctx", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let gen_dir = model_dir.join("gen-000000");
+        // Corrupt a manifest integer: the error must name the directory,
+        // not just the key.
+        let man_path = gen_dir.join("model.manifest");
+        let text = std::fs::read_to_string(&man_path).unwrap();
+        std::fs::write(&man_path, text.replace("m=180", "m=banana")).unwrap();
+        let err = ModelStore::open(&model_dir, 1).unwrap_err().to_string();
+        assert!(err.contains("gen-000000"), "error lacks dir context: {err}");
+        // Missing key: same requirement.
+        let stripped: String =
+            text.lines().filter(|l| !l.starts_with("shards=")).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&man_path, stripped).unwrap();
+        let err = ModelStore::open(&model_dir, 1).unwrap_err().to_string();
+        assert!(err.contains("gen-000000"), "error lacks dir context: {err}");
+        // Corrupt sigma.csv: still named.
+        std::fs::write(&man_path, &text).unwrap();
+        std::fs::write(gen_dir.join("sigma.csv"), "not-a-number\n").unwrap();
+        let err = ModelStore::open(&model_dir, 1).unwrap_err().to_string();
+        assert!(err.contains("gen-000000"), "error lacks dir context: {err}");
     }
 
     #[test]

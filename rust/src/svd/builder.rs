@@ -315,6 +315,8 @@ mod tests {
             .save_model(model.clone())
             .run()
             .unwrap();
-        assert!(std::path::Path::new(&model).join("model.manifest").exists());
+        let root = std::path::Path::new(&model);
+        assert!(root.join("CURRENT").exists());
+        assert!(root.join("gen-000000").join("model.manifest").exists());
     }
 }

@@ -43,6 +43,7 @@ pub mod validate;
 pub use builder::Svd;
 pub use executor::{execute_pass_chunk, Executor, LocalExecutor, Pass, PassContext, PassOutput};
 pub use pipeline::{SvdOptions, DEFAULT_SIGMA_CUTOFF_REL};
-#[allow(deprecated)]
-pub use pipeline::{gram_svd_file, randomized_svd_file};
 pub use result::SvdResult;
+// Re-exported so the two lifecycle builders read side by side:
+// `Svd::over(&input)` factorizes, `Update::of(&model_dir)` appends.
+pub use crate::update::{Update, UpdateResult};

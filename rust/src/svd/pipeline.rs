@@ -4,8 +4,8 @@
 //! iteration) is expressed as a sequence of [`Pass`]es handed to an
 //! [`Executor`]; the leader-side math between passes lives here and only
 //! ever touches `k' x k'` matrices. Run it through the [`crate::svd::Svd`]
-//! builder — the free functions of earlier releases remain as deprecated
-//! shims over [`LocalExecutor`].
+//! builder — the sole entry point since the deprecated free functions of
+//! the pre-builder releases were removed.
 
 use crate::backend::BackendRef;
 use crate::config::InputFormat;
@@ -14,7 +14,7 @@ use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
 use crate::linalg::{matmul, Matrix};
 use crate::metrics::PhaseReport;
-use crate::svd::executor::{Executor, LocalExecutor, Pass, PassContext};
+use crate::svd::executor::{Executor, Pass, PassContext};
 use crate::svd::result::SvdResult;
 use crate::util::Logger;
 use std::sync::Arc;
@@ -335,34 +335,6 @@ fn gram_passes(
     report.push("pass2.u_recover", t0.elapsed(), out2.rows, 0);
 
     Ok((k, sigma, Some(v_k), out2.shards))
-}
-
-/// Run the randomized rank-k SVD over a file with in-process workers.
-#[deprecated(note = "use the builder: `Svd::over(&input)?.rank(k).run()`")]
-pub fn randomized_svd_file(
-    input: &InputSpec,
-    backend: BackendRef,
-    opts: &SvdOptions,
-) -> Result<SvdResult> {
-    let dims = checked_dims(input)?;
-    let mut o = opts.clone();
-    o.exact_gram = false;
-    let mut exec = LocalExecutor::new(o.workers);
-    run_svd(&mut exec, input, dims, backend, &o)
-}
-
-/// Run the exact-Gram SVD over a file with in-process workers.
-#[deprecated(note = "use the builder: `Svd::over(&input)?.rank(k).exact_gram(true).run()`")]
-pub fn gram_svd_file(
-    input: &InputSpec,
-    backend: BackendRef,
-    opts: &SvdOptions,
-) -> Result<SvdResult> {
-    let dims = checked_dims(input)?;
-    let mut o = opts.clone();
-    o.exact_gram = true;
-    let mut exec = LocalExecutor::new(o.workers);
-    run_svd(&mut exec, input, dims, backend, &o)
 }
 
 #[cfg(test)]

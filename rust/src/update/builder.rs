@@ -1,0 +1,651 @@
+//! The fluent entry point for incremental model updates — symmetric with
+//! [`crate::svd::Svd`]:
+//!
+//! ```no_run
+//! use tallfat::io::InputSpec;
+//! use tallfat::update::Update;
+//!
+//! # fn main() -> tallfat::Result<()> {
+//! let batch = InputSpec::csv("/data/new_rows.csv");
+//! let next = Update::of("/models/m1")?    // resolves the live generation
+//!     .rows(&batch)
+//!     .oversample(8)
+//!     .run()?;                            // LocalExecutor by default
+//! println!("generation {} now serves {} rows", next.generation, next.m);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Swap the execution substrate exactly like the factorization builder:
+//!
+//! ```ignore
+//! let mut cluster = ClusterExecutor::accept("0.0.0.0:7070", 8)?;
+//! let next = Update::of(dir)?.rows(&batch).executor(&mut cluster).run()?;
+//! ```
+
+use crate::backend::native::NativeBackend;
+use crate::backend::BackendRef;
+use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::io::manifest::KvManifest;
+use crate::io::writer::ShardSet;
+use crate::io::InputSpec;
+use crate::linalg::{matmul, matmul_tn, Matrix};
+use crate::metrics::PhaseReport;
+use crate::rng::VirtualMatrix;
+use crate::serve::store::{
+    begin_generation, embedding_norm, gc_generations, generation_dir_name, next_generation,
+    publish_generation, ModelStore,
+};
+use crate::svd::executor::{Executor, LocalExecutor, Pass, PassContext};
+use crate::svd::pipeline::guarded_inverse;
+use crate::update::merge::{merge_truncate, MergeInput, MergeOutput};
+use crate::util::Logger;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+static LOG: Logger = Logger::new("update");
+
+/// Outcome of one incremental update: the next generation's identity and
+/// factors summary.
+pub struct UpdateResult {
+    /// Generation number written (past the parent and everything on disk).
+    pub generation: u64,
+    /// The new generation's directory.
+    pub dir: PathBuf,
+    /// Total rows served by the new generation.
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// Rows appended by this update (0 for a no-op generation).
+    pub rows_added: usize,
+    /// New singular values, descending.
+    pub sigma: Vec<f64>,
+    /// Phase timing of the update.
+    pub report: PhaseReport,
+}
+
+/// Builder for one incremental update of a saved model (see module docs).
+pub struct Update<'a> {
+    root: PathBuf,
+    store: ModelStore,
+    input: Option<InputSpec>,
+    rank: Option<usize>,
+    oversample: usize,
+    workers: usize,
+    block: usize,
+    seed: u64,
+    work_dir: String,
+    /// True while `work_dir` is the builder's own unique scratch default —
+    /// such a directory is deleted after a successful run (it would leak
+    /// one directory per update otherwise); caller-provided dirs are kept.
+    own_work_dir: bool,
+    sigma_cutoff_rel: f64,
+    keep_generations: usize,
+    backend: Option<BackendRef>,
+    executor: Option<&'a mut dyn Executor>,
+}
+
+impl<'a> Update<'a> {
+    /// Start an update of the model at `dir`. Resolves and loads the live
+    /// generation eagerly so a missing or damaged model fails here, once.
+    pub fn of(dir: impl AsRef<Path>) -> Result<Self> {
+        let root = dir.as_ref().to_path_buf();
+        let store = ModelStore::open(&root, 1)?;
+        // Unlike a factorization (whose output is just this run's result),
+        // an update's shards feed a generation of an existing persisted
+        // model — a shared scratch directory would let two concurrent
+        // updates corrupt each other, so the default is per-process and
+        // per-invocation.
+        static WORK_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = WORK_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        Ok(Update {
+            root,
+            store,
+            input: None,
+            rank: None,
+            oversample: 8,
+            workers: 4,
+            block: 256,
+            seed: 1,
+            work_dir: std::env::temp_dir()
+                .join(format!("tallfat_update_{}_{seq}", std::process::id()))
+                .to_string_lossy()
+                .into_owned(),
+            own_work_dir: true,
+            sigma_cutoff_rel: crate::svd::DEFAULT_SIGMA_CUTOFF_REL,
+            keep_generations: 2,
+            backend: None,
+            executor: None,
+        })
+    }
+
+    /// The generation the update will build on.
+    pub fn parent_generation(&self) -> u64 {
+        self.store.generation()
+    }
+
+    /// The new tall-and-fat row batch to append (required).
+    pub fn rows(mut self, input: &InputSpec) -> Self {
+        self.input = Some(input.clone());
+        self
+    }
+
+    /// Rank of the next generation (default: keep the model's k; capped at
+    /// the merged basis width `k + r`).
+    pub fn rank(mut self, k: usize) -> Self {
+        self.rank = Some(k);
+        self
+    }
+
+    /// Residual-sketch oversampling: the update captures up to
+    /// `k + oversample` new row-space directions from the batch.
+    pub fn oversample(mut self, p: usize) -> Self {
+        self.oversample = p;
+        self
+    }
+
+    /// Split-Process worker count (the default [`LocalExecutor`] fan-out).
+    pub fn workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    /// Row-block size fed to the block backend.
+    pub fn block(mut self, rows: usize) -> Self {
+        self.block = rows;
+        self
+    }
+
+    /// PRNG seed for the residual sketch Ω.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Directory for the intermediate Y/U0/U shards. Defaults to a unique
+    /// per-invocation temp directory that is removed after a successful
+    /// run; a directory set here is left in place.
+    pub fn work_dir(mut self, dir: impl Into<String>) -> Self {
+        self.work_dir = dir.into();
+        self.own_work_dir = false;
+        self
+    }
+
+    /// Relative cutoff for the residual sketch's guarded inverse.
+    pub fn sigma_cutoff_rel(mut self, cutoff: f64) -> Self {
+        self.sigma_cutoff_rel = cutoff;
+        self
+    }
+
+    /// How many generations survive garbage collection after the update
+    /// (min 1; default 2 so in-flight readers of the parent finish).
+    pub fn keep_generations(mut self, keep: usize) -> Self {
+        self.keep_generations = keep.max(1);
+        self
+    }
+
+    /// Block-compute backend for leader math and (local) worker jobs.
+    pub fn backend(mut self, backend: BackendRef) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Execution substrate for the streaming passes over the new rows.
+    pub fn executor(mut self, exec: &'a mut dyn Executor) -> Self {
+        self.executor = Some(exec);
+        self
+    }
+
+    /// Run the update: stream the batch, merge-and-truncate on the leader,
+    /// write the next generation, repoint `CURRENT`, GC old generations.
+    pub fn run(self) -> Result<UpdateResult> {
+        let input = self
+            .input
+            .clone()
+            .ok_or_else(|| Error::Config("update: no row batch (call .rows(&input))".into()))?;
+        if self.workers == 0 || self.block == 0 {
+            return Err(Error::Config("update: workers and block must be >= 1".into()));
+        }
+        if self.rank == Some(0) {
+            return Err(Error::Config("update: rank must be >= 1".into()));
+        }
+        if !(0.0..1.0).contains(&self.sigma_cutoff_rel) {
+            return Err(Error::Config(format!(
+                "update: sigma_cutoff_rel must be in [0, 1), got {}",
+                self.sigma_cutoff_rel
+            )));
+        }
+        let (m1, n1) = input.dims()?;
+        if m1 == 0 {
+            // An empty batch commits a no-op generation: same factors, next
+            // number — so "the update ran" is observable and replayable.
+            return self.noop_generation();
+        }
+        if n1 != self.store.n() {
+            return Err(Error::shape(format!(
+                "update: batch has {n1} cols, model n={}",
+                self.store.n()
+            )));
+        }
+        let backend = self
+            .backend
+            .clone()
+            .unwrap_or_else(|| Arc::new(NativeBackend::new()));
+        let opts = UpdateOptions::of(&self);
+        let mut this = self;
+        match this.executor.take() {
+            Some(exec) => {
+                run_update(exec, &this.store, &this.root, &input, m1, backend, &opts)
+            }
+            None => {
+                let mut local = LocalExecutor::new(this.workers);
+                run_update(&mut local, &this.store, &this.root, &input, m1, backend, &opts)
+            }
+        }
+    }
+
+    /// Write the next generation as a verbatim copy of the parent.
+    fn noop_generation(self) -> Result<UpdateResult> {
+        let store = &self.store;
+        let next = next_generation(&self.root, store.generation())?;
+        let gen_dir = self.root.join(generation_dir_name(next));
+        begin_generation(&gen_dir)?;
+        let mut names = vec!["sigma.csv".to_string(), "V.bin".into(), "norms.bin".into()];
+        if store.centered() {
+            names.push("means.bin".into());
+        }
+        for i in 0..store.shards() {
+            names.push(format!("U-{i}.bin"));
+        }
+        for name in names {
+            std::fs::copy(store.dir().join(&name), gen_dir.join(&name))?;
+        }
+        let mut man = KvManifest::load(store.dir().join("model.manifest"))?;
+        man.set("generation", next);
+        man.set("updated_from", store.generation());
+        man.save(gen_dir.join("model.manifest"))?;
+        publish_generation(&self.root, next)?;
+        // Committed; GC is best-effort from here (see run_update).
+        if let Err(e) = gc_generations(&self.root, self.keep_generations) {
+            LOG.warn(&format!("post-publish gc failed (non-fatal): {e}"));
+        }
+        LOG.info(&format!(
+            "empty batch: generation {next} is a no-op copy of {}",
+            store.generation()
+        ));
+        MetricsRegistry::global().add("update_rows", 0.0);
+        Ok(UpdateResult {
+            generation: next,
+            dir: gen_dir,
+            m: store.m(),
+            n: store.n(),
+            k: store.k(),
+            rows_added: 0,
+            sigma: store.sigma().to_vec(),
+            report: PhaseReport::new(),
+        })
+    }
+}
+
+/// The plain-value view of the builder the driver needs (so the executor
+/// borrow can be split off).
+struct UpdateOptions {
+    rank: Option<usize>,
+    oversample: usize,
+    block: usize,
+    seed: u64,
+    work_dir: String,
+    own_work_dir: bool,
+    sigma_cutoff_rel: f64,
+    keep_generations: usize,
+}
+
+impl UpdateOptions {
+    fn of(u: &Update) -> Self {
+        UpdateOptions {
+            rank: u.rank,
+            oversample: u.oversample,
+            block: u.block,
+            seed: u.seed,
+            work_dir: u.work_dir.clone(),
+            own_work_dir: u.own_work_dir,
+            sigma_cutoff_rel: u.sigma_cutoff_rel,
+            keep_generations: u.keep_generations,
+        }
+    }
+}
+
+/// The update driver: three executor passes over the batch, one small
+/// leader merge, then the generation rewrite. Mirrors
+/// [`crate::svd::pipeline::run_svd`]'s structure.
+fn run_update(
+    exec: &mut dyn Executor,
+    store: &ModelStore,
+    root: &Path,
+    input: &InputSpec,
+    m1: usize,
+    backend: BackendRef,
+    opts: &UpdateOptions,
+) -> Result<UpdateResult> {
+    let (m0, n, k) = (store.m(), store.n(), store.k());
+    // Residual sketch width: at most `oversample + k` genuinely new
+    // directions exist worth keeping, never more than the batch has rows or
+    // the row space has room for.
+    let r = (k + opts.oversample).min(n - k).min(m1);
+    let k_new = opts.rank.unwrap_or(k);
+    let mut report = PhaseReport::new();
+    let mut ctx = PassContext {
+        input,
+        backend,
+        work_dir: &opts.work_dir,
+        shard_format: InputFormat::Bin,
+        block: opts.block,
+        seed: opts.seed,
+        n,
+        kp: k + r,
+        means: Arc::new(Vec::new()),
+    };
+    LOG.info(&format!(
+        "update gen {}: {m0}x{n} k={k} + {m1} rows (residual sketch {r}), executor={}",
+        store.generation(),
+        exec.name()
+    ));
+    std::fs::create_dir_all(&opts.work_dir)?;
+
+    // ---- pass 0 (PCA models): batch column sums -> merged running mean --
+    let mut means_new: Option<Vec<f64>> = None;
+    let mut c0: Option<Vec<f64>> = None;
+    if let Some(mu0) = store.means() {
+        let t0 = Instant::now();
+        let out = exec.run_pass(&ctx, &Pass::ColStats)?;
+        check_rows(out.rows, m1, "pass0")?;
+        let sums = out
+            .partial
+            .ok_or_else(|| Error::Other("update pass0 returned no colstats partial".into()))?;
+        let m_total = (m0 + m1) as f64;
+        let mu_new: Vec<f64> = (0..n)
+            .map(|j| (m0 as f64 * mu0[j] + sums.get(0, j)) / m_total)
+            .collect();
+        c0 = Some((0..n).map(|j| mu0[j] - mu_new[j]).collect());
+        ctx.means = Arc::new(mu_new.clone());
+        means_new = Some(mu_new);
+        report.push("pass0.colstats", t0.elapsed(), out.rows, 0);
+    }
+
+    // ---- pass 1: Y = A₁ [V | (I - VVᵀ)Ω], G = YᵀY ------------------------
+    let t0 = Instant::now();
+    let v = store.v();
+    let mut omega_c = Matrix::zeros(n, k + r);
+    for i in 0..n {
+        for j in 0..k {
+            omega_c.set(i, j, v.get(i, j));
+        }
+    }
+    if r > 0 {
+        let omega = VirtualMatrix::projection(opts.seed, n, r).materialize();
+        let vt_om = matmul_tn(v, &omega)?;
+        let v_vt_om = matmul(v, &vt_om)?;
+        for i in 0..n {
+            for j in 0..r {
+                omega_c.set(i, k + j, omega.get(i, j) - v_vt_om.get(i, j));
+            }
+        }
+    }
+    let out1 = exec.run_pass(&ctx, &Pass::ProjectGram { omega: Some(&omega_c) })?;
+    check_rows(out1.rows, m1, "pass1")?;
+    let new_shards = out1.shards;
+    let g = out1
+        .partial
+        .ok_or_else(|| Error::Other("update pass1 returned no gram partial".into()))?;
+    report.push("pass1.project_gram", t0.elapsed(), out1.rows, 0);
+
+    // ---- leader: orthonormalize the residual sketch ----------------------
+    let t0 = Instant::now();
+    let m_r = if r > 0 {
+        let g_rr = Matrix::from_fn(r, r, |i, j| g.get(k + i, k + j));
+        let (w_eig, v_y) = ctx.backend.eigh(&g_rr)?;
+        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+        v_y.scale_cols(&guarded_inverse(&sig_y, opts.sigma_cutoff_rel))?
+    } else {
+        Matrix::zeros(0, 0)
+    };
+    let mut m2 = Matrix::zeros(k + r, k + r);
+    for i in 0..k {
+        m2.set(i, i, 1.0);
+    }
+    for i in 0..r {
+        for j in 0..r {
+            m2.set(k + i, k + j, m_r.get(i, j));
+        }
+    }
+    report.push("leader.eigh_residual", t0.elapsed(), r as u64, 0);
+
+    // ---- pass 2: U0 shards = [B | U_h], W = A₁ᵀ [B | U_h] ----------------
+    let t0 = Instant::now();
+    let out2 = exec.run_pass(&ctx, &Pass::UrecoverTmul { m: &m2 })?;
+    check_rows(out2.rows, m1, "pass2")?;
+    let w = out2
+        .partial
+        .ok_or_else(|| Error::Other("update pass2 returned no W partial".into()))?;
+    let w_h = w.slice_cols(k, k + r);
+    report.push("pass2.urecover_tmul", t0.elapsed(), out2.rows, 0);
+
+    // ---- leader: merge-and-truncate (the (k+r)² eigensolve) --------------
+    let t0 = Instant::now();
+    let merged = merge_truncate(
+        &MergeInput {
+            sigma0: store.sigma(),
+            v,
+            gram: &g,
+            w_h: &w_h,
+            m_r: &m_r,
+            m0,
+            c0: c0.as_deref(),
+        },
+        k_new,
+        &ctx.backend,
+    )?;
+    let merge_elapsed = t0.elapsed();
+    report.push("leader.merge_truncate", merge_elapsed, (k + r) as u64, 0);
+
+    // ---- pass 3: rotate the batch's [B | U_h] shards into U --------------
+    let t0 = Instant::now();
+    let out3 = exec.run_pass(&ctx, &Pass::RotateU { p: &merged.p_new })?;
+    report.push("pass3.rotate_u", t0.elapsed(), out3.rows, 0);
+
+    // ---- leader: write the next generation -------------------------------
+    let t0 = Instant::now();
+    // Numbered past everything on disk, not just past the parent: if
+    // CURRENT was rolled back, the abandoned newer generations stay
+    // immutable for readers that still hold them open.
+    let next = next_generation(root, store.generation())?;
+    let gen_dir = root.join(generation_dir_name(next));
+    let total_rows = write_generation(
+        store,
+        &gen_dir,
+        next,
+        &merged,
+        means_new.as_deref(),
+        &opts.work_dir,
+        new_shards,
+        opts.seed,
+    )?;
+    if total_rows != m0 + m1 {
+        return Err(Error::Other(format!(
+            "update: generation holds {total_rows} rows, expected {}",
+            m0 + m1
+        )));
+    }
+    publish_generation(root, next)?;
+    // CURRENT is repointed: the update is committed. Everything after is
+    // best-effort cleanup — a GC hiccup must not fail the run (a "failed"
+    // retry would append the same batch twice).
+    if let Err(e) = gc_generations(root, opts.keep_generations) {
+        LOG.warn(&format!("post-publish gc failed (non-fatal): {e}"));
+    }
+    if opts.own_work_dir {
+        // The default scratch dir is unique per invocation — remove it or
+        // every update would leak a batch's worth of shards in temp.
+        let _ = std::fs::remove_dir_all(&opts.work_dir);
+    }
+    report.push("leader.write_generation", t0.elapsed(), total_rows as u64, 0);
+
+    let reg = MetricsRegistry::global();
+    reg.add("update_rows", m1 as f64);
+    reg.set("update_merge_ms", merge_elapsed.as_secs_f64() * 1e3);
+    LOG.info(&format!(
+        "update done: generation {next} serves {}x{n} k={} (sigma[0]={:.4})",
+        m0 + m1,
+        merged.sigma.len(),
+        merged.sigma.first().copied().unwrap_or(0.0)
+    ));
+    Ok(UpdateResult {
+        generation: next,
+        dir: gen_dir,
+        m: m0 + m1,
+        n,
+        k: merged.sigma.len(),
+        rows_added: m1,
+        sigma: merged.sigma,
+        report,
+    })
+}
+
+fn check_rows(got: u64, want: usize, pass: &str) -> Result<()> {
+    if got as usize != want {
+        return Err(Error::Other(format!(
+            "update {pass} saw {got} rows, expected {want}"
+        )));
+    }
+    Ok(())
+}
+
+/// Write the next generation directory: rotated old U shards (plus the
+/// centered row offset), the batch's freshly rotated shards appended after
+/// them, the new small factors, the norms sidecar, and the manifest last.
+/// Returns the total row count written.
+#[allow(clippy::too_many_arguments)]
+fn write_generation(
+    store: &ModelStore,
+    gen_dir: &Path,
+    generation: u64,
+    merged: &MergeOutput,
+    means_new: Option<&[f64]>,
+    work_dir: &str,
+    new_shards: usize,
+    seed: u64,
+) -> Result<usize> {
+    let k_new = merged.sigma.len();
+    begin_generation(gen_dir)?;
+
+    let sigma_text: String = merged.sigma.iter().map(|s| format!("{s}\n")).collect();
+    std::fs::write(gen_dir.join("sigma.csv"), sigma_text)?;
+    let v_path = gen_dir.join("V.bin").to_string_lossy().into_owned();
+    crate::io::binmat::write_matrix_bin(&merged.v_new, &v_path)?;
+    if let Some(mu) = means_new {
+        let mrow = Matrix::from_rows(std::slice::from_ref(&mu.to_vec()))?;
+        let m_path = gen_dir.join("means.bin").to_string_lossy().into_owned();
+        crate::io::binmat::write_matrix_bin(&mrow, &m_path)?;
+    }
+
+    let dst = ShardSet::new(gen_dir, "U", InputFormat::Bin)?;
+    let norms_path = gen_dir.join("norms.bin").to_string_lossy().into_owned();
+    let mut norms =
+        crate::io::binmat::BinMatWriter::create(&norms_path, 1, crate::io::binmat::DType::F64)?;
+    let mut shard_rows = Vec::with_capacity(store.shards() + new_shards);
+    let mut total = 0usize;
+
+    // Old rows: stream each parent shard through the k x k' rotation,
+    // block-buffered into one matmul per slab (the same shape of work as
+    // the executor's `rotate_one_shard`), then the centered offset and the
+    // norms sidecar per row.
+    const ROTATE_BLOCK: usize = 512;
+    let p_old = &merged.p_old;
+    let offset = merged.old_offset.as_deref();
+    let mut row = Vec::new();
+    for i in 0..store.shards() {
+        let mut reader = store.u_shard_reader(i)?;
+        let mut writer = dst.open_writer(i, k_new)?;
+        let mut count = 0usize;
+        let mut buf: Vec<Vec<f64>> = Vec::with_capacity(ROTATE_BLOCK);
+        loop {
+            buf.clear();
+            while buf.len() < ROTATE_BLOCK {
+                if !reader.next_row(&mut row)? {
+                    break;
+                }
+                if row.len() != p_old.rows() {
+                    return Err(Error::shape(format!(
+                        "update: parent U shard {i} row has {} cols, expected {}",
+                        row.len(),
+                        p_old.rows()
+                    )));
+                }
+                buf.push(row.clone());
+            }
+            if buf.is_empty() {
+                break;
+            }
+            let slab = Matrix::from_rows(&buf)?;
+            let mut rotated = matmul(&slab, p_old)?;
+            if let Some(off) = offset {
+                for rix in 0..rotated.rows() {
+                    for (v, o) in rotated.row_mut(rix).iter_mut().zip(off.iter()) {
+                        *v += o;
+                    }
+                }
+            }
+            for rix in 0..rotated.rows() {
+                let urow = rotated.row(rix);
+                writer.write_row(urow)?;
+                norms.write_row(&[embedding_norm(urow, &merged.sigma)])?;
+            }
+            count += rotated.rows();
+            if buf.len() < ROTATE_BLOCK {
+                break;
+            }
+        }
+        writer.finish()?;
+        shard_rows.push(count);
+        total += count;
+    }
+
+    // New rows: the pass-3 output shards, renumbered after the old ones.
+    let src = ShardSet::new(work_dir, "U", InputFormat::Bin)?;
+    for i in 0..new_shards {
+        let mut reader = src.open_reader(i)?;
+        let mut writer = dst.open_writer(store.shards() + i, k_new)?;
+        let mut count = 0usize;
+        while reader.next_row(&mut row)? {
+            if row.len() != k_new {
+                return Err(Error::shape(format!(
+                    "update: rotated shard {i} row has {} cols, expected {k_new}",
+                    row.len()
+                )));
+            }
+            writer.write_row(&row)?;
+            norms.write_row(&[embedding_norm(&row, &merged.sigma)])?;
+            count += 1;
+        }
+        writer.finish()?;
+        shard_rows.push(count);
+        total += count;
+    }
+    norms.finish()?;
+
+    crate::serve::store::model_manifest(
+        total,
+        store.n(),
+        k_new,
+        &shard_rows,
+        means_new.is_some(),
+        generation,
+        Some(store.generation()),
+        Some(seed),
+    )
+    .save(gen_dir.join("model.manifest"))?;
+    Ok(total)
+}

@@ -1,0 +1,485 @@
+//! Leader-side merge-and-truncate of an existing rank-k model with a new
+//! row batch — the small-matrix half of the incremental update.
+//!
+//! Setting: the live generation factors `A₀ ≈ U₀ Σ₀ Vᵀ` (U₀, V
+//! orthonormal) and a new batch `A₁` (`m₁ x n`). The streaming passes over
+//! `A₁` (see [`crate::update::builder`]) deliver only small matrices:
+//!
+//! * `G = Yᵀ Y` where `Y = A₁ [V | Ω⊥]` — the fused project+gram pass with
+//!   a composite operand: the first k columns of `Y` are `B = A₁ V` (the
+//!   batch in the old latent basis), the last r are a Gaussian sketch of
+//!   the *residual* `H = A₁ (I - V Vᵀ)` (Halko's range finder applied
+//!   block-wise, which is exactly what makes the update composable).
+//! * `W_h = A₁ᵀ U_h` where `U_h = Y_r M_r` orthonormalizes the residual
+//!   sketch — the standard U-recovery pass with a block-diagonal operand.
+//!
+//! From those this module builds the Zha–Simon middle matrix over the
+//! orthonormal bases `[U₀ | I]` (rows) and `[V | Q]` (columns),
+//!
+//! ```text
+//! N = [ diag(Σ₀)      0   ]          [A₀]        [U₀  0] [          ]
+//!     [ B         U_h·T·Q ]   s.t.   [A₁]  =     [0   I] [    N     ] [V | Q]ᵀ
+//! ```
+//!
+//! eigensolves the `(k+r)x(k+r)` Gram `NᵀN = G_m Θ² G_mᵀ` (never touching
+//! `m` anywhere), and returns the three small rotations the driver needs:
+//! the new `Σ`, the new `V = [V|Q] G_m Θ`, a `k x k'` rotation `P_old` for
+//! the existing U shards, and a `(k+r) x k'` rotation `P_new` for the new
+//! rows' `[B | U_h]` shards.
+//!
+//! Centered (PCA) models add one wrinkle: re-centering the old block about
+//! the merged mean is the rank-one shift `A₀ - 1 μ'ᵀ = U₀Σ₀Vᵀ + 1 c₀ᵀ`
+//! with `c₀ = μ₀ - μ'`. Because `1ᵀ(A₀ - 1μ₀ᵀ) = 0` forces `1 ⊥ U₀`, the
+//! normalized ones-vector extends the left basis orthonormally, and the
+//! shift becomes one extra "virtual row" `√m₀ c₀ᵀ` of `N` — its `NᵀN`
+//! contribution is the rank-one term `m₀ ĉ ĉᵀ`, and its share of the new
+//! `U` surfaces as a constant per-row offset on the rotated old shards.
+
+use crate::backend::BackendRef;
+use crate::error::{Error, Result};
+use crate::linalg::{matmul, matmul_tn, thin_qr, Matrix};
+use crate::svd::pipeline::guarded_inverse;
+
+/// Relative cutoff for `Θ⁻¹` when forming the rotations — numerically-zero
+/// directions only (matches the pipeline's completion cutoff).
+const THETA_CUTOFF_REL: f64 = 1e-12;
+
+/// The small matrices the streaming passes delivered to the leader.
+pub struct MergeInput<'a> {
+    /// Singular values of the live generation (length k).
+    pub sigma0: &'a [f64],
+    /// Right singular vectors of the live generation, `n x k`.
+    pub v: &'a Matrix,
+    /// `(k+r) x (k+r)` Gram of `Y = A₁ [V | Ω⊥]` from pass 1.
+    pub gram: &'a Matrix,
+    /// `n x r` completion `A₁ᵀ U_h` (columns k.. of the pass-2 partial).
+    pub w_h: &'a Matrix,
+    /// `r x r` residual orthonormalizer `M_r = V_y Σ_y⁻¹` (guarded).
+    pub m_r: &'a Matrix,
+    /// Row count of the old model (the centered virtual row's weight).
+    pub m0: usize,
+    /// Mean shift `μ₀ - μ'` for centered models (None when uncentered).
+    pub c0: Option<&'a [f64]>,
+}
+
+/// The rotations and factors of the next generation.
+pub struct MergeOutput {
+    /// New singular values, descending (length k').
+    pub sigma: Vec<f64>,
+    /// New right singular vectors, `n x k'`.
+    pub v_new: Matrix,
+    /// Rotation for old U shards: `u'ᵀ = uᵀ P_old (+ offset)`, `k x k'`.
+    pub p_old: Matrix,
+    /// Constant row offset for old shards (centered models only, length k').
+    pub old_offset: Option<Vec<f64>>,
+    /// Rotation for the new rows' `[B | U_h]` shards, `(k+r) x k'`.
+    pub p_new: Matrix,
+}
+
+/// `a - b`, elementwise.
+fn sub(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    if a.shape() != b.shape() {
+        return Err(Error::shape(format!("sub: {:?} vs {:?}", a.shape(), b.shape())));
+    }
+    let mut out = a.clone();
+    for (o, x) in out.data_mut().iter_mut().zip(b.data()) {
+        *o -= x;
+    }
+    Ok(out)
+}
+
+/// Copy `src` into `dst` at `(r0, c0)`.
+fn set_block(dst: &mut Matrix, r0: usize, c0: usize, src: &Matrix) {
+    for i in 0..src.rows() {
+        for j in 0..src.cols() {
+            dst.set(r0 + i, c0 + j, src.get(i, j));
+        }
+    }
+}
+
+/// The component of `x` (a column per entry of `cols`) orthogonal to the
+/// columns of `v`: `x - v (vᵀ x)`.
+fn project_out(v: &Matrix, x: &Matrix) -> Result<Matrix> {
+    if x.cols() == 0 {
+        return Ok(x.clone());
+    }
+    let vt_x = matmul_tn(v, x)?;
+    sub(x, &matmul(v, &vt_x)?)
+}
+
+/// Merge the old factors with the batch's streamed partials and truncate to
+/// `k_new` (capped at the merged basis width). See the module docs for the
+/// construction; all dense work here is O((k+r)³) plus O(n·(k+r)²) for the
+/// basis assembly — nothing scales with m.
+pub fn merge_truncate(
+    inp: &MergeInput,
+    k_new: usize,
+    backend: &BackendRef,
+) -> Result<MergeOutput> {
+    let k = inp.sigma0.len();
+    let r = inp.m_r.cols();
+    let n = inp.v.rows();
+    if inp.v.cols() != k {
+        return Err(Error::shape(format!(
+            "merge: V is {:?}, sigma0 has {k} values",
+            inp.v.shape()
+        )));
+    }
+    if inp.gram.shape() != (k + r, k + r) {
+        return Err(Error::shape(format!(
+            "merge: gram is {:?}, expected ({}, {})",
+            inp.gram.shape(),
+            k + r,
+            k + r
+        )));
+    }
+    if inp.w_h.shape() != (n, r) {
+        return Err(Error::shape(format!(
+            "merge: w_h is {:?}, expected ({n}, {r})",
+            inp.w_h.shape()
+        )));
+    }
+
+    // Residual directions in row space: T̃ = (I - VVᵀ) W_h, one column per
+    // sketch direction; centered models append the mean-shift component
+    // c0⊥ = (I - VVᵀ) c0 so the virtual row's residual is representable.
+    let tt = project_out(inp.v, inp.w_h)?;
+    let qr_cols = match inp.c0 {
+        Some(c0) => {
+            if c0.len() != n {
+                return Err(Error::shape(format!(
+                    "merge: c0 has {} entries, expected n={n}",
+                    c0.len()
+                )));
+            }
+            let c = Matrix::from_vec(n, 1, c0.to_vec())?;
+            let c_perp = project_out(inp.v, &c)?;
+            let mut m = Matrix::zeros(n, r + 1);
+            set_block(&mut m, 0, 0, &tt);
+            set_block(&mut m, 0, r, &c_perp);
+            m
+        }
+        None => tt,
+    };
+    // Thin QR: Q (n x q) orthonormal and ⊥ V by construction of its input;
+    // R's first r columns are the residual coords S ᵀ, its last column (if
+    // centered) the virtual row's Q-coordinates.
+    let q = qr_cols.cols();
+    let (q_mat, rq) = if q > 0 {
+        thin_qr(&qr_cols)?
+    } else {
+        (Matrix::zeros(n, 0), Matrix::zeros(0, 0))
+    };
+    // S (r x q): U_h-residual coords such that H ≈ U_h S Qᵀ.
+    let s_mat = rq.slice_cols(0, r).t();
+
+    // Gram blocks of Y = [B | Y_r]:  BᵀB, BᵀY_r, Y_rᵀY_r.
+    let g_bb = slice_block(inp.gram, 0, 0, k, k);
+    let g_br = slice_block(inp.gram, 0, k, k, r);
+    let g_rr = slice_block(inp.gram, k, k, r, r);
+    // BᵀU_h = (BᵀY_r) M_r and U_hᵀU_h = M_rᵀ (Y_rᵀY_r) M_r — U_h is only
+    // *approximately* orthonormal when the residual is rank-deficient (the
+    // guarded inverse zeroes dead directions), so keep the exact Gram.
+    let b_uh = matmul(&g_br, inp.m_r)?; // k x r
+    let uh_uh = matmul_tn(inp.m_r, &matmul(&g_rr, inp.m_r)?)?; // r x r
+
+    // NᵀN over the merged basis [V | Q]:
+    //   [ diag(Σ₀²) + BᵀB      BᵀU_h Sᵀ... ]
+    //   [ ...                  S U_hᵀU_h Sᵀ ]  (+ m₀ ĉĉᵀ when centered)
+    let d = k + q;
+    let mut nn = Matrix::zeros(d, d);
+    let mut top_left = g_bb;
+    for i in 0..k {
+        top_left.set(i, i, top_left.get(i, i) + inp.sigma0[i] * inp.sigma0[i]);
+    }
+    set_block(&mut nn, 0, 0, &top_left);
+    if q > 0 {
+        let top_right = matmul(&b_uh, &s_mat)?; // (k x r)(r x q) = k x q
+        set_block(&mut nn, 0, k, &top_right);
+        set_block(&mut nn, k, 0, &top_right.t());
+        let bottom = matmul(&s_mat.t(), &matmul(&uh_uh, &s_mat)?)?; // q x q
+        set_block(&mut nn, k, k, &bottom);
+    }
+    let c_hat = inp.c0.map(|c0| {
+        // ĉ = coords of c₀ in [V | Q]: [Vᵀc₀ ; R's last column].
+        let mut c_vec = vec![0.0; d];
+        for j in 0..k {
+            c_vec[j] = (0..n).map(|i| inp.v.get(i, j) * c0[i]).sum();
+        }
+        for j in 0..q {
+            c_vec[k + j] = rq.get(j, r);
+        }
+        c_vec
+    });
+    if let Some(c_hat) = &c_hat {
+        let w = inp.m0 as f64;
+        for i in 0..d {
+            for j in 0..d {
+                nn.set(i, j, nn.get(i, j) + w * c_hat[i] * c_hat[j]);
+            }
+        }
+    }
+
+    // The small eigensolve: NᵀN = G_m Θ² G_mᵀ, descending.
+    let (theta2, g_m) = backend.eigh(&nn)?;
+    let k_new = k_new.min(d).max(1);
+    let sigma: Vec<f64> = theta2[..k_new].iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let inv_theta = guarded_inverse(&sigma, THETA_CUTOFF_REL);
+    let g_k = g_m.slice_cols(0, k_new); // d x k'
+
+    // V' = [V | Q] G_m[:, :k'].
+    let mut v_new = matmul(inp.v, &g_k.slice_rows(0, k))?;
+    if q > 0 {
+        v_new.add_assign(&matmul(&q_mat, &g_k.slice_rows(k, d))?)?;
+    }
+
+    // Old-shard rotation: U₀'s F-block is diag(Σ₀) G_m Θ⁻¹.
+    let mut p_old = g_k.slice_rows(0, k);
+    for i in 0..k {
+        for j in 0..k_new {
+            p_old.set(i, j, inp.sigma0[i] * p_old.get(i, j) * inv_theta[j]);
+        }
+    }
+    // Centered: the virtual row's F-row spreads 1/√m₀ onto every old row —
+    // a constant offset ĉᵀ G_m Θ⁻¹ after the √m₀ weights cancel.
+    let old_offset = c_hat.map(|c_hat| {
+        (0..k_new)
+            .map(|j| (0..d).map(|i| c_hat[i] * g_k.get(i, j)).sum::<f64>() * inv_theta[j])
+            .collect()
+    });
+
+    // New-shard rotation over the [B | U_h] shards:
+    //   rows 0..k  -> G_m's V-block, rows k.. -> S · G_m's Q-block.
+    let mut p_new = Matrix::zeros(k + r, k_new);
+    set_block(&mut p_new, 0, 0, &g_k.slice_rows(0, k));
+    if q > 0 {
+        set_block(&mut p_new, k, 0, &matmul(&s_mat, &g_k.slice_rows(k, d))?);
+    }
+    for i in 0..k + r {
+        for j in 0..k_new {
+            p_new.set(i, j, p_new.get(i, j) * inv_theta[j]);
+        }
+    }
+
+    Ok(MergeOutput { sigma, v_new, p_old, old_offset, p_new })
+}
+
+/// `src[r0.., c0..]` of shape `(rows, cols)` as a new matrix.
+fn slice_block(src: &Matrix, r0: usize, c0: usize, rows: usize, cols: usize) -> Matrix {
+    Matrix::from_fn(rows, cols, |i, j| src.get(r0 + i, c0 + j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::linalg::exact_svd;
+    use crate::rng::Gaussian;
+    use std::sync::Arc;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    /// Dense oracle for the whole merge: factor A0 exactly at rank k,
+    /// compute the pass outputs densely, merge, and check the updated
+    /// factors reconstruct [A0; A1].
+    fn run_dense_merge(centered: bool) {
+        let (m0, m1, n, k, r) = (40usize, 14usize, 10usize, 3usize, 5usize);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+
+        // Rank-k A0 so its truncated SVD is exact, and a low-rank batch so
+        // the r-wide residual sketch captures its range exactly (the
+        // general lossy case is exercised by the integration tests).
+        let raw0 = matmul(&rand(m0, k, 1), &rand(k, n, 2)).unwrap();
+        let a1_raw = matmul(&rand(m1, 3, 3), &rand(3, n, 4)).unwrap();
+
+        // Means of the concatenation (centered mode) — the update's passes
+        // see A1 - 1 μ'ᵀ and the old factors describe A0 - 1 μ₀ᵀ.
+        let (a0, a1, c0) = if centered {
+            let mu0: Vec<f64> = (0..n).map(|j| raw0.col(j).iter().sum::<f64>() / m0 as f64).collect();
+            let mu1: Vec<f64> =
+                (0..n).map(|j| a1_raw.col(j).iter().sum::<f64>() / m1 as f64).collect();
+            let m = (m0 + m1) as f64;
+            let mu_new: Vec<f64> = (0..n)
+                .map(|j| (m0 as f64 * mu0[j] + m1 as f64 * mu1[j]) / m)
+                .collect();
+            let a0c = Matrix::from_fn(m0, n, |i, j| raw0.get(i, j) - mu0[j]);
+            let a1c = Matrix::from_fn(m1, n, |i, j| a1_raw.get(i, j) - mu_new[j]);
+            let c0: Vec<f64> = (0..n).map(|j| mu0[j] - mu_new[j]).collect();
+            (a0c, a1c, Some(c0))
+        } else {
+            (raw0.clone(), a1_raw.clone(), None)
+        };
+
+        // Old factors (rank k exact for uncentered; centering a rank-k
+        // matrix is rank k+1, so keep k big enough — here rank(a0) <= k+1
+        // means we need the centered case to still be exact: centering
+        // A0 = L R about its own means keeps rank <= k, since the mean row
+        // is in the row space... not in general. Use k+1 for safety.
+        let k_eff = if centered { k + 1 } else { k };
+        let svd0 = exact_svd(&a0).unwrap();
+        let sigma0: Vec<f64> = svd0.sigma[..k_eff].to_vec();
+        let u0 = svd0.u.slice_cols(0, k_eff);
+        let v0 = svd0.v.slice_cols(0, k_eff);
+
+        // Pass 1: Y = A1 [V | (I - VVᵀ)Ω], G = YᵀY.
+        let omega = rand(n, r, 7);
+        let om_perp = project_out(&v0, &omega).unwrap();
+        let mut omega_c = Matrix::zeros(n, k_eff + r);
+        set_block(&mut omega_c, 0, 0, &v0);
+        set_block(&mut omega_c, 0, k_eff, &om_perp);
+        let y = matmul(&a1, &omega_c).unwrap();
+        let g = matmul_tn(&y, &y).unwrap();
+
+        // Leader: M_r from the residual gram.
+        let g_rr = slice_block(&g, k_eff, k_eff, r, r);
+        let (w_eig, v_y) = backend.eigh(&g_rr).unwrap();
+        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+        let inv_y = guarded_inverse(&sig_y, 1e-10);
+        let m_r = v_y.scale_cols(&inv_y).unwrap();
+
+        // Pass 2: U0-shards = [B | U_h], W = A1ᵀ [B | U_h].
+        let mut m2 = Matrix::zeros(k_eff + r, k_eff + r);
+        set_block(&mut m2, 0, 0, &Matrix::eye(k_eff));
+        set_block(&mut m2, k_eff, k_eff, &m_r);
+        let b_uh = matmul(&y, &m2).unwrap(); // m1 x (k+r)
+        let w = matmul_tn(&a1, &b_uh).unwrap();
+        let w_h = w.slice_cols(k_eff, k_eff + r);
+
+        let out = merge_truncate(
+            &MergeInput {
+                sigma0: &sigma0,
+                v: &v0,
+                gram: &g,
+                w_h: &w_h,
+                m_r: &m_r,
+                m0,
+                c0: c0.as_deref(),
+            },
+            k_eff + r.min(m1),
+            &backend,
+        )
+        .unwrap();
+
+        // Rebuild U from the two rotations and check the factorization.
+        let mut u_old = matmul(&u0, &out.p_old).unwrap();
+        if let Some(off) = &out.old_offset {
+            for i in 0..u_old.rows() {
+                for (j, o) in off.iter().enumerate() {
+                    u_old.set(i, j, u_old.get(i, j) + o);
+                }
+            }
+        }
+        let u_new_rows = matmul(&b_uh, &out.p_new).unwrap();
+        let u = u_old.vstack(&u_new_rows).unwrap();
+        let recon = matmul(&u.scale_cols(&out.sigma).unwrap(), &out.v_new.t()).unwrap();
+        // The merged factorization targets the concatenation centered about
+        // the *merged* mean: the old block shifts by 1 c₀ᵀ.
+        let a0_shifted = match &c0 {
+            Some(c0) => Matrix::from_fn(m0, n, |i, j| a0.get(i, j) + c0[j]),
+            None => a0.clone(),
+        };
+        let want = a0_shifted.vstack(&a1).unwrap();
+        let rel = recon.max_abs_diff(&want) / want.max_abs();
+        assert!(rel < 1e-8, "centered={centered}: reconstruction rel err {rel}");
+
+        // Orthonormality of the produced factors (up to dead directions).
+        let utu = matmul_tn(&u, &u).unwrap();
+        let vtv = matmul_tn(&out.v_new, &out.v_new).unwrap();
+        let live = out.sigma.iter().filter(|&&s| s > 1e-9 * out.sigma[0]).count();
+        for i in 0..live {
+            for j in 0..live {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.get(i, j) - want).abs() < 1e-8, "UᵀU[{i},{j}]");
+                assert!((vtv.get(i, j) - want).abs() < 1e-8, "VᵀV[{i},{j}]");
+            }
+        }
+
+        // Σ matches the dense SVD of the concatenation.
+        let dense = exact_svd(&want).unwrap();
+        for i in 0..live {
+            let rel = (out.sigma[i] - dense.sigma[i]).abs() / dense.sigma[i].max(1e-12);
+            assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", out.sigma[i], dense.sigma[i]);
+        }
+    }
+
+    #[test]
+    fn dense_merge_reconstructs_concatenation() {
+        run_dense_merge(false);
+    }
+
+    #[test]
+    fn dense_merge_handles_centered_mean_shift() {
+        run_dense_merge(true);
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_shapes() {
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let v = rand(8, 3, 1);
+        let bad = MergeInput {
+            sigma0: &[1.0, 0.5], // k=2 but V has 3 columns
+            v: &v,
+            gram: &Matrix::zeros(5, 5),
+            w_h: &Matrix::zeros(8, 2),
+            m_r: &Matrix::zeros(2, 2),
+            m0: 10,
+            c0: None,
+        };
+        assert!(merge_truncate(&bad, 2, &backend).is_err());
+    }
+
+    #[test]
+    fn zero_residual_reduces_to_rotation() {
+        // New rows entirely inside span(V): the residual machinery must
+        // collapse gracefully (S ≈ 0) and Σ must still be exact.
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let (m0, m1, n, k, r) = (30usize, 8usize, 6usize, 2usize, 3usize);
+        let base = matmul(&rand(m0, k, 11), &rand(k, n, 12)).unwrap();
+        let svd0 = exact_svd(&base).unwrap();
+        let sigma0: Vec<f64> = svd0.sigma[..k].to_vec();
+        let u0 = svd0.u.slice_cols(0, k);
+        let v0 = svd0.v.slice_cols(0, k);
+        // a1 rows are combinations of V columns => zero residual.
+        let a1 = matmul(&rand(m1, k, 13), &v0.t()).unwrap();
+
+        let omega = rand(n, r, 14);
+        let om_perp = project_out(&v0, &omega).unwrap();
+        let mut omega_c = Matrix::zeros(n, k + r);
+        set_block(&mut omega_c, 0, 0, &v0);
+        set_block(&mut omega_c, 0, k, &om_perp);
+        let y = matmul(&a1, &omega_c).unwrap();
+        let g = matmul_tn(&y, &y).unwrap();
+        let g_rr = slice_block(&g, k, k, r, r);
+        let (w_eig, v_y) = backend.eigh(&g_rr).unwrap();
+        let sig_y: Vec<f64> = w_eig.iter().map(|&w| w.max(0.0).sqrt()).collect();
+        let m_r = v_y.scale_cols(&guarded_inverse(&sig_y, 1e-7)).unwrap();
+        let mut m2 = Matrix::zeros(k + r, k + r);
+        set_block(&mut m2, 0, 0, &Matrix::eye(k));
+        set_block(&mut m2, k, k, &m_r);
+        let b_uh = matmul(&y, &m2).unwrap();
+        let w_h = matmul_tn(&a1, &b_uh).unwrap().slice_cols(k, k + r);
+
+        let out = merge_truncate(
+            &MergeInput {
+                sigma0: &sigma0,
+                v: &v0,
+                gram: &g,
+                w_h: &w_h,
+                m_r: &m_r,
+                m0,
+                c0: None,
+            },
+            k,
+            &backend,
+        )
+        .unwrap();
+        let mut u = matmul(&u0, &out.p_old).unwrap();
+        u = u.vstack(&matmul(&b_uh, &out.p_new).unwrap()).unwrap();
+        let recon = matmul(&u.scale_cols(&out.sigma).unwrap(), &out.v_new.t()).unwrap();
+        let want = base.vstack(&a1).unwrap();
+        assert!(recon.max_abs_diff(&want) / want.max_abs() < 1e-8);
+    }
+}

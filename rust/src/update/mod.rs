@@ -1,0 +1,42 @@
+//! Incremental rank-k model updates — append rows to a saved factorization
+//! without re-reading the original input.
+//!
+//! A factorization frozen at `tallfat svd --save-model` time goes stale the
+//! moment new rows exist. Re-running the full pipeline over the entire
+//! input scales with *all* rows ever seen; this subsystem scales with the
+//! *batch*:
+//!
+//! ```text
+//! pass 0  μ' = merge(μ₀, colsums(A₁))   centered models only     (over A₁)
+//! pass 1  Y = A₁ [V | (I-VVᵀ)Ω]         project + gram G = YᵀY   (over A₁)
+//! leader  orth(Y_r)                      r x r eigh -> M_r
+//! pass 2  [B | U_h] = Y M₂, W = A₁ᵀ·     completion partial       (over A₁)
+//! leader  merge-and-truncate             QR + (k+r)² eigh -> Σ', V', P_old, P_new
+//! pass 3  U₁ = [B | U_h] P_new           shard rotation           (over shards)
+//! leader  U₀' = U₀ P_old (+ offset)      stream-rotate old shards
+//!         write generation g+1, repoint CURRENT, GC old generations
+//! ```
+//!
+//! The streaming passes are the *same* [`crate::svd::Pass`] descriptions
+//! the factorization pipeline uses, driven through the same
+//! [`crate::svd::Executor`] seam — so updates run on in-process threads or
+//! on a remote cluster with zero new worker code. All dense math on the
+//! leader stays `O((k+r)²)`–`O((k+r)³)` (Halko et al.'s block-wise range
+//! finder composed with a Zha–Simon merge; see [`merge`] for the algebra).
+//!
+//! The output is a new *generation* in the model root ([`crate::serve::store`]):
+//! immutable, committed by its manifest, published by an atomic `CURRENT`
+//! rename — which is what lets a serving process hot-swap to it with zero
+//! downtime ([`crate::serve::query::EngineHandle`]).
+//!
+//! Entry point: the [`Update`] builder, symmetric with [`crate::svd::Svd`]:
+//!
+//! ```ignore
+//! let next = Update::of("/models/m1")?.rows(&batch).executor(&mut e).run()?;
+//! ```
+
+pub mod builder;
+pub mod merge;
+
+pub use builder::{Update, UpdateResult};
+pub use merge::{merge_truncate, MergeInput, MergeOutput};

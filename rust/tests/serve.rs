@@ -10,8 +10,9 @@ use tallfat::coordinator::run_cli;
 use tallfat::io::dataset::{gen_exact, Spectrum};
 use tallfat::io::{InputSpec, ShardSet};
 use tallfat::linalg::{matmul, Matrix};
-use tallfat::serve::{Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::serve::{EngineHandle, Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
 use tallfat::svd::Svd;
+use tallfat::update::Update;
 use tallfat::util::Args;
 
 mod harness;
@@ -56,7 +57,8 @@ struct Oracle {
 impl Oracle {
     fn from_model_dir(model_dir: &std::path::Path) -> Oracle {
         let store = ModelStore::open(model_dir, 64).unwrap();
-        let u = ShardSet::new(model_dir, "U", InputFormat::Bin)
+        // U shards live in the resolved generation directory.
+        let u = ShardSet::new(store.dir(), "U", InputFormat::Bin)
             .unwrap()
             .merge_to_matrix(store.shards())
             .unwrap();
@@ -142,7 +144,7 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
     let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
     let server = ModelServer::bind(
-        engine,
+        Arc::new(EngineHandle::fixed(engine)),
         &ServeOptions {
             addr: "127.0.0.1:0".into(),
             max_requests: Some(4),
@@ -159,6 +161,7 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     let info = Json::parse(body_of(&resp).trim()).unwrap();
     assert_eq!(info.get("m").and_then(Json::as_usize), Some(150));
     assert_eq!(info.get("k").and_then(Json::as_usize), Some(6));
+    assert_eq!(info.get("generation").and_then(Json::as_usize), Some(0));
 
     // 2. a batch of ND-JSON queries in one POST.
     let qrow = a.row(33);
@@ -247,7 +250,8 @@ fn cli_svd_save_model_then_serve_roundtrip() {
         "--save-model", &model,
     ])
     .unwrap();
-    assert!(d.join("model").join("model.manifest").exists());
+    assert!(d.join("model").join("CURRENT").exists());
+    assert!(d.join("model").join("gen-000000").join("model.manifest").exists());
 
     let addr = free_addr();
     let addr2 = addr.clone();
@@ -331,7 +335,7 @@ fn concurrent_http_clients_are_batched_and_correct() {
 
     const CLIENTS: usize = 6;
     let server = ModelServer::bind(
-        engine,
+        Arc::new(EngineHandle::fixed(engine)),
         &ServeOptions {
             addr: "127.0.0.1:0".into(),
             max_requests: Some(CLIENTS as u64),
@@ -369,4 +373,113 @@ fn concurrent_http_clients_are_batched_and_correct() {
         );
         assert_eq!(hits[0].0, i * 15);
     }
+}
+
+/// The zero-downtime lifecycle: a serving process answers queries against
+/// generation 0, an incremental update lands generation 1 on disk, a
+/// `reload` line hot-swaps the live engine, and subsequent responses show
+/// the generation (and row count) advancing — all on one server, never
+/// restarted.
+#[test]
+fn queries_survive_hot_swap_and_generation_advances() {
+    let d = dir("hotswap");
+    let (a, _) = gen_exact(
+        160,
+        16,
+        4,
+        Spectrum::Geometric { scale: 9.0, decay: 0.55 },
+        0.0,
+        13,
+    )
+    .unwrap();
+    let base = InputSpec::csv(d.join("A0.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a.slice_rows(0, 120), &base).unwrap();
+    let batch = InputSpec::csv(d.join("A1.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a.slice_rows(120, 160), &batch).unwrap();
+
+    let model_dir = d.join("model");
+    Svd::over(&base)
+        .unwrap()
+        .rank(6)
+        .oversample(6)
+        .workers(2)
+        .block(32)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .save_model(model_dir.to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+
+    let engines = Arc::new(
+        EngineHandle::open(&model_dir, 2, Arc::new(NativeBackend::new())).unwrap(),
+    );
+    let server = ModelServer::bind(
+        engines,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(3),
+            // Deterministic swap points: only the explicit reload op below
+            // may advance the generation, never a background poll.
+            reload_poll: None,
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    // 1. before the update: generation 0, 120 rows, queries answer.
+    let row_json = Json::from_f64s(a.row(5)).render();
+    let body =
+        format!("{{\"op\":\"info\"}}\n{{\"op\":\"similar\",\"row\":{row_json},\"k\":3}}\n");
+    let resp = http_post_query(&addr, &body);
+    let lines: Vec<Json> = body_of(&resp).lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines[0].get("generation").and_then(Json::as_usize), Some(0));
+    assert_eq!(lines[0].get("m").and_then(Json::as_usize), Some(120));
+    assert_eq!(parse_hits(&lines[1])[0].0, 5);
+
+    // 2. the update lands generation 1 on disk while the server runs.
+    let next = Update::of(&model_dir)
+        .unwrap()
+        .rows(&batch)
+        .workers(2)
+        .block(32)
+        .seed(3)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
+    assert_eq!(next.generation, 1);
+
+    // 3. reload hot-swaps; the same body then queries the new generation —
+    //    including a similarity hit on a row that only exists post-update.
+    let new_row_json = Json::from_f64s(a.row(150)).render();
+    let body = format!(
+        "{{\"op\":\"reload\"}}\n{{\"op\":\"info\"}}\n{{\"op\":\"similar\",\"row\":{new_row_json},\"k\":3}}\n"
+    );
+    let resp = http_post_query(&addr, &body);
+    let lines: Vec<Json> = body_of(&resp).lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines[0].get("ok"), Some(&Json::Bool(true)));
+    assert_eq!(lines[0].get("swapped"), Some(&Json::Bool(true)));
+    assert_eq!(lines[0].get("generation").and_then(Json::as_usize), Some(1));
+    // The info line of the same body still answers from its snapshot
+    // (generation 0) — in-flight bodies are never torn mid-generation.
+    assert_eq!(lines[1].get("generation").and_then(Json::as_usize), Some(0));
+    // Batched queries go through the handle and see the new generation:
+    // row 150 exists only in generation 1 (index 150 of 160).
+    let hits = parse_hits(&lines[2]);
+    assert_eq!(hits[0].0, 150, "new-generation row must be its own nearest neighbor");
+
+    // 4. a fresh body sees generation 1 everywhere.
+    let resp = http_post_query(&addr, "{\"op\":\"info\"}\n");
+    let info = Json::parse(body_of(&resp).trim()).unwrap();
+    assert_eq!(info.get("generation").and_then(Json::as_usize), Some(1));
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(160));
+    srv.join().unwrap();
+
+    // 5. serve_reloads flowed into the registry.
+    let reloads = tallfat::coordinator::server::MetricsRegistry::global()
+        .get("serve_reloads")
+        .unwrap_or(0.0);
+    assert!(reloads >= 1.0, "serve_reloads = {reloads}");
 }

@@ -1,0 +1,548 @@
+//! Incremental-update parity — the acceptance gate of the `update/`
+//! subsystem: for a random tall-and-fat A split into A₀ ‖ A₁, updating the
+//! A₀ model with the A₁ rows must match a from-scratch factorization of
+//! the concatenated input — Σ to relative tolerance, U/V up to per-column
+//! sign on the well-separated leading spectrum, and the full rank-k
+//! reconstruction (rotation-proof) against the actual data — under both
+//! the in-process [`LocalExecutor`] and remote TCP workers via
+//! [`ClusterExecutor`], centered and uncentered. Plus the degenerate
+//! batches: rank-deficient rows, fewer rows than k, an empty batch (a
+//! no-op generation), and running-mean correctness for PCA models.
+
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::cluster::ClusterExecutor;
+use tallfat::config::InputFormat;
+use tallfat::coordinator::run_cli;
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::{InputSpec, ShardSet};
+use tallfat::linalg::{matmul, Matrix};
+use tallfat::serve::ModelStore;
+use tallfat::svd::{Svd, SvdResult};
+use tallfat::update::Update;
+use tallfat::util::Args;
+
+mod harness;
+use harness::{free_addr, spawn_workers};
+
+const M0: usize = 200;
+const M1: usize = 90;
+const N: usize = 20;
+const RANK: usize = 5;
+const K: usize = 8;
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_update_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write_spec(a: &Matrix, path: std::path::PathBuf) -> InputSpec {
+    let spec = InputSpec::csv(path.to_string_lossy().into_owned());
+    tallfat::io::write_matrix(a, &spec).unwrap();
+    spec
+}
+
+/// Exact-rank data split into base + batch (+ the full file for the
+/// from-scratch reference run).
+fn fixture(d: &std::path::Path, m0: usize, m1: usize) -> (Matrix, InputSpec, InputSpec, InputSpec) {
+    let (a, _) = gen_exact(
+        m0 + m1,
+        N,
+        RANK,
+        Spectrum::Geometric { scale: 10.0, decay: 0.55 },
+        0.0,
+        2024,
+    )
+    .unwrap();
+    let base = write_spec(&a.slice_rows(0, m0), d.join("A0.csv"));
+    let batch = write_spec(&a.slice_rows(m0, m0 + m1), d.join("A1.csv"));
+    let full = write_spec(&a, d.join("A.csv"));
+    (a, base, batch, full)
+}
+
+/// Factorize the base split and persist it as a model root.
+fn build_model(d: &std::path::Path, base: &InputSpec, center: bool) -> std::path::PathBuf {
+    let model = d.join("model");
+    Svd::over(base)
+        .unwrap()
+        .rank(K)
+        .oversample(6)
+        .workers(3)
+        .block(32)
+        .seed(77)
+        .center(center)
+        .work_dir(d.join("work_base").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .save_model(model.to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    model
+}
+
+/// The from-scratch reference over the concatenated input.
+fn scratch(d: &std::path::Path, full: &InputSpec, center: bool) -> SvdResult {
+    Svd::over(full)
+        .unwrap()
+        .rank(K)
+        .oversample(6)
+        .workers(3)
+        .block(32)
+        .seed(78)
+        .center(center)
+        .work_dir(d.join("work_scratch").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap()
+}
+
+fn assert_cols_match_up_to_sign(a: &Matrix, b: &Matrix, cols: usize, tol: f64, what: &str) {
+    assert_eq!(a.rows(), b.rows(), "{what}: row mismatch");
+    for j in 0..cols {
+        let dot: f64 = (0..a.rows()).map(|i| a.get(i, j) * b.get(i, j)).sum();
+        let sign = if dot >= 0.0 { 1.0 } else { -1.0 };
+        for i in 0..a.rows() {
+            let diff = (a.get(i, j) - sign * b.get(i, j)).abs();
+            assert!(
+                diff < tol,
+                "{what}[{i},{j}]: {} vs {} (sign {sign})",
+                a.get(i, j),
+                b.get(i, j)
+            );
+        }
+    }
+}
+
+/// Open the updated model and compare it against the from-scratch result
+/// and the raw concatenated data.
+///
+/// * Σ: every value, relative where live, near-zero where the reference is.
+/// * Reconstruction: `U Σ Vᵀ (+ 1μᵀ)` must reproduce `a_full` — this pins
+///   the U/V subspaces without assuming any spectral gap.
+/// * U/V columns up to sign for the first `strict_cols` (callers pass the
+///   provably gap-separated prefix — sign comparison is ill-posed at
+///   near-degenerate σ).
+fn assert_model_matches(
+    model: &std::path::Path,
+    reference: &SvdResult,
+    a_full: &Matrix,
+    strict_cols: usize,
+) {
+    let store = ModelStore::open(model, 4).unwrap();
+    assert_eq!(store.m(), a_full.rows(), "updated model row count");
+    assert_eq!(store.m(), reference.m);
+    assert_eq!(store.k(), reference.k);
+    let s0 = reference.sigma[0];
+
+    for i in 0..store.k() {
+        let got = store.sigma()[i];
+        let want = reference.sigma[i];
+        if want > 1e-6 * s0 {
+            let rel = (got - want).abs() / want;
+            assert!(rel < 1e-5, "sigma[{i}]: {got} vs {want} (rel {rel})");
+        } else {
+            assert!(got.abs() < 1e-5 * s0, "tail sigma[{i}] = {got} not ~0");
+        }
+    }
+
+    // Rotation-proof subspace check: the updated factors reconstruct the
+    // actual concatenated input.
+    let u_updated = ShardSet::new(store.dir(), "U", InputFormat::Bin)
+        .unwrap()
+        .merge_to_matrix(store.shards())
+        .unwrap();
+    let mut recon = matmul(
+        &u_updated.scale_cols(store.sigma()).unwrap(),
+        &store.v().t(),
+    )
+    .unwrap();
+    if let Some(mu) = store.means() {
+        for i in 0..recon.rows() {
+            for (v, m) in recon.row_mut(i).iter_mut().zip(mu.iter()) {
+                *v += m;
+            }
+        }
+    }
+    let err = recon.max_abs_diff(a_full);
+    assert!(err < 1e-5 * s0, "reconstruction err {err} vs sigma0 {s0}");
+
+    // Strict per-column comparison on the separated prefix.
+    assert_cols_match_up_to_sign(
+        store.v(),
+        reference.v.as_ref().unwrap(),
+        strict_cols,
+        1e-4,
+        "V",
+    );
+    let u_reference = reference.u_matrix().unwrap();
+    assert_cols_match_up_to_sign(&u_updated, &u_reference, strict_cols, 1e-4, "U");
+
+    // The norms sidecar must describe the *rotated* embeddings.
+    for row in [0usize, store.m() / 2, store.m() - 1] {
+        let emb: f64 = u_updated
+            .row(row)
+            .iter()
+            .zip(store.sigma().iter())
+            .map(|(u, s)| (u * s) * (u * s))
+            .sum::<f64>()
+            .sqrt();
+        let norms = store.norms().unwrap();
+        assert!(
+            (emb - norms[row]).abs() < 1e-8 * s0.max(1.0),
+            "norm sidecar row {row}: {} vs {emb}",
+            norms[row]
+        );
+    }
+}
+
+fn run_local(center: bool, name: &str) {
+    let d = dir(name);
+    let (a, base, batch, full) = fixture(&d, M0, M1);
+    let model = build_model(&d, &base, center);
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .oversample(6)
+        .workers(3)
+        .block(32)
+        .seed(5)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
+    assert_eq!(result.generation, 1);
+    assert_eq!(result.m, M0 + M1);
+    assert_eq!(result.rows_added, M1);
+    let reference = scratch(&d, &full, center);
+    // Centering perturbs the spectrum by the mean direction, so only the
+    // top of the spectrum is guaranteed gap-separated there.
+    let strict = if center { 2 } else { RANK };
+    assert_model_matches(&model, &reference, &a, strict);
+}
+
+#[test]
+fn update_matches_scratch_local() {
+    run_local(false, "local_plain");
+}
+
+#[test]
+fn update_matches_scratch_local_centered() {
+    run_local(true, "local_centered");
+}
+
+fn run_cluster(center: bool, name: &str, workers: usize) {
+    let d = dir(name);
+    let (a, base, batch, full) = fixture(&d, M0, M1);
+    let model = build_model(&d, &base, center);
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, workers);
+    let mut cluster = ClusterExecutor::accept(&addr, workers).unwrap();
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .oversample(6)
+        .block(32)
+        .seed(5)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(result.generation, 1);
+    // The batch was fanned out to the remote workers: one new U shard per
+    // worker, appended after the parent's shards.
+    let parent = ModelStore::open(model.join("gen-000000"), 1).unwrap();
+    let store = ModelStore::open(&model, 1).unwrap();
+    assert_eq!(store.shards(), parent.shards() + workers);
+    drop((store, parent));
+    let reference = scratch(&d, &full, center);
+    let strict = if center { 2 } else { RANK };
+    assert_model_matches(&model, &reference, &a, strict);
+}
+
+#[test]
+fn update_matches_scratch_cluster() {
+    run_cluster(false, "cluster_plain", 3);
+}
+
+#[test]
+fn update_matches_scratch_cluster_centered() {
+    run_cluster(true, "cluster_centered", 2);
+}
+
+/// Local and cluster updates of the same model+batch+seed agree with each
+/// other to near-fp precision (same math, same reduction shape).
+#[test]
+fn local_and_cluster_updates_agree() {
+    let d = dir("local_vs_cluster");
+    let (_, base, batch, _) = fixture(&d, M0, M1);
+    let model_l = build_model(&dir("local_vs_cluster_l"), &base, false);
+    let model_c = build_model(&dir("local_vs_cluster_c"), &base, false);
+
+    let local = Update::of(&model_l)
+        .unwrap()
+        .rows(&batch)
+        .workers(2)
+        .block(32)
+        .seed(9)
+        .work_dir(d.join("wl").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    let dist = Update::of(&model_c)
+        .unwrap()
+        .rows(&batch)
+        .block(32)
+        .seed(9)
+        .work_dir(d.join("wc").to_string_lossy().into_owned())
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    for (a, b) in local.sigma.iter().zip(dist.sigma.iter()) {
+        assert!((a - b).abs() < 1e-9 * local.sigma[0], "{a} vs {b}");
+    }
+    let sl = ModelStore::open(&model_l, 1).unwrap();
+    let sc = ModelStore::open(&model_c, 1).unwrap();
+    assert_cols_match_up_to_sign(sl.v(), sc.v(), RANK, 1e-8, "V local-vs-cluster");
+}
+
+// ---- degenerate batches ---------------------------------------------------
+
+/// A batch entirely inside the model's row space (duplicated base rows):
+/// the residual is rank-deficient end to end and must not break anything.
+#[test]
+fn rank_deficient_batch_is_handled() {
+    let d = dir("rankdef");
+    let (a, base, _, _) = fixture(&d, M0, M1);
+    // Batch = copies of base rows => residual exactly zero.
+    let dup = a.slice_rows(10, 40);
+    let batch = write_spec(&dup, d.join("dup.csv"));
+    let concat = a.slice_rows(0, M0).vstack(&dup).unwrap();
+    let full = write_spec(&concat, d.join("full.csv"));
+    let model = build_model(&d, &base, false);
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .workers(2)
+        .block(32)
+        .seed(3)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    assert_eq!(result.m, M0 + 30);
+    assert!(result.sigma.iter().all(|s| s.is_finite()));
+    let reference = scratch(&d, &full, false);
+    assert_model_matches(&model, &reference, &concat, RANK);
+}
+
+/// A batch with fewer rows than k: the residual sketch shrinks to the
+/// batch size and parity still holds.
+#[test]
+fn batch_smaller_than_k() {
+    let d = dir("tiny_batch");
+    let m1 = 3; // < K = 8
+    let (a, base, batch, full) = fixture(&d, M0, m1);
+    let model = build_model(&d, &base, false);
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .workers(2)
+        .block(32)
+        .seed(4)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    assert_eq!(result.rows_added, m1);
+    let reference = scratch(&d, &full, false);
+    assert_model_matches(&model, &reference, &a, RANK);
+}
+
+/// An empty batch commits a no-op generation: same factors, next number.
+#[test]
+fn empty_batch_is_noop_generation() {
+    let d = dir("empty_batch");
+    let (_, base, _, _) = fixture(&d, M0, 4);
+    let model = build_model(&d, &base, false);
+    let before = ModelStore::open(&model, 1).unwrap();
+    let empty = d.join("empty.csv");
+    std::fs::write(&empty, "").unwrap();
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&InputSpec::csv(empty.to_string_lossy().into_owned()))
+        .run()
+        .unwrap();
+    assert_eq!(result.generation, 1);
+    assert_eq!(result.rows_added, 0);
+    let after = ModelStore::open(&model, 1).unwrap();
+    assert_eq!(after.generation(), 1);
+    assert_eq!(after.m(), before.m());
+    assert_eq!(after.sigma(), before.sigma());
+    assert_eq!(after.v(), before.v());
+    assert_eq!(after.u_row(0).unwrap(), before.u_row(0).unwrap());
+}
+
+/// Centered models: the updated generation's means must equal the column
+/// means of the full concatenated input (the running-mean merge).
+#[test]
+fn centered_update_tracks_running_mean() {
+    let d = dir("running_mean");
+    let (a, base, batch, _) = fixture(&d, M0, M1);
+    let model = build_model(&d, &base, true);
+    Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .workers(3)
+        .block(32)
+        .seed(5)
+        .work_dir(d.join("work_update").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    let store = ModelStore::open(&model, 1).unwrap();
+    let means = store.means().expect("updated model stays centered");
+    for j in 0..N {
+        let want: f64 = (0..M0 + M1).map(|i| a.get(i, j)).sum::<f64>() / (M0 + M1) as f64;
+        assert!(
+            (means[j] - want).abs() < 1e-9,
+            "mean[{j}]: {} vs {want}",
+            means[j]
+        );
+    }
+}
+
+/// Consecutive updates stack: gen 0 -> 1 -> 2, each building on the last,
+/// with old generations garbage-collected down to the keep budget — and
+/// the final factors still match scratch over everything.
+#[test]
+fn chained_updates_advance_generations_and_gc() {
+    let d = dir("chained");
+    let (a, base, _, _) = fixture(&d, M0, M1);
+    let model = build_model(&d, &base, false);
+    let split = M0 + M1 / 2;
+    let b1 = write_spec(&a.slice_rows(M0, split), d.join("b1.csv"));
+    let b2 = write_spec(&a.slice_rows(split, M0 + M1), d.join("b2.csv"));
+    for (i, b) in [b1, b2].iter().enumerate() {
+        Update::of(&model)
+            .unwrap()
+            .rows(b)
+            .workers(2)
+            .block(32)
+            .seed(6 + i as u64)
+            .keep_generations(2)
+            .work_dir(d.join(format!("w{i}")).to_string_lossy().into_owned())
+            .run()
+            .unwrap();
+    }
+    let store = ModelStore::open(&model, 1).unwrap();
+    assert_eq!(store.generation(), 2);
+    assert_eq!(store.m(), M0 + M1);
+    drop(store);
+    // keep_generations(2): gen 0 must be gone, 1 and 2 remain.
+    let gens: Vec<u64> = tallfat::serve::list_generations(&model)
+        .unwrap()
+        .iter()
+        .map(|(g, _)| *g)
+        .collect();
+    assert_eq!(gens, vec![1, 2]);
+    let full = write_spec(&a, d.join("full.csv"));
+    let reference = scratch(&d, &full, false);
+    assert_model_matches(&model, &reference, &a, RANK);
+}
+
+/// rank 0 is rejected up front, exactly like the factorization builder.
+#[test]
+fn rank_zero_is_rejected() {
+    let d = dir("rank_zero");
+    let (_, base, batch, _) = fixture(&d, M0, 10);
+    let model = build_model(&d, &base, false);
+    let err = Update::of(&model).unwrap().rows(&batch).rank(0).run();
+    assert!(err.is_err());
+    // Nothing was published: still generation 0.
+    assert_eq!(ModelStore::open(&model, 1).unwrap().generation(), 0);
+}
+
+/// Generations are immutable even across a CURRENT rollback: an update of
+/// a rolled-back model gets a fresh number instead of rewriting the
+/// abandoned newer generation in place.
+#[test]
+fn rolled_back_current_never_overwrites_existing_generations() {
+    let d = dir("rollback");
+    let (a, base, batch, _) = fixture(&d, M0, M1);
+    let model = build_model(&d, &base, false);
+    Update::of(&model)
+        .unwrap()
+        .rows(&batch)
+        .workers(2)
+        .block(32)
+        .seed(7)
+        .work_dir(d.join("w1").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    // Roll back to generation 0 (the pointer is the truth) and update with
+    // a different batch.
+    tallfat::serve::publish_generation(&model, 0).unwrap();
+    let gen1_manifest =
+        std::fs::read_to_string(model.join("gen-000001").join("model.manifest")).unwrap();
+    let other = write_spec(&a.slice_rows(M0, M0 + 10), d.join("other.csv"));
+    let result = Update::of(&model)
+        .unwrap()
+        .rows(&other)
+        .workers(2)
+        .block(32)
+        .seed(8)
+        .keep_generations(3)
+        .work_dir(d.join("w2").to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    // Fresh number past everything on disk; gen 1 untouched.
+    assert_eq!(result.generation, 2);
+    assert_eq!(
+        std::fs::read_to_string(model.join("gen-000001").join("model.manifest")).unwrap(),
+        gen1_manifest
+    );
+    let store = ModelStore::open(&model, 1).unwrap();
+    assert_eq!(store.generation(), 2);
+    assert_eq!(store.m(), M0 + 10);
+}
+
+/// The `tallfat update` CLI drives the same path.
+#[test]
+fn update_cli_roundtrip() {
+    let d = dir("cli");
+    let (_, base, batch, _) = fixture(&d, M0, 20);
+    let model = build_model(&d, &base, false);
+    let model_str = model.to_string_lossy().into_owned();
+    let work = d.join("work_cli").to_string_lossy().into_owned();
+    let args: Vec<String> = [
+        "update",
+        &model_str,
+        "--rows",
+        &batch.path,
+        "--workers",
+        "2",
+        "--block",
+        "32",
+        "--work-dir",
+        &work,
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    run_cli(&Args::parse(args).unwrap()).unwrap();
+    let store = ModelStore::open(&model, 1).unwrap();
+    assert_eq!(store.generation(), 1);
+    assert_eq!(store.m(), M0 + 20);
+}
