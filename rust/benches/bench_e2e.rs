@@ -6,6 +6,10 @@
 //! and XLA backends and prints the phase breakdown, throughput, and
 //! accuracy. The paper's claim being reproduced: the whole factorization is
 //! streaming passes over A plus leader math on 32x32 matrices only.
+//!
+//! Emits `BENCH_e2e.json` (per-backend wall time, throughput, accuracy) so
+//! the end-to-end perf trajectory is machine-readable.
+//! `TALLFAT_BENCH_SMOKE=1` shrinks the workload to CI-smoke size.
 
 mod common;
 
@@ -14,8 +18,9 @@ use tallfat::backend::{native::NativeBackend, xla::XlaBackend, BackendRef};
 use tallfat::svd::{validate, Svd};
 
 fn main() {
+    let smoke = common::smoke();
     let dir = common::bench_dir("e2e");
-    let (m, n, k) = (20_000, 2048, 24);
+    let (m, n, k) = if smoke { (2_000, 128, 8) } else { (20_000, 2048, 24) };
     let input = common::ensure_dataset(&dir, "e2e", m, n, true);
     let bytes = std::fs::metadata(&input.path).unwrap().len();
 
@@ -25,6 +30,7 @@ fn main() {
         Err(e) => eprintln!("[warn] xla backend unavailable: {e} (run `make artifacts`)"),
     }
 
+    let mut points = Vec::new();
     for (name, backend) in backends {
         common::header(&format!("E6 {m}x{n} k={k} — backend {name}"));
         let (result, elapsed) = common::time_once(|| {
@@ -41,10 +47,10 @@ fn main() {
                 .unwrap()
         });
         println!("{}", result.report.render());
+        let rows_per_s = 2.0 * m as f64 / elapsed.as_secs_f64();
+        let mb_per_s = 2.0 * bytes as f64 / 1e6 / elapsed.as_secs_f64();
         println!(
-            "end-to-end {elapsed:.2?}  |  {:.0} rows/s/pass  |  {:.0} MB/s of input",
-            2.0 * m as f64 / elapsed.as_secs_f64(),
-            2.0 * bytes as f64 / 1e6 / elapsed.as_secs_f64()
+            "end-to-end {elapsed:.2?}  |  {rows_per_s:.0} rows/s/pass  |  {mb_per_s:.0} MB/s of input"
         );
         let err = validate::reconstruction_error_streaming(&input, &result).unwrap();
         let ortho =
@@ -54,5 +60,25 @@ fn main() {
             "sigma[0..6] = [{}]",
             result.sigma.iter().take(6).map(|s| format!("{s:.3}")).collect::<Vec<_>>().join(", ")
         );
+        points.push(format!(
+            concat!(
+                "{{\"backend\":\"{}\",\"wall_s\":{:.6},\"rows_per_s_per_pass\":{:.1},",
+                "\"input_mb_per_s\":{:.2},\"reconstruction_err\":{:.8},",
+                "\"u_orthonormality\":{:.3e},\"shards\":{}}}"
+            ),
+            name,
+            elapsed.as_secs_f64(),
+            rows_per_s,
+            mb_per_s,
+            err,
+            ortho,
+            result.shards
+        ));
     }
+
+    let json = format!(
+        "{{\"bench\":\"e2e\",\"smoke\":{smoke},\"m\":{m},\"n\":{n},\"k\":{k},\"backends\":[{}]}}\n",
+        points.join(",")
+    );
+    common::write_json("e2e", &json);
 }

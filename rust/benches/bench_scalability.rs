@@ -1,26 +1,59 @@
-//! E1 — Split-Process scalability (the paper's Figure-3 story).
+//! E1 — Split-Process scalability (the paper's Figure-3 story), plus the
+//! dynamic-scheduler ablation.
 //!
 //! The paper claims the Split-Process architecture scales by pointing each
 //! of N workers at 1/N of the file. This box has one core, so we (a)
 //! *measure* the single-worker streaming-ATA throughput, (b) verify the
 //! chunk plan divides work evenly and in-process multi-worker runs give
-//! identical results, and (c) feed the measured rate into the calibrated
+//! identical results, (c) feed the measured rate into the calibrated
 //! cluster simulator to produce the multi-node speedup curve — including
-//! the shared-file-server saturation knee the paper's deployment implies,
-//! and the local-copies deployment it recommends for it.
+//! the shared-file-server saturation knee the paper's deployment implies —
+//! and (d) race the old static one-chunk-per-worker schedule against the
+//! dynamic scheduler on a *skewed* workload where one quarter of the file
+//! is 10x more expensive per row (the straggler scenario the static
+//! schedule is worst at; sleep-based cost, so one core measures it fairly).
 //!
-//! Output rows: workers, simulated stream/reduce/total seconds, speedup —
-//! for both deployments.
+//! Emits `BENCH_scalability.json` with the measured rate, the scheduler
+//! ablation, and the simulated speedup curves. `TALLFAT_BENCH_SMOKE=1`
+//! shrinks everything to CI-smoke size.
 
 mod common;
 
+use std::time::Duration;
+use tallfat::io::InputSpec;
 use tallfat::jobs::AtaRowJob;
 use tallfat::simulator::{calibrate_rows_per_sec, simulate_split_process, ClusterParams};
-use tallfat::splitproc;
+use tallfat::splitproc::{self, SchedPolicy};
+
+/// Stream a chunk, then sleep `rows x cost` where rows in the first
+/// quarter of the file cost 10x — a deterministic straggler workload.
+fn skewed_chunk_seconds(
+    input: &InputSpec,
+    workers: usize,
+    policy: &SchedPolicy,
+    file_len: u64,
+    slow_us: u64,
+    fast_us: u64,
+) -> (usize, f64) {
+    let t0 = std::time::Instant::now();
+    let (results, stats) = splitproc::run_scheduled(input, workers, policy, |chunk| {
+        let mut job = AtaRowJob::new(8);
+        let rows = splitproc::run_chunk(input, chunk, &mut job)?;
+        let start = chunk.byte_range.map(|r| r.start).unwrap_or(0);
+        let per_row = if start < file_len / 4 { slow_us } else { fast_us };
+        std::thread::sleep(Duration::from_micros(rows * per_row));
+        Ok(rows)
+    })
+    .unwrap();
+    let rows: u64 = results.iter().sum();
+    assert!(rows > 0);
+    (stats.chunks, t0.elapsed().as_secs_f64())
+}
 
 fn main() {
+    let smoke = common::smoke();
     let dir = common::bench_dir("scalability");
-    let (m, n) = (200_000, 64);
+    let (m, n) = if smoke { (5_000, 16) } else { (200_000, 64) };
     let input = common::ensure_dataset(&dir, "ata", m, n, false);
 
     // ---- measure: single-worker streaming ATA -----------------------------
@@ -29,7 +62,8 @@ fn main() {
         let r = splitproc::run(&input, 1, |_| Ok(AtaRowJob::new(n))).unwrap();
         assert_eq!(r.len(), 1);
     });
-    let (rows, best) = common::time_best(3, || {
+    let reps = if smoke { 1 } else { 3 };
+    let (rows, best) = common::time_best(reps, || {
         let r = splitproc::run(&input, 1, |_| Ok(AtaRowJob::new(n))).unwrap();
         r[0].rows
     });
@@ -58,6 +92,32 @@ fn main() {
         );
     }
 
+    // ---- scheduler ablation: static vs dynamic under chunk skew -----------
+    common::header("E1.c static one-chunk-per-worker vs dynamic scheduling (skewed chunks)");
+    let skew_m = if smoke { 800 } else { 8_000 };
+    let skew_input = common::ensure_dataset(&dir, "skew", skew_m, 8, false);
+    let file_len = std::fs::metadata(&skew_input.path).unwrap().len();
+    let workers = 4;
+    let (slow_us, fast_us) = (200, 20);
+    let (chunks_static, static_s) = skewed_chunk_seconds(
+        &skew_input,
+        workers,
+        &SchedPolicy::static_one_per_worker(),
+        file_len,
+        slow_us,
+        fast_us,
+    );
+    let dynamic_policy = SchedPolicy { chunks_per_worker: 8, ..SchedPolicy::default() };
+    let (chunks_dynamic, dynamic_s) =
+        skewed_chunk_seconds(&skew_input, workers, &dynamic_policy, file_len, slow_us, fast_us);
+    let sched_speedup = static_s / dynamic_s.max(1e-9);
+    println!(
+        "{:>10} {:>8} {:>12}\n{:>10} {:>8} {:>12.4}\n{:>10} {:>8} {:>12.4}",
+        "schedule", "chunks", "wall(s)", "static", chunks_static, static_s, "dynamic",
+        chunks_dynamic, dynamic_s
+    );
+    println!("dynamic speedup on the straggler scenario: {sched_speedup:.2}x");
+
     // ---- simulate: the cluster curve ---------------------------------------
     // Job-intensity sweep: the shared-file-server knee sits where
     // N x per-worker byte demand crosses the link bandwidth, so the same
@@ -65,13 +125,13 @@ fn main() {
     // of CSV per worker) and CPU-bound for expensive ones (the fused SVD
     // pass measured ~40k rows/s in E6; the paper-literal virtual projection
     // ~3.5k rows/s in E3). All three simulated on the same file.
-    common::header("E1.e shared file server: saturation knee vs per-row compute cost");
+    common::header("E1.f shared file server: saturation knee vs per-row compute cost");
     println!(
         "{:>34} {:>12} {:>9} {:>9} {:>9} {:>9}",
         "job (measured rows/s)", "1 wrk(s)", "x2", "x4", "x8", "x16"
     );
     for (label, job_rate) in [
-        (format!("ata n=64 ({rate:.0})"), rate),
+        (format!("ata n={n} ({rate:.0})"), rate),
         ("fused svd pass (40k)".to_string(), 40_000.0),
         ("virtual projection (3.5k)".to_string(), 3_500.0),
     ] {
@@ -86,14 +146,21 @@ fn main() {
     }
 
     let partial_bytes = (n * n * 8) as u64;
-    for (label, params) in [
+    let mut sim_points = Vec::new();
+    for (key, label, params) in [
         (
-            "E1.c simulated cluster — shared file server (1 GbE)",
+            "shared_fs",
+            "E1.d simulated cluster — shared file server (1 GbE)",
             ClusterParams { cpu_rows_per_sec: rate, ..ClusterParams::default() },
         ),
         (
-            "E1.d simulated cluster — local file copies (paper §1's alternative)",
-            ClusterParams { cpu_rows_per_sec: rate, local_copies: true, ..ClusterParams::default() },
+            "local_copies",
+            "E1.e simulated cluster — local file copies (paper §1's alternative)",
+            ClusterParams {
+                cpu_rows_per_sec: rate,
+                local_copies: true,
+                ..ClusterParams::default()
+            },
         ),
     ] {
         common::header(label);
@@ -114,6 +181,34 @@ fn main() {
                 speedup,
                 100.0 * speedup / w as f64
             );
+            sim_points.push(format!(
+                "{{\"deployment\":\"{key}\",\"workers\":{w},\"total_s\":{:.6},\"speedup\":{speedup:.4}}}",
+                r.makespan
+            ));
         }
     }
+
+    let json = format!(
+        concat!(
+            "{{\"bench\":\"scalability\",\"smoke\":{},\"m\":{},\"n\":{},",
+            "\"measured_rows_per_s\":{:.1},",
+            "\"sched_skew\":{{\"workers\":{},\"skew_rows\":{},",
+            "\"chunks_static\":{},\"chunks_dynamic\":{},",
+            "\"static_s\":{:.6},\"dynamic_s\":{:.6},\"speedup\":{:.4}}},",
+            "\"sim\":[{}]}}\n"
+        ),
+        common::smoke(),
+        m,
+        n,
+        rate,
+        workers,
+        skew_m,
+        chunks_static,
+        chunks_dynamic,
+        static_s,
+        dynamic_s,
+        sched_speedup,
+        sim_points.join(",")
+    );
+    common::write_json("scalability", &json);
 }

@@ -9,7 +9,6 @@
 
 mod common;
 
-use std::io::Write as _;
 use std::sync::Arc;
 use tallfat::backend::native::NativeBackend;
 use tallfat::io::dataset::{gen_exact, Spectrum};
@@ -125,10 +124,7 @@ fn main() {
         base_time.as_secs_f64(),
         points.join(",")
     );
-    let out = "BENCH_update.json";
-    let mut f = std::fs::File::create(out).unwrap();
-    f.write_all(json.as_bytes()).unwrap();
-    println!("\nwrote {out}");
+    common::write_json("update", &json);
 }
 
 /// Recursive copy (the bench clones the base model per data point).

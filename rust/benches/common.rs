@@ -66,3 +66,21 @@ pub fn rate(items: u64, d: Duration) -> f64 {
 pub fn header(title: &str) {
     println!("\n### {title}");
 }
+
+/// CI smoke mode: `TALLFAT_BENCH_SMOKE=1` shrinks datasets/reps so the
+/// bench binaries (and their JSON emitters) can be exercised in seconds.
+pub fn smoke() -> bool {
+    match std::env::var("TALLFAT_BENCH_SMOKE") {
+        Ok(v) => v != "0" && !v.is_empty(),
+        Err(_) => false,
+    }
+}
+
+/// Write a bench's machine-readable JSON next to the cargo cwd, so the
+/// perf trajectory can be tracked run over run (the `bench_update`
+/// convention: `BENCH_<name>.json`).
+pub fn write_json(name: &str, json: &str) {
+    let out = format!("BENCH_{name}.json");
+    std::fs::write(&out, json).unwrap();
+    println!("\nwrote {out}");
+}

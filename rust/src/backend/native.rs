@@ -28,9 +28,11 @@ impl Backend for NativeBackend {
     }
 
     fn project_gram_block(&self, x: &Matrix, w: &Matrix) -> Result<(Matrix, Matrix)> {
-        let y = linalg::matmul(x, w)?;
-        let g = linalg::gram(&y);
-        Ok((y, g))
+        // Truly fused: YᵀY accumulates per row-stripe of the freshly
+        // computed Y in the same sweep, instead of matmul followed by a
+        // second full pass over Y (`linalg::matmul_gram` docs; the
+        // gram(matmul(..)) oracle cross-checks it in ops.rs and below).
+        linalg::matmul_gram(x, w)
     }
 
     fn tmul_block(&self, x: &Matrix, z: &Matrix) -> Result<Matrix> {

@@ -1,16 +1,23 @@
 //! [`ClusterExecutor`]: the distributed execution substrate.
 //!
-//! Implements [`crate::svd::Executor`] by shipping each pass description to
-//! the connected workers over the leader/worker RPC and reducing the
-//! returned partials. Only small state crosses the wire — sketch partials,
+//! Implements [`crate::svd::Executor`] by planning each pass's chunk
+//! schedule (fine-grained, per [`crate::svd::PassContext::sched`]),
+//! streaming the chunk tasks to the connected workers over the
+//! leader/worker RPC, and reducing the returned per-chunk partials in
+//! chunk order. Only small state crosses the wire — sketch partials,
 //! rotation matrices, column means; the tall data never does (the paper's
 //! point, made structural by [`super::proto`]).
+//!
+//! The chunk count is anchored to the worker count *at construction*, not
+//! the live count: every pass of a run (and the shards it leaves on disk)
+//! must share one chunk plan even if workers die or join mid-run.
 
 use super::leader::DistributedLeader;
 use super::proto::PhaseKind;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::splitproc;
+use crate::svd::executor::publish_sched_stats;
 use crate::svd::{Executor, Pass, PassContext, PassOutput};
 
 /// Map a wire phase back to the pass the worker should run. Inverse of
@@ -40,25 +47,29 @@ fn wire_parts<'a>(pass: &Pass<'a>) -> (PhaseKind, Option<&'a Matrix>) {
     }
 }
 
-/// Executor that fans passes out to remote TCP workers. Worker `i` always
-/// processes chunk `i` of the deterministic chunk plan both sides compute
-/// from the shared input file.
+/// Executor that streams chunk tasks to remote TCP workers through the
+/// leader's work queue.
 pub struct ClusterExecutor {
     leader: DistributedLeader,
+    /// Worker count at construction — anchors the chunk plan for every
+    /// pass of the run (see module docs).
+    planned_workers: usize,
 }
 
 impl ClusterExecutor {
     /// Wrap an already-accepted leader.
     pub fn new(leader: DistributedLeader) -> Self {
-        ClusterExecutor { leader }
+        let planned_workers = leader.worker_count().max(1);
+        ClusterExecutor { leader, planned_workers }
     }
 
-    /// Bind `listen` and wait for `workers` remote workers to join.
+    /// Bind `listen` and wait for `workers` remote workers to join; more
+    /// may join later mid-run.
     pub fn accept(listen: &str, workers: usize) -> Result<Self> {
         Ok(Self::new(DistributedLeader::accept(listen, workers)?))
     }
 
-    /// Number of connected workers (= chunk/shard count of every pass).
+    /// Number of currently live workers.
     pub fn workers(&self) -> usize {
         self.leader.worker_count()
     }
@@ -80,6 +91,13 @@ impl Executor for ClusterExecutor {
     }
 
     fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput> {
+        // Plan leader-side (the plan is a fixed point of its own count, so
+        // workers reproduce identical geometry from `(index, total)`).
+        let chunks = splitproc::plan_chunks_policy(ctx.input, self.planned_workers, &ctx.sched)?;
+        let total = chunks.len();
+        if total == 0 {
+            return Err(Error::Config("input has no rows to chunk".into()));
+        }
         let empty = Matrix::zeros(0, 0);
         let (kind, operand) = wire_parts(pass);
         let operand = operand.unwrap_or(&empty);
@@ -88,7 +106,7 @@ impl Executor for ClusterExecutor {
         } else {
             Matrix::from_vec(1, ctx.means.len(), ctx.means.to_vec())?
         };
-        let (rows, partials) = self.leader.run_phase(
+        let (rows, partials, stats) = self.leader.run_phase(
             kind,
             ctx.input,
             ctx.work_dir,
@@ -97,14 +115,20 @@ impl Executor for ClusterExecutor {
             ctx.kp,
             ctx.n,
             ctx.shard_format,
+            ctx.shard_epoch,
             operand,
             &means,
+            total,
+            ctx.sched.max_retries,
         )?;
+        // `partials` is in chunk order: the reduction matches the local
+        // executor's bit for bit.
         let partial = if partials.is_empty() {
             None
         } else {
             Some(splitproc::reduce_partials(partials)?)
         };
-        Ok(PassOutput { rows, shards: self.leader.worker_count(), partial })
+        publish_sched_stats(&stats);
+        Ok(PassOutput { rows, shards: total, partial, stats })
     }
 }

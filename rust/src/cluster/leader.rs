@@ -1,55 +1,166 @@
-//! The leader: accepts worker connections, broadcasts phase assignments,
-//! collects partials. The SVD math itself lives in [`crate::svd::pipeline`]
-//! — this module is pure transport, driven through
+//! The leader: accepts worker connections, streams chunk assignments to
+//! them, and collects per-chunk acks. The SVD math itself lives in
+//! [`crate::svd::pipeline`] — this module is transport plus the cluster
+//! side of the chunk scheduler, driven through
 //! [`crate::cluster::ClusterExecutor`].
+//!
+//! One recv thread per worker turns every connection into an event stream
+//! (`ChunkDone` / `ChunkFailed` / `Heartbeat` / death); the leader's event
+//! loop feeds a [`ChunkScheduler`]:
+//!
+//! * a worker finishing a chunk immediately gets the next queued chunk —
+//!   fast workers drain the queue, slow ones don't gate it;
+//! * a worker dying mid-chunk requeues its chunk with that worker
+//!   excluded, and a worker silent past [`STALE_AFTER_MS`] (no heartbeat)
+//!   is fenced the same way;
+//! * a worker connecting mid-run (the background accept loop keeps the
+//!   listen socket open) is sent the current phase setup and starts
+//!   pulling queued chunks;
+//! * once the queue drains, idle workers speculatively re-execute the
+//!   longest-running chunks; the first completion wins, duplicates are
+//!   dropped (shard writes are staged + atomically renamed, so a late
+//!   duplicate is harmless).
 
 use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::InputSpec;
 use crate::linalg::Matrix;
+use crate::splitproc::{ChunkScheduler, SchedStats};
 use crate::util::Logger;
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 static LOG: Logger = Logger::new("cluster.leader");
 
-/// One connected worker.
-struct WorkerConn {
+/// A worker silent for this long (no frame, no heartbeat — the heartbeat
+/// period is [`super::worker::HEARTBEAT_MS`]) is treated as dead and its
+/// in-flight chunk requeued.
+pub const STALE_AFTER_MS: u64 = 10_000;
+
+/// Event-loop poll period when no events arrive (drives the staleness
+/// sweep).
+const EVENT_POLL_MS: u64 = 1_000;
+
+/// One connected worker, leader-side: the write half of its socket plus
+/// scheduling state. The read half lives in its recv thread.
+struct Worker {
     stream: TcpStream,
+    alive: bool,
+    /// The `(phase, chunk)` assignment in flight, if any (workers execute
+    /// one chunk at a time).
+    busy: Option<(u64, u32)>,
+    busy_since: Instant,
+    last_seen: Instant,
 }
 
-impl WorkerConn {
-    fn send(&mut self, msg: &ToWorker) -> Result<()> {
-        msg.write(&mut self.stream)
-    }
+enum Event {
+    Msg { worker: usize, msg: ToLeader },
+    Dead { worker: usize, error: String },
+    Joined { stream: TcpStream },
+}
 
-    fn recv(&mut self) -> Result<ToLeader> {
-        ToLeader::read(&mut self.stream)
+fn send_to(worker: &mut Worker, msg: &ToWorker) -> Result<()> {
+    let mut stream: &TcpStream = &worker.stream;
+    msg.write(&mut stream)
+}
+
+fn recv_loop(mut reader: TcpStream, id: usize, tx: Sender<Event>) {
+    loop {
+        match ToLeader::read(&mut reader) {
+            Ok(msg) => {
+                if tx.send(Event::Msg { worker: id, msg }).is_err() {
+                    return;
+                }
+            }
+            Err(e) => {
+                let _ = tx.send(Event::Dead { worker: id, error: e.to_string() });
+                return;
+            }
+        }
     }
 }
 
-/// Accepts workers, runs phases, reduces partials.
+fn accept_loop(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) {
+    loop {
+        let accepted = listener.accept();
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        let Ok((stream, peer)) = accepted else { continue };
+        stream.set_nodelay(true).ok();
+        // Bound the hello wait so a rogue silent connection can't wedge
+        // late joins forever.
+        stream.set_read_timeout(Some(Duration::from_secs(2))).ok();
+        let hello = {
+            let mut rs: &TcpStream = &stream;
+            ToLeader::read(&mut rs)
+        };
+        match hello {
+            Ok(ToLeader::Hello { version }) if version == VERSION => {
+                stream.set_read_timeout(None).ok();
+                LOG.info(&format!("late worker from {peer} verified"));
+                if tx.send(Event::Joined { stream }).is_err() {
+                    return;
+                }
+            }
+            Ok(ToLeader::Hello { version }) => {
+                LOG.warn(&format!("rejected {peer}: protocol v{version}, leader v{VERSION}"));
+            }
+            Ok(other) => {
+                LOG.warn(&format!("rejected {peer}: expected hello, got {other:?}"));
+            }
+            Err(e) => {
+                LOG.warn(&format!("rejected {peer}: {e}"));
+            }
+        }
+    }
+}
+
+/// Accepts workers, schedules chunk-grained phases, reduces partials.
 pub struct DistributedLeader {
-    workers: Vec<WorkerConn>,
+    workers: Vec<Worker>,
+    events: Receiver<Event>,
+    events_tx: Sender<Event>,
+    listen_addr: String,
+    stop_accept: Arc<AtomicBool>,
+    next_phase: u64,
 }
 
 impl DistributedLeader {
-    /// Bind `listen` and wait for exactly `n` workers to say hello.
+    /// Bind `listen` and wait for exactly `n` workers to say hello; the
+    /// listen socket then stays open in the background so more workers can
+    /// join any later pass mid-run.
     pub fn accept(listen: &str, n: usize) -> Result<Self> {
         if n == 0 {
             return Err(Error::Config("remote-workers must be >= 1".into()));
         }
         let listener = TcpListener::bind(listen)?;
-        LOG.info(&format!("leader on {listen}, waiting for {n} workers"));
-        let mut workers = Vec::with_capacity(n);
+        let listen_addr = listener.local_addr()?.to_string();
+        LOG.info(&format!("leader on {listen_addr}, waiting for {n} workers"));
+        let (events_tx, events) = mpsc::channel();
+        let mut leader = DistributedLeader {
+            workers: Vec::new(),
+            events,
+            events_tx,
+            listen_addr,
+            stop_accept: Arc::new(AtomicBool::new(false)),
+            next_phase: 0,
+        };
         for i in 0..n {
             let (stream, peer) = listener.accept()?;
             stream.set_nodelay(true).ok();
-            let mut conn = WorkerConn { stream };
-            match conn.recv()? {
+            let hello = {
+                let mut rs: &TcpStream = &stream;
+                ToLeader::read(&mut rs)?
+            };
+            match hello {
                 ToLeader::Hello { version } if version == VERSION => {
                     LOG.info(&format!("worker {i} joined from {peer}"));
-                    workers.push(conn);
+                    leader.register(stream)?;
                 }
                 ToLeader::Hello { version } => {
                     return Err(Error::Config(format!(
@@ -61,16 +172,37 @@ impl DistributedLeader {
                 }
             }
         }
-        Ok(DistributedLeader { workers })
+        let tx = leader.events_tx.clone();
+        let stop = leader.stop_accept.clone();
+        std::thread::spawn(move || accept_loop(listener, tx, stop));
+        Ok(leader)
     }
 
-    /// Number of connected workers.
+    /// Add a verified worker connection: spawn its recv thread, track its
+    /// write half. The hello must already have been consumed.
+    fn register(&mut self, stream: TcpStream) -> Result<usize> {
+        let id = self.workers.len();
+        let reader = stream.try_clone()?;
+        let tx = self.events_tx.clone();
+        std::thread::spawn(move || recv_loop(reader, id, tx));
+        self.workers.push(Worker {
+            stream,
+            alive: true,
+            busy: None,
+            busy_since: Instant::now(),
+            last_seen: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    /// Number of live workers.
     pub fn worker_count(&self) -> usize {
-        self.workers.len()
+        self.workers.iter().filter(|w| w.alive).count()
     }
 
-    /// Run one phase on all workers (worker i gets chunk i) and collect
-    /// `(total_rows, partials)`.
+    /// Run one phase: broadcast the setup, stream `chunk_total` chunk
+    /// assignments through the scheduler (retry budget `max_retries` per
+    /// chunk), and collect `(total_rows, partials_in_chunk_order, stats)`.
     #[allow(clippy::too_many_arguments)]
     pub fn run_phase(
         &mut self,
@@ -82,88 +214,312 @@ impl DistributedLeader {
         kp: usize,
         cols: usize,
         shard_format: InputFormat,
+        shard_epoch: u32,
         operand: &Matrix,
         means: &Matrix,
-    ) -> Result<(u64, Vec<Matrix>)> {
-        // Frame-alignment invariant: the executor seam keeps leaders alive
-        // across passes, so this must never leave a connection with an
-        // unread reply in flight. Send to every worker (recording, not
-        // returning, the first error), then read a reply from exactly the
-        // workers a phase was delivered to.
-        let total = self.workers.len() as u32;
-        let mut failure: Option<Error> = None;
-        let mut sent = vec![false; self.workers.len()];
-        for (i, w) in self.workers.iter_mut().enumerate() {
-            let r = w.send(&ToWorker::Phase {
-                kind,
-                input_path: input.path.clone(),
-                input_format: input.format,
-                work_dir: work_dir.to_string(),
-                chunk_index: i as u32,
-                chunk_total: total,
-                block: block as u32,
-                seed,
-                kp: kp as u32,
-                cols: cols as u32,
-                shard_format,
-                operand: operand.clone(),
-                means: means.clone(),
-            });
-            match r {
-                Ok(()) => sent[i] = true,
-                Err(e) => {
-                    if failure.is_none() {
-                        failure = Some(Error::Other(format!("send to worker {i} failed: {e}")));
-                    }
+        chunk_total: usize,
+        max_retries: usize,
+    ) -> Result<(u64, Vec<Matrix>, SchedStats)> {
+        if chunk_total == 0 {
+            return Err(Error::Config("phase with zero chunks".into()));
+        }
+        self.next_phase += 1;
+        let phase_id = self.next_phase;
+        let setup = ToWorker::Phase {
+            id: phase_id,
+            kind,
+            input_path: input.path.clone(),
+            input_format: input.format,
+            work_dir: work_dir.to_string(),
+            chunk_total: chunk_total as u32,
+            block: block as u32,
+            seed,
+            kp: kp as u32,
+            cols: cols as u32,
+            shard_format,
+            shard_epoch,
+            operand: operand.clone(),
+            means: means.clone(),
+        };
+        for w in 0..self.workers.len() {
+            if self.workers[w].alive {
+                if let Err(e) = send_to(&mut self.workers[w], &setup) {
+                    LOG.warn(&format!("phase setup to worker {w} failed: {e}"));
+                    self.workers[w].alive = false;
+                    self.workers[w].busy = None;
                 }
             }
         }
-        let mut rows = 0u64;
-        let mut partials = Vec::with_capacity(self.workers.len());
-        for (i, w) in self.workers.iter_mut().enumerate() {
-            if !sent[i] {
-                continue;
+        // Staleness is judged within a pass: leader-side math between
+        // passes can take arbitrarily long with no events drained, so every
+        // worker gets a fresh grace period at pass start.
+        for w in &mut self.workers {
+            w.last_seen = Instant::now();
+        }
+        let sched = ChunkScheduler::new(chunk_total, max_retries);
+        let mut excluded: Vec<Vec<usize>> = vec![Vec::new(); chunk_total];
+        let mut rows_total = 0u64;
+        let mut partials: Vec<Option<Matrix>> = (0..chunk_total).map(|_| None).collect();
+        for w in 0..self.workers.len() {
+            self.assign_next(w, phase_id, &sched, &mut excluded);
+        }
+        while !sched.is_finished() {
+            // Fence zombies every tick — even when other workers' events
+            // (heartbeats) keep the channel busy, a worker silent past the
+            // deadline must still lose its chunks.
+            self.fence_stale_workers(phase_id, &sched, &mut excluded);
+            // Stalled? Nobody is executing anything (this phase or a stale
+            // straggler that could free up) and nothing can be assigned.
+            if !self.workers.iter().any(|w| w.alive && w.busy.is_some()) {
+                for w in 0..self.workers.len() {
+                    self.assign_next(w, phase_id, &sched, &mut excluded);
+                }
+                if !self.workers.iter().any(|w| w.alive && w.busy.is_some()) {
+                    return Err(Error::Other(format!(
+                        "{:?} pass stalled: {} of {chunk_total} chunks unfinished and no \
+                         assignable live workers",
+                        kind,
+                        sched.remaining()
+                    )));
+                }
             }
-            match w.recv() {
-                Ok(ToLeader::Partial { rows: r, partial }) => {
-                    rows += r;
-                    if partial.rows() > 0 {
-                        partials.push(partial);
-                    }
+            match self.events.recv_timeout(Duration::from_millis(EVENT_POLL_MS)) {
+                Ok(ev) => self.handle_event(
+                    ev,
+                    phase_id,
+                    &setup,
+                    &sched,
+                    &mut excluded,
+                    &mut rows_total,
+                    &mut partials,
+                ),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Other("leader event channel closed".into()));
                 }
-                Ok(ToLeader::Failed { message }) => {
-                    if failure.is_none() {
-                        failure = Some(Error::Other(format!("worker {i} failed: {message}")));
-                    }
-                }
-                Ok(other) => {
-                    if failure.is_none() {
-                        failure = Some(Error::parse(format!("unexpected reply: {other:?}")));
-                    }
-                }
-                // Connection-level error: this stream is gone either way;
-                // keep draining the rest so they stay aligned.
-                Err(e) => {
-                    if failure.is_none() {
-                        failure = Some(e);
-                    }
+            }
+            // Sweep idle workers after every event: a chunk requeued by
+            // one worker's death must not wait for the *idle* workers to
+            // produce an event of their own before it is handed out.
+            if !sched.is_finished() {
+                for w in 0..self.workers.len() {
+                    self.assign_next(w, phase_id, &sched, &mut excluded);
                 }
             }
         }
-        match failure {
-            Some(e) => Err(e),
-            None => Ok((rows, partials)),
+        let stats = sched.finish()?;
+        let ordered: Vec<Matrix> = partials.into_iter().flatten().collect();
+        Ok((rows_total, ordered, stats))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn handle_event(
+        &mut self,
+        ev: Event,
+        phase_id: u64,
+        setup: &ToWorker,
+        sched: &ChunkScheduler,
+        excluded: &mut [Vec<usize>],
+        rows_total: &mut u64,
+        partials: &mut [Option<Matrix>],
+    ) {
+        match ev {
+            Event::Msg { worker: w, msg } => {
+                self.workers[w].last_seen = Instant::now();
+                // A frame from a fenced worker proves the fence was wrong
+                // (it was slow, not gone): resurrect it. Duplicates are
+                // already safe, so the worst case is redundant work. It
+                // may have missed this phase's setup broadcast while
+                // fenced, so replay it before assigning — and clear the
+                // exclusions the fence added, or the resurrected worker
+                // stays barred from exactly the chunks it can still run.
+                if !self.workers[w].alive {
+                    LOG.warn(&format!("worker {w} reappeared after fencing: unfencing"));
+                    self.workers[w].alive = true;
+                    if send_to(&mut self.workers[w], setup).is_err() {
+                        self.workers[w].alive = false;
+                    } else {
+                        for ex in excluded.iter_mut() {
+                            ex.retain(|&x| x != w);
+                        }
+                    }
+                }
+                match msg {
+                    ToLeader::Heartbeat | ToLeader::Hello { .. } => {}
+                    ToLeader::ChunkDone { phase, chunk, rows, partial } => {
+                        // Only the execution the leader is tracking counts
+                        // — and only it clears the busy slot: a report for
+                        // an assignment the fence already released must
+                        // neither touch the scheduler nor wipe the
+                        // tracking of a newer assignment queued behind it.
+                        let tracked = self.workers[w].busy == Some((phase, chunk));
+                        if tracked {
+                            let elapsed = self.workers[w].busy_since.elapsed();
+                            self.workers[w].busy = None;
+                            if phase == phase_id && (chunk as usize) < partials.len() {
+                                // First completion wins; a duplicate's
+                                // result is dropped (its shard bytes are
+                                // identical).
+                                if sched.complete(chunk as usize, elapsed) {
+                                    *rows_total += rows;
+                                    if partial.rows() > 0 {
+                                        partials[chunk as usize] = Some(partial);
+                                    }
+                                }
+                            }
+                        }
+                        self.assign_next(w, phase_id, sched, excluded);
+                    }
+                    ToLeader::ChunkFailed { phase, chunk, message } => {
+                        let tracked = self.workers[w].busy == Some((phase, chunk));
+                        if tracked {
+                            self.workers[w].busy = None;
+                            if phase == phase_id && (chunk as usize) < partials.len() {
+                                LOG.warn(&format!(
+                                    "worker {w} failed chunk {chunk}: {message}"
+                                ));
+                                sched.fail(
+                                    chunk as usize,
+                                    Error::Other(format!("worker {w}: {message}")),
+                                );
+                            }
+                        }
+                        self.assign_next(w, phase_id, sched, excluded);
+                    }
+                }
+            }
+            Event::Dead { worker: w, error } => {
+                if self.workers[w].alive {
+                    LOG.warn(&format!("worker {w} died: {error}"));
+                    self.workers[w].alive = false;
+                    if let Some((ph, c)) = self.workers[w].busy.take() {
+                        if ph == phase_id {
+                            // Requeue its in-flight chunk, excluding the
+                            // dead worker (it may reconnect as a new id).
+                            excluded[c as usize].push(w);
+                            sched.release(c as usize);
+                        }
+                    }
+                }
+            }
+            Event::Joined { stream } => match self.register(stream) {
+                Ok(w) => {
+                    LOG.info(&format!("worker {w} joined mid-run"));
+                    if let Err(e) = send_to(&mut self.workers[w], setup) {
+                        LOG.warn(&format!("phase setup to joined worker {w} failed: {e}"));
+                        self.workers[w].alive = false;
+                    } else {
+                        self.assign_next(w, phase_id, sched, excluded);
+                    }
+                }
+                Err(e) => LOG.warn(&format!("failed to register joined worker: {e}")),
+            },
         }
     }
 
-    /// Tell every worker to exit. A dead connection must not stop the
-    /// others from being told — send to all, report the first error.
+    /// Hand the next chunk to an idle worker: a queued chunk it isn't
+    /// excluded from, or — once the queue is dry — a speculative duplicate
+    /// of the longest-running chunk on some *other* worker.
+    fn assign_next(
+        &mut self,
+        w: usize,
+        phase_id: u64,
+        sched: &ChunkScheduler,
+        excluded: &mut [Vec<usize>],
+    ) {
+        if !self.workers[w].alive || self.workers[w].busy.is_some() || sched.is_finished() {
+            return;
+        }
+        let pick = match sched.try_claim(|c| !excluded[c].contains(&w)) {
+            Some(c) => Some(c),
+            None => {
+                let mut best: Option<(usize, Instant)> = None;
+                for c in sched.running_chunks() {
+                    if excluded[c].contains(&w) {
+                        continue;
+                    }
+                    let runners: Vec<usize> = self
+                        .workers
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, wk)| wk.alive && wk.busy == Some((phase_id, c as u32)))
+                        .map(|(i, _)| i)
+                        .collect();
+                    // Duplicate only chunks running on exactly one other
+                    // worker (no speculation pile-ups).
+                    if runners.len() == 1 && runners[0] != w {
+                        let since = self.workers[runners[0]].busy_since;
+                        let longer_running = match best {
+                            None => true,
+                            Some((_, b)) => since < b,
+                        };
+                        if longer_running {
+                            best = Some((c, since));
+                        }
+                    }
+                }
+                best.map(|(c, _)| {
+                    sched.speculate(c);
+                    c
+                })
+            }
+        };
+        let Some(c) = pick else { return };
+        match send_to(&mut self.workers[w], &ToWorker::Assign { phase: phase_id, chunk: c as u32 })
+        {
+            Ok(()) => {
+                self.workers[w].busy = Some((phase_id, c as u32));
+                self.workers[w].busy_since = Instant::now();
+            }
+            Err(e) => {
+                LOG.warn(&format!("assign chunk {c} to worker {w} failed: {e}"));
+                self.workers[w].alive = false;
+                excluded[c].push(w);
+                sched.release(c);
+            }
+        }
+    }
+
+    /// Fence workers silent past [`STALE_AFTER_MS`]: mark dead, requeue
+    /// their in-flight chunks. Runs on event-loop idle ticks.
+    fn fence_stale_workers(
+        &mut self,
+        phase_id: u64,
+        sched: &ChunkScheduler,
+        excluded: &mut [Vec<usize>],
+    ) {
+        let cutoff = Duration::from_millis(STALE_AFTER_MS);
+        for w in 0..self.workers.len() {
+            if self.workers[w].alive && self.workers[w].last_seen.elapsed() > cutoff {
+                LOG.warn(&format!(
+                    "worker {w} silent for {:.1}s: fencing",
+                    self.workers[w].last_seen.elapsed().as_secs_f64()
+                ));
+                self.workers[w].alive = false;
+                if let Some((ph, c)) = self.workers[w].busy.take() {
+                    if ph == phase_id {
+                        excluded[c as usize].push(w);
+                        sched.release(c as usize);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Tell every still-connected worker to exit (fenced ones included —
+    /// they may merely have been slow) and stop accepting joiners. A dead
+    /// connection must not stop the others from being told; only failures
+    /// to live workers are reported.
     pub fn shutdown(&mut self) -> Result<()> {
+        self.stop_accept.store(true, Ordering::Relaxed);
+        // Wake the accept thread so it observes the stop flag.
+        let _ = TcpStream::connect(&self.listen_addr);
         let mut failure: Option<Error> = None;
-        for w in &mut self.workers {
-            if let Err(e) = w.send(&ToWorker::Shutdown) {
-                if failure.is_none() {
-                    failure = Some(e);
+        for i in 0..self.workers.len() {
+            let was_alive = self.workers[i].alive;
+            if let Err(e) = send_to(&mut self.workers[i], &ToWorker::Shutdown) {
+                if was_alive && failure.is_none() {
+                    failure = Some(Error::Other(format!("shutdown of worker {i} failed: {e}")));
                 }
             }
         }

@@ -1,4 +1,5 @@
-//! Multi-process Split-Process: the paper's actual deployment.
+//! Multi-process Split-Process: the paper's actual deployment, with
+//! chunk-grained dynamic scheduling and fault tolerance.
 //!
 //! The paper's §1 deployment is "each process on each machine has access to
 //! a large file ... either through copies of that file being in each
@@ -7,14 +8,33 @@
 //! it across real OS processes over TCP:
 //!
 //! * the **leader** (`tallfat svd --distributed --listen addr --remote-workers N`)
-//!   listens, hands each connecting worker a phase assignment (chunk index
-//!   + the small shared operands), and reduces the returned partials;
+//!   listens, broadcasts one `Phase` setup per pass (the small shared
+//!   operands), then streams `Assign { chunk }` tasks from a work queue —
+//!   many more chunks than workers (`--chunks-per-worker` /
+//!   `--chunk-rows`), each acked individually;
 //! * each **worker** (`tallfat worker --leader addr`) computes chunk
 //!   geometry locally from the shared file (deterministic
 //!   [`crate::splitproc::plan_chunks`] — both sides see the same bytes),
-//!   streams its rows through the same jobs the in-process engine uses, and
-//!   ships back its `k' x k'` / `n x k'` partial. Y/U shards are written to
-//!   the shared filesystem, exactly like the paper's `/tmp/C-%d.csv`.
+//!   streams each assigned chunk through the same jobs the in-process
+//!   engine uses, and ships back its `k' x k'` / `n x k'` partial per
+//!   chunk. Y/U shards are written to the shared filesystem, exactly like
+//!   the paper's `/tmp/C-%d.csv`, staged and atomically renamed.
+//!
+//! The chunk lifecycle under failure (see [`crate::splitproc::sched`]):
+//!
+//! ```text
+//! planned -> queued -> assigned -> done        (first completion wins)
+//!               ^          |
+//!               +- requeued+   worker died / chunk failed within budget
+//! ```
+//!
+//! A dying worker's in-flight chunks requeue with that worker excluded; a
+//! worker silent past the heartbeat deadline is fenced the same way; a
+//! worker connecting mid-pass is handed the current setup and starts
+//! pulling queued chunks; and once the queue drains, idle workers
+//! speculatively duplicate the longest-running chunks. A pass fails only
+//! when a chunk exhausts its retry budget (the error names the chunk) or
+//! no live worker can take the remaining work.
 //!
 //! Only *small* state crosses the wire (sketch partials, rotation
 //! matrices); the tall data never does — that is the paper's point, and the
@@ -23,10 +43,11 @@
 //! The SVD math never lives here: [`ClusterExecutor`] plugs this transport
 //! into the one executor-generic pipeline in [`crate::svd`] —
 //! `Svd::over(&input)?.executor(&mut cluster).run()` runs the exact same
-//! pass schedule the local executor does.
+//! pass schedule the local executor does, and reduces per-chunk partials
+//! in the same chunk order, so the factors match bit for bit.
 //!
 //! The protocol is a hand-rolled length-prefixed binary format ([`proto`]) —
-//! serde is unavailable offline, and the message set is 6 frames.
+//! serde is unavailable offline, and the message set is 7 frames.
 
 pub mod executor;
 pub mod leader;

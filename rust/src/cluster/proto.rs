@@ -11,9 +11,12 @@ use crate::linalg::Matrix;
 use std::io::{Read, Write};
 
 /// Protocol version — bumped on any frame change.
-/// v2: `Phase` gained `input_format`, `cols`, `shard_format`, and `means`;
-/// ColStats/Mult phase kinds.
-pub const VERSION: u32 = 2;
+/// v3: chunk-grained scheduling — `Phase` is a per-pass setup broadcast
+/// (operand/means shipped once, not per chunk) tagged with a phase id and
+/// the run's fixed `chunk_total` plus `shard_epoch`; `Assign` hands out one
+/// chunk; workers ack per chunk with `ChunkDone`/`ChunkFailed` and emit
+/// liveness `Heartbeat`s from a background thread.
+pub const VERSION: u32 = 3;
 
 /// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
 /// larger indicates a protocol error, not a legitimate partial).
@@ -69,8 +72,13 @@ fn format_from_u8(v: u8) -> Result<InputFormat> {
 /// Leader -> worker messages.
 #[derive(Debug)]
 pub enum ToWorker {
-    /// Run one phase over chunk `index` of `total`.
+    /// Per-pass setup, broadcast once to every worker (and replayed to
+    /// late joiners): everything a chunk execution needs *except* the
+    /// chunk index, which arrives per [`ToWorker::Assign`].
     Phase {
+        /// Monotonic phase id; `Assign` and chunk acks quote it so stale
+        /// frames from a previous pass are recognizable.
+        id: u64,
         kind: PhaseKind,
         /// Shared input file (visible to the worker — paper's assumption).
         input_path: String,
@@ -80,7 +88,8 @@ pub enum ToWorker {
         input_format: InputFormat,
         /// Shard/working directory on the shared filesystem.
         work_dir: String,
-        chunk_index: u32,
+        /// The run's fixed chunk count: both sides recompute identical
+        /// chunk geometry from `(index, chunk_total)` and the shared file.
         chunk_total: u32,
         /// Row-block size.
         block: u32,
@@ -94,12 +103,17 @@ pub enum ToWorker {
         cols: u32,
         /// Format of the Y/U0/U shards the worker writes.
         shard_format: InputFormat,
+        /// Shard-namespace epoch (power-iteration round) — see
+        /// [`crate::svd::PassContext::shard_epoch`].
+        shard_epoch: u32,
         /// Small shared operand: Ω override for power iterations (rows > 0),
         /// M for UrecoverTmul/Mult, P for RotateU, unused otherwise.
         operand: Matrix,
         /// Column means for PCA mode (1 x n; 0x0 = centering off).
         means: Matrix,
     },
+    /// Run chunk `chunk` of phase `phase` (the current `Phase` setup).
+    Assign { phase: u64, chunk: u32 },
     /// All phases done; worker may exit.
     Shutdown,
 }
@@ -109,11 +123,15 @@ pub enum ToWorker {
 pub enum ToLeader {
     /// Greeting with protocol version.
     Hello { version: u32 },
-    /// Phase finished: rows streamed + the commutative partial (possibly
-    /// 0x0 for phases that only write shards).
-    Partial { rows: u64, partial: Matrix },
-    /// Unrecoverable worker-side failure.
-    Failed { message: String },
+    /// One chunk finished: rows streamed + the commutative partial
+    /// (possibly 0x0 for phases that only write shards).
+    ChunkDone { phase: u64, chunk: u32, rows: u64, partial: Matrix },
+    /// One chunk failed worker-side; the leader decides (retry elsewhere
+    /// or fail the pass). The worker stays up.
+    ChunkFailed { phase: u64, chunk: u32, message: String },
+    /// Periodic liveness signal from the worker's heartbeat thread (sent
+    /// even while a chunk is executing).
+    Heartbeat,
 }
 
 // ---------------------------------------------------------------------------
@@ -214,43 +232,53 @@ fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
 // tags
 const T_PHASE: u8 = 0x01;
 const T_SHUTDOWN: u8 = 0x02;
+const T_ASSIGN: u8 = 0x03;
 const T_HELLO: u8 = 0x10;
-const T_PARTIAL: u8 = 0x11;
-const T_FAILED: u8 = 0x12;
+const T_CHUNK_DONE: u8 = 0x11;
+const T_CHUNK_FAILED: u8 = 0x12;
+const T_HEARTBEAT: u8 = 0x13;
 
 impl ToWorker {
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
         match self {
             ToWorker::Phase {
+                id,
                 kind,
                 input_path,
                 input_format,
                 work_dir,
-                chunk_index,
                 chunk_total,
                 block,
                 seed,
                 kp,
                 cols,
                 shard_format,
+                shard_epoch,
                 operand,
                 means,
             } => {
                 let mut buf = Vec::new();
+                buf.extend_from_slice(&id.to_le_bytes());
                 buf.push(*kind as u8);
                 put_string(&mut buf, input_path);
                 buf.push(format_to_u8(*input_format));
                 put_string(&mut buf, work_dir);
-                buf.extend_from_slice(&chunk_index.to_le_bytes());
                 buf.extend_from_slice(&chunk_total.to_le_bytes());
                 buf.extend_from_slice(&block.to_le_bytes());
                 buf.extend_from_slice(&seed.to_le_bytes());
                 buf.extend_from_slice(&kp.to_le_bytes());
                 buf.extend_from_slice(&cols.to_le_bytes());
                 buf.push(format_to_u8(*shard_format));
+                buf.extend_from_slice(&shard_epoch.to_le_bytes());
                 put_matrix(&mut buf, operand);
                 put_matrix(&mut buf, means);
                 write_frame(w, T_PHASE, &buf)
+            }
+            ToWorker::Assign { phase, chunk } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&chunk.to_le_bytes());
+                write_frame(w, T_ASSIGN, &buf)
             }
             ToWorker::Shutdown => write_frame(w, T_SHUTDOWN, &[]),
         }
@@ -258,25 +286,25 @@ impl ToWorker {
 
     pub fn read(r: &mut impl Read) -> Result<Self> {
         let (tag, payload) = read_frame(r)?;
+        let mut c = Cursor::new(&payload);
         match tag {
-            T_PHASE => {
-                let mut c = Cursor::new(&payload);
-                Ok(ToWorker::Phase {
-                    kind: PhaseKind::from_u8(c.u8()?)?,
-                    input_path: c.string()?,
-                    input_format: format_from_u8(c.u8()?)?,
-                    work_dir: c.string()?,
-                    chunk_index: c.u32()?,
-                    chunk_total: c.u32()?,
-                    block: c.u32()?,
-                    seed: c.u64()?,
-                    kp: c.u32()?,
-                    cols: c.u32()?,
-                    shard_format: format_from_u8(c.u8()?)?,
-                    operand: c.matrix()?,
-                    means: c.matrix()?,
-                })
-            }
+            T_PHASE => Ok(ToWorker::Phase {
+                id: c.u64()?,
+                kind: PhaseKind::from_u8(c.u8()?)?,
+                input_path: c.string()?,
+                input_format: format_from_u8(c.u8()?)?,
+                work_dir: c.string()?,
+                chunk_total: c.u32()?,
+                block: c.u32()?,
+                seed: c.u64()?,
+                kp: c.u32()?,
+                cols: c.u32()?,
+                shard_format: format_from_u8(c.u8()?)?,
+                shard_epoch: c.u32()?,
+                operand: c.matrix()?,
+                means: c.matrix()?,
+            }),
+            T_ASSIGN => Ok(ToWorker::Assign { phase: c.u64()?, chunk: c.u32()? }),
             T_SHUTDOWN => Ok(ToWorker::Shutdown),
             other => Err(Error::parse(format!("unexpected leader frame {other:#x}"))),
         }
@@ -287,17 +315,22 @@ impl ToLeader {
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
         match self {
             ToLeader::Hello { version } => write_frame(w, T_HELLO, &version.to_le_bytes()),
-            ToLeader::Partial { rows, partial } => {
+            ToLeader::ChunkDone { phase, chunk, rows, partial } => {
                 let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&chunk.to_le_bytes());
                 buf.extend_from_slice(&rows.to_le_bytes());
                 put_matrix(&mut buf, partial);
-                write_frame(w, T_PARTIAL, &buf)
+                write_frame(w, T_CHUNK_DONE, &buf)
             }
-            ToLeader::Failed { message } => {
+            ToLeader::ChunkFailed { phase, chunk, message } => {
                 let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&chunk.to_le_bytes());
                 put_string(&mut buf, message);
-                write_frame(w, T_FAILED, &buf)
+                write_frame(w, T_CHUNK_FAILED, &buf)
             }
+            ToLeader::Heartbeat => write_frame(w, T_HEARTBEAT, &[]),
         }
     }
 
@@ -306,8 +339,18 @@ impl ToLeader {
         let mut c = Cursor::new(&payload);
         match tag {
             T_HELLO => Ok(ToLeader::Hello { version: c.u32()? }),
-            T_PARTIAL => Ok(ToLeader::Partial { rows: c.u64()?, partial: c.matrix()? }),
-            T_FAILED => Ok(ToLeader::Failed { message: c.string()? }),
+            T_CHUNK_DONE => Ok(ToLeader::ChunkDone {
+                phase: c.u64()?,
+                chunk: c.u32()?,
+                rows: c.u64()?,
+                partial: c.matrix()?,
+            }),
+            T_CHUNK_FAILED => Ok(ToLeader::ChunkFailed {
+                phase: c.u64()?,
+                chunk: c.u32()?,
+                message: c.string()?,
+            }),
+            T_HEARTBEAT => Ok(ToLeader::Heartbeat),
             other => Err(Error::parse(format!("unexpected worker frame {other:#x}"))),
         }
     }
@@ -334,39 +377,43 @@ mod tests {
         let m = Matrix::from_fn(3, 2, |i, j| (i * 2 + j) as f64 * 0.5);
         let mu = Matrix::from_fn(1, 4, |_, j| j as f64 + 0.5);
         let msg = ToWorker::Phase {
+            id: 41,
             kind: PhaseKind::ProjectGram,
             input_path: "/data/a.csv".into(),
             input_format: InputFormat::Csv,
             work_dir: "/tmp/w".into(),
-            chunk_index: 2,
             chunk_total: 8,
             block: 256,
             seed: 0xDEAD_BEEF,
             kp: 32,
             cols: 4,
             shard_format: InputFormat::Csv,
+            shard_epoch: 2,
             operand: m.clone(),
             means: mu.clone(),
         };
         match roundtrip_worker(&msg) {
             ToWorker::Phase {
+                id,
                 kind,
                 input_path,
-                chunk_index,
                 chunk_total,
                 seed,
                 kp,
                 shard_format,
+                shard_epoch,
                 operand,
                 means,
                 ..
             } => {
+                assert_eq!(id, 41);
                 assert_eq!(kind, PhaseKind::ProjectGram);
                 assert_eq!(input_path, "/data/a.csv");
-                assert_eq!((chunk_index, chunk_total), (2, 8));
+                assert_eq!(chunk_total, 8);
                 assert_eq!(seed, 0xDEAD_BEEF);
                 assert_eq!(kp, 32);
                 assert_eq!(shard_format, InputFormat::Csv);
+                assert_eq!(shard_epoch, 2);
                 assert_eq!(operand.max_abs_diff(&m), 0.0);
                 assert_eq!(means.max_abs_diff(&mu), 0.0);
             }
@@ -378,17 +425,18 @@ mod tests {
     fn new_phase_kinds_roundtrip() {
         for kind in [PhaseKind::ColStats, PhaseKind::Mult] {
             let msg = ToWorker::Phase {
+                id: 1,
                 kind,
                 input_path: "/data/a.bin".into(),
                 input_format: InputFormat::Bin,
                 work_dir: "/tmp/w".into(),
-                chunk_index: 0,
                 chunk_total: 1,
                 block: 64,
                 seed: 1,
                 kp: 4,
                 cols: 4,
                 shard_format: InputFormat::Bin,
+                shard_epoch: 0,
                 operand: Matrix::zeros(0, 0),
                 means: Matrix::zeros(0, 0),
             };
@@ -401,20 +449,33 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_and_hello_roundtrip() {
+    fn assign_roundtrip() {
+        match roundtrip_worker(&ToWorker::Assign { phase: 7, chunk: 12 }) {
+            ToWorker::Assign { phase, chunk } => {
+                assert_eq!(phase, 7);
+                assert_eq!(chunk, 12);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_hello_heartbeat_roundtrip() {
         assert!(matches!(roundtrip_worker(&ToWorker::Shutdown), ToWorker::Shutdown));
         assert!(matches!(
             roundtrip_leader(&ToLeader::Hello { version: VERSION }),
             ToLeader::Hello { version: VERSION }
         ));
+        assert!(matches!(roundtrip_leader(&ToLeader::Heartbeat), ToLeader::Heartbeat));
     }
 
     #[test]
-    fn partial_roundtrip() {
+    fn chunk_done_roundtrip() {
         let m = Matrix::from_fn(4, 4, |i, j| (i + j) as f64);
-        match roundtrip_leader(&ToLeader::Partial { rows: 999, partial: m.clone() }) {
-            ToLeader::Partial { rows, partial } => {
-                assert_eq!(rows, 999);
+        let msg = ToLeader::ChunkDone { phase: 3, chunk: 9, rows: 999, partial: m.clone() };
+        match roundtrip_leader(&msg) {
+            ToLeader::ChunkDone { phase, chunk, rows, partial } => {
+                assert_eq!((phase, chunk, rows), (3, 9, 999));
                 assert_eq!(partial.max_abs_diff(&m), 0.0);
             }
             other => panic!("wrong message: {other:?}"),
@@ -422,9 +483,14 @@ mod tests {
     }
 
     #[test]
-    fn failed_roundtrip() {
-        match roundtrip_leader(&ToLeader::Failed { message: "disk on fire".into() }) {
-            ToLeader::Failed { message } => assert_eq!(message, "disk on fire"),
+    fn chunk_failed_roundtrip() {
+        let msg =
+            ToLeader::ChunkFailed { phase: 5, chunk: 2, message: "disk on fire".into() };
+        match roundtrip_leader(&msg) {
+            ToLeader::ChunkFailed { phase, chunk, message } => {
+                assert_eq!((phase, chunk), (5, 2));
+                assert_eq!(message, "disk on fire");
+            }
             other => panic!("wrong message: {other:?}"),
         }
     }
@@ -432,7 +498,9 @@ mod tests {
     #[test]
     fn truncated_frame_is_error() {
         let mut buf = Vec::new();
-        ToLeader::Partial { rows: 1, partial: Matrix::zeros(2, 2) }.write(&mut buf).unwrap();
+        ToLeader::ChunkDone { phase: 1, chunk: 0, rows: 1, partial: Matrix::zeros(2, 2) }
+            .write(&mut buf)
+            .unwrap();
         buf.truncate(buf.len() - 3);
         assert!(ToLeader::read(&mut buf.as_slice()).is_err());
     }
@@ -441,14 +509,16 @@ mod tests {
     fn oversized_frame_rejected() {
         let mut buf = Vec::new();
         buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
-        buf.push(T_PARTIAL);
+        buf.push(T_CHUNK_DONE);
         assert!(ToLeader::read(&mut buf.as_slice()).is_err());
     }
 
     #[test]
     fn zero_size_matrix_roundtrips() {
-        match roundtrip_leader(&ToLeader::Partial { rows: 0, partial: Matrix::zeros(0, 0) }) {
-            ToLeader::Partial { partial, .. } => assert_eq!(partial.shape(), (0, 0)),
+        let msg =
+            ToLeader::ChunkDone { phase: 0, chunk: 0, rows: 0, partial: Matrix::zeros(0, 0) };
+        match roundtrip_leader(&msg) {
+            ToLeader::ChunkDone { partial, .. } => assert_eq!(partial.shape(), (0, 0)),
             other => panic!("wrong message: {other:?}"),
         }
     }

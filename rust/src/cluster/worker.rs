@@ -1,73 +1,169 @@
-//! The worker process: connects to the leader, executes phase assignments
-//! over its chunk of the shared input file, ships partials back.
+//! The worker process: connects to the leader, pulls chunk assignments
+//! off the leader's queue, executes them over the shared input file, and
+//! acks each chunk individually.
 //!
-//! A phase assignment is decoded into the same [`crate::svd::Pass`]/[`PassContext`]
-//! pair the in-process [`crate::svd::LocalExecutor`] uses, then handed to
+//! A pass arrives as one `Phase` setup frame (operand, means, geometry)
+//! followed by any number of `Assign { chunk }` frames — the worker is a
+//! loop, not a one-shot: it keeps taking chunks as long as the leader has
+//! queued work, which is what lets a fast worker absorb a slow one's
+//! backlog and a late joiner pick up mid-pass. Each assignment is decoded
+//! into the same [`crate::svd::Pass`]/[`PassContext`] pair the in-process
+//! [`crate::svd::LocalExecutor`] uses, then handed to
 //! [`crate::svd::execute_pass_chunk`] — the pass structure is defined once
 //! and this module only does transport.
+//!
+//! A background thread emits a [`ToLeader::Heartbeat`] every
+//! [`HEARTBEAT_MS`] even while a chunk is executing, so the leader can
+//! tell "slow" from "gone" and requeue a dead worker's chunks.
 
-use super::proto::{ToLeader, ToWorker, VERSION};
+use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
 use crate::backend::BackendRef;
 use crate::cluster::pass_from_wire;
+use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::InputSpec;
 use crate::linalg::Matrix;
-use crate::splitproc;
-use crate::svd::{execute_pass_chunk, PassContext};
+use crate::rng::VirtualMatrix;
+use crate::splitproc::{self, ChunkMeta, SchedPolicy};
+use crate::svd::{execute_pass_chunk, Pass, PassContext};
 use crate::util::Logger;
 use std::net::TcpStream;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 
 static LOG: Logger = Logger::new("cluster.worker");
 
-/// Execute one phase assignment. Returns `(rows_streamed, partial)`.
-pub fn execute_phase(backend: &BackendRef, msg: &ToWorker) -> Result<(u64, Matrix)> {
-    let ToWorker::Phase {
-        kind,
-        input_path,
-        input_format,
-        work_dir,
-        chunk_index,
-        chunk_total,
-        block,
-        seed,
-        kp,
-        cols,
-        shard_format,
-        operand,
-        means,
-    } = msg
-    else {
-        return Err(Error::Other("execute_phase on non-phase message".into()));
-    };
-    let input = InputSpec { path: input_path.clone(), format: *input_format };
-    let n = *cols as usize;
-    let ci = *chunk_index as usize;
-    let total = *chunk_total as usize;
-    std::fs::create_dir_all(work_dir)?;
+/// Heartbeat period (leaders treat silence ~20x longer than this as death).
+pub const HEARTBEAT_MS: u64 = 500;
 
-    // Both sides compute the same deterministic chunk plan from the shared
-    // file — only (index, total) crosses the wire.
-    let chunks = splitproc::plan_chunks(&input, total)?;
-    let chunk = *chunks
-        .get(ci)
-        .ok_or_else(|| Error::Config(format!("chunk {ci} of {total} does not exist")))?;
+/// The decoded, worker-side state of one `Phase` setup frame, plus the
+/// per-phase caches: the chunk plan (one planning pass over the shared
+/// file instead of one per assignment) and the seed-derived Ω (one
+/// materialization per ProjectGram phase instead of one per chunk —
+/// matching what `LocalExecutor::run_pass` hoists).
+pub struct PhaseConfig {
+    pub id: u64,
+    pub kind: PhaseKind,
+    pub input: InputSpec,
+    pub work_dir: String,
+    pub chunk_total: usize,
+    pub block: usize,
+    pub seed: u64,
+    pub kp: usize,
+    pub cols: usize,
+    pub shard_format: InputFormat,
+    pub shard_epoch: u32,
+    pub operand: Matrix,
+    pub means: Vec<f64>,
+    plan: OnceLock<Vec<ChunkMeta>>,
+    omega: OnceLock<Matrix>,
+}
 
-    let means_vec: Vec<f64> = if means.rows() > 0 { means.row(0).to_vec() } else { Vec::new() };
+impl PhaseConfig {
+    /// Decode a [`ToWorker::Phase`] frame.
+    pub fn from_msg(msg: &ToWorker) -> Result<PhaseConfig> {
+        let ToWorker::Phase {
+            id,
+            kind,
+            input_path,
+            input_format,
+            work_dir,
+            chunk_total,
+            block,
+            seed,
+            kp,
+            cols,
+            shard_format,
+            shard_epoch,
+            operand,
+            means,
+        } = msg
+        else {
+            return Err(Error::Other("PhaseConfig::from_msg on non-phase message".into()));
+        };
+        Ok(PhaseConfig {
+            id: *id,
+            kind: *kind,
+            input: InputSpec { path: input_path.clone(), format: *input_format },
+            work_dir: work_dir.clone(),
+            chunk_total: *chunk_total as usize,
+            block: *block as usize,
+            seed: *seed,
+            kp: *kp as usize,
+            cols: *cols as usize,
+            shard_format: *shard_format,
+            shard_epoch: *shard_epoch,
+            operand: operand.clone(),
+            means: if means.rows() > 0 { means.row(0).to_vec() } else { Vec::new() },
+            plan: OnceLock::new(),
+            omega: OnceLock::new(),
+        })
+    }
+
+    /// Chunk `index` of this phase's plan, computing and caching the plan
+    /// on first use (lazy so a bad input surfaces as a per-chunk failure
+    /// the leader can handle, not a dead connection).
+    fn chunk(&self, index: usize) -> Result<ChunkMeta> {
+        let chunks = match self.plan.get() {
+            Some(chunks) => chunks,
+            None => {
+                // Both sides compute the same deterministic chunk plan
+                // from the shared file — only (index, total) crosses the
+                // wire. The leader's plan is a fixed point of
+                // `plan_chunks`, so replanning from the count alone
+                // reproduces its exact boundaries.
+                let computed = splitproc::plan_chunks(&self.input, self.chunk_total)?;
+                self.plan.get_or_init(|| computed)
+            }
+        };
+        chunks.get(index).copied().ok_or_else(|| {
+            Error::Config(format!("chunk {index} of {} does not exist", self.chunk_total))
+        })
+    }
+}
+
+/// Execute one chunk assignment of the current phase. Returns
+/// `(rows_streamed, partial)` — the partial is 0x0 for shard-only passes.
+pub fn execute_assignment(
+    backend: &BackendRef,
+    cfg: &PhaseConfig,
+    chunk_index: usize,
+) -> Result<(u64, Matrix)> {
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    let chunk = cfg.chunk(chunk_index)?;
     let ctx = PassContext {
-        input: &input,
+        input: &cfg.input,
         backend: backend.clone(),
-        work_dir: work_dir.as_str(),
-        shard_format: *shard_format,
-        block: *block as usize,
-        seed: *seed,
-        n,
-        kp: *kp as usize,
-        means: Arc::new(means_vec),
+        work_dir: cfg.work_dir.as_str(),
+        shard_format: cfg.shard_format,
+        block: cfg.block,
+        seed: cfg.seed,
+        n: cfg.cols,
+        kp: cfg.kp,
+        means: Arc::new(cfg.means.clone()),
+        // Scheduling happens leader-side; the worker only ever sees one
+        // chunk at a time.
+        sched: SchedPolicy::default(),
+        shard_epoch: cfg.shard_epoch,
     };
-    let pass = pass_from_wire(*kind, operand);
+    // Materialize a seed-derived Ω once per phase, not once per chunk
+    // (every chunk would regenerate identical bits).
+    let pass = if cfg.kind == PhaseKind::ProjectGram && cfg.operand.rows() == 0 {
+        let omega = cfg
+            .omega
+            .get_or_init(|| VirtualMatrix::projection(cfg.seed, cfg.cols, cfg.kp).materialize());
+        Pass::ProjectGram { omega: Some(omega) }
+    } else {
+        pass_from_wire(cfg.kind, &cfg.operand)
+    };
     let (rows, partial) = execute_pass_chunk(&ctx, &pass, &chunk)?;
     Ok((rows, partial.unwrap_or_else(|| Matrix::zeros(0, 0))))
+}
+
+fn send(writer: &Mutex<TcpStream>, msg: &ToLeader) -> Result<()> {
+    let guard = writer.lock().unwrap();
+    let mut stream: &TcpStream = &guard;
+    msg.write(&mut stream)
 }
 
 /// Serve one leader connection until `Shutdown`. Used by the `worker`
@@ -75,27 +171,80 @@ pub fn execute_phase(backend: &BackendRef, msg: &ToWorker) -> Result<(u64, Matri
 pub fn serve(stream: TcpStream, backend: BackendRef) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = stream.try_clone()?;
-    let mut writer = stream;
-    ToLeader::Hello { version: VERSION }.write(&mut writer)?;
+    let writer = Arc::new(Mutex::new(stream));
+    send(&writer, &ToLeader::Hello { version: VERSION })?;
+
+    // Liveness: heartbeat from a side thread so a long chunk execution
+    // doesn't read as death. The thread dies with the connection (its
+    // write fails) or at shutdown (the stop flag).
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb_stop = stop.clone();
+    let hb_writer = writer.clone();
+    // The handle is deliberately never joined — shutdown must not block on
+    // the heartbeat interval; the detached thread exits on its next tick
+    // (stop flag) or when its write fails on the closed socket.
+    let _heartbeat = std::thread::spawn(move || loop {
+        std::thread::sleep(std::time::Duration::from_millis(HEARTBEAT_MS));
+        if hb_stop.load(Ordering::Relaxed) {
+            break;
+        }
+        if send(&hb_writer, &ToLeader::Heartbeat).is_err() {
+            break;
+        }
+    });
+
+    let result = serve_loop(&mut reader, &writer, &backend);
+    stop.store(true, Ordering::Relaxed);
+    result
+}
+
+fn serve_loop(
+    reader: &mut TcpStream,
+    writer: &Mutex<TcpStream>,
+    backend: &BackendRef,
+) -> Result<()> {
+    let mut phase: Option<PhaseConfig> = None;
     loop {
-        let msg = ToWorker::read(&mut reader)?;
+        let msg = ToWorker::read(reader)?;
         match &msg {
             ToWorker::Shutdown => {
                 LOG.info("shutdown received");
                 return Ok(());
             }
-            ToWorker::Phase { kind, chunk_index, chunk_total, .. } => {
-                LOG.info(&format!("phase {kind:?} chunk {chunk_index}/{chunk_total}"));
-                match execute_phase(&backend, &msg) {
-                    Ok((rows, partial)) => {
-                        ToLeader::Partial { rows, partial }.write(&mut writer)?;
+            ToWorker::Phase { id, kind, chunk_total, .. } => {
+                LOG.info(&format!("phase {id} setup: {kind:?}, {chunk_total} chunks"));
+                phase = Some(PhaseConfig::from_msg(&msg)?);
+            }
+            ToWorker::Assign { phase: pid, chunk } => {
+                let reply = match phase.as_ref() {
+                    Some(cfg) if cfg.id == *pid => {
+                        LOG.debug(&format!(
+                            "phase {pid} chunk {chunk}/{}",
+                            cfg.chunk_total
+                        ));
+                        match execute_assignment(backend, cfg, *chunk as usize) {
+                            Ok((rows, partial)) => {
+                                ToLeader::ChunkDone { phase: *pid, chunk: *chunk, rows, partial }
+                            }
+                            Err(e) => {
+                                // Report and keep serving — the leader
+                                // decides (retry elsewhere or fail).
+                                LOG.error(&format!("chunk {chunk} failed: {e}"));
+                                ToLeader::ChunkFailed {
+                                    phase: *pid,
+                                    chunk: *chunk,
+                                    message: e.to_string(),
+                                }
+                            }
+                        }
                     }
-                    Err(e) => {
-                        // Report and keep serving — the leader decides.
-                        LOG.error(&format!("phase failed: {e}"));
-                        ToLeader::Failed { message: e.to_string() }.write(&mut writer)?;
-                    }
-                }
+                    _ => ToLeader::ChunkFailed {
+                        phase: *pid,
+                        chunk: *chunk,
+                        message: format!("assignment for unknown phase {pid}"),
+                    },
+                };
+                send(writer, &reply)?;
             }
         }
     }

@@ -94,6 +94,14 @@ pub struct RunConfig {
     pub shard_format: InputFormat,
     /// Relative cutoff for the sketch-stage guarded inverse `M = V_y Σ_y⁻¹`.
     pub sigma_cutoff_rel: f64,
+    /// Rows per scheduler chunk; 0 (default) derives the chunk count from
+    /// `chunks_per_worker` instead.
+    pub chunk_rows: usize,
+    /// Chunks planned per worker when `chunk_rows = 0`; 1 reproduces the
+    /// old static one-chunk-per-worker schedule.
+    pub chunks_per_worker: usize,
+    /// Retry budget per chunk before a pass fails.
+    pub chunk_retries: usize,
 }
 
 impl Default for RunConfig {
@@ -115,6 +123,9 @@ impl Default for RunConfig {
             center: false,
             shard_format: InputFormat::Bin,
             sigma_cutoff_rel: crate::svd::DEFAULT_SIGMA_CUTOFF_REL,
+            chunk_rows: 0,
+            chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
+            chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
         }
     }
 }
@@ -177,6 +188,15 @@ impl RunConfig {
             if let Some(v) = file.get_f64(section, "sigma_cutoff_rel")? {
                 self.sigma_cutoff_rel = v;
             }
+            if let Some(v) = file.get_usize(section, "chunk_rows")? {
+                self.chunk_rows = v;
+            }
+            if let Some(v) = file.get_usize(section, "chunks_per_worker")? {
+                self.chunks_per_worker = v;
+            }
+            if let Some(v) = file.get_usize(section, "chunk_retries")? {
+                self.chunk_retries = v;
+            }
         }
         Ok(())
     }
@@ -221,6 +241,9 @@ impl RunConfig {
             self.shard_format = InputFormat::parse(f)?;
         }
         self.sigma_cutoff_rel = args.f64_or("sigma-cutoff", self.sigma_cutoff_rel)?;
+        self.chunk_rows = args.usize_or("chunk-rows", self.chunk_rows)?;
+        self.chunks_per_worker = args.usize_or("chunks-per-worker", self.chunks_per_worker)?;
+        self.chunk_retries = args.usize_or("chunk-retries", self.chunk_retries)?;
         Ok(())
     }
 
@@ -241,6 +264,9 @@ impl RunConfig {
             center: self.center,
             exact_gram: self.exact_gram,
             sigma_cutoff_rel: self.sigma_cutoff_rel,
+            chunk_rows: self.chunk_rows,
+            chunks_per_worker: self.chunks_per_worker,
+            chunk_retries: self.chunk_retries,
         }
     }
 
@@ -337,6 +363,36 @@ mod tests {
         assert!((c.sigma_cutoff_rel - 1e-4).abs() < 1e-18);
         // Out-of-range cutoff rejected.
         c.sigma_cutoff_rel = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn chunk_knobs_parse_from_file_and_cli() {
+        let file = ConfigFile::parse_str(
+            "[svd]\nchunk_rows = 5000\nchunks_per_worker = 8\nchunk_retries = 1\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_file(&file).unwrap();
+        assert_eq!(c.chunk_rows, 5000);
+        assert_eq!(c.chunks_per_worker, 8);
+        assert_eq!(c.chunk_retries, 1);
+        let args = Args::parse(
+            "svd a.csv --chunk-rows 0 --chunks-per-worker 2 --chunk-retries 3"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.chunk_rows, 0);
+        assert_eq!(c.chunks_per_worker, 2);
+        assert_eq!(c.chunk_retries, 3);
+        // The scheduler policy view maps 1:1.
+        let p = c.svd_options().sched_policy();
+        assert_eq!(p.chunks_per_worker, 2);
+        assert_eq!(p.max_retries, 3);
+        // chunks_per_worker = 0 is rejected.
+        c.chunks_per_worker = 0;
         assert!(c.validate().is_err());
     }
 

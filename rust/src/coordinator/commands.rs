@@ -36,6 +36,25 @@ fn input_of(cfg: &RunConfig) -> Result<InputSpec> {
     Ok(InputSpec { path: cfg.input.clone(), format: cfg.format })
 }
 
+/// Print the run's chunk-scheduler counters (published per pass by the
+/// executors into the shared registry).
+fn print_sched_summary() {
+    let reg = crate::coordinator::server::MetricsRegistry::global();
+    if let Some(total) = reg.get("pass_chunks_total") {
+        let retried = reg.get("pass_chunks_retried").unwrap_or(0.0);
+        let speculated = reg.get("pass_chunks_speculated").unwrap_or(0.0);
+        println!(
+            "scheduler: {} chunks planned, {} executions ({} retried, {} speculated), \
+             last-pass skew {:.1} ms",
+            total,
+            total + retried + speculated,
+            retried,
+            speculated,
+            reg.get("pass_skew_ms").unwrap_or(0.0),
+        );
+    }
+}
+
 fn parse_spectrum(args: &Args, rank: usize) -> Result<Spectrum> {
     let scale = args.f64_or("scale", 10.0)?;
     match args.str_or("spectrum", "geometric").as_str() {
@@ -109,6 +128,7 @@ pub fn svd(args: &Args, exact: bool) -> Result<()> {
         builder.run()?
     };
     println!("{}", result.report.render());
+    print_sched_summary();
     println!(
         "m={} n={} k={}  sigma = [{}]",
         result.m,
@@ -172,6 +192,9 @@ pub fn update(args: &Args) -> Result<()> {
         .block(cfg.block)
         .seed(cfg.seed)
         .sigma_cutoff_rel(cfg.sigma_cutoff_rel)
+        .chunk_rows(cfg.chunk_rows)
+        .chunks_per_worker(cfg.chunks_per_worker)
+        .chunk_retries(cfg.chunk_retries)
         .keep_generations(args.usize_or("keep-generations", 2)?)
         .backend(make_backend(&cfg)?);
     // Only an *explicit* --work-dir overrides the builder's unique
@@ -201,6 +224,7 @@ pub fn update(args: &Args) -> Result<()> {
         builder.run()?
     };
     println!("{}", result.report.render());
+    print_sched_summary();
     println!(
         "generation {}: m={} n={} k={} (+{} rows)  sigma = [{}]",
         result.generation,

@@ -42,10 +42,15 @@ COMMANDS
                   [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
                   [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
                   [--save-model DIR] [--shard-format csv|bin] [--sigma-cutoff REL]
+                  [--chunks-per-worker C] [--chunk-rows R] [--chunk-retries N]
                   (--center = PCA mode: subtract column means, one extra pass;
                    --save-model persists a servable model directory;
                    --shard-format picks the Y/U intermediate shard format;
-                   --sigma-cutoff zeroes sketch values below REL * sigma_max)
+                   --sigma-cutoff zeroes sketch values below REL * sigma_max;
+                   --chunks-per-worker plans C scheduler chunks per worker
+                   [default 4; 1 = old static schedule], --chunk-rows caps a
+                   chunk at R rows instead, --chunk-retries bounds per-chunk
+                   retries before a pass fails [default 2])
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]
@@ -59,7 +64,9 @@ COMMANDS
                   [--reduce-latency S] [--jitter J] [--partial-bytes N]
   worker        join a distributed run         --leader HOST:PORT [--backend ...]
                 (the `svd` command becomes a leader with --distributed:
-                 --listen HOST:PORT --remote-workers N)
+                 --listen HOST:PORT --remote-workers N; chunks are scheduled
+                 dynamically — a worker may join mid-run and pick up queued
+                 chunks, and a dead worker's chunks are re-queued to the rest)
   serve         serve a saved model over HTTP  <model-dir> [--addr 127.0.0.1:9925]
                   [--backend native|xla|auto] [--cache-shards 4] [--batch-window-ms 2]
                   [--max-batch 64] [--reload-poll-ms 5000] [--max-requests N] [--once]
@@ -68,7 +75,8 @@ COMMANDS
                  --reload-poll-ms hot-swaps to new generations automatically)
   update        append rows to a saved model   <model-dir> --rows PATH [--oversample P]
                   [--workers W] [--block B] [--seed S] [--work-dir D] [--backend ...]
-                  [--keep-generations 2] [--rank K]
+                  [--keep-generations 2] [--rank K] [--chunks-per-worker C]
+                  [--chunk-rows R] [--chunk-retries N]
                 (streams only the new rows, merges with (k+r)-sized leader math,
                  writes the next immutable generation, repoints CURRENT, and
                  garbage-collects old generations; with --distributed the passes

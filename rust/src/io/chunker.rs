@@ -1,9 +1,14 @@
-//! The paper's `split_process` partitioning (§3).
+//! The paper's `split_process` partitioning (§3), at arbitrary granularity.
 //!
 //! For text inputs: divide the file into N byte ranges, then slide each
 //! boundary forward to the next newline so no row is split — exactly the
 //! `f.seek(s); f.readline(); end = f.tell()-1` logic in the paper's listing.
 //! For binary inputs: exact row-range division (no realignment needed).
+//!
+//! N is no longer the worker count: the dynamic scheduler
+//! ([`crate::splitproc::sched`]) plans many more chunks than workers
+//! (`chunks_per_worker`, or a row cap via [`chunk_count_for_rows`]) and
+//! feeds them through a work queue.
 
 use crate::error::Result;
 use std::fs::File;
@@ -61,6 +66,13 @@ pub fn chunk_byte_ranges(path: &str, n: usize) -> Result<Vec<ByteRange>> {
         .map(|w| ByteRange { start: w[0], end: w[1] })
         .filter(|r| !r.is_empty())
         .collect())
+}
+
+/// How many chunks cap each chunk at `chunk_rows` rows (the
+/// `RunConfig::chunk_rows` knob; min 1 so empty inputs still plan).
+pub fn chunk_count_for_rows(rows: u64, chunk_rows: usize) -> usize {
+    assert!(chunk_rows > 0);
+    (rows.div_ceil(chunk_rows as u64) as usize).max(1)
 }
 
 /// Split `rows` into `n` contiguous row ranges `[start, end)`, balanced to
@@ -176,6 +188,14 @@ mod tests {
         let path = tmp_file("one.csv", "1;2;3;4;5;6;7;8;9;10\n");
         let ranges = chunk_byte_ranges(&path, 4).unwrap();
         assert_eq!(ranges.len(), 1);
+    }
+
+    #[test]
+    fn chunk_count_caps_rows() {
+        assert_eq!(chunk_count_for_rows(100, 16), 7);
+        assert_eq!(chunk_count_for_rows(16, 16), 1);
+        assert_eq!(chunk_count_for_rows(17, 16), 2);
+        assert_eq!(chunk_count_for_rows(0, 16), 1);
     }
 
     #[test]

@@ -3,6 +3,14 @@
 //! The paper's workers write per-chunk outputs (`/tmp/Y-%d.csv`,
 //! `/tmp/C-%d.csv`) that the leader merges. [`ShardSet`] names, creates,
 //! enumerates, merges, and cleans those shard files.
+//!
+//! Writes are *staged*: each [`ShardWriter`] streams into a uniquely named
+//! `.tmp-*` sibling and atomically renames it over the final path at
+//! [`ShardWriter::finish`]. Under the dynamic chunk scheduler the same
+//! shard may be produced twice (retry after a partial write, or a
+//! speculative duplicate of a straggling chunk); staging makes every
+//! publish all-or-nothing, so duplicates — which compute identical bytes —
+//! are harmless and a failed attempt never leaves a torn shard behind.
 
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
@@ -10,6 +18,30 @@ use crate::io::binmat::{BinMatReader, BinMatWriter, DType};
 use crate::io::csv::CsvRowReader;
 use crate::linalg::Matrix;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Unique suffix for staged shard files: process id plus a process-wide
+/// counter (distinct across the threads of one worker; the pid separates
+/// concurrent worker processes on a shared filesystem).
+fn stage_suffix() -> String {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    format!("tmp-{}-{seq}", std::process::id())
+}
+
+/// Best-effort removal of leftover `*.tmp-*` staged files under `dir` —
+/// the litter of writers whose process was killed before `Drop` could
+/// clean up. Call only when no writers can be active in `dir` (e.g. at
+/// run start, before any pass).
+pub fn sweep_stale_stages(dir: impl AsRef<Path>) {
+    let Ok(entries) = std::fs::read_dir(dir.as_ref()) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        if name.to_string_lossy().contains(".tmp-") {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
 
 /// A family of shard files `<dir>/<stem>-<i>.<ext>` (one per worker).
 #[derive(Clone, Debug)]
@@ -46,18 +78,19 @@ impl ShardSet {
     }
 
     /// Open a streaming row writer for shard `i` (binary shards need `cols`).
+    /// The writer stages into a `.tmp-*` sibling and renames into place at
+    /// `finish()` — see the module docs.
     pub fn open_writer(&self, i: usize, cols: usize) -> Result<ShardWriter> {
-        match self.format {
+        let dst = self.shard_path(i);
+        let tmp = format!("{dst}.{}", stage_suffix());
+        let inner = match self.format {
             InputFormat::Csv => {
-                let f = std::fs::File::create(self.shard_path(i))?;
-                Ok(ShardWriter::Csv(std::io::BufWriter::with_capacity(1 << 20, f)))
+                let f = std::fs::File::create(&tmp)?;
+                WriterInner::Csv(std::io::BufWriter::with_capacity(1 << 20, f))
             }
-            InputFormat::Bin => Ok(ShardWriter::Bin(BinMatWriter::create(
-                &self.shard_path(i),
-                cols,
-                DType::F64,
-            )?)),
-        }
+            InputFormat::Bin => WriterInner::Bin(BinMatWriter::create(&tmp, cols, DType::F64)?),
+        };
+        Ok(ShardWriter { inner: Some(inner), tmp, dst })
     }
 
     /// Existing shard indices, sorted.
@@ -100,31 +133,65 @@ impl ShardSet {
     }
 }
 
-/// Row writer over either format.
-pub enum ShardWriter {
+enum WriterInner {
     Csv(std::io::BufWriter<std::fs::File>),
     Bin(BinMatWriter),
 }
 
+/// Staged row writer over either format: rows stream into a temp sibling,
+/// `finish()` publishes it atomically over the final shard path. Dropping
+/// an unfinished writer removes the temp file (best effort) so a failed
+/// chunk attempt leaves nothing behind.
+pub struct ShardWriter {
+    /// `Some` until `finish()` takes it; `None` afterwards (the Drop
+    /// cleanup keys off this).
+    inner: Option<WriterInner>,
+    tmp: String,
+    dst: String,
+}
+
 impl ShardWriter {
     pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
-        match self {
-            ShardWriter::Csv(w) => crate::io::csv::write_row(w, row),
-            ShardWriter::Bin(w) => w.write_row(row),
+        match self.inner.as_mut() {
+            Some(WriterInner::Csv(w)) => crate::io::csv::write_row(w, row),
+            Some(WriterInner::Bin(w)) => w.write_row(row),
+            None => Err(Error::Other("write_row on finished shard writer".into())),
         }
     }
 
-    pub fn finish(self) -> Result<()> {
-        match self {
-            ShardWriter::Csv(mut w) => {
+    fn flush_and_publish(&mut self) -> Result<()> {
+        match self.inner.take() {
+            Some(WriterInner::Csv(mut w)) => {
                 use std::io::Write;
                 w.flush()?;
-                Ok(())
             }
-            ShardWriter::Bin(w) => {
+            Some(WriterInner::Bin(w)) => {
                 w.finish()?;
-                Ok(())
             }
+            None => {}
+        }
+        std::fs::rename(&self.tmp, &self.dst)?;
+        Ok(())
+    }
+
+    /// Flush and atomically rename the staged file over the final path.
+    pub fn finish(mut self) -> Result<()> {
+        let res = self.flush_and_publish();
+        if res.is_err() {
+            let _ = std::fs::remove_file(&self.tmp);
+        }
+        res
+    }
+}
+
+impl Drop for ShardWriter {
+    fn drop(&mut self) {
+        // Reached with the inner writer still present only when `finish()`
+        // was never called (failed attempt): close the handle, then drop
+        // the partial staged file so retries and readers never see it.
+        if let Some(w) = self.inner.take() {
+            drop(w);
+            let _ = std::fs::remove_file(&self.tmp);
         }
     }
 }
@@ -189,5 +256,38 @@ mod tests {
     fn missing_shard_errors() {
         let set = ShardSet::new(tmp_dir("missing"), "Z", InputFormat::Csv).unwrap();
         assert!(set.merge_to_matrix(1).is_err());
+    }
+
+    #[test]
+    fn unfinished_writer_publishes_nothing() {
+        let dir = tmp_dir("staged");
+        let set = ShardSet::new(&dir, "Y", InputFormat::Csv).unwrap();
+        {
+            let mut w = set.open_writer(0, 2).unwrap();
+            w.write_row(&[1.0, 2.0]).unwrap();
+            // dropped without finish(): a failed chunk attempt
+        }
+        assert!(set.existing(1).is_empty(), "torn shard visible");
+        // No staged litter either.
+        let leftovers: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(leftovers.is_empty(), "staged temp files left behind");
+    }
+
+    #[test]
+    fn duplicate_writers_first_writer_wins_cleanly() {
+        // Two concurrent attempts at the same shard (speculative duplicate):
+        // both stage independently; each finish is an atomic publish of
+        // identical content, so readers always see a complete shard.
+        let set = ShardSet::new(tmp_dir("dup"), "U", InputFormat::Bin).unwrap();
+        let mut a = set.open_writer(0, 2).unwrap();
+        let mut b = set.open_writer(0, 2).unwrap();
+        a.write_row(&[1.0, 2.0]).unwrap();
+        b.write_row(&[1.0, 2.0]).unwrap();
+        a.finish().unwrap();
+        let first = set.merge_to_matrix(1).unwrap();
+        b.finish().unwrap();
+        let second = set.merge_to_matrix(1).unwrap();
+        assert_eq!(first.shape(), (1, 2));
+        assert_eq!(first.max_abs_diff(&second), 0.0);
     }
 }

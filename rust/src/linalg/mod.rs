@@ -15,6 +15,6 @@ pub mod tsqr;
 
 pub use eigen::{jacobi_eigh, EighOptions};
 pub use matrix::Matrix;
-pub use ops::{gram, gram_outer, matmul, matmul_tn};
+pub use ops::{gram, gram_outer, matmul, matmul_gram, matmul_tn};
 pub use qr::thin_qr;
 pub use svd_exact::{exact_svd, truncation_error, ExactSvd};

@@ -52,6 +52,78 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     Ok(c)
 }
 
+/// Fused `(C, C^T C) = (A B, (A B)^T (A B))` — the pass-1 hot path.
+///
+/// Computes each `BLOCK`-row stripe of `C = A B` and immediately folds
+/// those freshly produced rows into the Gram upper triangle while they are
+/// still cache-hot — one sweep over C, instead of `matmul` followed by a
+/// second full pass over the product (what `gram(matmul(..))`, the test
+/// oracle, does).
+pub fn matmul_gram(a: &Matrix, b: &Matrix) -> Result<(Matrix, Matrix)> {
+    if a.cols() != b.rows() {
+        return Err(Error::shape(format!(
+            "matmul_gram: ({},{}) x ({},{})",
+            a.rows(),
+            a.cols(),
+            b.rows(),
+            b.cols()
+        )));
+    }
+    let (m, n, p) = (a.rows(), a.cols(), b.cols());
+    let mut c = Matrix::zeros(m, p);
+    let mut g = Matrix::zeros(p, p);
+    {
+        let cd = c.data_mut();
+        let gd = g.data_mut();
+        let ad = a.data();
+        let bd = b.data();
+        for i0 in (0..m).step_by(BLOCK) {
+            let i1 = (i0 + BLOCK).min(m);
+            // Finish rows i0..i1 of C across all of B's columns...
+            for k0 in (0..n).step_by(BLOCK) {
+                let k1 = (k0 + BLOCK).min(n);
+                for i in i0..i1 {
+                    let arow = &ad[i * n..(i + 1) * n];
+                    let crow = &mut cd[i * p..(i + 1) * p];
+                    for k in k0..k1 {
+                        let aik = arow[k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &bd[k * p..(k + 1) * p];
+                        for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += aik * bv;
+                        }
+                    }
+                }
+            }
+            // ...then accumulate their Gram contribution (upper triangle)
+            // while the stripe is still hot.
+            for i in i0..i1 {
+                let crow = &cd[i * p..(i + 1) * p];
+                for j in 0..p {
+                    let cij = crow[j];
+                    if cij == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut gd[j * p + j..(j + 1) * p];
+                    for (gv, cv) in grow.iter_mut().zip(crow[j..].iter()) {
+                        *gv += cij * cv;
+                    }
+                }
+            }
+        }
+        // mirror upper -> lower
+        for i in 0..p {
+            for j in 0..i {
+                let v = gd[j * p + i];
+                gd[i * p + j] = v;
+            }
+        }
+    }
+    Ok((c, g))
+}
+
 /// `W = A^T B` where A and B share their row count — the pass-2 partial
 /// (`W = sum_i a_i ⊗ b_i`, commutative across rows/workers).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
@@ -237,6 +309,26 @@ mod tests {
             outer_accumulate(&mut g, x.row(i));
         }
         assert!(g.max_abs_diff(&gram(&x)) < 1e-10);
+    }
+
+    #[test]
+    fn matmul_gram_matches_oracle() {
+        // The cross-check oracle is the unfused formulation: full matmul,
+        // then a full gram sweep over the product.
+        for (m, n, p, seed) in [(5, 7, 3, 1), (64, 64, 64, 2), (130, 33, 17, 3), (1, 1, 1, 4)] {
+            let a = random_matrix(m, n, seed);
+            let b = random_matrix(n, p, seed + 200);
+            let (c, g) = matmul_gram(&a, &b).unwrap();
+            let c_want = matmul(&a, &b).unwrap();
+            let g_want = gram(&c_want);
+            assert!(c.max_abs_diff(&c_want) < 1e-10, "C {m}x{n}x{p}");
+            assert!(g.max_abs_diff(&g_want) < 1e-9, "G {m}x{n}x{p}");
+        }
+    }
+
+    #[test]
+    fn matmul_gram_rejects_mismatch() {
+        assert!(matmul_gram(&Matrix::zeros(2, 3), &Matrix::zeros(4, 2)).is_err());
     }
 
     #[test]

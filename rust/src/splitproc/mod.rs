@@ -1,24 +1,32 @@
-//! The Split-Process engine (paper §3).
+//! The Split-Process engine (paper §3), scheduled dynamically.
 //!
-//! Each worker is handed a chunk of the shared input file — newline-aligned
-//! byte ranges for CSV, exact row ranges for binary — opens its own reader,
-//! streams rows into a [`RowJob`], and calls `post()` when its chunk is
-//! drained. The leader then merges the per-worker results (a commutative
-//! reduction for every job in this system).
+//! Each worker streams chunks of the shared input file — newline-aligned
+//! byte ranges for CSV, exact row ranges for binary — through a [`RowJob`]
+//! (`exec_row` per row, `post()` when the chunk drains). The leader then
+//! merges the per-chunk results (a commutative reduction for every job in
+//! this system).
 //!
-//! This is the paper's `split_process` function as a library, generalized
-//! over jobs exactly like its `workobj` (`exec(line)` / `post()`).
+//! Unlike the paper's listing, chunks are not pinned one-per-worker: a pass
+//! plans many more chunks than workers ([`plan_chunks_policy`]) and feeds
+//! them through a shared work queue ([`sched::ChunkScheduler`]) with
+//! bounded per-chunk retry — so a skewed chunk no longer sets the pass's
+//! wall time and a poisoned chunk fails the pass with its name, not a
+//! mystery hang. [`run_scheduled`] is the queue-driven engine;
+//! [`run`]/[`run_chunked`] are the static one-chunk-per-worker view of it
+//! kept for the standalone subcommands and benches.
 
 pub mod block;
 pub mod job;
+pub mod sched;
 
 pub use block::{BlockJob, Blocked};
 pub use job::{CenteredJob, RowJob};
+pub use sched::{ChunkScheduler, Claim, SchedPolicy, SchedStats};
 
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::binmat::{BinMatHeader, BinMatReader};
-use crate::io::chunker::{chunk_byte_ranges, chunk_row_ranges, ByteRange};
+use crate::io::chunker::{chunk_byte_ranges, chunk_count_for_rows, chunk_row_ranges, ByteRange};
 use crate::io::csv::CsvRowReader;
 use crate::io::InputSpec;
 
@@ -36,14 +44,15 @@ pub struct ChunkMeta {
     pub row_range: Option<(u64, u64)>,
 }
 
-/// Plan the chunk assignment for an input without running anything.
-pub fn plan_chunks(input: &InputSpec, workers: usize) -> Result<Vec<ChunkMeta>> {
-    if workers == 0 {
-        return Err(Error::Config("workers must be >= 1".into()));
+/// Plan `target` chunks over an input without running anything (fewer come
+/// back when the file is too small for `target` boundaries).
+pub fn plan_chunks(input: &InputSpec, target: usize) -> Result<Vec<ChunkMeta>> {
+    if target == 0 {
+        return Err(Error::Config("chunk target must be >= 1".into()));
     }
     match input.format {
         InputFormat::Csv => {
-            let ranges = chunk_byte_ranges(&input.path, workers)?;
+            let ranges = chunk_byte_ranges(&input.path, target)?;
             let total = ranges.len();
             Ok(ranges
                 .into_iter()
@@ -58,7 +67,7 @@ pub fn plan_chunks(input: &InputSpec, workers: usize) -> Result<Vec<ChunkMeta>> 
         }
         InputFormat::Bin => {
             let h = BinMatHeader::read_from(&input.path)?;
-            let ranges = chunk_row_ranges(h.rows, workers);
+            let ranges = chunk_row_ranges(h.rows, target);
             let total = ranges.len();
             Ok(ranges
                 .into_iter()
@@ -70,6 +79,57 @@ pub fn plan_chunks(input: &InputSpec, workers: usize) -> Result<Vec<ChunkMeta>> 
                     row_range: Some(r),
                 })
                 .collect())
+        }
+    }
+}
+
+/// Plan the fine-grained chunk schedule for `workers` under `policy`:
+/// `chunk_rows` caps rows per chunk when set, otherwise
+/// `workers * chunks_per_worker` chunks are targeted.
+///
+/// The returned plan is a *fixed point* of [`plan_chunks`]: re-planning
+/// with the returned chunk count reproduces the exact same boundaries.
+/// That is what lets the cluster ship only `(index, total)` over the wire —
+/// every worker recomputes identical geometry from the shared file.
+pub fn plan_chunks_policy(
+    input: &InputSpec,
+    workers: usize,
+    policy: &SchedPolicy,
+) -> Result<Vec<ChunkMeta>> {
+    if workers == 0 {
+        return Err(Error::Config("workers must be >= 1".into()));
+    }
+    let mut target = if policy.chunk_rows > 0 {
+        chunk_count_for_rows(estimate_rows(input)?, policy.chunk_rows)
+    } else {
+        workers.saturating_mul(policy.chunks_per_worker.max(1))
+    }
+    .max(1);
+    loop {
+        let plan = plan_chunks(input, target)?;
+        if plan.len() >= target || plan.len() <= 1 {
+            return Ok(plan);
+        }
+        // Boundaries collapsed (short file): shrink the target until the
+        // plan is reproducible from its own count.
+        target = plan.len();
+    }
+}
+
+/// Row count for `chunk_rows` planning: exact (header read) for binary
+/// inputs, estimated from `file size / first line width` for CSV — a full
+/// row-count scan of the tall file per pass would double the pass's I/O,
+/// and `chunk_rows` is a granularity target, not an exactness contract.
+fn estimate_rows(input: &InputSpec) -> Result<u64> {
+    match input.format {
+        InputFormat::Bin => Ok(BinMatHeader::read_from(&input.path)?.rows),
+        InputFormat::Csv => {
+            use std::io::BufRead;
+            let size = std::fs::metadata(&input.path)?.len();
+            let mut reader = std::io::BufReader::new(std::fs::File::open(&input.path)?);
+            let mut first = Vec::new();
+            reader.read_until(b'\n', &mut first)?;
+            Ok(size / (first.len() as u64).max(1))
         }
     }
 }
@@ -111,7 +171,9 @@ pub struct WorkerResult<J> {
     pub job: J,
 }
 
-/// Run a job family over the input with `workers` parallel workers.
+/// Run a job family over the input with `workers` parallel workers, one
+/// chunk per worker (the paper's static schedule — the standalone
+/// subcommands and benches keep this shape).
 ///
 /// `factory(chunk)` builds the per-chunk job (the paper constructs a
 /// `workobj` per process with `ci` = chunk index). Results come back in
@@ -128,33 +190,81 @@ where
     })
 }
 
-/// Run an arbitrary per-chunk computation with one thread per chunk and
-/// collect the results in chunk order. Generalizes [`run`] for callers that
-/// build their own jobs (the [`crate::svd::executor::LocalExecutor`]).
+/// [`run_scheduled`] under the static one-chunk-per-worker policy —
+/// generalizes [`run`] for callers that build their own jobs.
 pub fn run_chunked<T, F>(input: &InputSpec, workers: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(&ChunkMeta) -> Result<T> + Sync,
 {
-    let chunks = plan_chunks(input, workers)?;
-    let results: Vec<Result<T>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = chunks
-            .iter()
-            .map(|chunk| {
-                let f = &f;
-                let chunk = *chunk;
-                scope.spawn(move || f(&chunk))
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| {
-                h.join()
-                    .unwrap_or_else(|_| Err(Error::Other("worker panicked".into())))
-            })
-            .collect()
+    Ok(run_scheduled(input, workers, &SchedPolicy::static_one_per_worker(), f)?.0)
+}
+
+/// The queue-driven engine: plan chunks under `policy`, run `f` over each
+/// through a `workers`-thread pool fed by a [`ChunkScheduler`] (bounded
+/// retry on chunk failure, a panic counts as a failed attempt), and return
+/// the per-chunk results **in chunk order** plus the pass's scheduling
+/// stats.
+pub fn run_scheduled<T, F>(
+    input: &InputSpec,
+    workers: usize,
+    policy: &SchedPolicy,
+    f: F,
+) -> Result<(Vec<T>, SchedStats)>
+where
+    T: Send,
+    F: Fn(&ChunkMeta) -> Result<T> + Sync,
+{
+    let chunks = plan_chunks_policy(input, workers, policy)?;
+    if chunks.is_empty() {
+        return Ok((Vec::new(), SchedStats::default()));
+    }
+    let sched = ChunkScheduler::new(chunks.len(), policy.max_retries);
+    let results: Vec<std::sync::Mutex<Option<T>>> =
+        chunks.iter().map(|_| std::sync::Mutex::new(None)).collect();
+    let threads = workers.max(1).min(chunks.len());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                match sched.claim_blocking() {
+                    Claim::Finished => break,
+                    Claim::Run(i) => {
+                        let t0 = std::time::Instant::now();
+                        let outcome = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| f(&chunks[i])),
+                        );
+                        match outcome {
+                            Ok(Ok(v)) => {
+                                if sched.complete(i, t0.elapsed()) {
+                                    *results[i].lock().unwrap() = Some(v);
+                                }
+                            }
+                            Ok(Err(e)) => {
+                                sched.fail(i, e);
+                            }
+                            Err(_) => {
+                                sched.fail(
+                                    i,
+                                    Error::Other(format!("chunk {i} worker panicked")),
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
     });
-    results.into_iter().collect()
+    let stats = sched.finish()?;
+    let mut out = Vec::with_capacity(results.len());
+    for (i, slot) in results.into_iter().enumerate() {
+        match slot.into_inner().unwrap() {
+            Some(v) => out.push(v),
+            None => {
+                return Err(Error::Other(format!("chunk {i} completed without a result")));
+            }
+        }
+    }
+    Ok((out, stats))
 }
 
 /// Sum per-worker partial matrices — the global reduce of the paper's
@@ -290,5 +400,134 @@ mod tests {
         let r = reduce_partials(vec![a, b]).unwrap();
         assert_eq!(r.get(0, 0), 4.0);
         assert!(reduce_partials(vec![]).is_err());
+    }
+
+    #[test]
+    fn dynamic_policy_plans_more_chunks_than_workers() {
+        let input = write_csv("dyn.csv", 120);
+        let policy = SchedPolicy { chunks_per_worker: 4, ..SchedPolicy::default() };
+        let (results, stats) = run_scheduled(&input, 3, &policy, |chunk| {
+            let mut job = SumJob { rows: 0, sum: 0.0, posted: false };
+            let rows = run_chunk(&input, chunk, &mut job)?;
+            Ok((rows, job.sum))
+        })
+        .unwrap();
+        assert!(results.len() > 3, "got {} chunks", results.len());
+        assert_eq!(stats.chunks, results.len());
+        let rows: u64 = results.iter().map(|(r, _)| r).sum();
+        let sum: f64 = results.iter().map(|(_, s)| s).sum();
+        assert_eq!(rows, 120);
+        assert!((sum - expected_sum(120)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chunk_rows_policy_caps_chunk_size() {
+        let input = write_bin("caprows.bin", 100);
+        let policy = SchedPolicy { chunk_rows: 16, ..SchedPolicy::default() };
+        let chunks = plan_chunks_policy(&input, 2, &policy).unwrap();
+        assert_eq!(chunks.len(), 100usize.div_ceil(16));
+        for c in &chunks {
+            let (s, e) = c.row_range.unwrap();
+            assert!(e - s <= 16, "chunk of {} rows", e - s);
+        }
+    }
+
+    #[test]
+    fn chunk_rows_policy_estimates_csv_without_full_scan() {
+        // CSV row counts are estimated from size / first-line width: for a
+        // roughly uniform file the plan must land near rows/chunk_rows.
+        let input = write_csv("caprows.csv", 120);
+        let policy = SchedPolicy { chunk_rows: 20, ..SchedPolicy::default() };
+        let chunks = plan_chunks_policy(&input, 2, &policy).unwrap();
+        assert!(
+            (4..=12).contains(&chunks.len()),
+            "expected ~6 chunks, planned {}",
+            chunks.len()
+        );
+    }
+
+    #[test]
+    fn policy_plan_is_a_fixed_point_of_its_count() {
+        // Tiny file: the fine-grained target collapses; the plan must
+        // still be reproducible from its own chunk count (the cluster
+        // ships only (index, total) over the wire).
+        let input = write_csv("fixedpoint.csv", 5);
+        let policy = SchedPolicy { chunks_per_worker: 8, ..SchedPolicy::default() };
+        let plan = plan_chunks_policy(&input, 4, &policy).unwrap();
+        let replan = plan_chunks(&input, plan.len()).unwrap();
+        assert_eq!(plan.len(), replan.len());
+        for (a, b) in plan.iter().zip(replan.iter()) {
+            assert_eq!(a.byte_range, b.byte_range);
+            assert_eq!(a.row_range, b.row_range);
+        }
+    }
+
+    #[test]
+    fn poisoned_chunk_retries_then_surfaces_named_error() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let input = write_csv("poison.csv", 60);
+        let attempts = AtomicUsize::new(0);
+        let policy = SchedPolicy {
+            chunks_per_worker: 3,
+            max_retries: 2,
+            ..SchedPolicy::default()
+        };
+        let err = run_scheduled(&input, 2, &policy, |chunk| {
+            if chunk.index == 2 {
+                attempts.fetch_add(1, Ordering::SeqCst);
+                return Err(Error::Other("bad rows on disk".into()));
+            }
+            let mut job = SumJob { rows: 0, sum: 0.0, posted: false };
+            run_chunk(&input, chunk, &mut job)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("chunk 2"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+        assert!(err.contains("bad rows on disk"), "{err}");
+        assert_eq!(attempts.load(Ordering::SeqCst), 3, "1 try + 2 retries");
+    }
+
+    #[test]
+    fn flaky_chunk_recovers_via_retry() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let input = write_csv("flaky.csv", 80);
+        let failures = AtomicUsize::new(0);
+        let policy = SchedPolicy {
+            chunks_per_worker: 4,
+            max_retries: 2,
+            ..SchedPolicy::default()
+        };
+        let (results, stats) = run_scheduled(&input, 2, &policy, |chunk| {
+            if chunk.index == 1 && failures.fetch_add(1, Ordering::SeqCst) == 0 {
+                return Err(Error::Other("transient".into()));
+            }
+            let mut job = SumJob { rows: 0, sum: 0.0, posted: false };
+            run_chunk(&input, chunk, &mut job)
+        })
+        .unwrap();
+        let rows: u64 = results.iter().sum();
+        assert_eq!(rows, 80, "all rows seen despite the transient failure");
+        assert!(stats.retried >= 1);
+    }
+
+    #[test]
+    fn panicking_chunk_counts_as_failed_attempt() {
+        let input = write_csv("panic.csv", 40);
+        let policy = SchedPolicy {
+            chunks_per_worker: 2,
+            max_retries: 0,
+            ..SchedPolicy::default()
+        };
+        let err = run_scheduled(&input, 2, &policy, |chunk| -> Result<u64> {
+            if chunk.index == 0 {
+                panic!("chunk job blew up");
+            }
+            Ok(0)
+        })
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("chunk 0"), "{err}");
+        assert!(err.contains("panicked"), "{err}");
     }
 }

@@ -1,0 +1,431 @@
+//! The dynamic chunk scheduler shared by both executors.
+//!
+//! A pass used to be one chunk per worker: wall time = slowest worker,
+//! fault tolerance = none. [`ChunkScheduler`] replaces that with a work
+//! queue over many-more-chunks-than-workers and a small per-chunk state
+//! machine:
+//!
+//! ```text
+//!            +----------------------------- retry (budget left) ---+
+//!            v                                                     |
+//! planned -> queued -> assigned/running -+-> done (first completion wins)
+//!            ^                           |
+//!            +--- requeued (runner died) +-> failed (budget exhausted
+//!                                             => pass fails, names chunk)
+//! ```
+//!
+//! * **Bounded retry** — a failed execution requeues the chunk until its
+//!   retry budget ([`SchedPolicy::max_retries`]) is spent; exhaustion fails
+//!   the whole pass with an error naming the chunk.
+//! * **Release** — when a runner vanishes (worker death) its chunk goes
+//!   back to the queue without consuming retry budget.
+//! * **Speculation** — at end of pass an idle worker may duplicate a
+//!   still-running chunk ([`ChunkScheduler::speculate`]); the first
+//!   completion is recorded, duplicates are dropped. Shard writes are
+//!   staged + atomically renamed ([`crate::io::writer::ShardWriter`]), so a
+//!   late duplicate publishing identical bytes is harmless.
+//!
+//! The in-process [`crate::splitproc::run_scheduled`] drives it with
+//! blocking claims from a thread pool; the cluster leader drives the same
+//! state machine event-style with [`ChunkScheduler::try_claim`].
+
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Default [`SchedPolicy::chunks_per_worker`]: enough slack for the queue
+/// to absorb a ~4x skew between the fastest and slowest chunk.
+pub const DEFAULT_CHUNKS_PER_WORKER: usize = 4;
+
+/// Default [`SchedPolicy::max_retries`] per chunk.
+pub const DEFAULT_CHUNK_RETRIES: usize = 2;
+
+/// Chunk-scheduling knobs (surfaced as `RunConfig::chunk_rows` /
+/// `chunks_per_worker` / `chunk_retries` and the matching CLI flags).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedPolicy {
+    /// Target rows per chunk; `0` = derive the chunk count from
+    /// `chunks_per_worker` instead (the default).
+    pub chunk_rows: usize,
+    /// Chunks planned per worker when `chunk_rows == 0`. `1` reproduces
+    /// the old static one-chunk-per-worker schedule.
+    pub chunks_per_worker: usize,
+    /// Extra executions a chunk may consume after its first failure
+    /// before the pass fails.
+    pub max_retries: usize,
+}
+
+impl Default for SchedPolicy {
+    fn default() -> Self {
+        SchedPolicy {
+            chunk_rows: 0,
+            chunks_per_worker: DEFAULT_CHUNKS_PER_WORKER,
+            max_retries: DEFAULT_CHUNK_RETRIES,
+        }
+    }
+}
+
+impl SchedPolicy {
+    /// The pre-scheduler behavior: one chunk per worker, fail-fast.
+    pub fn static_one_per_worker() -> Self {
+        SchedPolicy { chunk_rows: 0, chunks_per_worker: 1, max_retries: 0 }
+    }
+}
+
+/// What one pass's scheduling looked like (published as `pass_*` metrics
+/// and carried on [`crate::svd::PassOutput`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SchedStats {
+    /// Chunks the pass was planned into.
+    pub chunks: usize,
+    /// Executions that were retries after a failure.
+    pub retried: usize,
+    /// Speculative duplicate executions of straggling chunks.
+    pub speculated: usize,
+    /// Slowest minus median chunk wall time, in milliseconds.
+    pub skew_ms: f64,
+}
+
+impl SchedStats {
+    /// Merge another pass's stats into an accumulated view.
+    pub fn absorb(&mut self, other: &SchedStats) {
+        self.chunks += other.chunks;
+        self.retried += other.retried;
+        self.speculated += other.speculated;
+        self.skew_ms = self.skew_ms.max(other.skew_ms);
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum State {
+    Queued,
+    Running,
+    Done,
+}
+
+struct Slot {
+    state: State,
+    /// Concurrent executions of this chunk (> 1 under speculation).
+    running: usize,
+    attempts_left: usize,
+    /// Wall time of the first (recorded) completion.
+    elapsed_ms: f64,
+}
+
+struct Inner {
+    slots: Vec<Slot>,
+    queue: VecDeque<usize>,
+    done: usize,
+    retried: usize,
+    speculated: usize,
+    fatal: Option<Error>,
+}
+
+/// Outcome of a blocking claim.
+pub enum Claim {
+    /// Execute this chunk.
+    Run(usize),
+    /// Every chunk is done (or the pass already failed) — stop.
+    Finished,
+}
+
+/// The shared per-pass chunk state machine (see module docs).
+pub struct ChunkScheduler {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    max_retries: usize,
+}
+
+impl ChunkScheduler {
+    pub fn new(chunks: usize, max_retries: usize) -> Self {
+        let slots = (0..chunks)
+            .map(|_| Slot {
+                state: State::Queued,
+                running: 0,
+                attempts_left: max_retries,
+                elapsed_ms: 0.0,
+            })
+            .collect();
+        ChunkScheduler {
+            inner: Mutex::new(Inner {
+                slots,
+                queue: (0..chunks).collect(),
+                done: 0,
+                retried: 0,
+                speculated: 0,
+                fatal: None,
+            }),
+            cv: Condvar::new(),
+            max_retries,
+        }
+    }
+
+    /// Blocking claim for thread-pool workers: waits while the queue is
+    /// empty but other chunks are still in flight (their failure may
+    /// requeue work).
+    pub fn claim_blocking(&self) -> Claim {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.fatal.is_some() || g.done == g.slots.len() {
+                return Claim::Finished;
+            }
+            if let Some(i) = g.queue.pop_front() {
+                g.slots[i].state = State::Running;
+                g.slots[i].running += 1;
+                return Claim::Run(i);
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking claim for the event-driven cluster leader. `eligible`
+    /// filters queued chunks (worker exclusion after a death); ineligible
+    /// chunks stay queued for other workers.
+    pub fn try_claim(&self, eligible: impl Fn(usize) -> bool) -> Option<usize> {
+        let mut g = self.inner.lock().unwrap();
+        if g.fatal.is_some() {
+            return None;
+        }
+        for _ in 0..g.queue.len() {
+            let i = g.queue.pop_front().expect("queue length checked");
+            if eligible(i) {
+                g.slots[i].state = State::Running;
+                g.slots[i].running += 1;
+                return Some(i);
+            }
+            g.queue.push_back(i);
+        }
+        None
+    }
+
+    /// Chunks currently assigned/running — the speculation candidates.
+    pub fn running_chunks(&self) -> Vec<usize> {
+        let g = self.inner.lock().unwrap();
+        (0..g.slots.len())
+            .filter(|&i| g.slots[i].state == State::Running && g.slots[i].running > 0)
+            .collect()
+    }
+
+    /// Record an extra, speculative execution of a running chunk.
+    pub fn speculate(&self, chunk: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.slots[chunk].running += 1;
+        g.speculated += 1;
+    }
+
+    /// Record a completed execution. Returns `true` iff this was the
+    /// *first* completion of the chunk — only then should the caller keep
+    /// the execution's result; duplicates are dropped.
+    pub fn complete(&self, chunk: usize, elapsed: Duration) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let slot = &mut g.slots[chunk];
+        slot.running = slot.running.saturating_sub(1);
+        let first = slot.state != State::Done;
+        if first {
+            slot.state = State::Done;
+            slot.elapsed_ms = elapsed.as_secs_f64() * 1e3;
+            g.done += 1;
+        }
+        self.cv.notify_all();
+        first
+    }
+
+    /// Record a failed execution: requeue within the retry budget, ignore
+    /// if a concurrent duplicate is still running (it may yet succeed), or
+    /// fail the pass naming the chunk. Returns `true` if requeued.
+    pub fn fail(&self, chunk: usize, err: Error) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let slot = &mut g.slots[chunk];
+        if slot.state != State::Running {
+            // Already completed, or already back in the queue (a stale
+            // report for an execution that was released): nothing to do —
+            // in particular, no retry budget is consumed.
+            self.cv.notify_all();
+            return false;
+        }
+        slot.running = slot.running.saturating_sub(1);
+        if slot.running > 0 {
+            // A duplicate of this chunk is still trying; let it decide.
+            self.cv.notify_all();
+            return false;
+        }
+        if slot.attempts_left > 0 {
+            slot.attempts_left -= 1;
+            slot.state = State::Queued;
+            g.retried += 1;
+            g.queue.push_back(chunk);
+            self.cv.notify_all();
+            return true;
+        }
+        if g.fatal.is_none() {
+            g.fatal = Some(Error::Other(format!(
+                "chunk {chunk} failed after {} attempts: {err}",
+                self.max_retries + 1
+            )));
+        }
+        self.cv.notify_all();
+        false
+    }
+
+    /// An execution vanished without a verdict (its worker died): requeue
+    /// the chunk — without touching the retry budget — unless a duplicate
+    /// is still running or it already completed.
+    pub fn release(&self, chunk: usize) {
+        let mut g = self.inner.lock().unwrap();
+        let slot = &mut g.slots[chunk];
+        slot.running = slot.running.saturating_sub(1);
+        if slot.state == State::Running && slot.running == 0 {
+            slot.state = State::Queued;
+            g.queue.push_back(chunk);
+        }
+        self.cv.notify_all();
+    }
+
+    /// True once every chunk completed or the pass failed.
+    pub fn is_finished(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.fatal.is_some() || g.done == g.slots.len()
+    }
+
+    /// Chunks not yet completed.
+    pub fn remaining(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.slots.len() - g.done
+    }
+
+    /// Consume the scheduler: the pass's stats, or its fatal error.
+    pub fn finish(self) -> Result<SchedStats> {
+        let g = self.inner.into_inner().unwrap();
+        if let Some(e) = g.fatal {
+            return Err(e);
+        }
+        if g.done != g.slots.len() {
+            return Err(Error::Other(format!(
+                "pass ended with {} of {} chunks incomplete",
+                g.slots.len() - g.done,
+                g.slots.len()
+            )));
+        }
+        let mut times: Vec<f64> = g.slots.iter().map(|s| s.elapsed_ms).collect();
+        times.sort_by(f64::total_cmp);
+        let skew_ms = if times.len() < 2 {
+            0.0
+        } else {
+            times[times.len() - 1] - times[times.len() / 2]
+        };
+        Ok(SchedStats {
+            chunks: g.slots.len(),
+            retried: g.retried,
+            speculated: g.speculated,
+            skew_ms,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    #[test]
+    fn chunks_complete_in_any_order() {
+        let s = ChunkScheduler::new(3, 0);
+        let mut claimed = Vec::new();
+        while let Claim::Run(i) = s.claim_blocking() {
+            claimed.push(i);
+            s.complete(i, ms(1));
+        }
+        claimed.sort_unstable();
+        assert_eq!(claimed, vec![0, 1, 2]);
+        let st = s.finish().unwrap();
+        assert_eq!(st.chunks, 3);
+        assert_eq!(st.retried, 0);
+    }
+
+    #[test]
+    fn failure_requeues_until_budget_exhausted() {
+        let s = ChunkScheduler::new(1, 2);
+        for attempt in 0..3 {
+            let Claim::Run(i) = s.claim_blocking() else {
+                panic!("chunk should requeue (attempt {attempt})")
+            };
+            assert_eq!(i, 0);
+            let requeued = s.fail(0, Error::Other("boom".into()));
+            assert_eq!(requeued, attempt < 2);
+        }
+        assert!(s.is_finished());
+        let err = s.finish().unwrap_err().to_string();
+        assert!(err.contains("chunk 0"), "{err}");
+        assert!(err.contains("3 attempts"), "{err}");
+        assert!(err.contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn first_completion_wins_over_duplicates() {
+        let s = ChunkScheduler::new(1, 0);
+        let Claim::Run(i) = s.claim_blocking() else { panic!() };
+        s.speculate(i);
+        assert!(s.complete(i, ms(5)), "first completion recorded");
+        assert!(!s.complete(i, ms(9)), "duplicate dropped");
+        let st = s.finish().unwrap();
+        assert_eq!(st.speculated, 1);
+    }
+
+    #[test]
+    fn duplicate_failure_does_not_consume_budget() {
+        let s = ChunkScheduler::new(1, 0);
+        let Claim::Run(i) = s.claim_blocking() else { panic!() };
+        s.speculate(i);
+        // One execution fails while the duplicate is still running: no
+        // retry budget exists, but the pass must not fail yet.
+        assert!(!s.fail(i, Error::Other("slow disk".into())));
+        assert!(!s.is_finished());
+        assert!(s.complete(i, ms(2)));
+        assert!(s.finish().is_ok());
+    }
+
+    #[test]
+    fn release_requeues_without_budget() {
+        let s = ChunkScheduler::new(1, 0);
+        let Claim::Run(_) = s.claim_blocking() else { panic!() };
+        s.release(0); // worker died
+        let Claim::Run(i) = s.claim_blocking() else {
+            panic!("released chunk should requeue")
+        };
+        assert_eq!(i, 0);
+        s.complete(0, ms(1));
+        assert_eq!(s.finish().unwrap().retried, 0);
+    }
+
+    #[test]
+    fn try_claim_respects_eligibility() {
+        let s = ChunkScheduler::new(2, 0);
+        assert_eq!(s.try_claim(|c| c == 1), Some(1));
+        assert_eq!(s.try_claim(|c| c == 1), None); // 0 stays queued
+        assert_eq!(s.try_claim(|_| true), Some(0));
+        assert!(s.running_chunks().len() == 2);
+    }
+
+    #[test]
+    fn incomplete_finish_is_an_error() {
+        let s = ChunkScheduler::new(2, 0);
+        let Claim::Run(i) = s.claim_blocking() else { panic!() };
+        s.complete(i, ms(1));
+        assert!(s.finish().unwrap_err().to_string().contains("incomplete"));
+    }
+
+    #[test]
+    fn skew_is_slowest_minus_median() {
+        let s = ChunkScheduler::new(3, 0);
+        for _ in 0..3 {
+            let Claim::Run(i) = s.claim_blocking() else { panic!() };
+            s.complete(i, ms(10 * (i as u64 + 1)));
+        }
+        let st = s.finish().unwrap();
+        assert!((st.skew_ms - 10.0).abs() < 1.0, "skew {}", st.skew_ms);
+    }
+}

@@ -153,6 +153,28 @@ impl<'a> Svd<'a> {
         self
     }
 
+    /// Cap scheduler chunks at `rows` rows each (0 = derive the chunk
+    /// count from [`Svd::chunks_per_worker`] instead).
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.opts.chunk_rows = rows;
+        self
+    }
+
+    /// Chunks planned per worker (default
+    /// [`crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER`]; 1 =
+    /// the old static one-chunk-per-worker schedule).
+    pub fn chunks_per_worker(mut self, chunks: usize) -> Self {
+        self.opts.chunks_per_worker = chunks;
+        self
+    }
+
+    /// Retry budget per chunk before a pass fails (default
+    /// [`crate::splitproc::sched::DEFAULT_CHUNK_RETRIES`]).
+    pub fn chunk_retries(mut self, retries: usize) -> Self {
+        self.opts.chunk_retries = retries;
+        self
+    }
+
     /// Block-compute backend for leader math and (local) worker jobs.
     /// Defaults to the pure-rust native backend.
     pub fn backend(mut self, backend: BackendRef) -> Self {

@@ -6,24 +6,43 @@
 //! chunks of a local file, or remote workers over a shared file server — is
 //! an implementation detail the math never sees. [`Executor`] is that seam:
 //!
-//! * [`LocalExecutor`] fans each pass out over [`crate::splitproc`] threads
+//! * [`LocalExecutor`] runs each pass over [`crate::splitproc`] threads
 //!   (the paper's Split-Process engine, in-process);
-//! * [`crate::cluster::ClusterExecutor`] ships the same pass descriptions to
+//! * [`crate::cluster::ClusterExecutor`] streams the same chunk tasks to
 //!   remote workers over the leader/worker RPC.
 //!
-//! Both funnel into [`execute_pass_chunk`] — the *single* definition of what
-//! each pass does to one chunk of rows. A remote worker literally runs the
-//! same function the local threads do; only the transport differs.
+//! ## The pass contract is chunk-task streaming
+//!
+//! A pass is not "one send per worker": it is a *queue of chunk tasks*
+//! planned much finer than the worker count
+//! ([`crate::splitproc::plan_chunks_policy`], knobs on
+//! [`PassContext::sched`]), acknowledged chunk by chunk:
+//!
+//! ```text
+//! planned -> queued -> assigned -> done
+//!               ^          |
+//!               +- requeued + (chunk failed within retry budget,
+//!                              or its runner died mid-chunk)
+//! ```
+//!
+//! Every chunk execution lands in [`execute_pass_chunk`] — the single
+//! definition of what each pass does to one chunk of rows; a remote worker
+//! literally runs the same function the local threads do. Chunk partials
+//! are reduced **in chunk order** whatever order executions complete in,
+//! so both executors produce bitwise-identical reductions, and shard
+//! writes are staged + atomically published, so a retried or speculated
+//! chunk can never leave a torn shard.
 
 use crate::backend::BackendRef;
 use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
 use crate::jobs::{AtaBlockJob, ColStatsJob, MultJob, Pass2Job, ProjectGramJob};
 use crate::linalg::{matmul, Matrix};
 use crate::rng::VirtualMatrix;
-use crate::splitproc::{self, Blocked, CenteredJob, ChunkMeta};
+use crate::splitproc::{self, Blocked, CenteredJob, ChunkMeta, SchedPolicy, SchedStats};
 use std::sync::Arc;
 
 /// Everything a pass needs besides its operand: where the rows come from,
@@ -47,6 +66,13 @@ pub struct PassContext<'a> {
     pub kp: usize,
     /// Column means to subtract on the fly (PCA mode); empty = disabled.
     pub means: Arc<Vec<f64>>,
+    /// Chunk scheduling knobs (chunk granularity + retry budget).
+    pub sched: SchedPolicy,
+    /// Shard-namespace epoch for passes that are re-run with different
+    /// content (power iterations rewrite Y/U0 each round). Distinct epochs
+    /// use distinct shard names, so a straggling speculative write from a
+    /// previous round can never clobber the current round's shards.
+    pub shard_epoch: u32,
 }
 
 /// One streaming pass of the pipeline, named after what it computes.
@@ -84,17 +110,22 @@ impl Pass<'_> {
     }
 }
 
-/// What a pass produced: streamed row count, the chunk/shard fan-out, and
-/// the reduced additive partial (when the pass has one).
+/// What a pass produced: streamed row count, the chunk/shard fan-out, the
+/// reduced additive partial (when the pass has one), and how the chunks
+/// were scheduled.
 pub struct PassOutput {
     pub rows: u64,
     /// Number of chunks the input was split into (= shard count on disk).
     pub shards: usize,
     pub partial: Option<Matrix>,
+    /// Chunk scheduling outcome (retries, speculation, skew).
+    pub stats: SchedStats,
 }
 
-/// An execution substrate for streaming passes: plan chunks, run the pass's
-/// job over each chunk, reduce the additive partials, leave shards on disk.
+/// An execution substrate for streaming passes: plan the chunk tasks, feed
+/// them through its work queue (retrying/re-running per the
+/// [`PassContext::sched`] policy), reduce the additive partials in chunk
+/// order, leave shards on disk.
 pub trait Executor {
     /// Substrate name for logs ("local", "cluster", …).
     fn name(&self) -> &str;
@@ -103,9 +134,32 @@ pub trait Executor {
     fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput>;
 }
 
+/// Publish one pass's scheduler counters into the global registry
+/// (`pass_chunks_total/retried/speculated` counters, `pass_skew_ms` gauge)
+/// — both executors call this after every pass, and the coordinator prints
+/// the totals in its run summary.
+pub(crate) fn publish_sched_stats(stats: &SchedStats) {
+    let reg = MetricsRegistry::global();
+    reg.add("pass_chunks_total", stats.chunks as f64);
+    reg.add("pass_chunks_retried", stats.retried as f64);
+    reg.add("pass_chunks_speculated", stats.speculated as f64);
+    reg.set("pass_skew_ms", stats.skew_ms);
+}
+
+/// Shard stem for an epoch: epoch 0 keeps the bare stem (the common,
+/// single-execution case), later power-iteration rounds get their own
+/// namespace (`Y.q1-…`).
+pub(crate) fn epoch_stem(base: &str, epoch: u32) -> String {
+    if epoch == 0 {
+        base.to_string()
+    } else {
+        format!("{base}.q{epoch}")
+    }
+}
+
 /// Run one pass over *one chunk* — the single implementation of the pass
 /// structure. [`LocalExecutor`] calls this per thread; a remote worker calls
-/// it for its assigned chunk ([`crate::cluster::worker::execute_phase`]).
+/// it per assignment ([`crate::cluster::worker::execute_assignment`]).
 ///
 /// Returns `(rows_streamed, additive_partial)`.
 pub fn execute_pass_chunk(
@@ -138,7 +192,8 @@ pub fn execute_pass_chunk(
                 Some(o) => o.clone(),
                 None => VirtualMatrix::projection(ctx.seed, ctx.n, ctx.kp).materialize(),
             };
-            let y_shards = ShardSet::new(ctx.work_dir, "Y", ctx.shard_format)?;
+            let y_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("Y", ctx.shard_epoch), ctx.shard_format)?;
             let job = ProjectGramJob::new(ctx.backend.clone(), omega, &y_shards, chunk.index)?;
             let mut job =
                 CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
@@ -146,8 +201,10 @@ pub fn execute_pass_chunk(
             Ok((rows, Some(job.into_inner().into_inner().into_gram_partial())))
         }
         Pass::UrecoverTmul { m } => {
-            let y_shards = ShardSet::new(ctx.work_dir, "Y", ctx.shard_format)?;
-            let u0_shards = ShardSet::new(ctx.work_dir, "U0", ctx.shard_format)?;
+            let y_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("Y", ctx.shard_epoch), ctx.shard_format)?;
+            let u0_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("U0", ctx.shard_epoch), ctx.shard_format)?;
             let job = Pass2Job::new(
                 ctx.backend.clone(),
                 m.clone(),
@@ -170,7 +227,8 @@ pub fn execute_pass_chunk(
             Ok((rows, None))
         }
         Pass::RotateU { p } => {
-            let u0_shards = ShardSet::new(ctx.work_dir, "U0", ctx.shard_format)?;
+            let u0_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("U0", ctx.shard_epoch), ctx.shard_format)?;
             let u_shards = ShardSet::new(ctx.work_dir, "U", ctx.shard_format)?;
             let rows = rotate_one_shard(&u0_shards, &u_shards, chunk.index, p, ctx.block)?;
             Ok((rows, None))
@@ -216,8 +274,9 @@ fn rotate_one_shard(
     Ok(count)
 }
 
-/// In-process executor: one scoped thread per chunk of the shared file
-/// (the paper's Split-Process deployment on a single machine).
+/// In-process executor: a `workers`-thread pool pulling chunk tasks off
+/// the shared queue (the paper's Split-Process deployment on a single
+/// machine, dynamically scheduled).
 pub struct LocalExecutor {
     workers: usize,
 }
@@ -244,15 +303,19 @@ impl Executor for LocalExecutor {
             }
             p => *p,
         };
-        let outputs = splitproc::run_chunked(ctx.input, self.workers, |chunk| {
-            execute_pass_chunk(ctx, &pass, chunk)
-        })?;
+        let (outputs, stats) =
+            splitproc::run_scheduled(ctx.input, self.workers, &ctx.sched, |chunk| {
+                execute_pass_chunk(ctx, &pass, chunk)
+            })?;
         if outputs.is_empty() {
             return Err(Error::Config("input has no rows to chunk".into()));
         }
         let shards = outputs.len();
         let mut rows = 0u64;
         let mut partials = Vec::with_capacity(shards);
+        // `outputs` is in chunk order, so this reduction is deterministic
+        // regardless of which thread finished which chunk when — and
+        // matches the cluster executor's reduction bit for bit.
         for (r, partial) in outputs {
             rows += r;
             if let Some(p) = partial {
@@ -266,7 +329,8 @@ impl Executor for LocalExecutor {
         } else {
             Some(splitproc::reduce_partials(partials)?)
         };
-        Ok(PassOutput { rows, shards, partial })
+        publish_sched_stats(&stats);
+        Ok(PassOutput { rows, shards, partial, stats })
     }
 }
 
@@ -306,6 +370,8 @@ mod tests {
             n,
             kp: 4,
             means: Arc::new(Vec::new()),
+            sched: SchedPolicy::default(),
+            shard_epoch: 0,
         }
     }
 
@@ -356,5 +422,25 @@ mod tests {
         assert_eq!(Pass::ColStats.name(), "colstats");
         assert_eq!(Pass::ProjectGram { omega: None }.name(), "project_gram");
         assert_eq!(Pass::RotateU { p: &m }.name(), "rotate_u");
+    }
+
+    #[test]
+    fn pass_plans_more_chunks_than_workers() {
+        let (input, a, work) = ctx_fixture("finegrained");
+        let mut exec = LocalExecutor::new(2);
+        let mut c = ctx(&input, &work, 8);
+        c.sched = SchedPolicy { chunks_per_worker: 4, ..SchedPolicy::default() };
+        let out = exec.run_pass(&c, &Pass::Ata).unwrap();
+        assert_eq!(out.rows, 90);
+        assert!(out.shards > 2, "only {} chunks planned", out.shards);
+        assert_eq!(out.stats.chunks, out.shards);
+        assert!(out.partial.unwrap().max_abs_diff(&gram(&a)) < 1e-9);
+    }
+
+    #[test]
+    fn epoch_stems_namespace_reruns() {
+        assert_eq!(epoch_stem("Y", 0), "Y");
+        assert_eq!(epoch_stem("Y", 2), "Y.q2");
+        assert_eq!(epoch_stem("U0", 1), "U0.q1");
     }
 }

@@ -55,6 +55,13 @@ pub struct SvdOptions {
     /// Relative cutoff for the sketch-stage guarded inverse
     /// `M = V_y Σ_y⁻¹`: columns with `σ <= cutoff * σ_max` are zeroed.
     pub sigma_cutoff_rel: f64,
+    /// Rows per scheduler chunk (0 = derive from `chunks_per_worker`).
+    pub chunk_rows: usize,
+    /// Chunks planned per worker when `chunk_rows = 0` (1 = the old
+    /// static one-chunk-per-worker schedule).
+    pub chunks_per_worker: usize,
+    /// Retry budget per chunk before a pass fails.
+    pub chunk_retries: usize,
 }
 
 impl Default for SvdOptions {
@@ -75,6 +82,9 @@ impl Default for SvdOptions {
             center: false,
             exact_gram: false,
             sigma_cutoff_rel: DEFAULT_SIGMA_CUTOFF_REL,
+            chunk_rows: 0,
+            chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
+            chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
         }
     }
 }
@@ -100,7 +110,19 @@ impl SvdOptions {
                 self.sigma_cutoff_rel
             )));
         }
+        if self.chunks_per_worker == 0 {
+            return Err(Error::Config("chunks_per_worker must be >= 1".into()));
+        }
         Ok(())
+    }
+
+    /// The chunk-scheduling view of these options.
+    pub fn sched_policy(&self) -> crate::splitproc::SchedPolicy {
+        crate::splitproc::SchedPolicy {
+            chunk_rows: self.chunk_rows,
+            chunks_per_worker: self.chunks_per_worker,
+            max_retries: self.chunk_retries,
+        }
     }
 }
 
@@ -156,6 +178,8 @@ pub(crate) fn run_svd(
         n,
         kp,
         means: Arc::new(Vec::new()),
+        sched: opts.sched_policy(),
+        shard_epoch: 0,
     };
     LOG.info(&format!(
         "{} svd: {m_rows}x{n} -> k={} (sketch {kp}), executor={}, backend={}",
@@ -165,6 +189,9 @@ pub(crate) fn run_svd(
         ctx.backend.name()
     ));
     std::fs::create_dir_all(&opts.work_dir)?;
+    // Clear staged-shard litter from earlier crashed runs of this work
+    // dir (no writers are active yet, so the sweep cannot race one).
+    crate::io::writer::sweep_stale_stages(&opts.work_dir);
 
     // ---- pass 0 (PCA mode): column means, subtracted on the fly later ----
     if opts.center {
@@ -187,7 +214,7 @@ pub(crate) fn run_svd(
     let (k, sigma, v, shards_count) = if opts.exact_gram {
         gram_passes(exec, &ctx, m_rows, &mut report)?
     } else {
-        randomized_passes(exec, &ctx, opts, m_rows, &mut report)?
+        randomized_passes(exec, &mut ctx, opts, m_rows, &mut report)?
     };
 
     let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
@@ -214,7 +241,7 @@ pub(crate) fn run_svd(
 /// Returns `(k, sigma, v, shards)`.
 fn randomized_passes(
     exec: &mut dyn Executor,
-    ctx: &PassContext,
+    ctx: &mut PassContext,
     opts: &SvdOptions,
     m_rows: usize,
     report: &mut PhaseReport,
@@ -225,6 +252,10 @@ fn randomized_passes(
     let mut shards_count;
     let mut iteration = 0usize;
     loop {
+        // Each power-iteration round rewrites Y/U0 with new content; a
+        // fresh shard epoch gives it a fresh namespace so a straggling
+        // speculative write from the previous round cannot clobber it.
+        ctx.shard_epoch = iteration as u32;
         // ---- pass 1: Y = A Ω, G = YᵀY ------------------------------------
         let t0 = Instant::now();
         let out = exec.run_pass(ctx, &Pass::ProjectGram { omega: omega.as_ref() })?;
@@ -265,6 +296,20 @@ fn randomized_passes(
         omega = Some(q);
         iteration += 1;
         report.push(&format!("leader.power_orth[{iteration}]"), t0.elapsed(), 0, 0);
+        // The finished round's sketch shards are dead once its recovery
+        // pass completed; drop them before the next round writes its own
+        // namespace, so power iterations don't multiply peak temp disk.
+        // (A straggling speculative duplicate may re-publish one later —
+        // it is never read again, just bounded litter.)
+        let done_epoch = (iteration - 1) as u32;
+        for base in ["Y", "U0"] {
+            let stale = ShardSet::new(
+                ctx.work_dir,
+                &crate::svd::executor::epoch_stem(base, done_epoch),
+                ctx.shard_format,
+            )?;
+            stale.cleanup(shards_count);
+        }
     }
 
     // ---- leader: small SVD completion from W -----------------------------

@@ -84,6 +84,7 @@ pub struct Update<'a> {
     own_work_dir: bool,
     sigma_cutoff_rel: f64,
     keep_generations: usize,
+    sched: crate::splitproc::SchedPolicy,
     backend: Option<BackendRef>,
     executor: Option<&'a mut dyn Executor>,
 }
@@ -93,6 +94,20 @@ impl<'a> Update<'a> {
     /// generation eagerly so a missing or damaged model fails here, once.
     pub fn of(dir: impl AsRef<Path>) -> Result<Self> {
         let root = dir.as_ref().to_path_buf();
+        // Guard against being handed a *generation* directory instead of
+        // the model root: ModelStore::open would resolve it (flat-layout
+        // fallback), and the update would then nest a new generation
+        // inside the immutable gen dir while the real root's CURRENT
+        // never advances — a silent no-op for every serving reader.
+        if let Some(name) = root.file_name().and_then(|n| n.to_str()) {
+            if name.strip_prefix("gen-").is_some_and(|s| s.parse::<u64>().is_ok()) {
+                return Err(Error::Config(format!(
+                    "update: `{}` is a generation directory, not a model root — \
+                     point the update at its parent",
+                    root.display()
+                )));
+            }
+        }
         let store = ModelStore::open(&root, 1)?;
         // Unlike a factorization (whose output is just this run's result),
         // an update's shards feed a generation of an existing persisted
@@ -117,6 +132,7 @@ impl<'a> Update<'a> {
             own_work_dir: true,
             sigma_cutoff_rel: crate::svd::DEFAULT_SIGMA_CUTOFF_REL,
             keep_generations: 2,
+            sched: crate::splitproc::SchedPolicy::default(),
             backend: None,
             executor: None,
         })
@@ -187,6 +203,27 @@ impl<'a> Update<'a> {
         self
     }
 
+    /// Cap scheduler chunks at `rows` rows each (0 = derive the chunk
+    /// count from [`Update::chunks_per_worker`] instead).
+    pub fn chunk_rows(mut self, rows: usize) -> Self {
+        self.sched.chunk_rows = rows;
+        self
+    }
+
+    /// Chunks planned per worker (default
+    /// [`crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER`]).
+    pub fn chunks_per_worker(mut self, chunks: usize) -> Self {
+        self.sched.chunks_per_worker = chunks;
+        self
+    }
+
+    /// Retry budget per chunk before a pass fails (default
+    /// [`crate::splitproc::sched::DEFAULT_CHUNK_RETRIES`]).
+    pub fn chunk_retries(mut self, retries: usize) -> Self {
+        self.sched.max_retries = retries;
+        self
+    }
+
     /// Block-compute backend for leader math and (local) worker jobs.
     pub fn backend(mut self, backend: BackendRef) -> Self {
         self.backend = Some(backend);
@@ -217,6 +254,9 @@ impl<'a> Update<'a> {
                 "update: sigma_cutoff_rel must be in [0, 1), got {}",
                 self.sigma_cutoff_rel
             )));
+        }
+        if self.sched.chunks_per_worker == 0 {
+            return Err(Error::Config("update: chunks_per_worker must be >= 1".into()));
         }
         let (m1, n1) = input.dims()?;
         if m1 == 0 {
@@ -301,6 +341,7 @@ struct UpdateOptions {
     own_work_dir: bool,
     sigma_cutoff_rel: f64,
     keep_generations: usize,
+    sched: crate::splitproc::SchedPolicy,
 }
 
 impl UpdateOptions {
@@ -314,6 +355,7 @@ impl UpdateOptions {
             own_work_dir: u.own_work_dir,
             sigma_cutoff_rel: u.sigma_cutoff_rel,
             keep_generations: u.keep_generations,
+            sched: u.sched,
         }
     }
 }
@@ -347,6 +389,11 @@ fn run_update(
         n,
         kp: k + r,
         means: Arc::new(Vec::new()),
+        // Updates inherit dynamic chunk scheduling through the executor
+        // seam: batch passes are planned fine-grained and retried exactly
+        // like a factorization's, under the builder's knobs.
+        sched: opts.sched,
+        shard_epoch: 0,
     };
     LOG.info(&format!(
         "update gen {}: {m0}x{n} k={k} + {m1} rows (residual sketch {r}), executor={}",
@@ -354,6 +401,9 @@ fn run_update(
         exec.name()
     ));
     std::fs::create_dir_all(&opts.work_dir)?;
+    // Clear staged-shard litter from earlier crashed runs of this work
+    // dir (no writers are active yet, so the sweep cannot race one).
+    crate::io::writer::sweep_stale_stages(&opts.work_dir);
 
     // ---- pass 0 (PCA models): batch column sums -> merged running mean --
     let mut means_new: Option<Vec<f64>> = None;

@@ -182,7 +182,8 @@ fn distributed_ata_phase() {
     let addr = free_addr();
     let handles = spawn_workers(&addr, 2);
     let mut leader = DistributedLeader::accept(&addr, 2).unwrap();
-    let (rows, partials) = leader
+    // Chunk-grained: 6 chunks over 2 workers, scheduled dynamically.
+    let (rows, partials, stats) = leader
         .run_phase(
             PhaseKind::Ata,
             &input,
@@ -192,8 +193,11 @@ fn distributed_ata_phase() {
             12,
             12,
             InputFormat::Bin,
+            0,
             &Matrix::zeros(0, 0),
             &Matrix::zeros(0, 0),
+            6,
+            0,
         )
         .unwrap();
     leader.shutdown().unwrap();
@@ -201,6 +205,8 @@ fn distributed_ata_phase() {
         h.join().unwrap();
     }
     assert_eq!(rows, 200);
+    assert_eq!(stats.chunks, 6);
+    assert_eq!(partials.len(), 6, "one partial per chunk, in chunk order");
     let g = tallfat::splitproc::reduce_partials(partials).unwrap();
     let want = tallfat::linalg::gram(&a);
     assert!(g.max_abs_diff(&want) < 1e-9);
@@ -210,8 +216,8 @@ fn distributed_ata_phase() {
 fn worker_failure_is_reported_to_leader() {
     let d = dir("fail");
     // Input the leader can see but with a bogus path sent to workers: the
-    // worker-side error must come back as Failed, not hang or kill the
-    // connection.
+    // chunk fails on every attempt, so after the retry budget the pass
+    // must fail naming the chunk — not hang or kill the connection.
     let addr = free_addr();
     let handles = spawn_workers(&addr, 1);
     let mut leader = DistributedLeader::accept(&addr, 1).unwrap();
@@ -225,11 +231,16 @@ fn worker_failure_is_reported_to_leader() {
         4,
         4,
         InputFormat::Bin,
+        0,
         &Matrix::zeros(0, 0),
         &Matrix::zeros(0, 0),
+        1,
+        1,
     );
-    assert!(r.is_err(), "leader must surface the worker failure");
-    // The worker stays up after reporting failure; shutdown still works.
+    let err = r.expect_err("leader must surface the worker failure").to_string();
+    assert!(err.contains("chunk 0"), "error should name the chunk: {err}");
+    assert!(err.contains("2 attempts"), "error should count attempts: {err}");
+    // The worker stays up after reporting failures; shutdown still works.
     leader.shutdown().unwrap();
     for h in handles {
         h.join().unwrap();

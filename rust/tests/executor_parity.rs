@@ -11,7 +11,7 @@ use tallfat::linalg::Matrix;
 use tallfat::svd::{LocalExecutor, Svd, SvdResult};
 
 mod harness;
-use harness::{free_addr, spawn_workers};
+use harness::{free_addr, spawn_flaky_worker, spawn_workers};
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_parity_it").join(name);
@@ -192,6 +192,84 @@ fn format_explicit_input_parity() {
         .run()
         .unwrap();
     assert_parity(&local, &dist, 4);
+}
+
+/// Fault injection: one of three workers completes a single chunk, then
+/// dies with its next chunk in flight. The scheduler must requeue the
+/// orphaned chunk onto the survivors and the run must still produce Σ/V/U
+/// parity with the local executor — the acceptance gate of the dynamic
+/// chunk scheduler.
+#[test]
+fn worker_killed_mid_pass_still_reaches_parity() {
+    let d = dir("killed");
+    let input = fixture(&d, 450, 24, 6, 0.005, 35);
+
+    let addr = free_addr();
+    let survivors = spawn_workers(&addr, 2);
+    let flaky = spawn_flaky_worker(&addr, 1);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    assert!(cluster.workers() < 3, "the flaky worker should have been fenced");
+    cluster.shutdown().unwrap();
+    for h in survivors {
+        h.join().unwrap();
+    }
+    flaky.join().unwrap();
+
+    let mut local_exec = LocalExecutor::new(3);
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut local_exec)
+        .run()
+        .unwrap();
+    assert_parity(&local, &dist, 6);
+}
+
+/// A worker joining mid-run is handed the current phase setup and pulls
+/// queued chunks; whatever it ends up doing, the factors must not change.
+#[test]
+fn late_joining_worker_preserves_parity() {
+    let d = dir("latejoin");
+    let input = fixture(&d, 12_000, 16, 5, 0.002, 36);
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+    // Joins a beat after the run starts — typically mid-pass. (If the run
+    // finishes first the joiner just idles; parity must hold either way,
+    // so the test is timing-robust.)
+    let late_addr = addr.clone();
+    let _late = std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let stream = std::net::TcpStream::connect(&late_addr)?;
+        tallfat::cluster::worker::serve(stream, std::sync::Arc::new(
+            tallfat::backend::native::NativeBackend::new(),
+        ))
+    });
+    // `workers(2)` on both sides: the chunk plan is anchored to the
+    // *initial* worker count, so local and cluster share one plan (and one
+    // reduction order) no matter when the third worker joins.
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 5, false)
+        .workers(2)
+        .power_iters(1)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // `_late` is deliberately not joined: if it registered it got the
+    // shutdown; if the run beat it to the finish it parks on a dead socket.
+
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 5, false)
+        .workers(2)
+        .power_iters(1)
+        .run()
+        .unwrap();
+    assert_parity(&local, &dist, 5);
 }
 
 /// The two mathematical routes agree: on a small dense matrix whose rank

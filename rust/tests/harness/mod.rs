@@ -1,10 +1,13 @@
 //! Shared scaffolding for leader/worker integration tests: ephemeral
-//! ports and in-process worker threads speaking the real TCP protocol.
+//! ports, in-process worker threads speaking the real TCP protocol, and a
+//! fault-injection worker that dies mid-pass.
 
 use std::net::TcpStream;
 use std::sync::Arc;
 use tallfat::backend::native::NativeBackend;
-use tallfat::cluster::worker;
+use tallfat::backend::BackendRef;
+use tallfat::cluster::proto::{ToLeader, ToWorker, VERSION};
+use tallfat::cluster::worker::{self, execute_assignment, PhaseConfig};
 
 /// Pick an ephemeral port by probing.
 pub fn free_addr() -> String {
@@ -12,6 +15,16 @@ pub fn free_addr() -> String {
     let addr = probe.local_addr().unwrap().to_string();
     drop(probe);
     addr
+}
+
+#[allow(dead_code)]
+fn connect_retrying(addr: &str) -> TcpStream {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+        }
+    }
 }
 
 /// Spawn `n` worker threads that connect to `addr` (retrying until the
@@ -23,14 +36,58 @@ pub fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
         .map(|_| {
             let addr = addr.to_string();
             std::thread::spawn(move || {
-                let stream = loop {
-                    match TcpStream::connect(&addr) {
-                        Ok(s) => break s,
-                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
-                    }
-                };
+                let stream = connect_retrying(&addr);
                 worker::serve(stream, Arc::new(NativeBackend::new())).unwrap();
             })
         })
         .collect()
+}
+
+/// Spawn one worker that connects, correctly completes `complete_chunks`
+/// chunk assignments, then *dies* (drops its connection) the moment the
+/// next chunk is assigned — i.e. mid-pass, with a chunk in flight that the
+/// leader must requeue onto the survivors.
+#[allow(dead_code)]
+pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::JoinHandle<()> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        let mut stream = connect_retrying(&addr);
+        stream.set_nodelay(true).ok();
+        {
+            let mut w: &TcpStream = &stream;
+            ToLeader::Hello { version: VERSION }.write(&mut w).unwrap();
+        }
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let mut phase: Option<PhaseConfig> = None;
+        let mut done = 0usize;
+        loop {
+            let msg = match ToWorker::read(&mut stream) {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            match &msg {
+                ToWorker::Shutdown => return,
+                ToWorker::Phase { .. } => {
+                    phase = Some(PhaseConfig::from_msg(&msg).unwrap());
+                }
+                ToWorker::Assign { phase: pid, chunk } => {
+                    if done >= complete_chunks {
+                        // Die with this chunk in flight: the connection
+                        // drop is the leader's death signal.
+                        return;
+                    }
+                    let cfg = phase.as_ref().expect("assign before phase setup");
+                    assert_eq!(cfg.id, *pid, "assign for a phase we never saw");
+                    let (rows, partial) =
+                        execute_assignment(&backend, cfg, *chunk as usize).unwrap();
+                    let reply = ToLeader::ChunkDone { phase: *pid, chunk: *chunk, rows, partial };
+                    let mut w: &TcpStream = &stream;
+                    if reply.write(&mut w).is_err() {
+                        return;
+                    }
+                    done += 1;
+                }
+            }
+        }
+    })
 }

@@ -255,11 +255,19 @@ fn run_cluster(center: bool, name: &str, workers: usize) {
         h.join().unwrap();
     }
     assert_eq!(result.generation, 1);
-    // The batch was fanned out to the remote workers: one new U shard per
-    // worker, appended after the parent's shards.
+    // The batch was fanned out chunk-grained: one new U shard per
+    // scheduler chunk, appended after the parent's shards.
+    let new_chunks = tallfat::splitproc::plan_chunks_policy(
+        &batch,
+        workers,
+        &tallfat::splitproc::SchedPolicy::default(),
+    )
+    .unwrap()
+    .len();
+    assert!(new_chunks > workers, "fine-grained plan expected");
     let parent = ModelStore::open(model.join("gen-000000"), 1).unwrap();
     let store = ModelStore::open(&model, 1).unwrap();
-    assert_eq!(store.shards(), parent.shards() + workers);
+    assert_eq!(store.shards(), parent.shards() + new_chunks);
     drop((store, parent));
     let reference = scratch(&d, &full, center);
     let strict = if center { 2 } else { RANK };
@@ -372,6 +380,19 @@ fn batch_smaller_than_k() {
 }
 
 /// An empty batch commits a no-op generation: same factors, next number.
+#[test]
+fn update_of_generation_dir_is_rejected() {
+    // Pointing an update at /model/gen-NNNNNN instead of the model root
+    // would nest a generation inside an immutable gen dir and never move
+    // the real CURRENT; it must fail loudly instead.
+    let d = dir("gen_dir_guard");
+    let (_, base, _, _) = fixture(&d, M0, 4);
+    let model = build_model(&d, &base, false);
+    let err = Update::of(model.join("gen-000000")).unwrap_err().to_string();
+    assert!(err.contains("generation directory"), "{err}");
+    assert!(!model.join("gen-000000").join("CURRENT").exists());
+}
+
 #[test]
 fn empty_batch_is_noop_generation() {
     let d = dir("empty_batch");
