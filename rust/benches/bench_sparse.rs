@@ -1,0 +1,135 @@
+//! Sparse input path vs densify-then-dense (the PR-5 workload class).
+//!
+//! Two comparisons on a ≥90%-sparse tall matrix:
+//!
+//! 1. **Kernel**: fused `sp_matmul_gram` over CSR blocks vs densifying the
+//!    same blocks and running the dense `matmul_gram` hot path.
+//! 2. **End-to-end**: `Svd::over(csr input)` vs the same factorization of
+//!    the densified copy (`.bin`) — same rank, seed, workers.
+//!
+//! Emits `BENCH_sparse.json`. `TALLFAT_BENCH_SMOKE=1` shrinks everything
+//! so CI can exercise the emitter in seconds.
+
+mod common;
+
+use tallfat::io::dataset::gen_sparse_streamed;
+use tallfat::io::InputSpec;
+use tallfat::linalg::{matmul_gram, sp_matmul_gram, Matrix, SparseMatrix};
+use tallfat::rng::Gaussian;
+use tallfat::svd::Svd;
+
+fn main() {
+    let smoke = common::smoke();
+    let (m, n, density) = if smoke { (3_000, 64, 0.05) } else { (40_000, 256, 0.05) };
+    let k = if smoke { 8 } else { 16 };
+    let reps = if smoke { 1 } else { 2 };
+    let dir = common::bench_dir("sparse");
+
+    // ---- dataset: one sparse source, one densified copy ------------------
+    let csr = InputSpec::csr(
+        dir.join(format!("a_{m}x{n}.csr")).to_string_lossy().into_owned(),
+    );
+    if !std::path::Path::new(&csr.path).exists() {
+        eprintln!("[gen] {}", csr.path);
+        gen_sparse_streamed(&csr, m, n, density, 2013).unwrap();
+    }
+    let sparse = tallfat::io::read_sparse(&csr).unwrap();
+    let nnz = sparse.nnz();
+    let dense_copy = sparse.to_dense();
+    let bin = InputSpec::bin(
+        dir.join(format!("a_{m}x{n}.bin")).to_string_lossy().into_owned(),
+    );
+    if !std::path::Path::new(&bin.path).exists() {
+        tallfat::io::write_matrix(&dense_copy, &bin).unwrap();
+    }
+    common::header(&format!(
+        "sparse vs densify — {m}x{n}, nnz={nnz} ({:.1}% fill)",
+        100.0 * sparse.density()
+    ));
+
+    // ---- kernel-level: fused project+gram --------------------------------
+    let g = Gaussian::new(7);
+    let kp = k + 8;
+    let omega = Matrix::from_fn(n, kp, |i, j| g.sample(1_000_000 + i as u64, j as u64));
+    let block_rows = 4096.min(m);
+    let sparse_block = {
+        let mut b = SparseMatrix::with_cols(n);
+        for i in 0..block_rows {
+            let (idx, val) = sparse.row(i);
+            b.push_row(idx, val).unwrap();
+        }
+        b
+    };
+    let (y_sp, t_kernel_sparse) =
+        common::time_best(reps, || sp_matmul_gram(&sparse_block, &omega).unwrap());
+    let (y_dn, t_kernel_densify) = common::time_best(reps, || {
+        let dense_block = sparse_block.to_dense();
+        matmul_gram(&dense_block, &omega).unwrap()
+    });
+    let kernel_diff = y_sp.0.max_abs_diff(&y_dn.0);
+    println!(
+        "{:<34} {:>12} {:>14}",
+        "kernel (project+gram, 1 block)", "time", "max|ΔY|"
+    );
+    println!("{:<34} {:>12.2?} {:>14}", "csr sp_matmul_gram", t_kernel_sparse, "-");
+    println!(
+        "{:<34} {:>12.2?} {:>14.1e}",
+        "densify + matmul_gram", t_kernel_densify, kernel_diff
+    );
+
+    // ---- end-to-end factorization ----------------------------------------
+    let run = |input: &InputSpec, sub: &str| {
+        let work = dir.join(format!("work_{sub}"));
+        let _ = std::fs::remove_dir_all(&work);
+        Svd::over(input)
+            .unwrap()
+            .rank(k)
+            .oversample(8)
+            .workers(4)
+            .block(256)
+            .seed(5)
+            .work_dir(work.to_string_lossy().into_owned())
+            .run()
+            .unwrap()
+    };
+    let (r_sparse, t_svd_sparse) = common::time_once(|| run(&csr, "sparse"));
+    let (r_dense, t_svd_dense) = common::time_once(|| run(&bin, "dense"));
+    let mut sigma_rel = 0.0f64;
+    for i in 0..k {
+        sigma_rel =
+            sigma_rel.max((r_sparse.sigma[i] - r_dense.sigma[i]).abs() / r_dense.sigma[0]);
+    }
+    let speedup = t_svd_dense.as_secs_f64() / t_svd_sparse.as_secs_f64().max(1e-9);
+    println!(
+        "\n{:<34} {:>12} {:>10}",
+        "end-to-end svd (k, same seed)", "time", "rows/s"
+    );
+    println!(
+        "{:<34} {:>12.2?} {:>10.0}",
+        "csr input (sparse kernels)",
+        t_svd_sparse,
+        common::rate(m as u64, t_svd_sparse)
+    );
+    println!(
+        "{:<34} {:>12.2?} {:>10.0}",
+        "bin input (dense kernels)",
+        t_svd_dense,
+        common::rate(m as u64, t_svd_dense)
+    );
+    println!("speedup {speedup:.2}x, max sigma drift {sigma_rel:.1e}");
+
+    let json = format!(
+        "{{\"bench\":\"sparse\",\"m\":{m},\"n\":{n},\"k\":{k},\"nnz\":{nnz},\
+         \"density\":{:.6},\"kernel_sparse_s\":{:.6},\"kernel_densify_s\":{:.6},\
+         \"svd_sparse_s\":{:.6},\"svd_dense_s\":{:.6},\"speedup\":{:.4},\
+         \"sigma_rel_drift\":{:.3e},\"smoke\":{smoke}}}\n",
+        sparse.density(),
+        t_kernel_sparse.as_secs_f64(),
+        t_kernel_densify.as_secs_f64(),
+        t_svd_sparse.as_secs_f64(),
+        t_svd_dense.as_secs_f64(),
+        speedup,
+        sigma_rel,
+    );
+    common::write_json("sparse", &json);
+}

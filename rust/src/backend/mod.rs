@@ -15,11 +15,16 @@ pub mod native;
 pub mod xla;
 
 use crate::error::Result;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 use std::sync::Arc;
 
 /// Per-block operations of the pipeline (shapes: x `b x n`, w `n x k`,
 /// y/z `b x k`, m `k x k`, g `k x k` or `n x n`).
+///
+/// The `*_sparse` entry points take a CSR row block instead of a dense one.
+/// Their default implementations densify and delegate — correct for any
+/// backend (the XLA artifacts keep their fixed dense shapes) — while the
+/// native backend overrides them with true `O(nnz)` kernels.
 pub trait Backend: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -40,6 +45,32 @@ pub trait Backend: Send + Sync {
 
     /// Symmetric eigendecomposition, descending. Leader-side, small.
     fn eigh(&self, g: &Matrix) -> Result<(Vec<f64>, Matrix)>;
+
+    // ---- sparse (CSR) block entry points ---------------------------------
+
+    /// `G = X^T X` for a CSR block. Default: densify.
+    fn gram_block_sparse(&self, x: &SparseMatrix) -> Result<Matrix> {
+        self.gram_block(&x.to_dense())
+    }
+
+    /// `Y = X W` for a CSR block. Default: densify.
+    fn project_block_sparse(&self, x: &SparseMatrix, w: &Matrix) -> Result<Matrix> {
+        self.project_block(&x.to_dense(), w)
+    }
+
+    /// Fused `(Y, Y^T Y)` for a CSR block. Default: densify.
+    fn project_gram_block_sparse(
+        &self,
+        x: &SparseMatrix,
+        w: &Matrix,
+    ) -> Result<(Matrix, Matrix)> {
+        self.project_gram_block(&x.to_dense(), w)
+    }
+
+    /// `W = X^T Z` for a CSR block. Default: densify.
+    fn tmul_block_sparse(&self, x: &SparseMatrix, z: &Matrix) -> Result<Matrix> {
+        self.tmul_block(&x.to_dense(), z)
+    }
 }
 
 /// Shared backend handle.

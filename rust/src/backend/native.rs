@@ -2,7 +2,7 @@
 
 use super::Backend;
 use crate::error::Result;
-use crate::linalg::{self, Matrix};
+use crate::linalg::{self, Matrix, SparseMatrix};
 
 /// The native block backend.
 #[derive(Default, Clone, Copy)]
@@ -45,6 +45,28 @@ impl Backend for NativeBackend {
 
     fn eigh(&self, g: &Matrix) -> Result<(Vec<f64>, Matrix)> {
         linalg::eigen::eigh(g)
+    }
+
+    // True O(nnz) sparse kernels (the trait's defaults densify instead).
+
+    fn gram_block_sparse(&self, x: &SparseMatrix) -> Result<Matrix> {
+        Ok(linalg::sp_gram(x))
+    }
+
+    fn project_block_sparse(&self, x: &SparseMatrix, w: &Matrix) -> Result<Matrix> {
+        linalg::sp_matmul(x, w)
+    }
+
+    fn project_gram_block_sparse(
+        &self,
+        x: &SparseMatrix,
+        w: &Matrix,
+    ) -> Result<(Matrix, Matrix)> {
+        linalg::sp_matmul_gram(x, w)
+    }
+
+    fn tmul_block_sparse(&self, x: &SparseMatrix, z: &Matrix) -> Result<Matrix> {
+        linalg::sp_tmul(x, z)
     }
 }
 

@@ -16,7 +16,9 @@ use std::io::{Read, Write};
 /// the run's fixed `chunk_total` plus `shard_epoch`; `Assign` hands out one
 /// chunk; workers ack per chunk with `ChunkDone`/`ChunkFailed` and emit
 /// liveness `Heartbeat`s from a background thread.
-pub const VERSION: u32 = 3;
+/// v4: the format byte gains sparse input codes (libsvm / sparse-CSV /
+/// csr) — frame layout unchanged, but a v3 worker cannot decode them.
+pub const VERSION: u32 = 4;
 
 /// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
 /// larger indicates a protocol error, not a legitimate partial).
@@ -58,6 +60,9 @@ fn format_to_u8(f: InputFormat) -> u8 {
     match f {
         InputFormat::Csv => 0,
         InputFormat::Bin => 1,
+        InputFormat::Libsvm => 2,
+        InputFormat::SparseCsv => 3,
+        InputFormat::Csr => 4,
     }
 }
 
@@ -65,6 +70,9 @@ fn format_from_u8(v: u8) -> Result<InputFormat> {
     match v {
         0 => Ok(InputFormat::Csv),
         1 => Ok(InputFormat::Bin),
+        2 => Ok(InputFormat::Libsvm),
+        3 => Ok(InputFormat::SparseCsv),
+        4 => Ok(InputFormat::Csr),
         other => Err(Error::parse(format!("unknown format code {other}"))),
     }
 }
@@ -446,6 +454,36 @@ mod tests {
             }
         }
         assert!(PhaseKind::from_u8(7).is_err());
+    }
+
+    #[test]
+    fn sparse_input_formats_roundtrip() {
+        for fmt in [InputFormat::Libsvm, InputFormat::SparseCsv, InputFormat::Csr] {
+            let msg = ToWorker::Phase {
+                id: 2,
+                kind: PhaseKind::ProjectGram,
+                input_path: "/data/a.libsvm".into(),
+                input_format: fmt,
+                work_dir: "/tmp/w".into(),
+                chunk_total: 4,
+                block: 64,
+                seed: 9,
+                kp: 8,
+                cols: 16,
+                shard_format: InputFormat::Bin,
+                shard_epoch: 0,
+                operand: Matrix::zeros(0, 0),
+                means: Matrix::zeros(0, 0),
+            };
+            match roundtrip_worker(&msg) {
+                ToWorker::Phase { input_format, shard_format, .. } => {
+                    assert_eq!(input_format, fmt);
+                    assert_eq!(shard_format, InputFormat::Bin);
+                }
+                other => panic!("wrong message: {other:?}"),
+            }
+        }
+        assert!(format_from_u8(99).is_err());
     }
 
     #[test]

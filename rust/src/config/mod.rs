@@ -38,6 +38,14 @@ pub enum InputFormat {
     Csv,
     /// tallfat binary matrix (`io::binmat`).
     Bin,
+    /// libsvm sparse text: `[label] idx:val idx:val ...`, 1-based indices
+    /// (`io::sparse`).
+    Libsvm,
+    /// `;`-separated sparse text: `idx:val;idx:val`, 0-based indices
+    /// (`io::sparse`).
+    SparseCsv,
+    /// tallfat binary CSR shard (`io::sparse`).
+    Csr,
 }
 
 impl InputFormat {
@@ -45,6 +53,9 @@ impl InputFormat {
         match s.to_ascii_lowercase().as_str() {
             "csv" => Ok(InputFormat::Csv),
             "bin" => Ok(InputFormat::Bin),
+            "libsvm" | "svm" => Ok(InputFormat::Libsvm),
+            "sparse-csv" | "scsv" => Ok(InputFormat::SparseCsv),
+            "csr" => Ok(InputFormat::Csr),
             other => Err(Error::Config(format!("unknown format `{other}`"))),
         }
     }
@@ -53,9 +64,20 @@ impl InputFormat {
     pub fn from_path(path: &str) -> Self {
         if path.ends_with(".bin") || path.ends_with(".tfb") {
             InputFormat::Bin
+        } else if path.ends_with(".libsvm") || path.ends_with(".svm") {
+            InputFormat::Libsvm
+        } else if path.ends_with(".scsv") {
+            InputFormat::SparseCsv
+        } else if path.ends_with(".csr") {
+            InputFormat::Csr
         } else {
             InputFormat::Csv
         }
+    }
+
+    /// Whether rows are stored as (index, value) pairs rather than dense.
+    pub fn is_sparse(self) -> bool {
+        matches!(self, InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr)
     }
 }
 
@@ -167,6 +189,9 @@ impl RunConfig {
             if let Some(v) = file.get_str(section, "format") {
                 self.format = InputFormat::parse(v)?;
             }
+            if let Some(v) = file.get_str(section, "input_format") {
+                self.format = InputFormat::parse(v)?;
+            }
             if let Some(v) = file.get_str(section, "artifacts_dir") {
                 self.artifacts_dir = v.to_string();
             }
@@ -220,6 +245,9 @@ impl RunConfig {
             self.backend = BackendKind::parse(b)?;
         }
         if let Some(f) = args.opt_str("format") {
+            self.format = InputFormat::parse(f)?;
+        }
+        if let Some(f) = args.opt_str("input-format") {
             self.format = InputFormat::parse(f)?;
         }
         if let Some(d) = args.opt_str("artifacts-dir") {
@@ -401,5 +429,39 @@ mod tests {
         assert_eq!(InputFormat::from_path("x.bin"), InputFormat::Bin);
         assert_eq!(InputFormat::from_path("x.csv"), InputFormat::Csv);
         assert_eq!(InputFormat::from_path("x.txt"), InputFormat::Csv);
+        assert_eq!(InputFormat::from_path("x.libsvm"), InputFormat::Libsvm);
+        assert_eq!(InputFormat::from_path("x.svm"), InputFormat::Libsvm);
+        assert_eq!(InputFormat::from_path("x.scsv"), InputFormat::SparseCsv);
+        assert_eq!(InputFormat::from_path("x.csr"), InputFormat::Csr);
+    }
+
+    #[test]
+    fn sparse_formats_parse_and_flag() {
+        assert_eq!(InputFormat::parse("libsvm").unwrap(), InputFormat::Libsvm);
+        assert_eq!(InputFormat::parse("sparse-csv").unwrap(), InputFormat::SparseCsv);
+        assert_eq!(InputFormat::parse("csr").unwrap(), InputFormat::Csr);
+        assert!(InputFormat::Libsvm.is_sparse());
+        assert!(InputFormat::Csr.is_sparse());
+        assert!(!InputFormat::Csv.is_sparse());
+        assert!(!InputFormat::Bin.is_sparse());
+    }
+
+    #[test]
+    fn input_format_flag_overrides_extension() {
+        // `--input-format libsvm` beats the `.data` extension guess.
+        let args = Args::parse(
+            "svd ratings.data --input-format libsvm"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.format, InputFormat::Libsvm);
+        // A sparse *shard* format is rejected at validation time.
+        c.shard_format = InputFormat::Csr;
+        assert!(c.validate().is_err());
+        c.shard_format = InputFormat::Bin;
+        assert!(c.validate().is_ok());
     }
 }

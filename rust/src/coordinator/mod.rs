@@ -37,12 +37,15 @@ COMMANDS
   gen-data      generate a synthetic dataset
                   --out PATH --rows M --cols N [--rank R] [--spectrum geometric|power|lowrank]
                   [--decay D] [--noise S] [--seed S] [--streamed] [--clusters C --spread S]
+                  [--density D]   (sparse outputs: a .libsvm/.scsv/.csr --out
+                   streams a ~D-fill sparse matrix instead, default 0.05)
   svd           randomized rank-k SVD of a tall-and-fat file
                   --input PATH --k K [--oversample P] [--power-iters Q] [--workers W]
                   [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
                   [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
                   [--save-model DIR] [--shard-format csv|bin] [--sigma-cutoff REL]
                   [--chunks-per-worker C] [--chunk-rows R] [--chunk-retries N]
+                  [--input-format csv|bin|libsvm|scsv|csr]
                   (--center = PCA mode: subtract column means, one extra pass;
                    --save-model persists a servable model directory;
                    --shard-format picks the Y/U intermediate shard format;
@@ -50,7 +53,10 @@ COMMANDS
                    --chunks-per-worker plans C scheduler chunks per worker
                    [default 4; 1 = old static schedule], --chunk-rows caps a
                    chunk at R rows instead, --chunk-retries bounds per-chunk
-                   retries before a pass fails [default 2])
+                   retries before a pass fails [default 2];
+                   --input-format overrides the extension guess — sparse
+                   inputs stream as CSR blocks through O(nnz) kernels,
+                   locally and with --distributed)
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]

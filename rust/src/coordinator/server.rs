@@ -29,22 +29,22 @@ impl MetricsRegistry {
 
     /// Set a gauge.
     pub fn set(&self, name: &str, value: f64) {
-        self.values.lock().unwrap().insert(name.to_string(), value);
+        crate::util::lock_unpoisoned(&self.values).insert(name.to_string(), value);
     }
 
     /// Add to a counter (creates at 0).
     pub fn add(&self, name: &str, delta: f64) {
-        *self.values.lock().unwrap().entry(name.to_string()).or_insert(0.0) += delta;
+        *crate::util::lock_unpoisoned(&self.values).entry(name.to_string()).or_insert(0.0) += delta;
     }
 
     /// Read one metric.
     pub fn get(&self, name: &str) -> Option<f64> {
-        self.values.lock().unwrap().get(name).copied()
+        crate::util::lock_unpoisoned(&self.values).get(name).copied()
     }
 
     /// Render the Prometheus text exposition.
     pub fn render(&self) -> String {
-        let values = self.values.lock().unwrap();
+        let values = crate::util::lock_unpoisoned(&self.values);
         let mut out = String::new();
         for (k, v) in values.iter() {
             out.push_str(&format!("tallfat_{k} {v}\n"));

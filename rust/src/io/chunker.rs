@@ -1,9 +1,12 @@
 //! The paper's `split_process` partitioning (§3), at arbitrary granularity.
 //!
 //! For text inputs: divide the file into N byte ranges, then slide each
-//! boundary forward to the next newline so no row is split — exactly the
-//! `f.seek(s); f.readline(); end = f.tell()-1` logic in the paper's listing.
-//! For binary inputs: exact row-range division (no realignment needed).
+//! boundary forward to the next newline so no row is split — the
+//! `f.seek(s); f.readline(); end = f.tell()-1` logic in the paper's
+//! listing, except that a boundary already sitting at a line start is kept
+//! as-is (the paper's unconditional skip would donate one extra row to the
+//! previous chunk). For binary inputs: exact row-range division (no
+//! realignment needed).
 //!
 //! N is no longer the worker count: the dynamic scheduler
 //! ([`crate::splitproc::sched`]) plans many more chunks than workers
@@ -12,7 +15,7 @@
 
 use crate::error::Result;
 use std::fs::File;
-use std::io::{BufRead, BufReader, Seek, SeekFrom};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
 
 /// A half-open byte range `[start, end)` of an input file.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,12 +53,20 @@ pub fn chunk_byte_ranges(path: &str, n: usize) -> Result<Vec<ByteRange>> {
         if ideal <= prev {
             continue;
         }
-        // Seek to the ideal split and skip forward past the current line —
-        // the paper's realignment step.
-        f.seek(SeekFrom::Start(ideal))?;
-        let mut skipped = Vec::new();
-        f.read_until(b'\n', &mut skipped)?;
-        let aligned = ideal + skipped.len() as u64;
+        // Realign only when the ideal split lands mid-line: if the byte
+        // before `ideal` is a newline the boundary already sits at a line
+        // start, and the paper's unconditional "skip one line" step would
+        // wrongly push a whole extra row into the previous chunk.
+        f.seek(SeekFrom::Start(ideal - 1))?;
+        let mut before = [0u8; 1];
+        f.read_exact(&mut before)?;
+        let aligned = if before[0] == b'\n' {
+            ideal
+        } else {
+            let mut skipped = Vec::new();
+            f.read_until(b'\n', &mut skipped)?;
+            ideal + skipped.len() as u64
+        };
         if aligned > prev && aligned < file_size {
             boundaries.push(aligned);
         }
@@ -188,6 +199,41 @@ mod tests {
         let path = tmp_file("one.csv", "1;2;3;4;5;6;7;8;9;10\n");
         let ranges = chunk_byte_ranges(&path, 4).unwrap();
         assert_eq!(ranges.len(), 1);
+    }
+
+    #[test]
+    fn boundary_on_newline_stays_balanced() {
+        // 8 fixed-width lines, 4 chunks: every ideal boundary lands exactly
+        // on a line start. The old unconditional realignment consumed one
+        // whole extra line per boundary (3/2/2/1 instead of 2/2/2/2).
+        let content: String = (0..8).map(|i| format!("{i};{i}\n")).collect();
+        assert_eq!(content.len() % 4, 0, "fixture must split evenly");
+        let path = tmp_file("aligned.csv", &content);
+        let ranges = chunk_byte_ranges(&path, 4).unwrap();
+        assert_eq!(ranges.len(), 4);
+        for (i, r) in ranges.iter().enumerate() {
+            let lines = read_range(&path, *r).lines().count();
+            assert_eq!(lines, 2, "chunk {i} has {lines} lines: {ranges:?}");
+        }
+    }
+
+    #[test]
+    fn midline_boundary_still_realigns() {
+        // Uneven widths: ideal boundaries fall mid-line and must slide
+        // forward to the next newline — the paper's original behavior.
+        let content = "a_long_first_line;1\nb;2\nc;3\nd;4\ne;5\n";
+        let path = tmp_file("midline.csv", content);
+        let ranges = chunk_byte_ranges(&path, 3).unwrap();
+        let mut total = 0;
+        for r in &ranges {
+            let text = read_range(&path, *r);
+            assert!(text.ends_with('\n'));
+            for line in text.lines() {
+                assert_eq!(line.split(';').count(), 2, "split line {line:?}");
+                total += 1;
+            }
+        }
+        assert_eq!(total, 5);
     }
 
     #[test]

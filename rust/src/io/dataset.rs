@@ -125,6 +125,12 @@ pub fn gen_streamed(
         InputFormat::Bin => {
             bin_writer = Some(BinMatWriter::create(&spec.path, n, DType::F32)?);
         }
+        InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr => {
+            return Err(crate::error::Error::Config(
+                "gen_streamed writes dense rows; use gen_sparse_streamed for sparse outputs"
+                    .into(),
+            ));
+        }
     }
 
     let mut row_out = vec![0.0f64; n];
@@ -163,6 +169,88 @@ pub fn gen_streamed(
         w.finish()?;
     }
     Ok(())
+}
+
+/// Stream a tall sparse matrix to disk at roughly `density` fill: a
+/// deterministic hash picks the nonzero pattern, values are N(0, 1)
+/// scaled. Memory stays `O(row)`. For the `scsv` format (which cannot
+/// represent all-zero rows) every row gets at least one entry.
+pub fn gen_sparse_streamed(
+    spec: &InputSpec,
+    m: usize,
+    n: usize,
+    density: f64,
+    seed: u64,
+) -> Result<u64> {
+    use crate::io::sparse::{write_libsvm_row, write_scsv_row, CsrWriter};
+    use crate::rng::splitmix::{mix3, to_unit_open};
+    if !(0.0..=1.0).contains(&density) {
+        return Err(crate::error::Error::Config(format!(
+            "density must be in [0, 1], got {density}"
+        )));
+    }
+    if n == 0 {
+        return Err(crate::error::Error::Config(
+            "sparse output needs cols >= 1".into(),
+        ));
+    }
+    let g = Gaussian::new(seed);
+    let mut text_writer: Option<std::io::BufWriter<std::fs::File>> = None;
+    let mut csr_writer: Option<CsrWriter> = None;
+    match spec.format {
+        InputFormat::Libsvm | InputFormat::SparseCsv => {
+            text_writer = Some(std::io::BufWriter::with_capacity(
+                1 << 20,
+                std::fs::File::create(&spec.path)?,
+            ));
+        }
+        InputFormat::Csr => {
+            csr_writer = Some(CsrWriter::create(&spec.path, m, n)?);
+        }
+        other => {
+            return Err(crate::error::Error::Config(format!(
+                "gen_sparse_streamed: {other:?} is not a sparse format"
+            )));
+        }
+    }
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
+    let mut nnz = 0u64;
+    for i in 0..m {
+        indices.clear();
+        values.clear();
+        for j in 0..n {
+            let u = to_unit_open(mix3(seed ^ 0x5AA5_5AA5, i as u64, j as u64));
+            if u < density {
+                indices.push(j as u32);
+                values.push(g.sample(i as u64, j as u64));
+            }
+        }
+        if indices.is_empty() && spec.format == InputFormat::SparseCsv {
+            // scsv cannot represent an all-zero row; pin one tiny entry.
+            indices.push((i % n) as u32);
+            values.push(1e-12);
+        }
+        nnz += indices.len() as u64;
+        match spec.format {
+            InputFormat::Libsvm => {
+                write_libsvm_row(text_writer.as_mut().expect("text writer"), &indices, &values)?;
+            }
+            InputFormat::SparseCsv => {
+                write_scsv_row(text_writer.as_mut().expect("text writer"), &indices, &values)?;
+            }
+            _ => {
+                csr_writer.as_mut().expect("csr writer").write_row(&indices, &values)?;
+            }
+        }
+    }
+    if let Some(mut w) = text_writer {
+        w.flush()?;
+    }
+    if let Some(w) = csr_writer {
+        w.finish()?;
+    }
+    Ok(nnz)
 }
 
 /// Clustered "document vectors" for the LSA / similarity example (E4):
@@ -242,6 +330,32 @@ mod tests {
             std::fs::read(&s1.path).unwrap(),
             std::fs::read(&s2.path).unwrap()
         );
+    }
+
+    #[test]
+    fn sparse_streamed_hits_density_and_roundtrips() {
+        let dir = std::env::temp_dir().join("tallfat_test_dataset");
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["s.libsvm", "s.csr"] {
+            let spec = InputSpec::auto(dir.join(name).to_string_lossy().into_owned());
+            let nnz = gen_sparse_streamed(&spec, 400, 32, 0.05, 11).unwrap();
+            let density = nnz as f64 / (400.0 * 32.0);
+            assert!((0.02..=0.09).contains(&density), "{name}: density {density}");
+            let s = crate::io::read_sparse(&spec).unwrap();
+            assert_eq!(s.rows(), 400);
+            assert_eq!(s.nnz() as u64, nnz, "{name}");
+        }
+        // deterministic across calls
+        let s1 = InputSpec::auto(dir.join("d1.libsvm").to_string_lossy().into_owned());
+        let s2 = InputSpec::auto(dir.join("d2.libsvm").to_string_lossy().into_owned());
+        gen_sparse_streamed(&s1, 60, 8, 0.2, 5).unwrap();
+        gen_sparse_streamed(&s2, 60, 8, 0.2, 5).unwrap();
+        assert_eq!(std::fs::read(&s1.path).unwrap(), std::fs::read(&s2.path).unwrap());
+        // dense formats and zero-column outputs rejected
+        let bad = InputSpec::csv(dir.join("bad.csv").to_string_lossy().into_owned());
+        assert!(gen_sparse_streamed(&bad, 5, 3, 0.5, 1).is_err());
+        let z = InputSpec::auto(dir.join("z.scsv").to_string_lossy().into_owned());
+        assert!(gen_sparse_streamed(&z, 5, 0, 0.5, 1).is_err());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Matrix I/O: the paper's `;`-separated CSV, a binary row-major format,
-//! the byte-range chunker (`split_process`'s seek/realign logic), sharded
+//! sparse inputs (libsvm / sparse-CSV / binary CSR — [`sparse`]), the
+//! byte-range chunker (`split_process`'s seek/realign logic), sharded
 //! writers, and synthetic dataset generators.
 
 pub mod binmat;
@@ -7,17 +8,19 @@ pub mod chunker;
 pub mod csv;
 pub mod dataset;
 pub mod manifest;
+pub mod sparse;
 pub mod writer;
 
 pub use binmat::{BinMatHeader, BinMatReader, BinMatWriter};
 pub use chunker::{chunk_byte_ranges, chunk_row_ranges, ByteRange};
 pub use csv::{parse_row, CsvRowReader};
 pub use manifest::KvManifest;
+pub use sparse::{CsrHeader, CsrReader, CsrWriter, SparseRowReader, SparseTextReader};
 pub use writer::ShardSet;
 
 use crate::config::InputFormat;
 use crate::error::Result;
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 
 /// An input matrix file plus its format — what the splitproc engine reads.
 #[derive(Clone, Debug)]
@@ -35,13 +38,23 @@ impl InputSpec {
         InputSpec { path: path.into(), format: InputFormat::Bin }
     }
 
+    pub fn libsvm(path: impl Into<String>) -> Self {
+        InputSpec { path: path.into(), format: InputFormat::Libsvm }
+    }
+
+    pub fn csr(path: impl Into<String>) -> Self {
+        InputSpec { path: path.into(), format: InputFormat::Csr }
+    }
+
     pub fn auto(path: impl Into<String>) -> Self {
         let path = path.into();
         let format = InputFormat::from_path(&path);
         InputSpec { path, format }
     }
 
-    /// Count rows and columns by scanning (CSV) or reading the header (bin).
+    /// Count rows and columns by scanning (text formats) or reading the
+    /// header (bin/csr). For sparse text formats `cols` is the highest
+    /// referenced column + 1.
     pub fn dims(&self) -> Result<(usize, usize)> {
         match self.format {
             InputFormat::Csv => csv::count_dims(&self.path),
@@ -49,22 +62,43 @@ impl InputSpec {
                 let h = binmat::BinMatHeader::read_from(&self.path)?;
                 Ok((h.rows as usize, h.cols as usize))
             }
+            InputFormat::Libsvm | InputFormat::SparseCsv => {
+                sparse::count_dims_text(&self.path, self.format)
+            }
+            InputFormat::Csr => {
+                let h = sparse::CsrHeader::read_from(&self.path)?;
+                Ok((h.rows as usize, h.cols as usize))
+            }
         }
     }
 }
 
 /// Read an entire (small) matrix into memory — leader-side and test helper.
+/// Sparse inputs densify here (this path is for small matrices only; the
+/// streaming passes never call it).
 pub fn read_matrix(spec: &InputSpec) -> Result<Matrix> {
     match spec.format {
         InputFormat::Csv => csv::read_matrix_csv(&spec.path),
         InputFormat::Bin => binmat::read_matrix_bin(&spec.path),
+        InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr => {
+            Ok(sparse::read_sparse_matrix(&spec.path, spec.format)?.to_dense())
+        }
     }
 }
 
-/// Write a matrix in the given format.
+/// Read an entire sparse matrix into memory without densifying.
+pub fn read_sparse(spec: &InputSpec) -> Result<SparseMatrix> {
+    sparse::read_sparse_matrix(&spec.path, spec.format)
+}
+
+/// Write a matrix in the given format (dense matrices sparsify losslessly
+/// into the sparse formats — exact zeros become absent entries).
 pub fn write_matrix(m: &Matrix, spec: &InputSpec) -> Result<()> {
     match spec.format {
         InputFormat::Csv => csv::write_matrix_csv(m, &spec.path),
         InputFormat::Bin => binmat::write_matrix_bin(m, &spec.path),
+        InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr => {
+            sparse::write_sparse_matrix(&SparseMatrix::from_dense(m, 0.0), &spec.path, spec.format)
+        }
     }
 }

@@ -1,0 +1,768 @@
+//! Sparse matrix I/O: libsvm text, `;`-separated sparse text, and the
+//! tallfat binary CSR format (`.csr`).
+//!
+//! Three interchange formats for tall-and-fat sparse inputs:
+//!
+//! * **libsvm** (`.libsvm` / `.svm`): `[label] idx:val idx:val ...` per
+//!   line, whitespace-separated, **1-based** indices, `#` comments. The
+//!   leading label token (any token without a `:`) is ignored — the
+//!   pipeline factorizes the feature matrix only. A line holding just a
+//!   label is a legitimate all-zero row.
+//! * **sparse-CSV** (`.scsv`): `idx:val;idx:val` per line, **0-based**
+//!   indices — the paper's `;` idiom, sparsified. Blank lines are skipped,
+//!   so this format cannot represent all-zero rows (use libsvm or csr).
+//! * **CSR binary** (`.csr`): seekable row ranges without newline
+//!   realignment, the sparse sibling of [`crate::io::binmat`]:
+//!
+//! ```text
+//! offset  size        field
+//! 0       4           magic "TFSC"
+//! 4       4           version (u32 le) = 1
+//! 8       8           rows (u64 le)
+//! 16      8           cols (u64 le)
+//! 24      8           nnz (u64 le)
+//! 32      (rows+1)*8  indptr (u64 le each)
+//! ...                 per row: nnz_i * u32 indices, then nnz_i * f64 values
+//! ```
+//!
+//! Row `r`'s payload starts at `32 + (rows+1)*8 + indptr[r]*12`, so a chunk
+//! `[start, end)` of rows opens with two seeks — exact row-range chunking,
+//! like the dense binmat.
+//!
+//! All readers yield **0-based ascending** `u32` indices; the libsvm
+//! reader converts from 1-based on the way in.
+
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::linalg::SparseMatrix;
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+
+pub const CSR_MAGIC: &[u8; 4] = b"TFSC";
+pub const CSR_VERSION: u32 = 1;
+
+/// Bytes per stored nonzero in the CSR payload (`u32` index + `f64` value).
+const NNZ_BYTES: u64 = 12;
+
+// ---------------------------------------------------------------------------
+// text row parsing
+// ---------------------------------------------------------------------------
+
+/// Parse one libsvm line into `(indices, values)` (0-based on output).
+/// Returns `Ok(false)` when the line is blank or comment-only (not a row).
+/// A bare label with no pairs is a valid all-zero row (`Ok(true)`, empty).
+pub fn parse_libsvm_row(
+    line: &[u8],
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f64>,
+) -> Result<bool> {
+    indices.clear();
+    values.clear();
+    let line = strip_comment(line);
+    let text = std::str::from_utf8(line)
+        .map_err(|_| Error::parse("libsvm: non-utf8 line".to_string()))?;
+    let mut saw_token = false;
+    let mut last: Option<u32> = None;
+    for (t, tok) in text.split_ascii_whitespace().enumerate() {
+        saw_token = true;
+        let Some((key, val)) = tok.split_once(':') else {
+            if t == 0 {
+                continue; // leading label, ignored
+            }
+            return Err(Error::parse(format!("libsvm: bare token `{tok}` after features")));
+        };
+        if key == "qid" {
+            continue; // ranking qualifier, ignored
+        }
+        let idx: u64 = key
+            .parse()
+            .map_err(|_| Error::parse(format!("libsvm: bad index `{key}`")))?;
+        if idx == 0 {
+            return Err(Error::parse("libsvm: index 0 in a 1-based file".to_string()));
+        }
+        if idx > u32::MAX as u64 {
+            return Err(Error::parse(format!("libsvm: index {idx} exceeds u32")));
+        }
+        let idx = (idx - 1) as u32;
+        if let Some(prev) = last {
+            if idx <= prev {
+                return Err(Error::parse(format!(
+                    "libsvm: indices not ascending ({} then {})",
+                    prev + 1,
+                    idx + 1
+                )));
+            }
+        }
+        last = Some(idx);
+        let v: f64 = val
+            .parse()
+            .map_err(|_| Error::parse(format!("libsvm: bad value `{val}`")))?;
+        indices.push(idx);
+        values.push(v);
+    }
+    Ok(saw_token)
+}
+
+/// Parse one sparse-CSV line (`idx:val;idx:val`, 0-based). Returns
+/// `Ok(false)` for blank lines.
+pub fn parse_sparse_csv_row(
+    line: &[u8],
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f64>,
+) -> Result<bool> {
+    indices.clear();
+    values.clear();
+    let text = std::str::from_utf8(line)
+        .map_err(|_| Error::parse("scsv: non-utf8 line".to_string()))?
+        .trim();
+    if text.is_empty() {
+        return Ok(false);
+    }
+    let mut last: Option<u32> = None;
+    for tok in text.split(';') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let Some((key, val)) = tok.split_once(':') else {
+            return Err(Error::parse(format!("scsv: token `{tok}` is not idx:val")));
+        };
+        let idx: u32 = key
+            .trim()
+            .parse()
+            .map_err(|_| Error::parse(format!("scsv: bad index `{key}`")))?;
+        if let Some(prev) = last {
+            if idx <= prev {
+                return Err(Error::parse(format!(
+                    "scsv: indices not ascending ({prev} then {idx})"
+                )));
+            }
+        }
+        last = Some(idx);
+        let v: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| Error::parse(format!("scsv: bad value `{val}`")))?;
+        indices.push(idx);
+        values.push(v);
+    }
+    Ok(true)
+}
+
+fn strip_comment(line: &[u8]) -> &[u8] {
+    match line.iter().position(|&b| b == b'#') {
+        Some(p) => &line[..p],
+        None => line,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// streaming readers
+// ---------------------------------------------------------------------------
+
+/// Streaming sparse-row reader over a newline-aligned byte range of a
+/// libsvm or sparse-CSV file (the sparse sibling of
+/// [`crate::io::csv::CsvRowReader`]).
+pub struct SparseTextReader {
+    reader: BufReader<File>,
+    format: InputFormat,
+    pos: u64,
+    end: u64,
+    line_buf: Vec<u8>,
+}
+
+impl SparseTextReader {
+    pub fn open(path: &str, format: InputFormat) -> Result<Self> {
+        let len = std::fs::metadata(path)?.len();
+        Self::open_range(path, format, 0, len)
+    }
+
+    /// Open a byte range `[start, end)` (must be newline-aligned).
+    pub fn open_range(path: &str, format: InputFormat, start: u64, end: u64) -> Result<Self> {
+        if !matches!(format, InputFormat::Libsvm | InputFormat::SparseCsv) {
+            return Err(Error::Config(format!(
+                "SparseTextReader: {format:?} is not a sparse text format"
+            )));
+        }
+        let mut f = File::open(path)?;
+        f.seek(SeekFrom::Start(start))?;
+        Ok(SparseTextReader {
+            reader: BufReader::with_capacity(1 << 20, f),
+            format,
+            pos: start,
+            end,
+            line_buf: Vec::with_capacity(4096),
+        })
+    }
+
+    /// Read the next row. Returns `Ok(false)` at end of range.
+    pub fn next_row(&mut self, indices: &mut Vec<u32>, values: &mut Vec<f64>) -> Result<bool> {
+        loop {
+            if self.pos >= self.end {
+                return Ok(false);
+            }
+            self.line_buf.clear();
+            let n = self.reader.read_until(b'\n', &mut self.line_buf)?;
+            if n == 0 {
+                return Ok(false);
+            }
+            self.pos += n as u64;
+            let is_row = match self.format {
+                InputFormat::Libsvm => parse_libsvm_row(&self.line_buf, indices, values)?,
+                _ => parse_sparse_csv_row(&self.line_buf, indices, values)?,
+            };
+            if is_row {
+                return Ok(true);
+            }
+            // skip blank / comment-only lines
+        }
+    }
+}
+
+/// Parsed CSR header.
+#[derive(Clone, Copy, Debug)]
+pub struct CsrHeader {
+    pub rows: u64,
+    pub cols: u64,
+    pub nnz: u64,
+}
+
+impl CsrHeader {
+    pub const SIZE: u64 = 32;
+
+    pub fn read_from(path: &str) -> Result<Self> {
+        let mut f = File::open(path)?;
+        let mut buf = [0u8; Self::SIZE as usize];
+        f.read_exact(&mut buf)?;
+        if &buf[0..4] != CSR_MAGIC {
+            return Err(Error::parse("csr: bad magic"));
+        }
+        let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+        if version != CSR_VERSION {
+            return Err(Error::parse(format!("csr: unsupported version {version}")));
+        }
+        Ok(CsrHeader {
+            rows: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
+            cols: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
+            nnz: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
+        })
+    }
+
+    fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
+        let mut buf = [0u8; Self::SIZE as usize];
+        buf[0..4].copy_from_slice(CSR_MAGIC);
+        buf[4..8].copy_from_slice(&CSR_VERSION.to_le_bytes());
+        buf[8..16].copy_from_slice(&self.rows.to_le_bytes());
+        buf[16..24].copy_from_slice(&self.cols.to_le_bytes());
+        buf[24..32].copy_from_slice(&self.nnz.to_le_bytes());
+        w.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Byte offset where the row payload region begins.
+    fn data_start(&self) -> u64 {
+        Self::SIZE + (self.rows + 1) * 8
+    }
+}
+
+/// Streaming CSR writer. The row count must be declared up front (the
+/// indptr region is reserved before the payload); rows append in order and
+/// `finish` back-fills nnz + indptr. Memory is `O(rows)` for the indptr,
+/// never `O(nnz)`.
+pub struct CsrWriter {
+    w: BufWriter<File>,
+    rows_declared: u64,
+    cols: u64,
+    indptr: Vec<u64>,
+    nnz: u64,
+}
+
+impl CsrWriter {
+    pub fn create(path: &str, rows: usize, cols: usize) -> Result<Self> {
+        let f = File::create(path)?;
+        let mut w = BufWriter::with_capacity(1 << 20, f);
+        let header = CsrHeader { rows: rows as u64, cols: cols as u64, nnz: 0 };
+        header.write_to(&mut w)?;
+        // Reserve the indptr region (back-filled at finish).
+        let zeros = vec![0u8; 1 << 12];
+        let mut remaining = (rows as u64 + 1) * 8;
+        while remaining > 0 {
+            let take = (zeros.len() as u64).min(remaining) as usize;
+            w.write_all(&zeros[..take])?;
+            remaining -= take as u64;
+        }
+        Ok(CsrWriter {
+            w,
+            rows_declared: rows as u64,
+            cols: cols as u64,
+            indptr: vec![0],
+            nnz: 0,
+        })
+    }
+
+    /// Append one row's nonzeros (0-based ascending indices).
+    pub fn write_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()> {
+        if indices.len() != values.len() {
+            return Err(Error::shape("csr write_row: indices/values length mismatch"));
+        }
+        if self.indptr.len() as u64 > self.rows_declared {
+            return Err(Error::shape(format!(
+                "csr write_row: more than the declared {} rows",
+                self.rows_declared
+            )));
+        }
+        let mut last: Option<u32> = None;
+        for &j in indices {
+            if j as u64 >= self.cols {
+                return Err(Error::shape(format!(
+                    "csr write_row: column {j} out of range ({})",
+                    self.cols
+                )));
+            }
+            if let Some(prev) = last {
+                if j <= prev {
+                    return Err(Error::parse("csr write_row: indices not ascending".into()));
+                }
+            }
+            last = Some(j);
+        }
+        for &j in indices {
+            self.w.write_all(&j.to_le_bytes())?;
+        }
+        for &v in values {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        self.nnz += indices.len() as u64;
+        self.indptr.push(self.nnz);
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<u64> {
+        if self.indptr.len() as u64 != self.rows_declared + 1 {
+            return Err(Error::shape(format!(
+                "csr finish: {} rows written, {} declared",
+                self.indptr.len() - 1,
+                self.rows_declared
+            )));
+        }
+        self.w.flush()?;
+        let mut f = self.w.into_inner().map_err(|e| Error::Other(e.to_string()))?;
+        f.seek(SeekFrom::Start(0))?;
+        CsrHeader { rows: self.rows_declared, cols: self.cols, nnz: self.nnz }.write_to(&mut f)?;
+        let mut buf = Vec::with_capacity(self.indptr.len() * 8);
+        for &p in &self.indptr {
+            buf.extend_from_slice(&p.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+        f.sync_all()?;
+        Ok(self.rows_declared)
+    }
+}
+
+/// Streaming CSR reader over a row range.
+pub struct CsrReader {
+    r: BufReader<File>,
+    header: CsrHeader,
+    /// indptr entries for rows `[start, end]` inclusive of the end fence.
+    indptr: Vec<u64>,
+    next: usize,
+    /// Reusable raw-byte buffer (no per-row allocation on the hot path —
+    /// the binmat reader's `byte_buf` discipline).
+    byte_buf: Vec<u8>,
+}
+
+impl CsrReader {
+    pub fn open(path: &str) -> Result<Self> {
+        let header = CsrHeader::read_from(path)?;
+        Self::open_rows(path, 0, header.rows)
+    }
+
+    /// Open rows `[start, end)`.
+    pub fn open_rows(path: &str, start: u64, end: u64) -> Result<Self> {
+        let header = CsrHeader::read_from(path)?;
+        let end = end.min(header.rows);
+        let start = start.min(end);
+        let mut f = File::open(path)?;
+        // indptr[start ..= end]
+        f.seek(SeekFrom::Start(CsrHeader::SIZE + start * 8))?;
+        let fence_count = (end - start + 1) as usize;
+        let mut raw = vec![0u8; fence_count * 8];
+        f.read_exact(&mut raw)?;
+        let indptr: Vec<u64> = raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        for w in indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::parse("csr: indptr not monotone".into()));
+            }
+        }
+        if let Some(&last) = indptr.last() {
+            if last > header.nnz {
+                return Err(Error::parse("csr: indptr exceeds nnz".into()));
+            }
+        }
+        f.seek(SeekFrom::Start(header.data_start() + indptr[0] * NNZ_BYTES))?;
+        Ok(CsrReader {
+            r: BufReader::with_capacity(1 << 20, f),
+            header,
+            indptr,
+            next: 0,
+            byte_buf: Vec::new(),
+        })
+    }
+
+    pub fn header(&self) -> &CsrHeader {
+        &self.header
+    }
+
+    /// Read the next row's nonzeros. Returns `Ok(false)` at end of range.
+    pub fn next_row(&mut self, indices: &mut Vec<u32>, values: &mut Vec<f64>) -> Result<bool> {
+        if self.next + 1 >= self.indptr.len() {
+            return Ok(false);
+        }
+        let k = (self.indptr[self.next + 1] - self.indptr[self.next]) as usize;
+        indices.clear();
+        values.clear();
+        self.byte_buf.resize(k * 4, 0);
+        self.r.read_exact(&mut self.byte_buf)?;
+        let mut last: Option<u32> = None;
+        for c in self.byte_buf.chunks_exact(4) {
+            let j = u32::from_le_bytes(c.try_into().unwrap());
+            if j as u64 >= self.header.cols {
+                return Err(Error::parse(format!(
+                    "csr: column {j} out of range ({})",
+                    self.header.cols
+                )));
+            }
+            // The reader contract promises ascending duplicate-free
+            // indices; a corrupt/foreign file must error, not silently
+            // miscompute downstream cursor walks.
+            if let Some(prev) = last {
+                if j <= prev {
+                    return Err(Error::parse(format!(
+                        "csr: indices not ascending within a row ({prev} then {j})"
+                    )));
+                }
+            }
+            last = Some(j);
+            indices.push(j);
+        }
+        self.byte_buf.resize(k * 8, 0);
+        self.r.read_exact(&mut self.byte_buf)?;
+        for c in self.byte_buf.chunks_exact(8) {
+            values.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        self.next += 1;
+        Ok(true)
+    }
+}
+
+/// Row reader over any sparse input format (the facade
+/// [`crate::splitproc::run_chunk_sparse`] streams through).
+pub enum SparseRowReader {
+    Text(SparseTextReader),
+    Csr(CsrReader),
+}
+
+impl SparseRowReader {
+    pub fn next_row(&mut self, indices: &mut Vec<u32>, values: &mut Vec<f64>) -> Result<bool> {
+        match self {
+            SparseRowReader::Text(r) => r.next_row(indices, values),
+            SparseRowReader::Csr(r) => r.next_row(indices, values),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dims + whole-matrix helpers
+// ---------------------------------------------------------------------------
+
+/// Count `(rows, cols)` of a sparse text matrix by scanning once. `cols` is
+/// the highest referenced column + 1 (0-based internal indexing).
+pub fn count_dims_text(path: &str, format: InputFormat) -> Result<(usize, usize)> {
+    let mut reader = SparseTextReader::open(path, format)?;
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    let mut rows = 0usize;
+    let mut cols = 0usize;
+    while reader.next_row(&mut indices, &mut values)? {
+        if let Some(&last) = indices.last() {
+            cols = cols.max(last as usize + 1);
+        }
+        rows += 1;
+    }
+    Ok((rows, cols))
+}
+
+/// Read a whole sparse matrix into memory (leader-side and test helper).
+pub fn read_sparse_matrix(path: &str, format: InputFormat) -> Result<SparseMatrix> {
+    match format {
+        InputFormat::Csr => {
+            let mut r = CsrReader::open(path)?;
+            let (rows, cols) = (r.header().rows as usize, r.header().cols as usize);
+            let mut s = SparseMatrix::with_cols(cols);
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            for _ in 0..rows {
+                if !r.next_row(&mut indices, &mut values)? {
+                    return Err(Error::parse("csr: fewer rows than the header claims".into()));
+                }
+                s.push_row(&indices, &values)?;
+            }
+            Ok(s)
+        }
+        InputFormat::Libsvm | InputFormat::SparseCsv => {
+            let (_, cols) = count_dims_text(path, format)?;
+            let mut r = SparseTextReader::open(path, format)?;
+            let mut s = SparseMatrix::with_cols(cols);
+            let mut indices = Vec::new();
+            let mut values = Vec::new();
+            while r.next_row(&mut indices, &mut values)? {
+                s.push_row(&indices, &values)?;
+            }
+            Ok(s)
+        }
+        other => Err(Error::Config(format!(
+            "read_sparse_matrix: {other:?} is not a sparse format"
+        ))),
+    }
+}
+
+/// Write a sparse matrix in the given sparse format. SparseCsv rejects
+/// all-zero rows (a blank line would be skipped on read — silent row loss).
+pub fn write_sparse_matrix(s: &SparseMatrix, path: &str, format: InputFormat) -> Result<()> {
+    match format {
+        InputFormat::Csr => {
+            let mut w = CsrWriter::create(path, s.rows(), s.cols())?;
+            for i in 0..s.rows() {
+                let (idx, val) = s.row(i);
+                w.write_row(idx, val)?;
+            }
+            w.finish()?;
+            Ok(())
+        }
+        InputFormat::Libsvm => {
+            let mut w = BufWriter::with_capacity(1 << 20, File::create(path)?);
+            for i in 0..s.rows() {
+                let (idx, val) = s.row(i);
+                write_libsvm_row(&mut w, idx, val)?;
+            }
+            w.flush()?;
+            Ok(())
+        }
+        InputFormat::SparseCsv => {
+            let mut w = BufWriter::with_capacity(1 << 20, File::create(path)?);
+            for i in 0..s.rows() {
+                let (idx, val) = s.row(i);
+                if idx.is_empty() {
+                    return Err(Error::Config(format!(
+                        "sparse-csv cannot represent the all-zero row {i} \
+                         (use libsvm or csr)"
+                    )));
+                }
+                write_scsv_row(&mut w, idx, val)?;
+            }
+            w.flush()?;
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "write_sparse_matrix: {other:?} is not a sparse format"
+        ))),
+    }
+}
+
+/// Write one libsvm row (`0` placeholder label, 1-based indices).
+pub fn write_libsvm_row<W: Write>(w: &mut W, indices: &[u32], values: &[f64]) -> Result<()> {
+    w.write_all(b"0")?;
+    for (&j, &v) in indices.iter().zip(values.iter()) {
+        write!(w, " {}:{v}", j as u64 + 1).map_err(Error::Io)?;
+    }
+    w.write_all(b"\n")?;
+    Ok(())
+}
+
+/// Write one sparse-CSV row (`idx:val;idx:val`, 0-based) — the single
+/// definition of the scsv line format, shared by every writer.
+pub fn write_scsv_row<W: Write>(w: &mut W, indices: &[u32], values: &[f64]) -> Result<()> {
+    let mut first = true;
+    for (&j, &v) in indices.iter().zip(values.iter()) {
+        if !first {
+            w.write_all(b";")?;
+        }
+        first = false;
+        write!(w, "{j}:{v}").map_err(Error::Io)?;
+    }
+    w.write_all(b"\n")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_sparse_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn fixture() -> SparseMatrix {
+        let m = Matrix::from_rows(&[
+            vec![1.5, 0.0, 0.0, -2.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![0.0, 3.0, 0.5, 0.0],
+            vec![4.0, 0.0, 0.0, 0.0],
+        ])
+        .unwrap();
+        SparseMatrix::from_dense(&m, 0.0)
+    }
+
+    #[test]
+    fn libsvm_roundtrip_including_zero_rows() {
+        let s = fixture();
+        let path = tmp("rt.libsvm");
+        write_sparse_matrix(&s, &path, InputFormat::Libsvm).unwrap();
+        let back = read_sparse_matrix(&path, InputFormat::Libsvm).unwrap();
+        assert_eq!(back.rows(), 4);
+        assert_eq!(back.to_dense(), s.to_dense());
+        assert_eq!(count_dims_text(&path, InputFormat::Libsvm).unwrap(), (4, 4));
+    }
+
+    #[test]
+    fn libsvm_parses_labels_comments_and_qid() {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        assert!(parse_libsvm_row(b"+1 qid:7 3:1.5 10:-2 # note\n", &mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![2, 9]);
+        assert_eq!(val, vec![1.5, -2.0]);
+        // bare label = all-zero row
+        assert!(parse_libsvm_row(b"0\n", &mut idx, &mut val).unwrap());
+        assert!(idx.is_empty());
+        // blank and comment-only lines are not rows
+        assert!(!parse_libsvm_row(b"\n", &mut idx, &mut val).unwrap());
+        assert!(!parse_libsvm_row(b"# header\n", &mut idx, &mut val).unwrap());
+        // 1-based: index 0 rejected; descending rejected
+        assert!(parse_libsvm_row(b"1 0:2.0\n", &mut idx, &mut val).is_err());
+        assert!(parse_libsvm_row(b"1 5:1 3:1\n", &mut idx, &mut val).is_err());
+        assert!(parse_libsvm_row(b"1 3:x\n", &mut idx, &mut val).is_err());
+    }
+
+    #[test]
+    fn scsv_roundtrip_and_rejects_zero_rows() {
+        let mut s = SparseMatrix::with_cols(5);
+        s.push_row(&[0, 4], &[1.25, -3.0]).unwrap();
+        s.push_row(&[2], &[0.5]).unwrap();
+        let path = tmp("rt.scsv");
+        write_sparse_matrix(&s, &path, InputFormat::SparseCsv).unwrap();
+        let back = read_sparse_matrix(&path, InputFormat::SparseCsv).unwrap();
+        assert_eq!(back.to_dense(), s.to_dense());
+        // all-zero rows are unrepresentable
+        let z = fixture();
+        assert!(write_sparse_matrix(&z, &tmp("zero.scsv"), InputFormat::SparseCsv).is_err());
+    }
+
+    #[test]
+    fn scsv_parse_basics() {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        assert!(parse_sparse_csv_row(b"0:1.5; 3:-2\n", &mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![0, 3]);
+        assert_eq!(val, vec![1.5, -2.0]);
+        assert!(!parse_sparse_csv_row(b"  \n", &mut idx, &mut val).unwrap());
+        assert!(parse_sparse_csv_row(b"3:1;1:2\n", &mut idx, &mut val).is_err());
+        assert!(parse_sparse_csv_row(b"1.5;2\n", &mut idx, &mut val).is_err());
+    }
+
+    #[test]
+    fn csr_roundtrip_and_header() {
+        let s = fixture();
+        let path = tmp("rt.csr");
+        write_sparse_matrix(&s, &path, InputFormat::Csr).unwrap();
+        let h = CsrHeader::read_from(&path).unwrap();
+        assert_eq!((h.rows, h.cols, h.nnz), (4, 4, 5));
+        let back = read_sparse_matrix(&path, InputFormat::Csr).unwrap();
+        assert_eq!(back.to_dense(), s.to_dense());
+    }
+
+    #[test]
+    fn csr_row_range_reading() {
+        let s = fixture();
+        let path = tmp("range.csr");
+        write_sparse_matrix(&s, &path, InputFormat::Csr).unwrap();
+        let mut r = CsrReader::open_rows(&path, 2, 4).unwrap();
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![1, 2]);
+        assert_eq!(val, vec![3.0, 0.5]);
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![0]);
+        assert!(!r.next_row(&mut idx, &mut val).unwrap());
+        // empty range
+        let mut r = CsrReader::open_rows(&path, 4, 4).unwrap();
+        assert!(!r.next_row(&mut idx, &mut val).unwrap());
+    }
+
+    #[test]
+    fn csr_writer_enforces_declared_rows() {
+        let path = tmp("strict.csr");
+        let mut w = CsrWriter::create(&path, 2, 3).unwrap();
+        w.write_row(&[1], &[1.0]).unwrap();
+        // finishing early is an error
+        assert!(w.finish().is_err());
+        let mut w = CsrWriter::create(&path, 1, 3).unwrap();
+        w.write_row(&[0], &[1.0]).unwrap();
+        assert!(w.write_row(&[1], &[1.0]).is_err(), "over-declared rows");
+        assert!(CsrWriter::create(&tmp("v.csr"), 1, 2)
+            .unwrap()
+            .write_row(&[5], &[1.0])
+            .is_err());
+    }
+
+    #[test]
+    fn csr_non_ascending_row_rejected() {
+        // Hand-craft a corrupt file whose one row stores indices [3, 1] —
+        // the reader must error, not silently feed a descending row to
+        // cursor-walking consumers.
+        let path = tmp("desc.csr");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CSR_MAGIC);
+        bytes.extend_from_slice(&CSR_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // rows
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // cols
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // nnz
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // indptr[0]
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // indptr[1]
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let mut r = CsrReader::open(&path).unwrap();
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        let err = r.next_row(&mut idx, &mut val).unwrap_err().to_string();
+        assert!(err.contains("ascending"), "{err}");
+    }
+
+    #[test]
+    fn csr_bad_magic_rejected() {
+        let path = tmp("bad.csr");
+        std::fs::write(&path, b"NOPExxxxxxxxxxxxxxxxxxxxxxxxxxxxxxxx").unwrap();
+        assert!(CsrHeader::read_from(&path).is_err());
+    }
+
+    #[test]
+    fn text_reader_respects_byte_range() {
+        let path = tmp("range.libsvm");
+        std::fs::write(&path, "0 1:1\n0 2:2\n0 3:3\n").unwrap();
+        // First line is bytes [0, 6).
+        let mut r = SparseTextReader::open_range(&path, InputFormat::Libsvm, 0, 6).unwrap();
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![0]);
+        assert!(!r.next_row(&mut idx, &mut val).unwrap());
+    }
+}

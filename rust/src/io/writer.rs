@@ -53,6 +53,13 @@ pub struct ShardSet {
 
 impl ShardSet {
     pub fn new(dir: impl AsRef<Path>, stem: &str, format: InputFormat) -> Result<Self> {
+        // Shards hold dense k-wide factor rows (Y/U0/U) — a sparse format
+        // buys nothing there and the readers below don't speak it.
+        if format.is_sparse() {
+            return Err(Error::Config(format!(
+                "shard format must be csv or bin, got {format:?}"
+            )));
+        }
         std::fs::create_dir_all(dir.as_ref())?;
         Ok(ShardSet {
             dir: dir.as_ref().to_path_buf(),
@@ -69,7 +76,8 @@ impl ShardSet {
     pub fn shard_path(&self, i: usize) -> String {
         let ext = match self.format {
             InputFormat::Csv => "csv",
-            InputFormat::Bin => "bin",
+            // Constructor rejects sparse formats, so everything else is Bin.
+            _ => "bin",
         };
         self.dir
             .join(format!("{}-{i}.{ext}", self.stem))
@@ -88,7 +96,7 @@ impl ShardSet {
                 let f = std::fs::File::create(&tmp)?;
                 WriterInner::Csv(std::io::BufWriter::with_capacity(1 << 20, f))
             }
-            InputFormat::Bin => WriterInner::Bin(BinMatWriter::create(&tmp, cols, DType::F64)?),
+            _ => WriterInner::Bin(BinMatWriter::create(&tmp, cols, DType::F64)?),
         };
         Ok(ShardWriter { inner: Some(inner), tmp, dst })
     }
@@ -104,7 +112,7 @@ impl ShardSet {
     pub fn open_reader(&self, i: usize) -> Result<ShardReader> {
         match self.format {
             InputFormat::Csv => Ok(ShardReader::Csv(CsvRowReader::open(&self.shard_path(i))?)),
-            InputFormat::Bin => Ok(ShardReader::Bin(BinMatReader::open(&self.shard_path(i))?)),
+            _ => Ok(ShardReader::Bin(BinMatReader::open(&self.shard_path(i))?)),
         }
     }
 
@@ -250,6 +258,13 @@ mod tests {
         let merged = set.merge_to_matrix(2).unwrap();
         assert_eq!(merged.shape(), (2, 3));
         assert_eq!(merged.get(1, 2), 0.25);
+    }
+
+    #[test]
+    fn sparse_shard_format_rejected() {
+        for fmt in [InputFormat::Libsvm, InputFormat::SparseCsv, InputFormat::Csr] {
+            assert!(ShardSet::new(tmp_dir("sparse"), "Y", fmt).is_err(), "{fmt:?}");
+        }
     }
 
     #[test]

@@ -7,6 +7,7 @@ pub mod colstats;
 pub mod mult;
 pub mod pass2;
 pub mod randproj;
+pub mod sparse;
 pub mod tsqr;
 
 pub use ata::{AtaBlockJob, AtaRowJob};
@@ -14,4 +15,7 @@ pub use colstats::ColStatsJob;
 pub use mult::MultJob;
 pub use pass2::Pass2Job;
 pub use randproj::{ProjectGramJob, RandomProjRowJob};
+pub use sparse::{
+    SparseAtaJob, SparseColStatsJob, SparseMultJob, SparsePass2Job, SparseProjectGramJob,
+};
 pub use tsqr::{tsqr_sigma_file, TsqrJob};

@@ -1,0 +1,581 @@
+//! Sparse (CSR) versions of the streaming pass jobs.
+//!
+//! Each job mirrors its dense sibling (`colstats` / `ata` / `randproj` /
+//! `pass2` / `mult`) but consumes CSR row blocks through the backend's
+//! `*_sparse` entry points, so work and memory scale with `nnz`, not
+//! `m·n`.
+//!
+//! **Centering never densifies.** The dense path subtracts means row by
+//! row ([`crate::splitproc::CenteredJob`]) — doing that to a sparse row
+//! would fill it in. Instead these jobs compute on the raw sparse rows and
+//! apply the algebraic rank-1 corrections:
+//!
+//! ```text
+//! (A - 1μᵀ)ᵀ(A - 1μᵀ) = AᵀA - sμᵀ - μsᵀ + c·μμᵀ     (s = col sums, c = rows)
+//! (A - 1μᵀ) Ω          = AΩ - 1·(μᵀΩ)
+//! (A - 1μᵀ)ᵀ U₀        = AᵀU₀ - μ·(1ᵀU₀)
+//! ```
+//!
+//! so the chunk partials equal what the dense centered path produces, up
+//! to float associativity.
+
+use crate::backend::BackendRef;
+use crate::error::{Error, Result};
+use crate::io::writer::{ShardReader, ShardSet, ShardWriter};
+use crate::linalg::{Matrix, SparseMatrix};
+use crate::splitproc::{SparseBlockJob, SparseRowJob};
+use std::sync::Arc;
+
+/// `μᵀ B` for a mean vector and a dense `n x k` operand (the constant row
+/// every centered projection subtracts).
+fn mu_times(means: &[f64], b: &Matrix) -> Result<Vec<f64>> {
+    if means.len() != b.rows() {
+        return Err(Error::shape(format!(
+            "centered sparse job: {} means for operand with {} rows",
+            means.len(),
+            b.rows()
+        )));
+    }
+    let k = b.cols();
+    let mut out = vec![0.0; k];
+    for (j, &m) in means.iter().enumerate() {
+        if m == 0.0 {
+            continue;
+        }
+        let row = b.row(j);
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += m * v;
+        }
+    }
+    Ok(out)
+}
+
+/// Per-column sums over sparse rows — pass 0 of PCA mode. The additive
+/// partial is the sums themselves (the driver divides by the row count).
+pub struct SparseColStatsJob {
+    sums: Vec<f64>,
+    count: u64,
+}
+
+impl SparseColStatsJob {
+    pub fn new(cols: usize) -> Self {
+        SparseColStatsJob { sums: vec![0.0; cols], count: 0 }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The additive partial: per-column sums as a `1 x n` matrix.
+    pub fn into_sums(self) -> Matrix {
+        let n = self.sums.len();
+        Matrix::from_vec(1, n, self.sums).expect("sums length is n")
+    }
+}
+
+impl SparseRowJob for SparseColStatsJob {
+    fn exec_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()> {
+        for (&j, &v) in indices.iter().zip(values.iter()) {
+            let slot = self
+                .sums
+                .get_mut(j as usize)
+                .ok_or_else(|| Error::shape(format!("colstats: column {j} out of range")))?;
+            *slot += v;
+        }
+        self.count += 1;
+        Ok(())
+    }
+}
+
+/// Sparse `AᵀA` accumulation (exact-Gram pass 1), centered via the rank-1
+/// correction at post time.
+pub struct SparseAtaJob {
+    backend: BackendRef,
+    acc: Matrix,
+    means: Arc<Vec<f64>>,
+    /// Chunk-local per-column sums (centered mode only).
+    col_sums: Vec<f64>,
+    row_count: u64,
+}
+
+impl SparseAtaJob {
+    pub fn new(backend: BackendRef, n: usize, means: Arc<Vec<f64>>) -> Self {
+        let col_sums = if means.is_empty() { Vec::new() } else { vec![0.0; n] };
+        SparseAtaJob { backend, acc: Matrix::zeros(n, n), means, col_sums, row_count: 0 }
+    }
+
+    pub fn into_partial(self) -> Matrix {
+        self.acc
+    }
+}
+
+impl SparseBlockJob for SparseAtaJob {
+    fn exec_block(&mut self, block: &SparseMatrix) -> Result<()> {
+        let g = self.backend.gram_block_sparse(block)?;
+        self.acc.add_assign(&g)?;
+        if !self.means.is_empty() {
+            for (s, v) in self.col_sums.iter_mut().zip(block.col_sums()) {
+                *s += v;
+            }
+            self.row_count += block.rows() as u64;
+        }
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if self.means.is_empty() {
+            return Ok(());
+        }
+        // G_centered = G - sμᵀ - μsᵀ + c·μμᵀ
+        let n = self.acc.cols();
+        if self.means.len() != n {
+            return Err(Error::shape(format!(
+                "sparse ata: {} means for {n} columns",
+                self.means.len()
+            )));
+        }
+        let c = self.row_count as f64;
+        let mu = self.means.as_slice();
+        let s = &self.col_sums;
+        for a in 0..n {
+            let row = self.acc.row_mut(a);
+            for (b, slot) in row.iter_mut().enumerate() {
+                *slot += -s[a] * mu[b] - mu[a] * s[b] + c * mu[a] * mu[b];
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Sparse fused project+gram (randomized pass 1): `Y = (A - 1μᵀ) Ω` rows
+/// to the chunk's shard, plus the additive `YᵀY` partial.
+pub struct SparseProjectGramJob {
+    backend: BackendRef,
+    omega: Matrix,
+    writer: Option<ShardWriter>,
+    gram_acc: Matrix,
+    /// `μᵀΩ` (centered mode only): the constant row subtracted from AΩ.
+    mu_w: Option<Vec<f64>>,
+    rows: u64,
+}
+
+impl SparseProjectGramJob {
+    pub fn new(
+        backend: BackendRef,
+        omega: Matrix,
+        shards: &ShardSet,
+        chunk: usize,
+        means: &[f64],
+    ) -> Result<Self> {
+        let k = omega.cols();
+        let mu_w = if means.is_empty() { None } else { Some(mu_times(means, &omega)?) };
+        Ok(SparseProjectGramJob {
+            backend,
+            omega,
+            writer: Some(shards.open_writer(chunk, k)?),
+            gram_acc: Matrix::zeros(k, k),
+            mu_w,
+            rows: 0,
+        })
+    }
+
+    pub fn into_gram_partial(self) -> Matrix {
+        self.gram_acc
+    }
+
+    pub fn rows_processed(&self) -> u64 {
+        self.rows
+    }
+}
+
+impl SparseBlockJob for SparseProjectGramJob {
+    fn exec_block(&mut self, block: &SparseMatrix) -> Result<()> {
+        let y = match &self.mu_w {
+            None => {
+                // Uncentered: one fused sparse kernel call.
+                let (y, g) = self.backend.project_gram_block_sparse(block, &self.omega)?;
+                self.gram_acc.add_assign(&g)?;
+                y
+            }
+            Some(mu_w) => {
+                // Centered: Y = AΩ - 1·(μᵀΩ), and the gram must be of the
+                // *centered* Y, so it runs after the subtraction.
+                let mut y = self.backend.project_block_sparse(block, &self.omega)?;
+                for r in 0..y.rows() {
+                    for (v, m) in y.row_mut(r).iter_mut().zip(mu_w.iter()) {
+                        *v -= m;
+                    }
+                }
+                let g = self.backend.gram_block(&y)?;
+                self.gram_acc.add_assign(&g)?;
+                y
+            }
+        };
+        if let Some(w) = self.writer.as_mut() {
+            for i in 0..y.rows() {
+                w.write_row(y.row(i))?;
+            }
+        }
+        self.rows += y.rows() as u64;
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Sparse pass 2: re-stream the chunk's A rows against its Y shard,
+/// `U0 = Y M` to the U0 shard, `W += (A - 1μᵀ)ᵀ U0` as the partial.
+pub struct SparsePass2Job {
+    backend: BackendRef,
+    m: Matrix,
+    y_reader: ShardReader,
+    u0_writer: Option<ShardWriter>,
+    w_acc: Matrix,
+    y_buf: Vec<f64>,
+    means: Arc<Vec<f64>>,
+    /// `1ᵀU0` accumulated over blocks (centered mode only).
+    u0_col_sums: Vec<f64>,
+    rows: u64,
+}
+
+impl SparsePass2Job {
+    pub fn new(
+        backend: BackendRef,
+        m: Matrix,
+        y_shards: &ShardSet,
+        u0_shards: &ShardSet,
+        chunk: usize,
+        n: usize,
+        means: Arc<Vec<f64>>,
+    ) -> Result<Self> {
+        let k = m.rows();
+        let u0_col_sums = if means.is_empty() { Vec::new() } else { vec![0.0; m.cols()] };
+        Ok(SparsePass2Job {
+            backend,
+            m,
+            y_reader: y_shards.open_reader(chunk)?,
+            u0_writer: Some(u0_shards.open_writer(chunk, k)?),
+            w_acc: Matrix::zeros(n, k),
+            y_buf: Vec::with_capacity(k),
+            means,
+            u0_col_sums,
+            rows: 0,
+        })
+    }
+
+    pub fn into_w_partial(self) -> Matrix {
+        self.w_acc
+    }
+
+    pub fn rows_processed(&self) -> u64 {
+        self.rows
+    }
+
+    fn read_y_block(&mut self, rows: usize) -> Result<Matrix> {
+        let k = self.m.rows();
+        let mut y = Matrix::zeros(rows, k);
+        for i in 0..rows {
+            if !self.y_reader.next_row(&mut self.y_buf)? {
+                return Err(Error::Other(format!(
+                    "Y shard exhausted at block row {i} (A/Y misaligned)"
+                )));
+            }
+            if self.y_buf.len() != k {
+                return Err(Error::shape(format!(
+                    "Y shard row has {} cols, expected {k}",
+                    self.y_buf.len()
+                )));
+            }
+            y.row_mut(i).copy_from_slice(&self.y_buf);
+        }
+        Ok(y)
+    }
+}
+
+impl SparseBlockJob for SparsePass2Job {
+    fn exec_block(&mut self, block: &SparseMatrix) -> Result<()> {
+        let y_block = self.read_y_block(block.rows())?;
+        let u0 = self.backend.u_recover_block(&y_block, &self.m)?;
+        let w = self.backend.tmul_block_sparse(block, &u0)?;
+        self.w_acc.add_assign(&w)?;
+        if !self.means.is_empty() {
+            for r in 0..u0.rows() {
+                for (s, &v) in self.u0_col_sums.iter_mut().zip(u0.row(r).iter()) {
+                    *s += v;
+                }
+            }
+        }
+        if let Some(wr) = self.u0_writer.as_mut() {
+            for i in 0..u0.rows() {
+                wr.write_row(u0.row(i))?;
+            }
+        }
+        self.rows += block.rows() as u64;
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if !self.means.is_empty() {
+            // W_centered = W - μ·(1ᵀU0)
+            let k = self.w_acc.cols();
+            if self.u0_col_sums.len() != k {
+                return Err(Error::shape("sparse pass2: U0 column-sum width mismatch"));
+            }
+            for (j, &mu) in self.means.iter().enumerate() {
+                if mu == 0.0 {
+                    continue;
+                }
+                let row = self.w_acc.row_mut(j);
+                for (w, &s) in row.iter_mut().zip(self.u0_col_sums.iter()) {
+                    *w -= mu * s;
+                }
+            }
+        }
+        if let Some(w) = self.u0_writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Sparse exact-Gram pass 2: `U = (A - 1μᵀ) M` rows straight to U shards.
+pub struct SparseMultJob {
+    backend: BackendRef,
+    m: Matrix,
+    writer: Option<ShardWriter>,
+    /// `μᵀM` (centered mode only).
+    mu_m: Option<Vec<f64>>,
+    rows: u64,
+}
+
+impl SparseMultJob {
+    pub fn new(
+        backend: BackendRef,
+        m: Matrix,
+        shards: &ShardSet,
+        chunk: usize,
+        means: &[f64],
+    ) -> Result<Self> {
+        let k = m.cols();
+        let mu_m = if means.is_empty() { None } else { Some(mu_times(means, &m)?) };
+        Ok(SparseMultJob {
+            backend,
+            m,
+            writer: Some(shards.open_writer(chunk, k)?),
+            mu_m,
+            rows: 0,
+        })
+    }
+
+    pub fn rows_processed(&self) -> u64 {
+        self.rows
+    }
+}
+
+impl SparseBlockJob for SparseMultJob {
+    fn exec_block(&mut self, block: &SparseMatrix) -> Result<()> {
+        let mut u = self.backend.project_block_sparse(block, &self.m)?;
+        if let Some(mu_m) = &self.mu_m {
+            for r in 0..u.rows() {
+                for (v, m) in u.row_mut(r).iter_mut().zip(mu_m.iter()) {
+                    *v -= m;
+                }
+            }
+        }
+        if let Some(w) = self.writer.as_mut() {
+            for i in 0..u.rows() {
+                w.write_row(u.row(i))?;
+            }
+        }
+        self.rows += u.rows() as u64;
+        Ok(())
+    }
+
+    fn post_blocks(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.take() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::config::InputFormat;
+    use crate::linalg::{gram, matmul, matmul_tn};
+    use crate::rng::Gaussian;
+    use crate::splitproc::SparseBlocked;
+
+    fn sparse_fixture(rows: usize, cols: usize, seed: u64) -> (SparseMatrix, Matrix) {
+        let g = Gaussian::new(seed);
+        let mut dense = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                let u = crate::rng::splitmix::to_unit_open(crate::rng::splitmix::mix3(
+                    seed ^ 0xF00D,
+                    i as u64,
+                    j as u64,
+                ));
+                if u < 0.2 {
+                    dense.set(i, j, g.sample(i as u64, j as u64));
+                }
+            }
+        }
+        (SparseMatrix::from_dense(&dense, 0.0), dense)
+    }
+
+    fn feed_blocks<J: SparseBlockJob>(s: &SparseMatrix, block: usize, job: J) -> J {
+        let mut b = SparseBlocked::new(job, block, s.cols());
+        for i in 0..s.rows() {
+            let (idx, val) = s.row(i);
+            b.exec_row(idx, val).unwrap();
+        }
+        b.post().unwrap();
+        b.into_inner()
+    }
+
+    fn centered(dense: &Matrix, means: &[f64]) -> Matrix {
+        Matrix::from_fn(dense.rows(), dense.cols(), |i, j| dense.get(i, j) - means[j])
+    }
+
+    fn col_means(dense: &Matrix) -> Vec<f64> {
+        (0..dense.cols())
+            .map(|j| (0..dense.rows()).map(|i| dense.get(i, j)).sum::<f64>() / dense.rows() as f64)
+            .collect()
+    }
+
+    fn shards(name: &str, stem: &str) -> ShardSet {
+        let dir = std::env::temp_dir().join("tallfat_test_sparse_jobs").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        ShardSet::new(&dir, stem, InputFormat::Bin).unwrap()
+    }
+
+    #[test]
+    fn colstats_sums_match_dense() {
+        let (s, dense) = sparse_fixture(40, 7, 1);
+        let mut job = SparseColStatsJob::new(7);
+        for i in 0..s.rows() {
+            let (idx, val) = s.row(i);
+            job.exec_row(idx, val).unwrap();
+        }
+        assert_eq!(job.count(), 40);
+        let sums = job.into_sums();
+        for j in 0..7 {
+            let want: f64 = (0..40).map(|i| dense.get(i, j)).sum();
+            assert!((sums.get(0, j) - want).abs() < 1e-10, "col {j}");
+        }
+    }
+
+    #[test]
+    fn ata_matches_dense_gram_centered_and_not() {
+        let (s, dense) = sparse_fixture(60, 8, 2);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        // uncentered
+        let job = SparseAtaJob::new(backend.clone(), 8, Arc::new(Vec::new()));
+        let got = feed_blocks(&s, 16, job).into_partial();
+        assert!(got.max_abs_diff(&gram(&dense)) < 1e-9);
+        // centered: rank-1 corrections equal the densified centered gram
+        let means = col_means(&dense);
+        let job = SparseAtaJob::new(backend, 8, Arc::new(means.clone()));
+        let got = feed_blocks(&s, 16, job).into_partial();
+        let want = gram(&centered(&dense, &means));
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn project_gram_matches_dense_centered_and_not() {
+        let (s, dense) = sparse_fixture(50, 9, 3);
+        let g = Gaussian::new(4);
+        let omega = Matrix::from_fn(9, 4, |i, j| g.sample(500 + i as u64, j as u64));
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        for center in [false, true] {
+            let means = if center { col_means(&dense) } else { Vec::new() };
+            let set = shards(if center { "pg_c" } else { "pg" }, "Y");
+            let job = SparseProjectGramJob::new(
+                backend.clone(),
+                omega.clone(),
+                &set,
+                0,
+                &means,
+            )
+            .unwrap();
+            let got = feed_blocks(&s, 16, job).into_gram_partial();
+            let x = if center { centered(&dense, &means) } else { dense.clone() };
+            let y_want = matmul(&x, &omega).unwrap();
+            assert!(got.max_abs_diff(&gram(&y_want)) < 1e-9, "center={center}");
+            let y_got = set.merge_to_matrix(1).unwrap();
+            assert!(y_got.max_abs_diff(&y_want) < 1e-9, "center={center}");
+        }
+    }
+
+    #[test]
+    fn pass2_matches_dense_centered_and_not() {
+        let (s, dense) = sparse_fixture(45, 6, 5);
+        let g = Gaussian::new(6);
+        let y = Matrix::from_fn(45, 3, |i, j| g.sample(700 + i as u64, j as u64));
+        let m = Matrix::from_fn(3, 3, |i, j| g.sample(800 + i as u64, j as u64));
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        for center in [false, true] {
+            let means = if center { col_means(&dense) } else { Vec::new() };
+            let name = if center { "p2_c" } else { "p2" };
+            let y_shards = shards(name, "Y");
+            let mut w = y_shards.open_writer(0, 3).unwrap();
+            for i in 0..45 {
+                w.write_row(y.row(i)).unwrap();
+            }
+            w.finish().unwrap();
+            let u0_shards = shards(&format!("{name}_u0"), "U0");
+            let job = SparsePass2Job::new(
+                backend.clone(),
+                m.clone(),
+                &y_shards,
+                &u0_shards,
+                0,
+                6,
+                Arc::new(means.clone()),
+            )
+            .unwrap();
+            let got = feed_blocks(&s, 16, job).into_w_partial();
+            let u0_want = matmul(&y, &m).unwrap();
+            let x = if center { centered(&dense, &means) } else { dense.clone() };
+            let w_want = matmul_tn(&x, &u0_want).unwrap();
+            assert!(got.max_abs_diff(&w_want) < 1e-9, "center={center}");
+            let u0_got = u0_shards.merge_to_matrix(1).unwrap();
+            assert!(u0_got.max_abs_diff(&u0_want) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mult_matches_dense_centered_and_not() {
+        let (s, dense) = sparse_fixture(30, 5, 7);
+        let g = Gaussian::new(8);
+        let m = Matrix::from_fn(5, 2, |i, j| g.sample(900 + i as u64, j as u64));
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        for center in [false, true] {
+            let means = if center { col_means(&dense) } else { Vec::new() };
+            let set = shards(if center { "mult_c" } else { "mult" }, "U");
+            let job =
+                SparseMultJob::new(backend.clone(), m.clone(), &set, 0, &means).unwrap();
+            feed_blocks(&s, 8, job);
+            let x = if center { centered(&dense, &means) } else { dense.clone() };
+            let want = matmul(&x, &m).unwrap();
+            let got = set.merge_to_matrix(1).unwrap();
+            assert!(got.max_abs_diff(&want) < 1e-9, "center={center}");
+        }
+    }
+
+    #[test]
+    fn mu_times_validates_shape() {
+        let b = Matrix::zeros(3, 2);
+        assert!(mu_times(&[1.0, 2.0], &b).is_err());
+        let r = mu_times(&[1.0, 0.0, 2.0], &Matrix::eye(3)).unwrap();
+        assert_eq!(r, vec![1.0, 0.0, 2.0]);
+    }
+}

@@ -17,6 +17,13 @@
 //! 4. Work is distributed by the **Split-Process** architecture: every
 //!    worker seeks to a newline-aligned byte chunk of a shared input file
 //!    and streams its rows ([`io::chunker`], [`splitproc`]).
+//! 5. Sparse inputs (libsvm / sparse-CSV / binary CSR — [`io::sparse`])
+//!    stream as CSR row blocks through `O(nnz)` kernels
+//!    ([`linalg::sparse`], [`jobs::sparse`]): memory and FLOPs scale with
+//!    the nonzeros, never `m·n`, and PCA centering applies as rank-1
+//!    corrections instead of densifying rows. `tallfat svd big.libsvm`
+//!    (or `--input-format libsvm|scsv|csr`) picks this path up
+//!    automatically, locally and `--distributed`.
 //!
 //! ## One pipeline, many executors
 //!

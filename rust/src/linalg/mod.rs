@@ -1,7 +1,8 @@
-//! Dense linear algebra substrate (pure rust, no BLAS).
+//! Linear algebra substrate (pure rust, no BLAS).
 //!
 //! Everything the coordinator needs natively: a row-major [`Matrix`], blocked
-//! products, the symmetric Jacobi eigensolver the paper's leader-side
+//! products, a CSR [`SparseMatrix`] with `O(nnz)` pass kernels for sparse
+//! inputs, the symmetric Jacobi eigensolver the paper's leader-side
 //! `k x k` math runs on, Householder QR (power-iteration extension), and a
 //! one-sided Jacobi exact SVD used as the accuracy baseline in the
 //! experiments (E4/E6).
@@ -10,11 +11,13 @@ pub mod eigen;
 pub mod matrix;
 pub mod ops;
 pub mod qr;
+pub mod sparse;
 pub mod svd_exact;
 pub mod tsqr;
 
 pub use eigen::{jacobi_eigh, EighOptions};
 pub use matrix::Matrix;
 pub use ops::{gram, gram_outer, matmul, matmul_gram, matmul_tn};
+pub use sparse::{sp_gram, sp_matmul, sp_matmul_gram, sp_tmul, SparseMatrix};
 pub use qr::thin_qr;
 pub use svd_exact::{exact_svd, truncation_error, ExactSvd};

@@ -1,0 +1,480 @@
+//! Sparse row-major matrix (CSR) and the sparse pass kernels.
+//!
+//! The paper's tall-and-fat user×feature logs are sparse in practice;
+//! Halko–Martinsson–Tropp (0909.4061) only needs the operator applied to
+//! blocks of vectors, which a CSR row stripe provides directly. Everything
+//! here is `O(nnz)` work and memory where the dense kernels are `O(m·n)`:
+//!
+//! * [`sp_matmul`] — `Y = X W` (projection / `U = A M` recovery),
+//! * [`sp_matmul_gram`] — fused `(Y, YᵀY)`, the pass-1 hot path,
+//! * [`sp_tmul`] — `W = Xᵀ Z`, the pass-2 accumulation,
+//! * [`sp_gram`] — `G = Xᵀ X` by per-row outer products over the
+//!   nonzeros (the sparse form of the `outer_accumulate` path).
+//!
+//! Column indices are `u32` (4 billion feature columns is beyond the
+//! leader-side `n × n` math anyway) and strictly ascending within a row.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Compressed sparse row matrix over `f64`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, `rows + 1` entries; row `i` spans
+    /// `indptr[i]..indptr[i+1]` of `indices`/`values`.
+    indptr: Vec<usize>,
+    /// Column indices, ascending within each row.
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Empty matrix with zero rows and a fixed column count; rows are
+    /// appended with [`SparseMatrix::push_row`].
+    pub fn with_cols(cols: usize) -> Self {
+        SparseMatrix { rows: 0, cols, indptr: vec![0], indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Build from raw CSR parts (validated).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Self> {
+        if indptr.len() != rows + 1 {
+            return Err(Error::shape(format!(
+                "csr: indptr has {} entries for {rows} rows",
+                indptr.len()
+            )));
+        }
+        if indptr[0] != 0 || *indptr.last().unwrap() != indices.len() {
+            return Err(Error::shape("csr: indptr does not span the index array"));
+        }
+        if indices.len() != values.len() {
+            return Err(Error::shape("csr: indices/values length mismatch"));
+        }
+        for w in indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(Error::shape("csr: indptr not monotone"));
+            }
+            // Strictly ascending within each row — sp_gram's upper-triangle
+            // walk and the validators' cursor scans rely on it.
+            let row = &indices[w[0]..w[1]];
+            for pair in row.windows(2) {
+                if pair[1] <= pair[0] {
+                    return Err(Error::parse(format!(
+                        "csr: indices not ascending within a row ({} then {})",
+                        pair[0], pair[1]
+                    )));
+                }
+            }
+        }
+        for &j in &indices {
+            if j as usize >= cols {
+                return Err(Error::shape(format!("csr: column {j} out of range ({cols})")));
+            }
+        }
+        Ok(SparseMatrix { rows, cols, indptr, indices, values })
+    }
+
+    /// Append one row given its nonzeros. Indices must be ascending,
+    /// in-range, and duplicate-free; zero-valued entries are dropped.
+    pub fn push_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()> {
+        if indices.len() != values.len() {
+            return Err(Error::shape("csr push_row: indices/values length mismatch"));
+        }
+        let mut last: Option<u32> = None;
+        for (&j, &v) in indices.iter().zip(values.iter()) {
+            if j as usize >= self.cols {
+                return Err(Error::shape(format!(
+                    "csr push_row: column {j} out of range ({})",
+                    self.cols
+                )));
+            }
+            if let Some(prev) = last {
+                if j <= prev {
+                    return Err(Error::parse(format!(
+                        "csr push_row: indices not ascending ({prev} then {j})"
+                    )));
+                }
+            }
+            last = Some(j);
+            if v != 0.0 {
+                self.indices.push(j);
+                self.values.push(v);
+            }
+        }
+        self.rows += 1;
+        self.indptr.push(self.indices.len());
+        Ok(())
+    }
+
+    /// Drop all rows (keeps allocations — the block-buffer reuse path).
+    pub fn clear_rows(&mut self) {
+        self.rows = 0;
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
+    }
+
+    /// Sparsify a dense matrix (entries with `|x| <= tol` dropped).
+    pub fn from_dense(m: &Matrix, tol: f64) -> Self {
+        let mut s = SparseMatrix::with_cols(m.cols());
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > tol {
+                    s.indices.push(j as u32);
+                    s.values.push(v);
+                }
+            }
+            s.rows += 1;
+            s.indptr.push(s.indices.len());
+        }
+        s
+    }
+
+    /// Densify (the Backend trait's fallback path and a test oracle).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (idx, val) = self.row(i);
+            let out = m.row_mut(i);
+            for (&j, &v) in idx.iter().zip(val.iter()) {
+                out[j as usize] = v;
+            }
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of entries that are stored (`nnz / (rows * cols)`).
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Row `i` as `(indices, values)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Raw CSR parts `(indptr, indices, values)` — the serialization view.
+    pub fn parts(&self) -> (&[usize], &[u32], &[f64]) {
+        (&self.indptr, &self.indices, &self.values)
+    }
+
+    /// Per-column sums (the sparse ColStats partial).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0; self.cols];
+        for (&j, &v) in self.indices.iter().zip(self.values.iter()) {
+            sums[j as usize] += v;
+        }
+        sums
+    }
+}
+
+/// `Y = X W` for CSR `X` (`b x n`) and dense `W` (`n x k`) — `O(nnz * k)`.
+pub fn sp_matmul(x: &SparseMatrix, w: &Matrix) -> Result<Matrix> {
+    if x.cols() != w.rows() {
+        return Err(Error::shape(format!(
+            "sp_matmul: ({},{}) x ({},{})",
+            x.rows(),
+            x.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    let k = w.cols();
+    let mut y = Matrix::zeros(x.rows(), k);
+    let yd = y.data_mut();
+    let wd = w.data();
+    for i in 0..x.rows() {
+        let (idx, val) = x.row(i);
+        let yrow = &mut yd[i * k..(i + 1) * k];
+        for (&j, &v) in idx.iter().zip(val.iter()) {
+            let wrow = &wd[j as usize * k..(j as usize + 1) * k];
+            for (yv, wv) in yrow.iter_mut().zip(wrow.iter()) {
+                *yv += v * wv;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Fused `(Y, YᵀY) = (X W, (X W)ᵀ (X W))` — the sparse pass-1 hot path.
+/// Each produced row folds into the Gram upper triangle while cache-hot.
+pub fn sp_matmul_gram(x: &SparseMatrix, w: &Matrix) -> Result<(Matrix, Matrix)> {
+    if x.cols() != w.rows() {
+        return Err(Error::shape(format!(
+            "sp_matmul_gram: ({},{}) x ({},{})",
+            x.rows(),
+            x.cols(),
+            w.rows(),
+            w.cols()
+        )));
+    }
+    let k = w.cols();
+    let mut y = Matrix::zeros(x.rows(), k);
+    let mut g = Matrix::zeros(k, k);
+    {
+        let yd = y.data_mut();
+        let gd = g.data_mut();
+        let wd = w.data();
+        for i in 0..x.rows() {
+            let (idx, val) = x.row(i);
+            let yrow = &mut yd[i * k..(i + 1) * k];
+            for (&j, &v) in idx.iter().zip(val.iter()) {
+                let wrow = &wd[j as usize * k..(j as usize + 1) * k];
+                for (yv, wv) in yrow.iter_mut().zip(wrow.iter()) {
+                    *yv += v * wv;
+                }
+            }
+            // Gram contribution of the finished row (upper triangle).
+            for a in 0..k {
+                let ya = yrow[a];
+                if ya == 0.0 {
+                    continue;
+                }
+                let grow = &mut gd[a * k + a..(a + 1) * k];
+                for (gv, yv) in grow.iter_mut().zip(yrow[a..].iter()) {
+                    *gv += ya * yv;
+                }
+            }
+        }
+        // mirror upper -> lower
+        for a in 0..k {
+            for b in 0..a {
+                let v = gd[b * k + a];
+                gd[a * k + b] = v;
+            }
+        }
+    }
+    Ok((y, g))
+}
+
+/// `W = Xᵀ Z` where CSR `X` and dense `Z` share their row count —
+/// `O(nnz * k)` (the sparse pass-2 accumulation).
+pub fn sp_tmul(x: &SparseMatrix, z: &Matrix) -> Result<Matrix> {
+    if x.rows() != z.rows() {
+        return Err(Error::shape(format!(
+            "sp_tmul: {} vs {} rows",
+            x.rows(),
+            z.rows()
+        )));
+    }
+    let (n, k) = (x.cols(), z.cols());
+    let mut w = Matrix::zeros(n, k);
+    let wd = w.data_mut();
+    for i in 0..x.rows() {
+        let (idx, val) = x.row(i);
+        let zrow = z.row(i);
+        for (&j, &v) in idx.iter().zip(val.iter()) {
+            let wrow = &mut wd[j as usize * k..(j as usize + 1) * k];
+            for (wv, zv) in wrow.iter_mut().zip(zrow.iter()) {
+                *wv += v * zv;
+            }
+        }
+    }
+    Ok(w)
+}
+
+/// `G = Xᵀ X` by per-row outer products over the nonzeros —
+/// `O(Σ nnz_i²)`, upper triangle then mirrored.
+pub fn sp_gram(x: &SparseMatrix) -> Matrix {
+    let n = x.cols();
+    let mut g = Matrix::zeros(n, n);
+    let gd = g.data_mut();
+    for i in 0..x.rows() {
+        let (idx, val) = x.row(i);
+        for a in 0..idx.len() {
+            let (ja, va) = (idx[a] as usize, val[a]);
+            for b in a..idx.len() {
+                gd[ja * n + idx[b] as usize] += va * val[b];
+            }
+        }
+    }
+    // mirror upper -> lower (ascending indices put every product in the
+    // upper triangle)
+    for i in 0..n {
+        for j in 0..i {
+            let v = gd[j * n + i];
+            gd[i * n + j] = v;
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gram, matmul, matmul_tn};
+    use crate::rng::Gaussian;
+
+    /// ~`density` sparse random matrix with deterministic pattern.
+    fn sparse_fixture(rows: usize, cols: usize, density: f64, seed: u64) -> SparseMatrix {
+        let g = Gaussian::new(seed);
+        let mut dense = Matrix::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                let u = crate::rng::splitmix::to_unit_open(crate::rng::splitmix::mix3(
+                    seed ^ 0xDA7A,
+                    i as u64,
+                    j as u64,
+                ));
+                if u < density {
+                    dense.set(i, j, g.sample(i as u64, j as u64));
+                }
+            }
+        }
+        SparseMatrix::from_dense(&dense, 0.0)
+    }
+
+    #[test]
+    fn from_dense_roundtrip() {
+        let m = Matrix::from_rows(&[
+            vec![1.0, 0.0, -2.0],
+            vec![0.0, 0.0, 0.0],
+            vec![0.0, 3.5, 0.0],
+        ])
+        .unwrap();
+        let s = SparseMatrix::from_dense(&m, 0.0);
+        assert_eq!(s.shape(), (3, 3));
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.to_dense(), m);
+        let (idx, val) = s.row(0);
+        assert_eq!(idx, &[0, 2]);
+        assert_eq!(val, &[1.0, -2.0]);
+        assert_eq!(s.row(1).0.len(), 0);
+    }
+
+    #[test]
+    fn push_row_validates() {
+        let mut s = SparseMatrix::with_cols(4);
+        s.push_row(&[0, 3], &[1.0, 2.0]).unwrap();
+        s.push_row(&[], &[]).unwrap(); // all-zero row
+        assert_eq!(s.rows(), 2);
+        assert!(s.push_row(&[2, 1], &[1.0, 1.0]).is_err(), "descending");
+        assert!(s.push_row(&[4], &[1.0]).is_err(), "out of range");
+        assert!(s.push_row(&[1], &[]).is_err(), "length mismatch");
+    }
+
+    #[test]
+    fn push_row_drops_explicit_zeros() {
+        let mut s = SparseMatrix::with_cols(3);
+        s.push_row(&[0, 1, 2], &[1.0, 0.0, 2.0]).unwrap();
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense().row(0), &[1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn clear_rows_resets() {
+        let mut s = sparse_fixture(10, 6, 0.4, 1);
+        assert!(s.nnz() > 0);
+        s.clear_rows();
+        assert_eq!(s.rows(), 0);
+        assert_eq!(s.nnz(), 0);
+        s.push_row(&[1], &[2.0]).unwrap();
+        assert_eq!(s.to_dense().get(0, 1), 2.0);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(SparseMatrix::from_parts(2, 3, vec![0, 1, 2], vec![0, 2], vec![1.0, 2.0]).is_ok());
+        assert!(SparseMatrix::from_parts(2, 3, vec![0, 1], vec![0], vec![1.0]).is_err());
+        assert!(SparseMatrix::from_parts(1, 3, vec![0, 2], vec![0], vec![1.0]).is_err());
+        assert!(SparseMatrix::from_parts(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // Descending or duplicate indices within a row break sp_gram's
+        // upper-triangle invariant and must be rejected.
+        assert!(
+            SparseMatrix::from_parts(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 1.0]).is_err(),
+            "descending"
+        );
+        assert!(
+            SparseMatrix::from_parts(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 1.0]).is_err(),
+            "duplicate"
+        );
+        // Ascending across a row *boundary* is not required.
+        assert!(
+            SparseMatrix::from_parts(2, 3, vec![0, 1, 2], vec![2, 0], vec![1.0, 1.0]).is_ok()
+        );
+    }
+
+    #[test]
+    fn sp_matmul_matches_dense() {
+        let x = sparse_fixture(40, 12, 0.15, 2);
+        let g = Gaussian::new(3);
+        let w = Matrix::from_fn(12, 5, |i, j| g.sample(100 + i as u64, j as u64));
+        let y = sp_matmul(&x, &w).unwrap();
+        let want = matmul(&x.to_dense(), &w).unwrap();
+        assert!(y.max_abs_diff(&want) < 1e-12);
+        assert!(sp_matmul(&x, &Matrix::zeros(5, 5)).is_err());
+    }
+
+    #[test]
+    fn sp_matmul_gram_matches_oracle() {
+        let x = sparse_fixture(50, 10, 0.2, 4);
+        let g = Gaussian::new(5);
+        let w = Matrix::from_fn(10, 4, |i, j| g.sample(200 + i as u64, j as u64));
+        let (y, yty) = sp_matmul_gram(&x, &w).unwrap();
+        let y_want = matmul(&x.to_dense(), &w).unwrap();
+        assert!(y.max_abs_diff(&y_want) < 1e-12);
+        assert!(yty.max_abs_diff(&gram(&y_want)) < 1e-10);
+    }
+
+    #[test]
+    fn sp_tmul_matches_dense() {
+        let x = sparse_fixture(30, 8, 0.25, 6);
+        let g = Gaussian::new(7);
+        let z = Matrix::from_fn(30, 3, |i, j| g.sample(300 + i as u64, j as u64));
+        let w = sp_tmul(&x, &z).unwrap();
+        let want = matmul_tn(&x.to_dense(), &z).unwrap();
+        assert!(w.max_abs_diff(&want) < 1e-12);
+        assert!(sp_tmul(&x, &Matrix::zeros(5, 3)).is_err());
+    }
+
+    #[test]
+    fn sp_gram_matches_dense() {
+        let x = sparse_fixture(60, 9, 0.3, 8);
+        let got = sp_gram(&x);
+        assert!(got.max_abs_diff(&gram(&x.to_dense())) < 1e-10);
+    }
+
+    #[test]
+    fn all_zero_rows_contribute_nothing() {
+        let mut s = SparseMatrix::with_cols(4);
+        s.push_row(&[1], &[2.0]).unwrap();
+        s.push_row(&[], &[]).unwrap();
+        s.push_row(&[0, 3], &[1.0, -1.0]).unwrap();
+        let w = Matrix::eye(4);
+        let y = sp_matmul(&s, &w).unwrap();
+        assert_eq!(y.row(1), &[0.0; 4]);
+        let g = sp_gram(&s);
+        assert!(g.max_abs_diff(&gram(&s.to_dense())) < 1e-12);
+        assert_eq!(s.col_sums(), vec![1.0, 2.0, 0.0, -1.0]);
+    }
+}

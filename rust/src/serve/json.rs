@@ -345,10 +345,15 @@ impl<'a> Parser<'a> {
                     }
                 }
                 Some(_) => {
-                    // Consume one UTF-8 encoded char (multi-byte safe).
+                    // Consume one UTF-8 encoded char (multi-byte safe). A
+                    // truncated or invalid sequence is a parse error — this
+                    // path must never panic, it runs on raw request bodies.
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| Error::parse("json: invalid utf-8 in string"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| Error::parse("json: truncated string"))?;
                     if (c as u32) < 0x20 {
                         return Err(Error::parse("json: raw control char in string"));
                     }
@@ -410,6 +415,23 @@ mod tests {
     #[test]
     fn malformed_inputs_error() {
         for bad in ["{", "[1,]", "{\"a\" 1}", "tru", "\"unterminated", "1 2", "{'a':1}"] {
+            assert!(Json::parse(bad).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn truncated_inputs_error_never_panic() {
+        // Every prefix of a valid document must parse or error — the parse
+        // path runs on raw request bodies and must never panic.
+        let full = r#"{"op":"similar","row":[1.5,-2],"k":10,"s":"aé😀\n"}"#;
+        for cut in 1..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            let prefix = &full[..cut];
+            let _ = Json::parse(prefix); // Ok or Err, both fine; panic is not
+        }
+        for bad in ["\"abc", "\"a\\", "\"a\\u12", "\"a\\ud834", "\"a\\ud834\\u0020\""] {
             assert!(Json::parse(bad).is_err(), "should reject: {bad}");
         }
     }

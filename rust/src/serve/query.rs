@@ -285,8 +285,10 @@ impl EngineHandle {
     }
 
     /// Snapshot the live engine. The snapshot stays valid across swaps.
+    /// Recovers from lock poisoning — the handle only ever holds a whole
+    /// `Arc`, so a panicked holder cannot leave it half-swapped.
     pub fn current(&self) -> Arc<QueryEngine> {
-        self.engine.read().unwrap().clone()
+        crate::util::read_unpoisoned(&self.engine).clone()
     }
 
     /// Whether this handle was opened from a model root (i.e. `reload` can
@@ -309,7 +311,7 @@ impl EngineHandle {
         // race, and the loser of an unserialized race could install the
         // older generation. The engine RwLock is only held for the final
         // pointer swap, so queries keep flowing during the (slow) open.
-        let _serialize = self.reload_lock.lock().unwrap();
+        let _serialize = crate::util::lock_unpoisoned(&self.reload_lock);
         let live_dir = resolve_current(&spec.root)?;
         if live_dir.as_path() == self.current().store().dir() {
             return Ok(None);
@@ -317,7 +319,7 @@ impl EngineHandle {
         let store = Arc::new(ModelStore::open(&spec.root, spec.cache_shards)?);
         let engine = Arc::new(QueryEngine::new(store, spec.backend.clone())?);
         let generation = engine.store().generation();
-        *self.engine.write().unwrap() = engine;
+        *crate::util::write_unpoisoned(&self.engine) = engine;
         MetricsRegistry::global().add("serve_reloads", 1.0);
         LOG.info(&format!(
             "hot-swapped to generation {generation} ({})",

@@ -720,7 +720,10 @@ impl ModelStore {
     }
 }
 
-/// Shared LRU get-or-load over one of the store's caches.
+/// Shared LRU get-or-load over one of the store's caches. Locks recover
+/// from poisoning: a query thread that panicked while holding the cache
+/// must cost one request, not every request after it (the map/order pair
+/// is consistent at every step, so the recovered guard is safe to use).
 fn cached(
     cache: &Mutex<ShardCache>,
     i: usize,
@@ -729,7 +732,7 @@ fn cached(
 ) -> Result<Arc<Matrix>> {
     let reg = MetricsRegistry::global();
     {
-        let mut c = cache.lock().unwrap();
+        let mut c = crate::util::lock_unpoisoned(cache);
         if let Some(m) = c.map.get(&i).cloned() {
             c.touch(i);
             reg.add(&format!("{metric}_hits"), 1.0);
@@ -738,7 +741,7 @@ fn cached(
     }
     reg.add(&format!("{metric}_misses"), 1.0);
     let loaded = Arc::new(load()?);
-    let mut c = cache.lock().unwrap();
+    let mut c = crate::util::lock_unpoisoned(cache);
     c.map.insert(i, loaded.clone());
     c.touch(i);
     while c.map.len() > c.cap {
@@ -961,6 +964,25 @@ mod tests {
         std::fs::write(gen_dir.join("sigma.csv"), "not-a-number\n").unwrap();
         let err = ModelStore::open(&model_dir, 1).unwrap_err().to_string();
         assert!(err.contains("gen-000000"), "error lacks dir context: {err}");
+    }
+
+    #[test]
+    fn poisoned_cache_degrades_instead_of_cascading() {
+        // A query thread that panics while holding the shard-cache lock
+        // must cost that one request — every later request on the store
+        // still answers (the un-poisoned accessor recovers the guard).
+        let (dir, result, _) = model_fixture("poison", false);
+        let model_dir = dir.join("model");
+        save_model(&result, &model_dir, None).unwrap();
+        let store = ModelStore::open(&model_dir, 2).unwrap();
+        let before = store.u_row(3).unwrap();
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = store.cache.lock().unwrap();
+            panic!("query thread dies mid-cache-access");
+        }));
+        assert!(store.cache.is_poisoned());
+        assert_eq!(store.u_row(3).unwrap(), before, "cache read after poison");
+        assert!(store.embedding_row(3).is_ok());
     }
 
     #[test]

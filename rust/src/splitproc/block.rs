@@ -1,4 +1,4 @@
-//! Row-to-block buffering adapter.
+//! Row-to-block buffering adapters.
 //!
 //! The XLA artifacts (and the blocked native kernels) consume fixed-size row
 //! blocks, while the Split-Process engine streams single rows. [`Blocked`]
@@ -7,10 +7,14 @@
 //! pad partial blocks with zero rows — safe because zero rows contribute
 //! nothing to Gram/projection/tmul sums (a tested invariant on both the
 //! python and rust sides).
+//!
+//! [`SparseBlocked`] is the CSR sibling: sparse rows buffer into a reusable
+//! [`SparseMatrix`] block (`O(nnz)` per block, not `O(block * n)`) and
+//! flush to a [`SparseBlockJob`].
 
 use crate::error::{Error, Result};
-use crate::linalg::Matrix;
-use crate::splitproc::job::RowJob;
+use crate::linalg::{Matrix, SparseMatrix};
+use crate::splitproc::job::{RowJob, SparseRowJob};
 
 /// A job consuming row *blocks* (at most `block_rows` rows per call; the
 /// last block of a chunk may be smaller).
@@ -91,6 +95,64 @@ impl<J: BlockJob> RowJob for Blocked<J> {
     }
 }
 
+/// A job consuming CSR row *blocks* (at most `block_rows` rows per call;
+/// the last block of a chunk may be smaller).
+pub trait SparseBlockJob: Send {
+    /// Process one sparse block.
+    fn exec_block(&mut self, block: &SparseMatrix) -> Result<()>;
+
+    /// Chunk finished (called after the final partial block).
+    fn post_blocks(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Adapts a [`SparseBlockJob`] into a [`SparseRowJob`] with a reusable CSR
+/// buffer — memory stays proportional to the block's nonzeros.
+pub struct SparseBlocked<J: SparseBlockJob> {
+    job: J,
+    block_rows: usize,
+    buf: SparseMatrix,
+}
+
+impl<J: SparseBlockJob> SparseBlocked<J> {
+    pub fn new(job: J, block_rows: usize, cols: usize) -> Self {
+        SparseBlocked { job, block_rows, buf: SparseMatrix::with_cols(cols) }
+    }
+
+    pub fn into_inner(self) -> J {
+        self.job
+    }
+
+    pub fn job(&self) -> &J {
+        &self.job
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if self.buf.rows() == 0 {
+            return Ok(());
+        }
+        self.job.exec_block(&self.buf)?;
+        self.buf.clear_rows();
+        Ok(())
+    }
+}
+
+impl<J: SparseBlockJob> SparseRowJob for SparseBlocked<J> {
+    fn exec_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()> {
+        self.buf.push_row(indices, values)?;
+        if self.buf.rows() == self.block_rows {
+            self.flush()?;
+        }
+        Ok(())
+    }
+
+    fn post(&mut self) -> Result<()> {
+        self.flush()?;
+        self.job.post_blocks()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +219,53 @@ mod tests {
             3,
         );
         assert!(b.exec_row(&[1.0, 2.0]).is_err());
+    }
+
+    struct SparseRecorder {
+        blocks: Vec<(usize, usize)>,
+        nnz_sum: f64,
+        posted: bool,
+    }
+
+    impl SparseBlockJob for SparseRecorder {
+        fn exec_block(&mut self, block: &SparseMatrix) -> Result<()> {
+            self.blocks.push((block.rows(), block.nnz()));
+            self.nnz_sum += block.parts().2.iter().sum::<f64>();
+            Ok(())
+        }
+
+        fn post_blocks(&mut self) -> Result<()> {
+            self.posted = true;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sparse_blocked_buffers_and_flushes() {
+        let mut b = SparseBlocked::new(
+            SparseRecorder { blocks: vec![], nnz_sum: 0.0, posted: false },
+            4,
+            6,
+        );
+        for i in 0..10u32 {
+            // one nonzero per row, plus an all-zero row in the middle
+            if i == 5 {
+                b.exec_row(&[], &[]).unwrap();
+            } else {
+                b.exec_row(&[i % 6], &[1.0]).unwrap();
+            }
+        }
+        b.post().unwrap();
+        let r = b.into_inner();
+        assert_eq!(r.blocks, vec![(4, 4), (4, 3), (2, 2)]);
+        assert!(r.posted);
+        assert!((r.nnz_sum - 9.0).abs() < 1e-12);
+        // bad row rejected
+        let mut b = SparseBlocked::new(
+            SparseRecorder { blocks: vec![], nnz_sum: 0.0, posted: false },
+            2,
+            3,
+        );
+        assert!(b.exec_row(&[7], &[1.0]).is_err());
     }
 }

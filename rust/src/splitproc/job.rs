@@ -14,6 +14,19 @@ pub trait RowJob: Send {
     }
 }
 
+/// The sparse sibling of [`RowJob`]: rows arrive as `(indices, values)`
+/// nonzero pairs (0-based ascending), never densified. A row may be
+/// all-zero (`indices` empty) and still counts as a row.
+pub trait SparseRowJob: Send {
+    /// Process one sparse row.
+    fn exec_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()>;
+
+    /// Chunk finished: flush buffers, close writers.
+    fn post(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
 /// Adapter subtracting per-column means before delegating — the streaming
 /// centering pre-step of PCA mode (`SvdOptions::center`). Means come from a
 /// [`crate::jobs::ColStatsJob`] pre-pass; rows never materialize centered

@@ -19,8 +19,8 @@ pub mod block;
 pub mod job;
 pub mod sched;
 
-pub use block::{BlockJob, Blocked};
-pub use job::{CenteredJob, RowJob};
+pub use block::{BlockJob, Blocked, SparseBlockJob, SparseBlocked};
+pub use job::{CenteredJob, RowJob, SparseRowJob};
 pub use sched::{ChunkScheduler, Claim, SchedPolicy, SchedStats};
 
 use crate::config::InputFormat;
@@ -28,6 +28,7 @@ use crate::error::{Error, Result};
 use crate::io::binmat::{BinMatHeader, BinMatReader};
 use crate::io::chunker::{chunk_byte_ranges, chunk_count_for_rows, chunk_row_ranges, ByteRange};
 use crate::io::csv::CsvRowReader;
+use crate::io::sparse::{CsrHeader, CsrReader, SparseRowReader, SparseTextReader};
 use crate::io::InputSpec;
 
 /// What a worker knows about its assignment (the paper's `workobj.ci` plus
@@ -51,7 +52,7 @@ pub fn plan_chunks(input: &InputSpec, target: usize) -> Result<Vec<ChunkMeta>> {
         return Err(Error::Config("chunk target must be >= 1".into()));
     }
     match input.format {
-        InputFormat::Csv => {
+        InputFormat::Csv | InputFormat::Libsvm | InputFormat::SparseCsv => {
             let ranges = chunk_byte_ranges(&input.path, target)?;
             let total = ranges.len();
             Ok(ranges
@@ -65,9 +66,12 @@ pub fn plan_chunks(input: &InputSpec, target: usize) -> Result<Vec<ChunkMeta>> {
                 })
                 .collect())
         }
-        InputFormat::Bin => {
-            let h = BinMatHeader::read_from(&input.path)?;
-            let ranges = chunk_row_ranges(h.rows, target);
+        InputFormat::Bin | InputFormat::Csr => {
+            let rows = match input.format {
+                InputFormat::Bin => BinMatHeader::read_from(&input.path)?.rows,
+                _ => CsrHeader::read_from(&input.path)?.rows,
+            };
+            let ranges = chunk_row_ranges(rows, target);
             let total = ranges.len();
             Ok(ranges
                 .into_iter()
@@ -121,20 +125,49 @@ pub fn plan_chunks_policy(
 /// row-count scan of the tall file per pass would double the pass's I/O,
 /// and `chunk_rows` is a granularity target, not an exactness contract.
 fn estimate_rows(input: &InputSpec) -> Result<u64> {
+    use std::io::BufRead;
     match input.format {
         InputFormat::Bin => Ok(BinMatHeader::read_from(&input.path)?.rows),
+        InputFormat::Csr => Ok(CsrHeader::read_from(&input.path)?.rows),
         InputFormat::Csv => {
-            use std::io::BufRead;
             let size = std::fs::metadata(&input.path)?.len();
             let mut reader = std::io::BufReader::new(std::fs::File::open(&input.path)?);
             let mut first = Vec::new();
             reader.read_until(b'\n', &mut first)?;
             Ok(size / (first.len() as u64).max(1))
         }
+        InputFormat::Libsvm | InputFormat::SparseCsv => {
+            // Sparse text rows vary wildly in width, and the first line may
+            // be a comment or a bare label — one line is a terrible sample.
+            // Average the first few dozen lines instead (comments and
+            // blanks stay in the byte count but not the line count, which
+            // only makes the estimate conservative for pathological files).
+            let size = std::fs::metadata(&input.path)?.len();
+            let mut reader = std::io::BufReader::new(std::fs::File::open(&input.path)?);
+            let mut line = Vec::new();
+            let mut sampled_bytes = 0u64;
+            let mut sampled_lines = 0u64;
+            for _ in 0..64 {
+                line.clear();
+                let n = reader.read_until(b'\n', &mut line)?;
+                if n == 0 {
+                    break;
+                }
+                sampled_bytes += n as u64;
+                sampled_lines += 1;
+            }
+            if sampled_lines == 0 {
+                return Ok(0);
+            }
+            let avg = (sampled_bytes / sampled_lines).max(1);
+            Ok(size / avg)
+        }
     }
 }
 
 /// Stream one chunk's rows into a job (the paper's inner read loop).
+/// Sparse inputs stream through [`run_chunk_sparse`] instead — densifying
+/// them row by row here would silently undo the `O(nnz)` contract.
 pub fn run_chunk<J: RowJob>(input: &InputSpec, chunk: &ChunkMeta, job: &mut J) -> Result<u64> {
     let mut row = Vec::new();
     let mut count = 0u64;
@@ -159,6 +192,55 @@ pub fn run_chunk<J: RowJob>(input: &InputSpec, chunk: &ChunkMeta, job: &mut J) -
                 count += 1;
             }
         }
+        InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr => {
+            return Err(Error::Config(format!(
+                "{:?} input needs the sparse streaming path (run_chunk_sparse); \
+                 this operation only supports dense csv/bin inputs",
+                input.format
+            )));
+        }
+    }
+    job.post()?;
+    Ok(count)
+}
+
+/// Stream one chunk's rows of a *sparse* input into a [`SparseRowJob`] —
+/// the sparse sibling of [`run_chunk`]. Rows never densify.
+pub fn run_chunk_sparse<J: SparseRowJob>(
+    input: &InputSpec,
+    chunk: &ChunkMeta,
+    job: &mut J,
+) -> Result<u64> {
+    let mut reader = match input.format {
+        InputFormat::Libsvm | InputFormat::SparseCsv => {
+            let r = chunk
+                .byte_range
+                .ok_or_else(|| Error::Config("sparse text chunk without byte range".into()))?;
+            SparseRowReader::Text(SparseTextReader::open_range(
+                &input.path,
+                input.format,
+                r.start,
+                r.end,
+            )?)
+        }
+        InputFormat::Csr => {
+            let (start, end) = chunk
+                .row_range
+                .ok_or_else(|| Error::Config("csr chunk without row range".into()))?;
+            SparseRowReader::Csr(CsrReader::open_rows(&input.path, start, end)?)
+        }
+        other => {
+            return Err(Error::Config(format!(
+                "run_chunk_sparse on dense {other:?} input"
+            )));
+        }
+    };
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    let mut count = 0u64;
+    while reader.next_row(&mut indices, &mut values)? {
+        job.exec_row(&indices, &values)?;
+        count += 1;
     }
     job.post()?;
     Ok(count)
@@ -356,6 +438,85 @@ mod tests {
             let total_sum: f64 = results.iter().map(|r| r.job.sum).sum();
             assert!((total_sum - expected_sum(61)).abs() < 1e-9);
         }
+    }
+
+    /// Counts sparse rows and sums all stored values.
+    struct SparseSumJob {
+        rows: u64,
+        sum: f64,
+        posted: bool,
+    }
+
+    impl SparseRowJob for SparseSumJob {
+        fn exec_row(&mut self, _indices: &[u32], values: &[f64]) -> Result<()> {
+            self.rows += 1;
+            self.sum += values.iter().sum::<f64>();
+            Ok(())
+        }
+
+        fn post(&mut self) -> Result<()> {
+            self.posted = true;
+            Ok(())
+        }
+    }
+
+    fn write_sparse(name: &str, rows: usize, format: InputFormat) -> (InputSpec, f64) {
+        let dir = std::env::temp_dir().join("tallfat_test_splitproc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name).to_string_lossy().into_owned();
+        // every third entry nonzero, plus an all-zero row 7
+        let m = Matrix::from_fn(rows, 6, |i, j| {
+            if i == 7 || (i + j) % 3 != 0 {
+                0.0
+            } else {
+                (i * 6 + j) as f64 + 1.0
+            }
+        });
+        let total: f64 = m.data().iter().sum();
+        let s = crate::linalg::SparseMatrix::from_dense(&m, 0.0);
+        crate::io::sparse::write_sparse_matrix(&s, &path, format).unwrap();
+        (InputSpec { path, format }, total)
+    }
+
+    #[test]
+    fn sparse_chunks_see_every_row_once() {
+        for (name, format) in [
+            ("rows.libsvm", InputFormat::Libsvm),
+            ("rows.csr", InputFormat::Csr),
+        ] {
+            let (input, total) = write_sparse(name, 53, format);
+            for workers in [1, 2, 5] {
+                let (results, _) = run_scheduled(
+                    &input,
+                    workers,
+                    &SchedPolicy::default(),
+                    |chunk| {
+                        let mut job = SparseSumJob { rows: 0, sum: 0.0, posted: false };
+                        let rows = run_chunk_sparse(&input, chunk, &mut job)?;
+                        Ok((rows, job.sum, job.posted))
+                    },
+                )
+                .unwrap();
+                let rows: u64 = results.iter().map(|(r, _, _)| r).sum();
+                let sum: f64 = results.iter().map(|(_, s, _)| s).sum();
+                assert_eq!(rows, 53, "{format:?} workers={workers}");
+                assert!((sum - total).abs() < 1e-9, "{format:?}");
+                assert!(results.iter().all(|(_, _, p)| *p));
+            }
+        }
+    }
+
+    #[test]
+    fn dense_run_chunk_rejects_sparse_input() {
+        let (input, _) = write_sparse("reject.libsvm", 10, InputFormat::Libsvm);
+        let chunks = plan_chunks(&input, 1).unwrap();
+        let mut job = SumJob { rows: 0, sum: 0.0, posted: false };
+        assert!(run_chunk(&input, &chunks[0], &mut job).is_err());
+        // and the reverse: sparse streaming over a dense input
+        let dense = write_csv("rejectd.csv", 5);
+        let chunks = plan_chunks(&dense, 1).unwrap();
+        let mut sjob = SparseSumJob { rows: 0, sum: 0.0, posted: false };
+        assert!(run_chunk_sparse(&dense, &chunks[0], &mut sjob).is_err());
     }
 
     #[test]

@@ -39,10 +39,15 @@ use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::jobs::{AtaBlockJob, ColStatsJob, MultJob, Pass2Job, ProjectGramJob};
+use crate::jobs::{
+    AtaBlockJob, ColStatsJob, MultJob, Pass2Job, ProjectGramJob, SparseAtaJob,
+    SparseColStatsJob, SparseMultJob, SparsePass2Job, SparseProjectGramJob,
+};
 use crate::linalg::{matmul, Matrix};
 use crate::rng::VirtualMatrix;
-use crate::splitproc::{self, Blocked, CenteredJob, ChunkMeta, SchedPolicy, SchedStats};
+use crate::splitproc::{
+    self, Blocked, CenteredJob, ChunkMeta, SchedPolicy, SchedStats, SparseBlocked,
+};
 use std::sync::Arc;
 
 /// Everything a pass needs besides its operand: where the rows come from,
@@ -161,12 +166,19 @@ pub(crate) fn epoch_stem(base: &str, epoch: u32) -> String {
 /// structure. [`LocalExecutor`] calls this per thread; a remote worker calls
 /// it per assignment ([`crate::cluster::worker::execute_assignment`]).
 ///
+/// Sparse inputs (libsvm / sparse-CSV / csr) dispatch to the CSR job
+/// family — `O(nnz)` work and chunk memory, centering via rank-1
+/// corrections instead of row densification ([`crate::jobs::sparse`]).
+///
 /// Returns `(rows_streamed, additive_partial)`.
 pub fn execute_pass_chunk(
     ctx: &PassContext,
     pass: &Pass,
     chunk: &ChunkMeta,
 ) -> Result<(u64, Option<Matrix>)> {
+    if ctx.input.format.is_sparse() {
+        return execute_pass_chunk_sparse(ctx, pass, chunk);
+    }
     match *pass {
         Pass::ColStats => {
             let mut job = ColStatsJob::new(ctx.n);
@@ -224,6 +236,86 @@ pub fn execute_pass_chunk(
             let mut job =
                 CenteredJob::new(Blocked::new(job, ctx.block, ctx.n), ctx.means.clone());
             let rows = splitproc::run_chunk(ctx.input, chunk, &mut job)?;
+            Ok((rows, None))
+        }
+        Pass::RotateU { p } => {
+            let u0_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("U0", ctx.shard_epoch), ctx.shard_format)?;
+            let u_shards = ShardSet::new(ctx.work_dir, "U", ctx.shard_format)?;
+            let rows = rotate_one_shard(&u0_shards, &u_shards, chunk.index, p, ctx.block)?;
+            Ok((rows, None))
+        }
+    }
+}
+
+/// The CSR arm of [`execute_pass_chunk`]: same pass structure, sparse
+/// streaming and kernels. Only the A-streaming passes differ — `RotateU`
+/// reads the (dense) U0 shards, never the input, so it shares the dense
+/// implementation.
+fn execute_pass_chunk_sparse(
+    ctx: &PassContext,
+    pass: &Pass,
+    chunk: &ChunkMeta,
+) -> Result<(u64, Option<Matrix>)> {
+    match *pass {
+        Pass::ColStats => {
+            let mut job = SparseColStatsJob::new(ctx.n);
+            let rows = splitproc::run_chunk_sparse(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_sums())))
+        }
+        Pass::Ata => {
+            let job = SparseAtaJob::new(ctx.backend.clone(), ctx.n, ctx.means.clone());
+            let mut job = SparseBlocked::new(job, ctx.block, ctx.n);
+            let rows = splitproc::run_chunk_sparse(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_partial())))
+        }
+        Pass::ProjectGram { omega } => {
+            let omega = match omega {
+                Some(o) => o.clone(),
+                None => VirtualMatrix::projection(ctx.seed, ctx.n, ctx.kp).materialize(),
+            };
+            let y_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("Y", ctx.shard_epoch), ctx.shard_format)?;
+            let job = SparseProjectGramJob::new(
+                ctx.backend.clone(),
+                omega,
+                &y_shards,
+                chunk.index,
+                &ctx.means,
+            )?;
+            let mut job = SparseBlocked::new(job, ctx.block, ctx.n);
+            let rows = splitproc::run_chunk_sparse(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_gram_partial())))
+        }
+        Pass::UrecoverTmul { m } => {
+            let y_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("Y", ctx.shard_epoch), ctx.shard_format)?;
+            let u0_shards =
+                ShardSet::new(ctx.work_dir, &epoch_stem("U0", ctx.shard_epoch), ctx.shard_format)?;
+            let job = SparsePass2Job::new(
+                ctx.backend.clone(),
+                m.clone(),
+                &y_shards,
+                &u0_shards,
+                chunk.index,
+                ctx.n,
+                ctx.means.clone(),
+            )?;
+            let mut job = SparseBlocked::new(job, ctx.block, ctx.n);
+            let rows = splitproc::run_chunk_sparse(ctx.input, chunk, &mut job)?;
+            Ok((rows, Some(job.into_inner().into_w_partial())))
+        }
+        Pass::Mult { m } => {
+            let u_shards = ShardSet::new(ctx.work_dir, "U", ctx.shard_format)?;
+            let job = SparseMultJob::new(
+                ctx.backend.clone(),
+                m.clone(),
+                &u_shards,
+                chunk.index,
+                &ctx.means,
+            )?;
+            let mut job = SparseBlocked::new(job, ctx.block, ctx.n);
+            let rows = splitproc::run_chunk_sparse(ctx.input, chunk, &mut job)?;
             Ok((rows, None))
         }
         Pass::RotateU { p } => {
@@ -414,6 +506,47 @@ mod tests {
         assert_eq!(merged.shape(), (90, 4));
         // Partial really is YᵀY.
         assert!(g.max_abs_diff(&gram(&merged)) < 1e-9);
+    }
+
+    #[test]
+    fn sparse_input_passes_match_densified_input() {
+        use crate::linalg::SparseMatrix;
+        let dir = std::env::temp_dir().join("tallfat_test_executor").join("sparse");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // ~80% sparse fixture, including an all-zero row.
+        let mut a = Matrix::zeros(70, 8);
+        let g = crate::rng::Gaussian::new(9);
+        for i in 0..70 {
+            for j in 0..8 {
+                if i != 10 && (i * 8 + j) % 5 == 0 {
+                    a.set(i, j, g.sample(i as u64, j as u64));
+                }
+            }
+        }
+        let sparse = InputSpec::libsvm(dir.join("a.libsvm").to_string_lossy().into_owned());
+        crate::io::sparse::write_sparse_matrix(
+            &SparseMatrix::from_dense(&a, 0.0),
+            &sparse.path,
+            crate::config::InputFormat::Libsvm,
+        )
+        .unwrap();
+        let work = dir.join("work").to_string_lossy().into_owned();
+        let mut exec = LocalExecutor::new(3);
+        // Ata parity
+        let out = exec.run_pass(&ctx(&sparse, &work, 8), &Pass::Ata).unwrap();
+        assert_eq!(out.rows, 70);
+        assert!(out.partial.unwrap().max_abs_diff(&gram(&a)) < 1e-9);
+        // ProjectGram writes the same Y shards a dense run would
+        let c = ctx(&sparse, &work, 8);
+        let out = exec.run_pass(&c, &Pass::ProjectGram { omega: None }).unwrap();
+        assert_eq!(out.rows, 70);
+        let y = ShardSet::new(&work, "Y", InputFormat::Bin).unwrap();
+        let merged = y.merge_to_matrix(out.shards).unwrap();
+        let omega = VirtualMatrix::projection(3, 8, 4).materialize();
+        let want = matmul(&a, &omega).unwrap();
+        assert!(merged.max_abs_diff(&want) < 1e-9);
+        assert!(out.partial.unwrap().max_abs_diff(&gram(&want)) < 1e-9);
     }
 
     #[test]

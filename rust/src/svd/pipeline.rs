@@ -113,6 +113,12 @@ impl SvdOptions {
         if self.chunks_per_worker == 0 {
             return Err(Error::Config("chunks_per_worker must be >= 1".into()));
         }
+        if self.shard_format.is_sparse() {
+            return Err(Error::Config(format!(
+                "shard_format must be csv or bin (shards hold dense factor rows), got {:?}",
+                self.shard_format
+            )));
+        }
         Ok(())
     }
 

@@ -4,7 +4,7 @@ use crate::error::Result;
 use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
 use crate::linalg::{matmul, Matrix};
-use crate::splitproc::{self, RowJob};
+use crate::splitproc::{self, RowJob, SparseRowJob};
 use crate::svd::result::SvdResult;
 
 /// Streaming relative Frobenius reconstruction error
@@ -62,21 +62,80 @@ pub fn reconstruction_error_streaming(input: &InputSpec, result: &SvdResult) -> 
         }
     }
 
+    /// Sparse sibling of `ErrJob`: scatter each sparse row against the
+    /// (dense) reconstruction without materializing it.
+    struct SparseErrJob<'a> {
+        u_reader: crate::io::writer::ShardReader,
+        b: &'a Matrix,
+        means: Option<&'a [f64]>,
+        u_row: Vec<f64>,
+        err2: f64,
+        norm2: f64,
+    }
+
+    impl SparseRowJob for SparseErrJob<'_> {
+        fn exec_row(&mut self, indices: &[u32], values: &[f64]) -> Result<()> {
+            if !self.u_reader.next_row(&mut self.u_row)? {
+                return Err(crate::error::Error::Other("U shard exhausted".into()));
+            }
+            let k = self.u_row.len();
+            let n = self.b.cols();
+            let mut next = 0usize; // cursor into the ascending sparse indices
+            for j in 0..n {
+                let raw = if next < indices.len() && indices[next] as usize == j {
+                    let v = values[next];
+                    next += 1;
+                    v
+                } else {
+                    0.0
+                };
+                let aij = match self.means {
+                    Some(m) => raw - m[j],
+                    None => raw,
+                };
+                let mut recon = 0.0;
+                for t in 0..k {
+                    recon += self.u_row[t] * self.b.get(t, j);
+                }
+                self.err2 += (aij - recon) * (aij - recon);
+                self.norm2 += aij * aij;
+            }
+            Ok(())
+        }
+    }
+
     let u_shards = &result.u_shards;
     let b_ref = &b;
     let means_ref = result.means.as_deref();
-    let results = splitproc::run(input, result.shards, |chunk| {
-        Ok(ErrJob {
-            u_reader: u_shards.open_reader(chunk.index)?,
-            b: b_ref,
-            means: means_ref,
-            u_row: Vec::new(),
-            err2: 0.0,
-            norm2: 0.0,
-        })
-    })?;
-    let err2: f64 = results.iter().map(|r| r.job.err2).sum();
-    let norm2: f64 = results.iter().map(|r| r.job.norm2).sum();
+    let (err2, norm2) = if input.format.is_sparse() {
+        let results = splitproc::run_chunked(input, result.shards, |chunk| {
+            let mut job = SparseErrJob {
+                u_reader: u_shards.open_reader(chunk.index)?,
+                b: b_ref,
+                means: means_ref,
+                u_row: Vec::new(),
+                err2: 0.0,
+                norm2: 0.0,
+            };
+            splitproc::run_chunk_sparse(input, chunk, &mut job)?;
+            Ok((job.err2, job.norm2))
+        })?;
+        results.iter().fold((0.0, 0.0), |(e, n), &(je, jn)| (e + je, n + jn))
+    } else {
+        let results = splitproc::run(input, result.shards, |chunk| {
+            Ok(ErrJob {
+                u_reader: u_shards.open_reader(chunk.index)?,
+                b: b_ref,
+                means: means_ref,
+                u_row: Vec::new(),
+                err2: 0.0,
+                norm2: 0.0,
+            })
+        })?;
+        let e: f64 = results.iter().map(|r| r.job.err2).sum();
+        let n: f64 = results.iter().map(|r| r.job.norm2).sum();
+        (e, n)
+    };
     Ok((err2 / norm2.max(1e-300)).sqrt())
 }
 

@@ -264,7 +264,10 @@ impl<'a> Update<'a> {
             // number — so "the update ran" is observable and replayable.
             return self.noop_generation();
         }
-        if n1 != self.store.n() {
+        // Sparse text batches report cols = highest referenced column + 1,
+        // which may undershoot the model's n when the batch doesn't touch
+        // the trailing columns — that is still a valid batch.
+        if n1 != self.store.n() && !(input.format.is_sparse() && n1 <= self.store.n()) {
             return Err(Error::shape(format!(
                 "update: batch has {n1} cols, model n={}",
                 self.store.n()

@@ -1,0 +1,58 @@
+//! Poison-proof lock accessors.
+//!
+//! `Mutex::lock().unwrap()` turns one panicked holder into a cascade:
+//! every later `lock()` sees the poison flag and panics too, so a single
+//! bad request takes the whole serving process's shared state down with
+//! it. For the locks in this codebase the protected data is always left
+//! consistent at every await-free step (caches insert-then-touch, handles
+//! swap a single `Arc`), so recovering the guard from a poisoned lock is
+//! safe — the server degrades (one failed request) instead of cascading.
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering the guard if a writer panicked.
+pub fn read_unpoisoned<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering the guard if a holder panicked.
+pub fn write_unpoisoned<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Mutex, RwLock};
+
+    #[test]
+    fn mutex_recovers_after_poison() {
+        let m = Mutex::new(41);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("holder dies");
+        }));
+        assert!(m.is_poisoned());
+        let mut g = lock_unpoisoned(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn rwlock_recovers_after_poison() {
+        let l = RwLock::new(String::from("ok"));
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = l.write().unwrap();
+            panic!("writer dies");
+        }));
+        assert_eq!(*read_unpoisoned(&l), "ok");
+        write_unpoisoned(&l).push('!');
+        assert_eq!(*read_unpoisoned(&l), "ok!");
+    }
+}

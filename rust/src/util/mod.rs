@@ -3,8 +3,10 @@
 
 pub mod cli;
 pub mod humanize;
+pub mod lock;
 pub mod logger;
 
 pub use cli::Args;
 pub use humanize::{fmt_bytes, fmt_duration, fmt_rate};
+pub use lock::{lock_unpoisoned, read_unpoisoned, write_unpoisoned};
 pub use logger::{log_enabled, Level, Logger};

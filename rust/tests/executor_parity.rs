@@ -304,3 +304,158 @@ fn gram_and_randomized_routes_agree() {
     let ug = gram.u_matrix().unwrap();
     assert_cols_match_up_to_sign(&ur, &ug, 1e-6, "route U");
 }
+
+// ---------------------------------------------------------------------------
+// sparse (CSR) input parity
+// ---------------------------------------------------------------------------
+
+/// Deterministic ~`density`-sparse fixture. Rows listed in `zero_rows` are
+/// forced all-zero; column `n-1` and column `0` are pinned nonzero so the
+/// text formats' scanned width equals `n`. Returns the dense oracle matrix
+/// plus csv / libsvm / csr copies of it on disk.
+fn sparse_fixture(
+    d: &std::path::Path,
+    m: usize,
+    n: usize,
+    density: f64,
+    seed: u64,
+    zero_rows: &[usize],
+) -> (Matrix, InputSpec, InputSpec, InputSpec) {
+    use tallfat::rng::splitmix::{mix3, to_unit_open};
+    let g = tallfat::rng::Gaussian::new(seed);
+    let mut a = Matrix::zeros(m, n);
+    for i in 0..m {
+        if zero_rows.contains(&i) {
+            continue;
+        }
+        for j in 0..n {
+            let u = to_unit_open(mix3(seed ^ 0xBEEF, i as u64, j as u64));
+            let pinned = (i == 0 && (j == 0 || j == n - 1)) || j == i % n;
+            if u < density || pinned {
+                a.set(i, j, g.sample(i as u64, j as u64));
+            }
+        }
+    }
+    let dense = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &dense).unwrap();
+    let libsvm = InputSpec::libsvm(d.join("a.libsvm").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &libsvm).unwrap();
+    let csr = InputSpec::csr(d.join("a.csr").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &csr).unwrap();
+    (a, dense, libsvm, csr)
+}
+
+/// Looser parity for densify-vs-CSR: the kernels differ in summation order
+/// (blocked dense vs per-nonzero), so the factors agree to roundoff-scaled
+/// tolerances, not bitwise.
+fn assert_parity_loose(a: &SvdResult, b: &SvdResult, k: usize, what: &str) {
+    assert_eq!(a.k, k, "{what}");
+    assert_eq!(b.k, k, "{what}");
+    for i in 0..k {
+        let rel = (a.sigma[i] - b.sigma[i]).abs() / a.sigma[0].max(1e-300);
+        assert!(rel < 1e-8, "{what} sigma[{i}]: {} vs {}", a.sigma[i], b.sigma[i]);
+    }
+    assert_cols_match_up_to_sign(
+        a.v.as_ref().unwrap(),
+        b.v.as_ref().unwrap(),
+        1e-5,
+        &format!("{what} V"),
+    );
+    let ua = a.u_matrix().unwrap();
+    let ub = b.u_matrix().unwrap();
+    assert_cols_match_up_to_sign(&ua, &ub, 1e-5, &format!("{what} U"));
+}
+
+/// Densify-vs-CSR factor parity on the LocalExecutor, centered and
+/// uncentered, across the text (libsvm) and binary (csr) sparse formats.
+#[test]
+fn sparse_and_densified_inputs_agree_locally() {
+    for center in [false, true] {
+        let name = if center { "sparse_local_c" } else { "sparse_local" };
+        let d = dir(name);
+        let (_, dense, libsvm, csr) = sparse_fixture(&d, 260, 16, 0.12, 41, &[]);
+        let run = |input: &InputSpec, sub: &str| {
+            build(input, d.join(sub).to_string_lossy().into_owned(), 5, center)
+                .run()
+                .unwrap()
+        };
+        let from_dense = run(&dense, "dense");
+        let from_libsvm = run(&libsvm, "libsvm");
+        let from_csr = run(&csr, "csr");
+        assert_parity_loose(&from_dense, &from_libsvm, 5, "libsvm");
+        assert_parity_loose(&from_dense, &from_csr, 5, "csr");
+        // Identical sparse math path in both sparse formats: near-bitwise.
+        for i in 0..5 {
+            let rel = (from_libsvm.sigma[i] - from_csr.sigma[i]).abs()
+                / from_libsvm.sigma[i].max(1e-300);
+            assert!(rel < 1e-12, "libsvm vs csr sigma[{i}]");
+        }
+    }
+}
+
+/// The same CSR input through remote workers: the cluster executor must
+/// reproduce the local executor's sparse factors (Σ near-bitwise — same
+/// kernels, same chunk-order reduction), centered and uncentered.
+#[test]
+fn sparse_parity_across_executors() {
+    for center in [false, true] {
+        let name = if center { "sparse_cluster_c" } else { "sparse_cluster" };
+        let d = dir(name);
+        let (_, _, _, csr) = sparse_fixture(&d, 300, 14, 0.15, 42, &[]);
+
+        let addr = free_addr();
+        let handles = spawn_workers(&addr, 2);
+        let mut cluster = ClusterExecutor::accept(&addr, 2).unwrap();
+        let dist = build(&csr, d.join("dist").to_string_lossy().into_owned(), 4, center)
+            .workers(2)
+            .executor(&mut cluster)
+            .run()
+            .unwrap();
+        cluster.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let local = build(&csr, d.join("local").to_string_lossy().into_owned(), 4, center)
+            .workers(2)
+            .run()
+            .unwrap();
+        assert_parity(&local, &dist, 4);
+    }
+}
+
+/// Degenerate sparse inputs: all-zero rows (representable in libsvm and
+/// csr) and a whole stripe of zero rows wide enough that some chunks'
+/// shards hold nothing but zeros. The factorization must run, keep row
+/// alignment (zero input rows → zero U rows), and still match the
+/// densified oracle.
+#[test]
+fn sparse_degenerate_zero_rows_and_empty_chunks() {
+    let d = dir("sparse_zeros");
+    // Rows 40..60 all zero: with several chunks planned over 90 rows, at
+    // least one chunk is entirely zero rows — its Y/U shards are all-zero
+    // ("empty" content-wise) and must still publish and align.
+    let zero_rows: Vec<usize> = (40..60).collect();
+    let (a, dense, libsvm, csr) = sparse_fixture(&d, 90, 12, 0.2, 43, &zero_rows);
+    for (input, sub) in [(&libsvm, "libsvm"), (&csr, "csr")] {
+        let r = build(input, d.join(sub).to_string_lossy().into_owned(), 4, false)
+            .workers(3)
+            .run()
+            .unwrap();
+        assert_eq!(r.m, 90, "{sub}");
+        let u = r.u_matrix().unwrap();
+        assert_eq!(u.rows(), 90, "{sub}");
+        for i in 40..60 {
+            for j in 0..r.k {
+                assert!(
+                    u.get(i, j).abs() < 1e-9,
+                    "{sub}: zero input row {i} produced U[{i},{j}] = {}",
+                    u.get(i, j)
+                );
+            }
+        }
+        let dense_work = d.join(format!("{sub}_dense")).to_string_lossy().into_owned();
+        let from_dense = build(&dense, dense_work, 4, false).workers(3).run().unwrap();
+        assert_parity_loose(&from_dense, &r, 4, sub);
+        let _ = &a;
+    }
+}

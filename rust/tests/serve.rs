@@ -483,3 +483,81 @@ fn queries_survive_hot_swap_and_generation_advances() {
         .unwrap_or(0.0);
     assert!(reloads >= 1.0, "serve_reloads = {reloads}");
 }
+
+/// Malformed or truncated ND-JSON bodies must come back as per-line JSON
+/// parse errors — never a killed connection thread — and must not poison
+/// any serve-layer state for later requests.
+#[test]
+fn malformed_bodies_get_json_errors_and_server_survives() {
+    let d = dir("malformed");
+    let (a, _) = gen_exact(
+        60,
+        8,
+        3,
+        Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+        0.0,
+        13,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let result = Svd::over(&spec)
+        .unwrap()
+        .rank(3)
+        .oversample(4)
+        .workers(2)
+        .block(16)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
+    let model_dir = d.join("model");
+    result.save_model(&model_dir, Some(0)).unwrap();
+
+    let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+    let server = ModelServer::bind(
+        Arc::new(EngineHandle::fixed(engine)),
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(2),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    // One body mixing truncated JSON, bad escapes, an unterminated string,
+    // a valid-JSON-but-failing op, and finally a healthy query.
+    let good = format!("{{\"op\":\"project\",\"row\":{}}}", Json::from_f64s(a.row(0)).render());
+    let bads = [
+        r#"{"op":"similar","row":[1.0"#,       // truncated mid-array
+        r#"{"op":"project","row":"\u12"}"#,    // truncated \u escape
+        r#""unterminated"#,                    // unterminated string
+        r#"{"op":"reconstruct","row_id":99999}"#, // parses; engine rejects
+    ];
+    let body = format!("{}\n{good}\n", bads.join("\n"));
+    let resp = http_post_query(&addr, &body);
+    assert!(resp.contains("200 OK"), "{resp}");
+    let lines: Vec<Json> =
+        body_of(&resp).lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(lines.len(), 5, "one response object per input line");
+    for (i, line) in lines.iter().take(4).enumerate() {
+        assert_eq!(
+            line.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "line {i} should be an error: {line:?}"
+        );
+        assert!(line.get("error").is_some(), "line {i} has no error field");
+    }
+    assert_eq!(lines[4].get("ok").and_then(Json::as_bool), Some(true), "{:?}", lines[4]);
+
+    // A second connection still serves — nothing was poisoned or killed.
+    let resp = http_post_query(&addr, "{\"op\":\"info\"}\n");
+    assert!(resp.contains("200 OK"), "{resp}");
+    let info = Json::parse(body_of(&resp).trim()).unwrap();
+    assert_eq!(info.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(60));
+    srv.join().unwrap();
+}
