@@ -124,6 +124,12 @@ pub struct RunConfig {
     pub chunks_per_worker: usize,
     /// Retry budget per chunk before a pass fails.
     pub chunk_retries: usize,
+    /// Pin the column count for sparse inputs (libsvm/sparse-CSV/CSR),
+    /// whose scans otherwise derive n from the max index seen — an
+    /// undershoot when a batch happens to omit the tail columns. 0 (the
+    /// default) keeps the derived width; chained `update` batches should
+    /// pin the base model's n so every batch agrees.
+    pub cols: usize,
 }
 
 impl Default for RunConfig {
@@ -148,6 +154,7 @@ impl Default for RunConfig {
             chunk_rows: 0,
             chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
             chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
+            cols: 0,
         }
     }
 }
@@ -222,6 +229,9 @@ impl RunConfig {
             if let Some(v) = file.get_usize(section, "chunk_retries")? {
                 self.chunk_retries = v;
             }
+            if let Some(v) = file.get_usize(section, "cols")? {
+                self.cols = v;
+            }
         }
         Ok(())
     }
@@ -272,6 +282,7 @@ impl RunConfig {
         self.chunk_rows = args.usize_or("chunk-rows", self.chunk_rows)?;
         self.chunks_per_worker = args.usize_or("chunks-per-worker", self.chunks_per_worker)?;
         self.chunk_retries = args.usize_or("chunk-retries", self.chunk_retries)?;
+        self.cols = args.usize_or("cols", self.cols)?;
         Ok(())
     }
 
@@ -422,6 +433,21 @@ mod tests {
         // chunks_per_worker = 0 is rejected.
         c.chunks_per_worker = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cols_pin_parses_from_file_and_cli() {
+        let file = ConfigFile::parse_str("[svd]\ncols = 500\n").unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!(c.cols, 0);
+        c.apply_file(&file).unwrap();
+        assert_eq!(c.cols, 500);
+        let args = Args::parse(
+            "svd a.libsvm --cols 1000".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.cols, 1000);
     }
 
     #[test]

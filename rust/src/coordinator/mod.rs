@@ -16,6 +16,8 @@
 //! | `simulate` | cluster cost simulation / scalability sweep ([`crate::simulator`]) |
 //! | `serve` | query a saved factor model over HTTP ([`crate::serve`]) |
 //! | `update` | append a row batch to a saved model as a new generation ([`crate::update`]) |
+//! | `daemon` | long-running model-fleet daemon: many named models, one front door ([`crate::daemon`]) |
+//! | `daemon-client` | control a running daemon: register/list/status/submit-job/drain/halt |
 //! | `serve-metrics` | tiny HTTP endpoint exposing the last run's metrics |
 //!
 //! Configuration precedence: built-in defaults < `--config file.toml` <
@@ -45,8 +47,11 @@ COMMANDS
                   [--config FILE] [--no-v] [--validate] [--out-prefix P] [--center]
                   [--save-model DIR] [--shard-format csv|bin] [--sigma-cutoff REL]
                   [--chunks-per-worker C] [--chunk-rows R] [--chunk-retries N]
-                  [--input-format csv|bin|libsvm|scsv|csr]
+                  [--input-format csv|bin|libsvm|scsv|csr] [--cols N]
                   (--center = PCA mode: subtract column means, one extra pass;
+                   --cols pins the column dictionary of a sparse input — use
+                   the serving width you will update against, so later
+                   batches with unseen high indices still fit the model;
                    --save-model persists a servable model directory;
                    --shard-format picks the Y/U intermediate shard format;
                    --sigma-cutoff zeroes sketch values below REL * sigma_max;
@@ -87,6 +92,21 @@ COMMANDS
                  writes the next immutable generation, repoints CURRENT, and
                  garbage-collects old generations; with --distributed the passes
                  run on remote workers: --listen HOST:PORT --remote-workers N)
+  daemon        model-fleet daemon             <state-dir> [--addr 127.0.0.1:9935]
+                  [--backend native|xla|auto] [--cache-shards 4] [--batch-window-ms 2]
+                  [--max-batch 64] [--health-poll-ms 2000]
+                (one long-running process serving many named models: queries
+                 carry \"model\":\"name\" on POST /query; control ops register/
+                 list/status/submit-job/job-status/drain/halt ride the same
+                 transport; update jobs run supervised in the background —
+                 queued per model, health-probed, retried, hot-swapped into
+                 serving on publish; fleet and job queue persist under
+                 <state-dir> across restarts)
+  daemon-client drive a running daemon         <action> [--addr 127.0.0.1:9935]
+                  register --name N --root DIR | list | status
+                  | submit-job --model N --rows PATH [--rank K] [--seed S]
+                      [--max-attempts 2] [--delay-ms 0] [--wait [--wait-secs 600]]
+                  | job-status --id N | drain | halt
   serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
 
 GLOBAL
@@ -110,6 +130,8 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("worker") => commands::worker(args),
         Some("serve") => crate::serve::http::serve(args),
         Some("update") => commands::update(args),
+        Some("daemon") => crate::daemon::server::daemon(args),
+        Some("daemon-client") => crate::daemon::server::daemon_client(args),
         Some("serve-metrics") => server::serve_metrics(args),
         Some("help") | None => {
             print!("{USAGE}");

@@ -1,0 +1,169 @@
+//! Control-protocol client for a running `tallfatd`.
+//!
+//! The daemon has exactly one wire format — ND-JSON lines over `POST
+//! /query` — so the client is a thin convenience layer: it renders one
+//! line per request, reads one reply line per request, and unwraps the
+//! `ok` envelope into [`crate::error::Result`]. Everything the
+//! `tallfat daemon-client` CLI can do, in-process callers (including the
+//! scenario harness) do through [`DaemonClient`].
+
+use crate::error::{Error, Result};
+use crate::serve::json::Json;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use super::jobs::JobSpec;
+
+/// A handle on a daemon address. Stateless: every call is one connection
+/// (the transport is `Connection: close`), so clones and threads are free.
+#[derive(Clone, Debug)]
+pub struct DaemonClient {
+    addr: String,
+}
+
+impl DaemonClient {
+    pub fn new(addr: impl Into<String>) -> Self {
+        DaemonClient { addr: addr.into() }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Send one ND-JSON body; one parsed reply per line, in input order.
+    pub fn call_many(&self, lines: &[Json]) -> Result<Vec<Json>> {
+        let mut body = String::new();
+        for line in lines {
+            body.push_str(&line.render());
+            body.push('\n');
+        }
+        let reply = http_post(&self.addr, "/query", &body)?;
+        let mut out = Vec::new();
+        for line in reply.lines().filter(|l| !l.trim().is_empty()) {
+            out.push(Json::parse(line)?);
+        }
+        if out.len() != lines.len() {
+            return Err(Error::Other(format!(
+                "daemon answered {} line(s) to {} request(s)",
+                out.len(),
+                lines.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Send one line and return its reply — `ok:false` replies included
+    /// (query callers often want the error object itself).
+    pub fn call(&self, line: &Json) -> Result<Json> {
+        Ok(self
+            .call_many(std::slice::from_ref(line))?
+            .pop()
+            .expect("call_many returns one reply per line"))
+    }
+
+    /// Register the model at `root` under `name`.
+    pub fn register(&self, name: &str, root: &str) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![
+            ("op", Json::str("register")),
+            ("name", Json::str(name)),
+            ("root", Json::str(root)),
+        ]))?)
+    }
+
+    /// The fleet: names, roots, live generations.
+    pub fn list(&self) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![("op", Json::str("list"))]))?)
+    }
+
+    /// Daemon status: uptime, fleet size, every job.
+    pub fn status(&self) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![("op", Json::str("status"))]))?)
+    }
+
+    /// Queue a supervised update job; returns its id.
+    pub fn submit_job(&self, spec: &JobSpec) -> Result<u64> {
+        let reply = expect_ok(self.call(&spec.to_json())?)?;
+        reply
+            .get("id")
+            .and_then(Json::as_usize)
+            .map(|id| id as u64)
+            .ok_or_else(|| Error::parse("submit-job reply without an `id`"))
+    }
+
+    /// One job's status envelope (`{"ok":true,"job":{...}}`).
+    pub fn job_status(&self, id: u64) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![
+            ("op", Json::str("job-status")),
+            ("id", Json::num(id as f64)),
+        ]))?)
+    }
+
+    /// Poll until the job is `done` or `failed`; errors if the timeout
+    /// passes first. Returns the terminal status envelope.
+    pub fn wait_job(&self, id: u64, timeout: Duration) -> Result<Json> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let reply = self.job_status(id)?;
+            let state = reply
+                .get("job")
+                .and_then(|j| j.get("state"))
+                .and_then(Json::as_str)
+                .unwrap_or("");
+            if state == "done" || state == "failed" {
+                return Ok(reply);
+            }
+            if Instant::now() >= deadline {
+                return Err(Error::Other(format!(
+                    "job {id} still `{state}` after {:.1}s",
+                    timeout.as_secs_f64()
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Stop the daemon gracefully: reject new jobs, finish the queue.
+    pub fn drain(&self) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![("op", Json::str("drain"))]))?)
+    }
+
+    /// Stop the daemon now; queued jobs persist for the next start.
+    pub fn halt(&self) -> Result<Json> {
+        expect_ok(self.call(&Json::obj(vec![("op", Json::str("halt"))]))?)
+    }
+}
+
+fn expect_ok(reply: Json) -> Result<Json> {
+    if reply.get("ok").and_then(Json::as_bool) == Some(true) {
+        return Ok(reply);
+    }
+    let msg = reply
+        .get("error")
+        .and_then(Json::as_str)
+        .unwrap_or("daemon refused the request")
+        .to_string();
+    Err(Error::Other(msg))
+}
+
+/// One blocking HTTP exchange against the daemon's dependency-free server.
+fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Other(format!("connect {addr}: {e}")))?;
+    let request = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/x-ndjson\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(request.as_bytes())?;
+    let mut reply = String::new();
+    stream.read_to_string(&mut reply)?;
+    let (head, body) = reply
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| Error::Other("malformed HTTP reply (no header terminator)".into()))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(Error::Other(format!("daemon replied `{status}`: {}", body.trim())));
+    }
+    Ok(body.to_string())
+}

@@ -1,0 +1,321 @@
+//! The daemon's model registry: named models, each serving independently.
+//!
+//! A [`Fleet`] maps names to [`ModelEntry`]s. Every entry owns the full
+//! per-model serving stack of [`crate::serve`] — a hot-swappable
+//! [`EngineHandle`] over the model root's live generation plus a dedicated
+//! micro-batch [`crate::serve::Batcher`] — so queries against different
+//! models never contend, while queries against the *same* model coalesce
+//! into shared backend matmuls exactly as under `tallfat serve`.
+//!
+//! Registrations persist in `fleet.manifest` (one `name=root` line per
+//! model, written atomically via temp-file + rename like the `CURRENT`
+//! pointer), so a restarted daemon reopens its whole fleet before it
+//! accepts the first connection.
+
+use crate::backend::BackendRef;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::serve::batcher::{BatchOptions, Batcher};
+use crate::serve::http::ServerState;
+use crate::serve::query::EngineHandle;
+use crate::util::{read_unpoisoned, write_unpoisoned, Logger};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+static LOG: Logger = Logger::new("daemon.fleet");
+
+/// Registry file name under the daemon's state directory.
+pub const FLEET_MANIFEST: &str = "fleet.manifest";
+
+/// One registered model: its serving state and the batcher that keeps the
+/// coalescing worker alive for the entry's lifetime.
+pub struct ModelEntry {
+    name: String,
+    root: PathBuf,
+    pub(crate) state: Arc<ServerState>,
+    _batcher: Batcher,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The hot-swappable engine handle jobs reload after a publish.
+    pub fn engines(&self) -> &Arc<EngineHandle> {
+        &self.state.engines
+    }
+
+    /// Generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.state.engines.generation()
+    }
+}
+
+/// The named-model registry (see module docs).
+pub struct Fleet {
+    state_dir: PathBuf,
+    backend: BackendRef,
+    cache_shards: usize,
+    batch: BatchOptions,
+    models: RwLock<BTreeMap<String, Arc<ModelEntry>>>,
+}
+
+impl Fleet {
+    /// Open the fleet persisted under `state_dir`, reopening every model
+    /// the manifest names. A model whose root fails to open is skipped
+    /// with a warning (dropped from the manifest on the next register)
+    /// instead of holding the rest of the fleet hostage.
+    pub fn open(
+        state_dir: impl Into<PathBuf>,
+        backend: BackendRef,
+        cache_shards: usize,
+        batch: BatchOptions,
+    ) -> Result<Self> {
+        let state_dir = state_dir.into();
+        std::fs::create_dir_all(&state_dir)?;
+        let fleet = Fleet {
+            state_dir,
+            backend,
+            cache_shards,
+            batch,
+            models: RwLock::new(BTreeMap::new()),
+        };
+        for (name, root) in load_manifest(&fleet.manifest_path())? {
+            match fleet.open_entry(&name, Path::new(&root)) {
+                Ok(entry) => {
+                    write_unpoisoned(&fleet.models).insert(name, entry);
+                }
+                Err(e) => LOG.warn(&format!("skipping model `{name}` ({root}): {e}")),
+            }
+        }
+        let n = fleet.len();
+        if n > 0 {
+            LOG.info(&format!("reopened {n} model(s) from {}", fleet.manifest_path().display()));
+        }
+        MetricsRegistry::global().set("daemon_models", n as f64);
+        Ok(fleet)
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.state_dir.join(FLEET_MANIFEST)
+    }
+
+    fn open_entry(&self, name: &str, root: &Path) -> Result<Arc<ModelEntry>> {
+        let engines =
+            Arc::new(EngineHandle::open(root, self.cache_shards, self.backend.clone())?);
+        let batcher = Batcher::start(engines.clone(), self.batch)?;
+        let state = Arc::new(ServerState::new(engines, batcher.handle()));
+        Ok(Arc::new(ModelEntry {
+            name: name.to_string(),
+            root: root.to_path_buf(),
+            state,
+            _batcher: batcher,
+        }))
+    }
+
+    /// Register (or idempotently re-register) the model at `root` under
+    /// `name` and persist the registration.
+    pub fn register(&self, name: &str, root: impl AsRef<Path>) -> Result<Arc<ModelEntry>> {
+        validate_name(name)?;
+        let root = root.as_ref();
+        if let Some(existing) = self.get(name) {
+            if existing.root() == root {
+                return Ok(existing);
+            }
+            return Err(Error::Config(format!(
+                "model `{name}` is already registered at {} (unregistering is not supported; \
+                 pick another name)",
+                existing.root().display()
+            )));
+        }
+        let entry = self.open_entry(name, root)?;
+        let generation = entry.generation();
+        write_unpoisoned(&self.models).insert(name.to_string(), entry.clone());
+        self.save_manifest()?;
+        MetricsRegistry::global().set("daemon_models", self.len() as f64);
+        LOG.info(&format!(
+            "registered model `{name}` at {} (generation {generation})",
+            root.display()
+        ));
+        Ok(entry)
+    }
+
+    pub fn get(&self, name: &str) -> Option<Arc<ModelEntry>> {
+        read_unpoisoned(&self.models).get(name).cloned()
+    }
+
+    /// All entries, ordered by name.
+    pub fn entries(&self) -> Vec<Arc<ModelEntry>> {
+        read_unpoisoned(&self.models).values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        read_unpoisoned(&self.models).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn save_manifest(&self) -> Result<()> {
+        let mut text = String::from("# tallfat fleet manifest v1\n");
+        for entry in read_unpoisoned(&self.models).values() {
+            text.push_str(&format!("{}={}\n", entry.name(), entry.root().display()));
+        }
+        write_atomic(&self.manifest_path(), &text)
+    }
+}
+
+/// Model names key the manifest and appear in protocol lines and metric
+/// names — keep them to a filesystem- and JSON-safe alphabet.
+fn validate_name(name: &str) -> Result<()> {
+    if name.is_empty() || name.len() > 128 {
+        return Err(Error::Config("model name must be 1..=128 characters".into()));
+    }
+    if !name
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-'))
+    {
+        return Err(Error::Config(format!(
+            "model name `{name}` has characters outside [A-Za-z0-9._-]"
+        )));
+    }
+    Ok(())
+}
+
+fn load_manifest(path: &Path) -> Result<Vec<(String, String)>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e.into()),
+    };
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (name, root) = line.split_once('=').ok_or_else(|| {
+            Error::parse(format!("fleet manifest {}: bad line `{line}`", path.display()))
+        })?;
+        out.push((name.to_string(), root.to_string()));
+    }
+    Ok(out)
+}
+
+/// Write-then-rename, the same durability idiom as the `CURRENT` pointer:
+/// a crash mid-write can never leave a half-written manifest behind.
+pub(crate) fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let dir = path.parent().ok_or_else(|| {
+        Error::Config(format!("manifest path {} has no parent directory", path.display()))
+    })?;
+    let file = path.file_name().and_then(|n| n.to_str()).unwrap_or("manifest");
+    let tmp = dir.join(format!(".{file}.{}.{seq}.tmp", std::process::id()));
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::io::InputSpec;
+    use crate::svd::Svd;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("tallfat_test_fleet").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn build_model(dir: &Path, seed: u64) -> PathBuf {
+        let (a, _) = gen_exact(
+            60,
+            8,
+            3,
+            Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+            0.0,
+            seed,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("a.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let model = dir.join("model");
+        Svd::over(&spec)
+            .unwrap()
+            .rank(3)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .save_model(model.to_string_lossy().into_owned())
+            .run()
+            .unwrap();
+        model
+    }
+
+    #[test]
+    fn names_are_validated() {
+        assert!(validate_name("movies").is_ok());
+        assert!(validate_name("m-1.v_2").is_ok());
+        assert!(validate_name("").is_err());
+        assert!(validate_name("a b").is_err());
+        assert!(validate_name("a=b").is_err());
+        assert!(validate_name("a/b").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let d = dir("manifest");
+        let path = d.join(FLEET_MANIFEST);
+        write_atomic(&path, "# tallfat fleet manifest v1\nalpha=/models/a\nbeta=/models/b\n")
+            .unwrap();
+        let loaded = load_manifest(&path).unwrap();
+        assert_eq!(
+            loaded,
+            vec![
+                ("alpha".to_string(), "/models/a".to_string()),
+                ("beta".to_string(), "/models/b".to_string())
+            ]
+        );
+        assert!(load_manifest(&d.join("missing.manifest")).unwrap().is_empty());
+        write_atomic(&path, "no separator here\n").unwrap();
+        assert!(load_manifest(&path).is_err());
+    }
+
+    #[test]
+    fn register_persists_and_reopens() {
+        let d = dir("register");
+        let model = build_model(&d, 7);
+        let state = d.join("state");
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        {
+            let fleet =
+                Fleet::open(&state, backend.clone(), 2, BatchOptions::default()).unwrap();
+            assert!(fleet.is_empty());
+            let entry = fleet.register("movies", &model).unwrap();
+            assert_eq!(entry.name(), "movies");
+            // Idempotent for the same root, an error for a different one.
+            assert!(fleet.register("movies", &model).is_ok());
+            assert!(fleet.register("movies", d.join("elsewhere")).is_err());
+            assert!(fleet.register("bad name", &model).is_err());
+            assert!(fleet.get("nope").is_none());
+        }
+        // A fresh fleet over the same state dir reopens the registration.
+        let fleet = Fleet::open(&state, backend, 2, BatchOptions::default()).unwrap();
+        assert_eq!(fleet.len(), 1);
+        let entry = fleet.get("movies").unwrap();
+        assert_eq!(entry.root(), model.as_path());
+        assert!(entry.engines().is_reloadable());
+    }
+}

@@ -1,0 +1,989 @@
+//! Supervised background jobs: queued per model, health-probed, retried.
+//!
+//! An update job submitted over the control protocol lands in a
+//! [`JobManager`] queue. A supervisor thread starts at most one attempt per
+//! model at a time (generations are linear — two concurrent updates of one
+//! model would race the `CURRENT` pointer), watches each worker through a
+//! heartbeat the executor bumps on every pass, and:
+//!
+//! * **reaps** a worker whose heartbeat goes stale (the thread is detached
+//!   — std threads cannot be killed — and the job is requeued or failed);
+//! * **requeues** a failed attempt while it has retry budget, else marks
+//!   the job failed with the worker's error;
+//! * **hot-swaps** the model's serving engine after a successful publish,
+//!   so new generations become visible to queries without a restart.
+//!
+//! The queue persists in `jobs.manifest` (same temp-file + rename idiom as
+//! the fleet manifest). Running attempts are persisted *as queued*: after a
+//! daemon restart they run again from scratch. That makes job execution
+//! at-least-once — an update interrupted between publish and manifest
+//! rewrite can apply twice — which is the right trade for a daemon whose
+//! jobs are idempotent re-factorizations far more often than appends.
+//!
+//! Chaos knobs ([`JobSpec::chaos_fail_passes`], [`JobSpec::chaos_hang_ms`])
+//! sabotage the *first* attempt only, turning "worker killed mid-update"
+//! and "worker wedged mid-update" into deterministic scenario tests.
+
+use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::io::InputSpec;
+use crate::serve::json::Json;
+use crate::svd::executor::{Executor, LocalExecutor, Pass, PassContext, PassOutput};
+use crate::update::{Update, UpdateResult};
+use crate::util::{lock_unpoisoned, Logger};
+use std::collections::{BTreeSet, VecDeque};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::fleet::{write_atomic, Fleet};
+
+static LOG: Logger = Logger::new("daemon.jobs");
+
+/// Queue file name under the daemon's state directory.
+pub const JOBS_MANIFEST: &str = "jobs.manifest";
+
+/// Supervisor poll cadence.
+const TICK: Duration = Duration::from_millis(25);
+
+/// Default heartbeat staleness after which a worker counts as a zombie.
+/// Generous: a heartbeat lands at every pass boundary, and passes stream
+/// the whole input, so slow disks beat slow heartbeats by a wide margin.
+const DEFAULT_ZOMBIE_AFTER: Duration = Duration::from_secs(300);
+
+/// Lifecycle of a job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed)
+    }
+}
+
+/// Everything needed to run one update job against a registered model.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Assigned by [`JobManager::submit`] (0 until then).
+    pub id: u64,
+    /// Registered model name the update applies to.
+    pub model: String,
+    /// Row-batch path; format inferred from the extension.
+    pub rows: String,
+    /// New rank (0 = keep the model's current rank).
+    pub rank: usize,
+    /// Sketch oversampling for the update pass.
+    pub oversample: usize,
+    /// Worker threads for the update's executor.
+    pub workers: usize,
+    /// Rows per streamed block.
+    pub block: usize,
+    /// Sketch seed.
+    pub seed: u64,
+    /// Generations kept on disk after publish (the GC horizon).
+    pub keep_generations: usize,
+    /// Total attempts before the job is marked failed.
+    pub max_attempts: usize,
+    /// Chaos: fail the first attempt after this many passes (0 = off).
+    pub chaos_fail_passes: usize,
+    /// Chaos: wedge the first attempt's first pass for this long (0 = off).
+    pub chaos_hang_ms: u64,
+    /// Hold the job in the queue this long before the first attempt
+    /// (0 = run as soon as the model is free). Not persisted: a restarted
+    /// daemon runs a delayed job immediately.
+    pub delay_ms: u64,
+}
+
+impl JobSpec {
+    pub fn new(model: impl Into<String>, rows: impl Into<String>) -> Self {
+        JobSpec {
+            id: 0,
+            model: model.into(),
+            rows: rows.into(),
+            rank: 0,
+            oversample: 4,
+            workers: 2,
+            block: 64,
+            seed: 17,
+            keep_generations: 2,
+            max_attempts: 2,
+            chaos_fail_passes: 0,
+            chaos_hang_ms: 0,
+            delay_ms: 0,
+        }
+    }
+
+    /// Protocol form, as carried by a `submit-job` line.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("op", Json::str("submit-job")),
+            ("model", Json::str(&self.model)),
+            ("rows", Json::str(&self.rows)),
+            ("rank", Json::num(self.rank as f64)),
+            ("oversample", Json::num(self.oversample as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("block", Json::num(self.block as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("keep_generations", Json::num(self.keep_generations as f64)),
+            ("max_attempts", Json::num(self.max_attempts as f64)),
+            ("chaos_fail_passes", Json::num(self.chaos_fail_passes as f64)),
+            ("chaos_hang_ms", Json::num(self.chaos_hang_ms as f64)),
+            ("delay_ms", Json::num(self.delay_ms as f64)),
+        ])
+    }
+
+    /// Parse a `submit-job` line; `model` and `rows` are required, every
+    /// other knob keeps its default when absent.
+    pub fn from_json(req: &Json) -> Result<JobSpec> {
+        let model = req
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::parse("submit-job: missing `model`"))?;
+        let rows = req
+            .get("rows")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::parse("submit-job: missing `rows`"))?;
+        let mut spec = JobSpec::new(model, rows);
+        let usize_knob = |key: &str, into: &mut usize| -> Result<()> {
+            if let Some(v) = req.get(key) {
+                *into = v
+                    .as_usize()
+                    .ok_or_else(|| Error::parse(format!("submit-job: `{key}` not an integer")))?;
+            }
+            Ok(())
+        };
+        usize_knob("rank", &mut spec.rank)?;
+        usize_knob("oversample", &mut spec.oversample)?;
+        usize_knob("workers", &mut spec.workers)?;
+        usize_knob("block", &mut spec.block)?;
+        usize_knob("keep_generations", &mut spec.keep_generations)?;
+        usize_knob("max_attempts", &mut spec.max_attempts)?;
+        usize_knob("chaos_fail_passes", &mut spec.chaos_fail_passes)?;
+        let mut seed = spec.seed as usize;
+        usize_knob("seed", &mut seed)?;
+        spec.seed = seed as u64;
+        let mut hang = spec.chaos_hang_ms as usize;
+        usize_knob("chaos_hang_ms", &mut hang)?;
+        spec.chaos_hang_ms = hang as u64;
+        let mut delay = spec.delay_ms as usize;
+        usize_knob("delay_ms", &mut delay)?;
+        spec.delay_ms = delay as u64;
+        Ok(spec)
+    }
+}
+
+/// Point-in-time view of a job, served over `job-status`.
+#[derive(Clone, Debug)]
+pub struct JobStatus {
+    pub id: u64,
+    pub model: String,
+    pub state: JobState,
+    /// Attempts started so far.
+    pub attempts: usize,
+    /// Generation published (done jobs only).
+    pub generation: Option<u64>,
+    /// Rows appended (done jobs only).
+    pub rows_added: Option<usize>,
+    /// Last error (failed jobs, or the cause of the latest requeue).
+    pub error: Option<String>,
+}
+
+impl JobStatus {
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(&self.model)),
+            ("state", Json::str(self.state.as_str())),
+            ("attempts", Json::num(self.attempts as f64)),
+        ];
+        if let Some(g) = self.generation {
+            fields.push(("generation", Json::num(g as f64)));
+        }
+        if let Some(r) = self.rows_added {
+            fields.push(("rows_added", Json::num(r as f64)));
+        }
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e)));
+        }
+        Json::obj(fields)
+    }
+}
+
+/// A job waiting for its model to be free (or for its delay to pass).
+struct QueuedJob {
+    spec: JobSpec,
+    attempts: usize,
+    not_before: Option<Instant>,
+    last_error: Option<String>,
+}
+
+impl QueuedJob {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.spec.id,
+            model: self.spec.model.clone(),
+            state: JobState::Queued,
+            attempts: self.attempts,
+            generation: None,
+            rows_added: None,
+            error: self.last_error.clone(),
+        }
+    }
+}
+
+/// A live attempt: the worker thread plus the heartbeat it bumps.
+struct RunningJob {
+    spec: JobSpec,
+    attempts: usize,
+    handle: JoinHandle<Result<UpdateResult>>,
+    heartbeat: Arc<Mutex<Instant>>,
+}
+
+impl RunningJob {
+    fn status(&self) -> JobStatus {
+        JobStatus {
+            id: self.spec.id,
+            model: self.spec.model.clone(),
+            state: JobState::Running,
+            attempts: self.attempts,
+            generation: None,
+            rows_added: None,
+            error: None,
+        }
+    }
+}
+
+struct Inner {
+    queue: VecDeque<QueuedJob>,
+    running: Vec<RunningJob>,
+    finished: Vec<JobStatus>,
+    next_id: u64,
+    draining: bool,
+}
+
+impl Inner {
+    fn find_status(&self, id: u64) -> Option<JobStatus> {
+        self.running
+            .iter()
+            .find(|r| r.spec.id == id)
+            .map(RunningJob::status)
+            .or_else(|| self.queue.iter().find(|q| q.spec.id == id).map(QueuedJob::status))
+            .or_else(|| self.finished.iter().find(|s| s.id == id).cloned())
+    }
+}
+
+/// The per-daemon job queue and its supervisor thread (see module docs).
+pub struct JobManager {
+    inner: Arc<Mutex<Inner>>,
+    halt: Arc<AtomicBool>,
+    state_path: PathBuf,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+impl JobManager {
+    /// Open the queue persisted under `state_dir` (restoring any jobs a
+    /// previous daemon left behind) and start the supervisor.
+    pub fn open(fleet: Arc<Fleet>, state_dir: &Path) -> Result<Self> {
+        Self::open_with(fleet, state_dir, DEFAULT_ZOMBIE_AFTER)
+    }
+
+    /// [`JobManager::open`] with an explicit zombie horizon (tests shrink
+    /// it to reap a deliberately wedged worker quickly).
+    pub fn open_with(
+        fleet: Arc<Fleet>,
+        state_dir: &Path,
+        zombie_after: Duration,
+    ) -> Result<Self> {
+        let state_path = state_dir.join(JOBS_MANIFEST);
+        let (next_id, queue) = load_jobs(&state_path)?;
+        if !queue.is_empty() {
+            LOG.info(&format!("restored {} queued job(s) from a previous run", queue.len()));
+        }
+        let inner = Arc::new(Mutex::new(Inner {
+            queue,
+            running: Vec::new(),
+            finished: Vec::new(),
+            next_id,
+            draining: false,
+        }));
+        let halt = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let inner = inner.clone();
+            let halt = halt.clone();
+            let state_path = state_path.clone();
+            std::thread::Builder::new()
+                .name("tallfatd-supervisor".into())
+                .spawn(move || supervise(fleet, inner, halt, state_path, zombie_after))
+                .map_err(|e| Error::Other(format!("cannot spawn job supervisor: {e}")))?
+        };
+        Ok(JobManager { inner, halt, state_path, supervisor: Some(supervisor) })
+    }
+
+    /// Enqueue a job. Fails while draining, for unknown models, and for
+    /// row paths that would corrupt the tab-separated manifest.
+    pub fn submit(&self, mut spec: JobSpec) -> Result<u64> {
+        if spec.rows.chars().any(|c| c.is_control()) {
+            return Err(Error::Config("job rows path has control characters".into()));
+        }
+        let mut inner = lock_unpoisoned(&self.inner);
+        if inner.draining {
+            return Err(Error::Other("daemon is draining; not accepting jobs".into()));
+        }
+        spec.id = inner.next_id;
+        inner.next_id += 1;
+        let not_before = (spec.delay_ms > 0)
+            .then(|| Instant::now() + Duration::from_millis(spec.delay_ms));
+        let id = spec.id;
+        let model = spec.model.clone();
+        inner.queue.push_back(QueuedJob { spec, attempts: 0, not_before, last_error: None });
+        persist(&self.state_path, &inner);
+        drop(inner);
+        MetricsRegistry::global().add("daemon_jobs_submitted", 1.0);
+        LOG.info(&format!("job {id} queued for model `{model}`"));
+        Ok(id)
+    }
+
+    pub fn status(&self, id: u64) -> Option<JobStatus> {
+        lock_unpoisoned(&self.inner).find_status(id)
+    }
+
+    /// Every known job: running, then queued, then finished.
+    pub fn statuses(&self) -> Vec<JobStatus> {
+        let inner = lock_unpoisoned(&self.inner);
+        let mut out: Vec<JobStatus> = inner.running.iter().map(RunningJob::status).collect();
+        out.extend(inner.queue.iter().map(QueuedJob::status));
+        out.extend(inner.finished.iter().cloned());
+        out
+    }
+
+    /// Stop accepting jobs; already-queued work keeps running to completion.
+    pub fn begin_drain(&self) {
+        lock_unpoisoned(&self.inner).draining = true;
+    }
+
+    /// No queued and no running jobs.
+    pub fn idle(&self) -> bool {
+        let inner = lock_unpoisoned(&self.inner);
+        inner.queue.is_empty() && inner.running.is_empty()
+    }
+
+    /// Block until [`JobManager::idle`] or the timeout; returns the final
+    /// idleness.
+    pub fn wait_idle(&self, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while !self.idle() {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
+    }
+
+    /// Stop the supervisor without waiting for the queue. Queued (and
+    /// running) jobs stay in the manifest and run again after a restart.
+    pub fn halt(&self) {
+        self.halt.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for JobManager {
+    fn drop(&mut self) {
+        self.halt();
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The supervisor loop: reap, zombie-check, start, persist — every tick.
+fn supervise(
+    fleet: Arc<Fleet>,
+    inner: Arc<Mutex<Inner>>,
+    halt: Arc<AtomicBool>,
+    state_path: PathBuf,
+    zombie_after: Duration,
+) {
+    while !halt.load(Ordering::SeqCst) {
+        // Engine reloads happen outside the job lock: a reload re-opens
+        // model shards from disk, and status queries must not wait on it.
+        let mut reload: Vec<String> = Vec::new();
+        {
+            let mut inner = lock_unpoisoned(&inner);
+            let mut changed = reap_finished(&mut inner, &mut reload);
+            changed |= reap_zombies(&mut inner, zombie_after);
+            changed |= start_eligible(&fleet, &mut inner);
+            if changed {
+                persist(&state_path, &inner);
+            }
+        }
+        for model in reload {
+            let Some(entry) = fleet.get(&model) else { continue };
+            match entry.engines().reload() {
+                Ok(Some(generation)) => {
+                    LOG.info(&format!("model `{model}` now serving generation {generation}"));
+                }
+                Ok(None) => {}
+                Err(e) => LOG.warn(&format!("model `{model}` reload after publish: {e}")),
+            }
+        }
+        std::thread::sleep(TICK);
+    }
+}
+
+fn reap_finished(inner: &mut Inner, reload: &mut Vec<String>) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < inner.running.len() {
+        if !inner.running[i].handle.is_finished() {
+            i += 1;
+            continue;
+        }
+        let r = inner.running.remove(i);
+        changed = true;
+        let outcome = r.handle.join().unwrap_or_else(|_| {
+            Err(Error::Other(format!("job {} worker panicked", r.spec.id)))
+        });
+        match outcome {
+            Ok(result) => {
+                LOG.info(&format!(
+                    "job {} done: model `{}` generation {} (+{} rows)",
+                    r.spec.id, r.spec.model, result.generation, result.rows_added
+                ));
+                inner.finished.push(JobStatus {
+                    id: r.spec.id,
+                    model: r.spec.model.clone(),
+                    state: JobState::Done,
+                    attempts: r.attempts + 1,
+                    generation: Some(result.generation),
+                    rows_added: Some(result.rows_added),
+                    error: None,
+                });
+                reload.push(r.spec.model);
+                MetricsRegistry::global().add("daemon_jobs_completed", 1.0);
+            }
+            Err(e) => settle_failure(inner, r.spec, r.attempts, e.to_string()),
+        }
+    }
+    changed
+}
+
+fn reap_zombies(inner: &mut Inner, zombie_after: Duration) -> bool {
+    let mut changed = false;
+    let mut i = 0;
+    while i < inner.running.len() {
+        let stale = lock_unpoisoned(&inner.running[i].heartbeat).elapsed();
+        if stale < zombie_after {
+            i += 1;
+            continue;
+        }
+        // std threads cannot be killed: drop the handle (detaching the
+        // wedged worker) and let retry policy decide the job's fate. The
+        // detached thread can at worst error out later into nowhere — its
+        // unique work_dir keeps it from corrupting the retry's output.
+        let r = inner.running.remove(i);
+        changed = true;
+        LOG.warn(&format!(
+            "job {} zombie: no heartbeat for {:.1}s, reaping worker",
+            r.spec.id,
+            stale.as_secs_f64()
+        ));
+        MetricsRegistry::global().add("daemon_zombies_reaped", 1.0);
+        settle_failure(
+            inner,
+            r.spec,
+            r.attempts,
+            format!("worker heartbeat stale for {:.1}s", stale.as_secs_f64()),
+        );
+    }
+    changed
+}
+
+/// A failed attempt goes back to the front of the queue while the job has
+/// retry budget, else the job is finished as failed.
+fn settle_failure(inner: &mut Inner, spec: JobSpec, attempts: usize, error: String) {
+    let spent = attempts + 1;
+    if spent < spec.max_attempts {
+        LOG.warn(&format!(
+            "job {} attempt {spent}/{} failed ({error}); requeueing",
+            spec.id, spec.max_attempts
+        ));
+        MetricsRegistry::global().add("daemon_jobs_requeued", 1.0);
+        inner.queue.push_front(QueuedJob {
+            spec,
+            attempts: spent,
+            not_before: None,
+            last_error: Some(error),
+        });
+    } else {
+        LOG.warn(&format!("job {} failed after {spent} attempt(s): {error}", spec.id));
+        MetricsRegistry::global().add("daemon_jobs_failed", 1.0);
+        inner.finished.push(JobStatus {
+            id: spec.id,
+            model: spec.model,
+            state: JobState::Failed,
+            attempts: spent,
+            generation: None,
+            rows_added: None,
+            error: Some(error),
+        });
+    }
+}
+
+fn start_eligible(fleet: &Fleet, inner: &mut Inner) -> bool {
+    let mut busy: BTreeSet<String> =
+        inner.running.iter().map(|r| r.spec.model.clone()).collect();
+    let mut changed = false;
+    let mut i = 0;
+    while i < inner.queue.len() {
+        let ready = {
+            let q = &inner.queue[i];
+            let held = match q.not_before {
+                Some(t) => Instant::now() < t,
+                None => false,
+            };
+            !busy.contains(&q.spec.model) && !held
+        };
+        if !ready {
+            i += 1;
+            continue;
+        }
+        let Some(q) = inner.queue.remove(i) else { break };
+        changed = true;
+        busy.insert(q.spec.model.clone());
+        match start_attempt(fleet, &q) {
+            Ok(running) => inner.running.push(running),
+            Err(e) => settle_failure(inner, q.spec, q.attempts, e.to_string()),
+        }
+    }
+    changed
+}
+
+fn start_attempt(fleet: &Fleet, q: &QueuedJob) -> Result<RunningJob> {
+    let entry = fleet
+        .get(&q.spec.model)
+        .ok_or_else(|| Error::Config(format!("model `{}` is not registered", q.spec.model)))?;
+    let root = entry.root().to_path_buf();
+    let spec = q.spec.clone();
+    let heartbeat = Arc::new(Mutex::new(Instant::now()));
+    let hb = heartbeat.clone();
+    // Chaos sabotages the first attempt only: the retry must prove the
+    // job completes once the fault clears.
+    let first = q.attempts == 0;
+    let handle = std::thread::Builder::new()
+        .name(format!("tallfatd-job-{}", spec.id))
+        .spawn(move || run_attempt(&spec, &root, hb, first))
+        .map_err(|e| Error::Other(format!("cannot spawn job worker: {e}")))?;
+    LOG.info(&format!(
+        "job {} attempt {} started for model `{}`",
+        q.spec.id,
+        q.attempts + 1,
+        q.spec.model
+    ));
+    Ok(RunningJob { spec: q.spec.clone(), attempts: q.attempts, handle, heartbeat })
+}
+
+fn run_attempt(
+    spec: &JobSpec,
+    root: &Path,
+    heartbeat: Arc<Mutex<Instant>>,
+    first_attempt: bool,
+) -> Result<UpdateResult> {
+    let input =
+        InputSpec { path: spec.rows.clone(), format: InputFormat::from_path(&spec.rows) };
+    let mut exec = SupervisedExecutor {
+        inner: LocalExecutor::new(spec.workers),
+        heartbeat,
+        fail_after: (first_attempt && spec.chaos_fail_passes > 0)
+            .then_some(spec.chaos_fail_passes),
+        hang_ms: if first_attempt { spec.chaos_hang_ms } else { 0 },
+        passes: 0,
+    };
+    let mut update = Update::of(root)?
+        .rows(&input)
+        .oversample(spec.oversample)
+        .workers(spec.workers)
+        .block(spec.block)
+        .seed(spec.seed)
+        .keep_generations(spec.keep_generations)
+        .executor(&mut exec);
+    if spec.rank > 0 {
+        update = update.rank(spec.rank);
+    }
+    update.run()
+}
+
+/// A [`LocalExecutor`] wrapper that (a) bumps the supervisor-visible
+/// heartbeat at every pass boundary and (b) injects the spec's chaos.
+struct SupervisedExecutor {
+    inner: LocalExecutor,
+    heartbeat: Arc<Mutex<Instant>>,
+    fail_after: Option<usize>,
+    hang_ms: u64,
+    passes: usize,
+}
+
+impl Executor for SupervisedExecutor {
+    fn name(&self) -> &str {
+        "supervised-local"
+    }
+
+    fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput> {
+        *lock_unpoisoned(&self.heartbeat) = Instant::now();
+        if self.passes == 0 && self.hang_ms > 0 {
+            // Wedge: heartbeat goes stale while we sleep, so the zombie
+            // reaper fires; then die without touching the model.
+            std::thread::sleep(Duration::from_millis(self.hang_ms));
+            return Err(Error::Other("chaos: worker wedged".into()));
+        }
+        if let Some(n) = self.fail_after {
+            if self.passes >= n {
+                return Err(Error::Other(format!(
+                    "chaos: worker killed before pass `{}`",
+                    pass.name()
+                )));
+            }
+        }
+        self.passes += 1;
+        self.inner.run_pass(ctx, pass)
+    }
+}
+
+fn persist(path: &Path, inner: &Inner) {
+    let mut text = String::from("# tallfat jobs manifest v1\n");
+    text.push_str(&format!("next_id={}\n", inner.next_id));
+    // Running attempts are persisted as queued: a restart re-runs them.
+    for r in &inner.running {
+        text.push_str(&job_line(&r.spec, r.attempts));
+    }
+    for q in &inner.queue {
+        text.push_str(&job_line(&q.spec, q.attempts));
+    }
+    if let Err(e) = write_atomic(path, &text) {
+        LOG.warn(&format!("cannot persist job queue to {}: {e}", path.display()));
+    }
+}
+
+fn job_line(spec: &JobSpec, attempts: usize) -> String {
+    format!(
+        "job\tid={}\tmodel={}\trows={}\trank={}\toversample={}\tworkers={}\tblock={}\t\
+         seed={}\tkeep_generations={}\tmax_attempts={}\tchaos_fail_passes={}\tattempts={}\n",
+        spec.id,
+        spec.model,
+        spec.rows,
+        spec.rank,
+        spec.oversample,
+        spec.workers,
+        spec.block,
+        spec.seed,
+        spec.keep_generations,
+        spec.max_attempts,
+        spec.chaos_fail_passes,
+        attempts
+    )
+}
+
+fn load_jobs(path: &Path) -> Result<(u64, VecDeque<QueuedJob>)> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok((1, VecDeque::new()));
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let mut next_id = 1u64;
+    let mut queue = VecDeque::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("next_id=") {
+            next_id = v
+                .parse()
+                .map_err(|_| Error::parse(format!("jobs manifest: bad next_id `{v}`")))?;
+            continue;
+        }
+        let Some(fields) = line.strip_prefix("job\t") else {
+            return Err(Error::parse(format!("jobs manifest: bad line `{line}`")));
+        };
+        let mut spec = JobSpec::new("", "");
+        let mut attempts = 0usize;
+        for field in fields.split('\t') {
+            let (key, value) = field.split_once('=').ok_or_else(|| {
+                Error::parse(format!("jobs manifest: bad field `{field}`"))
+            })?;
+            let bad = || Error::parse(format!("jobs manifest: bad value `{field}`"));
+            match key {
+                "id" => spec.id = value.parse().map_err(|_| bad())?,
+                "model" => spec.model = value.to_string(),
+                "rows" => spec.rows = value.to_string(),
+                "rank" => spec.rank = value.parse().map_err(|_| bad())?,
+                "oversample" => spec.oversample = value.parse().map_err(|_| bad())?,
+                "workers" => spec.workers = value.parse().map_err(|_| bad())?,
+                "block" => spec.block = value.parse().map_err(|_| bad())?,
+                "seed" => spec.seed = value.parse().map_err(|_| bad())?,
+                "keep_generations" => {
+                    spec.keep_generations = value.parse().map_err(|_| bad())?
+                }
+                "max_attempts" => spec.max_attempts = value.parse().map_err(|_| bad())?,
+                "chaos_fail_passes" => {
+                    spec.chaos_fail_passes = value.parse().map_err(|_| bad())?
+                }
+                "attempts" => attempts = value.parse().map_err(|_| bad())?,
+                // Forward compatibility: unknown knobs are ignored.
+                _ => {}
+            }
+        }
+        if spec.model.is_empty() || spec.rows.is_empty() {
+            return Err(Error::parse(format!("jobs manifest: incomplete job `{line}`")));
+        }
+        queue.push_back(QueuedJob { spec, attempts, not_before: None, last_error: None });
+    }
+    Ok((next_id, queue))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::backend::BackendRef;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::serve::batcher::BatchOptions;
+    use crate::svd::Svd;
+
+    fn dir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("tallfat_test_jobs").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Base model + a row batch to update it with.
+    fn fixture(d: &Path, seed: u64) -> (PathBuf, String) {
+        let (a, _) = gen_exact(
+            60,
+            8,
+            3,
+            Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+            0.0,
+            seed,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let model = d.join("model");
+        Svd::over(&spec)
+            .unwrap()
+            .rank(3)
+            .workers(2)
+            .block(32)
+            .work_dir(d.join("work").to_string_lossy().into_owned())
+            .save_model(model.to_string_lossy().into_owned())
+            .run()
+            .unwrap();
+        let (b, _) = gen_exact(
+            20,
+            8,
+            3,
+            Spectrum::Geometric { scale: 4.0, decay: 0.5 },
+            0.0,
+            seed + 1,
+        )
+        .unwrap();
+        let rows = InputSpec::csv(d.join("b.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&b, &rows).unwrap();
+        (model, rows.path)
+    }
+
+    fn fleet_with(d: &Path, name: &str, model: &Path) -> Arc<Fleet> {
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let fleet =
+            Fleet::open(d.join("state"), backend, 2, BatchOptions::default()).unwrap();
+        fleet.register(name, model).unwrap();
+        Arc::new(fleet)
+    }
+
+    fn wait_terminal(jobs: &JobManager, id: u64, timeout: Duration) -> JobStatus {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(s) = jobs.status(id) {
+                if s.state.is_terminal() {
+                    return s;
+                }
+            }
+            assert!(Instant::now() < deadline, "job {id} did not settle in time");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let mut spec = JobSpec::new("movies", "/data/rows.csv");
+        spec.rank = 5;
+        spec.seed = 99;
+        spec.chaos_fail_passes = 1;
+        let parsed = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(parsed.model, "movies");
+        assert_eq!(parsed.rows, "/data/rows.csv");
+        assert_eq!(parsed.rank, 5);
+        assert_eq!(parsed.seed, 99);
+        assert_eq!(parsed.chaos_fail_passes, 1);
+        assert!(JobSpec::from_json(&Json::obj(vec![("op", Json::str("submit-job"))])).is_err());
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let d = dir("manifest");
+        let path = d.join(JOBS_MANIFEST);
+        let mut spec = JobSpec::new("movies", "/data/rows.csv");
+        spec.id = 4;
+        spec.max_attempts = 3;
+        let inner = Inner {
+            queue: VecDeque::from([QueuedJob {
+                spec,
+                attempts: 1,
+                not_before: None,
+                last_error: None,
+            }]),
+            running: Vec::new(),
+            finished: Vec::new(),
+            next_id: 5,
+            draining: false,
+        };
+        persist(&path, &inner);
+        let (next_id, queue) = load_jobs(&path).unwrap();
+        assert_eq!(next_id, 5);
+        assert_eq!(queue.len(), 1);
+        assert_eq!(queue[0].spec.id, 4);
+        assert_eq!(queue[0].spec.model, "movies");
+        assert_eq!(queue[0].spec.max_attempts, 3);
+        assert_eq!(queue[0].attempts, 1);
+        let (next_id, queue) = load_jobs(&d.join("missing.manifest")).unwrap();
+        assert_eq!(next_id, 1);
+        assert!(queue.is_empty());
+    }
+
+    #[test]
+    fn job_completes_and_engine_hot_swaps() {
+        let d = dir("complete");
+        let (model, rows) = fixture(&d, 11);
+        let fleet = fleet_with(&d, "m", &model);
+        let entry = fleet.get("m").unwrap();
+        assert_eq!(entry.generation(), 0);
+        let jobs = JobManager::open(fleet.clone(), &d.join("state")).unwrap();
+        let id = jobs.submit(JobSpec::new("m", rows)).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Done);
+        assert_eq!(status.generation, Some(1));
+        assert_eq!(status.rows_added, Some(20));
+        // The supervisor reloaded the serving engine after the publish.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while entry.generation() != 1 {
+            assert!(Instant::now() < deadline, "engine never hot-swapped");
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(jobs.wait_idle(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn chaos_kill_requeues_then_completes() {
+        let d = dir("chaos_kill");
+        let (model, rows) = fixture(&d, 13);
+        let fleet = fleet_with(&d, "m", &model);
+        let jobs = JobManager::open(fleet, &d.join("state")).unwrap();
+        let mut spec = JobSpec::new("m", rows);
+        spec.chaos_fail_passes = 1;
+        let id = jobs.submit(spec).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Done, "error: {:?}", status.error);
+        assert_eq!(status.attempts, 2, "chaos attempt should have been retried");
+        assert_eq!(status.generation, Some(1));
+    }
+
+    #[test]
+    fn chaos_kill_exhausts_retry_budget() {
+        let d = dir("chaos_fail");
+        let (model, rows) = fixture(&d, 15);
+        let fleet = fleet_with(&d, "m", &model);
+        let jobs = JobManager::open(fleet.clone(), &d.join("state")).unwrap();
+        let mut spec = JobSpec::new("m", rows);
+        spec.max_attempts = 1; // chaos hits attempt 0; no budget to retry
+        spec.chaos_fail_passes = 1;
+        let id = jobs.submit(spec).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Failed);
+        assert!(status.error.unwrap().contains("chaos"));
+        assert_eq!(fleet.get("m").unwrap().generation(), 0);
+    }
+
+    #[test]
+    fn wedged_worker_is_reaped_and_job_retried() {
+        let d = dir("zombie");
+        let (model, rows) = fixture(&d, 17);
+        let fleet = fleet_with(&d, "m", &model);
+        let jobs =
+            JobManager::open_with(fleet, &d.join("state"), Duration::from_millis(150))
+                .unwrap();
+        let mut spec = JobSpec::new("m", rows);
+        spec.chaos_hang_ms = 800; // well past the 150ms zombie horizon
+        let id = jobs.submit(spec).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Done, "error: {:?}", status.error);
+        assert_eq!(status.attempts, 2);
+        assert!(
+            MetricsRegistry::global().get("daemon_zombies_reaped").unwrap_or(0.0) >= 1.0
+        );
+    }
+
+    #[test]
+    fn drain_rejects_new_jobs_and_unknown_models_fail() {
+        let d = dir("drain");
+        let (model, rows) = fixture(&d, 19);
+        let fleet = fleet_with(&d, "m", &model);
+        let jobs = JobManager::open(fleet, &d.join("state")).unwrap();
+        let id = jobs.submit(JobSpec::new("ghost", rows.clone())).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(10));
+        assert_eq!(status.state, JobState::Failed);
+        assert!(status.error.unwrap().contains("not registered"));
+        jobs.begin_drain();
+        assert!(jobs.submit(JobSpec::new("m", rows)).is_err());
+    }
+
+    #[test]
+    fn queued_job_survives_restart() {
+        let d = dir("restart");
+        let (model, rows) = fixture(&d, 23);
+        let state = d.join("state");
+        let fleet = fleet_with(&d, "m", &model);
+        let id;
+        {
+            let jobs = JobManager::open(fleet.clone(), &state).unwrap();
+            let mut spec = JobSpec::new("m", rows);
+            spec.delay_ms = 60_000; // parked in the queue well past halt
+            id = jobs.submit(spec).unwrap();
+            jobs.halt();
+        } // drop joins the supervisor; the job is still in jobs.manifest
+        let jobs = JobManager::open(fleet, &state).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Done, "error: {:?}", status.error);
+        assert_eq!(status.generation, Some(1));
+    }
+}

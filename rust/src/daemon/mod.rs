@@ -1,0 +1,52 @@
+//! `tallfatd` — the model-fleet daemon.
+//!
+//! Every other entry point of this crate is a foreground process over one
+//! model: `svd` factorizes, `update` appends, `serve` answers queries, each
+//! in its own process and its own lifetime. This subsystem is the control
+//! plane that joins them into one long-running service:
+//!
+//! * [`fleet`] — the registry of named models. Each entry pairs a
+//!   hot-swappable [`crate::serve::EngineHandle`] with its own micro-batch
+//!   [`crate::serve::Batcher`]; the name→root mapping persists in a
+//!   `fleet.manifest` under the daemon's state directory, so a restarted
+//!   daemon reopens its whole fleet ([`fleet::Fleet`]).
+//! * [`jobs`] — supervised background factorization work. Update jobs
+//!   queue per model (one attempt per model at a time), run on a worker
+//!   thread behind a heartbeat-wrapped executor, are reaped when zombie,
+//!   requeued on failure within a retry budget, and hot-swap the model's
+//!   serving engine on publish. The queue persists in `jobs.manifest`, so
+//!   a queued job survives a daemon restart ([`jobs::JobManager`]).
+//! * [`server`] — the one front door: ND-JSON over the dependency-free
+//!   HTTP of [`crate::serve::http`]. Query lines carry `"model":"name"`
+//!   and route to that entry's batcher; control lines (`register`, `list`,
+//!   `status`, `submit-job`, `job-status`, `drain`, `halt`) drive the
+//!   daemon itself ([`server::Daemon`], the `tallfat daemon` command).
+//! * [`client`] — [`client::DaemonClient`], the control protocol over the
+//!   same transport (the `tallfat daemon-client` command).
+//! * [`scenario`] — a declarative chaos harness: a [`scenario::Scenario`]
+//!   names a topology (models), a workload (query clients), a script of
+//!   steps (submit, await, drain, halt, restart), and expectations (zero
+//!   failed queries, generation floors); its runner boots a real in-process
+//!   daemon and checks the expectations, making races like "worker dies
+//!   mid-update" or "GC beats a reload" repeatable integration tests.
+//!
+//! ```text
+//! tallfat daemon --state /var/lib/tallfat &
+//! tallfat daemon-client register --name movies --root /models/movies
+//! tallfat daemon-client submit-job --model movies --rows /data/new_rows.csv
+//! echo '{"op":"similar","model":"movies","row":[...],"k":5}' \
+//!     | curl -s --data-binary @- localhost:9935/query
+//! tallfat daemon-client drain
+//! ```
+
+pub mod client;
+pub mod fleet;
+pub mod jobs;
+pub mod scenario;
+pub mod server;
+
+pub use client::DaemonClient;
+pub use fleet::{Fleet, ModelEntry};
+pub use jobs::{JobManager, JobSpec, JobState, JobStatus};
+pub use scenario::{Expectation, Scenario, ScenarioReport, Step};
+pub use server::{daemon, daemon_client, Daemon, DaemonOptions};

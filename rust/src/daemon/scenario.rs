@@ -1,0 +1,595 @@
+//! Declarative chaos scenarios: topology + workload + script + expectations.
+//!
+//! A [`Scenario`] describes a daemon test the way an operator would: which
+//! models exist (topology), how many query clients hammer them throughout
+//! (workload), what happens to the daemon while they do (steps: submit a
+//! sabotaged update, drain, halt, restart, wait), and what must hold at
+//! the end (expectations). [`Scenario::run`] is the interpreter: it boots
+//! a real in-process [`super::Daemon`] on an ephemeral port, drives every
+//! step over the real control protocol, and checks the expectations
+//! against query counters and the on-disk model state.
+//!
+//! ```no_run
+//! # use tallfat::daemon::{JobSpec, Scenario};
+//! let mut job = JobSpec::new("movies", "/data/new_rows.csv");
+//! job.chaos_fail_passes = 1; // kill the first worker mid-update
+//! let report = Scenario::new("worker_killed_mid_update")
+//!     .model("movies", "/models/movies")
+//!     .workload(2)
+//!     .submit_update(job)
+//!     .await_jobs(60)
+//!     .expect_all_jobs_done()
+//!     .expect_zero_failed_queries()
+//!     .expect_generation_at_least("movies", 1)
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(report.queries_failed, 0);
+//! ```
+//!
+//! The races this harness exists for — a worker killed mid-update, GC
+//! deleting a generation under a reload, a restart with a job queued —
+//! all end the same way: a consistent published generation and zero
+//! failed queries, or the scenario fails.
+
+use crate::backend::native::NativeBackend;
+use crate::backend::BackendRef;
+use crate::error::{Error, Result};
+use crate::serve::json::Json;
+use crate::serve::store::ModelStore;
+use crate::util::{lock_unpoisoned, read_unpoisoned, write_unpoisoned, Logger};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::client::DaemonClient;
+use super::jobs::JobSpec;
+use super::server::{Daemon, DaemonOptions};
+
+static LOG: Logger = Logger::new("daemon.scenario");
+
+/// One scripted action against the running daemon.
+#[derive(Clone, Debug)]
+pub enum Step {
+    /// Queue an update job over the control protocol.
+    SubmitUpdate(JobSpec),
+    /// Block until every submitted job is `done` or `failed`.
+    AwaitJobs { timeout: Duration },
+    /// Graceful stop: reject new jobs, finish the queue, then exit.
+    Drain,
+    /// Hard stop: queued jobs stay on disk for the next start.
+    Halt,
+    /// Boot a fresh daemon over the same state directory (after a halt,
+    /// or implicitly halting a running one).
+    Restart,
+    /// Let the workload run undisturbed for a while.
+    Sleep(Duration),
+}
+
+/// A property the scenario must end with.
+#[derive(Clone, Debug)]
+pub enum Expectation {
+    /// Every query issued by the workload got an `ok:true` reply.
+    ZeroFailedQueries,
+    /// The model's *on-disk* published generation reached this floor.
+    GenerationAtLeast { model: String, generation: u64 },
+    /// Every job the script submitted ended `done` (none failed, none
+    /// left behind).
+    AllJobsDone,
+}
+
+/// What actually happened, for assertions beyond the expectations.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub queries_ok: u64,
+    pub queries_failed: u64,
+    /// Final *published* generation per model, read from disk.
+    pub generations: BTreeMap<String, u64>,
+    pub jobs_done: usize,
+    pub jobs_failed: usize,
+}
+
+/// A declarative daemon test (see module docs). Build, then [`Scenario::run`].
+pub struct Scenario {
+    name: String,
+    state_dir: PathBuf,
+    models: Vec<(String, PathBuf)>,
+    clients: usize,
+    steps: Vec<Step>,
+    expectations: Vec<Expectation>,
+    health_poll: Duration,
+}
+
+impl Scenario {
+    pub fn new(name: impl Into<String>) -> Self {
+        let name = name.into();
+        let state_dir = std::env::temp_dir().join(format!("tallfat_scenario_{name}"));
+        Scenario {
+            name,
+            state_dir,
+            models: Vec::new(),
+            clients: 2,
+            steps: Vec::new(),
+            expectations: Vec::new(),
+            health_poll: Duration::from_millis(200),
+        }
+    }
+
+    /// Daemon state directory (default: a per-name temp dir, wiped at the
+    /// start of the run — never wiped on restart steps).
+    pub fn state_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.state_dir = dir.into();
+        self
+    }
+
+    /// Topology: register the model at `root` under `name` at boot.
+    pub fn model(mut self, name: impl Into<String>, root: impl Into<PathBuf>) -> Self {
+        self.models.push((name.into(), root.into()));
+        self
+    }
+
+    /// Workload: this many query clients run for the whole scenario,
+    /// rotating health/project/info lines across every model.
+    pub fn workload(mut self, clients: usize) -> Self {
+        self.clients = clients;
+        self
+    }
+
+    /// Engine-reload poll cadence for the daemon under test.
+    pub fn health_poll_ms(mut self, ms: u64) -> Self {
+        self.health_poll = Duration::from_millis(ms);
+        self
+    }
+
+    pub fn step(mut self, step: Step) -> Self {
+        self.steps.push(step);
+        self
+    }
+
+    pub fn submit_update(self, spec: JobSpec) -> Self {
+        self.step(Step::SubmitUpdate(spec))
+    }
+
+    pub fn await_jobs(self, timeout_secs: u64) -> Self {
+        self.step(Step::AwaitJobs { timeout: Duration::from_secs(timeout_secs) })
+    }
+
+    pub fn drain(self) -> Self {
+        self.step(Step::Drain)
+    }
+
+    pub fn halt(self) -> Self {
+        self.step(Step::Halt)
+    }
+
+    pub fn restart(self) -> Self {
+        self.step(Step::Restart)
+    }
+
+    pub fn sleep_ms(self, ms: u64) -> Self {
+        self.step(Step::Sleep(Duration::from_millis(ms)))
+    }
+
+    pub fn expect(mut self, expectation: Expectation) -> Self {
+        self.expectations.push(expectation);
+        self
+    }
+
+    pub fn expect_zero_failed_queries(self) -> Self {
+        self.expect(Expectation::ZeroFailedQueries)
+    }
+
+    pub fn expect_generation_at_least(self, model: impl Into<String>, generation: u64) -> Self {
+        self.expect(Expectation::GenerationAtLeast { model: model.into(), generation })
+    }
+
+    pub fn expect_all_jobs_done(self) -> Self {
+        self.expect(Expectation::AllJobsDone)
+    }
+
+    /// Interpret the scenario (see module docs). Returns the report on
+    /// success, the first violated expectation (or infrastructure error)
+    /// otherwise.
+    pub fn run(self) -> Result<ScenarioReport> {
+        LOG.info(&format!("scenario `{}`: starting", self.name));
+        let _ = std::fs::remove_dir_all(&self.state_dir);
+        std::fs::create_dir_all(&self.state_dir)?;
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let opts = DaemonOptions {
+            addr: "127.0.0.1:0".to_string(),
+            health_poll: Some(self.health_poll),
+            ..DaemonOptions::default()
+        };
+
+        let mut daemon = Some(boot(&self.state_dir, &backend, &opts)?);
+        let client_for = |d: &RunningDaemon| DaemonClient::new(d.addr.clone());
+        for (name, root) in &self.models {
+            client_for(daemon.as_ref().unwrap())
+                .register(name, &root.to_string_lossy())?;
+        }
+
+        let workload = Arc::new(Workload::new(
+            daemon.as_ref().unwrap().addr.clone(),
+            self.clients,
+        ));
+        let mut client_threads = Vec::new();
+        for i in 0..self.clients {
+            let w = workload.clone();
+            let models: Vec<String> = self.models.iter().map(|(n, _)| n.clone()).collect();
+            client_threads.push(std::thread::spawn(move || query_loop(&w, i, &models)));
+        }
+
+        let mut submitted: Vec<u64> = Vec::new();
+        let mut terminal: BTreeMap<u64, String> = BTreeMap::new();
+        let mut outcome = Ok(());
+        for step in &self.steps {
+            let result: Result<()> = match step {
+                // Restart is the one step that is valid with the daemon
+                // down (halt → restart is the crash-recovery scenario).
+                Step::Restart => (|| {
+                    if let Some(running) = daemon.take() {
+                        workload.pause();
+                        DaemonClient::new(running.addr.clone()).halt()?;
+                        running.join()?;
+                    }
+                    let running = boot(&self.state_dir, &backend, &opts)?;
+                    workload.point_at(&running.addr);
+                    daemon = Some(running);
+                    workload.unpause();
+                    Ok(())
+                })(),
+                Step::Sleep(d) => {
+                    std::thread::sleep(*d);
+                    Ok(())
+                }
+                _ => match daemon.as_ref().map(|r| r.addr.clone()) {
+                    None => Err(Error::Other(
+                        "daemon already stopped (only Restart/Sleep are valid here)".into(),
+                    )),
+                    Some(addr) => {
+                        let client = DaemonClient::new(addr);
+                        match step {
+                            Step::SubmitUpdate(spec) => {
+                                client.submit_job(spec).map(|id| submitted.push(id))
+                            }
+                            Step::AwaitJobs { timeout } => {
+                                await_jobs(&client, &submitted, &mut terminal, *timeout)
+                            }
+                            Step::Drain => {
+                                workload.pause();
+                                client.drain().and_then(|_| {
+                                    daemon.take().expect("running daemon").join()
+                                })
+                            }
+                            Step::Halt => {
+                                workload.pause();
+                                client.halt().and_then(|_| {
+                                    daemon.take().expect("running daemon").join()
+                                })
+                            }
+                            Step::Restart | Step::Sleep(_) => unreachable!("handled above"),
+                        }
+                    }
+                },
+            };
+            if let Err(e) = result {
+                outcome =
+                    Err(Error::Other(format!("scenario `{}`: step {step:?}: {e}", self.name)));
+                break;
+            }
+        }
+
+        // Wind down: the workload first (no queries race the shutdown),
+        // then whatever daemon is still up.
+        workload.pause();
+        workload.stop.store(true, Ordering::SeqCst);
+        for t in client_threads {
+            let _ = t.join();
+        }
+        if let Some(running) = daemon.take() {
+            let halted = client_for(&running).halt();
+            let joined = running.join();
+            if outcome.is_ok() {
+                halted?;
+                joined?;
+            }
+        }
+        outcome?;
+
+        let mut generations = BTreeMap::new();
+        for (name, root) in &self.models {
+            generations.insert(name.clone(), published_generation(root)?);
+        }
+        let report = ScenarioReport {
+            queries_ok: workload.ok.load(Ordering::SeqCst),
+            queries_failed: workload.failed.load(Ordering::SeqCst),
+            generations,
+            jobs_done: terminal.values().filter(|s| *s == "done").count(),
+            jobs_failed: terminal.values().filter(|s| *s == "failed").count(),
+        };
+        LOG.info(&format!(
+            "scenario `{}`: {} ok / {} failed queries, {} done / {} failed jobs",
+            self.name, report.queries_ok, report.queries_failed, report.jobs_done,
+            report.jobs_failed
+        ));
+        check_expectations(
+            &self.name,
+            &self.expectations,
+            &report,
+            &submitted,
+            &terminal,
+            &workload,
+        )?;
+        Ok(report)
+    }
+}
+
+fn check_expectations(
+    name: &str,
+    expectations: &[Expectation],
+    report: &ScenarioReport,
+    submitted: &[u64],
+    terminal: &BTreeMap<u64, String>,
+    workload: &Workload,
+) -> Result<()> {
+    for e in expectations {
+        match e {
+            Expectation::ZeroFailedQueries => {
+                if report.queries_failed > 0 {
+                    let detail = lock_unpoisoned(&workload.last_error)
+                        .clone()
+                        .unwrap_or_else(|| "no detail captured".into());
+                    return Err(Error::Other(format!(
+                        "scenario `{name}`: {} of {} queries failed (last: {detail})",
+                        report.queries_failed,
+                        report.queries_failed + report.queries_ok
+                    )));
+                }
+            }
+            Expectation::GenerationAtLeast { model, generation } => {
+                let got = report.generations.get(model).copied().unwrap_or(0);
+                if got < *generation {
+                    return Err(Error::Other(format!(
+                        "scenario `{name}`: model `{model}` published generation {got}, \
+                         expected >= {generation}"
+                    )));
+                }
+            }
+            Expectation::AllJobsDone => {
+                for id in submitted {
+                    match terminal.get(id).map(String::as_str) {
+                        Some("done") => {}
+                        Some(state) => {
+                            return Err(Error::Other(format!(
+                                "scenario `{name}`: job {id} ended `{state}`"
+                            )));
+                        }
+                        None => {
+                            return Err(Error::Other(format!(
+                                "scenario `{name}`: job {id} never reached a terminal \
+                                 state (missing an await_jobs step?)"
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A booted daemon under test: its address and the thread running it.
+struct RunningDaemon {
+    addr: String,
+    thread: JoinHandle<Result<()>>,
+}
+
+impl RunningDaemon {
+    fn join(self) -> Result<()> {
+        self.thread
+            .join()
+            .unwrap_or_else(|_| Err(Error::Other("daemon thread panicked".into())))
+    }
+}
+
+fn boot(state_dir: &Path, backend: &BackendRef, opts: &DaemonOptions) -> Result<RunningDaemon> {
+    let d = Daemon::bind(state_dir, backend.clone(), opts)?;
+    let addr = d.local_addr()?.to_string();
+    let thread = std::thread::Builder::new()
+        .name("scenario-daemon".into())
+        .spawn(move || d.run())
+        .map_err(|e| Error::Other(format!("cannot spawn scenario daemon: {e}")))?;
+    Ok(RunningDaemon { addr, thread })
+}
+
+fn await_jobs(
+    client: &DaemonClient,
+    submitted: &[u64],
+    terminal: &mut BTreeMap<u64, String>,
+    timeout: Duration,
+) -> Result<()> {
+    let deadline = Instant::now() + timeout;
+    for id in submitted {
+        if terminal.contains_key(id) {
+            continue;
+        }
+        let left = deadline.saturating_duration_since(Instant::now());
+        let reply = client.wait_job(*id, left)?;
+        let state = reply
+            .get("job")
+            .and_then(|j| j.get("state"))
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        terminal.insert(*id, state);
+    }
+    Ok(())
+}
+
+/// The model root's published generation, read from disk — robust to the
+/// daemon being stopped by the time expectations run.
+fn published_generation(root: &Path) -> Result<u64> {
+    Ok(ModelStore::open(root, 1)?.generation())
+}
+
+/// Shared state between the runner and its query clients.
+struct Workload {
+    addr: RwLock<String>,
+    stop: AtomicBool,
+    paused: AtomicBool,
+    idle: Vec<AtomicBool>,
+    ok: AtomicU64,
+    failed: AtomicU64,
+    last_error: Mutex<Option<String>>,
+}
+
+impl Workload {
+    fn new(addr: String, clients: usize) -> Self {
+        Workload {
+            addr: RwLock::new(addr),
+            stop: AtomicBool::new(false),
+            paused: AtomicBool::new(false),
+            idle: (0..clients).map(|_| AtomicBool::new(false)).collect(),
+            ok: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            last_error: Mutex::new(None),
+        }
+    }
+
+    /// Stop issuing queries and wait until every client is parked — so a
+    /// daemon stop never turns half-sent queries into failures.
+    fn pause(&self) {
+        self.paused.store(true, Ordering::SeqCst);
+        while !self.idle.iter().all(|f| f.load(Ordering::SeqCst)) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn unpause(&self) {
+        self.paused.store(false, Ordering::SeqCst);
+    }
+
+    fn point_at(&self, addr: &str) {
+        *write_unpoisoned(&self.addr) = addr.to_string();
+    }
+}
+
+/// One workload client: rotate ops and models, count ok vs failed. A
+/// failure is a transport error or any `ok:false` reply — the scenario's
+/// whole point is that chaos must never surface to queries.
+fn query_loop(w: &Workload, client_idx: usize, models: &[String]) {
+    if models.is_empty() {
+        w.idle[client_idx].store(true, Ordering::SeqCst);
+        return;
+    }
+    let mut i = client_idx; // desynchronize the clients' rotations
+    while !w.stop.load(Ordering::SeqCst) {
+        if w.paused.load(Ordering::SeqCst) {
+            w.idle[client_idx].store(true, Ordering::SeqCst);
+            std::thread::sleep(Duration::from_millis(2));
+            continue;
+        }
+        w.idle[client_idx].store(false, Ordering::SeqCst);
+        let model = &models[i % models.len()];
+        let line = match i % 3 {
+            0 => Json::obj(vec![
+                ("op", Json::str("health")),
+                ("model", Json::str(model)),
+            ]),
+            1 => Json::obj(vec![
+                ("op", Json::str("project")),
+                ("model", Json::str(model)),
+                // Sparse form on purpose: exercises the sparse query row
+                // path under chaos, and stays valid for any model width.
+                ("indices", Json::arr(vec![Json::num(0.0)])),
+                ("values", Json::arr(vec![Json::num(1.0)])),
+            ]),
+            _ => Json::obj(vec![("op", Json::str("info")), ("model", Json::str(model))]),
+        };
+        let client = DaemonClient::new(read_unpoisoned(&w.addr).clone());
+        match client.call(&line) {
+            Ok(reply) if reply.get("ok").and_then(Json::as_bool) == Some(true) => {
+                w.ok.fetch_add(1, Ordering::SeqCst);
+            }
+            Ok(reply) => {
+                w.failed.fetch_add(1, Ordering::SeqCst);
+                *lock_unpoisoned(&w.last_error) = Some(reply.render());
+            }
+            Err(e) => {
+                w.failed.fetch_add(1, Ordering::SeqCst);
+                *lock_unpoisoned(&w.last_error) = Some(e.to_string());
+            }
+        }
+        i += 1;
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    w.idle[client_idx].store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(failed: u64, generation: u64) -> ScenarioReport {
+        let mut generations = BTreeMap::new();
+        generations.insert("m".to_string(), generation);
+        ScenarioReport {
+            queries_ok: 10,
+            queries_failed: failed,
+            generations,
+            jobs_done: 1,
+            jobs_failed: 0,
+        }
+    }
+
+    #[test]
+    fn expectations_catch_violations() {
+        let w = Workload::new("127.0.0.1:1".into(), 0);
+        let submitted = vec![7u64];
+        let mut terminal = BTreeMap::new();
+        terminal.insert(7u64, "done".to_string());
+        let all = vec![
+            Expectation::ZeroFailedQueries,
+            Expectation::GenerationAtLeast { model: "m".into(), generation: 1 },
+            Expectation::AllJobsDone,
+        ];
+        assert!(
+            check_expectations("t", &all, &report(0, 1), &submitted, &terminal, &w).is_ok()
+        );
+        assert!(
+            check_expectations("t", &all, &report(3, 1), &submitted, &terminal, &w).is_err()
+        );
+        assert!(
+            check_expectations("t", &all, &report(0, 0), &submitted, &terminal, &w).is_err()
+        );
+        terminal.insert(7u64, "failed".to_string());
+        assert!(
+            check_expectations("t", &all, &report(0, 1), &submitted, &terminal, &w).is_err()
+        );
+        terminal.remove(&7u64);
+        assert!(
+            check_expectations("t", &all, &report(0, 1), &submitted, &terminal, &w).is_err()
+        );
+    }
+
+    #[test]
+    fn builder_accumulates_topology_and_script() {
+        let s = Scenario::new("builder")
+            .model("a", "/models/a")
+            .model("b", "/models/b")
+            .workload(4)
+            .submit_update(JobSpec::new("a", "/rows.csv"))
+            .await_jobs(30)
+            .drain()
+            .expect_zero_failed_queries()
+            .expect_all_jobs_done();
+        assert_eq!(s.models.len(), 2);
+        assert_eq!(s.clients, 4);
+        assert_eq!(s.steps.len(), 3);
+        assert_eq!(s.expectations.len(), 2);
+        assert!(matches!(s.steps[0], Step::SubmitUpdate(_)));
+        assert!(matches!(s.steps[2], Step::Drain));
+    }
+}

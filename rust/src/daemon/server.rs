@@ -1,0 +1,504 @@
+//! The daemon's front door: one listener for every model and for control.
+//!
+//! `tallfatd` speaks the same dependency-free ND-JSON-over-HTTP as
+//! `tallfat serve`, with one addition: query lines carry `"model":"name"`
+//! and are routed to that model's batcher, so a single connection can
+//! interleave queries against the whole fleet. Lines whose `op` is a
+//! control verb drive the daemon itself:
+//!
+//! | op           | fields            | effect                               |
+//! |--------------|-------------------|--------------------------------------|
+//! | `register`   | `name`, `root`    | add a model to the fleet, persist it |
+//! | `list`       |                   | names, roots, live generations       |
+//! | `status`     |                   | uptime, fleet size, every job        |
+//! | `submit-job` | [`JobSpec`] form  | queue a supervised update job        |
+//! | `job-status` | `id`              | one job's state                      |
+//! | `drain`      |                   | stop accepting, finish queued jobs   |
+//! | `halt`       |                   | stop now; queued jobs persist        |
+//!
+//! Batched query lines group *per model* — each model keeps its own
+//! micro-batch coalescing exactly as under standalone `serve` — and a
+//! body's lines are answered in input order regardless of routing.
+//!
+//! A health poller reloads every model's engine on a short cadence, so
+//! generations published by job workers (or by hand, out-of-process)
+//! become visible to queries without a restart; job completion also
+//! triggers an immediate reload from the supervisor.
+
+use crate::backend::BackendRef;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::serve::batcher::{BatchOptions, Request};
+use crate::serve::http::{
+    error_json, plan_query, read_body, read_head, record_metrics, render_reply, respond, Expect,
+    Planned,
+};
+use crate::serve::json::Json;
+use crate::serve::query::QueryEngine;
+use crate::serve::store::ModelStore;
+use crate::util::{Args, Logger};
+use std::collections::BTreeMap;
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::client::DaemonClient;
+use super::fleet::{Fleet, ModelEntry};
+use super::jobs::{JobManager, JobSpec};
+
+static LOG: Logger = Logger::new("daemon");
+
+/// Default control/query address (distinct from `serve`'s 9925).
+pub const DEFAULT_ADDR: &str = "127.0.0.1:9935";
+
+/// Daemon construction knobs.
+#[derive(Clone, Debug)]
+pub struct DaemonOptions {
+    /// Listen address; port 0 binds an ephemeral port (tests).
+    pub addr: String,
+    /// Per-model micro-batching knobs.
+    pub batch: BatchOptions,
+    /// Shard-cache capacity per model.
+    pub cache_shards: usize,
+    /// Engine-reload poll cadence (None = only job-completion reloads).
+    pub health_poll: Option<Duration>,
+}
+
+impl Default for DaemonOptions {
+    fn default() -> Self {
+        DaemonOptions {
+            addr: DEFAULT_ADDR.to_string(),
+            batch: BatchOptions::default(),
+            cache_shards: ModelStore::DEFAULT_CACHE_SHARDS,
+            health_poll: Some(Duration::from_secs(2)),
+        }
+    }
+}
+
+pub(crate) struct DaemonState {
+    pub(crate) fleet: Arc<Fleet>,
+    pub(crate) jobs: JobManager,
+    started: Instant,
+    stop: AtomicBool,
+    draining: AtomicBool,
+}
+
+/// A bound daemon (separate from [`Daemon::run`] so tests can bind port 0
+/// and read the real address before serving).
+pub struct Daemon {
+    listener: TcpListener,
+    state: Arc<DaemonState>,
+}
+
+impl Daemon {
+    /// Open the fleet and job queue persisted under `state_dir`, bind the
+    /// listener, and start the health poller.
+    pub fn bind(
+        state_dir: impl Into<PathBuf>,
+        backend: BackendRef,
+        opts: &DaemonOptions,
+    ) -> Result<Daemon> {
+        let state_dir = state_dir.into();
+        let fleet = Arc::new(Fleet::open(&state_dir, backend, opts.cache_shards, opts.batch)?);
+        let jobs = JobManager::open(fleet.clone(), &state_dir)?;
+        let listener = TcpListener::bind(&opts.addr)?;
+        // Non-blocking accept so `drain`/`halt` can break the loop.
+        listener.set_nonblocking(true)?;
+        let state = Arc::new(DaemonState {
+            fleet,
+            jobs,
+            started: Instant::now(),
+            stop: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+        });
+        if let Some(every) = opts.health_poll {
+            spawn_health_poller(Arc::downgrade(&state), every);
+        }
+        Ok(Daemon { listener, state })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.state.fleet
+    }
+
+    /// Accept connections until a `drain` or `halt` line stops the daemon.
+    /// Draining finishes every queued job before returning; halting leaves
+    /// them in the manifest for the next start.
+    pub fn run(self) -> Result<()> {
+        let mut joins: Vec<JoinHandle<()>> = Vec::new();
+        while !self.state.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    // The listener's non-blocking mode can be inherited by
+                    // accepted sockets; handlers want blocking reads.
+                    if stream.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    let state = self.state.clone();
+                    match std::thread::Builder::new().name("tallfatd-conn".into()).spawn(
+                        move || {
+                            if let Err(e) = handle_conn(stream, &state) {
+                                LOG.warn(&format!("connection error: {e}"));
+                            }
+                        },
+                    ) {
+                        Ok(j) => joins.push(j),
+                        Err(e) => LOG.warn(&format!("cannot spawn connection handler: {e}")),
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+            joins.retain(|j| !j.is_finished());
+        }
+        // Flush in-flight replies (including the drain/halt ack itself).
+        for j in joins {
+            let _ = j.join();
+        }
+        if self.state.draining.load(Ordering::SeqCst) {
+            LOG.info("draining: waiting for queued jobs to finish");
+            if !self.state.jobs.wait_idle(Duration::from_secs(600)) {
+                LOG.warn("drain timed out with jobs still pending; they stay queued on disk");
+            }
+        }
+        self.state.jobs.halt();
+        LOG.info("daemon stopped");
+        Ok(())
+    }
+}
+
+fn handle_conn(stream: TcpStream, state: &Arc<DaemonState>) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let head = read_head(&mut reader)?;
+    match (head.method.as_str(), head.path.as_str()) {
+        ("GET", "/healthz") => respond(
+            &mut stream,
+            "200 OK",
+            "application/json",
+            &daemon_health(state).render(),
+        ),
+        ("GET", "/metrics") => respond(
+            &mut stream,
+            "200 OK",
+            "text/plain; version=0.0.4",
+            &MetricsRegistry::global().render(),
+        ),
+        ("GET", "/fleet") => {
+            respond(&mut stream, "200 OK", "application/json", &fleet_json(state).render())
+        }
+        ("POST", "/query") => {
+            let Some(text) = read_body(&mut reader, &mut stream, head.content_length)? else {
+                return Ok(());
+            };
+            let reply = process_body(state, &text);
+            respond(&mut stream, "200 OK", "application/x-ndjson", &reply)
+        }
+        _ => respond(
+            &mut stream,
+            "404 Not Found",
+            "application/json",
+            &error_json("unknown route (POST /query, GET /healthz /metrics /fleet)").render(),
+        ),
+    }
+}
+
+/// Answer one ND-JSON body: control lines inline, query lines routed by
+/// model and batched per model. Every line gets a JSON object with an
+/// `ok` field, in input order.
+fn process_body(state: &Arc<DaemonState>, text: &str) -> String {
+    struct ModelBatch {
+        entry: Arc<ModelEntry>,
+        engine: Arc<QueryEngine>,
+        planned: Vec<(usize, Expect)>,
+        reqs: Vec<Request>,
+        nlines: u64,
+    }
+    let t0 = Instant::now();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut outputs: Vec<Option<Json>> = vec![None; lines.len()];
+    let mut batches: BTreeMap<String, ModelBatch> = BTreeMap::new();
+    for (i, line) in lines.iter().enumerate() {
+        let req = match Json::parse(line) {
+            Ok(r) => r,
+            Err(e) => {
+                outputs[i] = Some(error_json(e));
+                continue;
+            }
+        };
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("");
+        if is_control_op(op) {
+            outputs[i] = Some(control(state, op, &req));
+            continue;
+        }
+        let Some(name) = req.get("model").and_then(Json::as_str) else {
+            outputs[i] =
+                Some(error_json("missing `model` (daemon query lines route by model name)"));
+            continue;
+        };
+        let Some(entry) = state.fleet.get(name) else {
+            outputs[i] = Some(error_json(format!("unknown model `{name}`")));
+            continue;
+        };
+        let batch = batches.entry(name.to_string()).or_insert_with(|| {
+            // One engine snapshot per model per body, mirroring `serve`:
+            // inline ops answer from the generation the body started on.
+            let engine = entry.state.engines.current();
+            ModelBatch { entry, engine, planned: Vec::new(), reqs: Vec::new(), nlines: 0 }
+        });
+        batch.nlines += 1;
+        match plan_query(&batch.entry.state, batch.engine.as_ref(), &req) {
+            Planned::Done(json) => outputs[i] = Some(json),
+            Planned::Batch(r, expect) => {
+                batch.planned.push((i, expect));
+                batch.reqs.push(r);
+            }
+        }
+    }
+    for batch in batches.into_values() {
+        if !batch.reqs.is_empty() {
+            let replies = batch.entry.state.handle.call_many(batch.reqs);
+            for ((i, expect), reply) in batch.planned.into_iter().zip(replies) {
+                outputs[i] = Some(render_reply(reply, &expect));
+            }
+        }
+        record_metrics(&batch.entry.state, batch.nlines, t0);
+    }
+    let mut out = String::new();
+    for o in outputs {
+        out.push_str(&o.unwrap_or_else(|| error_json("internal: line fell through")).render());
+        out.push('\n');
+    }
+    out
+}
+
+fn is_control_op(op: &str) -> bool {
+    matches!(
+        op,
+        "register" | "list" | "status" | "submit-job" | "job-status" | "drain" | "halt"
+    )
+}
+
+fn control(state: &Arc<DaemonState>, op: &str, req: &Json) -> Json {
+    match op {
+        "register" => {
+            let (Some(name), Some(root)) = (
+                req.get("name").and_then(Json::as_str),
+                req.get("root").and_then(Json::as_str),
+            ) else {
+                return error_json("register: need `name` and `root`");
+            };
+            match state.fleet.register(name, Path::new(root)) {
+                Ok(entry) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("name", Json::str(name)),
+                    ("generation", Json::num(entry.generation() as f64)),
+                ]),
+                Err(e) => error_json(e),
+            }
+        }
+        "list" => fleet_json(state),
+        "status" => {
+            let jobs: Vec<Json> =
+                state.jobs.statuses().iter().map(|s| s.to_json()).collect();
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("uptime_ms", Json::num(state.started.elapsed().as_secs_f64() * 1e3)),
+                ("models", Json::num(state.fleet.len() as f64)),
+                ("draining", Json::Bool(state.draining.load(Ordering::SeqCst))),
+                ("jobs", Json::arr(jobs)),
+            ])
+        }
+        "submit-job" => match JobSpec::from_json(req).and_then(|s| state.jobs.submit(s)) {
+            Ok(id) => {
+                Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::num(id as f64))])
+            }
+            Err(e) => error_json(e),
+        },
+        "job-status" => {
+            let Some(id) = req.get("id").and_then(Json::as_usize) else {
+                return error_json("job-status: missing integer `id`");
+            };
+            match state.jobs.status(id as u64) {
+                Some(status) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("job", status.to_json()),
+                ]),
+                None => error_json(format!("unknown job id {id}")),
+            }
+        }
+        "drain" => {
+            LOG.info("drain requested: rejecting new jobs, finishing the queue");
+            state.jobs.begin_drain();
+            state.draining.store(true, Ordering::SeqCst);
+            state.stop.store(true, Ordering::SeqCst);
+            Json::obj(vec![("ok", Json::Bool(true)), ("draining", Json::Bool(true))])
+        }
+        "halt" => {
+            LOG.info("halt requested: stopping now, queued jobs persist");
+            state.jobs.halt();
+            state.stop.store(true, Ordering::SeqCst);
+            Json::obj(vec![("ok", Json::Bool(true)), ("halted", Json::Bool(true))])
+        }
+        other => error_json(format!("unknown control op `{other}`")),
+    }
+}
+
+fn daemon_health(state: &DaemonState) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("uptime_ms", Json::num(state.started.elapsed().as_secs_f64() * 1e3)),
+        ("models", Json::num(state.fleet.len() as f64)),
+        ("draining", Json::Bool(state.draining.load(Ordering::SeqCst))),
+    ])
+}
+
+fn fleet_json(state: &DaemonState) -> Json {
+    let models = state
+        .fleet
+        .entries()
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::str(e.name())),
+                ("root", Json::str(e.root().display().to_string())),
+                ("generation", Json::num(e.generation() as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::arr(models))])
+}
+
+/// Reload every model's engine on a cadence, so out-of-band publishes
+/// (and job publishes, belt-and-braces) become visible without a restart.
+/// Holds only a weak reference: the poller dies with the daemon.
+fn spawn_health_poller(state: Weak<DaemonState>, every: Duration) {
+    let spawned = std::thread::Builder::new().name("tallfatd-health".into()).spawn(move || {
+        loop {
+            std::thread::sleep(every);
+            let Some(state) = state.upgrade() else { return };
+            if state.stop.load(Ordering::SeqCst) {
+                return;
+            }
+            for entry in state.fleet.entries() {
+                if let Err(e) = entry.engines().reload() {
+                    LOG.warn(&format!("health poll: model `{}` reload: {e}", entry.name()));
+                }
+                MetricsRegistry::global().set(
+                    &format!("daemon_generation_{}", entry.name()),
+                    entry.generation() as f64,
+                );
+            }
+            MetricsRegistry::global().set("daemon_models", state.fleet.len() as f64);
+        }
+    });
+    if let Err(e) = spawned {
+        LOG.warn(&format!("cannot spawn health poller: {e}"));
+    }
+}
+
+/// `daemon <state-dir>`: run the model-fleet daemon.
+///
+/// `--state DIR` (or positional), `--addr HOST:PORT` (default
+/// 127.0.0.1:9935, port 0 = ephemeral), `--backend native|xla|auto`,
+/// `--cache-shards N`, `--batch-window-ms MS`, `--max-batch N`,
+/// `--health-poll-ms MS` (default 2000; 0 = reload only on job publish).
+pub fn daemon(args: &Args) -> Result<()> {
+    let state_dir = args
+        .opt_str("state")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| {
+            Error::Config("daemon: state directory required (positional or --state)".into())
+        })?;
+    let cfg = crate::coordinator::commands::load_config(args)?;
+    let backend = crate::backend::make_backend(&cfg)?;
+    let opts = DaemonOptions {
+        addr: args.str_or("addr", DEFAULT_ADDR),
+        batch: BatchOptions {
+            window: Duration::from_millis(args.u64_or("batch-window-ms", 2)?),
+            max_batch: args.usize_or("max-batch", 64)?,
+        },
+        cache_shards: args.usize_or("cache-shards", ModelStore::DEFAULT_CACHE_SHARDS)?,
+        health_poll: match args.u64_or("health-poll-ms", 2000)? {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+    };
+    let d = Daemon::bind(&state_dir, backend, &opts)?;
+    LOG.info(&format!(
+        "tallfatd: state {state_dir}, {} model(s), listening on http://{}/query",
+        d.fleet().len(),
+        d.local_addr()?
+    ));
+    d.run()
+}
+
+/// `daemon-client <action>`: drive a running daemon over the control
+/// protocol. Actions: `register --name N --root DIR`, `list`, `status`,
+/// `submit-job --model N --rows PATH [--rank K] [--seed S] [--wait]`,
+/// `job-status --id N`, `drain`, `halt`. `--addr HOST:PORT` picks the
+/// daemon (default 127.0.0.1:9935). Prints the daemon's JSON reply.
+pub fn daemon_client(args: &Args) -> Result<()> {
+    let action = args.positional.first().cloned().ok_or_else(|| {
+        Error::Config(
+            "daemon-client: action required \
+             (register|list|status|submit-job|job-status|drain|halt)"
+                .into(),
+        )
+    })?;
+    let client = DaemonClient::new(args.str_or("addr", DEFAULT_ADDR));
+    let reply = match action.as_str() {
+        "register" => {
+            client.register(&args.require_str("name")?, &args.require_str("root")?)?
+        }
+        "list" => client.list()?,
+        "status" => client.status()?,
+        "submit-job" => {
+            let mut spec =
+                JobSpec::new(args.require_str("model")?, args.require_str("rows")?);
+            spec.rank = args.usize_or("rank", spec.rank)?;
+            spec.oversample = args.usize_or("oversample", spec.oversample)?;
+            spec.workers = args.usize_or("workers", spec.workers)?;
+            spec.block = args.usize_or("block", spec.block)?;
+            spec.seed = args.u64_or("seed", spec.seed)?;
+            spec.keep_generations =
+                args.usize_or("keep-generations", spec.keep_generations)?;
+            spec.max_attempts = args.usize_or("max-attempts", spec.max_attempts)?;
+            spec.delay_ms = args.u64_or("delay-ms", spec.delay_ms)?;
+            let id = client.submit_job(&spec)?;
+            if args.flag("wait") {
+                let timeout = Duration::from_secs(args.u64_or("wait-secs", 600)?);
+                client.wait_job(id, timeout)?
+            } else {
+                Json::obj(vec![("ok", Json::Bool(true)), ("id", Json::num(id as f64))])
+            }
+        }
+        "job-status" => {
+            let id = args.u64_or("id", 0)?;
+            client.job_status(id)?
+        }
+        "drain" => client.drain()?,
+        "halt" => client.halt()?,
+        other => {
+            return Err(Error::Config(format!("daemon-client: unknown action `{other}`")))
+        }
+    };
+    println!("{}", reply.render());
+    Ok(())
+}

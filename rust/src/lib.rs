@@ -67,6 +67,16 @@
 //! running server hot-swaps to with zero downtime (`tallfat update DIR
 //! --rows NEW.csv`, then `{"op":"reload"}` or `--reload-poll-ms`).
 //!
+//! [`daemon`] joins the lifecycle into one long-running control plane:
+//! `tallfat daemon` owns a *fleet* of named models (registry persisted in a
+//! manifest), routes ND-JSON queries by model name through one front door,
+//! runs update jobs as supervised background tasks (per-model queueing,
+//! heartbeat health-probing, zombie reaping, retry, hot-swap on publish),
+//! and drains gracefully — driven by `tallfat daemon-client` over the same
+//! transport. Its [`daemon::Scenario`] harness scripts chaos cases (worker
+//! killed mid-update, GC racing a reload, restart with a queued job) as
+//! declarative, repeatable integration tests.
+//!
 //! See `examples/` for runnable end-to-end drivers and `rust/benches/` for
 //! the experiment harnesses (EXPERIMENTS.md maps each to the paper).
 
@@ -74,6 +84,7 @@ pub mod backend;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod daemon;
 pub mod error;
 pub mod io;
 pub mod jobs;

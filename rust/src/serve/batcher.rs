@@ -15,6 +15,7 @@ use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::serve::query::{EngineHandle, Hit, QueryEngine};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -69,6 +70,7 @@ enum Message {
 #[derive(Clone)]
 pub struct BatcherHandle {
     tx: mpsc::Sender<Message>,
+    depth: Arc<AtomicU64>,
 }
 
 impl BatcherHandle {
@@ -77,10 +79,19 @@ impl BatcherHandle {
         self.call_many(vec![req]).pop().expect("one reply per request")
     }
 
+    /// Requests currently submitted (across every clone of this handle)
+    /// whose replies have not yet been collected — the in-flight batch
+    /// depth reported by the `health` query op.
+    pub fn in_flight(&self) -> u64 {
+        self.depth.load(Ordering::Relaxed)
+    }
+
     /// Submit a group of requests *before* blocking on any reply, so they
     /// coalesce with each other (and with other callers) into one batch.
     /// Replies come back in request order, one per request.
     pub fn call_many(&self, reqs: Vec<Request>) -> Vec<Result<Response>> {
+        let submitted = reqs.len() as u64;
+        self.depth.fetch_add(submitted, Ordering::Relaxed);
         let mut pending = Vec::with_capacity(reqs.len());
         for req in reqs {
             let (reply_tx, reply_rx) = mpsc::sync_channel(1);
@@ -89,7 +100,7 @@ impl BatcherHandle {
                 Err(_) => pending.push(None),
             }
         }
-        pending
+        let replies: Vec<Result<Response>> = pending
             .into_iter()
             .map(|rx| match rx {
                 None => Err(Error::Other("serve batcher is gone".into())),
@@ -97,7 +108,9 @@ impl BatcherHandle {
                     .recv()
                     .map_err(|_| Error::Other("serve batcher dropped the reply".into()))?,
             })
-            .collect()
+            .collect();
+        self.depth.fetch_sub(submitted, Ordering::Relaxed);
+        replies
     }
 }
 
@@ -119,7 +132,7 @@ impl Batcher {
             .spawn(move || worker_loop(engines, rx, opts))
             .map_err(|e| Error::Other(format!("cannot spawn serve batcher: {e}")))?;
         Ok(Batcher {
-            handle: BatcherHandle { tx: tx.clone() },
+            handle: BatcherHandle { tx: tx.clone(), depth: Arc::new(AtomicU64::new(0)) },
             tx,
             join: Some(join),
         })

@@ -22,8 +22,15 @@
 //! {"op":"similar","latent":[...],"k":10}   -> same, skipping the projection
 //! {"op":"reconstruct","row_id":7}          -> {"ok":true,"values":[...]}
 //! {"op":"info"}                            -> {"ok":true,"m":...,"k":...,"generation":...}
+//! {"op":"health"}                          -> {"ok":true,"generation":...,"uptime_ms":...,...}
 //! {"op":"reload"}                          -> {"ok":true,"generation":...,"swapped":...}
 //! ```
+//!
+//! `project` and `similar` also take a sparse row — `"indices":[...]` plus
+//! `"values":[...]` instead of `"row"` — densified against the model's n,
+//! so sparse-model clients don't ship n floats per request. `health` is the
+//! probe the `tallfatd` fleet daemon's health loop consumes: generation,
+//! uptime, shard-cache hit stats, and the in-flight batch depth.
 //!
 //! The model is held through an [`EngineHandle`], so a `reload` line (or
 //! the `--reload-poll-ms` background poll, on by default) hot-swaps to the
@@ -80,11 +87,20 @@ impl Default for ServeOptions {
     }
 }
 
-struct ServerState {
-    engines: Arc<EngineHandle>,
-    handle: BatcherHandle,
-    started: Instant,
-    queries: AtomicU64,
+/// Per-model serving state: the hot-swappable engine handle, a batcher
+/// handle, and request counters. One per [`ModelServer`]; the `tallfatd`
+/// fleet daemon holds one per registered model.
+pub(crate) struct ServerState {
+    pub(crate) engines: Arc<EngineHandle>,
+    pub(crate) handle: BatcherHandle,
+    pub(crate) started: Instant,
+    pub(crate) queries: AtomicU64,
+}
+
+impl ServerState {
+    pub(crate) fn new(engines: Arc<EngineHandle>, handle: BatcherHandle) -> Self {
+        ServerState { engines, handle, started: Instant::now(), queries: AtomicU64::new(0) }
+    }
 }
 
 /// A bound model server (separate from `run` so tests can bind port 0 and
@@ -104,12 +120,7 @@ impl ModelServer {
         if let Some(every) = opts.reload_poll.filter(|_| engines.is_reloadable()) {
             spawn_reload_poller(Arc::downgrade(&engines), every);
         }
-        let state = Arc::new(ServerState {
-            engines,
-            handle: batcher.handle(),
-            started: Instant::now(),
-            queries: AtomicU64::new(0),
-        });
+        let state = Arc::new(ServerState::new(engines, batcher.handle()));
         Ok(ModelServer { listener, state, _batcher: batcher, max_requests: opts.max_requests })
     }
 
@@ -171,7 +182,12 @@ fn spawn_reload_poller(engines: Weak<EngineHandle>, every: Duration) {
         .ok();
 }
 
-fn respond(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> std::io::Result<()> {
+pub(crate) fn respond(
+    stream: &mut TcpStream,
+    status: &str,
+    ctype: &str,
+    body: &str,
+) -> std::io::Result<()> {
     let response = format!(
         "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
@@ -179,14 +195,20 @@ fn respond(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> std
     stream.write_all(response.as_bytes())
 }
 
-fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
+/// Parsed HTTP request head: the request line plus Content-Length.
+pub(crate) struct RequestHead {
+    pub(crate) method: String,
+    pub(crate) path: String,
+    pub(crate) content_length: usize,
+}
+
+/// Read the request line and drain the headers, keeping Content-Length.
+pub(crate) fn read_head(reader: &mut BufReader<TcpStream>) -> std::io::Result<RequestHead> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
-    // Drain headers, keeping Content-Length.
     let mut content_length = 0usize;
     let mut hdr = String::new();
     loop {
@@ -200,8 +222,35 @@ fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
             }
         }
     }
+    Ok(RequestHead { method, path, content_length })
+}
+
+/// Read a POST body of `content_length` bytes, or answer 413 and return
+/// `None` when the declared length exceeds [`MAX_BODY_BYTES`].
+pub(crate) fn read_body(
+    reader: &mut BufReader<TcpStream>,
+    stream: &mut TcpStream,
+    content_length: usize,
+) -> std::io::Result<Option<String>> {
+    if content_length > MAX_BODY_BYTES {
+        respond(
+            stream,
+            "413 Payload Too Large",
+            "text/plain",
+            "body exceeds the 32 MiB request cap\n",
+        )?;
+        return Ok(None);
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    Ok(Some(String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let head = read_head(&mut reader)?;
     let mut stream = stream;
-    match (method.as_str(), path.as_str()) {
+    match (head.method.as_str(), head.path.as_str()) {
         ("GET", "/healthz") => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
         ("GET", "/metrics") => {
             respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &MetricsRegistry::global().render())
@@ -211,17 +260,10 @@ fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
             respond(&mut stream, "200 OK", "application/json", &body)
         }
         ("POST", "/query") => {
-            if content_length > MAX_BODY_BYTES {
-                return respond(
-                    &mut stream,
-                    "413 Payload Too Large",
-                    "text/plain",
-                    "body exceeds the 32 MiB request cap\n",
-                );
-            }
-            let mut body = vec![0u8; content_length];
-            reader.read_exact(&mut body)?;
-            let text = String::from_utf8_lossy(&body);
+            let text = match read_body(&mut reader, &mut stream, head.content_length)? {
+                Some(t) => t,
+                None => return Ok(()),
+            };
             let out = process_body(state, &text);
             respond(&mut stream, "200 OK", "application/x-ndjson", &out)
         }
@@ -229,7 +271,7 @@ fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
     }
 }
 
-fn model_info(engine: &QueryEngine) -> Json {
+pub(crate) fn model_info(engine: &QueryEngine) -> Json {
     let store = engine.store();
     let mut pairs = vec![
         ("ok", Json::Bool(true)),
@@ -246,7 +288,7 @@ fn model_info(engine: &QueryEngine) -> Json {
     Json::obj(pairs)
 }
 
-fn error_json(msg: impl std::fmt::Display) -> Json {
+pub(crate) fn error_json(msg: impl std::fmt::Display) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::str(msg.to_string()))])
 }
 
@@ -260,16 +302,105 @@ fn hits_json(hits: &[Hit]) -> Json {
     )
 }
 
+/// The `{"op":"health"}` reply: the probe the fleet daemon's health loop
+/// consumes. Generation, uptime, per-process shard-cache hit stats, and the
+/// batcher's in-flight depth.
+pub(crate) fn health_json(state: &ServerState, engine: &QueryEngine) -> Json {
+    let reg = MetricsRegistry::global();
+    let sum = |keys: &[&str]| keys.iter().filter_map(|k| reg.get(k)).sum::<f64>();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("generation", Json::num(engine.store().generation() as f64)),
+        ("uptime_ms", Json::num(state.started.elapsed().as_secs_f64() * 1e3)),
+        ("queries", Json::num(state.queries.load(Ordering::Relaxed) as f64)),
+        (
+            "cache_hits",
+            Json::num(sum(&["serve_shard_cache_hits", "serve_embedding_cache_hits"])),
+        ),
+        (
+            "cache_misses",
+            Json::num(sum(&["serve_shard_cache_misses", "serve_embedding_cache_misses"])),
+        ),
+        ("in_flight", Json::num(state.handle.in_flight() as f64)),
+    ])
+}
+
+/// Extract the query row of a `project`/`similar` line: dense `"row":[...]`
+/// or sparse `"indices":[...]` + `"values":[...]` (densified against the
+/// model's n). `None` = neither form present.
+fn query_row(req: &Json, n: usize) -> Option<Result<Vec<f64>>> {
+    if let Some(row) = req.get("row").and_then(Json::as_f64_array) {
+        return Some(Ok(row));
+    }
+    let (indices, values) = match (req.get("indices"), req.get("values")) {
+        (Some(i), Some(v)) => (i, v),
+        (None, None) => return None,
+        _ => return Some(Err(Error::parse("sparse row needs both `indices` and `values`"))),
+    };
+    let idx = match indices.as_array() {
+        Some(items) => {
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_usize() {
+                    Some(i) => out.push(i),
+                    None => {
+                        return Some(Err(Error::parse(
+                            "sparse row: `indices` must be non-negative integers",
+                        )))
+                    }
+                }
+            }
+            out
+        }
+        None => return Some(Err(Error::parse("sparse row: `indices` must be an array"))),
+    };
+    let vals = match values.as_f64_array() {
+        Some(v) => v,
+        None => return Some(Err(Error::parse("sparse row: `values` must be numeric"))),
+    };
+    if idx.len() != vals.len() {
+        return Some(Err(Error::shape(format!(
+            "sparse row: {} indices vs {} values",
+            idx.len(),
+            vals.len()
+        ))));
+    }
+    let mut row = vec![0.0; n];
+    for (&i, &v) in idx.iter().zip(&vals) {
+        if i >= n {
+            return Some(Err(Error::shape(format!(
+                "sparse row: index {i} out of range for model n={n}"
+            ))));
+        }
+        row[i] += v;
+    }
+    Some(Ok(row))
+}
+
 /// What a planned query line is waiting on from the batcher.
-enum Expect {
+pub(crate) enum Expect {
     Latent,
     Hits,
 }
 
 /// A parsed query line: answered inline, or deferred to the batcher.
-enum Planned {
+pub(crate) enum Planned {
     Done(Json),
     Batch(Request, Expect),
+}
+
+/// Turn a batcher reply into the response object for its query line.
+pub(crate) fn render_reply(reply: Result<Response>, expect: &Expect) -> Json {
+    match (reply, expect) {
+        (Ok(Response::Latent(l)), Expect::Latent) => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("latent", Json::from_f64s(&l))])
+        }
+        (Ok(Response::Hits(hits)), Expect::Hits) => {
+            Json::obj(vec![("ok", Json::Bool(true)), ("hits", hits_json(&hits))])
+        }
+        (Ok(_), _) => error_json("internal: wrong response kind"),
+        (Err(e), _) => error_json(e),
+    }
 }
 
 /// Process one POST body of ND-JSON query lines. Every batcher-bound line
@@ -304,18 +435,7 @@ fn process_body(state: &ServerState, text: &str) -> String {
     if !reqs.is_empty() {
         let replies = state.handle.call_many(reqs);
         for ((i, expect), reply) in planned.into_iter().zip(replies) {
-            outputs[i] = Some(match (reply, expect) {
-                (Ok(Response::Latent(l)), Expect::Latent) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("latent", Json::from_f64s(&l)),
-                ]),
-                (Ok(Response::Hits(hits)), Expect::Hits) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("hits", hits_json(&hits)),
-                ]),
-                (Ok(_), _) => error_json("internal: wrong response kind"),
-                (Err(e), _) => error_json(e),
-            });
+            outputs[i] = Some(render_reply(reply, &expect));
         }
     }
     record_metrics(state, lines.len() as u64, t0);
@@ -327,24 +447,32 @@ fn process_body(state: &ServerState, text: &str) -> String {
     out
 }
 
-fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned {
+pub(crate) fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned {
     let op = match req.get("op").and_then(Json::as_str) {
         Some(op) => op,
         None => return Planned::Done(error_json("missing `op`")),
     };
     match op {
-        "project" => match req.get("row").and_then(Json::as_f64_array) {
-            Some(row) => Planned::Batch(Request::Project { row }, Expect::Latent),
-            None => Planned::Done(error_json("project: missing numeric `row`")),
+        "project" => match query_row(req, engine.store().n()) {
+            Some(Ok(row)) => Planned::Batch(Request::Project { row }, Expect::Latent),
+            Some(Err(e)) => Planned::Done(error_json(e)),
+            None => Planned::Done(error_json(
+                "project: missing numeric `row` (or sparse `indices`/`values`)",
+            )),
         },
         "similar" => {
             let topk = req.get("k").and_then(Json::as_usize).unwrap_or(10);
-            if let Some(row) = req.get("row").and_then(Json::as_f64_array) {
-                Planned::Batch(Request::Similar { row, topk }, Expect::Hits)
-            } else if let Some(latent) = req.get("latent").and_then(Json::as_f64_array) {
-                Planned::Batch(Request::SimilarLatent { latent, topk }, Expect::Hits)
-            } else {
-                Planned::Done(error_json("similar: need numeric `row` or `latent`"))
+            match query_row(req, engine.store().n()) {
+                Some(Ok(row)) => Planned::Batch(Request::Similar { row, topk }, Expect::Hits),
+                Some(Err(e)) => Planned::Done(error_json(e)),
+                None => match req.get("latent").and_then(Json::as_f64_array) {
+                    Some(latent) => {
+                        Planned::Batch(Request::SimilarLatent { latent, topk }, Expect::Hits)
+                    }
+                    None => Planned::Done(error_json(
+                        "similar: need numeric `row`, sparse `indices`/`values`, or `latent`",
+                    )),
+                },
             }
         }
         "reconstruct" => {
@@ -361,6 +489,7 @@ fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned 
             })
         }
         "info" => Planned::Done(model_info(engine)),
+        "health" => Planned::Done(health_json(state, engine)),
         "reload" => Planned::Done(match state.engines.reload() {
             Ok(swapped) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -373,7 +502,7 @@ fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned 
     }
 }
 
-fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
+pub(crate) fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
     if nlines == 0 {
         return;
     }

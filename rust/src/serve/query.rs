@@ -305,27 +305,49 @@ impl EngineHandle {
     /// Re-resolve the model root's live generation and swap to it if it
     /// changed. Returns `Some(generation)` when a swap happened, `None`
     /// when already current (or the handle is fixed).
+    ///
+    /// An update's garbage collection can delete the very generation
+    /// `CURRENT` named between our resolve and the store open (it publishes
+    /// the new pointer first, then prunes) — each attempt therefore
+    /// re-resolves from scratch, and a failed open is retried a few times
+    /// before the error is surfaced. The handle keeps serving its old
+    /// snapshot either way.
     pub fn reload(&self) -> Result<Option<u64>> {
+        const GC_RACE_RETRIES: usize = 3;
         let Some(spec) = &self.reload else { return Ok(None) };
         // One reload at a time: poll thread and `{"op":"reload"}` lines can
         // race, and the loser of an unserialized race could install the
         // older generation. The engine RwLock is only held for the final
         // pointer swap, so queries keep flowing during the (slow) open.
         let _serialize = crate::util::lock_unpoisoned(&self.reload_lock);
-        let live_dir = resolve_current(&spec.root)?;
-        if live_dir.as_path() == self.current().store().dir() {
-            return Ok(None);
+        let mut last_err: Option<Error> = None;
+        for attempt in 0..GC_RACE_RETRIES {
+            let live_dir = resolve_current(&spec.root)?;
+            if live_dir.as_path() == self.current().store().dir() {
+                return Ok(None);
+            }
+            let store = match ModelStore::open(&spec.root, spec.cache_shards) {
+                Ok(s) => Arc::new(s),
+                Err(e) => {
+                    LOG.warn(&format!(
+                        "reload open raced gc (attempt {}/{GC_RACE_RETRIES}): {e}",
+                        attempt + 1
+                    ));
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            let engine = Arc::new(QueryEngine::new(store, spec.backend.clone())?);
+            let generation = engine.store().generation();
+            *crate::util::write_unpoisoned(&self.engine) = engine;
+            MetricsRegistry::global().add("serve_reloads", 1.0);
+            LOG.info(&format!(
+                "hot-swapped to generation {generation} ({})",
+                live_dir.display()
+            ));
+            return Ok(Some(generation));
         }
-        let store = Arc::new(ModelStore::open(&spec.root, spec.cache_shards)?);
-        let engine = Arc::new(QueryEngine::new(store, spec.backend.clone())?);
-        let generation = engine.store().generation();
-        *crate::util::write_unpoisoned(&self.engine) = engine;
-        MetricsRegistry::global().add("serve_reloads", 1.0);
-        LOG.info(&format!(
-            "hot-swapped to generation {generation} ({})",
-            live_dir.display()
-        ));
-        Ok(Some(generation))
+        Err(last_err.unwrap_or_else(|| Error::Other("reload: retries exhausted".into())))
     }
 }
 
@@ -529,5 +551,51 @@ mod tests {
         // Rolling back CURRENT swaps back too (the pointer is the truth).
         publish_generation(&model, 0).unwrap();
         assert_eq!(handle.reload().unwrap(), Some(0));
+    }
+
+    #[test]
+    fn reload_survives_current_naming_a_missing_generation() {
+        use crate::serve::store::{publish_generation, CURRENT_FILE};
+        let dir = std::env::temp_dir().join("tallfat_test_query").join("gc_race");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (a, _) = gen_exact(
+            80,
+            10,
+            4,
+            Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+            0.0,
+            37,
+        )
+        .unwrap();
+        let spec = InputSpec::csv(dir.join("A.csv").to_string_lossy().into_owned());
+        crate::io::write_matrix(&a, &spec).unwrap();
+        let result = Svd::over(&spec)
+            .unwrap()
+            .rank(4)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("work").to_string_lossy().into_owned())
+            .backend(Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap();
+        let model = dir.join("model");
+        save_model(&result, &model, Some(1)).unwrap();
+        let handle = EngineHandle::open(&model, 2, Arc::new(NativeBackend::new())).unwrap();
+
+        // The worst-case GC race frozen in place: CURRENT names a
+        // generation whose directory is gone. Every open attempt fails, the
+        // reload reports the error, and the handle keeps serving the old
+        // snapshot rather than panicking or serving a torn model.
+        std::fs::write(model.join(CURRENT_FILE), "gen-000042\n").unwrap();
+        assert!(handle.reload().is_err());
+        assert_eq!(handle.generation(), 0);
+        assert!(handle.current().project_one(a.row(3)).is_ok());
+
+        // Once the pointer heals (the next publish), reload recovers.
+        save_model(&result, &model, Some(2)).unwrap();
+        publish_generation(&model, 1).unwrap();
+        assert_eq!(handle.reload().unwrap(), Some(1));
+        assert_eq!(handle.generation(), 1);
     }
 }

@@ -30,6 +30,7 @@ use crate::backend::BackendRef;
 use crate::config::{InputFormat, RunConfig};
 use crate::error::Result;
 use crate::io::InputSpec;
+use crate::error::Error;
 use crate::svd::executor::{Executor, LocalExecutor};
 use crate::svd::pipeline::{checked_dims, run_svd, SvdOptions};
 use crate::svd::result::SvdResult;
@@ -46,6 +47,7 @@ pub struct Svd<'a> {
     backend: Option<BackendRef>,
     executor: Option<&'a mut dyn Executor>,
     save_model: Option<String>,
+    cols: Option<usize>,
 }
 
 impl<'a> Svd<'a> {
@@ -61,6 +63,7 @@ impl<'a> Svd<'a> {
             backend: None,
             executor: None,
             save_model: None,
+            cols: None,
         })
     }
 
@@ -72,6 +75,9 @@ impl<'a> Svd<'a> {
         let mut b = Self::over(&input)?;
         b.opts = cfg.svd_options();
         b.backend = Some(crate::backend::make_backend(cfg)?);
+        if cfg.cols > 0 {
+            b = b.cols(cfg.cols);
+        }
         Ok(b)
     }
 
@@ -113,6 +119,17 @@ impl<'a> Svd<'a> {
     /// PRNG seed for the virtual Ω.
     pub fn seed(mut self, seed: u64) -> Self {
         self.opts.seed = seed;
+        self
+    }
+
+    /// Pin the column count. Sparse scans derive n from the max index
+    /// actually seen, which undershoots when a batch omits the tail
+    /// columns; pinning the base model's n keeps chained `update` batches
+    /// dimension-compatible. For dense inputs the pin must match the
+    /// scanned width exactly; for sparse inputs it must be ≥ the scanned
+    /// width. Validated by [`Svd::run`].
+    pub fn cols(mut self, n: usize) -> Self {
+        self.cols = Some(n);
         self
     }
 
@@ -205,14 +222,31 @@ impl<'a> Svd<'a> {
 
     /// Run the pipeline and, if requested, persist the model.
     pub fn run(self) -> Result<SvdResult> {
+        let mut dims = self.dims;
+        if let Some(n) = self.cols {
+            if self.input.format.is_sparse() {
+                if n < dims.1 {
+                    return Err(Error::Config(format!(
+                        "--cols {n} is below the input's max column index + 1 ({})",
+                        dims.1
+                    )));
+                }
+                dims.1 = n;
+            } else if n != dims.1 {
+                return Err(Error::Config(format!(
+                    "--cols {n} disagrees with the dense input's width {}",
+                    dims.1
+                )));
+            }
+        }
         let backend = self
             .backend
             .unwrap_or_else(|| std::sync::Arc::new(NativeBackend::new()));
         let result = match self.executor {
-            Some(exec) => run_svd(exec, &self.input, self.dims, backend, &self.opts)?,
+            Some(exec) => run_svd(exec, &self.input, dims, backend, &self.opts)?,
             None => {
                 let mut local = LocalExecutor::new(self.opts.workers);
-                run_svd(&mut local, &self.input, self.dims, backend, &self.opts)?
+                run_svd(&mut local, &self.input, dims, backend, &self.opts)?
             }
         };
         if let Some(dir) = &self.save_model {
@@ -320,6 +354,58 @@ mod tests {
             .unwrap()
             .sigma_cutoff_rel(2.0)
             .work_dir(work)
+            .run();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn cols_pin_widens_sparse_and_rejects_dense_mismatch() {
+        let dir = std::env::temp_dir().join("tallfat_test_builder").join("cols");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // 1-based libsvm rows whose max index (8) undershoots the intended
+        // 12-column dictionary.
+        let mut text = String::new();
+        for i in 0..40 {
+            let a = 1 + i % 8;
+            let b = 1 + (i * 3) % 8;
+            text.push_str(&format!("1 {a}:{}.5 {b}:{}.25\n", i % 7, i % 5));
+        }
+        let path = dir.join("a.libsvm").to_string_lossy().into_owned();
+        std::fs::write(&path, text).unwrap();
+        let spec = InputSpec { path, format: InputFormat::Libsvm };
+
+        // Undershot pin rejected before any pass runs.
+        let under = Svd::over(&spec)
+            .unwrap()
+            .cols(4)
+            .rank(2)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("w0").to_string_lossy().into_owned())
+            .run();
+        assert!(under.is_err());
+
+        // Pinned dictionary wins over the derived max index.
+        let r = Svd::over(&spec)
+            .unwrap()
+            .cols(12)
+            .rank(2)
+            .workers(2)
+            .block(32)
+            .work_dir(dir.join("w1").to_string_lossy().into_owned())
+            .run()
+            .unwrap();
+        assert_eq!(r.n, 12);
+        assert_eq!(r.v.as_ref().unwrap().rows(), 12);
+
+        // Dense inputs must match exactly.
+        let (dense, ddir) = fixture("cols_dense");
+        let err = Svd::over(&dense)
+            .unwrap()
+            .cols(13)
+            .rank(2)
+            .work_dir(ddir.join("w").to_string_lossy().into_owned())
             .run();
         assert!(err.is_err());
     }

@@ -1,0 +1,259 @@
+//! `tallfatd` end-to-end: a fleet of named models behind one front door,
+//! supervised update jobs over the control protocol, and the declarative
+//! chaos scenarios the daemon exists to survive — a worker killed
+//! mid-update, GC racing a reload, a drain with a job still queued, and a
+//! restart with a job still queued. Every scenario must end with a
+//! consistent published generation and zero failed queries.
+//!
+//! Run serially (`--test-threads=1`): each test binds its own ephemeral
+//! port but shares the process-global metrics registry and thread budget.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+use tallfat::backend::native::NativeBackend;
+use tallfat::backend::BackendRef;
+use tallfat::daemon::{Daemon, DaemonClient, DaemonOptions, JobSpec, Scenario};
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::serve::json::Json;
+use tallfat::svd::Svd;
+
+fn dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("tallfat_daemon_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Factorize a small synthetic matrix into a servable model root.
+fn build_model(d: &Path, tag: &str, m: usize, n: usize, seed: u64) -> PathBuf {
+    let (a, _) = gen_exact(
+        m,
+        n,
+        3,
+        Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+        0.0,
+        seed,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join(format!("{tag}.csv")).to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let model = d.join(format!("{tag}_model"));
+    Svd::over(&spec)
+        .unwrap()
+        .rank(3)
+        .workers(2)
+        .block(32)
+        .work_dir(d.join(format!("{tag}_work")).to_string_lossy().into_owned())
+        .save_model(model.to_string_lossy().into_owned())
+        .run()
+        .unwrap();
+    model
+}
+
+/// A row batch (same width as the model) for update jobs.
+fn rows_batch(d: &Path, tag: &str, rows: usize, n: usize, seed: u64) -> String {
+    let (b, _) = gen_exact(
+        rows,
+        n,
+        3,
+        Spectrum::Geometric { scale: 4.0, decay: 0.5 },
+        0.0,
+        seed,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join(format!("{tag}.csv")).to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&b, &spec).unwrap();
+    spec.path
+}
+
+fn query(op: &str, model: &str) -> Json {
+    Json::obj(vec![("op", Json::str(op)), ("model", Json::str(model))])
+}
+
+/// The acceptance core: one daemon serves two named models concurrently,
+/// completes an update job submitted over the control protocol, and the
+/// new generation is visible to queries with no restart.
+#[test]
+fn daemon_serves_two_models_and_applies_update_live() {
+    let d = dir("two_models");
+    let alpha = build_model(&d, "alpha", 80, 10, 41);
+    let beta = build_model(&d, "beta", 60, 8, 43);
+    let rows = rows_batch(&d, "alpha_rows", 30, 10, 45);
+    let backend: BackendRef = Arc::new(NativeBackend::new());
+    let opts = DaemonOptions {
+        addr: "127.0.0.1:0".to_string(),
+        health_poll: Some(Duration::from_millis(150)),
+        ..DaemonOptions::default()
+    };
+    let daemon = Daemon::bind(d.join("state"), backend, &opts).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || daemon.run());
+    let client = DaemonClient::new(addr);
+
+    client.register("alpha", &alpha.to_string_lossy()).unwrap();
+    client.register("beta", &beta.to_string_lossy()).unwrap();
+    let list = client.list().unwrap();
+    assert_eq!(list.get("models").and_then(Json::as_array).unwrap().len(), 2);
+
+    // One ND-JSON body interleaving both models — replies in input order,
+    // each model batched on its own engine.
+    let lines = vec![
+        query("info", "alpha"),
+        Json::obj(vec![
+            ("op", Json::str("project")),
+            ("model", Json::str("beta")),
+            ("indices", Json::arr(vec![Json::num(0.0)])),
+            ("values", Json::arr(vec![Json::num(1.0)])),
+        ]),
+        query("health", "alpha"),
+        Json::obj(vec![
+            ("op", Json::str("project")),
+            ("model", Json::str("alpha")),
+            ("row", Json::from_f64s(&[0.5; 10])),
+        ]),
+    ];
+    let replies = client.call_many(&lines).unwrap();
+    for r in &replies {
+        assert_eq!(r.get("ok").and_then(Json::as_bool), Some(true), "reply: {}", r.render());
+    }
+    assert!(replies[1].get("latent").is_some(), "sparse project should return a latent");
+    assert_eq!(replies[0].get("m").and_then(Json::as_usize), Some(80));
+
+    // Update alpha over the control protocol.
+    let id = client.submit_job(&JobSpec::new("alpha", rows)).unwrap();
+    let end = client.wait_job(id, Duration::from_secs(120)).unwrap();
+    let job = end.get("job").unwrap();
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"), "{}", end.render());
+    assert_eq!(job.get("generation").and_then(Json::as_usize), Some(1));
+
+    // The publish hot-swaps into serving: generation 1 (and the grown row
+    // count) become visible to queries with no daemon restart.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let health = client.call(&query("health", "alpha")).unwrap();
+        if health.get("generation").and_then(Json::as_usize) == Some(1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "generation 1 never became visible to queries");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let info = client.call(&query("info", "alpha")).unwrap();
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(110));
+    let beta_health = client.call(&query("health", "beta")).unwrap();
+    assert_eq!(beta_health.get("generation").and_then(Json::as_usize), Some(0));
+
+    client.drain().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// Chaos: the first update attempt dies mid-pass. The supervisor must
+/// requeue it, the retry must publish, and queries must never notice.
+#[test]
+fn scenario_worker_killed_mid_update() {
+    let d = dir("worker_kill");
+    let model = build_model(&d, "movies", 80, 10, 51);
+    let rows = rows_batch(&d, "rows", 30, 10, 53);
+    let mut job = JobSpec::new("movies", rows);
+    job.chaos_fail_passes = 1;
+    let report = Scenario::new("worker_killed_mid_update")
+        .state_dir(d.join("state"))
+        .model("movies", &model)
+        .workload(2)
+        .submit_update(job)
+        .await_jobs(120)
+        .expect_all_jobs_done()
+        .expect_zero_failed_queries()
+        .expect_generation_at_least("movies", 1)
+        .run()
+        .unwrap();
+    assert_eq!(report.queries_failed, 0);
+    assert!(report.queries_ok > 0, "workload never got a query through");
+    assert_eq!(report.jobs_done, 1);
+}
+
+/// Chaos: chained updates with `keep_generations=1`, so GC deletes the
+/// old generation while the health poller is reloading under live
+/// queries. The reload retry must always land on a live generation.
+#[test]
+fn scenario_gc_races_reload() {
+    let d = dir("gc_reload");
+    let model = build_model(&d, "movies", 80, 10, 61);
+    let rows = rows_batch(&d, "rows", 25, 10, 63);
+    let mut first = JobSpec::new("movies", rows.clone());
+    first.keep_generations = 1;
+    let mut second = JobSpec::new("movies", rows);
+    second.keep_generations = 1;
+    second.seed = 19;
+    let report = Scenario::new("gc_races_reload")
+        .state_dir(d.join("state"))
+        .model("movies", &model)
+        .workload(3)
+        .health_poll_ms(100)
+        .submit_update(first)
+        .await_jobs(120)
+        .sleep_ms(300) // let the poller observe (and swap past) the GC
+        .submit_update(second)
+        .await_jobs(120)
+        .sleep_ms(300)
+        .expect_all_jobs_done()
+        .expect_zero_failed_queries()
+        .expect_generation_at_least("movies", 2)
+        .run()
+        .unwrap();
+    assert_eq!(report.queries_failed, 0);
+    assert_eq!(report.jobs_done, 2);
+    assert_eq!(report.generations["movies"], 2);
+}
+
+/// Chaos: drain arrives while a job is still queued (held by its delay).
+/// Drain must finish the queued job before the daemon exits — the new
+/// generation is on disk even though serving has stopped.
+#[test]
+fn scenario_drain_with_queued_job() {
+    let d = dir("drain_queued");
+    let model = build_model(&d, "movies", 80, 10, 71);
+    let rows = rows_batch(&d, "rows", 20, 10, 73);
+    let mut job = JobSpec::new("movies", rows);
+    job.delay_ms = 700; // still queued when the drain lands
+    let report = Scenario::new("drain_with_queued_job")
+        .state_dir(d.join("state"))
+        .model("movies", &model)
+        .workload(2)
+        .submit_update(job)
+        .drain()
+        .expect_zero_failed_queries()
+        .expect_generation_at_least("movies", 1)
+        .run()
+        .unwrap();
+    assert_eq!(report.queries_failed, 0);
+    assert_eq!(report.generations["movies"], 1);
+}
+
+/// Chaos: the daemon is halted with a job still queued. The restarted
+/// daemon must restore the fleet and the queue from its manifests and
+/// complete the job — at-least-once across process death.
+#[test]
+fn scenario_restart_with_queued_job() {
+    let d = dir("restart_queued");
+    let model = build_model(&d, "movies", 80, 10, 81);
+    let rows = rows_batch(&d, "rows", 20, 10, 83);
+    let mut job = JobSpec::new("movies", rows);
+    job.delay_ms = 60_000; // parked far past the halt; restart clears it
+    let report = Scenario::new("restart_with_queued_job")
+        .state_dir(d.join("state"))
+        .model("movies", &model)
+        .workload(2)
+        .submit_update(job)
+        .halt()
+        .restart()
+        .await_jobs(120)
+        .expect_all_jobs_done()
+        .expect_zero_failed_queries()
+        .expect_generation_at_least("movies", 1)
+        .run()
+        .unwrap();
+    assert_eq!(report.queries_failed, 0);
+    assert_eq!(report.jobs_done, 1);
+}
