@@ -1,0 +1,108 @@
+//! One-pass streaming SVD vs. the multi-pass pipeline — the perf
+//! trajectory of the `stream/` subsystem.
+//!
+//! For a fixed tall-and-fat dataset, measure (a) `StreamSvd` consuming the
+//! rows in exactly one forward pass and (b) the seekable multi-pass
+//! `Svd::over` at the same rank, and report the σ gap the single pass
+//! costs. Then sweep the batch size to chart absorb throughput (rows/s).
+//! Prints the usual table and emits `BENCH_stream.json` so the trajectory
+//! is machine-readable.
+
+mod common;
+
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::stream::StreamSvd;
+use tallfat::svd::Svd;
+
+const K: usize = 16;
+
+fn main() {
+    let smoke = common::smoke();
+    let (m, n) = if smoke { (1_500, 32) } else { (60_000, 48) };
+    let batch_sweep: &[usize] = if smoke { &[64, 256] } else { &[256, 1024, 4096, 16384] };
+    let reps = if smoke { 1 } else { 3 };
+
+    let dir = common::bench_dir("stream");
+    let spec = common::ensure_dataset(&dir, "stream", m, n, true);
+
+    let stream_run = |batch_rows: usize, tag: &str| {
+        StreamSvd::open(&spec.path)
+            .rank(K)
+            .oversample(8)
+            .seed(7)
+            .batch_rows(batch_rows)
+            .work_dir(dir.join(format!("work_stream_{tag}")).to_string_lossy().into_owned())
+            .run()
+            .unwrap()
+    };
+
+    // Head-to-head at one batch size: wall time + the σ accuracy cost of
+    // never revisiting a row.
+    let head_batch = if smoke { 256 } else { 4096 };
+    let (streamed, t_stream) = common::time_best(reps, || stream_run(head_batch, "head"));
+    let (batch, t_batch) = common::time_best(reps, || {
+        Svd::over(&spec)
+            .unwrap()
+            .rank(K)
+            .oversample(8)
+            .seed(7)
+            .workers(4)
+            .block(256)
+            .work_dir(dir.join("work_batch").to_string_lossy().into_owned())
+            .backend(Arc::new(NativeBackend::new()))
+            .run()
+            .unwrap()
+    });
+    let shared = streamed.k.min(batch.k);
+    assert!(shared > 0, "both paths must recover a nonzero rank");
+    let sigma_rel_max = (0..shared)
+        .map(|i| (streamed.sigma[i] - batch.sigma[i]).abs() / batch.sigma[i].abs().max(1e-300))
+        .fold(0.0f64, f64::max);
+
+    common::header(&format!(
+        "one-pass stream vs multi-pass svd ({m}x{n}, k={K}, batch_rows={head_batch})"
+    ));
+    println!(
+        "{:>12} {:>10} {:>12} {:>14}",
+        "mode", "time(s)", "rows/s", "sigma_rel_max"
+    );
+    println!(
+        "{:>12} {:>10.3} {:>12.0} {:>14.3e}",
+        "one_pass",
+        t_stream.as_secs_f64(),
+        common::rate(m as u64, t_stream),
+        sigma_rel_max
+    );
+    println!(
+        "{:>12} {:>10.3} {:>12.0} {:>14}",
+        "multi_pass",
+        t_batch.as_secs_f64(),
+        common::rate(m as u64, t_batch),
+        "-"
+    );
+
+    // Batch-size sweep: absorb throughput of the single forward pass.
+    common::header("stream absorb throughput by batch size");
+    println!("{:>12} {:>10} {:>12}", "batch_rows", "time(s)", "rows/s");
+    let mut sweep = Vec::new();
+    for &b in batch_sweep {
+        let (_, t) = common::time_best(reps, || stream_run(b, &format!("b{b}")));
+        let rps = common::rate(m as u64, t);
+        println!("{:>12} {:>10.3} {:>12.0}", b, t.as_secs_f64(), rps);
+        sweep.push(format!(
+            "{{\"batch_rows\":{b},\"s\":{:.6},\"rows_per_s\":{rps:.1}}}",
+            t.as_secs_f64()
+        ));
+    }
+
+    let json = format!(
+        "{{\"bench\":\"stream\",\"m\":{m},\"n\":{n},\"k\":{K},\
+         \"one_pass_s\":{:.6},\"multi_pass_s\":{:.6},\"sigma_rel_max\":{sigma_rel_max:.6e},\
+         \"sweep\":[{}]}}\n",
+        t_stream.as_secs_f64(),
+        t_batch.as_secs_f64(),
+        sweep.join(",")
+    );
+    common::write_json("stream", &json);
+}

@@ -130,6 +130,15 @@ pub struct RunConfig {
     /// default) keeps the derived width; chained `update` batches should
     /// pin the base model's n so every batch agrees.
     pub cols: usize,
+    /// Target relative residual for the adaptive streaming route
+    /// (`tallfat stream`): the sketch widens until the a posteriori
+    /// residual estimate drops below `tol`. Must be positive and finite.
+    pub tol: f64,
+    /// Rank ceiling for the adaptive streaming route (0 = the stream
+    /// default). When set it must be >= `k`.
+    pub max_rank: usize,
+    /// Rows absorbed per streaming batch (`tallfat stream`).
+    pub batch_rows: usize,
 }
 
 impl Default for RunConfig {
@@ -155,6 +164,9 @@ impl Default for RunConfig {
             chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
             chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
             cols: 0,
+            tol: crate::stream::DEFAULT_TOL,
+            max_rank: 0,
+            batch_rows: crate::stream::DEFAULT_BATCH_ROWS,
         }
     }
 }
@@ -232,6 +244,15 @@ impl RunConfig {
             if let Some(v) = file.get_usize(section, "cols")? {
                 self.cols = v;
             }
+            if let Some(v) = file.get_f64(section, "tol")? {
+                self.tol = v;
+            }
+            if let Some(v) = file.get_usize(section, "max_rank")? {
+                self.max_rank = v;
+            }
+            if let Some(v) = file.get_usize(section, "batch_rows")? {
+                self.batch_rows = v;
+            }
         }
         Ok(())
     }
@@ -283,6 +304,9 @@ impl RunConfig {
         self.chunks_per_worker = args.usize_or("chunks-per-worker", self.chunks_per_worker)?;
         self.chunk_retries = args.usize_or("chunk-retries", self.chunk_retries)?;
         self.cols = args.usize_or("cols", self.cols)?;
+        self.tol = args.f64_or("tol", self.tol)?;
+        self.max_rank = args.usize_or("max-rank", self.max_rank)?;
+        self.batch_rows = args.usize_or("batch-rows", self.batch_rows)?;
         Ok(())
     }
 
@@ -306,6 +330,7 @@ impl RunConfig {
             chunk_rows: self.chunk_rows,
             chunks_per_worker: self.chunks_per_worker,
             chunk_retries: self.chunk_retries,
+            tol: self.tol,
         }
     }
 
@@ -322,6 +347,15 @@ impl RunConfig {
                 "block must be a positive even size, got {}",
                 self.block
             )));
+        }
+        if self.max_rank != 0 && self.max_rank < self.k {
+            return Err(Error::Config(format!(
+                "max_rank ({}) must be >= k ({})",
+                self.max_rank, self.k
+            )));
+        }
+        if self.batch_rows == 0 {
+            return Err(Error::Config("batch_rows must be >= 1".into()));
         }
         self.svd_options().validate()
     }

@@ -90,7 +90,9 @@ pub fn gen_data(args: &Args) -> Result<()> {
         let (a, _) = dataset::gen_clustered(m, n, clusters, spread, seed);
         crate::io::write_matrix(&a, &spec)?;
         LOG.info(&format!("wrote {m}x{n} clustered ({clusters} clusters) to {out}"));
-    } else if args.flag("streamed") || m * n > 50_000_000 {
+    } else if out == "-" || args.flag("streamed") || m * n > 50_000_000 {
+        // `--out -` always takes the streaming generator: rows go straight
+        // to stdout (and no `.sigma` sidecar file is attempted).
         dataset::gen_streamed(&spec, m, n, rank, spectrum, noise, seed)?;
         LOG.info(&format!("streamed {m}x{n} rank~{rank} to {out}"));
     } else {
@@ -249,6 +251,72 @@ pub fn update(args: &Args) -> Result<()> {
             .join(", ")
     );
     LOG.info(&format!("update done in {:.2?} -> {}", sw.elapsed(), result.dir.display()));
+    Ok(())
+}
+
+/// `stream`: one-pass streaming SVD over a forward-only source
+/// ([`crate::stream`]). The input may be `-` (stdin), a pipe/FIFO, or a
+/// regular file; rows are read exactly once and the sketch widens
+/// adaptively until `--tol` is met or `--max-rank` is hit.
+pub fn stream(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let input = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| (!cfg.input.is_empty()).then(|| cfg.input.clone()))
+        .ok_or_else(|| {
+            Error::Config(
+                "stream: input required (positional path, `-` for stdin, or --input)".into(),
+            )
+        })?;
+    let sw = Stopwatch::start();
+    let mut builder = crate::stream::StreamSvd::open(&input)
+        .tol(cfg.tol)
+        .max_rank(cfg.max_rank)
+        .batch_rows(cfg.batch_rows)
+        .start_width(args.usize_or("start-width", crate::stream::DEFAULT_START_WIDTH)?)
+        .oversample(cfg.oversample)
+        .center(cfg.center)
+        .seed(cfg.seed)
+        .cols(cfg.cols)
+        .work_dir(&cfg.work_dir)
+        .sigma_cutoff_rel(cfg.sigma_cutoff_rel)
+        .backend(make_backend(&cfg)?)
+        .checkpoint(args.flag("checkpoint") || args.flag("resume"))
+        .resume(args.flag("resume"));
+    // The extension guess only works on real paths; `--input-format` is the
+    // explicit override (and the only way to frame stdin as anything but csv).
+    if let Some(f) = args.opt_str("input-format") {
+        builder = builder.format(InputFormat::parse(f)?);
+    }
+    let rank = args.usize_or("rank", 0)?;
+    if rank > 0 {
+        builder = builder.rank(rank);
+    }
+    if let Some(dir) = args.opt_str("save-model") {
+        builder = builder.save_model(dir);
+    }
+    let result = builder.run()?;
+    println!("{}", result.report.render());
+    let reg = crate::coordinator::server::MetricsRegistry::global();
+    println!(
+        "m={} n={} k={}  width={} widenings={} residual~{:.2e}  sigma = [{}]",
+        result.m,
+        result.n,
+        result.k,
+        reg.get("stream_width").unwrap_or(0.0) as usize,
+        reg.get("stream_widenings").unwrap_or(0.0) as usize,
+        reg.get("stream_residual").unwrap_or(f64::NAN),
+        result
+            .sigma
+            .iter()
+            .take(8)
+            .map(|s| format!("{s:.4}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    LOG.info(&format!("stream done in {:.2?}", sw.elapsed()));
     Ok(())
 }
 
@@ -512,6 +580,22 @@ mod tests {
             ]),
             false,
         )
+        .unwrap();
+    }
+
+    #[test]
+    fn stream_command_runs_end_to_end() {
+        let path = tmp("cmd_stream.csv");
+        gen_data(&argv(&[
+            "gen-data", "--out", &path, "--rows", "150", "--cols", "20", "--rank", "5",
+            "--noise", "0",
+        ]))
+        .unwrap();
+        let work = tmp("cmd_stream_work");
+        stream(&argv(&[
+            "stream", &path, "--tol", "1e-4", "--batch-rows", "40", "--start-width", "6",
+            "--work-dir", &work,
+        ]))
         .unwrap();
     }
 

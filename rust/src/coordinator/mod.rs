@@ -9,6 +9,7 @@
 //! | `gen-data` | synthetic tall-and-fat dataset generators ([`crate::io::dataset`]) |
 //! | `svd` | the randomized rank-k SVD pipeline ([`crate::svd`]) |
 //! | `exact-svd` | the small-n exact-Gram route (paper §2.0.1) |
+//! | `stream` | one-pass streaming SVD with adaptive rank over non-seekable sources ([`crate::stream`]) |
 //! | `ata` | standalone streaming `A^T A` (paper §3.1) |
 //! | `project` | standalone random projection `Y = A Ω` (paper §3.3) |
 //! | `mult` | streaming `A·B` with B from file (paper §3.2) |
@@ -40,7 +41,9 @@ COMMANDS
                   --out PATH --rows M --cols N [--rank R] [--spectrum geometric|power|lowrank]
                   [--decay D] [--noise S] [--seed S] [--streamed] [--clusters C --spread S]
                   [--density D]   (sparse outputs: a .libsvm/.scsv/.csr --out
-                   streams a ~D-fill sparse matrix instead, default 0.05)
+                   streams a ~D-fill sparse matrix instead, default 0.05;
+                   --out - streams csv rows to stdout, e.g. piped into
+                   `tallfat stream -`)
   svd           randomized rank-k SVD of a tall-and-fat file
                   --input PATH --k K [--oversample P] [--power-iters Q] [--workers W]
                   [--block B] [--seed S] [--backend native|xla|auto] [--work-dir D]
@@ -64,6 +67,20 @@ COMMANDS
                    locally and with --distributed)
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
+  stream        one-pass streaming SVD of a forward-only source
+                  <path | -> [--tol 1e-3] [--max-rank 512] [--batch-rows 1024]
+                  [--start-width 16] [--rank K] [--oversample P] [--center]
+                  [--seed S] [--cols N] [--work-dir D] [--backend ...]
+                  [--input-format csv|bin|libsvm|scsv|csr] [--save-model DIR]
+                  [--checkpoint] [--resume] [--config FILE]
+                (reads rows exactly once — stdin (`-`), pipes, FIFOs and
+                 sockets all work; the sketch starts at --start-width and
+                 widens whenever the a posteriori residual estimate exceeds
+                 --tol, up to --max-rank; --rank pins the output rank and
+                 disables widening; --checkpoint persists the sketch every
+                 batch so --resume continues a replayed stream from the last
+                 batch boundary; --save-model writes the same servable model
+                 directory the svd command does)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]
                   [--row-mode] [--backend ...] [--out PATH]
   project       random projection Y = A Ω      --input PATH --k K [--seed S] [--workers W]
@@ -105,6 +122,8 @@ COMMANDS
   daemon-client drive a running daemon         <action> [--addr 127.0.0.1:9935]
                   register --name N --root DIR | list | status
                   | submit-job --model N --rows PATH [--rank K] [--seed S]
+                      [--stream | --kind update|stream] [--tol 1e-3]
+                      [--max-rank 512] [--batch-rows 1024]
                       [--max-attempts 2] [--delay-ms 0] [--wait [--wait-secs 600]]
                   | job-status --id N | drain | halt
   serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
@@ -122,6 +141,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("gen-data") => commands::gen_data(args),
         Some("svd") => commands::svd(args, false),
         Some("exact-svd") => commands::svd(args, true),
+        Some("stream") => commands::stream(args),
         Some("ata") => commands::ata(args),
         Some("project") => commands::project(args),
         Some("mult") => commands::mult(args),

@@ -1,10 +1,13 @@
 //! Supervised background jobs: queued per model, health-probed, retried.
 //!
-//! An update job submitted over the control protocol lands in a
-//! [`JobManager`] queue. A supervisor thread starts at most one attempt per
-//! model at a time (generations are linear — two concurrent updates of one
-//! model would race the `CURRENT` pointer), watches each worker through a
-//! heartbeat the executor bumps on every pass, and:
+//! A job submitted over the control protocol lands in a [`JobManager`]
+//! queue — either a multi-pass update over a seekable row batch
+//! ([`JobKind::Update`]) or a one-pass stream over a forward-only source
+//! such as a FIFO ([`JobKind::Stream`]). A supervisor thread starts at most
+//! one attempt per model at a time (generations are linear — two concurrent
+//! updates of one model would race the `CURRENT` pointer), watches each
+//! worker through a heartbeat the executor bumps on every pass (stream
+//! attempts bump it per absorbed batch), and:
 //!
 //! * **reaps** a worker whose heartbeat goes stale (the thread is detached
 //!   — std threads cannot be killed — and the job is requeued or failed);
@@ -78,11 +81,42 @@ impl JobState {
     }
 }
 
+/// What a job does with its row source.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobKind {
+    /// Multi-pass incremental update ([`crate::update::Update`]); the rows
+    /// path must be seekable (re-read once per pass).
+    Update,
+    /// One-pass streaming append ([`crate::stream::StreamSvd`] +
+    /// [`crate::update::publish_stream_result`]); the rows path may be a
+    /// FIFO/pipe — it is read exactly once, forward only.
+    Stream,
+}
+
+impl JobKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobKind::Update => "update",
+            JobKind::Stream => "stream",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "update" => Ok(JobKind::Update),
+            "stream" => Ok(JobKind::Stream),
+            other => Err(Error::parse(format!("unknown job kind `{other}`"))),
+        }
+    }
+}
+
 /// Everything needed to run one update job against a registered model.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     /// Assigned by [`JobManager::submit`] (0 until then).
     pub id: u64,
+    /// How the rows are consumed (multi-pass update vs one-pass stream).
+    pub kind: JobKind,
     /// Registered model name the update applies to.
     pub model: String,
     /// Row-batch path; format inferred from the extension.
@@ -99,6 +133,12 @@ pub struct JobSpec {
     pub seed: u64,
     /// Generations kept on disk after publish (the GC horizon).
     pub keep_generations: usize,
+    /// Stream jobs: target residual for the adaptive range finder.
+    pub tol: f64,
+    /// Stream jobs: rank ceiling for the adaptive finder (0 = default).
+    pub max_rank: usize,
+    /// Stream jobs: rows absorbed per batch.
+    pub batch_rows: usize,
     /// Total attempts before the job is marked failed.
     pub max_attempts: usize,
     /// Chaos: fail the first attempt after this many passes (0 = off).
@@ -115,6 +155,7 @@ impl JobSpec {
     pub fn new(model: impl Into<String>, rows: impl Into<String>) -> Self {
         JobSpec {
             id: 0,
+            kind: JobKind::Update,
             model: model.into(),
             rows: rows.into(),
             rank: 0,
@@ -123,6 +164,9 @@ impl JobSpec {
             block: 64,
             seed: 17,
             keep_generations: 2,
+            tol: crate::stream::DEFAULT_TOL,
+            max_rank: 0,
+            batch_rows: crate::stream::DEFAULT_BATCH_ROWS,
             max_attempts: 2,
             chaos_fail_passes: 0,
             chaos_hang_ms: 0,
@@ -134,9 +178,13 @@ impl JobSpec {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("op", Json::str("submit-job")),
+            ("kind", Json::str(self.kind.as_str())),
             ("model", Json::str(&self.model)),
             ("rows", Json::str(&self.rows)),
             ("rank", Json::num(self.rank as f64)),
+            ("tol", Json::num(self.tol)),
+            ("max_rank", Json::num(self.max_rank as f64)),
+            ("batch_rows", Json::num(self.batch_rows as f64)),
             ("oversample", Json::num(self.oversample as f64)),
             ("workers", Json::num(self.workers as f64)),
             ("block", Json::num(self.block as f64)),
@@ -161,6 +209,14 @@ impl JobSpec {
             .and_then(Json::as_str)
             .ok_or_else(|| Error::parse("submit-job: missing `rows`"))?;
         let mut spec = JobSpec::new(model, rows);
+        if let Some(kind) = req.get("kind").and_then(Json::as_str) {
+            spec.kind = JobKind::parse(kind)?;
+        }
+        if let Some(tol) = req.get("tol") {
+            spec.tol = tol
+                .as_f64()
+                .ok_or_else(|| Error::parse("submit-job: `tol` not a number"))?;
+        }
         let usize_knob = |key: &str, into: &mut usize| -> Result<()> {
             if let Some(v) = req.get(key) {
                 *into = v
@@ -170,6 +226,8 @@ impl JobSpec {
             Ok(())
         };
         usize_knob("rank", &mut spec.rank)?;
+        usize_knob("max_rank", &mut spec.max_rank)?;
+        usize_knob("batch_rows", &mut spec.batch_rows)?;
         usize_knob("oversample", &mut spec.oversample)?;
         usize_knob("workers", &mut spec.workers)?;
         usize_knob("block", &mut spec.block)?;
@@ -606,6 +664,9 @@ fn run_attempt(
     heartbeat: Arc<Mutex<Instant>>,
     first_attempt: bool,
 ) -> Result<UpdateResult> {
+    if spec.kind == JobKind::Stream {
+        return run_stream_attempt(spec, root, heartbeat, first_attempt);
+    }
     let input =
         InputSpec { path: spec.rows.clone(), format: InputFormat::from_path(&spec.rows) };
     let mut exec = SupervisedExecutor {
@@ -628,6 +689,64 @@ fn run_attempt(
         update = update.rank(spec.rank);
     }
     update.run()
+}
+
+/// One stream-job attempt: factor the forward-only rows source in a single
+/// pass, then fold the finished factors into the model as the next
+/// generation. The per-batch progress callback doubles as the supervisor
+/// heartbeat, so a producer that stops feeding the pipe eventually trips
+/// the zombie reaper like any wedged update pass would.
+fn run_stream_attempt(
+    spec: &JobSpec,
+    root: &Path,
+    heartbeat: Arc<Mutex<Instant>>,
+    first_attempt: bool,
+) -> Result<UpdateResult> {
+    // The model's geometry pins the stream: same column dictionary, same
+    // centeredness — otherwise the merge would be between different spaces.
+    let store = crate::serve::store::ModelStore::open(root, 1)?;
+    let (n, centered) = (store.n(), store.centered());
+    drop(store);
+    // Stable per-job scratch: a retried attempt resumes from the last
+    // checkpointed batch boundary instead of starting over (the producer
+    // must replay the stream; absorbed rows are skipped, their Y shards
+    // reused from disk).
+    let work_dir = std::env::temp_dir()
+        .join(format!("tallfat_stream_job_{}_{}", std::process::id(), spec.id))
+        .to_string_lossy()
+        .into_owned();
+    let hb = heartbeat;
+    let mut builder = crate::stream::StreamSvd::open(&spec.rows)
+        .format(InputFormat::from_path(&spec.rows))
+        .tol(spec.tol)
+        .max_rank(spec.max_rank)
+        .batch_rows(spec.batch_rows)
+        .oversample(spec.oversample)
+        .cols(n)
+        .center(centered)
+        .seed(spec.seed)
+        .work_dir(&work_dir)
+        .checkpoint(true)
+        .resume(!first_attempt)
+        .progress(move |_, _| *lock_unpoisoned(&hb) = Instant::now());
+    if spec.rank > 0 {
+        builder = builder.rank(spec.rank);
+    }
+    let streamed = builder.run()?;
+    let backend: crate::backend::BackendRef =
+        Arc::new(crate::backend::native::NativeBackend::new());
+    let out = crate::update::publish_stream_result(
+        root,
+        &streamed,
+        &backend,
+        &crate::update::StreamPublish {
+            rank: (spec.rank > 0).then_some(spec.rank),
+            keep_generations: spec.keep_generations,
+            seed: Some(spec.seed),
+        },
+    )?;
+    let _ = std::fs::remove_dir_all(&work_dir);
+    Ok(out)
 }
 
 /// A [`LocalExecutor`] wrapper that (a) bumps the supervisor-visible
@@ -682,10 +801,13 @@ fn persist(path: &Path, inner: &Inner) {
 }
 
 fn job_line(spec: &JobSpec, attempts: usize) -> String {
+    // `tol` travels as f64 bits so a restart resumes with the exact value.
     format!(
-        "job\tid={}\tmodel={}\trows={}\trank={}\toversample={}\tworkers={}\tblock={}\t\
-         seed={}\tkeep_generations={}\tmax_attempts={}\tchaos_fail_passes={}\tattempts={}\n",
+        "job\tid={}\tkind={}\tmodel={}\trows={}\trank={}\toversample={}\tworkers={}\tblock={}\t\
+         seed={}\tkeep_generations={}\ttol_bits={}\tmax_rank={}\tbatch_rows={}\t\
+         max_attempts={}\tchaos_fail_passes={}\tattempts={}\n",
         spec.id,
+        spec.kind.as_str(),
         spec.model,
         spec.rows,
         spec.rank,
@@ -694,6 +816,9 @@ fn job_line(spec: &JobSpec, attempts: usize) -> String {
         spec.block,
         spec.seed,
         spec.keep_generations,
+        spec.tol.to_bits(),
+        spec.max_rank,
+        spec.batch_rows,
         spec.max_attempts,
         spec.chaos_fail_passes,
         attempts
@@ -733,7 +858,13 @@ fn load_jobs(path: &Path) -> Result<(u64, VecDeque<QueuedJob>)> {
             let bad = || Error::parse(format!("jobs manifest: bad value `{field}`"));
             match key {
                 "id" => spec.id = value.parse().map_err(|_| bad())?,
+                "kind" => spec.kind = JobKind::parse(value).map_err(|_| bad())?,
                 "model" => spec.model = value.to_string(),
+                "tol_bits" => {
+                    spec.tol = f64::from_bits(value.parse().map_err(|_| bad())?)
+                }
+                "max_rank" => spec.max_rank = value.parse().map_err(|_| bad())?,
+                "batch_rows" => spec.batch_rows = value.parse().map_err(|_| bad())?,
                 "rows" => spec.rows = value.to_string(),
                 "rank" => spec.rank = value.parse().map_err(|_| bad())?,
                 "oversample" => spec.oversample = value.parse().map_err(|_| bad())?,
@@ -837,16 +968,30 @@ mod tests {
     #[test]
     fn spec_round_trips_through_json() {
         let mut spec = JobSpec::new("movies", "/data/rows.csv");
+        spec.kind = JobKind::Stream;
         spec.rank = 5;
         spec.seed = 99;
+        spec.tol = 2.5e-4;
+        spec.max_rank = 64;
+        spec.batch_rows = 256;
         spec.chaos_fail_passes = 1;
         let parsed = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(parsed.kind, JobKind::Stream);
         assert_eq!(parsed.model, "movies");
         assert_eq!(parsed.rows, "/data/rows.csv");
         assert_eq!(parsed.rank, 5);
         assert_eq!(parsed.seed, 99);
+        assert_eq!(parsed.tol, 2.5e-4);
+        assert_eq!(parsed.max_rank, 64);
+        assert_eq!(parsed.batch_rows, 256);
         assert_eq!(parsed.chaos_fail_passes, 1);
         assert!(JobSpec::from_json(&Json::obj(vec![("op", Json::str("submit-job"))])).is_err());
+        assert!(JobSpec::from_json(&Json::obj(vec![
+            ("model", Json::str("m")),
+            ("rows", Json::str("r")),
+            ("kind", Json::str("teleport")),
+        ]))
+        .is_err());
     }
 
     #[test]
@@ -856,6 +1001,10 @@ mod tests {
         let mut spec = JobSpec::new("movies", "/data/rows.csv");
         spec.id = 4;
         spec.max_attempts = 3;
+        spec.kind = JobKind::Stream;
+        spec.tol = 7.5e-3;
+        spec.max_rank = 48;
+        spec.batch_rows = 333;
         let inner = Inner {
             queue: VecDeque::from([QueuedJob {
                 spec,
@@ -875,6 +1024,10 @@ mod tests {
         assert_eq!(queue[0].spec.id, 4);
         assert_eq!(queue[0].spec.model, "movies");
         assert_eq!(queue[0].spec.max_attempts, 3);
+        assert_eq!(queue[0].spec.kind, JobKind::Stream);
+        assert_eq!(queue[0].spec.tol, 7.5e-3, "tol must round-trip bit-exactly");
+        assert_eq!(queue[0].spec.max_rank, 48);
+        assert_eq!(queue[0].spec.batch_rows, 333);
         assert_eq!(queue[0].attempts, 1);
         let (next_id, queue) = load_jobs(&d.join("missing.manifest")).unwrap();
         assert_eq!(next_id, 1);
@@ -901,6 +1054,30 @@ mod tests {
             std::thread::sleep(Duration::from_millis(20));
         }
         assert!(jobs.wait_idle(Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn stream_job_completes_and_engine_hot_swaps() {
+        let d = dir("stream_complete");
+        let (model, rows) = fixture(&d, 29);
+        let fleet = fleet_with(&d, "m", &model);
+        let entry = fleet.get("m").unwrap();
+        assert_eq!(entry.generation(), 0);
+        let jobs = JobManager::open(fleet.clone(), &d.join("state")).unwrap();
+        let mut spec = JobSpec::new("m", rows);
+        spec.kind = JobKind::Stream;
+        spec.rank = 3;
+        spec.batch_rows = 8;
+        let id = jobs.submit(spec).unwrap();
+        let status = wait_terminal(&jobs, id, Duration::from_secs(30));
+        assert_eq!(status.state, JobState::Done, "error: {:?}", status.error);
+        assert_eq!(status.generation, Some(1));
+        assert_eq!(status.rows_added, Some(20));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while entry.generation() != 1 {
+            assert!(Instant::now() < deadline, "engine never hot-swapped");
+            std::thread::sleep(Duration::from_millis(20));
+        }
     }
 
     #[test]

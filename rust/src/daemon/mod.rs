@@ -47,6 +47,6 @@ pub mod server;
 
 pub use client::DaemonClient;
 pub use fleet::{Fleet, ModelEntry};
-pub use jobs::{JobManager, JobSpec, JobState, JobStatus};
+pub use jobs::{JobKind, JobManager, JobSpec, JobState, JobStatus};
 pub use scenario::{Expectation, Scenario, ScenarioReport, Step};
 pub use server::{daemon, daemon_client, Daemon, DaemonOptions};

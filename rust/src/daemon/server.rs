@@ -11,7 +11,7 @@
 //! | `register`   | `name`, `root`    | add a model to the fleet, persist it |
 //! | `list`       |                   | names, roots, live generations       |
 //! | `status`     |                   | uptime, fleet size, every job        |
-//! | `submit-job` | [`JobSpec`] form  | queue a supervised update job        |
+//! | `submit-job` | [`JobSpec`] form  | queue a supervised update/stream job |
 //! | `job-status` | `id`              | one job's state                      |
 //! | `drain`      |                   | stop accepting, finish queued jobs   |
 //! | `halt`       |                   | stop now; queued jobs persist        |
@@ -451,7 +451,10 @@ pub fn daemon(args: &Args) -> Result<()> {
 
 /// `daemon-client <action>`: drive a running daemon over the control
 /// protocol. Actions: `register --name N --root DIR`, `list`, `status`,
-/// `submit-job --model N --rows PATH [--rank K] [--seed S] [--wait]`,
+/// `submit-job --model N --rows PATH [--rank K] [--seed S] [--stream]
+/// [--kind update|stream] [--tol T] [--max-rank K] [--batch-rows B] [--wait]`
+/// (`--stream` / `--kind stream` reads `--rows` once, forward-only — a FIFO
+/// works — and folds the factors into the model),
 /// `job-status --id N`, `drain`, `halt`. `--addr HOST:PORT` picks the
 /// daemon (default 127.0.0.1:9935). Prints the daemon's JSON reply.
 pub fn daemon_client(args: &Args) -> Result<()> {
@@ -472,6 +475,14 @@ pub fn daemon_client(args: &Args) -> Result<()> {
         "submit-job" => {
             let mut spec =
                 JobSpec::new(args.require_str("model")?, args.require_str("rows")?);
+            if args.flag("stream") {
+                spec.kind = crate::daemon::jobs::JobKind::Stream;
+            } else if let Some(kind) = args.opt_str("kind") {
+                spec.kind = crate::daemon::jobs::JobKind::parse(kind)?;
+            }
+            spec.tol = args.f64_or("tol", spec.tol)?;
+            spec.max_rank = args.usize_or("max-rank", spec.max_rank)?;
+            spec.batch_rows = args.usize_or("batch-rows", spec.batch_rows)?;
             spec.rank = args.usize_or("rank", spec.rank)?;
             spec.oversample = args.usize_or("oversample", spec.oversample)?;
             spec.workers = args.usize_or("workers", spec.workers)?;

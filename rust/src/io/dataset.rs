@@ -113,14 +113,18 @@ pub fn gen_streamed(
     let gn = Gaussian::new(seed ^ NOISE_STREAM);
 
     let block = 1024usize;
-    let mut csv_writer: Option<std::io::BufWriter<std::fs::File>> = None;
+    let mut csv_writer: Option<std::io::BufWriter<Box<dyn std::io::Write>>> = None;
     let mut bin_writer: Option<BinMatWriter> = None;
     match spec.format {
         InputFormat::Csv => {
-            csv_writer = Some(std::io::BufWriter::with_capacity(
-                1 << 20,
-                std::fs::File::create(&spec.path)?,
-            ));
+            // `-` streams rows to stdout, so the generator can feed a pipe
+            // (`tallfat gen-data --out - | tallfat stream -`).
+            let sink: Box<dyn std::io::Write> = if spec.path == "-" {
+                Box::new(std::io::stdout())
+            } else {
+                Box::new(std::fs::File::create(&spec.path)?)
+            };
+            csv_writer = Some(std::io::BufWriter::with_capacity(1 << 20, sink));
         }
         InputFormat::Bin => {
             bin_writer = Some(BinMatWriter::create(&spec.path, n, DType::F32)?);

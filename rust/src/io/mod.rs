@@ -19,8 +19,28 @@ pub use sparse::{CsrHeader, CsrReader, CsrWriter, SparseRowReader, SparseTextRea
 pub use writer::ShardSet;
 
 use crate::config::InputFormat;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::{Matrix, SparseMatrix};
+
+/// Reject inputs the multi-pass pipeline cannot re-read: stdin (`-`),
+/// FIFOs, sockets, character devices. Every seek-and-rescan entry point
+/// (dimension scans, byte-range chunking, row estimation) calls this so a
+/// piped input fails with a pointer at the streaming route instead of a
+/// confusing I/O error or a garbage row estimate.
+pub fn ensure_seekable(path: &str) -> Result<()> {
+    if path == "-" {
+        return Err(Error::Config(
+            "input `-` (stdin) is not seekable — use `tallfat stream`".into(),
+        ));
+    }
+    let meta = std::fs::metadata(path)?;
+    if !meta.is_file() {
+        return Err(Error::Config(format!(
+            "input {path} is not seekable (pipe/FIFO/device?) — use `tallfat stream`"
+        )));
+    }
+    Ok(())
+}
 
 /// An input matrix file plus its format — what the splitproc engine reads.
 #[derive(Clone, Debug)]

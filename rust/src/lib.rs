@@ -67,10 +67,20 @@
 //! running server hot-swaps to with zero downtime (`tallfat update DIR
 //! --rows NEW.csv`, then `{"op":"reload"}` or `--reload-poll-ms`).
 //!
+//! When the rows arrive over a source that cannot be re-read — stdin, a
+//! pipe, a socket — the multi-pass schedule is off the table: [`stream`]
+//! factors such a feed in *exactly one forward pass* ([`stream::StreamSvd`]),
+//! holding only k-sized sketch accumulators and an adaptive sketch width
+//! that grows until a residual estimate meets `--tol`. The one-pass factors
+//! trade a little accuracy for never touching a row twice (exact on truly
+//! low-rank data; approximate tails otherwise), land in the same
+//! [`svd::SvdResult`] shape, and fold into a served model via
+//! [`update::publish_stream_result`] — `tallfat stream - --tol 1e-3`.
+//!
 //! [`daemon`] joins the lifecycle into one long-running control plane:
 //! `tallfat daemon` owns a *fleet* of named models (registry persisted in a
 //! manifest), routes ND-JSON queries by model name through one front door,
-//! runs update jobs as supervised background tasks (per-model queueing,
+//! runs update and stream jobs as supervised background tasks (per-model queueing,
 //! heartbeat health-probing, zombie reaping, retry, hot-swap on publish),
 //! and drains gracefully — driven by `tallfat daemon-client` over the same
 //! transport. Its [`daemon::Scenario`] harness scripts chaos cases (worker
@@ -96,6 +106,7 @@ pub mod runtime;
 pub mod serve;
 pub mod simulator;
 pub mod splitproc;
+pub mod stream;
 pub mod svd;
 pub mod update;
 pub mod util;

@@ -51,6 +51,9 @@ pub fn plan_chunks(input: &InputSpec, target: usize) -> Result<Vec<ChunkMeta>> {
     if target == 0 {
         return Err(Error::Config("chunk target must be >= 1".into()));
     }
+    // Chunk planning seeks and re-reads; a pipe/FIFO/stdin input must go
+    // through the one-pass `tallfat stream` route instead.
+    crate::io::ensure_seekable(&input.path)?;
     match input.format {
         InputFormat::Csv | InputFormat::Libsvm | InputFormat::SparseCsv => {
             let ranges = chunk_byte_ranges(&input.path, target)?;
@@ -126,6 +129,9 @@ pub fn plan_chunks_policy(
 /// and `chunk_rows` is a granularity target, not an exactness contract.
 fn estimate_rows(input: &InputSpec) -> Result<u64> {
     use std::io::BufRead;
+    // `file size / line width` is garbage on a FIFO (size 0) — fail with
+    // the streaming pointer instead.
+    crate::io::ensure_seekable(&input.path)?;
     match input.format {
         InputFormat::Bin => Ok(BinMatHeader::read_from(&input.path)?.rows),
         InputFormat::Csr => Ok(CsrHeader::read_from(&input.path)?.rows),

@@ -1,0 +1,446 @@
+//! The fluent one-pass streaming SVD driver.
+//!
+//! ```ignore
+//! use tallfat::stream::StreamSvd;
+//! let result = StreamSvd::from(reader)     // any io::Read — pipe, socket…
+//!     .tol(1e-3)
+//!     .max_rank(512)
+//!     .batch_rows(1024)
+//!     .center(true)
+//!     .run()?;                             // exactly one forward pass
+//! ```
+//!
+//! Rows are consumed in batches; each batch updates the k'-sized
+//! [`SketchState`] and writes its `Y` block to a disk shard. At every full
+//! batch boundary the a posteriori residual estimate decides whether Ω
+//! widens ([`SketchState::widen`] — state-only, rows are never revisited).
+//! At end of stream the factorization is recovered on the leader from the
+//! sketch and the `Y` shards rotate into `U` shards, yielding the same
+//! [`SvdResult`] the multi-pass routes produce — `--save-model`, `tallfat
+//! serve`, and the update/merge path all work on it unchanged.
+
+use super::checkpoint;
+use super::sketch::SketchState;
+use super::source::{Batch, StreamSource};
+use crate::backend::{native::NativeBackend, BackendRef};
+use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
+use crate::metrics::PhaseReport;
+use crate::svd::{SvdResult, DEFAULT_SIGMA_CUTOFF_REL};
+use std::io::Read;
+use std::sync::Arc;
+use std::time::Instant;
+
+enum Source {
+    Path(String),
+    Reader(Box<dyn Read + Send>),
+}
+
+/// Progress callback: `(rows_absorbed, sketch_width)` after every batch.
+pub type ProgressFn = Box<dyn FnMut(u64, usize) + Send>;
+
+/// Builder for a one-pass streaming SVD — see the module docs.
+pub struct StreamSvd {
+    source: Source,
+    format: Option<InputFormat>,
+    tol: f64,
+    max_rank: usize,
+    batch_rows: usize,
+    start_width: usize,
+    oversample: usize,
+    rank: Option<usize>,
+    center: bool,
+    seed: u64,
+    cols: usize,
+    work_dir: String,
+    backend: Option<BackendRef>,
+    sigma_cutoff_rel: f64,
+    checkpoint: bool,
+    resume: bool,
+    save_model: Option<String>,
+    progress: Option<ProgressFn>,
+}
+
+/// `StreamSvd::from(reader)` — factor any forward-only byte stream
+/// (default framing: csv; override with [`StreamSvd::format`]).
+impl<R: Read + Send + 'static> From<R> for StreamSvd {
+    fn from(reader: R) -> Self {
+        StreamSvd::with_source(Source::Reader(Box::new(reader)))
+    }
+}
+
+impl StreamSvd {
+    fn with_source(source: Source) -> Self {
+        StreamSvd {
+            source,
+            format: None,
+            tol: super::DEFAULT_TOL,
+            max_rank: 0,
+            batch_rows: super::DEFAULT_BATCH_ROWS,
+            start_width: super::DEFAULT_START_WIDTH,
+            oversample: 8,
+            rank: None,
+            center: false,
+            seed: 0,
+            cols: 0,
+            work_dir: std::env::temp_dir()
+                .join("tallfat_stream")
+                .to_string_lossy()
+                .into_owned(),
+            backend: None,
+            sigma_cutoff_rel: DEFAULT_SIGMA_CUTOFF_REL,
+            checkpoint: false,
+            resume: false,
+            save_model: None,
+            progress: None,
+        }
+    }
+
+    /// Stream from a path: `-` is stdin; a FIFO/pipe path blocks until a
+    /// producer connects. Framing defaults to the path's extension.
+    pub fn open(path: impl Into<String>) -> Self {
+        StreamSvd::with_source(Source::Path(path.into()))
+    }
+
+    /// Input framing (csv / bin / libsvm / scsv / csr).
+    pub fn format(mut self, format: InputFormat) -> Self {
+        self.format = Some(format);
+        self
+    }
+
+    /// Target relative residual for the adaptive range finder.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.tol = tol;
+        self
+    }
+
+    /// Rank ceiling for the adaptive finder (0 = [`super::DEFAULT_MAX_RANK`]).
+    pub fn max_rank(mut self, max_rank: usize) -> Self {
+        self.max_rank = max_rank;
+        self
+    }
+
+    /// Rows absorbed per batch.
+    pub fn batch_rows(mut self, batch_rows: usize) -> Self {
+        self.batch_rows = batch_rows;
+        self
+    }
+
+    /// Initial sketch width of the adaptive finder.
+    pub fn start_width(mut self, start_width: usize) -> Self {
+        self.start_width = start_width;
+        self
+    }
+
+    /// Sketch oversampling on top of the (maximum) rank.
+    pub fn oversample(mut self, oversample: usize) -> Self {
+        self.oversample = oversample;
+        self
+    }
+
+    /// Pin the output rank (disables adaptive widening; the sketch runs at
+    /// `rank + oversample` throughout — multi-pass parity mode).
+    pub fn rank(mut self, k: usize) -> Self {
+        self.rank = Some(k);
+        self
+    }
+
+    /// PCA mode: factor `A - 1μᵀ`, with μ accumulated in the same pass.
+    pub fn center(mut self, center: bool) -> Self {
+        self.center = center;
+        self
+    }
+
+    /// Ω seed (must match across resume).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pin the column dictionary width (sparse streams; required when the
+    /// factors must align with an existing model's columns).
+    pub fn cols(mut self, n: usize) -> Self {
+        self.cols = n;
+        self
+    }
+
+    /// Directory for Y/U shards and checkpoints.
+    pub fn work_dir(mut self, dir: impl Into<String>) -> Self {
+        self.work_dir = dir.into();
+        self
+    }
+
+    /// Compute backend (default: native).
+    pub fn backend(mut self, backend: BackendRef) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Relative cutoff for the sketch-stage guarded inverse.
+    pub fn sigma_cutoff_rel(mut self, cutoff: f64) -> Self {
+        self.sigma_cutoff_rel = cutoff;
+        self
+    }
+
+    /// Persist the sketch after every batch so a crashed run resumes from
+    /// the last batch boundary.
+    pub fn checkpoint(mut self, on: bool) -> Self {
+        self.checkpoint = on;
+        self
+    }
+
+    /// Resume from a checkpoint in the work dir (the source must replay
+    /// from its beginning; already-absorbed rows are skipped, their `Y`
+    /// shards are reused from disk).
+    pub fn resume(mut self, on: bool) -> Self {
+        self.resume = on;
+        self
+    }
+
+    /// Save the factors as a servable model directory after the run.
+    pub fn save_model(mut self, dir: impl Into<String>) -> Self {
+        self.save_model = Some(dir.into());
+        self
+    }
+
+    /// Per-batch progress callback `(rows_absorbed, width)` — e.g. a daemon
+    /// job heartbeat.
+    pub fn progress(mut self, f: impl FnMut(u64, usize) + Send + 'static) -> Self {
+        self.progress = Some(Box::new(f));
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.tol > 0.0 && self.tol.is_finite()) {
+            return Err(Error::Config(format!(
+                "tol must be a positive finite residual target, got {}",
+                self.tol
+            )));
+        }
+        if self.batch_rows == 0 {
+            return Err(Error::Config("batch_rows must be >= 1".into()));
+        }
+        if self.start_width == 0 {
+            return Err(Error::Config("start_width must be >= 1".into()));
+        }
+        if !(0.0..1.0).contains(&self.sigma_cutoff_rel) {
+            return Err(Error::Config(format!(
+                "sigma_cutoff_rel must be in [0, 1), got {}",
+                self.sigma_cutoff_rel
+            )));
+        }
+        if let Some(k) = self.rank {
+            if k == 0 {
+                return Err(Error::Config("rank must be >= 1".into()));
+            }
+            if self.max_rank != 0 && self.max_rank < k {
+                return Err(Error::Config(format!(
+                    "max_rank ({}) must be >= rank ({k})",
+                    self.max_rank
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the stream in one forward pass and recover the factors.
+    pub fn run(mut self) -> Result<SvdResult> {
+        self.validate()?;
+        let backend: BackendRef =
+            self.backend.take().unwrap_or_else(|| Arc::new(NativeBackend::new()));
+        let format = match (&self.source, self.format) {
+            (_, Some(f)) => f,
+            (Source::Path(p), None) if p != "-" => InputFormat::from_path(p),
+            _ => InputFormat::Csv,
+        };
+        let mut source = match self.source {
+            Source::Path(p) => StreamSource::open(&p, format)?,
+            Source::Reader(r) => StreamSource::from_reader(r, format),
+        };
+        if self.cols > 0 {
+            source.pin_cols(self.cols);
+        }
+        std::fs::create_dir_all(&self.work_dir)?;
+        crate::io::writer::sweep_stale_stages(&self.work_dir);
+        let sy = ShardSet::new(&self.work_dir, "SY", InputFormat::Bin)?;
+        let metrics = MetricsRegistry::global();
+        let mut report = PhaseReport::new();
+
+        let mut sketch: Option<SketchState> = None;
+        let mut shard_epochs: Vec<u32> = Vec::new();
+        if self.resume {
+            let t0 = Instant::now();
+            if let Some((sk, eps)) = checkpoint::load(&self.work_dir, self.seed)? {
+                source.skip_rows(sk.rows())?;
+                report.push("stream.resume_skip", t0.elapsed(), sk.rows(), 0);
+                shard_epochs = eps;
+                sketch = Some(sk);
+            }
+        } else {
+            checkpoint::clear(&self.work_dir);
+        }
+
+        let max_rank_eff = if self.max_rank == 0 {
+            super::DEFAULT_MAX_RANK
+        } else {
+            self.max_rank
+        };
+        // For dense streams the sketch never needs to be wider than n; a
+        // sparse dictionary can still grow, so it stays unclamped there.
+        let mut dense_cols: Option<usize> = None;
+
+        loop {
+            let t0 = Instant::now();
+            let Some(batch) = source.next_batch(self.batch_rows)? else { break };
+            let full = batch.rows() == self.batch_rows;
+            if matches!(batch, Batch::Dense(_)) {
+                dense_cols = Some(batch.cols());
+            }
+            if sketch.is_none() {
+                let clamp = |w: usize| match dense_cols {
+                    Some(n) => w.min(n).max(1),
+                    None => w.max(1),
+                };
+                let width = match self.rank {
+                    Some(k) => clamp(k + self.oversample),
+                    None => clamp(self.start_width.min(max_rank_eff + self.oversample)),
+                };
+                sketch = Some(SketchState::new(self.seed, batch.cols(), width));
+            }
+            let sk = sketch.as_mut().expect("sketch initialized above");
+            let y = match &batch {
+                Batch::Dense(a) => sk.absorb_dense(a, backend.as_ref())?,
+                Batch::Sparse(a) => sk.absorb_sparse(a, backend.as_ref())?,
+            };
+            report.push("stream.absorb", t0.elapsed(), batch.rows() as u64, 0);
+
+            let t0 = Instant::now();
+            let idx = shard_epochs.len();
+            let mut w = sy.open_writer(idx, y.cols())?;
+            for i in 0..y.rows() {
+                w.write_row(y.row(i))?;
+            }
+            w.finish()?;
+            shard_epochs.push(sk.current_epoch() as u32);
+            report.push("stream.shard_y", t0.elapsed(), y.rows() as u64, 0);
+
+            metrics.set("stream_rows", sk.rows() as f64);
+            metrics.add("stream_batches", 1.0);
+            metrics.set("stream_width", sk.width() as f64);
+
+            // Adaptive widening: only when rank isn't pinned, the batch was
+            // full (more rows are plausible), and headroom remains. Never at
+            // EOF — widening after the last row buys nothing.
+            if self.rank.is_none() && full {
+                let max_w = match dense_cols {
+                    Some(n) => (max_rank_eff + self.oversample).min(n),
+                    None => max_rank_eff + self.oversample,
+                };
+                if sk.width() < max_w {
+                    let t0 = Instant::now();
+                    let rel =
+                        sk.residual(self.center, self.sigma_cutoff_rel, backend.as_ref())?;
+                    metrics.set("stream_residual", rel);
+                    report.push("stream.residual", t0.elapsed(), 0, 0);
+                    if rel > self.tol {
+                        let add = sk.width().min(max_w - sk.width());
+                        let t0 = Instant::now();
+                        sk.widen(add, self.sigma_cutoff_rel, backend.as_ref())?;
+                        metrics.add("stream_widenings", 1.0);
+                        metrics.set("stream_width", sk.width() as f64);
+                        report.push("stream.widen", t0.elapsed(), add as u64, 0);
+                    }
+                }
+            }
+            if self.checkpoint {
+                let t0 = Instant::now();
+                checkpoint::save(&self.work_dir, sk, &shard_epochs)?;
+                report.push("stream.checkpoint", t0.elapsed(), 0, 0);
+            }
+            if let Some(cb) = self.progress.as_mut() {
+                cb(sk.rows(), sk.width());
+            }
+        }
+
+        let sk = sketch
+            .ok_or_else(|| Error::Other("stream ended before any rows arrived".into()))?;
+
+        let t0 = Instant::now();
+        let rec = sk.finish(
+            self.center,
+            self.rank,
+            self.tol,
+            max_rank_eff,
+            self.sigma_cutoff_rel,
+            backend.as_ref(),
+        )?;
+        report.push("leader.recover", t0.elapsed(), sk.width() as u64, 0);
+        metrics.set("stream_k", rec.k as f64);
+        metrics.set("stream_residual", rec.residual);
+
+        // Rotate the k'-wide Y shards into k-wide U shards:
+        // u = y · rotations[epoch] - shifts[epoch].
+        let t0 = Instant::now();
+        let u_set = ShardSet::new(&self.work_dir, "U", InputFormat::Bin)?;
+        let mut rotated_rows = 0u64;
+        for (i, &ep) in shard_epochs.iter().enumerate() {
+            let rot = &rec.rotations[ep as usize];
+            let shift = &rec.shifts[ep as usize];
+            let mut r = sy.open_reader(i)?;
+            let mut w = u_set.open_writer(i, rec.k)?;
+            let mut row = Vec::new();
+            let mut u_row = vec![0.0; rec.k];
+            while r.next_row(&mut row)? {
+                if row.len() != rot.rows() {
+                    return Err(Error::shape(format!(
+                        "Y shard {i} row has {} cols, epoch {ep} rotation expects {}",
+                        row.len(),
+                        rot.rows()
+                    )));
+                }
+                for (u, &s) in u_row.iter_mut().zip(shift.iter()) {
+                    *u = -s;
+                }
+                for (p, &yv) in row.iter().enumerate() {
+                    if yv == 0.0 {
+                        continue;
+                    }
+                    for (u, &rv) in u_row.iter_mut().zip(rot.row(p)) {
+                        *u += yv * rv;
+                    }
+                }
+                w.write_row(&u_row)?;
+                rotated_rows += 1;
+            }
+            w.finish()?;
+        }
+        report.push("stream.rotate_u", t0.elapsed(), rotated_rows, 0);
+        if rotated_rows != sk.rows() {
+            return Err(Error::Other(format!(
+                "Y shards held {rotated_rows} rows, sketch absorbed {}",
+                sk.rows()
+            )));
+        }
+
+        sy.cleanup(shard_epochs.len());
+        checkpoint::clear(&self.work_dir);
+
+        let result = SvdResult {
+            m: sk.rows() as usize,
+            n: sk.cols(),
+            k: rec.k,
+            sigma: rec.sigma,
+            v: Some(rec.v),
+            u_shards: u_set,
+            shards: shard_epochs.len(),
+            means: rec.means,
+            report,
+        };
+        if let Some(dir) = &self.save_model {
+            result.save_model(dir, Some(self.seed))?;
+        }
+        Ok(result)
+    }
+}

@@ -1,0 +1,242 @@
+//! Sketch-state checkpointing: resume a stream from the last batch boundary.
+//!
+//! A checkpoint is the full [`SketchState`] (G, W, per-epoch statistics)
+//! plus the shard registry (which on-disk `SY` shard belongs to which
+//! epoch) — everything needed to continue absorbing rows as if the process
+//! had never died. The `Y` shards themselves are already durable (staged
+//! writes, atomic rename), so a resume re-reads nothing it already has.
+//!
+//! Layout under the work dir, all binmat (bit-exact f64):
+//!
+//! ```text
+//! stream.ckpt            key=value manifest, written last via tmp+rename
+//! ckpt-G.bin ckpt-W.bin  the two accumulators
+//! ckpt-ep<e>-cs.bin      epoch e column sums       (1 x n)
+//! ckpt-ep<e>-sy.bin      epoch e sketch-row sum    (1 x width)
+//! ckpt-ep<e>-map.bin     epoch e extension map     (w_e x width, closed only)
+//! ```
+//!
+//! The manifest is the commit record: matrices are written (tmp + rename)
+//! first, the manifest last, so a crash mid-checkpoint leaves the previous
+//! complete checkpoint intact. `fro2` travels as `f64::to_bits` so the
+//! resumed accumulator is bit-identical.
+//!
+//! On resume the *source* must be replayed to the checkpointed row count:
+//! a regular file is simply re-read and skipped ([`super::StreamSource::skip_rows`]);
+//! a pipe or socket needs its producer to restart from the beginning (or
+//! from the last acknowledged batch) — the checkpoint records how many rows
+//! are already absorbed either way.
+
+use super::sketch::{Epoch, SketchState};
+use crate::error::{Error, Result};
+use crate::io::binmat::{read_matrix_bin, write_matrix_bin};
+use crate::io::manifest::KvManifest;
+use crate::linalg::Matrix;
+use std::path::Path;
+
+const MANIFEST: &str = "stream.ckpt";
+
+fn path_of(dir: &str, name: &str) -> String {
+    Path::new(dir).join(name).to_string_lossy().into_owned()
+}
+
+/// Write a matrix atomically (tmp sibling + rename).
+fn write_atomic(m: &Matrix, path: &str) -> Result<()> {
+    let tmp = format!("{path}.tmp-{}", std::process::id());
+    write_matrix_bin(m, &tmp)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+fn row_matrix(v: &[f64]) -> Matrix {
+    Matrix::from_fn(1, v.len().max(1), |_, j| v.get(j).copied().unwrap_or(0.0))
+}
+
+/// Persist the sketch and shard registry under `dir`.
+pub fn save(dir: &str, sketch: &SketchState, shard_epochs: &[u32]) -> Result<()> {
+    write_atomic(&sketch.g, &path_of(dir, "ckpt-G.bin"))?;
+    write_atomic(&sketch.w, &path_of(dir, "ckpt-W.bin"))?;
+    for (e, ep) in sketch.epochs.iter().enumerate() {
+        write_atomic(&row_matrix(&ep.colsums), &path_of(dir, &format!("ckpt-ep{e}-cs.bin")))?;
+        write_atomic(&row_matrix(&ep.s_y), &path_of(dir, &format!("ckpt-ep{e}-sy.bin")))?;
+        if let Some(map) = &ep.map {
+            write_atomic(map, &path_of(dir, &format!("ckpt-ep{e}-map.bin")))?;
+        }
+    }
+    let mut m = KvManifest::new();
+    m.set("version", 1);
+    m.set("seed", sketch.seed);
+    m.set("rows", sketch.rows);
+    m.set("n", sketch.n);
+    m.set("width", sketch.width);
+    m.set("fro2_bits", sketch.fro2.to_bits());
+    m.set("epochs", sketch.epochs.len());
+    for (e, ep) in sketch.epochs.iter().enumerate() {
+        m.set(&format!("epoch{e}_width"), ep.width);
+        m.set(&format!("epoch{e}_rows"), ep.rows);
+    }
+    let eps: Vec<String> = shard_epochs.iter().map(|e| e.to_string()).collect();
+    m.set("shards", shard_epochs.len());
+    m.set("shard_epochs", eps.join(","));
+    let dst = path_of(dir, MANIFEST);
+    let tmp = format!("{dst}.tmp-{}", std::process::id());
+    m.save(&tmp)?;
+    std::fs::rename(&tmp, &dst)?;
+    Ok(())
+}
+
+/// Load a checkpoint if one exists. `seed` must match the checkpointed Ω
+/// seed — a different seed means the on-disk sketch belongs to a different
+/// projection and silently mixing them would corrupt the factors.
+pub fn load(dir: &str, seed: u64) -> Result<Option<(SketchState, Vec<u32>)>> {
+    let manifest_path = path_of(dir, MANIFEST);
+    if !Path::new(&manifest_path).exists() {
+        return Ok(None);
+    }
+    let m = KvManifest::load(&manifest_path)?;
+    let ck_seed = m
+        .get_u64("seed")?
+        .ok_or_else(|| Error::parse("checkpoint: missing seed"))?;
+    if ck_seed != seed {
+        return Err(Error::Config(format!(
+            "checkpoint in {dir} was written with seed {ck_seed}, run uses seed {seed} — \
+             pass the original seed or clear the work dir"
+        )));
+    }
+    let rows = m
+        .get_u64("rows")?
+        .ok_or_else(|| Error::parse("checkpoint: missing rows"))?;
+    let n = m.require_usize("n")?;
+    let width = m.require_usize("width")?;
+    let fro2 = f64::from_bits(
+        m.get_u64("fro2_bits")?
+            .ok_or_else(|| Error::parse("checkpoint: missing fro2_bits"))?,
+    );
+    let g = read_matrix_bin(&path_of(dir, "ckpt-G.bin"))?;
+    let w = read_matrix_bin(&path_of(dir, "ckpt-W.bin"))?;
+    if g.shape() != (width, width) || w.shape() != (n, width) {
+        return Err(Error::shape(format!(
+            "checkpoint: G {:?} / W {:?} disagree with manifest ({n}, {width})",
+            g.shape(),
+            w.shape()
+        )));
+    }
+    let n_epochs = m.require_usize("epochs")?;
+    let mut epochs = Vec::with_capacity(n_epochs);
+    for e in 0..n_epochs {
+        let ep_width = m.require_usize(&format!("epoch{e}_width"))?;
+        let ep_rows = m
+            .get_u64(&format!("epoch{e}_rows"))?
+            .ok_or_else(|| Error::parse(format!("checkpoint: missing epoch{e}_rows")))?;
+        let cs = read_matrix_bin(&path_of(dir, &format!("ckpt-ep{e}-cs.bin")))?;
+        let sy = read_matrix_bin(&path_of(dir, &format!("ckpt-ep{e}-sy.bin")))?;
+        let mut colsums = cs.row(0).to_vec();
+        colsums.resize(n, 0.0); // a 0-col epoch serializes as 1x1
+        let mut s_y = sy.row(0).to_vec();
+        s_y.resize(width, 0.0);
+        let map_path = path_of(dir, &format!("ckpt-ep{e}-map.bin"));
+        let map = if e + 1 < n_epochs {
+            Some(read_matrix_bin(&map_path)?)
+        } else {
+            None
+        };
+        epochs.push(Epoch { width: ep_width, rows: ep_rows, colsums, s_y, map });
+    }
+    let shard_epochs: Vec<u32> = m
+        .require_usize_list("shard_epochs")
+        .map(|v| v.into_iter().map(|e| e as u32).collect())
+        .or_else(|_| {
+            // A zero-shard checkpoint renders as an empty value.
+            if m.require_usize("shards")? == 0 {
+                Ok(Vec::new())
+            } else {
+                Err(Error::parse("checkpoint: bad shard_epochs"))
+            }
+        })?;
+    if shard_epochs.iter().any(|&e| e as usize >= n_epochs) {
+        return Err(Error::parse("checkpoint: shard references unknown epoch"));
+    }
+    Ok(Some((
+        SketchState::from_parts(seed, fro2, rows, g, w, epochs),
+        shard_epochs,
+    )))
+}
+
+/// Remove all checkpoint files under `dir` (best effort, e.g. after a
+/// successful run or an explicit fresh start).
+pub fn clear(dir: &str) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name == MANIFEST || name.starts_with("ckpt-") {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+
+    fn tmp_dir(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_stream_ckpt").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn roundtrip_preserves_sketch_bit_exactly() {
+        let be = NativeBackend::new();
+        let a = Matrix::from_fn(30, 12, |i, j| ((i * 31 + j * 7) % 13) as f64 - 6.0);
+        let mut sk = SketchState::new(17, 12, 5);
+        sk.absorb_dense(&a.slice_rows(0, 15), &be).unwrap();
+        sk.widen(3, 1e-7, &be).unwrap();
+        sk.absorb_dense(&a.slice_rows(15, 30), &be).unwrap();
+
+        let dir = tmp_dir("roundtrip");
+        save(&dir, &sk, &[0, 1]).unwrap();
+        let (back, shard_epochs) = load(&dir, 17).unwrap().unwrap();
+        assert_eq!(shard_epochs, vec![0, 1]);
+        assert_eq!(back.rows(), sk.rows());
+        assert_eq!(back.width(), sk.width());
+        assert_eq!(back.cols(), sk.cols());
+        assert_eq!(back.g.max_abs_diff(&sk.g), 0.0);
+        assert_eq!(back.w.max_abs_diff(&sk.w), 0.0);
+        assert_eq!(back.epochs.len(), 2);
+        assert_eq!(back.epochs[0].rows, 15);
+        assert_eq!(back.epochs[0].s_y, sk.epochs[0].s_y);
+        assert_eq!(back.epochs[0].colsums, sk.epochs[0].colsums);
+        assert_eq!(
+            back.epochs[0]
+                .map
+                .as_ref()
+                .unwrap()
+                .max_abs_diff(sk.epochs[0].map.as_ref().unwrap()),
+            0.0
+        );
+        assert!(back.epochs[1].map.is_none());
+
+        // Resumed absorption continues identically.
+        let mut again = back;
+        let extra = Matrix::from_fn(5, 12, |i, j| (i + j) as f64);
+        let y1 = again.absorb_dense(&extra, &be).unwrap();
+        let y2 = sk.absorb_dense(&extra, &be).unwrap();
+        assert_eq!(y1.max_abs_diff(&y2), 0.0);
+        assert_eq!(again.g.max_abs_diff(&sk.g), 0.0);
+    }
+
+    #[test]
+    fn missing_checkpoint_is_none_and_seed_mismatch_errors() {
+        let dir = tmp_dir("missing");
+        assert!(load(&dir, 1).unwrap().is_none());
+        let sk = SketchState::new(5, 4, 3);
+        save(&dir, &sk, &[]).unwrap();
+        assert!(load(&dir, 6).is_err(), "seed mismatch must refuse to resume");
+        assert!(load(&dir, 5).unwrap().is_some());
+        clear(&dir);
+        assert!(load(&dir, 5).unwrap().is_none());
+    }
+}

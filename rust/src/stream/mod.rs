@@ -1,0 +1,77 @@
+//! One-pass streaming SVD over non-seekable sources.
+//!
+//! Every multi-pass route in [`crate::svd`] re-reads the input (projection,
+//! U recovery, power iterations), so `Svd::over` requires a seekable file.
+//! This module factorizes from a *single forward pass* — stdin, a pipe, a
+//! socket, or any [`std::io::Read`] — using the Halko–Martinsson–Tropp
+//! one-pass sketch (arXiv 0909.4061 §5.5):
+//!
+//! ```text
+//! per batch   Y_b = A_b Ω           k'-wide projection of the batch rows
+//!             G  += Y_bᵀ Y_b        k' x k'   (= YᵀY over all rows)
+//!             W  += A_bᵀ Y_b        n  x k'   (= AᵀY)
+//!             Y_b → shard on disk   (k'-wide rows, never the input rows)
+//! finish      eigh(G) → M = V_y Σ_y⁻¹;  Wp = W M  (≡ AᵀU0, U0 = Y M)
+//!             eigh(WpᵀWp) → σ, P;  V = Wp P Σ⁻¹;  U rows = y (M P) per shard
+//! ```
+//!
+//! With the same seed and sketch width this recovers *exactly* the factors
+//! of the multi-pass randomized route at `power_iters = 0` — the shared
+//! leader math is identical; only where `AᵀU0` comes from differs
+//! (`(AᵀY)M` here, a second pass there).
+//!
+//! ## Adaptive rank
+//!
+//! The sketch width is not guessed up front: [`StreamSvd`] starts narrow
+//! and monitors the a posteriori residual estimate
+//! `‖A − U0U0ᵀA‖_F² = ‖A‖_F² − ‖W M‖_F²` at every batch boundary (the
+//! adaptive range-finder idea of arXiv 1607.01649). While the relative
+//! residual exceeds `tol` and rows keep arriving, Ω is widened — *reusing
+//! the accumulated sketch state, never the rows*: already-seen rows'
+//! contribution to the new columns is reconstructed through the current
+//! basis (`Y_new ≈ Y·M Mᵀ WᵀΩ_add`), and rows that arrive after the
+//! widening are projected against the wider Ω exactly. Per-epoch extension
+//! maps keep the on-disk Y shards (written at their epoch's width)
+//! convertible to the final width at recovery time.
+//!
+//! ## Accuracy trade-off
+//!
+//! One pass costs accuracy relative to the multi-pass routes: rows seen
+//! *before* a widening only contribute to the new sketch columns through
+//! the basis captured so far, and there is no power iteration. For spectra
+//! with decent decay the σ error is within the residual target; for flat
+//! spectra prefer the multi-pass `tallfat svd` with `--power-iters`.
+//! `benches/bench_stream.rs` quantifies the gap.
+//!
+//! ## Centering (PCA mode)
+//!
+//! Column means are accumulated during the same single pass and applied as
+//! exact rank-1 corrections to `G`, `W` and the Frobenius mass at
+//! estimate/recovery time — no extra pass, no densified rows.
+//!
+//! Wired end to end: `tallfat stream` (CLI), a `stream` daemon job kind
+//! that merges the factors into a served model as a new generation
+//! ([`crate::update::merge_factored`]), sketch-state checkpointing for
+//! resume at the last batch boundary ([`checkpoint`]), and `stream_*`
+//! gauges in the metrics registry.
+
+pub mod builder;
+pub mod checkpoint;
+pub mod sketch;
+pub mod source;
+
+pub use builder::StreamSvd;
+pub use sketch::SketchState;
+pub use source::{Batch, StreamSource};
+
+/// Default relative residual target for the adaptive range finder.
+pub const DEFAULT_TOL: f64 = 1e-3;
+
+/// Default rank ceiling when neither `--max-rank` nor `--k` is given.
+pub const DEFAULT_MAX_RANK: usize = 512;
+
+/// Default rows per absorbed batch.
+pub const DEFAULT_BATCH_ROWS: usize = 1024;
+
+/// Default initial sketch width of the adaptive finder.
+pub const DEFAULT_START_WIDTH: usize = 16;

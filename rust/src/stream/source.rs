@@ -1,0 +1,522 @@
+//! Forward-only row sources: batch readers over any [`Read`] in the four
+//! input framings (csv / binmat / libsvm / csr-stream).
+//!
+//! Unlike the seekable readers in [`crate::io`], nothing here seeks, stats
+//! the file, or reads anything twice — a pipe, a socket, or stdin works.
+//! Binary headers are parsed from the byte stream itself; the binmat row
+//! count is treated as advisory (a piped writer may not have back-patched
+//! it), rows are read until EOF and a torn trailing row is an error.
+//!
+//! Sparse text streams keep a *persistent column dictionary*: the width is
+//! the running max column index + 1 across every batch seen so far (or the
+//! pinned `--cols` width), so later batches can reference columns earlier
+//! batches never touched.
+
+use crate::config::InputFormat;
+use crate::error::{Error, Result};
+use crate::io::binmat::DType;
+use crate::io::csv::parse_row_bytes;
+use crate::io::sparse::{parse_libsvm_row, parse_sparse_csv_row};
+use crate::linalg::{Matrix, SparseMatrix};
+use std::io::{BufRead, BufReader, Read};
+
+/// One absorbed batch of rows.
+pub enum Batch {
+    /// Dense rows (csv / binmat framing).
+    Dense(Matrix),
+    /// Sparse CSR rows (libsvm / sparse-csv / csr framing); `cols()` is the
+    /// column dictionary width as of this batch.
+    Sparse(SparseMatrix),
+}
+
+impl Batch {
+    /// Rows in the batch.
+    pub fn rows(&self) -> usize {
+        match self {
+            Batch::Dense(a) => a.rows(),
+            Batch::Sparse(a) => a.rows(),
+        }
+    }
+
+    /// Column count as of this batch.
+    pub fn cols(&self) -> usize {
+        match self {
+            Batch::Dense(a) => a.cols(),
+            Batch::Sparse(a) => a.cols(),
+        }
+    }
+}
+
+/// Per-format framing state.
+enum Framing {
+    /// `;`-separated dense text; width fixed by the first row.
+    Csv,
+    /// binmat: header parsed, then fixed-size rows until EOF.
+    Bin { cols: usize, dtype: DType, row_buf: Vec<u8> },
+    /// libsvm / sparse-csv text.
+    SparseText(InputFormat),
+    /// CSR: header + indptr parsed, then per-row payloads.
+    Csr { row_nnz: Vec<u64>, next: usize },
+}
+
+/// A forward-only batch reader over any byte stream.
+pub struct StreamSource {
+    reader: BufReader<Box<dyn Read + Send>>,
+    format: InputFormat,
+    framing: Option<Framing>,
+    /// Current column-dictionary width (running max for sparse text).
+    cols: usize,
+    /// Pinned width (`--cols`): indices at or past it are an error.
+    cols_pin: usize,
+    rows_read: u64,
+    line_buf: Vec<u8>,
+}
+
+impl StreamSource {
+    /// Open a path: `-` is stdin; anything else is `File::open`, which on
+    /// a FIFO blocks until a writer appears — exactly the pipe semantics
+    /// the daemon's stream jobs rely on.
+    pub fn open(path: &str, format: InputFormat) -> Result<Self> {
+        let reader: Box<dyn Read + Send> = if path == "-" {
+            Box::new(std::io::stdin())
+        } else {
+            Box::new(std::fs::File::open(path).map_err(|e| {
+                Error::Other(format!("cannot open stream input {path}: {e}"))
+            })?)
+        };
+        Ok(Self::from_reader(reader, format))
+    }
+
+    /// Wrap an arbitrary byte stream.
+    pub fn from_reader(reader: Box<dyn Read + Send>, format: InputFormat) -> Self {
+        StreamSource {
+            reader: BufReader::with_capacity(1 << 20, reader),
+            format,
+            framing: None,
+            cols: 0,
+            cols_pin: 0,
+            rows_read: 0,
+            line_buf: Vec::with_capacity(4096),
+        }
+    }
+
+    /// Pin the column dictionary width (0 = derive from the stream).
+    pub fn pin_cols(&mut self, n: usize) {
+        self.cols_pin = n;
+        if n > 0 {
+            self.cols = self.cols.max(n);
+        }
+    }
+
+    /// Rows handed out so far.
+    pub fn rows_read(&self) -> u64 {
+        self.rows_read
+    }
+
+    /// Current column-dictionary width (0 before the first row).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Read and discard `n` rows (checkpoint-resume replay over a source
+    /// that restarts from the beginning, e.g. a regular file).
+    pub fn skip_rows(&mut self, n: u64) -> Result<()> {
+        let mut skipped = 0u64;
+        while skipped < n {
+            let want = (n - skipped).min(4096) as usize;
+            let Some(batch) = self.next_batch(want)? else {
+                return Err(Error::Other(format!(
+                    "stream ended after {skipped} rows while skipping {n} \
+                     checkpointed rows — source shorter than the checkpoint"
+                )));
+            };
+            skipped += batch.rows() as u64;
+        }
+        Ok(())
+    }
+
+    /// Read up to `max_rows` rows; `None` at a clean end of stream.
+    pub fn next_batch(&mut self, max_rows: usize) -> Result<Option<Batch>> {
+        debug_assert!(max_rows > 0);
+        self.prime()?;
+        let batch = match self.format {
+            InputFormat::Csv | InputFormat::Bin => self.next_dense(max_rows)?,
+            _ => self.next_sparse(max_rows)?,
+        };
+        if let Some(b) = &batch {
+            self.rows_read += b.rows() as u64;
+        }
+        Ok(batch)
+    }
+
+    /// Parse the framing header on first use.
+    fn prime(&mut self) -> Result<()> {
+        if self.framing.is_some() {
+            return Ok(());
+        }
+        let framing = match self.format {
+            InputFormat::Csv => Framing::Csv,
+            InputFormat::Libsvm | InputFormat::SparseCsv => Framing::SparseText(self.format),
+            InputFormat::Bin => {
+                let mut buf = [0u8; 32];
+                self.reader.read_exact(&mut buf)?;
+                if &buf[0..4] != crate::io::binmat::MAGIC {
+                    return Err(Error::parse("stream: bad binmat magic"));
+                }
+                let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+                if version != crate::io::binmat::VERSION {
+                    return Err(Error::parse(format!(
+                        "stream: unsupported binmat version {version}"
+                    )));
+                }
+                let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+                let dtype = match buf[24] {
+                    1 => DType::F32,
+                    2 => DType::F64,
+                    other => return Err(Error::parse(format!("stream: bad dtype {other}"))),
+                };
+                if cols == 0 {
+                    return Err(Error::parse("stream: binmat header has 0 cols"));
+                }
+                self.set_dense_cols(cols)?;
+                // header `rows` is advisory on a pipe (a streaming writer
+                // back-patches it at finish, which a pipe never sees) —
+                // rows are read until EOF instead.
+                Framing::Bin { cols, dtype, row_buf: vec![0u8; cols * dtype.size()] }
+            }
+            InputFormat::Csr => {
+                let mut buf = [0u8; 32];
+                self.reader.read_exact(&mut buf)?;
+                if &buf[0..4] != crate::io::sparse::CSR_MAGIC {
+                    return Err(Error::parse("stream: bad csr magic"));
+                }
+                let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
+                if version != crate::io::sparse::CSR_VERSION {
+                    return Err(Error::parse(format!(
+                        "stream: unsupported csr version {version}"
+                    )));
+                }
+                let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+                let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+                if self.cols_pin > 0 && cols > self.cols_pin {
+                    return Err(Error::Config(format!(
+                        "stream: csr header width {cols} exceeds the pinned --cols {}",
+                        self.cols_pin
+                    )));
+                }
+                self.cols = self.cols.max(cols);
+                // indptr: (rows + 1) u64s, read sequentially.
+                let mut ip = vec![0u8; 8];
+                let mut indptr = Vec::with_capacity(rows + 1);
+                for _ in 0..=rows {
+                    self.reader.read_exact(&mut ip)?;
+                    indptr.push(u64::from_le_bytes(ip[..].try_into().unwrap()));
+                }
+                let row_nnz = indptr.windows(2).map(|w| w[1].saturating_sub(w[0])).collect();
+                Framing::Csr { row_nnz, next: 0 }
+            }
+        };
+        self.framing = Some(framing);
+        Ok(())
+    }
+
+    fn set_dense_cols(&mut self, cols: usize) -> Result<()> {
+        if self.cols_pin > 0 && cols != self.cols_pin {
+            return Err(Error::Config(format!(
+                "stream: dense row width {cols} disagrees with the pinned --cols {}",
+                self.cols_pin
+            )));
+        }
+        self.cols = cols;
+        Ok(())
+    }
+
+    fn next_dense(&mut self, max_rows: usize) -> Result<Option<Batch>> {
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        let mut row = Vec::new();
+        while rows.len() < max_rows {
+            match self.framing.as_mut().expect("primed") {
+                Framing::Csv => {
+                    self.line_buf.clear();
+                    let n = self.reader.read_until(b'\n', &mut self.line_buf)?;
+                    if n == 0 {
+                        break;
+                    }
+                    if parse_row_bytes(&self.line_buf, &mut row)? == 0 {
+                        continue; // blank line
+                    }
+                    if self.cols == 0 {
+                        // Inline of set_dense_cols (the framing borrow is live).
+                        if self.cols_pin > 0 && row.len() != self.cols_pin {
+                            return Err(Error::Config(format!(
+                                "stream: dense row width {} disagrees with the pinned --cols {}",
+                                row.len(),
+                                self.cols_pin
+                            )));
+                        }
+                        self.cols = row.len();
+                    } else if row.len() != self.cols {
+                        return Err(Error::parse(format!(
+                            "stream: ragged csv row {} ({} cols, expected {})",
+                            self.rows_read + rows.len() as u64,
+                            row.len(),
+                            self.cols
+                        )));
+                    }
+                    rows.push(row.clone());
+                }
+                Framing::Bin { cols, dtype, row_buf } => {
+                    match read_full(&mut self.reader, row_buf)? {
+                        0 => break, // clean EOF at a row boundary
+                        n if n == row_buf.len() => {}
+                        n => {
+                            return Err(Error::parse(format!(
+                                "stream: torn binmat row ({n} of {} bytes)",
+                                row_buf.len()
+                            )))
+                        }
+                    }
+                    row.clear();
+                    match dtype {
+                        DType::F32 => {
+                            for c in row_buf.chunks_exact(4) {
+                                row.push(f32::from_le_bytes(c.try_into().unwrap()) as f64);
+                            }
+                        }
+                        DType::F64 => {
+                            for c in row_buf.chunks_exact(8) {
+                                row.push(f64::from_le_bytes(c.try_into().unwrap()));
+                            }
+                        }
+                    }
+                    debug_assert_eq!(row.len(), *cols);
+                    rows.push(row.clone());
+                }
+                _ => unreachable!("dense framing"),
+            }
+        }
+        if rows.is_empty() {
+            return Ok(None);
+        }
+        Ok(Some(Batch::Dense(Matrix::from_rows(&rows)?)))
+    }
+
+    fn next_sparse(&mut self, max_rows: usize) -> Result<Option<Batch>> {
+        let mut parsed: Vec<(Vec<u32>, Vec<f64>)> = Vec::new();
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        while parsed.len() < max_rows {
+            let got = match self.framing.as_mut().expect("primed") {
+                Framing::SparseText(fmt) => {
+                    self.line_buf.clear();
+                    let n = self.reader.read_until(b'\n', &mut self.line_buf)?;
+                    if n == 0 {
+                        break;
+                    }
+                    let is_row = match fmt {
+                        InputFormat::Libsvm => {
+                            parse_libsvm_row(&self.line_buf, &mut indices, &mut values)?
+                        }
+                        _ => parse_sparse_csv_row(&self.line_buf, &mut indices, &mut values)?,
+                    };
+                    if !is_row {
+                        continue; // blank / comment
+                    }
+                    true
+                }
+                Framing::Csr { row_nnz, next } => {
+                    if *next >= row_nnz.len() {
+                        break;
+                    }
+                    let nnz = row_nnz[*next] as usize;
+                    *next += 1;
+                    indices.clear();
+                    values.clear();
+                    let mut b4 = [0u8; 4];
+                    for _ in 0..nnz {
+                        self.reader.read_exact(&mut b4)?;
+                        indices.push(u32::from_le_bytes(b4));
+                    }
+                    let mut b8 = [0u8; 8];
+                    for _ in 0..nnz {
+                        self.reader.read_exact(&mut b8)?;
+                        values.push(f64::from_le_bytes(b8));
+                    }
+                    true
+                }
+                _ => unreachable!("sparse framing"),
+            };
+            if got {
+                if let Some(&max_idx) = indices.iter().max() {
+                    let need = max_idx as usize + 1;
+                    if self.cols_pin > 0 && need > self.cols_pin {
+                        return Err(Error::Config(format!(
+                            "stream: column index {max_idx} exceeds the pinned --cols {} \
+                             dictionary",
+                            self.cols_pin
+                        )));
+                    }
+                    self.cols = self.cols.max(need);
+                }
+                parsed.push((indices.clone(), values.clone()));
+            }
+        }
+        if parsed.is_empty() {
+            return Ok(None);
+        }
+        let mut sm = SparseMatrix::with_cols(self.cols);
+        for (idx, val) in &parsed {
+            sm.push_row(idx, val)?;
+        }
+        Ok(Some(Batch::Sparse(sm)))
+    }
+}
+
+/// Read as many bytes as possible into `buf`; returns the count (0 = EOF,
+/// short = EOF mid-buffer).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..])?;
+        if n == 0 {
+            break;
+        }
+        filled += n;
+    }
+    Ok(filled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::binmat::write_matrix_bin;
+    use crate::io::InputSpec;
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_stream_source");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn cursor(bytes: Vec<u8>) -> Box<dyn Read + Send> {
+        Box::new(std::io::Cursor::new(bytes))
+    }
+
+    #[test]
+    fn csv_batches_and_width() {
+        let text = "1;2;3\n4;5;6\n\n7;8;9\n10;11;12\n";
+        let mut s = StreamSource::from_reader(cursor(text.into()), InputFormat::Csv);
+        let b1 = s.next_batch(3).unwrap().unwrap();
+        assert_eq!((b1.rows(), b1.cols()), (3, 3));
+        let b2 = s.next_batch(3).unwrap().unwrap();
+        assert_eq!(b2.rows(), 1);
+        assert!(s.next_batch(3).unwrap().is_none());
+        assert_eq!(s.rows_read(), 4);
+    }
+
+    #[test]
+    fn csv_ragged_rejected() {
+        let mut s = StreamSource::from_reader(cursor("1;2\n3\n".into()), InputFormat::Csv);
+        assert!(s.next_batch(10).is_err());
+    }
+
+    #[test]
+    fn bin_reads_to_eof_despite_zero_row_header() {
+        let m = Matrix::from_fn(5, 3, |i, j| (i * 3 + j) as f64);
+        let path = tmp("hdr.bin");
+        write_matrix_bin(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Zero out the header row count — what a piped writer produces.
+        bytes[8..16].copy_from_slice(&0u64.to_le_bytes());
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Bin);
+        let b = s.next_batch(100).unwrap().unwrap();
+        match b {
+            Batch::Dense(got) => assert_eq!(got.max_abs_diff(&m), 0.0),
+            _ => panic!("dense expected"),
+        }
+        assert!(s.next_batch(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn bin_torn_row_rejected() {
+        let m = Matrix::from_fn(2, 4, |i, j| (i + j) as f64);
+        let path = tmp("torn.bin");
+        write_matrix_bin(&m, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 5);
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Bin);
+        assert!(s.next_batch(10).is_err());
+    }
+
+    #[test]
+    fn libsvm_dictionary_grows_across_batches() {
+        let text = "1 1:1.0 2:2.0\n0 1:3.0\n# comment\n1 5:4.0\n";
+        let mut s = StreamSource::from_reader(cursor(text.into()), InputFormat::Libsvm);
+        let b1 = s.next_batch(2).unwrap().unwrap();
+        assert_eq!(b1.cols(), 2); // max 1-based index 2 -> width 2
+        let b2 = s.next_batch(2).unwrap().unwrap();
+        assert_eq!(b2.cols(), 5); // index 5 widens the dictionary
+        assert_eq!(s.cols(), 5);
+    }
+
+    #[test]
+    fn pinned_cols_rejects_overflow_and_fixes_width() {
+        let text = "0 1:1.0\n0 9:2.0\n";
+        let mut s = StreamSource::from_reader(cursor(text.into()), InputFormat::Libsvm);
+        s.pin_cols(4);
+        let b = s.next_batch(1).unwrap().unwrap();
+        assert_eq!(b.cols(), 4);
+        assert!(s.next_batch(1).is_err()); // index 9 > pin 4
+    }
+
+    #[test]
+    fn csr_stream_roundtrip() {
+        let mut sm = SparseMatrix::with_cols(6);
+        sm.push_row(&[0, 3], &[1.5, -2.0]).unwrap();
+        sm.push_row(&[], &[]).unwrap();
+        sm.push_row(&[5], &[4.0]).unwrap();
+        let path = tmp("s.csr");
+        crate::io::sparse::write_sparse_matrix(&sm, &path, InputFormat::Csr).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Csr);
+        let b = s.next_batch(2).unwrap().unwrap();
+        assert_eq!((b.rows(), b.cols()), (2, 6));
+        let b2 = s.next_batch(2).unwrap().unwrap();
+        assert_eq!(b2.rows(), 1);
+        match b2 {
+            Batch::Sparse(m) => {
+                let (idx, val) = m.row(0);
+                assert_eq!(idx, &[5]);
+                assert_eq!(val, &[4.0]);
+            }
+            _ => panic!("sparse expected"),
+        }
+        assert!(s.next_batch(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn skip_rows_replays_forward() {
+        let text: String = (0..20).map(|i| format!("{i};{i}\n")).collect();
+        let mut s = StreamSource::from_reader(cursor(text.into()), InputFormat::Csv);
+        s.skip_rows(15).unwrap();
+        let b = s.next_batch(100).unwrap().unwrap();
+        assert_eq!(b.rows(), 5);
+        match b {
+            Batch::Dense(m) => assert_eq!(m.get(0, 0), 15.0),
+            _ => panic!(),
+        }
+        // Skipping past the end errors.
+        let mut s2 = StreamSource::from_reader(cursor("1;1\n".into()), InputFormat::Csv);
+        assert!(s2.skip_rows(5).is_err());
+    }
+
+    #[test]
+    fn open_rejects_missing_and_reads_files() {
+        assert!(StreamSource::open("/nonexistent/x.csv", InputFormat::Csv).is_err());
+        let path = tmp("open.csv");
+        std::fs::write(&path, "1;2\n3;4\n").unwrap();
+        let spec = InputSpec::auto(path.clone());
+        let mut s = StreamSource::open(&path, spec.format).unwrap();
+        assert_eq!(s.next_batch(10).unwrap().unwrap().rows(), 2);
+    }
+}

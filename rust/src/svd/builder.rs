@@ -170,6 +170,15 @@ impl<'a> Svd<'a> {
         self
     }
 
+    /// Target relative residual (validated: must be positive and finite).
+    /// The multi-pass routes work at the requested rank regardless; the
+    /// adaptive streaming route ([`crate::stream::StreamSvd`]) widens its
+    /// sketch until this target is met.
+    pub fn tol(mut self, tol: f64) -> Self {
+        self.opts.tol = tol;
+        self
+    }
+
     /// Cap scheduler chunks at `rows` rows each (0 = derive the chunk
     /// count from [`Svd::chunks_per_worker`] instead).
     pub fn chunk_rows(mut self, rows: usize) -> Self {

@@ -28,7 +28,7 @@ static LOG: Logger = Logger::new("svd");
 pub const DEFAULT_SIGMA_CUTOFF_REL: f64 = 1e-7;
 
 /// Cutoff for the final completion's `Σ⁻¹` — numerically-zero tail only.
-const COMPLETION_CUTOFF_REL: f64 = 1e-12;
+pub(crate) const COMPLETION_CUTOFF_REL: f64 = 1e-12;
 
 /// Options for the SVD driver (a trimmed view of
 /// [`crate::config::RunConfig`]; build one fluently with
@@ -62,6 +62,11 @@ pub struct SvdOptions {
     pub chunks_per_worker: usize,
     /// Retry budget per chunk before a pass fails.
     pub chunk_retries: usize,
+    /// Target relative residual for adaptive routes (`tallfat stream`).
+    /// The multi-pass routes carry it for config parity but work at the
+    /// requested `k` regardless; validation rejects `tol <= 0` either way
+    /// so a config-file `tol` is never silently parsed-but-ignored.
+    pub tol: f64,
 }
 
 impl Default for SvdOptions {
@@ -85,6 +90,7 @@ impl Default for SvdOptions {
             chunk_rows: 0,
             chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
             chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
+            tol: crate::stream::DEFAULT_TOL,
         }
     }
 }
@@ -112,6 +118,12 @@ impl SvdOptions {
         }
         if self.chunks_per_worker == 0 {
             return Err(Error::Config("chunks_per_worker must be >= 1".into()));
+        }
+        if !(self.tol > 0.0 && self.tol.is_finite()) {
+            return Err(Error::Config(format!(
+                "tol must be a positive finite residual target, got {}",
+                self.tol
+            )));
         }
         if self.shard_format.is_sparse() {
             return Err(Error::Config(format!(
@@ -144,8 +156,11 @@ pub(crate) fn guarded_inverse(sigma: &[f64], cutoff_rel: f64) -> Vec<f64> {
 }
 
 /// Read input dimensions and reject degenerate inputs — the single
-/// validation gate in front of every driver entry point.
+/// validation gate in front of every driver entry point. Non-seekable
+/// sources (stdin, pipes) are rejected here with a pointer at
+/// `tallfat stream`, before any pass tries to re-read them.
 pub(crate) fn checked_dims(input: &InputSpec) -> Result<(usize, usize)> {
+    crate::io::ensure_seekable(&input.path)?;
     let (m, n) = input.dims()?;
     if m == 0 || n == 0 {
         return Err(Error::Config(format!(

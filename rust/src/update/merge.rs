@@ -269,6 +269,129 @@ fn slice_block(src: &Matrix, r0: usize, c0: usize, rows: usize, cols: usize) -> 
     Matrix::from_fn(rows, cols, |i, j| src.get(r0 + i, c0 + j))
 }
 
+/// One already-factored row block: `A ≈ U Σ Vᵀ (+ 1 μᵀ)` with `U`
+/// orthonormal over this block's rows. The `U` itself never enters the
+/// merge — only its row count and the small factors.
+pub struct FactoredBlock<'a> {
+    /// Singular values, descending (length k).
+    pub sigma: &'a [f64],
+    /// Right singular vectors, `n x k`.
+    pub v: &'a Matrix,
+    /// Rows in the block.
+    pub m: usize,
+    /// Column means for centered (PCA) factorizations — the factors then
+    /// describe `A - 1 μᵀ`. Both blocks must agree on centeredness.
+    pub mu: Option<&'a [f64]>,
+}
+
+/// The rotations and factors of a [`merge_factored`] merge.
+pub struct FactoredMergeOutput {
+    /// New singular values, descending (length k').
+    pub sigma: Vec<f64>,
+    /// New right singular vectors, `n x k'`.
+    pub v_new: Matrix,
+    /// Rotation for the first block's U shards, `k₀ x k'`.
+    pub p_old: Matrix,
+    /// Constant row offset for the first block (centered only, length k').
+    pub old_offset: Option<Vec<f64>>,
+    /// Rotation for the second block's U shards, `k₁ x k'`.
+    pub p_new: Matrix,
+    /// Constant row offset for the second block (centered only, length k').
+    pub new_offset: Option<Vec<f64>>,
+    /// Merged column means (centered only).
+    pub means: Option<Vec<f64>>,
+}
+
+/// Merge two *already factored* row blocks — the streaming route's variant
+/// of [`merge_truncate`], where the new rows arrive as a finished one-pass
+/// factorization ([`crate::stream`]) rather than as raw rows to sketch.
+///
+/// With `Ã_b = A_b - 1 μ'ᵀ = U_b Σ_b V_bᵀ + 1 c_bᵀ` (`c_b = μ_b - μ'`, the
+/// re-centering about the merged mean `μ'`), the concatenation factors as
+/// `B Z̃ᵀ` over the orthonormal left basis
+/// `B = [U₀ | 0 | 1/√m₀ | 0 ; 0 | U₁ | 0 | 1/√m₁]` with
+/// `Z̃ = [V₀Σ₀ | V₁Σ₁ | √m₀ c₀ | √m₁ c₁]` — orthonormal because a centered
+/// block's `1ᵀU = 0` exactly, and the blocks live on disjoint rows.
+/// Eigensolving the `(k₀+k₁+2)²` Gram `Z̃ᵀZ̃ = Q Θ² Qᵀ` gives
+/// `Σ' = Θ`, `V' = Z̃ Q Θ⁻¹`, and `U' = B Q` — so each block's shards
+/// rotate by their slice of `Q` plus a constant `Q`-row/√m offset, and
+/// nothing anywhere scales with `m`.
+pub fn merge_factored(
+    old: &FactoredBlock,
+    new: &FactoredBlock,
+    k_new: usize,
+    backend: &BackendRef,
+) -> Result<FactoredMergeOutput> {
+    let (k0, k1) = (old.sigma.len(), new.sigma.len());
+    let n = old.v.rows();
+    if old.v.cols() != k0 || new.v.cols() != k1 {
+        return Err(Error::shape(format!(
+            "merge_factored: V shapes {:?}/{:?} vs sigma lengths {k0}/{k1}",
+            old.v.shape(),
+            new.v.shape()
+        )));
+    }
+    if new.v.rows() != n {
+        return Err(Error::shape(format!(
+            "merge_factored: blocks disagree on n ({n} vs {})",
+            new.v.rows()
+        )));
+    }
+    if old.mu.is_some() != new.mu.is_some() {
+        return Err(Error::Config(
+            "merge_factored: one block is centered and the other is not — \
+             a PCA model can only absorb a centered stream (and vice versa)"
+                .into(),
+        ));
+    }
+    if old.m == 0 || new.m == 0 {
+        return Err(Error::Config("merge_factored: both blocks need rows".into()));
+    }
+    let centered = old.mu.is_some();
+    let (w0, w1) = (old.m as f64, new.m as f64);
+
+    // Merged mean and the per-block re-centering shifts.
+    let means = old.mu.zip(new.mu).map(|(mu0, mu1)| {
+        (0..n)
+            .map(|j| (w0 * mu0[j] + w1 * mu1[j]) / (w0 + w1))
+            .collect::<Vec<f64>>()
+    });
+    let d = k0 + k1 + if centered { 2 } else { 0 };
+    let z = Matrix::from_fn(n, d, |i, j| {
+        if j < k0 {
+            old.v.get(i, j) * old.sigma[j]
+        } else if j < k0 + k1 {
+            new.v.get(i, j - k0) * new.sigma[j - k0]
+        } else {
+            let mu = means.as_ref().expect("centered");
+            if j == k0 + k1 {
+                w0.sqrt() * (old.mu.expect("centered")[i] - mu[i])
+            } else {
+                w1.sqrt() * (new.mu.expect("centered")[i] - mu[i])
+            }
+        }
+    });
+
+    let gram = matmul_tn(&z, &z)?;
+    let (theta2, q) = backend.eigh(&gram)?;
+    let k_new = k_new.min(d).max(1);
+    let sigma: Vec<f64> = theta2[..k_new].iter().map(|&w| w.max(0.0).sqrt()).collect();
+    let inv_theta = guarded_inverse(&sigma, THETA_CUTOFF_REL);
+    let q_k = q.slice_cols(0, k_new);
+    let v_new = matmul(&z, &q_k)?.scale_cols(&inv_theta)?;
+    let p_old = q_k.slice_rows(0, k0);
+    let p_new = q_k.slice_rows(k0, k0 + k1);
+    let (old_offset, new_offset) = if centered {
+        (
+            Some((0..k_new).map(|j| q_k.get(k0 + k1, j) / w0.sqrt()).collect()),
+            Some((0..k_new).map(|j| q_k.get(k0 + k1 + 1, j) / w1.sqrt()).collect()),
+        )
+    } else {
+        (None, None)
+    };
+    Ok(FactoredMergeOutput { sigma, v_new, p_old, old_offset, p_new, new_offset, means })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +536,125 @@ mod tests {
     #[test]
     fn dense_merge_handles_centered_mean_shift() {
         run_dense_merge(true);
+    }
+
+    /// Oracle for merging two finished factorizations: exactly factor two
+    /// low-rank blocks, merge, and check the rotations rebuild the SVD of
+    /// the concatenation.
+    fn run_factored_merge(centered: bool) {
+        let (m0, m1, n) = (36usize, 20usize, 9usize);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let raw0 = matmul(&rand(m0, 3, 21), &rand(3, n, 22)).unwrap();
+        let raw1 = matmul(&rand(m1, 4, 23), &rand(4, n, 24)).unwrap();
+
+        let mean_of = |a: &Matrix| -> Vec<f64> {
+            (0..n).map(|j| a.col(j).iter().sum::<f64>() / a.rows() as f64).collect()
+        };
+        let (a0, a1, mu0, mu1) = if centered {
+            let mu0 = mean_of(&raw0);
+            let mu1 = mean_of(&raw1);
+            (
+                Matrix::from_fn(m0, n, |i, j| raw0.get(i, j) - mu0[j]),
+                Matrix::from_fn(m1, n, |i, j| raw1.get(i, j) - mu1[j]),
+                Some(mu0),
+                Some(mu1),
+            )
+        } else {
+            (raw0.clone(), raw1.clone(), None, None)
+        };
+
+        // Exact factors of each block; keep every numerically-live direction
+        // so the merge's input is lossless and the oracle check is tight.
+        let keep = |s: &[f64]| s.iter().filter(|&&x| x > 1e-9 * s[0]).count();
+        let svd0 = exact_svd(&a0).unwrap();
+        let k0 = keep(&svd0.sigma);
+        let svd1 = exact_svd(&a1).unwrap();
+        let k1 = keep(&svd1.sigma);
+
+        let out = merge_factored(
+            &FactoredBlock {
+                sigma: &svd0.sigma[..k0],
+                v: &svd0.v.slice_cols(0, k0),
+                m: m0,
+                mu: mu0.as_deref(),
+            },
+            &FactoredBlock {
+                sigma: &svd1.sigma[..k1],
+                v: &svd1.v.slice_cols(0, k1),
+                m: m1,
+                mu: mu1.as_deref(),
+            },
+            k0 + k1 + 2,
+            &backend,
+        )
+        .unwrap();
+
+        // Rebuild U from the per-block rotations + offsets.
+        let apply = |u: &Matrix, p: &Matrix, off: Option<&Vec<f64>>| {
+            let mut r = matmul(u, p).unwrap();
+            if let Some(off) = off {
+                for i in 0..r.rows() {
+                    for (j, o) in off.iter().enumerate() {
+                        r.set(i, j, r.get(i, j) + o);
+                    }
+                }
+            }
+            r
+        };
+        let u0 = svd0.u.slice_cols(0, k0);
+        let u1 = svd1.u.slice_cols(0, k1);
+        let u = apply(&u0, &out.p_old, out.old_offset.as_ref())
+            .vstack(&apply(&u1, &out.p_new, out.new_offset.as_ref()))
+            .unwrap();
+        let recon = matmul(&u.scale_cols(&out.sigma).unwrap(), &out.v_new.t()).unwrap();
+
+        // Target: the concatenation centered about the *merged* mean.
+        let want = match &out.means {
+            Some(mu) => {
+                let top = Matrix::from_fn(m0, n, |i, j| raw0.get(i, j) - mu[j]);
+                let bot = Matrix::from_fn(m1, n, |i, j| raw1.get(i, j) - mu[j]);
+                top.vstack(&bot).unwrap()
+            }
+            None => raw0.vstack(&raw1).unwrap(),
+        };
+        let rel = recon.max_abs_diff(&want) / want.max_abs();
+        assert!(rel < 1e-8, "centered={centered}: factored merge rel err {rel}");
+
+        // Σ matches the dense SVD of the concatenation on live directions.
+        let dense = exact_svd(&want).unwrap();
+        let live = out.sigma.iter().filter(|&&s| s > 1e-9 * out.sigma[0]).count();
+        for i in 0..live {
+            let rel = (out.sigma[i] - dense.sigma[i]).abs() / dense.sigma[i].max(1e-12);
+            assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", out.sigma[i], dense.sigma[i]);
+        }
+        // U orthonormal on live directions.
+        let utu = matmul_tn(&u, &u).unwrap();
+        for i in 0..live {
+            for j in 0..live {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.get(i, j) - want).abs() < 1e-8, "UᵀU[{i},{j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn factored_merge_reconstructs_concatenation() {
+        run_factored_merge(false);
+    }
+
+    #[test]
+    fn factored_merge_handles_centered_mean_shift() {
+        run_factored_merge(true);
+    }
+
+    #[test]
+    fn factored_merge_rejects_mixed_centering() {
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let v = rand(6, 2, 31);
+        let mu = vec![0.0; 6];
+        let a = FactoredBlock { sigma: &[2.0, 1.0], v: &v, m: 10, mu: Some(&mu) };
+        let b = FactoredBlock { sigma: &[1.5, 0.5], v: &v, m: 8, mu: None };
+        assert!(merge_factored(&a, &b, 2, &backend).is_err());
     }
 
     #[test]

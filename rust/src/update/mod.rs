@@ -34,9 +34,17 @@
 //! ```ignore
 //! let next = Update::of("/models/m1")?.rows(&batch).executor(&mut e).run()?;
 //! ```
+//!
+//! Rows that arrive over a pipe (and so cannot be re-read by the passes
+//! above) take the streaming route instead: factor them in one pass with
+//! [`crate::stream::StreamSvd`], then fold the finished factors into the
+//! model with [`publish_stream_result`] — a [`merge_factored`] of two
+//! already-orthonormal blocks followed by the same generation commit.
 
 pub mod builder;
 pub mod merge;
+pub mod stream;
 
 pub use builder::{Update, UpdateResult};
-pub use merge::{merge_truncate, MergeInput, MergeOutput};
+pub use merge::{merge_factored, merge_truncate, FactoredBlock, MergeInput, MergeOutput};
+pub use stream::{publish_stream_result, StreamPublish};

@@ -1,0 +1,358 @@
+//! Fold a finished one-pass streaming factorization into a saved model as
+//! its next generation.
+//!
+//! The multi-pass update ([`crate::update::builder`]) re-reads the new row
+//! batch three times — impossible when the rows arrived over a pipe and are
+//! gone. The streaming route instead factors the batch *as it passes by*
+//! ([`crate::stream::StreamSvd`]) and hands this module the finished
+//! factors: the merge is then two already-orthonormal blocks glued with
+//! [`merge_factored`]'s `(k₀+k₁+2)²` eigensolve, the old generation's `U`
+//! shards rotate by `P_old`, the stream's `U` shards rotate by `P_new`, and
+//! the generation commits with the same manifest/`CURRENT` protocol the
+//! multi-pass update uses — a serving daemon hot-swaps to it with zero
+//! downtime.
+
+use crate::backend::BackendRef;
+use crate::config::InputFormat;
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::io::writer::{ShardReader, ShardSet, ShardWriter};
+use crate::linalg::{matmul, Matrix};
+use crate::metrics::PhaseReport;
+use crate::serve::store::{
+    begin_generation, embedding_norm, gc_generations, generation_dir_name, model_manifest,
+    next_generation, publish_generation, ModelStore,
+};
+use crate::svd::SvdResult;
+use crate::update::merge::{merge_factored, FactoredBlock};
+use crate::update::UpdateResult;
+use crate::util::Logger;
+use std::path::Path;
+use std::time::Instant;
+
+static LOG: Logger = Logger::new("update");
+
+/// Options for [`publish_stream_result`].
+pub struct StreamPublish {
+    /// Rank of the next generation (None = keep the model's k; capped at
+    /// the merged basis width).
+    pub rank: Option<usize>,
+    /// Generations surviving GC after the publish (min 1).
+    pub keep_generations: usize,
+    /// Ω seed recorded in the manifest (the stream's seed).
+    pub seed: Option<u64>,
+}
+
+impl Default for StreamPublish {
+    fn default() -> Self {
+        StreamPublish { rank: None, keep_generations: 2, seed: None }
+    }
+}
+
+/// Merge a stream run's [`SvdResult`] into the model at `root` and publish
+/// the next generation. The stream must have been run with
+/// `.cols(model.n)` (so the column dictionaries align) and `.center`
+/// matching the model's centeredness.
+pub fn publish_stream_result(
+    root: impl AsRef<Path>,
+    result: &SvdResult,
+    backend: &BackendRef,
+    opts: &StreamPublish,
+) -> Result<UpdateResult> {
+    let root = root.as_ref();
+    let store = ModelStore::open(root, 1)?;
+    let n = store.n();
+    if result.n != n {
+        return Err(Error::shape(format!(
+            "stream publish: stream factors have n={}, model n={n} — run the stream \
+             with .cols({n}) so the dictionaries align",
+            result.n
+        )));
+    }
+    if store.centered() != result.means.is_some() {
+        return Err(Error::Config(format!(
+            "stream publish: model is {}centered but the stream ran {}centered — \
+             set .center({}) on the stream",
+            if store.centered() { "" } else { "un" },
+            if result.means.is_some() { "" } else { "un" },
+            store.centered()
+        )));
+    }
+    let v1 = result
+        .v
+        .as_ref()
+        .ok_or_else(|| Error::Config("stream publish: stream result carries no V".into()))?;
+    let mut report = PhaseReport::new();
+
+    let t0 = Instant::now();
+    let merged = merge_factored(
+        &FactoredBlock { sigma: store.sigma(), v: store.v(), m: store.m(), mu: store.means() },
+        &FactoredBlock { sigma: &result.sigma, v: v1, m: result.m, mu: result.means.as_deref() },
+        opts.rank.unwrap_or(store.k()),
+        backend,
+    )?;
+    let k_new = merged.sigma.len();
+    report.push("leader.merge_factored", t0.elapsed(), (store.k() + result.k) as u64, 0);
+
+    let t0 = Instant::now();
+    let next = next_generation(root, store.generation())?;
+    let gen_dir = root.join(generation_dir_name(next));
+    begin_generation(&gen_dir)?;
+
+    let sigma_text: String = merged.sigma.iter().map(|s| format!("{s}\n")).collect();
+    std::fs::write(gen_dir.join("sigma.csv"), sigma_text)?;
+    let v_path = gen_dir.join("V.bin").to_string_lossy().into_owned();
+    crate::io::binmat::write_matrix_bin(&merged.v_new, &v_path)?;
+    if let Some(mu) = &merged.means {
+        let mrow = Matrix::from_rows(std::slice::from_ref(mu))?;
+        let m_path = gen_dir.join("means.bin").to_string_lossy().into_owned();
+        crate::io::binmat::write_matrix_bin(&mrow, &m_path)?;
+    }
+
+    let dst = ShardSet::new(&gen_dir, "U", InputFormat::Bin)?;
+    let norms_path = gen_dir.join("norms.bin").to_string_lossy().into_owned();
+    let mut norms =
+        crate::io::binmat::BinMatWriter::create(&norms_path, 1, crate::io::binmat::DType::F64)?;
+    let mut shard_rows = Vec::with_capacity(store.shards() + result.shards);
+    let mut total = 0usize;
+    for i in 0..store.shards() {
+        let count = rotate_shard(
+            store.u_shard_reader(i)?,
+            dst.open_writer(i, k_new)?,
+            &merged.p_old,
+            merged.old_offset.as_deref(),
+            &merged.sigma,
+            &mut norms,
+            &format!("parent U shard {i}"),
+        )?;
+        shard_rows.push(count);
+        total += count;
+    }
+    for i in 0..result.shards {
+        let count = rotate_shard(
+            result.u_shards.open_reader(i)?,
+            dst.open_writer(store.shards() + i, k_new)?,
+            &merged.p_new,
+            merged.new_offset.as_deref(),
+            &merged.sigma,
+            &mut norms,
+            &format!("stream U shard {i}"),
+        )?;
+        shard_rows.push(count);
+        total += count;
+    }
+    norms.finish()?;
+    if total != store.m() + result.m {
+        return Err(Error::Other(format!(
+            "stream publish: generation holds {total} rows, expected {}",
+            store.m() + result.m
+        )));
+    }
+
+    model_manifest(
+        total,
+        n,
+        k_new,
+        &shard_rows,
+        merged.means.is_some(),
+        next,
+        Some(store.generation()),
+        opts.seed,
+    )
+    .save(gen_dir.join("model.manifest"))?;
+    publish_generation(root, next)?;
+    report.push("leader.write_generation", t0.elapsed(), total as u64, 0);
+    // Committed; GC is best-effort from here — a "failed" retry would
+    // append the same stream twice.
+    if let Err(e) = gc_generations(root, opts.keep_generations.max(1)) {
+        LOG.warn(&format!("post-publish gc failed (non-fatal): {e}"));
+    }
+    let reg = MetricsRegistry::global();
+    reg.add("update_rows", result.m as f64);
+    reg.add("stream_publishes", 1.0);
+    LOG.info(&format!(
+        "stream publish: generation {next} serves {total}x{n} k={k_new} \
+         (+{} streamed rows)",
+        result.m
+    ));
+    Ok(UpdateResult {
+        generation: next,
+        dir: gen_dir,
+        m: total,
+        n,
+        k: k_new,
+        rows_added: result.m,
+        sigma: merged.sigma,
+        report,
+    })
+}
+
+/// Stream one `U` shard through a `k x k'` rotation (plus the centered
+/// per-row offset), block-buffered into one matmul per slab, appending each
+/// rotated row's embedding norm to the sidecar. Returns the row count.
+fn rotate_shard(
+    mut reader: ShardReader,
+    mut writer: ShardWriter,
+    p: &Matrix,
+    offset: Option<&[f64]>,
+    sigma: &[f64],
+    norms: &mut crate::io::binmat::BinMatWriter,
+    what: &str,
+) -> Result<usize> {
+    const ROTATE_BLOCK: usize = 512;
+    let mut row = Vec::new();
+    let mut buf: Vec<Vec<f64>> = Vec::with_capacity(ROTATE_BLOCK);
+    let mut count = 0usize;
+    loop {
+        buf.clear();
+        while buf.len() < ROTATE_BLOCK {
+            if !reader.next_row(&mut row)? {
+                break;
+            }
+            if row.len() != p.rows() {
+                return Err(Error::shape(format!(
+                    "stream publish: {what} row has {} cols, expected {}",
+                    row.len(),
+                    p.rows()
+                )));
+            }
+            buf.push(row.clone());
+        }
+        if buf.is_empty() {
+            break;
+        }
+        let slab = Matrix::from_rows(&buf)?;
+        let mut rotated = matmul(&slab, p)?;
+        if let Some(off) = offset {
+            for rix in 0..rotated.rows() {
+                for (v, o) in rotated.row_mut(rix).iter_mut().zip(off.iter()) {
+                    *v += o;
+                }
+            }
+        }
+        for rix in 0..rotated.rows() {
+            let urow = rotated.row(rix);
+            writer.write_row(urow)?;
+            norms.write_row(&[embedding_norm(urow, sigma)])?;
+        }
+        count += rotated.rows();
+        if buf.len() < ROTATE_BLOCK {
+            break;
+        }
+    }
+    writer.finish()?;
+    Ok(count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::io::dataset::{gen_exact, Spectrum};
+    use crate::io::InputSpec;
+    use crate::stream::StreamSvd;
+    use std::sync::Arc;
+
+    fn tmp_dir(name: &str) -> String {
+        let dir = std::env::temp_dir().join("tallfat_test_stream_pub").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.to_string_lossy().into_owned()
+    }
+
+    /// Factor 60 rows the multi-pass way into a model, stream 40 more rows
+    /// into a factorization, publish the merge, and check the published
+    /// generation against a direct factorization of all 100 rows.
+    #[test]
+    fn stream_publish_matches_full_factorization() {
+        let (m0, m1, n, rank) = (60usize, 40usize, 12usize, 4usize);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let (a, _) =
+            gen_exact(m0 + m1, n, rank, Spectrum::Geometric { scale: 8.0, decay: 0.6 }, 0.0, 5)
+                .unwrap();
+
+        // Base model from the first m0 rows.
+        let base_path = tmp_dir("base_rows");
+        let base_csv = format!("{base_path}/a0.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(0, m0), &base_csv).unwrap();
+        let model_dir = tmp_dir("model");
+        crate::svd::Svd::over(&InputSpec::csv(&base_csv))
+            .unwrap()
+            .rank(rank)
+            .work_dir(tmp_dir("base_work"))
+            .save_model(&model_dir)
+            .run()
+            .unwrap();
+
+        // Stream the remaining rows (rank pinned: parity mode).
+        let tail_csv = format!("{base_path}/a1.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(m0, m0 + m1), &tail_csv).unwrap();
+        let streamed = StreamSvd::open(&tail_csv)
+            .rank(rank)
+            .cols(n)
+            .batch_rows(16)
+            .work_dir(tmp_dir("stream_work"))
+            .run()
+            .unwrap();
+        assert_eq!(streamed.m, m1);
+
+        let out = publish_stream_result(
+            &model_dir,
+            &streamed,
+            &backend,
+            &StreamPublish { rank: Some(rank), ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(out.m, m0 + m1);
+        assert_eq!(out.rows_added, m1);
+
+        // The published generation loads and reconstructs all rows.
+        let store = ModelStore::open(&model_dir, 1).unwrap();
+        assert_eq!(store.generation(), out.generation);
+        assert_eq!(store.m(), m0 + m1);
+        let mut u_rows = Vec::with_capacity(store.m());
+        for i in 0..store.m() {
+            u_rows.push(store.u_row(i).unwrap());
+        }
+        let u = Matrix::from_rows(&u_rows).unwrap();
+        let recon = matmul(&u.scale_cols(store.sigma()).unwrap(), &store.v().t()).unwrap();
+        let rel = recon.max_abs_diff(&a) / a.max_abs();
+        assert!(rel < 1e-5, "published generation reconstruction rel err {rel}");
+    }
+
+    #[test]
+    fn stream_publish_rejects_centering_mismatch() {
+        let (m0, m1, n, rank) = (30usize, 20usize, 8usize, 3usize);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let (a, _) =
+            gen_exact(m0 + m1, n, rank, Spectrum::Geometric { scale: 4.0, decay: 0.5 }, 0.0, 9)
+                .unwrap();
+        let base = tmp_dir("mismatch_rows");
+        let base_csv = format!("{base}/a0.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(0, m0), &base_csv).unwrap();
+        let model_dir = tmp_dir("mismatch_model");
+        crate::svd::Svd::over(&InputSpec::csv(&base_csv))
+            .unwrap()
+            .rank(rank)
+            .work_dir(tmp_dir("mismatch_work"))
+            .save_model(&model_dir)
+            .run()
+            .unwrap();
+        let tail_csv = format!("{base}/a1.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(m0, m0 + m1), &tail_csv).unwrap();
+        let streamed = StreamSvd::open(&tail_csv)
+            .rank(rank)
+            .cols(n)
+            .center(true) // model is uncentered
+            .work_dir(tmp_dir("mismatch_stream_work"))
+            .run()
+            .unwrap();
+        assert!(publish_stream_result(
+            &model_dir,
+            &streamed,
+            &backend,
+            &StreamPublish::default()
+        )
+        .is_err());
+    }
+}

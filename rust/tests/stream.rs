@@ -1,0 +1,415 @@
+//! `stream/` end-to-end — the acceptance gate of the one-pass subsystem:
+//! a model factored from a genuinely non-seekable source (a process pipe)
+//! in exactly one forward pass must agree with the batch pipeline; the
+//! adaptive range finder must stop near the true rank and meet its `tol`
+//! residual estimate; an interrupted checkpointed stream must resume to
+//! the same factors; and a daemon stream job fed through a FIFO must
+//! publish a new generation that serves without a restart.
+//!
+//! Stream runs report through the process-global [`MetricsRegistry`], so
+//! every test here serializes on one mutex.
+
+use std::io::Read;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::{Duration, Instant};
+
+use tallfat::backend::native::NativeBackend;
+use tallfat::backend::BackendRef;
+use tallfat::config::InputFormat;
+use tallfat::coordinator::server::MetricsRegistry;
+use tallfat::daemon::{Daemon, DaemonClient, DaemonOptions, JobKind, JobSpec};
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::linalg::Matrix;
+use tallfat::serve::json::Json;
+use tallfat::stream::StreamSvd;
+use tallfat::svd::Svd;
+
+const M: usize = 120;
+const N: usize = 16;
+const RANK: usize = 4;
+const K: usize = 6;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("tallfat_stream_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn path_str(p: &Path) -> String {
+    p.to_string_lossy().into_owned()
+}
+
+fn write_spec(a: &Matrix, spec: InputSpec) -> InputSpec {
+    tallfat::io::write_matrix(a, &spec).unwrap();
+    spec
+}
+
+fn fixture(m: usize, n: usize, rank: usize, seed: u64) -> Matrix {
+    let spectrum = Spectrum::Geometric { scale: 6.0, decay: 0.5 };
+    gen_exact(m, n, rank, spectrum, 0.0, seed).unwrap().0
+}
+
+fn batch_svd(spec: &InputSpec, d: &Path, center: bool) -> tallfat::svd::SvdResult {
+    Svd::over(spec)
+        .unwrap()
+        .rank(K)
+        .oversample(6)
+        .seed(5)
+        .center(center)
+        .work_dir(path_str(&d.join("work_batch")))
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap()
+}
+
+fn assert_sigma_close(got: &[f64], want: &[f64], count: usize, tol: f64, what: &str) {
+    for i in 0..count {
+        let rel = (got[i] - want[i]).abs() / want[i].abs().max(1e-300);
+        assert!(rel < tol, "{what}: sigma[{i}] {} vs {} (rel {rel:.3e})", got[i], want[i]);
+    }
+}
+
+/// Wraps the pipe's read end so the test can prove every byte was pulled
+/// through it exactly once (a pipe cannot be rewound, so bytes seen ==
+/// bytes produced means one forward pass).
+struct CountingReader<R: Read> {
+    inner: R,
+    count: Arc<AtomicU64>,
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.count.fetch_add(n as u64, Ordering::SeqCst);
+        Ok(n)
+    }
+}
+
+/// The headline acceptance test: factor rows arriving from another
+/// process's stdout — no file, no seeking — and match the batch pipeline.
+#[test]
+fn pipe_is_read_in_exactly_one_forward_pass() {
+    let _g = serial();
+    let d = dir("pipe");
+    let a = fixture(M, N, RANK, 11);
+    let spec = write_spec(&a, InputSpec::csv(path_str(&d.join("A.csv"))));
+    let bytes = std::fs::read(&spec.path).unwrap();
+    let total = bytes.len() as u64;
+
+    let mut child = Command::new("cat")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn cat");
+    let mut stdin = child.stdin.take().unwrap();
+    let feeder = std::thread::spawn(move || {
+        use std::io::Write;
+        stdin.write_all(&bytes).unwrap();
+    });
+    let count = Arc::new(AtomicU64::new(0));
+    let reader = CountingReader { inner: child.stdout.take().unwrap(), count: Arc::clone(&count) };
+
+    let streamed = StreamSvd::from(reader)
+        .format(InputFormat::Csv)
+        .rank(K)
+        .oversample(6)
+        .seed(5)
+        .batch_rows(32)
+        .work_dir(path_str(&d.join("work_stream")))
+        .run()
+        .unwrap();
+    feeder.join().unwrap();
+    child.wait().unwrap();
+
+    assert_eq!(
+        count.load(Ordering::SeqCst),
+        total,
+        "stream must consume the pipe to EOF in one pass"
+    );
+    assert_eq!((streamed.m, streamed.n), (M, N));
+
+    let batch = batch_svd(&spec, &d, false);
+    assert_sigma_close(&streamed.sigma, &batch.sigma, RANK, 1e-7, "pipe vs batch");
+    let rec = streamed.reconstruct().unwrap();
+    let rel = rec.max_abs_diff(&a) / a.max_abs();
+    assert!(rel < 1e-7, "one-pass reconstruction off by {rel:.3e}");
+}
+
+/// Dense parity, centered and uncentered: the single-pass factors agree
+/// with `Svd::over` on exactly low-rank data.
+#[test]
+fn stream_matches_batch_svd_dense() {
+    let _g = serial();
+    for center in [false, true] {
+        let d = dir(if center { "dense_centered" } else { "dense" });
+        // Shift columns so centering has real work to do.
+        let base = fixture(M, N, RANK, 21);
+        let a = if center {
+            Matrix::from_fn(M, N, |i, j| base.get(i, j) + 3.0 * (j as f64 + 1.0))
+        } else {
+            base
+        };
+        let spec = write_spec(&a, InputSpec::csv(path_str(&d.join("A.csv"))));
+
+        let streamed = StreamSvd::open(&spec.path)
+            .rank(K)
+            .oversample(6)
+            .seed(5)
+            .center(center)
+            .batch_rows(24)
+            .work_dir(path_str(&d.join("work_stream")))
+            .run()
+            .unwrap();
+        let batch = batch_svd(&spec, &d, center);
+
+        assert_sigma_close(&streamed.sigma, &batch.sigma, RANK, 1e-7, "dense stream vs batch");
+        let target = if center {
+            let mu = streamed.means.as_ref().expect("centered run returns means");
+            for (j, m) in mu.iter().enumerate() {
+                let want: f64 = (0..M).map(|i| a.get(i, j)).sum::<f64>() / M as f64;
+                assert!((m - want).abs() < 1e-10, "mean[{j}] {m} vs {want}");
+            }
+            Matrix::from_fn(M, N, |i, j| a.get(i, j) - mu[j])
+        } else {
+            a.clone()
+        };
+        let rec = streamed.reconstruct().unwrap();
+        let rel = rec.max_abs_diff(&target) / target.max_abs();
+        assert!(rel < 1e-7, "center={center}: reconstruction off by {rel:.3e}");
+    }
+}
+
+/// Sparse parity: a libsvm stream (pinned column count) matches the batch
+/// sparse pipeline over the same file.
+#[test]
+fn stream_matches_batch_svd_sparse() {
+    let _g = serial();
+    let d = dir("sparse");
+    let a = fixture(M, N, RANK, 31);
+    let spec = write_spec(&a, InputSpec::libsvm(path_str(&d.join("A.libsvm"))));
+
+    let streamed = StreamSvd::open(&spec.path)
+        .format(InputFormat::Libsvm)
+        .cols(N)
+        .rank(K)
+        .oversample(6)
+        .seed(5)
+        .batch_rows(32)
+        .work_dir(path_str(&d.join("work_stream")))
+        .run()
+        .unwrap();
+    let batch = batch_svd(&spec, &d, false);
+
+    assert_eq!((streamed.m, streamed.n), (M, N));
+    assert_sigma_close(&streamed.sigma, &batch.sigma, RANK, 1e-7, "sparse stream vs batch");
+    let rec = streamed.reconstruct().unwrap();
+    let rel = rec.max_abs_diff(&a) / a.max_abs();
+    assert!(rel < 1e-7, "sparse reconstruction off by {rel:.3e}");
+}
+
+/// The adaptive range finder: started far below the true rank it must
+/// widen, stop within `rank + oversample`, and its final residual
+/// estimate must meet `--tol`.
+#[test]
+fn adaptive_width_stops_near_true_rank_and_meets_tol() {
+    let _g = serial();
+    let d = dir("adaptive");
+    let rank = 10;
+    let oversample = 6;
+    let tol = 1e-3;
+    let spectrum = Spectrum::Geometric { scale: 8.0, decay: 0.35 };
+    let (a, _) = gen_exact(240, 32, rank, spectrum, 0.0, 41).unwrap();
+    let spec = write_spec(&a, InputSpec::csv(path_str(&d.join("A.csv"))));
+
+    let metrics = MetricsRegistry::global();
+    metrics.set("stream_widenings", 0.0);
+    let streamed = StreamSvd::open(&spec.path)
+        .tol(tol)
+        .start_width(4)
+        .oversample(oversample)
+        .seed(5)
+        .batch_rows(48)
+        .work_dir(path_str(&d.join("work_stream")))
+        .run()
+        .unwrap();
+
+    // Width grew from 4 (k <= width, so k > 4 proves at least one widening)
+    // but stopped at true rank plus the oversampling cushion.
+    assert!(
+        streamed.k > 4 && streamed.k <= rank + oversample,
+        "adaptive k = {} not in (4, {}]",
+        streamed.k,
+        rank + oversample
+    );
+    assert!(metrics.get("stream_widenings").unwrap_or(0.0) >= 1.0, "no widening recorded");
+    let residual = metrics.get("stream_residual").expect("finish records its residual");
+    assert!(residual <= tol, "final residual estimate {residual:.3e} misses tol {tol:.1e}");
+    // Early batches were sketched below the true rank, so the one-pass
+    // factors are approximate — but the dominant spectrum must be right
+    // and the reconstruction within a small multiple of tol.
+    let batch = batch_svd(&spec, &d, false);
+    assert_sigma_close(&streamed.sigma, &batch.sigma, 3, 2e-2, "adaptive leading sigma");
+    let rec = streamed.reconstruct().unwrap();
+    let rel = rec.max_abs_diff(&a) / a.max_abs();
+    assert!(rel < 5e-2, "adaptive reconstruction off by {rel:.3e}");
+}
+
+/// Always fails — stands in for a producer dying mid-stream.
+struct FailingReader;
+
+impl Read for FailingReader {
+    fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+        Err(std::io::Error::other("injected stream failure"))
+    }
+}
+
+/// A checkpointed stream killed mid-flight resumes from its sketch state
+/// (the source re-serves from the top; absorbed rows are skipped, never
+/// re-factored) and lands on the same factors as an uninterrupted run.
+#[test]
+fn interrupted_stream_resumes_from_checkpoint() {
+    let _g = serial();
+    let d = dir("resume");
+    let a = fixture(100, 12, RANK, 51);
+    let spec = write_spec(&a, InputSpec::csv(path_str(&d.join("A.csv"))));
+    let text = std::fs::read_to_string(&spec.path).unwrap();
+    let head: String = text.lines().take(60).map(|l| format!("{l}\n")).collect();
+    let work = path_str(&d.join("work"));
+
+    // First attempt: 60 rows arrive, then the producer dies. Batches of 16
+    // checkpoint as they land, so 48 rows of sketch state survive.
+    let err = StreamSvd::from(std::io::Cursor::new(head.into_bytes()).chain(FailingReader))
+        .format(InputFormat::Csv)
+        .rank(RANK)
+        .oversample(4)
+        .seed(9)
+        .batch_rows(16)
+        .work_dir(&work)
+        .checkpoint(true)
+        .run();
+    assert!(err.is_err(), "injected failure must abort the stream");
+
+    let resumed = StreamSvd::open(&spec.path)
+        .rank(RANK)
+        .oversample(4)
+        .seed(9)
+        .batch_rows(16)
+        .work_dir(&work)
+        .checkpoint(true)
+        .resume(true)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.m, 100, "resume must account for every row exactly once");
+
+    let single = StreamSvd::open(&spec.path)
+        .rank(RANK)
+        .oversample(4)
+        .seed(9)
+        .batch_rows(16)
+        .work_dir(path_str(&d.join("work_single")))
+        .run()
+        .unwrap();
+    assert_sigma_close(&resumed.sigma, &single.sigma, RANK, 1e-9, "resumed vs single-shot");
+    let diff = resumed
+        .reconstruct()
+        .unwrap()
+        .max_abs_diff(&single.reconstruct().unwrap())
+        / a.max_abs();
+    assert!(diff < 1e-9, "resumed factors drift from single-shot by {diff:.3e}");
+}
+
+/// The daemon acceptance test: a stream job whose `--rows` is a FIFO — a
+/// source that cannot be reopened or seeked — factors the piped rows,
+/// merges them into the model, and the new generation serves queries with
+/// no restart.
+#[test]
+fn daemon_stream_job_over_fifo_hot_swaps() {
+    let _g = serial();
+    let d = dir("fifo_job");
+    let n = 10;
+    let a = fixture(120, n, 3, 29);
+
+    let fifo = d.join("rows.csv");
+    match Command::new("mkfifo").arg(&fifo).status() {
+        Ok(s) if s.success() => {}
+        _ => {
+            eprintln!("skipping: mkfifo unavailable");
+            return;
+        }
+    }
+
+    let base_spec = write_spec(&a.slice_rows(0, 80), InputSpec::csv(path_str(&d.join("A0.csv"))));
+    let model = d.join("model");
+    Svd::over(&base_spec)
+        .unwrap()
+        .rank(3)
+        .seed(5)
+        .work_dir(path_str(&d.join("work_base")))
+        .backend(Arc::new(NativeBackend::new()))
+        .save_model(path_str(&model))
+        .run()
+        .unwrap();
+
+    let backend: BackendRef = Arc::new(NativeBackend::new());
+    let opts = DaemonOptions {
+        addr: "127.0.0.1:0".to_string(),
+        health_poll: Some(Duration::from_millis(150)),
+        ..DaemonOptions::default()
+    };
+    let daemon = Daemon::bind(d.join("state"), backend, &opts).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || daemon.run());
+    let client = DaemonClient::new(addr);
+    client.register("m", &model.to_string_lossy()).unwrap();
+
+    // The producer: blocks on the FIFO's write end until the stream job
+    // opens it for reading, then pushes 40 fresh rows and hangs up.
+    let tail = a.slice_rows(80, 120);
+    let fifo_spec = InputSpec::csv(path_str(&fifo));
+    let producer = std::thread::spawn(move || {
+        tallfat::io::write_matrix(&tail, &fifo_spec).unwrap();
+    });
+
+    let mut spec = JobSpec::new("m", path_str(&fifo));
+    spec.kind = JobKind::Stream;
+    spec.rank = 3;
+    spec.batch_rows = 8;
+    let id = client.submit_job(&spec).unwrap();
+    let end = client.wait_job(id, Duration::from_secs(180)).unwrap();
+    let job = end.get("job").unwrap();
+    assert_eq!(job.get("state").and_then(Json::as_str), Some("done"), "{}", end.render());
+    assert_eq!(job.get("generation").and_then(Json::as_usize), Some(1));
+    producer.join().unwrap();
+
+    // The publish hot-swaps into serving: generation 1 and the grown row
+    // count become visible to queries with no daemon restart.
+    let health = Json::obj(vec![("op", Json::str("health")), ("model", Json::str("m"))]);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let reply = client.call(&health).unwrap();
+        if reply.get("generation").and_then(Json::as_usize) == Some(1) {
+            break;
+        }
+        assert!(Instant::now() < deadline, "generation 1 never became visible to queries");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let info = client
+        .call(&Json::obj(vec![("op", Json::str("info")), ("model", Json::str("m"))]))
+        .unwrap();
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(120));
+
+    client.drain().unwrap();
+    server.join().unwrap().unwrap();
+}
