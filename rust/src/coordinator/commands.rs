@@ -284,6 +284,10 @@ pub fn stream(args: &Args) -> Result<()> {
         .sigma_cutoff_rel(cfg.sigma_cutoff_rel)
         .backend(make_backend(&cfg)?)
         .checkpoint(args.flag("checkpoint") || args.flag("resume"))
+        .checkpoint_interval(std::time::Duration::from_secs(args.usize_or(
+            "checkpoint-every",
+            crate::stream::DEFAULT_CHECKPOINT_INTERVAL.as_secs() as usize,
+        )? as u64))
         .resume(args.flag("resume"));
     // The extension guess only works on real paths; `--input-format` is the
     // explicit override (and the only way to frame stdin as anything but csv).

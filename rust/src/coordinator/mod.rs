@@ -72,15 +72,18 @@ COMMANDS
                   [--start-width 16] [--rank K] [--oversample P] [--center]
                   [--seed S] [--cols N] [--work-dir D] [--backend ...]
                   [--input-format csv|bin|libsvm|scsv|csr] [--save-model DIR]
-                  [--checkpoint] [--resume] [--config FILE]
+                  [--checkpoint] [--checkpoint-every SECS] [--resume]
+                  [--config FILE]
                 (reads rows exactly once — stdin (`-`), pipes, FIFOs and
                  sockets all work; the sketch starts at --start-width and
                  widens whenever the a posteriori residual estimate exceeds
                  --tol, up to --max-rank; --rank pins the output rank and
-                 disables widening; --checkpoint persists the sketch every
-                 batch so --resume continues a replayed stream from the last
-                 batch boundary; --save-model writes the same servable model
-                 directory the svd command does)
+                 disables widening; --checkpoint persists the sketch at
+                 batch boundaries [at most every --checkpoint-every seconds,
+                 default 5; 0 = every batch] so --resume continues a
+                 replayed stream from the last checkpointed boundary;
+                 --save-model writes the same servable model directory the
+                 svd command does)
   ata           streaming A^T A                --input PATH [--workers W] [--block B]
                   [--row-mode] [--backend ...] [--out PATH]
   project       random projection Y = A Ω      --input PATH --k K [--seed S] [--workers W]

@@ -22,6 +22,10 @@
 //! at-least-once — an update interrupted between publish and manifest
 //! rewrite can apply twice — which is the right trade for a daemon whose
 //! jobs are idempotent re-factorizations far more often than appends.
+//! Stream jobs are the exception: a streamed batch is an append, so their
+//! publish records the job id in the generation manifest and skips if a
+//! generation already carries it — a retried (or reaped-but-alive) attempt
+//! can never commit the same rows twice.
 //!
 //! Chaos knobs ([`JobSpec::chaos_fail_passes`], [`JobSpec::chaos_hang_ms`])
 //! sabotage the *first* attempt only, turning "worker killed mid-update"
@@ -471,6 +475,15 @@ impl Drop for JobManager {
     }
 }
 
+/// Scratch directory for one stream job's shards and checkpoints. Keyed by
+/// the job id under the daemon state dir (ids are unique per daemon and
+/// survive restarts in `jobs.manifest`), never by pid: a requeued or
+/// restart-recovered attempt must find its predecessor's checkpoint to
+/// resume instead of silently starting fresh.
+fn stream_work_dir(state_dir: &Path, job_id: u64) -> PathBuf {
+    state_dir.join("stream-scratch").join(format!("job-{job_id}"))
+}
+
 /// The supervisor loop: reap, zombie-check, start, persist — every tick.
 fn supervise(
     fleet: Arc<Fleet>,
@@ -479,15 +492,16 @@ fn supervise(
     state_path: PathBuf,
     zombie_after: Duration,
 ) {
+    let state_dir = state_path.parent().map(Path::to_path_buf).unwrap_or_default();
     while !halt.load(Ordering::SeqCst) {
         // Engine reloads happen outside the job lock: a reload re-opens
         // model shards from disk, and status queries must not wait on it.
         let mut reload: Vec<String> = Vec::new();
         {
             let mut inner = lock_unpoisoned(&inner);
-            let mut changed = reap_finished(&mut inner, &mut reload);
-            changed |= reap_zombies(&mut inner, zombie_after);
-            changed |= start_eligible(&fleet, &mut inner);
+            let mut changed = reap_finished(&mut inner, &state_dir, &mut reload);
+            changed |= reap_zombies(&mut inner, &state_dir, zombie_after);
+            changed |= start_eligible(&fleet, &mut inner, &state_dir);
             if changed {
                 persist(&state_path, &inner);
             }
@@ -506,7 +520,7 @@ fn supervise(
     }
 }
 
-fn reap_finished(inner: &mut Inner, reload: &mut Vec<String>) -> bool {
+fn reap_finished(inner: &mut Inner, state_dir: &Path, reload: &mut Vec<String>) -> bool {
     let mut changed = false;
     let mut i = 0;
     while i < inner.running.len() {
@@ -537,13 +551,13 @@ fn reap_finished(inner: &mut Inner, reload: &mut Vec<String>) -> bool {
                 reload.push(r.spec.model);
                 MetricsRegistry::global().add("daemon_jobs_completed", 1.0);
             }
-            Err(e) => settle_failure(inner, r.spec, r.attempts, e.to_string()),
+            Err(e) => settle_failure(inner, state_dir, r.spec, r.attempts, e.to_string()),
         }
     }
     changed
 }
 
-fn reap_zombies(inner: &mut Inner, zombie_after: Duration) -> bool {
+fn reap_zombies(inner: &mut Inner, state_dir: &Path, zombie_after: Duration) -> bool {
     let mut changed = false;
     let mut i = 0;
     while i < inner.running.len() {
@@ -553,9 +567,11 @@ fn reap_zombies(inner: &mut Inner, zombie_after: Duration) -> bool {
             continue;
         }
         // std threads cannot be killed: drop the handle (detaching the
-        // wedged worker) and let retry policy decide the job's fate. The
-        // detached thread can at worst error out later into nowhere — its
-        // unique work_dir keeps it from corrupting the retry's output.
+        // wedged worker) and let retry policy decide the job's fate. A
+        // detached update worker errors out into nowhere; a detached stream
+        // worker shares the retry's scratch dir, but commit-versioned
+        // checkpoints and the idempotent per-job publish keep the overlap
+        // harmless (see `run_stream_attempt`).
         let r = inner.running.remove(i);
         changed = true;
         LOG.warn(&format!(
@@ -566,6 +582,7 @@ fn reap_zombies(inner: &mut Inner, zombie_after: Duration) -> bool {
         MetricsRegistry::global().add("daemon_zombies_reaped", 1.0);
         settle_failure(
             inner,
+            state_dir,
             r.spec,
             r.attempts,
             format!("worker heartbeat stale for {:.1}s", stale.as_secs_f64()),
@@ -575,8 +592,15 @@ fn reap_zombies(inner: &mut Inner, zombie_after: Duration) -> bool {
 }
 
 /// A failed attempt goes back to the front of the queue while the job has
-/// retry budget, else the job is finished as failed.
-fn settle_failure(inner: &mut Inner, spec: JobSpec, attempts: usize, error: String) {
+/// retry budget, else the job is finished as failed (a failed stream job
+/// also drops its scratch dir — only a retry still needs the checkpoint).
+fn settle_failure(
+    inner: &mut Inner,
+    state_dir: &Path,
+    spec: JobSpec,
+    attempts: usize,
+    error: String,
+) {
     let spent = attempts + 1;
     if spent < spec.max_attempts {
         LOG.warn(&format!(
@@ -593,6 +617,9 @@ fn settle_failure(inner: &mut Inner, spec: JobSpec, attempts: usize, error: Stri
     } else {
         LOG.warn(&format!("job {} failed after {spent} attempt(s): {error}", spec.id));
         MetricsRegistry::global().add("daemon_jobs_failed", 1.0);
+        if spec.kind == JobKind::Stream {
+            let _ = std::fs::remove_dir_all(stream_work_dir(state_dir, spec.id));
+        }
         inner.finished.push(JobStatus {
             id: spec.id,
             model: spec.model,
@@ -605,7 +632,7 @@ fn settle_failure(inner: &mut Inner, spec: JobSpec, attempts: usize, error: Stri
     }
 }
 
-fn start_eligible(fleet: &Fleet, inner: &mut Inner) -> bool {
+fn start_eligible(fleet: &Fleet, inner: &mut Inner, state_dir: &Path) -> bool {
     let mut busy: BTreeSet<String> =
         inner.running.iter().map(|r| r.spec.model.clone()).collect();
     let mut changed = false;
@@ -626,20 +653,21 @@ fn start_eligible(fleet: &Fleet, inner: &mut Inner) -> bool {
         let Some(q) = inner.queue.remove(i) else { break };
         changed = true;
         busy.insert(q.spec.model.clone());
-        match start_attempt(fleet, &q) {
+        match start_attempt(fleet, &q, state_dir) {
             Ok(running) => inner.running.push(running),
-            Err(e) => settle_failure(inner, q.spec, q.attempts, e.to_string()),
+            Err(e) => settle_failure(inner, state_dir, q.spec, q.attempts, e.to_string()),
         }
     }
     changed
 }
 
-fn start_attempt(fleet: &Fleet, q: &QueuedJob) -> Result<RunningJob> {
+fn start_attempt(fleet: &Fleet, q: &QueuedJob, state_dir: &Path) -> Result<RunningJob> {
     let entry = fleet
         .get(&q.spec.model)
         .ok_or_else(|| Error::Config(format!("model `{}` is not registered", q.spec.model)))?;
     let root = entry.root().to_path_buf();
     let spec = q.spec.clone();
+    let scratch = state_dir.to_path_buf();
     let heartbeat = Arc::new(Mutex::new(Instant::now()));
     let hb = heartbeat.clone();
     // Chaos sabotages the first attempt only: the retry must prove the
@@ -647,7 +675,7 @@ fn start_attempt(fleet: &Fleet, q: &QueuedJob) -> Result<RunningJob> {
     let first = q.attempts == 0;
     let handle = std::thread::Builder::new()
         .name(format!("tallfatd-job-{}", spec.id))
-        .spawn(move || run_attempt(&spec, &root, hb, first))
+        .spawn(move || run_attempt(&spec, &root, &scratch, hb, first))
         .map_err(|e| Error::Other(format!("cannot spawn job worker: {e}")))?;
     LOG.info(&format!(
         "job {} attempt {} started for model `{}`",
@@ -661,11 +689,12 @@ fn start_attempt(fleet: &Fleet, q: &QueuedJob) -> Result<RunningJob> {
 fn run_attempt(
     spec: &JobSpec,
     root: &Path,
+    state_dir: &Path,
     heartbeat: Arc<Mutex<Instant>>,
     first_attempt: bool,
 ) -> Result<UpdateResult> {
     if spec.kind == JobKind::Stream {
-        return run_stream_attempt(spec, root, heartbeat, first_attempt);
+        return run_stream_attempt(spec, root, state_dir, heartbeat, first_attempt);
     }
     let input =
         InputSpec { path: spec.rows.clone(), format: InputFormat::from_path(&spec.rows) };
@@ -694,11 +723,13 @@ fn run_attempt(
 /// One stream-job attempt: factor the forward-only rows source in a single
 /// pass, then fold the finished factors into the model as the next
 /// generation. The per-batch progress callback doubles as the supervisor
-/// heartbeat, so a producer that stops feeding the pipe eventually trips
-/// the zombie reaper like any wedged update pass would.
+/// heartbeat and keeps ticking through the finish tail (recovery, Y→U
+/// rotation, publish), so only a producer that stops feeding the pipe —
+/// not a long but healthy tail — trips the zombie reaper.
 fn run_stream_attempt(
     spec: &JobSpec,
     root: &Path,
+    state_dir: &Path,
     heartbeat: Arc<Mutex<Instant>>,
     first_attempt: bool,
 ) -> Result<UpdateResult> {
@@ -707,15 +738,17 @@ fn run_stream_attempt(
     let store = crate::serve::store::ModelStore::open(root, 1)?;
     let (n, centered) = (store.n(), store.centered());
     drop(store);
-    // Stable per-job scratch: a retried attempt resumes from the last
-    // checkpointed batch boundary instead of starting over (the producer
-    // must replay the stream; absorbed rows are skipped, their Y shards
-    // reused from disk).
-    let work_dir = std::env::temp_dir()
-        .join(format!("tallfat_stream_job_{}_{}", std::process::id(), spec.id))
-        .to_string_lossy()
-        .into_owned();
-    let hb = heartbeat;
+    // Stable per-job scratch (no pid!): a requeued attempt — including one
+    // re-run after a daemon restart — resumes from the last checkpointed
+    // batch boundary instead of silently starting fresh (the producer must
+    // replay the stream; absorbed rows are skipped, their Y shards reused
+    // from disk). The dir is removed on success and on terminal failure
+    // (`settle_failure`). A reaped-but-still-alive predecessor shares this
+    // dir; its checkpoint writes are commit-versioned (see
+    // `stream::checkpoint`) and its publish is made idempotent below, so
+    // the overlap cannot double-count rows.
+    let work_dir = stream_work_dir(state_dir, spec.id).to_string_lossy().into_owned();
+    let hb = heartbeat.clone();
     let mut builder = crate::stream::StreamSvd::open(&spec.rows)
         .format(InputFormat::from_path(&spec.rows))
         .tol(spec.tol)
@@ -743,6 +776,10 @@ fn run_stream_attempt(
             rank: (spec.rank > 0).then_some(spec.rank),
             keep_generations: spec.keep_generations,
             seed: Some(spec.seed),
+            job_id: Some(spec.id),
+            progress: Some(Arc::new(move || {
+                *lock_unpoisoned(&heartbeat) = Instant::now()
+            })),
         },
     )?;
     let _ = std::fs::remove_dir_all(&work_dir);

@@ -31,7 +31,7 @@ use crate::metrics::PhaseReport;
 use crate::svd::{SvdResult, DEFAULT_SIGMA_CUTOFF_REL};
 use std::io::Read;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 enum Source {
     Path(String),
@@ -58,6 +58,7 @@ pub struct StreamSvd {
     backend: Option<BackendRef>,
     sigma_cutoff_rel: f64,
     checkpoint: bool,
+    checkpoint_interval: Duration,
     resume: bool,
     save_model: Option<String>,
     progress: Option<ProgressFn>,
@@ -92,6 +93,7 @@ impl StreamSvd {
             backend: None,
             sigma_cutoff_rel: DEFAULT_SIGMA_CUTOFF_REL,
             checkpoint: false,
+            checkpoint_interval: super::DEFAULT_CHECKPOINT_INTERVAL,
             resume: false,
             save_model: None,
             progress: None,
@@ -184,10 +186,21 @@ impl StreamSvd {
         self
     }
 
-    /// Persist the sketch after every batch so a crashed run resumes from
-    /// the last batch boundary.
+    /// Persist the sketch at batch boundaries so a crashed run resumes
+    /// from the last checkpointed boundary (cadence:
+    /// [`StreamSvd::checkpoint_interval`]).
     pub fn checkpoint(mut self, on: bool) -> Self {
         self.checkpoint = on;
+        self
+    }
+
+    /// Minimum time between checkpoint writes (default
+    /// [`super::DEFAULT_CHECKPOINT_INTERVAL`]; zero = every batch).
+    /// Checkpoints still land only at batch boundaries — a longer cadence
+    /// trades more replay on resume for less O(n·width) checkpoint I/O
+    /// per absorbed batch.
+    pub fn checkpoint_interval(mut self, interval: Duration) -> Self {
+        self.checkpoint_interval = interval;
         self
     }
 
@@ -267,13 +280,24 @@ impl StreamSvd {
         let sy = ShardSet::new(&self.work_dir, "SY", InputFormat::Bin)?;
         let metrics = MetricsRegistry::global();
         let mut report = PhaseReport::new();
+        let mut progress = self.progress.take();
 
         let mut sketch: Option<SketchState> = None;
         let mut shard_epochs: Vec<u32> = Vec::new();
         if self.resume {
             let t0 = Instant::now();
             if let Some((sk, eps)) = checkpoint::load(&self.work_dir, self.seed)? {
-                source.skip_rows(sk.rows())?;
+                // Replay in chunks so a long skip keeps the progress
+                // callback (and any supervisor heartbeat behind it) alive.
+                let mut remaining = sk.rows();
+                while remaining > 0 {
+                    let chunk = remaining.min(64 * 1024);
+                    source.skip_rows(chunk)?;
+                    remaining -= chunk;
+                    if let Some(cb) = progress.as_mut() {
+                        cb(sk.rows() - remaining, sk.width());
+                    }
+                }
                 report.push("stream.resume_skip", t0.elapsed(), sk.rows(), 0);
                 shard_epochs = eps;
                 sketch = Some(sk);
@@ -290,6 +314,7 @@ impl StreamSvd {
         // For dense streams the sketch never needs to be wider than n; a
         // sparse dictionary can still grow, so it stays unclamped there.
         let mut dense_cols: Option<usize> = None;
+        let mut last_checkpoint = Instant::now();
 
         loop {
             let t0 = Instant::now();
@@ -354,12 +379,13 @@ impl StreamSvd {
                     }
                 }
             }
-            if self.checkpoint {
+            if self.checkpoint && last_checkpoint.elapsed() >= self.checkpoint_interval {
                 let t0 = Instant::now();
                 checkpoint::save(&self.work_dir, sk, &shard_epochs)?;
+                last_checkpoint = Instant::now();
                 report.push("stream.checkpoint", t0.elapsed(), 0, 0);
             }
-            if let Some(cb) = self.progress.as_mut() {
+            if let Some(cb) = progress.as_mut() {
                 cb(sk.rows(), sk.width());
             }
         }
@@ -367,6 +393,12 @@ impl StreamSvd {
         let sk = sketch
             .ok_or_else(|| Error::Other("stream ended before any rows arrived".into()))?;
 
+        // The finish tail (recovery + shard rotation) runs after the last
+        // batch callback; keep ticking so a supervisor heartbeat riding
+        // the callback does not go stale over a long tail.
+        if let Some(cb) = progress.as_mut() {
+            cb(sk.rows(), sk.width());
+        }
         let t0 = Instant::now();
         let rec = sk.finish(
             self.center,
@@ -415,6 +447,9 @@ impl StreamSvd {
                 rotated_rows += 1;
             }
             w.finish()?;
+            if let Some(cb) = progress.as_mut() {
+                cb(sk.rows(), sk.width());
+            }
         }
         report.push("stream.rotate_u", t0.elapsed(), rotated_rows, 0);
         if rotated_rows != sk.rows() {

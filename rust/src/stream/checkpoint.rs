@@ -9,17 +9,20 @@
 //! Layout under the work dir, all binmat (bit-exact f64):
 //!
 //! ```text
-//! stream.ckpt            key=value manifest, written last via tmp+rename
-//! ckpt-G.bin ckpt-W.bin  the two accumulators
-//! ckpt-ep<e>-cs.bin      epoch e column sums       (1 x n)
-//! ckpt-ep<e>-sy.bin      epoch e sketch-row sum    (1 x width)
-//! ckpt-ep<e>-map.bin     epoch e extension map     (w_e x width, closed only)
+//! stream.ckpt                key=value manifest, written last via tmp+rename
+//! ckpt-g<s>-G.bin ...-W.bin  save s: the two accumulators
+//! ckpt-g<s>-ep<e>-cs.bin     save s, epoch e column sums    (1 x n)
+//! ckpt-g<s>-ep<e>-sy.bin     save s, epoch e sketch-row sum (1 x width)
+//! ckpt-g<s>-ep<e>-map.bin    save s, epoch e extension map  (closed only)
 //! ```
 //!
-//! The manifest is the commit record: matrices are written (tmp + rename)
-//! first, the manifest last, so a crash mid-checkpoint leaves the previous
-//! complete checkpoint intact. `fro2` travels as `f64::to_bits` so the
-//! resumed accumulator is bit-identical.
+//! The manifest is the commit record and each save writes a *fresh
+//! generation* of state files (`save_gen` in the manifest names it): a
+//! crash anywhere before the manifest rename leaves the previous
+//! checkpoint's files untouched and still referenced, so a resume can
+//! never pair an old row count with newer accumulators. Superseded
+//! generations are garbage-collected only after the rename. `fro2`
+//! travels as `f64::to_bits` so the resumed accumulator is bit-identical.
 //!
 //! On resume the *source* must be replayed to the checkpointed row count:
 //! a regular file is simply re-read and skipped ([`super::StreamSource::skip_rows`]);
@@ -52,19 +55,63 @@ fn row_matrix(v: &[f64]) -> Matrix {
     Matrix::from_fn(1, v.len().max(1), |_, j| v.get(j).copied().unwrap_or(0.0))
 }
 
-/// Persist the sketch and shard registry under `dir`.
-pub fn save(dir: &str, sketch: &SketchState, shard_epochs: &[u32]) -> Result<()> {
-    write_atomic(&sketch.g, &path_of(dir, "ckpt-G.bin"))?;
-    write_atomic(&sketch.w, &path_of(dir, "ckpt-W.bin"))?;
+/// `ckpt-g<s>-<name>` for save generation `s`.
+fn gen_file(dir: &str, gen: u64, name: &str) -> String {
+    path_of(dir, &format!("ckpt-g{gen}-{name}"))
+}
+
+/// Parse the save generation out of a `ckpt-g<s>-...` file name.
+fn parse_gen(name: &str) -> Option<u64> {
+    let rest = name.strip_prefix("ckpt-g")?;
+    rest[..rest.find('-')?].parse().ok()
+}
+
+/// Next unused save generation: one past the largest on disk, so a new
+/// save can never overwrite files a crashed or concurrent save's manifest
+/// might still reference.
+fn next_save_gen(dir: &str) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 1 };
+    entries
+        .flatten()
+        .filter_map(|e| parse_gen(&e.file_name().to_string_lossy()))
+        .max()
+        .unwrap_or(0)
+        + 1
+}
+
+/// Write save generation `gen`'s state files (everything but the manifest).
+fn write_state_files(dir: &str, gen: u64, sketch: &SketchState) -> Result<()> {
+    write_atomic(&sketch.g, &gen_file(dir, gen, "G.bin"))?;
+    write_atomic(&sketch.w, &gen_file(dir, gen, "W.bin"))?;
     for (e, ep) in sketch.epochs.iter().enumerate() {
-        write_atomic(&row_matrix(&ep.colsums), &path_of(dir, &format!("ckpt-ep{e}-cs.bin")))?;
-        write_atomic(&row_matrix(&ep.s_y), &path_of(dir, &format!("ckpt-ep{e}-sy.bin")))?;
+        write_atomic(&row_matrix(&ep.colsums), &gen_file(dir, gen, &format!("ep{e}-cs.bin")))?;
+        write_atomic(&row_matrix(&ep.s_y), &gen_file(dir, gen, &format!("ep{e}-sy.bin")))?;
         if let Some(map) = &ep.map {
-            write_atomic(map, &path_of(dir, &format!("ckpt-ep{e}-map.bin")))?;
+            write_atomic(map, &gen_file(dir, gen, &format!("ep{e}-map.bin")))?;
         }
     }
+    Ok(())
+}
+
+/// Best-effort removal of every state file not belonging to `keep`.
+fn gc_state_files(dir: &str, keep: u64) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with("ckpt-") && parse_gen(&name) != Some(keep) {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+/// Persist the sketch and shard registry under `dir`.
+pub fn save(dir: &str, sketch: &SketchState, shard_epochs: &[u32]) -> Result<()> {
+    let gen = next_save_gen(dir);
+    write_state_files(dir, gen, sketch)?;
     let mut m = KvManifest::new();
-    m.set("version", 1);
+    m.set("version", 2);
+    m.set("save_gen", gen);
     m.set("seed", sketch.seed);
     m.set("rows", sketch.rows);
     m.set("n", sketch.n);
@@ -82,6 +129,8 @@ pub fn save(dir: &str, sketch: &SketchState, shard_epochs: &[u32]) -> Result<()>
     let tmp = format!("{dst}.tmp-{}", std::process::id());
     m.save(&tmp)?;
     std::fs::rename(&tmp, &dst)?;
+    // Committed — only now is the previous generation unreferenced.
+    gc_state_files(dir, gen);
     Ok(())
 }
 
@@ -106,14 +155,19 @@ pub fn load(dir: &str, seed: u64) -> Result<Option<(SketchState, Vec<u32>)>> {
     let rows = m
         .get_u64("rows")?
         .ok_or_else(|| Error::parse("checkpoint: missing rows"))?;
+    // The manifest names the exact save generation it committed, so the
+    // files read here are always the ones written together with it.
+    let gen = m
+        .get_u64("save_gen")?
+        .ok_or_else(|| Error::parse("checkpoint: missing save_gen (pre-v2 format?)"))?;
     let n = m.require_usize("n")?;
     let width = m.require_usize("width")?;
     let fro2 = f64::from_bits(
         m.get_u64("fro2_bits")?
             .ok_or_else(|| Error::parse("checkpoint: missing fro2_bits"))?,
     );
-    let g = read_matrix_bin(&path_of(dir, "ckpt-G.bin"))?;
-    let w = read_matrix_bin(&path_of(dir, "ckpt-W.bin"))?;
+    let g = read_matrix_bin(&gen_file(dir, gen, "G.bin"))?;
+    let w = read_matrix_bin(&gen_file(dir, gen, "W.bin"))?;
     if g.shape() != (width, width) || w.shape() != (n, width) {
         return Err(Error::shape(format!(
             "checkpoint: G {:?} / W {:?} disagree with manifest ({n}, {width})",
@@ -128,13 +182,13 @@ pub fn load(dir: &str, seed: u64) -> Result<Option<(SketchState, Vec<u32>)>> {
         let ep_rows = m
             .get_u64(&format!("epoch{e}_rows"))?
             .ok_or_else(|| Error::parse(format!("checkpoint: missing epoch{e}_rows")))?;
-        let cs = read_matrix_bin(&path_of(dir, &format!("ckpt-ep{e}-cs.bin")))?;
-        let sy = read_matrix_bin(&path_of(dir, &format!("ckpt-ep{e}-sy.bin")))?;
+        let cs = read_matrix_bin(&gen_file(dir, gen, &format!("ep{e}-cs.bin")))?;
+        let sy = read_matrix_bin(&gen_file(dir, gen, &format!("ep{e}-sy.bin")))?;
         let mut colsums = cs.row(0).to_vec();
         colsums.resize(n, 0.0); // a 0-col epoch serializes as 1x1
         let mut s_y = sy.row(0).to_vec();
         s_y.resize(width, 0.0);
-        let map_path = path_of(dir, &format!("ckpt-ep{e}-map.bin"));
+        let map_path = gen_file(dir, gen, &format!("ep{e}-map.bin"));
         let map = if e + 1 < n_epochs {
             Some(read_matrix_bin(&map_path)?)
         } else {
@@ -226,6 +280,55 @@ mod tests {
         let y2 = sk.absorb_dense(&extra, &be).unwrap();
         assert_eq!(y1.max_abs_diff(&y2), 0.0);
         assert_eq!(again.g.max_abs_diff(&sk.g), 0.0);
+    }
+
+    /// A crash after the new save's state files land but before the
+    /// manifest rename must leave the previous checkpoint fully intact —
+    /// resuming from it and re-absorbing the lost batch must be identical
+    /// to never having crashed (no double-counted rows).
+    #[test]
+    fn crash_before_manifest_commit_keeps_previous_checkpoint() {
+        let be = NativeBackend::new();
+        let a = Matrix::from_fn(40, 10, |i, j| ((i * 17 + j * 5) % 11) as f64 - 5.0);
+        let mut sk = SketchState::new(23, 10, 4);
+        sk.absorb_dense(&a.slice_rows(0, 20), &be).unwrap();
+        let dir = tmp_dir("crash");
+        save(&dir, &sk, &[0]).unwrap();
+        let committed_g = sk.g.clone();
+
+        // The crashing save: absorb one more batch, write the next
+        // generation's state files... and die before the manifest rename.
+        sk.absorb_dense(&a.slice_rows(20, 30), &be).unwrap();
+        let gen = next_save_gen(&dir);
+        write_state_files(&dir, gen, &sk).unwrap();
+
+        let (back, _) = load(&dir, 23).unwrap().unwrap();
+        assert_eq!(back.rows(), 20, "must resume at the committed row count");
+        assert_eq!(
+            back.g.max_abs_diff(&committed_g),
+            0.0,
+            "accumulators must match the committed rows, not the torn save"
+        );
+
+        // Replaying rows 20.. from the loaded state converges with the
+        // uninterrupted sketch — nothing was absorbed twice.
+        let mut resumed = back;
+        resumed.absorb_dense(&a.slice_rows(20, 30), &be).unwrap();
+        assert_eq!(resumed.rows(), sk.rows());
+        assert_eq!(resumed.g.max_abs_diff(&sk.g), 0.0);
+
+        // A completed save commits and GCs the superseded generation.
+        save(&dir, &resumed, &[0, 1]).unwrap();
+        let (again, _) = load(&dir, 23).unwrap().unwrap();
+        assert_eq!(again.rows(), 30);
+        let keep = next_save_gen(&dir) - 1;
+        let stale: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with("ckpt-") && parse_gen(n) != Some(keep))
+            .collect();
+        assert!(stale.is_empty(), "stale generations not GC'd: {stale:?}");
     }
 
     #[test]

@@ -75,3 +75,9 @@ pub const DEFAULT_BATCH_ROWS: usize = 1024;
 
 /// Default initial sketch width of the adaptive finder.
 pub const DEFAULT_START_WIDTH: usize = 16;
+
+/// Default minimum time between checkpoint writes. Checkpoints land only
+/// at batch boundaries; the cadence keeps O(n·width) checkpoint I/O from
+/// dominating absorb time when batches are small or sparse.
+pub const DEFAULT_CHECKPOINT_INTERVAL: std::time::Duration =
+    std::time::Duration::from_secs(5);

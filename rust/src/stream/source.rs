@@ -6,6 +6,13 @@
 //! Binary headers are parsed from the byte stream itself; the binmat row
 //! count is treated as advisory (a piped writer may not have back-patched
 //! it), rows are read until EOF and a torn trailing row is an error.
+//! CSR framing is the exception: its indptr table travels *before* the
+//! payloads, so the header row count is load-bearing — a CSR producer
+//! writing into a pipe must emit an accurate header up front (`rows = 0`
+//! is rejected; use libsvm / sparse-csv framing for open-ended sparse
+//! streams). The count is still not trusted with memory: indptr is read
+//! incrementally and a stream ending mid-table is a framing error, not a
+//! huge allocation.
 //!
 //! Sparse text streams keep a *persistent column dictionary*: the width is
 //! the running max column index + 1 across every batch seen so far (or the
@@ -196,8 +203,20 @@ impl StreamSource {
                         "stream: unsupported csr version {version}"
                     )));
                 }
-                let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+                let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap());
                 let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+                // Unlike binmat, csr cannot treat the header count as
+                // advisory: indptr travels before the payloads and is
+                // sized by it. A placeholder header would silently frame
+                // an empty stream, so demand an accurate one.
+                if rows == 0 {
+                    return Err(Error::parse(
+                        "stream: csr header claims 0 rows — csr framing needs an \
+                         accurate up-front row count (a piped producer cannot \
+                         back-patch it; use libsvm or sparse-csv framing for \
+                         open-ended sparse streams)",
+                    ));
+                }
                 if self.cols_pin > 0 && cols > self.cols_pin {
                     return Err(Error::Config(format!(
                         "stream: csr header width {cols} exceeds the pinned --cols {}",
@@ -205,14 +224,29 @@ impl StreamSource {
                     )));
                 }
                 self.cols = self.cols.max(cols);
-                // indptr: (rows + 1) u64s, read sequentially.
-                let mut ip = vec![0u8; 8];
-                let mut indptr = Vec::with_capacity(rows + 1);
-                for _ in 0..=rows {
-                    self.reader.read_exact(&mut ip)?;
-                    indptr.push(u64::from_le_bytes(ip[..].try_into().unwrap()));
+                // indptr: (rows + 1) u64s, read sequentially. The claimed
+                // count bounds the loop, never an up-front allocation — a
+                // corrupt or hostile header hits EOF, not the allocator.
+                let count = rows.saturating_add(1);
+                let mut ip = [0u8; 8];
+                let mut indptr: Vec<u64> = Vec::with_capacity(count.min(1 << 16) as usize);
+                for i in 0..count {
+                    self.reader.read_exact(&mut ip).map_err(|e| {
+                        Error::parse(format!(
+                            "stream: csr indptr truncated at entry {i} of {count} \
+                             (header claims {rows} rows): {e}"
+                        ))
+                    })?;
+                    let v = u64::from_le_bytes(ip);
+                    if indptr.last().is_some_and(|&prev| v < prev) {
+                        return Err(Error::parse(format!(
+                            "stream: csr indptr decreases at entry {i} ({v} after {})",
+                            indptr.last().unwrap()
+                        )));
+                    }
+                    indptr.push(v);
                 }
-                let row_nnz = indptr.windows(2).map(|w| w[1].saturating_sub(w[0])).collect();
+                let row_nnz = indptr.windows(2).map(|w| w[1] - w[0]).collect();
                 Framing::Csr { row_nnz, next: 0 }
             }
         };
@@ -492,6 +526,49 @@ mod tests {
             _ => panic!("sparse expected"),
         }
         assert!(s.next_batch(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn csr_zero_row_header_rejected() {
+        let mut sm = SparseMatrix::with_cols(4);
+        sm.push_row(&[1], &[2.0]).unwrap();
+        let path = tmp("zero_rows.csr");
+        crate::io::sparse::write_sparse_matrix(&sm, &path, InputFormat::Csr).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[8..16].copy_from_slice(&0u64.to_le_bytes());
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Csr);
+        let err = s.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("0 rows"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn csr_hostile_row_count_errors_instead_of_allocating() {
+        let mut sm = SparseMatrix::with_cols(4);
+        sm.push_row(&[0], &[1.0]).unwrap();
+        let path = tmp("hostile.csr");
+        crate::io::sparse::write_sparse_matrix(&sm, &path, InputFormat::Csr).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Claim u64::MAX rows: the reader must hit EOF mid-indptr, not
+        // attempt a (rows + 1) * 8 byte allocation.
+        bytes[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Csr);
+        let err = s.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("indptr truncated"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn csr_decreasing_indptr_rejected() {
+        let mut sm = SparseMatrix::with_cols(4);
+        sm.push_row(&[0, 1], &[1.0, 2.0]).unwrap();
+        sm.push_row(&[2], &[3.0]).unwrap();
+        let path = tmp("decreasing.csr");
+        crate::io::sparse::write_sparse_matrix(&sm, &path, InputFormat::Csr).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // indptr entries start at byte 32; corrupt the middle one (2 -> 7).
+        bytes[40..48].copy_from_slice(&7u64.to_le_bytes());
+        let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Csr);
+        let err = s.next_batch(1).unwrap_err().to_string();
+        assert!(err.contains("indptr decreases"), "unexpected error: {err}");
     }
 
     #[test]

@@ -19,9 +19,10 @@ use crate::error::{Error, Result};
 use crate::io::writer::{ShardReader, ShardSet, ShardWriter};
 use crate::linalg::{matmul, Matrix};
 use crate::metrics::PhaseReport;
+use crate::io::manifest::KvManifest;
 use crate::serve::store::{
-    begin_generation, embedding_norm, gc_generations, generation_dir_name, model_manifest,
-    next_generation, publish_generation, ModelStore,
+    begin_generation, embedding_norm, gc_generations, generation_dir_name, list_generations,
+    model_manifest, next_generation, publish_generation, ModelStore,
 };
 use crate::svd::SvdResult;
 use crate::update::merge::{merge_factored, FactoredBlock};
@@ -41,11 +42,25 @@ pub struct StreamPublish {
     pub keep_generations: usize,
     /// Ω seed recorded in the manifest (the stream's seed).
     pub seed: Option<u64>,
+    /// Daemon job id recorded in the generation manifest. When set, the
+    /// publish is idempotent per id: if some generation already carries it
+    /// (a reaped-but-alive predecessor committed before this retry), that
+    /// generation is returned instead of appending the same rows twice.
+    pub job_id: Option<u64>,
+    /// Called at shard-rotation boundaries — a long publish tail can
+    /// otherwise outlive a supervisor's heartbeat horizon.
+    pub progress: Option<std::sync::Arc<dyn Fn() + Send + Sync>>,
 }
 
 impl Default for StreamPublish {
     fn default() -> Self {
-        StreamPublish { rank: None, keep_generations: 2, seed: None }
+        StreamPublish {
+            rank: None,
+            keep_generations: 2,
+            seed: None,
+            job_id: None,
+            progress: None,
+        }
     }
 }
 
@@ -60,6 +75,21 @@ pub fn publish_stream_result(
     opts: &StreamPublish,
 ) -> Result<UpdateResult> {
     let root = root.as_ref();
+    if let Some(job_id) = opts.job_id {
+        if let Some(done) = find_published_job(root, job_id)? {
+            LOG.warn(&format!(
+                "stream publish: job {job_id} already committed generation {} — \
+                 returning it instead of appending the stream twice",
+                done.generation
+            ));
+            return Ok(done);
+        }
+    }
+    let tick = || {
+        if let Some(p) = &opts.progress {
+            p();
+        }
+    };
     let store = ModelStore::open(root, 1)?;
     let n = store.n();
     if result.n != n {
@@ -85,6 +115,7 @@ pub fn publish_stream_result(
     let mut report = PhaseReport::new();
 
     let t0 = Instant::now();
+    tick();
     let merged = merge_factored(
         &FactoredBlock { sigma: store.sigma(), v: store.v(), m: store.m(), mu: store.means() },
         &FactoredBlock { sigma: &result.sigma, v: v1, m: result.m, mu: result.means.as_deref() },
@@ -127,6 +158,7 @@ pub fn publish_stream_result(
         )?;
         shard_rows.push(count);
         total += count;
+        tick();
     }
     for i in 0..result.shards {
         let count = rotate_shard(
@@ -140,6 +172,7 @@ pub fn publish_stream_result(
         )?;
         shard_rows.push(count);
         total += count;
+        tick();
     }
     norms.finish()?;
     if total != store.m() + result.m {
@@ -149,7 +182,7 @@ pub fn publish_stream_result(
         )));
     }
 
-    model_manifest(
+    let mut man = model_manifest(
         total,
         n,
         k_new,
@@ -158,8 +191,12 @@ pub fn publish_stream_result(
         next,
         Some(store.generation()),
         opts.seed,
-    )
-    .save(gen_dir.join("model.manifest"))?;
+    );
+    if let Some(job_id) = opts.job_id {
+        man.set("stream_job_id", job_id);
+        man.set("stream_rows_added", result.m);
+    }
+    man.save(gen_dir.join("model.manifest"))?;
     publish_generation(root, next)?;
     report.push("leader.write_generation", t0.elapsed(), total as u64, 0);
     // Committed; GC is best-effort from here — a "failed" retry would
@@ -185,6 +222,45 @@ pub fn publish_stream_result(
         sigma: merged.sigma,
         report,
     })
+}
+
+/// Scan committed generations for one already published by `job_id` (see
+/// [`StreamPublish::job_id`]). Half-written generation dirs have no
+/// manifest and are skipped.
+fn find_published_job(root: &Path, job_id: u64) -> Result<Option<UpdateResult>> {
+    for (generation, dir) in list_generations(root)? {
+        let Ok(man) = KvManifest::load(dir.join("model.manifest")) else { continue };
+        if man.get_u64("stream_job_id").ok().flatten() != Some(job_id) {
+            continue;
+        }
+        let m = man.require_usize("m")?;
+        let n = man.require_usize("n")?;
+        let k = man.require_usize("k")?;
+        let rows_added = man
+            .get_u64("stream_rows_added")?
+            .ok_or_else(|| Error::parse("generation manifest: missing stream_rows_added"))?
+            as usize;
+        let sigma = std::fs::read_to_string(dir.join("sigma.csv"))
+            .map_err(|e| Error::Other(format!("cannot read {}/sigma.csv: {e}", dir.display())))?
+            .lines()
+            .map(|l| {
+                l.trim().parse().map_err(|_| {
+                    Error::parse(format!("{}: sigma.csv: bad value `{l}`", dir.display()))
+                })
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        return Ok(Some(UpdateResult {
+            generation,
+            dir,
+            m,
+            n,
+            k,
+            rows_added,
+            sigma,
+            report: PhaseReport::new(),
+        }));
+    }
+    Ok(None)
 }
 
 /// Stream one `U` shard through a `k x k'` rotation (plus the centered
@@ -318,6 +394,64 @@ mod tests {
         let recon = matmul(&u.scale_cols(store.sigma()).unwrap(), &store.v().t()).unwrap();
         let rel = recon.max_abs_diff(&a) / a.max_abs();
         assert!(rel < 1e-5, "published generation reconstruction rel err {rel}");
+    }
+
+    /// A retried publish carrying the same job id (a reaped-but-alive
+    /// predecessor already committed) must return the existing generation
+    /// instead of appending the streamed rows a second time.
+    #[test]
+    fn stream_publish_is_idempotent_per_job_id() {
+        let (m0, m1, n, rank) = (30usize, 20usize, 8usize, 3usize);
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let (a, _) =
+            gen_exact(m0 + m1, n, rank, Spectrum::Geometric { scale: 4.0, decay: 0.5 }, 0.0, 7)
+                .unwrap();
+        let base = tmp_dir("idem_rows");
+        let base_csv = format!("{base}/a0.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(0, m0), &base_csv).unwrap();
+        let model_dir = tmp_dir("idem_model");
+        crate::svd::Svd::over(&InputSpec::csv(&base_csv))
+            .unwrap()
+            .rank(rank)
+            .work_dir(tmp_dir("idem_work"))
+            .save_model(&model_dir)
+            .run()
+            .unwrap();
+        let tail_csv = format!("{base}/a1.csv");
+        crate::io::csv::write_matrix_csv(&a.slice_rows(m0, m0 + m1), &tail_csv).unwrap();
+        let streamed = StreamSvd::open(&tail_csv)
+            .rank(rank)
+            .cols(n)
+            .work_dir(tmp_dir("idem_stream_work"))
+            .run()
+            .unwrap();
+
+        let opts = StreamPublish {
+            rank: Some(rank),
+            job_id: Some(42),
+            ..Default::default()
+        };
+        let first = publish_stream_result(&model_dir, &streamed, &backend, &opts).unwrap();
+        assert_eq!(first.m, m0 + m1);
+        let second = publish_stream_result(&model_dir, &streamed, &backend, &opts).unwrap();
+        assert_eq!(second.generation, first.generation, "retry must reuse the generation");
+        assert_eq!(second.m, first.m);
+        assert_eq!(second.rows_added, first.rows_added);
+        assert_eq!(second.k, first.k);
+        assert_eq!(second.sigma, first.sigma);
+        let store = ModelStore::open(&model_dir, 1).unwrap();
+        assert_eq!(store.generation(), first.generation);
+        assert_eq!(store.m(), m0 + m1, "rows must not be appended twice");
+
+        // A different job id is a genuinely new publish.
+        let other = StreamPublish {
+            rank: Some(rank),
+            job_id: Some(43),
+            ..Default::default()
+        };
+        let third = publish_stream_result(&model_dir, &streamed, &backend, &other).unwrap();
+        assert_eq!(third.generation, first.generation + 1);
+        assert_eq!(third.m, m0 + 2 * m1);
     }
 
     #[test]

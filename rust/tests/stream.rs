@@ -289,7 +289,8 @@ fn interrupted_stream_resumes_from_checkpoint() {
     let work = path_str(&d.join("work"));
 
     // First attempt: 60 rows arrive, then the producer dies. Batches of 16
-    // checkpoint as they land, so 48 rows of sketch state survive.
+    // checkpoint as they land (zero cadence = every batch), so 48 rows of
+    // sketch state survive.
     let err = StreamSvd::from(std::io::Cursor::new(head.into_bytes()).chain(FailingReader))
         .format(InputFormat::Csv)
         .rank(RANK)
@@ -298,6 +299,7 @@ fn interrupted_stream_resumes_from_checkpoint() {
         .batch_rows(16)
         .work_dir(&work)
         .checkpoint(true)
+        .checkpoint_interval(Duration::from_secs(0))
         .run();
     assert!(err.is_err(), "injected failure must abort the stream");
 
@@ -308,6 +310,7 @@ fn interrupted_stream_resumes_from_checkpoint() {
         .batch_rows(16)
         .work_dir(&work)
         .checkpoint(true)
+        .checkpoint_interval(Duration::from_secs(0))
         .resume(true)
         .run()
         .unwrap();
