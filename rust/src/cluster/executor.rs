@@ -128,7 +128,7 @@ impl Executor for ClusterExecutor {
         } else {
             Some(splitproc::reduce_partials(partials)?)
         };
-        publish_sched_stats(&stats);
+        publish_sched_stats(pass.name(), &stats);
         Ok(PassOutput { rows, shards: total, partial, stats })
     }
 }

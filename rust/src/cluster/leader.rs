@@ -26,6 +26,7 @@ use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::InputSpec;
 use crate::linalg::Matrix;
+use crate::obs::trace::{self, next_id, Span, TraceCtx, TraceEvent};
 use crate::splitproc::{ChunkScheduler, SchedStats};
 use crate::util::Logger;
 use std::net::{TcpListener, TcpStream};
@@ -45,16 +46,31 @@ pub const STALE_AFTER_MS: u64 = 10_000;
 /// sweep).
 const EVENT_POLL_MS: u64 = 1_000;
 
+/// Trace lane for merged worker chunk events: lane = base + worker index.
+/// Kept clear of the leader's own small per-thread lane ids.
+const WORKER_LANE_BASE: u64 = 100;
+
 /// One connected worker, leader-side: the write half of its socket plus
 /// scheduling state. The read half lives in its recv thread.
 struct Worker {
     stream: TcpStream,
+    /// Peer address, for logs and trace attribution.
+    peer: String,
     alive: bool,
     /// The `(phase, chunk)` assignment in flight, if any (workers execute
     /// one chunk at a time).
     busy: Option<(u64, u32)>,
     busy_since: Instant,
     last_seen: Instant,
+    /// Span id of the in-flight assignment (0 when the run isn't traced);
+    /// the merged timeline event for the chunk reuses it, so the worker's
+    /// logs and the leader's event carry the same span.
+    assign_span: u64,
+    /// The in-flight assignment re-runs a chunk that was assigned before
+    /// (failure retry or death requeue).
+    assign_retry: bool,
+    /// The in-flight assignment is a speculative duplicate.
+    assign_speculative: bool,
 }
 
 enum Event {
@@ -182,15 +198,23 @@ impl DistributedLeader {
     /// write half. The hello must already have been consumed.
     fn register(&mut self, stream: TcpStream) -> Result<usize> {
         let id = self.workers.len();
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| format!("worker-{id}"));
         let reader = stream.try_clone()?;
         let tx = self.events_tx.clone();
         std::thread::spawn(move || recv_loop(reader, id, tx));
         self.workers.push(Worker {
             stream,
+            peer,
             alive: true,
             busy: None,
             busy_since: Instant::now(),
             last_seen: Instant::now(),
+            assign_span: 0,
+            assign_retry: false,
+            assign_speculative: false,
         });
         Ok(id)
     }
@@ -225,6 +249,21 @@ impl DistributedLeader {
         }
         self.next_phase += 1;
         let phase_id = self.next_phase;
+        // Phase span on the leader's clock: chunk events merged from
+        // worker reports parent under it, so one trace file holds the
+        // whole cluster timeline (chunk ⊂ phase ⊂ run).
+        let mut phase_span = Span::child(kind.name(), "phase");
+        phase_span.arg_str("executor", "cluster");
+        phase_span.arg_num("chunks", chunk_total as f64);
+        let phase_ctx = phase_span.ctx();
+        if !phase_ctx.is_none() {
+            for (w, worker) in self.workers.iter().enumerate() {
+                trace::emit_global(&TraceEvent::thread_name(
+                    WORKER_LANE_BASE + w as u64,
+                    &format!("worker {w} ({})", worker.peer),
+                ));
+            }
+        }
         let setup = ToWorker::Phase {
             id: phase_id,
             kind,
@@ -240,6 +279,7 @@ impl DistributedLeader {
             shard_epoch,
             operand: operand.clone(),
             means: means.clone(),
+            trace: phase_ctx,
         };
         for w in 0..self.workers.len() {
             if self.workers[w].alive {
@@ -258,10 +298,11 @@ impl DistributedLeader {
         }
         let sched = ChunkScheduler::new(chunk_total, max_retries);
         let mut excluded: Vec<Vec<usize>> = vec![Vec::new(); chunk_total];
+        let mut assigns: Vec<u32> = vec![0; chunk_total];
         let mut rows_total = 0u64;
         let mut partials: Vec<Option<Matrix>> = (0..chunk_total).map(|_| None).collect();
         for w in 0..self.workers.len() {
-            self.assign_next(w, phase_id, &sched, &mut excluded);
+            self.assign_next(w, phase_id, phase_ctx, &sched, &mut excluded, &mut assigns);
         }
         while !sched.is_finished() {
             // Fence zombies every tick — even when other workers' events
@@ -272,7 +313,7 @@ impl DistributedLeader {
             // straggler that could free up) and nothing can be assigned.
             if !self.workers.iter().any(|w| w.alive && w.busy.is_some()) {
                 for w in 0..self.workers.len() {
-                    self.assign_next(w, phase_id, &sched, &mut excluded);
+                    self.assign_next(w, phase_id, phase_ctx, &sched, &mut excluded, &mut assigns);
                 }
                 if !self.workers.iter().any(|w| w.alive && w.busy.is_some()) {
                     return Err(Error::Other(format!(
@@ -287,9 +328,11 @@ impl DistributedLeader {
                 Ok(ev) => self.handle_event(
                     ev,
                     phase_id,
+                    phase_ctx,
                     &setup,
                     &sched,
                     &mut excluded,
+                    &mut assigns,
                     &mut rows_total,
                     &mut partials,
                 ),
@@ -303,7 +346,7 @@ impl DistributedLeader {
             // produce an event of their own before it is handed out.
             if !sched.is_finished() {
                 for w in 0..self.workers.len() {
-                    self.assign_next(w, phase_id, &sched, &mut excluded);
+                    self.assign_next(w, phase_id, phase_ctx, &sched, &mut excluded, &mut assigns);
                 }
             }
         }
@@ -317,9 +360,11 @@ impl DistributedLeader {
         &mut self,
         ev: Event,
         phase_id: u64,
+        phase_ctx: TraceCtx,
         setup: &ToWorker,
         sched: &ChunkScheduler,
         excluded: &mut [Vec<usize>],
+        assigns: &mut [u32],
         rows_total: &mut u64,
         partials: &mut [Option<Matrix>],
     ) {
@@ -346,7 +391,15 @@ impl DistributedLeader {
                 }
                 match msg {
                     ToLeader::Heartbeat | ToLeader::Hello { .. } => {}
-                    ToLeader::ChunkDone { phase, chunk, rows, partial } => {
+                    ToLeader::ChunkDone {
+                        phase,
+                        chunk,
+                        rows,
+                        decode_us,
+                        compute_us,
+                        encode_us,
+                        partial,
+                    } => {
                         // Only the execution the leader is tracking counts
                         // — and only it clears the busy slot: a report for
                         // an assignment the fence already released must
@@ -356,6 +409,19 @@ impl DistributedLeader {
                         if tracked {
                             let elapsed = self.workers[w].busy_since.elapsed();
                             self.workers[w].busy = None;
+                            // Merge this execution into the leader's
+                            // timeline: one X event per completed
+                            // execution, back-dated on the leader's clock,
+                            // on the worker's own lane.
+                            if !phase_ctx.is_none() && phase == phase_id {
+                                self.emit_chunk_event(
+                                    w,
+                                    phase_ctx,
+                                    chunk,
+                                    elapsed,
+                                    (decode_us, compute_us, encode_us),
+                                );
+                            }
                             if phase == phase_id && (chunk as usize) < partials.len() {
                                 // First completion wins; a duplicate's
                                 // result is dropped (its shard bytes are
@@ -368,7 +434,7 @@ impl DistributedLeader {
                                 }
                             }
                         }
-                        self.assign_next(w, phase_id, sched, excluded);
+                        self.assign_next(w, phase_id, phase_ctx, sched, excluded, assigns);
                     }
                     ToLeader::ChunkFailed { phase, chunk, message } => {
                         let tracked = self.workers[w].busy == Some((phase, chunk));
@@ -384,7 +450,7 @@ impl DistributedLeader {
                                 );
                             }
                         }
-                        self.assign_next(w, phase_id, sched, excluded);
+                        self.assign_next(w, phase_id, phase_ctx, sched, excluded, assigns);
                     }
                 }
             }
@@ -405,11 +471,17 @@ impl DistributedLeader {
             Event::Joined { stream } => match self.register(stream) {
                 Ok(w) => {
                     LOG.info(&format!("worker {w} joined mid-run"));
+                    if !phase_ctx.is_none() {
+                        trace::emit_global(&TraceEvent::thread_name(
+                            WORKER_LANE_BASE + w as u64,
+                            &format!("worker {w} ({})", self.workers[w].peer),
+                        ));
+                    }
                     if let Err(e) = send_to(&mut self.workers[w], setup) {
                         LOG.warn(&format!("phase setup to joined worker {w} failed: {e}"));
                         self.workers[w].alive = false;
                     } else {
-                        self.assign_next(w, phase_id, sched, excluded);
+                        self.assign_next(w, phase_id, phase_ctx, sched, excluded, assigns);
                     }
                 }
                 Err(e) => LOG.warn(&format!("failed to register joined worker: {e}")),
@@ -424,12 +496,15 @@ impl DistributedLeader {
         &mut self,
         w: usize,
         phase_id: u64,
+        phase_ctx: TraceCtx,
         sched: &ChunkScheduler,
         excluded: &mut [Vec<usize>],
+        assigns: &mut [u32],
     ) {
         if !self.workers[w].alive || self.workers[w].busy.is_some() || sched.is_finished() {
             return;
         }
+        let mut speculative = false;
         let pick = match sched.try_claim(|c| !excluded[c].contains(&w)) {
             Some(c) => Some(c),
             None => {
@@ -460,16 +535,29 @@ impl DistributedLeader {
                 }
                 best.map(|(c, _)| {
                     sched.speculate(c);
+                    speculative = true;
                     c
                 })
             }
         };
         let Some(c) = pick else { return };
-        match send_to(&mut self.workers[w], &ToWorker::Assign { phase: phase_id, chunk: c as u32 })
-        {
+        // Per-assignment span context: the worker adopts it (logs + its
+        // local chunk span), and the leader's merged timeline event reuses
+        // the same span id, so both sides name one execution identically.
+        let actx = if phase_ctx.is_none() {
+            TraceCtx::NONE
+        } else {
+            TraceCtx { trace: phase_ctx.trace, span: next_id() }
+        };
+        let msg = ToWorker::Assign { phase: phase_id, chunk: c as u32, trace: actx };
+        match send_to(&mut self.workers[w], &msg) {
             Ok(()) => {
                 self.workers[w].busy = Some((phase_id, c as u32));
                 self.workers[w].busy_since = Instant::now();
+                self.workers[w].assign_span = actx.span;
+                self.workers[w].assign_retry = assigns[c] > 0 && !speculative;
+                self.workers[w].assign_speculative = speculative;
+                assigns[c] += 1;
             }
             Err(e) => {
                 LOG.warn(&format!("assign chunk {c} to worker {w} failed: {e}"));
@@ -478,6 +566,42 @@ impl DistributedLeader {
                 sched.release(c);
             }
         }
+    }
+
+    /// Emit the merged timeline event for one completed chunk execution:
+    /// back-dated from the measured elapsed time so it sits on the
+    /// leader's trace clock, on the worker's own lane, tagged with the
+    /// worker's decode/compute/encode split off the `ChunkDone` frame.
+    fn emit_chunk_event(
+        &self,
+        w: usize,
+        phase_ctx: TraceCtx,
+        chunk: u32,
+        elapsed: Duration,
+        sections_us: (u64, u64, u64),
+    ) {
+        let Some(now_us) = trace::global_now_us() else { return };
+        let elapsed_us = elapsed.as_micros() as u64;
+        let worker = &self.workers[w];
+        let (decode_us, compute_us, encode_us) = sections_us;
+        let ev = TraceEvent::complete(
+            &format!("chunk {chunk}"),
+            "chunk",
+            now_us.saturating_sub(elapsed_us),
+            elapsed_us,
+            WORKER_LANE_BASE + w as u64,
+        )
+        .arg_str("trace", &format!("{:016x}", phase_ctx.trace))
+        .arg_str("span", &format!("{:016x}", worker.assign_span))
+        .arg_str("parent", &format!("{:016x}", phase_ctx.span))
+        .arg_str("worker", &worker.peer)
+        .arg_num("chunk", chunk as f64)
+        .arg_num("decode_ms", decode_us as f64 / 1e3)
+        .arg_num("compute_ms", compute_us as f64 / 1e3)
+        .arg_num("encode_ms", encode_us as f64 / 1e3)
+        .arg_bool("retry", worker.assign_retry)
+        .arg_bool("speculative", worker.assign_speculative);
+        trace::emit_global(&ev);
     }
 
     /// Fence workers silent past [`STALE_AFTER_MS`]: mark dead, requeue

@@ -8,6 +8,7 @@
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+use crate::obs::trace::TraceCtx;
 use std::io::{Read, Write};
 
 /// Protocol version — bumped on any frame change.
@@ -18,7 +19,11 @@ use std::io::{Read, Write};
 /// liveness `Heartbeat`s from a background thread.
 /// v4: the format byte gains sparse input codes (libsvm / sparse-CSV /
 /// csr) — frame layout unchanged, but a v3 worker cannot decode them.
-pub const VERSION: u32 = 4;
+/// v5: observability — `Phase` and `Assign` carry a 16-byte trace context
+/// (trace id + parent span id, zeros when tracing is off) and `ChunkDone`
+/// returns the worker's decode/compute/encode split in microseconds, so
+/// the leader can emit one merged timeline attributing every chunk.
+pub const VERSION: u32 = 5;
 
 /// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
 /// larger indicates a protocol error, not a legitimate partial).
@@ -43,6 +48,18 @@ pub enum PhaseKind {
 }
 
 impl PhaseKind {
+    /// Short stable name used in trace span labels and metric labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            PhaseKind::ProjectGram => "projectgram",
+            PhaseKind::UrecoverTmul => "urecover",
+            PhaseKind::RotateU => "rotate",
+            PhaseKind::Ata => "ata",
+            PhaseKind::ColStats => "colstats",
+            PhaseKind::Mult => "mult",
+        }
+    }
+
     pub fn from_u8(v: u8) -> Result<Self> {
         Ok(match v {
             1 => PhaseKind::ProjectGram,
@@ -119,9 +136,13 @@ pub enum ToWorker {
         operand: Matrix,
         /// Column means for PCA mode (1 x n; 0x0 = centering off).
         means: Matrix,
+        /// Trace context of the leader's phase span
+        /// ([`TraceCtx::NONE`] when the run isn't traced).
+        trace: TraceCtx,
     },
     /// Run chunk `chunk` of phase `phase` (the current `Phase` setup).
-    Assign { phase: u64, chunk: u32 },
+    /// `trace` is the per-assignment span context (parent = phase span).
+    Assign { phase: u64, chunk: u32, trace: TraceCtx },
     /// All phases done; worker may exit.
     Shutdown,
 }
@@ -132,8 +153,17 @@ pub enum ToLeader {
     /// Greeting with protocol version.
     Hello { version: u32 },
     /// One chunk finished: rows streamed + the commutative partial
-    /// (possibly 0x0 for phases that only write shards).
-    ChunkDone { phase: u64, chunk: u32, rows: u64, partial: Matrix },
+    /// (possibly 0x0 for phases that only write shards). The three `_us`
+    /// fields are the worker's measured decode/compute/encode split.
+    ChunkDone {
+        phase: u64,
+        chunk: u32,
+        rows: u64,
+        decode_us: u64,
+        compute_us: u64,
+        encode_us: u64,
+        partial: Matrix,
+    },
     /// One chunk failed worker-side; the leader decides (retry elsewhere
     /// or fail the pass). The worker stays up.
     ChunkFailed { phase: u64, chunk: u32, message: String },
@@ -237,6 +267,17 @@ fn put_matrix(buf: &mut Vec<u8>, m: &Matrix) {
     }
 }
 
+fn put_trace(buf: &mut Vec<u8>, t: &TraceCtx) {
+    buf.extend_from_slice(&t.trace.to_le_bytes());
+    buf.extend_from_slice(&t.span.to_le_bytes());
+}
+
+impl Cursor<'_> {
+    fn trace(&mut self) -> Result<TraceCtx> {
+        Ok(TraceCtx { trace: self.u64()?, span: self.u64()? })
+    }
+}
+
 // tags
 const T_PHASE: u8 = 0x01;
 const T_SHUTDOWN: u8 = 0x02;
@@ -264,6 +305,7 @@ impl ToWorker {
                 shard_epoch,
                 operand,
                 means,
+                trace,
             } => {
                 let mut buf = Vec::new();
                 buf.extend_from_slice(&id.to_le_bytes());
@@ -280,12 +322,14 @@ impl ToWorker {
                 buf.extend_from_slice(&shard_epoch.to_le_bytes());
                 put_matrix(&mut buf, operand);
                 put_matrix(&mut buf, means);
+                put_trace(&mut buf, trace);
                 write_frame(w, T_PHASE, &buf)
             }
-            ToWorker::Assign { phase, chunk } => {
+            ToWorker::Assign { phase, chunk, trace } => {
                 let mut buf = Vec::new();
                 buf.extend_from_slice(&phase.to_le_bytes());
                 buf.extend_from_slice(&chunk.to_le_bytes());
+                put_trace(&mut buf, trace);
                 write_frame(w, T_ASSIGN, &buf)
             }
             ToWorker::Shutdown => write_frame(w, T_SHUTDOWN, &[]),
@@ -311,8 +355,11 @@ impl ToWorker {
                 shard_epoch: c.u32()?,
                 operand: c.matrix()?,
                 means: c.matrix()?,
+                trace: c.trace()?,
             }),
-            T_ASSIGN => Ok(ToWorker::Assign { phase: c.u64()?, chunk: c.u32()? }),
+            T_ASSIGN => {
+                Ok(ToWorker::Assign { phase: c.u64()?, chunk: c.u32()?, trace: c.trace()? })
+            }
             T_SHUTDOWN => Ok(ToWorker::Shutdown),
             other => Err(Error::parse(format!("unexpected leader frame {other:#x}"))),
         }
@@ -323,11 +370,22 @@ impl ToLeader {
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
         match self {
             ToLeader::Hello { version } => write_frame(w, T_HELLO, &version.to_le_bytes()),
-            ToLeader::ChunkDone { phase, chunk, rows, partial } => {
+            ToLeader::ChunkDone {
+                phase,
+                chunk,
+                rows,
+                decode_us,
+                compute_us,
+                encode_us,
+                partial,
+            } => {
                 let mut buf = Vec::new();
                 buf.extend_from_slice(&phase.to_le_bytes());
                 buf.extend_from_slice(&chunk.to_le_bytes());
                 buf.extend_from_slice(&rows.to_le_bytes());
+                buf.extend_from_slice(&decode_us.to_le_bytes());
+                buf.extend_from_slice(&compute_us.to_le_bytes());
+                buf.extend_from_slice(&encode_us.to_le_bytes());
                 put_matrix(&mut buf, partial);
                 write_frame(w, T_CHUNK_DONE, &buf)
             }
@@ -351,6 +409,9 @@ impl ToLeader {
                 phase: c.u64()?,
                 chunk: c.u32()?,
                 rows: c.u64()?,
+                decode_us: c.u64()?,
+                compute_us: c.u64()?,
+                encode_us: c.u64()?,
                 partial: c.matrix()?,
             }),
             T_CHUNK_FAILED => Ok(ToLeader::ChunkFailed {
@@ -399,6 +460,7 @@ mod tests {
             shard_epoch: 2,
             operand: m.clone(),
             means: mu.clone(),
+            trace: TraceCtx { trace: 0xAB, span: 0xCD },
         };
         match roundtrip_worker(&msg) {
             ToWorker::Phase {
@@ -412,6 +474,7 @@ mod tests {
                 shard_epoch,
                 operand,
                 means,
+                trace,
                 ..
             } => {
                 assert_eq!(id, 41);
@@ -424,6 +487,7 @@ mod tests {
                 assert_eq!(shard_epoch, 2);
                 assert_eq!(operand.max_abs_diff(&m), 0.0);
                 assert_eq!(means.max_abs_diff(&mu), 0.0);
+                assert_eq!(trace, TraceCtx { trace: 0xAB, span: 0xCD });
             }
             other => panic!("wrong message: {other:?}"),
         }
@@ -447,9 +511,13 @@ mod tests {
                 shard_epoch: 0,
                 operand: Matrix::zeros(0, 0),
                 means: Matrix::zeros(0, 0),
+                trace: TraceCtx::NONE,
             };
             match roundtrip_worker(&msg) {
-                ToWorker::Phase { kind: got, .. } => assert_eq!(got, kind),
+                ToWorker::Phase { kind: got, trace, .. } => {
+                    assert_eq!(got, kind);
+                    assert!(trace.is_none());
+                }
                 other => panic!("wrong message: {other:?}"),
             }
         }
@@ -474,6 +542,7 @@ mod tests {
                 shard_epoch: 0,
                 operand: Matrix::zeros(0, 0),
                 means: Matrix::zeros(0, 0),
+                trace: TraceCtx::NONE,
             };
             match roundtrip_worker(&msg) {
                 ToWorker::Phase { input_format, shard_format, .. } => {
@@ -488,10 +557,12 @@ mod tests {
 
     #[test]
     fn assign_roundtrip() {
-        match roundtrip_worker(&ToWorker::Assign { phase: 7, chunk: 12 }) {
-            ToWorker::Assign { phase, chunk } => {
+        let ctx = TraceCtx { trace: 0x1122_3344_5566_7788, span: 0x99AA };
+        match roundtrip_worker(&ToWorker::Assign { phase: 7, chunk: 12, trace: ctx }) {
+            ToWorker::Assign { phase, chunk, trace } => {
                 assert_eq!(phase, 7);
                 assert_eq!(chunk, 12);
+                assert_eq!(trace, ctx);
             }
             other => panic!("wrong message: {other:?}"),
         }
@@ -510,10 +581,27 @@ mod tests {
     #[test]
     fn chunk_done_roundtrip() {
         let m = Matrix::from_fn(4, 4, |i, j| (i + j) as f64);
-        let msg = ToLeader::ChunkDone { phase: 3, chunk: 9, rows: 999, partial: m.clone() };
+        let msg = ToLeader::ChunkDone {
+            phase: 3,
+            chunk: 9,
+            rows: 999,
+            decode_us: 1500,
+            compute_us: 8000,
+            encode_us: 250,
+            partial: m.clone(),
+        };
         match roundtrip_leader(&msg) {
-            ToLeader::ChunkDone { phase, chunk, rows, partial } => {
+            ToLeader::ChunkDone {
+                phase,
+                chunk,
+                rows,
+                decode_us,
+                compute_us,
+                encode_us,
+                partial,
+            } => {
                 assert_eq!((phase, chunk, rows), (3, 9, 999));
+                assert_eq!((decode_us, compute_us, encode_us), (1500, 8000, 250));
                 assert_eq!(partial.max_abs_diff(&m), 0.0);
             }
             other => panic!("wrong message: {other:?}"),
@@ -536,9 +624,17 @@ mod tests {
     #[test]
     fn truncated_frame_is_error() {
         let mut buf = Vec::new();
-        ToLeader::ChunkDone { phase: 1, chunk: 0, rows: 1, partial: Matrix::zeros(2, 2) }
-            .write(&mut buf)
-            .unwrap();
+        ToLeader::ChunkDone {
+            phase: 1,
+            chunk: 0,
+            rows: 1,
+            decode_us: 0,
+            compute_us: 0,
+            encode_us: 0,
+            partial: Matrix::zeros(2, 2),
+        }
+        .write(&mut buf)
+        .unwrap();
         buf.truncate(buf.len() - 3);
         assert!(ToLeader::read(&mut buf.as_slice()).is_err());
     }
@@ -553,8 +649,15 @@ mod tests {
 
     #[test]
     fn zero_size_matrix_roundtrips() {
-        let msg =
-            ToLeader::ChunkDone { phase: 0, chunk: 0, rows: 0, partial: Matrix::zeros(0, 0) };
+        let msg = ToLeader::ChunkDone {
+            phase: 0,
+            chunk: 0,
+            rows: 0,
+            decode_us: 0,
+            compute_us: 0,
+            encode_us: 0,
+            partial: Matrix::zeros(0, 0),
+        };
         match roundtrip_leader(&msg) {
             ToLeader::ChunkDone { partial, .. } => assert_eq!(partial.shape(), (0, 0)),
             other => panic!("wrong message: {other:?}"),

@@ -23,6 +23,7 @@ use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::InputSpec;
 use crate::linalg::Matrix;
+use crate::obs::trace::{self, Span, TraceCtx};
 use crate::rng::VirtualMatrix;
 use crate::splitproc::{self, ChunkMeta, SchedPolicy};
 use crate::svd::{execute_pass_chunk, Pass, PassContext};
@@ -55,6 +56,8 @@ pub struct PhaseConfig {
     pub shard_epoch: u32,
     pub operand: Matrix,
     pub means: Vec<f64>,
+    /// Leader's phase span context (NONE when the run isn't traced).
+    pub trace: TraceCtx,
     plan: OnceLock<Vec<ChunkMeta>>,
     omega: OnceLock<Matrix>,
 }
@@ -77,6 +80,7 @@ impl PhaseConfig {
             shard_epoch,
             operand,
             means,
+            trace,
         } = msg
         else {
             return Err(Error::Other("PhaseConfig::from_msg on non-phase message".into()));
@@ -95,6 +99,7 @@ impl PhaseConfig {
             shard_epoch: *shard_epoch,
             operand: operand.clone(),
             means: if means.rows() > 0 { means.row(0).to_vec() } else { Vec::new() },
+            trace: *trace,
             plan: OnceLock::new(),
             omega: OnceLock::new(),
         })
@@ -215,17 +220,31 @@ fn serve_loop(
                 LOG.info(&format!("phase {id} setup: {kind:?}, {chunk_total} chunks"));
                 phase = Some(PhaseConfig::from_msg(&msg)?);
             }
-            ToWorker::Assign { phase: pid, chunk } => {
+            ToWorker::Assign { phase: pid, chunk, trace: actx } => {
                 let reply = match phase.as_ref() {
                     Some(cfg) if cfg.id == *pid => {
+                        // Adopt the leader's assignment context so worker
+                        // logs correlate, and measure the chunk's
+                        // decode/compute/encode split for the leader's
+                        // merged timeline.
+                        let _span = Span::with_parent(&format!("chunk {chunk}"), "chunk", *actx);
                         LOG.debug(&format!(
                             "phase {pid} chunk {chunk}/{}",
                             cfg.chunk_total
                         ));
-                        match execute_assignment(backend, cfg, *chunk as usize) {
-                            Ok((rows, partial)) => {
-                                ToLeader::ChunkDone { phase: *pid, chunk: *chunk, rows, partial }
-                            }
+                        trace::sections_begin();
+                        let outcome = execute_assignment(backend, cfg, *chunk as usize);
+                        let sec = trace::sections_take().unwrap_or_default();
+                        match outcome {
+                            Ok((rows, partial)) => ToLeader::ChunkDone {
+                                phase: *pid,
+                                chunk: *chunk,
+                                rows,
+                                decode_us: sec.decode_us,
+                                compute_us: sec.compute_us,
+                                encode_us: sec.encode_us,
+                                partial,
+                            },
                             Err(e) => {
                                 // Report and keep serving — the leader
                                 // decides (retry elsewhere or fail).

@@ -119,6 +119,10 @@ pub fn svd(args: &Args, exact: bool) -> Result<()> {
     }
     let input = input_of(&cfg)?;
     let sw = Stopwatch::start();
+    let _trace = crate::obs::trace::TraceGuard::start(
+        args.opt_str("trace"),
+        if exact { "exact-svd" } else { "svd" },
+    )?;
     let mut builder = svd::Svd::from_config(&cfg)?;
     if let Some(model_dir) = args.opt_str("save-model") {
         builder = builder.save_model(model_dir);
@@ -195,6 +199,7 @@ pub fn update(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let input = InputSpec::auto(rows.to_string());
     let sw = Stopwatch::start();
+    let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "update")?;
     let mut builder = crate::update::Update::of(&model_dir)?
         .rows(&input)
         .oversample(cfg.oversample)
@@ -271,6 +276,7 @@ pub fn stream(args: &Args) -> Result<()> {
             )
         })?;
     let sw = Stopwatch::start();
+    let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "stream")?;
     let mut builder = crate::stream::StreamSvd::open(&input)
         .tol(cfg.tol)
         .max_rank(cfg.max_rank)
@@ -483,6 +489,20 @@ pub fn worker(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let backend = make_backend(&cfg)?;
     crate::cluster::run_worker(&leader, backend)
+}
+
+/// `trace-summary <trace.json>`: digest a `--trace` file into per-phase
+/// critical paths, the slowest chunks, and worker utilization.
+pub fn trace_summary(args: &Args) -> Result<()> {
+    let path = args
+        .opt_str("file")
+        .map(str::to_string)
+        .or_else(|| args.positional.first().cloned())
+        .ok_or_else(|| {
+            Error::Config("trace-summary: trace file required (positional or --file)".into())
+        })?;
+    print!("{}", crate::obs::summary::render_summary(&path)?);
+    Ok(())
 }
 
 /// Parse [`ClusterParams`] overrides from the CLI.

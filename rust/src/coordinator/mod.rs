@@ -20,6 +20,7 @@
 //! | `daemon` | long-running model-fleet daemon: many named models, one front door ([`crate::daemon`]) |
 //! | `daemon-client` | control a running daemon: register/list/status/submit-job/drain/halt |
 //! | `serve-metrics` | tiny HTTP endpoint exposing the last run's metrics |
+//! | `trace-summary` | summarize a `--trace` Chrome trace file ([`crate::obs`]) |
 //!
 //! Configuration precedence: built-in defaults < `--config file.toml` <
 //! CLI flags ([`crate::config`]).
@@ -130,9 +131,17 @@ COMMANDS
                       [--max-attempts 2] [--delay-ms 0] [--wait [--wait-secs 600]]
                   | job-status --id N | drain | halt
   serve-metrics HTTP metrics endpoint          [--addr 127.0.0.1:9924] [--once]
+  trace-summary summarize a trace file         <trace.json>
+                (per-phase critical path, top slowest chunks, and a worker
+                 utilization table, from a file written by --trace)
 
 GLOBAL
-  --log error|warn|info|debug|trace   (or TALLFAT_LOG)
+  --log error|warn|info|debug|trace   (or TALLFAT_LOG; TALLFAT_LOG_FORMAT=json
+                                       switches log lines to structured JSON)
+  --trace FILE  (svd, exact-svd, update, stream, serve, daemon: write a
+                 Chrome trace-event timeline — open in Perfetto, or feed to
+                 `tallfat trace-summary`; distributed svd merges every
+                 worker's chunks into the leader's file)
 ";
 
 /// Dispatch a parsed command line. Returns the process exit code.
@@ -156,6 +165,7 @@ pub fn run_cli(args: &Args) -> Result<()> {
         Some("daemon") => crate::daemon::server::daemon(args),
         Some("daemon-client") => crate::daemon::server::daemon_client(args),
         Some("serve-metrics") => server::serve_metrics(args),
+        Some("trace-summary") => commands::trace_summary(args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(())

@@ -1,9 +1,26 @@
 //! `serve-metrics`: a dependency-free HTTP endpoint exposing run metrics.
 //!
 //! The paper's cluster story needs the leader to be observable; this is the
-//! minimal honest version — a blocking `TcpListener` loop answering any
-//! `GET` with `text/plain` Prometheus-style gauges from a shared
-//! [`MetricsRegistry`]. Jobs publish into the registry; scrapers poll.
+//! minimal honest version — a blocking `TcpListener` loop serving the
+//! shared [`MetricsRegistry`] as Prometheus text exposition. Jobs publish
+//! into the registry; scrapers poll `GET /metrics` (`GET /healthz` is the
+//! liveness probe; anything else is 404, non-GET is 405).
+//!
+//! The registry holds two metric families:
+//!
+//! * **gauges/counters** — `set`/`add`/`get`, optionally with labels
+//!   (`name{k="v"}`), rendered one line per labeled series under a
+//!   `# TYPE ... gauge` header;
+//! * **histograms** — `observe` records a value into log-spaced buckets
+//!   (upper edges `0.001 · 2^i`, covering sub-microsecond to ~6 days in
+//!   milliseconds), `quantile` reads p50/p99-style estimates back out by
+//!   linear interpolation inside the winning bucket, and `render` emits
+//!   the standard `_bucket{le="..."}`/`_sum`/`_count` exposition with
+//!   cumulative bucket counts.
+//!
+//! Series identity is `(name, sorted labels)`, so label order at the call
+//! site never splits a series. Label values are escaped per the Prometheus
+//! text rules (`\\`, `\"`, `\n`).
 
 use crate::error::Result;
 use crate::util::{Args, Logger};
@@ -14,10 +31,156 @@ use std::sync::{Mutex, OnceLock};
 
 static LOG: Logger = Logger::new("metrics-server");
 
-/// Process-global metric registry (name -> value).
+/// Number of finite histogram bucket edges (`0.001 · 2^i`, i in 0..N);
+/// one more implicit `+Inf` bucket catches everything above the last edge.
+pub const HISTOGRAM_BUCKETS: usize = 40;
+
+/// Upper edge of finite bucket `i` (milliseconds in every current caller,
+/// though the histogram itself is unit-agnostic).
+pub fn bucket_edge(i: usize) -> f64 {
+    1e-3 * 2f64.powi(i as i32)
+}
+
+/// All finite bucket upper edges, ascending — what `le=` labels render.
+pub fn bucket_upper_edges() -> Vec<f64> {
+    (0..HISTOGRAM_BUCKETS).map(bucket_edge).collect()
+}
+
+fn bucket_index(v: f64) -> usize {
+    for i in 0..HISTOGRAM_BUCKETS {
+        if v <= bucket_edge(i) {
+            return i;
+        }
+    }
+    HISTOGRAM_BUCKETS // +Inf bucket
+}
+
+/// Escape a label value for the text exposition: backslash, double quote,
+/// and newline are the three characters the format reserves.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Sorted, owned label pairs — the canonical form a series is keyed by.
+type Labels = Vec<(String, String)>;
+
+fn owned_labels(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels =
+        labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+/// One metric series: name plus its sorted label set.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    name: String,
+    labels: Labels,
+}
+
+impl Key {
+    fn new(name: &str, labels: &[(&str, &str)]) -> Key {
+        Key { name: name.to_string(), labels: owned_labels(labels) }
+    }
+
+    /// `{k="v",...}` with an optional extra pair appended (the `le` label
+    /// of a histogram bucket line); empty string when there are no labels.
+    fn render_labels(&self, extra: Option<(&str, &str)>) -> String {
+        if self.labels.is_empty() && extra.is_none() {
+            return String::new();
+        }
+        let mut parts: Vec<String> = self
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}=\"{}\"", escape_label(v)))
+            .collect();
+        if let Some((k, v)) = extra {
+            parts.push(format!("{k}=\"{}\"", escape_label(v)));
+        }
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Log-bucketed histogram: per-bucket counts, total sum and count.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>, // HISTOGRAM_BUCKETS finite buckets + 1 overflow
+    sum: f64,
+    count: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { counts: vec![0; HISTOGRAM_BUCKETS + 1], sum: 0.0, count: 0 }
+    }
+}
+
+impl Histogram {
+    fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let v = v.max(0.0);
+        self.counts[bucket_index(v)] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+
+    /// Quantile estimate (`q` in [0, 1]): find the bucket where the
+    /// cumulative count crosses `ceil(q · count)` and interpolate linearly
+    /// inside it. `None` for an empty histogram. Observations past the last
+    /// finite edge report that edge (the estimate saturates).
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = ((q * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                if i == HISTOGRAM_BUCKETS {
+                    return Some(bucket_edge(HISTOGRAM_BUCKETS - 1));
+                }
+                let hi = bucket_edge(i);
+                let lo = if i == 0 { 0.0 } else { bucket_edge(i - 1) };
+                let before = cum - c;
+                let frac = (target - before) as f64 / c as f64;
+                return Some(lo + frac * (hi - lo));
+            }
+        }
+        None
+    }
+
+    /// Per-bucket counts (finite buckets then overflow), non-cumulative.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+/// Process-global metric registry (labeled gauges + histograms).
 #[derive(Default)]
 pub struct MetricsRegistry {
-    values: Mutex<BTreeMap<String, f64>>,
+    values: Mutex<BTreeMap<Key, f64>>,
+    histograms: Mutex<BTreeMap<Key, Histogram>>,
 }
 
 impl MetricsRegistry {
@@ -29,27 +192,115 @@ impl MetricsRegistry {
 
     /// Set a gauge.
     pub fn set(&self, name: &str, value: f64) {
-        crate::util::lock_unpoisoned(&self.values).insert(name.to_string(), value);
+        self.set_labeled(name, &[], value);
+    }
+
+    /// Set a labeled gauge series (`name{k="v"}`).
+    pub fn set_labeled(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        crate::util::lock_unpoisoned(&self.values).insert(Key::new(name, labels), value);
     }
 
     /// Add to a counter (creates at 0).
     pub fn add(&self, name: &str, delta: f64) {
-        *crate::util::lock_unpoisoned(&self.values).entry(name.to_string()).or_insert(0.0) += delta;
+        self.add_labeled(name, &[], delta);
     }
 
-    /// Read one metric.
+    /// Add to a labeled counter series (creates at 0).
+    pub fn add_labeled(&self, name: &str, labels: &[(&str, &str)], delta: f64) {
+        *crate::util::lock_unpoisoned(&self.values)
+            .entry(Key::new(name, labels))
+            .or_insert(0.0) += delta;
+    }
+
+    /// Read one unlabeled metric.
     pub fn get(&self, name: &str) -> Option<f64> {
-        crate::util::lock_unpoisoned(&self.values).get(name).copied()
+        self.get_labeled(name, &[])
     }
 
-    /// Render the Prometheus text exposition.
+    /// Read one labeled series.
+    pub fn get_labeled(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        crate::util::lock_unpoisoned(&self.values).get(&Key::new(name, labels)).copied()
+    }
+
+    /// Record a value into a histogram series.
+    pub fn observe(&self, name: &str, value: f64) {
+        self.observe_labeled(name, &[], value);
+    }
+
+    /// Record a value into a labeled histogram series.
+    pub fn observe_labeled(&self, name: &str, labels: &[(&str, &str)], value: f64) {
+        crate::util::lock_unpoisoned(&self.histograms)
+            .entry(Key::new(name, labels))
+            .or_default()
+            .observe(value);
+    }
+
+    /// Quantile of an unlabeled histogram series (`None` if absent/empty).
+    pub fn quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.quantile_labeled(name, &[], q)
+    }
+
+    /// Quantile of a labeled histogram series (`None` if absent/empty).
+    pub fn quantile_labeled(&self, name: &str, labels: &[(&str, &str)], q: f64) -> Option<f64> {
+        crate::util::lock_unpoisoned(&self.histograms)
+            .get(&Key::new(name, labels))
+            .and_then(|h| h.quantile(q))
+    }
+
+    /// Snapshot one histogram series (tests, derived metrics).
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<Histogram> {
+        crate::util::lock_unpoisoned(&self.histograms).get(&Key::new(name, labels)).cloned()
+    }
+
+    /// Render the Prometheus text exposition: `# TYPE` headers, one line
+    /// per gauge series, and `_bucket`/`_sum`/`_count` (cumulative buckets)
+    /// per histogram series.
     pub fn render(&self) -> String {
         let values = crate::util::lock_unpoisoned(&self.values);
+        let histograms = crate::util::lock_unpoisoned(&self.histograms);
         let mut out = String::new();
+        let mut last_name = "";
         for (k, v) in values.iter() {
-            out.push_str(&format!("tallfat_{k} {v}\n"));
+            if k.name != last_name {
+                out.push_str(&format!("# TYPE tallfat_{} gauge\n", k.name));
+                last_name = &k.name;
+            }
+            out.push_str(&format!("tallfat_{}{} {v}\n", k.name, k.render_labels(None)));
         }
-        if values.is_empty() {
+        last_name = "";
+        for (k, h) in histograms.iter() {
+            if k.name != last_name {
+                out.push_str(&format!("# TYPE tallfat_{} histogram\n", k.name));
+                last_name = &k.name;
+            }
+            let mut cum = 0u64;
+            for (i, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = if i == HISTOGRAM_BUCKETS {
+                    "+Inf".to_string()
+                } else {
+                    format!("{}", bucket_edge(i))
+                };
+                out.push_str(&format!(
+                    "tallfat_{}_bucket{} {cum}\n",
+                    k.name,
+                    k.render_labels(Some(("le", &le)))
+                ));
+            }
+            out.push_str(&format!(
+                "tallfat_{}_sum{} {}\n",
+                k.name,
+                k.render_labels(None),
+                h.sum
+            ));
+            out.push_str(&format!(
+                "tallfat_{}_count{} {}\n",
+                k.name,
+                k.render_labels(None),
+                h.count
+            ));
+        }
+        if values.is_empty() && histograms.is_empty() {
             out.push_str("# no metrics recorded yet\n");
         }
         out
@@ -61,16 +312,36 @@ fn handle(mut stream: TcpStream) -> std::io::Result<()> {
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
     let mut hdr = String::new();
-    while reader.read_line(&mut hdr)? > 0 {
-        if hdr == "\r\n" || hdr == "\n" {
+    loop {
+        hdr.clear();
+        if reader.read_line(&mut hdr)? == 0 || hdr == "\r\n" || hdr == "\n" {
             break;
         }
-        hdr.clear();
     }
-    let body = MetricsRegistry::global().render();
+    let (status, ctype, body) = match (method.as_str(), path.as_str()) {
+        ("GET", "/metrics") => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            MetricsRegistry::global().render(),
+        ),
+        ("GET", "/healthz") => ("200 OK", "text/plain", "ok\n".to_string()),
+        ("GET", _) => (
+            "404 Not Found",
+            "text/plain",
+            "unknown route (GET /metrics, GET /healthz)\n".to_string(),
+        ),
+        _ => (
+            "405 Method Not Allowed",
+            "text/plain",
+            "method not allowed (GET only)\n".to_string(),
+        ),
+    };
     let response = format!(
-        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
         body.len(),
         body
     );
@@ -118,12 +389,159 @@ mod tests {
         let text = reg.render();
         assert!(text.contains("tallfat_rows_per_sec 123.5"));
         assert!(text.contains("tallfat_rows_total 150"));
+        assert!(text.contains("# TYPE tallfat_rows_per_sec gauge"));
     }
 
     #[test]
     fn empty_registry_renders_comment() {
         let reg = MetricsRegistry::default();
         assert!(reg.render().starts_with('#'));
+    }
+
+    #[test]
+    fn labeled_series_are_distinct_and_order_insensitive() {
+        let reg = MetricsRegistry::default();
+        reg.add_labeled("jobs", &[("kind", "update")], 1.0);
+        reg.add_labeled("jobs", &[("kind", "stream")], 2.0);
+        // Same series regardless of label order at the call site.
+        reg.add_labeled("dual", &[("a", "1"), ("b", "2")], 1.0);
+        reg.add_labeled("dual", &[("b", "2"), ("a", "1")], 1.0);
+        assert_eq!(reg.get_labeled("jobs", &[("kind", "update")]), Some(1.0));
+        assert_eq!(reg.get_labeled("jobs", &[("kind", "stream")]), Some(2.0));
+        assert_eq!(reg.get_labeled("dual", &[("a", "1"), ("b", "2")]), Some(2.0));
+        assert_eq!(reg.get("jobs"), None, "labeled series must not shadow the bare name");
+        let text = reg.render();
+        assert!(text.contains("tallfat_jobs{kind=\"update\"} 1"));
+        assert!(text.contains("tallfat_jobs{kind=\"stream\"} 2"));
+        assert!(text.contains("tallfat_dual{a=\"1\",b=\"2\"} 2"));
+        // One TYPE header per metric name, not per series.
+        assert_eq!(text.matches("# TYPE tallfat_jobs gauge").count(), 1);
+    }
+
+    #[test]
+    fn label_values_escape_backslash_quote_newline() {
+        let reg = MetricsRegistry::default();
+        reg.set_labeled("paths", &[("dir", "C:\\tmp\"x\"\nend")], 1.0);
+        let text = reg.render();
+        assert!(
+            text.contains(r#"tallfat_paths{dir="C:\\tmp\"x\"\nend"} 1"#),
+            "bad escaping: {text}"
+        );
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_log_spaced_and_inclusive() {
+        let edges = bucket_upper_edges();
+        assert_eq!(edges.len(), HISTOGRAM_BUCKETS);
+        assert_eq!(edges[0], 1e-3);
+        for w in edges.windows(2) {
+            assert!((w[1] / w[0] - 2.0).abs() < 1e-12, "edges must double");
+        }
+        // A value exactly on an edge lands in that bucket (le semantics).
+        let mut h = Histogram::default();
+        h.observe(bucket_edge(5));
+        assert_eq!(h.counts()[5], 1);
+        // Just above the edge spills into the next bucket.
+        let mut h = Histogram::default();
+        h.observe(bucket_edge(5) * 1.0001);
+        assert_eq!(h.counts()[6], 1);
+        // Past the last finite edge: overflow bucket.
+        let mut h = Histogram::default();
+        h.observe(bucket_edge(HISTOGRAM_BUCKETS - 1) * 4.0);
+        assert_eq!(h.counts()[HISTOGRAM_BUCKETS], 1);
+    }
+
+    #[test]
+    fn histogram_quantiles_on_known_distribution() {
+        let reg = MetricsRegistry::default();
+        // 100 observations at 1..=100 ms: p50 ≈ 50, p99 ≈ 99.
+        for v in 1..=100 {
+            reg.observe("lat_ms", v as f64);
+        }
+        let p50 = reg.quantile("lat_ms", 0.5).unwrap();
+        let p99 = reg.quantile("lat_ms", 0.99).unwrap();
+        // The estimate is bucketed: correct to within the winning bucket.
+        let width_at = |v: f64| {
+            let i = bucket_index(v);
+            bucket_edge(i) - if i == 0 { 0.0 } else { bucket_edge(i - 1) }
+        };
+        assert!((p50 - 50.0).abs() <= width_at(50.0), "p50={p50}");
+        assert!((p99 - 99.0).abs() <= width_at(99.0), "p99={p99}");
+        assert!(p50 <= p99);
+        // Extremes are defined too.
+        assert!(reg.quantile("lat_ms", 0.0).unwrap() <= reg.quantile("lat_ms", 1.0).unwrap());
+    }
+
+    #[test]
+    fn empty_and_missing_histograms_have_no_quantile() {
+        let reg = MetricsRegistry::default();
+        assert_eq!(reg.quantile("nothing", 0.5), None);
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_sum_count() {
+        let reg = MetricsRegistry::default();
+        reg.observe_labeled("req_ms", &[("op", "project")], 0.5);
+        reg.observe_labeled("req_ms", &[("op", "project")], 3.0);
+        let text = reg.render();
+        assert!(text.contains("# TYPE tallfat_req_ms histogram"));
+        // 0.5 <= 0.512 (bucket 9); cumulative count at le=0.512 is 1.
+        assert!(text.contains("tallfat_req_ms_bucket{op=\"project\",le=\"0.512\"} 1"), "{text}");
+        assert!(text.contains("tallfat_req_ms_bucket{op=\"project\",le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("tallfat_req_ms_sum{op=\"project\"} 3.5"));
+        assert!(text.contains("tallfat_req_ms_count{op=\"project\"} 2"));
+    }
+
+    #[test]
+    fn concurrent_observes_from_eight_threads() {
+        let reg = std::sync::Arc::new(MetricsRegistry::default());
+        std::thread::scope(|scope| {
+            for t in 0..8 {
+                let reg = reg.clone();
+                scope.spawn(move || {
+                    for i in 0..1000 {
+                        reg.observe("contended_ms", ((t * 1000 + i) % 97) as f64 + 1.0);
+                    }
+                });
+            }
+        });
+        let h = reg.histogram("contended_ms", &[]).unwrap();
+        assert_eq!(h.count(), 8000, "every observe must land exactly once");
+        assert!(h.quantile(0.5).is_some());
+    }
+
+    fn one_request(addr: &std::net::SocketAddr, req: &str) -> String {
+        let mut resp = String::new();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(req.as_bytes()).unwrap();
+        s.read_to_string(&mut resp).unwrap();
+        resp
+    }
+
+    #[test]
+    fn routes_metrics_healthz_404_405() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        MetricsRegistry::global().set("test_routing_gauge", 3.0);
+        let server = std::thread::spawn(move || {
+            for _ in 0..4 {
+                let (s, _) = listener.accept().unwrap();
+                handle(s).unwrap();
+            }
+        });
+        let metrics = one_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(metrics.contains("200 OK"), "{metrics}");
+        assert!(metrics.contains("tallfat_test_routing_gauge 3"), "{metrics}");
+        let health = one_request(&addr, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(health.contains("200 OK") && health.contains("ok"), "{health}");
+        let missing = one_request(&addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(missing.contains("404 Not Found"), "{missing}");
+        let post = one_request(&addr, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(post.contains("405 Method Not Allowed"), "{post}");
+        server.join().unwrap();
     }
 
     #[test]

@@ -294,6 +294,10 @@ struct QueuedJob {
     attempts: usize,
     not_before: Option<Instant>,
     last_error: Option<String>,
+    /// When the job entered the queue this time (a requeue resets it, a
+    /// restart-restored job counts from restore) — the base of the
+    /// `daemon_job_queue_ms{kind}` observation taken when an attempt starts.
+    submitted: Instant,
 }
 
 impl QueuedJob {
@@ -316,6 +320,10 @@ struct RunningJob {
     attempts: usize,
     handle: JoinHandle<Result<UpdateResult>>,
     heartbeat: Arc<Mutex<Instant>>,
+    /// Carried over from the queue entry: base of `daemon_job_total_ms`.
+    submitted: Instant,
+    /// When this attempt's worker spawned: base of `daemon_job_run_ms`.
+    started: Instant,
 }
 
 impl RunningJob {
@@ -414,7 +422,13 @@ impl JobManager {
             .then(|| Instant::now() + Duration::from_millis(spec.delay_ms));
         let id = spec.id;
         let model = spec.model.clone();
-        inner.queue.push_back(QueuedJob { spec, attempts: 0, not_before, last_error: None });
+        inner.queue.push_back(QueuedJob {
+            spec,
+            attempts: 0,
+            not_before,
+            last_error: None,
+            submitted: Instant::now(),
+        });
         persist(&self.state_path, &inner);
         drop(inner);
         MetricsRegistry::global().add("daemon_jobs_submitted", 1.0);
@@ -549,7 +563,22 @@ fn reap_finished(inner: &mut Inner, state_dir: &Path, reload: &mut Vec<String>) 
                     error: None,
                 });
                 reload.push(r.spec.model);
-                MetricsRegistry::global().add("daemon_jobs_completed", 1.0);
+                let reg = MetricsRegistry::global();
+                reg.add("daemon_jobs_completed", 1.0);
+                // Lifecycle histograms: this attempt's wall time, and the
+                // whole queued→running→published arc since the job last
+                // entered the queue.
+                let kind = [("kind", r.spec.kind.as_str())];
+                reg.observe_labeled(
+                    "daemon_job_run_ms",
+                    &kind,
+                    r.started.elapsed().as_secs_f64() * 1e3,
+                );
+                reg.observe_labeled(
+                    "daemon_job_total_ms",
+                    &kind,
+                    r.submitted.elapsed().as_secs_f64() * 1e3,
+                );
             }
             Err(e) => settle_failure(inner, state_dir, r.spec, r.attempts, e.to_string()),
         }
@@ -613,6 +642,7 @@ fn settle_failure(
             attempts: spent,
             not_before: None,
             last_error: Some(error),
+            submitted: Instant::now(),
         });
     } else {
         LOG.warn(&format!("job {} failed after {spent} attempt(s): {error}", spec.id));
@@ -683,7 +713,19 @@ fn start_attempt(fleet: &Fleet, q: &QueuedJob, state_dir: &Path) -> Result<Runni
         q.attempts + 1,
         q.spec.model
     ));
-    Ok(RunningJob { spec: q.spec.clone(), attempts: q.attempts, handle, heartbeat })
+    MetricsRegistry::global().observe_labeled(
+        "daemon_job_queue_ms",
+        &[("kind", q.spec.kind.as_str())],
+        q.submitted.elapsed().as_secs_f64() * 1e3,
+    );
+    Ok(RunningJob {
+        spec: q.spec.clone(),
+        attempts: q.attempts,
+        handle,
+        heartbeat,
+        submitted: q.submitted,
+        started: Instant::now(),
+    })
 }
 
 fn run_attempt(
@@ -923,7 +965,13 @@ fn load_jobs(path: &Path) -> Result<(u64, VecDeque<QueuedJob>)> {
         if spec.model.is_empty() || spec.rows.is_empty() {
             return Err(Error::parse(format!("jobs manifest: incomplete job `{line}`")));
         }
-        queue.push_back(QueuedJob { spec, attempts, not_before: None, last_error: None });
+        queue.push_back(QueuedJob {
+            spec,
+            attempts,
+            not_before: None,
+            last_error: None,
+            submitted: Instant::now(),
+        });
     }
     Ok((next_id, queue))
 }
@@ -1048,6 +1096,7 @@ mod tests {
                 attempts: 1,
                 not_before: None,
                 last_error: None,
+                submitted: Instant::now(),
             }]),
             running: Vec::new(),
             finished: Vec::new(),

@@ -417,7 +417,8 @@ fn spawn_health_poller(state: Weak<DaemonState>, every: Duration) {
 /// `--state DIR` (or positional), `--addr HOST:PORT` (default
 /// 127.0.0.1:9935, port 0 = ephemeral), `--backend native|xla|auto`,
 /// `--cache-shards N`, `--batch-window-ms MS`, `--max-batch N`,
-/// `--health-poll-ms MS` (default 2000; 0 = reload only on job publish).
+/// `--health-poll-ms MS` (default 2000; 0 = reload only on job publish),
+/// `--trace FILE` (Chrome trace-event timeline of the daemon process).
 pub fn daemon(args: &Args) -> Result<()> {
     let state_dir = args
         .opt_str("state")
@@ -440,6 +441,7 @@ pub fn daemon(args: &Args) -> Result<()> {
             ms => Some(Duration::from_millis(ms)),
         },
     };
+    let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "daemon")?;
     let d = Daemon::bind(&state_dir, backend, &opts)?;
     LOG.info(&format!(
         "tallfatd: state {state_dir}, {} model(s), listening on http://{}/query",

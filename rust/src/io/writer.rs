@@ -160,11 +160,16 @@ pub struct ShardWriter {
 
 impl ShardWriter {
     pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
-        match self.inner.as_mut() {
-            Some(WriterInner::Csv(w)) => crate::io::csv::write_row(w, row),
-            Some(WriterInner::Bin(w)) => w.write_row(row),
-            None => Err(Error::Other("write_row on finished shard writer".into())),
-        }
+        // Shard writes are the Encode section of a chunk's
+        // decode/compute/encode split; the timing gate is a thread-local
+        // check, so untraced runs skip the clock entirely.
+        crate::obs::trace::time_section(crate::obs::trace::Section::Encode, || {
+            match self.inner.as_mut() {
+                Some(WriterInner::Csv(w)) => crate::io::csv::write_row(w, row),
+                Some(WriterInner::Bin(w)) => w.write_row(row),
+                None => Err(Error::Other("write_row on finished shard writer".into())),
+            }
+        })
     }
 
     fn flush_and_publish(&mut self) -> Result<()> {
@@ -184,7 +189,9 @@ impl ShardWriter {
 
     /// Flush and atomically rename the staged file over the final path.
     pub fn finish(mut self) -> Result<()> {
-        let res = self.flush_and_publish();
+        let res = crate::obs::trace::time_section(crate::obs::trace::Section::Encode, || {
+            self.flush_and_publish()
+        });
         if res.is_err() {
             let _ = std::fs::remove_file(&self.tmp);
         }

@@ -101,6 +101,7 @@ pub mod jobs;
 pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod serve;

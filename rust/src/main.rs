@@ -5,6 +5,9 @@ use tallfat::coordinator;
 use tallfat::util::Args;
 
 fn main() {
+    // Pin the log epoch (and TALLFAT_LOG/_FORMAT) before any work runs so
+    // relative timestamps measure from process start.
+    tallfat::util::logger::init();
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {

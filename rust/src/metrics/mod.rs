@@ -96,7 +96,7 @@ impl Stopwatch {
 }
 
 /// Online mean/min/max aggregator for repeated measurements.
-#[derive(Default, Clone, Debug)]
+#[derive(Clone, Debug)]
 pub struct Stats {
     n: u64,
     sum: f64,
@@ -176,6 +176,17 @@ mod tests {
         let v = r.time("work", 1, || 42);
         assert_eq!(v, 42);
         assert_eq!(r.phases().len(), 1);
+    }
+
+    #[test]
+    fn stats_default_is_empty_with_infinite_min() {
+        // Regression: `Stats` once carried both `#[derive(Default)]` and a
+        // manual `impl Default` (E0119). The manual impl must win so an
+        // empty aggregator starts at +inf/-inf, not 0/0.
+        let s = Stats::default();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.min(), f64::INFINITY);
+        assert_eq!(s.max(), f64::NEG_INFINITY);
     }
 
     #[test]

@@ -1,0 +1,26 @@
+//! Observability: cross-process span tracing and trace rendering.
+//!
+//! The metrics plane ([`crate::coordinator::server::MetricsRegistry`])
+//! answers "how much / how fast" in aggregate; this module answers *where
+//! a specific run's wall-time went*:
+//!
+//! * [`trace`] — lightweight span tracing. A process-local span stack
+//!   carries run/phase/chunk identity, and an optional [`trace::TraceSink`]
+//!   (installed by `--trace FILE` on the CLI) writes Chrome trace-event
+//!   JSON that chrome://tracing and Perfetto open directly. Cluster runs
+//!   propagate a 16-byte [`trace::TraceCtx`] through the v5 wire protocol
+//!   so workers' per-chunk timings (decode/compute/encode) come back on
+//!   `ChunkDone` and the leader emits one merged timeline attributing
+//!   every chunk to the worker that ran it.
+//! * [`summary`] — `tallfat trace-summary FILE`: per-phase critical path,
+//!   the top slowest chunks, and a worker utilization table, read back
+//!   from a captured trace file.
+//!
+//! Everything is dependency-free and cheap when disabled: with no sink
+//! installed, spans are inert values and the chunk section timers are a
+//! thread-local flag test.
+
+pub mod summary;
+pub mod trace;
+
+pub use trace::{Span, TraceCtx, TraceSink};

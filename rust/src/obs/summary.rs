@@ -1,0 +1,276 @@
+//! `tallfat trace-summary FILE` — read a captured trace back as text.
+//!
+//! Parses the Chrome trace-event file written by [`super::trace`] and
+//! renders three tables: per-phase critical path (wall time vs the
+//! busiest worker's serial time), the top slowest chunks with their
+//! decode/compute/encode split, and worker utilization. Tolerates a
+//! missing closing `]` (crashed run): unparseable trailing lines are
+//! counted and skipped, everything salvageable is summarized.
+
+use crate::error::Result;
+use crate::serve::json::Json;
+use std::collections::BTreeMap;
+
+/// One decoded trace event (only the fields the summary needs).
+struct Ev {
+    name: String,
+    cat: String,
+    ts_ms: f64,
+    dur_ms: f64,
+    args: Json,
+}
+
+impl Ev {
+    fn arg_str(&self, key: &str) -> Option<&str> {
+        self.args.get(key).and_then(Json::as_str)
+    }
+
+    fn arg_num(&self, key: &str) -> f64 {
+        self.args.get(key).and_then(Json::as_f64).unwrap_or(0.0)
+    }
+
+    fn arg_bool(&self, key: &str) -> bool {
+        self.args.get(key).and_then(Json::as_bool).unwrap_or(false)
+    }
+}
+
+/// Parse the one-event-per-line array format; returns (events, skipped).
+fn parse_events(text: &str) -> (Vec<Ev>, usize) {
+    let mut out = Vec::new();
+    let mut skipped = 0;
+    for line in text.lines() {
+        let line = line.trim().trim_end_matches(',');
+        if line.is_empty() || line == "[" || line == "]" {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else {
+            skipped += 1;
+            continue;
+        };
+        if j.get("ph").and_then(Json::as_str) != Some("X") {
+            continue; // metadata events carry no timing
+        }
+        out.push(Ev {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            cat: j.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+            ts_ms: j.get("ts").and_then(Json::as_f64).unwrap_or(0.0) / 1000.0,
+            dur_ms: j.get("dur").and_then(Json::as_f64).unwrap_or(0.0) / 1000.0,
+            args: j,
+        });
+    }
+    (out, skipped)
+}
+
+/// Render the summary of the trace file at `path`.
+pub fn render_summary(path: &str) -> Result<String> {
+    let text = std::fs::read_to_string(path)?;
+    let (events, skipped) = parse_events(&text);
+
+    let runs: Vec<&Ev> = events.iter().filter(|e| e.cat == "run").collect();
+    let mut phases: Vec<&Ev> = events.iter().filter(|e| e.cat == "phase").collect();
+    phases.sort_by(|a, b| a.ts_ms.total_cmp(&b.ts_ms));
+    let chunks: Vec<&Ev> = events.iter().filter(|e| e.cat == "chunk").collect();
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "trace summary: {path}\n  events: {} ({} run, {} phases, {} chunks{})\n",
+        events.len(),
+        runs.len(),
+        phases.len(),
+        chunks.len(),
+        if skipped > 0 { format!(", {skipped} unparseable lines skipped") } else { String::new() },
+    ));
+    if events.is_empty() {
+        return Ok(out);
+    }
+    if let Some(run) = runs.first() {
+        out.push_str(&format!("  run \"{}\": {:.1} ms wall\n", run.name, run.dur_ms));
+    }
+
+    // Chunks attribute to a phase via the parent span id (same-process
+    // spans and leader-merged worker chunks both carry it).
+    let phase_of = |c: &Ev| -> String {
+        if let Some(p) = c.arg_str("parent") {
+            for ph in &phases {
+                if ph.arg_str("span") == Some(p) {
+                    return ph.name.clone();
+                }
+            }
+        }
+        c.arg_str("phase").unwrap_or("?").to_string()
+    };
+
+    // --- per-phase critical path -----------------------------------------
+    out.push_str("\nper-phase critical path\n");
+    out.push_str(&format!(
+        "  {:<26} {:>9} {:>7} {:>9} {:>9} {:>6}\n",
+        "phase", "wall ms", "chunks", "busy ms", "crit ms", "eff%"
+    ));
+    for ph in &phases {
+        let mine: Vec<&&Ev> = chunks.iter().filter(|c| phase_of(c) == ph.name).collect();
+        let busy: f64 = mine.iter().map(|c| c.dur_ms).sum();
+        let mut per_worker: BTreeMap<String, f64> = BTreeMap::new();
+        for c in &mine {
+            *per_worker.entry(c.arg_str("worker").unwrap_or("?").to_string()).or_default() +=
+                c.dur_ms;
+        }
+        // Critical path: the busiest worker's serial time — the floor on
+        // phase wall time no scheduler reshuffle could beat.
+        let crit = per_worker.values().fold(0.0_f64, |a, &b| a.max(b));
+        let lanes = per_worker.len().max(1) as f64;
+        let eff = if ph.dur_ms > 0.0 { 100.0 * busy / (ph.dur_ms * lanes) } else { 0.0 };
+        out.push_str(&format!(
+            "  {:<26} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>6.1}\n",
+            ph.name,
+            ph.dur_ms,
+            mine.len(),
+            busy,
+            crit,
+            eff.min(100.0),
+        ));
+    }
+
+    // --- top slowest chunks ----------------------------------------------
+    let mut by_dur: Vec<&&Ev> = chunks.iter().collect();
+    by_dur.sort_by(|a, b| b.dur_ms.total_cmp(&a.dur_ms));
+    out.push_str("\ntop slowest chunks\n");
+    out.push_str(&format!(
+        "  {:>9} {:<22} {:<18} {:>8} {:>8} {:>8}  {}\n",
+        "dur ms", "phase", "worker", "dec ms", "cmp ms", "enc ms", "flags"
+    ));
+    for c in by_dur.iter().take(10) {
+        let mut flags = String::new();
+        if c.arg_bool("retry") {
+            flags.push_str("retried ");
+        }
+        if c.arg_bool("speculative") {
+            flags.push_str("speculated ");
+        }
+        out.push_str(&format!(
+            "  {:>9.1} {:<22} {:<18} {:>8.1} {:>8.1} {:>8.1}  {}\n",
+            c.dur_ms,
+            format!("{}/{}", phase_of(c), c.name),
+            c.arg_str("worker").unwrap_or("?"),
+            c.arg_num("decode_ms"),
+            c.arg_num("compute_ms"),
+            c.arg_num("encode_ms"),
+            flags.trim_end(),
+        ));
+    }
+
+    // --- worker utilization ----------------------------------------------
+    struct W {
+        chunks: usize,
+        busy: f64,
+        retried: usize,
+        speculated: usize,
+    }
+    let mut workers: BTreeMap<String, W> = BTreeMap::new();
+    for c in &chunks {
+        let w = workers
+            .entry(c.arg_str("worker").unwrap_or("?").to_string())
+            .or_insert(W { chunks: 0, busy: 0.0, retried: 0, speculated: 0 });
+        w.chunks += 1;
+        w.busy += c.dur_ms;
+        if c.arg_bool("retry") {
+            w.retried += 1;
+        }
+        if c.arg_bool("speculative") {
+            w.speculated += 1;
+        }
+    }
+    let span: f64 = if let Some(run) = runs.first() {
+        run.dur_ms
+    } else {
+        phases.iter().map(|p| p.dur_ms).sum()
+    };
+    out.push_str("\nworker utilization\n");
+    out.push_str(&format!(
+        "  {:<18} {:>7} {:>9} {:>6} {:>8} {:>11}\n",
+        "worker", "chunks", "busy ms", "util%", "retried", "speculated"
+    ));
+    for (name, w) in &workers {
+        let util = if span > 0.0 { 100.0 * w.busy / span } else { 0.0 };
+        out.push_str(&format!(
+            "  {:<18} {:>7} {:>9.1} {:>6.1} {:>8} {:>11}\n",
+            name,
+            w.chunks,
+            w.busy,
+            util.min(100.0),
+            w.retried,
+            w.speculated,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{TraceEvent, TraceSink};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("tallfat-summary-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn chunk(name: &str, ts: u64, dur: u64, worker: &str, parent: &str) -> TraceEvent {
+        TraceEvent::complete(name, "chunk", ts, dur, 101)
+            .arg_str("worker", worker)
+            .arg_str("parent", parent)
+            .arg_num("decode_ms", 1.0)
+            .arg_num("compute_ms", 2.0)
+            .arg_num("encode_ms", 0.5)
+    }
+
+    #[test]
+    fn summarizes_phases_chunks_and_workers() {
+        let path = tmp("ok.json");
+        let sink = TraceSink::create(&path).unwrap();
+        sink.emit(
+            &TraceEvent::complete("run svd", "run", 0, 10_000_000, 1).arg_str("span", "aa"),
+        );
+        sink.emit(
+            &TraceEvent::complete("projectgram#1", "phase", 100, 8_000_000, 1)
+                .arg_str("span", "bb")
+                .arg_str("parent", "aa"),
+        );
+        sink.emit(&chunk("chunk 0", 200, 3_000_000, "w1:7001", "bb"));
+        sink.emit(&chunk("chunk 1", 300, 4_000_000, "w2:7002", "bb"));
+        sink.emit(&chunk("chunk 2", 3_400, 2_000_000, "w1:7001", "bb").arg_bool("retry", true));
+        sink.close();
+
+        let text = render_summary(&path).unwrap();
+        assert!(text.contains("1 run, 1 phases, 3 chunks"), "{text}");
+        assert!(text.contains("projectgram#1"), "{text}");
+        assert!(text.contains("w1:7001"), "{text}");
+        assert!(text.contains("w2:7002"), "{text}");
+        assert!(text.contains("retried"), "{text}");
+        // busiest worker: w1 with 3s + 2s = 5s serial — the critical path.
+        assert!(text.contains("5000.0"), "{text}");
+    }
+
+    #[test]
+    fn tolerates_truncated_file() {
+        let path = tmp("truncated.json");
+        let sink = TraceSink::create(&path).unwrap();
+        sink.emit(&TraceEvent::complete("run svd", "run", 0, 500, 1));
+        sink.close();
+        // Simulate a crash mid-write: re-append half an event, no bracket.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text = text.replace("\n]\n", ",\n{\"name\":\"half");
+        std::fs::write(&path, text).unwrap();
+        let out = render_summary(&path).unwrap();
+        assert!(out.contains("1 run"), "{out}");
+        assert!(out.contains("unparseable lines skipped"), "{out}");
+    }
+
+    #[test]
+    fn empty_trace_renders_header_only() {
+        let path = tmp("empty.json");
+        TraceSink::create(&path).unwrap().close();
+        let out = render_summary(&path).unwrap();
+        assert!(out.contains("events: 0"), "{out}");
+    }
+}

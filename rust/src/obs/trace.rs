@@ -1,0 +1,734 @@
+//! Span tracing with a Chrome trace-event sink.
+//!
+//! Three layers, each usable without the ones above it:
+//!
+//! 1. **Context** — a process-wide span stack (thread-local) of
+//!    [`TraceCtx`] values. [`current`] exposes the innermost context so
+//!    logs and wire frames can attribute themselves to a run even when no
+//!    sink is installed. A `TraceCtx` is 16 bytes (trace id + span id) and
+//!    is what cluster proto v5 ships in `Phase`/`Assign` frames.
+//! 2. **Spans** — [`Span`] is an RAII guard: it pushes its context on
+//!    construction and, when a sink is installed, emits one Chrome
+//!    `"ph":"X"` complete event on drop with its duration and arguments.
+//! 3. **Sink** — [`TraceSink`] appends trace events to a file as a JSON
+//!    array with one event per line (Chrome trace-event format; open the
+//!    file in chrome://tracing or Perfetto). [`install`] wires a sink into
+//!    the process global used by spans; [`TraceGuard`] does install +
+//!    root-span + finish for CLI commands.
+//!
+//! Timestamps are microseconds since sink installation (Chrome wants a
+//! single monotonic µs clock per process). Leader-side merged events for
+//! worker chunks are back-dated from their measured durations, so the
+//! whole cluster timeline shares the leader's clock.
+//!
+//! With no sink installed everything degrades to near-zero cost: spans
+//! keep the context stack working (ids still flow into JSON logs and
+//! wire frames) but nothing is formatted or written.
+
+use crate::error::Result;
+use crate::util::lock::lock_unpoisoned;
+use std::cell::{Cell, RefCell};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+// ---------------------------------------------------------------------------
+// context
+// ---------------------------------------------------------------------------
+
+/// 16-byte cross-process trace context: a run-unique trace id plus the id
+/// of the span under which the carrying message was sent. `trace == 0`
+/// means "not traced".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace: u64,
+    pub span: u64,
+}
+
+impl TraceCtx {
+    /// The absent context (tracing off).
+    pub const NONE: TraceCtx = TraceCtx { trace: 0, span: 0 };
+
+    pub fn is_none(&self) -> bool {
+        self.trace == 0
+    }
+}
+
+/// Allocate a process-unique, never-zero id. Seeded from wall clock + pid
+/// so ids from different processes in one cluster run don't collide.
+pub fn next_id() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let seed = *SEED.get_or_init(|| {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0x9E37_79B9);
+        nanos ^ ((std::process::id() as u64) << 48)
+    });
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    // SplitMix64 finalizer: decorrelates consecutive counters.
+    let mut z = seed.wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    (z ^ (z >> 31)) | 1
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<TraceCtx>> = const { RefCell::new(Vec::new()) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// The innermost active context on this thread ([`TraceCtx::NONE`] when
+/// nothing is being traced here).
+pub fn current() -> TraceCtx {
+    STACK.with(|s| s.borrow().last().copied().unwrap_or(TraceCtx::NONE))
+}
+
+/// Small stable per-thread lane id for trace events (assigned on first use;
+/// not the OS tid, which Chrome would render as huge meaningless numbers).
+pub fn lane_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+// ---------------------------------------------------------------------------
+// events
+// ---------------------------------------------------------------------------
+
+/// An argument value attached to a trace event.
+#[derive(Clone, Debug)]
+pub enum ArgValue {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+}
+
+/// One Chrome trace event. `ph` is the phase letter: `X` = complete event
+/// (ts + dur), `M` = metadata (e.g. `thread_name`).
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub name: String,
+    pub cat: String,
+    pub ph: char,
+    pub ts_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub args: Vec<(String, ArgValue)>,
+}
+
+impl TraceEvent {
+    /// A complete ("X") event.
+    pub fn complete(name: &str, cat: &str, ts_us: u64, dur_us: u64, tid: u64) -> Self {
+        TraceEvent {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ph: 'X',
+            ts_us,
+            dur_us,
+            tid,
+            args: Vec::new(),
+        }
+    }
+
+    /// A `thread_name` metadata event — names lane `tid` in the viewer.
+    pub fn thread_name(tid: u64, name: &str) -> Self {
+        TraceEvent {
+            name: "thread_name".to_string(),
+            cat: String::new(),
+            ph: 'M',
+            ts_us: 0,
+            dur_us: 0,
+            tid,
+            args: vec![("name".to_string(), ArgValue::Str(name.to_string()))],
+        }
+    }
+
+    pub fn arg_str(mut self, key: &str, val: &str) -> Self {
+        self.args.push((key.to_string(), ArgValue::Str(val.to_string())));
+        self
+    }
+
+    pub fn arg_num(mut self, key: &str, val: f64) -> Self {
+        self.args.push((key.to_string(), ArgValue::Num(val)));
+        self
+    }
+
+    pub fn arg_bool(mut self, key: &str, val: bool) -> Self {
+        self.args.push((key.to_string(), ArgValue::Bool(val)));
+        self
+    }
+
+    fn render(&self, pid: u32) -> String {
+        let mut s = String::with_capacity(128);
+        s.push_str("{\"name\":\"");
+        s.push_str(&json_escape(&self.name));
+        s.push_str("\",\"cat\":\"");
+        s.push_str(&json_escape(if self.cat.is_empty() { "meta" } else { &self.cat }));
+        s.push_str("\",\"ph\":\"");
+        s.push(self.ph);
+        s.push_str("\",\"ts\":");
+        s.push_str(&self.ts_us.to_string());
+        if self.ph == 'X' {
+            s.push_str(",\"dur\":");
+            s.push_str(&self.dur_us.to_string());
+        }
+        s.push_str(",\"pid\":");
+        s.push_str(&pid.to_string());
+        s.push_str(",\"tid\":");
+        s.push_str(&self.tid.to_string());
+        s.push_str(",\"args\":{");
+        for (i, (k, v)) in self.args.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('"');
+            s.push_str(&json_escape(k));
+            s.push_str("\":");
+            match v {
+                ArgValue::Num(x) if x.is_finite() => s.push_str(&format!("{x}")),
+                ArgValue::Num(_) => s.push('0'),
+                ArgValue::Str(x) => {
+                    s.push('"');
+                    s.push_str(&json_escape(x));
+                    s.push('"');
+                }
+                ArgValue::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
+            }
+        }
+        s.push_str("}}");
+        s
+    }
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// sink
+// ---------------------------------------------------------------------------
+
+struct SinkInner {
+    w: BufWriter<File>,
+    wrote_any: bool,
+    events: u64,
+}
+
+/// Appends trace events to a file as Chrome trace-event JSON: a top-level
+/// array, one event object per line. The closing `]` is written by
+/// [`TraceSink::close`]; Chrome and Perfetto tolerate its absence, so a
+/// crashed run still yields an openable trace.
+pub struct TraceSink {
+    inner: Mutex<SinkInner>,
+    epoch: Instant,
+}
+
+impl TraceSink {
+    /// Create (truncate) `path` and write the array opener.
+    pub fn create(path: &str) -> Result<TraceSink> {
+        let f = File::create(path)?;
+        let mut w = BufWriter::new(f);
+        w.write_all(b"[")?;
+        w.flush()?;
+        Ok(TraceSink {
+            inner: Mutex::new(SinkInner { w, wrote_any: false, events: 0 }),
+            epoch: Instant::now(),
+        })
+    }
+
+    /// Microseconds since this sink was installed (the trace clock).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Append one event. IO errors are swallowed — tracing must never
+    /// fail the traced work.
+    pub fn emit(&self, ev: &TraceEvent) {
+        let line = ev.render(std::process::id());
+        let mut g = lock_unpoisoned(&self.inner);
+        let sep: &[u8] = if g.wrote_any { b",\n" } else { b"\n" };
+        g.wrote_any = true;
+        g.events += 1;
+        let _ = g.w.write_all(sep);
+        let _ = g.w.write_all(line.as_bytes());
+        let _ = g.w.flush();
+    }
+
+    /// Number of events emitted so far.
+    pub fn events(&self) -> u64 {
+        lock_unpoisoned(&self.inner).events
+    }
+
+    /// Write the closing bracket, making the file strict JSON.
+    pub fn close(&self) {
+        let mut g = lock_unpoisoned(&self.inner);
+        let _ = g.w.write_all(b"\n]\n");
+        let _ = g.w.flush();
+    }
+}
+
+static GLOBAL: Mutex<Option<Arc<TraceSink>>> = Mutex::new(None);
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+
+/// Install a process-global sink writing to `path`. Replaces any previous
+/// sink (the old one is closed).
+pub fn install(path: &str) -> Result<()> {
+    let sink = Arc::new(TraceSink::create(path)?);
+    let old = lock_unpoisoned(&GLOBAL).replace(sink);
+    ACTIVE.store(true, Ordering::Release);
+    if let Some(old) = old {
+        old.close();
+    }
+    Ok(())
+}
+
+/// Whether a global sink is installed (cheap: one atomic load).
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Acquire)
+}
+
+/// The current global sink, if any.
+pub fn sink() -> Option<Arc<TraceSink>> {
+    if !active() {
+        return None;
+    }
+    lock_unpoisoned(&GLOBAL).clone()
+}
+
+/// Close and remove the global sink.
+pub fn finish() {
+    ACTIVE.store(false, Ordering::Release);
+    if let Some(s) = lock_unpoisoned(&GLOBAL).take() {
+        s.close();
+    }
+}
+
+/// Emit an event through the global sink (no-op when tracing is off).
+pub fn emit_global(ev: &TraceEvent) {
+    if let Some(s) = sink() {
+        s.emit(ev);
+    }
+}
+
+/// `now_us` on the global sink, if installed.
+pub fn global_now_us() -> Option<u64> {
+    sink().map(|s| s.now_us())
+}
+
+// ---------------------------------------------------------------------------
+// spans
+// ---------------------------------------------------------------------------
+
+/// RAII span: pushes its [`TraceCtx`] on construction, pops and (when a
+/// sink is installed) emits one `"X"` event on drop.
+pub struct Span {
+    name: String,
+    cat: String,
+    ctx: TraceCtx,
+    parent_span: u64,
+    start_us: u64,
+    started: Instant,
+    recording: bool,
+    args: Vec<(String, ArgValue)>,
+}
+
+impl Span {
+    /// Start a new root span (fresh trace id). Inert when tracing is off.
+    pub fn root(name: &str, cat: &str) -> Span {
+        Span::build(name, cat, TraceCtx::NONE, true)
+    }
+
+    /// Start a child of this thread's current span; inherits its trace id.
+    /// Inert when tracing is off and nothing is on the stack.
+    pub fn child(name: &str, cat: &str) -> Span {
+        Span::build(name, cat, current(), false)
+    }
+
+    /// Start a span under a context received from another process (the
+    /// worker side of proto v5). Keeps the foreign trace id flowing into
+    /// this process's logs even when no local sink is installed.
+    pub fn with_parent(name: &str, cat: &str, parent: TraceCtx) -> Span {
+        Span::build(name, cat, parent, false)
+    }
+
+    fn build(name: &str, cat: &str, parent: TraceCtx, force_root: bool) -> Span {
+        let recording = active();
+        let live = recording || (!force_root && !parent.is_none());
+        if !live {
+            return Span {
+                name: String::new(),
+                cat: String::new(),
+                ctx: TraceCtx::NONE,
+                parent_span: 0,
+                start_us: 0,
+                started: Instant::now(),
+                recording: false,
+                args: Vec::new(),
+            };
+        }
+        let trace = if parent.is_none() { next_id() } else { parent.trace };
+        let ctx = TraceCtx { trace, span: next_id() };
+        STACK.with(|s| s.borrow_mut().push(ctx));
+        Span {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            ctx,
+            parent_span: parent.span,
+            start_us: global_now_us().unwrap_or(0),
+            started: Instant::now(),
+            recording,
+            args: Vec::new(),
+        }
+    }
+
+    /// This span's context (what gets put on the wire). NONE when inert.
+    pub fn ctx(&self) -> TraceCtx {
+        self.ctx
+    }
+
+    pub fn arg_str(&mut self, key: &str, val: &str) {
+        if !self.ctx.is_none() {
+            self.args.push((key.to_string(), ArgValue::Str(val.to_string())));
+        }
+    }
+
+    pub fn arg_num(&mut self, key: &str, val: f64) {
+        if !self.ctx.is_none() {
+            self.args.push((key.to_string(), ArgValue::Num(val)));
+        }
+    }
+
+    pub fn arg_bool(&mut self, key: &str, val: bool) {
+        if !self.ctx.is_none() {
+            self.args.push((key.to_string(), ArgValue::Bool(val)));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.ctx.is_none() {
+            return;
+        }
+        let ctx = self.ctx;
+        STACK.with(|s| {
+            let mut st = s.borrow_mut();
+            if st.last() == Some(&ctx) {
+                st.pop();
+            } else {
+                st.retain(|c| *c != ctx);
+            }
+        });
+        if !self.recording {
+            return;
+        }
+        if let Some(sink) = sink() {
+            let dur = self.started.elapsed().as_micros() as u64;
+            let mut ev = TraceEvent::complete(&self.name, &self.cat, self.start_us, dur, lane_id());
+            ev = ev
+                .arg_str("trace", &format!("{:016x}", ctx.trace))
+                .arg_str("span", &format!("{:016x}", ctx.span))
+                .arg_str("parent", &format!("{:016x}", self.parent_span));
+            ev.args.extend(self.args.drain(..));
+            sink.emit(&ev);
+        }
+    }
+}
+
+/// CLI-level RAII: when `path` is given, installs the global sink, opens a
+/// root span named after the command, and on drop closes both (so error
+/// returns still produce a readable trace file).
+pub struct TraceGuard {
+    span: Option<Span>,
+    installed: bool,
+}
+
+impl TraceGuard {
+    /// `path = None` yields an inert guard (tracing off).
+    pub fn start(path: Option<&str>, command: &str) -> Result<TraceGuard> {
+        let Some(path) = path else {
+            return Ok(TraceGuard { span: None, installed: false });
+        };
+        install(path)?;
+        let mut span = Span::root(&format!("run {command}"), "run");
+        span.arg_str("command", command);
+        Ok(TraceGuard { span: Some(span), installed: true })
+    }
+
+    /// Attach an argument to the run's root span.
+    pub fn arg(&mut self, key: &str, val: &str) {
+        if let Some(s) = self.span.as_mut() {
+            s.arg_str(key, val);
+        }
+    }
+}
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        self.span.take();
+        if self.installed {
+            finish();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chunk section timers (decode / compute / encode)
+// ---------------------------------------------------------------------------
+
+/// The three measured sections of a chunk execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Section {
+    /// Reading + parsing input rows.
+    Decode,
+    /// The numerical kernel (sketch, Gram, multiply...).
+    Compute,
+    /// Writing output shards.
+    Encode,
+}
+
+/// Accumulated per-chunk section timings, in microseconds. Shipped to the
+/// leader in proto v5 `ChunkDone` frames.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChunkSections {
+    pub decode_us: u64,
+    pub compute_us: u64,
+    pub encode_us: u64,
+}
+
+thread_local! {
+    static SECTIONS: Cell<Option<ChunkSections>> = const { Cell::new(None) };
+}
+
+/// Start accumulating section timings on this thread (one chunk).
+pub fn sections_begin() {
+    SECTIONS.with(|s| s.set(Some(ChunkSections::default())));
+}
+
+/// Whether a section accumulator is open on this thread (cheap gate for
+/// hot paths that would otherwise call `Instant::now` per row).
+pub fn sections_active() -> bool {
+    SECTIONS.with(|s| s.get().is_some())
+}
+
+/// Add time to one section (no-op if [`sections_begin`] wasn't called).
+pub fn sections_add(section: Section, d: Duration) {
+    SECTIONS.with(|s| {
+        if let Some(mut cur) = s.get() {
+            let us = d.as_micros() as u64;
+            match section {
+                Section::Decode => cur.decode_us += us,
+                Section::Compute => cur.compute_us += us,
+                Section::Encode => cur.encode_us += us,
+            }
+            s.set(Some(cur));
+        }
+    });
+}
+
+/// Time a closure into `section` (skips the clock when no accumulator).
+pub fn time_section<T>(section: Section, f: impl FnOnce() -> T) -> T {
+    if !sections_active() {
+        return f();
+    }
+    let t0 = Instant::now();
+    let out = f();
+    sections_add(section, t0.elapsed());
+    out
+}
+
+/// Close the accumulator and return what it gathered. Shard writes run
+/// *nested inside* compute-timed code (a job's `exec_row`/`post`), so the
+/// compute figure is reported net of the encode time accrued within it —
+/// the three sections are disjoint in the returned split.
+pub fn sections_take() -> Option<ChunkSections> {
+    SECTIONS.with(|s| s.take()).map(|mut c| {
+        c.compute_us = c.compute_us.saturating_sub(c.encode_us);
+        c
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::json::Json;
+    use std::sync::Mutex as StdMutex;
+
+    /// Tests that install/inspect the process-global sink serialize here
+    /// so parallel test threads can't interleave foreign spans.
+    static GLOBAL_TEST: StdMutex<()> = StdMutex::new(());
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("tallfat-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name).to_string_lossy().into_owned()
+    }
+
+    fn parse_events(path: &str) -> Vec<Json> {
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.trim_start().starts_with('['), "not a JSON array: {text:?}");
+        let mut out = Vec::new();
+        for line in text.lines() {
+            let line = line.trim().trim_end_matches(',');
+            if line.is_empty() || line == "[" || line == "]" {
+                continue;
+            }
+            out.push(Json::parse(line).expect("event line parses"));
+        }
+        out
+    }
+
+    #[test]
+    fn ids_are_unique_and_nonzero() {
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..1000 {
+            let id = next_id();
+            assert_ne!(id, 0);
+            assert!(seen.insert(id), "duplicate id");
+        }
+    }
+
+    #[test]
+    fn json_escape_covers_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+
+    #[test]
+    fn inert_span_without_sink_or_parent() {
+        let _g = GLOBAL_TEST.lock().unwrap_or_else(|p| p.into_inner());
+        finish();
+        let s = Span::root("r", "run");
+        assert!(s.ctx().is_none());
+        assert!(current().is_none());
+        drop(s);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn wire_parent_propagates_context_without_sink() {
+        let _g = GLOBAL_TEST.lock().unwrap_or_else(|p| p.into_inner());
+        finish();
+        let parent = TraceCtx { trace: 7, span: 9 };
+        let s = Span::with_parent("chunk", "chunk", parent);
+        assert_eq!(s.ctx().trace, 7);
+        assert_ne!(s.ctx().span, 9);
+        assert_eq!(current(), s.ctx());
+        drop(s);
+        assert!(current().is_none());
+    }
+
+    #[test]
+    fn spans_nest_and_events_carry_lineage() {
+        let _g = GLOBAL_TEST.lock().unwrap_or_else(|p| p.into_inner());
+        let path = tmp("nesting.json");
+        install(&path).unwrap();
+        let root_ctx;
+        let child_ctx;
+        {
+            let mut root = Span::root("run svd", "run");
+            root.arg_str("input", "a.csv");
+            root_ctx = root.ctx();
+            {
+                let child = Span::child("phase ata", "phase");
+                child_ctx = child.ctx();
+                assert_eq!(child.ctx().trace, root_ctx.trace);
+                assert_eq!(current(), child.ctx());
+            }
+            assert_eq!(current(), root.ctx());
+        }
+        emit_global(&TraceEvent::thread_name(42, "worker-0"));
+        finish();
+        assert!(!active());
+
+        let events = parse_events(&path);
+        assert_eq!(events.len(), 3);
+        let find = |name: &str| -> &Json {
+            events
+                .iter()
+                .find(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+                .unwrap()
+        };
+        let run = find("run svd");
+        let phase = find("phase ata");
+        let args = |e: &Json, k: &str| e.get("args").unwrap().get(k).unwrap().as_str().unwrap();
+        assert_eq!(args(run, "span"), format!("{:016x}", root_ctx.span));
+        assert_eq!(args(phase, "parent"), format!("{:016x}", root_ctx.span));
+        assert_eq!(args(phase, "trace"), format!("{:016x}", child_ctx.trace));
+        assert_eq!(args(run, "input"), "a.csv");
+        // child drops first, so its ts window sits inside the root's.
+        let ts = |e: &Json| e.get("ts").unwrap().as_f64().unwrap();
+        let dur = |e: &Json| e.get("dur").unwrap().as_f64().unwrap();
+        assert!(ts(phase) >= ts(run));
+        assert!(ts(phase) + dur(phase) <= ts(run) + dur(run) + 10.0);
+        let meta = find("thread_name");
+        assert_eq!(meta.get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(args(meta, "name"), "worker-0");
+    }
+
+    #[test]
+    fn closed_file_is_strict_json_array() {
+        let _g = GLOBAL_TEST.lock().unwrap_or_else(|p| p.into_inner());
+        let path = tmp("strict.json");
+        let sink = TraceSink::create(&path).unwrap();
+        sink.emit(&TraceEvent::complete("a", "c", 1, 2, 3).arg_num("x", 1.5));
+        sink.emit(&TraceEvent::complete("b", "c", 4, 5, 6).arg_bool("retry", true));
+        assert_eq!(sink.events(), 2);
+        sink.close();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Strict whole-file parse (what `json.load` in CI does).
+        let all = Json::parse(&text).expect("whole file is one JSON array");
+        let arr = match all {
+            Json::Arr(a) => a,
+            other => panic!("expected array, got {other:?}"),
+        };
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[1].get("args").unwrap().get("retry").unwrap(), &Json::Bool(true));
+    }
+
+    #[test]
+    fn sections_accumulate_and_take_clears() {
+        assert!(sections_take().is_none());
+        let skipped = time_section(Section::Decode, || 5);
+        assert_eq!(skipped, 5);
+        sections_begin();
+        assert!(sections_active());
+        let v = time_section(Section::Encode, || 7);
+        assert_eq!(v, 7);
+        sections_take();
+        sections_begin();
+        sections_add(Section::Decode, Duration::from_micros(100));
+        sections_add(Section::Decode, Duration::from_micros(50));
+        sections_add(Section::Compute, Duration::from_micros(700));
+        sections_add(Section::Encode, Duration::from_micros(40));
+        let got = sections_take().unwrap();
+        assert_eq!(got.decode_us, 150);
+        // Encode runs nested inside compute-timed code, so take() reports
+        // compute net of encode — the split is disjoint.
+        assert_eq!(got.compute_us, 660);
+        assert_eq!(got.encode_us, 40);
+        assert!(sections_take().is_none());
+        assert!(!sections_active());
+    }
+}

@@ -9,7 +9,11 @@
 //! share one scan of the U shards.
 //!
 //! Published metrics: `serve_batch_size` (last batch), `serve_batches`,
-//! `serve_batched_requests`.
+//! `serve_batched_requests`, plus two labeled histograms that split each
+//! request's life inside the batcher: `serve_queue_ms{op}` (submit →
+//! batch start, i.e. window wait plus any backlog) and
+//! `serve_compute_ms{op}` (the backend stages the op actually rode:
+//! projection matmul, shard scan, or both).
 
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
@@ -30,6 +34,17 @@ pub enum Request {
     Similar { row: Vec<f64>, topk: usize },
     /// Top-k similar model rows for an already-latent query (length k).
     SimilarLatent { latent: Vec<f64>, topk: usize },
+}
+
+impl Request {
+    /// Stable `op` label for the per-op serve histograms.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Request::Project { .. } => "project",
+            Request::Similar { .. } => "similar",
+            Request::SimilarLatent { .. } => "similar_latent",
+        }
+    }
 }
 
 /// A query response.
@@ -59,6 +74,9 @@ type Reply = mpsc::SyncSender<Result<Response>>;
 struct Job {
     req: Request,
     reply: Reply,
+    /// When the request entered the batcher's queue — the base of the
+    /// `serve_queue_ms{op}` observation taken at batch start.
+    enqueued: Instant,
 }
 
 enum Message {
@@ -95,7 +113,8 @@ impl BatcherHandle {
         let mut pending = Vec::with_capacity(reqs.len());
         for req in reqs {
             let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-            match self.tx.send(Message::Job(Job { req, reply: reply_tx })) {
+            let job = Job { req, reply: reply_tx, enqueued: Instant::now() };
+            match self.tx.send(Message::Job(job)) {
                 Ok(()) => pending.push(Some(reply_rx)),
                 Err(_) => pending.push(None),
             }
@@ -196,12 +215,17 @@ enum Kind {
 struct Slot {
     reply: Reply,
     kind: Kind,
+    /// `op` label of the originating request, for `serve_compute_ms{op}`.
+    op: &'static str,
     result: Option<Result<Response>>,
 }
 
 /// Run one coalesced batch: a single projection matmul for every raw row in
-/// the batch, then a single shard scan for every similarity query.
+/// the batch, then a single shard scan for every similarity query. Observes
+/// `serve_queue_ms{op}` per job at batch start and `serve_compute_ms{op}`
+/// per job at the end (the sum of the stages that op rode).
 fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
+    let reg = MetricsRegistry::global();
     let n = engine.store().n();
     let k = engine.store().k();
     let mut slots: Vec<Slot> = Vec::with_capacity(jobs.len());
@@ -209,6 +233,12 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
     let mut to_project: Vec<(usize, Vec<f64>)> = Vec::new();
     for job in jobs {
         let idx = slots.len();
+        let op = job.req.op_name();
+        reg.observe_labeled(
+            "serve_queue_ms",
+            &[("op", op)],
+            job.enqueued.elapsed().as_secs_f64() * 1e3,
+        );
         match job.req {
             Request::Project { row } => {
                 let result = (row.len() != n).then(|| {
@@ -217,7 +247,7 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
                 if result.is_none() {
                     to_project.push((idx, row));
                 }
-                slots.push(Slot { reply: job.reply, kind: Kind::Project, result });
+                slots.push(Slot { reply: job.reply, kind: Kind::Project, op, result });
             }
             Request::Similar { row, topk } => {
                 let result = (row.len() != n).then(|| {
@@ -229,6 +259,7 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
                 slots.push(Slot {
                     reply: job.reply,
                     kind: Kind::Similar { topk, latent: None },
+                    op,
                     result,
                 });
             }
@@ -242,6 +273,7 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
                 slots.push(Slot {
                     reply: job.reply,
                     kind: Kind::Similar { topk, latent: Some(latent) },
+                    op,
                     result,
                 });
             }
@@ -249,7 +281,9 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
     }
 
     // Stage 1: one projection matmul covers project + similar-by-row jobs.
+    let mut proj_ms = 0.0;
     if !to_project.is_empty() {
+        let t_proj = Instant::now();
         let rows: Vec<Vec<f64>> = to_project.iter().map(|(_, r)| r.clone()).collect();
         match Matrix::from_rows(&rows).and_then(|x| engine.project_batch(&x)) {
             Ok(latents) => {
@@ -269,9 +303,11 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
                 }
             }
         }
+        proj_ms = t_proj.elapsed().as_secs_f64() * 1e3;
     }
 
     // Stage 2: one shard scan covers every similarity query of the batch.
+    let mut scan_ms = 0.0;
     let mut sim_slots: Vec<usize> = Vec::new();
     let mut sim_latents: Vec<Vec<f64>> = Vec::new();
     let mut sim_topks: Vec<usize> = Vec::new();
@@ -286,6 +322,7 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
         }
     }
     if !sim_slots.is_empty() {
+        let t_scan = Instant::now();
         match Matrix::from_rows(&sim_latents)
             .and_then(|l| engine.similar_batch(&l, &sim_topks))
         {
@@ -301,9 +338,18 @@ fn execute_batch(engine: &QueryEngine, jobs: Vec<Job>) {
                 }
             }
         }
+        scan_ms = t_scan.elapsed().as_secs_f64() * 1e3;
     }
 
     for slot in slots {
+        // Each op rode a subset of the batch's stages: project → matmul
+        // only, similar-by-row → matmul + scan, similar_latent → scan only.
+        let compute_ms = match slot.op {
+            "project" => proj_ms,
+            "similar" => proj_ms + scan_ms,
+            _ => scan_ms,
+        };
+        reg.observe_labeled("serve_compute_ms", &[("op", slot.op)], compute_ms);
         let out = slot
             .result
             .unwrap_or_else(|| Err(Error::Other("serve batcher: request fell through".into())));

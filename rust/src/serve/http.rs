@@ -38,9 +38,12 @@
 //! from the generation the body started on, and every coalesced batch runs
 //! against a single generation — no operation is ever torn across a swap.
 //!
-//! Gauges published per request: `serve_requests_total`, `serve_qps`,
-//! `serve_latency_ms` (EWMA), plus the batcher's `serve_batch_size` and
-//! the swap counter `serve_reloads`.
+//! Metrics published per request: the counter `serve_requests_total`, the
+//! gauge `serve_qps`, and the end-to-end histogram `serve_request_ms`
+//! (parse → reply, per query line; `quantile(0.5)`/`quantile(0.99)` give
+//! p50/p99). The batcher adds `serve_batch_size` and the per-op split
+//! `serve_queue_ms{op}` / `serve_compute_ms{op}`; engine reloads bump
+//! `serve_reloads`.
 
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
@@ -512,8 +515,12 @@ pub(crate) fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
     let reg = MetricsRegistry::global();
     reg.add("serve_requests_total", nlines as f64);
     reg.set("serve_qps", total as f64 / elapsed);
-    let prev = reg.get("serve_latency_ms").unwrap_or(ms);
-    reg.set("serve_latency_ms", 0.9 * prev + 0.1 * ms);
+    // One observation per query line (the body's per-line mean), so the
+    // histogram's `_count` tracks `serve_requests_total` and its quantiles
+    // answer "what does one request cost end to end".
+    for _ in 0..nlines {
+        reg.observe("serve_request_ms", ms);
+    }
 }
 
 /// `serve <model-dir>`: load a saved model and answer queries over HTTP.
@@ -521,7 +528,8 @@ pub(crate) fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
 /// `--addr HOST:PORT` (default 127.0.0.1:9925, port 0 = ephemeral),
 /// `--backend native|xla|auto`, `--cache-shards N`, `--batch-window-ms MS`,
 /// `--max-batch N`, `--reload-poll-ms MS` (default 5000; 0 = only
-/// `{"op":"reload"}`), `--max-requests N` / `--once` (tests).
+/// `{"op":"reload"}`), `--max-requests N` / `--once` (tests),
+/// `--trace FILE` (Chrome trace-event timeline of the serving process).
 pub fn serve(args: &Args) -> Result<()> {
     let dir = args
         .opt_str("model-dir")
@@ -551,6 +559,7 @@ pub fn serve(args: &Args) -> Result<()> {
             ms => Some(Duration::from_millis(ms)),
         },
     };
+    let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "serve")?;
     {
         let engine = engines.current();
         let store = engine.store();

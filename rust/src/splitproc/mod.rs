@@ -30,6 +30,7 @@ use crate::io::chunker::{chunk_byte_ranges, chunk_count_for_rows, chunk_row_rang
 use crate::io::csv::CsvRowReader;
 use crate::io::sparse::{CsrHeader, CsrReader, SparseRowReader, SparseTextReader};
 use crate::io::InputSpec;
+use crate::obs::trace::{self, Section, Span};
 
 /// What a worker knows about its assignment (the paper's `workobj.ci` plus
 /// the chunk geometry).
@@ -171,32 +172,57 @@ fn estimate_rows(input: &InputSpec) -> Result<u64> {
     }
 }
 
+/// The inner read loop of [`run_chunk`], with an untimed fast path: the
+/// per-row `Instant` reads that feed the decode/compute section split only
+/// run while a chunk section accumulator is open (tracing on).
+fn pump_rows<J: RowJob>(
+    mut next: impl FnMut(&mut Vec<f64>) -> Result<bool>,
+    job: &mut J,
+    row: &mut Vec<f64>,
+) -> Result<u64> {
+    let mut count = 0u64;
+    if trace::sections_active() {
+        loop {
+            let t0 = std::time::Instant::now();
+            let more = next(row)?;
+            trace::sections_add(Section::Decode, t0.elapsed());
+            if !more {
+                break;
+            }
+            let t1 = std::time::Instant::now();
+            job.exec_row(row)?;
+            trace::sections_add(Section::Compute, t1.elapsed());
+            count += 1;
+        }
+    } else {
+        while next(row)? {
+            job.exec_row(row)?;
+            count += 1;
+        }
+    }
+    Ok(count)
+}
+
 /// Stream one chunk's rows into a job (the paper's inner read loop).
 /// Sparse inputs stream through [`run_chunk_sparse`] instead — densifying
 /// them row by row here would silently undo the `O(nnz)` contract.
 pub fn run_chunk<J: RowJob>(input: &InputSpec, chunk: &ChunkMeta, job: &mut J) -> Result<u64> {
     let mut row = Vec::new();
-    let mut count = 0u64;
+    let count;
     match input.format {
         InputFormat::Csv => {
             let r = chunk
                 .byte_range
                 .ok_or_else(|| Error::Config("csv chunk without byte range".into()))?;
             let mut reader = CsvRowReader::open_range(&input.path, r.start, r.end)?;
-            while reader.next_row(&mut row)? {
-                job.exec_row(&row)?;
-                count += 1;
-            }
+            count = pump_rows(|row| reader.next_row(row), job, &mut row)?;
         }
         InputFormat::Bin => {
             let (start, end) = chunk
                 .row_range
                 .ok_or_else(|| Error::Config("bin chunk without row range".into()))?;
             let mut reader = BinMatReader::open_rows(&input.path, start, end)?;
-            while reader.next_row(&mut row)? {
-                job.exec_row(&row)?;
-                count += 1;
-            }
+            count = pump_rows(|row| reader.next_row(row), job, &mut row)?;
         }
         InputFormat::Libsvm | InputFormat::SparseCsv | InputFormat::Csr => {
             return Err(Error::Config(format!(
@@ -206,7 +232,7 @@ pub fn run_chunk<J: RowJob>(input: &InputSpec, chunk: &ChunkMeta, job: &mut J) -
             )));
         }
     }
-    job.post()?;
+    trace::time_section(Section::Compute, || job.post())?;
     Ok(count)
 }
 
@@ -244,11 +270,26 @@ pub fn run_chunk_sparse<J: SparseRowJob>(
     let mut indices = Vec::new();
     let mut values = Vec::new();
     let mut count = 0u64;
-    while reader.next_row(&mut indices, &mut values)? {
-        job.exec_row(&indices, &values)?;
-        count += 1;
+    if trace::sections_active() {
+        loop {
+            let t0 = std::time::Instant::now();
+            let more = reader.next_row(&mut indices, &mut values)?;
+            trace::sections_add(Section::Decode, t0.elapsed());
+            if !more {
+                break;
+            }
+            let t1 = std::time::Instant::now();
+            job.exec_row(&indices, &values)?;
+            trace::sections_add(Section::Compute, t1.elapsed());
+            count += 1;
+        }
+    } else {
+        while reader.next_row(&mut indices, &mut values)? {
+            job.exec_row(&indices, &values)?;
+            count += 1;
+        }
     }
-    job.post()?;
+    trace::time_section(Section::Compute, || job.post())?;
     Ok(count)
 }
 
@@ -311,26 +352,49 @@ where
     let results: Vec<std::sync::Mutex<Option<T>>> =
         chunks.iter().map(|_| std::sync::Mutex::new(None)).collect();
     let threads = workers.max(1).min(chunks.len());
+    // Captured on the calling thread so every chunk span parents under the
+    // pass span that is active *here*, not whatever the pool threads see.
+    let recording = trace::active();
+    let parent = trace::current();
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
+        let sched = &sched;
+        let results = &results;
+        let chunks = &chunks;
+        let f = &f;
+        for lane in 0..threads {
+            scope.spawn(move || loop {
                 match sched.claim_blocking() {
                     Claim::Finished => break,
                     Claim::Run(i) => {
                         let t0 = std::time::Instant::now();
+                        let mut span = Span::with_parent(&format!("chunk {i}"), "chunk", parent);
+                        span.arg_num("chunk", i as f64);
+                        span.arg_str("worker", &format!("local-{lane}"));
+                        if recording {
+                            trace::sections_begin();
+                        }
                         let outcome = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(|| f(&chunks[i])),
                         );
+                        let sec = trace::sections_take().unwrap_or_default();
+                        if recording {
+                            span.arg_num("decode_ms", sec.decode_us as f64 / 1e3);
+                            span.arg_num("compute_ms", sec.compute_us as f64 / 1e3);
+                            span.arg_num("encode_ms", sec.encode_us as f64 / 1e3);
+                        }
                         match outcome {
                             Ok(Ok(v)) => {
+                                span.arg_str("outcome", "ok");
                                 if sched.complete(i, t0.elapsed()) {
                                     *results[i].lock().unwrap() = Some(v);
                                 }
                             }
                             Ok(Err(e)) => {
+                                span.arg_str("outcome", "failed");
                                 sched.fail(i, e);
                             }
                             Err(_) => {
+                                span.arg_str("outcome", "panicked");
                                 sched.fail(
                                     i,
                                     Error::Other(format!("chunk {i} worker panicked")),

@@ -75,7 +75,7 @@ impl SchedPolicy {
 
 /// What one pass's scheduling looked like (published as `pass_*` metrics
 /// and carried on [`crate::svd::PassOutput`]).
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct SchedStats {
     /// Chunks the pass was planned into.
     pub chunks: usize,
@@ -83,17 +83,42 @@ pub struct SchedStats {
     pub retried: usize,
     /// Speculative duplicate executions of straggling chunks.
     pub speculated: usize,
-    /// Slowest minus median chunk wall time, in milliseconds.
+    /// Derived chunk-duration skew: p99 minus p50 chunk wall time, in
+    /// milliseconds (recomputed from [`SchedStats::chunk_ms`]).
     pub skew_ms: f64,
+    /// Wall time of each chunk's first completion, in chunk order, in
+    /// milliseconds. Feeds the `sched_chunk_ms` histogram.
+    pub chunk_ms: Vec<f64>,
+}
+
+/// Nearest-rank quantile of an ascending-sorted sample (empty -> 0).
+fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (q * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// p99 minus p50 of a chunk-duration sample — the pass's straggler skew.
+fn skew_of(chunk_ms: &[f64]) -> f64 {
+    if chunk_ms.len() < 2 {
+        return 0.0;
+    }
+    let mut sorted = chunk_ms.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    quantile_sorted(&sorted, 0.99) - quantile_sorted(&sorted, 0.50)
 }
 
 impl SchedStats {
-    /// Merge another pass's stats into an accumulated view.
+    /// Merge another pass's stats into an accumulated view. The skew is
+    /// re-derived over the pooled chunk durations, not max-of-maxes.
     pub fn absorb(&mut self, other: &SchedStats) {
         self.chunks += other.chunks;
         self.retried += other.retried;
         self.speculated += other.speculated;
-        self.skew_ms = self.skew_ms.max(other.skew_ms);
+        self.chunk_ms.extend_from_slice(&other.chunk_ms);
+        self.skew_ms = skew_of(&self.chunk_ms);
     }
 }
 
@@ -307,18 +332,13 @@ impl ChunkScheduler {
                 g.slots.len()
             )));
         }
-        let mut times: Vec<f64> = g.slots.iter().map(|s| s.elapsed_ms).collect();
-        times.sort_by(f64::total_cmp);
-        let skew_ms = if times.len() < 2 {
-            0.0
-        } else {
-            times[times.len() - 1] - times[times.len() / 2]
-        };
+        let chunk_ms: Vec<f64> = g.slots.iter().map(|s| s.elapsed_ms).collect();
         Ok(SchedStats {
             chunks: g.slots.len(),
             retried: g.retried,
             speculated: g.speculated,
-            skew_ms,
+            skew_ms: skew_of(&chunk_ms),
+            chunk_ms,
         })
     }
 }
@@ -419,13 +439,63 @@ mod tests {
     }
 
     #[test]
-    fn skew_is_slowest_minus_median() {
+    fn skew_is_p99_minus_p50() {
         let s = ChunkScheduler::new(3, 0);
         for _ in 0..3 {
             let Claim::Run(i) = s.claim_blocking() else { panic!() };
             s.complete(i, ms(10 * (i as u64 + 1)));
         }
         let st = s.finish().unwrap();
+        // With 3 samples {10, 20, 30}, p99 is the max and p50 the median.
         assert!((st.skew_ms - 10.0).abs() < 1.0, "skew {}", st.skew_ms);
+        assert_eq!(st.chunk_ms.len(), 3);
+    }
+
+    #[test]
+    fn finish_records_chunk_durations_in_chunk_order() {
+        let s = ChunkScheduler::new(2, 0);
+        let Claim::Run(a) = s.claim_blocking() else { panic!() };
+        let Claim::Run(b) = s.claim_blocking() else { panic!() };
+        s.complete(a, ms(10 * (a as u64 + 1)));
+        s.complete(b, ms(10 * (b as u64 + 1)));
+        let st = s.finish().unwrap();
+        assert_eq!(st.chunk_ms, vec![10.0, 20.0]);
+    }
+
+    #[test]
+    fn absorb_pools_durations_and_rederives_skew() {
+        let mut acc = SchedStats::default();
+        let a = SchedStats {
+            chunks: 2,
+            retried: 1,
+            speculated: 0,
+            skew_ms: skew_of(&[10.0, 20.0]),
+            chunk_ms: vec![10.0, 20.0],
+        };
+        let b = SchedStats {
+            chunks: 2,
+            retried: 0,
+            speculated: 2,
+            skew_ms: skew_of(&[30.0, 100.0]),
+            chunk_ms: vec![30.0, 100.0],
+        };
+        acc.absorb(&a);
+        acc.absorb(&b);
+        assert_eq!(acc.chunks, 4);
+        assert_eq!(acc.retried, 1);
+        assert_eq!(acc.speculated, 2);
+        assert_eq!(acc.chunk_ms.len(), 4);
+        // Pooled {10,20,30,100}: p99 = 100, p50 = 20 -> skew 80, which
+        // max-of-maxes (70) would have understated.
+        assert!((acc.skew_ms - 80.0).abs() < 1e-9, "skew {}", acc.skew_ms);
+    }
+
+    #[test]
+    fn quantile_is_nearest_rank() {
+        let sorted = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile_sorted(&sorted, 0.5), 2.0);
+        assert_eq!(quantile_sorted(&sorted, 0.99), 4.0);
+        assert_eq!(quantile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(quantile_sorted(&[], 0.5), 0.0);
     }
 }

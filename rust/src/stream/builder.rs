@@ -340,6 +340,9 @@ impl StreamSvd {
                 Batch::Sparse(a) => sk.absorb_sparse(a, backend.as_ref())?,
             };
             report.push("stream.absorb", t0.elapsed(), batch.rows() as u64, 0);
+            // Per-batch absorb wall time (read + rotate + fold); quantiles
+            // show whether ingest keeps up with the source.
+            metrics.observe("stream_absorb_ms", t0.elapsed().as_secs_f64() * 1e3);
 
             let t0 = Instant::now();
             let idx = shard_epochs.len();
@@ -368,6 +371,9 @@ impl StreamSvd {
                     let rel =
                         sk.residual(self.center, self.sigma_cutoff_rel, backend.as_ref())?;
                     metrics.set("stream_residual", rel);
+                    // The gauge holds only the latest estimate; the
+                    // histogram keeps the whole trajectory of the run.
+                    metrics.observe("stream_residual_trajectory", rel);
                     report.push("stream.residual", t0.elapsed(), 0, 0);
                     if rel > self.tol {
                         let add = sk.width().min(max_w - sk.width());

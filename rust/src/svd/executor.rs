@@ -139,15 +139,23 @@ pub trait Executor {
     fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput>;
 }
 
-/// Publish one pass's scheduler counters into the global registry
-/// (`pass_chunks_total/retried/speculated` counters, `pass_skew_ms` gauge)
-/// — both executors call this after every pass, and the coordinator prints
-/// the totals in its run summary.
-pub(crate) fn publish_sched_stats(stats: &SchedStats) {
+/// Publish one pass's scheduler outcome into the global registry — both
+/// executors call this after every pass, and the coordinator prints the
+/// totals in its run summary:
+///
+/// * `pass_chunks_total/retried/speculated` counters;
+/// * every chunk duration observed into the `sched_chunk_ms{pass=...}`
+///   histogram, so per-pass p50/p99 are scrapeable;
+/// * `pass_skew_ms` gauge — the derived p99−p50 of the latest pass.
+pub(crate) fn publish_sched_stats(pass_name: &str, stats: &SchedStats) {
     let reg = MetricsRegistry::global();
     reg.add("pass_chunks_total", stats.chunks as f64);
     reg.add("pass_chunks_retried", stats.retried as f64);
     reg.add("pass_chunks_speculated", stats.speculated as f64);
+    let labels = [("pass", pass_name)];
+    for &ms in &stats.chunk_ms {
+        reg.observe_labeled("sched_chunk_ms", &labels, ms);
+    }
     reg.set("pass_skew_ms", stats.skew_ms);
 }
 
@@ -395,6 +403,10 @@ impl Executor for LocalExecutor {
             }
             p => *p,
         };
+        // Phase span: chunk spans emitted by the pool threads parent here,
+        // so the trace nests chunk ⊂ phase ⊂ run.
+        let mut phase_span = crate::obs::trace::Span::child(pass.name(), "phase");
+        phase_span.arg_str("executor", "local");
         let (outputs, stats) =
             splitproc::run_scheduled(ctx.input, self.workers, &ctx.sched, |chunk| {
                 execute_pass_chunk(ctx, &pass, chunk)
@@ -421,7 +433,8 @@ impl Executor for LocalExecutor {
         } else {
             Some(splitproc::reduce_partials(partials)?)
         };
-        publish_sched_stats(&stats);
+        phase_span.arg_num("chunks", stats.chunks as f64);
+        publish_sched_stats(pass.name(), &stats);
         Ok(PassOutput { rows, shards, partial, stats })
     }
 }

@@ -1,7 +1,11 @@
 //! Leveled stderr logger (no env_logger offline).
 //!
 //! Level picked from `TALLFAT_LOG` (error|warn|info|debug|trace), default
-//! `info`. Messages carry elapsed-since-start timestamps.
+//! `info`. Messages carry elapsed-since-start timestamps; call [`init`]
+//! first thing in `main` so the epoch is process start, not the first log
+//! call. `TALLFAT_LOG_FORMAT=json` switches to one JSON object per line
+//! (`ts`, `level`, `module`, `msg`, plus `trace`/`span` ids when a span
+//! is active — see [`crate::obs::trace`]).
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -37,10 +41,42 @@ impl Level {
             Level::Trace => "TRACE",
         }
     }
+
+    fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+}
+
+/// Output format.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    Text,
+    Json,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(255);
+static FORMAT: AtomicU8 = AtomicU8::new(255);
 static START: OnceLock<Instant> = OnceLock::new();
+
+/// Pin the log epoch and load `TALLFAT_LOG` / `TALLFAT_LOG_FORMAT`.
+/// Called at the top of `main`; later calls are no-ops. Without it the
+/// first log call initializes lazily (epoch = first message, so relative
+/// timestamps understate early work).
+pub fn init() {
+    START.get_or_init(Instant::now);
+    level();
+    format();
+}
+
+fn epoch() -> &'static Instant {
+    START.get_or_init(Instant::now)
+}
 
 fn level() -> u8 {
     let cur = LEVEL.load(Ordering::Relaxed);
@@ -54,9 +90,30 @@ fn level() -> u8 {
     from_env
 }
 
+fn format() -> Format {
+    let cur = FORMAT.load(Ordering::Relaxed);
+    if cur != 255 {
+        return if cur == 1 { Format::Json } else { Format::Text };
+    }
+    let json = std::env::var("TALLFAT_LOG_FORMAT")
+        .map(|v| v.eq_ignore_ascii_case("json"))
+        .unwrap_or(false);
+    FORMAT.store(if json { 1 } else { 0 }, Ordering::Relaxed);
+    if json {
+        Format::Json
+    } else {
+        Format::Text
+    }
+}
+
 /// Override the log level programmatically (tests, CLI `--verbose`).
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Override the output format programmatically (tests).
+pub fn set_format(f: Format) {
+    FORMAT.store(if f == Format::Json { 1 } else { 0 }, Ordering::Relaxed);
 }
 
 /// Whether a message at `l` would be emitted.
@@ -64,14 +121,39 @@ pub fn log_enabled(l: Level) -> bool {
     (l as u8) <= level()
 }
 
+/// Render one log line in the active format (factored out for tests —
+/// stderr itself is not capturable in-process).
+fn render_line(f: Format, l: Level, module: &str, msg: &str, t: f64) -> String {
+    match f {
+        Format::Text => format!("[{t:9.3}s {} {module}] {msg}", l.tag()),
+        Format::Json => {
+            use crate::obs::trace::{current, json_escape};
+            let mut line = format!(
+                "{{\"ts\":{t:.3},\"level\":\"{}\",\"module\":\"{}\",\"msg\":\"{}\"",
+                l.name(),
+                json_escape(module),
+                json_escape(msg),
+            );
+            let ctx = current();
+            if !ctx.is_none() {
+                line.push_str(&format!(
+                    ",\"trace\":\"{:016x}\",\"span\":\"{:016x}\"",
+                    ctx.trace, ctx.span
+                ));
+            }
+            line.push('}');
+            line
+        }
+    }
+}
+
 /// Emit a log line (prefer the [`crate::log_info!`]-style macros).
 pub fn log(l: Level, module: &str, msg: &str) {
     if !log_enabled(l) {
         return;
     }
-    let start = START.get_or_init(Instant::now);
-    let t = start.elapsed().as_secs_f64();
-    eprintln!("[{t:9.3}s {} {module}] {msg}", l.tag());
+    let t = epoch().elapsed().as_secs_f64();
+    eprintln!("{}", render_line(format(), l, module, msg, t));
 }
 
 /// Named logger handle for a module.
@@ -105,6 +187,7 @@ impl Logger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::json::Json;
 
     #[test]
     fn level_ordering() {
@@ -125,5 +208,33 @@ mod tests {
     fn from_str_parsing() {
         assert_eq!(Level::from_str("TRACE"), Level::Trace);
         assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn init_is_idempotent_and_pins_epoch() {
+        init();
+        let a = *epoch();
+        init();
+        assert_eq!(a, *epoch());
+    }
+
+    #[test]
+    fn json_lines_parse_and_escape() {
+        let line = render_line(Format::Json, Level::Warn, "svd::pipeline", "bad \"row\"\n", 1.25);
+        let v = Json::parse(&line).expect("log line is valid JSON");
+        assert_eq!(v.get("level").unwrap().as_str(), Some("warn"));
+        assert_eq!(v.get("module").unwrap().as_str(), Some("svd::pipeline"));
+        assert_eq!(v.get("msg").unwrap().as_str(), Some("bad \"row\"\n"));
+        assert_eq!(v.get("ts").unwrap().as_f64(), Some(1.25));
+        // No active span -> no trace/span fields.
+        assert!(v.get("trace").is_none());
+    }
+
+    #[test]
+    fn text_line_keeps_legacy_shape() {
+        let line = render_line(Format::Text, Level::Info, "m", "hello", 2.0);
+        assert!(line.contains("INFO"));
+        assert!(line.contains("[    2.000s"));
+        assert!(line.ends_with("m] hello"));
     }
 }

@@ -13,7 +13,7 @@ use tallfat::linalg::Matrix;
 use tallfat::svd::{validate, Svd};
 
 mod harness;
-use harness::{free_addr, spawn_workers};
+use harness::{free_addr, spawn_flaky_worker, spawn_workers};
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_cluster_it").join(name);
@@ -245,6 +245,153 @@ fn worker_failure_is_reported_to_leader() {
     for h in handles {
         h.join().unwrap();
     }
+}
+
+/// Acceptance for distributed `svd --trace`: the leader's trace file holds
+/// one merged timeline where every executed chunk of every phase appears
+/// with worker attribution, chunk spans nest inside their phase span and
+/// phases inside the run span, no chunk is silently executed twice (a
+/// duplicate must carry a `retry` or `speculative` tag), and the chunk a
+/// dying worker dropped comes back visibly tagged as a retry.
+#[test]
+fn distributed_svd_trace_merges_worker_chunks_exactly_once() {
+    use tallfat::serve::Json;
+
+    let d = dir("trace");
+    let (a, _) = gen_exact(
+        400,
+        24,
+        6,
+        Spectrum::Geometric { scale: 8.0, decay: 0.6 },
+        0.0,
+        29,
+    )
+    .unwrap();
+    let input = InputSpec::csv(d.join("a.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &input).unwrap();
+
+    let addr = free_addr();
+    // Two steady workers plus one that completes a single chunk and then
+    // dies with its next assignment in flight: that chunk must be
+    // reassigned to a survivor and show up retry-tagged in the timeline.
+    let flaky = spawn_flaky_worker(&addr, 1);
+    let good = spawn_workers(&addr, 2);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+
+    let trace_path = d.join("trace.json").to_string_lossy().into_owned();
+    tallfat::obs::trace::install(&trace_path).unwrap();
+    let (root_trace, root_span_hex);
+    {
+        // What `svd --trace` does: a root run span over the whole pipeline.
+        let mut root = tallfat::obs::trace::Span::root("run svd", "run");
+        let ctx = root.ctx();
+        root_trace = format!("{:016x}", ctx.trace);
+        root_span_hex = format!("{:016x}", ctx.span);
+        root.arg_str("command", "svd");
+        build(&input, d.join("work").to_string_lossy().into_owned(), 6)
+            .oversample(6)
+            .workers(3)
+            .seed(9)
+            .executor(&mut cluster)
+            .run()
+            .unwrap();
+    }
+    cluster.shutdown().unwrap();
+    flaky.join().unwrap();
+    for h in good {
+        h.join().unwrap();
+    }
+    tallfat::obs::trace::finish();
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    let events = doc.as_array().unwrap();
+    let astr = |e: &Json, k: &str| {
+        e.get("args").and_then(|a| a.get(k)).and_then(Json::as_str).map(str::to_string)
+    };
+    let abool =
+        |e: &Json, k: &str| e.get("args").and_then(|a| a.get(k)) == Some(&Json::Bool(true));
+    let ts = |e: &Json| e.get("ts").unwrap().as_f64().unwrap();
+    let dur = |e: &Json| e.get("dur").unwrap().as_f64().unwrap();
+    let cat = |e: &Json| e.get("cat").and_then(Json::as_str).unwrap_or("");
+    // Only this run's events: the registry/sink are process globals shared
+    // with concurrently running tests, so filter by our trace id.
+    let ours: Vec<&Json> = events
+        .iter()
+        .filter(|&e| {
+            e.get("ph").and_then(Json::as_str) == Some("X")
+                && astr(e, "trace").as_deref() == Some(root_trace.as_str())
+        })
+        .collect();
+
+    let run = ours
+        .iter()
+        .copied()
+        .find(|&e| cat(e) == "run")
+        .expect("run span missing from trace");
+    assert_eq!(astr(run, "span").as_deref(), Some(root_span_hex.as_str()));
+
+    // Phase spans: children of the run, executor=cluster, chunk count arg.
+    let mut phases: std::collections::BTreeMap<String, (f64, f64, usize)> = Default::default();
+    for e in ours.iter().copied().filter(|&e| cat(e) == "phase") {
+        assert_eq!(astr(e, "parent").as_deref(), Some(root_span_hex.as_str()), "phase⊄run");
+        assert_eq!(astr(e, "executor").as_deref(), Some("cluster"));
+        assert!(ts(e) >= ts(run) - 10.0 && ts(e) + dur(e) <= ts(run) + dur(run) + 10.0);
+        let chunks =
+            e.get("args").unwrap().get("chunks").unwrap().as_f64().unwrap() as usize;
+        phases.insert(astr(e, "span").unwrap(), (ts(e), dur(e), chunks));
+    }
+    assert!(!phases.is_empty(), "no cluster phase spans in trace");
+
+    // The merged chunk events are the ones carrying worker attribution
+    // (in-process test workers also emit their own local chunk spans into
+    // the shared sink; a real deployment's workers have no sink).
+    type ChunkEv = (bool, bool); // (retry, speculative)
+    let mut per_chunk: std::collections::BTreeMap<(String, usize), Vec<ChunkEv>> =
+        Default::default();
+    let merged =
+        ours.iter().copied().filter(|&e| cat(e) == "chunk" && astr(e, "worker").is_some());
+    for e in merged {
+        let worker = astr(e, "worker").unwrap();
+        assert!(!worker.is_empty(), "chunk without worker attribution");
+        let parent = astr(e, "parent").expect("chunk without parent span");
+        let &(pts, pdur, _) =
+            phases.get(&parent).expect("chunk's parent is not a phase span");
+        assert!(
+            ts(e) >= pts - 10.0 && ts(e) + dur(e) <= pts + pdur + 10.0,
+            "chunk event outside its phase window"
+        );
+        let name = e.get("name").and_then(Json::as_str).unwrap();
+        let idx: usize = name.strip_prefix("chunk ").unwrap().parse().unwrap();
+        per_chunk
+            .entry((parent, idx))
+            .or_default()
+            .push((abool(e, "retry"), abool(e, "speculative")));
+    }
+
+    // Exactly-once coverage: every chunk of every phase has one untagged
+    // (or retry-tagged) completion; any extra completion must be a
+    // visibly-tagged speculative duplicate.
+    for (span, &(_, _, chunks)) in &phases {
+        for c in 0..chunks {
+            let evs = per_chunk
+                .get(&(span.clone(), c))
+                .unwrap_or_else(|| panic!("phase {span} chunk {c} has no timeline event"));
+            let primary = evs.iter().filter(|(_, spec)| !spec).count();
+            assert_eq!(primary, 1, "phase {span} chunk {c}: {evs:?}");
+        }
+    }
+    let workers: std::collections::BTreeSet<String> = ours
+        .iter()
+        .copied()
+        .filter(|&e| cat(e) == "chunk")
+        .filter_map(|e| astr(e, "worker"))
+        .collect();
+    assert!(workers.len() >= 2, "expected several attributed workers, got {workers:?}");
+    assert!(
+        per_chunk.values().flatten().any(|&(retry, _)| retry),
+        "the dead worker's reassigned chunk never surfaced as a retry"
+    );
 }
 
 #[test]

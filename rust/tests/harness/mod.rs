@@ -70,7 +70,7 @@ pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::Jo
                 ToWorker::Phase { .. } => {
                     phase = Some(PhaseConfig::from_msg(&msg).unwrap());
                 }
-                ToWorker::Assign { phase: pid, chunk } => {
+                ToWorker::Assign { phase: pid, chunk, trace: _ } => {
                     if done >= complete_chunks {
                         // Die with this chunk in flight: the connection
                         // drop is the leader's death signal.
@@ -80,7 +80,15 @@ pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::Jo
                     assert_eq!(cfg.id, *pid, "assign for a phase we never saw");
                     let (rows, partial) =
                         execute_assignment(&backend, cfg, *chunk as usize).unwrap();
-                    let reply = ToLeader::ChunkDone { phase: *pid, chunk: *chunk, rows, partial };
+                    let reply = ToLeader::ChunkDone {
+                        phase: *pid,
+                        chunk: *chunk,
+                        rows,
+                        decode_us: 0,
+                        compute_us: 0,
+                        encode_us: 0,
+                        partial,
+                    };
                     let mut w: &TcpStream = &stream;
                     if reply.write(&mut w).is_err() {
                         return;

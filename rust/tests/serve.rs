@@ -220,7 +220,8 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     let resp = http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
     assert!(resp.contains("tallfat_serve_requests_total"), "{resp}");
     assert!(resp.contains("tallfat_serve_qps"), "{resp}");
-    assert!(resp.contains("tallfat_serve_latency_ms"), "{resp}");
+    assert!(resp.contains("tallfat_serve_request_ms_bucket{le="), "{resp}");
+    assert!(resp.contains("tallfat_serve_request_ms_count"), "{resp}");
 
     // 4. a hostile Content-Length is rejected, not allocated.
     let resp = http_request(
@@ -482,6 +483,117 @@ fn queries_survive_hot_swap_and_generation_advances() {
         .get("serve_reloads")
         .unwrap_or(0.0);
     assert!(reloads >= 1.0, "serve_reloads = {reloads}");
+}
+
+/// Cumulative `tallfat_serve_request_ms_bucket{le="..."}` counts parsed
+/// from one exposition render (`text`), plus the series `_count`.
+fn parse_request_ms_buckets(text: &str) -> (Vec<(f64, u64)>, u64) {
+    let mut buckets = Vec::new();
+    let mut count = 0u64;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("tallfat_serve_request_ms_bucket{le=\"") {
+            let (le, c) = rest.split_once("\"} ").unwrap();
+            if le != "+Inf" {
+                buckets.push((le.parse::<f64>().unwrap(), c.trim().parse::<u64>().unwrap()));
+            }
+        } else if let Some(rest) = line.strip_prefix("tallfat_serve_request_ms_count ") {
+            count = rest.trim().parse::<u64>().unwrap();
+        }
+    }
+    (buckets, count)
+}
+
+/// Acceptance: the p99 recomputed from `/metrics`' cumulative `_bucket`
+/// counts must agree with the registry's `quantile(0.99)` to within one
+/// bucket width. The registry is process-global and other serve tests
+/// observe into the same series concurrently, so the check only compares
+/// snapshots whose `_count` did not move between renders.
+#[test]
+fn serve_request_ms_p99_from_rendered_buckets_matches_quantile() {
+    let d = dir("p99");
+    let (a, _) = gen_exact(
+        80,
+        10,
+        3,
+        Spectrum::Geometric { scale: 5.0, decay: 0.6 },
+        0.0,
+        11,
+    )
+    .unwrap();
+    let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let result = Svd::over(&spec)
+        .unwrap()
+        .rank(3)
+        .oversample(4)
+        .workers(2)
+        .block(16)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
+    let model_dir = d.join("model");
+    result.save_model(&model_dir, Some(0)).unwrap();
+    let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+    let server = ModelServer::bind(
+        Arc::new(EngineHandle::fixed(engine)),
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(4),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    // Three bodies of varied sizes so the histogram sees a spread of
+    // per-line latencies rather than one repeated value.
+    for lines in [1usize, 8, 20] {
+        let mut body = String::new();
+        for i in 0..lines {
+            let row_json = Json::from_f64s(a.row(i * 3)).render();
+            body.push_str(&format!("{{\"op\":\"project\",\"row\":{row_json}}}\n"));
+        }
+        let resp = http_post_query(&addr, &body);
+        assert!(resp.contains("200 OK"), "{resp}");
+    }
+
+    // The live endpoint exposes the histogram series.
+    let resp = http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    srv.join().unwrap();
+    assert!(resp.contains("tallfat_serve_request_ms_bucket{le="), "{resp}");
+
+    // Recompute p99 from the exposition and compare against quantile(),
+    // retrying until a quiescent snapshot (count stable across renders).
+    let reg = tallfat::coordinator::server::MetricsRegistry::global();
+    let mut checked = false;
+    for _ in 0..50 {
+        let text = reg.render();
+        let q99 = reg.quantile("serve_request_ms", 0.99).unwrap();
+        let (buckets, count) = parse_request_ms_buckets(&text);
+        let (buckets2, count2) = parse_request_ms_buckets(&reg.render());
+        if count == 0 || count != count2 || buckets != buckets2 {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            continue;
+        }
+        // Nearest-cross rule over the cumulative counts, exactly what a
+        // Prometheus histogram_quantile would resolve to at bucket level.
+        let target = ((0.99 * count as f64).ceil() as u64).max(1);
+        let hit = buckets.iter().position(|&(_, c)| c >= target).unwrap();
+        let edge = buckets[hit].0;
+        let prev = if hit == 0 { 0.0 } else { buckets[hit - 1].0 };
+        let width = edge - prev;
+        assert!(
+            q99 >= prev - 1e-9 && q99 <= edge + 1e-9,
+            "quantile(0.99) = {q99} outside its exposition bucket ({prev}, {edge}]"
+        );
+        assert!((q99 - edge).abs() <= width + 1e-9, "p99 off by more than one bucket width");
+        checked = true;
+        break;
+    }
+    assert!(checked, "serve_request_ms never quiesced for a stable snapshot");
 }
 
 /// Malformed or truncated ND-JSON bodies must come back as per-line JSON
