@@ -1,0 +1,121 @@
+//! E9 — reduction topology: star (every partial ships to the leader) vs
+//! tree (held leaves, relayed pairwise merges, banded TSQR W folds).
+//!
+//! One box, in-process TCP workers — so the *wall-time* columns mostly
+//! show protocol/scheduling overhead, not network wins; the headline
+//! number is `leader_peak_bytes`: the leader's tracked reduce-state
+//! high-water mark, which is `O(chunks · n·k')` for star and
+//! `O(k'^2 log w)` for tree regardless of where the workers live.
+//!
+//! Emits `BENCH_reduce.json` with one point per (workers, mode).
+//! `TALLFAT_BENCH_SMOKE=1` shrinks everything to CI-smoke size.
+
+mod common;
+
+use std::sync::Arc;
+use tallfat::backend::native::NativeBackend;
+use tallfat::cluster::{worker, ClusterExecutor};
+use tallfat::io::InputSpec;
+use tallfat::svd::{ReduceMode, Svd};
+
+fn free_addr() -> String {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    addr
+}
+
+fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
+    (0..n)
+        .map(|_| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || {
+                let stream = loop {
+                    match std::net::TcpStream::connect(&addr) {
+                        Ok(s) => break s,
+                        Err(_) => std::thread::sleep(std::time::Duration::from_millis(10)),
+                    }
+                };
+                worker::serve(stream, Arc::new(NativeBackend::new())).unwrap();
+            })
+        })
+        .collect()
+}
+
+/// One full distributed factorization; returns (wall seconds, leader peak
+/// reduce-state bytes).
+fn run_once(
+    input: &InputSpec,
+    dir: &std::path::Path,
+    k: usize,
+    workers: usize,
+    mode: ReduceMode,
+) -> (f64, u64) {
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, workers);
+    let mut cluster = ClusterExecutor::accept(&addr, workers).unwrap();
+    let work = dir.join(format!("{}_{}w", mode.name(), workers)).to_string_lossy().into_owned();
+    let (result, wall) = common::time_once(|| {
+        Svd::over(input)
+            .unwrap()
+            .rank(k)
+            .oversample(8)
+            .workers(workers)
+            .seed(2013)
+            .work_dir(work.clone())
+            .reduce(mode)
+            .executor(&mut cluster)
+            .run()
+            .unwrap()
+    });
+    assert_eq!(result.k, k);
+    let peak = cluster.mem_peak();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (wall.as_secs_f64(), peak)
+}
+
+fn main() {
+    let smoke = common::smoke();
+    let dir = common::bench_dir("reduce");
+    let (m, n, k) = if smoke { (2_000, 48, 6) } else { (30_000, 192, 16) };
+    let input = common::ensure_dataset(&dir, "reduce", m, n, true);
+    let fleet: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+
+    common::header("E9 star vs tree reduction (distributed, in-process workers)");
+    println!(
+        "{:>8} {:>6} {:>10} {:>18} {:>9}",
+        "workers", "mode", "wall(s)", "leader_peak(B)", "peak x"
+    );
+    let mut points = Vec::new();
+    for &w in fleet {
+        let mut star_peak = 0u64;
+        for mode in [ReduceMode::Star, ReduceMode::Tree] {
+            let (wall, peak) = run_once(&input, &dir, k, w, mode);
+            let ratio = if mode == ReduceMode::Star {
+                star_peak = peak.max(1);
+                1.0
+            } else {
+                star_peak as f64 / peak.max(1) as f64
+            };
+            println!("{:>8} {:>6} {:>10.3} {:>18} {:>8.1}x", w, mode.name(), wall, peak, ratio);
+            points.push(format!(
+                "{{\"workers\":{w},\"mode\":\"{}\",\"wall_s\":{wall:.6},\
+                 \"leader_peak_bytes\":{peak}}}",
+                mode.name()
+            ));
+        }
+    }
+
+    let json = format!(
+        "{{\"bench\":\"reduce\",\"smoke\":{},\"m\":{},\"n\":{},\"k\":{},\"points\":[{}]}}\n",
+        smoke,
+        m,
+        n,
+        k,
+        points.join(",")
+    );
+    common::write_json("reduce", &json);
+}

@@ -8,17 +8,34 @@
 //! rotation matrices, column means; the tall data never does (the paper's
 //! point, made structural by [`super::proto`]).
 //!
+//! Reduction follows [`PassContext::reduce`]:
+//!
+//! * **Star** — every partial rides its `ChunkDone` frame and the leader
+//!   folds them sequentially (the pre-v6 behavior; leader memory grows
+//!   with the chunk count, and a leader memory cap can veto it).
+//! * **Tree** — `k'`-scale partials (`AᵀA`, `YᵀY`, column sums) stay as
+//!   held leaves on the workers that computed them; the leader relays the
+//!   canonical merge rounds ([`crate::svd::reduce::merge_rounds`]) between
+//!   holders and only the root crosses to it. The one tall partial — the
+//!   final `W = AᵀU₀` — goes through [`Executor::run_wpass`]: band-split
+//!   held leaves, per-band merges, a TSQR R-factor fold for the completion,
+//!   and worker-side `V` shard writes, so the leader never materializes an
+//!   n-sized matrix. Power-iteration `W` partials (consumed leader-side as
+//!   the next Ω) still ride the star transport but are folded over the
+//!   same merge-round schedule, keeping local/cluster bits identical.
+//!
 //! The chunk count is anchored to the worker count *at construction*, not
 //! the live count: every pass of a run (and the shards it leaves on disk)
 //! must share one chunk plan even if workers die or join mid-run.
 
-use super::leader::DistributedLeader;
+use super::leader::{DistributedLeader, PhaseSpec};
 use super::proto::PhaseKind;
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::splitproc;
 use crate::svd::executor::publish_sched_stats;
-use crate::svd::{Executor, Pass, PassContext, PassOutput};
+use crate::svd::reduce::{tree_reduce, ReduceMode};
+use crate::svd::{Executor, Pass, PassContext, PassOutput, WPassOutput};
 
 /// Map a wire phase back to the pass the worker should run. Inverse of
 /// [`wire_parts`]; an all-zero operand means "regenerate Ω from the seed".
@@ -74,15 +91,68 @@ impl ClusterExecutor {
         self.leader.worker_count()
     }
 
-    /// Access the underlying leader (e.g. for raw phase RPCs).
+    /// Access the underlying leader (e.g. for raw phase RPCs or the
+    /// reduce-state memory gauge).
     pub fn leader_mut(&mut self) -> &mut DistributedLeader {
         &mut self.leader
+    }
+
+    /// High-water mark of leader-resident reduce-state bytes.
+    pub fn mem_peak(&self) -> u64 {
+        self.leader.mem_peak()
     }
 
     /// Tell every worker to exit and consume the executor.
     pub fn shutdown(mut self) -> Result<()> {
         self.leader.shutdown()
     }
+
+    /// Plan the run's chunk geometry and assemble the wire-side phase
+    /// description shared by every leader entry point.
+    fn plan<'a>(
+        &self,
+        ctx: &'a PassContext,
+        kind: PhaseKind,
+        operand: &'a Matrix,
+        means: &'a Matrix,
+    ) -> Result<PhaseSpec<'a>> {
+        let chunks = splitproc::plan_chunks_policy(ctx.input, self.planned_workers, &ctx.sched)?;
+        let total = chunks.len();
+        if total == 0 {
+            return Err(Error::Config("input has no rows to chunk".into()));
+        }
+        Ok(PhaseSpec {
+            kind,
+            input: ctx.input,
+            work_dir: ctx.work_dir,
+            block: ctx.block,
+            seed: ctx.seed,
+            kp: ctx.kp,
+            cols: ctx.n,
+            shard_format: ctx.shard_format,
+            shard_epoch: ctx.shard_epoch,
+            operand,
+            means,
+            chunk_total: total,
+            max_retries: ctx.sched.max_retries,
+        })
+    }
+}
+
+fn wire_means(ctx: &PassContext) -> Result<Matrix> {
+    if ctx.means.is_empty() {
+        Ok(Matrix::zeros(0, 0))
+    } else {
+        Matrix::from_vec(1, ctx.means.len(), ctx.means.to_vec())
+    }
+}
+
+/// Phases whose partial is worth keeping distributed: the additive
+/// `k'`-scale (or 1×n) accumulations. Shard-only phases (`RotateU`,
+/// `Mult`) and the power-iteration `W` (whose sum the leader consumes
+/// immediately) stay on the star transport.
+fn holds_in_tree(kind: PhaseKind) -> bool {
+    matches!(kind, PhaseKind::ProjectGram | PhaseKind::Ata | PhaseKind::ColStats)
 }
 
 impl Executor for ClusterExecutor {
@@ -91,44 +161,54 @@ impl Executor for ClusterExecutor {
     }
 
     fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput> {
-        // Plan leader-side (the plan is a fixed point of its own count, so
-        // workers reproduce identical geometry from `(index, total)`).
-        let chunks = splitproc::plan_chunks_policy(ctx.input, self.planned_workers, &ctx.sched)?;
-        let total = chunks.len();
-        if total == 0 {
-            return Err(Error::Config("input has no rows to chunk".into()));
-        }
         let empty = Matrix::zeros(0, 0);
         let (kind, operand) = wire_parts(pass);
         let operand = operand.unwrap_or(&empty);
-        let means = if ctx.means.is_empty() {
-            Matrix::zeros(0, 0)
-        } else {
-            Matrix::from_vec(1, ctx.means.len(), ctx.means.to_vec())?
-        };
-        let (rows, partials, stats) = self.leader.run_phase(
-            kind,
-            ctx.input,
-            ctx.work_dir,
-            ctx.block,
-            ctx.seed,
-            ctx.kp,
-            ctx.n,
-            ctx.shard_format,
-            ctx.shard_epoch,
-            operand,
-            &means,
-            total,
-            ctx.sched.max_retries,
-        )?;
+        let means = wire_means(ctx)?;
+        let spec = self.plan(ctx, kind, operand, &means)?;
+        let total = spec.chunk_total;
+        if ctx.reduce == ReduceMode::Tree && holds_in_tree(kind) {
+            let (rows, partial, stats) = self.leader.run_phase_tree(&spec)?;
+            publish_sched_stats(pass.name(), &stats);
+            return Ok(PassOutput { rows, shards: total, partial: Some(partial), stats });
+        }
+        let (rows, partials, stats) = self.leader.run_phase(&spec)?;
         // `partials` is in chunk order: the reduction matches the local
-        // executor's bit for bit.
+        // executor's bit for bit — sequential fold in star mode, the
+        // canonical merge-round schedule in tree mode.
         let partial = if partials.is_empty() {
             None
+        } else if ctx.reduce == ReduceMode::Tree {
+            Some(tree_reduce(partials)?)
         } else {
             Some(splitproc::reduce_partials(partials)?)
         };
         publish_sched_stats(pass.name(), &stats);
         Ok(PassOutput { rows, shards: total, partial, stats })
+    }
+
+    fn run_wpass(
+        &mut self,
+        ctx: &PassContext,
+        m: &Matrix,
+        k: usize,
+        cutoff_rel: f64,
+        compute_v: bool,
+    ) -> Result<WPassOutput> {
+        if ctx.reduce == ReduceMode::Star {
+            // Star keeps the pre-v6 shape: full W on the leader, local
+            // banded completion.
+            let out = self.run_pass(ctx, &Pass::UrecoverTmul { m })?;
+            return crate::svd::executor::complete_wpass_from_full(
+                out, ctx, k, cutoff_rel, compute_v,
+            );
+        }
+        let means = wire_means(ctx)?;
+        let spec = self.plan(ctx, PhaseKind::UrecoverTmul, m, &means)?;
+        let total = spec.chunk_total;
+        let (rows, sigma_full, p, v_bands, stats) =
+            self.leader.run_wphase(&spec, ctx.band_rows as u64, k, cutoff_rel, compute_v)?;
+        publish_sched_stats(Pass::UrecoverTmul { m }.name(), &stats);
+        Ok(WPassOutput { rows, shards: total, v_bands, sigma_full, p, stats })
     }
 }

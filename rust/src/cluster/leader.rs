@@ -1,7 +1,8 @@
 //! The leader: accepts worker connections, streams chunk assignments to
 //! them, and collects per-chunk acks. The SVD math itself lives in
 //! [`crate::svd::pipeline`] — this module is transport plus the cluster
-//! side of the chunk scheduler, driven through
+//! side of the chunk scheduler and the reduction plan
+//! ([`crate::svd::reduce`]), driven through
 //! [`crate::cluster::ClusterExecutor`].
 //!
 //! One recv thread per worker turns every connection into an event stream
@@ -20,15 +21,39 @@
 //!   longest-running chunks; the first completion wins, duplicates are
 //!   dropped (shard writes are staged + atomically renamed, so a late
 //!   duplicate is harmless).
+//!
+//! Reductions follow one of two plans. **Star** ([`run_phase`]): every
+//! partial rides its `ChunkDone` frame and the leader stores them all —
+//! `O(chunks)` leader memory, accounted by the [`MemGauge`]. **Tree**
+//! ([`run_phase_tree`] / [`run_wphase`]): [`CAP_HOLD`] workers keep their
+//! partial as held leaves and ship an empty ack; the leader then walks the
+//! canonical [`merge_rounds`] schedule, relaying pairwise `RMerge` steps
+//! between holders, so it only ever touches one `k'`-scale message in
+//! transit. The tall `W` reduction ([`run_wphase`]) additionally band-splits
+//! leaves, folds per-band TSQR R factors into the completion's `(Σ, P)`,
+//! and has the root holder write `V` row shards directly — the leader never
+//! materializes an n-sized factor. A holder dying or failing mid-reduce
+//! aborts the attempt; the whole phase restarts under a fresh id (bounded
+//! by the retry budget), which is safe because chunk execution is
+//! deterministic and shard writes are staged.
+//!
+//! [`run_phase`]: DistributedLeader::run_phase
+//! [`run_phase_tree`]: DistributedLeader::run_phase_tree
+//! [`run_wphase`]: DistributedLeader::run_wphase
+//! [`CAP_HOLD`]: super::proto::CAP_HOLD
+//! [`merge_rounds`]: crate::svd::reduce::merge_rounds
 
-use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
+use super::proto::{FetchWhat, PhaseKind, ToLeader, ToWorker, HOLD_NONE, MIN_VERSION, VERSION};
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::linalg::Matrix;
+use crate::linalg::{matmul, Matrix};
 use crate::obs::trace::{self, next_id, Span, TraceCtx, TraceEvent};
 use crate::splitproc::{ChunkScheduler, SchedStats};
+use crate::svd::reduce::{self, MemGauge, MergeStep};
 use crate::util::Logger;
+use std::collections::{HashMap, HashSet};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -50,12 +75,33 @@ const EVENT_POLL_MS: u64 = 1_000;
 /// Kept clear of the leader's own small per-thread lane ids.
 const WORKER_LANE_BASE: u64 = 100;
 
+/// Everything one phase needs besides the reduction plan: what the old
+/// 13-argument `run_phase` took, named. Borrowed so call sites don't clone
+/// operands.
+pub struct PhaseSpec<'a> {
+    pub kind: PhaseKind,
+    pub input: &'a InputSpec,
+    pub work_dir: &'a str,
+    pub block: usize,
+    pub seed: u64,
+    pub kp: usize,
+    pub cols: usize,
+    pub shard_format: InputFormat,
+    pub shard_epoch: u32,
+    pub operand: &'a Matrix,
+    pub means: &'a Matrix,
+    pub chunk_total: usize,
+    pub max_retries: usize,
+}
+
 /// One connected worker, leader-side: the write half of its socket plus
 /// scheduling state. The read half lives in its recv thread.
 struct Worker {
     stream: TcpStream,
     /// Peer address, for logs and trace attribution.
     peer: String,
+    /// Capability bitmap from the worker's hello (0 for v5 workers).
+    caps: u64,
     alive: bool,
     /// The `(phase, chunk)` assignment in flight, if any (workers execute
     /// one chunk at a time).
@@ -76,12 +122,57 @@ struct Worker {
 enum Event {
     Msg { worker: usize, msg: ToLeader },
     Dead { worker: usize, error: String },
-    Joined { stream: TcpStream },
+    Joined { stream: TcpStream, caps: u64 },
+}
+
+/// Where a reduce span's leaves live: on the worker that computed (or
+/// merged into) them, or leader-side when a hold-incapable v5 worker
+/// shipped the partial the old way (one matrix per band).
+enum Hold {
+    Worker(usize),
+    Leader(Vec<Matrix>),
+}
+
+/// Leader-resident bytes of a hold — the [`MemGauge`] accounting unit.
+fn hold_bytes(h: &Hold) -> u64 {
+    match h {
+        Hold::Worker(_) => 0,
+        Hold::Leader(bands) => bands.iter().map(reduce::matrix_bytes).sum(),
+    }
+}
+
+/// Outcome of one tree-reduce attempt step: finished, or the attempt must
+/// restart from chunk execution (holder died, reduce step failed).
+enum TreeFlow<T> {
+    Done(T),
+    Restart(String),
+}
+
+/// What [`DistributedLeader::await_reduce`] resolved to.
+enum ReduceReply {
+    Part(Matrix),
+    Done,
+}
+
+/// Result of driving one phase's chunks to completion.
+struct ChunkDrive {
+    phase_id: u64,
+    rows: u64,
+    /// Leader-stored partials, chunk-ordered (star mode, and tree-mode
+    /// leaves from hold-incapable workers).
+    partials: Vec<Option<Matrix>>,
+    /// Tree mode: which worker holds chunk `c`'s leaves (empty `ChunkDone`
+    /// partial from a `CAP_HOLD` worker).
+    holder_worker: Vec<Option<usize>>,
+    /// Gauge bytes tracked for `partials` (released by the caller when the
+    /// partials are consumed or the attempt aborts).
+    tracked: u64,
+    stats: Option<SchedStats>,
 }
 
 fn send_to(worker: &mut Worker, msg: &ToWorker) -> Result<()> {
     let mut stream: &TcpStream = &worker.stream;
-    msg.write(&mut stream)
+    msg.write_caps(&mut stream, worker.caps)
 }
 
 fn recv_loop(mut reader: TcpStream, id: usize, tx: Sender<Event>) {
@@ -116,14 +207,16 @@ fn accept_loop(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) 
             ToLeader::read(&mut rs)
         };
         match hello {
-            Ok(ToLeader::Hello { version }) if version == VERSION => {
+            Ok(ToLeader::Hello { version, caps })
+                if (MIN_VERSION..=VERSION).contains(&version) =>
+            {
                 stream.set_read_timeout(None).ok();
-                LOG.info(&format!("late worker from {peer} verified"));
-                if tx.send(Event::Joined { stream }).is_err() {
+                LOG.info(&format!("late worker from {peer} verified (v{version}, caps {caps:#x})"));
+                if tx.send(Event::Joined { stream, caps }).is_err() {
                     return;
                 }
             }
-            Ok(ToLeader::Hello { version }) => {
+            Ok(ToLeader::Hello { version, .. }) => {
                 LOG.warn(&format!("rejected {peer}: protocol v{version}, leader v{VERSION}"));
             }
             Ok(other) => {
@@ -136,7 +229,8 @@ fn accept_loop(listener: TcpListener, tx: Sender<Event>, stop: Arc<AtomicBool>) 
     }
 }
 
-/// Accepts workers, schedules chunk-grained phases, reduces partials.
+/// Accepts workers, schedules chunk-grained phases, reduces partials —
+/// star or tree, per the caller's reduction plan.
 pub struct DistributedLeader {
     workers: Vec<Worker>,
     events: Receiver<Event>,
@@ -144,6 +238,7 @@ pub struct DistributedLeader {
     listen_addr: String,
     stop_accept: Arc<AtomicBool>,
     next_phase: u64,
+    gauge: MemGauge,
 }
 
 impl DistributedLeader {
@@ -165,6 +260,7 @@ impl DistributedLeader {
             listen_addr,
             stop_accept: Arc::new(AtomicBool::new(false)),
             next_phase: 0,
+            gauge: MemGauge::default(),
         };
         for i in 0..n {
             let (stream, peer) = listener.accept()?;
@@ -174,11 +270,15 @@ impl DistributedLeader {
                 ToLeader::read(&mut rs)?
             };
             match hello {
-                ToLeader::Hello { version } if version == VERSION => {
-                    LOG.info(&format!("worker {i} joined from {peer}"));
-                    leader.register(stream)?;
+                ToLeader::Hello { version, caps }
+                    if (MIN_VERSION..=VERSION).contains(&version) =>
+                {
+                    LOG.info(&format!(
+                        "worker {i} joined from {peer} (v{version}, caps {caps:#x})"
+                    ));
+                    leader.register(stream, caps)?;
                 }
-                ToLeader::Hello { version } => {
+                ToLeader::Hello { version, .. } => {
                     return Err(Error::Config(format!(
                         "worker {peer} speaks protocol v{version}, leader v{VERSION}"
                     )));
@@ -196,7 +296,7 @@ impl DistributedLeader {
 
     /// Add a verified worker connection: spawn its recv thread, track its
     /// write half. The hello must already have been consumed.
-    fn register(&mut self, stream: TcpStream) -> Result<usize> {
+    fn register(&mut self, stream: TcpStream, caps: u64) -> Result<usize> {
         let id = self.workers.len();
         let peer = stream
             .peer_addr()
@@ -208,6 +308,7 @@ impl DistributedLeader {
         self.workers.push(Worker {
             stream,
             peer,
+            caps,
             alive: true,
             busy: None,
             busy_since: Instant::now(),
@@ -224,35 +325,680 @@ impl DistributedLeader {
         self.workers.iter().filter(|w| w.alive).count()
     }
 
-    /// Run one phase: broadcast the setup, stream `chunk_total` chunk
-    /// assignments through the scheduler (retry budget `max_retries` per
-    /// chunk), and collect `(total_rows, partials_in_chunk_order, stats)`.
-    #[allow(clippy::too_many_arguments)]
-    pub fn run_phase(
+    /// Cap the leader's tracked reduce-state bytes (0 = track only). A
+    /// phase whose reduce state would exceed the cap fails instead of
+    /// growing — how the memory-cap tests prove the star path can't
+    /// complete where the tree path fits.
+    pub fn set_mem_cap(&mut self, bytes: u64) {
+        self.gauge.set_cap(bytes);
+    }
+
+    /// High-water mark of leader-resident reduce-state bytes.
+    pub fn mem_peak(&self) -> u64 {
+        self.gauge.peak()
+    }
+
+    fn mark_dead(&mut self, w: usize, why: &str) {
+        if self.workers[w].alive {
+            LOG.warn(&format!("worker {w}: {why}: marking dead"));
+            self.workers[w].alive = false;
+            self.workers[w].busy = None;
+        }
+    }
+
+    fn send_worker(&mut self, w: usize, msg: &ToWorker) -> Result<()> {
+        send_to(&mut self.workers[w], msg)
+    }
+
+    /// Run one phase with the **star** reduction plan: every partial rides
+    /// its `ChunkDone` frame, the leader stores all of them (gauge-tracked)
+    /// and returns `(total_rows, partials_in_chunk_order, stats)`.
+    pub fn run_phase(&mut self, spec: &PhaseSpec) -> Result<(u64, Vec<Matrix>, SchedStats)> {
+        match self.drive_chunks(spec, false, 0)? {
+            TreeFlow::Done(mut d) => {
+                self.gauge.release(d.tracked);
+                let stats = d.stats.take().ok_or_else(|| {
+                    Error::Other("phase finished without scheduler stats".into())
+                })?;
+                let ordered: Vec<Matrix> = d.partials.into_iter().flatten().collect();
+                Ok((d.rows, ordered, stats))
+            }
+            TreeFlow::Restart(r) => {
+                Err(Error::Other(format!("star phase requested a restart: {r}")))
+            }
+        }
+    }
+
+    /// Run one phase with the **tree** reduction plan: `CAP_HOLD` workers
+    /// keep their partial as a held leaf, the leader drives the canonical
+    /// pairwise merge schedule between holders, and only the final root
+    /// crosses to the leader. A holder dying mid-reduce restarts the whole
+    /// attempt (fresh phase id, all chunks re-run) within the retry budget.
+    pub fn run_phase_tree(&mut self, spec: &PhaseSpec) -> Result<(u64, Matrix, SchedStats)> {
+        let attempts = spec.max_retries.max(1) + 1;
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                LOG.warn(&format!(
+                    "restarting {} tree reduce (attempt {} of {attempts}): {last}",
+                    spec.kind.name(),
+                    attempt + 1
+                ));
+            }
+            match self.try_tree(spec)? {
+                TreeFlow::Done(out) => return Ok(out),
+                TreeFlow::Restart(reason) => last = reason,
+            }
+        }
+        Err(Error::Other(format!(
+            "{} tree reduce failed after {attempts} attempts: {last}",
+            spec.kind.name()
+        )))
+    }
+
+    /// Run the tall-`W` pass with the **tree** plan: held leaves are
+    /// band-split, merged pairwise per band, folded into one `k'×k'` TSQR
+    /// R factor whose SVD is the completion's `(Σ_full, P)`, and — when
+    /// `compute_v` — each root band times `M_v = P_k Σ_k⁻¹` is written as a
+    /// row shard of the staged `V` [`ShardSet`] by whoever holds it. The
+    /// leader never materializes an n-sized matrix. Returns
+    /// `(rows, sigma_full, p, v_bands, stats)`.
+    #[allow(clippy::type_complexity)]
+    pub fn run_wphase(
         &mut self,
-        kind: PhaseKind,
-        input: &InputSpec,
-        work_dir: &str,
-        block: usize,
-        seed: u64,
-        kp: usize,
-        cols: usize,
-        shard_format: InputFormat,
-        shard_epoch: u32,
-        operand: &Matrix,
-        means: &Matrix,
-        chunk_total: usize,
-        max_retries: usize,
-    ) -> Result<(u64, Vec<Matrix>, SchedStats)> {
+        spec: &PhaseSpec,
+        band_rows: u64,
+        k: usize,
+        cutoff_rel: f64,
+        compute_v: bool,
+    ) -> Result<(u64, Vec<f64>, Matrix, usize, SchedStats)> {
+        let attempts = spec.max_retries.max(1) + 1;
+        let mut last = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                LOG.warn(&format!(
+                    "restarting {} W reduction (attempt {} of {attempts}): {last}",
+                    spec.kind.name(),
+                    attempt + 1
+                ));
+            }
+            match self.try_wphase(spec, band_rows, k, cutoff_rel, compute_v)? {
+                TreeFlow::Done(out) => return Ok(out),
+                TreeFlow::Restart(reason) => last = reason,
+            }
+        }
+        Err(Error::Other(format!(
+            "{} W reduction failed after {attempts} attempts: {last}",
+            spec.kind.name()
+        )))
+    }
+
+    /// One tree-reduce attempt: drive chunks in hold mode (one band), walk
+    /// the merge schedule, fetch the root.
+    fn try_tree(&mut self, spec: &PhaseSpec) -> Result<TreeFlow<(u64, Matrix, SchedStats)>> {
+        let mut d = match self.drive_chunks(spec, true, 0)? {
+            TreeFlow::Done(d) => d,
+            TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+        };
+        let phase_id = d.phase_id;
+        let rows = d.rows;
+        let stats = d
+            .stats
+            .take()
+            .ok_or_else(|| Error::Other("phase finished without scheduler stats".into()))?;
+        let mut holders = self.build_holders(&mut d, 0)?;
+        match self.drive_merges(phase_id, &mut holders, spec.chunk_total, 1)? {
+            TreeFlow::Done(()) => {}
+            TreeFlow::Restart(r) => {
+                self.release_holders(&holders);
+                return Ok(TreeFlow::Restart(r));
+            }
+        }
+        let root = holders
+            .remove(&0)
+            .ok_or_else(|| Error::Other("tree reduce left no root".into()))?;
+        match root {
+            Hold::Leader(mut bands) => {
+                let m = bands
+                    .pop()
+                    .ok_or_else(|| Error::Other("leader-held root has no band".into()))?;
+                self.gauge.release(reduce::matrix_bytes(&m));
+                Ok(TreeFlow::Done((rows, m, stats)))
+            }
+            Hold::Worker(w) => {
+                let fetch =
+                    ToWorker::RFetch { phase: phase_id, lo: 0, band: 0, what: FetchWhat::Partial };
+                if let Err(e) = self.send_worker(w, &fetch) {
+                    self.mark_dead(w, &e.to_string());
+                    return Ok(TreeFlow::Restart(format!("root fetch send failed: {e}")));
+                }
+                let watch = HashSet::new();
+                match self.await_reduce(phase_id, w, 0, 0, &watch)? {
+                    TreeFlow::Done(ReduceReply::Part(m)) => {
+                        // Account the root's one transit through the leader.
+                        let bytes = reduce::matrix_bytes(&m);
+                        self.gauge.track(bytes)?;
+                        self.gauge.release(bytes);
+                        Ok(TreeFlow::Done((rows, m, stats)))
+                    }
+                    TreeFlow::Done(ReduceReply::Done) => {
+                        Err(Error::Other("expected root partial, got ack".into()))
+                    }
+                    TreeFlow::Restart(r) => Ok(TreeFlow::Restart(r)),
+                }
+            }
+        }
+    }
+
+    /// One W-reduction attempt: banded hold, per-band merges, R-factor
+    /// fold, completion, V shard writes.
+    #[allow(clippy::type_complexity)]
+    fn try_wphase(
+        &mut self,
+        spec: &PhaseSpec,
+        band_rows: u64,
+        k: usize,
+        cutoff_rel: f64,
+        compute_v: bool,
+    ) -> Result<TreeFlow<(u64, Vec<f64>, Matrix, usize, SchedStats)>> {
+        let eff = if band_rows == 0 { reduce::auto_band_rows(spec.kp) as u64 } else { band_rows };
+        let mut d = match self.drive_chunks(spec, true, eff)? {
+            TreeFlow::Done(d) => d,
+            TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+        };
+        let phase_id = d.phase_id;
+        let rows = d.rows;
+        let stats = d
+            .stats
+            .take()
+            .ok_or_else(|| Error::Other("phase finished without scheduler stats".into()))?;
+        // Every chunk's W partial is the same full n×k' additive shape, so
+        // every holder derives the identical band split.
+        let n_bands = reduce::band_ranges(spec.cols, eff as usize).len();
+        let mut holders = self.build_holders(&mut d, eff as usize)?;
+        match self.drive_merges(phase_id, &mut holders, spec.chunk_total, n_bands)? {
+            TreeFlow::Done(()) => {}
+            TreeFlow::Restart(r) => {
+                self.release_holders(&holders);
+                return Ok(TreeFlow::Restart(r));
+            }
+        }
+        let root = holders
+            .remove(&0)
+            .ok_or_else(|| Error::Other("W reduction left no root".into()))?;
+        let root_bytes = hold_bytes(&root);
+        // Gather per-band R factors: fetched k'×k' matrices from a worker
+        // root (held bands are kept for the V writes), or computed locally
+        // from leader-held bands.
+        let mut rs_bytes = 0u64;
+        let rs: Vec<Matrix> = match &root {
+            Hold::Worker(w) => {
+                let w = *w;
+                let watch = HashSet::new();
+                let mut rs = Vec::with_capacity(n_bands);
+                for band in 0..n_bands as u32 {
+                    let fetch = ToWorker::RFetch {
+                        phase: phase_id,
+                        lo: 0,
+                        band,
+                        what: FetchWhat::RFactor,
+                    };
+                    if let Err(e) = self.send_worker(w, &fetch) {
+                        self.mark_dead(w, &e.to_string());
+                        self.gauge.release(rs_bytes);
+                        return Ok(TreeFlow::Restart(format!("R-factor fetch send failed: {e}")));
+                    }
+                    match self.await_reduce(phase_id, w, 0, band, &watch)? {
+                        TreeFlow::Done(ReduceReply::Part(r)) => {
+                            let b = reduce::matrix_bytes(&r);
+                            self.gauge.track(b)?;
+                            rs_bytes += b;
+                            rs.push(r);
+                        }
+                        TreeFlow::Done(ReduceReply::Done) => {
+                            return Err(Error::Other("expected R factor, got ack".into()));
+                        }
+                        TreeFlow::Restart(r) => {
+                            self.gauge.release(rs_bytes);
+                            return Ok(TreeFlow::Restart(r));
+                        }
+                    }
+                }
+                rs
+            }
+            Hold::Leader(bands) => {
+                let mut rs = Vec::with_capacity(bands.len());
+                for b in bands {
+                    rs.push(reduce::band_r_factor(b)?);
+                }
+                rs
+            }
+        };
+        let r = reduce::fold_band_rs(spec.kp, rs)?;
+        self.gauge.release(rs_bytes);
+        let (sigma_full, p) = reduce::completion_from_r(&r)?;
+        let v_bands = if compute_v {
+            let mv = reduce::completion_mv(&sigma_full, &p, k, cutoff_rel)?;
+            match &root {
+                Hold::Worker(w) => {
+                    let w = *w;
+                    let watch = HashSet::new();
+                    for band in 0..n_bands as u32 {
+                        let msg = ToWorker::RWriteV {
+                            phase: phase_id,
+                            lo: 0,
+                            band,
+                            shard: band,
+                            mv: mv.clone(),
+                        };
+                        if let Err(e) = self.send_worker(w, &msg) {
+                            self.mark_dead(w, &e.to_string());
+                            return Ok(TreeFlow::Restart(format!("V shard write send failed: {e}")));
+                        }
+                        match self.await_reduce(phase_id, w, 0, band, &watch)? {
+                            TreeFlow::Done(ReduceReply::Done) => {}
+                            TreeFlow::Done(ReduceReply::Part(_)) => {
+                                return Err(Error::Other("expected write ack, got matrix".into()));
+                            }
+                            TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                        }
+                    }
+                }
+                Hold::Leader(bands) => {
+                    let set = ShardSet::new(spec.work_dir, "V", spec.shard_format)?;
+                    for (b, wband) in bands.iter().enumerate() {
+                        let v = matmul(wband, &mv)?;
+                        let mut wr = set.open_writer(b, v.cols())?;
+                        for i in 0..v.rows() {
+                            wr.write_row(v.row(i))?;
+                        }
+                        wr.finish()?;
+                    }
+                }
+            }
+            n_bands
+        } else {
+            0
+        };
+        self.gauge.release(root_bytes);
+        Ok(TreeFlow::Done((rows, sigma_full, p, v_bands, stats)))
+    }
+
+    /// Turn a finished chunk drive into the merge schedule's leaf map:
+    /// chunk `c`'s leaves live on their holder worker, or leader-side
+    /// (band-split) when the worker shipped the partial the v5 way.
+    fn build_holders(
+        &mut self,
+        d: &mut ChunkDrive,
+        band_rows: usize,
+    ) -> Result<HashMap<u32, Hold>> {
+        // Accounting moves from the drive's bulk `tracked` counter to
+        // per-hold tracking (net change zero; the peak was already seen).
+        self.gauge.release(d.tracked);
+        d.tracked = 0;
+        let mut holders = HashMap::new();
+        for c in 0..d.holder_worker.len() {
+            let h = if let Some(w) = d.holder_worker[c] {
+                Hold::Worker(w)
+            } else if let Some(p) = d.partials[c].take() {
+                let bands: Vec<Matrix> = reduce::band_ranges(p.rows(), band_rows)
+                    .into_iter()
+                    .map(|(lo, hi)| p.slice_rows(lo, hi))
+                    .collect();
+                Hold::Leader(bands)
+            } else {
+                return Err(Error::Other(format!("chunk {c} produced no reduce leaf")));
+            };
+            self.gauge.track(hold_bytes(&h))?;
+            holders.insert(c as u32, h);
+        }
+        Ok(holders)
+    }
+
+    /// Walk the canonical merge schedule over the leaf map, one pairwise
+    /// merge at a time. Gauge accounting is exact at step boundaries:
+    /// operands are released when removed from the map, results tracked
+    /// when inserted, and wire transits tracked inside the relay.
+    fn drive_merges(
+        &mut self,
+        phase_id: u64,
+        holders: &mut HashMap<u32, Hold>,
+        total: usize,
+        n_bands: usize,
+    ) -> Result<TreeFlow<()>> {
+        for round in reduce::merge_rounds(total) {
+            for MergeStep { dst, src } in round {
+                let dst_k = dst as u32;
+                let src_k = src as u32;
+                let left = holders
+                    .remove(&dst_k)
+                    .ok_or_else(|| Error::Other(format!("merge schedule missing leaf {dst}")))?;
+                let right = holders
+                    .remove(&src_k)
+                    .ok_or_else(|| Error::Other(format!("merge schedule missing leaf {src}")))?;
+                self.gauge.release(hold_bytes(&left) + hold_bytes(&right));
+                let watch: HashSet<usize> = holders
+                    .values()
+                    .filter_map(|h| match h {
+                        Hold::Worker(w) => Some(*w),
+                        Hold::Leader(_) => None,
+                    })
+                    .collect();
+                match self.merge_pair(phase_id, dst_k, src_k, left, right, n_bands, &watch)? {
+                    TreeFlow::Done(h) => {
+                        self.gauge.track(hold_bytes(&h))?;
+                        holders.insert(dst_k, h);
+                    }
+                    TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                }
+            }
+        }
+        Ok(TreeFlow::Done(()))
+    }
+
+    /// Merge two holds into the span anchored at `dst`, band by band.
+    /// Operands are named explicitly in `RMerge` frames (held key or wire
+    /// `src`), so a worker's stale leaves from lost speculative executions
+    /// can never leak into a sum.
+    #[allow(clippy::too_many_arguments)]
+    fn merge_pair(
+        &mut self,
+        phase_id: u64,
+        dst: u32,
+        src: u32,
+        left: Hold,
+        right: Hold,
+        n_bands: usize,
+        watch: &HashSet<usize>,
+    ) -> Result<TreeFlow<Hold>> {
+        match (left, right) {
+            (Hold::Worker(a), Hold::Worker(b)) if a == b => {
+                // Both spans held by one worker: merge in place.
+                for band in 0..n_bands as u32 {
+                    let msg = ToWorker::RMerge {
+                        phase: phase_id,
+                        dst_lo: dst,
+                        band,
+                        left_held: dst,
+                        right_held: src,
+                        src: Matrix::zeros(0, 0),
+                    };
+                    match self.relay_merge(phase_id, a, band, msg, watch)? {
+                        TreeFlow::Done(()) => {}
+                        TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                    }
+                }
+                Ok(TreeFlow::Done(Hold::Worker(a)))
+            }
+            (Hold::Worker(a), Hold::Worker(b)) => {
+                // Relay: fetch each band from b, wire it into a's held sum.
+                let mut watch2 = watch.clone();
+                watch2.insert(a);
+                watch2.insert(b);
+                for band in 0..n_bands as u32 {
+                    let fetch = ToWorker::RFetch {
+                        phase: phase_id,
+                        lo: src,
+                        band,
+                        what: FetchWhat::Partial,
+                    };
+                    if let Err(e) = self.send_worker(b, &fetch) {
+                        self.mark_dead(b, &e.to_string());
+                        return Ok(TreeFlow::Restart(format!("band fetch send failed: {e}")));
+                    }
+                    let m = match self.await_reduce(phase_id, b, src, band, &watch2)? {
+                        TreeFlow::Done(ReduceReply::Part(m)) => m,
+                        TreeFlow::Done(ReduceReply::Done) => {
+                            return Err(Error::Other("expected band partial, got ack".into()));
+                        }
+                        TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                    };
+                    let bytes = reduce::matrix_bytes(&m);
+                    self.gauge.track(bytes)?;
+                    let msg = ToWorker::RMerge {
+                        phase: phase_id,
+                        dst_lo: dst,
+                        band,
+                        left_held: dst,
+                        right_held: HOLD_NONE,
+                        src: m,
+                    };
+                    let flow = self.relay_merge(phase_id, a, band, msg, &watch2)?;
+                    self.gauge.release(bytes);
+                    match flow {
+                        TreeFlow::Done(()) => {}
+                        TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                    }
+                }
+                Ok(TreeFlow::Done(Hold::Worker(a)))
+            }
+            (Hold::Worker(a), Hold::Leader(bands)) => {
+                // Leader-held span joins a's held sum over the wire. The
+                // worker adds [held, wire] regardless of left/right naming;
+                // elementwise f64 addition is bitwise commutative, so the
+                // sum matches the schedule's bits either way.
+                for (band, m) in bands.into_iter().enumerate() {
+                    let msg = ToWorker::RMerge {
+                        phase: phase_id,
+                        dst_lo: dst,
+                        band: band as u32,
+                        left_held: dst,
+                        right_held: HOLD_NONE,
+                        src: m,
+                    };
+                    match self.relay_merge(phase_id, a, band as u32, msg, watch)? {
+                        TreeFlow::Done(()) => {}
+                        TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                    }
+                }
+                Ok(TreeFlow::Done(Hold::Worker(a)))
+            }
+            (Hold::Leader(bands), Hold::Worker(b)) => {
+                for (band, m) in bands.into_iter().enumerate() {
+                    let msg = ToWorker::RMerge {
+                        phase: phase_id,
+                        dst_lo: dst,
+                        band: band as u32,
+                        left_held: HOLD_NONE,
+                        right_held: src,
+                        src: m,
+                    };
+                    match self.relay_merge(phase_id, b, band as u32, msg, watch)? {
+                        TreeFlow::Done(()) => {}
+                        TreeFlow::Restart(r) => return Ok(TreeFlow::Restart(r)),
+                    }
+                }
+                Ok(TreeFlow::Done(Hold::Worker(b)))
+            }
+            (Hold::Leader(lb), Hold::Leader(rb)) => {
+                if lb.len() != rb.len() {
+                    return Err(Error::Other(format!(
+                        "band count mismatch in leader merge: {} vs {}",
+                        lb.len(),
+                        rb.len()
+                    )));
+                }
+                let mut merged = Vec::with_capacity(lb.len());
+                for (l, r) in lb.into_iter().zip(rb) {
+                    merged.push(crate::splitproc::reduce_partials(vec![l, r])?);
+                }
+                Ok(TreeFlow::Done(Hold::Leader(merged)))
+            }
+        }
+    }
+
+    /// Send one `RMerge` to `target` and wait for its ack at
+    /// `(dst key, band)` — the innermost step of every relayed merge.
+    fn relay_merge(
+        &mut self,
+        phase_id: u64,
+        target: usize,
+        band: u32,
+        msg: ToWorker,
+        watch: &HashSet<usize>,
+    ) -> Result<TreeFlow<()>> {
+        let dst = match &msg {
+            ToWorker::RMerge { dst_lo, .. } => *dst_lo,
+            _ => return Err(Error::Other("relay_merge takes an RMerge".into())),
+        };
+        if let Err(e) = self.send_worker(target, &msg) {
+            self.mark_dead(target, &e.to_string());
+            return Ok(TreeFlow::Restart(format!("merge send to worker {target} failed: {e}")));
+        }
+        match self.await_reduce(phase_id, target, dst, band, watch)? {
+            TreeFlow::Done(ReduceReply::Done) => Ok(TreeFlow::Done(())),
+            TreeFlow::Done(ReduceReply::Part(_)) => {
+                Err(Error::Other("expected merge ack, got matrix".into()))
+            }
+            TreeFlow::Restart(r) => Ok(TreeFlow::Restart(r)),
+        }
+    }
+
+    /// Block until `target` answers for reduce key `(want_lo, want_band)`
+    /// of `phase_id`, keeping liveness bookkeeping alive meanwhile: the
+    /// target and every watched holder is fenced on staleness, their death
+    /// aborts the attempt, stale frames from previous phases are ignored,
+    /// and late joiners are registered (they idle until the next phase).
+    fn await_reduce(
+        &mut self,
+        phase_id: u64,
+        target: usize,
+        want_lo: u32,
+        want_band: u32,
+        watch: &HashSet<usize>,
+    ) -> Result<TreeFlow<ReduceReply>> {
+        if !self.workers[target].alive {
+            return Ok(TreeFlow::Restart(format!("worker {target} died before reduce step")));
+        }
+        let cutoff = Duration::from_millis(STALE_AFTER_MS);
+        loop {
+            for w in watch.iter().copied().chain(std::iter::once(target)) {
+                if self.workers[w].alive && self.workers[w].last_seen.elapsed() > cutoff {
+                    self.mark_dead(w, "silent during reduce");
+                    return Ok(TreeFlow::Restart(format!(
+                        "worker {w} silent during reduce: fenced"
+                    )));
+                }
+            }
+            match self.events.recv_timeout(Duration::from_millis(EVENT_POLL_MS)) {
+                Ok(Event::Msg { worker: w, msg }) => {
+                    self.workers[w].last_seen = Instant::now();
+                    match msg {
+                        ToLeader::Heartbeat | ToLeader::Hello { .. } => {}
+                        // Straggler chunk acks from this or an older phase:
+                        // clear the busy slot so the worker is assignable
+                        // next phase; scheduling is long since settled.
+                        ToLeader::ChunkDone { phase, chunk, .. }
+                        | ToLeader::ChunkFailed { phase, chunk, .. } => {
+                            if self.workers[w].busy == Some((phase, chunk)) {
+                                self.workers[w].busy = None;
+                            }
+                        }
+                        ToLeader::ReducePart { phase, lo, band, matrix } => {
+                            if w == target
+                                && phase == phase_id
+                                && lo == want_lo
+                                && band == want_band
+                            {
+                                return Ok(TreeFlow::Done(ReduceReply::Part(matrix)));
+                            }
+                        }
+                        ToLeader::ReduceDone { phase, lo, band } => {
+                            if w == target
+                                && phase == phase_id
+                                && lo == want_lo
+                                && band == want_band
+                            {
+                                return Ok(TreeFlow::Done(ReduceReply::Done));
+                            }
+                        }
+                        ToLeader::ReduceFailed { phase, lo, band, message } => {
+                            if phase == phase_id {
+                                return Ok(TreeFlow::Restart(format!(
+                                    "worker {w} failed reduce step ({lo}, {band}): {message}"
+                                )));
+                            }
+                        }
+                    }
+                }
+                Ok(Event::Dead { worker: w, error }) => {
+                    if self.workers[w].alive {
+                        self.mark_dead(w, &error);
+                        if w == target || watch.contains(&w) {
+                            return Ok(TreeFlow::Restart(format!(
+                                "worker {w} died mid-reduce: {error}"
+                            )));
+                        }
+                    }
+                }
+                Ok(Event::Joined { stream, caps }) => {
+                    match self.register(stream, caps) {
+                        Ok(w) => LOG.info(&format!("worker {w} joined during reduce; idling")),
+                        Err(e) => LOG.warn(&format!("failed to register joined worker: {e}")),
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Other("leader event channel closed".into()));
+                }
+            }
+        }
+    }
+
+    fn release_holders(&mut self, holders: &HashMap<u32, Hold>) {
+        let total: u64 = holders.values().map(hold_bytes).sum();
+        self.gauge.release(total);
+    }
+
+    /// Drive one phase's chunks to completion. `hold` asks `CAP_HOLD`
+    /// workers to keep their partial as held leaves (band height
+    /// `band_rows`); their `ChunkDone` partials arrive empty. Restart
+    /// (`TreeFlow::Restart`) means a holder was lost mid-drive.
+    fn drive_chunks(
+        &mut self,
+        spec: &PhaseSpec,
+        hold: bool,
+        band_rows: u64,
+    ) -> Result<TreeFlow<ChunkDrive>> {
+        let mut d = ChunkDrive {
+            phase_id: 0,
+            rows: 0,
+            partials: (0..spec.chunk_total).map(|_| None).collect(),
+            holder_worker: vec![None; spec.chunk_total],
+            tracked: 0,
+            stats: None,
+        };
+        match self.drive_chunks_loop(spec, hold, band_rows, &mut d) {
+            Ok(None) => Ok(TreeFlow::Done(d)),
+            Ok(Some(reason)) => {
+                self.gauge.release(d.tracked);
+                Ok(TreeFlow::Restart(reason))
+            }
+            Err(e) => {
+                self.gauge.release(d.tracked);
+                Err(e)
+            }
+        }
+    }
+
+    fn drive_chunks_loop(
+        &mut self,
+        spec: &PhaseSpec,
+        hold: bool,
+        band_rows: u64,
+        d: &mut ChunkDrive,
+    ) -> Result<Option<String>> {
+        let chunk_total = spec.chunk_total;
         if chunk_total == 0 {
             return Err(Error::Config("phase with zero chunks".into()));
         }
         self.next_phase += 1;
         let phase_id = self.next_phase;
+        d.phase_id = phase_id;
         // Phase span on the leader's clock: chunk events merged from
         // worker reports parent under it, so one trace file holds the
         // whole cluster timeline (chunk ⊂ phase ⊂ run).
-        let mut phase_span = Span::child(kind.name(), "phase");
+        let mut phase_span = Span::child(spec.kind.name(), "phase");
         phase_span.arg_str("executor", "cluster");
         phase_span.arg_num("chunks", chunk_total as f64);
         let phase_ctx = phase_span.ctx();
@@ -266,20 +1012,22 @@ impl DistributedLeader {
         }
         let setup = ToWorker::Phase {
             id: phase_id,
-            kind,
-            input_path: input.path.clone(),
-            input_format: input.format,
-            work_dir: work_dir.to_string(),
+            kind: spec.kind,
+            input_path: spec.input.path.clone(),
+            input_format: spec.input.format,
+            work_dir: spec.work_dir.to_string(),
             chunk_total: chunk_total as u32,
-            block: block as u32,
-            seed,
-            kp: kp as u32,
-            cols: cols as u32,
-            shard_format,
-            shard_epoch,
-            operand: operand.clone(),
-            means: means.clone(),
+            block: spec.block as u32,
+            seed: spec.seed,
+            kp: spec.kp as u32,
+            cols: spec.cols as u32,
+            shard_format: spec.shard_format,
+            shard_epoch: spec.shard_epoch,
+            operand: spec.operand.clone(),
+            means: spec.means.clone(),
             trace: phase_ctx,
+            hold,
+            band_rows,
         };
         for w in 0..self.workers.len() {
             if self.workers[w].alive {
@@ -296,11 +1044,9 @@ impl DistributedLeader {
         for w in &mut self.workers {
             w.last_seen = Instant::now();
         }
-        let sched = ChunkScheduler::new(chunk_total, max_retries);
+        let sched = ChunkScheduler::new(chunk_total, spec.max_retries);
         let mut excluded: Vec<Vec<usize>> = vec![Vec::new(); chunk_total];
         let mut assigns: Vec<u32> = vec![0; chunk_total];
-        let mut rows_total = 0u64;
-        let mut partials: Vec<Option<Matrix>> = (0..chunk_total).map(|_| None).collect();
         for w in 0..self.workers.len() {
             self.assign_next(w, phase_id, phase_ctx, &sched, &mut excluded, &mut assigns);
         }
@@ -308,7 +1054,11 @@ impl DistributedLeader {
             // Fence zombies every tick — even when other workers' events
             // (heartbeats) keep the channel busy, a worker silent past the
             // deadline must still lose its chunks.
-            self.fence_stale_workers(phase_id, &sched, &mut excluded);
+            if let Some(reason) =
+                self.fence_stale_workers(phase_id, &sched, &mut excluded, hold, d)
+            {
+                return Ok(Some(reason));
+            }
             // Stalled? Nobody is executing anything (this phase or a stale
             // straggler that could free up) and nothing can be assigned.
             if !self.workers.iter().any(|w| w.alive && w.busy.is_some()) {
@@ -319,23 +1069,27 @@ impl DistributedLeader {
                     return Err(Error::Other(format!(
                         "{:?} pass stalled: {} of {chunk_total} chunks unfinished and no \
                          assignable live workers",
-                        kind,
+                        spec.kind,
                         sched.remaining()
                     )));
                 }
             }
             match self.events.recv_timeout(Duration::from_millis(EVENT_POLL_MS)) {
-                Ok(ev) => self.handle_event(
-                    ev,
-                    phase_id,
-                    phase_ctx,
-                    &setup,
-                    &sched,
-                    &mut excluded,
-                    &mut assigns,
-                    &mut rows_total,
-                    &mut partials,
-                ),
+                Ok(ev) => {
+                    if let Some(reason) = self.handle_drive_event(
+                        ev,
+                        phase_id,
+                        phase_ctx,
+                        &setup,
+                        &sched,
+                        &mut excluded,
+                        &mut assigns,
+                        hold,
+                        d,
+                    )? {
+                        return Ok(Some(reason));
+                    }
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => {
                     return Err(Error::Other("leader event channel closed".into()));
@@ -350,13 +1104,12 @@ impl DistributedLeader {
                 }
             }
         }
-        let stats = sched.finish()?;
-        let ordered: Vec<Matrix> = partials.into_iter().flatten().collect();
-        Ok((rows_total, ordered, stats))
+        d.stats = Some(sched.finish()?);
+        Ok(None)
     }
 
     #[allow(clippy::too_many_arguments)]
-    fn handle_event(
+    fn handle_drive_event(
         &mut self,
         ev: Event,
         phase_id: u64,
@@ -365,9 +1118,9 @@ impl DistributedLeader {
         sched: &ChunkScheduler,
         excluded: &mut [Vec<usize>],
         assigns: &mut [u32],
-        rows_total: &mut u64,
-        partials: &mut [Option<Matrix>],
-    ) {
+        hold: bool,
+        d: &mut ChunkDrive,
+    ) -> Result<Option<String>> {
         match ev {
             Event::Msg { worker: w, msg } => {
                 self.workers[w].last_seen = Instant::now();
@@ -378,6 +1131,8 @@ impl DistributedLeader {
                 // fenced, so replay it before assigning — and clear the
                 // exclusions the fence added, or the resurrected worker
                 // stays barred from exactly the chunks it can still run.
+                // (Replaying the *same* phase id does not clear the
+                // worker's held leaves — only a new id does.)
                 if !self.workers[w].alive {
                     LOG.warn(&format!("worker {w} reappeared after fencing: unfencing"));
                     self.workers[w].alive = true;
@@ -391,6 +1146,10 @@ impl DistributedLeader {
                 }
                 match msg {
                     ToLeader::Heartbeat | ToLeader::Hello { .. } => {}
+                    // Stale acks from a reduce attempt this drive replaced.
+                    ToLeader::ReducePart { .. }
+                    | ToLeader::ReduceDone { .. }
+                    | ToLeader::ReduceFailed { .. } => {}
                     ToLeader::ChunkDone {
                         phase,
                         chunk,
@@ -422,14 +1181,21 @@ impl DistributedLeader {
                                     (decode_us, compute_us, encode_us),
                                 );
                             }
-                            if phase == phase_id && (chunk as usize) < partials.len() {
+                            if phase == phase_id && (chunk as usize) < d.partials.len() {
                                 // First completion wins; a duplicate's
                                 // result is dropped (its shard bytes are
-                                // identical).
+                                // identical, and a duplicate holder's stale
+                                // leaves are never named by merge frames).
                                 if sched.complete(chunk as usize, elapsed) {
-                                    *rows_total += rows;
-                                    if partial.rows() > 0 {
-                                        partials[chunk as usize] = Some(partial);
+                                    d.rows += rows;
+                                    let c = chunk as usize;
+                                    if hold && partial.rows() == 0 {
+                                        d.holder_worker[c] = Some(w);
+                                    } else if partial.rows() > 0 {
+                                        let bytes = reduce::matrix_bytes(&partial);
+                                        self.gauge.track(bytes)?;
+                                        d.tracked += bytes;
+                                        d.partials[c] = Some(partial);
                                     }
                                 }
                             }
@@ -440,10 +1206,8 @@ impl DistributedLeader {
                         let tracked = self.workers[w].busy == Some((phase, chunk));
                         if tracked {
                             self.workers[w].busy = None;
-                            if phase == phase_id && (chunk as usize) < partials.len() {
-                                LOG.warn(&format!(
-                                    "worker {w} failed chunk {chunk}: {message}"
-                                ));
+                            if phase == phase_id && (chunk as usize) < d.partials.len() {
+                                LOG.warn(&format!("worker {w} failed chunk {chunk}: {message}"));
                                 sched.fail(
                                     chunk as usize,
                                     Error::Other(format!("worker {w}: {message}")),
@@ -466,9 +1230,14 @@ impl DistributedLeader {
                             sched.release(c as usize);
                         }
                     }
+                    // A dead holder takes its leaves with it: the attempt
+                    // restarts (chunk re-execution is deterministic).
+                    if hold && d.holder_worker.iter().any(|h| *h == Some(w)) {
+                        return Ok(Some(format!("worker {w} died holding reduce leaves: {error}")));
+                    }
                 }
             }
-            Event::Joined { stream } => match self.register(stream) {
+            Event::Joined { stream, caps } => match self.register(stream, caps) {
                 Ok(w) => {
                     LOG.info(&format!("worker {w} joined mid-run"));
                     if !phase_ctx.is_none() {
@@ -487,6 +1256,7 @@ impl DistributedLeader {
                 Err(e) => LOG.warn(&format!("failed to register joined worker: {e}")),
             },
         }
+        Ok(None)
     }
 
     /// Hand the next chunk to an idle worker: a queued chunk it isn't
@@ -605,13 +1375,16 @@ impl DistributedLeader {
     }
 
     /// Fence workers silent past [`STALE_AFTER_MS`]: mark dead, requeue
-    /// their in-flight chunks. Runs on event-loop idle ticks.
+    /// their in-flight chunks. Runs on event-loop idle ticks. In hold mode
+    /// a fenced holder aborts the attempt (its leaves are unreachable).
     fn fence_stale_workers(
         &mut self,
         phase_id: u64,
         sched: &ChunkScheduler,
         excluded: &mut [Vec<usize>],
-    ) {
+        hold: bool,
+        d: &ChunkDrive,
+    ) -> Option<String> {
         let cutoff = Duration::from_millis(STALE_AFTER_MS);
         for w in 0..self.workers.len() {
             if self.workers[w].alive && self.workers[w].last_seen.elapsed() > cutoff {
@@ -626,8 +1399,12 @@ impl DistributedLeader {
                         sched.release(c as usize);
                     }
                 }
+                if hold && d.holder_worker.iter().any(|h| *h == Some(w)) {
+                    return Some(format!("worker {w} fenced while holding reduce leaves"));
+                }
             }
         }
+        None
     }
 
     /// Tell every still-connected worker to exit (fenced ones included —

@@ -40,14 +40,27 @@
 //! matrices); the tall data never does — that is the paper's point, and the
 //! protocol makes it structural: [`proto`] has no frame type for row data.
 //!
+//! **Distributed reduce** (proto v6): in the default `--reduce tree` mode
+//! workers *hold* their summed `k' x k'` partials instead of shipping them,
+//! and the leader relays `log2(workers)` rounds of pairwise merges
+//! (`RMerge` / `RFetch`) between holders — leader state stays
+//! `O(k'^2 log w)` instead of `O(n k')`. The final `W` pass reduces tall
+//! partials as banded TSQR R factors and workers write V row shards
+//! straight to the shared filesystem (`RWriteV`), so the leader never
+//! materializes an n-sized matrix. Old (v5, capability-less) workers still
+//! join: a worker that never advertised `CAP_HOLD` just ships its partial
+//! and the leader folds it in at the root. `--reduce star` restores the
+//! old ship-everything topology.
+//!
 //! The SVD math never lives here: [`ClusterExecutor`] plugs this transport
 //! into the one executor-generic pipeline in [`crate::svd`] —
 //! `Svd::over(&input)?.executor(&mut cluster).run()` runs the exact same
 //! pass schedule the local executor does, and reduces per-chunk partials
-//! in the same chunk order, so the factors match bit for bit.
+//! in the same chunk order, so the factors match bit for bit — tree or
+//! star, local or distributed.
 //!
 //! The protocol is a hand-rolled length-prefixed binary format ([`proto`]) —
-//! serde is unavailable offline, and the message set is 7 frames.
+//! serde is unavailable offline, and the message set is small.
 
 pub mod executor;
 pub mod leader;

@@ -23,7 +23,34 @@ use std::io::{Read, Write};
 /// (trace id + parent span id, zeros when tracing is off) and `ChunkDone`
 /// returns the worker's decode/compute/encode split in microseconds, so
 /// the leader can emit one merged timeline attributing every chunk.
-pub const VERSION: u32 = 5;
+/// v6: distributed reduce — `Hello` gains a capability bitmap (absent on
+/// v5 frames → 0), `Phase` appends a hold flag + band height (ignored by
+/// v5 workers: frames are length-delimited and trailing bytes are legal),
+/// and five reduce frames drive leader-relayed pairwise merge rounds:
+/// `RMerge`/`RFetch`/`RWriteV` leader→worker, `ReducePart`/`ReduceDone`/
+/// `ReduceFailed` worker→leader. Reduce-frame matrices are
+/// self-describing raw-or-XOR-delta coded ([`crate::io::codec`]); the
+/// leader only sends coded bytes to workers advertising [`CAP_CODEC`].
+pub const VERSION: u32 = 6;
+
+/// Oldest worker protocol version the leader still admits. v5 workers
+/// can't hold reduce leaves (no [`CAP_HOLD`]), so their partials ride
+/// `ChunkDone` as before and the leader merges on their behalf.
+pub const MIN_VERSION: u32 = 5;
+
+/// Capability bit: the worker holds chunk partials in memory after
+/// `ChunkDone` and participates in merge rounds (`RMerge`/`RFetch`/
+/// `RWriteV`).
+pub const CAP_HOLD: u64 = 1;
+
+/// Capability bit: the worker decodes XOR-delta coded matrices, so the
+/// leader may send `enc = 1` payloads downstream. (Upstream the leader
+/// always accepts both encodings — they're self-describing.)
+pub const CAP_CODEC: u64 = 2;
+
+/// Sentinel for `RMerge`'s `left_held`/`right_held`: this operand is not
+/// a held leaf — it arrives on the wire in `src`.
+pub const HOLD_NONE: u32 = u32::MAX;
 
 /// Maximum accepted frame payload (64 MiB — a 2896² f64 partial; anything
 /// larger indicates a protocol error, not a legitimate partial).
@@ -139,19 +166,70 @@ pub enum ToWorker {
         /// Trace context of the leader's phase span
         /// ([`TraceCtx::NONE`] when the run isn't traced).
         trace: TraceCtx,
+        /// Tree-reduce hold mode (v6): `true` asks [`CAP_HOLD`] workers to
+        /// keep their chunk partial in memory (band-split at `band_rows`)
+        /// and ship an empty `ChunkDone` partial; merge rounds follow.
+        hold: bool,
+        /// Row-band height for held partials (0 = one band). Both sides
+        /// derive identical band splits from `(partial rows, band_rows)`.
+        band_rows: u64,
     },
     /// Run chunk `chunk` of phase `phase` (the current `Phase` setup).
     /// `trace` is the per-assignment span context (parent = phase span).
     Assign { phase: u64, chunk: u32, trace: TraceCtx },
+    /// One pairwise merge step of the tree schedule
+    /// ([`crate::svd::reduce::merge_rounds`]): combine exactly two
+    /// operands of band `band` and hold the sum at key `(dst_lo, band)`.
+    /// An operand is either one of this worker's held leaves (named
+    /// explicitly by its span-lo key — never inferred, so stale leaves
+    /// from lost speculative executions are untouchable) or the wire
+    /// matrix `src` when the name is [`HOLD_NONE`].
+    RMerge {
+        phase: u64,
+        dst_lo: u32,
+        band: u32,
+        left_held: u32,
+        right_held: u32,
+        src: Matrix,
+    },
+    /// Ship reduce state of held key `(lo, band)` back to the leader:
+    /// the raw partial (consuming the held entry) or its TSQR R factor
+    /// (keeping the entry for a later [`ToWorker::RWriteV`]).
+    RFetch { phase: u64, lo: u32, band: u32, what: FetchWhat },
+    /// Finish the W reduction locally: multiply the held band `(lo, band)`
+    /// by the completion's `M_v = P_k Σ_k⁻¹` and write the product as row
+    /// shard `shard` of the staged `V` [`crate::io::writer::ShardSet`] —
+    /// the leader never materializes the n-sized factor.
+    RWriteV { phase: u64, lo: u32, band: u32, shard: u32, mv: Matrix },
     /// All phases done; worker may exit.
     Shutdown,
+}
+
+/// What [`ToWorker::RFetch`] asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchWhat {
+    /// The held partial itself; the worker forgets it after sending.
+    Partial = 0,
+    /// Its `k'×k'` TSQR R factor; the held band is kept.
+    RFactor = 1,
+}
+
+impl FetchWhat {
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(FetchWhat::Partial),
+            1 => Ok(FetchWhat::RFactor),
+            other => Err(Error::parse(format!("unknown fetch kind {other}"))),
+        }
+    }
 }
 
 /// Worker -> leader messages.
 #[derive(Debug)]
 pub enum ToLeader {
-    /// Greeting with protocol version.
-    Hello { version: u32 },
+    /// Greeting with protocol version and capability bitmap
+    /// ([`CAP_HOLD`] | [`CAP_CODEC`]; v5 frames carry no bitmap → 0).
+    Hello { version: u32, caps: u64 },
     /// One chunk finished: rows streamed + the commutative partial
     /// (possibly 0x0 for phases that only write shards). The three `_us`
     /// fields are the worker's measured decode/compute/encode split.
@@ -170,6 +248,13 @@ pub enum ToLeader {
     /// Periodic liveness signal from the worker's heartbeat thread (sent
     /// even while a chunk is executing).
     Heartbeat,
+    /// Reply to [`ToWorker::RFetch`]: the requested reduce state.
+    ReducePart { phase: u64, lo: u32, band: u32, matrix: Matrix },
+    /// Ack for a completed [`ToWorker::RMerge`] / [`ToWorker::RWriteV`].
+    ReduceDone { phase: u64, lo: u32, band: u32 },
+    /// A reduce step failed worker-side (missing held operand, shard I/O
+    /// error, ...). The leader restarts the phase attempt.
+    ReduceFailed { phase: u64, lo: u32, band: u32, message: String },
 }
 
 // ---------------------------------------------------------------------------
@@ -252,6 +337,39 @@ impl<'a> Cursor<'a> {
         }
         Matrix::from_vec(rows, cols, data)
     }
+
+    /// Self-describing raw-or-coded matrix (reduce frames only):
+    /// `u32 rows | u32 cols | u8 enc | u32 len | payload`, where `enc = 0`
+    /// is raw `f64` LE bytes and `enc = 1` is the XOR-delta stream of
+    /// [`crate::io::codec`].
+    fn coded_matrix(&mut self) -> Result<Matrix> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let count = rows
+            .checked_mul(cols)
+            .ok_or_else(|| Error::parse("matrix size overflow".to_string()))?;
+        let enc = self.u8()?;
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        let data = match enc {
+            0 => {
+                if len != count * 8 {
+                    return Err(Error::parse("raw matrix payload length mismatch".to_string()));
+                }
+                bytes
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect()
+            }
+            1 => crate::io::codec::decode_f64s(bytes, count)?,
+            other => return Err(Error::parse(format!("unknown matrix encoding {other}"))),
+        };
+        Matrix::from_vec(rows, cols, data)
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
 }
 
 fn put_string(buf: &mut Vec<u8>, s: &str) {
@@ -272,6 +390,26 @@ fn put_trace(buf: &mut Vec<u8>, t: &TraceCtx) {
     buf.extend_from_slice(&t.span.to_le_bytes());
 }
 
+/// Counterpart of [`Cursor::coded_matrix`]. `coded = false` must remain
+/// available even on v6 links: the leader only codes toward workers that
+/// advertised [`CAP_CODEC`].
+fn put_coded_matrix(buf: &mut Vec<u8>, m: &Matrix, coded: bool) {
+    buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    if coded {
+        let payload = crate::io::codec::encode_f64s(m.data());
+        buf.push(1);
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&payload);
+    } else {
+        buf.push(0);
+        buf.extend_from_slice(&((m.data().len() * 8) as u32).to_le_bytes());
+        for &v in m.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
 impl Cursor<'_> {
     fn trace(&mut self) -> Result<TraceCtx> {
         Ok(TraceCtx { trace: self.u64()?, span: self.u64()? })
@@ -282,13 +420,27 @@ impl Cursor<'_> {
 const T_PHASE: u8 = 0x01;
 const T_SHUTDOWN: u8 = 0x02;
 const T_ASSIGN: u8 = 0x03;
+const T_RMERGE: u8 = 0x06;
+const T_RFETCH: u8 = 0x07;
+const T_RWRITE_V: u8 = 0x08;
 const T_HELLO: u8 = 0x10;
 const T_CHUNK_DONE: u8 = 0x11;
 const T_CHUNK_FAILED: u8 = 0x12;
 const T_HEARTBEAT: u8 = 0x13;
+const T_REDUCE_PART: u8 = 0x14;
+const T_REDUCE_DONE: u8 = 0x15;
+const T_REDUCE_FAILED: u8 = 0x16;
 
 impl ToWorker {
+    /// Write with no downstream capabilities assumed (matrices uncoded).
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
+        self.write_caps(w, 0)
+    }
+
+    /// Write toward a worker whose Hello advertised `caps`: reduce-frame
+    /// matrices are XOR-delta coded iff the worker claims [`CAP_CODEC`].
+    pub fn write_caps(&self, w: &mut impl Write, caps: u64) -> Result<()> {
+        let coded = caps & CAP_CODEC != 0;
         match self {
             ToWorker::Phase {
                 id,
@@ -306,6 +458,8 @@ impl ToWorker {
                 operand,
                 means,
                 trace,
+                hold,
+                band_rows,
             } => {
                 let mut buf = Vec::new();
                 buf.extend_from_slice(&id.to_le_bytes());
@@ -323,6 +477,10 @@ impl ToWorker {
                 put_matrix(&mut buf, operand);
                 put_matrix(&mut buf, means);
                 put_trace(&mut buf, trace);
+                // v6 fields ride behind the v5 payload; v5 readers stop
+                // at the trace and never see them.
+                buf.push(u8::from(*hold));
+                buf.extend_from_slice(&band_rows.to_le_bytes());
                 write_frame(w, T_PHASE, &buf)
             }
             ToWorker::Assign { phase, chunk, trace } => {
@@ -331,6 +489,33 @@ impl ToWorker {
                 buf.extend_from_slice(&chunk.to_le_bytes());
                 put_trace(&mut buf, trace);
                 write_frame(w, T_ASSIGN, &buf)
+            }
+            ToWorker::RMerge { phase, dst_lo, band, left_held, right_held, src } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&dst_lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                buf.extend_from_slice(&left_held.to_le_bytes());
+                buf.extend_from_slice(&right_held.to_le_bytes());
+                put_coded_matrix(&mut buf, src, coded);
+                write_frame(w, T_RMERGE, &buf)
+            }
+            ToWorker::RFetch { phase, lo, band, what } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                buf.push(*what as u8);
+                write_frame(w, T_RFETCH, &buf)
+            }
+            ToWorker::RWriteV { phase, lo, band, shard, mv } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                buf.extend_from_slice(&shard.to_le_bytes());
+                put_coded_matrix(&mut buf, mv, coded);
+                write_frame(w, T_RWRITE_V, &buf)
             }
             ToWorker::Shutdown => write_frame(w, T_SHUTDOWN, &[]),
         }
@@ -356,10 +541,34 @@ impl ToWorker {
                 operand: c.matrix()?,
                 means: c.matrix()?,
                 trace: c.trace()?,
+                // Absent on frames from a v5-era leader → hold off.
+                hold: if c.remaining() > 0 { c.u8()? != 0 } else { false },
+                band_rows: if c.remaining() > 0 { c.u64()? } else { 0 },
             }),
             T_ASSIGN => {
                 Ok(ToWorker::Assign { phase: c.u64()?, chunk: c.u32()?, trace: c.trace()? })
             }
+            T_RMERGE => Ok(ToWorker::RMerge {
+                phase: c.u64()?,
+                dst_lo: c.u32()?,
+                band: c.u32()?,
+                left_held: c.u32()?,
+                right_held: c.u32()?,
+                src: c.coded_matrix()?,
+            }),
+            T_RFETCH => Ok(ToWorker::RFetch {
+                phase: c.u64()?,
+                lo: c.u32()?,
+                band: c.u32()?,
+                what: FetchWhat::from_u8(c.u8()?)?,
+            }),
+            T_RWRITE_V => Ok(ToWorker::RWriteV {
+                phase: c.u64()?,
+                lo: c.u32()?,
+                band: c.u32()?,
+                shard: c.u32()?,
+                mv: c.coded_matrix()?,
+            }),
             T_SHUTDOWN => Ok(ToWorker::Shutdown),
             other => Err(Error::parse(format!("unexpected leader frame {other:#x}"))),
         }
@@ -369,7 +578,12 @@ impl ToWorker {
 impl ToLeader {
     pub fn write(&self, w: &mut impl Write) -> Result<()> {
         match self {
-            ToLeader::Hello { version } => write_frame(w, T_HELLO, &version.to_le_bytes()),
+            ToLeader::Hello { version, caps } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&version.to_le_bytes());
+                buf.extend_from_slice(&caps.to_le_bytes());
+                write_frame(w, T_HELLO, &buf)
+            }
             ToLeader::ChunkDone {
                 phase,
                 chunk,
@@ -397,6 +611,31 @@ impl ToLeader {
                 write_frame(w, T_CHUNK_FAILED, &buf)
             }
             ToLeader::Heartbeat => write_frame(w, T_HEARTBEAT, &[]),
+            ToLeader::ReducePart { phase, lo, band, matrix } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                // Upstream is always coded: a v6 worker knows its leader
+                // is v6 (a v5 leader would have rejected its Hello).
+                put_coded_matrix(&mut buf, matrix, true);
+                write_frame(w, T_REDUCE_PART, &buf)
+            }
+            ToLeader::ReduceDone { phase, lo, band } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                write_frame(w, T_REDUCE_DONE, &buf)
+            }
+            ToLeader::ReduceFailed { phase, lo, band, message } => {
+                let mut buf = Vec::new();
+                buf.extend_from_slice(&phase.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&band.to_le_bytes());
+                put_string(&mut buf, message);
+                write_frame(w, T_REDUCE_FAILED, &buf)
+            }
         }
     }
 
@@ -404,7 +643,11 @@ impl ToLeader {
         let (tag, payload) = read_frame(r)?;
         let mut c = Cursor::new(&payload);
         match tag {
-            T_HELLO => Ok(ToLeader::Hello { version: c.u32()? }),
+            T_HELLO => Ok(ToLeader::Hello {
+                version: c.u32()?,
+                // v5 Hellos end after the version word → no capabilities.
+                caps: if c.remaining() > 0 { c.u64()? } else { 0 },
+            }),
             T_CHUNK_DONE => Ok(ToLeader::ChunkDone {
                 phase: c.u64()?,
                 chunk: c.u32()?,
@@ -420,6 +663,21 @@ impl ToLeader {
                 message: c.string()?,
             }),
             T_HEARTBEAT => Ok(ToLeader::Heartbeat),
+            T_REDUCE_PART => Ok(ToLeader::ReducePart {
+                phase: c.u64()?,
+                lo: c.u32()?,
+                band: c.u32()?,
+                matrix: c.coded_matrix()?,
+            }),
+            T_REDUCE_DONE => {
+                Ok(ToLeader::ReduceDone { phase: c.u64()?, lo: c.u32()?, band: c.u32()? })
+            }
+            T_REDUCE_FAILED => Ok(ToLeader::ReduceFailed {
+                phase: c.u64()?,
+                lo: c.u32()?,
+                band: c.u32()?,
+                message: c.string()?,
+            }),
             other => Err(Error::parse(format!("unexpected worker frame {other:#x}"))),
         }
     }
@@ -461,6 +719,8 @@ mod tests {
             operand: m.clone(),
             means: mu.clone(),
             trace: TraceCtx { trace: 0xAB, span: 0xCD },
+            hold: true,
+            band_rows: 4096,
         };
         match roundtrip_worker(&msg) {
             ToWorker::Phase {
@@ -475,6 +735,8 @@ mod tests {
                 operand,
                 means,
                 trace,
+                hold,
+                band_rows,
                 ..
             } => {
                 assert_eq!(id, 41);
@@ -488,6 +750,8 @@ mod tests {
                 assert_eq!(operand.max_abs_diff(&m), 0.0);
                 assert_eq!(means.max_abs_diff(&mu), 0.0);
                 assert_eq!(trace, TraceCtx { trace: 0xAB, span: 0xCD });
+                assert!(hold);
+                assert_eq!(band_rows, 4096);
             }
             other => panic!("wrong message: {other:?}"),
         }
@@ -512,11 +776,14 @@ mod tests {
                 operand: Matrix::zeros(0, 0),
                 means: Matrix::zeros(0, 0),
                 trace: TraceCtx::NONE,
+                hold: false,
+                band_rows: 0,
             };
             match roundtrip_worker(&msg) {
-                ToWorker::Phase { kind: got, trace, .. } => {
+                ToWorker::Phase { kind: got, trace, hold, .. } => {
                     assert_eq!(got, kind);
                     assert!(trace.is_none());
+                    assert!(!hold);
                 }
                 other => panic!("wrong message: {other:?}"),
             }
@@ -543,6 +810,8 @@ mod tests {
                 operand: Matrix::zeros(0, 0),
                 means: Matrix::zeros(0, 0),
                 trace: TraceCtx::NONE,
+                hold: false,
+                band_rows: 0,
             };
             match roundtrip_worker(&msg) {
                 ToWorker::Phase { input_format, shard_format, .. } => {
@@ -571,11 +840,155 @@ mod tests {
     #[test]
     fn shutdown_hello_heartbeat_roundtrip() {
         assert!(matches!(roundtrip_worker(&ToWorker::Shutdown), ToWorker::Shutdown));
-        assert!(matches!(
-            roundtrip_leader(&ToLeader::Hello { version: VERSION }),
-            ToLeader::Hello { version: VERSION }
-        ));
+        match roundtrip_leader(&ToLeader::Hello { version: VERSION, caps: CAP_HOLD | CAP_CODEC }) {
+            ToLeader::Hello { version, caps } => {
+                assert_eq!(version, VERSION);
+                assert_eq!(caps, CAP_HOLD | CAP_CODEC);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
         assert!(matches!(roundtrip_leader(&ToLeader::Heartbeat), ToLeader::Heartbeat));
+    }
+
+    #[test]
+    fn short_v5_hello_decodes_with_zero_caps() {
+        // A v5 worker's Hello is just the 4-byte version word.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u32.to_le_bytes()); // payload len
+        buf.push(T_HELLO);
+        buf.extend_from_slice(&5u32.to_le_bytes());
+        match ToLeader::read(&mut buf.as_slice()).unwrap() {
+            ToLeader::Hello { version, caps } => {
+                assert_eq!(version, 5);
+                assert_eq!(caps, 0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn v5_length_phase_decodes_with_hold_off() {
+        // Serialize a v6 Phase, strip the 9 appended bytes (hold u8 +
+        // band_rows u64) to reconstruct the exact v5 payload, and check
+        // the v6 reader defaults the new fields.
+        let msg = ToWorker::Phase {
+            id: 3,
+            kind: PhaseKind::Ata,
+            input_path: "/d/a.csv".into(),
+            input_format: InputFormat::Csv,
+            work_dir: "/tmp/w".into(),
+            chunk_total: 2,
+            block: 64,
+            seed: 7,
+            kp: 4,
+            cols: 4,
+            shard_format: InputFormat::Csv,
+            shard_epoch: 0,
+            operand: Matrix::zeros(0, 0),
+            means: Matrix::zeros(0, 0),
+            trace: TraceCtx::NONE,
+            hold: true,
+            band_rows: 77,
+        };
+        let mut buf = Vec::new();
+        msg.write(&mut buf).unwrap();
+        let old_len = u32::from_le_bytes(buf[..4].try_into().unwrap()) - 9;
+        buf.truncate(buf.len() - 9);
+        buf[..4].copy_from_slice(&old_len.to_le_bytes());
+        match ToWorker::read(&mut buf.as_slice()).unwrap() {
+            ToWorker::Phase { hold, band_rows, id, .. } => {
+                assert_eq!(id, 3);
+                assert!(!hold);
+                assert_eq!(band_rows, 0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reduce_frames_roundtrip() {
+        let m = Matrix::from_fn(5, 3, |i, j| (i as f64) * 1.5 - j as f64);
+        match roundtrip_worker(&ToWorker::RMerge {
+            phase: 9,
+            dst_lo: 0,
+            band: 2,
+            left_held: 0,
+            right_held: HOLD_NONE,
+            src: m.clone(),
+        }) {
+            ToWorker::RMerge { phase, dst_lo, band, left_held, right_held, src } => {
+                assert_eq!((phase, dst_lo, band), (9, 0, 2));
+                assert_eq!((left_held, right_held), (0, HOLD_NONE));
+                assert_eq!(src.max_abs_diff(&m), 0.0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match roundtrip_worker(&ToWorker::RFetch {
+            phase: 9,
+            lo: 4,
+            band: 0,
+            what: FetchWhat::RFactor,
+        }) {
+            ToWorker::RFetch { lo, what, .. } => {
+                assert_eq!(lo, 4);
+                assert_eq!(what, FetchWhat::RFactor);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match roundtrip_worker(&ToWorker::RWriteV {
+            phase: 9,
+            lo: 0,
+            band: 1,
+            shard: 1,
+            mv: m.clone(),
+        }) {
+            ToWorker::RWriteV { shard, mv, .. } => {
+                assert_eq!(shard, 1);
+                assert_eq!(mv.max_abs_diff(&m), 0.0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        match roundtrip_leader(&ToLeader::ReducePart { phase: 9, lo: 2, band: 1, matrix: m.clone() })
+        {
+            ToLeader::ReducePart { lo, band, matrix, .. } => {
+                assert_eq!((lo, band), (2, 1));
+                assert_eq!(matrix.max_abs_diff(&m), 0.0);
+            }
+            other => panic!("wrong message: {other:?}"),
+        }
+        assert!(matches!(
+            roundtrip_leader(&ToLeader::ReduceDone { phase: 9, lo: 0, band: 0 }),
+            ToLeader::ReduceDone { phase: 9, lo: 0, band: 0 }
+        ));
+        match roundtrip_leader(&ToLeader::ReduceFailed {
+            phase: 9,
+            lo: 0,
+            band: 0,
+            message: "no held operand".into(),
+        }) {
+            ToLeader::ReduceFailed { message, .. } => assert_eq!(message, "no held operand"),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn coded_matrix_shrinks_smooth_payloads_and_roundtrips_exactly() {
+        // Smooth column-major-ish data: XOR-delta beats raw by a wide
+        // margin, and the decode is bit-exact.
+        let m = Matrix::from_fn(64, 8, |i, j| 1.0 + (i * 8 + j) as f64 * 1e-9);
+        let mut coded = Vec::new();
+        put_coded_matrix(&mut coded, &m, true);
+        let mut raw = Vec::new();
+        put_coded_matrix(&mut raw, &m, false);
+        assert!(coded.len() < raw.len(), "coded {} raw {}", coded.len(), raw.len());
+        let got = Cursor::new(&coded).coded_matrix().unwrap();
+        assert_eq!(got.max_abs_diff(&m), 0.0);
+        let got = Cursor::new(&raw).coded_matrix().unwrap();
+        assert_eq!(got.max_abs_diff(&m), 0.0);
+        // Unknown encoding byte is rejected.
+        let mut bad = raw.clone();
+        bad[8] = 7;
+        assert!(Cursor::new(&bad).coded_matrix().is_err());
     }
 
     #[test]

@@ -16,18 +16,23 @@
 //! [`HEARTBEAT_MS`] even while a chunk is executing, so the leader can
 //! tell "slow" from "gone" and requeue a dead worker's chunks.
 
-use super::proto::{PhaseKind, ToLeader, ToWorker, VERSION};
+use super::proto::{
+    FetchWhat, PhaseKind, ToLeader, ToWorker, CAP_CODEC, CAP_HOLD, HOLD_NONE, VERSION,
+};
 use crate::backend::BackendRef;
 use crate::cluster::pass_from_wire;
 use crate::config::InputFormat;
 use crate::error::{Error, Result};
+use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::linalg::Matrix;
+use crate::linalg::{matmul, Matrix};
 use crate::obs::trace::{self, Span, TraceCtx};
 use crate::rng::VirtualMatrix;
 use crate::splitproc::{self, ChunkMeta, SchedPolicy};
+use crate::svd::reduce::{self, ReduceMode};
 use crate::svd::{execute_pass_chunk, Pass, PassContext};
 use crate::util::Logger;
+use std::collections::HashMap;
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -58,6 +63,11 @@ pub struct PhaseConfig {
     pub means: Vec<f64>,
     /// Leader's phase span context (NONE when the run isn't traced).
     pub trace: TraceCtx,
+    /// Tree-reduce hold mode: keep chunk partials as in-memory reduce
+    /// leaves instead of shipping them with `ChunkDone`.
+    pub hold: bool,
+    /// Band height for held leaves (0 = one band per partial).
+    pub band_rows: usize,
     plan: OnceLock<Vec<ChunkMeta>>,
     omega: OnceLock<Matrix>,
 }
@@ -81,6 +91,8 @@ impl PhaseConfig {
             operand,
             means,
             trace,
+            hold,
+            band_rows,
         } = msg
         else {
             return Err(Error::Other("PhaseConfig::from_msg on non-phase message".into()));
@@ -100,6 +112,8 @@ impl PhaseConfig {
             operand: operand.clone(),
             means: if means.rows() > 0 { means.row(0).to_vec() } else { Vec::new() },
             trace: *trace,
+            hold: *hold,
+            band_rows: *band_rows as usize,
             plan: OnceLock::new(),
             omega: OnceLock::new(),
         })
@@ -146,10 +160,12 @@ pub fn execute_assignment(
         n: cfg.cols,
         kp: cfg.kp,
         means: Arc::new(cfg.means.clone()),
-        // Scheduling happens leader-side; the worker only ever sees one
-        // chunk at a time.
+        // Scheduling and reduction happen leader-side; the worker only
+        // ever sees one chunk at a time.
         sched: SchedPolicy::default(),
         shard_epoch: cfg.shard_epoch,
+        reduce: ReduceMode::Star,
+        band_rows: 0,
     };
     // Materialize a seed-derived Ω once per phase, not once per chunk
     // (every chunk would regenerate identical bits).
@@ -177,7 +193,7 @@ pub fn serve(stream: TcpStream, backend: BackendRef) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = stream.try_clone()?;
     let writer = Arc::new(Mutex::new(stream));
-    send(&writer, &ToLeader::Hello { version: VERSION })?;
+    send(&writer, &ToLeader::Hello { version: VERSION, caps: CAP_HOLD | CAP_CODEC })?;
 
     // Liveness: heartbeat from a side thread so a long chunk execution
     // doesn't read as death. The thread dies with the connection (its
@@ -209,64 +225,207 @@ fn serve_loop(
     backend: &BackendRef,
 ) -> Result<()> {
     let mut phase: Option<PhaseConfig> = None;
+    // Held reduce leaves of the current phase, keyed `(span lo, band)` —
+    // span lo is the chunk index the merged span is anchored at.
+    let mut held: HashMap<(u32, u32), Matrix> = HashMap::new();
     loop {
         let msg = ToWorker::read(reader)?;
-        match &msg {
+        match msg {
             ToWorker::Shutdown => {
                 LOG.info("shutdown received");
                 return Ok(());
             }
-            ToWorker::Phase { id, kind, chunk_total, .. } => {
-                LOG.info(&format!("phase {id} setup: {kind:?}, {chunk_total} chunks"));
-                phase = Some(PhaseConfig::from_msg(&msg)?);
+            msg @ ToWorker::Phase { .. } => {
+                let cfg = PhaseConfig::from_msg(&msg)?;
+                if phase.as_ref().map(|p| p.id) != Some(cfg.id) {
+                    // New phase (or restarted attempt): drop the previous
+                    // phase's leaves. A same-id replay — the leader
+                    // unfencing us — must keep them.
+                    held.clear();
+                }
+                LOG.info(&format!(
+                    "phase {} setup: {:?}, {} chunks{}",
+                    cfg.id,
+                    cfg.kind,
+                    cfg.chunk_total,
+                    if cfg.hold { " (hold)" } else { "" }
+                ));
+                phase = Some(cfg);
             }
             ToWorker::Assign { phase: pid, chunk, trace: actx } => {
                 let reply = match phase.as_ref() {
-                    Some(cfg) if cfg.id == *pid => {
+                    Some(cfg) if cfg.id == pid => {
                         // Adopt the leader's assignment context so worker
                         // logs correlate, and measure the chunk's
                         // decode/compute/encode split for the leader's
                         // merged timeline.
-                        let _span = Span::with_parent(&format!("chunk {chunk}"), "chunk", *actx);
-                        LOG.debug(&format!(
-                            "phase {pid} chunk {chunk}/{}",
-                            cfg.chunk_total
-                        ));
+                        let _span = Span::with_parent(&format!("chunk {chunk}"), "chunk", actx);
+                        LOG.debug(&format!("phase {pid} chunk {chunk}/{}", cfg.chunk_total));
                         trace::sections_begin();
-                        let outcome = execute_assignment(backend, cfg, *chunk as usize);
+                        let outcome = execute_assignment(backend, cfg, chunk as usize);
                         let sec = trace::sections_take().unwrap_or_default();
                         match outcome {
-                            Ok((rows, partial)) => ToLeader::ChunkDone {
-                                phase: *pid,
-                                chunk: *chunk,
-                                rows,
-                                decode_us: sec.decode_us,
-                                compute_us: sec.compute_us,
-                                encode_us: sec.encode_us,
-                                partial,
-                            },
+                            Ok((rows, partial)) => {
+                                let wire = if cfg.hold && partial.rows() > 0 {
+                                    // Keep the partial here as band-split
+                                    // reduce leaves; the leader gets rows
+                                    // + completion only.
+                                    let bands =
+                                        reduce::band_ranges(partial.rows(), cfg.band_rows);
+                                    for (b, (lo, hi)) in bands.into_iter().enumerate() {
+                                        held.insert(
+                                            (chunk, b as u32),
+                                            partial.slice_rows(lo, hi),
+                                        );
+                                    }
+                                    Matrix::zeros(0, 0)
+                                } else {
+                                    partial
+                                };
+                                ToLeader::ChunkDone {
+                                    phase: pid,
+                                    chunk,
+                                    rows,
+                                    decode_us: sec.decode_us,
+                                    compute_us: sec.compute_us,
+                                    encode_us: sec.encode_us,
+                                    partial: wire,
+                                }
+                            }
                             Err(e) => {
                                 // Report and keep serving — the leader
                                 // decides (retry elsewhere or fail).
                                 LOG.error(&format!("chunk {chunk} failed: {e}"));
                                 ToLeader::ChunkFailed {
-                                    phase: *pid,
-                                    chunk: *chunk,
+                                    phase: pid,
+                                    chunk,
                                     message: e.to_string(),
                                 }
                             }
                         }
                     }
                     _ => ToLeader::ChunkFailed {
-                        phase: *pid,
-                        chunk: *chunk,
+                        phase: pid,
+                        chunk,
                         message: format!("assignment for unknown phase {pid}"),
                     },
                 };
                 send(writer, &reply)?;
             }
+            ToWorker::RMerge { phase: pid, dst_lo, band, left_held, right_held, src } => {
+                let outcome = reduce_merge(&mut held, dst_lo, band, left_held, right_held, src);
+                let reply = match outcome {
+                    Ok(()) => ToLeader::ReduceDone { phase: pid, lo: dst_lo, band },
+                    Err(e) => {
+                        LOG.error(&format!("merge into ({dst_lo}, {band}) failed: {e}"));
+                        ToLeader::ReduceFailed {
+                            phase: pid,
+                            lo: dst_lo,
+                            band,
+                            message: e.to_string(),
+                        }
+                    }
+                };
+                send(writer, &reply)?;
+            }
+            ToWorker::RFetch { phase: pid, lo, band, what } => {
+                let outcome = match what {
+                    FetchWhat::Partial => held
+                        .remove(&(lo, band))
+                        .ok_or_else(|| missing_leaf(lo, band)),
+                    FetchWhat::RFactor => held
+                        .get(&(lo, band))
+                        .ok_or_else(|| missing_leaf(lo, band))
+                        .and_then(reduce::band_r_factor),
+                };
+                let reply = match outcome {
+                    Ok(matrix) => ToLeader::ReducePart { phase: pid, lo, band, matrix },
+                    Err(e) => {
+                        LOG.error(&format!("fetch of ({lo}, {band}) failed: {e}"));
+                        ToLeader::ReduceFailed { phase: pid, lo, band, message: e.to_string() }
+                    }
+                };
+                send(writer, &reply)?;
+            }
+            ToWorker::RWriteV { phase: pid, lo, band, shard, mv } => {
+                let outcome = write_v_shard(&phase, &held, pid, lo, band, shard, &mv);
+                let reply = match outcome {
+                    Ok(()) => ToLeader::ReduceDone { phase: pid, lo, band },
+                    Err(e) => {
+                        LOG.error(&format!("V shard {shard} write failed: {e}"));
+                        ToLeader::ReduceFailed { phase: pid, lo, band, message: e.to_string() }
+                    }
+                };
+                send(writer, &reply)?;
+            }
         }
     }
+}
+
+fn missing_leaf(lo: u32, band: u32) -> Error {
+    Error::Other(format!("no held reduce leaf ({lo}, {band})"))
+}
+
+/// One pairwise merge step: combine exactly the two operands the leader
+/// named — a held leaf per non-[`HOLD_NONE`] name, plus the wire matrix
+/// when present — and hold the sum at `(dst_lo, band)`. Operand names are
+/// explicit so a stale leaf left by a lost speculative execution can
+/// never leak into a sum.
+fn reduce_merge(
+    held: &mut HashMap<(u32, u32), Matrix>,
+    dst_lo: u32,
+    band: u32,
+    left_held: u32,
+    right_held: u32,
+    src: Matrix,
+) -> Result<()> {
+    let mut ops: Vec<Matrix> = Vec::with_capacity(2);
+    for name in [left_held, right_held] {
+        if name != HOLD_NONE {
+            ops.push(held.remove(&(name, band)).ok_or_else(|| missing_leaf(name, band))?);
+        }
+    }
+    if src.rows() > 0 {
+        ops.push(src);
+    }
+    if ops.len() != 2 {
+        return Err(Error::Other(format!(
+            "merge into ({dst_lo}, {band}) resolved {} operands, need exactly 2",
+            ops.len()
+        )));
+    }
+    // The pairwise leaf of the tree — element-wise f64 addition, which is
+    // bitwise commutative, so operand order is free.
+    let merged = splitproc::reduce_partials(ops)?;
+    held.insert((dst_lo, band), merged);
+    Ok(())
+}
+
+/// Finish the W reduce for one band: `V_band = W_band · M_v`, written as
+/// a staged row shard of the `V` [`ShardSet`] — the dense factor never
+/// travels to the leader.
+fn write_v_shard(
+    phase: &Option<PhaseConfig>,
+    held: &HashMap<(u32, u32), Matrix>,
+    pid: u64,
+    lo: u32,
+    band: u32,
+    shard: u32,
+    mv: &Matrix,
+) -> Result<()> {
+    let cfg = phase
+        .as_ref()
+        .filter(|p| p.id == pid)
+        .ok_or_else(|| Error::Other(format!("v-write for unknown phase {pid}")))?;
+    let wband = held.get(&(lo, band)).ok_or_else(|| missing_leaf(lo, band))?;
+    let v = matmul(wband, mv)?;
+    let set = ShardSet::new(&cfg.work_dir, "V", cfg.shard_format)?;
+    let mut w = set.open_writer(shard as usize, v.cols())?;
+    for r in 0..v.rows() {
+        w.write_row(v.row(r))?;
+    }
+    w.finish()?;
+    Ok(())
 }
 
 /// `tallfat worker --leader host:port`: connect and serve until shutdown.

@@ -139,6 +139,16 @@ pub struct RunConfig {
     pub max_rank: usize,
     /// Rows absorbed per streaming batch (`tallfat stream`).
     pub batch_rows: usize,
+    /// Partial-reduction topology: `tree` (default — the distributed
+    /// pairwise merge schedule) or `star` (sequential leader-side fold).
+    pub reduce: crate::svd::ReduceMode,
+    /// Row-band height for the tall `W` reduction (0 = auto from sketch
+    /// width).
+    pub band_rows: usize,
+    /// Re-plan chunk granularity between passes from measured chunk wall
+    /// times (`--no-adaptive-chunks` turns it off; an explicit
+    /// `chunk_rows` always wins).
+    pub adaptive_chunks: bool,
 }
 
 impl Default for RunConfig {
@@ -167,6 +177,9 @@ impl Default for RunConfig {
             tol: crate::stream::DEFAULT_TOL,
             max_rank: 0,
             batch_rows: crate::stream::DEFAULT_BATCH_ROWS,
+            reduce: crate::svd::ReduceMode::default(),
+            band_rows: 0,
+            adaptive_chunks: true,
         }
     }
 }
@@ -253,6 +266,15 @@ impl RunConfig {
             if let Some(v) = file.get_usize(section, "batch_rows")? {
                 self.batch_rows = v;
             }
+            if let Some(v) = file.get_str(section, "reduce") {
+                self.reduce = crate::svd::ReduceMode::parse(v)?;
+            }
+            if let Some(v) = file.get_usize(section, "band_rows")? {
+                self.band_rows = v;
+            }
+            if let Some(v) = file.get_bool(section, "adaptive_chunks")? {
+                self.adaptive_chunks = v;
+            }
         }
         Ok(())
     }
@@ -307,6 +329,13 @@ impl RunConfig {
         self.tol = args.f64_or("tol", self.tol)?;
         self.max_rank = args.usize_or("max-rank", self.max_rank)?;
         self.batch_rows = args.usize_or("batch-rows", self.batch_rows)?;
+        if let Some(r) = args.opt_str("reduce") {
+            self.reduce = crate::svd::ReduceMode::parse(r)?;
+        }
+        self.band_rows = args.usize_or("band-rows", self.band_rows)?;
+        if args.flag("no-adaptive-chunks") {
+            self.adaptive_chunks = false;
+        }
         Ok(())
     }
 
@@ -331,6 +360,12 @@ impl RunConfig {
             chunks_per_worker: self.chunks_per_worker,
             chunk_retries: self.chunk_retries,
             tol: self.tol,
+            reduce: self.reduce,
+            band_rows: self.band_rows,
+            adaptive_chunks: self.adaptive_chunks,
+            // The coordinator's result paths (save/serve/report) read a
+            // dense V; cap-constrained callers opt out via the builder.
+            materialize_v: true,
         }
     }
 
@@ -467,6 +502,44 @@ mod tests {
         // chunks_per_worker = 0 is rejected.
         c.chunks_per_worker = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn reduce_knobs_parse_from_file_and_cli() {
+        use crate::svd::ReduceMode;
+        let file = ConfigFile::parse_str(
+            "[svd]\nreduce = \"star\"\nband_rows = 4096\nadaptive_chunks = false\n",
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        assert_eq!(c.reduce, ReduceMode::Tree);
+        assert!(c.adaptive_chunks);
+        c.apply_file(&file).unwrap();
+        assert_eq!(c.reduce, ReduceMode::Star);
+        assert_eq!(c.band_rows, 4096);
+        assert!(!c.adaptive_chunks);
+        let args = Args::parse(
+            "svd a.csv --reduce tree --band-rows 512"
+                .split_whitespace()
+                .map(String::from),
+        )
+        .unwrap();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.reduce, ReduceMode::Tree);
+        assert_eq!(c.band_rows, 512);
+        let o = c.svd_options();
+        assert_eq!(o.reduce, ReduceMode::Tree);
+        assert_eq!(o.band_rows, 512);
+        assert!(!o.adaptive_chunks);
+        // --no-adaptive-chunks is a one-way CLI switch.
+        let args = Args::parse(
+            "svd a.csv --no-adaptive-chunks".split_whitespace().map(String::from),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert!(!c.adaptive_chunks);
+        assert!(crate::svd::ReduceMode::parse("ring").is_err());
     }
 
     #[test]

@@ -52,6 +52,7 @@ COMMANDS
                   [--save-model DIR] [--shard-format csv|bin] [--sigma-cutoff REL]
                   [--chunks-per-worker C] [--chunk-rows R] [--chunk-retries N]
                   [--input-format csv|bin|libsvm|scsv|csr] [--cols N]
+                  [--reduce tree|star] [--band-rows R] [--no-adaptive-chunks]
                   (--center = PCA mode: subtract column means, one extra pass;
                    --cols pins the column dictionary of a sparse input — use
                    the serving width you will update against, so later
@@ -65,7 +66,13 @@ COMMANDS
                    retries before a pass fails [default 2];
                    --input-format overrides the extension guess — sparse
                    inputs stream as CSR blocks through O(nnz) kernels,
-                   locally and with --distributed)
+                   locally and with --distributed;
+                   --reduce picks the partial-reduction topology [default
+                   tree: pairwise merges held on the workers, leader state
+                   O(k'^2 log w); star = the old sequential fold],
+                   --band-rows sets the W/V reduce band height [default
+                   auto], --no-adaptive-chunks disables re-planning chunk
+                   granularity from measured chunk times)
   exact-svd     exact-Gram SVD for small n (paper §2.0.1)
                   (same options; projection flags ignored)
   stream        one-pass streaming SVD of a forward-only source

@@ -1,0 +1,197 @@
+//! Wire/shard byte codecs: LEB128 varints and XOR-delta `f64` byte
+//! suppression.
+//!
+//! Both the cluster's reduce frames and the CSR v2 shard format ship
+//! numeric streams whose neighbors are highly correlated (sorted column
+//! indices, smooth factor entries). Two tiny, dependency-free codecs
+//! exploit that:
+//!
+//! * **Varints** ([`write_uvarint`] / [`read_uvarint`]) — LEB128, 7 bits
+//!   per byte, for lengths and ascending-index deltas.
+//! * **XOR-delta floats** ([`encode_f64s`] / [`decode_f64s`]) — each
+//!   value's bits are XORed with the previous value's bits; the XOR of
+//!   similar doubles has many leading zero *bytes*, so we emit a
+//!   1-byte significant-length prefix followed by only the significant
+//!   little-endian bytes (Gorilla-style, byte-granular). Identical
+//!   repeated values cost one byte; worst case is 9/8 of raw.
+//!
+//! Everything here is self-describing and versioned by its container
+//! (proto matrix `enc` byte, CSR header version), so readers never guess.
+
+use crate::error::{Error, Result};
+
+/// Append `v` as a LEB128 varint (7 bits per byte, high bit = continue).
+pub fn write_uvarint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(byte);
+            return;
+        }
+        buf.push(byte | 0x80);
+    }
+}
+
+/// Read a LEB128 varint from `bytes` at `*pos`, advancing `*pos`.
+pub fn read_uvarint(bytes: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let byte = *bytes
+            .get(*pos)
+            .ok_or_else(|| Error::parse("varint truncated"))?;
+        *pos += 1;
+        if shift >= 64 || (shift == 63 && byte > 1) {
+            return Err(Error::parse("varint overflows u64"));
+        }
+        v |= u64::from(byte & 0x7f) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Append one XOR-delta-coded `f64`: XOR the bits with `*prev`, emit a
+/// significant-byte count then only those little-endian bytes, and update
+/// `*prev`. Streams decode with [`decode_f64_into`] against the same
+/// running `prev` (start both sides at 0).
+pub fn encode_f64(buf: &mut Vec<u8>, value: f64, prev: &mut u64) {
+    let bits = value.to_bits();
+    let x = bits ^ *prev;
+    *prev = bits;
+    let sig = 8 - (x.leading_zeros() / 8) as usize;
+    buf.push(sig as u8);
+    buf.extend_from_slice(&x.to_le_bytes()[..sig]);
+}
+
+/// Decode one value previously written by [`encode_f64`].
+pub fn decode_f64_into(bytes: &[u8], pos: &mut usize, prev: &mut u64) -> Result<f64> {
+    let sig = *bytes
+        .get(*pos)
+        .ok_or_else(|| Error::parse("xor-delta stream truncated"))? as usize;
+    *pos += 1;
+    if sig > 8 {
+        return Err(Error::parse(format!(
+            "xor-delta significant-byte count {sig} out of range"
+        )));
+    }
+    let end = *pos + sig;
+    if end > bytes.len() {
+        return Err(Error::parse("xor-delta stream truncated"));
+    }
+    let mut raw = [0u8; 8];
+    raw[..sig].copy_from_slice(&bytes[*pos..end]);
+    *pos = end;
+    let bits = u64::from_le_bytes(raw) ^ *prev;
+    *prev = bits;
+    Ok(f64::from_bits(bits))
+}
+
+/// XOR-delta encode a whole slice (running `prev` starts at 0).
+pub fn encode_f64s(vals: &[f64]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(vals.len() * 3);
+    let mut prev = 0u64;
+    for &v in vals {
+        encode_f64(&mut buf, v, &mut prev);
+    }
+    buf
+}
+
+/// Decode exactly `count` values from an [`encode_f64s`] stream, erroring
+/// on truncation or trailing bytes.
+pub fn decode_f64s(bytes: &[u8], count: usize) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(count);
+    let mut pos = 0usize;
+    let mut prev = 0u64;
+    for _ in 0..count {
+        out.push(decode_f64_into(bytes, &mut pos, &mut prev)?);
+    }
+    if pos != bytes.len() {
+        return Err(Error::parse(format!(
+            "xor-delta stream has {} trailing bytes",
+            bytes.len() - pos
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip() {
+        let cases = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        let mut buf = Vec::new();
+        for &v in &cases {
+            write_uvarint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &cases {
+            assert_eq!(read_uvarint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+        // sizes: 1 byte below 128, 2 below 16384...
+        let mut one = Vec::new();
+        write_uvarint(&mut one, 127);
+        assert_eq!(one.len(), 1);
+        one.clear();
+        write_uvarint(&mut one, 128);
+        assert_eq!(one.len(), 2);
+    }
+
+    #[test]
+    fn uvarint_truncated_and_overlong() {
+        assert!(read_uvarint(&[0x80], &mut 0).is_err());
+        assert!(read_uvarint(&[], &mut 0).is_err());
+        // 11 continuation bytes can't fit in a u64.
+        let overlong = [0xffu8; 11];
+        assert!(read_uvarint(&overlong, &mut 0).is_err());
+    }
+
+    #[test]
+    fn f64_roundtrip_exact_bits() {
+        let vals = [
+            0.0,
+            -0.0,
+            1.0,
+            1.0000001,
+            -3.5e300,
+            5e-324,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            std::f64::consts::PI,
+            std::f64::consts::PI, // repeat: 1 byte
+        ];
+        let coded = encode_f64s(&vals);
+        let back = decode_f64s(&coded, vals.len()).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn similar_values_compress_identical_values_one_byte() {
+        // A smooth ramp: low-order mantissa bytes churn, high bytes agree.
+        let vals: Vec<f64> = (0..256).map(|i| 1.0 + i as f64 * 1e-9).collect();
+        let coded = encode_f64s(&vals);
+        assert!(coded.len() < vals.len() * 8, "{} bytes", coded.len());
+        // All-equal stream: first value full, rest 1 byte each.
+        let same = vec![42.125f64; 100];
+        let coded = encode_f64s(&same);
+        assert_eq!(coded.len(), 9 + 99);
+        assert_eq!(decode_f64s(&coded, 100).unwrap(), same);
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let coded = encode_f64s(&[1.0, 2.0, 3.0]);
+        assert!(decode_f64s(&coded[..coded.len() - 1], 3).is_err());
+        assert!(decode_f64s(&coded, 2).is_err()); // trailing bytes
+        let mut bad = coded.clone();
+        bad[0] = 9; // sig count out of range is fine (9>8)
+        assert!(decode_f64s(&bad, 3).is_err());
+    }
+}

@@ -1,10 +1,13 @@
 //! Matrix I/O: the paper's `;`-separated CSV, a binary row-major format,
 //! sparse inputs (libsvm / sparse-CSV / binary CSR — [`sparse`]), the
 //! byte-range chunker (`split_process`'s seek/realign logic), sharded
-//! writers, and synthetic dataset generators.
+//! writers, compact byte codecs ([`codec`]: varints + XOR-delta floats,
+//! shared by CSR v2 shards and the cluster's reduce frames), and synthetic
+//! dataset generators.
 
 pub mod binmat;
 pub mod chunker;
+pub mod codec;
 pub mod csv;
 pub mod dataset;
 pub mod manifest;

@@ -17,17 +17,29 @@
 //! ```text
 //! offset  size        field
 //! 0       4           magic "TFSC"
-//! 4       4           version (u32 le) = 1
+//! 4       4           version (u32 le) = 2 (v1 still readable)
 //! 8       8           rows (u64 le)
 //! 16      8           cols (u64 le)
 //! 24      8           nnz (u64 le)
 //! 32      (rows+1)*8  indptr (u64 le each)
-//! ...                 per row: nnz_i * u32 indices, then nnz_i * f64 values
+//! ...                 row payloads (see below)
 //! ```
 //!
-//! Row `r`'s payload starts at `32 + (rows+1)*8 + indptr[r]*12`, so a chunk
-//! `[start, end)` of rows opens with two seeks — exact row-range chunking,
-//! like the dense binmat.
+//! **v2** (written by [`CsrWriter`]): `indptr` holds cumulative payload
+//! *byte* offsets — row `r`'s payload spans
+//! `[data_start + indptr[r], data_start + indptr[r+1])`. Each payload is
+//! delta/varint coded ([`crate::io::codec`]): a varint nonzero count, the
+//! ascending indices as varint deltas, then the values XOR-delta coded
+//! (the running previous-value resets per row, so any row range decodes
+//! standalone). Sorted indices make the deltas small and factor values are
+//! smooth, so shards shrink well below the raw 12 bytes/nnz.
+//!
+//! **v1** (legacy, read-only): `indptr` holds cumulative nonzero *counts*;
+//! row `r`'s payload starts at `data_start + indptr[r]*12` as raw
+//! `nnz_i * u32` indices then `nnz_i * f64` values.
+//!
+//! Either way a chunk `[start, end)` of rows opens with two seeks — exact
+//! row-range chunking, like the dense binmat.
 //!
 //! All readers yield **0-based ascending** `u32` indices; the libsvm
 //! reader converts from 1-based on the way in.
@@ -39,10 +51,77 @@ use std::fs::File;
 use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 
 pub const CSR_MAGIC: &[u8; 4] = b"TFSC";
-pub const CSR_VERSION: u32 = 1;
+/// Version written by [`CsrWriter`] (delta/varint row payloads).
+pub const CSR_VERSION: u32 = 2;
+/// Legacy raw-payload version, still accepted by every reader.
+pub const CSR_VERSION_V1: u32 = 1;
 
-/// Bytes per stored nonzero in the CSR payload (`u32` index + `f64` value).
+/// Bytes per stored nonzero in a **v1** CSR payload (`u32` index + `f64`
+/// value); v2 rows are variable-length.
 const NNZ_BYTES: u64 = 12;
+
+// ---------------------------------------------------------------------------
+// v2 row payload codec (shared with the stream-source CSR reader)
+// ---------------------------------------------------------------------------
+
+/// Encode one CSR v2 row payload into `buf` (cleared first): varint
+/// nonzero count, ascending indices as varint deltas, values XOR-delta
+/// coded with the running previous-value starting at 0.
+pub(crate) fn encode_v2_row(buf: &mut Vec<u8>, indices: &[u32], values: &[f64]) {
+    buf.clear();
+    crate::io::codec::write_uvarint(buf, indices.len() as u64);
+    let mut prev = 0u64;
+    for (i, &j) in indices.iter().enumerate() {
+        let d = if i == 0 { j as u64 } else { j as u64 - prev };
+        crate::io::codec::write_uvarint(buf, d);
+        prev = j as u64;
+    }
+    let mut prev_bits = 0u64;
+    for &v in values {
+        crate::io::codec::encode_f64(buf, v, &mut prev_bits);
+    }
+}
+
+/// Decode one CSR v2 row payload written by [`encode_v2_row`]. Errors on
+/// truncation, trailing bytes, non-ascending indices, or columns at or
+/// beyond `cols`.
+pub(crate) fn decode_v2_row(
+    bytes: &[u8],
+    cols: u64,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f64>,
+) -> Result<()> {
+    indices.clear();
+    values.clear();
+    let mut pos = 0usize;
+    let k = crate::io::codec::read_uvarint(bytes, &mut pos)? as usize;
+    let mut prev = 0u64;
+    for i in 0..k {
+        let d = crate::io::codec::read_uvarint(bytes, &mut pos)?;
+        if i > 0 && d == 0 {
+            return Err(Error::parse(
+                "csr: indices not ascending within a row".to_string(),
+            ));
+        }
+        let j = if i == 0 { d } else { prev.saturating_add(d) };
+        if j >= cols || j > u32::MAX as u64 {
+            return Err(Error::parse(format!("csr: column {j} out of range ({cols})")));
+        }
+        prev = j;
+        indices.push(j as u32);
+    }
+    let mut prev_bits = 0u64;
+    for _ in 0..k {
+        values.push(crate::io::codec::decode_f64_into(bytes, &mut pos, &mut prev_bits)?);
+    }
+    if pos != bytes.len() {
+        return Err(Error::parse(format!(
+            "csr: row payload has {} trailing bytes",
+            bytes.len() - pos
+        )));
+    }
+    Ok(())
+}
 
 // ---------------------------------------------------------------------------
 // text row parsing
@@ -222,6 +301,8 @@ impl SparseTextReader {
 /// Parsed CSR header.
 #[derive(Clone, Copy, Debug)]
 pub struct CsrHeader {
+    /// Format version (1 = raw payloads, 2 = delta/varint payloads).
+    pub version: u32,
     pub rows: u64,
     pub cols: u64,
     pub nnz: u64,
@@ -238,10 +319,11 @@ impl CsrHeader {
             return Err(Error::parse("csr: bad magic"));
         }
         let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
-        if version != CSR_VERSION {
+        if version != CSR_VERSION && version != CSR_VERSION_V1 {
             return Err(Error::parse(format!("csr: unsupported version {version}")));
         }
         Ok(CsrHeader {
+            version,
             rows: u64::from_le_bytes(buf[8..16].try_into().unwrap()),
             cols: u64::from_le_bytes(buf[16..24].try_into().unwrap()),
             nnz: u64::from_le_bytes(buf[24..32].try_into().unwrap()),
@@ -251,7 +333,7 @@ impl CsrHeader {
     fn write_to<W: Write>(&self, w: &mut W) -> Result<()> {
         let mut buf = [0u8; Self::SIZE as usize];
         buf[0..4].copy_from_slice(CSR_MAGIC);
-        buf[4..8].copy_from_slice(&CSR_VERSION.to_le_bytes());
+        buf[4..8].copy_from_slice(&self.version.to_le_bytes());
         buf[8..16].copy_from_slice(&self.rows.to_le_bytes());
         buf[16..24].copy_from_slice(&self.cols.to_le_bytes());
         buf[24..32].copy_from_slice(&self.nnz.to_le_bytes());
@@ -265,23 +347,27 @@ impl CsrHeader {
     }
 }
 
-/// Streaming CSR writer. The row count must be declared up front (the
-/// indptr region is reserved before the payload); rows append in order and
-/// `finish` back-fills nnz + indptr. Memory is `O(rows)` for the indptr,
-/// never `O(nnz)`.
+/// Streaming CSR writer (always emits **v2**). The row count must be
+/// declared up front (the indptr region is reserved before the payload);
+/// rows append in order and `finish` back-fills nnz + indptr. Memory is
+/// `O(rows)` for the indptr, never `O(nnz)`.
 pub struct CsrWriter {
     w: BufWriter<File>,
     rows_declared: u64,
     cols: u64,
+    /// Cumulative payload byte offsets (v2 indptr semantics).
     indptr: Vec<u64>,
     nnz: u64,
+    bytes: u64,
+    row_buf: Vec<u8>,
 }
 
 impl CsrWriter {
     pub fn create(path: &str, rows: usize, cols: usize) -> Result<Self> {
         let f = File::create(path)?;
         let mut w = BufWriter::with_capacity(1 << 20, f);
-        let header = CsrHeader { rows: rows as u64, cols: cols as u64, nnz: 0 };
+        let header =
+            CsrHeader { version: CSR_VERSION, rows: rows as u64, cols: cols as u64, nnz: 0 };
         header.write_to(&mut w)?;
         // Reserve the indptr region (back-filled at finish).
         let zeros = vec![0u8; 1 << 12];
@@ -297,6 +383,8 @@ impl CsrWriter {
             cols: cols as u64,
             indptr: vec![0],
             nnz: 0,
+            bytes: 0,
+            row_buf: Vec::new(),
         })
     }
 
@@ -326,14 +414,13 @@ impl CsrWriter {
             }
             last = Some(j);
         }
-        for &j in indices {
-            self.w.write_all(&j.to_le_bytes())?;
-        }
-        for &v in values {
-            self.w.write_all(&v.to_le_bytes())?;
-        }
+        let mut row_buf = std::mem::take(&mut self.row_buf);
+        encode_v2_row(&mut row_buf, indices, values);
+        self.w.write_all(&row_buf)?;
+        self.bytes += row_buf.len() as u64;
+        self.row_buf = row_buf;
         self.nnz += indices.len() as u64;
-        self.indptr.push(self.nnz);
+        self.indptr.push(self.bytes);
         Ok(())
     }
 
@@ -348,7 +435,13 @@ impl CsrWriter {
         self.w.flush()?;
         let mut f = self.w.into_inner().map_err(|e| Error::Other(e.to_string()))?;
         f.seek(SeekFrom::Start(0))?;
-        CsrHeader { rows: self.rows_declared, cols: self.cols, nnz: self.nnz }.write_to(&mut f)?;
+        CsrHeader {
+            version: CSR_VERSION,
+            rows: self.rows_declared,
+            cols: self.cols,
+            nnz: self.nnz,
+        }
+        .write_to(&mut f)?;
         let mut buf = Vec::with_capacity(self.indptr.len() * 8);
         for &p in &self.indptr {
             buf.extend_from_slice(&p.to_le_bytes());
@@ -397,12 +490,20 @@ impl CsrReader {
                 return Err(Error::parse("csr: indptr not monotone".into()));
             }
         }
-        if let Some(&last) = indptr.last() {
-            if last > header.nnz {
-                return Err(Error::parse("csr: indptr exceeds nnz".into()));
+        if header.version == CSR_VERSION_V1 {
+            // v1 indptr counts nonzeros, so nnz bounds it; v2 counts
+            // payload bytes, which have no such invariant to check.
+            if let Some(&last) = indptr.last() {
+                if last > header.nnz {
+                    return Err(Error::parse("csr: indptr exceeds nnz".into()));
+                }
             }
         }
-        f.seek(SeekFrom::Start(header.data_start() + indptr[0] * NNZ_BYTES))?;
+        let first_offset = match header.version {
+            CSR_VERSION_V1 => indptr[0] * NNZ_BYTES,
+            _ => indptr[0],
+        };
+        f.seek(SeekFrom::Start(header.data_start() + first_offset))?;
         Ok(CsrReader {
             r: BufReader::with_capacity(1 << 20, f),
             header,
@@ -420,6 +521,14 @@ impl CsrReader {
     pub fn next_row(&mut self, indices: &mut Vec<u32>, values: &mut Vec<f64>) -> Result<bool> {
         if self.next + 1 >= self.indptr.len() {
             return Ok(false);
+        }
+        if self.header.version != CSR_VERSION_V1 {
+            let nbytes = (self.indptr[self.next + 1] - self.indptr[self.next]) as usize;
+            self.byte_buf.resize(nbytes, 0);
+            self.r.read_exact(&mut self.byte_buf)?;
+            decode_v2_row(&self.byte_buf, self.header.cols, indices, values)?;
+            self.next += 1;
+            return Ok(true);
         }
         let k = (self.indptr[self.next + 1] - self.indptr[self.next]) as usize;
         indices.clear();
@@ -723,13 +832,13 @@ mod tests {
 
     #[test]
     fn csr_non_ascending_row_rejected() {
-        // Hand-craft a corrupt file whose one row stores indices [3, 1] —
-        // the reader must error, not silently feed a descending row to
-        // cursor-walking consumers.
+        // Hand-craft a corrupt v1 file whose one row stores indices
+        // [3, 1] — the reader must error, not silently feed a descending
+        // row to cursor-walking consumers.
         let path = tmp("desc.csr");
         let mut bytes = Vec::new();
         bytes.extend_from_slice(CSR_MAGIC);
-        bytes.extend_from_slice(&CSR_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&CSR_VERSION_V1.to_le_bytes());
         bytes.extend_from_slice(&1u64.to_le_bytes()); // rows
         bytes.extend_from_slice(&4u64.to_le_bytes()); // cols
         bytes.extend_from_slice(&2u64.to_le_bytes()); // nnz
@@ -744,6 +853,83 @@ mod tests {
         let (mut idx, mut val) = (Vec::new(), Vec::new());
         let err = r.next_row(&mut idx, &mut val).unwrap_err().to_string();
         assert!(err.contains("ascending"), "{err}");
+        // The same corruption in a v2 payload (second delta 0) also errors.
+        let mut buf = Vec::new();
+        crate::io::codec::write_uvarint(&mut buf, 2);
+        crate::io::codec::write_uvarint(&mut buf, 3);
+        crate::io::codec::write_uvarint(&mut buf, 0); // delta 0 = duplicate
+        let mut bits = 0u64;
+        crate::io::codec::encode_f64(&mut buf, 1.0, &mut bits);
+        crate::io::codec::encode_f64(&mut buf, 1.0, &mut bits);
+        let err = decode_v2_row(&buf, 4, &mut idx, &mut val).unwrap_err().to_string();
+        assert!(err.contains("ascending"), "{err}");
+    }
+
+    #[test]
+    fn csr_v1_legacy_files_still_read() {
+        // Hand-craft a well-formed v1 file (nnz-count indptr, raw
+        // payloads) and check the reader decodes it — including a row
+        // range, which exercises the v1 byte-offset arithmetic.
+        let path = tmp("legacy.csr");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(CSR_MAGIC);
+        bytes.extend_from_slice(&CSR_VERSION_V1.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // rows
+        bytes.extend_from_slice(&5u64.to_le_bytes()); // cols
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // nnz
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // indptr[0]
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // indptr[1]
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // indptr[2]
+        // row 0: (1, 1.5), (4, -2.0)
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&4u32.to_le_bytes());
+        bytes.extend_from_slice(&1.5f64.to_le_bytes());
+        bytes.extend_from_slice(&(-2.0f64).to_le_bytes());
+        // row 1: (0, 7.0)
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&7.0f64.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let h = CsrHeader::read_from(&path).unwrap();
+        assert_eq!(h.version, CSR_VERSION_V1);
+        let mut r = CsrReader::open(&path).unwrap();
+        let (mut idx, mut val) = (Vec::new(), Vec::new());
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![1, 4]);
+        assert_eq!(val, vec![1.5, -2.0]);
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![0]);
+        assert_eq!(val, vec![7.0]);
+        assert!(!r.next_row(&mut idx, &mut val).unwrap());
+        // row range skipping row 0 must seek by v1 (count * 12) offsets
+        let mut r = CsrReader::open_rows(&path, 1, 2).unwrap();
+        assert!(r.next_row(&mut idx, &mut val).unwrap());
+        assert_eq!(idx, vec![0]);
+        assert_eq!(val, vec![7.0]);
+    }
+
+    #[test]
+    fn csr_v2_written_and_smaller_than_raw() {
+        // The writer emits v2, and delta/varint coding beats the raw
+        // 12 bytes/nnz payload on a clustered-index matrix.
+        let mut s = SparseMatrix::with_cols(1000);
+        for i in 0..200 {
+            let base = (i * 3) as u32 % 900;
+            let idx = [base, base + 1, base + 2, base + 7];
+            let v = 0.001 * i as f64;
+            s.push_row(&idx, &[v, v, v, v]).unwrap();
+        }
+        let path = tmp("v2size.csr");
+        write_sparse_matrix(&s, &path, InputFormat::Csr).unwrap();
+        let h = CsrHeader::read_from(&path).unwrap();
+        assert_eq!(h.version, CSR_VERSION);
+        let payload = std::fs::metadata(&path).unwrap().len() - CsrHeader::SIZE - (h.rows + 1) * 8;
+        assert!(
+            payload < h.nnz * NNZ_BYTES,
+            "v2 payload {payload} not smaller than raw {}",
+            h.nnz * NNZ_BYTES
+        );
+        let back = read_sparse_matrix(&path, InputFormat::Csr).unwrap();
+        assert_eq!(back.to_dense(), s.to_dense());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Streaming TSQR job — the stable alternative route (see
 //! [`crate::linalg::tsqr`]). Each worker folds its row blocks into an
-//! `n x n` R factor; the leader reduces R factors by stacking + one more QR.
+//! `n x n` R factor; the leader reduces R factors by stacking + one more QR
+//! ([`crate::linalg::tsqr::svd_from_partials`] — the same fold the
+//! distributed W reduction uses for its banded completion).
 
 use crate::error::Result;
 use crate::linalg::tsqr::TsqrAccumulator;

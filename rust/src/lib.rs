@@ -42,6 +42,14 @@
 //! over remote TCP workers (`.executor(&mut cluster)`) — same seed, same
 //! passes, same factors.
 //!
+//! Partials come back through a *reduction plan* ([`svd::reduce`]): by
+//! default additive `k' x k'` partials tree-reduce pairwise across the
+//! holders (workers in a cluster run), tall `W` partials fold as banded
+//! TSQR R factors, and V row shards go straight to disk — the leader holds
+//! `O(k'^2 log w)` state instead of an n-sized accumulate. `--reduce star`
+//! keeps the old ship-to-leader fold; both topologies combine partials in
+//! chunk-index order, so they agree bit for bit.
+//!
 //! ## Three-layer architecture
 //!
 //! The block-level compute (Gram, projection, fused project+gram, U

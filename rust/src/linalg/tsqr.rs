@@ -13,7 +13,7 @@
 //! and QRs once more. `σ(A) = σ(R)` exactly, and `AᵀA = RᵀR` — so the same
 //! leader-side eigen/svd machinery applies.
 
-use super::{exact_svd, qr::thin_qr, Matrix};
+use super::{exact_svd, qr::thin_qr, ExactSvd, Matrix};
 use crate::error::{Error, Result};
 
 /// A streaming R-factor accumulator (one per worker).
@@ -75,8 +75,12 @@ impl TsqrAccumulator {
     }
 }
 
-/// Leader-side reduce over per-worker R factors, then σ(A) = σ(R).
-pub fn sigma_from_partials(n: usize, partials: Vec<Matrix>) -> Result<Vec<f64>> {
+/// Leader-side reduce over per-worker R factors, then the full SVD of the
+/// definitive R: `σ(A) = σ(R)` exactly, and R's right singular vectors are
+/// A's — which is what the distributed W reduction consumes as the
+/// completion rotation ([`crate::svd::reduce`]). The returned `u` is R's
+/// (small, square) — useful only for reconstructing R itself.
+pub fn svd_from_partials(n: usize, partials: Vec<Matrix>) -> Result<ExactSvd> {
     let mut acc = TsqrAccumulator::new(n);
     for p in partials {
         acc.push_block(&p)?;
@@ -92,7 +96,12 @@ pub fn sigma_from_partials(n: usize, partials: Vec<Matrix>) -> Result<Vec<f64>> 
     } else {
         r
     };
-    Ok(exact_svd(&square)?.sigma)
+    exact_svd(&square)
+}
+
+/// Leader-side reduce over per-worker R factors, then σ(A) = σ(R).
+pub fn sigma_from_partials(n: usize, partials: Vec<Matrix>) -> Result<Vec<f64>> {
+    Ok(svd_from_partials(n, partials)?.sigma)
 }
 
 #[cfg(test)]
@@ -128,6 +137,25 @@ mod tests {
         let got = sigma_from_partials(6, vec![acc.finish().unwrap()]).unwrap();
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-9 * w.max(1.0), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn svd_from_partials_recovers_right_vectors() {
+        let a = rand(150, 6, 2);
+        let want = exact_svd(&a).unwrap();
+        let mut acc = TsqrAccumulator::new(6);
+        acc.push_block(&a).unwrap();
+        let got = svd_from_partials(6, vec![acc.finish().unwrap()]).unwrap();
+        for j in 0..6 {
+            let dot: f64 = (0..6).map(|i| got.v.get(i, j) * want.v.get(i, j)).sum();
+            let sign = if dot < 0.0 { -1.0 } else { 1.0 };
+            for i in 0..6 {
+                assert!(
+                    (got.v.get(i, j) - sign * want.v.get(i, j)).abs() < 1e-8,
+                    "v[{i},{j}]"
+                );
+            }
         }
     }
 

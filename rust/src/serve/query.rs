@@ -88,6 +88,16 @@ impl TopK {
         }
     }
 
+    /// Fold another heap's survivors in. The order on [`Scored`] is total
+    /// (score, then row id), so the surviving top-k set is a function of
+    /// the pushed *set* alone — merging per-thread heaps in any order
+    /// yields exactly the serial scan's result.
+    fn merge(&mut self, other: TopK) {
+        for std::cmp::Reverse(s) in other.heap {
+            self.push(s);
+        }
+    }
+
     fn into_hits(self) -> Vec<Hit> {
         let mut out: Vec<Scored> = self.heap.into_iter().map(|r| r.0).collect();
         out.sort_by(|a, b| b.cmp(a)); // best first
@@ -152,9 +162,12 @@ impl QueryEngine {
     }
 
     /// Top-k cosine similarity for a batch of latent queries (`q x k`).
-    /// One streaming pass over the U shards; every shard is scored against
-    /// all queries with a single backend matmul. `topks[j]` bounds query
-    /// `j`'s result list.
+    /// One streaming pass over the U shards, fanned out across up to
+    /// `available_parallelism` scoped threads (strided shard assignment);
+    /// every shard is scored against all queries with a single backend
+    /// matmul and each thread keeps its own bounded heaps, merged at the
+    /// end — bit-identical to the serial scan because the hit order is
+    /// total. `topks[j]` bounds query `j`'s result list.
     pub fn similar_batch(&self, latent: &Matrix, topks: &[usize]) -> Result<Vec<Vec<Hit>>> {
         let q = latent.rows();
         if q != topks.len() {
@@ -172,28 +185,73 @@ impl QueryEngine {
             .collect();
         // Queries as columns: scores_shard = E_shard (rows x k) · Qᵀ (k x q).
         let qt = latent.t();
-        let mut heaps: Vec<TopK> = topks.iter().map(|&t| TopK::new(t)).collect();
         let norms = self.store.norms()?;
-        for s in 0..self.store.shards() {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(self.store.shards().max(1));
+        if threads <= 1 {
+            let heaps = self.scan_shards(&qt, &qnorms, norms, topks, 0, 1)?;
+            return Ok(heaps.into_iter().map(TopK::into_hits).collect());
+        }
+        let mut merged: Vec<TopK> = topks.iter().map(|&t| TopK::new(t)).collect();
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(threads);
+            for t in 0..threads {
+                let (qt, qnorms) = (&qt, &qnorms);
+                handles.push(
+                    scope.spawn(move || self.scan_shards(qt, qnorms, norms, topks, t, threads)),
+                );
+            }
+            // Merge in thread order; any order gives the same top-k set.
+            for h in handles {
+                let heaps = h
+                    .join()
+                    .map_err(|_| Error::Other("similar: shard-scan thread panicked".into()))??;
+                for (m, part) in merged.iter_mut().zip(heaps) {
+                    m.merge(part);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(merged.into_iter().map(TopK::into_hits).collect())
+    }
+
+    /// Score shards `offset, offset+stride, ...` against all queries —
+    /// one thread's share of the [`QueryEngine::similar_batch`] scan.
+    fn scan_shards(
+        &self,
+        qt: &Matrix,
+        qnorms: &[f64],
+        norms: &[f64],
+        topks: &[usize],
+        offset: usize,
+        stride: usize,
+    ) -> Result<Vec<TopK>> {
+        let mut heaps: Vec<TopK> = topks.iter().map(|&t| TopK::new(t)).collect();
+        let mut s = offset;
+        while s < self.store.shards() {
             let base = self.store.shard_base(s);
             // Embedding rows e_i = u_i ∘ σ, scaled once per cache residency.
             let emb = self.store.embedding_shard(s)?;
             if emb.rows() == 0 {
+                s += stride;
                 continue;
             }
-            let scores = self.backend.project_block(&emb, &qt)?; // rows x q
+            let scores = self.backend.project_block(&emb, qt)?; // rows x q
             for r in 0..scores.rows() {
                 let row = base + r;
                 let denom_row = norms[row];
                 let srow = scores.row(r);
-                for j in 0..q {
-                    let denom = denom_row * qnorms[j];
+                for (j, (heap, qn)) in heaps.iter_mut().zip(qnorms.iter()).enumerate() {
+                    let denom = denom_row * qn;
                     let score = if denom > 0.0 { srow[j] / denom } else { 0.0 };
-                    heaps[j].push(Scored { score, row });
+                    heap.push(Scored { score, row });
                 }
             }
+            s += stride;
         }
-        Ok(heaps.into_iter().map(TopK::into_hits).collect())
+        Ok(heaps)
     }
 
     /// Top-k similar rows for one latent query.

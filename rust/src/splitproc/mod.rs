@@ -420,7 +420,10 @@ where
 }
 
 /// Sum per-worker partial matrices — the global reduce of the paper's
-/// commutative accumulations.
+/// commutative accumulations, and the *leaf* of the tree reduce: each
+/// [`crate::svd::reduce::tree_reduce`] merge node is exactly this fold
+/// over its pair, so star and tree topologies agree bit for bit when
+/// partials are combined in chunk-index order.
 pub fn reduce_partials(parts: Vec<crate::linalg::Matrix>) -> Result<crate::linalg::Matrix> {
     let mut iter = parts.into_iter();
     let mut acc = iter

@@ -474,6 +474,8 @@ impl StreamSvd {
             k: rec.k,
             sigma: rec.sigma,
             v: Some(rec.v),
+            v_shards: None,
+            v_bands: 0,
             u_shards: u_set,
             shards: shard_epochs.len(),
             means: rec.means,

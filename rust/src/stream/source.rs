@@ -62,8 +62,10 @@ enum Framing {
     Bin { cols: usize, dtype: DType, row_buf: Vec<u8> },
     /// libsvm / sparse-csv text.
     SparseText(InputFormat),
-    /// CSR: header + indptr parsed, then per-row payloads.
-    Csr { row_nnz: Vec<u64>, next: usize },
+    /// CSR: header + indptr parsed, then per-row payloads. `row_len` is
+    /// per-row nonzero counts (v1) or payload byte lengths (v2) — the
+    /// successive differences of the on-disk indptr either way.
+    Csr { version: u32, row_len: Vec<u64>, next: usize },
 }
 
 /// A forward-only batch reader over any byte stream.
@@ -198,7 +200,9 @@ impl StreamSource {
                     return Err(Error::parse("stream: bad csr magic"));
                 }
                 let version = u32::from_le_bytes(buf[4..8].try_into().unwrap());
-                if version != crate::io::sparse::CSR_VERSION {
+                if version != crate::io::sparse::CSR_VERSION
+                    && version != crate::io::sparse::CSR_VERSION_V1
+                {
                     return Err(Error::parse(format!(
                         "stream: unsupported csr version {version}"
                     )));
@@ -246,8 +250,8 @@ impl StreamSource {
                     }
                     indptr.push(v);
                 }
-                let row_nnz = indptr.windows(2).map(|w| w[1] - w[0]).collect();
-                Framing::Csr { row_nnz, next: 0 }
+                let row_len = indptr.windows(2).map(|w| w[1] - w[0]).collect();
+                Framing::Csr { version, row_len, next: 0 }
             }
         };
         self.framing = Some(framing);
@@ -358,23 +362,45 @@ impl StreamSource {
                     }
                     true
                 }
-                Framing::Csr { row_nnz, next } => {
-                    if *next >= row_nnz.len() {
+                Framing::Csr { version, row_len, next } => {
+                    if *next >= row_len.len() {
                         break;
                     }
-                    let nnz = row_nnz[*next] as usize;
+                    let len = row_len[*next] as usize;
                     *next += 1;
-                    indices.clear();
-                    values.clear();
-                    let mut b4 = [0u8; 4];
-                    for _ in 0..nnz {
-                        self.reader.read_exact(&mut b4)?;
-                        indices.push(u32::from_le_bytes(b4));
-                    }
-                    let mut b8 = [0u8; 8];
-                    for _ in 0..nnz {
-                        self.reader.read_exact(&mut b8)?;
-                        values.push(f64::from_le_bytes(b8));
+                    if *version == crate::io::sparse::CSR_VERSION_V1 {
+                        // v1: `len` nonzeros as raw u32 indices + f64 values
+                        indices.clear();
+                        values.clear();
+                        let mut b4 = [0u8; 4];
+                        for _ in 0..len {
+                            self.reader.read_exact(&mut b4)?;
+                            indices.push(u32::from_le_bytes(b4));
+                        }
+                        let mut b8 = [0u8; 8];
+                        for _ in 0..len {
+                            self.reader.read_exact(&mut b8)?;
+                            values.push(f64::from_le_bytes(b8));
+                        }
+                    } else {
+                        // v2: `len` bytes of delta/varint row payload. Fill
+                        // incrementally so a hostile byte count hits EOF,
+                        // not the allocator (same discipline as indptr).
+                        self.line_buf.clear();
+                        let mut chunk = [0u8; 4096];
+                        let mut remaining = len;
+                        while remaining > 0 {
+                            let take = remaining.min(chunk.len());
+                            self.reader.read_exact(&mut chunk[..take])?;
+                            self.line_buf.extend_from_slice(&chunk[..take]);
+                            remaining -= take;
+                        }
+                        crate::io::sparse::decode_v2_row(
+                            &self.line_buf,
+                            self.cols as u64,
+                            &mut indices,
+                            &mut values,
+                        )?;
                     }
                     true
                 }
@@ -564,8 +590,9 @@ mod tests {
         let path = tmp("decreasing.csr");
         crate::io::sparse::write_sparse_matrix(&sm, &path, InputFormat::Csr).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
-        // indptr entries start at byte 32; corrupt the middle one (2 -> 7).
-        bytes[40..48].copy_from_slice(&7u64.to_le_bytes());
+        // indptr entries start at byte 32; inflate the middle (v2 byte
+        // offset) far past any real payload so the next entry decreases.
+        bytes[40..48].copy_from_slice(&(1u64 << 40).to_le_bytes());
         let mut s = StreamSource::from_reader(cursor(bytes), InputFormat::Csr);
         let err = s.next_batch(1).unwrap_err().to_string();
         assert!(err.contains("indptr decreases"), "unexpected error: {err}");

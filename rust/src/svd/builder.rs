@@ -201,6 +201,37 @@ impl<'a> Svd<'a> {
         self
     }
 
+    /// How chunk partials are reduced (default
+    /// [`crate::svd::ReduceMode::Tree`] — the distributed pairwise merge
+    /// schedule; `Star` restores the sequential leader-side fold).
+    pub fn reduce(mut self, mode: crate::svd::ReduceMode) -> Self {
+        self.opts.reduce = mode;
+        self
+    }
+
+    /// Row-band height for the tall `W` reduction and the staged `V`
+    /// shards (default 0 = auto-size from the sketch width).
+    pub fn band_rows(mut self, rows: usize) -> Self {
+        self.opts.band_rows = rows;
+        self
+    }
+
+    /// Re-plan chunk granularity between passes from measured chunk wall
+    /// times (default true; a nonzero [`Svd::chunk_rows`] always wins).
+    pub fn adaptive_chunks(mut self, yes: bool) -> Self {
+        self.opts.adaptive_chunks = yes;
+        self
+    }
+
+    /// Materialize `V` densely on the leader (default true). Off, V is
+    /// delivered only as staged row shards
+    /// ([`crate::svd::SvdResult::v_shards`]) and the leader never holds an
+    /// n-sized matrix.
+    pub fn materialize_v(mut self, yes: bool) -> Self {
+        self.opts.materialize_v = yes;
+        self
+    }
+
     /// Block-compute backend for leader math and (local) worker jobs.
     /// Defaults to the pure-rust native backend.
     pub fn backend(mut self, backend: BackendRef) -> Self {

@@ -28,10 +28,18 @@
 //! Every chunk execution lands in [`execute_pass_chunk`] — the single
 //! definition of what each pass does to one chunk of rows; a remote worker
 //! literally runs the same function the local threads do. Chunk partials
-//! are reduced **in chunk order** whatever order executions complete in,
-//! so both executors produce bitwise-identical reductions, and shard
-//! writes are staged + atomically published, so a retried or speculated
-//! chunk can never leave a torn shard.
+//! are reduced **in chunk order** whatever order executions complete in —
+//! sequentially or over the canonical merge-round tree, per
+//! [`PassContext::reduce`] — so both executors produce bitwise-identical
+//! reductions, and shard writes are staged + atomically published, so a
+//! retried or speculated chunk can never leave a torn shard.
+//!
+//! The final tall reduction (`W = AᵀU₀`) has its own entry point,
+//! [`Executor::run_wpass`]: instead of handing back one n-sized partial it
+//! folds row bands of `W` through TSQR R factors into the completion's
+//! `(Σ, P)` and writes the `V` rows band-by-band as a staged shard set —
+//! the contract that lets the cluster executor keep `W` distributed and
+//! the leader at `O(k²·log workers)` state.
 
 use crate::backend::BackendRef;
 use crate::config::InputFormat;
@@ -48,6 +56,7 @@ use crate::rng::VirtualMatrix;
 use crate::splitproc::{
     self, Blocked, CenteredJob, ChunkMeta, SchedPolicy, SchedStats, SparseBlocked,
 };
+use crate::svd::reduce::{self, ReduceMode};
 use std::sync::Arc;
 
 /// Everything a pass needs besides its operand: where the rows come from,
@@ -78,6 +87,14 @@ pub struct PassContext<'a> {
     /// use distinct shard names, so a straggling speculative write from a
     /// previous round can never clobber the current round's shards.
     pub shard_epoch: u32,
+    /// How chunk partials are reduced: sequential leader-side fold
+    /// ([`ReduceMode::Star`]) or the canonical pairwise merge tree
+    /// ([`ReduceMode::Tree`], the default — distributed across workers in
+    /// cluster mode).
+    pub reduce: ReduceMode,
+    /// Row-band height for the tall `W` reduction (0 = auto-sized from the
+    /// sketch width, [`reduce::auto_band_rows`]).
+    pub band_rows: usize,
 }
 
 /// One streaming pass of the pipeline, named after what it computes.
@@ -127,6 +144,23 @@ pub struct PassOutput {
     pub stats: SchedStats,
 }
 
+/// What the tall-`W` pass + completion produced: the full singular value
+/// estimate `σ(W)`, the `k'×k'` rotation `P` (W's right singular vectors),
+/// and — when V materialization is on — the staged `V` row shards already
+/// on disk (`v_bands` of them, band order = row order).
+pub struct WPassOutput {
+    pub rows: u64,
+    /// Chunk fan-out of the underlying streaming pass.
+    pub shards: usize,
+    /// Number of `V` row shards written (0 when V wasn't materialized).
+    pub v_bands: usize,
+    /// All `k'` singular values of `W` (the completion truncates to `k`).
+    pub sigma_full: Vec<f64>,
+    /// W's right singular vectors (`k'×k'`).
+    pub p: Matrix,
+    pub stats: SchedStats,
+}
+
 /// An execution substrate for streaming passes: plan the chunk tasks, feed
 /// them through its work queue (retrying/re-running per the
 /// [`PassContext::sched`] policy), reduce the additive partials in chunk
@@ -137,6 +171,73 @@ pub trait Executor {
 
     /// Run one pass over the whole input.
     fn run_pass(&mut self, ctx: &PassContext, pass: &Pass) -> Result<PassOutput>;
+
+    /// Run the final `W = AᵀU₀` pass and its completion: reduce `W`, take
+    /// its SVD via the banded TSQR R-factor fold (never gramming `W`),
+    /// and — when `compute_v` — write `V = W · P_k Σ_k⁻¹` as staged row
+    /// shards under `work_dir`. The default drives [`Executor::run_pass`]
+    /// and completes from the fully-reduced partial; the cluster executor
+    /// overrides it to keep `W` distributed across workers.
+    fn run_wpass(
+        &mut self,
+        ctx: &PassContext,
+        m: &Matrix,
+        k: usize,
+        cutoff_rel: f64,
+        compute_v: bool,
+    ) -> Result<WPassOutput> {
+        let out = self.run_pass(ctx, &Pass::UrecoverTmul { m })?;
+        complete_wpass_from_full(out, ctx, k, cutoff_rel, compute_v)
+    }
+}
+
+/// Complete the `W` reduction from a fully-materialized `n×k'` partial:
+/// band-split it, fold per-band TSQR R factors into the definitive R,
+/// SVD that for `(Σ_full, P)`, and write the `V` bands as shards. The
+/// arithmetic is identical band order to the cluster's distributed fold,
+/// so local and cluster completions agree to machine precision.
+pub(crate) fn complete_wpass_from_full(
+    out: PassOutput,
+    ctx: &PassContext,
+    k: usize,
+    cutoff_rel: f64,
+    compute_v: bool,
+) -> Result<WPassOutput> {
+    let w = out
+        .partial
+        .ok_or_else(|| Error::Other("W pass produced no partial".into()))?;
+    let band_rows =
+        if ctx.band_rows == 0 { reduce::auto_band_rows(ctx.kp) } else { ctx.band_rows };
+    let bands = reduce::band_ranges(w.rows(), band_rows);
+    let rs: Result<Vec<Matrix>> = bands
+        .iter()
+        .map(|&(lo, hi)| reduce::band_r_factor(&w.slice_rows(lo, hi)))
+        .collect();
+    let r = reduce::fold_band_rs(ctx.kp, rs?)?;
+    let (sigma_full, p) = reduce::completion_from_r(&r)?;
+    let v_bands = if compute_v {
+        let mv = reduce::completion_mv(&sigma_full, &p, k, cutoff_rel)?;
+        let set = ShardSet::new(ctx.work_dir, "V", ctx.shard_format)?;
+        for (b, &(lo, hi)) in bands.iter().enumerate() {
+            let v = matmul(&w.slice_rows(lo, hi), &mv)?;
+            let mut wr = set.open_writer(b, v.cols())?;
+            for i in 0..v.rows() {
+                wr.write_row(v.row(i))?;
+            }
+            wr.finish()?;
+        }
+        bands.len()
+    } else {
+        0
+    };
+    Ok(WPassOutput {
+        rows: out.rows,
+        shards: out.shards,
+        v_bands,
+        sigma_full,
+        p,
+        stats: out.stats,
+    })
 }
 
 /// Publish one pass's scheduler outcome into the global registry — both
@@ -419,7 +520,9 @@ impl Executor for LocalExecutor {
         let mut partials = Vec::with_capacity(shards);
         // `outputs` is in chunk order, so this reduction is deterministic
         // regardless of which thread finished which chunk when — and
-        // matches the cluster executor's reduction bit for bit.
+        // matches the cluster executor's reduction bit for bit: both walk
+        // the same chunk-ordered fold (star) or the same merge-round
+        // schedule (tree) over the same leaves.
         for (r, partial) in outputs {
             rows += r;
             if let Some(p) = partial {
@@ -431,7 +534,10 @@ impl Executor for LocalExecutor {
         let partial = if partials.is_empty() {
             None
         } else {
-            Some(splitproc::reduce_partials(partials)?)
+            Some(match ctx.reduce {
+                ReduceMode::Star => splitproc::reduce_partials(partials)?,
+                ReduceMode::Tree => reduce::tree_reduce(partials)?,
+            })
         };
         phase_span.arg_num("chunks", stats.chunks as f64);
         publish_sched_stats(pass.name(), &stats);
@@ -477,6 +583,8 @@ mod tests {
             means: Arc::new(Vec::new()),
             sched: SchedPolicy::default(),
             shard_epoch: 0,
+            reduce: ReduceMode::Tree,
+            band_rows: 0,
         }
     }
 
@@ -588,5 +696,59 @@ mod tests {
         assert_eq!(epoch_stem("Y", 0), "Y");
         assert_eq!(epoch_stem("Y", 2), "Y.q2");
         assert_eq!(epoch_stem("U0", 1), "U0.q1");
+    }
+
+    #[test]
+    fn star_and_tree_reductions_agree_on_ata() {
+        let (input, a, work) = ctx_fixture("reduce_modes");
+        let mut exec = LocalExecutor::new(3);
+        let mut c = ctx(&input, &work, 8);
+        c.sched = SchedPolicy { chunks_per_worker: 3, ..SchedPolicy::default() };
+        c.reduce = ReduceMode::Star;
+        let star = exec.run_pass(&c, &Pass::Ata).unwrap().partial.unwrap();
+        c.reduce = ReduceMode::Tree;
+        let tree = exec.run_pass(&c, &Pass::Ata).unwrap().partial.unwrap();
+        // Same leaves, different association: equal to float round-off.
+        assert!(star.max_abs_diff(&tree) < 1e-12 * star.max_abs().max(1.0));
+        assert!(star.max_abs_diff(&gram(&a)) < 1e-9);
+    }
+
+    #[test]
+    fn local_wpass_banded_completion_matches_dense_w() {
+        let (input, a, work) = ctx_fixture("wpass");
+        let mut exec = LocalExecutor::new(2);
+        let mut c = ctx(&input, &work, 8);
+        c.band_rows = 3; // three bands of the 8-row W
+        exec.run_pass(&c, &Pass::ProjectGram { omega: None }).unwrap();
+        let m = Matrix::from_fn(4, 4, |i, j| if i == j { 1.0 } else { 0.0 });
+        let out = exec.run_wpass(&c, &m, 2, 1e-12, true).unwrap();
+        assert_eq!(out.rows, 90);
+        assert_eq!(out.v_bands, 3);
+        // Dense oracle: W = Aᵀ (Y · I) = Aᵀ Y.
+        let omega = VirtualMatrix::projection(3, 8, 4).materialize();
+        let y = matmul(&a, &omega).unwrap();
+        let w = crate::linalg::matmul_tn(&a, &y).unwrap();
+        let exact = crate::linalg::exact_svd(&w).unwrap();
+        for i in 0..4 {
+            assert!(
+                (out.sigma_full[i] - exact.sigma[i]).abs() < 1e-9 * exact.sigma[0].max(1.0),
+                "sigma[{i}]"
+            );
+        }
+        // The staged V shards concatenate to W · P_k Σ_k⁻¹ = V_k (up to
+        // per-column sign).
+        let vset = ShardSet::new(&work, "V", InputFormat::Bin).unwrap();
+        let v = vset.merge_to_matrix(out.v_bands).unwrap();
+        assert_eq!(v.shape(), (8, 2));
+        for j in 0..2 {
+            let dot: f64 = (0..8).map(|i| v.get(i, j) * exact.v.get(i, j)).sum();
+            let sign = if dot < 0.0 { -1.0 } else { 1.0 };
+            for i in 0..8 {
+                assert!(
+                    (v.get(i, j) - sign * exact.v.get(i, j)).abs() < 1e-9,
+                    "v[{i},{j}]"
+                );
+            }
+        }
     }
 }

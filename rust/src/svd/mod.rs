@@ -27,8 +27,12 @@
 //! The pass schedule above exists exactly once ([`pipeline`]). *Where* each
 //! streaming pass runs is an [`Executor`]: [`LocalExecutor`] fans out over
 //! in-process Split-Process threads, [`crate::cluster::ClusterExecutor`]
-//! over remote TCP workers — same seed, same passes, same result. Entry
-//! point:
+//! over remote TCP workers — same seed, same passes, same result. *How* a
+//! pass's per-chunk partials collapse into one matrix is a reduction plan
+//! ([`reduce`]): the default tree plan merges leaves pairwise over the
+//! [`reduce::merge_rounds`] schedule (distributed across workers on a
+//! cluster, `O(k²·log w)` leader state), while `ReduceMode::Star` keeps
+//! the legacy leader-side fold. Entry point:
 //!
 //! ```ignore
 //! let result = Svd::over(&input)?.rank(16).oversample(8).run()?;
@@ -37,12 +41,16 @@
 pub mod builder;
 pub mod executor;
 pub mod pipeline;
+pub mod reduce;
 pub mod result;
 pub mod validate;
 
 pub use builder::Svd;
-pub use executor::{execute_pass_chunk, Executor, LocalExecutor, Pass, PassContext, PassOutput};
+pub use executor::{
+    execute_pass_chunk, Executor, LocalExecutor, Pass, PassContext, PassOutput, WPassOutput,
+};
 pub use pipeline::{SvdOptions, DEFAULT_SIGMA_CUTOFF_REL};
+pub use reduce::{MemGauge, ReduceMode};
 pub use result::SvdResult;
 // Re-exported so the two lifecycle builders read side by side:
 // `Svd::over(&input)` factorizes, `Update::of(&model_dir)` appends.

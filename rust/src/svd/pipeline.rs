@@ -12,9 +12,11 @@ use crate::config::InputFormat;
 use crate::error::{Error, Result};
 use crate::io::writer::ShardSet;
 use crate::io::InputSpec;
-use crate::linalg::{matmul, Matrix};
+use crate::linalg::Matrix;
 use crate::metrics::PhaseReport;
+use crate::splitproc::SchedStats;
 use crate::svd::executor::{Executor, Pass, PassContext};
+use crate::svd::reduce::ReduceMode;
 use crate::svd::result::SvdResult;
 use crate::util::Logger;
 use std::sync::Arc;
@@ -67,6 +69,23 @@ pub struct SvdOptions {
     /// requested `k` regardless; validation rejects `tol <= 0` either way
     /// so a config-file `tol` is never silently parsed-but-ignored.
     pub tol: f64,
+    /// How chunk partials are reduced: the canonical pairwise merge tree
+    /// ([`ReduceMode::Tree`], default — distributed across workers in
+    /// cluster mode, leader state `O(k'²·log workers)`) or the pre-v6
+    /// sequential star fold ([`ReduceMode::Star`]).
+    pub reduce: ReduceMode,
+    /// Row-band height for the tall `W` reduction and the staged `V`
+    /// shards (0 = auto-size from the sketch width).
+    pub band_rows: usize,
+    /// Re-plan the chunk granularity between passes from measured chunk
+    /// wall times (only when `chunk_rows = 0`; `--no-adaptive-chunks`
+    /// turns it off).
+    pub adaptive_chunks: bool,
+    /// Materialize `V` as a dense in-memory matrix on the leader (the
+    /// default; serving and reconstruction read it directly). Off, the
+    /// leader never holds an n-sized matrix — V stays as staged row
+    /// shards ([`SvdResult::v_shards`]).
+    pub materialize_v: bool,
 }
 
 impl Default for SvdOptions {
@@ -91,6 +110,10 @@ impl Default for SvdOptions {
             chunks_per_worker: crate::splitproc::sched::DEFAULT_CHUNKS_PER_WORKER,
             chunk_retries: crate::splitproc::sched::DEFAULT_CHUNK_RETRIES,
             tol: crate::stream::DEFAULT_TOL,
+            reduce: ReduceMode::default(),
+            band_rows: 0,
+            adaptive_chunks: true,
+            materialize_v: true,
         }
     }
 }
@@ -201,6 +224,8 @@ pub(crate) fn run_svd(
         means: Arc::new(Vec::new()),
         sched: opts.sched_policy(),
         shard_epoch: 0,
+        reduce: opts.reduce,
+        band_rows: opts.band_rows,
     };
     LOG.info(&format!(
         "{} svd: {m_rows}x{n} -> k={} (sketch {kp}), executor={}, backend={}",
@@ -230,9 +255,12 @@ pub(crate) fn run_svd(
         let means: Vec<f64> = sums.row(0).iter().map(|&s| s / out.rows as f64).collect();
         ctx.means = Arc::new(means);
         report.push("pass0.colstats", t0.elapsed(), out.rows, 0);
+        // A full streaming pass just ran: its chunk timings are the first
+        // granularity measurement, and no shards depend on the plan yet.
+        adapt_chunk_rows(&mut ctx, opts, &out.stats, m_rows);
     }
 
-    let (k, sigma, v, shards_count) = if opts.exact_gram {
+    let route = if opts.exact_gram {
         gram_passes(exec, &ctx, m_rows, &mut report)?
     } else {
         randomized_passes(exec, &mut ctx, opts, m_rows, &mut report)?
@@ -241,38 +269,94 @@ pub(crate) fn run_svd(
     let u_shards = ShardSet::new(&opts.work_dir, "U", opts.shard_format)?;
     LOG.info(&format!(
         "svd done: sigma[0]={:.4} sigma[{}]={:.4}",
-        sigma.first().copied().unwrap_or(0.0),
-        k.saturating_sub(1),
-        sigma.last().copied().unwrap_or(0.0)
+        route.sigma.first().copied().unwrap_or(0.0),
+        route.k.saturating_sub(1),
+        route.sigma.last().copied().unwrap_or(0.0)
     ));
     Ok(SvdResult {
         m: m_rows,
         n,
-        k,
-        sigma,
-        v,
+        k: route.k,
+        sigma: route.sigma,
+        v: route.v,
+        v_shards: route.v_shards,
+        v_bands: route.v_bands,
         u_shards,
-        shards: shards_count,
+        shards: route.shards,
         means: if opts.center { Some(ctx.means.to_vec()) } else { None },
         report,
     })
 }
 
+/// What a route (randomized or exact-Gram) hands back to [`run_svd`].
+struct RouteOutput {
+    k: usize,
+    sigma: Vec<f64>,
+    v: Option<Matrix>,
+    shards: usize,
+    v_shards: Option<ShardSet>,
+    v_bands: usize,
+}
+
+/// Aim each chunk at roughly this much wall time when re-planning:
+/// large enough that scheduling overhead is negligible, small enough
+/// that retries and speculative re-runs stay cheap.
+const ADAPTIVE_CHUNK_TARGET_MS: f64 = 500.0;
+/// Below this median chunk time the measurement is scheduler noise.
+const ADAPTIVE_CHUNK_MIN_MS: f64 = 20.0;
+
+/// Re-plan `chunk_rows` from the previous pass's measured per-chunk wall
+/// times (the same samples published to `sched_chunk_ms{pass=…}`). Only
+/// runs at plan-safe boundaries — call sites are after pass 0 and between
+/// power-iteration rounds, never inside a round, because a round's
+/// recovery/rotation passes read the shards its projection pass wrote and
+/// the shard fan-out *is* the chunk plan. Conservative by design: the
+/// user's explicit `chunk_rows` wins, sub-noise medians are ignored, and
+/// only a ≥2× correction is worth invalidating the measured plan for.
+fn adapt_chunk_rows(ctx: &mut PassContext, opts: &SvdOptions, stats: &SchedStats, m_rows: usize) {
+    if !opts.adaptive_chunks || opts.chunk_rows != 0 {
+        return;
+    }
+    let mut ms = stats.chunk_ms.clone();
+    if ms.is_empty() || stats.chunks == 0 {
+        return;
+    }
+    ms.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let p50 = ms[ms.len() / 2];
+    if p50 < ADAPTIVE_CHUNK_MIN_MS {
+        return;
+    }
+    let cur_rows = (m_rows / stats.chunks).max(1);
+    let scaled = (cur_rows as f64 * ADAPTIVE_CHUNK_TARGET_MS / p50).round().max(1.0) as usize;
+    // Never plan fewer chunks than workers — that just idles them.
+    let new_rows = scaled.min((m_rows / opts.workers.max(1)).max(1));
+    if new_rows < cur_rows.saturating_mul(2) && new_rows.saturating_mul(2) > cur_rows {
+        return;
+    }
+    LOG.info(&format!(
+        "adaptive chunks: p50 {p50:.0}ms at ~{cur_rows} rows/chunk -> {new_rows} rows/chunk"
+    ));
+    ctx.sched.chunk_rows = new_rows;
+}
+
 /// The randomized route: sketch, recover, complete (+ power iterations).
-/// Returns `(k, sigma, v, shards)`.
+///
+/// The final `W = AᵀU₀` reduction goes through [`Executor::run_wpass`]
+/// rather than a star fold: the completion `(Σ, P)` comes out of a banded
+/// TSQR R-factor fold and `V` lands as staged row shards — in cluster
+/// mode the leader never materializes the n-sized `W` or `V`.
 fn randomized_passes(
     exec: &mut dyn Executor,
     ctx: &mut PassContext,
     opts: &SvdOptions,
     m_rows: usize,
     report: &mut PhaseReport,
-) -> Result<(usize, Vec<f64>, Option<Matrix>, usize)> {
+) -> Result<RouteOutput> {
     let kp = ctx.kp;
     let mut omega: Option<Matrix> = None;
-    let mut w_mat;
-    let mut shards_count;
+    let mut shards_count = 0usize;
     let mut iteration = 0usize;
-    loop {
+    let m_mat = loop {
         // Each power-iteration round rewrites Y/U0 with new content; a
         // fresh shard epoch gives it a fresh namespace so a straggling
         // speculative write from the previous round cannot clobber it.
@@ -300,17 +384,22 @@ fn randomized_passes(
         let m_mat = v_y.scale_cols(&inv_y)?;
         report.push(&format!("leader.eigh_y[{iteration}]"), t0.elapsed(), kp as u64, 0);
 
-        // ---- pass 2: U0 = Y M, W = Aᵀ U0 ---------------------------------
+        if iteration >= opts.power_iters {
+            // The final recovery pass runs through `run_wpass` below, so
+            // this round's M leaves the loop as the completion operand.
+            break m_mat;
+        }
+
+        // ---- power round pass 2: U0 = Y M, W = Aᵀ U0 ---------------------
+        // Consumed leader-side immediately as the next Ω, so it rides the
+        // plain (star-transport) pass even in tree mode.
         let t0 = Instant::now();
         let out2 = exec.run_pass(ctx, &Pass::UrecoverTmul { m: &m_mat })?;
-        w_mat = out2
+        let w_mat = out2
             .partial
             .ok_or_else(|| Error::Other("pass2 returned no W partial".into()))?;
         report.push(&format!("pass2.urecover_tmul[{iteration}]"), t0.elapsed(), out2.rows, 0);
 
-        if iteration >= opts.power_iters {
-            break;
-        }
         // ---- power iteration: Ω ← orth(W), repeat ------------------------
         let t0 = Instant::now();
         let (q, _) = crate::linalg::thin_qr(&w_mat)?;
@@ -331,43 +420,53 @@ fn randomized_passes(
             )?;
             stale.cleanup(shards_count);
         }
-    }
-
-    // ---- leader: small SVD completion from W -----------------------------
-    let t0 = Instant::now();
-    let gw = ctx.backend.gram_block(&w_mat)?; // WᵀW, kp x kp
-    let (w2, p) = ctx.backend.eigh(&gw)?;
-    let sigma_full: Vec<f64> = w2.iter().map(|&w| w.max(0.0).sqrt()).collect();
-    let k = opts.k.min(kp);
-    let sigma: Vec<f64> = sigma_full[..k].to_vec();
-    let p_k = p.slice_cols(0, k); // kp x k rotation
-    let v = if opts.compute_v {
-        let inv_s = guarded_inverse(&sigma, COMPLETION_CUTOFF_REL);
-        let vp = matmul(&w_mat, &p_k)?; // n x k
-        Some(vp.scale_cols(&inv_s)?)
-    } else {
-        None
+        // Round boundary: the next round re-plans its own shard fan-out
+        // from scratch, so the chunk plan is free to change here.
+        adapt_chunk_rows(ctx, opts, &out2.stats, m_rows);
     };
-    report.push("leader.eigh_w", t0.elapsed(), kp as u64, 0);
+
+    // ---- final pass 2 + completion: reduce W, SVD its R, stage V ---------
+    let t0 = Instant::now();
+    let k = opts.k.min(kp);
+    let wout = exec.run_wpass(ctx, &m_mat, k, COMPLETION_CUTOFF_REL, opts.compute_v)?;
+    if wout.rows as usize != m_rows {
+        return Err(Error::Other(format!(
+            "pass2 saw {} rows, expected {m_rows}",
+            wout.rows
+        )));
+    }
+    let sigma: Vec<f64> = wout.sigma_full[..k].to_vec();
+    let p_k = wout.p.slice_cols(0, k); // kp x k rotation
+    report.push("pass2.wreduce_complete", t0.elapsed(), wout.rows, 0);
+
+    // V: already on disk as staged row shards; pull a dense copy into the
+    // result only when materialization is on (the default).
+    let (v, v_shards, v_bands) = if opts.compute_v && wout.v_bands > 0 {
+        let set = ShardSet::new(ctx.work_dir, "V", ctx.shard_format)?;
+        let v = if opts.materialize_v { Some(set.merge_to_matrix(wout.v_bands)?) } else { None };
+        (v, Some(set), wout.v_bands)
+    } else {
+        (None, None, 0)
+    };
 
     // ---- pass 3: U = U0 P_k (rotate shards) ------------------------------
     let t0 = Instant::now();
     let out3 = exec.run_pass(ctx, &Pass::RotateU { p: &p_k })?;
     report.push("pass3.rotate_u", t0.elapsed(), out3.rows, 0);
 
-    Ok((k, sigma, v, shards_count))
+    Ok(RouteOutput { k, sigma, v, shards: shards_count, v_shards, v_bands })
 }
 
 /// The paper's small-n exact route (§2.0.1): eigendecompose `AᵀA` directly,
-/// then stream `U = A V Σ⁻¹`. Returns `(k, sigma, v, shards)`. V falls out
-/// of the eigensolve for free here, so it is always returned — `compute_v`
-/// only buys anything on the randomized route.
+/// then stream `U = A V Σ⁻¹`. V falls out of the eigensolve for free here,
+/// so it is always returned densely — `compute_v` and the banded V shards
+/// only buy anything on the randomized route.
 fn gram_passes(
     exec: &mut dyn Executor,
     ctx: &PassContext,
     m_rows: usize,
     report: &mut PhaseReport,
-) -> Result<(usize, Vec<f64>, Option<Matrix>, usize)> {
+) -> Result<RouteOutput> {
     let k = ctx.kp; // for this route kp = k.min(n).min(m)
 
     // ---- pass 1: G = AᵀA --------------------------------------------------
@@ -400,7 +499,14 @@ fn gram_passes(
     let out2 = exec.run_pass(ctx, &Pass::Mult { m: &m_mat })?;
     report.push("pass2.u_recover", t0.elapsed(), out2.rows, 0);
 
-    Ok((k, sigma, Some(v_k), out2.shards))
+    Ok(RouteOutput {
+        k,
+        sigma,
+        v: Some(v_k),
+        shards: out2.shards,
+        v_shards: None,
+        v_bands: 0,
+    })
 }
 
 #[cfg(test)]

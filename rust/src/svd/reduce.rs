@@ -1,0 +1,430 @@
+//! Reduction plans: how per-chunk partials become one result.
+//!
+//! The paper's commutative accumulations (`AᵀA`, `YᵀY`, column sums,
+//! `AᵀU₀`) were originally folded by the leader, one chunk after another —
+//! a star topology whose reduce work and memory grow linearly with the
+//! chunk count. This module is the *plan* both executors follow instead:
+//!
+//! * [`merge_rounds`] — the canonical pairwise merge schedule: a
+//!   stride-doubling binary tree over the chunk-ordered leaves, a pure
+//!   function of the chunk count. [`LocalExecutor`](crate::svd::LocalExecutor)
+//!   walks it over in-memory partials ([`tree_reduce`]);
+//!   [`DistributedLeader`](crate::cluster::DistributedLeader) walks the
+//!   *same* schedule by relaying pairwise merges between the workers that
+//!   hold the leaves, so local and cluster reductions stay bitwise
+//!   identical (per-element `f64` addition is bitwise commutative, so even
+//!   operand order is free).
+//! * [`band_ranges`] — the row-band decomposition of the one tall partial
+//!   (`W = AᵀU₀`, `n × k'`): bands merge independently, stream through the
+//!   TSQR R-factor fold ([`band_r_factor`] / [`fold_band_rs`]), and the
+//!   final `V` rows are written band-by-band straight to a
+//!   [`ShardSet`](crate::io::writer::ShardSet) — the leader only ever
+//!   touches `k'×k'` R factors and one band in transit, `O(k²·log w)`
+//!   state instead of the old `O(n·k'·chunks)`.
+//! * [`MemGauge`] — the leader's accounting of exactly that reduce state,
+//!   with an optional hard cap so tests (and cautious deployments) can
+//!   *prove* the star path would OOM where the tree path fits.
+//!
+//! [`crate::splitproc::reduce_partials`] is the leaf of the tree — the one
+//! pairwise merge both sides call — rather than the whole reduce.
+
+use crate::error::{Error, Result};
+use crate::linalg::tsqr::TsqrAccumulator;
+use crate::linalg::{exact_svd, Matrix};
+
+/// How an executor reduces a pass's per-chunk partials.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReduceMode {
+    /// Fold partials one after another on the leader (the pre-tree
+    /// behavior): simple, but leader work and memory grow with the chunk
+    /// count.
+    Star,
+    /// Pairwise merge rounds over the [`merge_rounds`] schedule. Locally
+    /// this is just a different (still deterministic) fold order; on a
+    /// cluster the leaves stay on the workers that computed them and the
+    /// leader only relays `k'`-scale messages.
+    #[default]
+    Tree,
+}
+
+impl ReduceMode {
+    /// Parse a config/CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "star" => Ok(ReduceMode::Star),
+            "tree" => Ok(ReduceMode::Tree),
+            other => Err(Error::Config(format!(
+                "reduce must be `star` or `tree`, got `{other}`"
+            ))),
+        }
+    }
+
+    /// Stable name (inverse of [`ReduceMode::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            ReduceMode::Star => "star",
+            ReduceMode::Tree => "tree",
+        }
+    }
+}
+
+/// One pairwise merge of the tree schedule: the span anchored at leaf
+/// `dst` absorbs the span anchored at leaf `src` (`dst < src`; the merged
+/// span stays anchored at `dst`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MergeStep {
+    pub dst: usize,
+    pub src: usize,
+}
+
+/// The canonical merge schedule for `total` chunk-ordered leaves: rounds
+/// of stride-doubling pairwise merges (`1↦0, 3↦2, …`, then `2↦0, 6↦4, …`).
+/// A pure function of `total`, so a restarted reduce recomputes the exact
+/// same arithmetic and the distributed walk matches [`tree_reduce`] bit
+/// for bit.
+pub fn merge_rounds(total: usize) -> Vec<Vec<MergeStep>> {
+    let mut rounds = Vec::new();
+    let mut step = 1usize;
+    while step < total {
+        let mut round = Vec::new();
+        let mut lo = 0usize;
+        while lo + step < total {
+            round.push(MergeStep { dst: lo, src: lo + step });
+            lo += 2 * step;
+        }
+        if !round.is_empty() {
+            rounds.push(round);
+        }
+        step *= 2;
+    }
+    rounds
+}
+
+/// Reduce chunk-ordered partials over the [`merge_rounds`] schedule, with
+/// [`crate::splitproc::reduce_partials`] as the pairwise leaf. Same sum as
+/// the sequential fold up to float associativity; identical bits to the
+/// distributed tree walk.
+pub fn tree_reduce(parts: Vec<Matrix>) -> Result<Matrix> {
+    if parts.is_empty() {
+        return Err(Error::Other("tree reduce over zero partials".into()));
+    }
+    let total = parts.len();
+    let mut slots: Vec<Option<Matrix>> = parts.into_iter().map(Some).collect();
+    for round in merge_rounds(total) {
+        for MergeStep { dst, src } in round {
+            let right = slots[src]
+                .take()
+                .ok_or_else(|| Error::Other("merge schedule revisited a drained slot".into()))?;
+            let left = slots[dst]
+                .take()
+                .ok_or_else(|| Error::Other("merge schedule revisited a drained slot".into()))?;
+            slots[dst] = Some(crate::splitproc::reduce_partials(vec![left, right])?);
+        }
+    }
+    slots[0]
+        .take()
+        .ok_or_else(|| Error::Other("tree reduce left no root".into()))
+}
+
+/// Row bands `[lo, hi)` of a `rows`-row partial at `band_rows` rows per
+/// band (`band_rows = 0` means one band spanning everything). Both sides
+/// of the wire derive the same split from `(rows, band_rows)` alone.
+pub fn band_ranges(rows: usize, band_rows: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let b = if band_rows == 0 { rows } else { band_rows };
+    (0..rows)
+        .step_by(b.max(1))
+        .map(|lo| (lo, (lo + b).min(rows)))
+        .collect()
+}
+
+/// Default band height for the tall `W` partial: wide enough that the
+/// per-band R factor (`k'×k'`) amortizes, capped so one band in transit
+/// stays around a megabyte.
+pub fn auto_band_rows(kp: usize) -> usize {
+    let kp = kp.max(1);
+    ((1usize << 20) / (8 * kp)).max(kp)
+}
+
+/// The TSQR R factor of one row band (`min(rows, cols) × cols`; fewer
+/// rows than columns stay as-is and square up in [`fold_band_rs`]).
+pub fn band_r_factor(band: &Matrix) -> Result<Matrix> {
+    let mut acc = TsqrAccumulator::new(band.cols());
+    acc.push_block(band)?;
+    acc.finish()
+}
+
+/// Fold per-band R factors (band order) into the definitive `k'×k'` R,
+/// zero-padded square so [`exact_svd`] (which wants tall input) accepts it.
+pub fn fold_band_rs(kp: usize, rs: impl IntoIterator<Item = Matrix>) -> Result<Matrix> {
+    let mut acc = TsqrAccumulator::new(kp);
+    for r in rs {
+        acc.push_block(&r)?;
+    }
+    let r = acc.finish()?;
+    if r.rows() < kp {
+        let mut padded = Matrix::zeros(kp, kp);
+        for i in 0..r.rows() {
+            padded.row_mut(i).copy_from_slice(r.row(i));
+        }
+        Ok(padded)
+    } else {
+        Ok(r)
+    }
+}
+
+/// SVD of the folded R: `σ(W) = σ(R)` exactly, and R's right singular
+/// vectors are W's — the completion's `(Σ, P)` without ever gramming W
+/// (which would square its condition number).
+pub fn completion_from_r(r: &Matrix) -> Result<(Vec<f64>, Matrix)> {
+    let svd = exact_svd(r)?;
+    Ok((svd.sigma, svd.v))
+}
+
+/// The completion's V multiplier `M_v = P_k Σ_k⁻¹` (`k'×k`): each held W
+/// band times this is the corresponding band of `V`.
+pub fn completion_mv(sigma_full: &[f64], p: &Matrix, k: usize, cutoff_rel: f64) -> Result<Matrix> {
+    let inv = crate::svd::pipeline::guarded_inverse(&sigma_full[..k.min(sigma_full.len())], cutoff_rel);
+    p.slice_cols(0, k).scale_cols(&inv)
+}
+
+/// Tracked bytes of one matrix (`f64` payload only — the accounting unit
+/// of [`MemGauge`]).
+pub fn matrix_bytes(m: &Matrix) -> u64 {
+    (m.rows() * m.cols() * 8) as u64
+}
+
+/// Accounting of the leader's reduce-state memory: star-mode stored
+/// partials, leader-held leaves shipped by hold-incapable workers, bands
+/// in relay transit, fetched R factors. `cap > 0` turns the gauge into a
+/// hard budget: the phase fails the moment tracked bytes exceed it — how
+/// the memory-cap tests *prove* the star path needs `O(n·k'·chunks)`
+/// where the tree path stays `O(k²·log w)`.
+#[derive(Debug, Default)]
+pub struct MemGauge {
+    cur: u64,
+    peak: u64,
+    cap: u64,
+}
+
+impl MemGauge {
+    /// Set the hard budget in bytes (0 = unlimited, track only).
+    pub fn set_cap(&mut self, bytes: u64) {
+        self.cap = bytes;
+    }
+
+    /// High-water mark of tracked bytes.
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    /// Currently tracked bytes.
+    pub fn current(&self) -> u64 {
+        self.cur
+    }
+
+    /// Account `bytes` of reduce state; errors if a cap is set and the
+    /// running total would exceed it.
+    pub fn track(&mut self, bytes: u64) -> Result<()> {
+        self.cur += bytes;
+        self.peak = self.peak.max(self.cur);
+        if self.cap > 0 && self.cur > self.cap {
+            return Err(Error::Other(format!(
+                "leader memory cap exceeded: {} bytes of reduce state over the {} byte cap \
+                 (the star reduce stores every chunk partial leader-side; `reduce = tree` \
+                 keeps the leaves on the workers)",
+                self.cur, self.cap
+            )));
+        }
+        Ok(())
+    }
+
+    /// Release previously tracked bytes.
+    pub fn release(&mut self, bytes: u64) {
+        self.cur = self.cur.saturating_sub(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Gaussian;
+    use crate::splitproc::reduce_partials;
+
+    fn rand(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let g = Gaussian::new(seed);
+        Matrix::from_fn(rows, cols, |i, j| g.sample(i as u64, j as u64))
+    }
+
+    #[test]
+    fn merge_rounds_shapes() {
+        assert!(merge_rounds(0).is_empty());
+        assert!(merge_rounds(1).is_empty());
+        // 3 leaves: (1↦0), then (2↦0).
+        assert_eq!(
+            merge_rounds(3),
+            vec![
+                vec![MergeStep { dst: 0, src: 1 }],
+                vec![MergeStep { dst: 0, src: 2 }]
+            ]
+        );
+        // 6 leaves: (1↦0, 3↦2, 5↦4), (2↦0), (4↦0).
+        assert_eq!(
+            merge_rounds(6),
+            vec![
+                vec![
+                    MergeStep { dst: 0, src: 1 },
+                    MergeStep { dst: 2, src: 3 },
+                    MergeStep { dst: 4, src: 5 }
+                ],
+                vec![MergeStep { dst: 0, src: 2 }],
+                vec![MergeStep { dst: 0, src: 4 }]
+            ]
+        );
+        // Every leaf is consumed exactly once and the root is leaf 0.
+        for total in 1..40 {
+            let mut absorbed = vec![false; total];
+            for round in merge_rounds(total) {
+                for MergeStep { dst, src } in round {
+                    assert!(dst < src && src < total);
+                    assert!(!absorbed[src], "leaf {src} absorbed twice (total {total})");
+                    assert!(!absorbed[dst], "merging into drained leaf {dst}");
+                    absorbed[src] = true;
+                }
+            }
+            let roots = absorbed.iter().filter(|&&a| !a).count();
+            assert_eq!(roots, 1, "total {total}");
+            assert!(!absorbed[0]);
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_sequential_on_integer_fixture() {
+        // Small integers: the sequential fold is exact, so tree == star
+        // bit for bit regardless of association.
+        for total in [1usize, 2, 3, 5, 7, 8, 13] {
+            let parts: Vec<Matrix> =
+                (0..total).map(|i| Matrix::from_fn(3, 2, |r, c| (i + 2 * r + c) as f64)).collect();
+            let star = reduce_partials(parts.clone()).unwrap();
+            let tree = tree_reduce(parts).unwrap();
+            assert_eq!(star.max_abs_diff(&tree), 0.0, "total {total}");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_close_to_sequential_on_random_fixture() {
+        let parts: Vec<Matrix> = (0..11).map(|i| rand(6, 4, 100 + i)).collect();
+        let star = reduce_partials(parts.clone()).unwrap();
+        let tree = tree_reduce(parts).unwrap();
+        assert!(star.max_abs_diff(&tree) < 1e-12 * star.max_abs().max(1.0));
+    }
+
+    #[test]
+    fn tree_reduce_is_deterministic() {
+        let parts: Vec<Matrix> = (0..9).map(|i| rand(5, 5, 200 + i)).collect();
+        let a = tree_reduce(parts.clone()).unwrap();
+        let b = tree_reduce(parts).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
+    }
+
+    #[test]
+    fn tree_reduce_empty_is_error() {
+        assert!(tree_reduce(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn band_ranges_cover_and_partition() {
+        assert_eq!(band_ranges(10, 4), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(band_ranges(10, 0), vec![(0, 10)]);
+        assert_eq!(band_ranges(3, 100), vec![(0, 3)]);
+        assert!(band_ranges(0, 4).is_empty());
+        let bands = band_ranges(97, 13);
+        assert_eq!(bands.first().unwrap().0, 0);
+        assert_eq!(bands.last().unwrap().1, 97);
+        for w in bands.windows(2) {
+            assert_eq!(w[0].1, w[1].0);
+        }
+    }
+
+    #[test]
+    fn auto_band_rows_bounds() {
+        assert_eq!(auto_band_rows(16), (1 << 20) / 128);
+        // Very wide sketches still get at least kp rows per band.
+        assert_eq!(auto_band_rows(100_000), 100_000);
+        assert!(auto_band_rows(0) >= 1);
+    }
+
+    #[test]
+    fn banded_r_fold_matches_whole_matrix_sigma() {
+        let w = rand(120, 6, 9);
+        let whole = {
+            let r = fold_band_rs(6, vec![band_r_factor(&w).unwrap()]).unwrap();
+            completion_from_r(&r).unwrap().0
+        };
+        let banded = {
+            let rs: Vec<Matrix> = band_ranges(120, 17)
+                .into_iter()
+                .map(|(lo, hi)| band_r_factor(&w.slice_rows(lo, hi)).unwrap())
+                .collect();
+            let r = fold_band_rs(6, rs).unwrap();
+            completion_from_r(&r).unwrap().0
+        };
+        let want = exact_svd(&w).unwrap().sigma;
+        for i in 0..6 {
+            assert!((whole[i] - want[i]).abs() < 1e-9 * want[0], "{i}");
+            assert!((banded[i] - want[i]).abs() < 1e-9 * want[0], "{i}");
+        }
+    }
+
+    #[test]
+    fn completion_reconstructs_v() {
+        // V = W · P_k Σ_k⁻¹ must reproduce W's right singular vectors.
+        let w = rand(80, 5, 3);
+        let rs: Vec<Matrix> = band_ranges(80, 32)
+            .into_iter()
+            .map(|(lo, hi)| band_r_factor(&w.slice_rows(lo, hi)).unwrap())
+            .collect();
+        let r = fold_band_rs(5, rs).unwrap();
+        let (sigma, p) = completion_from_r(&r).unwrap();
+        let mv = completion_mv(&sigma, &p, 3, 1e-12).unwrap();
+        let v = crate::linalg::matmul(&w, &mv).unwrap();
+        let exact = exact_svd(&w).unwrap();
+        for j in 0..3 {
+            // up to sign
+            let dot: f64 = (0..5).map(|i| v.get(i, j) * exact.v.get(i, j)).sum();
+            let sign = if dot < 0.0 { -1.0 } else { 1.0 };
+            for i in 0..5 {
+                assert!(
+                    (v.get(i, j) - sign * exact.v.get(i, j)).abs() < 1e-9,
+                    "v[{i},{j}]"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_mode_parse_roundtrip() {
+        assert_eq!(ReduceMode::parse("star").unwrap(), ReduceMode::Star);
+        assert_eq!(ReduceMode::parse("tree").unwrap(), ReduceMode::Tree);
+        assert!(ReduceMode::parse("ring").is_err());
+        assert_eq!(ReduceMode::default(), ReduceMode::Tree);
+        assert_eq!(ReduceMode::Tree.name(), "tree");
+    }
+
+    #[test]
+    fn mem_gauge_tracks_peak_and_cap() {
+        let mut g = MemGauge::default();
+        g.track(100).unwrap();
+        g.track(50).unwrap();
+        g.release(100);
+        assert_eq!(g.current(), 50);
+        assert_eq!(g.peak(), 150);
+        g.set_cap(60);
+        assert!(g.track(5).is_ok());
+        let err = g.track(100).unwrap_err().to_string();
+        assert!(err.contains("memory cap exceeded"), "{err}");
+        assert_eq!(matrix_bytes(&Matrix::zeros(3, 4)), 96);
+    }
+}

@@ -17,8 +17,16 @@ pub struct SvdResult {
     pub k: usize,
     /// Descending singular values (length k).
     pub sigma: Vec<f64>,
-    /// Right singular vectors, `n x k` (None when `compute_v = false`).
+    /// Right singular vectors, `n x k` (None when `compute_v = false`, or
+    /// when the run opted out of leader-side materialization — see
+    /// [`SvdResult::v_shards`]).
     pub v: Option<Matrix>,
+    /// Staged `V` row shards on disk (randomized route): the distributed
+    /// reduce writes V band by band, so a run with `materialize_v = false`
+    /// still delivers V without the leader ever holding an n-sized matrix.
+    pub v_shards: Option<ShardSet>,
+    /// Number of `V` row shards (band order = row order).
+    pub v_bands: usize,
     /// U shards on disk (one per worker chunk, row order preserved).
     pub u_shards: ShardSet,
     /// Number of U shards.
@@ -43,12 +51,21 @@ impl SvdResult {
         crate::serve::store::save_model(self, dir, seed)
     }
 
+    /// Dense right singular vectors: the in-memory `v` when materialized,
+    /// otherwise merged from the staged `V` row shards.
+    pub fn v_matrix(&self) -> Result<Matrix> {
+        if let Some(v) = &self.v {
+            return Ok(v.clone());
+        }
+        match &self.v_shards {
+            Some(set) if self.v_bands > 0 => set.merge_to_matrix(self.v_bands),
+            _ => Err(crate::error::Error::Other("V not computed".into())),
+        }
+    }
+
     /// `A_k = U diag(sigma) V^T` reconstruction (requires V; small m only).
     pub fn reconstruct(&self) -> Result<Matrix> {
-        let v = self
-            .v
-            .as_ref()
-            .ok_or_else(|| crate::error::Error::Other("V not computed".into()))?;
+        let v = self.v_matrix()?;
         let u = self.u_matrix()?;
         let us = u.scale_cols(&self.sigma)?;
         crate::linalg::matmul(&us, &v.t())

@@ -397,6 +397,10 @@ fn run_update(
         // like a factorization's, under the builder's knobs.
         sched: opts.sched,
         shard_epoch: 0,
+        // Update passes reduce k'-scale partials only; the sequential fold
+        // keeps generation N+1 bitwise-reproducible against pre-tree runs.
+        reduce: crate::svd::reduce::ReduceMode::Star,
+        band_rows: 0,
     };
     LOG.info(&format!(
         "update gen {}: {m0}x{n} k={k} + {m1} rows (residual sketch {r}), executor={}",

@@ -4,6 +4,7 @@
 //! builder API with a [`ClusterExecutor`] and verified against the local
 //! executor.
 
+use tallfat::cluster::leader::PhaseSpec;
 use tallfat::cluster::proto::PhaseKind;
 use tallfat::cluster::{ClusterExecutor, DistributedLeader};
 use tallfat::config::InputFormat;
@@ -183,22 +184,24 @@ fn distributed_ata_phase() {
     let handles = spawn_workers(&addr, 2);
     let mut leader = DistributedLeader::accept(&addr, 2).unwrap();
     // Chunk-grained: 6 chunks over 2 workers, scheduled dynamically.
+    let w = d.join("w").to_string_lossy().into_owned();
+    let zero = Matrix::zeros(0, 0);
     let (rows, partials, stats) = leader
-        .run_phase(
-            PhaseKind::Ata,
-            &input,
-            &d.join("w").to_string_lossy(),
-            64,
-            0,
-            12,
-            12,
-            InputFormat::Bin,
-            0,
-            &Matrix::zeros(0, 0),
-            &Matrix::zeros(0, 0),
-            6,
-            0,
-        )
+        .run_phase(&PhaseSpec {
+            kind: PhaseKind::Ata,
+            input: &input,
+            work_dir: &w,
+            block: 64,
+            seed: 0,
+            kp: 12,
+            cols: 12,
+            shard_format: InputFormat::Bin,
+            shard_epoch: 0,
+            operand: &zero,
+            means: &zero,
+            chunk_total: 6,
+            max_retries: 0,
+        })
         .unwrap();
     leader.shutdown().unwrap();
     for h in handles {
@@ -222,21 +225,23 @@ fn worker_failure_is_reported_to_leader() {
     let handles = spawn_workers(&addr, 1);
     let mut leader = DistributedLeader::accept(&addr, 1).unwrap();
     let bogus = InputSpec::csv("/nonexistent/a.csv".to_string());
-    let r = leader.run_phase(
-        PhaseKind::Ata,
-        &bogus,
-        &d.join("w").to_string_lossy(),
-        64,
-        0,
-        4,
-        4,
-        InputFormat::Bin,
-        0,
-        &Matrix::zeros(0, 0),
-        &Matrix::zeros(0, 0),
-        1,
-        1,
-    );
+    let w = d.join("w").to_string_lossy().into_owned();
+    let zero = Matrix::zeros(0, 0);
+    let r = leader.run_phase(&PhaseSpec {
+        kind: PhaseKind::Ata,
+        input: &bogus,
+        work_dir: &w,
+        block: 64,
+        seed: 0,
+        kp: 4,
+        cols: 4,
+        shard_format: InputFormat::Bin,
+        shard_epoch: 0,
+        operand: &zero,
+        means: &zero,
+        chunk_total: 1,
+        max_retries: 1,
+    });
     let err = r.expect_err("leader must surface the worker failure").to_string();
     assert!(err.contains("chunk 0"), "error should name the chunk: {err}");
     assert!(err.contains("2 attempts"), "error should count attempts: {err}");

@@ -8,10 +8,10 @@ use tallfat::cluster::ClusterExecutor;
 use tallfat::io::dataset::{gen_exact, Spectrum};
 use tallfat::io::InputSpec;
 use tallfat::linalg::Matrix;
-use tallfat::svd::{LocalExecutor, Svd, SvdResult};
+use tallfat::svd::{LocalExecutor, ReduceMode, Svd, SvdResult};
 
 mod harness;
-use harness::{free_addr, spawn_flaky_worker, spawn_workers};
+use harness::{free_addr, spawn_flaky_worker, spawn_reduce_flaky_worker, spawn_workers};
 
 fn dir(name: &str) -> std::path::PathBuf {
     let d = std::env::temp_dir().join("tallfat_parity_it").join(name);
@@ -270,6 +270,153 @@ fn late_joining_worker_preserves_parity() {
         .run()
         .unwrap();
     assert_parity(&local, &dist, 5);
+}
+
+/// The escape hatch still works end to end: with `--reduce star` both
+/// executors fall back to the ship-everything fold and must still agree
+/// with each other to the same tolerances as the default tree mode.
+#[test]
+fn star_mode_parity_across_executors() {
+    let d = dir("star");
+    let input = fixture(&d, 450, 24, 6, 0.005, 38);
+
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 3);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 6, false)
+        .reduce(ReduceMode::Star)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let mut local_exec = LocalExecutor::new(3);
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 6, false)
+        .reduce(ReduceMode::Star)
+        .executor(&mut local_exec)
+        .run()
+        .unwrap();
+    assert_parity(&local, &dist, 6);
+}
+
+/// Fault injection in the *reduce* rounds: one of three workers completes
+/// its chunks (holding its partials as tree leaves), then dies the moment
+/// the first merge/fetch frame reaches it — its held leaves are gone. The
+/// leader must restart the phase attempt on the survivors and the run must
+/// still reach Σ/V/U parity with the local executor.
+#[test]
+fn worker_killed_mid_reduce_round_still_reaches_parity() {
+    let d = dir("killed_reduce");
+    let input = fixture(&d, 450, 24, 6, 0.005, 37);
+
+    let addr = free_addr();
+    let survivors = spawn_workers(&addr, 2);
+    let flaky = spawn_reduce_flaky_worker(&addr);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+    let dist = build(&input, d.join("dist").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    assert!(cluster.workers() < 3, "the reduce-flaky worker should have been fenced");
+    cluster.shutdown().unwrap();
+    for h in survivors {
+        h.join().unwrap();
+    }
+    flaky.join().unwrap();
+
+    let mut local_exec = LocalExecutor::new(3);
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 6, false)
+        .executor(&mut local_exec)
+        .run()
+        .unwrap();
+    assert_parity(&local, &dist, 6);
+}
+
+/// The tentpole acceptance gate: a factorization whose star-mode leader
+/// state cannot fit under a hard memory cap must *fail* in star mode and
+/// *succeed* in tree mode under the same cap — with the leader's tracked
+/// reduce-state peak staying under the cap and `V` delivered as staged row
+/// shards, never materialized leader-side. The factors must still match a
+/// local oracle run.
+#[test]
+fn tree_reduce_completes_under_memory_cap_where_star_cannot() {
+    let d = dir("memcap");
+    let input = fixture(&d, 4000, 96, 8, 0.001, 39);
+    const CAP: u64 = 64 * 1024;
+    // power_iters stays 0: the power rounds' extra passes would ship
+    // operands star-style regardless of the reduce plan.
+    // Star partials for the W pass alone are chunks x (96 x 14 x 8B)
+    // ~ 129 KiB with 12 chunks — over the cap by construction. Adaptive
+    // re-planning is pinned off: the cap math (and the bitwise oracle
+    // comparison) needs the static 12-chunk plan on every run.
+
+    // Star route under the cap: must fail, naming the cap.
+    {
+        let addr = free_addr();
+        let handles = spawn_workers(&addr, 3);
+        let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+        cluster.leader_mut().set_mem_cap(CAP);
+        let r = build(&input, d.join("star").to_string_lossy().into_owned(), 8, false)
+            .reduce(ReduceMode::Star)
+            .adaptive_chunks(false)
+            .executor(&mut cluster)
+            .run();
+        let err = match r {
+            Ok(_) => panic!("star reduce must exceed a 64 KiB leader cap"),
+            Err(e) => e.to_string(),
+        };
+        assert!(err.contains("memory cap exceeded"), "unexpected error: {err}");
+        cluster.shutdown().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    // Tree route under the same cap: must complete, with the leader peak
+    // actually measured under the cap.
+    let addr = free_addr();
+    let handles = spawn_workers(&addr, 3);
+    let mut cluster = ClusterExecutor::accept(&addr, 3).unwrap();
+    cluster.leader_mut().set_mem_cap(CAP);
+    let dist = build(&input, d.join("tree").to_string_lossy().into_owned(), 8, false)
+        .reduce(ReduceMode::Tree)
+        .band_rows(32)
+        .materialize_v(false)
+        .adaptive_chunks(false)
+        .executor(&mut cluster)
+        .run()
+        .unwrap();
+    let peak = cluster.mem_peak();
+    assert!(peak > 0, "gauge never saw reduce state");
+    assert!(peak <= CAP, "tree leader peak {peak} bytes exceeds the {CAP} byte cap");
+    cluster.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // V was never materialized leader-side: it arrives as staged shards.
+    assert!(dist.v.is_none(), "materialize_v(false) still produced a dense V");
+    assert!(dist.v_shards.is_some() && dist.v_bands > 0, "V shards missing");
+
+    // Oracle: local run, same seed, same band geometry.
+    let local = build(&input, d.join("local").to_string_lossy().into_owned(), 8, false)
+        .band_rows(32)
+        .adaptive_chunks(false)
+        .run()
+        .unwrap();
+    for i in 0..8 {
+        let rel = (local.sigma[i] - dist.sigma[i]).abs() / local.sigma[i].max(1e-300);
+        assert!(rel < 1e-12, "sigma[{i}]: {} vs {}", local.sigma[i], dist.sigma[i]);
+    }
+    let vl = local.v_matrix().unwrap();
+    let vd = dist.v_matrix().unwrap();
+    assert_cols_match_up_to_sign(&vl, &vd, 1e-9, "memcap V");
+    let ul = local.u_matrix().unwrap();
+    let ud = dist.u_matrix().unwrap();
+    assert_cols_match_up_to_sign(&ul, &ud, 1e-9, "memcap U");
 }
 
 /// The two mathematical routes agree: on a small dense matrix whose rank

@@ -1,13 +1,14 @@
 //! Shared scaffolding for leader/worker integration tests: ephemeral
-//! ports, in-process worker threads speaking the real TCP protocol, and a
-//! fault-injection worker that dies mid-pass.
+//! ports, in-process worker threads speaking the real TCP protocol, and
+//! fault-injection workers that die mid-pass or mid-reduce.
 
 use std::net::TcpStream;
 use std::sync::Arc;
 use tallfat::backend::native::NativeBackend;
 use tallfat::backend::BackendRef;
-use tallfat::cluster::proto::{ToLeader, ToWorker, VERSION};
+use tallfat::cluster::proto::{ToLeader, ToWorker, CAP_CODEC, CAP_HOLD, VERSION};
 use tallfat::cluster::worker::{self, execute_assignment, PhaseConfig};
+use tallfat::linalg::Matrix;
 
 /// Pick an ephemeral port by probing.
 pub fn free_addr() -> String {
@@ -47,6 +48,9 @@ pub fn spawn_workers(addr: &str, n: usize) -> Vec<std::thread::JoinHandle<()>> {
 /// chunk assignments, then *dies* (drops its connection) the moment the
 /// next chunk is assigned — i.e. mid-pass, with a chunk in flight that the
 /// leader must requeue onto the survivors.
+///
+/// It greets with `caps: 0` — the old-binary shape: the leader must treat
+/// it as a ship-partials worker even in tree-reduce mode (mixed fleet).
 #[allow(dead_code)]
 pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::JoinHandle<()> {
     let addr = addr.to_string();
@@ -55,7 +59,7 @@ pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::Jo
         stream.set_nodelay(true).ok();
         {
             let mut w: &TcpStream = &stream;
-            ToLeader::Hello { version: VERSION }.write(&mut w).unwrap();
+            ToLeader::Hello { version: VERSION, caps: 0 }.write(&mut w).unwrap();
         }
         let backend: BackendRef = Arc::new(NativeBackend::new());
         let mut phase: Option<PhaseConfig> = None;
@@ -94,6 +98,75 @@ pub fn spawn_flaky_worker(addr: &str, complete_chunks: usize) -> std::thread::Jo
                         return;
                     }
                     done += 1;
+                }
+                // A caps-0 worker must never be asked to reduce; dying on
+                // the protocol violation is the loudest possible answer.
+                ToWorker::RMerge { .. } | ToWorker::RFetch { .. } | ToWorker::RWriteV { .. } => {
+                    panic!("leader sent a reduce frame to a caps-0 worker")
+                }
+            }
+        }
+    })
+}
+
+/// Spawn one worker that advertises the hold capability, completes every
+/// chunk assignment correctly (holding partials as tree-reduce leaves the
+/// way a real worker does — i.e. shipping an empty `ChunkDone`), then
+/// *dies* the moment the first reduce frame (`RMerge` / `RFetch` /
+/// `RWriteV`) arrives — mid-reduce-round, with its held leaves lost. The
+/// leader must restart the phase attempt on the survivors.
+#[allow(dead_code)]
+pub fn spawn_reduce_flaky_worker(addr: &str) -> std::thread::JoinHandle<()> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        let mut stream = connect_retrying(&addr);
+        stream.set_nodelay(true).ok();
+        {
+            let mut w: &TcpStream = &stream;
+            ToLeader::Hello { version: VERSION, caps: CAP_HOLD | CAP_CODEC }.write(&mut w).unwrap();
+        }
+        let backend: BackendRef = Arc::new(NativeBackend::new());
+        let mut phase: Option<PhaseConfig> = None;
+        loop {
+            let msg = match ToWorker::read(&mut stream) {
+                Ok(m) => m,
+                Err(_) => return,
+            };
+            match &msg {
+                ToWorker::Shutdown => return,
+                ToWorker::Phase { .. } => {
+                    phase = Some(PhaseConfig::from_msg(&msg).unwrap());
+                }
+                ToWorker::Assign { phase: pid, chunk, trace: _ } => {
+                    let cfg = phase.as_ref().expect("assign before phase setup");
+                    assert_eq!(cfg.id, *pid, "assign for a phase we never saw");
+                    let (rows, partial) =
+                        execute_assignment(&backend, cfg, *chunk as usize).unwrap();
+                    // Hold mode: the leaves stay worker-side (here: are
+                    // dropped — we die before anyone can fetch them).
+                    let wire = if cfg.hold && partial.rows() > 0 {
+                        Matrix::zeros(0, 0)
+                    } else {
+                        partial
+                    };
+                    let reply = ToLeader::ChunkDone {
+                        phase: *pid,
+                        chunk: *chunk,
+                        rows,
+                        decode_us: 0,
+                        compute_us: 0,
+                        encode_us: 0,
+                        partial: wire,
+                    };
+                    let mut w: &TcpStream = &stream;
+                    if reply.write(&mut w).is_err() {
+                        return;
+                    }
+                }
+                // The injected fault: die with held leaves in play the
+                // moment the leader starts a reduce round through us.
+                ToWorker::RMerge { .. } | ToWorker::RFetch { .. } | ToWorker::RWriteV { .. } => {
+                    return;
                 }
             }
         }
