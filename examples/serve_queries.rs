@@ -23,8 +23,9 @@ use tallfat::util::Args;
 
 fn post_query(addr: &str, body: &str) -> String {
     let mut s = TcpStream::connect(addr).unwrap();
+    // `Connection: close` keeps read_to_string finite under keep-alive.
     let req = format!(
-        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     s.write_all(req.as_bytes()).unwrap();
@@ -154,12 +155,12 @@ fn main() -> tallfat::Result<()> {
 
     // ---- 6. metrics + oracle cross-check ---------------------------------
     let mut s = TcpStream::connect(&addr).unwrap();
-    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
     let mut metrics = String::new();
     s.read_to_string(&mut metrics).unwrap();
-    // third accepted connection was the /model probe below
+    // fifth served request hits max_requests and stops the server
     let mut s = TcpStream::connect(&addr).unwrap();
-    s.write_all(b"GET /model HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    s.write_all(b"GET /model HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
     let mut _drain = String::new();
     let _ = s.read_to_string(&mut _drain);
     let _ = srv.join();

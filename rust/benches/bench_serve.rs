@@ -1,27 +1,40 @@
-//! S1 — serve-path load generation: QPS and latency of the HTTP query
-//! engine under concurrent clients, across micro-batch windows.
+//! S1 — serve-plane saturation: open-loop qps ramp against the shared
+//! connection runtime, locating the knee and proving graceful degradation.
 //!
 //! Builds (or reuses) a rank-16 model of a 20,000 x 256 synthetic matrix,
-//! boots the `ModelServer` on an ephemeral port, and hammers it with
-//! concurrent connections issuing a project/similar mix. The batching
-//! claim being measured: a wider coalescing window trades a little latency
-//! for fewer, larger backend matmuls on the similarity scan.
+//! boots the `ModelServer` on an ephemeral port, then offers load in an
+//! *open loop*: each stage schedules requests at a fixed qps regardless of
+//! completions, and latency is measured from the scheduled send time, so
+//! queueing delay is charged to the server (no coordinated omission).
+//! Clients hold keep-alive connections and read Content-Length-framed
+//! replies. The claims being measured:
+//!
+//! * below the knee, p50/p99 stay flat while achieved qps tracks offered;
+//! * past the knee, the server degrades *gracefully* — overload surfaces
+//!   as explicit `503` + `Retry-After` JSON sheds, never as connection
+//!   resets or stuck sockets (asserted per request);
+//! * under forced overload (`max_inflight=1`, `max_queue=1`) every failed
+//!   request is a well-formed shed and `/metrics` accounts for each one
+//!   in `tallfat_net_shed_total`.
+//!
+//! `TALLFAT_BENCH_SMOKE=1` shrinks the model and the ramp so CI can
+//! exercise the whole path (including `BENCH_serve.json`) in seconds.
 
 mod common;
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 use tallfat::backend::native::NativeBackend;
+use tallfat::net::NetOptions;
 use tallfat::rng::Gaussian;
-use tallfat::serve::{BatchOptions, Json, ModelServer, ModelStore, QueryEngine, ServeOptions};
+use tallfat::serve::{
+    BatchOptions, EngineHandle, Json, ModelServer, ModelStore, QueryEngine, ServeOptions,
+};
 use tallfat::svd::Svd;
 
-const M: usize = 20_000;
-const N: usize = 256;
-const K: usize = 16;
 const CLIENTS: usize = 8;
-const REQS_PER_CLIENT: usize = 40;
 
 fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     if sorted_ms.is_empty() {
@@ -31,29 +44,222 @@ fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     sorted_ms[idx.min(sorted_ms.len() - 1)]
 }
 
-fn post_query(addr: &str, body: &str) -> String {
-    let mut s = TcpStream::connect(addr).unwrap();
-    let req = format!(
-        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-        body.len()
-    );
-    s.write_all(req.as_bytes()).unwrap();
-    let mut resp = String::new();
-    s.read_to_string(&mut resp).unwrap();
-    resp
+/// One parsed HTTP reply off a keep-alive connection.
+struct Reply {
+    status: u16,
+    retry_after: bool,
+    body: String,
 }
 
-fn ensure_model(dir: &std::path::Path) -> std::path::PathBuf {
-    let model_dir = dir.join(format!("model_{M}x{N}_k{K}"));
+/// What one offered request turned into.
+enum Outcome {
+    Reply(Reply),
+    /// Reset, refused, or torn mid-reply — exactly what graceful
+    /// degradation promises never happens.
+    Transport(String),
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write `req`, read one framed reply; returns the stream when the server
+/// kept the connection open.
+fn exchange(
+    mut s: TcpStream,
+    req: &[u8],
+) -> std::result::Result<(Reply, Option<TcpStream>), String> {
+    s.write_all(req).map_err(|e| format!("write: {e}"))?;
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        let mut chunk = [0u8; 8192];
+        match s.read(&mut chunk) {
+            Ok(0) => return Err("closed before reply head".into()),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(format!("read head: {e}")),
+        }
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).map_err(|_| "non-UTF-8 head".to_string())?;
+    let mut lines = head.lines();
+    let status: u16 = lines
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| "bad status line".to_string())?;
+    let mut content_length: Option<usize> = None;
+    let mut retry_after = false;
+    let mut close = false;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().ok();
+            } else if name.eq_ignore_ascii_case("retry-after") {
+                retry_after = true;
+            } else if name.eq_ignore_ascii_case("connection") && value.eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    let len = content_length.ok_or_else(|| "reply without Content-Length".to_string())?;
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = [0u8; 8192];
+        match s.read(&mut chunk) {
+            Ok(0) => return Err("closed mid-body".into()),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(format!("read body: {e}")),
+        }
+    }
+    body.truncate(len);
+    let body = String::from_utf8(body).map_err(|_| "non-UTF-8 body".to_string())?;
+    Ok((Reply { status, retry_after, body }, (!close).then_some(s)))
+}
+
+/// A keep-alive client: reuses one connection, reconnects when the server
+/// closed it between requests (retrying the send once — the server never
+/// saw it).
+struct HttpClient {
+    addr: String,
+    conn: Option<TcpStream>,
+}
+
+impl HttpClient {
+    fn new(addr: &str) -> HttpClient {
+        HttpClient { addr: addr.to_string(), conn: None }
+    }
+
+    fn connect(&self) -> std::result::Result<TcpStream, String> {
+        let s = TcpStream::connect(&self.addr).map_err(|e| format!("connect: {e}"))?;
+        s.set_nodelay(true).ok();
+        Ok(s)
+    }
+
+    fn request(&mut self, req: &[u8]) -> Outcome {
+        let reused = self.conn.is_some();
+        let stream = match self.conn.take().map(Ok).unwrap_or_else(|| self.connect()) {
+            Ok(s) => s,
+            Err(e) => return Outcome::Transport(e),
+        };
+        match exchange(stream, req) {
+            Ok((reply, keep)) => {
+                self.conn = keep;
+                Outcome::Reply(reply)
+            }
+            // A reused connection the server reaped between requests looks
+            // like a failed write / empty read; one fresh retry is safe.
+            Err(_) if reused => match self.connect() {
+                Ok(s) => match exchange(s, req) {
+                    Ok((reply, keep)) => {
+                        self.conn = keep;
+                        Outcome::Reply(reply)
+                    }
+                    Err(e) => Outcome::Transport(e),
+                },
+                Err(e) => Outcome::Transport(e),
+            },
+            Err(e) => Outcome::Transport(e),
+        }
+    }
+}
+
+fn post_query_wire(body: &str) -> Vec<u8> {
+    format!("POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+        .into_bytes()
+}
+
+struct StageResult {
+    offered_qps: f64,
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    other: u64,
+    transport: u64,
+    achieved_qps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+/// Offer `qps` for `dur` across `CLIENTS` keep-alive connections; latency
+/// is measured from each request's *scheduled* time.
+fn run_stage(addr: &str, qps: f64, dur: Duration, requests: &[Vec<u8>]) -> StageResult {
+    let total = (qps * dur.as_secs_f64()).round().max(1.0) as usize;
+    let epoch = Instant::now() + Duration::from_millis(50);
+    let per_client: Vec<(Vec<f64>, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|c| {
+                scope.spawn(move || {
+                    let mut client = HttpClient::new(addr);
+                    let mut lats = Vec::new();
+                    let (mut ok, mut shed, mut other, mut transport) = (0u64, 0u64, 0u64, 0u64);
+                    let mut j = c;
+                    while j < total {
+                        let sched = epoch + Duration::from_secs_f64(j as f64 / qps);
+                        let now = Instant::now();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        match client.request(&requests[j % requests.len()]) {
+                            Outcome::Reply(r) => {
+                                lats.push(sched.elapsed().as_secs_f64() * 1e3);
+                                match r.status {
+                                    200 => ok += 1,
+                                    503 => {
+                                        assert!(r.retry_after, "503 without Retry-After");
+                                        shed += 1;
+                                    }
+                                    _ => other += 1,
+                                }
+                            }
+                            Outcome::Transport(_) => transport += 1,
+                        }
+                        j += CLIENTS;
+                    }
+                    (lats, ok, shed, other, transport)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let wall = epoch.elapsed();
+    let mut lats: Vec<f64> = Vec::new();
+    let (mut ok, mut shed, mut other, mut transport) = (0u64, 0u64, 0u64, 0u64);
+    for (l, o, s, x, t) in per_client {
+        lats.extend(l);
+        ok += o;
+        shed += s;
+        other += x;
+        transport += t;
+    }
+    lats.sort_by(f64::total_cmp);
+    StageResult {
+        offered_qps: qps,
+        sent: total as u64,
+        ok,
+        shed,
+        other,
+        transport,
+        achieved_qps: common::rate(ok + shed + other, wall),
+        p50_ms: percentile(&lats, 50.0),
+        p99_ms: percentile(&lats, 99.0),
+    }
+}
+
+fn ensure_model(dir: &std::path::Path, m: usize, n: usize, k: usize) -> std::path::PathBuf {
+    let model_dir = dir.join(format!("model_{m}x{n}_k{k}"));
     if tallfat::serve::resolve_current(&model_dir).is_ok() {
         eprintln!("[reuse] {}", model_dir.display());
         return model_dir;
     }
-    let input = common::ensure_dataset(&dir.to_path_buf(), "serve", M, N, true);
-    eprintln!("[build] factorizing {M}x{N} k={K}...");
+    let input = common::ensure_dataset(&dir.to_path_buf(), "serve", m, n, true);
+    eprintln!("[build] factorizing {m}x{n} k={k}...");
     let _ = Svd::over(&input)
         .unwrap()
-        .rank(K)
+        .rank(k)
         .oversample(8)
         .workers(4)
         .block(256)
@@ -65,84 +271,234 @@ fn ensure_model(dir: &std::path::Path) -> std::path::PathBuf {
     model_dir
 }
 
+fn bind_server(model_dir: &std::path::Path, opts: &ServeOptions) -> ModelServer {
+    let store = Arc::new(ModelStore::open(model_dir, 8).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+    ModelServer::bind(Arc::new(EngineHandle::fixed(engine)), opts).unwrap()
+}
+
+/// Forced overload: one warm handler plus a one-deep queue, a batching
+/// window that pins the handler, and a burst that must shed. Returns
+/// (requests, ok, shed, shed_total from /metrics).
+fn overload_stage(model_dir: &std::path::Path, requests: &[Vec<u8>]) -> (u64, u64, u64, f64) {
+    let server = bind_server(
+        model_dir,
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            // The window pins the single handler long enough that the
+            // burst below cannot drain through a one-deep queue.
+            batch: BatchOptions { window: Duration::from_millis(50), max_batch: 64 },
+            net: NetOptions { max_inflight: 1, max_queue: 1, ..NetOptions::default() },
+            ..ServeOptions::default()
+        },
+    );
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    const BURST_CLIENTS: usize = 16;
+    const BURST_REQS: usize = 4;
+    let per_client: Vec<(u64, u64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..BURST_CLIENTS)
+            .map(|c| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let (mut ok, mut shed) = (0u64, 0u64);
+                    for r in 0..BURST_REQS {
+                        let mut client = HttpClient::new(&addr);
+                        match client.request(&requests[(c + r) % requests.len()]) {
+                            Outcome::Reply(reply) if reply.status == 200 => ok += 1,
+                            Outcome::Reply(reply) => {
+                                // Graceful degradation, per response: an
+                                // explicit, parseable 503 shed.
+                                assert_eq!(reply.status, 503, "unexpected status");
+                                assert!(reply.retry_after, "503 without Retry-After");
+                                let line = Json::parse(reply.body.trim())
+                                    .expect("shed body must be valid JSON");
+                                assert_eq!(
+                                    line.get("error").and_then(Json::as_str),
+                                    Some("overloaded"),
+                                    "{line:?}"
+                                );
+                                assert!(
+                                    line.get("retry_after_s").and_then(Json::as_f64).is_some(),
+                                    "{line:?}"
+                                );
+                                shed += 1;
+                            }
+                            Outcome::Transport(e) => panic!("transport error under overload: {e}"),
+                        }
+                    }
+                    (ok, shed)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let (mut ok, mut shed) = (0u64, 0u64);
+    for (o, s) in per_client {
+        ok += o;
+        shed += s;
+    }
+    assert!(shed > 0, "burst of {} never shed", BURST_CLIENTS * BURST_REQS);
+
+    // The registry publishes every event-loop pass, so by the time this
+    // inline GET is answered the burst's sheds are on the board.
+    let mut client = HttpClient::new(&addr);
+    let metrics = match client
+        .request(b"GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n")
+    {
+        Outcome::Reply(r) => r.body,
+        Outcome::Transport(e) => panic!("metrics scrape failed: {e}"),
+    };
+    let shed_total: f64 = metrics
+        .lines()
+        .filter(|l| l.starts_with("tallfat_net_shed_total{") && l.contains("plane=\"serve\""))
+        .filter_map(|l| l.rsplit(' ').next().and_then(|v| v.parse::<f64>().ok()))
+        .sum();
+    assert!(shed_total > 0.0, "net_shed_total missing from /metrics:\n{metrics}");
+
+    handle.shutdown();
+    srv.join().unwrap();
+    ((BURST_CLIENTS * BURST_REQS) as u64, ok, shed, shed_total)
+}
+
 fn main() {
+    let smoke = common::smoke();
+    let (m, n, k) = if smoke { (2_000, 64, 8) } else { (20_000, 256, 16) };
+    let (ramp, stage_dur): (Vec<f64>, Duration) = if smoke {
+        (vec![50.0, 200.0], Duration::from_millis(600))
+    } else {
+        (vec![100.0, 200.0, 400.0, 800.0, 1600.0, 3200.0], Duration::from_secs(3))
+    };
     let dir = common::bench_dir("serve");
-    let model_dir = ensure_model(&dir);
+    let model_dir = ensure_model(&dir, m, n, k);
+
+    // A project/similar mix over a handful of pre-rendered wire requests.
     let gauss = Gaussian::new(99);
+    let mut row = vec![0.0f64; n];
+    let requests: Vec<Vec<u8>> = (0..16)
+        .map(|i| {
+            gauss.fill_block(&mut row, i as u64, 1, n, 1.0);
+            let row_json = Json::from_f64s(&row).render();
+            let body = if i % 2 == 0 {
+                format!("{{\"op\":\"similar\",\"row\":{row_json},\"k\":10}}\n")
+            } else {
+                format!("{{\"op\":\"project\",\"row\":{row_json}}}\n")
+            };
+            post_query_wire(&body)
+        })
+        .collect();
 
     common::header(&format!(
-        "S1 serve load — {M}x{N} k={K} model, {CLIENTS} clients x {REQS_PER_CLIENT} reqs (project/similar mix)"
+        "S1 serve saturation — {m}x{n} k={k} model, open-loop ramp, {CLIENTS} keep-alive conns"
     ));
     println!(
-        "{:>12} {:>10} {:>10} {:>10} {:>10} {:>10}",
-        "window(ms)", "wall(s)", "qps", "p50(ms)", "p95(ms)", "p99(ms)"
+        "{:>12} {:>12} {:>8} {:>8} {:>8} {:>10} {:>10}",
+        "offered", "achieved", "ok", "shed", "xport", "p50(ms)", "p99(ms)"
     );
 
-    for window_ms in [0u64, 1, 2, 5] {
-        let store = Arc::new(ModelStore::open(&model_dir, 8).unwrap());
-        let engine =
-            Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
-        let total = (CLIENTS * REQS_PER_CLIENT) as u64;
-        let server = ModelServer::bind(
-            Arc::new(tallfat::serve::EngineHandle::fixed(engine)),
-            &ServeOptions {
-                addr: "127.0.0.1:0".into(),
-                batch: BatchOptions {
-                    window: std::time::Duration::from_millis(window_ms),
-                    max_batch: 64,
-                },
-                max_requests: Some(total),
-                ..ServeOptions::default()
-            },
-        )
-        .unwrap();
-        let addr = server.local_addr().unwrap().to_string();
-        let srv = std::thread::spawn(move || server.run().unwrap());
+    let server = bind_server(&model_dir, &ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        batch: BatchOptions { window: Duration::from_millis(1), max_batch: 64 },
+        ..ServeOptions::default()
+    });
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run().unwrap());
 
-        let t0 = std::time::Instant::now();
-        let mut latencies: Vec<f64> = std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..CLIENTS)
-                .map(|c| {
-                    let addr = addr.clone();
-                    let gauss = gauss;
-                    scope.spawn(move || {
-                        let mut lat = Vec::with_capacity(REQS_PER_CLIENT);
-                        let mut row = vec![0.0f64; N];
-                        for r in 0..REQS_PER_CLIENT {
-                            let id = (c * REQS_PER_CLIENT + r) as u64;
-                            gauss.fill_block(&mut row, id, 1, N, 1.0);
-                            let row_json = Json::from_f64s(&row).render();
-                            let body = if r % 2 == 0 {
-                                format!("{{\"op\":\"similar\",\"row\":{row_json},\"k\":10}}\n")
-                            } else {
-                                format!("{{\"op\":\"project\",\"row\":{row_json}}}\n")
-                            };
-                            let t = std::time::Instant::now();
-                            let resp = post_query(&addr, &body);
-                            lat.push(t.elapsed().as_secs_f64() * 1e3);
-                            assert!(resp.contains("200 OK"), "{resp}");
-                        }
-                        lat
-                    })
-                })
-                .collect();
-            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
-        });
-        let wall = t0.elapsed();
-        srv.join().unwrap();
-        latencies.sort_by(f64::total_cmp);
-        println!(
-            "{:>12} {:>10.2} {:>10.0} {:>10.2} {:>10.2} {:>10.2}",
-            window_ms,
-            wall.as_secs_f64(),
-            common::rate(total, wall),
-            percentile(&latencies, 50.0),
-            percentile(&latencies, 95.0),
-            percentile(&latencies, 99.0),
-        );
+    // Warm the pool and the model cache off the record.
+    let mut warm = HttpClient::new(&addr);
+    for req in requests.iter().take(8) {
+        if let Outcome::Transport(e) = warm.request(req) {
+            panic!("warmup failed: {e}");
+        }
     }
+    drop(warm);
+
+    let mut stages: Vec<StageResult> = Vec::new();
+    for &qps in &ramp {
+        let st = run_stage(&addr, qps, stage_dur, &requests);
+        println!(
+            "{:>12.0} {:>12.0} {:>8} {:>8} {:>8} {:>10.2} {:>10.2}",
+            st.offered_qps, st.achieved_qps, st.ok, st.shed, st.transport, st.p50_ms, st.p99_ms
+        );
+        // Graceful degradation along the whole ramp: overload may shed,
+        // but must never reset connections or answer anything else.
+        assert_eq!(st.transport, 0, "transport errors at {qps} qps");
+        assert_eq!(st.other, 0, "non-200/503 responses at {qps} qps");
+        stages.push(st);
+    }
+    handle.shutdown();
+    srv.join().unwrap();
+
+    // The knee: first stage that can no longer track offered load (or
+    // whose p99 blows past 8x the cold stage's).
+    let base_p99 = stages[0].p99_ms.max(0.1);
+    let knee = stages
+        .iter()
+        .find(|s| s.achieved_qps < 0.9 * s.offered_qps || s.p99_ms > 8.0 * base_p99)
+        .map(|s| s.offered_qps);
+    match knee {
+        Some(q) => println!("\nknee: ~{q:.0} qps offered"),
+        None => println!("\nknee: not reached within the ramp"),
+    }
+
+    common::header("S1b forced overload — max_inflight=1, max_queue=1, 64-request burst");
+    let (burst, ok, shed, shed_total) = overload_stage(&model_dir, &requests);
     println!(
-        "\npaper tie-in: U stays sharded on disk (LRU-cached), so the scan cost is\n\
-         amortized across every similarity query coalesced into one batch."
+        "{burst} requests -> {ok} served, {shed} shed (all well-formed 503 JSON); \
+         tallfat_net_shed_total = {shed_total}"
+    );
+
+    let stage_rows: Vec<Json> = stages
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("offered_qps", Json::num(s.offered_qps)),
+                ("achieved_qps", Json::num(s.achieved_qps)),
+                ("sent", Json::num(s.sent as f64)),
+                ("ok", Json::num(s.ok as f64)),
+                ("shed", Json::num(s.shed as f64)),
+                ("transport_errors", Json::num(s.transport as f64)),
+                ("p50_ms", Json::num(s.p50_ms)),
+                ("p99_ms", Json::num(s.p99_ms)),
+            ])
+        })
+        .collect();
+    let out = Json::obj(vec![
+        ("bench", Json::str("serve_saturation")),
+        ("smoke", Json::Bool(smoke)),
+        (
+            "model",
+            Json::obj(vec![
+                ("m", Json::num(m as f64)),
+                ("n", Json::num(n as f64)),
+                ("k", Json::num(k as f64)),
+            ]),
+        ),
+        ("clients", Json::num(CLIENTS as f64)),
+        ("stage_duration_s", Json::num(stage_dur.as_secs_f64())),
+        ("stages", Json::arr(stage_rows)),
+        ("knee_qps", knee.map(Json::num).unwrap_or(Json::Null)),
+        (
+            "overload",
+            Json::obj(vec![
+                ("requests", Json::num(burst as f64)),
+                ("ok", Json::num(ok as f64)),
+                ("shed", Json::num(shed as f64)),
+                ("transport_errors", Json::num(0.0)),
+                ("all_sheds_well_formed", Json::Bool(true)),
+                ("metrics_shed_total", Json::num(shed_total)),
+            ]),
+        ),
+    ]);
+    common::write_json("serve", &out.render());
+
+    println!(
+        "\npaper tie-in: admission control keeps the serve plane inside its\n\
+         provisioned concurrency — past the knee, load sheds explicitly\n\
+         instead of queueing without bound, so p99 under overload stays\n\
+         within the same order as at the knee."
     );
 }

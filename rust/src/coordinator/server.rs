@@ -1,10 +1,13 @@
 //! `serve-metrics`: a dependency-free HTTP endpoint exposing run metrics.
 //!
-//! The paper's cluster story needs the leader to be observable; this is the
-//! minimal honest version — a blocking `TcpListener` loop serving the
-//! shared [`MetricsRegistry`] as Prometheus text exposition. Jobs publish
-//! into the registry; scrapers poll `GET /metrics` (`GET /healthz` is the
-//! liveness probe; anything else is 404, non-GET is 405).
+//! The paper's cluster story needs the leader to be observable; this is
+//! the minimal honest version — the shared event-driven connection runtime
+//! ([`crate::net`]) serving the shared [`MetricsRegistry`] as Prometheus
+//! text exposition. Every route answers *inline* on the event loop (a
+//! metrics endpoint must stay scrapeable even when the process is busy).
+//! Jobs publish into the registry; scrapers poll `GET /metrics`
+//! (`GET /healthz` is the liveness probe; anything else is 404, non-GET
+//! is 405).
 //!
 //! The registry holds two metric families:
 //!
@@ -23,11 +26,11 @@
 //! text rules (`\\`, `\"`, `\n`).
 
 use crate::error::Result;
+use crate::net::http::{HttpRequest, HttpResponse};
+use crate::net::{NetHandler, NetOptions, NetServer};
 use crate::util::{Args, Logger};
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::{Mutex, OnceLock};
+use std::sync::{Arc, Mutex, OnceLock};
 
 static LOG: Logger = Logger::new("metrics-server");
 
@@ -307,76 +310,61 @@ impl MetricsRegistry {
     }
 }
 
-fn handle(mut stream: TcpStream) -> std::io::Result<()> {
-    // Read the request line; drain headers until the blank line.
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let mut hdr = String::new();
-    loop {
-        hdr.clear();
-        if reader.read_line(&mut hdr)? == 0 || hdr == "\r\n" || hdr == "\n" {
-            break;
+/// Route one metrics-plane request (pure, so the table is unit-testable
+/// without sockets).
+fn route(req: &HttpRequest) -> HttpResponse {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/metrics") => {
+            HttpResponse::ok("text/plain; version=0.0.4", MetricsRegistry::global().render())
         }
+        ("GET", "/healthz") => HttpResponse::text(200, "ok\n"),
+        ("GET", _) => HttpResponse::text(404, "unknown route (GET /metrics, GET /healthz)\n"),
+        _ => HttpResponse::text(405, "method not allowed (GET only)\n"),
     }
-    let (status, ctype, body) = match (method.as_str(), path.as_str()) {
-        ("GET", "/metrics") => (
-            "200 OK",
-            "text/plain; version=0.0.4",
-            MetricsRegistry::global().render(),
-        ),
-        ("GET", "/healthz") => ("200 OK", "text/plain", "ok\n".to_string()),
-        ("GET", _) => (
-            "404 Not Found",
-            "text/plain",
-            "unknown route (GET /metrics, GET /healthz)\n".to_string(),
-        ),
-        _ => (
-            "405 Method Not Allowed",
-            "text/plain",
-            "method not allowed (GET only)\n".to_string(),
-        ),
-    };
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
-        body.len(),
-        body
-    );
-    stream.write_all(response.as_bytes())
 }
 
-/// `serve-metrics [--addr host:port] [--once]`.
+/// The metrics plane's [`NetHandler`]: everything answers inline on the
+/// event loop — a metrics endpoint must never sit behind a busy pool.
+struct MetricsHandler;
+
+impl NetHandler for MetricsHandler {
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        route(&req)
+    }
+
+    fn handle_inline(&self, req: &HttpRequest) -> Option<HttpResponse> {
+        Some(route(req))
+    }
+}
+
+/// `serve-metrics [--addr host:port] [--once] [--max-requests N]`, plus
+/// the shared connection-runtime flags (`--max-inflight`, `--max-queue`,
+/// `--idle-timeout-ms`, `--keep-alive`/`--no-keep-alive`).
 ///
-/// `--once` answers a single request and exits (used by the integration
-/// test; production runs loop forever).
+/// `--once` answers a single request and exits; `--max-requests N`
+/// answers N then exits (both used by integration tests; production runs
+/// loop forever).
 pub fn serve_metrics(args: &Args) -> Result<()> {
     let addr = args.str_or("addr", "127.0.0.1:9924");
-    let listener = TcpListener::bind(&addr)?;
-    LOG.info(&format!("metrics on http://{addr}/metrics"));
-    let once = args.flag("once");
-    for stream in listener.incoming() {
-        match stream {
-            Ok(s) => {
-                if let Err(e) = handle(s) {
-                    LOG.warn(&format!("request failed: {e}"));
-                }
-            }
-            Err(e) => LOG.warn(&format!("accept failed: {e}")),
-        }
-        if once {
-            break;
-        }
+    // Everything answers inline, so the pool just needs to exist.
+    let mut nopts =
+        NetOptions { plane: "metrics", max_inflight: 2, ..NetOptions::default() }.with_args(args)?;
+    let max_requests = args.u64_or("max-requests", 0)?;
+    if args.flag("once") {
+        nopts.max_requests = Some(1);
+    } else if max_requests > 0 {
+        nopts.max_requests = Some(max_requests);
     }
-    Ok(())
+    let server = NetServer::bind(&addr, nopts)?;
+    LOG.info(&format!("metrics on http://{}/metrics", server.local_addr()?));
+    server.run(Arc::new(MetricsHandler))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::io::Read;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
 
     #[test]
     fn registry_set_add_get() {
@@ -523,25 +511,30 @@ mod tests {
 
     #[test]
     fn routes_metrics_healthz_404_405() {
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
+        let nopts = NetOptions {
+            plane: "metrics",
+            max_inflight: 2,
+            max_requests: Some(4),
+            ..NetOptions::default()
+        };
+        let server = NetServer::bind("127.0.0.1:0", nopts).unwrap();
+        let addr = server.local_addr().unwrap();
         MetricsRegistry::global().set("test_routing_gauge", 3.0);
-        let server = std::thread::spawn(move || {
-            for _ in 0..4 {
-                let (s, _) = listener.accept().unwrap();
-                handle(s).unwrap();
-            }
-        });
-        let metrics = one_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        let join = std::thread::spawn(move || server.run(Arc::new(MetricsHandler)));
+        let metrics =
+            one_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
         assert!(metrics.contains("200 OK"), "{metrics}");
         assert!(metrics.contains("tallfat_test_routing_gauge 3"), "{metrics}");
-        let health = one_request(&addr, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        let health =
+            one_request(&addr, "GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
         assert!(health.contains("200 OK") && health.contains("ok"), "{health}");
-        let missing = one_request(&addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+        let missing =
+            one_request(&addr, "GET /nope HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
         assert!(missing.contains("404 Not Found"), "{missing}");
-        let post = one_request(&addr, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+        let post =
+            one_request(&addr, "POST /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
         assert!(post.contains("405 Method Not Allowed"), "{post}");
-        server.join().unwrap();
+        join.join().unwrap().unwrap();
     }
 
     #[test]

@@ -6,25 +6,42 @@
 //! `ok` envelope into [`crate::error::Result`]. Everything the
 //! `tallfat daemon-client` CLI can do, in-process callers (including the
 //! scenario harness) do through [`DaemonClient`].
+//!
+//! The transport is HTTP/1.1 keep-alive: the client pools one connection
+//! and reuses it across calls, reconnecting transparently when the daemon
+//! closes it (idle reap, drain, restart). A request that fails on a
+//! pooled connection *before any reply byte arrives* is resent once on a
+//! fresh connection — the daemon never saw it, so the retry cannot
+//! double-execute anything.
 
 use crate::error::{Error, Result};
 use crate::serve::json::Json;
+use crate::util::lock_unpoisoned;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::jobs::JobSpec;
 
-/// A handle on a daemon address. Stateless: every call is one connection
-/// (the transport is `Connection: close`), so clones and threads are free.
-#[derive(Clone, Debug)]
+/// A handle on a daemon address holding one pooled keep-alive connection.
+/// Each clone pools its own socket (sharing one across threads would
+/// interleave request/reply frames), so clones and threads stay free.
+#[derive(Debug)]
 pub struct DaemonClient {
     addr: String,
+    conn: Mutex<Option<TcpStream>>,
+}
+
+impl Clone for DaemonClient {
+    fn clone(&self) -> Self {
+        DaemonClient::new(self.addr.clone())
+    }
 }
 
 impl DaemonClient {
     pub fn new(addr: impl Into<String>) -> Self {
-        DaemonClient { addr: addr.into() }
+        DaemonClient { addr: addr.into(), conn: Mutex::new(None) }
     }
 
     pub fn addr(&self) -> &str {
@@ -38,7 +55,7 @@ impl DaemonClient {
             body.push_str(&line.render());
             body.push('\n');
         }
-        let reply = http_post(&self.addr, "/query", &body)?;
+        let reply = self.http_post("/query", &body)?;
         let mut out = Vec::new();
         for line in reply.lines().filter(|l| !l.trim().is_empty()) {
             out.push(Json::parse(line)?);
@@ -132,6 +149,46 @@ impl DaemonClient {
     pub fn halt(&self) -> Result<Json> {
         expect_ok(self.call(&Json::obj(vec![("op", Json::str("halt"))]))?)
     }
+
+    /// One HTTP exchange on the pooled keep-alive connection, falling back
+    /// to (and pooling) a fresh connection when the daemon closed ours.
+    fn http_post(&self, path: &str, body: &str) -> Result<String> {
+        let request = format!(
+            "POST {path} HTTP/1.1\r\nHost: {}\r\nContent-Type: application/x-ndjson\r\n\
+             Content-Length: {}\r\n\r\n{body}",
+            self.addr,
+            body.len()
+        );
+        let pooled = lock_unpoisoned(&self.conn).take();
+        let reply = match pooled {
+            Some(stream) => match read_reply(stream, request.as_bytes()) {
+                Ok(r) => r,
+                // The daemon closed the pooled connection between calls,
+                // before this request reached a handler; resend once.
+                Err(ReplyErr::Stale(_)) => self.fresh_reply(&request)?,
+                Err(ReplyErr::Fatal(e)) => return Err(e),
+            },
+            None => self.fresh_reply(&request)?,
+        };
+        *lock_unpoisoned(&self.conn) = reply.reusable;
+        if !reply.status.contains(" 200 ") {
+            return Err(Error::Other(format!(
+                "daemon replied `{}`: {}",
+                reply.status,
+                reply.body.trim()
+            )));
+        }
+        Ok(reply.body)
+    }
+
+    fn fresh_reply(&self, request: &str) -> Result<Reply> {
+        let stream = TcpStream::connect(&self.addr)
+            .map_err(|e| Error::Other(format!("connect {}: {e}", self.addr)))?;
+        match read_reply(stream, request.as_bytes()) {
+            Ok(r) => Ok(r),
+            Err(ReplyErr::Stale(e)) | Err(ReplyErr::Fatal(e)) => Err(e),
+        }
+    }
 }
 
 fn expect_ok(reply: Json) -> Result<Json> {
@@ -146,24 +203,92 @@ fn expect_ok(reply: Json) -> Result<Json> {
     Err(Error::Other(msg))
 }
 
-/// One blocking HTTP exchange against the daemon's dependency-free server.
-fn http_post(addr: &str, path: &str, body: &str) -> Result<String> {
-    let mut stream = TcpStream::connect(addr)
-        .map_err(|e| Error::Other(format!("connect {addr}: {e}")))?;
-    let request = format!(
-        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/x-ndjson\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(request.as_bytes())?;
-    let mut reply = String::new();
-    stream.read_to_string(&mut reply)?;
-    let (head, body) = reply
-        .split_once("\r\n\r\n")
-        .ok_or_else(|| Error::Other("malformed HTTP reply (no header terminator)".into()))?;
-    let status = head.lines().next().unwrap_or("");
-    if !status.contains(" 200 ") {
-        return Err(Error::Other(format!("daemon replied `{status}`: {}", body.trim())));
+/// One parsed HTTP reply; `reusable` carries the connection back to the
+/// pool when the server kept it open.
+struct Reply {
+    status: String,
+    body: String,
+    reusable: Option<TcpStream>,
+}
+
+/// Why an exchange failed: `Stale` means no reply byte ever arrived (the
+/// server never saw the request — safe to resend), `Fatal` means the
+/// failure happened mid-exchange and must surface.
+enum ReplyErr {
+    Stale(Error),
+    Fatal(Error),
+}
+
+const MAX_REPLY_HEAD: usize = 64 * 1024;
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write `request`, then read one Content-Length-framed HTTP reply.
+fn read_reply(mut stream: TcpStream, request: &[u8]) -> std::result::Result<Reply, ReplyErr> {
+    if let Err(e) = stream.write_all(request) {
+        // A stale pooled socket surfaces as EPIPE/ECONNRESET on write.
+        return Err(ReplyErr::Stale(e.into()));
     }
-    Ok(body.to_string())
+    let mut buf: Vec<u8> = Vec::with_capacity(4096);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > MAX_REPLY_HEAD {
+            return Err(ReplyErr::Fatal(Error::Other("oversized reply head".into())));
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) if buf.is_empty() => {
+                let msg = "daemon closed the pooled connection".to_string();
+                return Err(ReplyErr::Stale(Error::Other(msg)));
+            }
+            Ok(0) => {
+                return Err(ReplyErr::Fatal(Error::Other("daemon closed mid-reply".into())));
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if buf.is_empty() => return Err(ReplyErr::Stale(e.into())),
+            Err(e) => return Err(ReplyErr::Fatal(e.into())),
+        }
+    };
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return Err(ReplyErr::Fatal(Error::Other("non-UTF-8 reply head".into()))),
+    };
+    let mut lines = head.lines();
+    let status = lines.next().unwrap_or("").to_string();
+    let mut close = !status.starts_with("HTTP/1.1");
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            let value = value.trim();
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.parse().ok();
+            } else if name.eq_ignore_ascii_case("connection") && value.eq_ignore_ascii_case("close")
+            {
+                close = true;
+            }
+        }
+    }
+    let len = match content_length {
+        Some(l) => l,
+        None => return Err(ReplyErr::Fatal(Error::Other("reply without Content-Length".into()))),
+    };
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(ReplyErr::Fatal(Error::Other("daemon closed mid-body".into()))),
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) => return Err(ReplyErr::Fatal(e.into())),
+        }
+    }
+    body.truncate(len);
+    let body = match String::from_utf8(body) {
+        Ok(b) => b,
+        Err(_) => return Err(ReplyErr::Fatal(Error::Other("non-UTF-8 reply body".into()))),
+    };
+    Ok(Reply { status, body, reusable: (!close).then_some(stream) })
 }

@@ -16,13 +16,16 @@
 //!   requeued on failure within a retry budget, and hot-swap the model's
 //!   serving engine on publish. The queue persists in `jobs.manifest`, so
 //!   a queued job survives a daemon restart ([`jobs::JobManager`]).
-//! * [`server`] — the one front door: ND-JSON over the dependency-free
-//!   HTTP of [`crate::serve::http`]. Query lines carry `"model":"name"`
-//!   and route to that entry's batcher; control lines (`register`, `list`,
-//!   `status`, `submit-job`, `job-status`, `drain`, `halt`) drive the
-//!   daemon itself ([`server::Daemon`], the `tallfat daemon` command).
+//! * [`server`] — the one front door: ND-JSON over the shared
+//!   [`crate::net`] connection runtime (event-driven accept loop,
+//!   keep-alive, admission control, idle reaping). Query lines carry
+//!   `"model":"name"` and route to that entry's batcher; control lines
+//!   (`register`, `list`, `status`, `submit-job`, `job-status`, `drain`,
+//!   `halt`) drive the daemon itself ([`server::Daemon`], the
+//!   `tallfat daemon` command); `/healthz` reports admission state.
 //! * [`client`] — [`client::DaemonClient`], the control protocol over the
-//!   same transport (the `tallfat daemon-client` command).
+//!   same transport, reusing one keep-alive connection across calls (the
+//!   `tallfat daemon-client` command).
 //! * [`scenario`] — a declarative chaos harness: a [`scenario::Scenario`]
 //!   names a topology (models), a workload (query clients), a script of
 //!   steps (submit, await, drain, halt, restart), and expectations (zero

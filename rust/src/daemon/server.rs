@@ -1,10 +1,14 @@
 //! The daemon's front door: one listener for every model and for control.
 //!
-//! `tallfatd` speaks the same dependency-free ND-JSON-over-HTTP as
-//! `tallfat serve`, with one addition: query lines carry `"model":"name"`
-//! and are routed to that model's batcher, so a single connection can
-//! interleave queries against the whole fleet. Lines whose `op` is a
-//! control verb drive the daemon itself:
+//! `tallfatd` speaks the same ND-JSON-over-HTTP as `tallfat serve`, on the
+//! same shared connection runtime ([`crate::net`]): event-driven accept,
+//! keep-alive connections, a warm handler pool behind the admission gate
+//! (`--max-inflight`/`--max-queue`; overload answers `503` +
+//! `Retry-After`), and idle-connection reaping. One addition over `serve`:
+//! query lines carry `"model":"name"` and are routed to that model's
+//! batcher, so a single connection can interleave queries against the
+//! whole fleet. Lines whose `op` is a control verb drive the daemon
+//! itself:
 //!
 //! | op           | fields            | effect                               |
 //! |--------------|-------------------|--------------------------------------|
@@ -19,6 +23,8 @@
 //! Batched query lines group *per model* — each model keeps its own
 //! micro-batch coalescing exactly as under standalone `serve` — and a
 //! body's lines are answered in input order regardless of routing.
+//! `GET /healthz` answers inline (never shed) and reports the runtime's
+//! admission state alongside fleet liveness.
 //!
 //! A health poller reloads every model's engine on a short cadence, so
 //! generations published by job workers (or by hand, out-of-process)
@@ -28,22 +34,21 @@
 use crate::backend::BackendRef;
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
+use crate::net::http::{HttpRequest, HttpResponse};
+use crate::net::{NetHandler, NetOptions, NetServer, NetServerHandle};
 use crate::serve::batcher::{BatchOptions, Request};
 use crate::serve::http::{
-    error_json, plan_query, read_body, read_head, record_metrics, render_reply, respond, Expect,
-    Planned,
+    admission_json, error_json, plan_query, record_metrics, render_reply, Expect, Planned,
 };
 use crate::serve::json::Json;
 use crate::serve::query::QueryEngine;
 use crate::serve::store::ModelStore;
 use crate::util::{Args, Logger};
 use std::collections::BTreeMap;
-use std::io::BufReader;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Weak};
-use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::client::DaemonClient;
@@ -66,6 +71,9 @@ pub struct DaemonOptions {
     pub cache_shards: usize,
     /// Engine-reload poll cadence (None = only job-completion reloads).
     pub health_poll: Option<Duration>,
+    /// Connection-runtime knobs (pool size, queue bound, idle reaping,
+    /// keep-alive policy).
+    pub net: NetOptions,
 }
 
 impl Default for DaemonOptions {
@@ -75,6 +83,7 @@ impl Default for DaemonOptions {
             batch: BatchOptions::default(),
             cache_shards: ModelStore::DEFAULT_CACHE_SHARDS,
             health_poll: Some(Duration::from_secs(2)),
+            net: NetOptions::default(),
         }
     }
 }
@@ -83,14 +92,16 @@ pub(crate) struct DaemonState {
     pub(crate) fleet: Arc<Fleet>,
     pub(crate) jobs: JobManager,
     started: Instant,
-    stop: AtomicBool,
     draining: AtomicBool,
+    /// The connection runtime's control handle: `drain`/`halt` shut the
+    /// event loop down through it, `/healthz` reads admission stats.
+    net: NetServerHandle,
 }
 
 /// A bound daemon (separate from [`Daemon::run`] so tests can bind port 0
 /// and read the real address before serving).
 pub struct Daemon {
-    listener: TcpListener,
+    net: NetServer,
     state: Arc<DaemonState>,
 }
 
@@ -105,116 +116,83 @@ impl Daemon {
         let state_dir = state_dir.into();
         let fleet = Arc::new(Fleet::open(&state_dir, backend, opts.cache_shards, opts.batch)?);
         let jobs = JobManager::open(fleet.clone(), &state_dir)?;
-        let listener = TcpListener::bind(&opts.addr)?;
-        // Non-blocking accept so `drain`/`halt` can break the loop.
-        listener.set_nonblocking(true)?;
+        let mut nopts = opts.net.clone();
+        nopts.plane = "daemon";
+        let net = NetServer::bind(&opts.addr, nopts)?;
         let state = Arc::new(DaemonState {
             fleet,
             jobs,
             started: Instant::now(),
-            stop: AtomicBool::new(false),
             draining: AtomicBool::new(false),
+            net: net.handle(),
         });
         if let Some(every) = opts.health_poll {
             spawn_health_poller(Arc::downgrade(&state), every);
         }
-        Ok(Daemon { listener, state })
+        Ok(Daemon { net, state })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
-        Ok(self.listener.local_addr()?)
+        self.net.local_addr()
     }
 
     pub fn fleet(&self) -> &Arc<Fleet> {
         &self.state.fleet
     }
 
-    /// Accept connections until a `drain` or `halt` line stops the daemon.
+    /// Serve connections until a `drain` or `halt` line stops the daemon.
     /// Draining finishes every queued job before returning; halting leaves
     /// them in the manifest for the next start.
     pub fn run(self) -> Result<()> {
-        let mut joins: Vec<JoinHandle<()>> = Vec::new();
-        while !self.state.stop.load(Ordering::SeqCst) {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    // The listener's non-blocking mode can be inherited by
-                    // accepted sockets; handlers want blocking reads.
-                    if stream.set_nonblocking(false).is_err() {
-                        continue;
-                    }
-                    let state = self.state.clone();
-                    match std::thread::Builder::new().name("tallfatd-conn".into()).spawn(
-                        move || {
-                            if let Err(e) = handle_conn(stream, &state) {
-                                LOG.warn(&format!("connection error: {e}"));
-                            }
-                        },
-                    ) {
-                        Ok(j) => joins.push(j),
-                        Err(e) => LOG.warn(&format!("cannot spawn connection handler: {e}")),
-                    }
-                }
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
-                    ) =>
-                {
-                    std::thread::sleep(Duration::from_millis(5));
-                }
-                Err(e) => return Err(e.into()),
-            }
-            joins.retain(|j| !j.is_finished());
-        }
-        // Flush in-flight replies (including the drain/halt ack itself).
-        for j in joins {
-            let _ = j.join();
-        }
-        if self.state.draining.load(Ordering::SeqCst) {
+        let Daemon { net, state } = self;
+        let handler = Arc::new(DaemonHandler { state: state.clone() });
+        let result = net.run(handler);
+        if state.draining.load(Ordering::SeqCst) {
             LOG.info("draining: waiting for queued jobs to finish");
-            if !self.state.jobs.wait_idle(Duration::from_secs(600)) {
+            if !state.jobs.wait_idle(Duration::from_secs(600)) {
                 LOG.warn("drain timed out with jobs still pending; they stay queued on disk");
             }
         }
-        self.state.jobs.halt();
+        state.jobs.halt();
         LOG.info("daemon stopped");
-        Ok(())
+        result
     }
 }
 
-fn handle_conn(stream: TcpStream, state: &Arc<DaemonState>) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut stream = stream;
-    let head = read_head(&mut reader)?;
-    match (head.method.as_str(), head.path.as_str()) {
-        ("GET", "/healthz") => respond(
-            &mut stream,
-            "200 OK",
-            "application/json",
-            &daemon_health(state).render(),
-        ),
-        ("GET", "/metrics") => respond(
-            &mut stream,
-            "200 OK",
-            "text/plain; version=0.0.4",
-            &MetricsRegistry::global().render(),
-        ),
-        ("GET", "/fleet") => {
-            respond(&mut stream, "200 OK", "application/json", &fleet_json(state).render())
+/// The daemon's [`NetHandler`]: query/control bodies go through the
+/// admission gate to the pool; liveness, metrics and the fleet listing
+/// answer inline on the event loop (never shed).
+struct DaemonHandler {
+    state: Arc<DaemonState>,
+}
+
+impl NetHandler for DaemonHandler {
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/query") => {
+                let reply = process_body(&self.state, &req.body_str());
+                HttpResponse::ok("application/x-ndjson", reply)
+            }
+            _ => HttpResponse::json(
+                404,
+                error_json("unknown route (POST /query, GET /healthz /metrics /fleet)").render(),
+            ),
         }
-        ("POST", "/query") => {
-            let Some(text) = read_body(&mut reader, &mut stream, head.content_length)? else {
-                return Ok(());
-            };
-            let reply = process_body(state, &text);
-            respond(&mut stream, "200 OK", "application/x-ndjson", &reply)
+    }
+
+    fn handle_inline(&self, req: &HttpRequest) -> Option<HttpResponse> {
+        if req.method != "GET" {
+            return None;
         }
-        _ => respond(
-            &mut stream,
-            "404 Not Found",
-            "application/json",
-            &error_json("unknown route (POST /query, GET /healthz /metrics /fleet)").render(),
-        ),
+        match req.path.as_str() {
+            "/healthz" => Some(HttpResponse::json(200, daemon_health(&self.state).render())),
+            "/metrics" => Some(HttpResponse::ok(
+                "text/plain; version=0.0.4",
+                MetricsRegistry::global().render(),
+            )),
+            "/fleet" => Some(HttpResponse::json(200, fleet_json(&self.state).render())),
+            _ => None,
+        }
     }
 }
 
@@ -262,7 +240,8 @@ fn process_body(state: &Arc<DaemonState>, text: &str) -> String {
             ModelBatch { entry, engine, planned: Vec::new(), reqs: Vec::new(), nlines: 0 }
         });
         batch.nlines += 1;
-        match plan_query(&batch.entry.state, batch.engine.as_ref(), &req) {
+        match plan_query(&batch.entry.state, batch.engine.as_ref(), &req, Some(state.net.stats()))
+        {
             Planned::Done(json) => outputs[i] = Some(json),
             Planned::Batch(r, expect) => {
                 batch.planned.push((i, expect));
@@ -346,25 +325,30 @@ fn control(state: &Arc<DaemonState>, op: &str, req: &Json) -> Json {
             LOG.info("drain requested: rejecting new jobs, finishing the queue");
             state.jobs.begin_drain();
             state.draining.store(true, Ordering::SeqCst);
-            state.stop.store(true, Ordering::SeqCst);
+            state.net.shutdown();
             Json::obj(vec![("ok", Json::Bool(true)), ("draining", Json::Bool(true))])
         }
         "halt" => {
             LOG.info("halt requested: stopping now, queued jobs persist");
             state.jobs.halt();
-            state.stop.store(true, Ordering::SeqCst);
+            state.net.shutdown();
             Json::obj(vec![("ok", Json::Bool(true)), ("halted", Json::Bool(true))])
         }
         other => error_json(format!("unknown control op `{other}`")),
     }
 }
 
+/// `/healthz`: fleet liveness plus the connection runtime's admission
+/// state (in-flight, queue depth, sheds, open/accepted connections).
 fn daemon_health(state: &DaemonState) -> Json {
+    let stats = state.net.stats();
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("uptime_ms", Json::num(state.started.elapsed().as_secs_f64() * 1e3)),
         ("models", Json::num(state.fleet.len() as f64)),
         ("draining", Json::Bool(state.draining.load(Ordering::SeqCst))),
+        ("admission", admission_json(stats)),
+        ("accepted", Json::num(stats.accepted() as f64)),
     ])
 }
 
@@ -392,7 +376,7 @@ fn spawn_health_poller(state: Weak<DaemonState>, every: Duration) {
         loop {
             std::thread::sleep(every);
             let Some(state) = state.upgrade() else { return };
-            if state.stop.load(Ordering::SeqCst) {
+            if state.net.is_shutdown() {
                 return;
             }
             for entry in state.fleet.entries() {
@@ -418,7 +402,10 @@ fn spawn_health_poller(state: Weak<DaemonState>, every: Duration) {
 /// 127.0.0.1:9935, port 0 = ephemeral), `--backend native|xla|auto`,
 /// `--cache-shards N`, `--batch-window-ms MS`, `--max-batch N`,
 /// `--health-poll-ms MS` (default 2000; 0 = reload only on job publish),
-/// `--trace FILE` (Chrome trace-event timeline of the daemon process).
+/// `--trace FILE` (Chrome trace-event timeline of the daemon process),
+/// plus the shared connection-runtime flags `--max-inflight N`,
+/// `--max-queue N`, `--idle-timeout-ms MS`, `--keep-alive`/`--no-keep-alive`
+/// ([`NetOptions::with_args`]).
 pub fn daemon(args: &Args) -> Result<()> {
     let state_dir = args
         .opt_str("state")
@@ -440,6 +427,7 @@ pub fn daemon(args: &Args) -> Result<()> {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         },
+        net: NetOptions::default().with_args(args)?,
     };
     let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "daemon")?;
     let d = Daemon::bind(&state_dir, backend, &opts)?;

@@ -85,6 +85,14 @@
 //! [`svd::SvdResult`] shape, and fold into a served model via
 //! [`update::publish_stream_result`] — `tallfat stream - --tol 1e-3`.
 //!
+//! Every HTTP front end — `serve`, the daemon, `serve-metrics` — runs on
+//! one shared connection runtime ([`net`]): an event-driven epoll/poll
+//! readiness loop (no crates; thin `extern "C"` declarations), one
+//! incremental keep-alive HTTP/1.1 parser, a warm fixed-size handler pool
+//! behind a bounded queue, and semaphore-style admission control that
+//! answers overload with an explicit `503` + `Retry-After` instead of
+//! unbounded thread growth; stalled connections are reaped by deadline.
+//!
 //! [`daemon`] joins the lifecycle into one long-running control plane:
 //! `tallfat daemon` owns a *fleet* of named models (registry persisted in a
 //! manifest), routes ND-JSON queries by model name through one front door,
@@ -109,6 +117,7 @@ pub mod jobs;
 pub mod linalg;
 pub mod mapreduce;
 pub mod metrics;
+pub mod net;
 pub mod obs;
 pub mod rng;
 pub mod runtime;

@@ -1,0 +1,30 @@
+//! The shared connection runtime under every HTTP plane.
+//!
+//! `serve` (model queries), `daemon` (fleet control) and `serve-metrics`
+//! (observability) used to each hand-roll a blocking, thread-per-connection
+//! `Connection: close` server. This module replaces all three front ends
+//! with one event-driven runtime:
+//!
+//! * [`poll`] — readiness without crates: epoll through thin
+//!   `extern "C"` declarations on Linux, a portable `poll(2)` fallback
+//!   everywhere (selectable via `TALLFAT_NET_POLL=poll`).
+//! * [`http`] — the one incremental HTTP/1.1 parser (keep-alive,
+//!   pipelining, hard head/body caps, clean errors on malformed input)
+//!   and the response writer, shared by every plane.
+//! * [`server`] — the [`server::NetServer`] loop: nonblocking accept,
+//!   per-connection state machines, a warm fixed-size handler pool behind
+//!   a bounded queue, semaphore-style admission control (503 +
+//!   `Retry-After` + JSON overload body past the caps), idle/stalled
+//!   connection reaping, and graceful drain on shutdown.
+//!
+//! A plane implements [`server::NetHandler`] — `handle` for pool-executed
+//! work, `handle_inline` for never-shed event-loop answers (liveness,
+//! metrics) — and calls `NetServer::bind(addr, opts).run(handler)`.
+
+pub mod http;
+pub mod poll;
+pub mod server;
+
+pub use http::{HttpLimits, HttpParser, HttpRequest, HttpResponse, ParseStatus};
+pub use poll::Backend;
+pub use server::{NetHandler, NetOptions, NetServer, NetServerHandle, NetStats};

@@ -1,0 +1,408 @@
+//! Readiness polling without crates.
+//!
+//! The runtime's event loop needs one primitive: "which of these sockets
+//! can make progress?". On Linux that is epoll, reached through thin
+//! `extern "C"` declarations against the libc already linked into every
+//! Rust binary — no new dependencies. A portable `poll(2)` fallback keeps
+//! the same [`Poller`] API working everywhere else (and is selectable on
+//! Linux too, via [`Backend::Poll`] or `TALLFAT_NET_POLL=poll`, so tests
+//! can pin both code paths).
+//!
+//! Registration is level-triggered: a readable socket keeps reporting
+//! readable until drained, which pairs with the runtime's
+//! read-until-`WouldBlock` loops and makes missed-edge bugs structurally
+//! impossible. Tokens are caller-chosen `u64`s echoed back in [`Event`]s.
+
+use std::io;
+use std::os::raw::{c_int, c_short};
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Which readiness syscall backs the [`Poller`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// epoll where available (Linux), `poll(2)` elsewhere.
+    #[default]
+    Auto,
+    /// Force epoll (fails at construction off Linux).
+    Epoll,
+    /// Force the portable `poll(2)` path.
+    Poll,
+}
+
+impl Backend {
+    /// [`Backend::Auto`] unless `TALLFAT_NET_POLL=poll` pins the fallback.
+    pub fn from_env() -> Backend {
+        match std::env::var("TALLFAT_NET_POLL").as_deref() {
+            Ok("poll") => Backend::Poll,
+            Ok("epoll") => Backend::Epoll,
+            _ => Backend::Auto,
+        }
+    }
+}
+
+/// What a registered fd is waiting for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub read: bool,
+    pub write: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { read: true, write: false };
+    pub const READ_WRITE: Interest = Interest { read: true, write: true };
+}
+
+/// One readiness report. Errors and hangups surface as `readable`: the
+/// next `read()` observes the EOF/error and the connection is torn down
+/// through the normal path.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+fn timeout_ms(timeout: Option<Duration>) -> c_int {
+    match timeout {
+        None => -1,
+        Some(d) => d.as_millis().min(c_int::MAX as u128) as c_int,
+    }
+}
+
+/// Readiness poller over a set of registered fds.
+pub enum Poller {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollPoller),
+    Poll(PollPoller),
+}
+
+impl Poller {
+    pub fn new(backend: Backend) -> io::Result<Poller> {
+        match backend {
+            Backend::Poll => Ok(Poller::Poll(PollPoller::new())),
+            #[cfg(target_os = "linux")]
+            Backend::Auto | Backend::Epoll => Ok(Poller::Epoll(EpollPoller::new()?)),
+            #[cfg(not(target_os = "linux"))]
+            Backend::Auto => Ok(Poller::Poll(PollPoller::new())),
+            #[cfg(not(target_os = "linux"))]
+            Backend::Epoll => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "epoll backend requires Linux",
+            )),
+        }
+    }
+
+    /// Human name of the live backend (logged once at server start).
+    pub fn name(&self) -> &'static str {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(_) => "epoll",
+            Poller::Poll(_) => "poll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_ADD, fd, token, interest),
+            Poller::Poll(p) => p.register(fd, token, interest),
+        }
+    }
+
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_MOD, fd, token, interest),
+            Poller::Poll(p) => p.modify(fd, interest),
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.ctl(EPOLL_CTL_DEL, fd, 0, Interest::READ),
+            Poller::Poll(p) => {
+                p.deregister(fd);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block up to `timeout` (None = forever) and append ready events.
+    /// An interrupted wait (EINTR) reports zero events; callers loop.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        match self {
+            #[cfg(target_os = "linux")]
+            Poller::Epoll(p) => p.wait(events, timeout),
+            Poller::Poll(p) => p.wait(events, timeout),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// epoll (Linux)
+// ---------------------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: c_int = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: c_int = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: c_int = 3;
+
+#[cfg(target_os = "linux")]
+const EPOLLIN: u32 = 0x001;
+#[cfg(target_os = "linux")]
+const EPOLLOUT: u32 = 0x004;
+#[cfg(target_os = "linux")]
+const EPOLLERR: u32 = 0x008;
+#[cfg(target_os = "linux")]
+const EPOLLHUP: u32 = 0x010;
+#[cfg(target_os = "linux")]
+const EPOLLRDHUP: u32 = 0x2000;
+
+/// The kernel's `struct epoll_event`. On x86 the ABI packs the 12-byte
+/// struct; on other architectures (aarch64 included) it is naturally
+/// aligned — the `cfg_attr` mirrors the kernel headers exactly.
+#[cfg(target_os = "linux")]
+#[repr(C)]
+#[cfg_attr(any(target_arch = "x86_64", target_arch = "x86"), repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[cfg(target_os = "linux")]
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut EpollEvent, maxevents: c_int, timeout: c_int)
+        -> c_int;
+    fn close(fd: c_int) -> c_int;
+}
+
+#[cfg(target_os = "linux")]
+pub struct EpollPoller {
+    epfd: c_int,
+    buf: Vec<EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollPoller {
+    fn new() -> io::Result<EpollPoller> {
+        // EPOLL_CLOEXEC, so the fd never leaks into spawned processes.
+        let epfd = unsafe { epoll_create1(0o2000000) };
+        if epfd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollPoller { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 256] })
+    }
+
+    fn ctl(&mut self, op: c_int, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = EpollEvent { events: interest_bits(interest), data: token };
+        let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        let max = self.buf.len() as c_int;
+        let n = unsafe { epoll_wait(self.epfd, self.buf.as_mut_ptr(), max, timeout_ms(timeout)) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for ev in &self.buf[..n as usize] {
+            // Copy out of the (possibly packed) struct before inspecting.
+            let (bits, token) = (ev.events, ev.data);
+            events.push(Event {
+                token,
+                readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP | EPOLLRDHUP) != 0,
+                writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollPoller {
+    fn drop(&mut self) {
+        unsafe { close(self.epfd) };
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn interest_bits(interest: Interest) -> u32 {
+    let mut bits = EPOLLRDHUP;
+    if interest.read {
+        bits |= EPOLLIN;
+    }
+    if interest.write {
+        bits |= EPOLLOUT;
+    }
+    bits
+}
+
+// ---------------------------------------------------------------------------
+// poll(2) fallback
+// ---------------------------------------------------------------------------
+
+const POLLIN: c_short = 0x001;
+const POLLOUT: c_short = 0x004;
+const POLLERR: c_short = 0x008;
+const POLLHUP: c_short = 0x010;
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: c_int,
+    events: c_short,
+    revents: c_short,
+}
+
+#[cfg(target_os = "linux")]
+type Nfds = std::os::raw::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type Nfds = std::os::raw::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: Nfds, timeout: c_int) -> c_int;
+}
+
+/// Rebuilds the `pollfd` array on every wait — O(fds) per call, which is
+/// fine for the fallback's job (portability and test coverage of the
+/// runtime without epoll).
+pub struct PollPoller {
+    entries: Vec<(RawFd, u64, Interest)>,
+}
+
+impl PollPoller {
+    fn new() -> PollPoller {
+        PollPoller { entries: Vec::new() }
+    }
+
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        if self.entries.iter().any(|(f, _, _)| *f == fd) {
+            return Err(io::Error::new(io::ErrorKind::AlreadyExists, "fd already registered"));
+        }
+        self.entries.push((fd, token, interest));
+        Ok(())
+    }
+
+    fn modify(&mut self, fd: RawFd, interest: Interest) -> io::Result<()> {
+        match self.entries.iter_mut().find(|(f, _, _)| *f == fd) {
+            Some(e) => {
+                e.2 = interest;
+                Ok(())
+            }
+            None => Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered")),
+        }
+    }
+
+    fn deregister(&mut self, fd: RawFd) {
+        self.entries.retain(|(f, _, _)| *f != fd);
+    }
+
+    fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        let mut fds: Vec<PollFd> = self
+            .entries
+            .iter()
+            .map(|(fd, _, i)| {
+                let mut want: c_short = 0;
+                if i.read {
+                    want |= POLLIN;
+                }
+                if i.write {
+                    want |= POLLOUT;
+                }
+                PollFd { fd: *fd, events: want, revents: 0 }
+            })
+            .collect();
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as Nfds, timeout_ms(timeout)) };
+        if n < 0 {
+            let e = io::Error::last_os_error();
+            if e.kind() == io::ErrorKind::Interrupted {
+                return Ok(());
+            }
+            return Err(e);
+        }
+        for (pfd, (_, token, _)) in fds.iter().zip(&self.entries) {
+            if pfd.revents == 0 {
+                continue;
+            }
+            events.push(Event {
+                token: *token,
+                readable: pfd.revents & (POLLIN | POLLERR | POLLHUP) != 0,
+                writable: pfd.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    fn roundtrip(backend: Backend) {
+        let mut poller = Poller::new(backend).unwrap();
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        poller.register(b.as_raw_fd(), 7, Interest::READ).unwrap();
+        let mut events = Vec::new();
+        // Nothing readable yet: a zero-timeout wait reports no events.
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable));
+        a.write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "read readiness");
+        // Level-triggered: still readable until drained.
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "level-triggered");
+        let mut buf = [0u8; 8];
+        let _ = (&b).read(&mut buf);
+        poller.wait(&mut events, Some(Duration::from_millis(0))).unwrap();
+        assert!(events.iter().all(|e| e.token != 7 || !e.readable), "drained");
+        // Peer hangup surfaces as readable (EOF on the next read).
+        drop(a);
+        poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 7 && e.readable), "hangup is readable");
+        poller.deregister(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn poll_backend_readiness_roundtrip() {
+        roundtrip(Backend::Poll);
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_backend_readiness_roundtrip() {
+        roundtrip(Backend::Epoll);
+    }
+
+    #[test]
+    fn write_interest_reports_writable() {
+        for backend in [Backend::Poll, Backend::Auto] {
+            let mut poller = Poller::new(backend).unwrap();
+            let (a, _b) = UnixStream::pair().unwrap();
+            a.set_nonblocking(true).unwrap();
+            poller.register(a.as_raw_fd(), 3, Interest::READ_WRITE).unwrap();
+            let mut events = Vec::new();
+            poller.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+            assert!(events.iter().any(|e| e.token == 3 && e.writable), "{}", poller.name());
+        }
+    }
+}

@@ -1,0 +1,855 @@
+//! The event-driven connection runtime behind all three HTTP planes.
+//!
+//! One nonblocking accept + readiness loop ([`super::poll::Poller`]) owns
+//! every socket. Connections are per-socket state machines: reads feed the
+//! incremental [`HttpParser`]; a completed request either answers *inline*
+//! on the event loop (cheap, never-shed ops — liveness, metrics) or passes
+//! the **admission gate** into a bounded queue consumed by a warm
+//! fixed-size handler pool. The pool size *is* the concurrency semaphore:
+//! at most `max_inflight` requests execute, at most `max_queue` wait, and
+//! anything beyond that is answered immediately with `503` +
+//! `Retry-After` + a JSON overload body ([`HttpResponse::overloaded`]) —
+//! overload is an explicit, well-formed answer, never an unbounded thread
+//! pile-up or a dropped connection.
+//!
+//! Keep-alive is the default (HTTP/1.1 semantics; `--no-keep-alive` or a
+//! client `Connection: close` opt out). One request per connection is
+//! outstanding at a time, so pipelined requests are answered strictly in
+//! order. Connections that stall — half a request head, an unread
+//! response — are reaped once `idle_timeout` passes without progress, so
+//! slowloris clients can't pin pool workers or fds.
+//!
+//! Shutdown ([`NetServerHandle::shutdown`], or the `max_requests` cap) is
+//! graceful: stop accepting, shed *new* requests with reason `draining`,
+//! finish and flush in-flight responses, then join the pool.
+//!
+//! Published metrics (gauges, labeled `{plane="..."}`): `net_conns_open`,
+//! `net_accept_total`, `net_requests_total`, `net_queue_depth`,
+//! `net_inflight`, `net_reaped_total`, and `net_shed_total{reason}` with
+//! reasons `queue_full` and `draining`.
+
+use crate::coordinator::server::MetricsRegistry;
+use crate::error::{Error, Result};
+use crate::net::http::{HttpLimits, HttpParser, HttpRequest, HttpResponse, ParseStatus};
+use crate::net::poll::{Backend, Interest, Poller};
+use crate::util::{lock_unpoisoned, Args, Logger};
+use std::collections::{HashMap, VecDeque};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+static LOG: Logger = Logger::new("net");
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// How long a graceful shutdown waits for in-flight responses to flush.
+const DRAIN_GRACE: Duration = Duration::from_secs(10);
+
+/// What overloaded clients are told to wait before retrying.
+const RETRY_AFTER_S: u32 = 1;
+
+/// Runtime knobs, shared by every plane. The CLI surface is uniform too:
+/// `--max-inflight N`, `--max-queue N`, `--idle-timeout-ms MS`,
+/// `--keep-alive` / `--no-keep-alive` ([`NetOptions::with_args`]).
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// Handler pool size — the admission semaphore's concurrency cap.
+    pub max_inflight: usize,
+    /// Queued-request cap; beyond it requests shed with 503 `queue_full`.
+    pub max_queue: usize,
+    /// Reap a connection after this long without forward progress.
+    pub idle_timeout: Duration,
+    /// Server-side keep-alive policy (clients can still ask to close).
+    pub keep_alive: bool,
+    /// Parser head/body byte caps.
+    pub limits: HttpLimits,
+    /// Stop after this many responses are written (None = forever).
+    pub max_requests: Option<u64>,
+    /// Metrics label distinguishing the planes sharing a process.
+    pub plane: &'static str,
+    /// Readiness backend (epoll on Linux; `poll(2)` fallback).
+    pub backend: Backend,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        NetOptions {
+            max_inflight: (cores * 2).clamp(4, 64),
+            max_queue: 256,
+            idle_timeout: Duration::from_secs(10),
+            keep_alive: true,
+            limits: HttpLimits::default(),
+            max_requests: None,
+            plane: "net",
+            backend: Backend::from_env(),
+        }
+    }
+}
+
+impl NetOptions {
+    /// Apply the shared CLI flags on top of the current values.
+    pub fn with_args(mut self, args: &Args) -> Result<Self> {
+        self.max_inflight = args.usize_or("max-inflight", self.max_inflight)?;
+        self.max_queue = args.usize_or("max-queue", self.max_queue)?;
+        let idle_ms = args.u64_or("idle-timeout-ms", self.idle_timeout.as_millis() as u64)?;
+        self.idle_timeout = Duration::from_millis(idle_ms);
+        if args.flag("keep-alive") {
+            self.keep_alive = true;
+        }
+        if args.flag("no-keep-alive") {
+            self.keep_alive = false;
+        }
+        if self.max_inflight == 0 {
+            return Err(Error::Config("--max-inflight must be at least 1".into()));
+        }
+        Ok(self)
+    }
+}
+
+/// A plane's request handler. `handle` runs on a pool worker; requests
+/// only reach it through the admission gate. `handle_inline` runs on the
+/// event loop itself and must stay cheap — it exists so liveness probes
+/// and metrics scrapes keep answering even when the pool is saturated.
+pub trait NetHandler: Send + Sync {
+    fn handle(&self, req: HttpRequest) -> HttpResponse;
+
+    fn handle_inline(&self, req: &HttpRequest) -> Option<HttpResponse> {
+        let _ = req;
+        None
+    }
+}
+
+/// Shared atomic counters — the runtime's observable state. `*_total`
+/// counters are since process start.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    conns_open: AtomicU64,
+    accepted: AtomicU64,
+    served: AtomicU64,
+    queue_depth: AtomicU64,
+    inflight: AtomicU64,
+    shed_queue: AtomicU64,
+    shed_draining: AtomicU64,
+    reaped: AtomicU64,
+}
+
+impl NetStats {
+    pub fn conns_open(&self) -> u64 {
+        self.conns_open.load(Ordering::Relaxed)
+    }
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+    pub fn queue_depth(&self) -> u64 {
+        self.queue_depth.load(Ordering::Relaxed)
+    }
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue.load(Ordering::Relaxed) + self.shed_draining.load(Ordering::Relaxed)
+    }
+    pub fn reaped(&self) -> u64 {
+        self.reaped.load(Ordering::Relaxed)
+    }
+
+    fn publish(&self, plane: &str) {
+        let reg = MetricsRegistry::global();
+        let l = [("plane", plane)];
+        reg.set_labeled("net_conns_open", &l, self.conns_open() as f64);
+        reg.set_labeled("net_accept_total", &l, self.accepted() as f64);
+        reg.set_labeled("net_requests_total", &l, self.served() as f64);
+        reg.set_labeled("net_queue_depth", &l, self.queue_depth() as f64);
+        reg.set_labeled("net_inflight", &l, self.inflight() as f64);
+        reg.set_labeled("net_reaped_total", &l, self.reaped() as f64);
+        reg.set_labeled(
+            "net_shed_total",
+            &[("plane", plane), ("reason", "queue_full")],
+            self.shed_queue.load(Ordering::Relaxed) as f64,
+        );
+        reg.set_labeled(
+            "net_shed_total",
+            &[("plane", plane), ("reason", "draining")],
+            self.shed_draining.load(Ordering::Relaxed) as f64,
+        );
+    }
+}
+
+/// Wakes the event loop from another thread (pool completions, shutdown):
+/// one byte down a nonblocking socketpair the loop polls. A full pipe
+/// means a wake is already pending, so `WouldBlock` is success.
+#[derive(Clone)]
+struct Waker(Arc<UnixStream>);
+
+impl Waker {
+    fn wake(&self) {
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
+
+/// Clonable control/observation handle, valid before and during `run`.
+#[derive(Clone)]
+pub struct NetServerHandle {
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    waker: Waker,
+}
+
+impl NetServerHandle {
+    /// Begin a graceful shutdown: stop accepting, shed new requests,
+    /// flush in-flight responses, return from `run`.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+    }
+
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// True once a shutdown has been requested (or the request cap hit) —
+    /// background pollers use this to die with the server.
+    pub fn is_shutdown(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+enum Job {
+    Request { token: u64, req: HttpRequest },
+    Shutdown,
+}
+
+#[derive(Default)]
+struct JobQueue {
+    jobs: Mutex<VecDeque<Job>>,
+    ready: Condvar,
+}
+
+type Completions = Mutex<Vec<(u64, HttpResponse)>>;
+
+/// A bound runtime, ready to `run` a handler. Binding is separate from
+/// running so callers can read the real address (port 0) and take a
+/// [`NetServerHandle`] first.
+pub struct NetServer {
+    listener: TcpListener,
+    opts: NetOptions,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    wake_rx: UnixStream,
+    wake_tx: Arc<UnixStream>,
+}
+
+impl NetServer {
+    pub fn bind(addr: &str, opts: NetOptions) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let (wake_rx, wake_tx) = UnixStream::pair()?;
+        wake_rx.set_nonblocking(true)?;
+        wake_tx.set_nonblocking(true)?;
+        Ok(NetServer {
+            listener,
+            opts,
+            stats: Arc::new(NetStats::default()),
+            stop: Arc::new(AtomicBool::new(false)),
+            wake_rx,
+            wake_tx: Arc::new(wake_tx),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn handle(&self) -> NetServerHandle {
+        NetServerHandle {
+            stats: self.stats.clone(),
+            stop: self.stop.clone(),
+            waker: Waker(self.wake_tx.clone()),
+        }
+    }
+
+    /// Run the event loop until shutdown (or the `max_requests` cap).
+    pub fn run(self, handler: Arc<dyn NetHandler>) -> Result<()> {
+        let mut poller = Poller::new(self.opts.backend).map_err(Error::Io)?;
+        poller.register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+        poller.register(self.wake_rx.as_raw_fd(), TOKEN_WAKE, Interest::READ)?;
+        LOG.info(&format!(
+            "{} plane: {} backend, pool {}, queue {}, idle timeout {:?}, keep-alive {}",
+            self.opts.plane,
+            poller.name(),
+            self.opts.max_inflight,
+            self.opts.max_queue,
+            self.opts.idle_timeout,
+            self.opts.keep_alive,
+        ));
+        let queue = Arc::new(JobQueue::default());
+        let completions: Arc<Completions> = Arc::new(Mutex::new(Vec::new()));
+        let waker = Waker(self.wake_tx.clone());
+        let workers = spawn_pool(
+            self.opts.max_inflight,
+            self.opts.plane,
+            handler.clone(),
+            queue.clone(),
+            completions.clone(),
+            self.stats.clone(),
+            waker,
+        );
+        let mut lp = EventLoop {
+            listener: self.listener,
+            wake_rx: self.wake_rx,
+            poller,
+            opts: self.opts,
+            stats: self.stats,
+            stop: self.stop,
+            handler,
+            queue: queue.clone(),
+            completions,
+            conns: HashMap::new(),
+            next_token: FIRST_CONN_TOKEN,
+            draining: false,
+            grace_deadline: None,
+        };
+        let result = lp.run();
+        // Release the pool: sentinels behind any still-queued work.
+        {
+            let mut jobs = lock_unpoisoned(&queue.jobs);
+            for _ in 0..workers.len() {
+                jobs.push_back(Job::Shutdown);
+            }
+        }
+        queue.ready.notify_all();
+        for w in workers {
+            let _ = w.join();
+        }
+        lp.stats.publish(lp.opts.plane);
+        result
+    }
+}
+
+fn spawn_pool(
+    size: usize,
+    plane: &'static str,
+    handler: Arc<dyn NetHandler>,
+    queue: Arc<JobQueue>,
+    completions: Arc<Completions>,
+    stats: Arc<NetStats>,
+    waker: Waker,
+) -> Vec<JoinHandle<()>> {
+    (0..size)
+        .map(|i| {
+            let (handler, queue, completions, stats, waker) = (
+                handler.clone(),
+                queue.clone(),
+                completions.clone(),
+                stats.clone(),
+                waker.clone(),
+            );
+            std::thread::Builder::new()
+                .name(format!("net-{plane}-{i}"))
+                .spawn(move || worker_loop(&handler, &queue, &completions, &stats, &waker))
+                .expect("spawn net pool worker")
+        })
+        .collect()
+}
+
+fn worker_loop(
+    handler: &Arc<dyn NetHandler>,
+    queue: &JobQueue,
+    completions: &Completions,
+    stats: &NetStats,
+    waker: &Waker,
+) {
+    loop {
+        let job = {
+            let mut jobs = lock_unpoisoned(&queue.jobs);
+            loop {
+                match jobs.pop_front() {
+                    Some(job) => break job,
+                    None => jobs = queue.ready.wait(jobs).unwrap_or_else(|e| e.into_inner()),
+                }
+            }
+        };
+        let (token, req) = match job {
+            Job::Shutdown => return,
+            Job::Request { token, req } => (token, req),
+        };
+        stats.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        stats.inflight.fetch_add(1, Ordering::Relaxed);
+        let resp = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler.handle(req)))
+            .unwrap_or_else(|_| HttpResponse {
+                close: true,
+                ..HttpResponse::text(500, "handler panicked\n")
+            });
+        stats.inflight.fetch_sub(1, Ordering::Relaxed);
+        lock_unpoisoned(completions).push((token, resp));
+        waker.wake();
+    }
+}
+
+/// One live connection's state machine.
+struct Conn {
+    stream: TcpStream,
+    parser: HttpParser,
+    buf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    interest: Interest,
+    /// A request from this connection is queued or in a pool worker; no
+    /// further reads are parsed until its response is written (this is
+    /// what makes pipelined responses come back in order).
+    busy: bool,
+    req_keep_alive: bool,
+    close_after_flush: bool,
+    read_closed: bool,
+    last_activity: Instant,
+}
+
+struct EventLoop {
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    poller: Poller,
+    opts: NetOptions,
+    stats: Arc<NetStats>,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn NetHandler>,
+    queue: Arc<JobQueue>,
+    completions: Arc<Completions>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    draining: bool,
+    grace_deadline: Option<Instant>,
+}
+
+impl EventLoop {
+    fn run(&mut self) -> Result<()> {
+        let tick = (self.opts.idle_timeout / 4)
+            .clamp(Duration::from_millis(10), Duration::from_millis(250));
+        let mut events = Vec::new();
+        loop {
+            self.stats.publish(self.opts.plane);
+            if self.stop.load(Ordering::SeqCst) && !self.draining {
+                self.begin_drain();
+            }
+            if self.draining {
+                let pending =
+                    self.conns.values().any(|c| c.busy || c.wpos < c.wbuf.len());
+                let expired = self.grace_deadline.is_some_and(|d| Instant::now() >= d);
+                if !pending || expired {
+                    if expired && pending {
+                        LOG.warn("drain grace expired with responses still in flight");
+                    }
+                    return Ok(());
+                }
+            }
+            self.poller.wait(&mut events, Some(tick))?;
+            for ev in std::mem::take(&mut events) {
+                match ev.token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKE => self.drain_waker(),
+                    token => {
+                        if ev.readable {
+                            self.read_ready(token);
+                        }
+                        if ev.writable && self.conns.contains_key(&token) {
+                            self.try_flush(token);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            self.reap(Instant::now());
+        }
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.grace_deadline = Some(Instant::now() + DRAIN_GRACE);
+        let _ = self.poller.deregister(self.listener.as_raw_fd());
+        // Idle connections close now; busy ones flush their response first.
+        let idle: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| !c.busy && c.wpos >= c.wbuf.len())
+            .map(|(t, _)| *t)
+            .collect();
+        for token in idle {
+            self.close(token);
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut sink = [0u8; 64];
+        while matches!((&self.wake_rx).read(&mut sink), Ok(n) if n > 0) {}
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.draining {
+                        continue; // accepted-then-dropped: we are going away
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                        continue;
+                    }
+                    self.stats.accepted.fetch_add(1, Ordering::Relaxed);
+                    self.stats.conns_open.fetch_add(1, Ordering::Relaxed);
+                    self.conns.insert(
+                        token,
+                        Conn {
+                            stream,
+                            parser: HttpParser::new(self.opts.limits),
+                            buf: Vec::new(),
+                            wbuf: Vec::new(),
+                            wpos: 0,
+                            interest: Interest::READ,
+                            busy: false,
+                            req_keep_alive: true,
+                            close_after_flush: false,
+                            read_closed: false,
+                            last_activity: Instant::now(),
+                        },
+                    );
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    LOG.warn(&format!("accept failed: {e}"));
+                    return;
+                }
+            }
+        }
+    }
+
+    fn read_ready(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let mut tmp = [0u8; 16 * 1024];
+        loop {
+            // While a request is in flight we stop pulling more bytes —
+            // level-triggered readiness re-reports them once it resolves.
+            if conn.busy {
+                break;
+            }
+            match conn.stream.read(&mut tmp) {
+                Ok(0) => {
+                    conn.read_closed = true;
+                    break;
+                }
+                Ok(n) => {
+                    conn.buf.extend_from_slice(&tmp[..n]);
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close(token);
+                    return;
+                }
+            }
+        }
+        self.try_parse(token);
+    }
+
+    /// Pull as many complete requests as the connection's buffer holds
+    /// (at most one proceeds past the admission gate at a time).
+    fn try_parse(&mut self, token: u64) {
+        loop {
+            let Some(conn) = self.conns.get_mut(&token) else { return };
+            if conn.busy || conn.close_after_flush {
+                return;
+            }
+            match conn.parser.parse(&mut conn.buf) {
+                Ok(ParseStatus::Request(req)) => self.dispatch(token, req),
+                Ok(ParseStatus::NeedMore) => {
+                    if conn.read_closed {
+                        if conn.wpos < conn.wbuf.len() {
+                            conn.close_after_flush = true;
+                        } else {
+                            self.close(token);
+                        }
+                    } else {
+                        self.update_interest(token);
+                    }
+                    return;
+                }
+                Err(e) => {
+                    let resp = HttpResponse::protocol_error(&e);
+                    self.write_response(token, resp, false);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, token: u64, req: HttpRequest) {
+        let req_keep_alive = req.keep_alive;
+        // Inline fast path: liveness and metrics answer on the event loop,
+        // bypassing admission — load balancers can still see a saturated
+        // server, and the overload metrics stay scrapeable.
+        if let Some(resp) = self.handler.handle_inline(&req) {
+            self.write_response(token, resp, req_keep_alive);
+            return;
+        }
+        if self.draining || self.stop.load(Ordering::SeqCst) {
+            self.stats.shed_draining.fetch_add(1, Ordering::Relaxed);
+            let resp = HttpResponse::overloaded("draining", RETRY_AFTER_S);
+            self.write_response(token, resp, req_keep_alive);
+            return;
+        }
+        if self.stats.queue_depth() >= self.opts.max_queue as u64 {
+            self.stats.shed_queue.fetch_add(1, Ordering::Relaxed);
+            let resp = HttpResponse::overloaded("queue_full", RETRY_AFTER_S);
+            self.write_response(token, resp, req_keep_alive);
+            return;
+        }
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        conn.busy = true;
+        conn.req_keep_alive = req_keep_alive;
+        self.stats.queue_depth.fetch_add(1, Ordering::Relaxed);
+        lock_unpoisoned(&self.queue.jobs).push_back(Job::Request { token, req });
+        self.queue.ready.notify_one();
+        self.update_interest(token);
+    }
+
+    fn drain_completions(&mut self) {
+        let done = std::mem::take(&mut *lock_unpoisoned(&self.completions));
+        for (token, resp) in done {
+            let Some(conn) = self.conns.get_mut(&token) else { continue };
+            conn.busy = false;
+            let keep = conn.req_keep_alive;
+            self.write_response(token, resp, keep);
+            // The connection (if still open) may hold pipelined requests.
+            self.try_parse(token);
+        }
+    }
+
+    /// Render and enqueue a response; counts toward `max_requests` and
+    /// decides keep-alive (client wish AND server policy AND not
+    /// draining). Flushes opportunistically.
+    fn write_response(&mut self, token: u64, resp: HttpResponse, req_keep_alive: bool) {
+        let served = self.stats.served.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.opts.max_requests.is_some_and(|max| served >= max) {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+        let stopping = self.draining || self.stop.load(Ordering::SeqCst);
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let keep = self.opts.keep_alive
+            && req_keep_alive
+            && !resp.close
+            && !stopping
+            && !conn.close_after_flush;
+        conn.wbuf.extend_from_slice(&resp.render(keep));
+        if !keep {
+            conn.close_after_flush = true;
+        }
+        self.try_flush(token);
+    }
+
+    fn try_flush(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        while conn.wpos < conn.wbuf.len() {
+            match conn.stream.write(&conn.wbuf[conn.wpos..]) {
+                Ok(0) => {
+                    self.close(token);
+                    return;
+                }
+                Ok(n) => {
+                    conn.wpos += n;
+                    conn.last_activity = Instant::now();
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.close(token);
+                    return;
+                }
+            }
+        }
+        if conn.wpos >= conn.wbuf.len() {
+            conn.wbuf.clear();
+            conn.wpos = 0;
+            if conn.close_after_flush {
+                self.close(token);
+                return;
+            }
+        }
+        self.update_interest(token);
+    }
+
+    fn update_interest(&mut self, token: u64) {
+        let Some(conn) = self.conns.get_mut(&token) else { return };
+        let desired = Interest {
+            read: !conn.busy && !conn.read_closed,
+            write: conn.wpos < conn.wbuf.len(),
+        };
+        if desired != conn.interest {
+            if self.poller.modify(conn.stream.as_raw_fd(), token, desired).is_err() {
+                self.close(token);
+                return;
+            }
+            if let Some(conn) = self.conns.get_mut(&token) {
+                conn.interest = desired;
+            }
+        }
+    }
+
+    /// Drop connections that made no forward progress for `idle_timeout`:
+    /// idle keep-alives, half-sent heads (slowloris), unread responses.
+    /// Busy connections are never reaped — their response is coming.
+    fn reap(&mut self, now: Instant) {
+        let timeout = self.opts.idle_timeout;
+        let dead: Vec<u64> = self
+            .conns
+            .iter()
+            .filter(|(_, c)| !c.busy && now.duration_since(c.last_activity) > timeout)
+            .map(|(t, _)| *t)
+            .collect();
+        for token in dead {
+            self.stats.reaped.fetch_add(1, Ordering::Relaxed);
+            self.close(token);
+        }
+    }
+
+    fn close(&mut self, token: u64) {
+        if let Some(conn) = self.conns.remove(&token) {
+            let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            self.stats.conns_open.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl NetHandler for Echo {
+        fn handle(&self, req: HttpRequest) -> HttpResponse {
+            HttpResponse::ok("text/plain", req.body)
+        }
+        fn handle_inline(&self, req: &HttpRequest) -> Option<HttpResponse> {
+            (req.path == "/healthz").then(|| HttpResponse::text(200, "ok\n"))
+        }
+    }
+
+    type ServerJoin = std::thread::JoinHandle<Result<()>>;
+
+    fn start(opts: NetOptions) -> (SocketAddr, NetServerHandle, ServerJoin) {
+        let server = NetServer::bind("127.0.0.1:0", opts).unwrap();
+        let addr = server.local_addr().unwrap();
+        let handle = server.handle();
+        let join = std::thread::spawn(move || server.run(Arc::new(Echo)));
+        (addr, handle, join)
+    }
+
+    /// Read exactly one framed HTTP response off the stream.
+    fn read_response(s: &mut TcpStream) -> (String, String) {
+        let mut buf = Vec::new();
+        let mut tmp = [0u8; 1024];
+        let head_end = loop {
+            if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                break i;
+            }
+            let n = s.read(&mut tmp).unwrap();
+            assert!(n > 0, "eof before response head: {:?}", String::from_utf8_lossy(&buf));
+            buf.extend_from_slice(&tmp[..n]);
+        };
+        let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+        let clen: usize = head
+            .lines()
+            .find_map(|l| {
+                let lower = l.to_ascii_lowercase();
+                let v = lower.strip_prefix("content-length:")?;
+                Some(v.trim().parse().unwrap())
+            })
+            .unwrap();
+        let mut body = buf[head_end + 4..].to_vec();
+        while body.len() < clen {
+            let n = s.read(&mut tmp).unwrap();
+            assert!(n > 0, "eof mid-body");
+            body.extend_from_slice(&tmp[..n]);
+        }
+        (head, String::from_utf8_lossy(&body[..clen]).into_owned())
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_connection() {
+        let (addr, handle, join) = start(NetOptions::default());
+        let mut s = TcpStream::connect(addr).unwrap();
+        for i in 0..3 {
+            let body = format!("ping-{i}");
+            let req = format!(
+                "POST /echo HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            );
+            s.write_all(req.as_bytes()).unwrap();
+            let (head, got) = read_response(&mut s);
+            assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+            assert!(head.contains("Connection: keep-alive"), "{head}");
+            assert_eq!(got, body);
+        }
+        assert_eq!(handle.stats().accepted(), 1, "one connection carried all requests");
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipelined_requests_answered_in_order() {
+        let (addr, handle, join) = start(NetOptions::default());
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut wire = String::new();
+        for i in 0..3 {
+            wire.push_str(&format!("POST /e HTTP/1.1\r\nContent-Length: 2\r\n\r\nr{i}"));
+        }
+        s.write_all(wire.as_bytes()).unwrap();
+        for i in 0..3 {
+            let (_, body) = read_response(&mut s);
+            assert_eq!(body, format!("r{i}"), "pipeline order");
+        }
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn max_requests_counts_responses_and_exits() {
+        let opts = NetOptions { max_requests: Some(2), ..NetOptions::default() };
+        let (addr, _handle, join) = start(opts);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let (head, _) = read_response(&mut s);
+        assert!(head.contains("Connection: keep-alive"), "{head}");
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        let (head, _) = read_response(&mut s);
+        assert!(head.contains("Connection: close"), "final response closes: {head}");
+        join.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn poll_fallback_roundtrip() {
+        let opts = NetOptions { backend: Backend::Poll, ..NetOptions::default() };
+        let (addr, handle, join) = start(opts);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"POST /e HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi").unwrap();
+        let (_, body) = read_response(&mut s);
+        assert_eq!(body, "hi");
+        handle.shutdown();
+        join.join().unwrap().unwrap();
+    }
+}

@@ -1,11 +1,16 @@
 //! The `tallfat serve` HTTP front end.
 //!
-//! Dependency-free HTTP in the [`crate::coordinator::server`] style: a
-//! blocking `TcpListener`, one thread per connection, `Connection: close`.
-//! Queries are line-delimited JSON (`POST /query`, one request object per
-//! line, one response object per line back); project and similarity lines
-//! are routed through the [`Batcher`] so concurrent connections coalesce
-//! into shared backend matmuls.
+//! Runs on the shared event-driven connection runtime ([`crate::net`]):
+//! nonblocking accept + readiness loop, incremental keep-alive HTTP/1.1
+//! parsing, a warm fixed-size handler pool behind a bounded queue, and
+//! admission control — past the `--max-inflight`/`--max-queue` caps,
+//! `POST /query` answers `503` + `Retry-After` instead of piling up
+//! threads. `GET /healthz`, `GET /metrics` and `GET /model` answer inline
+//! on the event loop and are never shed. Queries are line-delimited JSON
+//! (`POST /query`, one request object per line, one response object per
+//! line back); project and similarity lines are routed through the
+//! [`Batcher`] so concurrent connections coalesce into shared backend
+//! matmuls.
 //!
 //! ```text
 //! POST /query        ND-JSON query lines (see below)
@@ -22,7 +27,7 @@
 //! {"op":"similar","latent":[...],"k":10}   -> same, skipping the projection
 //! {"op":"reconstruct","row_id":7}          -> {"ok":true,"values":[...]}
 //! {"op":"info"}                            -> {"ok":true,"m":...,"k":...,"generation":...}
-//! {"op":"health"}                          -> {"ok":true,"generation":...,"uptime_ms":...,...}
+//! {"op":"health"}                          -> {"ok":true,"generation":...,"admission":{...},...}
 //! {"op":"reload"}                          -> {"ok":true,"generation":...,"swapped":...}
 //! ```
 //!
@@ -30,7 +35,8 @@
 //! `"values":[...]` instead of `"row"` — densified against the model's n,
 //! so sparse-model clients don't ship n floats per request. `health` is the
 //! probe the `tallfatd` fleet daemon's health loop consumes: generation,
-//! uptime, shard-cache hit stats, and the in-flight batch depth.
+//! uptime, shard-cache hit stats, the in-flight batch depth, and the
+//! connection runtime's admission state (in-flight, queue depth, sheds).
 //!
 //! The model is held through an [`EngineHandle`], so a `reload` line (or
 //! the `--reload-poll-ms` background poll, on by default) hot-swaps to the
@@ -43,33 +49,31 @@
 //! (parse → reply, per query line; `quantile(0.5)`/`quantile(0.99)` give
 //! p50/p99). The batcher adds `serve_batch_size` and the per-op split
 //! `serve_queue_ms{op}` / `serve_compute_ms{op}`; engine reloads bump
-//! `serve_reloads`.
+//! `serve_reloads`; the runtime publishes the `net_*{plane="serve"}`
+//! family (`net_conns_open`, `net_queue_depth`, `net_shed_total`, ...).
 
 use crate::coordinator::server::MetricsRegistry;
 use crate::error::{Error, Result};
+use crate::net::http::{HttpRequest, HttpResponse};
+use crate::net::{NetHandler, NetOptions, NetServer, NetServerHandle, NetStats};
 use crate::serve::batcher::{BatchOptions, Batcher, BatcherHandle, Request, Response};
 use crate::serve::json::Json;
 use crate::serve::query::{EngineHandle, Hit, QueryEngine};
 use crate::serve::store::ModelStore;
 use crate::util::{Args, Logger};
-use std::io::{BufRead, BufReader, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 static LOG: Logger = Logger::new("serve.http");
 
-/// Hard cap on a POST body — the Content-Length header is client input and
-/// must not size an allocation unchecked.
-const MAX_BODY_BYTES: usize = 32 << 20;
-
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServeOptions {
     pub addr: String,
     pub batch: BatchOptions,
-    /// Serve this many connections, then exit (None = forever). `--once` is 1.
+    /// Answer this many requests, then exit (None = forever). `--once` is 1.
     pub max_requests: Option<u64>,
     /// Poll the model root's `CURRENT` pointer at this interval and
     /// hot-swap when it advances (None = reload only on `{"op":"reload"}`).
@@ -77,6 +81,9 @@ pub struct ServeOptions {
     /// generation directories that `tallfat update`'s garbage collection
     /// is entitled to delete once `keep_generations` newer ones exist.
     pub reload_poll: Option<Duration>,
+    /// Connection-runtime knobs: pool size (= in-flight cap), queue bound,
+    /// idle reap deadline, keep-alive policy ([`crate::net::NetOptions`]).
+    pub net: NetOptions,
 }
 
 impl Default for ServeOptions {
@@ -86,6 +93,7 @@ impl Default for ServeOptions {
             batch: BatchOptions::default(),
             max_requests: None,
             reload_poll: Some(Duration::from_secs(5)),
+            net: NetOptions::default(),
         }
     }
 }
@@ -109,60 +117,79 @@ impl ServerState {
 /// A bound model server (separate from `run` so tests can bind port 0 and
 /// read the real address before serving).
 pub struct ModelServer {
-    listener: TcpListener,
+    net: NetServer,
     state: Arc<ServerState>,
     // Keeps the batching worker alive for the server's lifetime.
     _batcher: Batcher,
-    max_requests: Option<u64>,
 }
 
 impl ModelServer {
     pub fn bind(engines: Arc<EngineHandle>, opts: &ServeOptions) -> Result<Self> {
         let batcher = Batcher::start(engines.clone(), opts.batch)?;
-        let listener = TcpListener::bind(&opts.addr)?;
+        let mut nopts = opts.net.clone();
+        nopts.plane = "serve";
+        nopts.max_requests = opts.max_requests;
+        let net = NetServer::bind(&opts.addr, nopts)?;
         if let Some(every) = opts.reload_poll.filter(|_| engines.is_reloadable()) {
             spawn_reload_poller(Arc::downgrade(&engines), every);
         }
         let state = Arc::new(ServerState::new(engines, batcher.handle()));
-        Ok(ModelServer { listener, state, _batcher: batcher, max_requests: opts.max_requests })
+        Ok(ModelServer { net, state, _batcher: batcher })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
-        Ok(self.listener.local_addr()?)
+        self.net.local_addr()
     }
 
-    /// Accept loop. One thread per connection; with a request cap the
-    /// spawned handlers are joined before returning so in-flight responses
-    /// finish.
+    /// Control/observation handle (graceful shutdown, admission stats).
+    pub fn handle(&self) -> NetServerHandle {
+        self.net.handle()
+    }
+
+    /// Run the connection runtime until shutdown or the request cap.
     pub fn run(self) -> Result<()> {
-        let mut served = 0u64;
-        let mut joins = Vec::new();
-        for stream in self.listener.incoming() {
-            match stream {
-                Ok(s) => {
-                    let state = self.state.clone();
-                    let h = std::thread::spawn(move || {
-                        if let Err(e) = handle_conn(&state, s) {
-                            LOG.warn(&format!("request failed: {e}"));
-                        }
-                    });
-                    if self.max_requests.is_some() {
-                        joins.push(h);
-                    }
-                }
-                Err(e) => LOG.warn(&format!("accept failed: {e}")),
+        let ModelServer { net, state, _batcher } = self;
+        let handler = Arc::new(ServeHandler { state, net: net.handle() });
+        net.run(handler)
+    }
+}
+
+/// The serve plane's [`NetHandler`]: query bodies go through the admission
+/// gate to the pool; liveness, metrics and model info answer inline.
+struct ServeHandler {
+    state: Arc<ServerState>,
+    net: NetServerHandle,
+}
+
+impl NetHandler for ServeHandler {
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("POST", "/query") => {
+                let out = process_body(&self.state, &req.body_str(), Some(self.net.stats()));
+                HttpResponse::ok("application/x-ndjson", out)
             }
-            served += 1;
-            if let Some(max) = self.max_requests {
-                if served >= max {
-                    break;
-                }
+            _ => {
+                HttpResponse::not_found("unknown route (POST /query, GET /healthz /metrics /model)")
             }
         }
-        for j in joins {
-            let _ = j.join();
+    }
+
+    fn handle_inline(&self, req: &HttpRequest) -> Option<HttpResponse> {
+        if req.method != "GET" {
+            return None;
         }
-        Ok(())
+        match req.path.as_str() {
+            "/healthz" => Some(HttpResponse::text(200, "ok\n")),
+            "/metrics" => Some(HttpResponse::ok(
+                "text/plain; version=0.0.4",
+                MetricsRegistry::global().render(),
+            )),
+            "/model" => {
+                let body = model_info(self.state.engines.current().as_ref()).render();
+                Some(HttpResponse::json(200, body))
+            }
+            _ => None,
+        }
     }
 }
 
@@ -183,95 +210,6 @@ fn spawn_reload_poller(engines: Weak<EngineHandle>, every: Duration) {
             }
         })
         .ok();
-}
-
-pub(crate) fn respond(
-    stream: &mut TcpStream,
-    status: &str,
-    ctype: &str,
-    body: &str,
-) -> std::io::Result<()> {
-    let response = format!(
-        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
-    );
-    stream.write_all(response.as_bytes())
-}
-
-/// Parsed HTTP request head: the request line plus Content-Length.
-pub(crate) struct RequestHead {
-    pub(crate) method: String,
-    pub(crate) path: String,
-    pub(crate) content_length: usize,
-}
-
-/// Read the request line and drain the headers, keeping Content-Length.
-pub(crate) fn read_head(reader: &mut BufReader<TcpStream>) -> std::io::Result<RequestHead> {
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let path = parts.next().unwrap_or("").to_string();
-    let mut content_length = 0usize;
-    let mut hdr = String::new();
-    loop {
-        hdr.clear();
-        if reader.read_line(&mut hdr)? == 0 || hdr == "\r\n" || hdr == "\n" {
-            break;
-        }
-        if let Some((name, value)) = hdr.split_once(':') {
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().unwrap_or(0);
-            }
-        }
-    }
-    Ok(RequestHead { method, path, content_length })
-}
-
-/// Read a POST body of `content_length` bytes, or answer 413 and return
-/// `None` when the declared length exceeds [`MAX_BODY_BYTES`].
-pub(crate) fn read_body(
-    reader: &mut BufReader<TcpStream>,
-    stream: &mut TcpStream,
-    content_length: usize,
-) -> std::io::Result<Option<String>> {
-    if content_length > MAX_BODY_BYTES {
-        respond(
-            stream,
-            "413 Payload Too Large",
-            "text/plain",
-            "body exceeds the 32 MiB request cap\n",
-        )?;
-        return Ok(None);
-    }
-    let mut body = vec![0u8; content_length];
-    reader.read_exact(&mut body)?;
-    Ok(Some(String::from_utf8_lossy(&body).into_owned()))
-}
-
-fn handle_conn(state: &ServerState, stream: TcpStream) -> std::io::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let head = read_head(&mut reader)?;
-    let mut stream = stream;
-    match (head.method.as_str(), head.path.as_str()) {
-        ("GET", "/healthz") => respond(&mut stream, "200 OK", "text/plain", "ok\n"),
-        ("GET", "/metrics") => {
-            respond(&mut stream, "200 OK", "text/plain; version=0.0.4", &MetricsRegistry::global().render())
-        }
-        ("GET", "/model") => {
-            let body = model_info(state.engines.current().as_ref()).render();
-            respond(&mut stream, "200 OK", "application/json", &body)
-        }
-        ("POST", "/query") => {
-            let text = match read_body(&mut reader, &mut stream, head.content_length)? {
-                Some(t) => t,
-                None => return Ok(()),
-            };
-            let out = process_body(state, &text);
-            respond(&mut stream, "200 OK", "application/x-ndjson", &out)
-        }
-        _ => respond(&mut stream, "404 Not Found", "text/plain", "unknown route\n"),
-    }
 }
 
 pub(crate) fn model_info(engine: &QueryEngine) -> Json {
@@ -306,12 +244,17 @@ fn hits_json(hits: &[Hit]) -> Json {
 }
 
 /// The `{"op":"health"}` reply: the probe the fleet daemon's health loop
-/// consumes. Generation, uptime, per-process shard-cache hit stats, and the
-/// batcher's in-flight depth.
-pub(crate) fn health_json(state: &ServerState, engine: &QueryEngine) -> Json {
+/// consumes. Generation, uptime, per-process shard-cache hit stats, the
+/// batcher's in-flight depth, and — when the query arrived through a
+/// connection runtime — its admission state.
+pub(crate) fn health_json(
+    state: &ServerState,
+    engine: &QueryEngine,
+    net: Option<&NetStats>,
+) -> Json {
     let reg = MetricsRegistry::global();
     let sum = |keys: &[&str]| keys.iter().filter_map(|k| reg.get(k)).sum::<f64>();
-    Json::obj(vec![
+    let mut pairs = vec![
         ("ok", Json::Bool(true)),
         ("generation", Json::num(engine.store().generation() as f64)),
         ("uptime_ms", Json::num(state.started.elapsed().as_secs_f64() * 1e3)),
@@ -325,6 +268,21 @@ pub(crate) fn health_json(state: &ServerState, engine: &QueryEngine) -> Json {
             Json::num(sum(&["serve_shard_cache_misses", "serve_embedding_cache_misses"])),
         ),
         ("in_flight", Json::num(state.handle.in_flight() as f64)),
+    ];
+    if let Some(net) = net {
+        pairs.push(("admission", admission_json(net)));
+    }
+    Json::obj(pairs)
+}
+
+/// The runtime's admission state as a JSON object — shared by
+/// `{"op":"health"}` here and the daemon's `/healthz`.
+pub(crate) fn admission_json(net: &NetStats) -> Json {
+    Json::obj(vec![
+        ("in_flight", Json::num(net.inflight() as f64)),
+        ("queue_depth", Json::num(net.queue_depth() as f64)),
+        ("shed_total", Json::num(net.shed_total() as f64)),
+        ("conns_open", Json::num(net.conns_open() as f64)),
     ])
 }
 
@@ -411,7 +369,7 @@ pub(crate) fn render_reply(reply: Result<Response>, expect: &Expect) -> Json {
 /// coalesce with each other (and with concurrent connections) into shared
 /// backend matmuls. Never panics; every line gets a JSON object with an
 /// `ok` field, in input order. Updates the serve metrics.
-fn process_body(state: &ServerState, text: &str) -> String {
+fn process_body(state: &ServerState, text: &str, net: Option<&NetStats>) -> String {
     let t0 = Instant::now();
     // One engine snapshot per body for the *inline* ops (reconstruct,
     // info): they answer from the generation the body started on even if a
@@ -426,7 +384,7 @@ fn process_body(state: &ServerState, text: &str) -> String {
     for (i, line) in lines.iter().enumerate() {
         match Json::parse(line) {
             Err(e) => outputs[i] = Some(error_json(e)),
-            Ok(req) => match plan_query(state, engine.as_ref(), &req) {
+            Ok(req) => match plan_query(state, engine.as_ref(), &req, net) {
                 Planned::Done(json) => outputs[i] = Some(json),
                 Planned::Batch(r, expect) => {
                     planned.push((i, expect));
@@ -450,7 +408,12 @@ fn process_body(state: &ServerState, text: &str) -> String {
     out
 }
 
-pub(crate) fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) -> Planned {
+pub(crate) fn plan_query(
+    state: &ServerState,
+    engine: &QueryEngine,
+    req: &Json,
+    net: Option<&NetStats>,
+) -> Planned {
     let op = match req.get("op").and_then(Json::as_str) {
         Some(op) => op,
         None => return Planned::Done(error_json("missing `op`")),
@@ -492,7 +455,7 @@ pub(crate) fn plan_query(state: &ServerState, engine: &QueryEngine, req: &Json) 
             })
         }
         "info" => Planned::Done(model_info(engine)),
-        "health" => Planned::Done(health_json(state, engine)),
+        "health" => Planned::Done(health_json(state, engine, net)),
         "reload" => Planned::Done(match state.engines.reload() {
             Ok(swapped) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -529,7 +492,10 @@ pub(crate) fn record_metrics(state: &ServerState, nlines: u64, t0: Instant) {
 /// `--backend native|xla|auto`, `--cache-shards N`, `--batch-window-ms MS`,
 /// `--max-batch N`, `--reload-poll-ms MS` (default 5000; 0 = only
 /// `{"op":"reload"}`), `--max-requests N` / `--once` (tests),
-/// `--trace FILE` (Chrome trace-event timeline of the serving process).
+/// `--trace FILE` (Chrome trace-event timeline of the serving process),
+/// plus the shared connection-runtime flags `--max-inflight N`,
+/// `--max-queue N`, `--idle-timeout-ms MS`, `--keep-alive`/`--no-keep-alive`
+/// ([`NetOptions::with_args`]).
 pub fn serve(args: &Args) -> Result<()> {
     let dir = args
         .opt_str("model-dir")
@@ -558,6 +524,7 @@ pub fn serve(args: &Args) -> Result<()> {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         },
+        net: NetOptions::default().with_args(args)?,
     };
     let _trace = crate::obs::trace::TraceGuard::start(args.opt_str("trace"), "serve")?;
     {

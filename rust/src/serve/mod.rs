@@ -20,9 +20,12 @@
 //!   coalesce into single backend matmuls ([`batcher::Batcher`]); the
 //!   engine is snapshotted per batch, so reloads land between batches.
 //! * [`http`] — the `tallfat serve <model-dir>` front end: line-delimited
-//!   JSON queries over dependency-free HTTP, publishing QPS/latency/batch
-//!   gauges into the shared `MetricsRegistry` ([`http::ModelServer`]), with
-//!   `{"op":"reload"}` / `--reload-poll-ms` triggering the hot swap.
+//!   JSON queries riding the shared [`crate::net`] connection runtime
+//!   (event-driven accept loop, keep-alive, admission control via
+//!   `--max-inflight` / `--max-queue`, idle reaping), publishing
+//!   QPS/latency/batch gauges into the shared `MetricsRegistry`
+//!   ([`http::ModelServer`]), with `{"op":"reload"}` / `--reload-poll-ms`
+//!   triggering the hot swap.
 //! * [`json`] — the minimal JSON parser/serializer backing the protocol.
 //!
 //! ```text

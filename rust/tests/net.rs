@@ -1,0 +1,417 @@
+//! Connection-runtime integration: keep-alive across all three HTTP
+//! planes, idle reaping (slowloris defense), malformed-head fuzz through
+//! the one shared parser, admission-control shedding, and the daemon
+//! client's pooled-connection reuse — all over real TCP sockets.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+use tallfat::backend::native::NativeBackend;
+use tallfat::backend::BackendRef;
+use tallfat::daemon::{Daemon, DaemonClient, DaemonOptions};
+use tallfat::io::dataset::{gen_exact, Spectrum};
+use tallfat::io::InputSpec;
+use tallfat::net::http::{HttpRequest, HttpResponse};
+use tallfat::net::{NetHandler, NetOptions, NetServer};
+use tallfat::serve::{
+    EngineHandle, Json, ModelServer, ModelStore, QueryEngine, ServeOptions,
+};
+use tallfat::svd::Svd;
+use tallfat::util::Args;
+
+fn dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("tallfat_net_it").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Read exactly one Content-Length-framed response off a (possibly
+/// keep-alive) socket. Returns (status, head, body).
+fn read_response(s: &mut TcpStream) -> (u16, String, String) {
+    let mut buf: Vec<u8> = Vec::new();
+    let head_end = loop {
+        if let Some(p) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break p;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = s.read(&mut chunk).expect("read head");
+        assert!(n > 0, "closed before a full head: {:?}", String::from_utf8_lossy(&buf));
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+    let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (name, v) = l.split_once(':')?;
+            if name.eq_ignore_ascii_case("content-length") {
+                v.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .expect("reply without Content-Length");
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < len {
+        let mut chunk = [0u8; 4096];
+        let n = s.read(&mut chunk).expect("read body");
+        assert!(n > 0, "closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(len);
+    (status, head, String::from_utf8(body).unwrap())
+}
+
+/// The socket's next read reports a clean close (EOF) within 2s.
+fn assert_closed(s: &mut TcpStream) {
+    s.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+    let mut chunk = [0u8; 64];
+    match s.read(&mut chunk) {
+        Ok(0) => {}
+        Ok(n) => panic!("expected close, got {n} more bytes"),
+        // A reset counts as closed: the peer tore down with bytes of ours
+        // still unread (possible when it errors mid-head).
+        Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => {}
+        Err(e) => panic!("expected clean close, got {e}"),
+    }
+}
+
+fn connect_retrying(addr: &str) -> TcpStream {
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    panic!("listener at {addr} never came up");
+}
+
+struct Echo;
+
+impl NetHandler for Echo {
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        HttpResponse::ok("text/plain", req.body)
+    }
+}
+
+/// Pins a pool worker long enough for admission control to bite.
+struct SlowEcho(Duration);
+
+impl NetHandler for SlowEcho {
+    fn handle(&self, req: HttpRequest) -> HttpResponse {
+        std::thread::sleep(self.0);
+        HttpResponse::ok("text/plain", req.body)
+    }
+}
+
+fn post(path: &str, body: &str, close: bool) -> String {
+    let conn = if close { "Connection: close\r\n" } else { "" };
+    format!(
+        "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n{conn}\r\n{body}",
+        body.len()
+    )
+}
+
+// ---------------------------------------------------------------------
+// Keep-alive across the three planes
+// ---------------------------------------------------------------------
+
+/// Metrics plane: three sequential requests down ONE connection; the
+/// first two stay open, the last closes because `--max-requests` is hit.
+#[test]
+fn metrics_plane_keep_alive_sequential() {
+    let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = probe.local_addr().unwrap().to_string();
+    drop(probe);
+    let addr2 = addr.clone();
+    let server = std::thread::spawn(move || {
+        let args = Args::parse(
+            ["serve-metrics", "--addr", &addr2, "--max-requests", "3"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        tallfat::coordinator::server::serve_metrics(&args).unwrap();
+    });
+    let mut s = connect_retrying(&addr);
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (status, head, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+    assert!(!head.contains("Connection: close"), "{head}");
+    s.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    assert!(body.starts_with('#'), "{body}");
+    s.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (status, head, _) = read_response(&mut s);
+    assert_eq!(status, 404);
+    assert!(head.contains("Connection: close"), "final response must close: {head}");
+    assert_closed(&mut s);
+    server.join().unwrap();
+}
+
+/// Serve plane: one connection carries a GET, a POST query (whose
+/// `health` op reports admission state), and another GET — and the
+/// server counts exactly one accepted connection.
+#[test]
+fn serve_plane_keep_alive_one_connection() {
+    let d = dir("serve_ka");
+    let (a, _) = gen_exact(40, 8, 3, Spectrum::Geometric { scale: 5.0, decay: 0.6 }, 0.0, 7)
+        .unwrap();
+    let spec = InputSpec::csv(d.join("A.csv").to_string_lossy().into_owned());
+    tallfat::io::write_matrix(&a, &spec).unwrap();
+    let result = Svd::over(&spec)
+        .unwrap()
+        .rank(3)
+        .oversample(4)
+        .workers(2)
+        .block(16)
+        .work_dir(d.join("work").to_string_lossy().into_owned())
+        .backend(Arc::new(NativeBackend::new()))
+        .run()
+        .unwrap();
+    let model_dir = d.join("model");
+    result.save_model(&model_dir, Some(0)).unwrap();
+    let store = Arc::new(ModelStore::open(&model_dir, 2).unwrap());
+    let engine = Arc::new(QueryEngine::new(store, Arc::new(NativeBackend::new())).unwrap());
+    let server = ModelServer::bind(
+        Arc::new(EngineHandle::fixed(engine)),
+        &ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            max_requests: Some(3),
+            ..ServeOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run().unwrap());
+
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"GET /model HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    let info = Json::parse(body.trim()).unwrap();
+    assert_eq!(info.get("m").and_then(Json::as_usize), Some(40));
+
+    let q = "{\"op\":\"health\"}\n";
+    s.write_all(post("/query", q, false).as_bytes()).unwrap();
+    let (status, _, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    let health = Json::parse(body.trim()).unwrap();
+    assert_eq!(health.get("ok").and_then(Json::as_bool), Some(true), "{body}");
+    let admission = health.get("admission").expect("health reply must report admission state");
+    assert!(admission.get("in_flight").and_then(Json::as_f64).is_some(), "{body}");
+    assert!(admission.get("queue_depth").and_then(Json::as_f64).is_some(), "{body}");
+    assert!(admission.get("shed_total").and_then(Json::as_f64).is_some(), "{body}");
+
+    s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let (status, _, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    assert_eq!(body, "ok\n");
+    assert_closed(&mut s);
+    srv.join().unwrap();
+    assert_eq!(handle.stats().accepted(), 1, "three requests must share one connection");
+    assert_eq!(handle.stats().served(), 3);
+}
+
+/// Daemon plane: the client pools one keep-alive connection across many
+/// calls (the daemon's accept counter barely moves), `/healthz` reports
+/// admission state, and a server-side close is survived transparently.
+#[test]
+fn daemon_client_reuses_one_connection() {
+    let d = dir("daemon_ka");
+    let backend: BackendRef = Arc::new(NativeBackend::new());
+    let opts = DaemonOptions { addr: "127.0.0.1:0".to_string(), ..DaemonOptions::default() };
+    let daemon = Daemon::bind(d.join("state"), backend, &opts).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || daemon.run());
+
+    let healthz = |addr: &str| -> Json {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        let (status, _, body) = read_response(&mut s);
+        assert_eq!(status, 200);
+        Json::parse(body.trim()).unwrap()
+    };
+
+    let client = DaemonClient::new(addr.clone());
+    client.status().unwrap();
+    let h1 = healthz(&addr);
+    let admission = h1.get("admission").expect("daemon /healthz must report admission state");
+    assert!(admission.get("in_flight").and_then(Json::as_f64).is_some(), "{}", h1.render());
+    assert!(admission.get("shed_total").and_then(Json::as_f64).is_some(), "{}", h1.render());
+    let accepted1 = h1.get("accepted").and_then(Json::as_f64).unwrap();
+
+    for _ in 0..10 {
+        client.status().unwrap();
+    }
+    let h2 = healthz(&addr);
+    let accepted2 = h2.get("accepted").and_then(Json::as_f64).unwrap();
+    // Ten more client calls rode the pooled connection; only this probe's
+    // own connection (and slack for scheduling) is new.
+    assert!(
+        accepted2 - accepted1 <= 2.0,
+        "client opened new connections per call: accepted {accepted1} -> {accepted2}"
+    );
+
+    client.halt().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Reaping, fuzz, and admission control on the bare runtime
+// ---------------------------------------------------------------------
+
+/// Slowloris defense: a connection stalled mid-head is reaped at the idle
+/// deadline while a healthy connection on the same server keeps serving.
+#[test]
+fn stalled_connection_reaped_while_healthy_completes() {
+    let nopts = NetOptions {
+        idle_timeout: Duration::from_millis(250),
+        plane: "test-reap",
+        ..NetOptions::default()
+    };
+    let server = NetServer::bind("127.0.0.1:0", nopts).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run(Arc::new(Echo)));
+
+    let mut stalled = TcpStream::connect(&addr).unwrap();
+    stalled.write_all(b"POST /e HT").unwrap(); // never finishes the head
+
+    let mut healthy = TcpStream::connect(&addr).unwrap();
+    for i in 0..4 {
+        let body = format!("ping{i}");
+        healthy.write_all(post("/e", &body, false).as_bytes()).unwrap();
+        let (status, _, echoed) = read_response(&mut healthy);
+        assert_eq!(status, 200);
+        assert_eq!(echoed, body, "healthy connection must keep serving");
+        std::thread::sleep(Duration::from_millis(120));
+    }
+
+    // ~480ms elapsed, idle deadline is 250ms: the stalled conn is gone.
+    assert_closed(&mut stalled);
+    assert!(handle.stats().reaped() >= 1, "reaped = {}", handle.stats().reaped());
+
+    handle.shutdown();
+    srv.join().unwrap().unwrap();
+}
+
+/// Malformed and truncated heads through the one shared parser: every
+/// case gets its explicit status and a closed connection, none hang or
+/// kill the server.
+#[test]
+fn malformed_heads_get_explicit_errors_and_server_survives() {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetOptions { plane: "test-fuzz", ..NetOptions::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv = std::thread::spawn(move || server.run(Arc::new(Echo)));
+
+    let huge_head = format!("GET /x HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(20_000));
+    let cases: Vec<(String, u16)> = vec![
+        ("GARBAGE\r\n\r\n".into(), 400),
+        ("get /x HTTP/1.1\r\n\r\n".into(), 400),
+        ("GET /x HTTP/2.0\r\n\r\n".into(), 400),
+        ("POST /x HTTP/1.1\r\nno colon here\r\n\r\n".into(), 400),
+        ("POST /x HTTP/1.1\r\nContent-Length: zork\r\n\r\n".into(), 400),
+        ("POST /x HTTP/1.1\r\nContent-Length: 109951162777600\r\n\r\n".into(), 413),
+        ("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".into(), 501),
+        (huge_head, 431),
+    ];
+    for (wire, want) in &cases {
+        let mut s = TcpStream::connect(&addr).unwrap();
+        s.write_all(wire.as_bytes()).unwrap();
+        let (status, head, _) = read_response(&mut s);
+        assert_eq!(status, *want, "{}", wire.escape_debug());
+        assert!(head.contains("Connection: close"), "protocol errors must close: {head}");
+        assert_closed(&mut s);
+    }
+
+    // A head truncated by a client disconnect is dropped quietly.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(b"POST /x HT").unwrap();
+    drop(s);
+
+    // The server is unharmed: a healthy roundtrip still works.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(post("/e", "still alive", true).as_bytes()).unwrap();
+    let (status, _, body) = read_response(&mut s);
+    assert_eq!(status, 200);
+    assert_eq!(body, "still alive");
+
+    handle.shutdown();
+    srv.join().unwrap().unwrap();
+}
+
+/// Admission control: with one warm handler and a one-deep queue, a burst
+/// sheds — and every shed is an explicit, well-formed 503 with
+/// `Retry-After` and a JSON body naming the reason. No resets.
+#[test]
+fn overload_sheds_are_explicit_503_json() {
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetOptions {
+            max_inflight: 1,
+            max_queue: 1,
+            plane: "test-shed",
+            ..NetOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    let handle = server.handle();
+    let srv =
+        std::thread::spawn(move || server.run(Arc::new(SlowEcho(Duration::from_millis(300)))));
+
+    let results: Vec<(u16, String, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let addr = addr.clone();
+                scope.spawn(move || {
+                    let mut s = TcpStream::connect(&addr).unwrap();
+                    s.write_all(post("/e", &format!("burst{i}"), true).as_bytes()).unwrap();
+                    read_response(&mut s)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut sheds = 0u64;
+    for (status, head, body) in &results {
+        match status {
+            200 => {}
+            503 => {
+                sheds += 1;
+                assert!(head.contains("Retry-After:"), "shed without Retry-After: {head}");
+                let line = Json::parse(body.trim()).expect("shed body must be valid JSON");
+                assert_eq!(line.get("ok").and_then(Json::as_bool), Some(false), "{body}");
+                assert_eq!(
+                    line.get("error").and_then(Json::as_str),
+                    Some("overloaded"),
+                    "{body}"
+                );
+                let reason = line.get("reason").and_then(Json::as_str).unwrap_or("");
+                assert!(
+                    reason == "queue_full" || reason == "draining",
+                    "unexpected shed reason {reason:?}"
+                );
+                assert!(line.get("retry_after_s").and_then(Json::as_f64).is_some(), "{body}");
+            }
+            other => panic!("unexpected status {other}"),
+        }
+    }
+    assert!(sheds >= 1, "a 6-deep burst into inflight=1/queue=1 must shed");
+    assert!(handle.stats().shed_total() >= sheds, "stats lost sheds");
+
+    handle.shutdown();
+    srv.join().unwrap().unwrap();
+}

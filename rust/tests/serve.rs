@@ -34,8 +34,9 @@ fn http_request(addr: &str, request: &str) -> String {
 }
 
 fn http_post_query(addr: &str, body: &str) -> String {
+    // `Connection: close` keeps read_to_string finite under keep-alive.
     let req = format!(
-        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /query HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
         body.len()
     );
     http_request(addr, &req)
@@ -156,7 +157,7 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     let srv = std::thread::spawn(move || server.run().unwrap());
 
     // 1. model info.
-    let resp = http_request(&addr, "GET /model HTTP/1.1\r\nHost: x\r\n\r\n");
+    let resp = http_request(&addr, "GET /model HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
     assert!(resp.contains("200 OK"), "{resp}");
     let info = Json::parse(body_of(&resp).trim()).unwrap();
     assert_eq!(info.get("m").and_then(Json::as_usize), Some(150));
@@ -217,7 +218,8 @@ fn model_server_answers_queries_matching_linalg_oracle() {
     assert_eq!(lines[5].get("ok"), Some(&Json::Bool(false)));
 
     // 3. metrics flowed into the shared registry.
-    let resp = http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    let resp =
+        http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
     assert!(resp.contains("tallfat_serve_requests_total"), "{resp}");
     assert!(resp.contains("tallfat_serve_qps"), "{resp}");
     assert!(resp.contains("tallfat_serve_request_ms_bucket{le="), "{resp}");
@@ -561,7 +563,8 @@ fn serve_request_ms_p99_from_rendered_buckets_matches_quantile() {
     }
 
     // The live endpoint exposes the histogram series.
-    let resp = http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+    let resp =
+        http_request(&addr, "GET /metrics HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n");
     srv.join().unwrap();
     assert!(resp.contains("tallfat_serve_request_ms_bucket{le="), "{resp}");
 
